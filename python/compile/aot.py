@@ -1,0 +1,176 @@
+"""AOT lowering: JAX -> HLO *text* artifacts + a line-based manifest.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the Rust ``xla`` crate binds) rejects; the text parser reassigns
+ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+The manifest is a plain text file (one artifact per line, ``-`` for unused
+dims) because the offline crate set has no serde:
+
+    # kernel dtype T D K L M filename
+    eval_ws f32 4096 100 64 64 - eval_ws_f32_t4096_d100_k64_l64.hlo.txt
+
+Run as ``python -m compile.aot --out ../artifacts`` (from python/). Pass
+``--self-check`` to execute each lowered module against the jnp oracle on
+random inputs before writing it — slower, but catches lowering bugs at
+build time instead of in Rust.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model, specs
+from .kernels import ref
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax lowering to XLA HLO text via stablehlo."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _arg_shapes(spec: specs.ArtifactSpec):
+    """Static example-argument shapes for one artifact spec."""
+    f32 = jnp.float32
+    t, d = spec.t, spec.d
+    if spec.kernel == "eval_ws":
+        return (
+            jax.ShapeDtypeStruct((t, d), f32),
+            jax.ShapeDtypeStruct((t,), f32),
+            jax.ShapeDtypeStruct((spec.l, spec.k, d), f32),
+            jax.ShapeDtypeStruct((spec.l, spec.k), f32),
+        )
+    if spec.kernel == "marginal":
+        return (
+            jax.ShapeDtypeStruct((t, d), f32),
+            jax.ShapeDtypeStruct((t,), f32),
+            jax.ShapeDtypeStruct((t,), f32),
+            jax.ShapeDtypeStruct((spec.m, d), f32),
+            jax.ShapeDtypeStruct((spec.m,), f32),
+        )
+    if spec.kernel == "assign":
+        return (
+            jax.ShapeDtypeStruct((t, d), f32),
+            jax.ShapeDtypeStruct((spec.k, d), f32),
+            jax.ShapeDtypeStruct((spec.k,), f32),
+        )
+    if spec.kernel == "update_dmin":
+        return (
+            jax.ShapeDtypeStruct((t, d), f32),
+            jax.ShapeDtypeStruct((t,), f32),
+            jax.ShapeDtypeStruct((1, d), f32),
+        )
+    raise ValueError(f"unknown kernel {spec.kernel!r}")
+
+
+def _make_fn(spec: specs.ArtifactSpec):
+    if spec.kernel == "eval_ws":
+        return model.make_eval_ws(spec.dtype)
+    if spec.kernel == "marginal":
+        return model.make_marginal(spec.dtype)
+    if spec.kernel == "assign":
+        return model.make_assign(spec.dtype)
+    if spec.kernel == "update_dmin":
+        return model.make_update_dmin()
+    raise ValueError(f"unknown kernel {spec.kernel!r}")
+
+
+def _self_check(spec: specs.ArtifactSpec, fn) -> None:
+    """Execute the jitted fn on random inputs and compare to the oracle."""
+    rng = np.random.default_rng(0)
+    tol = 2e-2 if spec.dtype in ("f16", "bf16") else 2e-4
+    t, d = spec.t, spec.d
+
+    def randf(*shape):
+        return jnp.asarray(rng.standard_normal(shape), dtype=jnp.float32)
+
+    if spec.kernel == "eval_ws":
+        v, vm = randf(t, d), jnp.ones((t,), jnp.float32)
+        s, sm = randf(spec.l, spec.k, d), jnp.ones((spec.l, spec.k), jnp.float32)
+        got = fn(v, vm, s, sm)[0]
+        want = ref.work_matrix_ref(v, vm, s, sm)
+        np.testing.assert_allclose(got, want, rtol=tol, atol=tol * np.abs(want).max())
+    elif spec.kernel == "marginal":
+        v, vm = randf(t, d), jnp.ones((t,), jnp.float32)
+        dmin = jnp.abs(randf(t)) * d
+        c, cm = randf(spec.m, d), jnp.ones((spec.m,), jnp.float32)
+        got = fn(v, vm, dmin, c, cm)[0]
+        want = ref.marginal_gain_ref(v, vm, dmin, c, cm)
+        np.testing.assert_allclose(got, want, rtol=tol, atol=tol * np.abs(want).max())
+    elif spec.kernel == "assign":
+        v = randf(t, d)
+        s, sm = randf(spec.k, d), jnp.ones((spec.k,), jnp.float32)
+        labels, dmin = fn(v, s, sm)
+        wl, wd = ref.assign_ref(v, s, sm)
+        np.testing.assert_array_equal(labels, wl)
+        np.testing.assert_allclose(dmin, wd, rtol=tol, atol=tol)
+    elif spec.kernel == "update_dmin":
+        v = randf(t, d)
+        dmin = jnp.abs(randf(t)) * d
+        e = randf(1, d)
+        got = fn(v, dmin, e)[0]
+        want = ref.update_dmin_ref(v, dmin, e)
+        np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+def manifest_line(spec: specs.ArtifactSpec) -> str:
+    def fmt(x):
+        return str(x) if x is not None else "-"
+
+    return " ".join(
+        [spec.kernel, spec.dtype, str(spec.t), str(spec.d),
+         fmt(spec.k), fmt(spec.l), fmt(spec.m), spec.filename]
+    )
+
+
+def build(out_dir: str, *, self_check: bool = False, only: str | None = None) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    all_specs = specs.default_specs()
+    if only:
+        all_specs = [s for s in all_specs if only in s.name]
+    lines = [
+        "# exemcl AOT artifact manifest",
+        "# kernel dtype T D K L M filename",
+    ]
+    t0 = time.time()
+    for i, spec in enumerate(all_specs):
+        fn = _make_fn(spec)
+        if self_check:
+            _self_check(spec, jax.jit(fn))
+        lowered = jax.jit(fn).lower(*_arg_shapes(spec))
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, spec.filename)
+        with open(path, "w") as f:
+            f.write(text)
+        lines.append(manifest_line(spec))
+        print(f"[{i + 1}/{len(all_specs)}] {spec.name}: {len(text)} chars", flush=True)
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"wrote {len(all_specs)} artifacts to {out_dir} in {time.time() - t0:.1f}s")
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts", help="output directory")
+    p.add_argument("--self-check", action="store_true",
+                   help="execute each module vs the jnp oracle before writing")
+    p.add_argument("--only", default=None, help="substring filter on artifact names")
+    args = p.parse_args()
+    build(args.out, self_check=args.self_check, only=args.only)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

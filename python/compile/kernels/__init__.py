@@ -1,0 +1,3 @@
+"""L1 Pallas kernels for exemplar-clustering evaluation + the jnp oracle."""
+
+from . import assign, marginal_gain, ref, work_matrix  # noqa: F401

@@ -1,0 +1,130 @@
+"""L1 Pallas kernels: cluster assignment and incremental dmin maintenance.
+
+``assign`` maps every ground point to its nearest exemplar (the clustering
+extraction of §IV: exemplars partition the data space) and simultaneously
+emits the e0-clamped min distance used to seed the optimizer-aware state.
+
+``update_dmin`` is the per-round Greedy state update: after exemplar ``e``
+is committed, every point's cached minimum is lowered by ``d(v, e)``. Both
+are single-set kernels, so the grid runs over ground tiles only.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .work_matrix import MASK_DISTANCE
+
+
+def _assign_kernel(v_ref, s_ref, smask_ref, lab_ref, dmin_ref, *, compute_dtype):
+    """Labels + e0-clamped dmin for one ground tile.
+
+    v_ref: (BN, D); s_ref: (K, D); smask_ref: (K,);
+    lab_ref: (BN,) i32 nearest valid exemplar index (ignoring e0);
+    dmin_ref: (BN,) f32 min(min_k d, |v|^2).
+    """
+    v = v_ref[...]
+    s = s_ref[...]
+    smask = smask_ref[...]
+
+    vsq = jnp.sum(v.astype(jnp.float32) * v.astype(jnp.float32), axis=1)  # (BN,)
+    ssq = jnp.sum(s.astype(jnp.float32) * s.astype(jnp.float32), axis=1)  # (K,)
+
+    vc = v.astype(compute_dtype)
+    sc = s.astype(compute_dtype)
+    dots = jnp.dot(sc, vc.T, preferred_element_type=jnp.float32)  # (K, BN)
+
+    dist = ssq[:, None] + vsq[None, :] - 2.0 * dots
+    dist = jnp.maximum(dist, 0.0)
+    dist = jnp.where(smask[:, None] > 0, dist, MASK_DISTANCE)
+
+    lab_ref[...] = jnp.argmin(dist, axis=0).astype(jnp.int32)
+    dmin = jnp.min(dist, axis=0)
+    dmin_ref[...] = jnp.minimum(dmin, vsq)
+
+
+def assign(v, s, smask, *, block_n: int = 512, compute_dtype=jnp.float32, interpret: bool = True):
+    """Nearest-exemplar labels and e0-clamped min distances for one tile.
+
+    Args:
+      v:     (T, D) f32 ground-set tile.
+      s:     (K, D) f32 exemplar set.
+      smask: (K,)   f32 exemplar validity.
+
+    Returns:
+      labels: (T,) i32 index of the nearest *valid* exemplar.
+      dmin:   (T,) f32 min(min_k d(v, s_k), |v|^2).
+    """
+    t, d = v.shape
+    k, d2 = s.shape
+    if d != d2:
+        raise ValueError(f"dimensionality mismatch: V has D={d}, S has D={d2}")
+    if t % block_n != 0:
+        raise ValueError(f"T={t} not divisible by block_n={block_n}")
+
+    grid = (t // block_n,)
+    return pl.pallas_call(
+        functools.partial(_assign_kernel, compute_dtype=compute_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda j: (j, 0)),
+            pl.BlockSpec((k, d), lambda j: (0, 0)),
+            pl.BlockSpec((k,), lambda j: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda j: (j,)),
+            pl.BlockSpec((block_n,), lambda j: (j,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t,), jnp.int32),
+            jax.ShapeDtypeStruct((t,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(v, s, smask)
+
+
+def _update_dmin_kernel(v_ref, dmin_ref, e_ref, o_ref):
+    """min(dmin, d(v, e)) for one ground tile; e is a single (1, D) vector."""
+    v = v_ref[...]
+    dmin = dmin_ref[...]
+    e = e_ref[...]
+
+    diff = v - e  # broadcast (BN, D) - (1, D)
+    dist = jnp.sum(diff * diff, axis=1)
+    o_ref[...] = jnp.minimum(dmin, dist)
+
+
+def update_dmin(v, dmin, e, *, block_n: int = 512, interpret: bool = True):
+    """Lower the cached per-point minimum after committing exemplar ``e``.
+
+    Args:
+      v:    (T, D) f32 ground-set tile.
+      dmin: (T,)   f32 current cached minimum (e0 folded in).
+      e:    (1, D) f32 newly committed exemplar.
+
+    Returns:
+      (T,) f32 updated minimum distances.
+    """
+    t, d = v.shape
+    if e.shape != (1, d):
+        raise ValueError(f"expected e of shape (1, {d}), got {e.shape}")
+    if t % block_n != 0:
+        raise ValueError(f"T={t} not divisible by block_n={block_n}")
+
+    grid = (t // block_n,)
+    return pl.pallas_call(
+        _update_dmin_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda j: (j, 0)),
+            pl.BlockSpec((block_n,), lambda j: (j,)),
+            pl.BlockSpec((1, d), lambda j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((t,), jnp.float32),
+        interpret=interpret,
+    )(v, dmin, e)

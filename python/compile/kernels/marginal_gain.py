@@ -1,0 +1,108 @@
+"""L1 Pallas kernel: optimizer-aware marginal-gain fast path.
+
+§IV-A of the paper observes that optimizers such as Greedy evaluate
+``S_multi = {S ∪ {c_1}, ..., S ∪ {c_m}}`` — every candidate set shares the
+incumbent ``S``. The paper exploits this only through batching; this kernel
+additionally caches the incumbent's per-point minimum distance
+
+    dmin_i = min(min_{s in S} d(v_i, s), |v_i|^2)        (e0 folded in)
+
+so a full Greedy round costs O(n * m * d) instead of O(n * m * k * d):
+
+    gain(c) = |V|^-1 * sum_i max(0, dmin_i - d(v_i, c)).
+
+The same MXU decomposition as ``work_matrix`` computes the (M, BN)
+candidate-distance tile in one matmul. Outputs are partial gains over the
+ground tile; Rust merges tiles (sum is associative) and normalizes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _marginal_gain_kernel(v_ref, vmask_ref, dmin_ref, c_ref, cmask_ref, o_ref, *, compute_dtype):
+    """One (BM, BN) tile of candidate gains, reduced over BN into o_ref."""
+    j = pl.program_id(1)  # ground-tile index
+
+    v = v_ref[...]
+    vmask = vmask_ref[...]
+    dmin = dmin_ref[...]
+    c = c_ref[...]
+    cmask = cmask_ref[...]
+
+    vsq = jnp.sum(v.astype(jnp.float32) * v.astype(jnp.float32), axis=1)  # (BN,)
+    csq = jnp.sum(c.astype(jnp.float32) * c.astype(jnp.float32), axis=1)  # (BM,)
+
+    vc = v.astype(compute_dtype)
+    cc = c.astype(compute_dtype)
+    dots = jnp.dot(cc, vc.T, preferred_element_type=jnp.float32)  # (BM, BN)
+
+    dist = csq[:, None] + vsq[None, :] - 2.0 * dots
+    dist = jnp.maximum(dist, 0.0)
+
+    # gain contribution: how much adding c lowers each point's min distance.
+    improve = jnp.maximum(dmin[None, :] - dist, 0.0)  # (BM, BN)
+    improve = jnp.where(vmask[None, :] > 0, improve, 0.0)
+    partial = jnp.sum(improve, axis=1)  # (BM,)
+    partial = jnp.where(cmask > 0, partial, 0.0)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += partial
+
+
+def marginal_gain(
+    v,
+    vmask,
+    dmin,
+    c,
+    cmask,
+    *,
+    block_m: int = 128,
+    block_n: int = 512,
+    compute_dtype=jnp.float32,
+    interpret: bool = True,
+):
+    """Partial marginal gains of every candidate over one ground tile.
+
+    Args:
+      v:     (T, D) f32 ground-set tile.
+      vmask: (T,)   f32 validity of ground rows.
+      dmin:  (T,)   f32 incumbent min squared distance (e0 already folded).
+      c:     (M, D) f32 candidate vectors.
+      cmask: (M,)   f32 candidate validity.
+
+    Returns:
+      (M,) f32 partial sums of max(0, dmin - d(v, c)) over this tile.
+    """
+    t, d = v.shape
+    m, d2 = c.shape
+    if d != d2:
+        raise ValueError(f"dimensionality mismatch: V has D={d}, C has D={d2}")
+    if m % block_m != 0:
+        raise ValueError(f"M={m} not divisible by block_m={block_m}")
+    if t % block_n != 0:
+        raise ValueError(f"T={t} not divisible by block_n={block_n}")
+
+    grid = (m // block_m, t // block_n)
+    return pl.pallas_call(
+        functools.partial(_marginal_gain_kernel, compute_dtype=compute_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_n,), lambda i, j: (j,)),
+            pl.BlockSpec((block_n,), lambda i, j: (j,)),
+            pl.BlockSpec((block_m, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_m,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_m,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+        interpret=interpret,
+    )(v, vmask, dmin, c, cmask)

@@ -1,0 +1,138 @@
+"""L1 Pallas kernel: the paper's work-matrix evaluation (§IV-B1), TPU-shaped.
+
+The CUDA original assigns one *thread* per work-matrix cell
+``W[j, i] = |V|^-1 * min_{s in S_j} d(v_i, s)`` and stages each ground
+vector ``v_i`` in shared memory. On TPU the same insight — batch all sets
+into one device program, stage the reused ground tile in fast memory —
+becomes a *tiled* kernel: each grid instance owns a ``(BL, BN)`` tile of W,
+the ``(BN, D)`` ground tile is staged in VMEM via BlockSpec (the
+shared-memory analogue), and the per-thread ``k``-loop of the paper is
+replaced by one MXU matmul over the squared-Euclidean decomposition
+
+    d(v, s) = |v|^2 + |s|^2 - 2 <v, s>.
+
+The kernel also folds in the auxiliary exemplar ``e0 = 0`` of Definition 5:
+``d(v, e0) = |v|^2``, so clamping the per-point minimum with ``|v|^2``
+evaluates ``L(S ∪ {e0})`` without materializing ``e0`` in every set.
+
+Outputs are *partial row sums* over the ground tile; the Rust runtime sums
+tiles and applies the ``|V|^-1`` normalization and the ``L({e0})`` offset
+(associative merge — see rust/src/runtime/tiling.rs).
+
+Masks replace the paper's "blank fields" (§IV-B2): ``smask[l, k] == 0``
+marks padding slots inside an evaluation set, ``vmask[i] == 0`` marks
+padding rows of the ground tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# A large-but-finite sentinel used to mask out padded set slots. Using a
+# finite value instead of +inf keeps the kernel NaN-free when a whole set
+# row is padding (inf - inf or inf * 0 would poison the reduction). Kept a
+# plain Python float: Pallas kernels may not capture array constants.
+MASK_DISTANCE = 3.0e38
+
+
+def _work_matrix_kernel(v_ref, vmask_ref, s_ref, smask_ref, o_ref, *, compute_dtype):
+    """One (BL, BN) tile of the work matrix, reduced over BN into o_ref.
+
+    Refs (shapes per block):
+      v_ref:     (BN, D)   ground-set tile, staged in VMEM
+      vmask_ref: (BN,)     1.0 for valid ground rows, 0.0 for padding
+      s_ref:     (BL, K, D) packed evaluation-set tile
+      smask_ref: (BL, K)   1.0 for valid set slots
+      o_ref:     (BL,)     accumulated partial sums (over all ground tiles)
+    """
+    j = pl.program_id(1)  # ground-tile index (innermost grid dim)
+
+    v = v_ref[...]
+    s = s_ref[...]
+    vmask = vmask_ref[...]
+    smask = smask_ref[...]
+
+    # Norms are always accumulated in f32 — the precision study (§V-B)
+    # varies only the matmul operand dtype, mirroring bf16-MXU semantics.
+    vsq = jnp.sum(v.astype(jnp.float32) * v.astype(jnp.float32), axis=1)  # (BN,)
+    ssq = jnp.sum(s.astype(jnp.float32) * s.astype(jnp.float32), axis=2)  # (BL, K)
+
+    bl, k, d = s.shape
+    bn = v.shape[0]
+
+    # The MXU step: (BL*K, D) x (D, BN) -> (BL*K, BN), f32 accumulation.
+    vc = v.astype(compute_dtype)
+    sc = s.astype(compute_dtype).reshape(bl * k, d)
+    dots = jnp.dot(sc, vc.T, preferred_element_type=jnp.float32)
+    dots = dots.reshape(bl, k, bn)
+
+    dist = ssq[:, :, None] + vsq[None, None, :] - 2.0 * dots
+    dist = jnp.maximum(dist, 0.0)  # squared distances cannot be negative
+    dist = jnp.where(smask[:, :, None] > 0, dist, MASK_DISTANCE)
+
+    dmin = jnp.min(dist, axis=1)  # (BL, BN): min over the set slots
+    # Fold in the auxiliary exemplar e0 = 0: d(v, e0) = |v|^2.
+    dmin = jnp.minimum(dmin, vsq[None, :])
+
+    contrib = jnp.where(vmask[None, :] > 0, dmin, 0.0)
+    partial = jnp.sum(contrib, axis=1)  # (BL,)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += partial
+
+
+def work_matrix(
+    v,
+    vmask,
+    s,
+    smask,
+    *,
+    block_l: int = 16,
+    block_n: int = 512,
+    compute_dtype=jnp.float32,
+    interpret: bool = True,
+):
+    """Evaluate partial sums ``sum_i vmask_i * min(min_k d(v_i, s_lk), |v_i|^2)``.
+
+    Args:
+      v:     (T, D) f32 ground-set tile.
+      vmask: (T,)   f32 validity of ground rows.
+      s:     (L, K, D) f32 packed evaluation sets.
+      smask: (L, K) f32 validity of set slots.
+      block_l / block_n: work-matrix tile shape (must divide L / T).
+      compute_dtype: dtype of the matmul operands (f32 / f16 / bf16).
+      interpret: Pallas interpret mode — required for CPU PJRT execution.
+
+    Returns:
+      (L,) f32 partial sums over this ground tile.
+    """
+    t, d = v.shape
+    l, k, d2 = s.shape
+    if d != d2:
+        raise ValueError(f"dimensionality mismatch: V has D={d}, S has D={d2}")
+    if l % block_l != 0:
+        raise ValueError(f"L={l} not divisible by block_l={block_l}")
+    if t % block_n != 0:
+        raise ValueError(f"T={t} not divisible by block_n={block_n}")
+
+    grid = (l // block_l, t // block_n)
+    return pl.pallas_call(
+        functools.partial(_work_matrix_kernel, compute_dtype=compute_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_n,), lambda i, j: (j,)),
+            pl.BlockSpec((block_l, k, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((block_l, k), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_l,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((l,), jnp.float32),
+        interpret=interpret,
+    )(v, vmask, s, smask)

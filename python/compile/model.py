@@ -1,0 +1,99 @@
+"""L2: the JAX compute graphs AOT-compiled into the runtime artifacts.
+
+Each ``make_*`` factory returns a jit-able function with *static* shapes
+(XLA artifacts are static); the Rust runtime tiles the ground set at ``T``
+rows per device call, pads D/K/L/M up to the bucket, and merges the
+associative partial results. Every function returns a tuple — the HLO
+interchange lowers with ``return_tuple=True`` and the Rust side unwraps it.
+
+The dtype variants mirror §V-B of the paper: ``compute_dtype`` switches the
+matmul-operand precision (f32 / f16 / bf16) while the I/O ABI stays f32, the
+TPU-idiomatic analogue of the paper's FP16 CUDA arithmetic (reduced-
+precision multiply, full-precision accumulate).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import assign as assign_k
+from .kernels import marginal_gain as marginal_k
+from .kernels import work_matrix as work_k
+
+#: dtype-name -> jnp dtype for the matmul operands.
+COMPUTE_DTYPES = {
+    "f32": jnp.float32,
+    "f16": jnp.float16,
+    "bf16": jnp.bfloat16,
+}
+
+
+def _pick_block_l(l: int, block_l: int) -> int:
+    while l % block_l != 0:
+        block_l //= 2
+    return max(block_l, 1)
+
+
+def _pick_block_n(t: int, block_n: int) -> int:
+    while t % block_n != 0:
+        block_n //= 2
+    return max(block_n, 1)
+
+
+def make_eval_ws(dtype: str, *, block_l: int = 16, block_n: int = 512):
+    """Work-matrix partial sums: (V_t, vmask, S, smask) -> ((L,),)."""
+    compute_dtype = COMPUTE_DTYPES[dtype]
+
+    def eval_ws(v, vmask, s, smask):
+        bl = _pick_block_l(s.shape[0], block_l)
+        bn = _pick_block_n(v.shape[0], block_n)
+        out = work_k.work_matrix(
+            v, vmask, s, smask,
+            block_l=bl, block_n=bn,
+            compute_dtype=compute_dtype,
+        )
+        return (out,)
+
+    return eval_ws
+
+
+def make_marginal(dtype: str, *, block_m: int = 128, block_n: int = 512):
+    """Marginal-gain partial sums: (V_t, vmask, dmin, C, cmask) -> ((M,),)."""
+    compute_dtype = COMPUTE_DTYPES[dtype]
+
+    def marginal(v, vmask, dmin, c, cmask):
+        bm = _pick_block_l(c.shape[0], block_m)
+        bn = _pick_block_n(v.shape[0], block_n)
+        out = marginal_k.marginal_gain(
+            v, vmask, dmin, c, cmask,
+            block_m=bm, block_n=bn,
+            compute_dtype=compute_dtype,
+        )
+        return (out,)
+
+    return marginal
+
+
+def make_assign(dtype: str, *, block_n: int = 512):
+    """Cluster assignment: (V_t, S, smask) -> (labels (T,) i32, dmin (T,))."""
+    compute_dtype = COMPUTE_DTYPES[dtype]
+
+    def assign(v, s, smask):
+        bn = _pick_block_n(v.shape[0], block_n)
+        labels, dmin = assign_k.assign(
+            v, s, smask, block_n=bn, compute_dtype=compute_dtype,
+        )
+        return (labels, dmin)
+
+    return assign
+
+
+def make_update_dmin(*, block_n: int = 512):
+    """Greedy state update: (V_t, dmin, e (1,D)) -> ((T,),)."""
+
+    def upd(v, dmin, e):
+        bn = _pick_block_n(v.shape[0], block_n)
+        out = assign_k.update_dmin(v, dmin, e, block_n=bn)
+        return (out,)
+
+    return upd

@@ -1,0 +1,93 @@
+"""The shape-bucketed artifact family compiled by ``aot.py``.
+
+Buckets are the contract between the build-time Python layer and the Rust
+runtime: the runtime selects the smallest bucket that fits a request and
+pads (zeros pad D — exact for squared Euclidean; masks pad K / L / M and
+ground-tile rows). The paper's benchmark grid (d=100, k up to a few
+hundred) pins the exact D=100 buckets so the headline experiments run
+pad-free.
+
+Tile size T is the ground-set rows per device call. One while-loop grid
+iteration processes a (BL x BN) work-matrix tile, so T only affects the
+host-side call count, not kernel structure.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+#: ground-tile buckets (rows per device call). Multiple sizes exist so
+#: datasets smaller than the big tile don't pay up-to-8x padding waste —
+#: the runtime covers N with big tiles and one small remainder tile.
+#: (perf pass #1, EXPERIMENTS.md §Perf)
+T_BUCKETS = (512, 4096)
+
+#: kept for backward compatibility with tests; the default big tile.
+TILE_T = 4096
+
+#: dimensionality buckets; D=100 matches the paper's experiment grid.
+D_BUCKETS = (16, 100, 256)
+
+#: per-set slot buckets (paper sweeps k in [10, 500]). The 32 bucket
+#: cuts padding waste for mid-size k (perf pass #2).
+K_BUCKETS = (16, 32, 64, 192, 512)
+
+#: evaluation sets per device chunk (the L dimension of the work matrix).
+L_CHUNK = 64
+
+#: candidate slots per marginal-gain call.
+M_BUCKET = 512
+
+#: dtypes compiled for each kernel (matmul-operand precision).
+EVAL_DTYPES = ("f32", "f16", "bf16")
+
+
+@dataclass(frozen=True)
+class ArtifactSpec:
+    """One AOT artifact: a kernel at a fixed shape bucket and dtype."""
+
+    kernel: str           # eval_ws | marginal | assign | update_dmin
+    dtype: str            # f32 | f16 | bf16
+    t: int                # ground-tile rows
+    d: int                # dimensionality
+    k: Optional[int] = None   # set slots (eval_ws / assign)
+    l: Optional[int] = None   # sets per chunk (eval_ws)
+    m: Optional[int] = None   # candidate slots (marginal)
+
+    @property
+    def name(self) -> str:
+        parts = [self.kernel, self.dtype, f"t{self.t}", f"d{self.d}"]
+        if self.k is not None:
+            parts.append(f"k{self.k}")
+        if self.l is not None:
+            parts.append(f"l{self.l}")
+        if self.m is not None:
+            parts.append(f"m{self.m}")
+        return "_".join(parts)
+
+    @property
+    def filename(self) -> str:
+        return f"{self.name}.hlo.txt"
+
+
+def default_specs() -> list[ArtifactSpec]:
+    """The artifact family built by ``make artifacts``."""
+    specs: list[ArtifactSpec] = []
+    for t in T_BUCKETS:
+        for dtype in EVAL_DTYPES:
+            for d in D_BUCKETS:
+                for k in K_BUCKETS:
+                    # K=512 only at the paper's D=100 grid to bound build time.
+                    if k == 512 and d != 100:
+                        continue
+                    specs.append(ArtifactSpec("eval_ws", dtype, t, d, k=k, l=L_CHUNK))
+        for dtype in EVAL_DTYPES:
+            for d in D_BUCKETS:
+                specs.append(ArtifactSpec("marginal", dtype, t, d, m=M_BUCKET))
+        for d in D_BUCKETS:
+            for k in K_BUCKETS[:-1]:
+                specs.append(ArtifactSpec("assign", "f32", t, d, k=k))
+        for d in D_BUCKETS:
+            specs.append(ArtifactSpec("update_dmin", "f32", t, d))
+    return specs

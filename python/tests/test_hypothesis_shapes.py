@@ -1,0 +1,119 @@
+"""Hypothesis sweeps over kernel shapes, dtypes, masks and data scales.
+
+Property: for *every* admissible (T, D, L, K, BL, BN) configuration and
+mask pattern, the Pallas kernels agree with the explicit-subtraction
+oracle within dtype-appropriate tolerance.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import assign as asg
+from compile.kernels import marginal_gain as mg
+from compile.kernels import ref
+from compile.kernels import work_matrix as wm
+
+# keep the sweep fast on 1 CPU: shapes stay small but structurally varied
+SETTINGS = settings(max_examples=25, deadline=None)
+
+
+def _pow2(lo, hi):
+    return st.sampled_from([2 ** i for i in range(lo, hi + 1)])
+
+
+@st.composite
+def work_matrix_case(draw):
+    d = draw(st.sampled_from([1, 2, 3, 7, 16, 33]))
+    bn = draw(_pow2(4, 6))          # 16..64
+    tiles = draw(st.integers(1, 3))
+    t = bn * tiles
+    bl = draw(_pow2(0, 2))          # 1..4
+    lchunks = draw(st.integers(1, 3))
+    l = bl * lchunks
+    k = draw(st.sampled_from([1, 2, 5, 8]))
+    seed = draw(st.integers(0, 2 ** 16))
+    scale = draw(st.sampled_from([0.01, 1.0, 50.0]))
+    dtype = draw(st.sampled_from(["f32", "f16", "bf16"]))
+    return d, t, bn, l, bl, k, seed, scale, dtype
+
+
+@given(work_matrix_case())
+@SETTINGS
+def test_work_matrix_any_shape(case):
+    d, t, bn, l, bl, k, seed, scale, dtype = case
+    r = np.random.default_rng(seed)
+    v = jnp.asarray(r.standard_normal((t, d)) * scale, jnp.float32)
+    vm = jnp.asarray((r.random(t) < 0.85).astype(np.float32))
+    s = jnp.asarray(r.standard_normal((l, k, d)) * scale, jnp.float32)
+    sm = jnp.asarray((r.random((l, k)) < 0.7).astype(np.float32))
+
+    cd = {"f32": jnp.float32, "f16": jnp.float16, "bf16": jnp.bfloat16}[dtype]
+    got = wm.work_matrix(v, vm, s, sm, block_l=bl, block_n=bn, compute_dtype=cd)
+    want = ref.work_matrix_ref(v, vm, s, sm)
+
+    tol = 1e-4 if dtype == "f32" else 6e-2
+    atol = tol * max(float(jnp.abs(want).max()), 1.0)
+    np.testing.assert_allclose(got, want, rtol=tol, atol=atol)
+
+
+@st.composite
+def marginal_case(draw):
+    d = draw(st.sampled_from([1, 2, 7, 16]))
+    bn = draw(_pow2(4, 6))
+    t = bn * draw(st.integers(1, 3))
+    bm = draw(_pow2(0, 3))
+    m = bm * draw(st.integers(1, 3))
+    seed = draw(st.integers(0, 2 ** 16))
+    dtype = draw(st.sampled_from(["f32", "f16"]))
+    return d, t, bn, m, bm, seed, dtype
+
+
+@given(marginal_case())
+@SETTINGS
+def test_marginal_any_shape(case):
+    d, t, bn, m, bm, seed, dtype = case
+    r = np.random.default_rng(seed)
+    v = jnp.asarray(r.standard_normal((t, d)), jnp.float32)
+    vm = jnp.asarray((r.random(t) < 0.85).astype(np.float32))
+    dmin = jnp.asarray(np.abs(r.standard_normal(t)) * d, jnp.float32)
+    c = jnp.asarray(r.standard_normal((m, d)), jnp.float32)
+    cm = jnp.asarray((r.random(m) < 0.8).astype(np.float32))
+
+    cd = {"f32": jnp.float32, "f16": jnp.float16}[dtype]
+    got = mg.marginal_gain(v, vm, dmin, c, cm, block_m=bm, block_n=bn,
+                           compute_dtype=cd)
+    want = ref.marginal_gain_ref(v, vm, dmin, c, cm)
+
+    tol = 1e-4 if dtype == "f32" else 6e-2
+    atol = tol * max(float(jnp.abs(want).max()), 1.0)
+    np.testing.assert_allclose(got, want, rtol=tol, atol=atol)
+    assert np.all(np.asarray(got) >= 0.0)
+
+
+@st.composite
+def assign_case(draw):
+    d = draw(st.sampled_from([1, 2, 7, 16]))
+    bn = draw(_pow2(4, 6))
+    t = bn * draw(st.integers(1, 2))
+    k = draw(st.integers(1, 8))
+    n_valid = draw(st.integers(1, k))
+    seed = draw(st.integers(0, 2 ** 16))
+    return d, t, bn, k, n_valid, seed
+
+
+@given(assign_case())
+@SETTINGS
+def test_assign_any_shape(case):
+    d, t, bn, k, n_valid, seed = case
+    r = np.random.default_rng(seed)
+    v = jnp.asarray(r.standard_normal((t, d)), jnp.float32)
+    s = jnp.asarray(r.standard_normal((k, d)), jnp.float32)
+    sm = jnp.asarray((np.arange(k) < n_valid).astype(np.float32))
+
+    lab, dmin = asg.assign(v, s, sm, block_n=bn)
+    wl, wd = ref.assign_ref(v, s, sm)
+    np.testing.assert_array_equal(lab, wl)
+    np.testing.assert_allclose(dmin, wd, rtol=1e-4, atol=1e-3)
+    # labels always point at a valid exemplar
+    assert np.asarray(lab).max() < n_valid

@@ -1,0 +1,261 @@
+"""Kernel-vs-oracle correctness: the CORE build-time signal.
+
+Every Pallas kernel (interpret mode) is compared against the pure-jnp
+oracle in ref.py, which computes distances by explicit subtraction rather
+than the norm decomposition — agreement is a real numerical check.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import assign as asg
+from compile.kernels import marginal_gain as mg
+from compile.kernels import ref
+from compile.kernels import work_matrix as wm
+
+
+def rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+def randf(r, *shape, scale=1.0):
+    return jnp.asarray(r.standard_normal(shape) * scale, jnp.float32)
+
+
+def randmask(r, *shape, p=0.8):
+    m = (r.random(shape) < p).astype(np.float32)
+    return jnp.asarray(m)
+
+
+class TestWorkMatrix:
+    def test_matches_oracle_basic(self):
+        r = rng(1)
+        v, s = randf(r, 256, 16), randf(r, 8, 8, 16)
+        vm, sm = jnp.ones((256,)), jnp.ones((8, 8))
+        got = wm.work_matrix(v, vm, s, sm, block_l=4, block_n=128)
+        want = ref.work_matrix_ref(v, vm, s, sm)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-2)
+
+    def test_matches_oracle_with_masks(self):
+        r = rng(2)
+        v, s = randf(r, 256, 16), randf(r, 8, 8, 16)
+        vm, sm = randmask(r, 256), randmask(r, 8, 8, p=0.6)
+        got = wm.work_matrix(v, vm, s, sm, block_l=4, block_n=128)
+        want = ref.work_matrix_ref(v, vm, s, sm)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-2)
+
+    def test_fully_masked_set_row_falls_back_to_e0(self):
+        """A set row with smask == 0 everywhere must evaluate L({e0})."""
+        r = rng(3)
+        v = randf(r, 128, 8)
+        vm = jnp.ones((128,))
+        s = randf(r, 4, 4, 8)
+        sm = jnp.ones((4, 4)).at[2].set(0.0)
+        got = wm.work_matrix(v, vm, s, sm, block_l=4, block_n=128)
+        vsq_sum = float(jnp.sum(jnp.sum(v * v, axis=1)))
+        assert got[2] == pytest.approx(vsq_sum, rel=1e-5)
+
+    def test_e0_clamp_bounds_output(self):
+        """Every partial sum is bounded by sum |v|^2 (the e0 row)."""
+        r = rng(4)
+        v, s = randf(r, 128, 8, scale=3.0), randf(r, 4, 4, 8, scale=0.1)
+        vm, sm = jnp.ones((128,)), jnp.ones((4, 4))
+        got = wm.work_matrix(v, vm, s, sm, block_l=4, block_n=128)
+        vsq_sum = float(jnp.sum(jnp.sum(v * v, axis=1)))
+        assert np.all(np.asarray(got) <= vsq_sum * (1 + 1e-5))
+
+    def test_zero_vmask_gives_zero(self):
+        r = rng(5)
+        v, s = randf(r, 128, 8), randf(r, 4, 4, 8)
+        got = wm.work_matrix(v, jnp.zeros((128,)), s, jnp.ones((4, 4)),
+                             block_l=4, block_n=128)
+        np.testing.assert_allclose(got, np.zeros(4), atol=1e-6)
+
+    def test_exemplar_in_ground_set_contributes_zero(self):
+        """If s == v_i, point i contributes 0 to that row."""
+        r = rng(6)
+        v = randf(r, 128, 8)
+        s = jnp.stack([v[:4]])  # one set containing first 4 ground points
+        sm = jnp.ones((1, 4))
+        vm = jnp.zeros((128,)).at[:4].set(1.0)  # only those 4 points count
+        got = wm.work_matrix(v, vm, s, sm, block_l=1, block_n=128)
+        np.testing.assert_allclose(got, np.zeros(1), atol=1e-3)
+
+    @pytest.mark.parametrize("dtype", ["f16", "bf16"])
+    def test_reduced_precision_close(self, dtype):
+        r = rng(7)
+        cd = {"f16": jnp.float16, "bf16": jnp.bfloat16}[dtype]
+        v, s = randf(r, 256, 16), randf(r, 8, 8, 16)
+        vm, sm = jnp.ones((256,)), jnp.ones((8, 8))
+        got = wm.work_matrix(v, vm, s, sm, block_l=4, block_n=128,
+                             compute_dtype=cd)
+        want = ref.work_matrix_ref(v, vm, s, sm)
+        np.testing.assert_allclose(got, want, rtol=5e-2,
+                                   atol=5e-2 * float(jnp.abs(want).max()))
+
+    def test_block_shape_independence(self):
+        """Result must not depend on the BL/BN tiling."""
+        r = rng(8)
+        v, s = randf(r, 256, 4), randf(r, 16, 4, 4)
+        vm, sm = randmask(r, 256), randmask(r, 16, 4)
+        a = wm.work_matrix(v, vm, s, sm, block_l=16, block_n=256)
+        b = wm.work_matrix(v, vm, s, sm, block_l=2, block_n=32)
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-4)
+
+    def test_shape_validation(self):
+        r = rng(9)
+        with pytest.raises(ValueError, match="dimensionality"):
+            wm.work_matrix(randf(r, 128, 8), jnp.ones((128,)),
+                           randf(r, 4, 4, 16), jnp.ones((4, 4)),
+                           block_l=4, block_n=128)
+        with pytest.raises(ValueError, match="not divisible"):
+            wm.work_matrix(randf(r, 100, 8), jnp.ones((100,)),
+                           randf(r, 4, 4, 8), jnp.ones((4, 4)),
+                           block_l=4, block_n=128)
+
+
+class TestMarginalGain:
+    def test_matches_oracle(self):
+        r = rng(10)
+        v, c = randf(r, 256, 16), randf(r, 16, 16)
+        vm, cm = randmask(r, 256), randmask(r, 16)
+        dmin = jnp.abs(randf(r, 256)) * 16
+        got = mg.marginal_gain(v, vm, dmin, c, cm, block_m=8, block_n=128)
+        want = ref.marginal_gain_ref(v, vm, dmin, c, cm)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-2)
+
+    def test_gains_nonnegative(self):
+        r = rng(11)
+        v, c = randf(r, 256, 8), randf(r, 16, 8)
+        dmin = jnp.abs(randf(r, 256))
+        got = mg.marginal_gain(v, jnp.ones((256,)), dmin, c, jnp.ones((16,)),
+                               block_m=8, block_n=128)
+        assert np.all(np.asarray(got) >= 0.0)
+
+    def test_zero_dmin_gives_zero_gain(self):
+        """A perfectly covered ground set admits no improvement."""
+        r = rng(12)
+        v, c = randf(r, 128, 8), randf(r, 8, 8)
+        got = mg.marginal_gain(v, jnp.ones((128,)), jnp.zeros((128,)), c,
+                               jnp.ones((8,)), block_m=8, block_n=128)
+        np.testing.assert_allclose(got, np.zeros(8), atol=1e-6)
+
+    def test_candidate_equals_incumbent_zero_gain(self):
+        """Re-adding an exemplar already in S yields zero marginal gain."""
+        r = rng(13)
+        v = randf(r, 128, 8)
+        s0 = v[:1]  # incumbent exemplar
+        _, dmin = ref.assign_ref(v, s0, jnp.ones((1,)))
+        got = mg.marginal_gain(v, jnp.ones((128,)), dmin, s0, jnp.ones((1,)),
+                               block_m=1, block_n=128)
+        np.testing.assert_allclose(got, np.zeros(1), atol=1e-3)
+
+    def test_consistency_with_work_matrix(self):
+        """gain(c) computed via dmin must equal f(S∪{c}) - f(S) via W."""
+        r = rng(14)
+        v = randf(r, 128, 8)
+        vm = jnp.ones((128,))
+        s0 = v[:3]
+        _, dmin = ref.assign_ref(v, s0, jnp.ones((3,)))
+        c = randf(r, 4, 8)
+
+        gains = mg.marginal_gain(v, vm, dmin, c, jnp.ones((4,)),
+                                 block_m=4, block_n=128)
+        # Work-matrix route: evaluate {S0 ∪ {c_m}} and S0 itself.
+        s_multi = jnp.stack([jnp.concatenate([s0, c[m:m + 1]]) for m in range(4)])
+        sums = wm.work_matrix(v, vm, s_multi, jnp.ones((4, 4)),
+                              block_l=4, block_n=128)
+        base = wm.work_matrix(v, vm, s0[None], jnp.ones((1, 3)),
+                              block_l=1, block_n=128)
+        np.testing.assert_allclose(gains, base[0] - sums, rtol=1e-4, atol=1e-2)
+
+
+class TestAssign:
+    def test_matches_oracle(self):
+        r = rng(20)
+        v, s = randf(r, 256, 8), randf(r, 8, 8)
+        sm = jnp.ones((8,))
+        lab, dmin = asg.assign(v, s, sm, block_n=128)
+        wl, wd = ref.assign_ref(v, s, sm)
+        np.testing.assert_array_equal(lab, wl)
+        np.testing.assert_allclose(dmin, wd, rtol=1e-4, atol=1e-3)
+
+    def test_masked_exemplars_never_win(self):
+        r = rng(21)
+        v = randf(r, 128, 8)
+        s = jnp.concatenate([v[:1] * 0.0, randf(r, 3, 8)])  # slot 0 = origin
+        sm = jnp.ones((4,)).at[0].set(0.0)  # mask out the origin slot
+        lab, _ = asg.assign(v, s, sm, block_n=128)
+        assert not np.any(np.asarray(lab) == 0) or np.all(np.asarray(sm) == 0)
+
+    def test_labels_in_range(self):
+        r = rng(22)
+        v, s = randf(r, 128, 4), randf(r, 6, 4)
+        # pad exemplars to a mask-divisible bucket of 8
+        s = jnp.concatenate([s, jnp.zeros((2, 4))])
+        sm = jnp.ones((8,)).at[6:].set(0.0)
+        lab, _ = asg.assign(v, s, sm, block_n=128)
+        assert np.asarray(lab).min() >= 0 and np.asarray(lab).max() < 6
+
+
+class TestUpdateDmin:
+    def test_matches_oracle(self):
+        r = rng(30)
+        v = randf(r, 256, 8)
+        dmin = jnp.abs(randf(r, 256)) * 8
+        e = randf(r, 1, 8)
+        got = asg.update_dmin(v, dmin, e, block_n=128)
+        want = ref.update_dmin_ref(v, dmin, e)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+    def test_monotone_decrease(self):
+        """update_dmin never increases any entry."""
+        r = rng(31)
+        v = randf(r, 128, 8)
+        dmin = jnp.abs(randf(r, 128)) * 8
+        got = asg.update_dmin(v, dmin, randf(r, 1, 8), block_n=128)
+        assert np.all(np.asarray(got) <= np.asarray(dmin) + 1e-7)
+
+    def test_sequential_updates_match_assign(self):
+        """Folding exemplars one by one equals the batch assign dmin."""
+        r = rng(32)
+        v = randf(r, 128, 8)
+        s = randf(r, 4, 8)
+        dmin = jnp.sum(v * v, axis=1)  # e0-only state
+        for i in range(4):
+            dmin = asg.update_dmin(v, dmin, s[i:i + 1], block_n=128)
+        _, want = ref.assign_ref(v, s, jnp.ones((4,)))
+        np.testing.assert_allclose(dmin, want, rtol=1e-4, atol=1e-3)
+
+
+class TestSubmodularityOracle:
+    """Sanity of the oracle itself: Definition 2 / 3 on random data."""
+
+    def test_monotone(self):
+        r = rng(40)
+        v = randf(r, 64, 4)
+        items = [v[i:i + 1] for i in range(8)]
+        vals = []
+        for size in range(1, 9):
+            s = jnp.concatenate(items[:size])
+            vals.append(float(ref.f_value_ref(v, [s])[0]))
+        assert all(b >= a - 1e-5 for a, b in zip(vals, vals[1:]))
+
+    def test_diminishing_returns(self):
+        r = rng(41)
+        v = randf(r, 64, 4)
+        a = v[:2]          # A ⊆ B
+        b = v[:5]
+        e = v[10:11]
+        fa, fae = (float(ref.f_value_ref(v, [a])[0]),
+                   float(ref.f_value_ref(v, [jnp.concatenate([a, e])])[0]))
+        fb, fbe = (float(ref.f_value_ref(v, [b])[0]),
+                   float(ref.f_value_ref(v, [jnp.concatenate([b, e])])[0]))
+        assert (fae - fa) >= (fbe - fb) - 1e-5
+
+    def test_empty_set_value_zero(self):
+        r = rng(42)
+        v = randf(r, 64, 4)
+        assert float(ref.f_value_ref(v, [v[:0]])[0]) == pytest.approx(0.0, abs=1e-6)

@@ -1,0 +1,116 @@
+"""L2 model-factory tests: block-size pickers, dtype variants and
+whole-graph semantics (jit-compiled, as the artifacts will run)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def rnd(*shape, seed=0):
+    r = np.random.default_rng(seed)
+    return jnp.asarray(r.standard_normal(shape), jnp.float32)
+
+
+class TestBlockPickers:
+    def test_pick_block_divides(self):
+        assert model._pick_block_l(64, 16) == 16
+        assert model._pick_block_l(8, 16) == 8
+        assert model._pick_block_l(12, 16) == 4
+        assert model._pick_block_l(1, 16) == 1
+
+    def test_pick_block_n_small_tile(self):
+        assert model._pick_block_n(512, 512) == 512
+        assert model._pick_block_n(4096, 512) == 512
+        assert model._pick_block_n(256, 512) == 256
+
+
+class TestEvalWs:
+    @pytest.mark.parametrize("dtype", ["f32", "f16", "bf16"])
+    def test_jit_matches_ref(self, dtype):
+        fn = jax.jit(model.make_eval_ws(dtype))
+        t, d, l, k = 256, 16, 16, 8
+        v, s = rnd(t, d, seed=1), rnd(l, k, d, seed=2)
+        vm = jnp.ones((t,))
+        sm = jnp.ones((l, k))
+        (got,) = fn(v, vm, s, sm)
+        want = ref.work_matrix_ref(v, vm, s, sm)
+        tol = 1e-4 if dtype == "f32" else 6e-2
+        np.testing.assert_allclose(
+            got, want, rtol=tol, atol=tol * float(jnp.abs(want).max())
+        )
+
+    def test_small_tile_shapes(self):
+        """T=512 artifacts (perf pass #1) lower and execute correctly."""
+        fn = jax.jit(model.make_eval_ws("f32"))
+        t, d, l, k = 512, 100, 64, 16
+        v, s = rnd(t, d, seed=3), rnd(l, k, d, seed=4)
+        vm, sm = jnp.ones((t,)), jnp.ones((l, k))
+        (got,) = fn(v, vm, s, sm)
+        want = ref.work_matrix_ref(v, vm, s, sm)
+        np.testing.assert_allclose(got, want, rtol=1e-4,
+                                   atol=1e-4 * float(jnp.abs(want).max()))
+
+
+class TestMarginalAndState:
+    def test_marginal_consistent_with_eval(self):
+        """gain(c) from the marginal graph == f(S∪{c}) - f(S) via eval."""
+        t, d, m = 256, 8, 8
+        v = rnd(t, d, seed=5)
+        vm = jnp.ones((t,))
+        s0 = v[:3]
+        _, dmin = ref.assign_ref(v, s0, jnp.ones((3,)))
+        c = rnd(m, d, seed=6)
+        cm = jnp.ones((m,))
+
+        marginal = jax.jit(model.make_marginal("f32"))
+        (gains,) = marginal(v, vm, dmin, c, cm)
+
+        eval_ws = jax.jit(model.make_eval_ws("f32"))
+        base = eval_ws(v, vm, s0[None], jnp.ones((1, 3)))[0][0]
+        for j in range(m):
+            s_j = jnp.concatenate([s0, c[j:j + 1]])[None]
+            with_j = eval_ws(v, vm, s_j, jnp.ones((1, 4)))[0][0]
+            np.testing.assert_allclose(gains[j], base - with_j, rtol=1e-4, atol=1e-2)
+
+    def test_update_dmin_chain_equals_assign(self):
+        t, d, k = 256, 8, 5
+        v = rnd(t, d, seed=7)
+        s = rnd(k, d, seed=8)
+        upd = jax.jit(model.make_update_dmin())
+        dmin = jnp.sum(v * v, axis=1)
+        for i in range(k):
+            (dmin,) = upd(v, dmin, s[i:i + 1])
+        _, want = ref.assign_ref(v, s, jnp.ones((k,)))
+        np.testing.assert_allclose(dmin, want, rtol=1e-4, atol=1e-3)
+
+    def test_assign_graph_outputs(self):
+        t, d, k = 256, 8, 4
+        v, s = rnd(t, d, seed=9), rnd(k, d, seed=10)
+        sm = jnp.ones((k,))
+        assign = jax.jit(model.make_assign("f32"))
+        labels, dmin = assign(v, s, sm)
+        assert labels.dtype == jnp.int32
+        wl, wd = ref.assign_ref(v, s, sm)
+        np.testing.assert_array_equal(labels, wl)
+        np.testing.assert_allclose(dmin, wd, rtol=1e-4, atol=1e-3)
+
+
+class TestPrecisionOrdering:
+    def test_f16_error_larger_than_f32_but_bounded(self):
+        """Reduced precision must deviate, but within the §V-B regime."""
+        t, d, l, k = 512, 100, 8, 8
+        v, s = rnd(t, d, seed=11) * 3.0, rnd(l, k, d, seed=12) * 3.0
+        vm, sm = jnp.ones((t,)), jnp.ones((l, k))
+        want = np.asarray(ref.work_matrix_ref(v, vm, s, sm), dtype=np.float64)
+
+        errs = {}
+        for dtype in ["f32", "f16", "bf16"]:
+            (got,) = jax.jit(model.make_eval_ws(dtype))(v, vm, s, sm)
+            errs[dtype] = float(np.max(np.abs(np.asarray(got) - want) / np.abs(want)))
+        assert errs["f32"] < 1e-4
+        assert errs["f32"] <= errs["f16"] < 5e-2
+        assert errs["f32"] <= errs["bf16"] < 1e-1

@@ -1,0 +1,60 @@
+"""Shape-bucket family tests: the contract between aot.py and the Rust
+runtime registry (tile planning, bucket coverage, name stability)."""
+
+from compile import specs
+
+
+def test_tile_buckets_ascending_and_plural():
+    assert list(specs.T_BUCKETS) == sorted(specs.T_BUCKETS)
+    assert len(specs.T_BUCKETS) >= 2, "perf pass #1 needs a small tile"
+    assert specs.TILE_T in specs.T_BUCKETS
+
+
+def test_every_tile_bucket_has_full_kernel_family():
+    """The Rust tile planner assumes every T bucket provides every
+    kernel (it mixes tile sizes within one evaluation)."""
+    all_specs = specs.default_specs()
+    for t in specs.T_BUCKETS:
+        kernels = {s.kernel for s in all_specs if s.t == t}
+        assert kernels == {"eval_ws", "marginal", "assign", "update_dmin"}, (
+            f"T={t} missing kernels: {kernels}"
+        )
+
+
+def test_every_d_bucket_served_at_every_tile():
+    all_specs = specs.default_specs()
+    for t in specs.T_BUCKETS:
+        for d in specs.D_BUCKETS:
+            assert any(
+                s.kernel == "update_dmin" and s.t == t and s.d == d
+                for s in all_specs
+            )
+
+
+def test_k_buckets_cover_paper_sweep():
+    """Paper k sweep reaches 500; the scaled default grid reaches 160."""
+    assert max(specs.K_BUCKETS) >= 500
+    # bucket ladder bounds padding waste to <= 3x anywhere below 192
+    ks = sorted(specs.K_BUCKETS)
+    for lo, hi in zip(ks, ks[1:]):
+        if hi <= 192:
+            assert hi <= 3 * lo, f"bucket gap {lo}->{hi} wastes >3x"
+
+
+def test_dtype_family_for_eval_and_marginal():
+    all_specs = specs.default_specs()
+    for kernel in ["eval_ws", "marginal"]:
+        dtypes = {s.dtype for s in all_specs if s.kernel == kernel}
+        assert dtypes == {"f32", "f16", "bf16"}
+
+
+def test_names_are_filenames():
+    for s in specs.default_specs():
+        assert s.filename == s.name + ".hlo.txt"
+        assert "/" not in s.filename
+        assert " " not in s.filename
+
+
+def test_spec_name_encodes_all_dims():
+    s = specs.ArtifactSpec("eval_ws", "f16", 512, 100, k=32, l=64)
+    assert s.name == "eval_ws_f16_t512_d100_k32_l64"

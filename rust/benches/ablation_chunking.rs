@@ -1,0 +1,123 @@
+//! Chunking ablation (§IV-B3): runtime and chunk count as the simulated
+//! device-memory budget φ shrinks, down to the planner's failure point
+//! ("chunking fails when n_chunk-size equals zero"), plus the FP16 escape
+//! hatch the paper recommends (halving the per-set footprint).
+//!
+//! Run: `cargo bench --bench ablation_chunking`
+
+#[path = "common.rs"]
+mod common;
+
+use std::time::Instant;
+
+use exemcl::bench::{Scale, Table};
+use exemcl::chunk::{self, MemoryModel};
+use exemcl::data::synth::UniformCube;
+use exemcl::optim::Oracle;
+use exemcl::runtime::{DeviceEvaluator, EvalConfig};
+
+fn main() {
+    let scale = Scale::from_env();
+    let (n, l, k, d) = match scale {
+        Scale::Quick => (1000, 128, 10, 100),
+        Scale::Default => (5000, 1024, 10, 100),
+        Scale::Full => (10_000, 4096, 10, 100),
+    };
+    let ds = UniformCube::new(d, 1.0).generate(n, 17);
+    let sets = common::random_sets(n, l, k, 18);
+
+    println!("\n== Chunking ablation (§IV-B3): runtime vs device budget φ ==");
+    println!("problem: N={n} l={l} k={k} d={d}\n");
+
+    let mut table = Table::new(&["budget", "chunks", "chunk size", "seconds", "f(S_0)"]);
+
+    // budgets from ample to below a single set's footprint; the ground
+    // footprint uses the real D bucket (probe evaluator tells us)
+    let probe = MemoryModel::default();
+    let d_bucket = DeviceEvaluator::from_dir(
+        common::artifacts_dir(),
+        &ds,
+        EvalConfig::default(),
+    )
+    .expect("probe evaluator")
+    .d_bucket();
+    let ground = n * d_bucket * 4 + n * 4;
+    let per_set = probe.per_set_bytes(16, d_bucket); // K bucket 16 covers k=10
+    let budgets: Vec<usize> = vec![
+        ground + per_set * l,            // everything resident: 1 chunk
+        ground + per_set * (l / 4),      // 4 chunks
+        ground + per_set * (l / 16),     // 16 chunks
+        ground + per_set * 2,            // extreme: ~l/2 chunks
+        ground + per_set / 2,            // below one set -> planner OOM
+    ];
+
+    for &budget in &budgets {
+        let mem = MemoryModel { total_bytes: budget, ..MemoryModel::default() };
+        let cfg = EvalConfig { dtype: "f32".into(), memory: mem, ..EvalConfig::default() };
+        let dev = match DeviceEvaluator::from_dir(common::artifacts_dir(), &ds, cfg) {
+            Ok(d) => d,
+            Err(e) => {
+                table.row(&[
+                    format!("{:.1} MiB", budget as f64 / (1 << 20) as f64),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    format!("init failed: {e}"),
+                ]);
+                continue;
+            }
+        };
+        let free = mem.free_after_ground(n, dev.d_bucket());
+        let plan = chunk::plan(l, mem.per_set_bytes(16, dev.d_bucket()), free);
+        match plan {
+            Err(e) => {
+                table.row(&[
+                    format!("{:.1} MiB", budget as f64 / (1 << 20) as f64),
+                    "OOM".into(),
+                    "0".into(),
+                    "-".into(),
+                    e.to_string().chars().take(40).collect(),
+                ]);
+            }
+            Ok(p) => {
+                dev.eval_sets(&sets[..1]).expect("warmup");
+                let t0 = Instant::now();
+                let f = dev.eval_sets(&sets).expect("eval");
+                let secs = t0.elapsed().as_secs_f64();
+                table.row(&[
+                    format!("{:.1} MiB", budget as f64 / (1 << 20) as f64),
+                    p.n_chunks.to_string(),
+                    p.chunk_size.to_string(),
+                    format!("{secs:.4}"),
+                    format!("{:.4}", f[0]),
+                ]);
+            }
+        }
+    }
+    table.print();
+
+    // FP16 escape hatch: the budget that OOMs in f32 fits in f16
+    let tight = ground + per_set / 2 + per_set / 4;
+    let f16_mem = MemoryModel {
+        total_bytes: tight,
+        bytes_per_elem: 2,
+        ..MemoryModel::default()
+    };
+    let f32_free = MemoryModel { total_bytes: tight, ..MemoryModel::default() }
+        .free_after_ground(n, d_bucket);
+    let f32_plan = chunk::plan(l, probe.per_set_bytes(16, d_bucket), f32_free);
+    let f16_free = f16_mem.free_after_ground(n, d_bucket);
+    let f16_plan = chunk::plan(l, f16_mem.per_set_bytes(16, d_bucket), f16_free);
+    println!(
+        "\nFP16 escape hatch at {:.1} MiB: f32 plan = {}, f16 plan = {}",
+        tight as f64 / (1 << 20) as f64,
+        match f32_plan {
+            Ok(p) => format!("{} chunks", p.n_chunks),
+            Err(_) => "OOM".into(),
+        },
+        match f16_plan {
+            Ok(p) => format!("{} chunks", p.n_chunks),
+            Err(_) => "OOM".into(),
+        },
+    );
+}

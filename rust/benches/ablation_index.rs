@@ -1,0 +1,96 @@
+//! Index-structure ablation — §IV-A's design argument, measured.
+//!
+//! The paper dismisses NN index structures: "index structures, like
+//! k-d-trees, require that they are built upon some subset of the data
+//! space ... For equation 3 this would require establishing an index on
+//! the set S, which during optimization changes for every function
+//! evaluation. Hence, we do not consider the use of index structures."
+//!
+//! This bench quantifies that: a real k-d tree (rebuilt per evaluation
+//! set, as it must be) versus the linear scan versus the batched device
+//! path, across the k range. The tree can only win when k is large
+//! enough for O(log k) queries to beat O(k) scans *and* amortize the
+//! per-evaluation build — which the paper predicts never happens in the
+//! compact-summary regime (k ≲ a few hundred).
+//!
+//! Run: `cargo bench --bench ablation_index`
+
+#[path = "common.rs"]
+mod common;
+
+use std::time::Instant;
+
+use exemcl::bench::{Scale, Table};
+use exemcl::cpu::SingleThread;
+use exemcl::data::synth::UniformCube;
+use exemcl::index::IndexedEvaluator;
+use exemcl::optim::Oracle;
+
+fn main() {
+    let scale = Scale::from_env();
+    let (n, l, d, ks): (usize, usize, usize, Vec<usize>) = match scale {
+        Scale::Quick => (1000, 50, 100, vec![5, 20, 80]),
+        Scale::Default => (5000, 200, 100, vec![5, 20, 80, 320]),
+        Scale::Full => (10_000, 500, 100, vec![5, 20, 80, 320, 500]),
+    };
+    let ds = UniformCube::new(d, 1.0).generate(n, 21);
+    let scan = SingleThread::new(ds.clone());
+    let tree = IndexedEvaluator::new(ds.clone());
+    let (dev, _) = common::device_pair(&ds);
+
+    println!("\n== Index-structure ablation (§IV-A): per-evaluation k-d tree vs scan vs device ==");
+    println!("problem: N={n} l={l} d={d}\n");
+
+    let mut table = Table::new(&["k", "scan[s]", "kdtree[s]", "device[s]", "tree/scan", "verdict"]);
+    let mut csv: Vec<Vec<String>> = Vec::new();
+    for &k in &ks {
+        let sets = common::random_sets(n, l, k, 22 + k as u64);
+        dev.eval_sets(&sets[..1]).expect("warmup");
+
+        let t0 = Instant::now();
+        let a = scan.eval_sets(&sets).expect("scan");
+        let t_scan = t0.elapsed().as_secs_f64();
+
+        let t0 = Instant::now();
+        let b = tree.eval_sets(&sets).expect("tree");
+        let t_tree = t0.elapsed().as_secs_f64();
+
+        let t0 = Instant::now();
+        let c = dev.eval_sets(&sets).expect("device");
+        let t_dev = t0.elapsed().as_secs_f64();
+
+        // correctness cross-check
+        for ((x, y), z) in a.iter().zip(&b).zip(&c) {
+            assert!((x - y).abs() < 1e-3 * x.abs().max(1.0), "tree wrong: {x} vs {y}");
+            assert!((x - z).abs() < 1e-3 * x.abs().max(1.0), "device wrong: {x} vs {z}");
+        }
+
+        let ratio = t_tree / t_scan;
+        let verdict = if t_tree < t_scan && t_tree < t_dev {
+            "tree wins"
+        } else if ratio < 1.0 {
+            "tree < scan, device still wins"
+        } else {
+            "paper confirmed: rebuild cost dominates"
+        };
+        table.row(&[
+            k.to_string(),
+            format!("{t_scan:.4}"),
+            format!("{t_tree:.4}"),
+            format!("{t_dev:.4}"),
+            format!("{ratio:.2}"),
+            verdict.to_string(),
+        ]);
+        csv.push(vec![
+            k.to_string(),
+            format!("{t_scan:.6}"),
+            format!("{t_tree:.6}"),
+            format!("{t_dev:.6}"),
+        ]);
+    }
+    table.print();
+    let path =
+        exemcl::bench::write_csv("ablation_index", &["k", "scan", "kdtree", "device"], &csv)
+            .expect("csv");
+    println!("\nwrote {path}");
+}

@@ -1,0 +1,97 @@
+//! Layout ablation (§IV-B2): the paper argues S_multi must be staged into
+//! **one** buffer and shipped in a single transaction per chunk, with a
+//! round-robin physical order for coalescing. This bench compares:
+//!
+//! 1. `round-robin pack` — Fig. 2 staging walk, one upload per L-window;
+//! 2. `set-major pack`   — naive staging walk, same transfer granularity;
+//! 3. `per-set transfer` — one device round-trip *per evaluation set*
+//!    (what a non-batched implementation would do).
+//!
+//! Reported: wall-clock, host→device transfer count and bytes. On CUDA
+//! the round-robin order additionally coalesces warp loads; on the XLA
+//! path both pack orders produce the same logical tensor, so their gap
+//! isolates the *host staging* cost while (3) shows the transaction-count
+//! effect the paper optimizes against.
+//!
+//! Run: `cargo bench --bench ablation_layout`
+
+#[path = "common.rs"]
+mod common;
+
+use std::time::Instant;
+
+use exemcl::bench::{Scale, Table};
+use exemcl::data::synth::UniformCube;
+use exemcl::optim::Oracle;
+use exemcl::pack::{PackOrder, SMultiPack};
+
+fn main() {
+    let scale = Scale::from_env();
+    let (n, l, k, d) = match scale {
+        Scale::Quick => (1000, 64, 10, 100),
+        Scale::Default => (5000, 512, 10, 100),
+        Scale::Full => (10_000, 2048, 10, 100),
+    };
+    let ds = UniformCube::new(d, 1.0).generate(n, 7);
+    let sets = common::random_sets(n, l, k, 8);
+    let (dev, _) = common::device_pair(&ds);
+
+    // warm the executable cache
+    dev.eval_sets(&sets[..1]).expect("warmup");
+
+    let mut table = Table::new(&["strategy", "seconds", "h2d transfers", "h2d MiB", "result check"]);
+
+    // (1) + (2): packed single-staging paths
+    let mut packed_sums: Option<Vec<f64>> = None;
+    for (name, order) in [("round-robin pack", PackOrder::RoundRobin), ("set-major pack", PackOrder::SetMajor)] {
+        dev.reset_stats();
+        let t0 = Instant::now();
+        let pack = SMultiPack::from_indices(&ds, &sets, 0, order).expect("pack");
+        let sums = dev.eval_pack_sums(&pack).expect("eval");
+        let secs = t0.elapsed().as_secs_f64();
+        let st = dev.stats();
+        let check = match &packed_sums {
+            None => {
+                packed_sums = Some(sums);
+                "reference".to_string()
+            }
+            Some(r) => {
+                let max_rel = r
+                    .iter()
+                    .zip(&sums)
+                    .map(|(a, b)| ((a - b) / a.abs().max(1e-9)).abs())
+                    .fold(0.0f64, f64::max);
+                format!("max rel diff {max_rel:.1e}")
+            }
+        };
+        table.row(&[
+            name.to_string(),
+            format!("{secs:.4}"),
+            st.h2d_transfers.to_string(),
+            format!("{:.2}", st.h2d_bytes as f64 / (1 << 20) as f64),
+            check,
+        ]);
+    }
+
+    // (3): per-set transfers — the anti-pattern the paper's batching removes
+    dev.reset_stats();
+    let t0 = Instant::now();
+    let mut per_set = Vec::with_capacity(l);
+    for s in &sets {
+        let f = dev.eval_sets(std::slice::from_ref(s)).expect("per-set eval");
+        per_set.push(f[0]);
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let st = dev.stats();
+    table.row(&[
+        "per-set transfer".to_string(),
+        format!("{secs:.4}"),
+        st.h2d_transfers.to_string(),
+        format!("{:.2}", st.h2d_bytes as f64 / (1 << 20) as f64),
+        format!("{} sets", per_set.len()),
+    ]);
+
+    println!("\n== Layout ablation (§IV-B2): staging order and transfer granularity ==");
+    println!("problem: N={n} l={l} k={k} d={d}\n");
+    table.print();
+}

@@ -1,0 +1,295 @@
+//! Shared sweep driver for the paper-reproduction benches.
+#![allow(dead_code)] // each bench binary uses a subset of this module
+//!
+//! §V of the paper: problems are randomly generated; runtime is measured
+//! for evaluating a ground set `V` and a multiset `S_multi` (generation
+//! and device initialization are *excluded*, matching "data generation is
+//! not part of the measured run-time" and "copied ... on algorithm
+//! initialization"). One sweep varies N, l, k around the base point while
+//! timing all four methods; every bench (Table I, Fig 3, Fig 4) is a view
+//! over the same grid, cached in `bench_out/sweep_<scale>.csv`.
+
+use std::time::Instant;
+
+use exemcl::bench::{linspace_usize, Scale};
+use exemcl::cpu::{MultiThread, SingleThread};
+use exemcl::data::synth::UniformCube;
+use exemcl::data::{Dataset, Rng};
+use exemcl::optim::Oracle;
+use exemcl::pack::{PackOrder, SMultiPack};
+use exemcl::runtime::{DeviceEvaluator, EvalConfig};
+
+/// One measured grid point.
+#[derive(Clone, Debug)]
+pub struct Point {
+    /// Which parameter this point belongs to: `N`, `l` or `k`.
+    pub param: &'static str,
+    /// The varied value.
+    pub value: usize,
+    /// Full shape.
+    pub n: usize,
+    pub l: usize,
+    pub k: usize,
+    pub d: usize,
+    /// Wall-clock seconds per method.
+    pub t_st: f64,
+    pub t_mt: f64,
+    pub t_dev_f32: f64,
+    pub t_dev_f16: f64,
+}
+
+/// The sweep grid for a scale.
+pub struct Grid {
+    pub base_n: usize,
+    pub base_l: usize,
+    pub base_k: usize,
+    pub d: usize,
+    pub n_sweep: Vec<usize>,
+    pub l_sweep: Vec<usize>,
+    pub k_sweep: Vec<usize>,
+}
+
+impl Grid {
+    /// Scaled versions of the paper's grid (base N=50000, l=5000, k=10,
+    /// d=100; sweeps N∈[1e3,4e5], l∈[1e3,4e4], k∈[10,500] at 15 points).
+    /// Ratios between endpoints are preserved; absolute sizes fit a
+    /// 1-core container (see DESIGN.md §Experiment index).
+    pub fn for_scale(scale: Scale) -> Self {
+        match scale {
+            Scale::Quick => Self {
+                base_n: 1000,
+                base_l: 100,
+                base_k: 10,
+                d: 100,
+                n_sweep: linspace_usize(500, 4000, 3),
+                l_sweep: linspace_usize(50, 400, 3),
+                k_sweep: linspace_usize(10, 40, 3),
+            },
+            Scale::Default => Self {
+                base_n: 5000,
+                base_l: 500,
+                base_k: 10,
+                d: 100,
+                n_sweep: linspace_usize(1000, 20_000, 6),
+                l_sweep: linspace_usize(100, 2000, 6),
+                k_sweep: linspace_usize(10, 100, 5),
+            },
+            Scale::Full => Self {
+                base_n: 10_000,
+                base_l: 1000,
+                base_k: 10,
+                d: 100,
+                n_sweep: linspace_usize(1000, 40_000, 8),
+                l_sweep: linspace_usize(200, 8000, 8),
+                k_sweep: linspace_usize(10, 160, 6),
+            },
+        }
+    }
+}
+
+/// Generate the random multiset problem of §V: `l` sets of `k` distinct
+/// indices each.
+pub fn random_sets(n: usize, l: usize, k: usize, seed: u64) -> Vec<Vec<usize>> {
+    let mut rng = Rng::new(seed);
+    (0..l).map(|_| rng.sample_indices(n, k)).collect()
+}
+
+fn time_once<F: FnOnce()>(f: F) -> f64 {
+    let t0 = Instant::now();
+    f();
+    t0.elapsed().as_secs_f64()
+}
+
+/// Measure all four methods on one problem shape. The device evaluator is
+/// passed in pre-initialized (V resident), mirroring the paper's
+/// measurement boundary; CPU oracles are cheap to construct.
+pub fn measure_point(
+    param: &'static str,
+    value: usize,
+    ds: &Dataset,
+    sets: &[Vec<usize>],
+    dev32: &DeviceEvaluator,
+    dev16: &DeviceEvaluator,
+    threads: usize,
+) -> Point {
+    let st = SingleThread::new(ds.clone());
+    let mt = MultiThread::new(ds.clone(), threads);
+
+    let t_st = time_once(|| {
+        st.eval_sets(sets).expect("st eval");
+    });
+    let t_mt = time_once(|| {
+        mt.eval_sets(sets).expect("mt eval");
+    });
+    // warm the executable cache outside the timed region (compilation is
+    // a one-time cost, like CUDA module load)
+    dev32.eval_sets(&sets[..1.min(sets.len())]).expect("warmup f32");
+    let t_dev_f32 = time_once(|| {
+        dev32.eval_sets(sets).expect("dev f32 eval");
+    });
+    dev16.eval_sets(&sets[..1.min(sets.len())]).expect("warmup f16");
+    let t_dev_f16 = time_once(|| {
+        dev16.eval_sets(sets).expect("dev f16 eval");
+    });
+
+    Point {
+        param,
+        value,
+        n: ds.n(),
+        l: sets.len(),
+        k: sets.first().map(Vec::len).unwrap_or(0),
+        d: ds.d(),
+        t_st,
+        t_mt,
+        t_dev_f32,
+        t_dev_f16,
+    }
+}
+
+/// Build the two device evaluators (f32 + f16) for a dataset.
+pub fn device_pair(ds: &Dataset) -> (DeviceEvaluator, DeviceEvaluator) {
+    let dev32 = DeviceEvaluator::from_dir(
+        artifacts_dir(),
+        ds,
+        EvalConfig { dtype: "f32".into(), ..EvalConfig::default() },
+    )
+    .expect("device f32 (run `make artifacts` first)");
+    let dev16 = DeviceEvaluator::from_dir(
+        artifacts_dir(),
+        ds,
+        EvalConfig { dtype: "f16".into(), ..EvalConfig::default() },
+    )
+    .expect("device f16");
+    (dev32, dev16)
+}
+
+/// Artifact directory (env override for out-of-tree runs).
+pub fn artifacts_dir() -> String {
+    std::env::var("EXEMCL_ARTIFACTS").unwrap_or_else(|_| "artifacts".into())
+}
+
+/// Run (or load from cache) the full sweep for a scale.
+pub fn load_or_run_sweep(scale: Scale) -> Vec<Point> {
+    let tag = match scale {
+        Scale::Quick => "quick",
+        Scale::Default => "default",
+        Scale::Full => "full",
+    };
+    let path = format!("bench_out/sweep_{tag}.csv");
+    if std::env::var("EXEMCL_BENCH_REFRESH").is_err() {
+        if let Ok(text) = std::fs::read_to_string(&path) {
+            if let Some(points) = parse_sweep_csv(&text) {
+                eprintln!("loaded cached sweep from {path} ({} points)", points.len());
+                return points;
+            }
+        }
+    }
+    let points = run_sweep(scale);
+    let rows: Vec<Vec<String>> = points
+        .iter()
+        .map(|p| {
+            vec![
+                p.param.to_string(),
+                p.value.to_string(),
+                p.n.to_string(),
+                p.l.to_string(),
+                p.k.to_string(),
+                p.d.to_string(),
+                format!("{:.6}", p.t_st),
+                format!("{:.6}", p.t_mt),
+                format!("{:.6}", p.t_dev_f32),
+                format!("{:.6}", p.t_dev_f16),
+            ]
+        })
+        .collect();
+    exemcl::bench::write_csv(
+        &format!("sweep_{tag}"),
+        &["param", "value", "n", "l", "k", "d", "st", "mt", "dev_f32", "dev_f16"],
+        &rows,
+    )
+    .expect("write sweep cache");
+    points
+}
+
+fn parse_sweep_csv(text: &str) -> Option<Vec<Point>> {
+    let mut out = Vec::new();
+    for line in text.lines().skip(1) {
+        let f: Vec<&str> = line.split(',').collect();
+        if f.len() != 10 {
+            return None;
+        }
+        let param: &'static str = match f[0] {
+            "N" => "N",
+            "l" => "l",
+            "k" => "k",
+            _ => return None,
+        };
+        out.push(Point {
+            param,
+            value: f[1].parse().ok()?,
+            n: f[2].parse().ok()?,
+            l: f[3].parse().ok()?,
+            k: f[4].parse().ok()?,
+            d: f[5].parse().ok()?,
+            t_st: f[6].parse().ok()?,
+            t_mt: f[7].parse().ok()?,
+            t_dev_f32: f[8].parse().ok()?,
+            t_dev_f16: f[9].parse().ok()?,
+        });
+    }
+    if out.is_empty() {
+        None
+    } else {
+        Some(out)
+    }
+}
+
+/// Execute the three sweeps (N, l, k) of §V-A, timing every method.
+pub fn run_sweep(scale: Scale) -> Vec<Point> {
+    let grid = Grid::for_scale(scale);
+    let threads = std::thread::available_parallelism().map(|x| x.get()).unwrap_or(1);
+    let mut points = Vec::new();
+
+    // --- N sweep: new dataset (and device evaluators) per point
+    for (i, &n) in grid.n_sweep.iter().enumerate() {
+        let ds = UniformCube::new(grid.d, 1.0).generate(n, 100 + i as u64);
+        let sets = random_sets(n, grid.base_l, grid.base_k, 200 + i as u64);
+        let (dev32, dev16) = device_pair(&ds);
+        let p = measure_point("N", n, &ds, &sets, &dev32, &dev16, threads);
+        eprintln!(
+            "[N={n}] st={:.3}s mt={:.3}s dev32={:.3}s dev16={:.3}s",
+            p.t_st, p.t_mt, p.t_dev_f32, p.t_dev_f16
+        );
+        points.push(p);
+    }
+
+    // --- l sweep: fixed dataset, varying multiset size
+    let ds = UniformCube::new(grid.d, 1.0).generate(grid.base_n, 1);
+    let (dev32, dev16) = device_pair(&ds);
+    for (i, &l) in grid.l_sweep.iter().enumerate() {
+        let sets = random_sets(grid.base_n, l, grid.base_k, 300 + i as u64);
+        let p = measure_point("l", l, &ds, &sets, &dev32, &dev16, threads);
+        eprintln!(
+            "[l={l}] st={:.3}s mt={:.3}s dev32={:.3}s dev16={:.3}s",
+            p.t_st, p.t_mt, p.t_dev_f32, p.t_dev_f16
+        );
+        points.push(p);
+    }
+
+    // --- k sweep: fixed dataset, varying set size
+    for (i, &k) in grid.k_sweep.iter().enumerate() {
+        let sets = random_sets(grid.base_n, grid.base_l, k, 400 + i as u64);
+        let p = measure_point("k", k, &ds, &sets, &dev32, &dev16, threads);
+        eprintln!(
+            "[k={k}] st={:.3}s mt={:.3}s dev32={:.3}s dev16={:.3}s",
+            p.t_st, p.t_mt, p.t_dev_f32, p.t_dev_f16
+        );
+        points.push(p);
+    }
+    points
+}
+
+/// Round-robin pack for a problem (used by the layout ablation).
+pub fn pack_problem(ds: &Dataset, sets: &[Vec<usize>], order: PackOrder) -> SMultiPack {
+    SMultiPack::from_indices(ds, sets, 0, order).expect("pack")
+}

@@ -1,0 +1,58 @@
+//! Figure 3 reproduction: wall-clock runtime of the accelerated evaluator
+//! and the single-/multi-threaded CPU baselines as N, l and k vary
+//! (three panels, FP32; lower is better).
+//!
+//! Emits the series as CSV (`bench_out/fig3.csv`) and an ASCII rendering.
+//!
+//! Run: `cargo bench --bench fig3`
+
+#[path = "common.rs"]
+mod common;
+
+use exemcl::bench::Scale;
+
+fn main() {
+    let scale = Scale::from_env();
+    let points = common::load_or_run_sweep(scale);
+
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    for p in &points {
+        for (method, t) in [("cpu-st", p.t_st), ("cpu-mt", p.t_mt), ("device-f32", p.t_dev_f32)] {
+            rows.push(vec![
+                p.param.to_string(),
+                p.value.to_string(),
+                method.to_string(),
+                format!("{:.6}", t),
+            ]);
+        }
+    }
+    let path = exemcl::bench::write_csv("fig3", &["param", "value", "method", "seconds"], &rows)
+        .expect("write csv");
+
+    println!("\n== Figure 3: runtime vs N / l / k (FP32, lower is better) ==\n");
+    for param in ["N", "l", "k"] {
+        let ps: Vec<_> = points.iter().filter(|p| p.param == param).collect();
+        if ps.is_empty() {
+            continue;
+        }
+        println!("panel: varying {param}");
+        println!("{:>8} {:>12} {:>12} {:>12}", param, "cpu-st[s]", "cpu-mt[s]", "device[s]");
+        for p in &ps {
+            println!(
+                "{:>8} {:>12.4} {:>12.4} {:>12.4}",
+                p.value, p.t_st, p.t_mt, p.t_dev_f32
+            );
+        }
+        // quasi-linear growth check (paper §V-A observation)
+        if ps.len() >= 2 {
+            let first = ps.first().unwrap();
+            let last = ps.last().unwrap();
+            let growth = last.t_dev_f32 / first.t_dev_f32.max(1e-9);
+            let param_growth = last.value as f64 / first.value.max(1) as f64;
+            println!(
+                "  device growth {growth:.1}x over {param_growth:.1}x parameter growth (quasi-linear expected)\n"
+            );
+        }
+    }
+    println!("wrote {path}");
+}

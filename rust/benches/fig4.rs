@@ -1,0 +1,58 @@
+//! Figure 4 reproduction: speedup of the accelerated evaluator over the
+//! single-/multi-threaded CPU baselines (FP32) as N, l and k vary
+//! (higher is better). The paper's headline observations checked here:
+//! speedups are roughly flat in N and l and *decrease* with growing k.
+//!
+//! Run: `cargo bench --bench fig4`
+
+#[path = "common.rs"]
+mod common;
+
+use exemcl::bench::Scale;
+
+fn main() {
+    let scale = Scale::from_env();
+    let points = common::load_or_run_sweep(scale);
+
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    println!("\n== Figure 4: FP32 speedup vs N / l / k (higher is better) ==\n");
+    for param in ["N", "l", "k"] {
+        let ps: Vec<_> = points.iter().filter(|p| p.param == param).collect();
+        if ps.is_empty() {
+            continue;
+        }
+        println!("panel: varying {param}");
+        println!("{:>8} {:>10} {:>10}", param, "vs ST", "vs MT");
+        for p in &ps {
+            let s_st = p.t_st / p.t_dev_f32;
+            let s_mt = p.t_mt / p.t_dev_f32;
+            println!("{:>8} {:>9.2}x {:>9.2}x", p.value, s_st, s_mt);
+            rows.push(vec![
+                param.to_string(),
+                p.value.to_string(),
+                format!("{:.4}", s_st),
+                format!("{:.4}", s_mt),
+            ]);
+        }
+        // trend annotation (paper: flat in N/l, decreasing in k)
+        if ps.len() >= 2 {
+            let first = ps.first().unwrap().t_st / ps.first().unwrap().t_dev_f32;
+            let last = ps.last().unwrap().t_st / ps.last().unwrap().t_dev_f32;
+            let trend = if last < 0.75 * first {
+                "decreasing"
+            } else if last > 1.33 * first {
+                "increasing"
+            } else {
+                "roughly flat"
+            };
+            println!("  trend vs ST: {trend} ({first:.1}x -> {last:.1}x)\n");
+        }
+    }
+    let path = exemcl::bench::write_csv(
+        "fig4",
+        &["param", "value", "speedup_vs_st", "speedup_vs_mt"],
+        &rows,
+    )
+    .expect("write csv");
+    println!("wrote {path}");
+}

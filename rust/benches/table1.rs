@@ -1,0 +1,68 @@
+//! Table I reproduction: min/mean/max speedup of the accelerated
+//! evaluator over the single- and multi-threaded CPU baselines, for
+//! variations of N, l and k, in FP32 and FP16.
+//!
+//! FP16 speedups are computed against the FP32 CPU times, exactly like
+//! the paper ("FP16-GPU speedups were computed from comparison with
+//! FP32-CPU wall-clock run-times").
+//!
+//! Run: `cargo bench --bench table1` (EXEMCL_BENCH_SCALE=quick|default|full)
+
+#[path = "common.rs"]
+mod common;
+
+use exemcl::bench::{speedup_stats, Scale, Table};
+
+fn main() {
+    let scale = Scale::from_env();
+    let points = common::load_or_run_sweep(scale);
+
+    let mut table = Table::new(&["param", "precision", "baseline", "min", "mean", "max"]);
+    let mut csv_rows: Vec<Vec<String>> = Vec::new();
+
+    for param in ["N", "l", "k"] {
+        let ps: Vec<_> = points.iter().filter(|p| p.param == param).collect();
+        if ps.is_empty() {
+            continue;
+        }
+        let st: Vec<f64> = ps.iter().map(|p| p.t_st).collect();
+        let mt: Vec<f64> = ps.iter().map(|p| p.t_mt).collect();
+        let d32: Vec<f64> = ps.iter().map(|p| p.t_dev_f32).collect();
+        let d16: Vec<f64> = ps.iter().map(|p| p.t_dev_f16).collect();
+
+        for (precision, dev) in [("FP16", &d16), ("FP32", &d32)] {
+            for (baseline, cpu) in [("ST", &st), ("MT", &mt)] {
+                let s = speedup_stats(cpu, dev);
+                table.row(&[
+                    param.to_string(),
+                    precision.to_string(),
+                    baseline.to_string(),
+                    format!("{:.2}", s.min),
+                    format!("{:.2}", s.mean),
+                    format!("{:.2}", s.max),
+                ]);
+                csv_rows.push(vec![
+                    param.to_string(),
+                    precision.to_string(),
+                    baseline.to_string(),
+                    format!("{:.4}", s.min),
+                    format!("{:.4}", s.mean),
+                    format!("{:.4}", s.max),
+                ]);
+            }
+        }
+    }
+
+    println!("\n== Table I: accelerated-evaluator speedup over CPU (this testbed) ==");
+    println!("(paper reference, Quadro RTX 5000 vs Xeon W-2155: FP32 ST 34-72x,");
+    println!(" FP32 MT 3.3-5.1x, FP16 ST up to 452x, FP16 MT up to 32x)\n");
+    table.print();
+
+    let path = exemcl::bench::write_csv(
+        "table1",
+        &["param", "precision", "baseline", "min", "mean", "max"],
+        &csv_rows,
+    )
+    .expect("write csv");
+    println!("\nwrote {path}");
+}

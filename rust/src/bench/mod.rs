@@ -1,0 +1,179 @@
+//! Bench harness: timing, summary statistics and table/CSV output
+//! (criterion is not in the offline crate set; `cargo bench` runs the
+//! `harness = false` binaries in `rust/benches/`, all built on this
+//! module).
+
+use std::io::Write;
+use std::time::Instant;
+
+/// Summary statistics over repeated timings (seconds).
+#[derive(Clone, Copy, Debug)]
+pub struct Stats {
+    /// Fastest repetition.
+    pub min: f64,
+    /// Arithmetic mean.
+    pub mean: f64,
+    /// Slowest repetition.
+    pub max: f64,
+    /// Repetition count.
+    pub reps: usize,
+}
+
+impl Stats {
+    /// Compute from raw second samples.
+    pub fn from_samples(samples: &[f64]) -> Self {
+        assert!(!samples.is_empty());
+        let min = samples.iter().cloned().fold(f64::MAX, f64::min);
+        let max = samples.iter().cloned().fold(f64::MIN, f64::max);
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        Self { min, mean, max, reps: samples.len() }
+    }
+}
+
+/// Time `f` for `reps` repetitions (plus one untimed warm-up when
+/// `warmup` is set) and summarize.
+pub fn measure<F: FnMut()>(mut f: F, reps: usize, warmup: bool) -> Stats {
+    if warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(reps.max(1));
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Stats::from_samples(&samples)
+}
+
+/// Speedup table row: paper Table I reports min/mean/max of per-point
+/// speedups across a sweep. Given per-point baseline and subject times,
+/// compute the speedup distribution the same way.
+pub fn speedup_stats(baseline: &[f64], subject: &[f64]) -> Stats {
+    assert_eq!(baseline.len(), subject.len());
+    let speedups: Vec<f64> = baseline.iter().zip(subject).map(|(b, s)| b / s).collect();
+    Stats::from_samples(&speedups)
+}
+
+/// Fixed-width markdown-ish table printer for bench stdout.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// Start a table with column headers.
+    pub fn new(headers: &[&str]) -> Self {
+        Self { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    /// Append a row (stringified cells).
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render to stdout.
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(String::len).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let parts: Vec<String> = cells
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect();
+            println!("| {} |", parts.join(" | "));
+        };
+        line(&self.headers);
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        println!("|-{}-|", sep.join("-|-"));
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+/// Write CSV series into `bench_out/<name>.csv` (plots are regenerated
+/// from these files; see EXPERIMENTS.md).
+pub fn write_csv(name: &str, headers: &[&str], rows: &[Vec<String>]) -> std::io::Result<String> {
+    std::fs::create_dir_all("bench_out")?;
+    let path = format!("bench_out/{name}.csv");
+    let mut f = std::fs::File::create(&path)?;
+    writeln!(f, "{}", headers.join(","))?;
+    for row in rows {
+        writeln!(f, "{}", row.join(","))?;
+    }
+    Ok(path)
+}
+
+/// `EXEMCL_BENCH_SCALE`: `quick` (CI smoke), `default`, or `full`
+/// (closest to the paper's grid). Controls sweep sizes in all benches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    /// Seconds-long smoke run.
+    Quick,
+    /// Minutes-long default.
+    Default,
+    /// The full (scaled) paper grid.
+    Full,
+}
+
+impl Scale {
+    /// Read from the environment.
+    pub fn from_env() -> Self {
+        match std::env::var("EXEMCL_BENCH_SCALE").as_deref() {
+            Ok("quick") => Self::Quick,
+            Ok("full") => Self::Full,
+            _ => Self::Default,
+        }
+    }
+}
+
+/// Linearly spaced usize sweep (paper: "15 uniformly spaced values").
+pub fn linspace_usize(lo: usize, hi: usize, points: usize) -> Vec<usize> {
+    assert!(points >= 2 && hi >= lo);
+    (0..points)
+        .map(|i| lo + (hi - lo) * i / (points - 1))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_min_mean_max() {
+        let s = Stats::from_samples(&[1.0, 2.0, 3.0]);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.max, 3.0);
+    }
+
+    #[test]
+    fn measure_counts_reps() {
+        let mut calls = 0;
+        let s = measure(|| calls += 1, 3, true);
+        assert_eq!(calls, 4); // warmup + 3
+        assert_eq!(s.reps, 3);
+    }
+
+    #[test]
+    fn speedup_stats_elementwise() {
+        let s = speedup_stats(&[10.0, 20.0], &[1.0, 4.0]);
+        assert_eq!(s.min, 5.0);
+        assert_eq!(s.max, 10.0);
+        assert_eq!(s.mean, 7.5);
+    }
+
+    #[test]
+    fn linspace_endpoints() {
+        let v = linspace_usize(10, 100, 4);
+        assert_eq!(v.first(), Some(&10));
+        assert_eq!(v.last(), Some(&100));
+        assert_eq!(v.len(), 4);
+    }
+}

@@ -1,0 +1,182 @@
+//! Chunk planner — the paper's §IV-B3 low-memory strategy.
+//!
+//! GPUs (and the simulated device here) have a fixed memory budget `φ`.
+//! The planner computes the per-evaluation-set footprint `μ_s` (the S row,
+//! its mask, the W row it produces, and metadata), derives
+//! `n_chunk_size = ⌊φ / μ_s⌋` and `n_chunks = ⌈l / n_chunk_size⌉`, and
+//! fails exactly when not even a single set fits ("chunking fails, when
+//! n_chunk-size equals zero ... use lower floating-point precision or
+//! better suited hardware").
+
+use crate::{Error, Result};
+
+/// Simulated device memory model. The ground set is pre-loaded at
+/// initialization (§IV-B2), so its footprint is subtracted from the
+/// budget before planning, exactly like the paper's "already considered
+/// in φ".
+#[derive(Clone, Copy, Debug)]
+pub struct MemoryModel {
+    /// Total device memory in bytes (the paper's Quadro RTX 5000: 16 GiB).
+    pub total_bytes: usize,
+    /// Bytes per element of the active dtype (4 for F32, 2 for F16).
+    pub bytes_per_elem: usize,
+    /// Fixed per-chunk metadata overhead in bytes (descriptors, sizes).
+    pub metadata_bytes_per_set: usize,
+}
+
+impl Default for MemoryModel {
+    fn default() -> Self {
+        Self {
+            total_bytes: 16 * (1 << 30), // 16 GiB
+            bytes_per_elem: 4,
+            metadata_bytes_per_set: 64,
+        }
+    }
+}
+
+impl MemoryModel {
+    /// Free bytes after the resident ground set (`n x d`) and its norms.
+    pub fn free_after_ground(&self, n: usize, d: usize) -> usize {
+        let ground = n * d * self.bytes_per_elem + n * self.bytes_per_elem;
+        self.total_bytes.saturating_sub(ground)
+    }
+
+    /// Per-set footprint `μ_s` for sets padded to `k_max` slots in `d`
+    /// dims: the packed S row, its mask row, the W-row partial result and
+    /// metadata.
+    pub fn per_set_bytes(&self, k_max: usize, d: usize) -> usize {
+        let s_row = k_max * d * self.bytes_per_elem;
+        let mask_row = k_max * self.bytes_per_elem;
+        let w_row = self.bytes_per_elem;
+        s_row + mask_row + w_row + self.metadata_bytes_per_set
+    }
+}
+
+/// The output of planning: how many sets per chunk, how many chunks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChunkPlan {
+    /// Sets per chunk (`n_chunk-size`).
+    pub chunk_size: usize,
+    /// Total chunks (`n_chunks`).
+    pub n_chunks: usize,
+    /// Total evaluation sets covered.
+    pub l: usize,
+}
+
+impl ChunkPlan {
+    /// Iterate `(start, count)` ranges covering `[0, l)`.
+    pub fn ranges(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
+        let (cs, l) = (self.chunk_size, self.l);
+        (0..self.n_chunks).map(move |c| {
+            let start = c * cs;
+            (start, cs.min(l - start))
+        })
+    }
+}
+
+/// Plan chunking of `l` evaluation sets with per-set footprint
+/// `per_set_bytes` into `free_bytes` of device memory.
+pub fn plan(l: usize, per_set_bytes: usize, free_bytes: usize) -> Result<ChunkPlan> {
+    if l == 0 {
+        return Err(Error::InvalidArgument("cannot plan zero sets".into()));
+    }
+    let chunk_size = free_bytes / per_set_bytes.max(1);
+    if chunk_size == 0 {
+        return Err(Error::ChunkOom { per_set_bytes, free_bytes });
+    }
+    let chunk_size = chunk_size.min(l);
+    let n_chunks = l.div_ceil(chunk_size);
+    Ok(ChunkPlan { chunk_size, n_chunks, l })
+}
+
+/// Convenience: plan directly from a memory model and problem shape.
+pub fn plan_for(
+    model: &MemoryModel,
+    n: usize,
+    d: usize,
+    l: usize,
+    k_max: usize,
+) -> Result<ChunkPlan> {
+    let free = model.free_after_ground(n, d);
+    plan(l, model.per_set_bytes(k_max, d), free)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_chunk_when_memory_ample() {
+        let p = plan(100, 1024, 1 << 30).unwrap();
+        assert_eq!(p.n_chunks, 1);
+        assert_eq!(p.chunk_size, 100);
+    }
+
+    #[test]
+    fn splits_when_tight() {
+        // room for 3 sets, 10 requested -> 4 chunks of 3,3,3,1
+        let p = plan(10, 100, 350).unwrap();
+        assert_eq!(p.chunk_size, 3);
+        assert_eq!(p.n_chunks, 4);
+        let ranges: Vec<_> = p.ranges().collect();
+        assert_eq!(ranges, vec![(0, 3), (3, 3), (6, 3), (9, 1)]);
+    }
+
+    #[test]
+    fn ranges_cover_exactly() {
+        for l in [1usize, 7, 64, 100, 1000] {
+            for cap in [1usize, 3, 64, 10_000] {
+                if let Ok(p) = plan(l, 10, cap * 10) {
+                    let mut covered = 0;
+                    for (s, c) in p.ranges() {
+                        assert_eq!(s, covered);
+                        covered += c;
+                        assert!(c > 0);
+                    }
+                    assert_eq!(covered, l);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn oom_when_single_set_does_not_fit() {
+        let err = plan(10, 1000, 999).unwrap_err();
+        match err {
+            crate::Error::ChunkOom { per_set_bytes, free_bytes } => {
+                assert_eq!(per_set_bytes, 1000);
+                assert_eq!(free_bytes, 999);
+            }
+            other => panic!("wrong error: {other}"),
+        }
+    }
+
+    #[test]
+    fn per_set_bytes_formula() {
+        let m = MemoryModel { total_bytes: 0, bytes_per_elem: 4, metadata_bytes_per_set: 64 };
+        // k=10, d=100: S row 4000 + mask 40 + W row 4 + meta 64
+        assert_eq!(m.per_set_bytes(10, 100), 4108);
+    }
+
+    #[test]
+    fn fp16_halves_per_set_footprint() {
+        let f32m = MemoryModel { bytes_per_elem: 4, metadata_bytes_per_set: 0, total_bytes: 0 };
+        let f16m = MemoryModel { bytes_per_elem: 2, metadata_bytes_per_set: 0, total_bytes: 0 };
+        assert_eq!(f32m.per_set_bytes(8, 64), 2 * f16m.per_set_bytes(8, 64));
+    }
+
+    #[test]
+    fn ground_set_reduces_free_budget() {
+        let m = MemoryModel { total_bytes: 10_000, bytes_per_elem: 4, metadata_bytes_per_set: 0 };
+        // 20 x 100 ground -> 8000 B + 80 B norms
+        assert_eq!(m.free_after_ground(20, 100), 10_000 - 8000 - 80);
+    }
+
+    #[test]
+    fn plan_for_integrates_model() {
+        let m = MemoryModel { total_bytes: 1 << 20, bytes_per_elem: 4, metadata_bytes_per_set: 64 };
+        let p = plan_for(&m, 100, 10, 50, 5).unwrap();
+        assert_eq!(p.l, 50);
+        assert!(p.chunk_size >= 1);
+    }
+}

@@ -1,0 +1,246 @@
+//! Classic clustering baselines: Lloyd's k-means (with k-means++
+//! seeding) and PAM k-medoids.
+//!
+//! §IV of the paper grounds Exemplar-based clustering in the k-medoids
+//! loss (Definition 4); these baselines let the examples and benches
+//! compare the submodular-maximization route against the classical
+//! algorithms on the same loss.
+
+use crate::data::{Dataset, Rng};
+use crate::distance::{Dissimilarity, SqEuclidean};
+
+/// Result of a baseline clustering run.
+#[derive(Clone, Debug)]
+pub struct BaselineResult {
+    /// Cluster representative per cluster: centroid rows (k-means) or
+    /// medoid dataset indices (PAM; `centroids` then holds the medoids).
+    pub centroids: Vec<Vec<f32>>,
+    /// Medoid indices into the dataset (PAM only; empty for k-means).
+    pub medoids: Vec<usize>,
+    /// Nearest-representative label per point.
+    pub labels: Vec<usize>,
+    /// Mean min squared distance to the representative (Definition 4
+    /// without e0).
+    pub loss: f32,
+    /// Iterations until convergence.
+    pub iterations: usize,
+}
+
+/// k-means++ seeding: spread initial centers proportionally to D².
+pub fn kmeanspp_seed(ds: &Dataset, k: usize, rng: &mut Rng) -> Vec<usize> {
+    assert!(k >= 1 && k <= ds.n());
+    let mut centers = vec![rng.below(ds.n())];
+    let mut d2: Vec<f32> = (0..ds.n())
+        .map(|i| SqEuclidean.eval(ds.row(i), ds.row(centers[0])))
+        .collect();
+    while centers.len() < k {
+        let total: f64 = d2.iter().map(|&x| x as f64).sum();
+        let next = if total <= 0.0 {
+            rng.below(ds.n())
+        } else {
+            let mut target = rng.uniform_f64() * total;
+            let mut pick = ds.n() - 1;
+            for (i, &x) in d2.iter().enumerate() {
+                target -= x as f64;
+                if target <= 0.0 {
+                    pick = i;
+                    break;
+                }
+            }
+            pick
+        };
+        centers.push(next);
+        for i in 0..ds.n() {
+            let d = SqEuclidean.eval(ds.row(i), ds.row(next));
+            if d < d2[i] {
+                d2[i] = d;
+            }
+        }
+    }
+    centers
+}
+
+/// Lloyd's k-means with k-means++ seeding; squared-Euclidean objective.
+pub fn kmeans(ds: &Dataset, k: usize, max_iters: usize, seed: u64) -> BaselineResult {
+    let mut rng = Rng::new(seed);
+    let seeds = kmeanspp_seed(ds, k, &mut rng);
+    let d = ds.d();
+    let mut centroids: Vec<Vec<f32>> = seeds.iter().map(|&i| ds.row(i).to_vec()).collect();
+    let mut labels = vec![0usize; ds.n()];
+    let mut iterations = 0;
+
+    for it in 0..max_iters.max(1) {
+        iterations = it + 1;
+        // assignment
+        let mut changed = false;
+        for i in 0..ds.n() {
+            let v = ds.row(i);
+            let mut best = (f32::MAX, 0usize);
+            for (c, cent) in centroids.iter().enumerate() {
+                let dist = SqEuclidean.eval(cent, v);
+                if dist < best.0 {
+                    best = (dist, c);
+                }
+            }
+            if labels[i] != best.1 {
+                labels[i] = best.1;
+                changed = true;
+            }
+        }
+        // update
+        let mut sums = vec![vec![0.0f64; d]; k];
+        let mut counts = vec![0usize; k];
+        for i in 0..ds.n() {
+            counts[labels[i]] += 1;
+            for (s, &x) in sums[labels[i]].iter_mut().zip(ds.row(i)) {
+                *s += x as f64;
+            }
+        }
+        for c in 0..k {
+            if counts[c] > 0 {
+                for (cc, s) in centroids[c].iter_mut().zip(&sums[c]) {
+                    *cc = (*s / counts[c] as f64) as f32;
+                }
+            }
+        }
+        if !changed && it > 0 {
+            break;
+        }
+    }
+
+    let loss = mean_min_loss(ds, &centroids, &mut labels);
+    BaselineResult { centroids, medoids: vec![], labels, loss, iterations }
+}
+
+fn mean_min_loss(ds: &Dataset, centroids: &[Vec<f32>], labels: &mut [usize]) -> f32 {
+    let mut loss = 0.0f64;
+    for i in 0..ds.n() {
+        let v = ds.row(i);
+        let mut best = (f32::MAX, 0usize);
+        for (c, cent) in centroids.iter().enumerate() {
+            let dist = SqEuclidean.eval(cent, v);
+            if dist < best.0 {
+                best = (dist, c);
+            }
+        }
+        labels[i] = best.1;
+        loss += best.0 as f64;
+    }
+    (loss / ds.n() as f64) as f32
+}
+
+/// PAM (Partitioning Around Medoids): BUILD via k-means++ seeds, then
+/// SWAP until no single medoid swap improves the loss (or `max_swaps`).
+pub fn pam_kmedoids(ds: &Dataset, k: usize, max_swaps: usize, seed: u64) -> BaselineResult {
+    let mut rng = Rng::new(seed);
+    let mut medoids = kmeanspp_seed(ds, k, &mut rng);
+    let mut best_loss = kmedoids_loss(ds, &medoids);
+    let mut swaps = 0usize;
+
+    'outer: loop {
+        if swaps >= max_swaps {
+            break;
+        }
+        for mi in 0..k {
+            // best replacement candidate for medoid mi (first-improvement)
+            for cand in 0..ds.n() {
+                if medoids.contains(&cand) {
+                    continue;
+                }
+                let old = medoids[mi];
+                medoids[mi] = cand;
+                let loss = kmedoids_loss(ds, &medoids);
+                if loss + 1e-7 < best_loss {
+                    best_loss = loss;
+                    swaps += 1;
+                    continue 'outer; // restart scan after an improvement
+                }
+                medoids[mi] = old;
+            }
+        }
+        break; // full scan without improvement: converged
+    }
+
+    let mut labels = vec![0usize; ds.n()];
+    let centroids: Vec<Vec<f32>> = medoids.iter().map(|&i| ds.row(i).to_vec()).collect();
+    let loss = mean_min_loss(ds, &centroids, &mut labels);
+    BaselineResult { centroids, medoids, labels, loss, iterations: swaps }
+}
+
+/// Mean min squared distance to the nearest medoid.
+pub fn kmedoids_loss(ds: &Dataset, medoids: &[usize]) -> f32 {
+    let mut loss = 0.0f64;
+    for i in 0..ds.n() {
+        let v = ds.row(i);
+        let mut best = f32::MAX;
+        for &m in medoids {
+            let d = SqEuclidean.eval(ds.row(m), v);
+            if d < best {
+                best = d;
+            }
+        }
+        loss += best as f64;
+    }
+    (loss / ds.n() as f64) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::GaussianBlobs;
+
+    #[test]
+    fn kmeanspp_seeds_distinct_and_in_range() {
+        let ds = GaussianBlobs::new(4, 3, 0.2).generate(80, 1);
+        let mut rng = Rng::new(2);
+        let seeds = kmeanspp_seed(&ds, 4, &mut rng);
+        assert_eq!(seeds.len(), 4);
+        let uniq: std::collections::HashSet<_> = seeds.iter().collect();
+        assert_eq!(uniq.len(), 4);
+        assert!(seeds.iter().all(|&s| s < 80));
+    }
+
+    #[test]
+    fn kmeans_recovers_tight_blobs() {
+        let lab = GaussianBlobs::new(3, 2, 0.05).generate_labeled(90, 3);
+        let r = kmeans(&lab.dataset, 3, 50, 4);
+        assert!(r.loss < 0.1, "loss too high: {}", r.loss);
+        let purity = crate::clustering::purity(&r.labels, &lab.labels);
+        assert!(purity > 0.95, "purity {purity}");
+    }
+
+    #[test]
+    fn pam_loss_not_worse_than_seeding() {
+        let ds = GaussianBlobs::new(3, 3, 0.4).generate(60, 5);
+        let mut rng = Rng::new(6);
+        let seeds = kmeanspp_seed(&ds, 3, &mut rng);
+        let seed_loss = kmedoids_loss(&ds, &seeds);
+        let r = pam_kmedoids(&ds, 3, 100, 6);
+        assert!(r.loss <= seed_loss + 1e-5, "PAM {} vs seed {seed_loss}", r.loss);
+        assert_eq!(r.medoids.len(), 3);
+    }
+
+    #[test]
+    fn kmeans_loss_bounded_by_kmedoids() {
+        // centroids are unconstrained, so k-means loss <= PAM loss on the
+        // same k (up to local-optimum noise on easy blob data)
+        let ds = GaussianBlobs::new(3, 2, 0.1).generate(90, 7);
+        let km = kmeans(&ds, 3, 50, 8);
+        let pam = pam_kmedoids(&ds, 3, 50, 8);
+        assert!(km.loss <= pam.loss * 1.2 + 1e-4,
+            "kmeans {} vs pam {}", km.loss, pam.loss);
+    }
+
+    #[test]
+    fn greedy_exemplars_competitive_with_pam() {
+        use crate::cpu::SingleThread;
+        use crate::optim::{Greedy, Optimizer};
+        let ds = GaussianBlobs::new(4, 3, 0.3).generate(120, 9);
+        let greedy = Greedy::new(4).maximize(&SingleThread::new(ds.clone())).unwrap();
+        let g_loss = kmedoids_loss(&ds, &greedy.exemplars);
+        let pam = pam_kmedoids(&ds, 4, 200, 10);
+        // submodular greedy should land within a modest factor of PAM
+        assert!(g_loss <= pam.loss * 1.5 + 1e-4,
+            "greedy loss {g_loss} vs pam {}", pam.loss);
+    }
+}

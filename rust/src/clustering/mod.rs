@@ -1,0 +1,143 @@
+//! Clustering extraction and quality metrics.
+//!
+//! Exemplar-based clustering (§IV) partitions the data space by nearest
+//! exemplar. This module turns a selected exemplar set into labels, the
+//! k-medoids loss of Definition 4, and quality metrics against ground
+//! truth (purity / NMI-lite) for the synthetic-blob examples.
+
+pub mod baselines;
+
+use crate::data::Dataset;
+use crate::distance::{Dissimilarity, SqEuclidean};
+
+/// A clustering: exemplar indices + per-point nearest-exemplar labels.
+#[derive(Clone, Debug)]
+pub struct Clustering {
+    /// Selected exemplar indices into the dataset.
+    pub exemplars: Vec<usize>,
+    /// `labels[i]` = position (0-based) of the nearest exemplar in
+    /// `exemplars` for point `i`.
+    pub labels: Vec<usize>,
+    /// Normalized k-medoids loss `L(S)` of Definition 4 (without e0).
+    pub loss: f32,
+}
+
+/// Assign every point to its nearest exemplar on the CPU.
+pub fn assign_cpu<D: Dissimilarity>(ds: &Dataset, exemplars: &[usize], dist: &D) -> Clustering {
+    assert!(!exemplars.is_empty(), "need at least one exemplar");
+    let mut labels = Vec::with_capacity(ds.n());
+    let mut loss = 0.0f64;
+    for i in 0..ds.n() {
+        let v = ds.row(i);
+        let mut best = (f32::MAX, 0usize);
+        for (pos, &e) in exemplars.iter().enumerate() {
+            let d = dist.eval(ds.row(e), v);
+            if d < best.0 {
+                best = (d, pos);
+            }
+        }
+        labels.push(best.1);
+        loss += best.0 as f64;
+    }
+    Clustering { exemplars: exemplars.to_vec(), labels, loss: (loss / ds.n() as f64) as f32 }
+}
+
+/// Squared-Euclidean convenience wrapper.
+pub fn assign(ds: &Dataset, exemplars: &[usize]) -> Clustering {
+    assign_cpu(ds, exemplars, &SqEuclidean)
+}
+
+/// Build a clustering from device-produced labels (positions into the
+/// exemplar list) and the dataset, recomputing the loss host-side.
+pub fn from_labels(ds: &Dataset, exemplars: &[usize], labels: &[i32]) -> Clustering {
+    assert_eq!(labels.len(), ds.n());
+    let mut loss = 0.0f64;
+    for (i, &lab) in labels.iter().enumerate() {
+        let e = exemplars[lab as usize];
+        loss += SqEuclidean.eval(ds.row(e), ds.row(i)) as f64;
+    }
+    Clustering {
+        exemplars: exemplars.to_vec(),
+        labels: labels.iter().map(|&l| l as usize).collect(),
+        loss: (loss / ds.n() as f64) as f32,
+    }
+}
+
+/// Cluster purity against ground truth: for every predicted cluster take
+/// its majority true label; purity = fraction correctly covered. 1.0 is a
+/// perfect refinement of the ground truth.
+pub fn purity(predicted: &[usize], truth: &[usize]) -> f64 {
+    assert_eq!(predicted.len(), truth.len());
+    if predicted.is_empty() {
+        return 0.0;
+    }
+    let k_pred = predicted.iter().max().unwrap() + 1;
+    let k_true = truth.iter().max().unwrap() + 1;
+    let mut table = vec![0usize; k_pred * k_true];
+    for (&p, &t) in predicted.iter().zip(truth) {
+        table[p * k_true + t] += 1;
+    }
+    let correct: usize = (0..k_pred)
+        .map(|p| (0..k_true).map(|t| table[p * k_true + t]).max().unwrap_or(0))
+        .sum();
+    correct as f64 / predicted.len() as f64
+}
+
+/// Per-cluster sizes (useful for balance diagnostics in the examples).
+pub fn cluster_sizes(labels: &[usize], k: usize) -> Vec<usize> {
+    let mut sizes = vec![0usize; k];
+    for &l in labels {
+        sizes[l] += 1;
+    }
+    sizes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::GaussianBlobs;
+
+    #[test]
+    fn assign_labels_point_to_nearest() {
+        let lab = GaussianBlobs::new(3, 2, 0.05).generate_labeled(60, 4);
+        // use one point per blob as exemplar (points are blob-round-robin)
+        let exemplars = vec![0usize, 1, 2];
+        let c = assign(&lab.dataset, &exemplars);
+        assert_eq!(c.labels.len(), 60);
+        // with tight blobs, every point maps to the exemplar of its blob
+        for (i, &l) in c.labels.iter().enumerate() {
+            assert_eq!(lab.labels[exemplars[l]], lab.labels[i]);
+        }
+    }
+
+    #[test]
+    fn loss_decreases_with_more_exemplars() {
+        let ds = GaussianBlobs::new(4, 3, 0.3).generate(80, 5);
+        let a = assign(&ds, &[0]);
+        let b = assign(&ds, &[0, 1, 2, 3]);
+        assert!(b.loss <= a.loss);
+    }
+
+    #[test]
+    fn purity_perfect_and_degenerate() {
+        assert_eq!(purity(&[0, 0, 1, 1], &[1, 1, 0, 0]), 1.0);
+        assert_eq!(purity(&[0, 0, 0, 0], &[0, 0, 1, 1]), 0.5);
+    }
+
+    #[test]
+    fn from_labels_matches_assign() {
+        let ds = GaussianBlobs::new(3, 2, 0.2).generate(30, 6);
+        let ex = vec![0usize, 1, 2];
+        let a = assign(&ds, &ex);
+        let device_labels: Vec<i32> = a.labels.iter().map(|&l| l as i32).collect();
+        let b = from_labels(&ds, &ex, &device_labels);
+        assert_eq!(a.labels, b.labels);
+        assert!((a.loss - b.loss).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cluster_sizes_sum_to_n() {
+        let labels = vec![0usize, 1, 1, 2, 2, 2];
+        assert_eq!(cluster_sizes(&labels, 3), vec![1, 2, 3]);
+    }
+}

@@ -1,0 +1,227 @@
+//! Configuration: a small INI/TOML-subset parser (sections, `key = value`,
+//! comments) plus the typed application config the CLI consumes. No serde
+//! in the offline crate set, so parsing is hand-rolled and strict.
+
+use std::collections::BTreeMap;
+
+use crate::{Error, Result};
+
+/// Raw parsed config: `section.key -> value` (top-level keys live in
+/// section `""`).
+#[derive(Clone, Debug, Default)]
+pub struct RawConfig {
+    values: BTreeMap<String, String>,
+}
+
+impl RawConfig {
+    /// Parse `key = value` lines with `[section]` headers, `#`/`;`
+    /// comments and quoted strings.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (no, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') || line.starts_with(';') {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or_else(|| {
+                    Error::Config(format!("line {}: unterminated section", no + 1))
+                })?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                Error::Config(format!("line {}: expected key = value", no + 1))
+            })?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let mut val = v.trim().to_string();
+            if (val.starts_with('"') && val.ends_with('"') && val.len() >= 2)
+                || (val.starts_with('\'') && val.ends_with('\'') && val.len() >= 2)
+            {
+                val = val[1..val.len() - 1].to_string();
+            }
+            values.insert(key, val);
+        }
+        Ok(Self { values })
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &str) -> Result<Self> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Raw string lookup.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(String::as_str)
+    }
+
+    /// Typed lookup with default.
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                Error::Config(format!("key {key}: cannot parse {v:?}"))
+            }),
+        }
+    }
+
+    /// Override from CLI `--section.key=value` style pairs.
+    pub fn apply_overrides(&mut self, pairs: &[(String, String)]) {
+        for (k, v) in pairs {
+            self.values.insert(k.clone(), v.clone());
+        }
+    }
+}
+
+/// Which evaluation backend to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Single-threaded Algorithm 2.
+    CpuSt,
+    /// Multi-threaded Algorithm 2.
+    CpuMt,
+    /// AOT/PJRT device path.
+    Device,
+}
+
+impl std::str::FromStr for Backend {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "cpu-st" | "st" => Ok(Self::CpuSt),
+            "cpu-mt" | "mt" => Ok(Self::CpuMt),
+            "device" | "xla" => Ok(Self::Device),
+            other => Err(Error::Config(format!(
+                "unknown backend {other:?} (cpu-st|cpu-mt|device)"
+            ))),
+        }
+    }
+}
+
+/// Typed application config for the `exemcl` binary and examples.
+#[derive(Clone, Debug)]
+pub struct AppConfig {
+    /// Ground-set size.
+    pub n: usize,
+    /// Dimensionality.
+    pub d: usize,
+    /// Exemplars to select.
+    pub k: usize,
+    /// Synthetic generator: `uniform` | `blobs` | `rings`.
+    pub generator: String,
+    /// Blob count for `blobs`.
+    pub blobs: usize,
+    /// RNG seed.
+    pub seed: u64,
+    /// Optimizer: `greedy` | `lazy` | `stochastic` | `sieve` | `sieve++`
+    /// | `threesieves` | `salsa`.
+    pub optimizer: String,
+    /// Evaluation backend.
+    pub backend: Backend,
+    /// Device dtype (`f32` | `f16` | `bf16`).
+    pub dtype: String,
+    /// Artifact directory.
+    pub artifacts: String,
+    /// Worker threads for `cpu-mt` (0 = auto).
+    pub threads: usize,
+    /// Simulated device memory budget in MiB.
+    pub memory_mib: usize,
+    /// Optional CSV input path (overrides the generator).
+    pub csv: Option<String>,
+}
+
+impl Default for AppConfig {
+    fn default() -> Self {
+        Self {
+            n: 10_000,
+            d: 100,
+            k: 10,
+            generator: "blobs".into(),
+            blobs: 10,
+            seed: 42,
+            optimizer: "greedy".into(),
+            backend: Backend::Device,
+            dtype: "f32".into(),
+            artifacts: "artifacts".into(),
+            threads: 0,
+            memory_mib: 16 * 1024,
+            csv: None,
+        }
+    }
+}
+
+impl AppConfig {
+    /// Build from a raw config (missing keys keep defaults).
+    pub fn from_raw(raw: &RawConfig) -> Result<Self> {
+        let def = Self::default();
+        Ok(Self {
+            n: raw.get_or("data.n", def.n)?,
+            d: raw.get_or("data.d", def.d)?,
+            k: raw.get_or("optimizer.k", def.k)?,
+            generator: raw.get("data.generator").unwrap_or(&def.generator).to_string(),
+            blobs: raw.get_or("data.blobs", def.blobs)?,
+            seed: raw.get_or("data.seed", def.seed)?,
+            optimizer: raw.get("optimizer.name").unwrap_or(&def.optimizer).to_string(),
+            backend: raw.get_or("eval.backend", def.backend)?,
+            dtype: raw.get("eval.dtype").unwrap_or(&def.dtype).to_string(),
+            artifacts: raw.get("eval.artifacts").unwrap_or(&def.artifacts).to_string(),
+            threads: raw.get_or("eval.threads", def.threads)?,
+            memory_mib: raw.get_or("eval.memory_mib", def.memory_mib)?,
+            csv: raw.get("data.csv").map(str::to_string),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_comments() {
+        let raw = RawConfig::parse(
+            "# comment\ntop = 1\n[data]\nn = 500\ngenerator = \"rings\"\n; other\n[eval]\nbackend = cpu-st\n",
+        )
+        .unwrap();
+        assert_eq!(raw.get("top"), Some("1"));
+        assert_eq!(raw.get("data.n"), Some("500"));
+        assert_eq!(raw.get("data.generator"), Some("rings"));
+        assert_eq!(raw.get("eval.backend"), Some("cpu-st"));
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(RawConfig::parse("[unterminated\n").is_err());
+        assert!(RawConfig::parse("no equals sign\n").is_err());
+    }
+
+    #[test]
+    fn typed_config_with_defaults_and_overrides() {
+        let mut raw = RawConfig::parse("[data]\nn = 100\n").unwrap();
+        raw.apply_overrides(&[("optimizer.k".into(), "7".into())]);
+        let cfg = AppConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.n, 100);
+        assert_eq!(cfg.k, 7);
+        assert_eq!(cfg.d, 100); // default preserved
+        assert_eq!(cfg.backend, Backend::Device);
+    }
+
+    #[test]
+    fn backend_parsing() {
+        assert_eq!("cpu-st".parse::<Backend>().unwrap(), Backend::CpuSt);
+        assert_eq!("mt".parse::<Backend>().unwrap(), Backend::CpuMt);
+        assert_eq!("xla".parse::<Backend>().unwrap(), Backend::Device);
+        assert!("gpu".parse::<Backend>().is_err());
+    }
+
+    #[test]
+    fn bad_typed_value_errors() {
+        let raw = RawConfig::parse("[data]\nn = abc\n").unwrap();
+        assert!(AppConfig::from_raw(&raw).is_err());
+    }
+}

@@ -1,0 +1,162 @@
+//! Lock-free service metrics: counters and a log-bucketed latency
+//! histogram (the offline crate set has no prometheus/metrics crates).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Monotone counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// Increment by `n`.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Histogram over latencies with power-of-two microsecond buckets:
+/// bucket `i` counts samples in `[2^i, 2^(i+1)) µs`; 32 buckets cover
+/// ~1 µs to ~1 h.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; 32],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+}
+
+impl LatencyHistogram {
+    /// Record one sample.
+    pub fn observe(&self, d: Duration) {
+        let us = d.as_micros().min(u64::MAX as u128) as u64;
+        let idx = (64 - us.max(1).leading_zeros() as usize - 1).min(31);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    /// Number of samples.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Mean latency in microseconds.
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+    }
+
+    /// Maximum observed latency in microseconds.
+    pub fn max_us(&self) -> u64 {
+        self.max_us.load(Ordering::Relaxed)
+    }
+
+    /// Approximate quantile (bucket upper bound), `q ∈ [0, 1]`.
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((total as f64) * q).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        self.max_us()
+    }
+}
+
+/// All service metrics, shared via `Arc` between handles and executor.
+#[derive(Debug, Default)]
+pub struct ServiceMetrics {
+    /// Requests accepted into the queue.
+    pub requests: Counter,
+    /// Executor batches formed (each ≥ 1 request).
+    pub batches: Counter,
+    /// Evaluation sets processed.
+    pub sets_evaluated: Counter,
+    /// Marginal-gain entries computed.
+    pub gains_evaluated: Counter,
+    /// Requests coalesced into a batch beyond the first.
+    pub coalesced: Counter,
+    /// End-to-end request latency.
+    pub latency: LatencyHistogram,
+}
+
+impl ServiceMetrics {
+    /// One-line human-readable summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} batches={} coalesced={} sets={} gains={} \
+             latency(mean={:.0}us p50={}us p95={}us max={}us)",
+            self.requests.get(),
+            self.batches.get(),
+            self.coalesced.get(),
+            self.sets_evaluated.get(),
+            self.gains_evaluated.get(),
+            self.latency.mean_us(),
+            self.latency.quantile_us(0.5),
+            self.latency.quantile_us(0.95),
+            self.latency.max_us(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_accumulates() {
+        let c = Counter::default();
+        c.add(3);
+        c.add(4);
+        assert_eq!(c.get(), 7);
+    }
+
+    #[test]
+    fn histogram_buckets_and_stats() {
+        let h = LatencyHistogram::default();
+        for us in [1u64, 10, 100, 1000, 1000] {
+            h.observe(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 5);
+        assert!((h.mean_us() - 422.2).abs() < 1.0);
+        assert_eq!(h.max_us(), 1000);
+        // p50 should land near the 100us bucket boundary
+        let p50 = h.quantile_us(0.5);
+        assert!(p50 >= 64 && p50 <= 256, "p50 = {p50}");
+        assert!(h.quantile_us(1.0) >= 1000);
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.quantile_us(0.9), 0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+}

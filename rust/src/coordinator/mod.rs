@@ -1,0 +1,414 @@
+//! The evaluation service — the L3 coordination layer.
+//!
+//! The PJRT device is not thread-safe, so it lives on a dedicated
+//! **executor thread**; clients talk to it through [`ServiceHandle`], a
+//! cheap-to-clone, `Send + Sync` handle that itself implements
+//! [`Oracle`]. The request path is:
+//!
+//! ```text
+//!   client threads ──bounded queue──▶ executor ──▶ DeviceEvaluator ──▶ PJRT
+//!        ▲                               │
+//!        └────────── reply channels ◀────┘
+//! ```
+//!
+//! The executor **coalesces** adjacent `eval_sets` requests that arrive
+//! while the device is busy into a single packed work-matrix evaluation —
+//! the multiset batching the paper's §IV-A calls out as the optimizer
+//! workload — and splits the results back per caller. The queue is
+//! bounded, so producers experience backpressure instead of unbounded
+//! memory growth.
+
+pub mod metrics;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::data::Dataset;
+use crate::optim::oracle::{DminState, Oracle};
+use crate::{Error, Result};
+
+pub use metrics::ServiceMetrics;
+
+/// Maximum queued requests before senders block (backpressure).
+pub const DEFAULT_QUEUE_CAPACITY: usize = 64;
+
+enum Request {
+    EvalSets {
+        sets: Vec<Vec<usize>>,
+        reply: mpsc::Sender<Result<Vec<f32>>>,
+        enqueued: Instant,
+    },
+    Marginals {
+        state: DminState,
+        candidates: Vec<usize>,
+        reply: mpsc::Sender<Result<Vec<f32>>>,
+        enqueued: Instant,
+    },
+    Commit {
+        state: DminState,
+        idx: usize,
+        reply: mpsc::Sender<Result<DminState>>,
+        enqueued: Instant,
+    },
+    Shutdown,
+}
+
+/// A `Send + Sync` client handle to the evaluation service. Implements
+/// [`Oracle`], so optimizers can run against the service transparently
+/// (and from multiple threads at once).
+pub struct ServiceHandle {
+    tx: mpsc::SyncSender<Request>,
+    metrics: Arc<ServiceMetrics>,
+    dataset: Dataset,
+    l0: f64,
+    backend_name: String,
+    queue_depth: Arc<AtomicUsize>,
+}
+
+impl Clone for ServiceHandle {
+    fn clone(&self) -> Self {
+        Self {
+            tx: self.tx.clone(),
+            metrics: self.metrics.clone(),
+            dataset: self.dataset.clone(),
+            l0: self.l0,
+            backend_name: self.backend_name.clone(),
+            queue_depth: self.queue_depth.clone(),
+        }
+    }
+}
+
+/// The running service: join handle + the means to stop it.
+pub struct EvalService {
+    handle: ServiceHandle,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl EvalService {
+    /// Spawn the executor thread. `make_oracle` runs **on the executor
+    /// thread** (the device evaluator is not `Send`), builds the backing
+    /// oracle and must be infallible enough to report errors through the
+    /// returned `Result`.
+    pub fn spawn<F, O>(make_oracle: F, queue_capacity: usize) -> Result<Self>
+    where
+        F: FnOnce() -> Result<O> + Send + 'static,
+        O: Oracle + 'static,
+    {
+        let (tx, rx) = mpsc::sync_channel::<Request>(queue_capacity.max(1));
+        let (init_tx, init_rx) = mpsc::channel::<Result<(Dataset, f64, String)>>();
+        let metrics = Arc::new(ServiceMetrics::default());
+        let queue_depth = Arc::new(AtomicUsize::new(0));
+        let m2 = metrics.clone();
+        let qd2 = queue_depth.clone();
+
+        let join = std::thread::Builder::new()
+            .name("exemcl-executor".into())
+            .spawn(move || {
+                let oracle = match make_oracle() {
+                    Ok(o) => {
+                        let _ = init_tx.send(Ok((
+                            o.dataset().clone(),
+                            o.l0_sum(),
+                            o.name(),
+                        )));
+                        o
+                    }
+                    Err(e) => {
+                        let _ = init_tx.send(Err(e));
+                        return;
+                    }
+                };
+                executor_loop(&oracle, &rx, &m2, &qd2);
+            })
+            .map_err(|e| Error::Service(format!("cannot spawn executor: {e}")))?;
+
+        let (dataset, l0, backend_name) = init_rx
+            .recv()
+            .map_err(|_| Error::Service("executor died during init".into()))??;
+
+        Ok(Self {
+            handle: ServiceHandle { tx, metrics, dataset, l0, backend_name, queue_depth },
+            join: Some(join),
+        })
+    }
+
+    /// The client handle (clone freely across threads).
+    pub fn handle(&self) -> ServiceHandle {
+        self.handle.clone()
+    }
+
+    /// Service metrics.
+    pub fn metrics(&self) -> &ServiceMetrics {
+        &self.handle.metrics
+    }
+
+    /// Stop the executor and join it.
+    pub fn shutdown(mut self) {
+        let _ = self.handle.tx.send(Request::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for EvalService {
+    fn drop(&mut self) {
+        let _ = self.handle.tx.send(Request::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn executor_loop(
+    oracle: &dyn Oracle,
+    rx: &mpsc::Receiver<Request>,
+    metrics: &ServiceMetrics,
+    queue_depth: &AtomicUsize,
+) {
+    loop {
+        let first = match rx.recv() {
+            Ok(Request::Shutdown) | Err(_) => return,
+            Ok(r) => r,
+        };
+        queue_depth.fetch_sub(1, Ordering::Relaxed);
+
+        match first {
+            Request::EvalSets { sets, reply, enqueued } => {
+                // coalesce: drain any further eval_sets already queued
+                let mut batch = vec![(sets, reply, enqueued)];
+                let mut leftover = None;
+                while let Ok(next) = rx.try_recv() {
+                    queue_depth.fetch_sub(1, Ordering::Relaxed);
+                    match next {
+                        Request::EvalSets { sets, reply, enqueued } => {
+                            metrics.coalesced.add(1);
+                            batch.push((sets, reply, enqueued));
+                        }
+                        Request::Shutdown => return,
+                        other => {
+                            leftover = Some(other);
+                            break;
+                        }
+                    }
+                }
+                serve_eval_batch(oracle, batch, metrics);
+                if let Some(other) = leftover {
+                    serve_single(oracle, other, metrics);
+                }
+            }
+            other => serve_single(oracle, other, metrics),
+        }
+        metrics.batches.add(1);
+    }
+}
+
+fn serve_eval_batch(
+    oracle: &dyn Oracle,
+    batch: Vec<(Vec<Vec<usize>>, mpsc::Sender<Result<Vec<f32>>>, Instant)>,
+    metrics: &ServiceMetrics,
+) {
+    // concatenate all requests into one multiset evaluation
+    let mut all_sets: Vec<Vec<usize>> = Vec::new();
+    let mut splits = Vec::with_capacity(batch.len());
+    for (sets, _, _) in &batch {
+        splits.push(sets.len());
+        all_sets.extend(sets.iter().cloned());
+    }
+    metrics.sets_evaluated.add(all_sets.len() as u64);
+    let result = oracle.eval_sets(&all_sets);
+    match result {
+        Ok(values) => {
+            let mut off = 0;
+            for ((_, reply, enqueued), count) in batch.into_iter().zip(splits) {
+                let slice = values[off..off + count].to_vec();
+                off += count;
+                metrics.latency.observe(enqueued.elapsed());
+                let _ = reply.send(Ok(slice));
+            }
+        }
+        Err(e) => {
+            let msg = e.to_string();
+            for (_, reply, enqueued) in batch {
+                metrics.latency.observe(enqueued.elapsed());
+                let _ = reply.send(Err(Error::Service(msg.clone())));
+            }
+        }
+    }
+}
+
+fn serve_single(oracle: &dyn Oracle, req: Request, metrics: &ServiceMetrics) {
+    match req {
+        Request::EvalSets { sets, reply, enqueued } => {
+            metrics.sets_evaluated.add(sets.len() as u64);
+            let r = oracle.eval_sets(&sets);
+            metrics.latency.observe(enqueued.elapsed());
+            let _ = reply.send(r);
+        }
+        Request::Marginals { state, candidates, reply, enqueued } => {
+            metrics.gains_evaluated.add(candidates.len() as u64);
+            let r = oracle.marginal_gains(&state, &candidates);
+            metrics.latency.observe(enqueued.elapsed());
+            let _ = reply.send(r);
+        }
+        Request::Commit { mut state, idx, reply, enqueued } => {
+            let r = oracle.commit(&mut state, idx).map(|()| state);
+            metrics.latency.observe(enqueued.elapsed());
+            let _ = reply.send(r);
+        }
+        Request::Shutdown => {}
+    }
+}
+
+impl ServiceHandle {
+    fn send(&self, req: Request) -> Result<()> {
+        self.metrics.requests.add(1);
+        self.queue_depth.fetch_add(1, Ordering::Relaxed);
+        self.tx
+            .send(req)
+            .map_err(|_| Error::Service("executor has shut down".into()))
+    }
+
+    /// Current queued request count (backpressure observability).
+    pub fn queue_depth(&self) -> usize {
+        self.queue_depth.load(Ordering::Relaxed)
+    }
+
+    /// Metrics shared with the executor.
+    pub fn metrics(&self) -> &ServiceMetrics {
+        &self.metrics
+    }
+}
+
+impl Oracle for ServiceHandle {
+    fn dataset(&self) -> &Dataset {
+        &self.dataset
+    }
+
+    fn eval_sets(&self, sets: &[Vec<usize>]) -> Result<Vec<f32>> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Request::EvalSets {
+            sets: sets.to_vec(),
+            reply,
+            enqueued: Instant::now(),
+        })?;
+        rx.recv().map_err(|_| Error::Service("executor dropped reply".into()))?
+    }
+
+    fn marginal_gains(&self, state: &DminState, candidates: &[usize]) -> Result<Vec<f32>> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Request::Marginals {
+            state: state.clone(),
+            candidates: candidates.to_vec(),
+            reply,
+            enqueued: Instant::now(),
+        })?;
+        rx.recv().map_err(|_| Error::Service("executor dropped reply".into()))?
+    }
+
+    fn commit(&self, state: &mut DminState, idx: usize) -> Result<()> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Request::Commit {
+            state: state.clone(),
+            idx,
+            reply,
+            enqueued: Instant::now(),
+        })?;
+        *state = rx.recv().map_err(|_| Error::Service("executor dropped reply".into()))??;
+        Ok(())
+    }
+
+    fn l0_sum(&self) -> f64 {
+        self.l0
+    }
+
+    fn name(&self) -> String {
+        format!("service[{}]", self.backend_name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpu::SingleThread;
+    use crate::data::synth::UniformCube;
+    use crate::optim::{Greedy, Optimizer};
+
+    fn spawn_cpu_service() -> EvalService {
+        EvalService::spawn(
+            || Ok(SingleThread::new(UniformCube::new(4, 1.0).generate(64, 3))),
+            8,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn service_matches_direct_oracle() {
+        let svc = spawn_cpu_service();
+        let h = svc.handle();
+        let direct = SingleThread::new(UniformCube::new(4, 1.0).generate(64, 3));
+        let sets = vec![vec![0, 1], vec![5, 6, 7]];
+        assert_eq!(h.eval_sets(&sets).unwrap(), direct.eval_sets(&sets).unwrap());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn service_marginals_and_commit_roundtrip() {
+        let svc = spawn_cpu_service();
+        let h = svc.handle();
+        let mut state = h.init_state();
+        h.commit(&mut state, 3).unwrap();
+        assert_eq!(state.exemplars, vec![3]);
+        let gains = h.marginal_gains(&state, &[3]).unwrap();
+        assert!(gains[0].abs() < 1e-6, "re-adding exemplar should gain 0");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn greedy_runs_through_service() {
+        let svc = spawn_cpu_service();
+        let h = svc.handle();
+        let r = Greedy::new(4).maximize(&h).unwrap();
+        assert_eq!(r.exemplars.len(), 4);
+        assert!(svc.metrics().requests.get() > 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients_coalesce() {
+        let svc = spawn_cpu_service();
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                let h = svc.handle();
+                std::thread::spawn(move || {
+                    let sets = vec![vec![i], vec![i + 1, i + 2]];
+                    h.eval_sets(&sets).unwrap()
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap().len(), 2);
+        }
+        assert_eq!(svc.metrics().sets_evaluated.get(), 8);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn spawn_failure_propagates() {
+        let r = EvalService::spawn(
+            || -> Result<SingleThread> { Err(Error::Config("nope".into())) },
+            4,
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn requests_after_shutdown_error() {
+        let svc = spawn_cpu_service();
+        let h = svc.handle();
+        svc.shutdown();
+        assert!(h.eval_sets(&[vec![0]]).is_err());
+    }
+}

@@ -1,0 +1,458 @@
+//! CPU baselines — the paper's Algorithm 2 in single- and multi-threaded
+//! form (§IV-A, §V).
+//!
+//! `SingleThread` is the literal Algorithm 2: for every `v ∈ V`, scan the
+//! set for the minimum dissimilarity, then reduce by sum. The inner loop
+//! is written to autovectorize (the paper's CPU reference uses an OpenMP
+//! SIMD sum reduction).
+//!
+//! `MultiThread` parallelizes across evaluation *sets* ("runs the
+//! mentioned algorithm on different sets in parallel", §V), falling back
+//! to ground-set splitting when a single set is evaluated.
+
+mod kernels;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::data::Dataset;
+use crate::distance::{Dissimilarity, SqEuclidean};
+use crate::optim::oracle::{DminState, Oracle};
+use crate::{Error, Result};
+
+pub use kernels::{loss_sum_blocked, loss_sum_naive};
+
+/// Single-threaded Algorithm 2 evaluator.
+pub struct SingleThread<D: Dissimilarity = SqEuclidean> {
+    ds: Dataset,
+    dist: D,
+}
+
+impl<D: Dissimilarity> SingleThread<D> {
+    /// Wrap a dataset with a dissimilarity function.
+    pub fn with_distance(ds: Dataset, dist: D) -> Self {
+        Self { ds, dist }
+    }
+
+    /// Unnormalized `L(S ∪ {e0}) * n` for one set of dataset indices.
+    pub fn loss_sum(&self, set: &[usize]) -> f64 {
+        let mut acc = 0.0f64;
+        for i in 0..self.ds.n() {
+            let v = self.ds.row(i);
+            // e0 first: Definition 5 always includes the auxiliary vector.
+            let mut t = self.dist.eval_vs_origin(v);
+            for &s in set {
+                let d = self.dist.eval(self.ds.row(s), v);
+                if d < t {
+                    t = d;
+                }
+            }
+            acc += t as f64;
+        }
+        acc
+    }
+}
+
+impl SingleThread<SqEuclidean> {
+    /// Squared-Euclidean evaluator (the paper's benchmark configuration).
+    pub fn new(ds: Dataset) -> Self {
+        Self::with_distance(ds, SqEuclidean)
+    }
+}
+
+impl<D: Dissimilarity> Oracle for SingleThread<D> {
+    fn dataset(&self) -> &Dataset {
+        &self.ds
+    }
+
+    fn eval_sets(&self, sets: &[Vec<usize>]) -> Result<Vec<f32>> {
+        validate_sets(&self.ds, sets)?;
+        let n = self.ds.n() as f64;
+        let l0 = self.l0_sum();
+        Ok(sets
+            .iter()
+            .map(|s| ((l0 - self.loss_sum(s)) / n) as f32)
+            .collect())
+    }
+
+    fn marginal_gains(&self, state: &DminState, candidates: &[usize]) -> Result<Vec<f32>> {
+        validate_state(&self.ds, state)?;
+        validate_indices(&self.ds, candidates)?;
+        let n = self.ds.n() as f64;
+        let mut out = Vec::with_capacity(candidates.len());
+        for &c in candidates {
+            let cv = self.ds.row(c);
+            let mut gain = 0.0f64;
+            for i in 0..self.ds.n() {
+                let d = self.dist.eval(cv, self.ds.row(i));
+                let improve = state.dmin[i] - d;
+                if improve > 0.0 {
+                    gain += improve as f64;
+                }
+            }
+            out.push((gain / n) as f32);
+        }
+        Ok(out)
+    }
+
+    fn commit(&self, state: &mut DminState, idx: usize) -> Result<()> {
+        validate_indices(&self.ds, &[idx])?;
+        let e = self.ds.row(idx);
+        for i in 0..self.ds.n() {
+            let d = self.dist.eval(e, self.ds.row(i));
+            if d < state.dmin[i] {
+                state.dmin[i] = d;
+            }
+        }
+        state.exemplars.push(idx);
+        Ok(())
+    }
+
+    fn name(&self) -> String {
+        format!("cpu-st/{}", self.dist.name())
+    }
+}
+
+/// Multi-threaded Algorithm 2 evaluator (std::thread scoped workers; the
+/// offline crate set has no rayon).
+pub struct MultiThread<D: Dissimilarity = SqEuclidean> {
+    ds: Dataset,
+    dist: D,
+    threads: usize,
+}
+
+impl<D: Dissimilarity> MultiThread<D> {
+    /// `threads = 0` uses `std::thread::available_parallelism()`.
+    pub fn with_distance(ds: Dataset, dist: D, threads: usize) -> Self {
+        let threads = if threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            threads
+        };
+        Self { ds, dist, threads }
+    }
+
+    /// Worker count in use.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Parallel-over-ground-set loss sum for one set (the "single set
+    /// parallelized problem" of §IV-A).
+    pub fn loss_sum(&self, set: &[usize]) -> f64 {
+        let n = self.ds.n();
+        let chunk = n.div_ceil(self.threads).max(1);
+        let mut total = 0.0f64;
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for t in 0..self.threads {
+                let lo = t * chunk;
+                if lo >= n {
+                    break;
+                }
+                let hi = (lo + chunk).min(n);
+                let ds = &self.ds;
+                let dist = &self.dist;
+                handles.push(scope.spawn(move || {
+                    let mut acc = 0.0f64;
+                    for i in lo..hi {
+                        let v = ds.row(i);
+                        let mut t = dist.eval_vs_origin(v);
+                        for &s in set {
+                            let d = dist.eval(ds.row(s), v);
+                            if d < t {
+                                t = d;
+                            }
+                        }
+                        acc += t as f64;
+                    }
+                    acc
+                }));
+            }
+            for h in handles {
+                total += h.join().expect("worker panicked");
+            }
+        });
+        total
+    }
+}
+
+impl MultiThread<SqEuclidean> {
+    /// Squared-Euclidean multi-thread evaluator.
+    pub fn new(ds: Dataset, threads: usize) -> Self {
+        Self::with_distance(ds, SqEuclidean, threads)
+    }
+}
+
+impl<D: Dissimilarity> Oracle for MultiThread<D> {
+    fn dataset(&self) -> &Dataset {
+        &self.ds
+    }
+
+    fn eval_sets(&self, sets: &[Vec<usize>]) -> Result<Vec<f32>> {
+        validate_sets(&self.ds, sets)?;
+        let n = self.ds.n() as f64;
+        let l0 = self.l0_sum();
+        if sets.len() == 1 {
+            // single-set problem: split the ground set instead
+            return Ok(vec![((l0 - self.loss_sum(&sets[0])) / n) as f32]);
+        }
+        // multiset problem: one task per set, work-stealing via an atomic
+        // cursor (the paper's MT baseline parallelizes across sets).
+        let mut out = vec![0.0f32; sets.len()];
+        let cursor = AtomicUsize::new(0);
+        let slots: Vec<std::sync::Mutex<&mut f32>> =
+            out.iter_mut().map(std::sync::Mutex::new).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..self.threads.min(sets.len()) {
+                let cursor = &cursor;
+                let slots = &slots;
+                let ds = &self.ds;
+                let dist = &self.dist;
+                scope.spawn(move || loop {
+                    let j = cursor.fetch_add(1, Ordering::Relaxed);
+                    if j >= sets.len() {
+                        break;
+                    }
+                    let mut acc = 0.0f64;
+                    for i in 0..ds.n() {
+                        let v = ds.row(i);
+                        let mut t = dist.eval_vs_origin(v);
+                        for &s in &sets[j] {
+                            let d = dist.eval(ds.row(s), v);
+                            if d < t {
+                                t = d;
+                            }
+                        }
+                        acc += t as f64;
+                    }
+                    **slots[j].lock().unwrap() = ((l0 - acc) / n) as f32;
+                });
+            }
+        });
+        Ok(out)
+    }
+
+    fn marginal_gains(&self, state: &DminState, candidates: &[usize]) -> Result<Vec<f32>> {
+        validate_state(&self.ds, state)?;
+        validate_indices(&self.ds, candidates)?;
+        let n = self.ds.n() as f64;
+        let mut out = vec![0.0f32; candidates.len()];
+        let cursor = AtomicUsize::new(0);
+        let slots: Vec<std::sync::Mutex<&mut f32>> =
+            out.iter_mut().map(std::sync::Mutex::new).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..self.threads.min(candidates.len()).max(1) {
+                let cursor = &cursor;
+                let slots = &slots;
+                let ds = &self.ds;
+                let dist = &self.dist;
+                let dmin = &state.dmin;
+                scope.spawn(move || loop {
+                    let j = cursor.fetch_add(1, Ordering::Relaxed);
+                    if j >= candidates.len() {
+                        break;
+                    }
+                    let cv = ds.row(candidates[j]);
+                    let mut gain = 0.0f64;
+                    for i in 0..ds.n() {
+                        let d = dist.eval(cv, ds.row(i));
+                        let improve = dmin[i] - d;
+                        if improve > 0.0 {
+                            gain += improve as f64;
+                        }
+                    }
+                    **slots[j].lock().unwrap() = (gain / n) as f32;
+                });
+            }
+        });
+        Ok(out)
+    }
+
+    fn commit(&self, state: &mut DminState, idx: usize) -> Result<()> {
+        validate_indices(&self.ds, &[idx])?;
+        let e = self.ds.row(idx);
+        for i in 0..self.ds.n() {
+            let d = self.dist.eval(e, self.ds.row(i));
+            if d < state.dmin[i] {
+                state.dmin[i] = d;
+            }
+        }
+        state.exemplars.push(idx);
+        Ok(())
+    }
+
+    fn name(&self) -> String {
+        format!("cpu-mt{}/{}", self.threads, self.dist.name())
+    }
+}
+
+fn validate_indices(ds: &Dataset, idx: &[usize]) -> Result<()> {
+    if let Some(&bad) = idx.iter().find(|&&i| i >= ds.n()) {
+        return Err(Error::InvalidArgument(format!(
+            "index {bad} out of range (n = {})",
+            ds.n()
+        )));
+    }
+    Ok(())
+}
+
+fn validate_sets(ds: &Dataset, sets: &[Vec<usize>]) -> Result<()> {
+    if sets.is_empty() {
+        return Err(Error::InvalidArgument("no evaluation sets".into()));
+    }
+    for s in sets {
+        validate_indices(ds, s)?;
+    }
+    Ok(())
+}
+
+fn validate_state(ds: &Dataset, state: &DminState) -> Result<()> {
+    if state.dmin.len() != ds.n() {
+        return Err(Error::InvalidArgument(format!(
+            "state has {} entries, dataset has {}",
+            state.dmin.len(),
+            ds.n()
+        )));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::UniformCube;
+
+    fn small() -> Dataset {
+        UniformCube::new(4, 1.0).generate(64, 11)
+    }
+
+    /// Brute-force f(S) straight from Definition 5.
+    fn brute_f(ds: &Dataset, set: &[usize]) -> f32 {
+        let n = ds.n() as f64;
+        let mut l0 = 0.0f64;
+        let mut ls = 0.0f64;
+        for i in 0..ds.n() {
+            let v = ds.row(i);
+            let vsq: f32 = v.iter().map(|x| x * x).sum();
+            l0 += vsq as f64;
+            let mut t = vsq;
+            for &s in set {
+                let d = SqEuclidean.eval(ds.row(s), v);
+                if d < t {
+                    t = d;
+                }
+            }
+            ls += t as f64;
+        }
+        ((l0 - ls) / n) as f32
+    }
+
+    #[test]
+    fn st_matches_brute_force() {
+        let ds = small();
+        let st = SingleThread::new(ds.clone());
+        let sets = vec![vec![0, 5, 9], vec![1], vec![]];
+        let got = st.eval_sets(&sets).unwrap();
+        for (g, s) in got.iter().zip(&sets) {
+            assert!((g - brute_f(&ds, s)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn empty_set_evaluates_to_zero() {
+        let st = SingleThread::new(small());
+        assert!(st.eval_sets(&[vec![]]).unwrap()[0].abs() < 1e-6);
+    }
+
+    #[test]
+    fn mt_matches_st() {
+        let ds = small();
+        let st = SingleThread::new(ds.clone());
+        let mt = MultiThread::new(ds, 4);
+        let sets = vec![vec![0, 1], vec![2, 3, 4], vec![60]];
+        let a = st.eval_sets(&sets).unwrap();
+        let b = mt.eval_sets(&sets).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-5);
+        }
+        // single-set path too
+        let a1 = st.eval_sets(&[vec![7, 8]]).unwrap();
+        let b1 = mt.eval_sets(&[vec![7, 8]]).unwrap();
+        assert!((a1[0] - b1[0]).abs() < 1e-5);
+    }
+
+    #[test]
+    fn marginal_gain_equals_eval_difference() {
+        let ds = small();
+        let st = SingleThread::new(ds.clone());
+        let mut state = st.init_state();
+        st.commit(&mut state, 3).unwrap();
+        st.commit(&mut state, 17).unwrap();
+
+        let cands = vec![5usize, 40, 63];
+        let gains = st.marginal_gains(&state, &cands).unwrap();
+        let base = st.eval_sets(&[vec![3, 17]]).unwrap()[0];
+        for (g, &c) in gains.iter().zip(&cands) {
+            let with = st.eval_sets(&[vec![3, 17, c]]).unwrap()[0];
+            assert!((g - (with - base)).abs() < 1e-4, "gain mismatch: {g} vs {}", with - base);
+        }
+    }
+
+    #[test]
+    fn state_f_value_tracks_eval() {
+        let ds = small();
+        let st = SingleThread::new(ds);
+        let mut state = st.init_state();
+        st.commit(&mut state, 0).unwrap();
+        st.commit(&mut state, 10).unwrap();
+        let via_state = st.f_of_state(&state);
+        let via_eval = st.eval_sets(&[vec![0, 10]]).unwrap()[0];
+        assert!((via_state - via_eval).abs() < 1e-5);
+    }
+
+    #[test]
+    fn gains_are_nonnegative_and_monotone_under_commit() {
+        let ds = small();
+        let st = SingleThread::new(ds);
+        let mut state = st.init_state();
+        let all: Vec<usize> = (0..st.dataset().n()).collect();
+        let g0 = st.marginal_gains(&state, &all).unwrap();
+        assert!(g0.iter().all(|&g| g >= 0.0));
+        st.commit(&mut state, 5).unwrap();
+        let g1 = st.marginal_gains(&state, &all).unwrap();
+        // diminishing returns: gains never grow after a commit
+        for (a, b) in g0.iter().zip(&g1) {
+            assert!(b <= &(a + 1e-5));
+        }
+    }
+
+    #[test]
+    fn mt_marginals_match_st() {
+        let ds = small();
+        let st = SingleThread::new(ds.clone());
+        let mt = MultiThread::new(ds, 3);
+        let mut state = st.init_state();
+        st.commit(&mut state, 2).unwrap();
+        let cands: Vec<usize> = (0..20).collect();
+        let a = st.marginal_gains(&state, &cands).unwrap();
+        let b = mt.marginal_gains(&state, &cands).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_indices() {
+        let st = SingleThread::new(small());
+        assert!(st.eval_sets(&[vec![999]]).is_err());
+        let state = st.init_state();
+        assert!(st.marginal_gains(&state, &[999]).is_err());
+    }
+
+    #[test]
+    fn rejects_mismatched_state() {
+        let st = SingleThread::new(small());
+        let bad = DminState { dmin: vec![0.0; 3], exemplars: vec![] };
+        assert!(st.marginal_gains(&bad, &[0]).is_err());
+    }
+}

@@ -1,0 +1,110 @@
+//! Minimal CSV loader for real datasets (no serde in the offline crate
+//! set). Supports numeric columns, optional header, comma or whitespace
+//! separators, and `#` comment lines.
+
+use std::io::BufRead;
+use std::path::Path;
+
+use super::Dataset;
+use crate::{Error, Result};
+
+/// CSV parsing options.
+#[derive(Clone, Debug)]
+pub struct CsvOptions {
+    /// Skip the first non-comment line.
+    pub has_header: bool,
+    /// Column separator; `None` splits on any ASCII whitespace.
+    pub separator: Option<char>,
+    /// Columns to drop (e.g. an id or label column).
+    pub skip_columns: Vec<usize>,
+}
+
+impl Default for CsvOptions {
+    fn default() -> Self {
+        Self { has_header: false, separator: Some(','), skip_columns: vec![] }
+    }
+}
+
+/// Load a numeric CSV file into a [`Dataset`].
+pub fn load(path: impl AsRef<Path>, opts: &CsvOptions) -> Result<Dataset> {
+    let file = std::fs::File::open(path.as_ref())?;
+    parse(std::io::BufReader::new(file), opts)
+}
+
+/// Parse CSV from any reader (unit-testable without touching disk).
+pub fn parse(reader: impl BufRead, opts: &CsvOptions) -> Result<Dataset> {
+    let mut rows: Vec<Vec<f32>> = Vec::new();
+    let mut skipped_header = !opts.has_header;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with('#') {
+            continue;
+        }
+        if !skipped_header {
+            skipped_header = true;
+            continue;
+        }
+        let fields: Vec<&str> = match opts.separator {
+            Some(sep) => trimmed.split(sep).collect(),
+            None => trimmed.split_ascii_whitespace().collect(),
+        };
+        let mut row = Vec::with_capacity(fields.len());
+        for (ci, f) in fields.iter().enumerate() {
+            if opts.skip_columns.contains(&ci) {
+                continue;
+            }
+            let v: f32 = f.trim().parse().map_err(|_| {
+                Error::InvalidArgument(format!(
+                    "line {}: cannot parse field {ci} ({f:?}) as f32",
+                    lineno + 1
+                ))
+            })?;
+            row.push(v);
+        }
+        rows.push(row);
+    }
+    Dataset::from_rows(&rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_simple_csv() {
+        let input = "1.0,2.0\n3.0,4.0\n";
+        let ds = parse(input.as_bytes(), &CsvOptions::default()).unwrap();
+        assert_eq!((ds.n(), ds.d()), (2, 2));
+        assert_eq!(ds.row(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn skips_header_and_comments() {
+        let input = "# comment\nx,y\n1,2\n\n3,4\n";
+        let opts = CsvOptions { has_header: true, ..Default::default() };
+        let ds = parse(input.as_bytes(), &opts).unwrap();
+        assert_eq!(ds.n(), 2);
+    }
+
+    #[test]
+    fn whitespace_separator() {
+        let opts = CsvOptions { separator: None, ..Default::default() };
+        let ds = parse("1 2\t3\n4 5 6\n".as_bytes(), &opts).unwrap();
+        assert_eq!((ds.n(), ds.d()), (2, 3));
+    }
+
+    #[test]
+    fn skip_columns_drops_label() {
+        let opts = CsvOptions { skip_columns: vec![0], ..Default::default() };
+        let ds = parse("9,1.5,2.5\n8,3.5,4.5\n".as_bytes(), &opts).unwrap();
+        assert_eq!(ds.d(), 2);
+        assert_eq!(ds.row(0), &[1.5, 2.5]);
+    }
+
+    #[test]
+    fn bad_field_errors_with_line() {
+        let err = parse("1,abc\n".as_bytes(), &CsvOptions::default()).unwrap_err();
+        assert!(err.to_string().contains("line 1"));
+    }
+}

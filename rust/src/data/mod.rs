@@ -1,0 +1,161 @@
+//! Dataset substrate: in-memory row-major matrices, a deterministic PRNG,
+//! synthetic workload generators (the paper's "randomly generated
+//! problems", §V) and a CSV loader for real data.
+
+pub mod csv;
+pub mod rng;
+pub mod synth;
+
+pub use rng::Rng;
+
+/// A dense row-major `n x d` dataset of `f32` observations — the ground
+/// set `V` of Definition 1.
+///
+/// Row-major storage matches the access pattern of the CPU baseline
+/// (Algorithm 2 walks whole vectors) and of the packer, which gathers
+/// complete rows into the device staging buffer.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    n: usize,
+    d: usize,
+    data: Vec<f32>,
+}
+
+impl Dataset {
+    /// Build from a flat row-major buffer. `data.len()` must equal `n * d`.
+    pub fn from_flat(n: usize, d: usize, data: Vec<f32>) -> crate::Result<Self> {
+        if data.len() != n * d {
+            return Err(crate::Error::InvalidArgument(format!(
+                "flat buffer has {} elements, expected n*d = {}",
+                data.len(),
+                n * d
+            )));
+        }
+        Ok(Self { n, d, data })
+    }
+
+    /// Build from row slices; all rows must share the same dimensionality.
+    pub fn from_rows(rows: &[Vec<f32>]) -> crate::Result<Self> {
+        if rows.is_empty() {
+            return Err(crate::Error::InvalidArgument("empty dataset".into()));
+        }
+        let d = rows[0].len();
+        let mut data = Vec::with_capacity(rows.len() * d);
+        for (i, r) in rows.iter().enumerate() {
+            if r.len() != d {
+                return Err(crate::Error::InvalidArgument(format!(
+                    "row {i} has {} dims, expected {d}",
+                    r.len()
+                )));
+            }
+            data.extend_from_slice(r);
+        }
+        Ok(Self { n: rows.len(), d, data })
+    }
+
+    /// Number of observations `|V|`.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Dimensionality of each observation.
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Borrow observation `i` as a slice of length `d`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    /// The whole row-major buffer.
+    pub fn flat(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Squared L2 norm of every row — `d(v, e0)` for the auxiliary
+    /// all-zero exemplar of Definition 5, precomputed once per dataset.
+    pub fn sq_norms(&self) -> Vec<f32> {
+        (0..self.n)
+            .map(|i| self.row(i).iter().map(|x| x * x).sum())
+            .collect()
+    }
+
+    /// `L({e0})` times `|V|`: the unnormalized loss of the dummy set —
+    /// the constant term of Definition 5.
+    pub fn l0_sum(&self) -> f64 {
+        (0..self.n)
+            .map(|i| self.row(i).iter().map(|x| (x * x) as f64).sum::<f64>())
+            .sum()
+    }
+
+    /// Gather rows by index into a new dataset (used to materialize
+    /// candidate subsets and stream windows).
+    pub fn gather(&self, idx: &[usize]) -> Dataset {
+        let mut data = Vec::with_capacity(idx.len() * self.d);
+        for &i in idx {
+            data.extend_from_slice(self.row(i));
+        }
+        Dataset { n: idx.len(), d: self.d, data }
+    }
+
+    /// Append another dataset with identical dimensionality.
+    pub fn extend(&mut self, other: &Dataset) -> crate::Result<()> {
+        if other.d != self.d {
+            return Err(crate::Error::InvalidArgument(format!(
+                "dimensionality mismatch: {} vs {}",
+                self.d, other.d
+            )));
+        }
+        self.data.extend_from_slice(&other.data);
+        self.n += other.n;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_flat_roundtrip() {
+        let ds = Dataset::from_flat(2, 3, vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(ds.n(), 2);
+        assert_eq!(ds.d(), 3);
+        assert_eq!(ds.row(1), &[4., 5., 6.]);
+    }
+
+    #[test]
+    fn from_flat_rejects_bad_len() {
+        assert!(Dataset::from_flat(2, 3, vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn from_rows_rejects_ragged() {
+        assert!(Dataset::from_rows(&[vec![1.0], vec![1.0, 2.0]]).is_err());
+    }
+
+    #[test]
+    fn sq_norms_match_manual() {
+        let ds = Dataset::from_flat(2, 2, vec![3., 4., 1., 0.]).unwrap();
+        assert_eq!(ds.sq_norms(), vec![25.0, 1.0]);
+        assert!((ds.l0_sum() - 26.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gather_selects_rows() {
+        let ds = Dataset::from_flat(3, 1, vec![10., 20., 30.]).unwrap();
+        let g = ds.gather(&[2, 0]);
+        assert_eq!(g.flat(), &[30., 10.]);
+    }
+
+    #[test]
+    fn extend_appends() {
+        let mut a = Dataset::from_flat(1, 2, vec![1., 2.]).unwrap();
+        let b = Dataset::from_flat(1, 2, vec![3., 4.]).unwrap();
+        a.extend(&b).unwrap();
+        assert_eq!(a.n(), 2);
+        assert_eq!(a.row(1), &[3., 4.]);
+    }
+}

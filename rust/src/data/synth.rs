@@ -1,0 +1,173 @@
+//! Synthetic workload generators.
+//!
+//! §V of the paper evaluates on "randomly generated" problems; these
+//! generators reproduce that setup (uniform cube) and add structured
+//! variants (Gaussian blobs, concentric rings) so the clustering examples
+//! have ground truth to report against.
+
+use super::{Dataset, Rng};
+
+/// Uniform points in `[0, 1)^d` — the paper's benchmark distribution.
+#[derive(Clone, Debug)]
+pub struct UniformCube {
+    d: usize,
+    scale: f32,
+}
+
+impl UniformCube {
+    /// `scale` stretches the cube; the paper uses unit scale.
+    pub fn new(d: usize, scale: f32) -> Self {
+        Self { d, scale }
+    }
+
+    /// Generate `n` observations with the given seed.
+    pub fn generate(&self, n: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let mut data = Vec::with_capacity(n * self.d);
+        for _ in 0..n * self.d {
+            data.push(rng.uniform() * self.scale);
+        }
+        Dataset::from_flat(n, self.d, data).expect("internal shape invariant")
+    }
+}
+
+/// Isotropic Gaussian blobs around `centers` random centers — ground
+/// truth for clustering-quality metrics.
+#[derive(Clone, Debug)]
+pub struct GaussianBlobs {
+    centers: usize,
+    d: usize,
+    sigma: f32,
+}
+
+/// A blob dataset together with its generating structure.
+#[derive(Clone, Debug)]
+pub struct LabeledDataset {
+    /// The observations.
+    pub dataset: Dataset,
+    /// Ground-truth blob id per observation.
+    pub labels: Vec<usize>,
+    /// Blob centers (`centers x d` row-major).
+    pub centers: Dataset,
+}
+
+impl GaussianBlobs {
+    /// `centers` blobs in `d` dims with per-axis std `sigma`. Centers are
+    /// drawn uniformly from `[0, 10)^d` so blobs are well separated for
+    /// sigma ≲ 1.
+    pub fn new(centers: usize, d: usize, sigma: f32) -> Self {
+        Self { centers, d, sigma }
+    }
+
+    /// Generate `n` observations (blob sizes as equal as possible).
+    pub fn generate(&self, n: usize, seed: u64) -> Dataset {
+        self.generate_labeled(n, seed).dataset
+    }
+
+    /// Generate with ground-truth labels and centers.
+    pub fn generate_labeled(&self, n: usize, seed: u64) -> LabeledDataset {
+        let mut rng = Rng::new(seed);
+        let mut centers = Vec::with_capacity(self.centers * self.d);
+        for _ in 0..self.centers * self.d {
+            centers.push(rng.uniform() * 10.0);
+        }
+        let mut data = Vec::with_capacity(n * self.d);
+        let mut labels = Vec::with_capacity(n);
+        for i in 0..n {
+            let c = i % self.centers;
+            labels.push(c);
+            for j in 0..self.d {
+                data.push(centers[c * self.d + j] + rng.normal() * self.sigma);
+            }
+        }
+        LabeledDataset {
+            dataset: Dataset::from_flat(n, self.d, data).expect("shape"),
+            labels,
+            centers: Dataset::from_flat(self.centers, self.d, centers).expect("shape"),
+        }
+    }
+}
+
+/// Concentric rings in the first two dimensions (remaining dims are
+/// noise) — a workload where Euclidean exemplars are deliberately hard,
+/// used by the dissimilarity-function examples.
+#[derive(Clone, Debug)]
+pub struct Rings {
+    rings: usize,
+    d: usize,
+    noise: f32,
+}
+
+impl Rings {
+    /// `rings` concentric circles with radial noise `noise`.
+    pub fn new(rings: usize, d: usize, noise: f32) -> Self {
+        assert!(d >= 2, "rings need at least 2 dims");
+        Self { rings, d, noise }
+    }
+
+    /// Generate `n` observations.
+    pub fn generate(&self, n: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let mut data = Vec::with_capacity(n * self.d);
+        for i in 0..n {
+            let ring = (i % self.rings) as f32 + 1.0;
+            let theta = rng.uniform() * 2.0 * std::f32::consts::PI;
+            let r = ring + rng.normal() * self.noise;
+            data.push(r * theta.cos());
+            data.push(r * theta.sin());
+            for _ in 2..self.d {
+                data.push(rng.normal() * self.noise);
+            }
+        }
+        Dataset::from_flat(n, self.d, data).expect("shape")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_shape_and_range() {
+        let ds = UniformCube::new(4, 1.0).generate(100, 1);
+        assert_eq!((ds.n(), ds.d()), (100, 4));
+        assert!(ds.flat().iter().all(|&x| (0.0..1.0).contains(&x)));
+    }
+
+    #[test]
+    fn uniform_deterministic() {
+        let a = UniformCube::new(3, 1.0).generate(10, 5);
+        let b = UniformCube::new(3, 1.0).generate(10, 5);
+        assert_eq!(a.flat(), b.flat());
+    }
+
+    #[test]
+    fn blobs_labels_match_centers() {
+        let lab = GaussianBlobs::new(3, 2, 0.01).generate_labeled(30, 2);
+        assert_eq!(lab.labels.len(), 30);
+        // with tiny sigma every point is closest to its own center
+        for i in 0..30 {
+            let p = lab.dataset.row(i);
+            let mut best = (f32::MAX, usize::MAX);
+            for c in 0..3 {
+                let cc = lab.centers.row(c);
+                let d: f32 = p.iter().zip(cc).map(|(a, b)| (a - b) * (a - b)).sum();
+                if d < best.0 {
+                    best = (d, c);
+                }
+            }
+            assert_eq!(best.1, lab.labels[i]);
+        }
+    }
+
+    #[test]
+    fn rings_radii_separate() {
+        let ds = Rings::new(2, 2, 0.01).generate(200, 3);
+        for i in 0..200 {
+            let p = ds.row(i);
+            let r = (p[0] * p[0] + p[1] * p[1]).sqrt();
+            let expect = (i % 2) as f32 + 1.0;
+            assert!((r - expect).abs() < 0.1, "r={r} expect={expect}");
+        }
+    }
+}

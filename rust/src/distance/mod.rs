@@ -1,0 +1,176 @@
+//! Dissimilarity functions.
+//!
+//! Exemplar-based clustering only requires non-negativity of `d` (§IV of
+//! the paper, citing [4]) — no triangle inequality, no symmetry. The CPU
+//! baselines accept any implementor; the device path is specialized to
+//! squared Euclidean (the function used in all of the paper's
+//! experiments, §V), enforced at evaluator construction.
+
+/// A non-negative dissimilarity between two observations.
+pub trait Dissimilarity: Send + Sync {
+    /// Evaluate `d(a, b) >= 0`. `a` and `b` have identical length.
+    fn eval(&self, a: &[f32], b: &[f32]) -> f32;
+
+    /// Dissimilarity to the auxiliary all-zero exemplar `e0` of
+    /// Definition 5 — overridable when a closed form is cheaper.
+    fn eval_vs_origin(&self, a: &[f32]) -> f32 {
+        // default: materialize nothing, treat b as zeros
+        self.eval_zero_default(a)
+    }
+
+    /// Human-readable name for logs and bench tables.
+    fn name(&self) -> &'static str;
+
+    #[doc(hidden)]
+    fn eval_zero_default(&self, a: &[f32]) -> f32 {
+        let zeros = vec![0.0f32; a.len()];
+        self.eval(a, &zeros)
+    }
+}
+
+/// Squared Euclidean distance `|a - b|^2` — the paper's benchmark
+/// dissimilarity, and the only one with a device kernel.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SqEuclidean;
+
+impl Dissimilarity for SqEuclidean {
+    #[inline]
+    fn eval(&self, a: &[f32], b: &[f32]) -> f32 {
+        let mut acc = 0.0f32;
+        for i in 0..a.len() {
+            let d = a[i] - b[i];
+            acc += d * d;
+        }
+        acc
+    }
+
+    #[inline]
+    fn eval_vs_origin(&self, a: &[f32]) -> f32 {
+        a.iter().map(|x| x * x).sum()
+    }
+
+    fn name(&self) -> &'static str {
+        "sq_euclidean"
+    }
+}
+
+/// Manhattan (L1) distance.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Manhattan;
+
+impl Dissimilarity for Manhattan {
+    #[inline]
+    fn eval(&self, a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum()
+    }
+
+    #[inline]
+    fn eval_vs_origin(&self, a: &[f32]) -> f32 {
+        a.iter().map(|x| x.abs()).sum()
+    }
+
+    fn name(&self) -> &'static str {
+        "manhattan"
+    }
+}
+
+/// Cosine dissimilarity `1 - cos(a, b)`, clamped to `[0, 2]`; zero
+/// vectors are maximally dissimilar to everything non-zero.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CosineDissimilarity;
+
+impl Dissimilarity for CosineDissimilarity {
+    fn eval(&self, a: &[f32], b: &[f32]) -> f32 {
+        let (mut dot, mut na, mut nb) = (0.0f32, 0.0f32, 0.0f32);
+        for i in 0..a.len() {
+            dot += a[i] * b[i];
+            na += a[i] * a[i];
+            nb += b[i] * b[i];
+        }
+        if na == 0.0 || nb == 0.0 {
+            return 1.0;
+        }
+        (1.0 - dot / (na.sqrt() * nb.sqrt())).max(0.0)
+    }
+
+    fn name(&self) -> &'static str {
+        "cosine"
+    }
+}
+
+/// RBF-kernel-induced squared feature-space distance:
+/// `k(a,a) + k(b,b) - 2 k(a,b) = 2 - 2 exp(-gamma |a-b|^2)` — the paper's
+/// "dissimilarity functions constructed from Mercer kernels" (§IV).
+#[derive(Clone, Copy, Debug)]
+pub struct RbfInduced {
+    /// Kernel bandwidth.
+    pub gamma: f32,
+}
+
+impl RbfInduced {
+    /// Create with bandwidth `gamma > 0`.
+    pub fn new(gamma: f32) -> Self {
+        assert!(gamma > 0.0);
+        Self { gamma }
+    }
+}
+
+impl Dissimilarity for RbfInduced {
+    fn eval(&self, a: &[f32], b: &[f32]) -> f32 {
+        let sq = SqEuclidean.eval(a, b);
+        2.0 - 2.0 * (-self.gamma * sq).exp()
+    }
+
+    fn name(&self) -> &'static str {
+        "rbf_induced"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_nonneg_and_identity(d: &dyn Dissimilarity) {
+        let a = [1.0, -2.0, 3.0];
+        let b = [0.5, 0.5, -0.5];
+        assert!(d.eval(&a, &b) >= 0.0, "{} negative", d.name());
+        assert!(d.eval(&a, &a) < 1e-6, "{} self-dissimilarity", d.name());
+    }
+
+    #[test]
+    fn all_nonnegative_and_zero_on_identity() {
+        check_nonneg_and_identity(&SqEuclidean);
+        check_nonneg_and_identity(&Manhattan);
+        check_nonneg_and_identity(&CosineDissimilarity);
+        check_nonneg_and_identity(&RbfInduced::new(0.5));
+    }
+
+    #[test]
+    fn sq_euclidean_matches_manual() {
+        assert_eq!(SqEuclidean.eval(&[0.0, 0.0], &[3.0, 4.0]), 25.0);
+    }
+
+    #[test]
+    fn origin_shortcut_agrees_with_generic() {
+        let a = [1.0, -2.5, 0.25];
+        for d in [&SqEuclidean as &dyn Dissimilarity, &Manhattan] {
+            let generic = d.eval_zero_default(&a);
+            assert!((d.eval_vs_origin(&a) - generic).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn cosine_opposite_vectors() {
+        let v = [1.0, 0.0];
+        let w = [-1.0, 0.0];
+        assert!((CosineDissimilarity.eval(&v, &w) - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rbf_bounded_by_two() {
+        let a = [100.0, -100.0];
+        let b = [-100.0, 100.0];
+        let d = RbfInduced::new(1.0).eval(&a, &b);
+        assert!(d <= 2.0 && d > 1.99);
+    }
+}

@@ -1,0 +1,61 @@
+//! Crate-wide error type. Device, planning and configuration failures are
+//! separated so callers (the coordinator, the benches, the CLI) can react
+//! differently — e.g. a chunk-planner out-of-memory is retryable with a
+//! lower precision or larger budget, a manifest error is not.
+
+use thiserror::Error;
+
+/// All failures produced by exemcl.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// The XLA/PJRT layer failed (compile, transfer or execute).
+    #[error("device error: {0}")]
+    Device(String),
+
+    /// No AOT artifact bucket can serve the requested shape.
+    #[error("no artifact for kernel={kernel} dtype={dtype} d={d} k={k}: {hint}")]
+    NoArtifact {
+        kernel: String,
+        dtype: String,
+        d: usize,
+        k: usize,
+        hint: String,
+    },
+
+    /// The chunk planner cannot fit even one evaluation set (§IV-B3:
+    /// "chunking fails when n_chunk-size equals zero").
+    #[error(
+        "chunking failed: per-set footprint {per_set_bytes}B exceeds free device budget \
+         {free_bytes}B — use lower precision or a larger memory budget"
+    )]
+    ChunkOom { per_set_bytes: usize, free_bytes: usize },
+
+    /// Manifest file is missing or malformed.
+    #[error("manifest error: {0}")]
+    Manifest(String),
+
+    /// Invalid request shape or arguments.
+    #[error("invalid argument: {0}")]
+    InvalidArgument(String),
+
+    /// Configuration file / CLI parsing failure.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// The evaluation service is shut down or its queue is gone.
+    #[error("service unavailable: {0}")]
+    Service(String),
+
+    /// Underlying I/O failure.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Device(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,196 @@
+//! A classic k-d tree for exact nearest-neighbor queries under squared
+//! Euclidean distance (Yianilos-style [26] as referenced by §IV-A).
+//!
+//! Built over *borrowed* point slices; the tree stores indices into the
+//! input. Median-split on the widest-spread dimension; leaves hold up to
+//! `LEAF_SIZE` points scanned linearly.
+
+const LEAF_SIZE: usize = 8;
+
+enum Node {
+    Leaf {
+        /// Indices into the point set.
+        items: Vec<usize>,
+    },
+    Split {
+        dim: usize,
+        value: f32,
+        left: Box<Node>,
+        right: Box<Node>,
+    },
+}
+
+/// Exact NN index over a fixed point set.
+pub struct KdTree<'a> {
+    points: Vec<&'a [f32]>,
+    root: Option<Node>,
+}
+
+impl<'a> KdTree<'a> {
+    /// Build over borrowed rows (O(m log² m)). An empty input yields an
+    /// empty tree whose queries return `None`.
+    pub fn build(points: &[&'a [f32]]) -> Self {
+        let points: Vec<&[f32]> = points.to_vec();
+        let idx: Vec<usize> = (0..points.len()).collect();
+        let root = if idx.is_empty() { None } else { Some(Self::build_node(&points, idx)) };
+        Self { points, root }
+    }
+
+    fn build_node(points: &[&[f32]], mut idx: Vec<usize>) -> Node {
+        if idx.len() <= LEAF_SIZE {
+            return Node::Leaf { items: idx };
+        }
+        let d = points[idx[0]].len();
+        // widest-spread dimension
+        let (mut best_dim, mut best_spread) = (0usize, -1.0f32);
+        for dim in 0..d {
+            let mut lo = f32::MAX;
+            let mut hi = f32::MIN;
+            for &i in &idx {
+                let v = points[i][dim];
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+            if hi - lo > best_spread {
+                best_spread = hi - lo;
+                best_dim = dim;
+            }
+        }
+        if best_spread <= 0.0 {
+            // all points identical along every dimension
+            return Node::Leaf { items: idx };
+        }
+        let mid = idx.len() / 2;
+        idx.select_nth_unstable_by(mid, |&a, &b| {
+            points[a][best_dim].total_cmp(&points[b][best_dim])
+        });
+        let value = points[idx[mid]][best_dim];
+        let right_idx = idx.split_off(mid);
+        Node::Split {
+            dim: best_dim,
+            value,
+            left: Box::new(Self::build_node(points, idx)),
+            right: Box::new(Self::build_node(points, right_idx)),
+        }
+    }
+
+    /// Exact nearest neighbor: `(index, squared distance)`.
+    pub fn nearest_sq(&self, q: &[f32]) -> Option<(usize, f32)> {
+        let root = self.root.as_ref()?;
+        let mut best = (usize::MAX, f32::MAX);
+        self.search(root, q, &mut best);
+        Some(best)
+    }
+
+    fn search(&self, node: &Node, q: &[f32], best: &mut (usize, f32)) {
+        match node {
+            Node::Leaf { items } => {
+                for &i in items {
+                    let p = self.points[i];
+                    let mut d = 0.0f32;
+                    for j in 0..q.len() {
+                        let t = p[j] - q[j];
+                        d += t * t;
+                        if d >= best.1 {
+                            break; // early exit on partial distance
+                        }
+                    }
+                    if d < best.1 {
+                        *best = (i, d);
+                    }
+                }
+            }
+            Node::Split { dim, value, left, right } => {
+                let diff = q[*dim] - value;
+                let (near, far) = if diff < 0.0 { (left, right) } else { (right, left) };
+                self.search(near, q, best);
+                if diff * diff < best.1 {
+                    self.search(far, q, best);
+                }
+            }
+        }
+    }
+
+    /// Number of indexed points.
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    /// True when no points are indexed.
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::UniformCube;
+
+    fn brute(points: &[&[f32]], q: &[f32]) -> (usize, f32) {
+        let mut best = (usize::MAX, f32::MAX);
+        for (i, p) in points.iter().enumerate() {
+            let d: f32 = p.iter().zip(q).map(|(a, b)| (a - b) * (a - b)).sum();
+            if d < best.0 as f32 || d < best.1 {
+                if d < best.1 {
+                    best = (i, d);
+                }
+            }
+        }
+        best
+    }
+
+    #[test]
+    fn matches_brute_force() {
+        for d in [1usize, 2, 5, 16] {
+            let ds = UniformCube::new(d, 1.0).generate(200, 3);
+            let rows: Vec<&[f32]> = (0..ds.n()).map(|i| ds.row(i)).collect();
+            let tree = KdTree::build(&rows[..100]);
+            for q in 100..200 {
+                let got = tree.nearest_sq(ds.row(q)).unwrap();
+                let want = brute(&rows[..100], ds.row(q));
+                assert!(
+                    (got.1 - want.1).abs() < 1e-5,
+                    "d={d} q={q}: tree {got:?} vs brute {want:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn empty_tree_returns_none() {
+        let tree = KdTree::build(&[]);
+        assert!(tree.nearest_sq(&[1.0, 2.0]).is_none());
+        assert!(tree.is_empty());
+    }
+
+    #[test]
+    fn single_point() {
+        let p: &[f32] = &[1.0, 1.0];
+        let tree = KdTree::build(&[p]);
+        let (i, d) = tree.nearest_sq(&[0.0, 0.0]).unwrap();
+        assert_eq!(i, 0);
+        assert!((d - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn duplicate_points_handled() {
+        let p: &[f32] = &[0.5, 0.5];
+        let pts: Vec<&[f32]> = vec![p; 40]; // degenerate: identical points
+        let tree = KdTree::build(&pts);
+        let (_, d) = tree.nearest_sq(&[0.5, 0.5]).unwrap();
+        assert!(d < 1e-9);
+        assert_eq!(tree.len(), 40);
+    }
+
+    #[test]
+    fn query_on_indexed_point_returns_zero() {
+        let ds = UniformCube::new(4, 1.0).generate(64, 9);
+        let rows: Vec<&[f32]> = (0..ds.n()).map(|i| ds.row(i)).collect();
+        let tree = KdTree::build(&rows);
+        for q in 0..64 {
+            let (_, d) = tree.nearest_sq(ds.row(q)).unwrap();
+            assert!(d < 1e-9);
+        }
+    }
+}

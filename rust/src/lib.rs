@@ -1,0 +1,49 @@
+//! # exemcl — optimizer-aware accelerated submodular exemplar clustering
+//!
+//! A three-layer reproduction of *"GPU-Accelerated Optimizer-Aware
+//! Evaluation of Submodular Exemplar Clustering"* (Honysz, Buschjäger,
+//! Morik, 2021):
+//!
+//! * **L1/L2 (build-time Python, `python/compile/`)** — Pallas work-matrix
+//!   and marginal-gain kernels inside JAX graphs, AOT-lowered to HLO text.
+//! * **L3 (this crate)** — the run-time system: dataset substrate, CPU
+//!   baselines (the paper's Algorithm 2, single- and multi-threaded), the
+//!   S_multi packing of §IV-B2, the chunk planner of §IV-B3, a PJRT
+//!   runtime that loads + executes the AOT artifacts, an evaluation
+//!   service (batching, backpressure, metrics), and a suite of submodular
+//!   optimizers (Greedy, LazyGreedy, StochasticGreedy, SieveStreaming,
+//!   SieveStreaming++, ThreeSieves, Salsa) driving it.
+//!
+//! Python never runs on the request path; the binary is self-contained
+//! once `make artifacts` has produced `artifacts/`.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use exemcl::data::{Dataset, synth::GaussianBlobs};
+//! use exemcl::runtime::DeviceEvaluator;
+//! use exemcl::optim::{Greedy, Optimizer, Oracle};
+//!
+//! let ds = GaussianBlobs::new(8, 100, 1.0).generate(20_000, 42);
+//! let eval = DeviceEvaluator::from_dir("artifacts", &ds, Default::default()).unwrap();
+//! let result = Greedy::new(8).maximize(&eval).unwrap();
+//! println!("f(S) = {}", result.value);
+//! ```
+
+pub mod bench;
+pub mod chunk;
+pub mod clustering;
+pub mod config;
+pub mod coordinator;
+pub mod cpu;
+pub mod data;
+pub mod distance;
+pub mod error;
+pub mod index;
+pub mod logging;
+pub mod optim;
+pub mod pack;
+pub mod runtime;
+pub mod testkit;
+
+pub use error::{Error, Result};

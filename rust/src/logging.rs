@@ -1,0 +1,61 @@
+//! Minimal `log`-crate backend (the offline crate set has no env_logger):
+//! level from `EXEMCL_LOG` (`error|warn|info|debug|trace`, default
+//! `info`), timestamps relative to process start, writes to stderr.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+struct StderrLogger {
+    start: Instant,
+    level: log::LevelFilter,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &log::Metadata) -> bool {
+        metadata.level() <= self.level
+    }
+
+    fn log(&self, record: &log::Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = self.start.elapsed();
+        eprintln!(
+            "[{:>9.3}s {:<5} {}] {}",
+            t.as_secs_f64(),
+            record.level(),
+            record.target(),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: OnceLock<StderrLogger> = OnceLock::new();
+
+/// Install the logger (idempotent). Call once from binaries/examples.
+pub fn init() {
+    let level = match std::env::var("EXEMCL_LOG").as_deref() {
+        Ok("error") => log::LevelFilter::Error,
+        Ok("warn") => log::LevelFilter::Warn,
+        Ok("debug") => log::LevelFilter::Debug,
+        Ok("trace") => log::LevelFilter::Trace,
+        Ok("off") => log::LevelFilter::Off,
+        _ => log::LevelFilter::Info,
+    };
+    let logger = LOGGER.get_or_init(|| StderrLogger { start: Instant::now(), level });
+    // set_logger fails if called twice; that's fine (idempotent init)
+    let _ = log::set_logger(logger);
+    log::set_max_level(level);
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logger smoke test");
+    }
+}

@@ -1,0 +1,231 @@
+//! `exemcl` — the CLI leader: build a dataset, run a submodular optimizer
+//! against a chosen evaluation backend, report the clustering.
+//!
+//! ```text
+//! exemcl solve  [--config FILE] [--key=value ...]   run an optimization
+//! exemcl info   [--artifacts DIR]                   list AOT artifacts
+//! exemcl bench-hint                                 how to run the paper benches
+//! ```
+//!
+//! Every `--section.key=value` flag overrides the config file; see
+//! [`exemcl::config::AppConfig`] for the keys.
+
+use std::time::Instant;
+
+use exemcl::chunk::MemoryModel;
+use exemcl::clustering;
+use exemcl::config::{AppConfig, Backend, RawConfig};
+use exemcl::coordinator::EvalService;
+use exemcl::cpu::{MultiThread, SingleThread};
+use exemcl::data::csv::{self, CsvOptions};
+use exemcl::data::synth::{GaussianBlobs, Rings, UniformCube};
+use exemcl::data::Dataset;
+use exemcl::optim::{
+    Greedy, LazyGreedy, Optimizer, Salsa, SieveStreaming, SieveStreamingPP, StochasticGreedy,
+    ThreeSieves,
+};
+use exemcl::runtime::{ArtifactRegistry, DeviceEvaluator, EvalConfig};
+use exemcl::{Error, Result};
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: exemcl <solve|info|bench-hint> [--config FILE] [--section.key=value ...]\n\
+         keys: data.n data.d data.generator data.blobs data.seed data.csv\n\
+               optimizer.name optimizer.k\n\
+               eval.backend (cpu-st|cpu-mt|device) eval.dtype eval.artifacts\n\
+               eval.threads eval.memory_mib"
+    );
+    std::process::exit(2);
+}
+
+fn parse_args(args: &[String]) -> Result<(String, AppConfig)> {
+    if args.is_empty() {
+        usage();
+    }
+    let command = args[0].clone();
+    let mut overrides: Vec<(String, String)> = Vec::new();
+    let mut config_path: Option<String> = None;
+    let mut i = 1;
+    while i < args.len() {
+        let a = &args[i];
+        if a == "--config" {
+            i += 1;
+            config_path = Some(args.get(i).cloned().ok_or_else(|| {
+                Error::Config("--config needs a path".into())
+            })?);
+        } else if let Some(rest) = a.strip_prefix("--") {
+            if let Some((k, v)) = rest.split_once('=') {
+                overrides.push((k.to_string(), v.to_string()));
+            } else {
+                // --key value form
+                i += 1;
+                let v = args.get(i).cloned().ok_or_else(|| {
+                    Error::Config(format!("flag --{rest} needs a value"))
+                })?;
+                overrides.push((rest.to_string(), v));
+            }
+        } else {
+            return Err(Error::Config(format!("unexpected argument {a:?}")));
+        }
+        i += 1;
+    }
+    let mut raw = match config_path {
+        Some(p) => RawConfig::load(&p)?,
+        None => RawConfig::default(),
+    };
+    raw.apply_overrides(&overrides);
+    Ok((command, AppConfig::from_raw(&raw)?))
+}
+
+fn build_dataset(cfg: &AppConfig) -> Result<Dataset> {
+    if let Some(path) = &cfg.csv {
+        return csv::load(path, &CsvOptions::default());
+    }
+    Ok(match cfg.generator.as_str() {
+        "uniform" => UniformCube::new(cfg.d, 1.0).generate(cfg.n, cfg.seed),
+        "blobs" => GaussianBlobs::new(cfg.blobs, cfg.d, 0.5).generate(cfg.n, cfg.seed),
+        "rings" => Rings::new(cfg.blobs.max(2), cfg.d.max(2), 0.1).generate(cfg.n, cfg.seed),
+        other => {
+            return Err(Error::Config(format!(
+                "unknown generator {other:?} (uniform|blobs|rings)"
+            )))
+        }
+    })
+}
+
+fn build_optimizer(cfg: &AppConfig) -> Result<Box<dyn Optimizer>> {
+    Ok(match cfg.optimizer.as_str() {
+        "greedy" => Box::new(Greedy::new(cfg.k)),
+        "lazy" => Box::new(LazyGreedy::new(cfg.k)),
+        "stochastic" => Box::new(StochasticGreedy::new(cfg.k, 0.1, cfg.seed)),
+        "sieve" => Box::new(SieveStreaming::new(cfg.k, 0.1, cfg.seed)),
+        "sieve++" => Box::new(SieveStreamingPP::new(cfg.k, 0.1, cfg.seed)),
+        "threesieves" => Box::new(ThreeSieves::new(cfg.k, 0.1, 500, cfg.seed)),
+        "salsa" => Box::new(Salsa::new(cfg.k, 0.2, cfg.seed)),
+        other => {
+            return Err(Error::Config(format!(
+                "unknown optimizer {other:?} \
+                 (greedy|lazy|stochastic|sieve|sieve++|threesieves|salsa)"
+            )))
+        }
+    })
+}
+
+fn cmd_solve(cfg: &AppConfig) -> Result<()> {
+    let ds = build_dataset(cfg)?;
+    println!(
+        "dataset: n={} d={} (generator={})",
+        ds.n(),
+        ds.d(),
+        cfg.csv.as_deref().unwrap_or(&cfg.generator)
+    );
+    let optimizer = build_optimizer(cfg)?;
+    println!("optimizer: {}", optimizer.name());
+
+    let t0 = Instant::now();
+    let result = match cfg.backend {
+        Backend::CpuSt => {
+            let oracle = SingleThread::new(ds.clone());
+            println!("backend: {}", exemcl::optim::Oracle::name(&oracle));
+            optimizer.maximize(&oracle)?
+        }
+        Backend::CpuMt => {
+            let oracle = MultiThread::new(ds.clone(), cfg.threads);
+            println!("backend: {}", exemcl::optim::Oracle::name(&oracle));
+            optimizer.maximize(&oracle)?
+        }
+        Backend::Device => {
+            // the service pins the non-Send device to its executor thread
+            let artifacts = cfg.artifacts.clone();
+            let dtype = cfg.dtype.clone();
+            let mem = MemoryModel {
+                total_bytes: cfg.memory_mib * (1 << 20),
+                bytes_per_elem: if dtype == "f32" { 4 } else { 2 },
+                ..MemoryModel::default()
+            };
+            let ds2 = ds.clone();
+            let svc = EvalService::spawn(
+                move || {
+                    DeviceEvaluator::from_dir(
+                        &artifacts,
+                        &ds2,
+                        EvalConfig { dtype, memory: mem, ..EvalConfig::default() },
+                    )
+                },
+                exemcl::coordinator::DEFAULT_QUEUE_CAPACITY,
+            )?;
+            let handle = svc.handle();
+            println!("backend: {}", exemcl::optim::Oracle::name(&handle));
+            let r = optimizer.maximize(&handle)?;
+            println!("service: {}", svc.metrics().summary());
+            svc.shutdown();
+            r
+        }
+    };
+    let elapsed = t0.elapsed();
+
+    println!("\nf(S) = {:.6}", result.value);
+    println!("exemplars: {:?}", result.exemplars);
+    if !result.curve.is_empty() {
+        let curve: Vec<String> = result.curve.iter().map(|v| format!("{v:.4}")).collect();
+        println!("curve: [{}]", curve.join(", "));
+    }
+    println!("oracle evaluations: {}", result.evaluations);
+    println!("wall-clock: {:.3}s", elapsed.as_secs_f64());
+
+    if !result.exemplars.is_empty() {
+        let c = clustering::assign(&ds, &result.exemplars);
+        println!(
+            "clustering: k-medoids loss = {:.6}, sizes = {:?}",
+            c.loss,
+            clustering::cluster_sizes(&c.labels, result.exemplars.len())
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info(cfg: &AppConfig) -> Result<()> {
+    let reg = ArtifactRegistry::open(&cfg.artifacts)?;
+    println!("artifact directory: {}", cfg.artifacts);
+    println!("{:<12} {:<5} {:>5} {:>5} {:>5} {:>5} {:>5}", "kernel", "dtype", "T", "D", "K", "L", "M");
+    for m in reg.metas() {
+        let fmt = |x: Option<usize>| x.map(|v| v.to_string()).unwrap_or_else(|| "-".into());
+        println!(
+            "{:<12} {:<5} {:>5} {:>5} {:>5} {:>5} {:>5}",
+            m.kernel, m.dtype, m.t, m.d, fmt(m.k), fmt(m.l), fmt(m.m)
+        );
+    }
+    println!("total: {} artifacts", reg.metas().len());
+    Ok(())
+}
+
+fn main() {
+    exemcl::logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (command, cfg) = match parse_args(&args) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("error: {e}");
+            usage();
+        }
+    };
+    let r = match command.as_str() {
+        "solve" => cmd_solve(&cfg),
+        "info" => cmd_info(&cfg),
+        "bench-hint" => {
+            println!(
+                "paper experiments: cargo bench --bench table1|fig3|fig4\n\
+                 ablations:         cargo bench --bench ablation_layout|ablation_chunking|ablation_precision|greedy_e2e\n\
+                 scale:             EXEMCL_BENCH_SCALE=quick|default|full"
+            );
+            Ok(())
+        }
+        _ => {
+            usage();
+        }
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,298 @@
+//! GreeDi — two-round distributed greedy (Mirzasoleiman et al., NIPS'13).
+//!
+//! The ground set is partitioned across `workers`; each worker runs
+//! Greedy to `k` on its partition (round 1), the union of the partial
+//! solutions becomes the candidate pool for a final Greedy to `k`
+//! (round 2). Guarantee: `f(S) >= (1-1/e)²/min(m,k)` of OPT in general,
+//! near-greedy in practice on random partitions.
+//!
+//! This is the multi-client showcase for the coordinator: round 1 runs
+//! each worker on its own OS thread against a cloned
+//! [`crate::coordinator::ServiceHandle`], so partition greedies interleave
+//! on the device executor and exercise queueing/batching. Round-1 gains
+//! are computed *restricted to the worker's partition* via
+//! [`PartitionOracle`], which masks foreign points out of the dmin state.
+
+use super::greedy::Greedy;
+use super::oracle::{DminState, Oracle};
+use super::{OptimResult, Optimizer};
+use crate::data::{Dataset, Rng};
+use crate::{Error, Result};
+
+/// Restrict an oracle to a subset of the ground set: the k-medoids sums
+/// run only over partition members (loss terms of foreign points are
+/// pinned to zero via a masked dmin state).
+pub struct PartitionOracle<'a, O: Oracle + ?Sized> {
+    inner: &'a O,
+    /// membership[i] == true iff ground point i belongs to the partition.
+    membership: Vec<bool>,
+    members: Vec<usize>,
+}
+
+impl<'a, O: Oracle + ?Sized> PartitionOracle<'a, O> {
+    /// Wrap `inner`, keeping only `members` of its ground set.
+    pub fn new(inner: &'a O, members: Vec<usize>) -> Result<Self> {
+        let n = inner.dataset().n();
+        let mut membership = vec![false; n];
+        for &m in &members {
+            if m >= n {
+                return Err(Error::InvalidArgument(format!("member {m} out of range")));
+            }
+            membership[m] = true;
+        }
+        Ok(Self { inner, membership, members })
+    }
+
+    fn mask_state(&self, state: &DminState) -> DminState {
+        // foreign points contribute 0 improvement: set their dmin to 0
+        let mut dmin = state.dmin.clone();
+        for (i, keep) in self.membership.iter().enumerate() {
+            if !keep {
+                dmin[i] = 0.0;
+            }
+        }
+        DminState { dmin, exemplars: state.exemplars.clone() }
+    }
+}
+
+impl<O: Oracle + ?Sized> Oracle for PartitionOracle<'_, O> {
+    fn dataset(&self) -> &Dataset {
+        self.inner.dataset()
+    }
+
+    fn eval_sets(&self, sets: &[Vec<usize>]) -> Result<Vec<f32>> {
+        // evaluate on the full oracle, then correct is impossible without
+        // a partition-restricted kernel; partition evaluation goes
+        // through the state path instead.
+        let mut out = Vec::with_capacity(sets.len());
+        for set in sets {
+            let mut state = self.init_state();
+            for &e in set {
+                self.commit(&mut state, e)?;
+            }
+            out.push(self.f_of_state(&state));
+        }
+        Ok(out)
+    }
+
+    fn init_state(&self) -> DminState {
+        self.mask_state(&self.inner.init_state())
+    }
+
+    fn marginal_gains(&self, state: &DminState, candidates: &[usize]) -> Result<Vec<f32>> {
+        // masked dmin already zeroes foreign improvements
+        self.inner.marginal_gains(state, candidates)
+    }
+
+    fn commit(&self, state: &mut DminState, idx: usize) -> Result<()> {
+        self.inner.commit(state, idx)?;
+        // re-mask: commit may have lowered foreign entries from 0 upward?
+        // (no — commit only lowers; foreign entries stay 0)
+        Ok(())
+    }
+
+    fn l0_sum(&self) -> f64 {
+        // L({e0}) restricted to the partition
+        let ds = self.inner.dataset();
+        self.members
+            .iter()
+            .map(|&i| ds.row(i).iter().map(|x| (x * x) as f64).sum::<f64>())
+            .sum()
+    }
+
+    fn name(&self) -> String {
+        format!("partition[{}]/{}", self.members.len(), self.inner.name())
+    }
+}
+
+/// Two-round distributed greedy over `workers` random partitions.
+pub struct GreeDi {
+    k: usize,
+    workers: usize,
+    seed: u64,
+}
+
+impl GreeDi {
+    /// GreeDi with `workers` partitions (>= 1).
+    pub fn new(k: usize, workers: usize, seed: u64) -> Self {
+        Self { k, workers: workers.max(1), seed }
+    }
+
+    /// Round 1 on a single thread (for non-`Sync` oracles); round 2 on
+    /// the same oracle.
+    pub fn run_local(&self, oracle: &dyn Oracle) -> Result<OptimResult> {
+        let partitions = self.partition(oracle.dataset().n());
+        let mut pool = Vec::new();
+        let mut evaluations = 0u64;
+        for members in partitions {
+            let part = PartitionOracle::new(oracle, members)?;
+            let r = Greedy::new(self.k).maximize(&part)?;
+            evaluations += r.evaluations;
+            pool.extend(r.exemplars);
+        }
+        self.final_round(oracle, pool, evaluations)
+    }
+
+    /// Round 1 with one OS thread per partition — requires a `Send +
+    /// Sync + Clone` oracle handle (the coordinator's `ServiceHandle`).
+    pub fn run_threaded<O>(&self, oracle: &O) -> Result<OptimResult>
+    where
+        O: Oracle + Clone + Send + Sync + 'static,
+    {
+        let partitions = self.partition(oracle.dataset().n());
+        let k = self.k;
+        let mut pool = Vec::new();
+        let mut evaluations = 0u64;
+        let results: Vec<Result<OptimResult>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = partitions
+                .into_iter()
+                .map(|members| {
+                    let o = oracle.clone();
+                    scope.spawn(move || {
+                        let part = PartitionOracle::new(&o, members)?;
+                        Greedy::new(k).maximize(&part)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("worker panicked"))
+                .collect()
+        });
+        for r in results {
+            let r = r?;
+            evaluations += r.evaluations;
+            pool.extend(r.exemplars);
+        }
+        self.final_round(oracle, pool, evaluations)
+    }
+
+    fn partition(&self, n: usize) -> Vec<Vec<usize>> {
+        let mut order: Vec<usize> = (0..n).collect();
+        Rng::new(self.seed).shuffle(&mut order);
+        let mut parts = vec![Vec::new(); self.workers];
+        for (i, idx) in order.into_iter().enumerate() {
+            parts[i % self.workers].push(idx);
+        }
+        parts.retain(|p| !p.is_empty());
+        parts
+    }
+
+    fn final_round(
+        &self,
+        oracle: &dyn Oracle,
+        mut pool: Vec<usize>,
+        mut evaluations: u64,
+    ) -> Result<OptimResult> {
+        pool.sort_unstable();
+        pool.dedup();
+        // round 2: greedy over the pooled candidates on the full oracle
+        let mut state = oracle.init_state();
+        let mut curve = Vec::with_capacity(self.k);
+        let mut remaining = pool;
+        for _ in 0..self.k.min(remaining.len().max(1)) {
+            if remaining.is_empty() {
+                break;
+            }
+            let gains = oracle.marginal_gains(&state, &remaining)?;
+            evaluations += gains.len() as u64;
+            let best = gains
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(i, _)| i)
+                .expect("non-empty pool");
+            let chosen = remaining.swap_remove(best);
+            oracle.commit(&mut state, chosen)?;
+            curve.push(oracle.f_of_state(&state));
+        }
+        Ok(OptimResult {
+            value: *curve.last().unwrap_or(&0.0),
+            exemplars: state.exemplars,
+            curve,
+            evaluations,
+        })
+    }
+}
+
+impl Optimizer for GreeDi {
+    fn maximize(&self, oracle: &dyn Oracle) -> Result<OptimResult> {
+        self.run_local(oracle)
+    }
+
+    fn name(&self) -> String {
+        format!("greedi(k={},workers={})", self.k, self.workers)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpu::SingleThread;
+    use crate::data::synth::GaussianBlobs;
+
+    fn oracle() -> SingleThread {
+        SingleThread::new(GaussianBlobs::new(4, 3, 0.3).generate(120, 23))
+    }
+
+    #[test]
+    fn partitions_cover_and_disjoint() {
+        let g = GreeDi::new(3, 4, 1);
+        let parts = g.partition(103);
+        let mut seen = vec![false; 103];
+        for p in &parts {
+            for &i in p {
+                assert!(!seen[i], "duplicate {i}");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+        assert_eq!(parts.len(), 4);
+    }
+
+    #[test]
+    fn partition_oracle_restricts_l0() {
+        let o = oracle();
+        let members: Vec<usize> = (0..30).collect();
+        let p = PartitionOracle::new(&o, members.clone()).unwrap();
+        let full = o.l0_sum();
+        let part = p.l0_sum();
+        assert!(part < full);
+        // masked init state has zero dmin outside the partition
+        let st = p.init_state();
+        assert!(st.dmin[31..].iter().all(|&x| x == 0.0));
+        assert!(st.dmin[..30].iter().any(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn partition_gains_ignore_foreign_points() {
+        let o = oracle();
+        let p = PartitionOracle::new(&o, (0..40).collect()).unwrap();
+        let st = p.init_state();
+        // a candidate only near foreign points gains ~only its own cover
+        let gains = p.marginal_gains(&st, &[0, 100]).unwrap();
+        let full_gains = o.marginal_gains(&o.init_state(), &[0, 100]).unwrap();
+        assert!(gains[1] <= full_gains[1] + 1e-5);
+    }
+
+    #[test]
+    fn greedi_single_worker_equals_greedy() {
+        let o = oracle();
+        let g1 = GreeDi::new(4, 1, 5).maximize(&o).unwrap();
+        let plain = Greedy::new(4).maximize(&o).unwrap();
+        assert!((g1.value - plain.value).abs() < 1e-3 * plain.value.abs().max(1.0),
+            "greedi(1) {} vs greedy {}", g1.value, plain.value);
+    }
+
+    #[test]
+    fn greedi_close_to_centralized_greedy() {
+        let o = oracle();
+        let plain = Greedy::new(4).maximize(&o).unwrap();
+        for workers in [2usize, 4] {
+            let g = GreeDi::new(4, workers, 7).maximize(&o).unwrap();
+            assert!(g.value >= 0.8 * plain.value,
+                "greedi({workers}) {} vs greedy {}", g.value, plain.value);
+            assert!(g.exemplars.len() <= 4);
+        }
+    }
+}

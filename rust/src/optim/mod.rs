@@ -1,0 +1,44 @@
+//! Submodular optimizers (§III of the paper plus the streaming family of
+//! §II: SieveStreaming [4], SieveStreaming++ [19], ThreeSieves [18],
+//! Salsa [20]).
+//!
+//! All optimizers drive an [`Oracle`] — CPU baseline, device evaluator or
+//! the batched coordinator service — so every experiment can swap the
+//! evaluation backend without touching optimizer code. This is the
+//! "optimizer-aware" seam of the paper: optimizers emit *batches* of
+//! candidate evaluations (`S_multi`), never one-at-a-time queries.
+
+pub mod greedi;
+pub mod greedy;
+pub mod oracle;
+pub mod sieve;
+
+pub use greedi::{GreeDi, PartitionOracle};
+pub use greedy::{Greedy, GreedyMode, LazyGreedy, StochasticGreedy};
+pub use oracle::{DminState, Oracle};
+pub use sieve::{Salsa, SieveStreaming, SieveStreamingPP, ThreeSieves};
+
+use crate::Result;
+
+/// The outcome of a maximization run.
+#[derive(Clone, Debug)]
+pub struct OptimResult {
+    /// Selected exemplar indices, in selection order.
+    pub exemplars: Vec<usize>,
+    /// Final function value `f(S)`.
+    pub value: f32,
+    /// `f(S_i)` after every selection — the loss-curve the end-to-end
+    /// example logs.
+    pub curve: Vec<f32>,
+    /// Total oracle set-evaluations / marginal-gain entries computed.
+    pub evaluations: u64,
+}
+
+/// A cardinality-constrained submodular maximizer (problem (2)).
+pub trait Optimizer {
+    /// Run maximization against `oracle`, selecting at most `k` exemplars.
+    fn maximize(&self, oracle: &dyn Oracle) -> Result<OptimResult>;
+
+    /// Human-readable name for logs and benches.
+    fn name(&self) -> String;
+}

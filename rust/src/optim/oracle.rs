@@ -1,0 +1,90 @@
+//! The evaluation oracle — the interface every optimizer drives.
+//!
+//! §IV-A of the paper distinguishes the *single set* problem from the
+//! *multiset* problem `S_multi = {S_1, ..., S_l}` that real optimizers
+//! generate each step. The oracle therefore exposes both batched set
+//! evaluation and the optimizer-aware marginal-gain fast path built on a
+//! cached per-point minimum-distance state ([`DminState`]).
+//!
+//! Implementors: [`crate::cpu::SingleThread`], [`crate::cpu::MultiThread`]
+//! (Algorithm 2), [`crate::runtime::DeviceEvaluator`] (the AOT/PJRT path)
+//! and [`crate::coordinator::ServiceHandle`] (the batched service).
+
+use crate::data::Dataset;
+use crate::Result;
+
+/// Cached optimizer state: for every ground point the squared distance to
+/// its nearest committed exemplar, with the auxiliary exemplar `e0 = 0`
+/// folded in (`dmin_i <= |v_i|^2` always).
+#[derive(Clone, Debug)]
+pub struct DminState {
+    /// Per-ground-point minimum squared distance.
+    pub dmin: Vec<f32>,
+    /// Indices of committed exemplars, in commit order.
+    pub exemplars: Vec<usize>,
+}
+
+impl DminState {
+    /// The current function value `f(S)` this state encodes:
+    /// `(L0*n - sum dmin) / n` (Definition 5).
+    pub fn f_value(&self, l0_sum: f64) -> f32 {
+        let covered: f64 = self.dmin.iter().map(|&x| x as f64).sum();
+        ((l0_sum - covered) / self.dmin.len() as f64) as f32
+    }
+
+    /// Number of committed exemplars.
+    pub fn len(&self) -> usize {
+        self.exemplars.len()
+    }
+
+    /// True if no exemplar has been committed.
+    pub fn is_empty(&self) -> bool {
+        self.exemplars.is_empty()
+    }
+}
+
+/// Batched evaluation oracle for one ground set `V`.
+///
+/// Deliberately **not** `Send + Sync`: the PJRT client wraps
+/// non-thread-safe handles, so the device evaluator is pinned to one
+/// thread. Cross-thread access goes through
+/// [`crate::coordinator::ServiceHandle`], which is a `Send + Sync`
+/// implementor backed by the executor thread.
+pub trait Oracle {
+    /// The ground set being summarized.
+    fn dataset(&self) -> &Dataset;
+
+    /// Evaluate `f(S)` (Definition 5) for every index set in `sets`.
+    ///
+    /// This is the paper's multiset problem: all sets are shipped in one
+    /// batch (CPU implementations loop, the device path packs a work
+    /// matrix per §IV-B).
+    fn eval_sets(&self, sets: &[Vec<usize>]) -> Result<Vec<f32>>;
+
+    /// Fresh optimizer state: `dmin_i = d(v_i, e0) = |v_i|^2`, no
+    /// exemplars.
+    fn init_state(&self) -> DminState {
+        DminState { dmin: self.dataset().sq_norms(), exemplars: Vec::new() }
+    }
+
+    /// Marginal gains `f(S ∪ {c}) - f(S)` for every candidate index,
+    /// against the cached state (O(n·m·d) — the optimizer-aware path).
+    fn marginal_gains(&self, state: &DminState, candidates: &[usize]) -> Result<Vec<f32>>;
+
+    /// Commit exemplar `idx` into the state (lowers `dmin` pointwise).
+    fn commit(&self, state: &mut DminState, idx: usize) -> Result<()>;
+
+    /// `L({e0}) * n` — the constant of Definition 5, used to turn partial
+    /// sums into function values.
+    fn l0_sum(&self) -> f64 {
+        self.dataset().l0_sum()
+    }
+
+    /// `f(S)` for the committed state.
+    fn f_of_state(&self, state: &DminState) -> f32 {
+        state.f_value(self.l0_sum())
+    }
+
+    /// Short name for logs and bench tables.
+    fn name(&self) -> String;
+}

@@ -1,0 +1,658 @@
+//! Streaming submodular maximizers: SieveStreaming [4],
+//! SieveStreaming++ [19], ThreeSieves [18] and a Salsa-style multi-policy
+//! ensemble [20].
+//!
+//! All of them process the stream in **windows** and evaluate whole
+//! windows of candidates per sieve through [`Oracle::marginal_gains`] —
+//! exactly the multiset workload (§IV-A) the paper's batched evaluation
+//! targets. Windowing is purely an evaluation-batching device: the
+//! algorithms' item-by-item semantics are preserved exactly, because
+//!
+//! * windows are split into **segments** at every item where the best
+//!   singleton value `m` grows (sieve birth happens at that item, as in
+//!   the per-item originals), and
+//! * after an acceptance mutates a sieve's state, the remainder of the
+//!   window is re-evaluated against the fresh state (acceptances are
+//!   bounded by `k` per sieve, so the re-evaluation cost is small).
+
+use super::oracle::{DminState, Oracle};
+use super::{OptimResult, Optimizer};
+use crate::data::Rng;
+use crate::{Error, Result};
+
+/// Default stream-window size (candidates per marginal-gain batch).
+pub const DEFAULT_WINDOW: usize = 256;
+
+/// One sieve: a capped set, its cached dmin state and current value.
+struct Sieve {
+    threshold: f64,
+    state: DminState,
+    value: f32,
+}
+
+impl Sieve {
+    fn new(threshold: f64, oracle: &dyn Oracle) -> Self {
+        Self { threshold, state: oracle.init_state(), value: 0.0 }
+    }
+
+    /// The SieveStreaming accept rule for guess `v = threshold`:
+    /// `gain >= (v/2 - f(S)) / (k - |S|)`.
+    fn accept_rule(&self, gain: f32, k: usize) -> bool {
+        let remaining = k - self.state.len();
+        if remaining == 0 {
+            return false;
+        }
+        (gain as f64) >= (self.threshold / 2.0 - self.value as f64) / remaining as f64
+    }
+}
+
+/// Geometric threshold grid `(1+eps)^j` intersecting `[lo, hi]`.
+fn threshold_grid(eps: f64, lo: f64, hi: f64) -> Vec<f64> {
+    let mut out = Vec::new();
+    if lo <= 0.0 || hi <= 0.0 || hi < lo {
+        return out;
+    }
+    let base = 1.0 + eps;
+    let mut j = (lo.ln() / base.ln()).floor() as i64;
+    loop {
+        let v = base.powi(j as i32);
+        if v > hi * base {
+            break;
+        }
+        if v >= lo / base {
+            out.push(v);
+        }
+        j += 1;
+        if out.len() > 10_000 {
+            break; // guard against degenerate eps
+        }
+    }
+    out
+}
+
+/// Split a window into maximal runs over which the running singleton
+/// maximum `m` is constant. Returns `(start, end, m_after_start)` ranges;
+/// the item that raises `m` *begins* a new segment, matching the per-item
+/// originals where sieve birth precedes the accept test of that item.
+fn m_segments(singles: &[f32], m: &mut f64) -> Vec<(usize, usize, f64)> {
+    let mut out = Vec::new();
+    let mut seg_start = 0usize;
+    for (i, &s) in singles.iter().enumerate() {
+        if (s as f64) > *m {
+            if i > seg_start {
+                out.push((seg_start, i, *m));
+            }
+            *m = s as f64;
+            seg_start = i;
+        }
+    }
+    if seg_start < singles.len() {
+        out.push((seg_start, singles.len(), *m));
+    }
+    out
+}
+
+/// Feed `items` through one sieve, committing accepts and re-evaluating
+/// the tail after each accept (exact sequential semantics).
+fn feed_sieve(
+    oracle: &dyn Oracle,
+    sieve: &mut Sieve,
+    items: &[usize],
+    k: usize,
+    evaluations: &mut u64,
+) -> Result<()> {
+    let mut pos = 0;
+    while pos < items.len() && sieve.state.len() < k {
+        let tail = &items[pos..];
+        let gains = oracle.marginal_gains(&sieve.state, tail)?;
+        *evaluations += gains.len() as u64;
+        let mut accepted = None;
+        for (off, (&item, &gain)) in tail.iter().zip(&gains).enumerate() {
+            if sieve.accept_rule(gain, k) && !sieve.state.exemplars.contains(&item) {
+                accepted = Some((off, item));
+                break;
+            }
+        }
+        match accepted {
+            Some((off, item)) => {
+                oracle.commit(&mut sieve.state, item)?;
+                sieve.value = oracle.f_of_state(&sieve.state);
+                pos += off + 1;
+            }
+            None => break,
+        }
+    }
+    Ok(())
+}
+
+fn shuffled_order(n: usize, seed: u64) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..n).collect();
+    Rng::new(seed).shuffle(&mut order);
+    order
+}
+
+fn result_from_best(best: Option<&Sieve>, evaluations: u64) -> OptimResult {
+    match best {
+        Some(s) => OptimResult {
+            exemplars: s.state.exemplars.clone(),
+            value: s.value,
+            curve: vec![s.value],
+            evaluations,
+        },
+        None => OptimResult { exemplars: vec![], value: 0.0, curve: vec![], evaluations },
+    }
+}
+
+/// Badanidiyuru et al.'s SieveStreaming: one sieve per OPT guess
+/// `(1+eps)^j ∈ [m, 2·k·m]` with `m` the best singleton seen so far;
+/// guarantees `(1/2 - eps)·OPT` in one pass.
+pub struct SieveStreaming {
+    k: usize,
+    eps: f64,
+    window: usize,
+    seed: u64,
+}
+
+impl SieveStreaming {
+    /// SieveStreaming selecting at most `k` with accuracy `eps`.
+    pub fn new(k: usize, eps: f64, seed: u64) -> Self {
+        assert!(eps > 0.0 && eps < 1.0);
+        Self { k, eps, window: DEFAULT_WINDOW, seed }
+    }
+
+    /// Override the stream window (batch) size.
+    pub fn with_window(mut self, window: usize) -> Self {
+        self.window = window.max(1);
+        self
+    }
+
+    fn refresh_sieves(&self, sieves: &mut Vec<Sieve>, m: f64, oracle: &dyn Oracle) {
+        let grid = threshold_grid(self.eps, m, 2.0 * self.k as f64 * m);
+        sieves.retain(|s| s.threshold >= m / (1.0 + self.eps));
+        for v in grid {
+            if !sieves.iter().any(|s| (s.threshold - v).abs() < 1e-12) {
+                sieves.push(Sieve::new(v, oracle));
+            }
+        }
+    }
+
+    /// Run over an explicit stream order.
+    pub fn run_stream(&self, oracle: &dyn Oracle, stream: &[usize]) -> Result<OptimResult> {
+        if self.k == 0 {
+            return Err(Error::InvalidArgument("k must be positive".into()));
+        }
+        let empty = oracle.init_state();
+        let mut sieves: Vec<Sieve> = Vec::new();
+        let mut m = 0.0f64;
+        let mut evaluations = 0u64;
+
+        for window in stream.chunks(self.window) {
+            let singles = oracle.marginal_gains(&empty, window)?;
+            evaluations += singles.len() as u64;
+            for (start, end, seg_m) in m_segments(&singles, &mut m) {
+                if seg_m <= 0.0 {
+                    continue;
+                }
+                self.refresh_sieves(&mut sieves, seg_m, oracle);
+                for sieve in sieves.iter_mut() {
+                    feed_sieve(oracle, sieve, &window[start..end], self.k, &mut evaluations)?;
+                }
+            }
+        }
+        let best = sieves.iter().max_by(|a, b| a.value.total_cmp(&b.value));
+        Ok(result_from_best(best, evaluations))
+    }
+}
+
+impl Optimizer for SieveStreaming {
+    fn maximize(&self, oracle: &dyn Oracle) -> Result<OptimResult> {
+        self.run_stream(oracle, &shuffled_order(oracle.dataset().n(), self.seed))
+    }
+
+    fn name(&self) -> String {
+        format!("sieve-streaming(k={},eps={})", self.k, self.eps)
+    }
+}
+
+/// Kazemi et al.'s SieveStreaming++: like SieveStreaming but prunes every
+/// sieve whose guess falls below the best value already achieved (LB),
+/// shrinking memory to `O(k/eps)` without changing the guarantee.
+pub struct SieveStreamingPP {
+    k: usize,
+    eps: f64,
+    window: usize,
+    seed: u64,
+}
+
+impl SieveStreamingPP {
+    /// SieveStreaming++ selecting at most `k` with accuracy `eps`.
+    pub fn new(k: usize, eps: f64, seed: u64) -> Self {
+        assert!(eps > 0.0 && eps < 1.0);
+        Self { k, eps, window: DEFAULT_WINDOW, seed }
+    }
+
+    /// Override the stream window (batch) size.
+    pub fn with_window(mut self, window: usize) -> Self {
+        self.window = window.max(1);
+        self
+    }
+
+    /// Run over an explicit stream order.
+    pub fn run_stream(&self, oracle: &dyn Oracle, stream: &[usize]) -> Result<OptimResult> {
+        if self.k == 0 {
+            return Err(Error::InvalidArgument("k must be positive".into()));
+        }
+        let empty = oracle.init_state();
+        let mut sieves: Vec<Sieve> = Vec::new();
+        let mut m = 0.0f64;
+        let mut lb = 0.0f64; // best achieved f so far
+        let mut evaluations = 0u64;
+
+        for window in stream.chunks(self.window) {
+            let singles = oracle.marginal_gains(&empty, window)?;
+            evaluations += singles.len() as u64;
+            for (start, end, seg_m) in m_segments(&singles, &mut m) {
+                if seg_m <= 0.0 {
+                    continue;
+                }
+                // ++ pruning: viable guesses live in [max(m, LB), 2·k·m]
+                let lo = seg_m.max(lb);
+                let grid = threshold_grid(self.eps, lo, 2.0 * self.k as f64 * seg_m);
+                sieves.retain(|s| s.threshold >= lo / (1.0 + self.eps));
+                for v in grid {
+                    if !sieves.iter().any(|s| (s.threshold - v).abs() < 1e-12) {
+                        sieves.push(Sieve::new(v, oracle));
+                    }
+                }
+                for sieve in sieves.iter_mut() {
+                    feed_sieve(oracle, sieve, &window[start..end], self.k, &mut evaluations)?;
+                    lb = lb.max(sieve.value as f64);
+                }
+            }
+        }
+        let best = sieves.iter().max_by(|a, b| a.value.total_cmp(&b.value));
+        Ok(result_from_best(best, evaluations))
+    }
+
+    /// Number of live guesses for a given `(m, lb)` — exposed for the
+    /// memory tests.
+    pub fn live_sieves(&self, m: f64, lb: f64) -> usize {
+        threshold_grid(self.eps, m.max(lb), 2.0 * self.k as f64 * m).len()
+    }
+}
+
+impl Optimizer for SieveStreamingPP {
+    fn maximize(&self, oracle: &dyn Oracle) -> Result<OptimResult> {
+        self.run_stream(oracle, &shuffled_order(oracle.dataset().n(), self.seed))
+    }
+
+    fn name(&self) -> String {
+        format!("sieve-streaming++(k={},eps={})", self.k, self.eps)
+    }
+}
+
+/// Buschjäger et al.'s ThreeSieves: a *single* set and a single OPT guess
+/// that is lowered after `t` consecutive rejections — O(k) memory and the
+/// fewest evaluations of the family, with a high-probability guarantee.
+pub struct ThreeSieves {
+    k: usize,
+    eps: f64,
+    /// Confidence budget: rejections before lowering the guess.
+    t: usize,
+    window: usize,
+    seed: u64,
+}
+
+impl ThreeSieves {
+    /// ThreeSieves with confidence budget `t` (the paper suggests ~500 ≫ k).
+    pub fn new(k: usize, eps: f64, t: usize, seed: u64) -> Self {
+        assert!(eps > 0.0 && eps < 1.0);
+        Self { k, eps, t: t.max(1), window: DEFAULT_WINDOW, seed }
+    }
+
+    /// Override the stream window (batch) size.
+    pub fn with_window(mut self, window: usize) -> Self {
+        self.window = window.max(1);
+        self
+    }
+
+    /// Run over an explicit stream order.
+    pub fn run_stream(&self, oracle: &dyn Oracle, stream: &[usize]) -> Result<OptimResult> {
+        if self.k == 0 {
+            return Err(Error::InvalidArgument("k must be positive".into()));
+        }
+        let empty = oracle.init_state();
+        let mut state = oracle.init_state();
+        let mut value = 0.0f32;
+        let mut m = 0.0f64;
+        let mut last_m = 0.0f64; // m value tau was last derived from
+        let mut tau = 0.0f64; // current OPT guess
+        let mut rejects = 0usize;
+        let mut evaluations = 0u64;
+        let mut curve = Vec::new();
+
+        for window in stream.chunks(self.window) {
+            let singles = oracle.marginal_gains(&empty, window)?;
+            evaluations += singles.len() as u64;
+            for (start, end, seg_m) in m_segments(&singles, &mut m) {
+                let _ = start;
+                if seg_m <= 0.0 {
+                    continue;
+                }
+                if seg_m > last_m {
+                    // m grew at this item: reset the guess optimistically.
+                    // (only genuine m growth resets tau — tau legitimately
+                    // decays below k·m through rejections)
+                    last_m = seg_m;
+                    tau = self.k as f64 * seg_m;
+                    rejects = 0;
+                }
+                let items = &window[start..end];
+                let mut pos = 0;
+                while pos < items.len() && state.len() < self.k {
+                    let tail = &items[pos..];
+                    let gains = oracle.marginal_gains(&state, tail)?;
+                    evaluations += gains.len() as u64;
+                    let mut consumed = tail.len();
+                    for (off, (&item, &gain)) in tail.iter().zip(&gains).enumerate() {
+                        let remaining = self.k - state.len();
+                        let need = (tau - value as f64) / remaining as f64;
+                        if (gain as f64) >= need && !state.exemplars.contains(&item) {
+                            oracle.commit(&mut state, item)?;
+                            value = oracle.f_of_state(&state);
+                            curve.push(value);
+                            rejects = 0;
+                            consumed = off + 1; // re-evaluate the rest fresh
+                            break;
+                        }
+                        // single test per item; rejection may lower the
+                        // guess for *subsequent* items (original semantics)
+                        rejects += 1;
+                        if rejects >= self.t {
+                            tau /= 1.0 + self.eps;
+                            rejects = 0;
+                        }
+                    }
+                    pos += consumed;
+                }
+            }
+        }
+        Ok(OptimResult { exemplars: state.exemplars, value, curve, evaluations })
+    }
+}
+
+impl Optimizer for ThreeSieves {
+    fn maximize(&self, oracle: &dyn Oracle) -> Result<OptimResult> {
+        self.run_stream(oracle, &shuffled_order(oracle.dataset().n(), self.seed))
+    }
+
+    fn name(&self) -> String {
+        format!("three-sieves(k={},eps={},t={})", self.k, self.eps, self.t)
+    }
+}
+
+/// Salsa-style ensemble (Norouzi-Fard et al.): several threshold
+/// *policies* run on the same stream and the best result wins. Policies
+/// here: the adaptive sieve rule, a fixed `v/(2k)` dense rule, and a
+/// two-phase rule that is strict early and relaxed late — capturing the
+/// paper's "beyond 1/2 on random streams" intuition.
+pub struct Salsa {
+    k: usize,
+    eps: f64,
+    window: usize,
+    seed: u64,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum SalsaPolicy {
+    Adaptive,
+    Dense,
+    TwoPhase,
+}
+
+struct PolicySieve {
+    policy: SalsaPolicy,
+    guess: f64,
+    state: DminState,
+    value: f32,
+}
+
+impl Salsa {
+    /// Salsa ensemble selecting at most `k` with grid accuracy `eps`.
+    pub fn new(k: usize, eps: f64, seed: u64) -> Self {
+        assert!(eps > 0.0 && eps < 1.0);
+        Self { k, eps, window: DEFAULT_WINDOW, seed }
+    }
+
+    /// Override the stream window (batch) size.
+    pub fn with_window(mut self, window: usize) -> Self {
+        self.window = window.max(1);
+        self
+    }
+
+    fn accept(&self, p: &PolicySieve, gain: f32, progress: f64) -> bool {
+        let remaining = self.k - p.state.len();
+        if remaining == 0 {
+            return false;
+        }
+        let g = gain as f64;
+        match p.policy {
+            SalsaPolicy::Adaptive => g >= (p.guess / 2.0 - p.value as f64) / remaining as f64,
+            SalsaPolicy::Dense => g >= p.guess / (2.0 * self.k as f64),
+            SalsaPolicy::TwoPhase => {
+                let bar = if progress < 0.5 {
+                    p.guess / self.k as f64 // strict early
+                } else {
+                    p.guess / (3.0 * self.k as f64) // relaxed late
+                };
+                g >= bar
+            }
+        }
+    }
+
+    /// Run over an explicit stream order.
+    pub fn run_stream(&self, oracle: &dyn Oracle, stream: &[usize]) -> Result<OptimResult> {
+        if self.k == 0 {
+            return Err(Error::InvalidArgument("k must be positive".into()));
+        }
+        let empty = oracle.init_state();
+        let mut sieves: Vec<PolicySieve> = Vec::new();
+        let mut m = 0.0f64;
+        let mut evaluations = 0u64;
+        let total = stream.len().max(1);
+        let mut consumed_total = 0usize;
+
+        for window in stream.chunks(self.window) {
+            let singles = oracle.marginal_gains(&empty, window)?;
+            evaluations += singles.len() as u64;
+            for (start, end, seg_m) in m_segments(&singles, &mut m) {
+                if seg_m <= 0.0 {
+                    continue;
+                }
+                let grid = threshold_grid(self.eps, seg_m, 2.0 * self.k as f64 * seg_m);
+                for v in &grid {
+                    for policy in [SalsaPolicy::Adaptive, SalsaPolicy::Dense, SalsaPolicy::TwoPhase] {
+                        if !sieves
+                            .iter()
+                            .any(|s| s.policy == policy && (s.guess - v).abs() < 1e-12)
+                        {
+                            sieves.push(PolicySieve {
+                                policy,
+                                guess: *v,
+                                state: oracle.init_state(),
+                                value: 0.0,
+                            });
+                        }
+                    }
+                }
+                let progress = (consumed_total + start) as f64 / total as f64;
+                let items = &window[start..end];
+                for si in 0..sieves.len() {
+                    let mut pos = 0;
+                    while pos < items.len() && sieves[si].state.len() < self.k {
+                        let tail = &items[pos..];
+                        let gains = oracle.marginal_gains(&sieves[si].state, tail)?;
+                        evaluations += gains.len() as u64;
+                        let mut accepted = None;
+                        for (off, (&item, &gain)) in tail.iter().zip(&gains).enumerate() {
+                            if self.accept(&sieves[si], gain, progress)
+                                && !sieves[si].state.exemplars.contains(&item)
+                            {
+                                accepted = Some((off, item));
+                                break;
+                            }
+                        }
+                        match accepted {
+                            Some((off, item)) => {
+                                oracle.commit(&mut sieves[si].state, item)?;
+                                sieves[si].value = oracle.f_of_state(&sieves[si].state);
+                                pos += off + 1;
+                            }
+                            None => break,
+                        }
+                    }
+                }
+            }
+            consumed_total += window.len();
+        }
+        let best = sieves.iter().max_by(|a, b| a.value.total_cmp(&b.value));
+        Ok(match best {
+            Some(s) => OptimResult {
+                exemplars: s.state.exemplars.clone(),
+                value: s.value,
+                curve: vec![s.value],
+                evaluations,
+            },
+            None => OptimResult { exemplars: vec![], value: 0.0, curve: vec![], evaluations },
+        })
+    }
+}
+
+impl Optimizer for Salsa {
+    fn maximize(&self, oracle: &dyn Oracle) -> Result<OptimResult> {
+        self.run_stream(oracle, &shuffled_order(oracle.dataset().n(), self.seed))
+    }
+
+    fn name(&self) -> String {
+        format!("salsa(k={},eps={})", self.k, self.eps)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpu::SingleThread;
+    use crate::data::synth::GaussianBlobs;
+    use crate::optim::greedy::Greedy;
+
+    fn oracle() -> SingleThread {
+        SingleThread::new(GaussianBlobs::new(4, 3, 0.2).generate(120, 13))
+    }
+
+    #[test]
+    fn threshold_grid_is_geometric_and_covers() {
+        let g = threshold_grid(0.5, 1.0, 10.0);
+        assert!(!g.is_empty());
+        for w in g.windows(2) {
+            assert!((w[1] / w[0] - 1.5).abs() < 1e-9);
+        }
+        assert!(g[0] <= 1.0 && *g.last().unwrap() >= 10.0);
+    }
+
+    #[test]
+    fn threshold_grid_degenerate_ranges() {
+        assert!(threshold_grid(0.1, 0.0, 10.0).is_empty());
+        assert!(threshold_grid(0.1, 5.0, 1.0).is_empty());
+    }
+
+    #[test]
+    fn m_segments_split_at_increases() {
+        let mut m = 0.0;
+        let segs = m_segments(&[1.0, 0.5, 2.0, 1.5, 3.0], &mut m);
+        assert_eq!(segs, vec![(0, 2, 1.0), (2, 4, 2.0), (4, 5, 3.0)]);
+        assert_eq!(m, 3.0);
+        // continuing with a lower window keeps one segment
+        let segs2 = m_segments(&[0.1, 0.2], &mut m);
+        assert_eq!(segs2, vec![(0, 2, 3.0)]);
+    }
+
+    #[test]
+    fn sieve_streaming_reaches_half_of_greedy() {
+        let o = oracle();
+        let greedy = Greedy::new(4).maximize(&o).unwrap();
+        let sieve = SieveStreaming::new(4, 0.2, 1).maximize(&o).unwrap();
+        assert!(sieve.value >= 0.5 * greedy.value,
+            "sieve {} vs greedy {}", sieve.value, greedy.value);
+        assert!(sieve.exemplars.len() <= 4);
+    }
+
+    #[test]
+    fn sieve_pp_value_close_with_fewer_or_equal_evals() {
+        let o = oracle();
+        let s = SieveStreaming::new(4, 0.2, 2).maximize(&o).unwrap();
+        let spp = SieveStreamingPP::new(4, 0.2, 2).maximize(&o).unwrap();
+        assert!(spp.value >= 0.8 * s.value,
+            "++ lost too much: {} vs {}", spp.value, s.value);
+        assert!(spp.evaluations <= s.evaluations,
+            "++ did more work: {} vs {}", spp.evaluations, s.evaluations);
+    }
+
+    #[test]
+    fn three_sieves_respects_cardinality_and_value() {
+        let o = oracle();
+        let greedy = Greedy::new(4).maximize(&o).unwrap();
+        let ts = ThreeSieves::new(4, 0.2, 50, 3).maximize(&o).unwrap();
+        assert!(ts.exemplars.len() <= 4);
+        assert!(ts.value >= 0.4 * greedy.value,
+            "three-sieves {} vs greedy {}", ts.value, greedy.value);
+        let s = SieveStreaming::new(4, 0.2, 3).maximize(&o).unwrap();
+        assert!(ts.evaluations < s.evaluations,
+            "single-sieve should evaluate less: {} vs {}",
+            ts.evaluations, s.evaluations);
+    }
+
+    #[test]
+    fn salsa_reaches_half_of_greedy() {
+        let o = oracle();
+        let greedy = Greedy::new(4).maximize(&o).unwrap();
+        let sa = Salsa::new(4, 0.3, 5).maximize(&o).unwrap();
+        assert!(sa.value >= 0.5 * greedy.value,
+            "salsa {} vs greedy {}", sa.value, greedy.value);
+    }
+
+    #[test]
+    fn streaming_results_are_deterministic_per_seed() {
+        let o = oracle();
+        let a = SieveStreaming::new(3, 0.25, 9).maximize(&o).unwrap();
+        let b = SieveStreaming::new(3, 0.25, 9).maximize(&o).unwrap();
+        assert_eq!(a.exemplars, b.exemplars);
+    }
+
+    #[test]
+    fn window_size_does_not_change_sieve_result() {
+        let o = oracle();
+        let stream: Vec<usize> = (0..o.dataset().n()).collect();
+        let a = SieveStreaming::new(3, 0.25, 0).with_window(7).run_stream(&o, &stream).unwrap();
+        let b = SieveStreaming::new(3, 0.25, 0).with_window(64).run_stream(&o, &stream).unwrap();
+        assert_eq!(a.exemplars, b.exemplars, "windowing changed semantics");
+        let c = ThreeSieves::new(3, 0.25, 20, 0).with_window(7).run_stream(&o, &stream).unwrap();
+        let d = ThreeSieves::new(3, 0.25, 20, 0).with_window(64).run_stream(&o, &stream).unwrap();
+        assert_eq!(c.exemplars, d.exemplars, "three-sieves windowing changed semantics");
+    }
+
+    #[test]
+    fn empty_stream_gives_empty_result() {
+        let o = oracle();
+        let r = SieveStreaming::new(3, 0.2, 0).run_stream(&o, &[]).unwrap();
+        assert!(r.exemplars.is_empty());
+        assert_eq!(r.value, 0.0);
+    }
+
+    #[test]
+    fn zero_k_rejected() {
+        let o = oracle();
+        assert!(SieveStreaming { k: 0, eps: 0.2, window: 8, seed: 0 }
+            .run_stream(&o, &[1, 2])
+            .is_err());
+    }
+}

@@ -1,0 +1,364 @@
+//! S_multi packing — the paper's §IV-B2 memory layout.
+//!
+//! The evaluation sets `S_multi = {S_1, ..., S_l}` are staged into **one**
+//! host buffer and shipped to the device in a **single transaction** (the
+//! paper's PCIe-economy argument). Sets of unequal size are padded to the
+//! round's maximum `k` ("blank fields remain empty ... not absolutely
+//! space-efficient, which is convenient for addressing"); here a validity
+//! mask marks the blanks instead of leaving them undefined.
+//!
+//! Two physical staging orders are implemented:
+//!
+//! * [`PackOrder::RoundRobin`] — the paper's Fig. 2 layout: slot-major
+//!   (`k` outer, set inner), so consecutive entries of the staging walk
+//!   belong to *different* sets — the CUDA-coalescing order.
+//! * [`PackOrder::SetMajor`] — one set after another (the naive order).
+//!
+//! The logical device tensor is always `(L, K, D)` set-major (XLA wants a
+//! dense tile); the pack order changes the host-side gather sequence,
+//! which the layout ablation (`benches/ablation_layout.rs`) measures
+//! against per-set transfers.
+
+use crate::data::Dataset;
+use crate::{Error, Result};
+
+/// Physical gather order for the staging buffer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PackOrder {
+    /// Paper Fig. 2: choose sets round-robin, one vector at a time.
+    RoundRobin,
+    /// One complete set after another.
+    SetMajor,
+}
+
+/// A packed multiset evaluation payload: dense `(l, k_max, d)` data plus
+/// an `(l, k_max)` validity mask.
+#[derive(Clone, Debug)]
+pub struct SMultiPack {
+    /// Number of evaluation sets (rows of the work matrix).
+    pub l: usize,
+    /// Slots per set (padded maximum).
+    pub k_max: usize,
+    /// Dimensionality.
+    pub d: usize,
+    /// `(l * k_max * d)` set-major data; padded slots are zero.
+    pub data: Vec<f32>,
+    /// `(l * k_max)` mask; 1.0 = valid slot, 0.0 = blank field.
+    pub mask: Vec<f32>,
+    /// True sizes of every set (before padding).
+    pub sizes: Vec<usize>,
+}
+
+impl SMultiPack {
+    /// Pack sets given as index lists into `dataset`, padding every set to
+    /// `k_max >= max set size` (pass 0 to use the exact maximum).
+    pub fn from_indices(
+        dataset: &Dataset,
+        sets: &[Vec<usize>],
+        k_max: usize,
+        order: PackOrder,
+    ) -> Result<Self> {
+        if sets.is_empty() {
+            return Err(Error::InvalidArgument("no evaluation sets".into()));
+        }
+        let max_size = sets.iter().map(Vec::len).max().unwrap_or(0);
+        let k_max = if k_max == 0 { max_size.max(1) } else { k_max };
+        if max_size > k_max {
+            return Err(Error::InvalidArgument(format!(
+                "set of size {max_size} exceeds k_max={k_max}"
+            )));
+        }
+        for s in sets {
+            if let Some(&bad) = s.iter().find(|&&i| i >= dataset.n()) {
+                return Err(Error::InvalidArgument(format!(
+                    "set index {bad} out of range (n = {})",
+                    dataset.n()
+                )));
+            }
+        }
+
+        let (l, d) = (sets.len(), dataset.d());
+        let mut pack = Self {
+            l,
+            k_max,
+            d,
+            data: vec![0.0; l * k_max * d],
+            mask: vec![0.0; l * k_max],
+            sizes: sets.iter().map(Vec::len).collect(),
+        };
+
+        match order {
+            PackOrder::RoundRobin => {
+                // Fig. 2: slot index outer, set inner — the coalescing walk.
+                for slot in 0..k_max {
+                    for (li, set) in sets.iter().enumerate() {
+                        if slot < set.len() {
+                            pack.write_slot(li, slot, dataset.row(set[slot]));
+                        }
+                    }
+                }
+            }
+            PackOrder::SetMajor => {
+                for (li, set) in sets.iter().enumerate() {
+                    for (slot, &idx) in set.iter().enumerate() {
+                        pack.write_slot(li, slot, dataset.row(idx));
+                    }
+                }
+            }
+        }
+        Ok(pack)
+    }
+
+    /// Pack raw vectors (one `Vec<f32>` of length `d` per set member).
+    pub fn from_vectors(
+        sets: &[Vec<Vec<f32>>],
+        d: usize,
+        k_max: usize,
+        order: PackOrder,
+    ) -> Result<Self> {
+        if sets.is_empty() {
+            return Err(Error::InvalidArgument("no evaluation sets".into()));
+        }
+        let max_size = sets.iter().map(Vec::len).max().unwrap_or(0);
+        let k_max = if k_max == 0 { max_size.max(1) } else { k_max };
+        if max_size > k_max {
+            return Err(Error::InvalidArgument(format!(
+                "set of size {max_size} exceeds k_max={k_max}"
+            )));
+        }
+        let l = sets.len();
+        let mut pack = Self {
+            l,
+            k_max,
+            d,
+            data: vec![0.0; l * k_max * d],
+            mask: vec![0.0; l * k_max],
+            sizes: sets.iter().map(Vec::len).collect(),
+        };
+        let write = |pack: &mut Self, li: usize, slot: usize, v: &[f32]| -> Result<()> {
+            if v.len() != d {
+                return Err(Error::InvalidArgument(format!(
+                    "vector of dim {} in set {li}, expected {d}",
+                    v.len()
+                )));
+            }
+            pack.write_slot(li, slot, v);
+            Ok(())
+        };
+        match order {
+            PackOrder::RoundRobin => {
+                for slot in 0..k_max {
+                    for li in 0..l {
+                        if slot < sets[li].len() {
+                            write(&mut pack, li, slot, &sets[li][slot])?;
+                        }
+                    }
+                }
+            }
+            PackOrder::SetMajor => {
+                for li in 0..l {
+                    for slot in 0..sets[li].len() {
+                        write(&mut pack, li, slot, &sets[li][slot])?;
+                    }
+                }
+            }
+        }
+        Ok(pack)
+    }
+
+    #[inline]
+    fn write_slot(&mut self, li: usize, slot: usize, v: &[f32]) {
+        let off = (li * self.k_max + slot) * self.d;
+        self.data[off..off + self.d].copy_from_slice(v);
+        self.mask[li * self.k_max + slot] = 1.0;
+    }
+
+    /// Borrow the padded slot `(li, slot)`.
+    pub fn slot(&self, li: usize, slot: usize) -> &[f32] {
+        let off = (li * self.k_max + slot) * self.d;
+        &self.data[off..off + self.d]
+    }
+
+    /// Is slot `(li, slot)` a real vector (vs. a blank field)?
+    pub fn is_valid(&self, li: usize, slot: usize) -> bool {
+        self.mask[li * self.k_max + slot] > 0.0
+    }
+
+    /// Bytes of device payload this pack occupies (data + mask), the
+    /// `μ_s`-numerator of the chunk planner.
+    pub fn payload_bytes(&self, bytes_per_elem: usize) -> usize {
+        self.data.len() * bytes_per_elem + self.mask.len() * bytes_per_elem
+    }
+
+    /// Extract the sub-pack of rows `[start, start + count)` — used by the
+    /// chunk executor. Zero-copy is impossible across the `l` dimension
+    /// boundary of the mask, so this copies the slices.
+    pub fn rows(&self, start: usize, count: usize) -> SMultiPack {
+        let end = (start + count).min(self.l);
+        let count = end - start;
+        SMultiPack {
+            l: count,
+            k_max: self.k_max,
+            d: self.d,
+            data: self.data[start * self.k_max * self.d..end * self.k_max * self.d].to_vec(),
+            mask: self.mask[start * self.k_max..end * self.k_max].to_vec(),
+            sizes: self.sizes[start..end].to_vec(),
+        }
+    }
+
+    /// Pad the pack with blank evaluation sets up to `l_target` rows (the
+    /// device L-chunk is a fixed bucket).
+    pub fn pad_rows(&self, l_target: usize) -> SMultiPack {
+        assert!(l_target >= self.l);
+        let mut out = self.clone();
+        out.data.resize(l_target * self.k_max * self.d, 0.0);
+        out.mask.resize(l_target * self.k_max, 0.0);
+        out.sizes.resize(l_target, 0);
+        out.l = l_target;
+        out
+    }
+
+    /// Pad the slot dimension up to `k_target` (bucket selection).
+    pub fn pad_slots(&self, k_target: usize) -> SMultiPack {
+        assert!(k_target >= self.k_max);
+        let mut out = SMultiPack {
+            l: self.l,
+            k_max: k_target,
+            d: self.d,
+            data: vec![0.0; self.l * k_target * self.d],
+            mask: vec![0.0; self.l * k_target],
+            sizes: self.sizes.clone(),
+        };
+        for li in 0..self.l {
+            for slot in 0..self.k_max {
+                let src = (li * self.k_max + slot) * self.d;
+                let dst = (li * k_target + slot) * self.d;
+                out.data[dst..dst + self.d].copy_from_slice(&self.data[src..src + self.d]);
+                out.mask[li * k_target + slot] = self.mask[li * self.k_max + slot];
+            }
+        }
+        out
+    }
+
+    /// Pad the feature dimension with zeros up to `d_target` — exact for
+    /// squared Euclidean (zero dims contribute nothing to any distance).
+    pub fn pad_dims(&self, d_target: usize) -> SMultiPack {
+        assert!(d_target >= self.d);
+        let mut out = SMultiPack {
+            l: self.l,
+            k_max: self.k_max,
+            d: d_target,
+            data: vec![0.0; self.l * self.k_max * d_target],
+            mask: self.mask.clone(),
+            sizes: self.sizes.clone(),
+        };
+        for li in 0..self.l {
+            for slot in 0..self.k_max {
+                let src = (li * self.k_max + slot) * self.d;
+                let dst = (li * self.k_max + slot) * d_target;
+                out.data[dst..dst + self.d].copy_from_slice(&self.data[src..src + self.d]);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+
+    fn ds() -> Dataset {
+        // 6 points in 2-d: row i = (i, 10 + i)
+        let rows: Vec<Vec<f32>> = (0..6).map(|i| vec![i as f32, 10.0 + i as f32]).collect();
+        Dataset::from_rows(&rows).unwrap()
+    }
+
+    #[test]
+    fn both_orders_same_logical_layout() {
+        let sets = vec![vec![0, 1, 2, 3], vec![4, 5], vec![1, 3, 5]];
+        let a = SMultiPack::from_indices(&ds(), &sets, 0, PackOrder::RoundRobin).unwrap();
+        let b = SMultiPack::from_indices(&ds(), &sets, 0, PackOrder::SetMajor).unwrap();
+        assert_eq!(a.data, b.data);
+        assert_eq!(a.mask, b.mask);
+    }
+
+    #[test]
+    fn unequal_sets_padded_with_mask() {
+        let sets = vec![vec![0, 1, 2, 3], vec![4, 5]];
+        let p = SMultiPack::from_indices(&ds(), &sets, 0, PackOrder::RoundRobin).unwrap();
+        assert_eq!((p.l, p.k_max), (2, 4));
+        assert!(p.is_valid(0, 3));
+        assert!(p.is_valid(1, 1));
+        assert!(!p.is_valid(1, 2));
+        assert_eq!(p.slot(1, 2), &[0.0, 0.0]); // blank field zeroed
+        assert_eq!(p.sizes, vec![4, 2]);
+    }
+
+    #[test]
+    fn slot_contents_match_rows() {
+        let sets = vec![vec![3, 0]];
+        let p = SMultiPack::from_indices(&ds(), &sets, 0, PackOrder::RoundRobin).unwrap();
+        assert_eq!(p.slot(0, 0), &[3.0, 13.0]);
+        assert_eq!(p.slot(0, 1), &[0.0, 10.0]);
+    }
+
+    #[test]
+    fn rejects_out_of_range_index() {
+        let sets = vec![vec![0, 99]];
+        assert!(SMultiPack::from_indices(&ds(), &sets, 0, PackOrder::RoundRobin).is_err());
+    }
+
+    #[test]
+    fn rejects_oversized_set_for_kmax() {
+        let sets = vec![vec![0, 1, 2]];
+        assert!(SMultiPack::from_indices(&ds(), &sets, 2, PackOrder::RoundRobin).is_err());
+    }
+
+    #[test]
+    fn rows_subsets() {
+        let sets = vec![vec![0], vec![1], vec![2], vec![3]];
+        let p = SMultiPack::from_indices(&ds(), &sets, 0, PackOrder::SetMajor).unwrap();
+        let sub = p.rows(1, 2);
+        assert_eq!(sub.l, 2);
+        assert_eq!(sub.slot(0, 0), &[1.0, 11.0]);
+        assert_eq!(sub.slot(1, 0), &[2.0, 12.0]);
+    }
+
+    #[test]
+    fn pad_rows_and_slots_and_dims() {
+        let sets = vec![vec![0, 1]];
+        let p = SMultiPack::from_indices(&ds(), &sets, 0, PackOrder::SetMajor).unwrap();
+        let pr = p.pad_rows(4);
+        assert_eq!(pr.l, 4);
+        assert!(!pr.is_valid(3, 0));
+        let pk = p.pad_slots(5);
+        assert_eq!(pk.k_max, 5);
+        assert_eq!(pk.slot(0, 1), &[1.0, 11.0]);
+        assert!(!pk.is_valid(0, 4));
+        let pd = p.pad_dims(4);
+        assert_eq!(pd.slot(0, 0), &[0.0, 10.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn from_vectors_matches_from_indices() {
+        let d = ds();
+        let sets_idx = vec![vec![0, 2], vec![5]];
+        let sets_vec: Vec<Vec<Vec<f32>>> = sets_idx
+            .iter()
+            .map(|s| s.iter().map(|&i| d.row(i).to_vec()).collect())
+            .collect();
+        let a = SMultiPack::from_indices(&d, &sets_idx, 0, PackOrder::RoundRobin).unwrap();
+        let b = SMultiPack::from_vectors(&sets_vec, 2, 0, PackOrder::RoundRobin).unwrap();
+        assert_eq!(a.data, b.data);
+        assert_eq!(a.mask, b.mask);
+    }
+
+    #[test]
+    fn payload_bytes_counts_data_and_mask() {
+        let sets = vec![vec![0, 1], vec![2]];
+        let p = SMultiPack::from_indices(&ds(), &sets, 0, PackOrder::SetMajor).unwrap();
+        // data: 2 sets * 2 slots * 2 dims = 8; mask: 4 -> 12 elems * 4 B
+        assert_eq!(p.payload_bytes(4), 48);
+    }
+}

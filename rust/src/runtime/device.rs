@@ -1,0 +1,107 @@
+//! PJRT device wrapper: compile-once executable cache + transfer stats.
+//!
+//! Mirrors the paper's accounting: host→device transfers are the expensive
+//! resource (§IV-B2), so every upload and execution is counted and the
+//! benches report transaction counts alongside wall-clock time.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use crate::{Error, Result};
+
+/// Cumulative device-interaction counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DeviceStats {
+    /// HLO modules compiled (cache misses).
+    pub compiles: u64,
+    /// Executable launches.
+    pub executions: u64,
+    /// Host→device transfers issued.
+    pub h2d_transfers: u64,
+    /// Host→device bytes moved.
+    pub h2d_bytes: u64,
+    /// Device→host transfers issued.
+    pub d2h_transfers: u64,
+}
+
+/// A PJRT client with a per-path executable cache.
+///
+/// Not `Send`/`Sync` — PJRT handles in the `xla` crate are `Rc`-backed.
+/// The coordinator pins one `Device` to its executor thread.
+pub struct Device {
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<PathBuf, Rc<xla::PjRtLoadedExecutable>>>,
+    stats: RefCell<DeviceStats>,
+}
+
+impl Device {
+    /// Open the CPU PJRT client (the simulated accelerator — see
+    /// DESIGN.md §Substitutions).
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self { client, cache: RefCell::new(HashMap::new()), stats: RefCell::new(DeviceStats::default()) })
+    }
+
+    /// PJRT platform name (e.g. `cpu`).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact, memoized per path.
+    pub fn load(&self, path: &Path) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(path) {
+            return Ok(exe.clone());
+        }
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| Error::Manifest(format!("non-utf8 path {}", path.display())))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        self.stats.borrow_mut().compiles += 1;
+        self.cache.borrow_mut().insert(path.to_path_buf(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Upload an `f32` tensor to the device.
+    pub fn upload(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        let buf = self.client.buffer_from_host_buffer(data, dims, None)?;
+        let mut s = self.stats.borrow_mut();
+        s.h2d_transfers += 1;
+        s.h2d_bytes += (data.len() * 4) as u64;
+        Ok(buf)
+    }
+
+    /// Launch an executable on device-resident buffers.
+    pub fn execute(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        let mut out = exe.execute_b(args)?;
+        self.stats.borrow_mut().executions += 1;
+        if out.is_empty() || out[0].is_empty() {
+            return Err(Error::Device("executable produced no outputs".into()));
+        }
+        Ok(out.swap_remove(0))
+    }
+
+    /// Download a tupled output buffer as a vector of literals.
+    pub fn download_tuple(&self, buf: &xla::PjRtBuffer) -> Result<Vec<xla::Literal>> {
+        let lit = buf.to_literal_sync()?;
+        self.stats.borrow_mut().d2h_transfers += 1;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Current counters.
+    pub fn stats(&self) -> DeviceStats {
+        *self.stats.borrow()
+    }
+
+    /// Reset counters (benches call this between phases).
+    pub fn reset_stats(&self) {
+        *self.stats.borrow_mut() = DeviceStats::default();
+    }
+}

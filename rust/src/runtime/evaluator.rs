@@ -1,0 +1,486 @@
+//! The device evaluator: Algorithm 3 of the paper on the AOT/PJRT path.
+//!
+//! * The ground set is uploaded **once** at construction (§IV-B2: "the
+//!   ground matrix never changes ... copied to the GPU's global memory on
+//!   algorithm initialization"), covered by a mix of tile sizes from the
+//!   artifact family — big tiles for the bulk, one small tile for the
+//!   remainder — so small datasets don't pay big-tile padding waste
+//!   (perf pass #1, EXPERIMENTS.md §Perf).
+//! * Evaluation sets are packed (§IV-B2), chunked against the simulated
+//!   device-memory budget (§IV-B3) and shipped per chunk; partial work-
+//!   matrix row sums are merged host-side (sum over ground tiles is
+//!   associative).
+//! * The optimizer-aware state (`dmin`) lives on the device between
+//!   Greedy rounds: `commit` runs the `update_dmin` artifact per tile and
+//!   caches the refreshed buffers for the next `marginal_gains` call.
+
+use std::cell::RefCell;
+use std::path::Path;
+
+use super::device::{Device, DeviceStats};
+use super::registry::ArtifactRegistry;
+use crate::chunk::{self, MemoryModel};
+use crate::data::Dataset;
+use crate::optim::oracle::{DminState, Oracle};
+use crate::pack::{PackOrder, SMultiPack};
+use crate::{Error, Result};
+
+/// Configuration of the device path.
+#[derive(Clone, Debug)]
+pub struct EvalConfig {
+    /// Matmul-operand precision: `f32`, `f16` or `bf16` (§V-B).
+    pub dtype: String,
+    /// Simulated device-memory model driving the chunk planner.
+    pub memory: MemoryModel,
+    /// Host-side staging order (paper Fig. 2 vs naive).
+    pub pack_order: PackOrder,
+}
+
+impl Default for EvalConfig {
+    fn default() -> Self {
+        Self {
+            dtype: "f32".into(),
+            memory: MemoryModel::default(),
+            pack_order: PackOrder::RoundRobin,
+        }
+    }
+}
+
+struct GroundTile {
+    /// Tile-size bucket this tile was compiled for.
+    t: usize,
+    /// First dataset row covered by this tile.
+    offset: usize,
+    /// Valid rows (≤ t; the rest is masked padding).
+    rows: usize,
+    v: xla::PjRtBuffer,
+    vmask: xla::PjRtBuffer,
+}
+
+struct DminCache {
+    exemplars: Vec<usize>,
+    bufs: Vec<xla::PjRtBuffer>,
+}
+
+/// Cover `n` rows with the available tile buckets (ascending): greedily
+/// take the largest bucket that still fits fully, then one smallest
+/// bucket for the final remainder — padding waste is bounded by one
+/// small tile.
+fn plan_tiles(n: usize, buckets: &[usize]) -> Vec<usize> {
+    debug_assert!(!buckets.is_empty());
+    let mut tiles = Vec::new();
+    let mut rem = n;
+    loop {
+        if rem == 0 {
+            break;
+        }
+        match buckets.iter().rev().find(|&&b| b <= rem) {
+            Some(&b) => {
+                tiles.push(b);
+                rem -= b;
+            }
+            None => {
+                // remainder smaller than the smallest bucket
+                tiles.push(buckets[0]);
+                break;
+            }
+        }
+    }
+    if tiles.is_empty() {
+        tiles.push(buckets[0]);
+    }
+    tiles
+}
+
+/// AOT-artifact-backed evaluator for one dataset.
+pub struct DeviceEvaluator {
+    device: Device,
+    registry: ArtifactRegistry,
+    ds: Dataset,
+    /// D bucket every artifact call pads to.
+    d_bucket: usize,
+    tiles: Vec<GroundTile>,
+    l0: f64,
+    cfg: EvalConfig,
+    dmin_cache: RefCell<Option<DminCache>>,
+}
+
+impl DeviceEvaluator {
+    /// Open the artifact directory, pick buckets for `ds`, upload ground
+    /// tiles. Fails if no bucket family covers the dataset dimensionality.
+    pub fn from_dir(dir: impl AsRef<Path>, ds: &Dataset, cfg: EvalConfig) -> Result<Self> {
+        let registry = ArtifactRegistry::open(dir)?;
+        Self::new(Device::cpu()?, registry, ds.clone(), cfg)
+    }
+
+    /// Build from explicit parts (tests inject custom registries).
+    pub fn new(
+        device: Device,
+        registry: ArtifactRegistry,
+        ds: Dataset,
+        cfg: EvalConfig,
+    ) -> Result<Self> {
+        let t_buckets = registry.tile_buckets(ds.d());
+        if t_buckets.is_empty() {
+            return Err(Error::NoArtifact {
+                kernel: "update_dmin".into(),
+                dtype: "f32".into(),
+                d: ds.d(),
+                k: 0,
+                hint: "no tile bucket covers this dimensionality".into(),
+            });
+        }
+        // One D bucket serves every kernel; specs.py emits the same D
+        // family for all kernels, so update_dmin's bucket is canonical.
+        let d_bucket = registry.find_update_dmin(ds.d(), t_buckets[0])?.d;
+        // fail fast if the requested dtype has no eval_ws at this bucket
+        registry.find_eval_ws(&cfg.dtype, ds.d(), 1, t_buckets[0])?;
+
+        let l0 = ds.l0_sum();
+        let mut ev = Self {
+            device,
+            registry,
+            ds,
+            d_bucket,
+            tiles: Vec::new(),
+            l0,
+            cfg,
+            dmin_cache: RefCell::new(None),
+        };
+        ev.upload_ground_tiles(&t_buckets)?;
+        Ok(ev)
+    }
+
+    fn upload_ground_tiles(&mut self, t_buckets: &[usize]) -> Result<()> {
+        let (n, d, db) = (self.ds.n(), self.ds.d(), self.d_bucket);
+        let plan = plan_tiles(n, t_buckets);
+        let mut tiles = Vec::with_capacity(plan.len());
+        let mut offset = 0usize;
+        for t in plan {
+            let rows = t.min(n - offset);
+            let mut vbuf = vec![0.0f32; t * db];
+            let mut mbuf = vec![0.0f32; t];
+            for r in 0..rows {
+                let row = self.ds.row(offset + r);
+                vbuf[r * db..r * db + d].copy_from_slice(row);
+                mbuf[r] = 1.0;
+            }
+            tiles.push(GroundTile {
+                t,
+                offset,
+                rows,
+                v: self.device.upload(&vbuf, &[t, db])?,
+                vmask: self.device.upload(&mbuf, &[t])?,
+            });
+            offset += rows;
+        }
+        self.tiles = tiles;
+        Ok(())
+    }
+
+    /// The ground-tile count (used by benches to reason about call counts).
+    pub fn n_tiles(&self) -> usize {
+        self.tiles.len()
+    }
+
+    /// Tile sizes in use (diagnostics / tests).
+    pub fn tile_sizes(&self) -> Vec<usize> {
+        self.tiles.iter().map(|t| t.t).collect()
+    }
+
+    /// Device interaction counters.
+    pub fn stats(&self) -> DeviceStats {
+        self.device.stats()
+    }
+
+    /// Reset device counters.
+    pub fn reset_stats(&self) {
+        self.device.reset_stats()
+    }
+
+    /// The D bucket in use.
+    pub fn d_bucket(&self) -> usize {
+        self.d_bucket
+    }
+
+    /// Evaluate a pre-packed payload, returning **unnormalized**
+    /// `L(S ∪ {e0}) * n` sums per set (benches use this to time the pure
+    /// device path without f-value conversion).
+    pub fn eval_pack_sums(&self, pack: &SMultiPack) -> Result<Vec<f64>> {
+        let k_needed = pack.k_max.max(1);
+        // K/L buckets are identical across tile sizes; take them from the
+        // first tile's artifact.
+        let meta0 =
+            self.registry
+                .find_eval_ws(&self.cfg.dtype, self.ds.d(), k_needed, self.tiles[0].t)?;
+        let (k_bucket, l_bucket) = (meta0.k.unwrap(), meta0.l.unwrap());
+
+        // §IV-B3 chunk plan against the simulated memory budget.
+        let free = self.cfg.memory.free_after_ground(self.ds.n(), self.d_bucket);
+        let per_set = self.cfg.memory.per_set_bytes(k_bucket, self.d_bucket);
+        let plan = chunk::plan(pack.l, per_set, free)?;
+
+        let mut sums = vec![0.0f64; pack.l];
+        for (start, count) in plan.ranges() {
+            let chunk_pack = pack.rows(start, count);
+            self.eval_chunk(&chunk_pack, k_bucket, l_bucket, &mut sums[start..start + count])?;
+        }
+        Ok(sums)
+    }
+
+    fn eval_chunk(
+        &self,
+        chunk_pack: &SMultiPack,
+        k_bucket: usize,
+        l_bucket: usize,
+        sums: &mut [f64],
+    ) -> Result<()> {
+        let mut start = 0;
+        while start < chunk_pack.l {
+            let count = l_bucket.min(chunk_pack.l - start);
+            let mut window = chunk_pack.rows(start, count);
+            if window.k_max < k_bucket {
+                window = window.pad_slots(k_bucket);
+            }
+            if window.d < self.d_bucket {
+                window = window.pad_dims(self.d_bucket);
+            }
+            if window.l < l_bucket {
+                window = window.pad_rows(l_bucket);
+            }
+            let s_buf = self
+                .device
+                .upload(&window.data, &[l_bucket, k_bucket, self.d_bucket])?;
+            let m_buf = self.device.upload(&window.mask, &[l_bucket, k_bucket])?;
+            for tile in &self.tiles {
+                let meta = self
+                    .registry
+                    .find_eval_ws(&self.cfg.dtype, self.ds.d(), k_bucket, tile.t)?;
+                let exe = self.device.load(&self.registry.path_of(meta))?;
+                let out = self
+                    .device
+                    .execute(exe.as_ref(), &[&tile.v, &tile.vmask, &s_buf, &m_buf])?;
+                let lits = self.device.download_tuple(&out[0])?;
+                let partial: Vec<f32> = lits[0].to_vec()?;
+                for (r, s) in sums[start..start + count].iter_mut().enumerate() {
+                    *s += partial[r] as f64;
+                }
+            }
+            start += count;
+        }
+        Ok(())
+    }
+
+    /// Cluster assignment for a committed exemplar set: nearest-exemplar
+    /// label per ground point plus the e0-clamped min distance.
+    pub fn assign(&self, exemplars: &[usize]) -> Result<(Vec<i32>, Vec<f32>)> {
+        if exemplars.is_empty() {
+            return Err(Error::InvalidArgument("assign needs at least one exemplar".into()));
+        }
+        let meta0 = self.registry.find_assign(self.ds.d(), exemplars.len(), self.tiles[0].t)?;
+        let k_bucket = meta0.k.unwrap();
+
+        let mut s = vec![0.0f32; k_bucket * self.d_bucket];
+        let mut smask = vec![0.0f32; k_bucket];
+        for (slot, &idx) in exemplars.iter().enumerate() {
+            let row = self.ds.row(idx);
+            s[slot * self.d_bucket..slot * self.d_bucket + row.len()].copy_from_slice(row);
+            smask[slot] = 1.0;
+        }
+        let s_buf = self.device.upload(&s, &[k_bucket, self.d_bucket])?;
+        let m_buf = self.device.upload(&smask, &[k_bucket])?;
+
+        let mut labels = Vec::with_capacity(self.ds.n());
+        let mut dmin = Vec::with_capacity(self.ds.n());
+        for tile in &self.tiles {
+            let meta = self.registry.find_assign(self.ds.d(), exemplars.len(), tile.t)?;
+            let exe = self.device.load(&self.registry.path_of(meta))?;
+            let out = self.device.execute(exe.as_ref(), &[&tile.v, &s_buf, &m_buf])?;
+            let lits = self.device.download_tuple(&out[0])?;
+            let lab: Vec<i32> = lits[0].to_vec()?;
+            let dm: Vec<f32> = lits[1].to_vec()?;
+            labels.extend_from_slice(&lab[..tile.rows]);
+            dmin.extend_from_slice(&dm[..tile.rows]);
+        }
+        Ok((labels, dmin))
+    }
+
+    /// Upload per-tile dmin buffers from host state (padding rows get 0).
+    fn upload_dmin(&self, state: &DminState) -> Result<Vec<xla::PjRtBuffer>> {
+        let mut bufs = Vec::with_capacity(self.tiles.len());
+        for tile in &self.tiles {
+            let mut host = vec![0.0f32; tile.t];
+            host[..tile.rows]
+                .copy_from_slice(&state.dmin[tile.offset..tile.offset + tile.rows]);
+            bufs.push(self.device.upload(&host, &[tile.t])?);
+        }
+        Ok(bufs)
+    }
+
+    /// Get (or build) the device-resident dmin buffers for `state`.
+    fn dmin_buffers(&self, state: &DminState) -> Result<()> {
+        let cached = self
+            .dmin_cache
+            .borrow()
+            .as_ref()
+            .is_some_and(|c| c.exemplars == state.exemplars);
+        if !cached {
+            let bufs = self.upload_dmin(state)?;
+            *self.dmin_cache.borrow_mut() =
+                Some(DminCache { exemplars: state.exemplars.clone(), bufs });
+        }
+        Ok(())
+    }
+}
+
+impl Oracle for DeviceEvaluator {
+    fn dataset(&self) -> &Dataset {
+        &self.ds
+    }
+
+    fn eval_sets(&self, sets: &[Vec<usize>]) -> Result<Vec<f32>> {
+        if sets.is_empty() {
+            return Err(Error::InvalidArgument("no evaluation sets".into()));
+        }
+        let k_needed = sets.iter().map(Vec::len).max().unwrap_or(0).max(1);
+        let meta = self
+            .registry
+            .find_eval_ws(&self.cfg.dtype, self.ds.d(), k_needed, self.tiles[0].t)?;
+        let k_bucket = meta.k.unwrap();
+        let pack = SMultiPack::from_indices(&self.ds, sets, k_bucket, self.cfg.pack_order)?;
+        let sums = self.eval_pack_sums(&pack)?;
+        let n = self.ds.n() as f64;
+        Ok(sums.iter().map(|&s| ((self.l0 - s) / n) as f32).collect())
+    }
+
+    fn marginal_gains(&self, state: &DminState, candidates: &[usize]) -> Result<Vec<f32>> {
+        if state.dmin.len() != self.ds.n() {
+            return Err(Error::InvalidArgument(format!(
+                "state has {} entries, dataset has {}",
+                state.dmin.len(),
+                self.ds.n()
+            )));
+        }
+        if let Some(&bad) = candidates.iter().find(|&&c| c >= self.ds.n()) {
+            return Err(Error::InvalidArgument(format!("candidate {bad} out of range")));
+        }
+        let meta0 = self.registry.find_marginal(&self.cfg.dtype, self.ds.d(), self.tiles[0].t)?;
+        let m_bucket = meta0.m.unwrap();
+        self.dmin_buffers(state)?;
+        let cache = self.dmin_cache.borrow();
+        let dmin_bufs = &cache.as_ref().expect("populated above").bufs;
+
+        let n = self.ds.n() as f64;
+        let mut gains = vec![0.0f32; candidates.len()];
+        let mut c_host = vec![0.0f32; m_bucket * self.d_bucket];
+        let mut cm_host = vec![0.0f32; m_bucket];
+        let mut start = 0;
+        while start < candidates.len() {
+            let count = m_bucket.min(candidates.len() - start);
+            c_host.iter_mut().for_each(|x| *x = 0.0);
+            cm_host.iter_mut().for_each(|x| *x = 0.0);
+            for (slot, &cand) in candidates[start..start + count].iter().enumerate() {
+                let row = self.ds.row(cand);
+                c_host[slot * self.d_bucket..slot * self.d_bucket + row.len()]
+                    .copy_from_slice(row);
+                cm_host[slot] = 1.0;
+            }
+            let c_buf = self.device.upload(&c_host, &[m_bucket, self.d_bucket])?;
+            let cm_buf = self.device.upload(&cm_host, &[m_bucket])?;
+            let mut acc = vec![0.0f64; count];
+            for (tile, dmin_buf) in self.tiles.iter().zip(dmin_bufs) {
+                let meta = self.registry.find_marginal(&self.cfg.dtype, self.ds.d(), tile.t)?;
+                let exe = self.device.load(&self.registry.path_of(meta))?;
+                let out = self.device.execute(
+                    exe.as_ref(),
+                    &[&tile.v, &tile.vmask, dmin_buf, &c_buf, &cm_buf],
+                )?;
+                let lits = self.device.download_tuple(&out[0])?;
+                let partial: Vec<f32> = lits[0].to_vec()?;
+                for (a, p) in acc.iter_mut().zip(&partial[..count]) {
+                    *a += *p as f64;
+                }
+            }
+            for (g, a) in gains[start..start + count].iter_mut().zip(&acc) {
+                *g = (*a / n) as f32;
+            }
+            start += count;
+        }
+        Ok(gains)
+    }
+
+    fn commit(&self, state: &mut DminState, idx: usize) -> Result<()> {
+        if idx >= self.ds.n() {
+            return Err(Error::InvalidArgument(format!("exemplar {idx} out of range")));
+        }
+        self.dmin_buffers(state)?;
+
+        let mut e_host = vec![0.0f32; self.d_bucket];
+        e_host[..self.ds.d()].copy_from_slice(self.ds.row(idx));
+        let e_buf = self.device.upload(&e_host, &[1, self.d_bucket])?;
+
+        let old = self.dmin_cache.borrow_mut().take().expect("populated above");
+        let mut new_bufs = Vec::with_capacity(self.tiles.len());
+        for (tile, dmin_buf) in self.tiles.iter().zip(&old.bufs) {
+            let meta = self.registry.find_update_dmin(self.ds.d(), tile.t)?;
+            let exe = self.device.load(&self.registry.path_of(meta))?;
+            let out = self.device.execute(exe.as_ref(), &[&tile.v, dmin_buf, &e_buf])?;
+            let lits = self.device.download_tuple(&out[0])?;
+            let new_dmin: Vec<f32> = lits[0].to_vec()?;
+            state.dmin[tile.offset..tile.offset + tile.rows]
+                .copy_from_slice(&new_dmin[..tile.rows]);
+            // re-upload: the tuple output cannot be re-fed as an argument
+            new_bufs.push(self.device.upload(&new_dmin, &[tile.t])?);
+        }
+        state.exemplars.push(idx);
+        *self.dmin_cache.borrow_mut() =
+            Some(DminCache { exemplars: state.exemplars.clone(), bufs: new_bufs });
+        Ok(())
+    }
+
+    fn l0_sum(&self) -> f64 {
+        self.l0
+    }
+
+    fn name(&self) -> String {
+        format!("device/{}/{}", self.device.platform(), self.cfg.dtype)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::plan_tiles;
+
+    #[test]
+    fn plan_tiles_prefers_small_tiles_for_small_n() {
+        assert_eq!(plan_tiles(300, &[512, 4096]), vec![512]);
+        assert_eq!(plan_tiles(512, &[512, 4096]), vec![512]);
+        assert_eq!(plan_tiles(600, &[512, 4096]), vec![512, 512]);
+        assert_eq!(plan_tiles(1000, &[512, 4096]), vec![512, 512]);
+    }
+
+    #[test]
+    fn plan_tiles_covers_large_n_with_remainder() {
+        assert_eq!(plan_tiles(4096, &[512, 4096]), vec![4096]);
+        assert_eq!(plan_tiles(4500, &[512, 4096]), vec![4096, 512]);
+        assert_eq!(plan_tiles(9000, &[512, 4096]), vec![4096, 4096, 512, 512]);
+        assert_eq!(plan_tiles(8600, &[512, 4096]), vec![4096, 4096, 512]);
+    }
+
+    #[test]
+    fn plan_tiles_single_bucket() {
+        assert_eq!(plan_tiles(10, &[4096]), vec![4096]);
+        assert_eq!(plan_tiles(8192, &[4096]), vec![4096, 4096]);
+    }
+
+    #[test]
+    fn plan_tiles_total_capacity_covers_n() {
+        for n in [1usize, 511, 513, 4095, 4097, 10_000, 20_000] {
+            let tiles = plan_tiles(n, &[512, 4096]);
+            let cap: usize = tiles.iter().sum();
+            assert!(cap >= n, "n={n}: capacity {cap}");
+            // waste bounded by one small tile
+            assert!(cap - n < 512, "n={n}: waste {}", cap - n);
+        }
+    }
+}

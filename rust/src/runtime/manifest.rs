@@ -1,0 +1,135 @@
+//! Artifact manifest parsing.
+//!
+//! `make artifacts` writes `artifacts/manifest.txt`, a line-based format
+//! (the offline crate set has no serde):
+//!
+//! ```text
+//! # kernel dtype T D K L M filename
+//! eval_ws f32 4096 100 64 64 - eval_ws_f32_t4096_d100_k64_l64.hlo.txt
+//! ```
+//!
+//! `-` marks a dimension the kernel does not use.
+
+use crate::{Error, Result};
+
+/// Metadata of one AOT artifact (one HLO text file).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArtifactMeta {
+    /// Kernel family: `eval_ws`, `marginal`, `assign`, `update_dmin`.
+    pub kernel: String,
+    /// Matmul-operand dtype: `f32`, `f16`, `bf16`.
+    pub dtype: String,
+    /// Ground-tile rows per device call.
+    pub t: usize,
+    /// Dimensionality bucket.
+    pub d: usize,
+    /// Set-slot bucket (eval_ws / assign).
+    pub k: Option<usize>,
+    /// Sets per chunk (eval_ws).
+    pub l: Option<usize>,
+    /// Candidate-slot bucket (marginal).
+    pub m: Option<usize>,
+    /// File name inside the artifact directory.
+    pub filename: String,
+}
+
+fn parse_dim(tok: &str, line_no: usize) -> Result<Option<usize>> {
+    if tok == "-" {
+        return Ok(None);
+    }
+    tok.parse::<usize>().map(Some).map_err(|_| {
+        Error::Manifest(format!("line {line_no}: bad dimension token {tok:?}"))
+    })
+}
+
+/// Parse manifest text into artifact metadata.
+pub fn parse(text: &str) -> Result<Vec<ArtifactMeta>> {
+    let mut out = Vec::new();
+    for (i, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let f: Vec<&str> = line.split_whitespace().collect();
+        if f.len() != 8 {
+            return Err(Error::Manifest(format!(
+                "line {}: expected 8 fields, got {}",
+                i + 1,
+                f.len()
+            )));
+        }
+        let t = f[2]
+            .parse::<usize>()
+            .map_err(|_| Error::Manifest(format!("line {}: bad T {:?}", i + 1, f[2])))?;
+        let d = f[3]
+            .parse::<usize>()
+            .map_err(|_| Error::Manifest(format!("line {}: bad D {:?}", i + 1, f[3])))?;
+        out.push(ArtifactMeta {
+            kernel: f[0].to_string(),
+            dtype: f[1].to_string(),
+            t,
+            d,
+            k: parse_dim(f[4], i + 1)?,
+            l: parse_dim(f[5], i + 1)?,
+            m: parse_dim(f[6], i + 1)?,
+            filename: f[7].to_string(),
+        });
+    }
+    if out.is_empty() {
+        return Err(Error::Manifest("manifest lists no artifacts".into()));
+    }
+    Ok(out)
+}
+
+/// Read and parse `<dir>/manifest.txt`.
+pub fn load(dir: &std::path::Path) -> Result<Vec<ArtifactMeta>> {
+    let path = dir.join("manifest.txt");
+    let text = std::fs::read_to_string(&path).map_err(|e| {
+        Error::Manifest(format!(
+            "cannot read {} — run `make artifacts` first ({e})",
+            path.display()
+        ))
+    })?;
+    parse(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# exemcl AOT artifact manifest
+# kernel dtype T D K L M filename
+eval_ws f32 4096 100 64 64 - eval_ws_f32_t4096_d100_k64_l64.hlo.txt
+marginal f16 4096 16 - - 512 marginal_f16_t4096_d16_m512.hlo.txt
+update_dmin f32 4096 256 - - - update_dmin_f32_t4096_d256.hlo.txt
+";
+
+    #[test]
+    fn parses_sample() {
+        let metas = parse(SAMPLE).unwrap();
+        assert_eq!(metas.len(), 3);
+        assert_eq!(metas[0].kernel, "eval_ws");
+        assert_eq!(metas[0].k, Some(64));
+        assert_eq!(metas[0].l, Some(64));
+        assert_eq!(metas[0].m, None);
+        assert_eq!(metas[1].m, Some(512));
+        assert_eq!(metas[2].k, None);
+    }
+
+    #[test]
+    fn rejects_wrong_field_count() {
+        assert!(parse("eval_ws f32 4096 100 64 64\n").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_numbers() {
+        assert!(parse("eval_ws f32 x 100 64 64 - f.hlo.txt\n").is_err());
+        assert!(parse("eval_ws f32 4096 100 ? 64 - f.hlo.txt\n").is_err());
+    }
+
+    #[test]
+    fn rejects_empty() {
+        assert!(parse("# only comments\n").is_err());
+    }
+}

@@ -1,0 +1,16 @@
+//! Run-time PJRT layer: loads the AOT artifacts produced by
+//! `python/compile/aot.py` and executes them from the L3 hot path.
+//!
+//! The interchange is HLO **text** (`HloModuleProto::from_text_file`),
+//! compiled once per artifact and memoized; the ground set is
+//! device-resident from construction. Python never runs here.
+
+pub mod device;
+pub mod evaluator;
+pub mod manifest;
+pub mod registry;
+
+pub use device::{Device, DeviceStats};
+pub use evaluator::{DeviceEvaluator, EvalConfig};
+pub use manifest::ArtifactMeta;
+pub use registry::ArtifactRegistry;

@@ -1,0 +1,202 @@
+//! Bucket selection over the artifact family.
+//!
+//! Artifacts have static shapes; a request of shape `(d, k)` is served by
+//! the *smallest* bucket with `D >= d` and `K >= k` (padding cost grows
+//! with bucket slack). Missing buckets produce [`crate::Error::NoArtifact`]
+//! with a hint listing what exists.
+
+use std::path::{Path, PathBuf};
+
+use super::manifest::{self, ArtifactMeta};
+use crate::{Error, Result};
+
+/// The artifact directory plus its parsed manifest.
+#[derive(Clone, Debug)]
+pub struct ArtifactRegistry {
+    dir: PathBuf,
+    metas: Vec<ArtifactMeta>,
+}
+
+impl ArtifactRegistry {
+    /// Load `<dir>/manifest.txt`.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let metas = manifest::load(&dir)?;
+        Ok(Self { dir, metas })
+    }
+
+    /// Build from already-parsed metadata (tests).
+    pub fn from_metas(dir: impl AsRef<Path>, metas: Vec<ArtifactMeta>) -> Self {
+        Self { dir: dir.as_ref().to_path_buf(), metas }
+    }
+
+    /// All artifacts.
+    pub fn metas(&self) -> &[ArtifactMeta] {
+        &self.metas
+    }
+
+    /// Absolute path of an artifact file.
+    pub fn path_of(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.filename)
+    }
+
+    /// Distinct ground-tile sizes available for dimensionality `d`
+    /// (ascending). The tile planner covers N with big tiles plus one
+    /// small remainder tile to minimize padding waste.
+    pub fn tile_buckets(&self, d: usize) -> Vec<usize> {
+        let mut ts: Vec<usize> = self
+            .metas
+            .iter()
+            .filter(|m| m.kernel == "update_dmin" && m.d >= d)
+            .map(|m| m.t)
+            .collect();
+        ts.sort_unstable();
+        ts.dedup();
+        ts
+    }
+
+    /// Smallest `eval_ws` bucket covering `(d, k)` at tile size `t`.
+    pub fn find_eval_ws(&self, dtype: &str, d: usize, k: usize, t: usize) -> Result<&ArtifactMeta> {
+        self.find(
+            "eval_ws",
+            dtype,
+            |m| m.t == t && m.d >= d && m.k.is_some_and(|mk| mk >= k),
+            |m| (m.d, m.k.unwrap_or(usize::MAX)),
+            d,
+            k,
+        )
+    }
+
+    /// Smallest `marginal` bucket covering `d` at tile size `t`.
+    pub fn find_marginal(&self, dtype: &str, d: usize, t: usize) -> Result<&ArtifactMeta> {
+        self.find("marginal", dtype, |m| m.t == t && m.d >= d, |m| (m.d, 0), d, 0)
+    }
+
+    /// Smallest `assign` bucket covering `(d, k)` at tile size `t` (f32).
+    pub fn find_assign(&self, d: usize, k: usize, t: usize) -> Result<&ArtifactMeta> {
+        self.find(
+            "assign",
+            "f32",
+            |m| m.t == t && m.d >= d && m.k.is_some_and(|mk| mk >= k),
+            |m| (m.d, m.k.unwrap_or(usize::MAX)),
+            d,
+            k,
+        )
+    }
+
+    /// Smallest `update_dmin` bucket covering `d` at tile size `t` (f32).
+    pub fn find_update_dmin(&self, d: usize, t: usize) -> Result<&ArtifactMeta> {
+        self.find("update_dmin", "f32", |m| m.t == t && m.d >= d, |m| (m.d, 0), d, 0)
+    }
+
+    fn find<F, K>(
+        &self,
+        kernel: &str,
+        dtype: &str,
+        fits: F,
+        key: K,
+        d: usize,
+        k: usize,
+    ) -> Result<&ArtifactMeta>
+    where
+        F: Fn(&ArtifactMeta) -> bool,
+        K: Fn(&ArtifactMeta) -> (usize, usize),
+    {
+        self.metas
+            .iter()
+            .filter(|m| m.kernel == kernel && m.dtype == dtype && fits(m))
+            .min_by_key(|m| key(m))
+            .ok_or_else(|| {
+                let have: Vec<String> = self
+                    .metas
+                    .iter()
+                    .filter(|m| m.kernel == kernel)
+                    .map(|m| format!("{}:d{}k{:?}", m.dtype, m.d, m.k))
+                    .collect();
+                Error::NoArtifact {
+                    kernel: kernel.into(),
+                    dtype: dtype.into(),
+                    d,
+                    k,
+                    hint: format!("available: [{}]", have.join(", ")),
+                }
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(kernel: &str, dtype: &str, d: usize, k: Option<usize>) -> ArtifactMeta {
+        ArtifactMeta {
+            kernel: kernel.into(),
+            dtype: dtype.into(),
+            t: 4096,
+            d,
+            k,
+            l: Some(64),
+            m: None,
+            filename: format!("{kernel}_{dtype}_d{d}.hlo.txt"),
+        }
+    }
+
+    fn registry() -> ArtifactRegistry {
+        ArtifactRegistry::from_metas(
+            "/tmp",
+            vec![
+                meta("eval_ws", "f32", 16, Some(16)),
+                meta("eval_ws", "f32", 16, Some(64)),
+                meta("eval_ws", "f32", 100, Some(16)),
+                meta("eval_ws", "f32", 100, Some(512)),
+                meta("eval_ws", "f16", 100, Some(16)),
+                meta("marginal", "f32", 100, None),
+                meta("update_dmin", "f32", 256, None),
+            ],
+        )
+    }
+
+    #[test]
+    fn picks_smallest_fitting_bucket() {
+        let r = registry();
+        let m = r.find_eval_ws("f32", 10, 10, 4096).unwrap();
+        assert_eq!((m.d, m.k), (16, Some(16)));
+        let m = r.find_eval_ws("f32", 10, 20, 4096).unwrap();
+        assert_eq!((m.d, m.k), (16, Some(64)));
+        let m = r.find_eval_ws("f32", 100, 100, 4096).unwrap();
+        assert_eq!((m.d, m.k), (100, Some(512)));
+    }
+
+    #[test]
+    fn dtype_is_respected() {
+        let r = registry();
+        let m = r.find_eval_ws("f16", 50, 10, 4096).unwrap();
+        assert_eq!(m.dtype, "f16");
+        assert!(r.find_eval_ws("bf16", 50, 10, 4096).is_err());
+    }
+
+    #[test]
+    fn tile_size_is_respected() {
+        let r = registry();
+        assert!(r.find_eval_ws("f32", 10, 10, 512).is_err());
+        assert_eq!(r.tile_buckets(100), vec![4096]);
+        assert!(r.tile_buckets(300).is_empty());
+    }
+
+    #[test]
+    fn missing_bucket_error_has_hint() {
+        let r = registry();
+        let err = r.find_eval_ws("f32", 300, 10, 4096).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("eval_ws"));
+        assert!(msg.contains("available"));
+    }
+
+    #[test]
+    fn marginal_and_update_dmin_lookup() {
+        let r = registry();
+        assert_eq!(r.find_marginal("f32", 64, 4096).unwrap().d, 100);
+        assert_eq!(r.find_update_dmin(200, 4096).unwrap().d, 256);
+        assert!(r.find_marginal("f32", 101, 4096).is_err());
+    }
+}

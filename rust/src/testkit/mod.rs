@@ -1,0 +1,80 @@
+//! Mini property-testing kit (the offline crate set has no proptest).
+//!
+//! [`forall`] runs a property over `cases` generated inputs from a seeded
+//! [`Rng`]; on failure it panics with the case index, the per-case seed
+//! (so the failure replays deterministically) and the debug-printed
+//! input. No shrinking — inputs are kept small by construction instead.
+
+use crate::data::Rng;
+
+/// Run `prop` over `cases` inputs drawn by `gen`. Panics on the first
+/// failing case with enough context to replay it.
+pub fn forall<T, G, P>(cases: usize, seed: u64, gen: G, prop: P)
+where
+    T: std::fmt::Debug,
+    G: Fn(&mut Rng) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let case_seed = seed ^ (0x9E3779B97F4A7C15u64.wrapping_mul(case as u64 + 1));
+        let mut rng = Rng::new(case_seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed at case {case}/{cases} (seed {case_seed:#x}):\n  {msg}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+/// Assert two float slices agree within `rtol`/`atol` (mirrors
+/// numpy.testing.assert_allclose).
+pub fn assert_allclose(got: &[f32], want: &[f32], rtol: f32, atol: f32) {
+    assert_eq!(got.len(), want.len(), "length mismatch");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let tol = atol + rtol * w.abs();
+        assert!(
+            (g - w).abs() <= tol,
+            "mismatch at {i}: got {g}, want {w} (tol {tol})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall(50, 1, |r| r.below(100), |&x| {
+            if x < 100 {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failure() {
+        forall(10, 2, |r| r.below(10), |&x| {
+            if x < 5 {
+                Ok(())
+            } else {
+                Err("too big".into())
+            }
+        });
+    }
+
+    #[test]
+    fn allclose_tolerates_within_bounds() {
+        assert_allclose(&[1.0, 2.0], &[1.0001, 2.0], 1e-3, 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch")]
+    fn allclose_detects_mismatch() {
+        assert_allclose(&[1.0], &[2.0], 1e-6, 1e-6);
+    }
+}

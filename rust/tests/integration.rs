@@ -1,0 +1,197 @@
+//! Cross-module integration tests on the CPU path (no artifacts needed):
+//! packing ↔ evaluation consistency, chunk-plan coverage, optimizer ↔
+//! oracle agreement, clustering extraction.
+
+use exemcl::chunk;
+use exemcl::clustering;
+use exemcl::cpu::{loss_sum_blocked, loss_sum_naive, MultiThread, SingleThread};
+use exemcl::data::synth::{GaussianBlobs, UniformCube};
+use exemcl::data::{Dataset, Rng};
+use exemcl::distance::{Dissimilarity, Manhattan, RbfInduced, SqEuclidean};
+use exemcl::optim::{Greedy, Optimizer, Oracle};
+use exemcl::pack::{PackOrder, SMultiPack};
+use exemcl::testkit::forall;
+
+fn random_sets(rng: &mut Rng, n: usize, l: usize, k_max: usize) -> Vec<Vec<usize>> {
+    let mut out = Vec::with_capacity(l);
+    for _ in 0..l {
+        let k = rng.below(k_max) + 1;
+        out.push(rng.sample_indices(n, k));
+    }
+    out
+}
+
+#[test]
+fn pack_roundtrip_preserves_every_vector() {
+    forall(
+        30,
+        0xA11CE,
+        |rng| {
+            let n = rng.below(40) + 8;
+            let d = rng.below(6) + 1;
+            let ds = UniformCube::new(d, 1.0).generate(n, rng.next_u64());
+            let l = rng.below(5) + 1;
+            let sets = random_sets(rng, n, l, 6);
+            (ds, sets)
+        },
+        |(ds, sets)| {
+            for order in [PackOrder::RoundRobin, PackOrder::SetMajor] {
+                let pack = SMultiPack::from_indices(ds, sets, 0, order)
+                    .map_err(|e| e.to_string())?;
+                for (li, set) in sets.iter().enumerate() {
+                    for (slot, &idx) in set.iter().enumerate() {
+                        if pack.slot(li, slot) != ds.row(idx) {
+                            return Err(format!("slot ({li},{slot}) corrupted"));
+                        }
+                        if !pack.is_valid(li, slot) {
+                            return Err(format!("slot ({li},{slot}) masked off"));
+                        }
+                    }
+                    for slot in set.len()..pack.k_max {
+                        if pack.is_valid(li, slot) {
+                            return Err(format!("padding ({li},{slot}) marked valid"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn chunk_plans_cover_all_sets_without_overlap() {
+    forall(
+        100,
+        0xC0FFEE,
+        |rng| {
+            let l = rng.below(500) + 1;
+            let per_set = rng.below(4096) + 1;
+            let free = per_set + rng.below(per_set * l + 1);
+            (l, per_set, free)
+        },
+        |&(l, per_set, free)| {
+            let plan = chunk::plan(l, per_set, free).map_err(|e| e.to_string())?;
+            let mut covered = 0usize;
+            for (start, count) in plan.ranges() {
+                if start != covered {
+                    return Err(format!("gap/overlap at {start} (covered {covered})"));
+                }
+                if count == 0 || count > plan.chunk_size {
+                    return Err(format!("bad count {count}"));
+                }
+                // the memory constraint itself
+                if count * per_set > free {
+                    return Err(format!("chunk of {count} sets exceeds budget"));
+                }
+                covered += count;
+            }
+            if covered != l {
+                return Err(format!("covered {covered} of {l}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn st_mt_and_kernel_variants_agree() {
+    forall(
+        15,
+        0xBEEF,
+        |rng| {
+            let n = rng.below(60) + 16;
+            let d = rng.below(8) + 1;
+            let ds = UniformCube::new(d, 1.0).generate(n, rng.next_u64());
+            let l = rng.below(4) + 1;
+            let sets = random_sets(rng, n, l, 5);
+            (ds, sets)
+        },
+        |(ds, sets)| {
+            let st = SingleThread::new(ds.clone());
+            let mt = MultiThread::new(ds.clone(), 3);
+            let a = st.eval_sets(sets).map_err(|e| e.to_string())?;
+            let b = mt.eval_sets(sets).map_err(|e| e.to_string())?;
+            for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+                if (x - y).abs() > 1e-4 {
+                    return Err(format!("set {i}: st {x} vs mt {y}"));
+                }
+            }
+            // kernel variants agree on loss sums
+            for set in sets {
+                let naive = loss_sum_naive(ds, set);
+                let blocked = loss_sum_blocked(ds, set);
+                if (naive - blocked).abs() > 1e-3 * naive.abs().max(1.0) {
+                    return Err(format!("kernels disagree: {naive} vs {blocked}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn greedy_then_assign_is_consistent() {
+    let ds = GaussianBlobs::new(3, 4, 0.2).generate(90, 5);
+    let st = SingleThread::new(ds.clone());
+    let r = Greedy::new(3).maximize(&st).unwrap();
+    let c = clustering::assign(&ds, &r.exemplars);
+    // the k-medoids loss of the assignment must equal L(S) implied by f(S):
+    // f(S) = L0 - L(S ∪ {e0}); with well-spread exemplars no point prefers
+    // e0, so L(S ∪ {e0}) == loss of the assignment.
+    let n = ds.n() as f64;
+    let l0 = ds.l0_sum() / n;
+    let implied_loss = l0 - r.value as f64;
+    assert!(
+        (implied_loss - c.loss as f64).abs() < 1e-3 * implied_loss.abs().max(1.0),
+        "implied {implied_loss} vs assigned {}",
+        c.loss
+    );
+}
+
+#[test]
+fn arbitrary_dissimilarities_preserve_oracle_invariants() {
+    // the paper: any non-negative d works (§IV). Check monotonicity of f
+    // under set growth for three dissimilarities.
+    let ds = UniformCube::new(4, 1.0).generate(50, 9);
+    fn check<D: Dissimilarity>(ds: &Dataset, dist: D) {
+        let st = SingleThread::with_distance(ds.clone(), dist);
+        let sets = vec![vec![0], vec![0, 10], vec![0, 10, 20, 30]];
+        let vals = st.eval_sets(&sets).unwrap();
+        assert!(vals[0] <= vals[1] + 1e-5 && vals[1] <= vals[2] + 1e-5,
+            "monotonicity violated: {vals:?}");
+        assert!(vals.iter().all(|&v| v >= -1e-5), "negative f: {vals:?}");
+    }
+    check(&ds, SqEuclidean);
+    check(&ds, Manhattan);
+    check(&ds, RbfInduced::new(0.5));
+}
+
+#[test]
+fn empty_and_full_set_bounds() {
+    let ds = UniformCube::new(3, 1.0).generate(40, 3);
+    let st = SingleThread::new(ds.clone());
+    let all: Vec<usize> = (0..ds.n()).collect();
+    let vals = st.eval_sets(&[vec![], all]).unwrap();
+    assert!(vals[0].abs() < 1e-6, "f(∅) = {}", vals[0]);
+    // f(V) = L0 - L(V ∪ e0) and L(V ∪ e0) = 0 since every point is its own
+    // exemplar -> f(V) = L({e0})
+    let l0 = (ds.l0_sum() / ds.n() as f64) as f32;
+    assert!((vals[1] - l0).abs() < 1e-4, "f(V) = {} vs L0 = {l0}", vals[1]);
+}
+
+#[test]
+fn dataset_csv_roundtrip_through_eval() {
+    // write a dataset to CSV, read it back, evaluation must match
+    let ds = UniformCube::new(3, 1.0).generate(20, 77);
+    let mut text = String::new();
+    for i in 0..ds.n() {
+        let row: Vec<String> = ds.row(i).iter().map(|x| format!("{x:.9}")).collect();
+        text.push_str(&row.join(","));
+        text.push('\n');
+    }
+    let back = exemcl::data::csv::parse(text.as_bytes(), &Default::default()).unwrap();
+    let a = SingleThread::new(ds).eval_sets(&[vec![0, 5]]).unwrap();
+    let b = SingleThread::new(back).eval_sets(&[vec![0, 5]]).unwrap();
+    assert!((a[0] - b[0]).abs() < 1e-5);
+}

@@ -1,0 +1,229 @@
+//! Device-vs-CPU numerics: the AOT/PJRT path must agree with the literal
+//! Algorithm 2 within float tolerance, across shapes, dtypes, chunking
+//! regimes and pack orders. Requires `make artifacts`.
+
+use exemcl::chunk::MemoryModel;
+use exemcl::cpu::SingleThread;
+use exemcl::data::synth::{GaussianBlobs, UniformCube};
+use exemcl::data::Rng;
+use exemcl::optim::{Greedy, Optimizer, Oracle};
+use exemcl::pack::PackOrder;
+use exemcl::runtime::{DeviceEvaluator, EvalConfig};
+use exemcl::testkit::assert_allclose;
+
+fn artifacts() -> String {
+    let dir = std::env::var("EXEMCL_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    assert!(
+        std::path::Path::new(&dir).join("manifest.txt").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    dir
+}
+
+fn random_sets(seed: u64, n: usize, l: usize, k_max: usize) -> Vec<Vec<usize>> {
+    let mut rng = Rng::new(seed);
+    (0..l)
+        .map(|_| {
+            let k = rng.below(k_max) + 1;
+            rng.sample_indices(n, k)
+        })
+        .collect()
+}
+
+#[test]
+fn eval_sets_matches_cpu_f32() {
+    let ds = UniformCube::new(7, 1.0).generate(1000, 1);
+    let dev = DeviceEvaluator::from_dir(artifacts(), &ds, EvalConfig::default()).unwrap();
+    let cpu = SingleThread::new(ds.clone());
+    let sets = random_sets(2, ds.n(), 37, 12);
+    let got = dev.eval_sets(&sets).unwrap();
+    let want = cpu.eval_sets(&sets).unwrap();
+    assert_allclose(&got, &want, 1e-4, 1e-4);
+}
+
+#[test]
+fn eval_sets_spanning_multiple_ground_tiles() {
+    // n > T=4096 forces the tile loop + partial-sum merge
+    let ds = UniformCube::new(3, 1.0).generate(9000, 2);
+    let dev = DeviceEvaluator::from_dir(artifacts(), &ds, EvalConfig::default()).unwrap();
+    assert!(dev.n_tiles() >= 3, "expected >= 3 tiles, got {}", dev.n_tiles());
+    let cpu = SingleThread::new(ds.clone());
+    let sets = random_sets(3, ds.n(), 10, 8);
+    let got = dev.eval_sets(&sets).unwrap();
+    let want = cpu.eval_sets(&sets).unwrap();
+    assert_allclose(&got, &want, 1e-4, 1e-4);
+}
+
+#[test]
+fn eval_sets_with_empty_and_unequal_sets() {
+    let ds = UniformCube::new(5, 1.0).generate(600, 4);
+    let dev = DeviceEvaluator::from_dir(artifacts(), &ds, EvalConfig::default()).unwrap();
+    let cpu = SingleThread::new(ds.clone());
+    let sets = vec![vec![], vec![0], vec![1, 2, 3, 4, 5, 6, 7, 8], vec![599]];
+    let got = dev.eval_sets(&sets).unwrap();
+    let want = cpu.eval_sets(&sets).unwrap();
+    assert_allclose(&got, &want, 1e-4, 1e-4);
+    assert!(got[0].abs() < 1e-5, "f(∅) must be 0, got {}", got[0]);
+}
+
+#[test]
+fn chunked_evaluation_matches_unchunked() {
+    let ds = UniformCube::new(7, 1.0).generate(800, 5);
+    let sets = random_sets(6, ds.n(), 64, 6);
+
+    let ample = DeviceEvaluator::from_dir(artifacts(), &ds, EvalConfig::default()).unwrap();
+    let want = ample.eval_sets(&sets).unwrap();
+
+    // budget sized for ~5 sets per chunk
+    let probe = MemoryModel::default();
+    let ground = ds.n() * 16 * 4 + ds.n() * 4;
+    let tight = MemoryModel {
+        total_bytes: ground + probe.per_set_bytes(16, 16) * 5,
+        ..MemoryModel::default()
+    };
+    let chunked = DeviceEvaluator::from_dir(
+        artifacts(),
+        &ds,
+        EvalConfig { memory: tight, ..EvalConfig::default() },
+    )
+    .unwrap();
+    let got = chunked.eval_sets(&sets).unwrap();
+    assert_allclose(&got, &want, 1e-6, 1e-6);
+}
+
+#[test]
+fn oom_budget_fails_with_chunk_error() {
+    let ds = UniformCube::new(7, 1.0).generate(500, 6);
+    let tiny = MemoryModel { total_bytes: 1, ..MemoryModel::default() };
+    let dev = DeviceEvaluator::from_dir(
+        artifacts(),
+        &ds,
+        EvalConfig { memory: tiny, ..EvalConfig::default() },
+    )
+    .unwrap();
+    let err = dev.eval_sets(&[vec![0, 1]]).unwrap_err();
+    assert!(
+        matches!(err, exemcl::Error::ChunkOom { .. }),
+        "expected ChunkOom, got {err}"
+    );
+}
+
+#[test]
+fn pack_orders_produce_identical_results() {
+    let ds = UniformCube::new(7, 1.0).generate(700, 7);
+    let sets = random_sets(8, ds.n(), 20, 9);
+    let rr = DeviceEvaluator::from_dir(
+        artifacts(),
+        &ds,
+        EvalConfig { pack_order: PackOrder::RoundRobin, ..EvalConfig::default() },
+    )
+    .unwrap();
+    let sm = DeviceEvaluator::from_dir(
+        artifacts(),
+        &ds,
+        EvalConfig { pack_order: PackOrder::SetMajor, ..EvalConfig::default() },
+    )
+    .unwrap();
+    let a = rr.eval_sets(&sets).unwrap();
+    let b = sm.eval_sets(&sets).unwrap();
+    assert_allclose(&a, &b, 1e-7, 1e-7);
+}
+
+#[test]
+fn f16_and_bf16_within_tolerance() {
+    let ds = UniformCube::new(7, 1.0).generate(900, 9);
+    let cpu = SingleThread::new(ds.clone());
+    let sets = random_sets(10, ds.n(), 24, 8);
+    let want = cpu.eval_sets(&sets).unwrap();
+    for dtype in ["f16", "bf16"] {
+        let dev = DeviceEvaluator::from_dir(
+            artifacts(),
+            &ds,
+            EvalConfig { dtype: dtype.into(), ..EvalConfig::default() },
+        )
+        .unwrap();
+        let got = dev.eval_sets(&sets).unwrap();
+        // reduced-precision matmul: generous relative tolerance
+        assert_allclose(&got, &want, 5e-2, 5e-2);
+    }
+}
+
+#[test]
+fn marginal_gains_match_cpu_and_respect_state() {
+    let ds = UniformCube::new(7, 1.0).generate(800, 11);
+    let dev = DeviceEvaluator::from_dir(artifacts(), &ds, EvalConfig::default()).unwrap();
+    let cpu = SingleThread::new(ds.clone());
+
+    let mut dstate = dev.init_state();
+    let mut cstate = cpu.init_state();
+    for &e in &[3usize, 99, 500] {
+        dev.commit(&mut dstate, e).unwrap();
+        cpu.commit(&mut cstate, e).unwrap();
+    }
+    assert_allclose(&dstate.dmin, &cstate.dmin, 1e-4, 1e-4);
+
+    let cands: Vec<usize> = (0..200).collect();
+    let got = dev.marginal_gains(&dstate, &cands).unwrap();
+    let want = cpu.marginal_gains(&cstate, &cands).unwrap();
+    assert_allclose(&got, &want, 1e-3, 1e-4);
+    // re-adding committed exemplars gains ~0
+    let zero = dev.marginal_gains(&dstate, &[3, 99, 500]).unwrap();
+    for z in zero {
+        assert!(z.abs() < 1e-4, "expected zero gain, got {z}");
+    }
+}
+
+#[test]
+fn assign_matches_cpu_nearest_exemplar() {
+    let ds = GaussianBlobs::new(4, 7, 0.3).generate(900, 13);
+    let dev = DeviceEvaluator::from_dir(artifacts(), &ds, EvalConfig::default()).unwrap();
+    let exemplars = vec![0usize, 1, 2, 3];
+    let (labels, dmin) = dev.assign(&exemplars).unwrap();
+    assert_eq!(labels.len(), ds.n());
+
+    let c = exemcl::clustering::assign(&ds, &exemplars);
+    let mut disagreements = 0;
+    for i in 0..ds.n() {
+        if labels[i] as usize != c.labels[i] {
+            disagreements += 1; // float ties may flip; must be rare
+        }
+    }
+    assert!(
+        disagreements * 1000 < ds.n(),
+        "too many label disagreements: {disagreements}"
+    );
+    // dmin must be the e0-clamped minimum
+    for i in 0..ds.n() {
+        let vsq: f32 = ds.row(i).iter().map(|x| x * x).sum();
+        assert!(dmin[i] <= vsq + 1e-3);
+    }
+}
+
+#[test]
+fn device_greedy_equals_cpu_greedy() {
+    let ds = GaussianBlobs::new(3, 7, 0.4).generate(700, 15);
+    let dev = DeviceEvaluator::from_dir(artifacts(), &ds, EvalConfig::default()).unwrap();
+    let cpu = SingleThread::new(ds.clone());
+    let a = Greedy::new(3).maximize(&dev).unwrap();
+    let b = Greedy::new(3).maximize(&cpu).unwrap();
+    assert!(
+        (a.value - b.value).abs() < 2e-3 * b.value.abs().max(1.0),
+        "device {} vs cpu {}",
+        a.value,
+        b.value
+    );
+}
+
+#[test]
+fn transfer_accounting_counts_uploads() {
+    let ds = UniformCube::new(7, 1.0).generate(500, 17);
+    let dev = DeviceEvaluator::from_dir(artifacts(), &ds, EvalConfig::default()).unwrap();
+    let before = dev.stats();
+    // ground upload happened at construction: one V + one mask per tile
+    assert_eq!(before.h2d_transfers as usize, 2 * dev.n_tiles());
+    dev.eval_sets(&[vec![0, 1]]).unwrap();
+    let after = dev.stats();
+    // exactly one S + one mask upload for a single window
+    assert_eq!(after.h2d_transfers - before.h2d_transfers, 2);
+    assert!(after.executions > before.executions);
+}

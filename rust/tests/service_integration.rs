@@ -1,0 +1,141 @@
+//! Coordinator integration over the real device backend: the service
+//! pins the PJRT evaluator to its executor thread, serves concurrent
+//! clients, coalesces multiset requests and drives every optimizer.
+//! Requires `make artifacts`.
+
+use exemcl::coordinator::EvalService;
+use exemcl::cpu::SingleThread;
+use exemcl::data::synth::GaussianBlobs;
+use exemcl::data::Rng;
+use exemcl::optim::{Greedy, LazyGreedy, Optimizer, Oracle, SieveStreaming};
+use exemcl::runtime::{DeviceEvaluator, EvalConfig};
+use exemcl::testkit::assert_allclose;
+
+fn artifacts() -> String {
+    let dir = std::env::var("EXEMCL_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    assert!(
+        std::path::Path::new(&dir).join("manifest.txt").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    dir
+}
+
+fn spawn_device_service(n: usize, seed: u64) -> (EvalService, exemcl::data::Dataset) {
+    let ds = GaussianBlobs::new(4, 7, 0.4).generate(n, seed);
+    let ds2 = ds.clone();
+    let dir = artifacts();
+    let svc = EvalService::spawn(
+        move || DeviceEvaluator::from_dir(&dir, &ds2, EvalConfig::default()),
+        16,
+    )
+    .unwrap();
+    (svc, ds)
+}
+
+#[test]
+fn service_device_matches_cpu() {
+    let (svc, ds) = spawn_device_service(600, 1);
+    let h = svc.handle();
+    let cpu = SingleThread::new(ds);
+    let mut rng = Rng::new(2);
+    let sets: Vec<Vec<usize>> = (0..12).map(|_| rng.sample_indices(600, 6)).collect();
+    let got = h.eval_sets(&sets).unwrap();
+    let want = cpu.eval_sets(&sets).unwrap();
+    assert_allclose(&got, &want, 1e-4, 1e-4);
+    svc.shutdown();
+}
+
+#[test]
+fn concurrent_clients_get_correct_slices() {
+    let (svc, ds) = spawn_device_service(500, 3);
+    let cpu = SingleThread::new(ds);
+    let mut expected = Vec::new();
+    let mut threads = Vec::new();
+    for t in 0..6usize {
+        let mut rng = Rng::new(100 + t as u64);
+        let sets: Vec<Vec<usize>> = (0..5).map(|_| rng.sample_indices(500, 4)).collect();
+        expected.push(cpu.eval_sets(&sets).unwrap());
+        let h = svc.handle();
+        threads.push(std::thread::spawn(move || h.eval_sets(&sets).unwrap()));
+    }
+    for (t, th) in threads.into_iter().enumerate() {
+        let got = th.join().unwrap();
+        assert_allclose(&got, &expected[t], 1e-4, 1e-4);
+    }
+    // all 30 sets must be accounted for, possibly coalesced into fewer batches
+    assert_eq!(svc.metrics().sets_evaluated.get(), 30);
+    assert!(svc.metrics().batches.get() <= 30);
+    svc.shutdown();
+}
+
+#[test]
+fn optimizers_drive_the_service_end_to_end() {
+    let (svc, ds) = spawn_device_service(400, 5);
+    let h = svc.handle();
+    let cpu = SingleThread::new(ds);
+
+    let dev_greedy = Greedy::new(3).maximize(&h).unwrap();
+    let cpu_greedy = Greedy::new(3).maximize(&cpu).unwrap();
+    assert!(
+        (dev_greedy.value - cpu_greedy.value).abs()
+            < 2e-3 * cpu_greedy.value.abs().max(1.0),
+        "service {} vs cpu {}",
+        dev_greedy.value,
+        cpu_greedy.value
+    );
+
+    let lazy = LazyGreedy::new(3).maximize(&h).unwrap();
+    assert!((lazy.value - cpu_greedy.value).abs() < 2e-3 * cpu_greedy.value.abs().max(1.0));
+
+    let sieve = SieveStreaming::new(3, 0.25, 7).maximize(&h).unwrap();
+    assert!(sieve.value >= 0.45 * cpu_greedy.value);
+    svc.shutdown();
+}
+
+#[test]
+fn metrics_track_latency_and_queue() {
+    let (svc, _) = spawn_device_service(300, 9);
+    let h = svc.handle();
+    for _ in 0..5 {
+        h.eval_sets(&[vec![0, 1, 2]]).unwrap();
+    }
+    let m = svc.metrics();
+    assert_eq!(m.requests.get(), 5);
+    assert!(m.latency.count() >= 5);
+    assert!(m.latency.mean_us() > 0.0);
+    assert_eq!(h.queue_depth(), 0, "queue must drain");
+    // summary renders without panicking
+    assert!(m.summary().contains("requests=5"));
+    svc.shutdown();
+}
+
+#[test]
+fn greedi_runs_threaded_through_the_service() {
+    // GreeDi round 1 = one OS thread per partition, all hammering the
+    // same executor — the coordinator's multi-client path under load.
+    use exemcl::optim::GreeDi;
+    let (svc, ds) = spawn_device_service(600, 21);
+    let h = svc.handle();
+    let distributed = GreeDi::new(4, 3, 9).run_threaded(&h).unwrap();
+    let central = Greedy::new(4).maximize(&SingleThread::new(ds)).unwrap();
+    assert!(
+        distributed.value >= 0.8 * central.value,
+        "greedi {} vs central greedy {}",
+        distributed.value,
+        central.value
+    );
+    assert!(distributed.exemplars.len() <= 4);
+    assert!(svc.metrics().requests.get() > 0);
+    svc.shutdown();
+}
+
+#[test]
+fn service_survives_invalid_requests() {
+    let (svc, _) = spawn_device_service(200, 11);
+    let h = svc.handle();
+    // out-of-range index -> error reply, service keeps running
+    assert!(h.eval_sets(&[vec![9999]]).is_err());
+    let ok = h.eval_sets(&[vec![0]]).unwrap();
+    assert_eq!(ok.len(), 1);
+    svc.shutdown();
+}
