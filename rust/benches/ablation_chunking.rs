@@ -5,17 +5,33 @@
 //!
 //! Run: `cargo bench --bench ablation_chunking`
 
+#[cfg(feature = "xla-backend")]
 #[path = "common.rs"]
 mod common;
 
+#[cfg(feature = "xla-backend")]
 use std::time::Instant;
 
+#[cfg(feature = "xla-backend")]
 use exemcl::bench::{Scale, Table};
+#[cfg(feature = "xla-backend")]
 use exemcl::chunk::{self, MemoryModel};
+#[cfg(feature = "xla-backend")]
 use exemcl::data::synth::UniformCube;
+#[cfg(feature = "xla-backend")]
 use exemcl::optim::Oracle;
+#[cfg(feature = "xla-backend")]
 use exemcl::runtime::{DeviceEvaluator, EvalConfig};
 
+#[cfg(not(feature = "xla-backend"))]
+fn main() {
+    eprintln!(
+        "ablation_chunking requires the `xla-backend` feature (PJRT device runtime); \
+         rebuild with `cargo bench --features xla-backend --bench ablation_chunking`"
+    );
+}
+
+#[cfg(feature = "xla-backend")]
 fn main() {
     let scale = Scale::from_env();
     let (n, l, k, d) = match scale {

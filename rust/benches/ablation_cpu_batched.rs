@@ -1,0 +1,238 @@
+//! CPU batched-evaluation ablation: the optimizer-aware batched backend
+//! (persistent worker pool + cache-blocked Gram kernels) against the seed
+//! per-candidate path, which streamed the entire dataset once *per
+//! candidate* and spawned a fresh `std::thread::scope` (with
+//! `Mutex<&mut f32>` output slots) on every call.
+//!
+//! The headline measurement is `marginal_gains` at the issue's target
+//! shape — n=50k, d=32, |C|=256, threads=available — where the batched
+//! kernel must be ≥3× faster than the seed path; a multiset `eval_sets`
+//! comparison rides along. Results are printed as a table and emitted to
+//! `BENCH_cpu.json` (override with `EXEMCL_BENCH_CPU_OUT`) so the
+//! speedup lands in the perf trajectory.
+//!
+//! Run: `cargo bench --bench ablation_cpu_batched`
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use exemcl::bench::{measure, write_json, JsonValue, Scale, Table};
+use exemcl::cpu::{marginal_gains_naive, MultiThread};
+use exemcl::data::synth::UniformCube;
+use exemcl::data::{Dataset, Rng};
+use exemcl::distance::SqEuclidean;
+use exemcl::optim::Oracle;
+
+/// The seed implementation of `MultiThread::marginal_gains`, verbatim in
+/// structure: per-call scoped thread spawns, one task per candidate, each
+/// streaming the whole dataset, Mutex-guarded output slots.
+fn seed_marginal_gains(
+    ds: &Dataset,
+    dmin: &[f32],
+    candidates: &[usize],
+    threads: usize,
+) -> Vec<f32> {
+    let n = ds.n() as f64;
+    let mut out = vec![0.0f32; candidates.len()];
+    {
+        let cursor = AtomicUsize::new(0);
+        let slots: Vec<Mutex<&mut f32>> = out.iter_mut().map(Mutex::new).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..threads.min(candidates.len()).max(1) {
+                let cursor = &cursor;
+                let slots = &slots;
+                scope.spawn(move || loop {
+                    let j = cursor.fetch_add(1, Ordering::Relaxed);
+                    if j >= candidates.len() {
+                        break;
+                    }
+                    let cv = ds.row(candidates[j]);
+                    let mut gain = 0.0f64;
+                    for i in 0..ds.n() {
+                        let v = ds.row(i);
+                        let mut d = 0.0f32;
+                        for k in 0..v.len() {
+                            let t = cv[k] - v[k];
+                            d += t * t;
+                        }
+                        let improve = dmin[i] - d;
+                        if improve > 0.0 {
+                            gain += improve as f64;
+                        }
+                    }
+                    **slots[j].lock().unwrap() = (gain / n) as f32;
+                });
+            }
+        });
+    }
+    out
+}
+
+/// The seed multiset `eval_sets` path: per-call scoped spawns, one task
+/// per set, naive scalar distance inner loop, Mutex-guarded slots.
+fn seed_eval_sets(ds: &Dataset, sets: &[Vec<usize>], l0: f64, threads: usize) -> Vec<f32> {
+    let n = ds.n() as f64;
+    let mut out = vec![0.0f32; sets.len()];
+    {
+        let cursor = AtomicUsize::new(0);
+        let slots: Vec<Mutex<&mut f32>> = out.iter_mut().map(Mutex::new).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..threads.min(sets.len()).max(1) {
+                let cursor = &cursor;
+                let slots = &slots;
+                scope.spawn(move || loop {
+                    let j = cursor.fetch_add(1, Ordering::Relaxed);
+                    if j >= sets.len() {
+                        break;
+                    }
+                    let mut acc = 0.0f64;
+                    for i in 0..ds.n() {
+                        let v = ds.row(i);
+                        let mut t: f32 = v.iter().map(|x| x * x).sum();
+                        for &s in &sets[j] {
+                            let sv = ds.row(s);
+                            let mut d = 0.0f32;
+                            for k in 0..v.len() {
+                                let diff = sv[k] - v[k];
+                                d += diff * diff;
+                            }
+                            if d < t {
+                                t = d;
+                            }
+                        }
+                        acc += t as f64;
+                    }
+                    **slots[j].lock().unwrap() = ((l0 - acc) / n) as f32;
+                });
+            }
+        });
+    }
+    out
+}
+
+fn main() {
+    let scale = Scale::from_env();
+    // the issue's target shape is the Default/Full point
+    let (n, reps) = match scale {
+        Scale::Quick => (8_000usize, 2usize),
+        Scale::Default => (50_000, 5),
+        Scale::Full => (50_000, 7),
+    };
+    let d = 32usize;
+    let n_candidates = 256usize;
+    let n_exemplars = 8usize;
+    let threads = std::thread::available_parallelism().map(|x| x.get()).unwrap_or(1);
+
+    println!("\n== CPU batched ablation: pool + Gram kernels vs seed per-candidate path ==");
+    println!("problem: n={n} d={d} |C|={n_candidates} threads={threads} reps={reps}\n");
+
+    let ds = UniformCube::new(d, 1.0).generate(n, 20_250_727);
+    let mt = MultiThread::new(ds.clone(), 0);
+
+    // optimizer state mid-run: a few committed exemplars lower dmin
+    let mut rng = Rng::new(7);
+    let exemplars = rng.sample_indices(n, n_exemplars);
+    let mut state = mt.init_state();
+    mt.commit_many(&mut state, &exemplars).unwrap();
+    let candidates = rng.sample_indices(n, n_candidates);
+
+    // correctness first: batched ≡ seed ≡ naive reference
+    let batched = mt.marginal_gains(&state, &candidates).unwrap();
+    let seed = seed_marginal_gains(&ds, &state.dmin, &candidates, threads);
+    let naive = marginal_gains_naive(&SqEuclidean, &ds, &state.dmin, &candidates);
+    for (c, ((b, s), w)) in batched.iter().zip(&seed).zip(&naive).enumerate() {
+        let tol = 1e-3 * w.abs() + 1e-4;
+        assert!((b - w).abs() <= tol, "cand {c}: batched {b} vs naive {w}");
+        assert!((s - w).abs() <= tol, "cand {c}: seed {s} vs naive {w}");
+    }
+
+    // --- marginal_gains: the acceptance measurement
+    let t_seed = measure(
+        || {
+            seed_marginal_gains(&ds, &state.dmin, &candidates, threads);
+        },
+        reps,
+        true,
+    );
+    let t_batched = measure(
+        || {
+            mt.marginal_gains(&state, &candidates).unwrap();
+        },
+        reps,
+        true,
+    );
+    let speedup_gains = t_seed.min / t_batched.min;
+
+    // --- eval_sets multiset: secondary comparison
+    let mut rng2 = Rng::new(11);
+    let sets: Vec<Vec<usize>> = (0..64).map(|_| rng2.sample_indices(n, 16)).collect();
+    let l0 = mt.l0_sum();
+    let a = mt.eval_sets(&sets).unwrap();
+    let b = seed_eval_sets(&ds, &sets, l0, threads);
+    for (j, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert!((x - y).abs() <= 1e-3 * y.abs().max(1e-3), "set {j}: {x} vs {y}");
+    }
+    let t_seed_eval = measure(
+        || {
+            seed_eval_sets(&ds, &sets, l0, threads);
+        },
+        reps,
+        true,
+    );
+    let t_batched_eval = measure(
+        || {
+            mt.eval_sets(&sets).unwrap();
+        },
+        reps,
+        true,
+    );
+    let speedup_eval = t_seed_eval.min / t_batched_eval.min;
+
+    let mut table = Table::new(&["kernel", "seed[s]", "batched[s]", "speedup"]);
+    table.row(&[
+        format!("marginal_gains (|C|={n_candidates})"),
+        format!("{:.4}", t_seed.min),
+        format!("{:.4}", t_batched.min),
+        format!("{speedup_gains:.2}x"),
+    ]);
+    table.row(&[
+        format!("eval_sets (l={}, k=16)", sets.len()),
+        format!("{:.4}", t_seed_eval.min),
+        format!("{:.4}", t_batched_eval.min),
+        format!("{speedup_eval:.2}x"),
+    ]);
+    table.print();
+
+    let target = 3.0f64;
+    println!(
+        "\nmarginal_gains speedup {:.2}x (target >= {:.1}x: {})",
+        speedup_gains,
+        target,
+        if speedup_gains >= target { "PASS" } else { "MISS" }
+    );
+
+    let out_path =
+        std::env::var("EXEMCL_BENCH_CPU_OUT").unwrap_or_else(|_| "BENCH_cpu.json".into());
+    let path = write_json(
+        &out_path,
+        &[
+            ("bench", JsonValue::Str("ablation_cpu_batched".into())),
+            ("n", JsonValue::Int(n as i64)),
+            ("d", JsonValue::Int(d as i64)),
+            ("candidates", JsonValue::Int(n_candidates as i64)),
+            ("exemplars_committed", JsonValue::Int(n_exemplars as i64)),
+            ("threads", JsonValue::Int(threads as i64)),
+            ("reps", JsonValue::Int(reps as i64)),
+            ("seed_marginal_gains_min_s", JsonValue::Num(t_seed.min)),
+            ("batched_marginal_gains_min_s", JsonValue::Num(t_batched.min)),
+            ("speedup_marginal_gains", JsonValue::Num(speedup_gains)),
+            ("seed_eval_sets_min_s", JsonValue::Num(t_seed_eval.min)),
+            ("batched_eval_sets_min_s", JsonValue::Num(t_batched_eval.min)),
+            ("speedup_eval_sets", JsonValue::Num(speedup_eval)),
+            ("target_speedup", JsonValue::Num(target)),
+            ("target_met", JsonValue::Bool(speedup_gains >= target)),
+        ],
+    )
+    .expect("write BENCH_cpu.json");
+    println!("wrote {path}");
+}

@@ -15,17 +15,33 @@
 //!
 //! Run: `cargo bench --bench ablation_index`
 
+#[cfg(feature = "xla-backend")]
 #[path = "common.rs"]
 mod common;
 
+#[cfg(feature = "xla-backend")]
 use std::time::Instant;
 
+#[cfg(feature = "xla-backend")]
 use exemcl::bench::{Scale, Table};
+#[cfg(feature = "xla-backend")]
 use exemcl::cpu::SingleThread;
+#[cfg(feature = "xla-backend")]
 use exemcl::data::synth::UniformCube;
+#[cfg(feature = "xla-backend")]
 use exemcl::index::IndexedEvaluator;
+#[cfg(feature = "xla-backend")]
 use exemcl::optim::Oracle;
 
+#[cfg(not(feature = "xla-backend"))]
+fn main() {
+    eprintln!(
+        "ablation_index requires the `xla-backend` feature (PJRT device runtime); \
+         rebuild with `cargo bench --features xla-backend --bench ablation_index`"
+    );
+}
+
+#[cfg(feature = "xla-backend")]
 fn main() {
     let scale = Scale::from_env();
     let (n, l, d, ks): (usize, usize, usize, Vec<usize>) = match scale {
@@ -38,7 +54,9 @@ fn main() {
     let tree = IndexedEvaluator::new(ds.clone());
     let (dev, _) = common::device_pair(&ds);
 
-    println!("\n== Index-structure ablation (§IV-A): per-evaluation k-d tree vs scan vs device ==");
+    println!(
+        "\n== Index-structure ablation (§IV-A): per-evaluation k-d tree vs scan vs device =="
+    );
     println!("problem: N={n} l={l} d={d}\n");
 
     let mut table = Table::new(&["k", "scan[s]", "kdtree[s]", "device[s]", "tree/scan", "verdict"]);

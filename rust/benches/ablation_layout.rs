@@ -15,16 +15,31 @@
 //!
 //! Run: `cargo bench --bench ablation_layout`
 
+#[cfg(feature = "xla-backend")]
 #[path = "common.rs"]
 mod common;
 
+#[cfg(feature = "xla-backend")]
 use std::time::Instant;
 
+#[cfg(feature = "xla-backend")]
 use exemcl::bench::{Scale, Table};
+#[cfg(feature = "xla-backend")]
 use exemcl::data::synth::UniformCube;
+#[cfg(feature = "xla-backend")]
 use exemcl::optim::Oracle;
+#[cfg(feature = "xla-backend")]
 use exemcl::pack::{PackOrder, SMultiPack};
 
+#[cfg(not(feature = "xla-backend"))]
+fn main() {
+    eprintln!(
+        "ablation_layout requires the `xla-backend` feature (PJRT device runtime); \
+         rebuild with `cargo bench --features xla-backend --bench ablation_layout`"
+    );
+}
+
+#[cfg(feature = "xla-backend")]
 fn main() {
     let scale = Scale::from_env();
     let (n, l, k, d) = match scale {
@@ -39,11 +54,14 @@ fn main() {
     // warm the executable cache
     dev.eval_sets(&sets[..1]).expect("warmup");
 
-    let mut table = Table::new(&["strategy", "seconds", "h2d transfers", "h2d MiB", "result check"]);
+    let mut table =
+        Table::new(&["strategy", "seconds", "h2d transfers", "h2d MiB", "result check"]);
 
     // (1) + (2): packed single-staging paths
     let mut packed_sums: Option<Vec<f64>> = None;
-    for (name, order) in [("round-robin pack", PackOrder::RoundRobin), ("set-major pack", PackOrder::SetMajor)] {
+    let strategies =
+        [("round-robin pack", PackOrder::RoundRobin), ("set-major pack", PackOrder::SetMajor)];
+    for (name, order) in strategies {
         dev.reset_stats();
         let t0 = Instant::now();
         let pack = SMultiPack::from_indices(&ds, &sets, 0, order).expect("pack");

@@ -6,24 +6,42 @@
 //!
 //! Run: `cargo bench --bench ablation_precision`
 
+#[cfg(feature = "xla-backend")]
 #[path = "common.rs"]
 mod common;
 
+#[cfg(feature = "xla-backend")]
 use std::time::Instant;
 
+#[cfg(feature = "xla-backend")]
 use exemcl::bench::{Scale, Table};
+#[cfg(feature = "xla-backend")]
 use exemcl::clustering;
+#[cfg(feature = "xla-backend")]
 use exemcl::cpu::SingleThread;
+#[cfg(feature = "xla-backend")]
 use exemcl::data::synth::GaussianBlobs;
+#[cfg(feature = "xla-backend")]
 use exemcl::optim::{Greedy, Optimizer, Oracle};
+#[cfg(feature = "xla-backend")]
 use exemcl::runtime::{DeviceEvaluator, EvalConfig};
 
+#[cfg(not(feature = "xla-backend"))]
+fn main() {
+    eprintln!(
+        "ablation_precision requires the `xla-backend` feature (PJRT device runtime); \
+         rebuild with `cargo bench --features xla-backend --bench ablation_precision`"
+    );
+}
+
+#[cfg(feature = "xla-backend")]
 fn overlap(a: &[usize], b: &[usize]) -> f64 {
     let sa: std::collections::HashSet<_> = a.iter().collect();
     let inter = b.iter().filter(|x| sa.contains(x)).count();
     inter as f64 / a.len().max(1) as f64
 }
 
+#[cfg(feature = "xla-backend")]
 fn main() {
     let scale = Scale::from_env();
     let (n, k, d, blobs) = match scale {

@@ -5,11 +5,22 @@
 //!
 //! Run: `cargo bench --bench fig4`
 
+#[cfg(feature = "xla-backend")]
 #[path = "common.rs"]
 mod common;
 
+#[cfg(feature = "xla-backend")]
 use exemcl::bench::Scale;
 
+#[cfg(not(feature = "xla-backend"))]
+fn main() {
+    eprintln!(
+        "fig4 requires the `xla-backend` feature (PJRT device runtime); \
+         rebuild with `cargo bench --features xla-backend --bench fig4`"
+    );
+}
+
+#[cfg(feature = "xla-backend")]
 fn main() {
     let scale = Scale::from_env();
     let points = common::load_or_run_sweep(scale);

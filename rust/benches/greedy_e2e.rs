@@ -11,17 +11,33 @@
 //!
 //! Run: `cargo bench --bench greedy_e2e`
 
+#[cfg(feature = "xla-backend")]
 #[path = "common.rs"]
 mod common;
 
+#[cfg(feature = "xla-backend")]
 use std::time::Instant;
 
+#[cfg(feature = "xla-backend")]
 use exemcl::bench::{Scale, Table};
+#[cfg(feature = "xla-backend")]
 use exemcl::cpu::SingleThread;
+#[cfg(feature = "xla-backend")]
 use exemcl::data::synth::GaussianBlobs;
+#[cfg(feature = "xla-backend")]
 use exemcl::optim::{Greedy, GreedyMode, LazyGreedy, Optimizer, Oracle, StochasticGreedy};
+#[cfg(feature = "xla-backend")]
 use exemcl::runtime::{DeviceEvaluator, EvalConfig};
 
+#[cfg(not(feature = "xla-backend"))]
+fn main() {
+    eprintln!(
+        "greedy_e2e requires the `xla-backend` feature (PJRT device runtime); \
+         rebuild with `cargo bench --features xla-backend --bench greedy_e2e`"
+    );
+}
+
+#[cfg(feature = "xla-backend")]
 fn main() {
     let scale = Scale::from_env();
     let (n, k, d) = match scale {

@@ -8,11 +8,22 @@
 //!
 //! Run: `cargo bench --bench table1` (EXEMCL_BENCH_SCALE=quick|default|full)
 
+#[cfg(feature = "xla-backend")]
 #[path = "common.rs"]
 mod common;
 
+#[cfg(feature = "xla-backend")]
 use exemcl::bench::{speedup_stats, Scale, Table};
 
+#[cfg(not(feature = "xla-backend"))]
+fn main() {
+    eprintln!(
+        "table1 requires the `xla-backend` feature (PJRT device runtime); \
+         rebuild with `cargo bench --features xla-backend --bench table1`"
+    );
+}
+
+#[cfg(feature = "xla-backend")]
 fn main() {
     let scale = Scale::from_env();
     let points = common::load_or_run_sweep(scale);

@@ -110,6 +110,66 @@ pub fn write_csv(name: &str, headers: &[&str], rows: &[Vec<String>]) -> std::io:
     Ok(path)
 }
 
+/// Minimal JSON scalar for [`write_json`] (no serde in the offline crate
+/// set).
+#[derive(Clone, Debug)]
+pub enum JsonValue {
+    /// Integer field.
+    Int(i64),
+    /// Floating-point field (non-finite values render as `null`).
+    Num(f64),
+    /// String field (quotes/backslashes escaped).
+    Str(String),
+    /// Boolean field.
+    Bool(bool),
+}
+
+impl JsonValue {
+    fn render(&self) -> String {
+        match self {
+            JsonValue::Int(v) => v.to_string(),
+            JsonValue::Num(v) => {
+                if v.is_finite() {
+                    format!("{v}")
+                } else {
+                    "null".into()
+                }
+            }
+            JsonValue::Str(s) => {
+                let mut escaped = String::with_capacity(s.len() + 2);
+                for c in s.chars() {
+                    match c {
+                        '"' => escaped.push_str("\\\""),
+                        '\\' => escaped.push_str("\\\\"),
+                        '\n' => escaped.push_str("\\n"),
+                        '\r' => escaped.push_str("\\r"),
+                        '\t' => escaped.push_str("\\t"),
+                        c if (c as u32) < 0x20 => {
+                            escaped.push_str(&format!("\\u{:04x}", c as u32));
+                        }
+                        c => escaped.push(c),
+                    }
+                }
+                format!("\"{escaped}\"")
+            }
+            JsonValue::Bool(b) => b.to_string(),
+        }
+    }
+}
+
+/// Write a flat JSON object to `path` (the perf-trajectory emitters, e.g.
+/// `BENCH_cpu.json` from `ablation_cpu_batched`). Returns the path.
+pub fn write_json(path: &str, fields: &[(&str, JsonValue)]) -> std::io::Result<String> {
+    let mut body = String::from("{\n");
+    for (i, (key, value)) in fields.iter().enumerate() {
+        let comma = if i + 1 < fields.len() { "," } else { "" };
+        body.push_str(&format!("  \"{}\": {}{}\n", key, value.render(), comma));
+    }
+    body.push_str("}\n");
+    std::fs::write(path, &body)?;
+    Ok(path.to_string())
+}
+
 /// `EXEMCL_BENCH_SCALE`: `quick` (CI smoke), `default`, or `full`
 /// (closest to the paper's grid). Controls sweep sizes in all benches.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -167,6 +227,29 @@ mod tests {
         assert_eq!(s.min, 5.0);
         assert_eq!(s.max, 10.0);
         assert_eq!(s.mean, 7.5);
+    }
+
+    #[test]
+    fn json_values_render_and_write() {
+        assert_eq!(JsonValue::Int(-3).render(), "-3");
+        assert_eq!(JsonValue::Num(1.5).render(), "1.5");
+        assert_eq!(JsonValue::Num(f64::NAN).render(), "null");
+        assert_eq!(JsonValue::Bool(true).render(), "true");
+        assert_eq!(JsonValue::Str("a\"b".into()).render(), "\"a\\\"b\"");
+
+        let dir = std::env::temp_dir().join("exemcl_bench_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("out.json");
+        let p = write_json(
+            path.to_str().unwrap(),
+            &[("speedup", JsonValue::Num(3.25)), ("bench", JsonValue::Str("x".into()))],
+        )
+        .unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.starts_with("{\n"));
+        assert!(text.contains("\"speedup\": 3.25,"));
+        assert!(text.contains("\"bench\": \"x\"\n"));
+        assert!(text.trim_end().ends_with('}'));
     }
 
     #[test]

@@ -173,6 +173,37 @@ mod tests {
     }
 
     #[test]
+    fn free_after_ground_saturates_at_zero() {
+        // ground set bigger than the whole budget must clamp, not wrap
+        let m = MemoryModel { total_bytes: 100, bytes_per_elem: 4, metadata_bytes_per_set: 0 };
+        assert_eq!(m.free_after_ground(1000, 10), 0);
+        // and planning against the clamped budget reports OOM
+        assert!(matches!(
+            plan(3, m.per_set_bytes(2, 10), m.free_after_ground(1000, 10)),
+            Err(crate::Error::ChunkOom { .. })
+        ));
+    }
+
+    #[test]
+    fn plan_clamps_zero_per_set_footprint() {
+        // per_set_bytes == 0 is clamped to 1 rather than dividing by zero
+        let p = plan(5, 0, 3).unwrap();
+        assert_eq!(p.chunk_size, 3);
+        assert_eq!(p.n_chunks, 2);
+    }
+
+    #[test]
+    fn plan_for_tiny_model_and_single_set() {
+        // exactly one set fits: l chunks of size 1
+        let m = MemoryModel { total_bytes: 4200, bytes_per_elem: 4, metadata_bytes_per_set: 0 };
+        let free = m.free_after_ground(10, 10); // 4200 - 400 - 40 = 3760
+        let per_set = m.per_set_bytes(8, 100); // 3200 + 32 + 4 = 3236
+        let p = plan(4, per_set, free).unwrap();
+        assert_eq!(p.chunk_size, 1);
+        assert_eq!(p.n_chunks, 4);
+    }
+
+    #[test]
     fn plan_for_integrates_model() {
         let m = MemoryModel { total_bytes: 1 << 20, bytes_per_elem: 4, metadata_bytes_per_set: 64 };
         let p = plan_for(&m, 100, 10, 50, 5).unwrap();

@@ -46,9 +46,9 @@ enum Request {
         reply: mpsc::Sender<Result<Vec<f32>>>,
         enqueued: Instant,
     },
-    Commit {
+    CommitMany {
         state: DminState,
-        idx: usize,
+        idxs: Vec<usize>,
         reply: mpsc::Sender<Result<DminState>>,
         enqueued: Instant,
     },
@@ -63,6 +63,10 @@ pub struct ServiceHandle {
     metrics: Arc<ServiceMetrics>,
     dataset: Dataset,
     l0: f64,
+    /// The backend's fresh-state template, captured at spawn — the
+    /// backend may use a non-squared-Euclidean dissimilarity, so the
+    /// trait-default `dmin = sq_norms` would be wrong here.
+    init_state: DminState,
     backend_name: String,
     queue_depth: Arc<AtomicUsize>,
 }
@@ -74,6 +78,7 @@ impl Clone for ServiceHandle {
             metrics: self.metrics.clone(),
             dataset: self.dataset.clone(),
             l0: self.l0,
+            init_state: self.init_state.clone(),
             backend_name: self.backend_name.clone(),
             queue_depth: self.queue_depth.clone(),
         }
@@ -97,7 +102,8 @@ impl EvalService {
         O: Oracle + 'static,
     {
         let (tx, rx) = mpsc::sync_channel::<Request>(queue_capacity.max(1));
-        let (init_tx, init_rx) = mpsc::channel::<Result<(Dataset, f64, String)>>();
+        type InitPayload = (Dataset, f64, DminState, String);
+        let (init_tx, init_rx) = mpsc::channel::<Result<InitPayload>>();
         let metrics = Arc::new(ServiceMetrics::default());
         let queue_depth = Arc::new(AtomicUsize::new(0));
         let m2 = metrics.clone();
@@ -111,6 +117,7 @@ impl EvalService {
                         let _ = init_tx.send(Ok((
                             o.dataset().clone(),
                             o.l0_sum(),
+                            o.init_state(),
                             o.name(),
                         )));
                         o
@@ -124,12 +131,20 @@ impl EvalService {
             })
             .map_err(|e| Error::Service(format!("cannot spawn executor: {e}")))?;
 
-        let (dataset, l0, backend_name) = init_rx
+        let (dataset, l0, init_state, backend_name) = init_rx
             .recv()
             .map_err(|_| Error::Service("executor died during init".into()))??;
 
         Ok(Self {
-            handle: ServiceHandle { tx, metrics, dataset, l0, backend_name, queue_depth },
+            handle: ServiceHandle {
+                tx,
+                metrics,
+                dataset,
+                l0,
+                init_state,
+                backend_name,
+                queue_depth,
+            },
             join: Some(join),
         })
     }
@@ -253,8 +268,10 @@ fn serve_single(oracle: &dyn Oracle, req: Request, metrics: &ServiceMetrics) {
             metrics.latency.observe(enqueued.elapsed());
             let _ = reply.send(r);
         }
-        Request::Commit { mut state, idx, reply, enqueued } => {
-            let r = oracle.commit(&mut state, idx).map(|()| state);
+        Request::CommitMany { mut state, idxs, reply, enqueued } => {
+            // one batched pass on the backend (CPU oracles fuse the whole
+            // exemplar batch into a single ground-set stream)
+            let r = oracle.commit_many(&mut state, &idxs).map(|()| state);
             metrics.latency.observe(enqueued.elapsed());
             let _ = reply.send(r);
         }
@@ -287,6 +304,12 @@ impl Oracle for ServiceHandle {
         &self.dataset
     }
 
+    fn init_state(&self) -> DminState {
+        // the backend's own fresh state (dissimilarity-aware), not the
+        // trait-default squared-norm one
+        self.init_state.clone()
+    }
+
     fn eval_sets(&self, sets: &[Vec<usize>]) -> Result<Vec<f32>> {
         let (reply, rx) = mpsc::channel();
         self.send(Request::EvalSets {
@@ -309,10 +332,17 @@ impl Oracle for ServiceHandle {
     }
 
     fn commit(&self, state: &mut DminState, idx: usize) -> Result<()> {
+        // a single commit is just a one-element batch
+        self.commit_many(state, &[idx])
+    }
+
+    fn commit_many(&self, state: &mut DminState, idxs: &[usize]) -> Result<()> {
+        // one request round-trip for the whole batch (the default would
+        // pay queue + reply latency once per exemplar)
         let (reply, rx) = mpsc::channel();
-        self.send(Request::Commit {
+        self.send(Request::CommitMany {
             state: state.clone(),
-            idx,
+            idxs: idxs.to_vec(),
             reply,
             enqueued: Instant::now(),
         })?;
@@ -363,6 +393,28 @@ mod tests {
         assert_eq!(state.exemplars, vec![3]);
         let gains = h.marginal_gains(&state, &[3]).unwrap();
         assert!(gains[0].abs() < 1e-6, "re-adding exemplar should gain 0");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn commit_many_roundtrips_in_one_request() {
+        let svc = spawn_cpu_service();
+        let h = svc.handle();
+        let before = svc.metrics().requests.get();
+        let mut state = h.init_state();
+        h.commit_many(&mut state, &[1, 4, 9]).unwrap();
+        assert_eq!(state.exemplars, vec![1, 4, 9]);
+        // one request for the whole batch, not one per exemplar
+        assert_eq!(svc.metrics().requests.get(), before + 1);
+        // state matches sequential commits on a direct oracle
+        let direct = SingleThread::new(UniformCube::new(4, 1.0).generate(64, 3));
+        let mut want = direct.init_state();
+        for &e in &[1usize, 4, 9] {
+            direct.commit(&mut want, e).unwrap();
+        }
+        for (a, b) in state.dmin.iter().zip(&want.dmin) {
+            assert!((a - b).abs() < 1e-6);
+        }
         svc.shutdown();
     }
 

@@ -1,8 +1,336 @@
-//! Low-level CPU loss-sum kernels, used by the perf harness to compare a
-//! naive scalar loop against a blocked, autovectorization-friendly one —
-//! the CPU analogue of the paper's "SIMD strategy ... via OpenMP".
+//! Low-level CPU kernels: the candidate-batched, cache-blocked Gram
+//! kernels behind [`crate::cpu::SingleThread`] / [`crate::cpu::MultiThread`],
+//! plus the historical naive/blocked loss-sum pair kept as reference
+//! implementations for the perf harness and property tests.
+//!
+//! # Gram layout
+//!
+//! For dissimilarities that factor through the squared Euclidean distance
+//! ([`Dissimilarity::factors_through_sq_euclidean`]), every pairwise
+//! distance is computed as
+//!
+//! ```text
+//! ‖a − b‖² = ‖a‖² − 2·a·b + ‖b‖²
+//! ```
+//!
+//! with per-row squared norms precomputed **once at oracle construction**
+//! and the dot product evaluated by a register-blocked micro-kernel that
+//! scores four candidates against one ground row per pass (one load of
+//! the ground row amortized over four dot accumulators; the inner `d`
+//! loop autovectorizes). Candidates are gathered into a dense
+//! `(m, d)` block so the hot loop walks contiguous memory, and processed
+//! in [`CAND_BLOCK`]-row tiles that stay cache-resident while a
+//! [`GROUND_TILE`]-row slice of the ground set streams through.
+//!
+//! The fused [`gains_tile`] kernel is the optimizer-aware core: one pass
+//! over each ground tile scores the *entire* candidate block against the
+//! cached `dmin` state in registers — the seed path streamed the whole
+//! dataset once per candidate.
+//!
+//! **Numerical caveat.** The Gram identity cancels catastrophically in
+//! f32 when row norms dwarf pairwise distances (data far from the
+//! origin): the error is ~ULP of the *norms*, not of the distance. The
+//! paper's workloads are near-origin (and Definition 5's auxiliary
+//! exemplar `e0 = 0` already makes far-off-center data degenerate), so
+//! this matches the benchmark regime; for general off-center inputs the
+//! planned fix is a mean-centered shadow of the ground set feeding the
+//! pairwise kernels (pair distances are translation-invariant) — see
+//! ROADMAP "Open items".
+
+use std::ops::Range;
 
 use crate::data::Dataset;
+use crate::distance::Dissimilarity;
+
+/// Ground rows per work grain: at d = 100 one tile is ~100 KiB of f32 —
+/// comfortably L2-resident while candidate blocks cycle over it.
+pub const GROUND_TILE: usize = 256;
+
+/// Candidate rows per register-blocked pass: at d = 32 one block is
+/// 16 KiB — L1-resident across an entire ground tile.
+pub const CAND_BLOCK: usize = 128;
+
+/// Four dot products of `v` against rows `base/d .. base/d + 4` of the
+/// dense block `rows` — the register-blocked core every Gram kernel
+/// shares (one load of `v[j]` amortized over four accumulators).
+#[inline]
+fn dot4(v: &[f32], rows: &[f32], base: usize, d: usize) -> [f32; 4] {
+    let r0 = &rows[base..base + d];
+    let r1 = &rows[base + d..base + 2 * d];
+    let r2 = &rows[base + 2 * d..base + 3 * d];
+    let r3 = &rows[base + 3 * d..base + 4 * d];
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for j in 0..d {
+        let vj = v[j];
+        s0 += r0[j] * vj;
+        s1 += r1[j] * vj;
+        s2 += r2[j] * vj;
+        s3 += r3[j] * vj;
+    }
+    [s0, s1, s2, s3]
+}
+
+/// Scalar-tail dot product of `v` against row `s` of `rows`.
+#[inline]
+fn dot1(v: &[f32], rows: &[f32], s: usize, d: usize) -> f32 {
+    let r = &rows[s * d..(s + 1) * d];
+    let mut acc = 0.0f32;
+    for j in 0..d {
+        acc += r[j] * v[j];
+    }
+    acc
+}
+
+/// Minimum clamped Gram distance from `v` (squared norm `nv`) to all `m`
+/// rows of the dense block — `min_s max(norms[s] − 2·v·row_s + nv, 0)`,
+/// `∞` when the block is empty. Shared by the loss and dmin-update
+/// kernels so the arithmetic (and therefore the f32 rounding) is
+/// identical everywhere.
+#[inline]
+fn min_sq_to_rows(v: &[f32], nv: f32, rows: &[f32], norms: &[f32], d: usize) -> f32 {
+    let m = norms.len();
+    let mut best = f32::INFINITY;
+    let mut s = 0;
+    while s + 4 <= m {
+        let dots = dot4(v, rows, s * d, d);
+        best = best.min((norms[s] - 2.0 * dots[0] + nv).max(0.0));
+        best = best.min((norms[s + 1] - 2.0 * dots[1] + nv).max(0.0));
+        best = best.min((norms[s + 2] - 2.0 * dots[2] + nv).max(0.0));
+        best = best.min((norms[s + 3] - 2.0 * dots[3] + nv).max(0.0));
+        s += 4;
+    }
+    while s < m {
+        best = best.min((norms[s] - 2.0 * dot1(v, rows, s, d) + nv).max(0.0));
+        s += 1;
+    }
+    best
+}
+
+/// Gather `idx` rows of `ds` into a dense `(m, d)` block plus per-row
+/// squared norms (the per-call half of the Gram precomputation).
+pub fn gather_rows(ds: &Dataset, idx: &[usize]) -> (Vec<f32>, Vec<f32>) {
+    let d = ds.d();
+    let mut rows = Vec::with_capacity(idx.len() * d);
+    let mut norms = Vec::with_capacity(idx.len());
+    for &i in idx {
+        let r = ds.row(i);
+        rows.extend_from_slice(r);
+        norms.push(r.iter().map(|x| x * x).sum());
+    }
+    (rows, norms)
+}
+
+/// Fused marginal-gain kernel over one ground tile: for every ground row
+/// in `rows`, score the entire candidate block against `dmin` and
+/// accumulate the clamped improvements `max(dmin_i − d(c, v_i), 0)` into
+/// `acc[c]` (f64, one slot per candidate).
+///
+/// `cand_rows`/`cand_norms` come from [`gather_rows`]; `norms` are the
+/// oracle's precomputed ground-row squared norms (unused on the
+/// non-factoring fallback path).
+#[allow(clippy::too_many_arguments)]
+pub fn gains_tile<D: Dissimilarity>(
+    dist: &D,
+    ds: &Dataset,
+    norms: &[f32],
+    dmin: &[f32],
+    rows: Range<usize>,
+    cand_rows: &[f32],
+    cand_norms: &[f32],
+    acc: &mut [f64],
+) {
+    let d = ds.d();
+    let m = acc.len();
+    debug_assert_eq!(cand_rows.len(), m * d);
+    debug_assert_eq!(cand_norms.len(), m);
+    if dist.factors_through_sq_euclidean() {
+        let mut c0 = 0;
+        while c0 < m {
+            let c1 = (c0 + CAND_BLOCK).min(m);
+            for i in rows.clone() {
+                let dm = dmin[i];
+                if dm <= 0.0 {
+                    continue; // d ≥ 0 ⇒ no candidate can improve this row
+                }
+                let (v, nv) = (ds.row(i), norms[i]);
+                gains_row_gram(dist, v, nv, dm, c0, c1, d, cand_rows, cand_norms, acc);
+            }
+            c0 = c1;
+        }
+    } else {
+        for i in rows {
+            let v = ds.row(i);
+            let dm = dmin[i];
+            if dm <= 0.0 {
+                continue;
+            }
+            for (c, slot) in acc.iter_mut().enumerate() {
+                let dd = dist.eval(&cand_rows[c * d..(c + 1) * d], v);
+                let improve = dm - dd;
+                if improve > 0.0 {
+                    *slot += improve as f64;
+                }
+            }
+        }
+    }
+}
+
+/// Register-blocked inner row: four candidates per pass, Gram identity.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn gains_row_gram<D: Dissimilarity>(
+    dist: &D,
+    v: &[f32],
+    nv: f32,
+    dm: f32,
+    c0: usize,
+    c1: usize,
+    d: usize,
+    cand_rows: &[f32],
+    cand_norms: &[f32],
+    acc: &mut [f64],
+) {
+    let mut c = c0;
+    while c + 4 <= c1 {
+        let dots = dot4(v, cand_rows, c * d, d);
+        for (lane, &dot) in dots.iter().enumerate() {
+            let dd = dist.post_sq((cand_norms[c + lane] - 2.0 * dot + nv).max(0.0));
+            let improve = dm - dd;
+            if improve > 0.0 {
+                acc[c + lane] += improve as f64;
+            }
+        }
+        c += 4;
+    }
+    while c < c1 {
+        let dd = dist.post_sq((cand_norms[c] - 2.0 * dot1(v, cand_rows, c, d) + nv).max(0.0));
+        let improve = dm - dd;
+        if improve > 0.0 {
+            acc[c] += improve as f64;
+        }
+        c += 1;
+    }
+}
+
+/// Loss-sum kernel over one ground tile:
+/// `Σ_{i ∈ rows} min(d(v_i, e0), min_s d(s, v_i))` for one evaluation set
+/// gathered into `set_rows`/`set_norms`. An empty set yields the
+/// e0-distance sum.
+pub fn loss_tile<D: Dissimilarity>(
+    dist: &D,
+    ds: &Dataset,
+    norms: &[f32],
+    rows: Range<usize>,
+    set_rows: &[f32],
+    set_norms: &[f32],
+) -> f64 {
+    let d = ds.d();
+    let m = set_norms.len();
+    debug_assert_eq!(set_rows.len(), m * d);
+    let mut acc = 0.0f64;
+    if dist.factors_through_sq_euclidean() {
+        // minima commute with the monotone post_sq transform, so the
+        // whole min runs in squared space and post_sq is applied once.
+        for i in rows {
+            let v = ds.row(i);
+            let nv = norms[i];
+            // d(v, e0) = nv in squared space; an empty set leaves it
+            let best_sq = nv.min(min_sq_to_rows(v, nv, set_rows, set_norms, d));
+            acc += dist.post_sq(best_sq) as f64;
+        }
+    } else {
+        for i in rows {
+            let v = ds.row(i);
+            let mut t = dist.eval_vs_origin(v);
+            for s in 0..m {
+                let dd = dist.eval(&set_rows[s * d..(s + 1) * d], v);
+                if dd < t {
+                    t = dd;
+                }
+            }
+            acc += t as f64;
+        }
+    }
+    acc
+}
+
+/// Batched dmin update over one ground tile:
+/// `dmin[i − rows.start] ← min(dmin[i − rows.start], min_e d(e, v_i))`
+/// for the exemplar batch gathered into `ex_rows`/`ex_norms`. `dmin`
+/// covers exactly `rows`.
+#[allow(clippy::too_many_arguments)]
+pub fn update_dmin_tile<D: Dissimilarity>(
+    dist: &D,
+    ds: &Dataset,
+    norms: &[f32],
+    rows: Range<usize>,
+    ex_rows: &[f32],
+    ex_norms: &[f32],
+    dmin: &mut [f32],
+) {
+    let d = ds.d();
+    let m = ex_norms.len();
+    debug_assert_eq!(ex_rows.len(), m * d);
+    debug_assert_eq!(dmin.len(), rows.len());
+    if m == 0 {
+        return;
+    }
+    let start = rows.start;
+    if dist.factors_through_sq_euclidean() {
+        for i in rows {
+            let v = ds.row(i);
+            let nv = norms[i];
+            let dd = dist.post_sq(min_sq_to_rows(v, nv, ex_rows, ex_norms, d));
+            let slot = &mut dmin[i - start];
+            if dd < *slot {
+                *slot = dd;
+            }
+        }
+    } else {
+        for i in rows {
+            let v = ds.row(i);
+            let mut best = f32::INFINITY;
+            for s in 0..m {
+                let dd = dist.eval(&ex_rows[s * d..(s + 1) * d], v);
+                if dd < best {
+                    best = dd;
+                }
+            }
+            let slot = &mut dmin[i - start];
+            if best < *slot {
+                *slot = best;
+            }
+        }
+    }
+}
+
+/// Reference per-candidate marginal gains straight from the definition —
+/// no batching, no Gram identity, one full dataset scan per candidate.
+/// Ground truth for the property tests and the `ablation_cpu_batched`
+/// bench baseline.
+pub fn marginal_gains_naive<D: Dissimilarity>(
+    dist: &D,
+    ds: &Dataset,
+    dmin: &[f32],
+    candidates: &[usize],
+) -> Vec<f32> {
+    let n = ds.n() as f64;
+    candidates
+        .iter()
+        .map(|&c| {
+            let cv = ds.row(c);
+            let mut gain = 0.0f64;
+            for i in 0..ds.n() {
+                let dd = dist.eval(cv, ds.row(i));
+                let improve = dmin[i] - dd;
+                if improve > 0.0 {
+                    gain += improve as f64;
+                }
+            }
+            (gain / n) as f32
+        })
+        .collect()
+}
 
 /// Literal Algorithm 2: per-point min over set members, scalar inner loop.
 pub fn loss_sum_naive(ds: &Dataset, set: &[usize]) -> f64 {
@@ -100,6 +428,7 @@ pub(crate) fn sq_dist_blocked(a: &[f32], b: &[f32], d: usize) -> f32 {
 mod tests {
     use super::*;
     use crate::data::synth::UniformCube;
+    use crate::distance::{Manhattan, RbfInduced, SqEuclidean};
 
     #[test]
     fn naive_and_blocked_agree() {
@@ -108,10 +437,7 @@ mod tests {
             let set: Vec<usize> = vec![0, 13, 77];
             let a = loss_sum_naive(&ds, &set);
             let b = loss_sum_blocked(&ds, &set);
-            assert!(
-                (a - b).abs() < 1e-3 * a.abs().max(1.0),
-                "d={d}: {a} vs {b}"
-            );
+            assert!((a - b).abs() < 1e-3 * a.abs().max(1.0), "d={d}: {a} vs {b}");
         }
     }
 
@@ -129,5 +455,161 @@ mod tests {
         let a = [1.0, 2.0, 3.0, 4.0, 5.0];
         let b = [0.0, 0.0, 0.0, 0.0, 0.0];
         assert_eq!(sq_dist_blocked(&a, &b, 5), 55.0);
+    }
+
+    #[test]
+    fn gram_loss_tile_matches_naive_loss() {
+        for d in [1usize, 3, 4, 7, 16, 100] {
+            let ds = UniformCube::new(d, 1.0).generate(150, 31 + d as u64);
+            let norms = ds.sq_norms();
+            for set in [vec![], vec![3], vec![0, 13, 77, 91, 140]] {
+                let (set_rows, set_norms) = gather_rows(&ds, &set);
+                let got =
+                    loss_tile(&SqEuclidean, &ds, &norms, 0..ds.n(), &set_rows, &set_norms);
+                let want = loss_sum_naive(&ds, &set);
+                assert!(
+                    (got - want).abs() < 1e-4 * want.abs().max(1.0),
+                    "d={d} |S|={}: {got} vs {want}",
+                    set.len()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gains_tile_matches_naive_reference() {
+        for d in [1usize, 3, 4, 7, 16, 100] {
+            let ds = UniformCube::new(d, 1.0).generate(200, 7 + d as u64);
+            let norms = ds.sq_norms();
+            // a partially covered state: dmin lowered by two exemplars
+            let mut dmin = norms.clone();
+            let (ex_rows, ex_norms) = gather_rows(&ds, &[5, 111]);
+            update_dmin_tile(&SqEuclidean, &ds, &norms, 0..ds.n(), &ex_rows, &ex_norms, &mut dmin);
+
+            // block sizes crossing both the 4-wide and CAND_BLOCK edges
+            for m in [1usize, 3, 4, 5, CAND_BLOCK - 1, CAND_BLOCK, CAND_BLOCK + 1] {
+                let cands: Vec<usize> = (0..m).map(|i| (i * 13) % ds.n()).collect();
+                let (cand_rows, cand_norms) = gather_rows(&ds, &cands);
+                let mut acc = vec![0.0f64; m];
+                gains_tile(
+                    &SqEuclidean,
+                    &ds,
+                    &norms,
+                    &dmin,
+                    0..ds.n(),
+                    &cand_rows,
+                    &cand_norms,
+                    &mut acc,
+                );
+                let want = marginal_gains_naive(&SqEuclidean, &ds, &dmin, &cands);
+                let n = ds.n() as f64;
+                for (c, (a, w)) in acc.iter().zip(&want).enumerate() {
+                    let got = (*a / n) as f32;
+                    // relative plus d-scaled absolute slack: Gram f32
+                    // cancellation error grows ~linearly in d
+                    assert!(
+                        (got - w).abs() <= 1e-4 * w.abs() + 1e-6 * d as f32,
+                        "d={d} m={m} cand {c}: batched {got} vs naive {w}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn update_dmin_tile_matches_sequential_commits() {
+        let ds = UniformCube::new(6, 1.0).generate(120, 4);
+        let norms = ds.sq_norms();
+        let exemplars = [2usize, 50, 99, 100, 101];
+
+        // batched
+        let mut batched = norms.clone();
+        let (ex_rows, ex_norms) = gather_rows(&ds, &exemplars);
+        update_dmin_tile(&SqEuclidean, &ds, &norms, 0..ds.n(), &ex_rows, &ex_norms, &mut batched);
+
+        // sequential one-at-a-time
+        let mut seq = norms.clone();
+        for &e in &exemplars {
+            let (r, nr) = gather_rows(&ds, &[e]);
+            update_dmin_tile(&SqEuclidean, &ds, &norms, 0..ds.n(), &r, &nr, &mut seq);
+        }
+        // the batched pass uses the 4-wide micro-kernel, the m=1 passes
+        // its sequential tail: equal up to f32 dot-order differences
+        for (i, (a, b)) in batched.iter().zip(&seq).enumerate() {
+            assert!((a - b).abs() < 1e-5, "row {i}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn rbf_gram_path_matches_direct_eval() {
+        let rbf = RbfInduced::new(0.8);
+        let ds = UniformCube::new(5, 1.0).generate(90, 12);
+        let norms = ds.sq_norms();
+        let set = vec![1usize, 40, 77];
+        let (set_rows, set_norms) = gather_rows(&ds, &set);
+        let got = loss_tile(&rbf, &ds, &norms, 0..ds.n(), &set_rows, &set_norms);
+        // direct definition with the generic eval
+        let mut want = 0.0f64;
+        for i in 0..ds.n() {
+            let v = ds.row(i);
+            let mut t = rbf.eval_vs_origin(v);
+            for &s in &set {
+                let dd = rbf.eval(ds.row(s), v);
+                if dd < t {
+                    t = dd;
+                }
+            }
+            want += t as f64;
+        }
+        assert!((got - want).abs() < 1e-4 * want.abs().max(1.0), "{got} vs {want}");
+    }
+
+    #[test]
+    fn non_factoring_distance_uses_direct_path() {
+        let ds = UniformCube::new(4, 1.0).generate(80, 19);
+        let norms = ds.sq_norms();
+        let dmin: Vec<f32> = (0..ds.n()).map(|i| Manhattan.eval_vs_origin(ds.row(i))).collect();
+        let cands = vec![0usize, 17, 33];
+        let (cand_rows, cand_norms) = gather_rows(&ds, &cands);
+        let mut acc = vec![0.0f64; cands.len()];
+        gains_tile(&Manhattan, &ds, &norms, &dmin, 0..ds.n(), &cand_rows, &cand_norms, &mut acc);
+        let want = marginal_gains_naive(&Manhattan, &ds, &dmin, &cands);
+        let n = ds.n() as f64;
+        for ((a, w), c) in acc.iter().zip(&want).zip(&cands) {
+            let got = (*a / n) as f32;
+            assert!((got - w).abs() < 1e-5, "cand {c}: {got} vs {w}");
+        }
+    }
+
+    #[test]
+    fn tiled_invocation_equals_full_range() {
+        let ds = UniformCube::new(7, 1.0).generate(300, 23);
+        let norms = ds.sq_norms();
+        let dmin = norms.clone();
+        let cands: Vec<usize> = (0..9).collect();
+        let (cand_rows, cand_norms) = gather_rows(&ds, &cands);
+
+        let mut full = vec![0.0f64; cands.len()];
+        gains_tile(&SqEuclidean, &ds, &norms, &dmin, 0..ds.n(), &cand_rows, &cand_norms, &mut full);
+
+        let mut tiled = vec![0.0f64; cands.len()];
+        let mut start = 0;
+        while start < ds.n() {
+            let end = (start + GROUND_TILE.min(37)).min(ds.n());
+            gains_tile(
+                &SqEuclidean,
+                &ds,
+                &norms,
+                &dmin,
+                start..end,
+                &cand_rows,
+                &cand_norms,
+                &mut tiled,
+            );
+            start = end;
+        }
+        for (a, b) in full.iter().zip(&tiled) {
+            assert!((a - b).abs() < 1e-9 * a.abs().max(1.0), "{a} vs {b}");
+        }
     }
 }

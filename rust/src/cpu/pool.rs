@@ -1,0 +1,351 @@
+//! Persistent worker pool for the CPU evaluation backend.
+//!
+//! The seed implementation spawned a fresh `std::thread::scope` on every
+//! oracle call — exactly the per-call overhead the zero-overhead
+//! parallel-scans line of work eliminates. Here the pool is created
+//! **once per oracle** and jobs are pushed per call:
+//!
+//! * [`WorkerPool::run`] broadcasts one job closure to every worker and
+//!   blocks until all of them finish (so borrows captured by the closure
+//!   never outlive the call — the classic scoped-pool lifetime erasure).
+//! * Load balancing is dynamic: callers put a [`GrainQueue`] next to the
+//!   job and workers *steal* index ranges from it with an atomic cursor,
+//!   so a slow worker never strands work assigned to it up front.
+//! * Output is written through disjoint ownership, never `Mutex<&mut T>`
+//!   slot locks: each claimed grain maps to a caller-chosen disjoint
+//!   region of the output ([`DisjointSlice`]), or workers accumulate
+//!   privately and merge once at the end.
+//!
+//! Worker panics are caught, forwarded, and re-raised on the calling
+//! thread after the job completes; the pool stays usable afterwards.
+
+use std::ops::Range;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// The job shape every worker runs: called once per worker with the
+/// worker id; the closure does its own work-claiming (see [`GrainQueue`]).
+type JobFn = dyn Fn(usize) + Sync;
+
+/// Completion latch for one broadcast job.
+struct Latch {
+    remaining: Mutex<usize>,
+    cv: Condvar,
+    panicked: AtomicBool,
+}
+
+impl Latch {
+    fn new(count: usize) -> Self {
+        Self { remaining: Mutex::new(count), cv: Condvar::new(), panicked: AtomicBool::new(false) }
+    }
+
+    fn arrive(&self, panicked: bool) {
+        if panicked {
+            self.panicked.store(true, Ordering::Relaxed);
+        }
+        let mut rem = self.remaining.lock().unwrap();
+        *rem -= 1;
+        if *rem == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let guard = self.remaining.lock().unwrap();
+        let _done = self.cv.wait_while(guard, |rem| *rem > 0).unwrap();
+    }
+}
+
+enum Message {
+    Job { f: &'static JobFn, latch: Arc<Latch> },
+    Shutdown,
+}
+
+fn worker_loop(id: usize, rx: Receiver<Message>) {
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Message::Job { f, latch } => {
+                let panicked = catch_unwind(AssertUnwindSafe(|| f(id))).is_err();
+                latch.arrive(panicked);
+            }
+            Message::Shutdown => break,
+        }
+    }
+}
+
+/// A fixed-size pool of named OS threads, created once and reused for
+/// every oracle call until the owner is dropped.
+pub struct WorkerPool {
+    senders: Vec<Sender<Message>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    threads: usize,
+}
+
+impl WorkerPool {
+    /// Spawn `threads` workers; `0` uses
+    /// `std::thread::available_parallelism()`.
+    pub fn new(threads: usize) -> Self {
+        let threads = if threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            threads
+        };
+        let mut senders = Vec::with_capacity(threads);
+        let mut handles = Vec::with_capacity(threads);
+        for id in 0..threads {
+            let (tx, rx) = mpsc::channel::<Message>();
+            let handle = std::thread::Builder::new()
+                .name(format!("exemcl-cpu-{id}"))
+                .spawn(move || worker_loop(id, rx))
+                .expect("cannot spawn pool worker");
+            senders.push(tx);
+            handles.push(handle);
+        }
+        Self { senders, handles, threads }
+    }
+
+    /// Worker count.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `job` on every worker and block until all workers return.
+    ///
+    /// Panics (after the job has fully completed on every worker) if any
+    /// worker panicked while running it.
+    pub fn run(&self, job: &(dyn Fn(usize) + Sync)) {
+        let raw: *const JobFn = job;
+        // SAFETY: the erased-lifetime reference is only used by workers
+        // between the sends below and `latch.wait()` returning, and this
+        // call blocks until every worker has arrived at the latch — so
+        // the borrow never outlives the caller's frame. Sharing across
+        // workers is sound because the closure is `Sync`.
+        let job_static: &'static JobFn = unsafe { &*raw };
+        let latch = Arc::new(Latch::new(self.threads));
+        let mut dead_workers = 0usize;
+        for tx in &self.senders {
+            if tx.send(Message::Job { f: job_static, latch: latch.clone() }).is_err() {
+                // a dead worker never arrives; balance its latch slot so
+                // wait() still returns. Crucially we must NOT unwind here:
+                // workers that already received the job hold the erased
+                // borrow, and leaving this frame before they finish would
+                // be a use-after-free.
+                dead_workers += 1;
+                latch.arrive(false);
+            }
+        }
+        latch.wait();
+        if dead_workers > 0 {
+            panic!("pool job dropped: {dead_workers} worker channel(s) closed");
+        }
+        if latch.panicked.load(Ordering::Relaxed) {
+            panic!("worker panicked during pool job");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        for tx in &self.senders {
+            let _ = tx.send(Message::Shutdown);
+        }
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+/// Shared cursor from which workers claim disjoint index ranges
+/// ("grains") of `[0, total)` — dynamic load balancing without any
+/// per-item locking.
+pub struct GrainQueue {
+    next: AtomicUsize,
+    total: usize,
+    grain: usize,
+}
+
+impl GrainQueue {
+    /// Cover `[0, total)` in ranges of at most `grain` items (`grain` is
+    /// clamped to at least 1).
+    pub fn new(total: usize, grain: usize) -> Self {
+        Self { next: AtomicUsize::new(0), total, grain: grain.max(1) }
+    }
+
+    /// Claim the next unclaimed range, or `None` when the queue is dry.
+    /// Every index in `[0, total)` is handed out exactly once across all
+    /// claimers — the disjointness invariant [`DisjointSlice`] relies on.
+    pub fn claim(&self) -> Option<Range<usize>> {
+        let start = self.next.fetch_add(self.grain, Ordering::Relaxed);
+        if start >= self.total {
+            return None;
+        }
+        Some(start..(start + self.grain).min(self.total))
+    }
+}
+
+/// A mutable `f32` buffer shared across pool workers that write
+/// **disjoint** regions, replacing the seed's `Vec<Mutex<&mut f32>>`
+/// output-slot pattern.
+///
+/// Disjointness is guaranteed by construction at the call sites: regions
+/// are claimed through a [`GrainQueue`], which hands out every index at
+/// most once.
+pub struct DisjointSlice<'a> {
+    ptr: *mut f32,
+    len: usize,
+    _marker: std::marker::PhantomData<&'a mut [f32]>,
+}
+
+// SAFETY: the raw pointer is only dereferenced through the unsafe
+// accessors below, whose contract requires non-overlapping access.
+unsafe impl Send for DisjointSlice<'_> {}
+unsafe impl Sync for DisjointSlice<'_> {}
+
+impl<'a> DisjointSlice<'a> {
+    /// Wrap an exclusive borrow for disjoint multi-worker writes.
+    pub fn new(slice: &'a mut [f32]) -> Self {
+        Self { ptr: slice.as_mut_ptr(), len: slice.len(), _marker: std::marker::PhantomData }
+    }
+
+    /// Length of the underlying buffer.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when the underlying buffer is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Write one element.
+    ///
+    /// # Safety
+    ///
+    /// `idx < len`, and no other thread may read or write `idx`
+    /// concurrently (claim indices through a [`GrainQueue`]).
+    pub unsafe fn write(&self, idx: usize, value: f32) {
+        debug_assert!(idx < self.len);
+        *self.ptr.add(idx) = value;
+    }
+
+    /// Borrow a subrange mutably.
+    ///
+    /// # Safety
+    ///
+    /// `start + len <= self.len()`, and no other thread may access any
+    /// index of the range while the returned slice lives (claim ranges
+    /// through a [`GrainQueue`]).
+    #[allow(clippy::mut_from_ref)] // disjointness is the caller's contract
+    pub unsafe fn range_mut(&self, start: usize, len: usize) -> &mut [f32] {
+        debug_assert!(start + len <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(start), len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_threads_resolves_to_available_parallelism() {
+        let pool = WorkerPool::new(0);
+        assert!(pool.threads() >= 1);
+    }
+
+    #[test]
+    fn grain_queue_covers_range_exactly_once() {
+        let q = GrainQueue::new(103, 10);
+        let mut seen = vec![false; 103];
+        while let Some(r) = q.claim() {
+            for i in r {
+                assert!(!seen[i], "index {i} claimed twice");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+        // zero-length queue yields nothing
+        assert!(GrainQueue::new(0, 4).claim().is_none());
+    }
+
+    #[test]
+    fn pool_fills_every_output_slot_with_more_threads_than_work() {
+        let pool = WorkerPool::new(8);
+        let mut out = vec![f32::NAN; 3];
+        {
+            let shared = DisjointSlice::new(&mut out);
+            let q = GrainQueue::new(3, 1);
+            pool.run(&|_id| {
+                while let Some(r) = q.claim() {
+                    // SAFETY: each index is claimed exactly once.
+                    unsafe { shared.write(r.start, r.start as f32 * 2.0) };
+                }
+            });
+        }
+        assert_eq!(out, vec![0.0, 2.0, 4.0]);
+    }
+
+    #[test]
+    fn pool_is_reusable_across_jobs() {
+        let pool = WorkerPool::new(4);
+        for round in 0..3 {
+            let counter = AtomicUsize::new(0);
+            let q = GrainQueue::new(1000, 7);
+            pool.run(&|_id| {
+                while let Some(r) = q.claim() {
+                    counter.fetch_add(r.len(), Ordering::Relaxed);
+                }
+            });
+            assert_eq!(counter.load(Ordering::Relaxed), 1000, "round {round}");
+        }
+    }
+
+    #[test]
+    fn disjoint_range_writes_land() {
+        let pool = WorkerPool::new(3);
+        let mut out = vec![0.0f32; 100];
+        {
+            let shared = DisjointSlice::new(&mut out);
+            let q = GrainQueue::new(100, 9);
+            pool.run(&|_id| {
+                while let Some(r) = q.claim() {
+                    // SAFETY: ranges from the queue are disjoint.
+                    let chunk = unsafe { shared.range_mut(r.start, r.len()) };
+                    for (off, x) in chunk.iter_mut().enumerate() {
+                        *x = (r.start + off) as f32;
+                    }
+                }
+            });
+        }
+        for (i, &x) in out.iter().enumerate() {
+            assert_eq!(x, i as f32);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "worker panicked")]
+    fn pool_propagates_worker_panics() {
+        let pool = WorkerPool::new(2);
+        pool.run(&|id| {
+            if id == 0 {
+                panic!("boom");
+            }
+        });
+    }
+
+    #[test]
+    fn pool_survives_a_panicked_job() {
+        let pool = WorkerPool::new(2);
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(&|_id| panic!("transient"));
+        }));
+        assert!(result.is_err());
+        // the pool must still serve jobs afterwards
+        let counter = AtomicUsize::new(0);
+        pool.run(&|_id| {
+            counter.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 2);
+    }
+}

@@ -21,6 +21,31 @@ pub trait Dissimilarity: Send + Sync {
     /// Human-readable name for logs and bench tables.
     fn name(&self) -> &'static str;
 
+    /// Does this dissimilarity factor through the squared Euclidean
+    /// distance, i.e. `eval(a, b) == post_sq(‖a − b‖²)` with
+    /// [`Dissimilarity::post_sq`] monotone non-decreasing?
+    ///
+    /// When true, the batched CPU kernels compute `‖a − b‖²` via the Gram
+    /// identity `‖a − b‖² = ‖a‖² − 2·a·b + ‖b‖²` from precomputed row
+    /// norms and a register-blocked dot-product micro-kernel, and apply
+    /// `post_sq` once per pair. Monotonicity is required so that minima
+    /// taken in squared-distance space commute with the transform.
+    ///
+    /// The identity trades accuracy for throughput on data far from the
+    /// origin (cancellation error ~ULP of the norms); see the numerical
+    /// caveat in `crate::cpu`'s kernel module docs.
+    fn factors_through_sq_euclidean(&self) -> bool {
+        false
+    }
+
+    /// Monotone non-decreasing map from squared Euclidean distance to
+    /// this dissimilarity (identity unless overridden). Only meaningful
+    /// when [`Dissimilarity::factors_through_sq_euclidean`] is true.
+    #[inline]
+    fn post_sq(&self, sq: f32) -> f32 {
+        sq
+    }
+
     #[doc(hidden)]
     fn eval_zero_default(&self, a: &[f32]) -> f32 {
         let zeros = vec![0.0f32; a.len()];
@@ -51,6 +76,10 @@ impl Dissimilarity for SqEuclidean {
 
     fn name(&self) -> &'static str {
         "sq_euclidean"
+    }
+
+    fn factors_through_sq_euclidean(&self) -> bool {
+        true
     }
 }
 
@@ -118,11 +147,21 @@ impl RbfInduced {
 impl Dissimilarity for RbfInduced {
     fn eval(&self, a: &[f32], b: &[f32]) -> f32 {
         let sq = SqEuclidean.eval(a, b);
-        2.0 - 2.0 * (-self.gamma * sq).exp()
+        self.post_sq(sq)
     }
 
     fn name(&self) -> &'static str {
         "rbf_induced"
+    }
+
+    fn factors_through_sq_euclidean(&self) -> bool {
+        true
+    }
+
+    #[inline]
+    fn post_sq(&self, sq: f32) -> f32 {
+        // monotone in sq: gamma > 0 and exp is decreasing in -gamma·sq
+        2.0 - 2.0 * (-self.gamma * sq).exp()
     }
 }
 
@@ -164,6 +203,35 @@ mod tests {
         let v = [1.0, 0.0];
         let w = [-1.0, 0.0];
         assert!((CosineDissimilarity.eval(&v, &w) - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gram_factorization_matches_eval() {
+        let a = [0.3, -1.2, 2.0];
+        let b = [1.0, 0.5, -0.25];
+        let sq = SqEuclidean.eval(&a, &b);
+        for d in [&SqEuclidean as &dyn Dissimilarity, &RbfInduced::new(0.7)] {
+            assert!(d.factors_through_sq_euclidean(), "{} should factor", d.name());
+            assert!(
+                (d.post_sq(sq) - d.eval(&a, &b)).abs() < 1e-6,
+                "{}: post_sq(sq) != eval",
+                d.name()
+            );
+        }
+        assert!(!Manhattan.factors_through_sq_euclidean());
+        assert!(!CosineDissimilarity.factors_through_sq_euclidean());
+    }
+
+    #[test]
+    fn post_sq_is_monotone_for_factoring_distances() {
+        let rbf = RbfInduced::new(0.5);
+        let mut prev = f32::MIN;
+        for i in 0..50 {
+            let sq = i as f32 * 0.3;
+            let v = rbf.post_sq(sq);
+            assert!(v >= prev, "rbf post_sq not monotone at {sq}");
+            prev = v;
+        }
     }
 
     #[test]

@@ -2,55 +2,94 @@
 //! separated so callers (the coordinator, the benches, the CLI) can react
 //! differently — e.g. a chunk-planner out-of-memory is retryable with a
 //! lower precision or larger budget, a manifest error is not.
+//!
+//! `Display`/`Error` are hand-implemented: the offline crate set has no
+//! `thiserror`.
 
-use thiserror::Error;
+use std::fmt;
 
 /// All failures produced by exemcl.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// The XLA/PJRT layer failed (compile, transfer or execute).
-    #[error("device error: {0}")]
     Device(String),
 
     /// No AOT artifact bucket can serve the requested shape.
-    #[error("no artifact for kernel={kernel} dtype={dtype} d={d} k={k}: {hint}")]
     NoArtifact {
+        /// Kernel family that was requested.
         kernel: String,
+        /// Requested dtype.
         dtype: String,
+        /// Requested dimensionality.
         d: usize,
+        /// Requested set-slot count.
         k: usize,
+        /// What the registry actually has.
         hint: String,
     },
 
     /// The chunk planner cannot fit even one evaluation set (§IV-B3:
     /// "chunking fails when n_chunk-size equals zero").
-    #[error(
-        "chunking failed: per-set footprint {per_set_bytes}B exceeds free device budget \
-         {free_bytes}B — use lower precision or a larger memory budget"
-    )]
-    ChunkOom { per_set_bytes: usize, free_bytes: usize },
+    ChunkOom {
+        /// Per-set device footprint in bytes.
+        per_set_bytes: usize,
+        /// Free device budget in bytes.
+        free_bytes: usize,
+    },
 
     /// Manifest file is missing or malformed.
-    #[error("manifest error: {0}")]
     Manifest(String),
 
     /// Invalid request shape or arguments.
-    #[error("invalid argument: {0}")]
     InvalidArgument(String),
 
     /// Configuration file / CLI parsing failure.
-    #[error("config error: {0}")]
     Config(String),
 
     /// The evaluation service is shut down or its queue is gone.
-    #[error("service unavailable: {0}")]
     Service(String),
 
     /// Underlying I/O failure.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 }
 
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Device(msg) => write!(f, "device error: {msg}"),
+            Error::NoArtifact { kernel, dtype, d, k, hint } => {
+                write!(f, "no artifact for kernel={kernel} dtype={dtype} d={d} k={k}: {hint}")
+            }
+            Error::ChunkOom { per_set_bytes, free_bytes } => write!(
+                f,
+                "chunking failed: per-set footprint {per_set_bytes}B exceeds free device \
+                 budget {free_bytes}B — use lower precision or a larger memory budget"
+            ),
+            Error::Manifest(msg) => write!(f, "manifest error: {msg}"),
+            Error::InvalidArgument(msg) => write!(f, "invalid argument: {msg}"),
+            Error::Config(msg) => write!(f, "config error: {msg}"),
+            Error::Service(msg) => write!(f, "service unavailable: {msg}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "xla-backend")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Device(e.to_string())
@@ -59,3 +98,35 @@ impl From<xla::Error> for Error {
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_messages_are_stable() {
+        assert_eq!(
+            Error::InvalidArgument("k must be positive".into()).to_string(),
+            "invalid argument: k must be positive"
+        );
+        let oom = Error::ChunkOom { per_set_bytes: 10, free_bytes: 5 };
+        assert!(oom.to_string().contains("10B"));
+        assert!(oom.to_string().contains("5B"));
+        let na = Error::NoArtifact {
+            kernel: "eval_ws".into(),
+            dtype: "f32".into(),
+            d: 7,
+            k: 3,
+            hint: "available: []".into(),
+        };
+        assert!(na.to_string().contains("eval_ws"));
+        assert!(na.to_string().contains("available"));
+    }
+
+    #[test]
+    fn io_errors_convert_and_chain() {
+        let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(e.to_string().contains("gone"));
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

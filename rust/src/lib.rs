@@ -6,26 +6,30 @@
 //!
 //! * **L1/L2 (build-time Python, `python/compile/`)** — Pallas work-matrix
 //!   and marginal-gain kernels inside JAX graphs, AOT-lowered to HLO text.
-//! * **L3 (this crate)** — the run-time system: dataset substrate, CPU
-//!   baselines (the paper's Algorithm 2, single- and multi-threaded), the
-//!   S_multi packing of §IV-B2, the chunk planner of §IV-B3, a PJRT
-//!   runtime that loads + executes the AOT artifacts, an evaluation
+//! * **L3 (this crate)** — the run-time system: dataset substrate, the
+//!   optimizer-aware batched CPU backend (persistent worker pool +
+//!   cache-blocked Gram kernels, see [`cpu`]), the S_multi packing of
+//!   §IV-B2, the chunk planner of §IV-B3, a PJRT runtime that loads +
+//!   executes the AOT artifacts (`xla-backend` feature), an evaluation
 //!   service (batching, backpressure, metrics), and a suite of submodular
 //!   optimizers (Greedy, LazyGreedy, StochasticGreedy, SieveStreaming,
 //!   SieveStreaming++, ThreeSieves, Salsa) driving it.
 //!
 //! Python never runs on the request path; the binary is self-contained
-//! once `make artifacts` has produced `artifacts/`.
+//! once `make artifacts` has produced `artifacts/`. The default build is
+//! dependency-free and pure CPU; enable the `xla-backend` feature (with
+//! the vendored `xla` bindings) for the PJRT device path.
 //!
 //! ## Quick start
 //!
 //! ```no_run
-//! use exemcl::data::{Dataset, synth::GaussianBlobs};
-//! use exemcl::runtime::DeviceEvaluator;
-//! use exemcl::optim::{Greedy, Optimizer, Oracle};
+//! use exemcl::cpu::MultiThread;
+//! use exemcl::data::synth::GaussianBlobs;
+//! use exemcl::optim::{Greedy, Optimizer};
 //!
 //! let ds = GaussianBlobs::new(8, 100, 1.0).generate(20_000, 42);
-//! let eval = DeviceEvaluator::from_dir("artifacts", &ds, Default::default()).unwrap();
+//! // persistent worker pool + batched Gram kernels (0 = all cores)
+//! let eval = MultiThread::new(ds, 0);
 //! let result = Greedy::new(8).maximize(&eval).unwrap();
 //! println!("f(S) = {}", result.value);
 //! ```

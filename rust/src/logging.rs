@@ -1,61 +1,135 @@
-//! Minimal `log`-crate backend (the offline crate set has no env_logger):
-//! level from `EXEMCL_LOG` (`error|warn|info|debug|trace`, default
-//! `info`), timestamps relative to process start, writes to stderr.
+//! Minimal self-contained logging (the offline crate set has no `log` /
+//! `env_logger`): level from `EXEMCL_LOG` (`error|warn|info|debug|trace|off`,
+//! default `info`), timestamps relative to process start, writes to stderr.
+//!
+//! Use through the crate-level macros: [`crate::log_error!`],
+//! [`crate::log_warn!`], [`crate::log_info!`], [`crate::log_debug!`],
+//! [`crate::log_trace!`].
 
+use std::fmt;
+use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::OnceLock;
 use std::time::Instant;
 
-struct StderrLogger {
-    start: Instant,
-    level: log::LevelFilter,
+/// Log severity; lower discriminants are more severe.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    /// Logging disabled.
+    Off = 0,
+    /// Unrecoverable failures.
+    Error = 1,
+    /// Suspicious but non-fatal conditions.
+    Warn = 2,
+    /// High-level progress (default).
+    Info = 3,
+    /// Per-call diagnostics.
+    Debug = 4,
+    /// Inner-loop tracing.
+    Trace = 5,
 }
 
-impl log::Log for StderrLogger {
-    fn enabled(&self, metadata: &log::Metadata) -> bool {
-        metadata.level() <= self.level
-    }
-
-    fn log(&self, record: &log::Record) {
-        if !self.enabled(record.metadata()) {
-            return;
+impl Level {
+    fn as_str(self) -> &'static str {
+        match self {
+            Level::Off => "OFF",
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
         }
-        let t = self.start.elapsed();
-        eprintln!(
-            "[{:>9.3}s {:<5} {}] {}",
-            t.as_secs_f64(),
-            record.level(),
-            record.target(),
-            record.args()
-        );
     }
-
-    fn flush(&self) {}
 }
 
-static LOGGER: OnceLock<StderrLogger> = OnceLock::new();
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+static START: OnceLock<Instant> = OnceLock::new();
 
-/// Install the logger (idempotent). Call once from binaries/examples.
+/// Install the logger configuration (idempotent). Call once from
+/// binaries/examples; library code may log without it (default `info`).
 pub fn init() {
     let level = match std::env::var("EXEMCL_LOG").as_deref() {
-        Ok("error") => log::LevelFilter::Error,
-        Ok("warn") => log::LevelFilter::Warn,
-        Ok("debug") => log::LevelFilter::Debug,
-        Ok("trace") => log::LevelFilter::Trace,
-        Ok("off") => log::LevelFilter::Off,
-        _ => log::LevelFilter::Info,
+        Ok("error") => Level::Error,
+        Ok("warn") => Level::Warn,
+        Ok("debug") => Level::Debug,
+        Ok("trace") => Level::Trace,
+        Ok("off") => Level::Off,
+        _ => Level::Info,
     };
-    let logger = LOGGER.get_or_init(|| StderrLogger { start: Instant::now(), level });
-    // set_logger fails if called twice; that's fine (idempotent init)
-    let _ = log::set_logger(logger);
-    log::set_max_level(level);
+    START.get_or_init(Instant::now);
+    MAX_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Is `level` currently emitted?
+pub fn enabled(level: Level) -> bool {
+    level != Level::Off && (level as u8) <= MAX_LEVEL.load(Ordering::Relaxed)
+}
+
+/// Emit one record (used by the `log_*` macros).
+pub fn log(level: Level, target: &str, args: fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    let t = START.get_or_init(Instant::now).elapsed();
+    eprintln!("[{:>9.3}s {:<5} {}] {}", t.as_secs_f64(), level.as_str(), target, args);
+}
+
+/// Log at error level with `format!` syntax.
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        $crate::logging::log($crate::logging::Level::Error, module_path!(), format_args!($($arg)*))
+    };
+}
+
+/// Log at warn level with `format!` syntax.
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::logging::log($crate::logging::Level::Warn, module_path!(), format_args!($($arg)*))
+    };
+}
+
+/// Log at info level with `format!` syntax.
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::logging::log($crate::logging::Level::Info, module_path!(), format_args!($($arg)*))
+    };
+}
+
+/// Log at debug level with `format!` syntax.
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::logging::log($crate::logging::Level::Debug, module_path!(), format_args!($($arg)*))
+    };
+}
+
+/// Log at trace level with `format!` syntax.
+#[macro_export]
+macro_rules! log_trace {
+    ($($arg:tt)*) => {
+        $crate::logging::log($crate::logging::Level::Trace, module_path!(), format_args!($($arg)*))
+    };
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     #[test]
-    fn init_is_idempotent() {
-        super::init();
-        super::init();
-        log::info!("logger smoke test");
+    fn init_is_idempotent_and_macros_render() {
+        init();
+        init();
+        crate::log_info!("logger smoke test {}", 42);
+        assert!(enabled(Level::Error));
+        assert!(!enabled(Level::Off));
+    }
+
+    #[test]
+    fn level_ordering_matches_severity() {
+        assert!((Level::Error as u8) < (Level::Trace as u8));
+        assert_eq!(Level::Warn.as_str(), "WARN");
     }
 }

@@ -12,19 +12,23 @@
 
 use std::time::Instant;
 
+#[cfg(feature = "xla-backend")]
 use exemcl::chunk::MemoryModel;
 use exemcl::clustering;
 use exemcl::config::{AppConfig, Backend, RawConfig};
+#[cfg(feature = "xla-backend")]
 use exemcl::coordinator::EvalService;
 use exemcl::cpu::{MultiThread, SingleThread};
 use exemcl::data::csv::{self, CsvOptions};
 use exemcl::data::synth::{GaussianBlobs, Rings, UniformCube};
 use exemcl::data::Dataset;
 use exemcl::optim::{
-    Greedy, LazyGreedy, Optimizer, Salsa, SieveStreaming, SieveStreamingPP, StochasticGreedy,
-    ThreeSieves,
+    Greedy, LazyGreedy, OptimResult, Optimizer, Salsa, SieveStreaming, SieveStreamingPP,
+    StochasticGreedy, ThreeSieves,
 };
-use exemcl::runtime::{ArtifactRegistry, DeviceEvaluator, EvalConfig};
+use exemcl::runtime::ArtifactRegistry;
+#[cfg(feature = "xla-backend")]
+use exemcl::runtime::{DeviceEvaluator, EvalConfig};
 use exemcl::{Error, Result};
 
 fn usage() -> ! {
@@ -134,33 +138,7 @@ fn cmd_solve(cfg: &AppConfig) -> Result<()> {
             println!("backend: {}", exemcl::optim::Oracle::name(&oracle));
             optimizer.maximize(&oracle)?
         }
-        Backend::Device => {
-            // the service pins the non-Send device to its executor thread
-            let artifacts = cfg.artifacts.clone();
-            let dtype = cfg.dtype.clone();
-            let mem = MemoryModel {
-                total_bytes: cfg.memory_mib * (1 << 20),
-                bytes_per_elem: if dtype == "f32" { 4 } else { 2 },
-                ..MemoryModel::default()
-            };
-            let ds2 = ds.clone();
-            let svc = EvalService::spawn(
-                move || {
-                    DeviceEvaluator::from_dir(
-                        &artifacts,
-                        &ds2,
-                        EvalConfig { dtype, memory: mem, ..EvalConfig::default() },
-                    )
-                },
-                exemcl::coordinator::DEFAULT_QUEUE_CAPACITY,
-            )?;
-            let handle = svc.handle();
-            println!("backend: {}", exemcl::optim::Oracle::name(&handle));
-            let r = optimizer.maximize(&handle)?;
-            println!("service: {}", svc.metrics().summary());
-            svc.shutdown();
-            r
-        }
+        Backend::Device => solve_device(cfg, &ds, optimizer.as_ref())?,
     };
     let elapsed = t0.elapsed();
 
@@ -184,10 +162,57 @@ fn cmd_solve(cfg: &AppConfig) -> Result<()> {
     Ok(())
 }
 
+/// Run the optimizer against the PJRT device backend through the
+/// evaluation service (the service pins the non-`Send` device to its
+/// executor thread).
+#[cfg(feature = "xla-backend")]
+fn solve_device(cfg: &AppConfig, ds: &Dataset, optimizer: &dyn Optimizer) -> Result<OptimResult> {
+    let artifacts = cfg.artifacts.clone();
+    let dtype = cfg.dtype.clone();
+    let mem = MemoryModel {
+        total_bytes: cfg.memory_mib * (1 << 20),
+        bytes_per_elem: if dtype == "f32" { 4 } else { 2 },
+        ..MemoryModel::default()
+    };
+    let ds2 = ds.clone();
+    let svc = EvalService::spawn(
+        move || {
+            DeviceEvaluator::from_dir(
+                &artifacts,
+                &ds2,
+                EvalConfig { dtype, memory: mem, ..EvalConfig::default() },
+            )
+        },
+        exemcl::coordinator::DEFAULT_QUEUE_CAPACITY,
+    )?;
+    let handle = svc.handle();
+    println!("backend: {}", exemcl::optim::Oracle::name(&handle));
+    let r = optimizer.maximize(&handle)?;
+    println!("service: {}", svc.metrics().summary());
+    svc.shutdown();
+    Ok(r)
+}
+
+#[cfg(not(feature = "xla-backend"))]
+fn solve_device(
+    _cfg: &AppConfig,
+    _ds: &Dataset,
+    _optimizer: &dyn Optimizer,
+) -> Result<OptimResult> {
+    Err(Error::Config(
+        "this binary was built without the `xla-backend` feature; \
+         use eval.backend=cpu-st or cpu-mt"
+            .into(),
+    ))
+}
+
 fn cmd_info(cfg: &AppConfig) -> Result<()> {
     let reg = ArtifactRegistry::open(&cfg.artifacts)?;
     println!("artifact directory: {}", cfg.artifacts);
-    println!("{:<12} {:<5} {:>5} {:>5} {:>5} {:>5} {:>5}", "kernel", "dtype", "T", "D", "K", "L", "M");
+    println!(
+        "{:<12} {:<5} {:>5} {:>5} {:>5} {:>5} {:>5}",
+        "kernel", "dtype", "T", "D", "K", "L", "M"
+    );
     for m in reg.metas() {
         let fmt = |x: Option<usize>| x.map(|v| v.to_string()).unwrap_or_else(|| "-".into());
         println!(

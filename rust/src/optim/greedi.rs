@@ -63,13 +63,11 @@ impl<O: Oracle + ?Sized> Oracle for PartitionOracle<'_, O> {
     fn eval_sets(&self, sets: &[Vec<usize>]) -> Result<Vec<f32>> {
         // evaluate on the full oracle, then correct is impossible without
         // a partition-restricted kernel; partition evaluation goes
-        // through the state path instead.
+        // through the state path instead (one batched commit per set).
         let mut out = Vec::with_capacity(sets.len());
         for set in sets {
             let mut state = self.init_state();
-            for &e in set {
-                self.commit(&mut state, e)?;
-            }
+            self.commit_many(&mut state, set)?;
             out.push(self.f_of_state(&state));
         }
         Ok(out)
@@ -89,6 +87,12 @@ impl<O: Oracle + ?Sized> Oracle for PartitionOracle<'_, O> {
         // re-mask: commit may have lowered foreign entries from 0 upward?
         // (no — commit only lowers; foreign entries stay 0)
         Ok(())
+    }
+
+    fn commit_many(&self, state: &mut DminState, idxs: &[usize]) -> Result<()> {
+        // same masking argument as `commit`: the batched update only
+        // lowers dmin, so foreign entries stay pinned at 0
+        self.inner.commit_many(state, idxs)
     }
 
     fn l0_sum(&self) -> f64 {

@@ -61,9 +61,13 @@ impl Optimizer for Greedy {
         let mut selected = vec![false; n];
         let mut curve = Vec::with_capacity(k);
         let mut evaluations = 0u64;
+        // candidate scratch reused across rounds: avoids one O(n)
+        // allocation per round now that the oracle calls are batched
+        let mut candidates: Vec<usize> = Vec::with_capacity(n);
 
         for _round in 0..k {
-            let candidates: Vec<usize> = (0..n).filter(|&i| !selected[i]).collect();
+            candidates.clear();
+            candidates.extend((0..n).filter(|&i| !selected[i]));
             if candidates.is_empty() {
                 break;
             }

@@ -61,8 +61,12 @@ pub trait Oracle {
     /// matrix per §IV-B).
     fn eval_sets(&self, sets: &[Vec<usize>]) -> Result<Vec<f32>>;
 
-    /// Fresh optimizer state: `dmin_i = d(v_i, e0) = |v_i|^2`, no
-    /// exemplars.
+    /// Fresh optimizer state: `dmin_i = d(v_i, e0)`, no exemplars.
+    ///
+    /// The default assumes squared-Euclidean (`d(v_i, e0) = |v_i|^2`);
+    /// backends supporting other dissimilarities must override so the
+    /// initial `dmin` matches the distance the other oracle calls use
+    /// (the CPU oracles and the service handle do).
     fn init_state(&self) -> DminState {
         DminState { dmin: self.dataset().sq_norms(), exemplars: Vec::new() }
     }
@@ -73,6 +77,17 @@ pub trait Oracle {
 
     /// Commit exemplar `idx` into the state (lowers `dmin` pointwise).
     fn commit(&self, state: &mut DminState, idx: usize) -> Result<()>;
+
+    /// Commit several exemplars in one batched pass. Equivalent to
+    /// sequential [`Oracle::commit`] calls (the pointwise min over
+    /// exemplars is commutative); backends override this with fused
+    /// kernels that stream the ground set once for the whole batch.
+    fn commit_many(&self, state: &mut DminState, idxs: &[usize]) -> Result<()> {
+        for &idx in idxs {
+            self.commit(state, idx)?;
+        }
+        Ok(())
+    }
 
     /// `L({e0}) * n` — the constant of Definition 5, used to turn partial
     /// sums into function values.

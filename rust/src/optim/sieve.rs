@@ -31,8 +31,11 @@ struct Sieve {
 }
 
 impl Sieve {
-    fn new(threshold: f64, oracle: &dyn Oracle) -> Self {
-        Self { threshold, state: oracle.init_state(), value: 0.0 }
+    /// Sieve birth clones the run's cached empty state instead of asking
+    /// the oracle to recompute `init_state` (an O(n·d) walk for generic
+    /// dissimilarities) once per threshold guess.
+    fn from_template(threshold: f64, template: &DminState) -> Self {
+        Self { threshold, state: template.clone(), value: 0.0 }
     }
 
     /// The SieveStreaming accept rule for guess `v = threshold`:
@@ -166,12 +169,12 @@ impl SieveStreaming {
         self
     }
 
-    fn refresh_sieves(&self, sieves: &mut Vec<Sieve>, m: f64, oracle: &dyn Oracle) {
+    fn refresh_sieves(&self, sieves: &mut Vec<Sieve>, m: f64, template: &DminState) {
         let grid = threshold_grid(self.eps, m, 2.0 * self.k as f64 * m);
         sieves.retain(|s| s.threshold >= m / (1.0 + self.eps));
         for v in grid {
             if !sieves.iter().any(|s| (s.threshold - v).abs() < 1e-12) {
-                sieves.push(Sieve::new(v, oracle));
+                sieves.push(Sieve::from_template(v, template));
             }
         }
     }
@@ -193,7 +196,7 @@ impl SieveStreaming {
                 if seg_m <= 0.0 {
                     continue;
                 }
-                self.refresh_sieves(&mut sieves, seg_m, oracle);
+                self.refresh_sieves(&mut sieves, seg_m, &empty);
                 for sieve in sieves.iter_mut() {
                     feed_sieve(oracle, sieve, &window[start..end], self.k, &mut evaluations)?;
                 }
@@ -261,7 +264,7 @@ impl SieveStreamingPP {
                 sieves.retain(|s| s.threshold >= lo / (1.0 + self.eps));
                 for v in grid {
                     if !sieves.iter().any(|s| (s.threshold - v).abs() < 1e-12) {
-                        sieves.push(Sieve::new(v, oracle));
+                        sieves.push(Sieve::from_template(v, &empty));
                     }
                 }
                 for sieve in sieves.iter_mut() {
@@ -470,8 +473,9 @@ impl Salsa {
                     continue;
                 }
                 let grid = threshold_grid(self.eps, seg_m, 2.0 * self.k as f64 * seg_m);
+                let policies = [SalsaPolicy::Adaptive, SalsaPolicy::Dense, SalsaPolicy::TwoPhase];
                 for v in &grid {
-                    for policy in [SalsaPolicy::Adaptive, SalsaPolicy::Dense, SalsaPolicy::TwoPhase] {
+                    for policy in policies {
                         if !sieves
                             .iter()
                             .any(|s| s.policy == policy && (s.guess - v).abs() < 1e-12)
@@ -479,7 +483,7 @@ impl Salsa {
                             sieves.push(PolicySieve {
                                 policy,
                                 guess: *v,
-                                state: oracle.init_state(),
+                                state: empty.clone(),
                                 value: 0.0,
                             });
                         }

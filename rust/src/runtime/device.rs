@@ -41,7 +41,11 @@ impl Device {
     /// DESIGN.md §Substitutions).
     pub fn cpu() -> Result<Self> {
         let client = xla::PjRtClient::cpu()?;
-        Ok(Self { client, cache: RefCell::new(HashMap::new()), stats: RefCell::new(DeviceStats::default()) })
+        Ok(Self {
+            client,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(DeviceStats::default()),
+        })
     }
 
     /// PJRT platform name (e.g. `cpu`).

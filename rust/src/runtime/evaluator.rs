@@ -14,15 +14,26 @@
 //!   Greedy rounds: `commit` runs the `update_dmin` artifact per tile and
 //!   caches the refreshed buffers for the next `marginal_gains` call.
 
+#[cfg(feature = "xla-backend")]
 use std::cell::RefCell;
+#[cfg(feature = "xla-backend")]
 use std::path::Path;
 
+#[cfg(feature = "xla-backend")]
 use super::device::{Device, DeviceStats};
+#[cfg(feature = "xla-backend")]
 use super::registry::ArtifactRegistry;
-use crate::chunk::{self, MemoryModel};
+#[cfg(feature = "xla-backend")]
+use crate::chunk;
+use crate::chunk::MemoryModel;
+#[cfg(feature = "xla-backend")]
 use crate::data::Dataset;
+#[cfg(feature = "xla-backend")]
 use crate::optim::oracle::{DminState, Oracle};
-use crate::pack::{PackOrder, SMultiPack};
+use crate::pack::PackOrder;
+#[cfg(feature = "xla-backend")]
+use crate::pack::SMultiPack;
+#[cfg(feature = "xla-backend")]
 use crate::{Error, Result};
 
 /// Configuration of the device path.
@@ -46,6 +57,7 @@ impl Default for EvalConfig {
     }
 }
 
+#[cfg(feature = "xla-backend")]
 struct GroundTile {
     /// Tile-size bucket this tile was compiled for.
     t: usize,
@@ -57,6 +69,7 @@ struct GroundTile {
     vmask: xla::PjRtBuffer,
 }
 
+#[cfg(feature = "xla-backend")]
 struct DminCache {
     exemplars: Vec<usize>,
     bufs: Vec<xla::PjRtBuffer>,
@@ -66,6 +79,7 @@ struct DminCache {
 /// take the largest bucket that still fits fully, then one smallest
 /// bucket for the final remainder — padding waste is bounded by one
 /// small tile.
+#[cfg_attr(not(feature = "xla-backend"), allow(dead_code))] // device-path caller is feature-gated
 fn plan_tiles(n: usize, buckets: &[usize]) -> Vec<usize> {
     debug_assert!(!buckets.is_empty());
     let mut tiles = Vec::new();
@@ -93,6 +107,7 @@ fn plan_tiles(n: usize, buckets: &[usize]) -> Vec<usize> {
 }
 
 /// AOT-artifact-backed evaluator for one dataset.
+#[cfg(feature = "xla-backend")]
 pub struct DeviceEvaluator {
     device: Device,
     registry: ArtifactRegistry,
@@ -105,6 +120,7 @@ pub struct DeviceEvaluator {
     dmin_cache: RefCell<Option<DminCache>>,
 }
 
+#[cfg(feature = "xla-backend")]
 impl DeviceEvaluator {
     /// Open the artifact directory, pick buckets for `ds`, upload ground
     /// tiles. Fails if no bucket family covers the dataset dimensionality.
@@ -333,6 +349,7 @@ impl DeviceEvaluator {
     }
 }
 
+#[cfg(feature = "xla-backend")]
 impl Oracle for DeviceEvaluator {
     fn dataset(&self) -> &Dataset {
         &self.ds
@@ -471,6 +488,32 @@ mod tests {
     fn plan_tiles_single_bucket() {
         assert_eq!(plan_tiles(10, &[4096]), vec![4096]);
         assert_eq!(plan_tiles(8192, &[4096]), vec![4096, 4096]);
+    }
+
+    #[test]
+    fn plan_tiles_zero_n_hits_empty_fallback() {
+        // n = 0: the greedy loop exits immediately with no tiles, and the
+        // `tiles.is_empty()` fallback must still emit one smallest tile
+        // (a degenerate dataset gets a fully-masked tile, not a panic).
+        assert_eq!(plan_tiles(0, &[512, 4096]), vec![512]);
+        assert_eq!(plan_tiles(0, &[4096]), vec![4096]);
+    }
+
+    #[test]
+    fn plan_tiles_n_below_smallest_bucket() {
+        // remainder smaller than the smallest bucket from the start
+        assert_eq!(plan_tiles(1, &[512, 4096]), vec![512]);
+        assert_eq!(plan_tiles(511, &[512, 4096]), vec![512]);
+    }
+
+    #[test]
+    fn plan_tiles_remainder_tile_after_full_buckets() {
+        // one large tile plus a small remainder tile
+        assert_eq!(plan_tiles(4097, &[512, 4096]), vec![4096, 512]);
+        // remainder exactly fills a small bucket: no extra padding tile
+        assert_eq!(plan_tiles(4096 + 512, &[512, 4096]), vec![4096, 512]);
+        // single-bucket family: remainder forces one padded tile
+        assert_eq!(plan_tiles(4097, &[4096]), vec![4096, 4096]);
     }
 
     #[test]

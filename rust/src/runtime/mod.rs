@@ -4,13 +4,23 @@
 //! The interchange is HLO **text** (`HloModuleProto::from_text_file`),
 //! compiled once per artifact and memoized; the ground set is
 //! device-resident from construction. Python never runs here.
+//!
+//! The PJRT-backed pieces ([`Device`], [`DeviceEvaluator`]) require the
+//! vendored `xla` bindings and are gated behind the `xla-backend` cargo
+//! feature; the artifact manifest/registry, the tile planner and
+//! [`EvalConfig`] are always available so tooling (the CLI `info`
+//! command, the chunk planner tests) works in the default build.
 
+#[cfg(feature = "xla-backend")]
 pub mod device;
 pub mod evaluator;
 pub mod manifest;
 pub mod registry;
 
+#[cfg(feature = "xla-backend")]
 pub use device::{Device, DeviceStats};
-pub use evaluator::{DeviceEvaluator, EvalConfig};
+#[cfg(feature = "xla-backend")]
+pub use evaluator::DeviceEvaluator;
+pub use evaluator::EvalConfig;
 pub use manifest::ArtifactMeta;
 pub use registry::ArtifactRegistry;

@@ -127,11 +127,14 @@ fn streaming_family_reaches_documented_fractions() {
             let oracle = SingleThread::new(ds);
             let k = 4;
             let greedy = Greedy::new(k).maximize(&oracle).map_err(|e| e.to_string())?;
+            let run = |opt: &dyn Optimizer| -> Result<f32, String> {
+                Ok(opt.maximize(&oracle).map_err(|e| e.to_string())?.value)
+            };
             let checks: Vec<(&str, f32)> = vec![
-                ("sieve", SieveStreaming::new(k, 0.2, seed).maximize(&oracle).map_err(|e| e.to_string())?.value),
-                ("sieve++", SieveStreamingPP::new(k, 0.2, seed).maximize(&oracle).map_err(|e| e.to_string())?.value),
-                ("threesieves", ThreeSieves::new(k, 0.2, 40, seed).maximize(&oracle).map_err(|e| e.to_string())?.value),
-                ("salsa", Salsa::new(k, 0.3, seed).maximize(&oracle).map_err(|e| e.to_string())?.value),
+                ("sieve", run(&SieveStreaming::new(k, 0.2, seed))?),
+                ("sieve++", run(&SieveStreamingPP::new(k, 0.2, seed))?),
+                ("threesieves", run(&ThreeSieves::new(k, 0.2, 40, seed))?),
+                ("salsa", run(&Salsa::new(k, 0.3, seed))?),
             ];
             for (name, v) in checks {
                 if v < 0.3 * greedy.value {

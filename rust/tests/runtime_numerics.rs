@@ -1,6 +1,8 @@
 //! Device-vs-CPU numerics: the AOT/PJRT path must agree with the literal
 //! Algorithm 2 within float tolerance, across shapes, dtypes, chunking
-//! regimes and pack orders. Requires `make artifacts`.
+//! regimes and pack orders. Requires `make artifacts` and the
+//! `xla-backend` feature.
+#![cfg(feature = "xla-backend")]
 
 use exemcl::chunk::MemoryModel;
 use exemcl::cpu::SingleThread;

@@ -1,7 +1,8 @@
 //! Coordinator integration over the real device backend: the service
 //! pins the PJRT evaluator to its executor thread, serves concurrent
 //! clients, coalesces multiset requests and drives every optimizer.
-//! Requires `make artifacts`.
+//! Requires `make artifacts` and the `xla-backend` feature.
+#![cfg(feature = "xla-backend")]
 
 use exemcl::coordinator::EvalService;
 use exemcl::cpu::SingleThread;
