@@ -1,120 +1,238 @@
-//! Precision ablation — the paper's §VI future-work question: *does FP16
-//! evaluation change the clustering?* Runs Greedy end-to-end with f32,
-//! f16 and bf16 device oracles (and the CPU reference) on the same data
-//! and compares achieved f(S), k-medoids loss, exemplar overlap and
-//! wall-clock.
+//! Precision ablation — the paper's §VI future-work question: *does
+//! reduced-precision evaluation change the clustering?* — plus its §V-B
+//! headline: *reduced precision is where the speedups live*.
+//!
+//! The always-buildable **CPU mode** answers both on the
+//! precision-generic CPU backend:
+//!
+//! 1. Greedy end-to-end at k=32 on seeded synthetic blobs under f32,
+//!    f16 and bf16 oracles, comparing achieved f(S), exemplar overlap
+//!    and whether the selected sets are *identical* (the acceptance
+//!    check).
+//! 2. `marginal_gains` throughput at the issue's target shape — n=50k,
+//!    d=32, |C|=256 — per dtype: the half formats move half the bytes
+//!    through the Gram tiles (target: f16 ≥ 1.5× f32).
+//!
+//! Results print as tables and land in `BENCH_cpu_precision.json`
+//! (override with `EXEMCL_BENCH_CPU_PRECISION_OUT`) with the same flat
+//! schema as `BENCH_cpu.json`, for the perf trajectory. With the
+//! `xla-backend` feature a device dtype sweep runs as an appendix.
 //!
 //! Run: `cargo bench --bench ablation_precision`
 
+use std::collections::HashSet;
+use std::time::Instant;
+
+use exemcl::bench::{measure, write_json, JsonValue, Scale, Table};
+use exemcl::cpu::build_cpu_oracle;
+use exemcl::data::synth::{GaussianBlobs, UniformCube};
+use exemcl::data::Rng;
+use exemcl::optim::{Greedy, Optimizer, Oracle};
+use exemcl::scalar::Dtype;
+
+fn overlap(a: &[usize], b: &[usize]) -> f64 {
+    let sa: HashSet<_> = a.iter().collect();
+    let inter = b.iter().filter(|x| sa.contains(x)).count();
+    inter as f64 / a.len().max(1) as f64
+}
+
+fn same_set(a: &[usize], b: &[usize]) -> bool {
+    let sa: HashSet<_> = a.iter().collect();
+    let sb: HashSet<_> = b.iter().collect();
+    sa == sb
+}
+
+fn main() {
+    let scale = Scale::from_env();
+    // Greedy agreement problem (end-to-end, k exemplars from blobs)
+    let (g_n, g_k) = match scale {
+        Scale::Quick => (1_000usize, 32usize),
+        Scale::Default => (4_000, 32),
+        Scale::Full => (10_000, 32),
+    };
+    // marginal-gains throughput problem (the issue's target shape)
+    let (t_n, reps) = match scale {
+        Scale::Quick => (8_000usize, 2usize),
+        Scale::Default => (50_000, 5),
+        Scale::Full => (50_000, 7),
+    };
+    let d = 32usize;
+    let n_candidates = 256usize;
+    let n_exemplars = 8usize;
+    let threads = std::thread::available_parallelism().map(|x| x.get()).unwrap_or(1);
+
+    println!("\n== Precision ablation (CPU): f32 / f16 / bf16 Gram kernels ==");
+    println!(
+        "greedy: n={g_n} k={g_k} d={d} blobs={g_k}   throughput: n={t_n} |C|={n_candidates} \
+         threads={threads} reps={reps}\n"
+    );
+
+    // --- 1. Greedy agreement across dtypes
+    let lab = GaussianBlobs::new(g_k, d, 0.5).generate_labeled(g_n, 99);
+    let gds = &lab.dataset;
+    let mut table = Table::new(&["oracle", "f(S)", "overlap vs f32", "identical", "seconds"]);
+    let mut greedy_runs: Vec<(Dtype, exemcl::optim::OptimResult, f64)> = Vec::new();
+    for dtype in Dtype::all() {
+        let oracle = build_cpu_oracle(gds.clone(), true, 0, dtype);
+        let t0 = Instant::now();
+        let r = Greedy::new(g_k).maximize(oracle.as_ref()).expect("greedy");
+        let secs = t0.elapsed().as_secs_f64();
+        greedy_runs.push((dtype, r, secs));
+    }
+    let ref_run = greedy_runs[0].1.clone();
+    for (dtype, r, secs) in &greedy_runs {
+        let ov = overlap(&ref_run.exemplars, &r.exemplars);
+        let same = same_set(&ref_run.exemplars, &r.exemplars);
+        table.row(&[
+            format!("cpu-mt/{dtype}"),
+            format!("{:.5}", r.value),
+            format!("{ov:.3}"),
+            format!("{same}"),
+            format!("{secs:.3}"),
+        ]);
+    }
+    table.print();
+    let identical_f16 = same_set(&greedy_runs[0].1.exemplars, &greedy_runs[1].1.exemplars);
+    let identical_bf16 = same_set(&greedy_runs[0].1.exemplars, &greedy_runs[2].1.exemplars);
+    println!(
+        "\nf16 selects the identical exemplar set: {}",
+        if identical_f16 { "YES" } else { "NO" }
+    );
+
+    // --- 2. marginal_gains throughput per dtype at n=50k d=32 |C|=256
+    let ds = UniformCube::new(d, 1.0).generate(t_n, 20_250_727);
+    let mut rng = Rng::new(7);
+    let exemplars = rng.sample_indices(t_n, n_exemplars);
+    let candidates = rng.sample_indices(t_n, n_candidates);
+
+    let mut mins = Vec::new();
+    let mut gains_by_dtype: Vec<Vec<f32>> = Vec::new();
+    for dtype in Dtype::all() {
+        let oracle = build_cpu_oracle(ds.clone(), true, 0, dtype);
+        let mut state = oracle.init_state();
+        oracle.commit_many(&mut state, &exemplars).unwrap();
+        let gains = oracle.marginal_gains(&state, &candidates).unwrap();
+        gains_by_dtype.push(gains);
+        let stats = measure(
+            || {
+                oracle.marginal_gains(&state, &candidates).unwrap();
+            },
+            reps,
+            true,
+        );
+        mins.push(stats.min);
+    }
+    // sanity: half-precision gains track f32 loosely (quantization only)
+    let scale_abs = (ds.l0_sum() / ds.n() as f64) as f32;
+    for (g, dt) in gains_by_dtype.iter().zip(Dtype::all()).skip(1) {
+        for (c, (x, y)) in g.iter().zip(&gains_by_dtype[0]).enumerate() {
+            assert!(
+                (x - y).abs() <= 0.1 * (y.abs() + scale_abs),
+                "{dt} cand {c}: {x} vs f32 {y}"
+            );
+        }
+    }
+
+    let speedup_f16 = mins[0] / mins[1];
+    let speedup_bf16 = mins[0] / mins[2];
+    let mut tput = Table::new(&["dtype", "marginal_gains min[s]", "speedup vs f32"]);
+    for (dt, (m, s)) in
+        Dtype::all().iter().zip(mins.iter().zip([1.0, speedup_f16, speedup_bf16]))
+    {
+        tput.row(&[format!("{dt}"), format!("{m:.4}"), format!("{s:.2}x")]);
+    }
+    println!();
+    tput.print();
+
+    let target = 1.5f64;
+    println!(
+        "\nf16 throughput {:.2}x vs f32 (target >= {:.1}x: {})",
+        speedup_f16,
+        target,
+        if speedup_f16 >= target { "PASS" } else { "MISS" }
+    );
+
+    let out_path = std::env::var("EXEMCL_BENCH_CPU_PRECISION_OUT")
+        .unwrap_or_else(|_| "BENCH_cpu_precision.json".into());
+    let path = write_json(
+        &out_path,
+        &[
+            ("bench", JsonValue::Str("ablation_precision_cpu".into())),
+            ("n", JsonValue::Int(t_n as i64)),
+            ("d", JsonValue::Int(d as i64)),
+            ("candidates", JsonValue::Int(n_candidates as i64)),
+            ("exemplars_committed", JsonValue::Int(n_exemplars as i64)),
+            ("threads", JsonValue::Int(threads as i64)),
+            ("reps", JsonValue::Int(reps as i64)),
+            ("greedy_n", JsonValue::Int(g_n as i64)),
+            ("greedy_k", JsonValue::Int(g_k as i64)),
+            ("f32_marginal_gains_min_s", JsonValue::Num(mins[0])),
+            ("f16_marginal_gains_min_s", JsonValue::Num(mins[1])),
+            ("bf16_marginal_gains_min_s", JsonValue::Num(mins[2])),
+            ("speedup_f16", JsonValue::Num(speedup_f16)),
+            ("speedup_bf16", JsonValue::Num(speedup_bf16)),
+            ("greedy_f_f32", JsonValue::Num(greedy_runs[0].1.value as f64)),
+            ("greedy_f_f16", JsonValue::Num(greedy_runs[1].1.value as f64)),
+            ("greedy_f_bf16", JsonValue::Num(greedy_runs[2].1.value as f64)),
+            (
+                "greedy_overlap_f16",
+                JsonValue::Num(overlap(&greedy_runs[0].1.exemplars, &greedy_runs[1].1.exemplars)),
+            ),
+            (
+                "greedy_overlap_bf16",
+                JsonValue::Num(overlap(&greedy_runs[0].1.exemplars, &greedy_runs[2].1.exemplars)),
+            ),
+            ("exemplars_identical_f16", JsonValue::Bool(identical_f16)),
+            ("exemplars_identical_bf16", JsonValue::Bool(identical_bf16)),
+            ("target_speedup", JsonValue::Num(target)),
+            ("target_met", JsonValue::Bool(speedup_f16 >= target)),
+        ],
+    )
+    .expect("write BENCH_cpu_precision.json");
+    println!("wrote {path}");
+
+    device_appendix(gds, g_k, &ref_run);
+
+    println!(
+        "\npaper context: §VI asks whether FP16 solving is viable — identical or\n\
+         near-identical exemplar sets across precisions answer affirmatively, and\n\
+         §V-B's thesis that operand precision is the throughput lever now has a\n\
+         CPU-measurable counterpart (halved Gram-tile memory traffic)."
+    );
+}
+
+/// Device dtype sweep (AOT/PJRT path) against the CPU f32 reference run.
 #[cfg(feature = "xla-backend")]
 #[path = "common.rs"]
 mod common;
 
 #[cfg(feature = "xla-backend")]
-use std::time::Instant;
-
-#[cfg(feature = "xla-backend")]
-use exemcl::bench::{Scale, Table};
-#[cfg(feature = "xla-backend")]
-use exemcl::clustering;
-#[cfg(feature = "xla-backend")]
-use exemcl::cpu::SingleThread;
-#[cfg(feature = "xla-backend")]
-use exemcl::data::synth::GaussianBlobs;
-#[cfg(feature = "xla-backend")]
-use exemcl::optim::{Greedy, Optimizer, Oracle};
-#[cfg(feature = "xla-backend")]
-use exemcl::runtime::{DeviceEvaluator, EvalConfig};
-
-#[cfg(not(feature = "xla-backend"))]
-fn main() {
-    eprintln!(
-        "ablation_precision requires the `xla-backend` feature (PJRT device runtime); \
-         rebuild with `cargo bench --features xla-backend --bench ablation_precision`"
-    );
-}
-
-#[cfg(feature = "xla-backend")]
-fn overlap(a: &[usize], b: &[usize]) -> f64 {
-    let sa: std::collections::HashSet<_> = a.iter().collect();
-    let inter = b.iter().filter(|x| sa.contains(x)).count();
-    inter as f64 / a.len().max(1) as f64
-}
-
-#[cfg(feature = "xla-backend")]
-fn main() {
-    let scale = Scale::from_env();
-    let (n, k, d, blobs) = match scale {
-        Scale::Quick => (500, 5, 100, 5),
-        Scale::Default => (2000, 10, 100, 10),
-        Scale::Full => (8000, 20, 100, 20),
-    };
-    let lab = GaussianBlobs::new(blobs, d, 0.5).generate_labeled(n, 99);
-    let ds = &lab.dataset;
-
-    println!("\n== Precision ablation: Greedy clustering under f32 / f16 / bf16 ==");
-    println!("problem: N={n} k={k} d={d} blobs={blobs}\n");
-
-    // reference run on the exact CPU oracle
-    let cpu = SingleThread::new(ds.clone());
-    let t0 = Instant::now();
-    let ref_result = Greedy::new(k).maximize(&cpu).expect("cpu greedy");
-    let cpu_secs = t0.elapsed().as_secs_f64();
-    let ref_cluster = clustering::assign(ds, &ref_result.exemplars);
-
-    let mut table = Table::new(&[
-        "oracle", "f(S)", "loss", "purity", "overlap vs cpu", "seconds",
-    ]);
-    table.row(&[
-        "cpu-f32".into(),
-        format!("{:.5}", ref_result.value),
-        format!("{:.5}", ref_cluster.loss),
-        format!("{:.3}", clustering::purity(&ref_cluster.labels, &lab.labels)),
-        "1.000".into(),
-        format!("{cpu_secs:.3}"),
-    ]);
-
-    let mut rows_csv: Vec<Vec<String>> = Vec::new();
-    for dtype in ["f32", "f16", "bf16"] {
+fn device_appendix(ds: &exemcl::data::Dataset, k: usize, ref_run: &exemcl::optim::OptimResult) {
+    use exemcl::runtime::{DeviceEvaluator, EvalConfig};
+    println!("\n== device appendix: Greedy under device dtypes ==");
+    let mut table = Table::new(&["oracle", "f(S)", "overlap vs cpu-f32", "seconds"]);
+    for dtype in Dtype::all() {
         let dev = DeviceEvaluator::from_dir(
             common::artifacts_dir(),
             ds,
-            EvalConfig { dtype: dtype.into(), ..EvalConfig::default() },
+            EvalConfig { dtype: dtype.to_string(), ..EvalConfig::default() },
         )
         .expect("device evaluator");
-        // warm executable cache
         dev.eval_sets(&[vec![0]]).expect("warmup");
         let t0 = Instant::now();
         let r = Greedy::new(k).maximize(&dev).expect("device greedy");
         let secs = t0.elapsed().as_secs_f64();
-        let c = clustering::assign(ds, &r.exemplars);
-        let ov = overlap(&ref_result.exemplars, &r.exemplars);
         table.row(&[
             format!("device-{dtype}"),
             format!("{:.5}", r.value),
-            format!("{:.5}", c.loss),
-            format!("{:.3}", clustering::purity(&c.labels, &lab.labels)),
-            format!("{ov:.3}"),
+            format!("{:.3}", overlap(&ref_run.exemplars, &r.exemplars)),
             format!("{secs:.3}"),
-        ]);
-        rows_csv.push(vec![
-            dtype.into(),
-            format!("{:.6}", r.value),
-            format!("{:.6}", c.loss),
-            format!("{ov:.4}"),
-            format!("{secs:.4}"),
         ]);
     }
     table.print();
-    let path = exemcl::bench::write_csv(
-        "ablation_precision",
-        &["dtype", "f", "loss", "overlap", "seconds"],
-        &rows_csv,
-    )
-    .expect("csv");
-    println!("\nwrote {path}");
-    println!(
-        "\npaper context: §VI asks whether FP16 solving is viable — identical or\n\
-         near-identical exemplar sets across precisions answer affirmatively here."
-    );
+}
+
+#[cfg(not(feature = "xla-backend"))]
+fn device_appendix(_ds: &exemcl::data::Dataset, _k: usize, _ref_run: &exemcl::optim::OptimResult) {
+    println!("\n(device appendix skipped: built without the `xla-backend` feature)");
 }

@@ -1,0 +1,94 @@
+//! End-to-end driver (EXPERIMENTS.md §E2E): full exemplar clustering of a
+//! 20k-point synthetic blob corpus through the whole stack —
+//!
+//!   data substrate → coordinator service (executor thread + batching)
+//!   → batched multi-thread CPU evaluator → Greedy + LazyGreedy
+//!   → clustering extraction + quality metrics,
+//!
+//! with the f(S) curve logged per round and the single-thread baseline
+//! timed on the same problem for the headline speedup. All CPU layers
+//! compose here; point the service factory at a `DeviceEvaluator`
+//! (`xla-backend` feature) to swap in the AOT/PJRT path.
+//!
+//! ```sh
+//! cargo run --release --example exemplar_clustering
+//! ```
+
+use std::time::Instant;
+
+use exemcl::clustering;
+use exemcl::coordinator::EvalService;
+use exemcl::cpu::{MultiThread, SingleThread};
+use exemcl::data::synth::GaussianBlobs;
+use exemcl::optim::{Greedy, LazyGreedy, Optimizer, Oracle};
+
+fn main() -> exemcl::Result<()> {
+    let n: usize = std::env::var("E2E_N").ok().and_then(|v| v.parse().ok()).unwrap_or(20_000);
+    let k: usize = std::env::var("E2E_K").ok().and_then(|v| v.parse().ok()).unwrap_or(20);
+    let d: usize = 100;
+    let blobs = k;
+
+    println!("=== exemcl end-to-end: exemplar clustering ===");
+    println!("workload: n={n} d={d} k={k} ({blobs} ground-truth blobs)\n");
+    let lab = GaussianBlobs::new(blobs, d, 0.6).generate_labeled(n, 2026);
+    let ds = lab.dataset.clone();
+
+    // --- the full coordinated stack: service + batched MT evaluator
+    let ds2 = ds.clone();
+    let svc = EvalService::spawn(
+        move || Ok(MultiThread::new(ds2, 0)),
+        exemcl::coordinator::DEFAULT_QUEUE_CAPACITY,
+    )?;
+    let handle = svc.handle();
+    println!("backend: {}", handle.name());
+
+    let t0 = Instant::now();
+    let result = Greedy::new(k).maximize(&handle)?;
+    let mt_secs = t0.elapsed().as_secs_f64();
+
+    println!("\nf(S) curve (per greedy round):");
+    for (i, v) in result.curve.iter().enumerate() {
+        println!("  round {:>2}: f = {v:.5}", i + 1);
+    }
+    println!(
+        "\nmt greedy:     f(S) = {:.5} in {mt_secs:.2}s ({} gain evaluations)",
+        result.value, result.evaluations
+    );
+    println!("service metrics: {}", svc.metrics().summary());
+
+    // --- LazyGreedy through the same service (fewer evaluations)
+    let t0 = Instant::now();
+    let lazy = LazyGreedy::new(k).maximize(&handle)?;
+    let lazy_secs = t0.elapsed().as_secs_f64();
+    println!(
+        "lazy greedy:   f(S) = {:.5} in {lazy_secs:.2}s ({} gain evaluations)",
+        lazy.value, lazy.evaluations
+    );
+    svc.shutdown();
+
+    // --- single-thread baseline on the identical problem
+    let cpu = SingleThread::new(ds.clone());
+    let t0 = Instant::now();
+    let cpu_result = Greedy::new(k).maximize(&cpu)?;
+    let cpu_secs = t0.elapsed().as_secs_f64();
+    println!(
+        "\ncpu-st greedy: f(S) = {:.5} in {cpu_secs:.2}s  -> mt speedup {:.1}x",
+        cpu_result.value,
+        cpu_secs / mt_secs
+    );
+    assert!(
+        (cpu_result.value - result.value).abs() <= 2e-3 * cpu_result.value.abs().max(1.0),
+        "mt and st greedy disagree: {} vs {}",
+        result.value,
+        cpu_result.value
+    );
+
+    // --- clustering quality vs ground truth
+    let c = clustering::assign(&ds, &result.exemplars);
+    let purity = clustering::purity(&c.labels, &lab.labels);
+    println!("\nclustering: k-medoids loss = {:.5}", c.loss);
+    println!("purity vs ground-truth blobs = {purity:.3}");
+    println!("cluster sizes = {:?}", clustering::cluster_sizes(&c.labels, k));
+    println!("\n=== end-to-end run complete ===");
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! Clustering-baseline comparison: §IV grounds Exemplar-based clustering
+//! in the k-medoids loss (Definition 4). This example pits the
+//! submodular route (Greedy on the batched CPU oracle) against classic
+//! Lloyd's k-means (k-means++ seeding) and PAM k-medoids on the same
+//! synthetic blobs, reporting the shared loss, ground-truth purity and
+//! wall-clock.
+//!
+//! ```sh
+//! cargo run --release --example kmedoids_comparison
+//! ```
+
+use std::time::Instant;
+
+use exemcl::clustering::{self, baselines};
+use exemcl::cpu::MultiThread;
+use exemcl::data::synth::GaussianBlobs;
+use exemcl::optim::{Greedy, Optimizer, Oracle};
+
+fn main() -> exemcl::Result<()> {
+    // PAM's SWAP phase is O(k·(n-k)²) per improvement scan, so the shared
+    // workload stays modest; greedy and k-means scale far beyond this.
+    let (n, k, d) = (1000usize, 6usize, 16usize);
+    println!("=== exemplar clustering vs k-means vs PAM ===");
+    println!("workload: n={n} d={d} k={k} blobs={k}\n");
+    let lab = GaussianBlobs::new(k, d, 0.5).generate_labeled(n, 17);
+    let ds = &lab.dataset;
+
+    // --- submodular route: Greedy on the batched CPU oracle
+    let eval = MultiThread::new(ds.clone(), 0);
+    println!("evaluator: {}\n", eval.name());
+    let t0 = Instant::now();
+    let greedy = Greedy::new(k).maximize(&eval)?;
+    let greedy_secs = t0.elapsed().as_secs_f64();
+    let gc = clustering::assign(ds, &greedy.exemplars);
+
+    // --- classical baselines
+    let t0 = Instant::now();
+    let km = baselines::kmeans(ds, k, 100, 18);
+    let km_secs = t0.elapsed().as_secs_f64();
+
+    let t0 = Instant::now();
+    let pam = baselines::pam_kmedoids(ds, k, 40, 19);
+    let pam_secs = t0.elapsed().as_secs_f64();
+
+    println!("{:<22} {:>10} {:>8} {:>9}", "method", "loss", "purity", "seconds");
+    println!(
+        "{:<22} {:>10.4} {:>8.3} {:>9.3}",
+        "greedy-exemplar (cpu)",
+        gc.loss,
+        clustering::purity(&gc.labels, &lab.labels),
+        greedy_secs
+    );
+    println!(
+        "{:<22} {:>10.4} {:>8.3} {:>9.3}",
+        "kmeans++ (lloyd)",
+        km.loss,
+        clustering::purity(&km.labels, &lab.labels),
+        km_secs
+    );
+    println!(
+        "{:<22} {:>10.4} {:>8.3} {:>9.3}",
+        "PAM k-medoids",
+        pam.loss,
+        clustering::purity(&pam.labels, &lab.labels),
+        pam_secs
+    );
+
+    println!(
+        "\nreading: exemplar greedy optimizes the same medoid loss with a\n\
+         (1-1/e) guarantee and single-pass/streaming variants — classical\n\
+         k-means reaches lower loss only because centroids are\n\
+         unconstrained (not dataset members)."
+    );
+    Ok(())
+}

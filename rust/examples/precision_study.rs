@@ -1,0 +1,106 @@
+//! Precision study (§V-B / §VI): evaluate the same multiset problem
+//! under f32, f16 and bf16 arithmetic and quantify both the numeric
+//! deviation of f(S) and the wall-clock difference — the per-evaluation
+//! view that complements the end-to-end `ablation_precision` bench.
+//!
+//! The default build runs the **CPU dtype mode**: the precision-generic
+//! Gram kernels over mean-centered `f32`/`f16`/`bf16` shadows of the
+//! same ground set (operands narrow, accumulate wide). With the
+//! `xla-backend` feature the same sweep additionally runs on the device
+//! evaluator from AOT artifacts.
+//!
+//! ```sh
+//! cargo run --release --example precision_study
+//! ```
+
+use std::time::Instant;
+
+use exemcl::cpu::build_cpu_oracle;
+use exemcl::data::synth::UniformCube;
+use exemcl::data::Rng;
+use exemcl::optim::Oracle;
+use exemcl::scalar::Dtype;
+
+fn report(label: &str, vals: &[f32], exact: &[f32], secs: f64) {
+    let mut max_rel = 0.0f64;
+    let mut mean_rel = 0.0f64;
+    for (v, e) in vals.iter().zip(exact) {
+        let rel = ((v - e) as f64 / (e.abs().max(1e-6)) as f64).abs();
+        max_rel = max_rel.max(rel);
+        mean_rel += rel;
+    }
+    mean_rel /= vals.len() as f64;
+    println!(
+        "{label:>10}: {secs:.3}s   max rel err = {max_rel:.2e}   mean rel err = {mean_rel:.2e}"
+    );
+}
+
+fn main() -> exemcl::Result<()> {
+    let n: usize =
+        std::env::var("PRECISION_N").ok().and_then(|v| v.parse().ok()).unwrap_or(4000);
+    let (l, k, d) = (256usize, 10usize, 100usize);
+    println!("=== precision study: f32 vs f16 vs bf16 evaluation ===");
+    println!("problem: N={n} l={l} k={k} d={d}\n");
+
+    let ds = UniformCube::new(d, 1.0).generate(n, 11);
+    let mut rng = Rng::new(12);
+    let sets: Vec<Vec<usize>> = (0..l).map(|_| rng.sample_indices(n, k)).collect();
+
+    // exact reference from the full-precision CPU oracle (f64
+    // accumulation inside)
+    let exact = build_cpu_oracle(ds.clone(), false, 0, Dtype::F32).eval_sets(&sets)?;
+
+    println!("-- CPU dtype mode (multi-thread, centered Gram shadows)");
+    for dtype in Dtype::all() {
+        let oracle = build_cpu_oracle(ds.clone(), true, 0, dtype);
+        oracle.eval_sets(&sets[..1])?; // warm the pool
+        let t0 = Instant::now();
+        let vals = oracle.eval_sets(&sets)?;
+        let secs = t0.elapsed().as_secs_f64();
+        report(dtype.as_str(), &vals, &exact, secs);
+    }
+
+    device_mode(&ds, &sets, &exact)?;
+
+    println!(
+        "\nreading: f16/bf16 deviations stay orders of magnitude below the\n\
+         gaps Greedy must distinguish, supporting the paper's §VI conjecture\n\
+         that reduced precision is viable for exemplar clustering."
+    );
+    Ok(())
+}
+
+/// Device dtype sweep over the same multiset problem (AOT/PJRT path).
+#[cfg(feature = "xla-backend")]
+fn device_mode(
+    ds: &exemcl::data::Dataset,
+    sets: &[Vec<usize>],
+    exact: &[f32],
+) -> exemcl::Result<()> {
+    use exemcl::runtime::{DeviceEvaluator, EvalConfig};
+    let artifacts = std::env::var("EXEMCL_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    println!("\n-- device dtype mode (artifacts: {artifacts})");
+    for dtype in Dtype::all() {
+        let dev = DeviceEvaluator::from_dir(
+            &artifacts,
+            ds,
+            EvalConfig { dtype: dtype.to_string(), ..EvalConfig::default() },
+        )?;
+        dev.eval_sets(&sets[..1])?; // warm the executable cache
+        let t0 = Instant::now();
+        let vals = dev.eval_sets(sets)?;
+        let secs = t0.elapsed().as_secs_f64();
+        report(dtype.as_str(), &vals, exact, secs);
+    }
+    Ok(())
+}
+
+#[cfg(not(feature = "xla-backend"))]
+fn device_mode(
+    _ds: &exemcl::data::Dataset,
+    _sets: &[Vec<usize>],
+    _exact: &[f32],
+) -> exemcl::Result<()> {
+    println!("\n(device dtype mode skipped: built without the `xla-backend` feature)");
+    Ok(())
+}

@@ -4,6 +4,7 @@
 
 use std::collections::BTreeMap;
 
+use crate::scalar::Dtype;
 use crate::{Error, Result};
 
 /// Raw parsed config: `section.key -> value` (top-level keys live in
@@ -124,8 +125,9 @@ pub struct AppConfig {
     pub optimizer: String,
     /// Evaluation backend.
     pub backend: Backend,
-    /// Device dtype (`f32` | `f16` | `bf16`).
-    pub dtype: String,
+    /// Element dtype (`f32` | `f16` | `bf16`) — one vocabulary for the
+    /// CPU oracles and the device artifact manifest.
+    pub dtype: Dtype,
     /// Artifact directory.
     pub artifacts: String,
     /// Worker threads for `cpu-mt` (0 = auto).
@@ -147,7 +149,7 @@ impl Default for AppConfig {
             seed: 42,
             optimizer: "greedy".into(),
             backend: Backend::Device,
-            dtype: "f32".into(),
+            dtype: Dtype::F32,
             artifacts: "artifacts".into(),
             threads: 0,
             memory_mib: 16 * 1024,
@@ -169,7 +171,7 @@ impl AppConfig {
             seed: raw.get_or("data.seed", def.seed)?,
             optimizer: raw.get("optimizer.name").unwrap_or(&def.optimizer).to_string(),
             backend: raw.get_or("eval.backend", def.backend)?,
-            dtype: raw.get("eval.dtype").unwrap_or(&def.dtype).to_string(),
+            dtype: raw.get_or("eval.dtype", def.dtype)?,
             artifacts: raw.get("eval.artifacts").unwrap_or(&def.artifacts).to_string(),
             threads: raw.get_or("eval.threads", def.threads)?,
             memory_mib: raw.get_or("eval.memory_mib", def.memory_mib)?,
@@ -209,6 +211,17 @@ mod tests {
         assert_eq!(cfg.k, 7);
         assert_eq!(cfg.d, 100); // default preserved
         assert_eq!(cfg.backend, Backend::Device);
+    }
+
+    #[test]
+    fn dtype_parses_and_rejects() {
+        let raw = RawConfig::parse("[eval]\ndtype = f16\n").unwrap();
+        assert_eq!(AppConfig::from_raw(&raw).unwrap().dtype, Dtype::F16);
+        let raw = RawConfig::parse("[eval]\ndtype = bf16\n").unwrap();
+        assert_eq!(AppConfig::from_raw(&raw).unwrap().dtype, Dtype::Bf16);
+        assert_eq!(AppConfig::from_raw(&RawConfig::default()).unwrap().dtype, Dtype::F32);
+        let raw = RawConfig::parse("[eval]\ndtype = f64\n").unwrap();
+        assert!(AppConfig::from_raw(&raw).is_err());
     }
 
     #[test]

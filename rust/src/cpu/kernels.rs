@@ -1,7 +1,9 @@
-//! Low-level CPU kernels: the candidate-batched, cache-blocked Gram
-//! kernels behind [`crate::cpu::SingleThread`] / [`crate::cpu::MultiThread`],
-//! plus the historical naive/blocked loss-sum pair kept as reference
-//! implementations for the perf harness and property tests.
+//! Low-level CPU kernels: the candidate-batched, cache-blocked,
+//! **precision-generic** Gram kernels behind [`crate::cpu::SingleThread`]
+//! / [`crate::cpu::MultiThread`], their direct-eval counterparts for
+//! non-factoring dissimilarities, plus the historical naive/blocked
+//! loss-sum pair kept as reference implementations for the perf harness
+//! and property tests.
 //!
 //! # Gram layout
 //!
@@ -13,46 +15,92 @@
 //! ‖a − b‖² = ‖a‖² − 2·a·b + ‖b‖²
 //! ```
 //!
-//! with per-row squared norms precomputed **once at oracle construction**
-//! and the dot product evaluated by a register-blocked micro-kernel that
-//! scores four candidates against one ground row per pass (one load of
-//! the ground row amortized over four dot accumulators; the inner `d`
-//! loop autovectorizes). Candidates are gathered into a dense
-//! `(m, d)` block so the hot loop walks contiguous memory, and processed
-//! in [`CAND_BLOCK`]-row tiles that stay cache-resident while a
-//! [`GROUND_TILE`]-row slice of the ground set streams through.
+//! over a [`ShadowSet<S>`] — the ground set mean-centered and quantized
+//! to the storage scalar `S` (`f32`/`f16`/`bf16`), with per-row squared
+//! norms precomputed **once at shadow construction**. The dot product is
+//! a register-blocked micro-kernel that scores four candidates against
+//! one ground row per pass (one load of the ground row amortized over
+//! four `f32` dot accumulators; the inner `d` loop autovectorizes).
+//! Candidates are gathered into a dense `(m, d)` block so the hot loop
+//! walks contiguous memory, and processed in [`CAND_BLOCK`]-row tiles
+//! that stay cache-resident while a [`GROUND_TILE`]-row slice of the
+//! ground set streams through.
+//!
+//! # Widening at tile granularity
+//!
+//! The narrow formats are **storage** formats: arithmetic is always
+//! `f32` ("operands narrow, accumulate wide", see [`crate::scalar`]).
+//! Rather than decoding inside the dot product, the kernels widen at
+//! tile granularity into small reusable scratch buffers — a candidate
+//! block is decoded once per ground tile (≤ 0.5% of the tile's
+//! multiply-adds) and a ground row once per candidate-block pass — so
+//! the register-blocked inner loop is bit-identical across dtypes and
+//! the half formats pay only for streaming *half the bytes* of ground
+//! set per pass, which is exactly where their throughput lives. For
+//! `S = f32` the scratch is skipped entirely
+//! ([`crate::scalar::Scalar::as_f32_slice`]) and the generic code
+//! monomorphizes to the old `f32` kernels.
 //!
 //! The fused [`gains_tile`] kernel is the optimizer-aware core: one pass
 //! over each ground tile scores the *entire* candidate block against the
 //! cached `dmin` state in registers — the seed path streamed the whole
 //! dataset once per candidate.
 //!
-//! **Numerical caveat.** The Gram identity cancels catastrophically in
-//! f32 when row norms dwarf pairwise distances (data far from the
-//! origin): the error is ~ULP of the *norms*, not of the distance. The
-//! paper's workloads are near-origin (and Definition 5's auxiliary
-//! exemplar `e0 = 0` already makes far-off-center data degenerate), so
-//! this matches the benchmark regime; for general off-center inputs the
-//! planned fix is a mean-centered shadow of the ground set feeding the
-//! pairwise kernels (pair distances are translation-invariant) — see
-//! ROADMAP "Open items".
+//! # Numerics: centering instead of cancellation
+//!
+//! The Gram identity cancels catastrophically when row norms dwarf
+//! pairwise distances (data far from the origin): the error is ~ULP of
+//! the *norms*, not of the distance. Pairwise distances are
+//! translation-invariant, so the shadow is mean-centered at
+//! construction, which shrinks the norms to the scale of the distances
+//! themselves and removes the cancellation in **every** precision —
+//! off-origin data (sensor streams with large baselines) would otherwise
+//! be unusable in `f16`/`bf16` and badly degraded in `f32`. Distances to
+//! the auxiliary exemplar `e0 = 0` are *not* translation-invariant and
+//! are served from raw norms ([`loss_tile`] takes them as a separate
+//! argument; `dmin` initialization in the oracles uses the canonical
+//! rows).
+//!
+//! Non-factoring dissimilarities (Manhattan, cosine) use the `_direct`
+//! kernels over the canonical `f32` rows with the same batching
+//! structure — cosine is not translation-invariant, so the shadow never
+//! feeds a generic [`Dissimilarity::eval`].
 
 use std::ops::Range;
 
-use crate::data::Dataset;
+use crate::data::{Dataset, ShadowSet};
 use crate::distance::Dissimilarity;
+use crate::scalar::Scalar;
 
-/// Ground rows per work grain: at d = 100 one tile is ~100 KiB of f32 —
-/// comfortably L2-resident while candidate blocks cycle over it.
+/// Ground rows per work grain: at d = 100 one tile is ~100 KiB of f32
+/// (half that for the 16-bit formats) — comfortably L2-resident while
+/// candidate blocks cycle over it.
 pub const GROUND_TILE: usize = 256;
 
 /// Candidate rows per register-blocked pass: at d = 32 one block is
-/// 16 KiB — L1-resident across an entire ground tile.
+/// 16 KiB of f32 — L1-resident across an entire ground tile.
 pub const CAND_BLOCK: usize = 128;
 
-/// Four dot products of `v` against rows `base/d .. base/d + 4` of the
-/// dense block `rows` — the register-blocked core every Gram kernel
-/// shares (one load of `v[j]` amortized over four accumulators).
+/// Borrow `src` as `f32` directly (identity format) or decode it into
+/// `scratch` and borrow that — the tile-granular widening step. The
+/// decode loop is branchless (see [`crate::scalar::f16_decode`]) and
+/// autovectorizes.
+#[inline]
+fn decoded<'a, S: Scalar>(src: &'a [S], scratch: &'a mut Vec<f32>) -> &'a [f32] {
+    match S::as_f32_slice(src) {
+        Some(direct) => direct,
+        None => {
+            scratch.clear();
+            scratch.extend(src.iter().map(|x| x.to_f32()));
+            scratch.as_slice()
+        }
+    }
+}
+
+/// Four dot products of ground row `v` against rows
+/// `base/d .. base/d + 4` of the dense block `rows` — the
+/// register-blocked core every Gram kernel shares (one load of `v[j]`
+/// amortized over four accumulators).
 #[inline]
 fn dot4(v: &[f32], rows: &[f32], base: usize, d: usize) -> [f32; 4] {
     let r0 = &rows[base..base + d];
@@ -70,7 +118,9 @@ fn dot4(v: &[f32], rows: &[f32], base: usize, d: usize) -> [f32; 4] {
     [s0, s1, s2, s3]
 }
 
-/// Scalar-tail dot product of `v` against row `s` of `rows`.
+/// Scalar-tail dot product of `v` against row `s` of `rows`, accumulated
+/// in f32 in index order (matches the shadow's norm reduction order, so
+/// `v · v == ‖v‖²` exactly).
 #[inline]
 fn dot1(v: &[f32], rows: &[f32], s: usize, d: usize) -> f32 {
     let r = &rows[s * d..(s + 1) * d];
@@ -106,8 +156,9 @@ fn min_sq_to_rows(v: &[f32], nv: f32, rows: &[f32], norms: &[f32], d: usize) -> 
     best
 }
 
-/// Gather `idx` rows of `ds` into a dense `(m, d)` block plus per-row
-/// squared norms (the per-call half of the Gram precomputation).
+/// Gather `idx` rows of the canonical dataset into a dense f32 `(m, d)`
+/// block plus per-row squared norms (the direct-path counterpart of
+/// [`ShadowSet::gather`]).
 pub fn gather_rows(ds: &Dataset, idx: &[usize]) -> (Vec<f32>, Vec<f32>) {
     let d = ds.d();
     let mut rows = Vec::with_capacity(idx.len() * d);
@@ -120,62 +171,49 @@ pub fn gather_rows(ds: &Dataset, idx: &[usize]) -> (Vec<f32>, Vec<f32>) {
     (rows, norms)
 }
 
-/// Fused marginal-gain kernel over one ground tile: for every ground row
-/// in `rows`, score the entire candidate block against `dmin` and
-/// accumulate the clamped improvements `max(dmin_i − d(c, v_i), 0)` into
-/// `acc[c]` (f64, one slot per candidate).
-///
-/// `cand_rows`/`cand_norms` come from [`gather_rows`]; `norms` are the
-/// oracle's precomputed ground-row squared norms (unused on the
-/// non-factoring fallback path).
-#[allow(clippy::too_many_arguments)]
-pub fn gains_tile<D: Dissimilarity>(
+/// Fused marginal-gain kernel over one ground tile of the shadow (Gram
+/// path): for every ground row in `rows`, score the entire candidate
+/// block against `dmin` and accumulate the clamped improvements
+/// `max(dmin_i − d(c, v_i), 0)` into `acc[c]` (f64, one slot per
+/// candidate). `cand_rows`/`cand_norms` come from [`ShadowSet::gather`].
+pub fn gains_tile<S: Scalar, D: Dissimilarity>(
     dist: &D,
-    ds: &Dataset,
-    norms: &[f32],
+    view: &ShadowSet<S>,
     dmin: &[f32],
     rows: Range<usize>,
-    cand_rows: &[f32],
+    cand_rows: &[S],
     cand_norms: &[f32],
     acc: &mut [f64],
 ) {
-    let d = ds.d();
+    debug_assert!(dist.factors_through_sq_euclidean());
+    let d = view.d();
     let m = acc.len();
     debug_assert_eq!(cand_rows.len(), m * d);
     debug_assert_eq!(cand_norms.len(), m);
-    if dist.factors_through_sq_euclidean() {
-        let mut c0 = 0;
-        while c0 < m {
-            let c1 = (c0 + CAND_BLOCK).min(m);
-            for i in rows.clone() {
-                let dm = dmin[i];
-                if dm <= 0.0 {
-                    continue; // d ≥ 0 ⇒ no candidate can improve this row
-                }
-                let (v, nv) = (ds.row(i), norms[i]);
-                gains_row_gram(dist, v, nv, dm, c0, c1, d, cand_rows, cand_norms, acc);
-            }
-            c0 = c1;
-        }
-    } else {
-        for i in rows {
-            let v = ds.row(i);
+    let mut cand_scratch = Vec::new();
+    let mut row_scratch = Vec::new();
+    let mut c0 = 0;
+    while c0 < m {
+        let c1 = (c0 + CAND_BLOCK).min(m);
+        // widen the candidate block once per ground-tile pass
+        let block = decoded(&cand_rows[c0 * d..c1 * d], &mut cand_scratch);
+        let block_norms = &cand_norms[c0..c1];
+        let block_acc = &mut acc[c0..c1];
+        for i in rows.clone() {
             let dm = dmin[i];
             if dm <= 0.0 {
-                continue;
+                continue; // d ≥ 0 ⇒ no candidate can improve this row
             }
-            for (c, slot) in acc.iter_mut().enumerate() {
-                let dd = dist.eval(&cand_rows[c * d..(c + 1) * d], v);
-                let improve = dm - dd;
-                if improve > 0.0 {
-                    *slot += improve as f64;
-                }
-            }
+            let v = decoded(view.row(i), &mut row_scratch);
+            gains_row_gram(dist, v, view.sq_norm(i), dm, d, block, block_norms, block_acc);
         }
+        c0 = c1;
     }
 }
 
-/// Register-blocked inner row: four candidates per pass, Gram identity.
+/// Register-blocked inner row: four candidates per pass, Gram identity,
+/// `post_sq` applied to the f32-accumulated squared distance. Operates
+/// on one (already widened) candidate block.
 #[inline]
 #[allow(clippy::too_many_arguments)]
 fn gains_row_gram<D: Dissimilarity>(
@@ -183,15 +221,14 @@ fn gains_row_gram<D: Dissimilarity>(
     v: &[f32],
     nv: f32,
     dm: f32,
-    c0: usize,
-    c1: usize,
     d: usize,
     cand_rows: &[f32],
     cand_norms: &[f32],
     acc: &mut [f64],
 ) {
-    let mut c = c0;
-    while c + 4 <= c1 {
+    let m = cand_norms.len();
+    let mut c = 0;
+    while c + 4 <= m {
         let dots = dot4(v, cand_rows, c * d, d);
         for (lane, &dot) in dots.iter().enumerate() {
             let dd = dist.post_sq((cand_norms[c + lane] - 2.0 * dot + nv).max(0.0));
@@ -202,7 +239,7 @@ fn gains_row_gram<D: Dissimilarity>(
         }
         c += 4;
     }
-    while c < c1 {
+    while c < m {
         let dd = dist.post_sq((cand_norms[c] - 2.0 * dot1(v, cand_rows, c, d) + nv).max(0.0));
         let improve = dm - dd;
         if improve > 0.0 {
@@ -212,102 +249,165 @@ fn gains_row_gram<D: Dissimilarity>(
     }
 }
 
-/// Loss-sum kernel over one ground tile:
-/// `Σ_{i ∈ rows} min(d(v_i, e0), min_s d(s, v_i))` for one evaluation set
-/// gathered into `set_rows`/`set_norms`. An empty set yields the
-/// e0-distance sum.
-pub fn loss_tile<D: Dissimilarity>(
+/// Direct-eval marginal-gain kernel over one ground tile (non-factoring
+/// dissimilarities): canonical f32 rows, generic `eval`, same batching
+/// structure.
+pub fn gains_tile_direct<D: Dissimilarity>(
     dist: &D,
     ds: &Dataset,
-    norms: &[f32],
+    dmin: &[f32],
     rows: Range<usize>,
-    set_rows: &[f32],
+    cand_rows: &[f32],
+    acc: &mut [f64],
+) {
+    let d = ds.d();
+    debug_assert_eq!(cand_rows.len(), acc.len() * d);
+    for i in rows {
+        let v = ds.row(i);
+        let dm = dmin[i];
+        if dm <= 0.0 {
+            continue;
+        }
+        for (c, slot) in acc.iter_mut().enumerate() {
+            let dd = dist.eval(&cand_rows[c * d..(c + 1) * d], v);
+            let improve = dm - dd;
+            if improve > 0.0 {
+                *slot += improve as f64;
+            }
+        }
+    }
+}
+
+/// Loss-sum kernel over one ground tile of the shadow (Gram path):
+/// `Σ_{i ∈ rows} post_sq(min(e0_sq_i, min_s ‖s − v_i‖²))` for one
+/// evaluation set gathered into `set_rows`/`set_norms`. `e0_sq` holds
+/// the **raw** squared norms `‖v_i‖²` (the `d(v, e0)` term is not
+/// translation-invariant, so it cannot come from the centered shadow);
+/// minima commute with the monotone `post_sq`, so the whole min runs in
+/// squared space and `post_sq` is applied once. An empty set yields the
+/// e0-distance sum.
+pub fn loss_tile<S: Scalar, D: Dissimilarity>(
+    dist: &D,
+    view: &ShadowSet<S>,
+    e0_sq: &[f32],
+    rows: Range<usize>,
+    set_rows: &[S],
     set_norms: &[f32],
 ) -> f64 {
-    let d = ds.d();
+    debug_assert!(dist.factors_through_sq_euclidean());
+    let d = view.d();
     let m = set_norms.len();
     debug_assert_eq!(set_rows.len(), m * d);
+    let mut set_scratch = Vec::new();
+    let mut row_scratch = Vec::new();
+    let set_block = decoded(set_rows, &mut set_scratch);
     let mut acc = 0.0f64;
-    if dist.factors_through_sq_euclidean() {
-        // minima commute with the monotone post_sq transform, so the
-        // whole min runs in squared space and post_sq is applied once.
-        for i in rows {
-            let v = ds.row(i);
-            let nv = norms[i];
-            // d(v, e0) = nv in squared space; an empty set leaves it
-            let best_sq = nv.min(min_sq_to_rows(v, nv, set_rows, set_norms, d));
-            acc += dist.post_sq(best_sq) as f64;
-        }
-    } else {
-        for i in rows {
-            let v = ds.row(i);
-            let mut t = dist.eval_vs_origin(v);
-            for s in 0..m {
-                let dd = dist.eval(&set_rows[s * d..(s + 1) * d], v);
-                if dd < t {
-                    t = dd;
-                }
-            }
-            acc += t as f64;
-        }
+    for i in rows {
+        let v = decoded(view.row(i), &mut row_scratch);
+        let nv = view.sq_norm(i);
+        // an empty set leaves the e0 term
+        let best_sq = e0_sq[i].min(min_sq_to_rows(v, nv, set_block, set_norms, d));
+        acc += dist.post_sq(best_sq) as f64;
     }
     acc
 }
 
-/// Batched dmin update over one ground tile:
+/// Direct-eval loss-sum kernel (non-factoring dissimilarities).
+pub fn loss_tile_direct<D: Dissimilarity>(
+    dist: &D,
+    ds: &Dataset,
+    rows: Range<usize>,
+    set_rows: &[f32],
+) -> f64 {
+    let d = ds.d();
+    debug_assert_eq!(set_rows.len() % d.max(1), 0);
+    let m = set_rows.len() / d.max(1);
+    let mut acc = 0.0f64;
+    for i in rows {
+        let v = ds.row(i);
+        let mut t = dist.eval_vs_origin(v);
+        for s in 0..m {
+            let dd = dist.eval(&set_rows[s * d..(s + 1) * d], v);
+            if dd < t {
+                t = dd;
+            }
+        }
+        acc += t as f64;
+    }
+    acc
+}
+
+/// Batched dmin update over one ground tile of the shadow (Gram path):
 /// `dmin[i − rows.start] ← min(dmin[i − rows.start], min_e d(e, v_i))`
 /// for the exemplar batch gathered into `ex_rows`/`ex_norms`. `dmin`
 /// covers exactly `rows`.
-#[allow(clippy::too_many_arguments)]
-pub fn update_dmin_tile<D: Dissimilarity>(
+pub fn update_dmin_tile<S: Scalar, D: Dissimilarity>(
     dist: &D,
-    ds: &Dataset,
-    norms: &[f32],
+    view: &ShadowSet<S>,
     rows: Range<usize>,
-    ex_rows: &[f32],
+    ex_rows: &[S],
     ex_norms: &[f32],
     dmin: &mut [f32],
 ) {
-    let d = ds.d();
+    debug_assert!(dist.factors_through_sq_euclidean());
+    let d = view.d();
     let m = ex_norms.len();
     debug_assert_eq!(ex_rows.len(), m * d);
     debug_assert_eq!(dmin.len(), rows.len());
     if m == 0 {
         return;
     }
+    let mut ex_scratch = Vec::new();
+    let mut row_scratch = Vec::new();
+    let ex_block = decoded(ex_rows, &mut ex_scratch);
     let start = rows.start;
-    if dist.factors_through_sq_euclidean() {
-        for i in rows {
-            let v = ds.row(i);
-            let nv = norms[i];
-            let dd = dist.post_sq(min_sq_to_rows(v, nv, ex_rows, ex_norms, d));
-            let slot = &mut dmin[i - start];
-            if dd < *slot {
-                *slot = dd;
+    for i in rows {
+        let v = decoded(view.row(i), &mut row_scratch);
+        let nv = view.sq_norm(i);
+        let dd = dist.post_sq(min_sq_to_rows(v, nv, ex_block, ex_norms, d));
+        let slot = &mut dmin[i - start];
+        if dd < *slot {
+            *slot = dd;
+        }
+    }
+}
+
+/// Direct-eval dmin update (non-factoring dissimilarities).
+pub fn update_dmin_tile_direct<D: Dissimilarity>(
+    dist: &D,
+    ds: &Dataset,
+    rows: Range<usize>,
+    ex_rows: &[f32],
+    dmin: &mut [f32],
+) {
+    let d = ds.d();
+    debug_assert_eq!(ex_rows.len() % d.max(1), 0);
+    let m = ex_rows.len() / d.max(1);
+    debug_assert_eq!(dmin.len(), rows.len());
+    if m == 0 {
+        return;
+    }
+    let start = rows.start;
+    for i in rows {
+        let v = ds.row(i);
+        let mut best = f32::INFINITY;
+        for s in 0..m {
+            let dd = dist.eval(&ex_rows[s * d..(s + 1) * d], v);
+            if dd < best {
+                best = dd;
             }
         }
-    } else {
-        for i in rows {
-            let v = ds.row(i);
-            let mut best = f32::INFINITY;
-            for s in 0..m {
-                let dd = dist.eval(&ex_rows[s * d..(s + 1) * d], v);
-                if dd < best {
-                    best = dd;
-                }
-            }
-            let slot = &mut dmin[i - start];
-            if best < *slot {
-                *slot = best;
-            }
+        let slot = &mut dmin[i - start];
+        if best < *slot {
+            *slot = best;
         }
     }
 }
 
 /// Reference per-candidate marginal gains straight from the definition —
-/// no batching, no Gram identity, one full dataset scan per candidate.
-/// Ground truth for the property tests and the `ablation_cpu_batched`
-/// bench baseline.
+/// no batching, no Gram identity, no shadow, one full dataset scan per
+/// candidate. Ground truth for the property tests and the
+/// `ablation_cpu_batched` bench baseline.
 pub fn marginal_gains_naive<D: Dissimilarity>(
     dist: &D,
     ds: &Dataset,
@@ -350,6 +450,30 @@ pub fn loss_sum_naive(ds: &Dataset, set: &[usize]) -> f64 {
             }
         }
         acc += t as f64;
+    }
+    acc
+}
+
+/// Squared-Euclidean loss sum in full `f64` arithmetic — the accuracy
+/// yardstick for the centering and precision property tests (never used
+/// on a hot path).
+pub fn loss_sum_f64(ds: &Dataset, set: &[usize]) -> f64 {
+    let mut acc = 0.0f64;
+    for i in 0..ds.n() {
+        let v = ds.row(i);
+        let mut t: f64 = v.iter().map(|&x| (x as f64) * (x as f64)).sum();
+        for &s in set {
+            let sv = ds.row(s);
+            let mut d = 0.0f64;
+            for j in 0..v.len() {
+                let diff = sv[j] as f64 - v[j] as f64;
+                d += diff * diff;
+            }
+            if d < t {
+                t = d;
+            }
+        }
+        acc += t;
     }
     acc
 }
@@ -429,6 +553,12 @@ mod tests {
     use super::*;
     use crate::data::synth::UniformCube;
     use crate::distance::{Manhattan, RbfInduced, SqEuclidean};
+    use crate::scalar::{Bf16, F16};
+
+    /// Uncentered f32 shadow: bitwise the old kernel inputs.
+    fn raw_view(ds: &Dataset) -> ShadowSet<f32> {
+        ds.shadow::<f32>(false)
+    }
 
     #[test]
     fn naive_and_blocked_agree() {
@@ -461,17 +591,20 @@ mod tests {
     fn gram_loss_tile_matches_naive_loss() {
         for d in [1usize, 3, 4, 7, 16, 100] {
             let ds = UniformCube::new(d, 1.0).generate(150, 31 + d as u64);
-            let norms = ds.sq_norms();
-            for set in [vec![], vec![3], vec![0, 13, 77, 91, 140]] {
-                let (set_rows, set_norms) = gather_rows(&ds, &set);
-                let got =
-                    loss_tile(&SqEuclidean, &ds, &norms, 0..ds.n(), &set_rows, &set_norms);
-                let want = loss_sum_naive(&ds, &set);
-                assert!(
-                    (got - want).abs() < 1e-4 * want.abs().max(1.0),
-                    "d={d} |S|={}: {got} vs {want}",
-                    set.len()
-                );
+            let e0 = ds.sq_norms();
+            for centered in [false, true] {
+                let view: ShadowSet<f32> = ds.shadow(centered);
+                for set in [vec![], vec![3], vec![0, 13, 77, 91, 140]] {
+                    let (set_rows, set_norms) = view.gather(&set);
+                    let got =
+                        loss_tile(&SqEuclidean, &view, &e0, 0..ds.n(), &set_rows, &set_norms);
+                    let want = loss_sum_naive(&ds, &set);
+                    assert!(
+                        (got - want).abs() < 1e-4 * want.abs().max(1.0),
+                        "d={d} |S|={} centered={centered}: {got} vs {want}",
+                        set.len()
+                    );
+                }
             }
         }
     }
@@ -480,21 +613,21 @@ mod tests {
     fn gains_tile_matches_naive_reference() {
         for d in [1usize, 3, 4, 7, 16, 100] {
             let ds = UniformCube::new(d, 1.0).generate(200, 7 + d as u64);
+            let view = ds.shadow::<f32>(true);
             let norms = ds.sq_norms();
             // a partially covered state: dmin lowered by two exemplars
             let mut dmin = norms.clone();
-            let (ex_rows, ex_norms) = gather_rows(&ds, &[5, 111]);
-            update_dmin_tile(&SqEuclidean, &ds, &norms, 0..ds.n(), &ex_rows, &ex_norms, &mut dmin);
+            let (ex_rows, ex_norms) = view.gather(&[5, 111]);
+            update_dmin_tile(&SqEuclidean, &view, 0..ds.n(), &ex_rows, &ex_norms, &mut dmin);
 
             // block sizes crossing both the 4-wide and CAND_BLOCK edges
             for m in [1usize, 3, 4, 5, CAND_BLOCK - 1, CAND_BLOCK, CAND_BLOCK + 1] {
                 let cands: Vec<usize> = (0..m).map(|i| (i * 13) % ds.n()).collect();
-                let (cand_rows, cand_norms) = gather_rows(&ds, &cands);
+                let (cand_rows, cand_norms) = view.gather(&cands);
                 let mut acc = vec![0.0f64; m];
                 gains_tile(
                     &SqEuclidean,
-                    &ds,
-                    &norms,
+                    &view,
                     &dmin,
                     0..ds.n(),
                     &cand_rows,
@@ -505,8 +638,8 @@ mod tests {
                 let n = ds.n() as f64;
                 for (c, (a, w)) in acc.iter().zip(&want).enumerate() {
                     let got = (*a / n) as f32;
-                    // relative plus d-scaled absolute slack: Gram f32
-                    // cancellation error grows ~linearly in d
+                    // relative plus d-scaled absolute slack: residual f32
+                    // rounding grows ~linearly in d
                     assert!(
                         (got - w).abs() <= 1e-4 * w.abs() + 1e-6 * d as f32,
                         "d={d} m={m} cand {c}: batched {got} vs naive {w}"
@@ -519,19 +652,20 @@ mod tests {
     #[test]
     fn update_dmin_tile_matches_sequential_commits() {
         let ds = UniformCube::new(6, 1.0).generate(120, 4);
+        let view = ds.shadow::<f32>(true);
         let norms = ds.sq_norms();
         let exemplars = [2usize, 50, 99, 100, 101];
 
         // batched
         let mut batched = norms.clone();
-        let (ex_rows, ex_norms) = gather_rows(&ds, &exemplars);
-        update_dmin_tile(&SqEuclidean, &ds, &norms, 0..ds.n(), &ex_rows, &ex_norms, &mut batched);
+        let (ex_rows, ex_norms) = view.gather(&exemplars);
+        update_dmin_tile(&SqEuclidean, &view, 0..ds.n(), &ex_rows, &ex_norms, &mut batched);
 
         // sequential one-at-a-time
         let mut seq = norms.clone();
         for &e in &exemplars {
-            let (r, nr) = gather_rows(&ds, &[e]);
-            update_dmin_tile(&SqEuclidean, &ds, &norms, 0..ds.n(), &r, &nr, &mut seq);
+            let (r, nr) = view.gather(&[e]);
+            update_dmin_tile(&SqEuclidean, &view, 0..ds.n(), &r, &nr, &mut seq);
         }
         // the batched pass uses the 4-wide micro-kernel, the m=1 passes
         // its sequential tail: equal up to f32 dot-order differences
@@ -544,10 +678,11 @@ mod tests {
     fn rbf_gram_path_matches_direct_eval() {
         let rbf = RbfInduced::new(0.8);
         let ds = UniformCube::new(5, 1.0).generate(90, 12);
-        let norms = ds.sq_norms();
+        let view = ds.shadow::<f32>(true);
+        let e0 = ds.sq_norms();
         let set = vec![1usize, 40, 77];
-        let (set_rows, set_norms) = gather_rows(&ds, &set);
-        let got = loss_tile(&rbf, &ds, &norms, 0..ds.n(), &set_rows, &set_norms);
+        let (set_rows, set_norms) = view.gather(&set);
+        let got = loss_tile(&rbf, &view, &e0, 0..ds.n(), &set_rows, &set_norms);
         // direct definition with the generic eval
         let mut want = 0.0f64;
         for i in 0..ds.n() {
@@ -567,12 +702,11 @@ mod tests {
     #[test]
     fn non_factoring_distance_uses_direct_path() {
         let ds = UniformCube::new(4, 1.0).generate(80, 19);
-        let norms = ds.sq_norms();
         let dmin: Vec<f32> = (0..ds.n()).map(|i| Manhattan.eval_vs_origin(ds.row(i))).collect();
         let cands = vec![0usize, 17, 33];
-        let (cand_rows, cand_norms) = gather_rows(&ds, &cands);
+        let (cand_rows, _) = gather_rows(&ds, &cands);
         let mut acc = vec![0.0f64; cands.len()];
-        gains_tile(&Manhattan, &ds, &norms, &dmin, 0..ds.n(), &cand_rows, &cand_norms, &mut acc);
+        gains_tile_direct(&Manhattan, &ds, &dmin, 0..ds.n(), &cand_rows, &mut acc);
         let want = marginal_gains_naive(&Manhattan, &ds, &dmin, &cands);
         let n = ds.n() as f64;
         for ((a, w), c) in acc.iter().zip(&want).zip(&cands) {
@@ -584,13 +718,13 @@ mod tests {
     #[test]
     fn tiled_invocation_equals_full_range() {
         let ds = UniformCube::new(7, 1.0).generate(300, 23);
-        let norms = ds.sq_norms();
-        let dmin = norms.clone();
+        let view = ds.shadow::<f32>(true);
+        let dmin = ds.sq_norms();
         let cands: Vec<usize> = (0..9).collect();
-        let (cand_rows, cand_norms) = gather_rows(&ds, &cands);
+        let (cand_rows, cand_norms) = view.gather(&cands);
 
         let mut full = vec![0.0f64; cands.len()];
-        gains_tile(&SqEuclidean, &ds, &norms, &dmin, 0..ds.n(), &cand_rows, &cand_norms, &mut full);
+        gains_tile(&SqEuclidean, &view, &dmin, 0..ds.n(), &cand_rows, &cand_norms, &mut full);
 
         let mut tiled = vec![0.0f64; cands.len()];
         let mut start = 0;
@@ -598,8 +732,7 @@ mod tests {
             let end = (start + GROUND_TILE.min(37)).min(ds.n());
             gains_tile(
                 &SqEuclidean,
-                &ds,
-                &norms,
+                &view,
                 &dmin,
                 start..end,
                 &cand_rows,
@@ -610,6 +743,122 @@ mod tests {
         }
         for (a, b) in full.iter().zip(&tiled) {
             assert!((a - b).abs() < 1e-9 * a.abs().max(1.0), "{a} vs {b}");
+        }
+    }
+
+    /// Satellite property test (a), first half: on origin-centered data
+    /// the centered shadow is bit-identical to the raw one, so every
+    /// kernel output matches exactly.
+    #[test]
+    fn centered_kernels_equal_raw_kernels_on_origin_centered_data() {
+        for d in [2usize, 5, 16] {
+            // symmetric dataset: exact f64 mean = 0 per coordinate
+            let base = UniformCube::new(d, 1.0).generate(60, 100 + d as u64);
+            let mut rows: Vec<Vec<f32>> = Vec::new();
+            for i in 0..base.n() {
+                rows.push(base.row(i).to_vec());
+                rows.push(base.row(i).iter().map(|x| -x).collect());
+            }
+            let ds = Dataset::from_rows(&rows).unwrap();
+            let e0 = ds.sq_norms();
+            let centered = ds.shadow::<f32>(true);
+            let raw = raw_view(&ds);
+
+            let set = vec![0usize, 7, 31];
+            let (sr_c, sn_c) = centered.gather(&set);
+            let (sr_r, sn_r) = raw.gather(&set);
+            let lc = loss_tile(&SqEuclidean, &centered, &e0, 0..ds.n(), &sr_c, &sn_c);
+            let lr = loss_tile(&SqEuclidean, &raw, &e0, 0..ds.n(), &sr_r, &sn_r);
+            assert_eq!(lc, lr, "d={d}: loss differs on zero-mean data");
+
+            let dmin = e0.clone();
+            let cands: Vec<usize> = (0..10).collect();
+            let (cr_c, cn_c) = centered.gather(&cands);
+            let (cr_r, cn_r) = raw.gather(&cands);
+            let mut gc = vec![0.0f64; cands.len()];
+            let mut gr = vec![0.0f64; cands.len()];
+            gains_tile(&SqEuclidean, &centered, &dmin, 0..ds.n(), &cr_c, &cn_c, &mut gc);
+            gains_tile(&SqEuclidean, &raw, &dmin, 0..ds.n(), &cr_r, &cn_r, &mut gr);
+            assert_eq!(gc, gr, "d={d}: gains differ on zero-mean data");
+        }
+    }
+
+    /// Satellite property test (a), second half: on data offset far from
+    /// the origin (+1e3 per coordinate) the centered kernels are strictly
+    /// more accurate than the raw Gram identity against an f64 reference
+    /// — in f32 and in both half formats.
+    #[test]
+    fn centered_kernels_beat_raw_on_offset_data() {
+        fn losses<S: Scalar>(ds: &Dataset, e0: &[f32], set: &[usize]) -> (f64, f64) {
+            let centered: ShadowSet<S> = ds.shadow(true);
+            let raw: ShadowSet<S> = ds.shadow(false);
+            let (sr_c, sn_c) = centered.gather(set);
+            let (sr_r, sn_r) = raw.gather(set);
+            (
+                loss_tile(&SqEuclidean, &centered, e0, 0..ds.n(), &sr_c, &sn_c),
+                loss_tile(&SqEuclidean, &raw, e0, 0..ds.n(), &sr_r, &sn_r),
+            )
+        }
+
+        for d in [3usize, 8] {
+            let base = UniformCube::new(d, 1.0).generate(160, 55 + d as u64);
+            let rows: Vec<Vec<f32>> = (0..base.n())
+                .map(|i| base.row(i).iter().map(|x| x + 1.0e3).collect())
+                .collect();
+            let ds = Dataset::from_rows(&rows).unwrap();
+            let e0 = ds.sq_norms();
+            let set = vec![2usize, 77, 140];
+            // with every point ~1e3 from the origin, the e0 term (~d·1e6)
+            // never wins the min — the loss isolates the pairwise path
+            let exact = loss_sum_f64(&ds, &set);
+
+            let (c32, r32) = losses::<f32>(&ds, &e0, &set);
+            let (c16, r16) = losses::<F16>(&ds, &e0, &set);
+            let (cb, rb) = losses::<Bf16>(&ds, &e0, &set);
+
+            let err = |x: f64| (x - exact).abs();
+            assert!(
+                err(c32) < err(r32),
+                "d={d} f32: centered {} vs raw {} (exact {exact})",
+                c32,
+                r32
+            );
+            assert!(err(c16) < err(r16), "d={d} f16: {c16} vs {r16} (exact {exact})");
+            assert!(err(cb) < err(rb), "d={d} bf16: {cb} vs {rb} (exact {exact})");
+            // and centered f32 is tight in absolute terms
+            assert!(err(c32) <= 1e-4 * exact.abs(), "d={d}: centered err {}", err(c32));
+        }
+    }
+
+    /// Half-precision shadows agree with the f32 Gram path to their
+    /// quantization tolerance (elements narrow, accumulate wide).
+    #[test]
+    fn half_precision_loss_tracks_f32_loss() {
+        for d in [2usize, 4, 16, 64] {
+            let ds = UniformCube::new(d, 1.0).generate(120, 71 + d as u64);
+            let e0 = ds.sq_norms();
+            let set = vec![1usize, 50, 99];
+            let f32_view = ds.shadow::<f32>(true);
+            let (sr, sn) = f32_view.gather(&set);
+            let want = loss_tile(&SqEuclidean, &f32_view, &e0, 0..ds.n(), &sr, &sn);
+
+            let h = ds.shadow::<F16>(true);
+            let (hr, hn) = h.gather(&set);
+            let got16 = loss_tile(&SqEuclidean, &h, &e0, 0..ds.n(), &hr, &hn);
+            let b = ds.shadow::<Bf16>(true);
+            let (br, bn) = b.gather(&set);
+            let gotb = loss_tile(&SqEuclidean, &b, &e0, 0..ds.n(), &br, &bn);
+
+            // per-element relative quantization (2^-11 / 2^-8) amplified
+            // through the squared distance and the min-selection bias
+            assert!(
+                (got16 - want).abs() <= 8.0 * 2.0f64.powi(-11) * want.abs() + 1e-6,
+                "d={d} f16: {got16} vs {want}"
+            );
+            assert!(
+                (gotb - want).abs() <= 8.0 * 2.0f64.powi(-8) * want.abs() + 1e-6,
+                "d={d} bf16: {gotb} vs {want}"
+            );
         }
     }
 }

@@ -1,22 +1,32 @@
 //! CPU evaluation backend — the paper's Algorithm 2 rebuilt around
-//! candidate-batched, cache-blocked Gram kernels and a persistent worker
-//! pool (the optimizer-aware CPU reference the speedup tables compare
-//! against).
+//! candidate-batched, cache-blocked, **precision-generic** Gram kernels
+//! and a persistent worker pool (the optimizer-aware CPU reference the
+//! speedup tables compare against).
 //!
 //! # Kernel layout
 //!
-//! Per-row squared norms are computed **once at oracle construction**;
-//! every squared Euclidean distance in the hot loops then uses the Gram
-//! identity `‖a − b‖² = ‖a‖² − 2·a·b + ‖b‖²` with a register-blocked
-//! dot-product micro-kernel (see [`kernels`] for the tiling constants and
-//! the four-candidates-per-pass inner loop). The fused
-//! [`kernels::gains_tile`] scores an *entire* candidate block against the
-//! cached `dmin` state in one pass over each ground tile — the seed path
-//! re-streamed the whole dataset once per candidate. Dissimilarities that
-//! factor through the squared distance (squared Euclidean itself, the
-//! RBF-induced kernel distance) take this path; others (Manhattan,
-//! cosine) fall back to a direct-eval loop with the same batching
-//! structure.
+//! Dissimilarities that factor through the squared distance (squared
+//! Euclidean itself, the RBF-induced kernel distance) are evaluated over
+//! a [`crate::data::ShadowSet`]: the ground set **mean-centered** and
+//! quantized once at oracle construction into the oracle's element
+//! dtype `S` (`f32`, [`crate::scalar::F16`], [`crate::scalar::Bf16`]),
+//! with per-row squared norms precomputed alongside. Every pairwise
+//! distance in the hot loops then uses the Gram identity
+//! `‖a − b‖² = ‖a‖² − 2·a·b + ‖b‖²` with a register-blocked dot-product
+//! micro-kernel; narrow storage is widened to `f32` at **tile
+//! granularity** into reusable scratch, so arithmetic is always `f32`
+//! and the half formats pay only half the ground-set memory traffic
+//! (see [`kernels`] for the tiling constants, the
+//! four-candidates-per-pass inner loop, and why centering removes the
+//! identity's cancellation error in every precision). The fused
+//! [`kernels::gains_tile`] scores an *entire* candidate block against
+//! the cached `dmin` state in one pass over each ground tile — the seed
+//! path re-streamed the whole dataset once per candidate. Distances to
+//! the auxiliary exemplar `e0` (Definition 5) always come from the
+//! canonical raw `f32` rows. Non-factoring dissimilarities (Manhattan,
+//! cosine) fall back to a direct-eval loop over the canonical rows with
+//! the same batching structure, regardless of the requested dtype
+//! ([`Dissimilarity::effective_dtype`]).
 //!
 //! # Pool lifecycle
 //!
@@ -35,104 +45,169 @@
 //!
 //! [`SingleThread`] runs the identical kernels serially, so the two
 //! backends agree to float tolerance and the MT/ST ratio isolates the
-//! parallel speedup.
+//! parallel speedup. For a fixed dtype the ST and MT oracles quantize
+//! identically (one shared [`crate::data::ShadowSet`] construction
+//! path), so cross-backend comparisons isolate threading, and
+//! cross-dtype comparisons isolate precision.
 
 mod kernels;
 pub mod pool;
 
 use std::sync::Mutex;
 
-use crate::data::Dataset;
+use crate::data::{Dataset, ShadowSet};
 use crate::distance::{Dissimilarity, SqEuclidean};
 use crate::optim::oracle::{DminState, Oracle};
+use crate::scalar::{Bf16, Dtype, Scalar, F16};
 use crate::{Error, Result};
 
 pub use kernels::{
-    gather_rows, loss_sum_blocked, loss_sum_naive, marginal_gains_naive, CAND_BLOCK, GROUND_TILE,
+    gather_rows, loss_sum_blocked, loss_sum_f64, loss_sum_naive, marginal_gains_naive, CAND_BLOCK,
+    GROUND_TILE,
 };
 pub use pool::{DisjointSlice, GrainQueue, WorkerPool};
 
-/// Shared per-oracle precomputation: the dataset, its per-row squared
-/// norms (the constant half of the Gram identity) and the Definition-5
-/// constant `L({e0})·n` under the oracle's dissimilarity.
-struct OracleBase<D: Dissimilarity> {
+/// Shared per-oracle precomputation: the canonical dataset, its raw
+/// squared norms (the `d(v, e0)` constants of Definition 5), the
+/// mean-centered precision-`S` shadow feeding the Gram kernels (present
+/// iff the dissimilarity factors through squared Euclidean), and the
+/// Definition-5 constant `L({e0})·n` under the oracle's dissimilarity.
+struct OracleBase<D: Dissimilarity, S: Scalar> {
     ds: Dataset,
     dist: D,
-    /// `‖v_i‖²` per row, computed once.
-    norms: Vec<f32>,
-    /// `Σ_i d(v_i, e0)` under `dist` — equals the squared-norm sum only
-    /// for distances that factor through squared Euclidean with identity
-    /// post-transform.
+    /// Centered + quantized pairwise view; `None` on the direct path.
+    view: Option<ShadowSet<S>>,
+    /// Raw `‖v_i‖²` per row — `d(v_i, e0)` in squared space.
+    e0_sq: Vec<f32>,
+    /// `Σ_i d(v_i, e0)` under `dist`.
     l0: f64,
 }
 
-impl<D: Dissimilarity> OracleBase<D> {
+impl<D: Dissimilarity, S: Scalar> OracleBase<D, S> {
     fn new(ds: Dataset, dist: D) -> Self {
-        let norms = ds.sq_norms();
-        let l0 = if dist.factors_through_sq_euclidean() {
-            norms.iter().map(|&x| dist.post_sq(x) as f64).sum()
+        let e0_sq = ds.sq_norms();
+        let (view, l0) = if dist.factors_through_sq_euclidean() {
+            let l0 = e0_sq.iter().map(|&x| dist.post_sq(x) as f64).sum();
+            (Some(ds.shadow::<S>(true)), l0)
         } else {
-            (0..ds.n()).map(|i| dist.eval_vs_origin(ds.row(i)) as f64).sum()
+            let l0 = (0..ds.n()).map(|i| dist.eval_vs_origin(ds.row(i)) as f64).sum();
+            (None, l0)
         };
-        Self { ds, dist, norms, l0 }
+        Self { ds, dist, view, e0_sq, l0 }
+    }
+
+    /// The element precision the kernels actually run at.
+    fn dtype(&self) -> Dtype {
+        self.dist.effective_dtype(S::DTYPE)
     }
 
     /// Fresh `dmin`: the distance of every row to the auxiliary exemplar
-    /// `e0` under the oracle's own dissimilarity.
+    /// `e0` under the oracle's own dissimilarity, always from the raw
+    /// rows.
     fn init_dmin(&self) -> Vec<f32> {
         if self.dist.factors_through_sq_euclidean() {
-            self.norms.iter().map(|&x| self.dist.post_sq(x)).collect()
+            self.e0_sq.iter().map(|&x| self.dist.post_sq(x)).collect()
         } else {
             (0..self.ds.n()).map(|i| self.dist.eval_vs_origin(self.ds.row(i))).collect()
         }
     }
 
     fn loss_sum_serial(&self, set: &[usize]) -> f64 {
-        let (set_rows, set_norms) = kernels::gather_rows(&self.ds, set);
-        kernels::loss_tile(&self.dist, &self.ds, &self.norms, 0..self.ds.n(), &set_rows, &set_norms)
+        match &self.view {
+            Some(view) => {
+                let (set_rows, set_norms) = view.gather(set);
+                kernels::loss_tile(
+                    &self.dist,
+                    view,
+                    &self.e0_sq,
+                    0..self.ds.n(),
+                    &set_rows,
+                    &set_norms,
+                )
+            }
+            None => {
+                let (set_rows, _) = kernels::gather_rows(&self.ds, set);
+                kernels::loss_tile_direct(&self.dist, &self.ds, 0..self.ds.n(), &set_rows)
+            }
+        }
     }
 
     fn gains_serial(&self, dmin: &[f32], candidates: &[usize]) -> Vec<f32> {
-        let (cand_rows, cand_norms) = kernels::gather_rows(&self.ds, candidates);
         let mut acc = vec![0.0f64; candidates.len()];
-        kernels::gains_tile(
-            &self.dist,
-            &self.ds,
-            &self.norms,
-            dmin,
-            0..self.ds.n(),
-            &cand_rows,
-            &cand_norms,
-            &mut acc,
-        );
+        match &self.view {
+            Some(view) => {
+                let (cand_rows, cand_norms) = view.gather(candidates);
+                kernels::gains_tile(
+                    &self.dist,
+                    view,
+                    dmin,
+                    0..self.ds.n(),
+                    &cand_rows,
+                    &cand_norms,
+                    &mut acc,
+                );
+            }
+            None => {
+                let (cand_rows, _) = kernels::gather_rows(&self.ds, candidates);
+                kernels::gains_tile_direct(
+                    &self.dist,
+                    &self.ds,
+                    dmin,
+                    0..self.ds.n(),
+                    &cand_rows,
+                    &mut acc,
+                );
+            }
+        }
         let n = self.ds.n() as f64;
         acc.iter().map(|&g| (g / n) as f32).collect()
     }
 
     fn commit_serial(&self, state: &mut DminState, idxs: &[usize]) {
-        let (ex_rows, ex_norms) = kernels::gather_rows(&self.ds, idxs);
-        kernels::update_dmin_tile(
-            &self.dist,
-            &self.ds,
-            &self.norms,
-            0..self.ds.n(),
-            &ex_rows,
-            &ex_norms,
-            &mut state.dmin,
-        );
+        match &self.view {
+            Some(view) => {
+                let (ex_rows, ex_norms) = view.gather(idxs);
+                kernels::update_dmin_tile(
+                    &self.dist,
+                    view,
+                    0..self.ds.n(),
+                    &ex_rows,
+                    &ex_norms,
+                    &mut state.dmin,
+                );
+            }
+            None => {
+                let (ex_rows, _) = kernels::gather_rows(&self.ds, idxs);
+                kernels::update_dmin_tile_direct(
+                    &self.dist,
+                    &self.ds,
+                    0..self.ds.n(),
+                    &ex_rows,
+                    &mut state.dmin,
+                );
+            }
+        }
         state.exemplars.extend_from_slice(idxs);
     }
 }
 
-/// Single-threaded Algorithm 2 evaluator on the batched Gram kernels.
-pub struct SingleThread<D: Dissimilarity = SqEuclidean> {
-    base: OracleBase<D>,
+/// Single-threaded Algorithm 2 evaluator on the batched Gram kernels,
+/// generic over dissimilarity and element precision.
+pub struct SingleThread<D: Dissimilarity = SqEuclidean, S: Scalar = f32> {
+    base: OracleBase<D, S>,
 }
 
-impl<D: Dissimilarity> SingleThread<D> {
-    /// Wrap a dataset with a dissimilarity function.
-    pub fn with_distance(ds: Dataset, dist: D) -> Self {
+impl<D: Dissimilarity, S: Scalar> SingleThread<D, S> {
+    /// Wrap a dataset with a dissimilarity at the element precision `S`
+    /// (the pairwise shadow is quantized here, once).
+    pub fn with_precision(ds: Dataset, dist: D) -> Self {
         Self { base: OracleBase::new(ds, dist) }
+    }
+
+    /// The element precision the kernels actually run at (requested
+    /// dtype for factoring dissimilarities, `f32` otherwise).
+    pub fn dtype(&self) -> Dtype {
+        self.base.dtype()
     }
 
     /// Unnormalized `L(S ∪ {e0}) * n` for one set of dataset indices.
@@ -141,14 +216,23 @@ impl<D: Dissimilarity> SingleThread<D> {
     }
 }
 
+impl<D: Dissimilarity> SingleThread<D> {
+    /// Wrap a dataset with a dissimilarity function at full `f32`
+    /// precision.
+    pub fn with_distance(ds: Dataset, dist: D) -> Self {
+        Self::with_precision(ds, dist)
+    }
+}
+
 impl SingleThread<SqEuclidean> {
-    /// Squared-Euclidean evaluator (the paper's benchmark configuration).
+    /// Squared-Euclidean f32 evaluator (the paper's benchmark
+    /// configuration).
     pub fn new(ds: Dataset) -> Self {
         Self::with_distance(ds, SqEuclidean)
     }
 }
 
-impl<D: Dissimilarity> Oracle for SingleThread<D> {
+impl<D: Dissimilarity, S: Scalar> Oracle for SingleThread<D, S> {
     fn dataset(&self) -> &Dataset {
         &self.base.ds
     }
@@ -186,20 +270,22 @@ impl<D: Dissimilarity> Oracle for SingleThread<D> {
     }
 
     fn name(&self) -> String {
-        format!("cpu-st/{}", self.base.dist.name())
+        format!("cpu-st/{}/{}", self.base.dist.name(), self.base.dtype())
     }
 }
 
 /// Multi-threaded Algorithm 2 evaluator: the batched Gram kernels driven
-/// by a persistent worker pool (created once here, reused per call).
-pub struct MultiThread<D: Dissimilarity = SqEuclidean> {
-    base: OracleBase<D>,
+/// by a persistent worker pool (created once here, reused per call),
+/// generic over dissimilarity and element precision.
+pub struct MultiThread<D: Dissimilarity = SqEuclidean, S: Scalar = f32> {
+    base: OracleBase<D, S>,
     pool: WorkerPool,
 }
 
-impl<D: Dissimilarity> MultiThread<D> {
-    /// `threads = 0` uses `std::thread::available_parallelism()`.
-    pub fn with_distance(ds: Dataset, dist: D, threads: usize) -> Self {
+impl<D: Dissimilarity, S: Scalar> MultiThread<D, S> {
+    /// `threads = 0` uses `std::thread::available_parallelism()`; the
+    /// pairwise shadow is quantized to `S` here, once.
+    pub fn with_precision(ds: Dataset, dist: D, threads: usize) -> Self {
         Self { base: OracleBase::new(ds, dist), pool: WorkerPool::new(threads) }
     }
 
@@ -208,35 +294,61 @@ impl<D: Dissimilarity> MultiThread<D> {
         self.pool.threads()
     }
 
+    /// The element precision the kernels actually run at.
+    pub fn dtype(&self) -> Dtype {
+        self.base.dtype()
+    }
+
     /// Parallel-over-ground-set loss sum for one set (the "single set
     /// parallelized problem" of §IV-A): workers steal ground tiles and
     /// merge their f64 partials once each.
     pub fn loss_sum(&self, set: &[usize]) -> f64 {
         let ds = &self.base.ds;
         let dist = &self.base.dist;
-        let norms = &self.base.norms;
-        let (set_rows, set_norms) = kernels::gather_rows(ds, set);
         let total = Mutex::new(0.0f64);
         let tiles = GrainQueue::new(ds.n(), GROUND_TILE);
-        self.pool.run(&|_id| {
-            let mut local = 0.0f64;
-            while let Some(r) = tiles.claim() {
-                local += kernels::loss_tile(dist, ds, norms, r, &set_rows, &set_norms);
+        match &self.base.view {
+            Some(view) => {
+                let e0_sq = &self.base.e0_sq;
+                let (set_rows, set_norms) = view.gather(set);
+                self.pool.run(&|_id| {
+                    let mut local = 0.0f64;
+                    while let Some(r) = tiles.claim() {
+                        local += kernels::loss_tile(dist, view, e0_sq, r, &set_rows, &set_norms);
+                    }
+                    *total.lock().unwrap() += local;
+                });
             }
-            *total.lock().unwrap() += local;
-        });
+            None => {
+                let (set_rows, _) = kernels::gather_rows(ds, set);
+                self.pool.run(&|_id| {
+                    let mut local = 0.0f64;
+                    while let Some(r) = tiles.claim() {
+                        local += kernels::loss_tile_direct(dist, ds, r, &set_rows);
+                    }
+                    *total.lock().unwrap() += local;
+                });
+            }
+        }
         total.into_inner().unwrap()
     }
 }
 
+impl<D: Dissimilarity> MultiThread<D> {
+    /// Full-`f32` multi-thread evaluator for a dissimilarity.
+    pub fn with_distance(ds: Dataset, dist: D, threads: usize) -> Self {
+        Self::with_precision(ds, dist, threads)
+    }
+}
+
 impl MultiThread<SqEuclidean> {
-    /// Squared-Euclidean multi-thread evaluator.
+    /// Squared-Euclidean f32 multi-thread evaluator.
     pub fn new(ds: Dataset, threads: usize) -> Self {
         Self::with_distance(ds, SqEuclidean, threads)
     }
 }
 
-impl<D: Dissimilarity> Oracle for MultiThread<D> {
+impl<D: Dissimilarity, S: Scalar> Oracle for MultiThread<D, S> {
     fn dataset(&self) -> &Dataset {
         &self.base.ds
     }
@@ -251,9 +363,8 @@ impl<D: Dissimilarity> Oracle for MultiThread<D> {
         }
         // multiset problem: workers steal whole sets and write disjoint
         // output slots (NaN-initialized so a dropped slot is loud).
-        let ds = &self.base.ds;
-        let dist = &self.base.dist;
-        let norms = &self.base.norms;
+        let base = &self.base;
+        let ds = &base.ds;
         let mut out = vec![f32::NAN; sets.len()];
         {
             let shared = DisjointSlice::new(&mut out);
@@ -261,9 +372,23 @@ impl<D: Dissimilarity> Oracle for MultiThread<D> {
             self.pool.run(&|_id| {
                 while let Some(r) = queue.claim() {
                     let j = r.start;
-                    let (set_rows, set_norms) = kernels::gather_rows(ds, &sets[j]);
-                    let loss =
-                        kernels::loss_tile(dist, ds, norms, 0..ds.n(), &set_rows, &set_norms);
+                    let loss = match &base.view {
+                        Some(view) => {
+                            let (set_rows, set_norms) = view.gather(&sets[j]);
+                            kernels::loss_tile(
+                                &base.dist,
+                                view,
+                                &base.e0_sq,
+                                0..ds.n(),
+                                &set_rows,
+                                &set_norms,
+                            )
+                        }
+                        None => {
+                            let (set_rows, _) = kernels::gather_rows(ds, &sets[j]);
+                            kernels::loss_tile_direct(&base.dist, ds, 0..ds.n(), &set_rows)
+                        }
+                    };
                     // SAFETY: each set index is claimed exactly once.
                     unsafe { shared.write(j, ((l0 - loss) / n) as f32) };
                 }
@@ -284,21 +409,40 @@ impl<D: Dissimilarity> Oracle for MultiThread<D> {
         }
         let ds = &self.base.ds;
         let dist = &self.base.dist;
-        let norms = &self.base.norms;
         let dmin = &state.dmin;
-        let (cand_rows, cand_norms) = kernels::gather_rows(ds, candidates);
         let merged = Mutex::new(vec![0.0f64; candidates.len()]);
         let tiles = GrainQueue::new(ds.n(), GROUND_TILE);
-        self.pool.run(&|_id| {
-            let mut local = vec![0.0f64; cand_norms.len()];
-            while let Some(r) = tiles.claim() {
-                kernels::gains_tile(dist, ds, norms, dmin, r, &cand_rows, &cand_norms, &mut local);
+        match &self.base.view {
+            Some(view) => {
+                let (cand_rows, cand_norms) = view.gather(candidates);
+                self.pool.run(&|_id| {
+                    let mut local = vec![0.0f64; cand_norms.len()];
+                    while let Some(r) = tiles.claim() {
+                        kernels::gains_tile(
+                            dist, view, dmin, r, &cand_rows, &cand_norms, &mut local,
+                        );
+                    }
+                    let mut m = merged.lock().unwrap();
+                    for (slot, x) in m.iter_mut().zip(&local) {
+                        *slot += *x;
+                    }
+                });
             }
-            let mut m = merged.lock().unwrap();
-            for (slot, x) in m.iter_mut().zip(&local) {
-                *slot += *x;
+            None => {
+                let (cand_rows, _) = kernels::gather_rows(ds, candidates);
+                let m_cands = candidates.len();
+                self.pool.run(&|_id| {
+                    let mut local = vec![0.0f64; m_cands];
+                    while let Some(r) = tiles.claim() {
+                        kernels::gains_tile_direct(dist, ds, dmin, r, &cand_rows, &mut local);
+                    }
+                    let mut m = merged.lock().unwrap();
+                    for (slot, x) in m.iter_mut().zip(&local) {
+                        *slot += *x;
+                    }
+                });
             }
-        });
+        }
         let n = ds.n() as f64;
         Ok(merged.into_inner().unwrap().iter().map(|&g| (g / n) as f32).collect())
     }
@@ -315,18 +459,33 @@ impl<D: Dissimilarity> Oracle for MultiThread<D> {
         }
         let ds = &self.base.ds;
         let dist = &self.base.dist;
-        let norms = &self.base.norms;
-        let (ex_rows, ex_norms) = kernels::gather_rows(ds, idxs);
         {
             let shared = DisjointSlice::new(state.dmin.as_mut_slice());
             let tiles = GrainQueue::new(ds.n(), GROUND_TILE);
-            self.pool.run(&|_id| {
-                while let Some(r) = tiles.claim() {
-                    // SAFETY: tiles from the queue are disjoint ranges.
-                    let dmin_tile = unsafe { shared.range_mut(r.start, r.len()) };
-                    kernels::update_dmin_tile(dist, ds, norms, r, &ex_rows, &ex_norms, dmin_tile);
+            match &self.base.view {
+                Some(view) => {
+                    let (ex_rows, ex_norms) = view.gather(idxs);
+                    self.pool.run(&|_id| {
+                        while let Some(r) = tiles.claim() {
+                            // SAFETY: tiles from the queue are disjoint ranges.
+                            let dmin_tile = unsafe { shared.range_mut(r.start, r.len()) };
+                            kernels::update_dmin_tile(
+                                dist, view, r, &ex_rows, &ex_norms, dmin_tile,
+                            );
+                        }
+                    });
                 }
-            });
+                None => {
+                    let (ex_rows, _) = kernels::gather_rows(ds, idxs);
+                    self.pool.run(&|_id| {
+                        while let Some(r) = tiles.claim() {
+                            // SAFETY: tiles from the queue are disjoint ranges.
+                            let dmin_tile = unsafe { shared.range_mut(r.start, r.len()) };
+                            kernels::update_dmin_tile_direct(dist, ds, r, &ex_rows, dmin_tile);
+                        }
+                    });
+                }
+            }
         }
         state.exemplars.extend_from_slice(idxs);
         Ok(())
@@ -337,7 +496,28 @@ impl<D: Dissimilarity> Oracle for MultiThread<D> {
     }
 
     fn name(&self) -> String {
-        format!("cpu-mt{}/{}", self.pool.threads(), self.base.dist.name())
+        format!("cpu-mt{}/{}/{}", self.pool.threads(), self.base.dist.name(), self.base.dtype())
+    }
+}
+
+/// Build a boxed squared-Euclidean CPU oracle for a backend/dtype choice
+/// at runtime — the CLI and examples entry point. `multi` selects
+/// [`MultiThread`] (with `threads`, 0 = auto) over [`SingleThread`];
+/// `dtype` uses the device manifest vocabulary (`f32|f16|bf16`).
+pub fn build_cpu_oracle(ds: Dataset, multi: bool, threads: usize, dtype: Dtype) -> Box<dyn Oracle> {
+    fn st<S: Scalar>(ds: Dataset) -> Box<dyn Oracle> {
+        Box::new(SingleThread::<SqEuclidean, S>::with_precision(ds, SqEuclidean))
+    }
+    fn mt<S: Scalar>(ds: Dataset, threads: usize) -> Box<dyn Oracle> {
+        Box::new(MultiThread::<SqEuclidean, S>::with_precision(ds, SqEuclidean, threads))
+    }
+    match (multi, dtype) {
+        (false, Dtype::F32) => st::<f32>(ds),
+        (false, Dtype::F16) => st::<F16>(ds),
+        (false, Dtype::Bf16) => st::<Bf16>(ds),
+        (true, Dtype::F32) => mt::<f32>(ds, threads),
+        (true, Dtype::F16) => mt::<F16>(ds, threads),
+        (true, Dtype::Bf16) => mt::<Bf16>(ds, threads),
     }
 }
 
@@ -375,7 +555,8 @@ fn validate_state(ds: &Dataset, state: &DminState) -> Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::data::synth::UniformCube;
+    use crate::data::synth::{GaussianBlobs, UniformCube};
+    use crate::optim::{Greedy, Optimizer};
 
     fn small() -> Dataset {
         UniformCube::new(4, 1.0).generate(64, 11)
@@ -583,9 +764,8 @@ mod tests {
                 let a = st.marginal_gains(&state, &cands).unwrap();
                 let b = mt.marginal_gains(&state, &cands).unwrap();
                 for (c, ((x, y), w)) in a.iter().zip(&b).zip(&naive).enumerate() {
-                    // 1e-4 relative plus a d-scaled absolute term: the Gram
-                    // identity's f32 cancellation error grows ~linearly in d
-                    // (measured ≲ 3e-8·d on unit-cube data)
+                    // 1e-4 relative plus a d-scaled absolute term for the
+                    // residual f32 rounding of the centered Gram path
                     let tol = 1e-4 * w.abs() + 1e-6 * d as f32;
                     assert!((x - w).abs() <= tol, "d={d} m={m} cand {c}: st {x} vs naive {w}");
                     assert!((y - w).abs() <= tol, "d={d} m={m} cand {c}: mt {y} vs naive {w}");
@@ -645,5 +825,116 @@ mod tests {
                 assert!((x - y).abs() < 1e-5);
             }
         }
+    }
+
+    /// Satellite property test (b): half-precision marginal gains stay
+    /// within quantization tolerance of the f32 oracle across
+    /// dimensionalities (seeded), for both ST and MT backends.
+    #[test]
+    fn half_precision_gains_track_f32_across_dims() {
+        for &d in &[1usize, 3, 4, 16, 100] {
+            let ds = UniformCube::new(d, 1.0).generate(250, 33 + d as u64);
+            let st32 = SingleThread::new(ds.clone());
+            let st16 = SingleThread::<SqEuclidean, F16>::with_precision(ds.clone(), SqEuclidean);
+            let stb = SingleThread::<SqEuclidean, Bf16>::with_precision(ds.clone(), SqEuclidean);
+            let mt16 =
+                MultiThread::<SqEuclidean, F16>::with_precision(ds.clone(), SqEuclidean, 3);
+            assert_eq!(st16.dtype(), Dtype::F16);
+            assert_eq!(stb.dtype(), Dtype::Bf16);
+
+            // each oracle evolves its own state so dmin is internally
+            // consistent with its quantization
+            let exemplars = [2usize, 90, 140];
+            let mut s32 = st32.init_state();
+            st32.commit_many(&mut s32, &exemplars).unwrap();
+            let mut s16 = st16.init_state();
+            st16.commit_many(&mut s16, &exemplars).unwrap();
+            let mut sb = stb.init_state();
+            stb.commit_many(&mut sb, &exemplars).unwrap();
+
+            let cands: Vec<usize> = (0..40).map(|i| (i * 11) % ds.n()).collect();
+            let g32 = st32.marginal_gains(&s32, &cands).unwrap();
+            let g16 = st16.marginal_gains(&s16, &cands).unwrap();
+            let gb = stb.marginal_gains(&sb, &cands).unwrap();
+            let g16mt = mt16.marginal_gains(&s16, &cands).unwrap();
+
+            // gains scale with the mean squared norm; quantization noise
+            // enters relatively through the distances
+            let scale = (st32.l0_sum() / ds.n() as f64) as f32;
+            for (c, (((a, h), bf), hmt)) in
+                g32.iter().zip(&g16).zip(&gb).zip(&g16mt).enumerate()
+            {
+                let tol16 = 1e-2 * (a.abs() + scale);
+                let tolb = 6e-2 * (a.abs() + scale);
+                assert!((h - a).abs() <= tol16, "d={d} cand {c}: f16 {h} vs f32 {a}");
+                assert!((bf - a).abs() <= tolb, "d={d} cand {c}: bf16 {bf} vs f32 {a}");
+                // MT and ST agree much tighter: same quantized shadow
+                assert!((hmt - h).abs() <= 1e-5 * (h.abs() + scale), "d={d} cand {c}");
+            }
+        }
+    }
+
+    /// Cross-precision Greedy: on well-separated seeded blobs the f16
+    /// and f32 CPU oracles select overlapping exemplar sets with nearly
+    /// identical objective values (the bench `ablation_precision`
+    /// checks the identical-set property at the issue's full scale).
+    #[test]
+    fn greedy_selection_is_stable_under_f16() {
+        let k = 8usize;
+        let ds = GaussianBlobs::new(k, 8, 0.2).generate(400, 2026);
+        let f32_oracle = SingleThread::new(ds.clone());
+        let f16_oracle = SingleThread::<SqEuclidean, F16>::with_precision(ds, SqEuclidean);
+        let r32 = Greedy::new(k).maximize(&f32_oracle).unwrap();
+        let r16 = Greedy::new(k).maximize(&f16_oracle).unwrap();
+        assert!(
+            (r32.value - r16.value).abs() <= 2e-2 * r32.value.abs(),
+            "f32 {} vs f16 {}",
+            r32.value,
+            r16.value
+        );
+        let set32: std::collections::HashSet<usize> = r32.exemplars.iter().copied().collect();
+        let overlap = r16.exemplars.iter().filter(|e| set32.contains(e)).count();
+        assert!(
+            overlap * 2 >= k,
+            "overlap {overlap}/{k}: {:?} vs {:?}",
+            r32.exemplars,
+            r16.exemplars
+        );
+    }
+
+    #[test]
+    fn build_cpu_oracle_covers_backends_and_dtypes() {
+        let ds = small();
+        let sets = vec![vec![0usize, 5], vec![9]];
+        let want = SingleThread::new(ds.clone()).eval_sets(&sets).unwrap();
+        for multi in [false, true] {
+            for dt in Dtype::all() {
+                let o = build_cpu_oracle(ds.clone(), multi, 2, dt);
+                let name = o.name();
+                assert!(name.contains(dt.as_str()), "{name} missing {dt}");
+                let got = o.eval_sets(&sets).unwrap();
+                for (j, (x, y)) in got.iter().zip(&want).enumerate() {
+                    // all precisions agree loosely on unit-cube data
+                    assert!(
+                        (x - y).abs() <= 3e-2 * y.abs().max(0.1),
+                        "multi={multi} {dt} set {j}: {x} vs {y}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn non_factoring_distance_ignores_requested_dtype() {
+        use crate::distance::Manhattan;
+        let ds = small();
+        let man16 = SingleThread::<Manhattan, F16>::with_precision(ds.clone(), Manhattan);
+        assert_eq!(man16.dtype(), Dtype::F32);
+        let man32 = SingleThread::with_distance(ds, Manhattan);
+        let sets = vec![vec![0usize, 7], vec![]];
+        let a = man16.eval_sets(&sets).unwrap();
+        let b = man32.eval_sets(&sets).unwrap();
+        // bitwise identical: both run the direct f32 path
+        assert_eq!(a, b);
     }
 }

@@ -4,9 +4,11 @@
 
 pub mod csv;
 pub mod rng;
+pub mod shadow;
 pub mod synth;
 
 pub use rng::Rng;
+pub use shadow::ShadowSet;
 
 /// A dense row-major `n x d` dataset of `f32` observations — the ground
 /// set `V` of Definition 1.
@@ -90,6 +92,27 @@ impl Dataset {
             .sum()
     }
 
+    /// Per-coordinate mean of all rows, accumulated in `f64` (feeds the
+    /// mean-centered shadow copies; see [`shadow::ShadowSet`]).
+    pub fn mean(&self) -> Vec<f32> {
+        let mut sums = vec![0.0f64; self.d];
+        for i in 0..self.n {
+            for (s, &x) in sums.iter_mut().zip(self.row(i)) {
+                *s += x as f64;
+            }
+        }
+        let inv = 1.0 / self.n as f64;
+        sums.iter().map(|&s| (s * inv) as f32).collect()
+    }
+
+    /// Build a precision-typed (and optionally mean-centered) shadow
+    /// copy of this dataset for the dtype-generic pairwise kernels. The
+    /// canonical `f32` rows stay authoritative for `d(v, e0)` and all
+    /// non-Gram paths.
+    pub fn shadow<S: crate::scalar::Scalar>(&self, center: bool) -> ShadowSet<S> {
+        ShadowSet::build(self, center)
+    }
+
     /// Gather rows by index into a new dataset (used to materialize
     /// candidate subsets and stream windows).
     pub fn gather(&self, idx: &[usize]) -> Dataset {
@@ -141,6 +164,12 @@ mod tests {
         let ds = Dataset::from_flat(2, 2, vec![3., 4., 1., 0.]).unwrap();
         assert_eq!(ds.sq_norms(), vec![25.0, 1.0]);
         assert!((ds.l0_sum() - 26.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mean_matches_manual() {
+        let ds = Dataset::from_flat(4, 2, vec![1., 10., 2., 20., 3., 30., 6., 60.]).unwrap();
+        assert_eq!(ds.mean(), vec![3.0, 30.0]);
     }
 
     #[test]

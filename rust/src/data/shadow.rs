@@ -1,0 +1,275 @@
+//! Precision-typed shadow copies of a [`Dataset`]: the storage the
+//! dtype-generic CPU Gram kernels actually stream.
+//!
+//! A [`ShadowSet<S>`] holds every ground row **mean-centered** (optional)
+//! and **quantized** to the storage scalar `S`, together with per-row
+//! squared norms of the *decoded* values — so the Gram identity
+//! `‖a − b‖² = ‖a‖² − 2·a·b + ‖b‖²` is exact (in real arithmetic) over
+//! the quantized points, and `d(v, v) = 0` holds bit-for-bit because
+//! norms and dot products reduce in the same order.
+//!
+//! # Why center?
+//!
+//! Pairwise squared distances are translation-invariant, but the Gram
+//! identity is not *numerically*: its cancellation error is ~ULP of the
+//! row **norms**, not of the distance. For off-origin data (e.g. sensor
+//! streams with large baselines — the Industry 4.0 companion workload)
+//! the norms dwarf the pairwise distances and f32 loses most of the
+//! distance's bits; narrow formats lose all of them. Subtracting the
+//! dataset mean once at construction makes the norms comparable to the
+//! distances again, in every precision. Distances to the auxiliary
+//! exemplar `e0 = 0` (Definition 5) are **not** translation-invariant,
+//! so they are served from the canonical raw `f32` rows the oracle keeps
+//! alongside (see [`Dataset::sq_norms`]) — the shadow only ever feeds
+//! pairwise kernels.
+
+use crate::data::Dataset;
+use crate::scalar::{Dtype, Scalar};
+
+/// A (possibly mean-centered) copy of a ground set, quantized to the
+/// storage scalar `S`, plus the precomputed per-row squared norms of the
+/// decoded values — the constant half of the Gram identity.
+///
+/// **Memory:** this is a second `n × d` buffer next to the canonical
+/// `f32` [`Dataset`] the oracle keeps for `d(v, e0)` — half-size for the
+/// 16-bit formats, same-size for `S = f32`. The duplication buys the
+/// centered numerics on every path; a copy-free `f32` mode (sharing the
+/// canonical buffer when centering is skipped) is a ROADMAP item.
+#[derive(Clone, Debug)]
+pub struct ShadowSet<S: Scalar> {
+    n: usize,
+    d: usize,
+    rows: Vec<S>,
+    /// `‖row_i‖²` of the decoded (centered, quantized) row, accumulated
+    /// in `f32` in index order — the same reduction order as the kernels'
+    /// dot products, so self-distances cancel exactly.
+    norms: Vec<f32>,
+    /// The subtracted mean (all zeros when built uncentered).
+    mean: Vec<f32>,
+    centered: bool,
+    /// Elements that quantized to a non-finite value (f16 overflows past
+    /// ±65504; see [`ShadowSet::non_finite`]).
+    non_finite: usize,
+}
+
+impl<S: Scalar> ShadowSet<S> {
+    /// Build from a dataset. `center` subtracts the per-coordinate mean
+    /// (accumulated in `f64`) before quantizing; pairwise kernels may
+    /// only consume a centered shadow when the dissimilarity's pairwise
+    /// term is translation-invariant (every dissimilarity that factors
+    /// through squared Euclidean is).
+    pub fn build(ds: &Dataset, center: bool) -> Self {
+        let (n, d) = (ds.n(), ds.d());
+        let mean = if center { ds.mean() } else { vec![0.0f32; d] };
+        let mut rows = Vec::with_capacity(n * d);
+        let mut norms = Vec::with_capacity(n);
+        let mut non_finite = 0usize;
+        for i in 0..n {
+            let r = ds.row(i);
+            let mut nv = 0.0f32;
+            for j in 0..d {
+                let q = S::from_f32(r[j] - mean[j]);
+                let x = q.to_f32();
+                non_finite += usize::from(!x.is_finite());
+                nv += x * x;
+                rows.push(q);
+            }
+            norms.push(nv);
+        }
+        if non_finite > 0 {
+            // f16 saturates past ±65504: distances through these rows are
+            // Inf/NaN and the affected candidates silently score zero gain
+            crate::log_warn!(
+                "{} of {} elements quantized to non-finite {} values \
+                 (coordinate spread exceeds the format's range even after \
+                 centering); use bf16 or f32 for this dataset",
+                non_finite,
+                n * d,
+                S::DTYPE
+            );
+        }
+        Self { n, d, rows, norms, mean, centered: center, non_finite }
+    }
+
+    /// Number of rows.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Dimensionality.
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// The storage dtype.
+    pub fn dtype(&self) -> Dtype {
+        S::DTYPE
+    }
+
+    /// Was the mean subtracted at construction?
+    pub fn centered(&self) -> bool {
+        self.centered
+    }
+
+    /// The subtracted mean (zeros when uncentered).
+    pub fn mean(&self) -> &[f32] {
+        &self.mean
+    }
+
+    /// How many elements quantized to a non-finite value (0 unless the
+    /// data's centered coordinate range exceeds the format's range —
+    /// possible only for `f16`, which saturates past ±65504). A non-zero
+    /// count is logged at construction and means this dtype is too
+    /// narrow for the dataset.
+    pub fn non_finite(&self) -> usize {
+        self.non_finite
+    }
+
+    /// Borrow row `i` in storage precision.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[S] {
+        &self.rows[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Squared norm of decoded row `i` (shadow space: centered when
+    /// [`ShadowSet::centered`]).
+    #[inline]
+    pub fn sq_norm(&self, i: usize) -> f32 {
+        self.norms[i]
+    }
+
+    /// All precomputed shadow-space squared norms.
+    pub fn norms(&self) -> &[f32] {
+        &self.norms
+    }
+
+    /// Gather rows by index into a dense `(m, d)` block plus their
+    /// squared norms — the per-call half of the Gram precomputation
+    /// (candidate blocks, exemplar batches, evaluation sets).
+    pub fn gather(&self, idx: &[usize]) -> (Vec<S>, Vec<f32>) {
+        let mut rows = Vec::with_capacity(idx.len() * self.d);
+        let mut norms = Vec::with_capacity(idx.len());
+        for &i in idx {
+            rows.extend_from_slice(self.row(i));
+            norms.push(self.norms[i]);
+        }
+        (rows, norms)
+    }
+
+    /// Decode row `i` into an `f32` buffer (diagnostics and reference
+    /// paths; the hot kernels widen inline instead).
+    pub fn decode_row(&self, i: usize, out: &mut Vec<f32>) {
+        out.clear();
+        out.extend(self.row(i).iter().map(|x| x.to_f32()));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::UniformCube;
+    use crate::scalar::{Bf16, F16};
+
+    #[test]
+    fn f32_uncentered_shadow_is_bitwise_copy() {
+        let ds = UniformCube::new(5, 1.0).generate(40, 3);
+        let sh: ShadowSet<f32> = ShadowSet::build(&ds, false);
+        assert_eq!(sh.n(), ds.n());
+        assert_eq!(sh.d(), ds.d());
+        assert!(!sh.centered());
+        for i in 0..ds.n() {
+            assert_eq!(sh.row(i), ds.row(i));
+        }
+        // norms match the dataset's own precomputation exactly (same
+        // reduction order)
+        assert_eq!(sh.norms(), &ds.sq_norms()[..]);
+    }
+
+    #[test]
+    fn centered_shadow_has_near_zero_mean_and_translated_rows() {
+        let ds = UniformCube::new(4, 1.0).generate(200, 17);
+        let sh: ShadowSet<f32> = ShadowSet::build(&ds, true);
+        assert!(sh.centered());
+        let mean = sh.mean().to_vec();
+        for i in 0..ds.n() {
+            for (j, (&raw, &c)) in ds.row(i).iter().zip(sh.row(i)).enumerate() {
+                assert!(
+                    (raw - mean[j] - c).abs() < 1e-6,
+                    "row {i} dim {j}: {raw} - {} != {c}",
+                    mean[j]
+                );
+            }
+        }
+        // decoded shadow mean is ~0 per coordinate
+        let mut sums = vec![0.0f64; ds.d()];
+        for i in 0..ds.n() {
+            for (j, &c) in sh.row(i).iter().enumerate() {
+                sums[j] += c as f64;
+            }
+        }
+        for (j, s) in sums.iter().enumerate() {
+            assert!((s / ds.n() as f64).abs() < 1e-5, "dim {j} mean {s}");
+        }
+    }
+
+    #[test]
+    fn zero_mean_data_centered_equals_uncentered() {
+        // a symmetric dataset (every row and its negation) has exact mean
+        // zero in f64, so centering subtracts an exact zero vector
+        let base = UniformCube::new(3, 1.0).generate(25, 8);
+        let mut rows: Vec<Vec<f32>> = Vec::new();
+        for i in 0..base.n() {
+            rows.push(base.row(i).to_vec());
+            rows.push(base.row(i).iter().map(|x| -x).collect());
+        }
+        let ds = Dataset::from_rows(&rows).unwrap();
+        let a: ShadowSet<F16> = ShadowSet::build(&ds, true);
+        let b: ShadowSet<F16> = ShadowSet::build(&ds, false);
+        for i in 0..ds.n() {
+            assert_eq!(a.row(i), b.row(i), "row {i}");
+        }
+        assert_eq!(a.norms(), b.norms());
+    }
+
+    #[test]
+    fn quantized_shadows_bound_elementwise_error() {
+        let ds = UniformCube::new(6, 1.0).generate(60, 5);
+        let h: ShadowSet<F16> = ShadowSet::build(&ds, true);
+        let b: ShadowSet<Bf16> = ShadowSet::build(&ds, true);
+        let exact: ShadowSet<f32> = ShadowSet::build(&ds, true);
+        for i in 0..ds.n() {
+            for ((&q16, &qb), &x) in h.row(i).iter().zip(b.row(i)).zip(exact.row(i)) {
+                assert!((q16.to_f32() - x).abs() <= 2.0f32.powi(-11) * x.abs().max(1.0));
+                assert!((qb.to_f32() - x).abs() <= 2.0f32.powi(-8) * x.abs().max(1.0));
+            }
+        }
+    }
+
+    #[test]
+    fn f16_overflow_is_counted_and_bf16_is_not() {
+        // spread beyond ±65504 after centering: f16 saturates to Inf
+        let ds = Dataset::from_flat(2, 1, vec![-1.0e5, 1.0e5]).unwrap();
+        let h: ShadowSet<F16> = ShadowSet::build(&ds, true);
+        assert_eq!(h.non_finite(), 2);
+        let b: ShadowSet<Bf16> = ShadowSet::build(&ds, true);
+        assert_eq!(b.non_finite(), 0);
+        let f: ShadowSet<f32> = ShadowSet::build(&ds, true);
+        assert_eq!(f.non_finite(), 0);
+        // in-range data is always finite
+        let small = UniformCube::new(3, 1.0).generate(20, 1);
+        assert_eq!(small.shadow::<F16>(true).non_finite(), 0);
+    }
+
+    #[test]
+    fn gather_matches_rows_and_norms() {
+        let ds = UniformCube::new(4, 1.0).generate(30, 9);
+        let sh: ShadowSet<Bf16> = ShadowSet::build(&ds, true);
+        let idx = [7usize, 0, 29, 7];
+        let (rows, norms) = sh.gather(&idx);
+        assert_eq!(rows.len(), idx.len() * sh.d());
+        for (k, &i) in idx.iter().enumerate() {
+            assert_eq!(&rows[k * sh.d()..(k + 1) * sh.d()], sh.row(i));
+            assert_eq!(norms[k], sh.sq_norm(i));
+        }
+    }
+}

@@ -5,6 +5,22 @@
 //! baselines accept any implementor; the device path is specialized to
 //! squared Euclidean (the function used in all of the paper's
 //! experiments, §V), enforced at evaluator construction.
+//!
+//! # Dtype-aware factorization
+//!
+//! A dissimilarity that [factors through the squared Euclidean
+//! distance](Dissimilarity::factors_through_sq_euclidean) is evaluated by
+//! the precision-generic Gram kernels: pairwise operands come from a
+//! mean-centered [`crate::data::ShadowSet`] stored in the oracle's
+//! element dtype (`f32`/`f16`/`bf16`), dot products and norms accumulate
+//! in `f32`, and [`Dissimilarity::post_sq`] maps the accumulated squared
+//! distance — always an `f32` — to the dissimilarity value. Centering is
+//! sound here because any function of `‖a − b‖²` is automatically
+//! translation-invariant in its pairwise term (`d(v, e0)` keeps the raw
+//! rows). Non-factoring dissimilarities (Manhattan, cosine — cosine is
+//! *not* translation-invariant) take the direct `eval` path over the
+//! canonical `f32` rows regardless of the requested dtype; see
+//! [`Dissimilarity::effective_dtype`].
 
 /// A non-negative dissimilarity between two observations.
 pub trait Dissimilarity: Send + Sync {
@@ -41,9 +57,28 @@ pub trait Dissimilarity: Send + Sync {
     /// Monotone non-decreasing map from squared Euclidean distance to
     /// this dissimilarity (identity unless overridden). Only meaningful
     /// when [`Dissimilarity::factors_through_sq_euclidean`] is true.
+    ///
+    /// The argument is always the `f32`-accumulated squared distance,
+    /// whatever element dtype the operands were stored in — the
+    /// "operands narrow, accumulate wide" contract of
+    /// [`crate::scalar`].
     #[inline]
     fn post_sq(&self, sq: f32) -> f32 {
         sq
+    }
+
+    /// The element precision the CPU kernels will actually run at when
+    /// `requested` is asked for: factoring dissimilarities ride the
+    /// dtype-generic Gram path, everything else falls back to the direct
+    /// `f32` eval loop (the quantized shadow never feeds
+    /// [`Dissimilarity::eval`], whose semantics — e.g. cosine's norms —
+    /// may not survive centering).
+    fn effective_dtype(&self, requested: crate::scalar::Dtype) -> crate::scalar::Dtype {
+        if self.factors_through_sq_euclidean() {
+            requested
+        } else {
+            crate::scalar::Dtype::F32
+        }
     }
 
     #[doc(hidden)]
@@ -220,6 +255,17 @@ mod tests {
         }
         assert!(!Manhattan.factors_through_sq_euclidean());
         assert!(!CosineDissimilarity.factors_through_sq_euclidean());
+    }
+
+    #[test]
+    fn effective_dtype_downgrades_only_non_factoring() {
+        use crate::scalar::Dtype;
+        for dt in Dtype::all() {
+            assert_eq!(SqEuclidean.effective_dtype(dt), dt);
+            assert_eq!(RbfInduced::new(0.5).effective_dtype(dt), dt);
+            assert_eq!(Manhattan.effective_dtype(dt), Dtype::F32);
+            assert_eq!(CosineDissimilarity.effective_dtype(dt), Dtype::F32);
+        }
     }
 
     #[test]

@@ -48,6 +48,7 @@ pub mod logging;
 pub mod optim;
 pub mod pack;
 pub mod runtime;
+pub mod scalar;
 pub mod testkit;
 
 pub use error::{Error, Result};

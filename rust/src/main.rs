@@ -18,12 +18,12 @@ use exemcl::clustering;
 use exemcl::config::{AppConfig, Backend, RawConfig};
 #[cfg(feature = "xla-backend")]
 use exemcl::coordinator::EvalService;
-use exemcl::cpu::{MultiThread, SingleThread};
+use exemcl::cpu::build_cpu_oracle;
 use exemcl::data::csv::{self, CsvOptions};
 use exemcl::data::synth::{GaussianBlobs, Rings, UniformCube};
 use exemcl::data::Dataset;
 use exemcl::optim::{
-    Greedy, LazyGreedy, OptimResult, Optimizer, Salsa, SieveStreaming, SieveStreamingPP,
+    Greedy, LazyGreedy, OptimResult, Optimizer, Oracle, Salsa, SieveStreaming, SieveStreamingPP,
     StochasticGreedy, ThreeSieves,
 };
 use exemcl::runtime::ArtifactRegistry;
@@ -36,8 +36,10 @@ fn usage() -> ! {
         "usage: exemcl <solve|info|bench-hint> [--config FILE] [--section.key=value ...]\n\
          keys: data.n data.d data.generator data.blobs data.seed data.csv\n\
                optimizer.name optimizer.k\n\
-               eval.backend (cpu-st|cpu-mt|device) eval.dtype eval.artifacts\n\
-               eval.threads eval.memory_mib"
+               eval.backend (cpu-st|cpu-mt|device) eval.dtype (f32|f16|bf16)\n\
+               eval.artifacts eval.threads eval.memory_mib\n\
+         shorthand: --dtype f16 == --eval.dtype=f16 (element precision for\n\
+               CPU and device oracles alike)"
     );
     std::process::exit(2);
 }
@@ -59,14 +61,14 @@ fn parse_args(args: &[String]) -> Result<(String, AppConfig)> {
             })?);
         } else if let Some(rest) = a.strip_prefix("--") {
             if let Some((k, v)) = rest.split_once('=') {
-                overrides.push((k.to_string(), v.to_string()));
+                overrides.push((canonical_key(k), v.to_string()));
             } else {
                 // --key value form
                 i += 1;
                 let v = args.get(i).cloned().ok_or_else(|| {
                     Error::Config(format!("flag --{rest} needs a value"))
                 })?;
-                overrides.push((rest.to_string(), v));
+                overrides.push((canonical_key(rest), v));
             }
         } else {
             return Err(Error::Config(format!("unexpected argument {a:?}")));
@@ -79,6 +81,18 @@ fn parse_args(args: &[String]) -> Result<(String, AppConfig)> {
     };
     raw.apply_overrides(&overrides);
     Ok((command, AppConfig::from_raw(&raw)?))
+}
+
+/// Bare-flag shorthands for the common knobs: `--dtype f16` is
+/// `--eval.dtype=f16` (the precision-study entry point), `--backend` /
+/// `--threads` follow suit.
+fn canonical_key(k: &str) -> String {
+    match k {
+        "dtype" => "eval.dtype".into(),
+        "backend" => "eval.backend".into(),
+        "threads" => "eval.threads".into(),
+        other => other.to_string(),
+    }
 }
 
 fn build_dataset(cfg: &AppConfig) -> Result<Dataset> {
@@ -128,15 +142,15 @@ fn cmd_solve(cfg: &AppConfig) -> Result<()> {
 
     let t0 = Instant::now();
     let result = match cfg.backend {
-        Backend::CpuSt => {
-            let oracle = SingleThread::new(ds.clone());
-            println!("backend: {}", exemcl::optim::Oracle::name(&oracle));
-            optimizer.maximize(&oracle)?
-        }
-        Backend::CpuMt => {
-            let oracle = MultiThread::new(ds.clone(), cfg.threads);
-            println!("backend: {}", exemcl::optim::Oracle::name(&oracle));
-            optimizer.maximize(&oracle)?
+        Backend::CpuSt | Backend::CpuMt => {
+            let oracle = build_cpu_oracle(
+                ds.clone(),
+                cfg.backend == Backend::CpuMt,
+                cfg.threads,
+                cfg.dtype,
+            );
+            println!("backend: {}", oracle.name());
+            optimizer.maximize(oracle.as_ref())?
         }
         Backend::Device => solve_device(cfg, &ds, optimizer.as_ref())?,
     };
@@ -168,10 +182,10 @@ fn cmd_solve(cfg: &AppConfig) -> Result<()> {
 #[cfg(feature = "xla-backend")]
 fn solve_device(cfg: &AppConfig, ds: &Dataset, optimizer: &dyn Optimizer) -> Result<OptimResult> {
     let artifacts = cfg.artifacts.clone();
-    let dtype = cfg.dtype.clone();
+    let dtype = cfg.dtype.to_string();
     let mem = MemoryModel {
         total_bytes: cfg.memory_mib * (1 << 20),
-        bytes_per_elem: if dtype == "f32" { 4 } else { 2 },
+        bytes_per_elem: cfg.dtype.bytes_per_elem(),
         ..MemoryModel::default()
     };
     let ds2 = ds.clone();

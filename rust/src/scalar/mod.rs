@@ -1,0 +1,390 @@
+//! Element-precision layer: hand-rolled `f16`/`bf16` storage scalars and
+//! the [`Scalar`] trait the precision-generic CPU kernels are written
+//! against. Zero dependencies — both half formats are bit-level
+//! encode/decode on `u16`, matching the device manifest's
+//! `f32 | f16 | bf16` dtype vocabulary (see [`Dtype`]).
+//!
+//! # Operands narrow, accumulate wide
+//!
+//! The paper's largest speedups come from *reduced operand precision*
+//! (§V-B: up to 452× for half precision), not reduced accumulator
+//! precision: the device matmuls read `f16`/`bf16` tiles but sum partial
+//! products in `f32`, which is exactly what tensor-core/MXU hardware
+//! does. The CPU kernels mirror that contract:
+//!
+//! * **storage / operands** — ground-set and candidate rows are stored in
+//!   the narrow scalar `S` (half the memory traffic of `f32` through the
+//!   Gram tiles; the whole per-tile working set shrinks 2×),
+//! * **arithmetic / accumulation** — every element is widened with
+//!   [`Scalar::to_f32`] before it is multiplied (the kernels widen whole
+//!   tiles at once into reusable `f32` scratch so the inner loops are
+//!   bit-identical across dtypes; see `crate::cpu`), and dot products,
+//!   squared norms and gains accumulate in `f32` (gains further in
+//!   `f64`, as in the `f32` path),
+//! * **rounding** — both [`F16`] and [`Bf16`] encode with
+//!   round-to-nearest-even (ties to even), the IEEE 754 default and what
+//!   XLA's `convert` emits, so CPU and device quantize identically.
+//!
+//! Accuracy therefore degrades only through the one-time quantization of
+//! the inputs (relative ~2⁻¹¹ for `f16`, ~2⁻⁸ for `bf16`), never through
+//! error growth along the reduction dimension — the same "operands
+//! narrow, accumulate wide" story as the device matmul artifacts. The
+//! mean-centered shadow copy ([`crate::data::ShadowSet`]) keeps the
+//! values being quantized small, which is what makes the narrow formats
+//! usable on off-origin data in the first place.
+
+use crate::{Error, Result};
+
+/// Element precision vocabulary shared by the CPU oracles, the CLI and
+/// the device artifact manifest (`# kernel dtype T D K L M filename`
+/// lines use these exact strings).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Dtype {
+    /// IEEE 754 binary32 — the canonical storage format.
+    #[default]
+    F32,
+    /// IEEE 754 binary16 (1-5-10): ~3 decimal digits, max ≈ 65504.
+    F16,
+    /// bfloat16 (1-8-7): f32's range, ~2 decimal digits.
+    Bf16,
+}
+
+impl Dtype {
+    /// The manifest string for this dtype.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::F16 => "f16",
+            Dtype::Bf16 => "bf16",
+        }
+    }
+
+    /// Storage bytes per element (feeds the chunk planner's
+    /// `bytes_per_elem`).
+    pub fn bytes_per_elem(self) -> usize {
+        match self {
+            Dtype::F32 => 4,
+            Dtype::F16 | Dtype::Bf16 => 2,
+        }
+    }
+
+    /// All supported dtypes, in manifest order.
+    pub fn all() -> [Dtype; 3] {
+        [Dtype::F32, Dtype::F16, Dtype::Bf16]
+    }
+}
+
+impl std::fmt::Display for Dtype {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for Dtype {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "f16" | "half" => Ok(Dtype::F16),
+            "bf16" | "bfloat16" => Ok(Dtype::Bf16),
+            other => Err(Error::Config(format!(
+                "unknown dtype {other:?} (f32|f16|bf16)"
+            ))),
+        }
+    }
+}
+
+/// A storage scalar the precision-generic kernels can read. Conversions
+/// are total: every bit pattern decodes, and encoding rounds to nearest
+/// even. Arithmetic never happens in `S` — kernels widen to `f32` first
+/// (see the module docs).
+pub trait Scalar: Copy + Clone + Send + Sync + std::fmt::Debug + 'static {
+    /// The manifest dtype this scalar stores.
+    const DTYPE: Dtype;
+
+    /// Quantize an `f32` into this storage format (round to nearest
+    /// even).
+    fn from_f32(x: f32) -> Self;
+
+    /// Widen back to `f32` for arithmetic. For [`f32`] itself this is the
+    /// identity and compiles away, so the generic kernels instantiate to
+    /// exactly the old monomorphic `f32` code.
+    fn to_f32(self) -> f32;
+
+    /// The value an `f32` takes after a round trip through this format —
+    /// the quantization the kernels actually compute with.
+    #[inline]
+    fn quantize(x: f32) -> f32 {
+        Self::from_f32(x).to_f32()
+    }
+
+    /// For the identity format, expose storage directly as `f32` so the
+    /// kernels can skip their decode scratch entirely; `None` for the
+    /// narrow formats (which decode whole tiles at once — see
+    /// `crate::cpu`'s kernel docs).
+    #[inline]
+    fn as_f32_slice(rows: &[Self]) -> Option<&[f32]>
+    where
+        Self: Sized,
+    {
+        let _ = rows;
+        None
+    }
+}
+
+impl Scalar for f32 {
+    const DTYPE: Dtype = Dtype::F32;
+
+    #[inline(always)]
+    fn from_f32(x: f32) -> Self {
+        x
+    }
+
+    #[inline(always)]
+    fn to_f32(self) -> f32 {
+        self
+    }
+
+    #[inline(always)]
+    fn as_f32_slice(rows: &[f32]) -> Option<&[f32]> {
+        Some(rows)
+    }
+}
+
+/// IEEE 754 binary16 storage scalar (bit-level, no hardware half
+/// support required).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+#[repr(transparent)]
+pub struct F16(pub u16);
+
+impl Scalar for F16 {
+    const DTYPE: Dtype = Dtype::F16;
+
+    #[inline]
+    fn from_f32(x: f32) -> Self {
+        F16(f16_encode(x))
+    }
+
+    #[inline(always)]
+    fn to_f32(self) -> f32 {
+        f16_decode(self.0)
+    }
+}
+
+/// bfloat16 storage scalar: the top 16 bits of an `f32`, rounded to
+/// nearest even.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+#[repr(transparent)]
+pub struct Bf16(pub u16);
+
+impl Scalar for Bf16 {
+    const DTYPE: Dtype = Dtype::Bf16;
+
+    #[inline]
+    fn from_f32(x: f32) -> Self {
+        Bf16(bf16_encode(x))
+    }
+
+    #[inline(always)]
+    fn to_f32(self) -> f32 {
+        f32::from_bits((self.0 as u32) << 16)
+    }
+}
+
+/// Encode `f32 -> f16` bits with round-to-nearest-even. Handles
+/// normals, subnormals (with correct rounding into and inside the
+/// subnormal range), signed zero, overflow to ±∞ and NaN (quietened,
+/// sign preserved).
+pub fn f16_encode(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let absx = bits & 0x7fff_ffff;
+
+    if absx >= 0x7f80_0000 {
+        // Inf stays Inf; NaN gets a quiet half payload.
+        return if absx > 0x7f80_0000 { sign | 0x7e00 } else { sign | 0x7c00 };
+    }
+
+    let e32 = (absx >> 23) as i32;
+    let e16 = e32 - 127 + 15;
+    if e16 >= 0x1f {
+        return sign | 0x7c00; // overflow -> ±Inf
+    }
+    if e16 <= 0 {
+        // half subnormal (or zero): shift the 24-bit significand
+        // (implicit bit restored) into place with RNE.
+        if e16 < -10 {
+            return sign; // below half the smallest subnormal -> ±0
+        }
+        let mant = (absx & 0x007f_ffff) | 0x0080_0000;
+        let shift = (14 - e16) as u32; // 14..=24
+        let rounded = mant + ((1u32 << (shift - 1)) - 1) + ((mant >> shift) & 1);
+        // a carry out of the subnormal field lands exactly on the
+        // smallest normal (exponent 1, mantissa 0) — already correct
+        return sign | (rounded >> shift) as u16;
+    }
+    // normal: drop 13 mantissa bits with RNE; mantissa carry bumps the
+    // exponent (and saturates to Inf) through plain addition.
+    let mant = absx & 0x007f_ffff;
+    let rounded = mant + 0x0fff + ((mant >> 13) & 1);
+    sign | (((e16 as u32) << 10) + (rounded >> 13)) as u16
+}
+
+/// Decode `f16` bits to `f32`. Branchless: one multiply by 2¹¹² rebias
+/// renormalizes subnormals for free, and a compare-derived mask patches
+/// Inf/NaN (NaN payload bits survive the power-of-two multiply) — so
+/// whole-tile decode loops autovectorize.
+#[inline]
+pub fn f16_decode(h: u16) -> f32 {
+    let magic = f32::from_bits((254 - 15) << 23); // 2^112
+    let infnan = f32::from_bits((127 + 16) << 23); // 2^16
+    let em = ((h as u32) & 0x7fff) << 13;
+    let f = f32::from_bits(em) * magic;
+    let exp_patch = ((f >= infnan) as u32) * (255u32 << 23);
+    f32::from_bits(f.to_bits() | exp_patch | (((h as u32) & 0x8000) << 16))
+}
+
+/// Encode `f32 -> bf16` bits with round-to-nearest-even (NaN quietened,
+/// sign preserved; overflow carries into ±∞ through the rounding add).
+pub fn bf16_encode(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let rounded = bits + 0x7fff + ((bits >> 16) & 1);
+    (rounded >> 16) as u16
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_strings_roundtrip() {
+        for dt in Dtype::all() {
+            assert_eq!(dt.as_str().parse::<Dtype>().unwrap(), dt);
+        }
+        assert_eq!("half".parse::<Dtype>().unwrap(), Dtype::F16);
+        assert_eq!("bfloat16".parse::<Dtype>().unwrap(), Dtype::Bf16);
+        assert!("f64".parse::<Dtype>().is_err());
+        assert_eq!(Dtype::F32.bytes_per_elem(), 4);
+        assert_eq!(Dtype::F16.bytes_per_elem(), 2);
+        assert_eq!(Dtype::Bf16.bytes_per_elem(), 2);
+    }
+
+    #[test]
+    fn f32_scalar_is_identity() {
+        for x in [0.0f32, -0.0, 1.5, -3.25e-12, f32::MAX, f32::INFINITY] {
+            assert_eq!(<f32 as Scalar>::from_f32(x).to_bits(), x.to_bits());
+            assert_eq!(f32::quantize(x).to_bits(), x.to_bits());
+        }
+    }
+
+    #[test]
+    fn f16_known_values() {
+        // (f32, half bits) pairs from the IEEE 754 binary16 tables
+        let cases: [(f32, u16); 10] = [
+            (0.0, 0x0000),
+            (-0.0, 0x8000),
+            (1.0, 0x3c00),
+            (-2.0, 0xc000),
+            (0.5, 0x3800),
+            (65504.0, 0x7bff),              // largest finite half
+            (6.103_515_6e-5, 0x0400),       // smallest normal half (2^-14)
+            (5.960_464_5e-8, 0x0001),       // smallest subnormal half (2^-24)
+            (f32::INFINITY, 0x7c00),
+            (f32::NEG_INFINITY, 0xfc00),
+        ];
+        for (x, h) in cases {
+            assert_eq!(f16_encode(x), h, "encode {x}");
+            assert_eq!(f16_decode(h).to_bits(), x.to_bits(), "decode {h:#06x}");
+        }
+    }
+
+    #[test]
+    fn f16_rounding_is_nearest_even() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and the next half
+        // (1 + 2^-10): ties go to the even mantissa, i.e. 1.0.
+        assert_eq!(f16_encode(1.0 + 2.0f32.powi(-11)), 0x3c00);
+        // just above the tie rounds up
+        assert_eq!(f16_encode(1.0 + 2.0f32.powi(-11) + 2.0f32.powi(-20)), 0x3c01);
+        // 1 + 3*2^-11 is halfway between 1+2^-10 and 1+2^-9: even is 1+2^-9
+        assert_eq!(f16_encode(1.0 + 3.0 * 2.0f32.powi(-11)), 0x3c02);
+        // overflow past the largest finite half goes to Inf
+        assert_eq!(f16_encode(65520.0), 0x7c00);
+        assert_eq!(f16_encode(65519.9), 0x7bff);
+        // halfway between 0 and the smallest subnormal (2^-25): ties to 0
+        assert_eq!(f16_encode(2.0f32.powi(-25)), 0x0000);
+        assert_eq!(f16_encode(2.0f32.powi(-25) * 1.001), 0x0001);
+    }
+
+    #[test]
+    fn f16_decode_encode_is_identity_on_all_bit_patterns() {
+        // decode is exact (every half is representable in f32), so
+        // encode(decode(h)) must reproduce h for every non-NaN pattern,
+        // and preserve NaN-ness (not the payload) for NaNs.
+        for h in 0..=u16::MAX {
+            let f = f16_decode(h);
+            if f.is_nan() {
+                assert!(f16_decode(f16_encode(f)).is_nan(), "{h:#06x}");
+            } else {
+                assert_eq!(f16_encode(f), h, "{h:#06x} -> {f} -> {:#06x}", f16_encode(f));
+            }
+        }
+    }
+
+    #[test]
+    fn f16_quantization_error_is_bounded() {
+        // relative error of RNE to 11 significand bits is <= 2^-12
+        let mut x = 1.0e-3f32;
+        while x < 6.0e4 {
+            let q = F16::quantize(x);
+            assert!(((q - x) / x).abs() <= 2.0f32.powi(-11), "{x} -> {q}");
+            x *= 1.37;
+        }
+    }
+
+    #[test]
+    fn bf16_known_values_and_rounding() {
+        assert_eq!(bf16_encode(0.0), 0x0000);
+        assert_eq!(bf16_encode(-0.0), 0x8000);
+        assert_eq!(bf16_encode(1.0), 0x3f80);
+        assert_eq!(bf16_encode(-2.5), 0xc020);
+        assert_eq!(Bf16(0x3f80).to_f32(), 1.0);
+        // 1 + 2^-8 is halfway between 1.0 and 1 + 2^-7: ties to even (1.0)
+        assert_eq!(bf16_encode(1.0 + 2.0f32.powi(-8)), 0x3f80);
+        assert_eq!(bf16_encode(1.0 + 2.0f32.powi(-8) + 2.0f32.powi(-16)), 0x3f81);
+        // Inf and NaN
+        assert_eq!(bf16_encode(f32::INFINITY), 0x7f80);
+        assert!(Bf16::quantize(f32::NAN).is_nan());
+        // overflow carries to Inf
+        assert_eq!(bf16_encode(f32::MAX), 0x7f80);
+    }
+
+    #[test]
+    fn bf16_roundtrip_on_all_bit_patterns() {
+        for h in 0..=u16::MAX {
+            let f = Bf16(h).to_f32();
+            if f.is_nan() {
+                assert!(Bf16::quantize(f).is_nan(), "{h:#06x}");
+            } else {
+                assert_eq!(bf16_encode(f), h, "{h:#06x}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_is_idempotent() {
+        let mut x = -100.0f32;
+        while x < 100.0 {
+            for (a, b) in [
+                (F16::quantize(x), F16::quantize(F16::quantize(x))),
+                (Bf16::quantize(x), Bf16::quantize(Bf16::quantize(x))),
+            ] {
+                assert_eq!(a.to_bits(), b.to_bits(), "x = {x}");
+            }
+            x += 0.377;
+        }
+    }
+}
