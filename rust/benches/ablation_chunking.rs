@@ -112,12 +112,12 @@ fn main() {
     }
     table.print();
 
-    // FP16 escape hatch: the budget that OOMs in f32 fits in f16
+    // FP16 escape hatch: the budget that OOMs in f32 fits in f16 (the
+    // element width comes from the dtype, never a hand-set constant)
     let tight = ground + per_set / 2 + per_set / 4;
     let f16_mem = MemoryModel {
         total_bytes: tight,
-        bytes_per_elem: 2,
-        ..MemoryModel::default()
+        ..MemoryModel::for_dtype(exemcl::scalar::Dtype::F16)
     };
     let f32_free = MemoryModel { total_bytes: tight, ..MemoryModel::default() }
         .free_after_ground(n, d_bucket);

@@ -24,10 +24,10 @@ use std::collections::HashSet;
 use std::time::Instant;
 
 use exemcl::bench::{measure, write_json, JsonValue, Scale, Table};
-use exemcl::cpu::build_cpu_oracle;
 use exemcl::data::synth::{GaussianBlobs, UniformCube};
 use exemcl::data::Rng;
-use exemcl::optim::{Greedy, Optimizer, Oracle};
+use exemcl::engine::{Backend, Engine};
+use exemcl::optim::Greedy;
 use exemcl::scalar::Dtype;
 
 fn overlap(a: &[usize], b: &[usize]) -> f64 {
@@ -73,9 +73,14 @@ fn main() {
     let mut table = Table::new(&["oracle", "f(S)", "overlap vs f32", "identical", "seconds"]);
     let mut greedy_runs: Vec<(Dtype, exemcl::optim::OptimResult, f64)> = Vec::new();
     for dtype in Dtype::all() {
-        let oracle = build_cpu_oracle(gds.clone(), true, 0, dtype);
+        let engine = Engine::builder()
+            .dataset(gds.clone())
+            .backend(Backend::Cpu { threads: 0 })
+            .dtype(dtype)
+            .build()
+            .expect("engine");
         let t0 = Instant::now();
-        let r = Greedy::new(g_k).maximize(oracle.as_ref()).expect("greedy");
+        let r = engine.run(&Greedy::new(g_k)).expect("greedy");
         let secs = t0.elapsed().as_secs_f64();
         greedy_runs.push((dtype, r, secs));
     }
@@ -108,14 +113,19 @@ fn main() {
     let mut mins = Vec::new();
     let mut gains_by_dtype: Vec<Vec<f32>> = Vec::new();
     for dtype in Dtype::all() {
-        let oracle = build_cpu_oracle(ds.clone(), true, 0, dtype);
-        let mut state = oracle.init_state();
-        oracle.commit_many(&mut state, &exemplars).unwrap();
-        let gains = oracle.marginal_gains(&state, &candidates).unwrap();
+        let engine = Engine::builder()
+            .dataset(ds.clone())
+            .backend(Backend::Cpu { threads: 0 })
+            .dtype(dtype)
+            .build()
+            .expect("engine");
+        let mut session = engine.session();
+        session.commit_many(&exemplars).unwrap();
+        let gains = session.gains(&candidates).unwrap();
         gains_by_dtype.push(gains);
         let stats = measure(
             || {
-                oracle.marginal_gains(&state, &candidates).unwrap();
+                session.gains(&candidates).unwrap();
             },
             reps,
             true,
@@ -208,6 +218,8 @@ mod common;
 
 #[cfg(feature = "xla-backend")]
 fn device_appendix(ds: &exemcl::data::Dataset, k: usize, ref_run: &exemcl::optim::OptimResult) {
+    use exemcl::engine::Session;
+    use exemcl::optim::{Optimizer, Oracle};
     use exemcl::runtime::{DeviceEvaluator, EvalConfig};
     println!("\n== device appendix: Greedy under device dtypes ==");
     let mut table = Table::new(&["oracle", "f(S)", "overlap vs cpu-f32", "seconds"]);
@@ -215,12 +227,12 @@ fn device_appendix(ds: &exemcl::data::Dataset, k: usize, ref_run: &exemcl::optim
         let dev = DeviceEvaluator::from_dir(
             common::artifacts_dir(),
             ds,
-            EvalConfig { dtype: dtype.to_string(), ..EvalConfig::default() },
+            EvalConfig::for_dtype(dtype),
         )
         .expect("device evaluator");
         dev.eval_sets(&[vec![0]]).expect("warmup");
         let t0 = Instant::now();
-        let r = Greedy::new(k).maximize(&dev).expect("device greedy");
+        let r = Greedy::new(k).run(&mut Session::over(&dev)).expect("device greedy");
         let secs = t0.elapsed().as_secs_f64();
         table.row(&[
             format!("device-{dtype}"),

@@ -1,14 +1,15 @@
 //! End-to-end driver (EXPERIMENTS.md §E2E): full exemplar clustering of a
 //! 20k-point synthetic blob corpus through the whole stack —
 //!
-//!   data substrate → coordinator service (executor thread + batching)
-//!   → batched multi-thread CPU evaluator → Greedy + LazyGreedy
-//!   → clustering extraction + quality metrics,
+//!   data substrate → engine with a service backend (executor thread +
+//!   request coalescing over the batched multi-thread CPU oracle)
+//!   → Greedy + LazyGreedy → clustering extraction + quality metrics,
 //!
 //! with the f(S) curve logged per round and the single-thread baseline
-//! timed on the same problem for the headline speedup. All CPU layers
-//! compose here; point the service factory at a `DeviceEvaluator`
-//! (`xla-backend` feature) to swap in the AOT/PJRT path.
+//! (a second engine) timed on the same problem for the headline
+//! speedup. Swap `Backend::Cpu` for `Backend::Device` inside the
+//! service to run the same flow on the AOT/PJRT path (`xla-backend`
+//! feature).
 //!
 //! ```sh
 //! cargo run --release --example exemplar_clustering
@@ -17,10 +18,9 @@
 use std::time::Instant;
 
 use exemcl::clustering;
-use exemcl::coordinator::EvalService;
-use exemcl::cpu::{MultiThread, SingleThread};
 use exemcl::data::synth::GaussianBlobs;
-use exemcl::optim::{Greedy, LazyGreedy, Optimizer, Oracle};
+use exemcl::engine::{Backend, Engine};
+use exemcl::optim::{Greedy, LazyGreedy};
 
 fn main() -> exemcl::Result<()> {
     let n: usize = std::env::var("E2E_N").ok().and_then(|v| v.parse().ok()).unwrap_or(20_000);
@@ -33,17 +33,16 @@ fn main() -> exemcl::Result<()> {
     let lab = GaussianBlobs::new(blobs, d, 0.6).generate_labeled(n, 2026);
     let ds = lab.dataset.clone();
 
-    // --- the full coordinated stack: service + batched MT evaluator
-    let ds2 = ds.clone();
-    let svc = EvalService::spawn(
-        move || Ok(MultiThread::new(ds2, 0)),
-        exemcl::coordinator::DEFAULT_QUEUE_CAPACITY,
-    )?;
-    let handle = svc.handle();
-    println!("backend: {}", handle.name());
+    // --- the full coordinated stack: service backend over the pooled
+    // CPU oracle, behind the one engine facade
+    let engine = Engine::builder()
+        .dataset(ds.clone())
+        .backend(Backend::service_over(Backend::Cpu { threads: 0 }))
+        .build()?;
+    println!("backend: {}", engine.name());
 
     let t0 = Instant::now();
-    let result = Greedy::new(k).maximize(&handle)?;
+    let result = engine.run(&Greedy::new(k))?;
     let mt_secs = t0.elapsed().as_secs_f64();
 
     println!("\nf(S) curve (per greedy round):");
@@ -54,22 +53,26 @@ fn main() -> exemcl::Result<()> {
         "\nmt greedy:     f(S) = {:.5} in {mt_secs:.2}s ({} gain evaluations)",
         result.value, result.evaluations
     );
-    println!("service metrics: {}", svc.metrics().summary());
+    if let Some(m) = engine.metrics() {
+        println!("service metrics: {}", m.summary());
+    }
 
     // --- LazyGreedy through the same service (fewer evaluations)
     let t0 = Instant::now();
-    let lazy = LazyGreedy::new(k).maximize(&handle)?;
+    let lazy = engine.run(&LazyGreedy::new(k))?;
     let lazy_secs = t0.elapsed().as_secs_f64();
     println!(
         "lazy greedy:   f(S) = {:.5} in {lazy_secs:.2}s ({} gain evaluations)",
         lazy.value, lazy.evaluations
     );
-    svc.shutdown();
 
-    // --- single-thread baseline on the identical problem
-    let cpu = SingleThread::new(ds.clone());
+    // --- single-thread baseline engine on the identical problem
+    let st_engine = Engine::builder()
+        .dataset(ds.clone())
+        .backend(Backend::SingleThread)
+        .build()?;
     let t0 = Instant::now();
-    let cpu_result = Greedy::new(k).maximize(&cpu)?;
+    let cpu_result = st_engine.run(&Greedy::new(k))?;
     let cpu_secs = t0.elapsed().as_secs_f64();
     println!(
         "\ncpu-st greedy: f(S) = {:.5} in {cpu_secs:.2}s  -> mt speedup {:.1}x",

@@ -1,9 +1,9 @@
 //! Clustering-baseline comparison: §IV grounds Exemplar-based clustering
 //! in the k-medoids loss (Definition 4). This example pits the
-//! submodular route (Greedy on the batched CPU oracle) against classic
-//! Lloyd's k-means (k-means++ seeding) and PAM k-medoids on the same
-//! synthetic blobs, reporting the shared loss, ground-truth purity and
-//! wall-clock.
+//! submodular route (Greedy through an [`Engine`] over the batched CPU
+//! oracle) against classic Lloyd's k-means (k-means++ seeding) and PAM
+//! k-medoids on the same synthetic blobs, reporting the shared loss,
+//! ground-truth purity and wall-clock.
 //!
 //! ```sh
 //! cargo run --release --example kmedoids_comparison
@@ -12,9 +12,9 @@
 use std::time::Instant;
 
 use exemcl::clustering::{self, baselines};
-use exemcl::cpu::MultiThread;
 use exemcl::data::synth::GaussianBlobs;
-use exemcl::optim::{Greedy, Optimizer, Oracle};
+use exemcl::engine::{Backend, Engine};
+use exemcl::optim::Greedy;
 
 fn main() -> exemcl::Result<()> {
     // PAM's SWAP phase is O(k·(n-k)²) per improvement scan, so the shared
@@ -25,11 +25,14 @@ fn main() -> exemcl::Result<()> {
     let lab = GaussianBlobs::new(k, d, 0.5).generate_labeled(n, 17);
     let ds = &lab.dataset;
 
-    // --- submodular route: Greedy on the batched CPU oracle
-    let eval = MultiThread::new(ds.clone(), 0);
-    println!("evaluator: {}\n", eval.name());
+    // --- submodular route: Greedy on the pooled CPU engine
+    let engine = Engine::builder()
+        .dataset(ds.clone())
+        .backend(Backend::Cpu { threads: 0 })
+        .build()?;
+    println!("evaluator: {}\n", engine.name());
     let t0 = Instant::now();
-    let greedy = Greedy::new(k).maximize(&eval)?;
+    let greedy = engine.run(&Greedy::new(k))?;
     let greedy_secs = t0.elapsed().as_secs_f64();
     let gc = clustering::assign(ds, &greedy.exemplars);
 

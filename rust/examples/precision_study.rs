@@ -3,11 +3,12 @@
 //! deviation of f(S) and the wall-clock difference — the per-evaluation
 //! view that complements the end-to-end `ablation_precision` bench.
 //!
-//! The default build runs the **CPU dtype mode**: the precision-generic
-//! Gram kernels over mean-centered `f32`/`f16`/`bf16` shadows of the
-//! same ground set (operands narrow, accumulate wide). With the
-//! `xla-backend` feature the same sweep additionally runs on the device
-//! evaluator from AOT artifacts.
+//! The default build runs the **CPU dtype mode**: one engine per dtype
+//! (`Engine::builder().dtype(..)`), each quantizing a mean-centered
+//! shadow of the same ground set for the precision-generic Gram kernels
+//! (operands narrow, accumulate wide). With the `xla-backend` feature
+//! the same sweep additionally runs on the device evaluator from AOT
+//! artifacts.
 //!
 //! ```sh
 //! cargo run --release --example precision_study
@@ -15,10 +16,9 @@
 
 use std::time::Instant;
 
-use exemcl::cpu::build_cpu_oracle;
 use exemcl::data::synth::UniformCube;
 use exemcl::data::Rng;
-use exemcl::optim::Oracle;
+use exemcl::engine::{Backend, Engine};
 use exemcl::scalar::Dtype;
 
 fn report(label: &str, vals: &[f32], exact: &[f32], secs: f64) {
@@ -46,16 +46,26 @@ fn main() -> exemcl::Result<()> {
     let mut rng = Rng::new(12);
     let sets: Vec<Vec<usize>> = (0..l).map(|_| rng.sample_indices(n, k)).collect();
 
-    // exact reference from the full-precision CPU oracle (f64
+    // exact reference from the full-precision serial engine (f64
     // accumulation inside)
-    let exact = build_cpu_oracle(ds.clone(), false, 0, Dtype::F32).eval_sets(&sets)?;
+    let exact = Engine::builder()
+        .dataset(ds.clone())
+        .backend(Backend::SingleThread)
+        .build()?
+        .session()
+        .eval_sets(&sets)?;
 
     println!("-- CPU dtype mode (multi-thread, centered Gram shadows)");
     for dtype in Dtype::all() {
-        let oracle = build_cpu_oracle(ds.clone(), true, 0, dtype);
-        oracle.eval_sets(&sets[..1])?; // warm the pool
+        let engine = Engine::builder()
+            .dataset(ds.clone())
+            .backend(Backend::Cpu { threads: 0 })
+            .dtype(dtype)
+            .build()?;
+        let session = engine.session();
+        session.eval_sets(&sets[..1])?; // warm the pool
         let t0 = Instant::now();
-        let vals = oracle.eval_sets(&sets)?;
+        let vals = session.eval_sets(&sets)?;
         let secs = t0.elapsed().as_secs_f64();
         report(dtype.as_str(), &vals, &exact, secs);
     }
@@ -77,15 +87,14 @@ fn device_mode(
     sets: &[Vec<usize>],
     exact: &[f32],
 ) -> exemcl::Result<()> {
+    use exemcl::optim::Oracle;
     use exemcl::runtime::{DeviceEvaluator, EvalConfig};
     let artifacts = std::env::var("EXEMCL_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
     println!("\n-- device dtype mode (artifacts: {artifacts})");
     for dtype in Dtype::all() {
-        let dev = DeviceEvaluator::from_dir(
-            &artifacts,
-            ds,
-            EvalConfig { dtype: dtype.to_string(), ..EvalConfig::default() },
-        )?;
+        // EvalConfig::for_dtype keeps the chunk planner's bytes-per-
+        // element in lockstep with the operand precision
+        let dev = DeviceEvaluator::from_dir(&artifacts, ds, EvalConfig::for_dtype(dtype))?;
         dev.eval_sets(&sets[..1])?; // warm the executable cache
         let t0 = Instant::now();
         let vals = dev.eval_sets(sets)?;

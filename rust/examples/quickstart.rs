@@ -1,43 +1,50 @@
-//! Quickstart: generate a small dataset, evaluate a handful of candidate
-//! summaries through the batched CPU evaluator, and pick the best
-//! exemplar set with Greedy. Runs offline on the default build — the
-//! AOT/PJRT device variant of the same flow is the `eval.backend=device`
-//! CLI path behind the `xla-backend` feature.
+//! Quickstart: build an [`Engine`] over a small dataset, evaluate a
+//! handful of candidate summaries through a [`Session`], and pick the
+//! best exemplar set with Greedy. Runs offline on the default build —
+//! swapping `.backend(..)` (and, with the `xla-backend` feature,
+//! `Backend::Device`) changes the evaluation backend without touching
+//! anything else.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 
 use exemcl::clustering;
-use exemcl::cpu::MultiThread;
 use exemcl::data::synth::GaussianBlobs;
-use exemcl::optim::{Greedy, Optimizer, Oracle};
+use exemcl::engine::{Backend, Engine};
+use exemcl::optim::Greedy;
 
 fn main() -> exemcl::Result<()> {
     // 1. data: 2000 points around 5 blob centers in 16 dims
     let ds = GaussianBlobs::new(5, 16, 0.4).generate(2000, 42);
     println!("dataset: n={} d={}", ds.n(), ds.d());
 
-    // 2. the batched CPU evaluator (persistent worker pool + centered
-    //    Gram kernels; 0 = all cores)
-    let eval = MultiThread::new(ds.clone(), 0);
-    println!("evaluator: {}", eval.name());
+    // 2. the engine: one facade over every backend. Here the pooled
+    //    CPU oracle (persistent worker pool + centered Gram kernels,
+    //    0 = all cores).
+    let engine = Engine::builder()
+        .dataset(ds.clone())
+        .backend(Backend::Cpu { threads: 0 })
+        .build()?;
+    println!("backend: {}", engine.name());
 
     // 3. evaluate a *multiset* of candidate summaries in one batch —
     //    the workload the paper's work matrix is built for (§IV-A)
+    let session = engine.session();
     let candidates = vec![
         vec![0, 1, 2, 3, 4],
         vec![10, 400, 800, 1200, 1600],
         vec![5, 6],
         vec![],
     ];
-    let values = eval.eval_sets(&candidates)?;
+    let values = session.eval_sets(&candidates)?;
     for (s, v) in candidates.iter().zip(&values) {
         println!("f({s:?}) = {v:.5}");
     }
 
-    // 4. optimize: Greedy with the optimizer-aware fast path
-    let result = Greedy::new(5).maximize(&eval)?;
+    // 4. optimize: Greedy with the optimizer-aware fast path, in a
+    //    fresh session the engine manages
+    let result = engine.run(&Greedy::new(5))?;
     println!("\ngreedy summary: f(S) = {:.5}", result.value);
     println!("exemplars: {:?}", result.exemplars);
 

@@ -1,8 +1,9 @@
 //! Streaming summarization: the §I motivation — summarize a data stream
 //! in one pass with sieve-based optimizers, comparing SieveStreaming,
 //! SieveStreaming++, ThreeSieves and Salsa against the (non-streaming)
-//! Greedy upper reference, all through the batched evaluation service
-//! backed by the multi-thread CPU oracle.
+//! Greedy upper reference, all through one engine whose backend is the
+//! batched evaluation service over the multi-thread CPU oracle. Each
+//! optimizer drives its own [`Session`] from the shared engine.
 //!
 //! ```sh
 //! cargo run --release --example streaming_summarization
@@ -10,13 +11,22 @@
 
 use std::time::Instant;
 
-use exemcl::coordinator::EvalService;
-use exemcl::cpu::MultiThread;
 use exemcl::data::synth::GaussianBlobs;
 use exemcl::data::Rng;
+use exemcl::engine::{Backend, Engine};
 use exemcl::optim::{
-    Greedy, Optimizer, Salsa, SieveStreaming, SieveStreamingPP, ThreeSieves,
+    Greedy, OptimResult, Salsa, SieveStreaming, SieveStreamingPP, ThreeSieves,
 };
+
+fn report(name: &str, greedy_value: f32, r: &OptimResult, secs: f64) {
+    println!(
+        "{:<22} f(S) = {:.5}  ({} evals, {secs:.2}s)  ratio to greedy = {:.2}",
+        name,
+        r.value,
+        r.evaluations,
+        r.value / greedy_value
+    );
+}
 
 fn main() -> exemcl::Result<()> {
     let n: usize = std::env::var("STREAM_N").ok().and_then(|v| v.parse().ok()).unwrap_or(4000);
@@ -26,12 +36,11 @@ fn main() -> exemcl::Result<()> {
     println!("stream: n={n} d={d}, budget k={k}\n");
 
     let ds = GaussianBlobs::new(k, d, 0.6).generate(n, 7);
-    let ds2 = ds.clone();
-    let svc = EvalService::spawn(
-        move || Ok(MultiThread::new(ds2, 0)),
-        exemcl::coordinator::DEFAULT_QUEUE_CAPACITY,
-    )?;
-    let h = svc.handle();
+    let engine = Engine::builder()
+        .dataset(ds)
+        .backend(Backend::service_over(Backend::Cpu { threads: 0 }))
+        .build()?;
+    println!("backend: {}\n", engine.name());
 
     // the stream: a random arrival order of the dataset
     let mut order: Vec<usize> = (0..n).collect();
@@ -39,7 +48,7 @@ fn main() -> exemcl::Result<()> {
 
     // non-streaming reference (sees everything, multiple passes)
     let t0 = Instant::now();
-    let greedy = Greedy::new(k).maximize(&h)?;
+    let greedy = engine.run(&Greedy::new(k))?;
     println!(
         "{:<22} f(S) = {:.5}  ({} evals, {:.2}s)  [reference, not streaming]",
         "greedy",
@@ -48,44 +57,25 @@ fn main() -> exemcl::Result<()> {
         t0.elapsed().as_secs_f64()
     );
 
-    let streamers: Vec<(&str, Box<dyn Fn() -> exemcl::Result<exemcl::optim::OptimResult>>)> = vec![
-        ("sieve-streaming", {
-            let h = h.clone();
-            let order = order.clone();
-            Box::new(move || SieveStreaming::new(k, 0.2, 0).run_stream(&h, &order))
-        }),
-        ("sieve-streaming++", {
-            let h = h.clone();
-            let order = order.clone();
-            Box::new(move || SieveStreamingPP::new(k, 0.2, 0).run_stream(&h, &order))
-        }),
-        ("three-sieves", {
-            let h = h.clone();
-            let order = order.clone();
-            Box::new(move || ThreeSieves::new(k, 0.2, 200, 0).run_stream(&h, &order))
-        }),
-        ("salsa", {
-            let h = h.clone();
-            let order = order.clone();
-            Box::new(move || Salsa::new(k, 0.3, 0).run_stream(&h, &order))
-        }),
-    ];
+    let t0 = Instant::now();
+    let r = SieveStreaming::new(k, 0.2, 0).run_stream(&mut engine.session(), &order)?;
+    report("sieve-streaming", greedy.value, &r, t0.elapsed().as_secs_f64());
 
-    for (name, run) in &streamers {
-        let t0 = Instant::now();
-        let r = run()?;
-        let secs = t0.elapsed().as_secs_f64();
-        println!(
-            "{:<22} f(S) = {:.5}  ({} evals, {secs:.2}s)  ratio to greedy = {:.2}",
-            name,
-            r.value,
-            r.evaluations,
-            r.value / greedy.value
-        );
+    let t0 = Instant::now();
+    let r = SieveStreamingPP::new(k, 0.2, 0).run_stream(&mut engine.session(), &order)?;
+    report("sieve-streaming++", greedy.value, &r, t0.elapsed().as_secs_f64());
+
+    let t0 = Instant::now();
+    let r = ThreeSieves::new(k, 0.2, 200, 0).run_stream(&mut engine.session(), &order)?;
+    report("three-sieves", greedy.value, &r, t0.elapsed().as_secs_f64());
+
+    let t0 = Instant::now();
+    let r = Salsa::new(k, 0.3, 0).run_stream(&mut engine.session(), &order)?;
+    report("salsa", greedy.value, &r, t0.elapsed().as_secs_f64());
+
+    if let Some(m) = engine.metrics() {
+        println!("\nservice metrics: {}", m.summary());
     }
-
-    println!("\nservice metrics: {}", svc.metrics().summary());
-    svc.shutdown();
     println!("=== streaming run complete ===");
     Ok(())
 }

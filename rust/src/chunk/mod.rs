@@ -8,6 +8,7 @@
 //! n_chunk-size equals zero ... use lower floating-point precision or
 //! better suited hardware").
 
+use crate::scalar::Dtype;
 use crate::{Error, Result};
 
 /// Simulated device memory model. The ground set is pre-loaded at
@@ -35,6 +36,14 @@ impl Default for MemoryModel {
 }
 
 impl MemoryModel {
+    /// The default model with `bytes_per_elem` derived from the element
+    /// dtype — the one way to couple the planner to a precision choice
+    /// (hand-setting the field invites the f16-plans-as-f32 mismatch
+    /// this constructor exists to remove).
+    pub fn for_dtype(dtype: Dtype) -> Self {
+        Self { bytes_per_elem: dtype.bytes_per_elem(), ..Self::default() }
+    }
+
     /// Free bytes after the resident ground set (`n x d`) and its norms.
     pub fn free_after_ground(&self, n: usize, d: usize) -> usize {
         let ground = n * d * self.bytes_per_elem + n * self.bytes_per_elem;
@@ -163,6 +172,21 @@ mod tests {
         let f32m = MemoryModel { bytes_per_elem: 4, metadata_bytes_per_set: 0, total_bytes: 0 };
         let f16m = MemoryModel { bytes_per_elem: 2, metadata_bytes_per_set: 0, total_bytes: 0 };
         assert_eq!(f32m.per_set_bytes(8, 64), 2 * f16m.per_set_bytes(8, 64));
+    }
+
+    #[test]
+    fn for_dtype_derives_element_width() {
+        for dt in Dtype::all() {
+            let m = MemoryModel::for_dtype(dt);
+            assert_eq!(m.bytes_per_elem, dt.bytes_per_elem(), "{dt}");
+            // everything else keeps the defaults
+            assert_eq!(m.total_bytes, MemoryModel::default().total_bytes);
+            assert_eq!(m.metadata_bytes_per_set, MemoryModel::default().metadata_bytes_per_set);
+        }
+        // the half formats genuinely shrink the planner's footprint
+        let half = MemoryModel::for_dtype(Dtype::F16);
+        let full = MemoryModel::for_dtype(Dtype::F32);
+        assert!(half.free_after_ground(1000, 100) > full.free_after_ground(1000, 100));
     }
 
     #[test]

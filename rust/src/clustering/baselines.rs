@@ -234,9 +234,12 @@ mod tests {
     #[test]
     fn greedy_exemplars_competitive_with_pam() {
         use crate::cpu::SingleThread;
+        use crate::engine::Session;
         use crate::optim::{Greedy, Optimizer};
         let ds = GaussianBlobs::new(4, 3, 0.3).generate(120, 9);
-        let greedy = Greedy::new(4).maximize(&SingleThread::new(ds.clone())).unwrap();
+        let greedy = Greedy::new(4)
+            .run(&mut Session::over(&SingleThread::new(ds.clone())))
+            .unwrap();
         let g_loss = kmedoids_loss(&ds, &greedy.exemplars);
         let pam = pam_kmedoids(&ds, 4, 200, 10);
         // submodular greedy should land within a modest factor of PAM

@@ -4,8 +4,13 @@
 
 use std::collections::BTreeMap;
 
+use crate::coordinator::DEFAULT_QUEUE_CAPACITY;
+use crate::data::Dataset;
+use crate::engine::Engine;
 use crate::scalar::Dtype;
 use crate::{Error, Result};
+
+pub use crate::engine::Backend;
 
 /// Raw parsed config: `section.key -> value` (top-level keys live in
 /// section `""`).
@@ -79,32 +84,6 @@ impl RawConfig {
     }
 }
 
-/// Which evaluation backend to run.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Backend {
-    /// Single-threaded Algorithm 2.
-    CpuSt,
-    /// Multi-threaded Algorithm 2.
-    CpuMt,
-    /// AOT/PJRT device path.
-    Device,
-}
-
-impl std::str::FromStr for Backend {
-    type Err = Error;
-
-    fn from_str(s: &str) -> Result<Self> {
-        match s {
-            "cpu-st" | "st" => Ok(Self::CpuSt),
-            "cpu-mt" | "mt" => Ok(Self::CpuMt),
-            "device" | "xla" => Ok(Self::Device),
-            other => Err(Error::Config(format!(
-                "unknown backend {other:?} (cpu-st|cpu-mt|device)"
-            ))),
-        }
-    }
-}
-
 /// Typed application config for the `exemcl` binary and examples.
 #[derive(Clone, Debug)]
 pub struct AppConfig {
@@ -123,17 +102,22 @@ pub struct AppConfig {
     /// Optimizer: `greedy` | `lazy` | `stochastic` | `sieve` | `sieve++`
     /// | `threesieves` | `salsa`.
     pub optimizer: String,
-    /// Evaluation backend.
+    /// Evaluation backend (`cpu-st` | `cpu-mt` | `device` |
+    /// `service[:inner]`). [`AppConfig::engine`] overwrites any CPU
+    /// worker counts in here from [`AppConfig::threads`] — the `threads`
+    /// field is the single source of truth for config-driven engines.
     pub backend: Backend,
     /// Element dtype (`f32` | `f16` | `bf16`) — one vocabulary for the
     /// CPU oracles and the device artifact manifest.
     pub dtype: Dtype,
     /// Artifact directory.
     pub artifacts: String,
-    /// Worker threads for `cpu-mt` (0 = auto).
+    /// Worker threads for the pooled CPU backend (0 = auto).
     pub threads: usize,
     /// Simulated device memory budget in MiB.
     pub memory_mib: usize,
+    /// Bounded request-queue capacity for service backends.
+    pub queue: usize,
     /// Optional CSV input path (overrides the generator).
     pub csv: Option<String>,
 }
@@ -153,6 +137,7 @@ impl Default for AppConfig {
             artifacts: "artifacts".into(),
             threads: 0,
             memory_mib: 16 * 1024,
+            queue: DEFAULT_QUEUE_CAPACITY,
             csv: None,
         }
     }
@@ -162,6 +147,7 @@ impl AppConfig {
     /// Build from a raw config (missing keys keep defaults).
     pub fn from_raw(raw: &RawConfig) -> Result<Self> {
         let def = Self::default();
+        let threads = raw.get_or("eval.threads", def.threads)?;
         Ok(Self {
             n: raw.get_or("data.n", def.n)?,
             d: raw.get_or("data.d", def.d)?,
@@ -170,13 +156,30 @@ impl AppConfig {
             blobs: raw.get_or("data.blobs", def.blobs)?,
             seed: raw.get_or("data.seed", def.seed)?,
             optimizer: raw.get("optimizer.name").unwrap_or(&def.optimizer).to_string(),
-            backend: raw.get_or("eval.backend", def.backend)?,
+            backend: raw.get_or("eval.backend", def.backend)?.with_threads(threads),
             dtype: raw.get_or("eval.dtype", def.dtype)?,
             artifacts: raw.get("eval.artifacts").unwrap_or(&def.artifacts).to_string(),
-            threads: raw.get_or("eval.threads", def.threads)?,
+            threads,
             memory_mib: raw.get_or("eval.memory_mib", def.memory_mib)?,
+            queue: raw.get_or("eval.queue", def.queue)?,
             csv: raw.get("data.csv").map(str::to_string),
         })
+    }
+
+    /// Build an [`Engine`] for this config over a prepared dataset —
+    /// the one construction path the CLI, examples and tests share.
+    /// `threads` is (re-)merged into the backend here, so a
+    /// programmatically-set field is honored exactly like the
+    /// `eval.threads` key (idempotent on the parse path).
+    pub fn engine(&self, ds: Dataset) -> Result<Engine> {
+        Engine::builder()
+            .dataset(ds)
+            .backend(self.backend.clone().with_threads(self.threads))
+            .dtype(self.dtype)
+            .artifacts(self.artifacts.clone())
+            .memory_mib(self.memory_mib)
+            .queue_capacity(self.queue)
+            .build()
     }
 }
 
@@ -226,10 +229,39 @@ mod tests {
 
     #[test]
     fn backend_parsing() {
-        assert_eq!("cpu-st".parse::<Backend>().unwrap(), Backend::CpuSt);
-        assert_eq!("mt".parse::<Backend>().unwrap(), Backend::CpuMt);
+        assert_eq!("cpu-st".parse::<Backend>().unwrap(), Backend::SingleThread);
+        assert_eq!("mt".parse::<Backend>().unwrap(), Backend::Cpu { threads: 0 });
         assert_eq!("xla".parse::<Backend>().unwrap(), Backend::Device);
         assert!("gpu".parse::<Backend>().is_err());
+    }
+
+    #[test]
+    fn threads_key_is_merged_into_the_backend() {
+        let raw = RawConfig::parse("[eval]\nbackend = service:mt\nthreads = 3\n").unwrap();
+        let cfg = AppConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.backend, Backend::service_over(Backend::Cpu { threads: 3 }));
+        assert_eq!(cfg.threads, 3);
+    }
+
+    #[test]
+    fn queue_key_parses_with_default() {
+        assert_eq!(
+            AppConfig::from_raw(&RawConfig::default()).unwrap().queue,
+            crate::coordinator::DEFAULT_QUEUE_CAPACITY
+        );
+        let raw = RawConfig::parse("[eval]\nqueue = 7\n").unwrap();
+        assert_eq!(AppConfig::from_raw(&raw).unwrap().queue, 7);
+    }
+
+    #[test]
+    fn config_builds_a_working_engine() {
+        let raw = RawConfig::parse("[eval]\nbackend = cpu-st\ndtype = f16\n").unwrap();
+        let cfg = AppConfig::from_raw(&raw).unwrap();
+        let ds = crate::data::synth::UniformCube::new(3, 1.0).generate(32, 1);
+        let engine = cfg.engine(ds).unwrap();
+        assert!(engine.name().contains("f16"), "{}", engine.name());
+        let r = engine.run(&crate::optim::Greedy::new(3)).unwrap();
+        assert_eq!(r.exemplars.len(), 3);
     }
 
     #[test]

@@ -1,18 +1,27 @@
 //! The evaluation service — the L3 coordination layer.
 //!
-//! The PJRT device is not thread-safe, so it lives on a dedicated
-//! **executor thread**; clients talk to it through [`ServiceHandle`], a
+//! A [`Service`] pins **any** [`Oracle`] to a dedicated executor thread
+//! and serves concurrent clients through [`ServiceHandle`], a
 //! cheap-to-clone, `Send + Sync` handle that itself implements
-//! [`Oracle`]. The request path is:
+//! [`Oracle`]. Originally this existed because the PJRT device is not
+//! thread-safe; it is now a first-class backend wrapper
+//! ([`crate::engine::Backend::Service`]) over the CPU oracles too, so a
+//! pooled-CPU engine serves concurrent clients through the same
+//! bounded-queue/coalescing path as the device. The request path is:
 //!
 //! ```text
-//!   client threads ──bounded queue──▶ executor ──▶ DeviceEvaluator ──▶ PJRT
-//!        ▲                               │
+//!   client threads ──bounded queue──▶ executor ──▶ any Oracle (CPU pool,
+//!        ▲                               │          device, ...)
 //!        └────────── reply channels ◀────┘
 //! ```
 //!
+//! Construction: [`Service::over`] moves a built oracle onto the
+//! executor ([`Send`] backends — the CPU oracles); [`Service::spawn`]
+//! runs a factory *on* the executor thread (non-`Send` backends — the
+//! device evaluator).
+//!
 //! The executor **coalesces** adjacent `eval_sets` requests that arrive
-//! while the device is busy into a single packed work-matrix evaluation —
+//! while the backend is busy into a single packed work-matrix evaluation —
 //! the multiset batching the paper's §IV-A calls out as the optimizer
 //! workload — and splits the results back per caller. The queue is
 //! bounded, so producers experience backpressure instead of unbounded
@@ -86,12 +95,28 @@ impl Clone for ServiceHandle {
 }
 
 /// The running service: join handle + the means to stop it.
-pub struct EvalService {
+pub struct Service {
     handle: ServiceHandle,
     join: Option<std::thread::JoinHandle<()>>,
 }
 
-impl EvalService {
+/// Pre-engine name for [`Service`], kept so the old device-era call
+/// sites compile for one release.
+#[deprecated(since = "0.3.0", note = "renamed to `Service` (`Service::over` / `Service::spawn`)")]
+pub type EvalService = Service;
+
+impl Service {
+    /// Put an already-built oracle behind the executor: the service
+    /// front door for `Send` backends (both CPU oracles qualify). The
+    /// oracle moves onto the executor thread; clients reach it through
+    /// cloned [`ServiceHandle`]s.
+    pub fn over<O>(oracle: O, queue_capacity: usize) -> Result<Self>
+    where
+        O: Oracle + Send + 'static,
+    {
+        Self::spawn(move || Ok(oracle), queue_capacity)
+    }
+
     /// Spawn the executor thread. `make_oracle` runs **on the executor
     /// thread** (the device evaluator is not `Send`), builds the backing
     /// oracle and must be infallible enough to report errors through the
@@ -154,6 +179,12 @@ impl EvalService {
         self.handle.clone()
     }
 
+    /// Borrow the service's own handle without cloning (what
+    /// `Engine::session` wraps).
+    pub fn handle_ref(&self) -> &ServiceHandle {
+        &self.handle
+    }
+
     /// Service metrics.
     pub fn metrics(&self) -> &ServiceMetrics {
         &self.handle.metrics
@@ -168,7 +199,7 @@ impl EvalService {
     }
 }
 
-impl Drop for EvalService {
+impl Drop for Service {
     fn drop(&mut self) {
         let _ = self.handle.tx.send(Request::Shutdown);
         if let Some(j) = self.join.take() {
@@ -364,14 +395,11 @@ mod tests {
     use super::*;
     use crate::cpu::SingleThread;
     use crate::data::synth::UniformCube;
+    use crate::engine::Session;
     use crate::optim::{Greedy, Optimizer};
 
-    fn spawn_cpu_service() -> EvalService {
-        EvalService::spawn(
-            || Ok(SingleThread::new(UniformCube::new(4, 1.0).generate(64, 3))),
-            8,
-        )
-        .unwrap()
+    fn spawn_cpu_service() -> Service {
+        Service::over(SingleThread::new(UniformCube::new(4, 1.0).generate(64, 3)), 8).unwrap()
     }
 
     #[test]
@@ -422,7 +450,7 @@ mod tests {
     fn greedy_runs_through_service() {
         let svc = spawn_cpu_service();
         let h = svc.handle();
-        let r = Greedy::new(4).maximize(&h).unwrap();
+        let r = Greedy::new(4).run(&mut Session::over(&h)).unwrap();
         assert_eq!(r.exemplars.len(), 4);
         assert!(svc.metrics().requests.get() > 0);
         svc.shutdown();
@@ -449,7 +477,7 @@ mod tests {
 
     #[test]
     fn spawn_failure_propagates() {
-        let r = EvalService::spawn(
+        let r = Service::spawn(
             || -> Result<SingleThread> { Err(Error::Config("nope".into())) },
             4,
         );

@@ -500,25 +500,45 @@ impl<D: Dissimilarity, S: Scalar> Oracle for MultiThread<D, S> {
     }
 }
 
-/// Build a boxed squared-Euclidean CPU oracle for a backend/dtype choice
-/// at runtime — the CLI and examples entry point. `multi` selects
-/// [`MultiThread`] (with `threads`, 0 = auto) over [`SingleThread`];
-/// `dtype` uses the device manifest vocabulary (`f32|f16|bf16`).
-pub fn build_cpu_oracle(ds: Dataset, multi: bool, threads: usize, dtype: Dtype) -> Box<dyn Oracle> {
-    fn st<S: Scalar>(ds: Dataset) -> Box<dyn Oracle> {
-        Box::new(SingleThread::<SqEuclidean, S>::with_precision(ds, SqEuclidean))
+/// Build a boxed CPU oracle for a backend/dtype choice at runtime —
+/// the **one** monomorphization table over (serial | pooled) ×
+/// (`f32` | `f16` | `bf16`), shared by [`build_cpu_oracle`] and the
+/// engine builder. `multi` selects [`MultiThread`] (with `threads`,
+/// 0 = auto) over [`SingleThread`]; `dtype` uses the device manifest
+/// vocabulary.
+pub fn build_cpu_oracle_with<D: Dissimilarity + 'static>(
+    ds: Dataset,
+    dist: D,
+    multi: bool,
+    threads: usize,
+    dtype: Dtype,
+) -> Box<dyn Oracle> {
+    fn st<D: Dissimilarity + 'static, S: Scalar>(ds: Dataset, dist: D) -> Box<dyn Oracle> {
+        Box::new(SingleThread::<D, S>::with_precision(ds, dist))
     }
-    fn mt<S: Scalar>(ds: Dataset, threads: usize) -> Box<dyn Oracle> {
-        Box::new(MultiThread::<SqEuclidean, S>::with_precision(ds, SqEuclidean, threads))
+    fn mt<D: Dissimilarity + 'static, S: Scalar>(
+        ds: Dataset,
+        dist: D,
+        threads: usize,
+    ) -> Box<dyn Oracle> {
+        Box::new(MultiThread::<D, S>::with_precision(ds, dist, threads))
     }
     match (multi, dtype) {
-        (false, Dtype::F32) => st::<f32>(ds),
-        (false, Dtype::F16) => st::<F16>(ds),
-        (false, Dtype::Bf16) => st::<Bf16>(ds),
-        (true, Dtype::F32) => mt::<f32>(ds, threads),
-        (true, Dtype::F16) => mt::<F16>(ds, threads),
-        (true, Dtype::Bf16) => mt::<Bf16>(ds, threads),
+        (false, Dtype::F32) => st::<D, f32>(ds, dist),
+        (false, Dtype::F16) => st::<D, F16>(ds, dist),
+        (false, Dtype::Bf16) => st::<D, Bf16>(ds, dist),
+        (true, Dtype::F32) => mt::<D, f32>(ds, dist, threads),
+        (true, Dtype::F16) => mt::<D, F16>(ds, dist, threads),
+        (true, Dtype::Bf16) => mt::<D, Bf16>(ds, dist, threads),
     }
+}
+
+/// [`build_cpu_oracle_with`] fixed to squared Euclidean (the paper's
+/// benchmark configuration). Backend-internal: end users get the same
+/// dispatch (plus dissimilarity choice and the service wrapper) from
+/// [`crate::engine::Engine::builder`].
+pub fn build_cpu_oracle(ds: Dataset, multi: bool, threads: usize, dtype: Dtype) -> Box<dyn Oracle> {
+    build_cpu_oracle_with(ds, SqEuclidean, multi, threads, dtype)
 }
 
 fn validate_indices(ds: &Dataset, idx: &[usize]) -> Result<()> {
@@ -556,6 +576,7 @@ fn validate_state(ds: &Dataset, state: &DminState) -> Result<()> {
 mod tests {
     use super::*;
     use crate::data::synth::{GaussianBlobs, UniformCube};
+    use crate::engine::Session;
     use crate::optim::{Greedy, Optimizer};
 
     fn small() -> Dataset {
@@ -641,7 +662,7 @@ mod tests {
         let mut state = st.init_state();
         st.commit(&mut state, 0).unwrap();
         st.commit(&mut state, 10).unwrap();
-        let via_state = st.f_of_state(&state);
+        let via_state = st.f_of_state(&state).unwrap();
         let via_eval = st.eval_sets(&[vec![0, 10]]).unwrap()[0];
         assert!((via_state - via_eval).abs() < 1e-5);
     }
@@ -884,8 +905,8 @@ mod tests {
         let ds = GaussianBlobs::new(k, 8, 0.2).generate(400, 2026);
         let f32_oracle = SingleThread::new(ds.clone());
         let f16_oracle = SingleThread::<SqEuclidean, F16>::with_precision(ds, SqEuclidean);
-        let r32 = Greedy::new(k).maximize(&f32_oracle).unwrap();
-        let r16 = Greedy::new(k).maximize(&f16_oracle).unwrap();
+        let r32 = Greedy::new(k).run(&mut Session::over(&f32_oracle)).unwrap();
+        let r16 = Greedy::new(k).run(&mut Session::over(&f16_oracle)).unwrap();
         assert!(
             (r32.value - r16.value).abs() <= 2e-2 * r32.value.abs(),
             "f32 {} vs f16 {}",

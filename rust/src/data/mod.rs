@@ -7,6 +7,8 @@ pub mod rng;
 pub mod shadow;
 pub mod synth;
 
+use std::sync::Arc;
+
 pub use rng::Rng;
 pub use shadow::ShadowSet;
 
@@ -15,12 +17,15 @@ pub use shadow::ShadowSet;
 ///
 /// Row-major storage matches the access pattern of the CPU baseline
 /// (Algorithm 2 walks whole vectors) and of the packer, which gathers
-/// complete rows into the device staging buffer.
+/// complete rows into the device staging buffer. The buffer lives in an
+/// [`Arc`], so `Dataset::clone` is a cheap handle copy (oracles, the
+/// service and GreeDi partitions all keep their own handle) and an
+/// `f32` [`ShadowSet`] can alias the rows instead of duplicating them.
 #[derive(Clone, Debug)]
 pub struct Dataset {
     n: usize,
     d: usize,
-    data: Vec<f32>,
+    data: Arc<Vec<f32>>,
 }
 
 impl Dataset {
@@ -33,7 +38,7 @@ impl Dataset {
                 n * d
             )));
         }
-        Ok(Self { n, d, data })
+        Ok(Self { n, d, data: Arc::new(data) })
     }
 
     /// Build from row slices; all rows must share the same dimensionality.
@@ -52,7 +57,7 @@ impl Dataset {
             }
             data.extend_from_slice(r);
         }
-        Ok(Self { n: rows.len(), d, data })
+        Ok(Self { n: rows.len(), d, data: Arc::new(data) })
     }
 
     /// Number of observations `|V|`.
@@ -74,6 +79,12 @@ impl Dataset {
     /// The whole row-major buffer.
     pub fn flat(&self) -> &[f32] {
         &self.data
+    }
+
+    /// A shared handle to the row buffer — what the copy-free `f32`
+    /// [`ShadowSet`] aliases instead of copying the ground set.
+    pub fn shared_rows(&self) -> Arc<Vec<f32>> {
+        self.data.clone()
     }
 
     /// Squared L2 norm of every row — `d(v, e0)` for the auxiliary
@@ -120,10 +131,11 @@ impl Dataset {
         for &i in idx {
             data.extend_from_slice(self.row(i));
         }
-        Dataset { n: idx.len(), d: self.d, data }
+        Dataset { n: idx.len(), d: self.d, data: Arc::new(data) }
     }
 
-    /// Append another dataset with identical dimensionality.
+    /// Append another dataset with identical dimensionality. Copies the
+    /// buffer first if other handles (clones, aliasing shadows) share it.
     pub fn extend(&mut self, other: &Dataset) -> crate::Result<()> {
         if other.d != self.d {
             return Err(crate::Error::InvalidArgument(format!(
@@ -131,7 +143,7 @@ impl Dataset {
                 self.d, other.d
             )));
         }
-        self.data.extend_from_slice(&other.data);
+        Arc::make_mut(&mut self.data).extend_from_slice(other.flat());
         self.n += other.n;
         Ok(())
     }
@@ -186,5 +198,25 @@ mod tests {
         a.extend(&b).unwrap();
         assert_eq!(a.n(), 2);
         assert_eq!(a.row(1), &[3., 4.]);
+    }
+
+    #[test]
+    fn clones_share_the_row_buffer() {
+        let a = Dataset::from_flat(2, 2, vec![1., 2., 3., 4.]).unwrap();
+        let b = a.clone();
+        assert!(Arc::ptr_eq(&a.shared_rows(), &b.shared_rows()));
+    }
+
+    #[test]
+    fn extend_after_clone_leaves_the_clone_untouched() {
+        let mut a = Dataset::from_flat(1, 2, vec![1., 2.]).unwrap();
+        let snapshot = a.clone();
+        let b = Dataset::from_flat(1, 2, vec![3., 4.]).unwrap();
+        a.extend(&b).unwrap();
+        // copy-on-write: the shared clone keeps the original rows
+        assert_eq!(snapshot.n(), 1);
+        assert_eq!(snapshot.flat(), &[1., 2.]);
+        assert_eq!(a.flat(), &[1., 2., 3., 4.]);
+        assert!(!Arc::ptr_eq(&a.shared_rows(), &snapshot.shared_rows()));
     }
 }

@@ -23,23 +23,39 @@
 //! alongside (see [`Dataset::sq_norms`]) — the shadow only ever feeds
 //! pairwise kernels.
 
+use std::sync::Arc;
+
 use crate::data::Dataset;
 use crate::scalar::{Dtype, Scalar};
 
-/// A (possibly mean-centered) copy of a ground set, quantized to the
+/// Row storage of a [`ShadowSet`]: either an owned quantized copy, or —
+/// for `S = f32` when centering is a bitwise no-op — a shared alias of
+/// the canonical [`Dataset`] buffer (no second `n × d` allocation).
+#[derive(Clone, Debug)]
+enum Rows<S: Scalar> {
+    Owned(Vec<S>),
+    /// Constructed only when `S` is the identity format (`f32`); reads
+    /// go through [`Scalar::from_f32_slice`].
+    Shared(Arc<Vec<f32>>),
+}
+
+/// A (possibly mean-centered) view of a ground set, quantized to the
 /// storage scalar `S`, plus the precomputed per-row squared norms of the
 /// decoded values — the constant half of the Gram identity.
 ///
-/// **Memory:** this is a second `n × d` buffer next to the canonical
-/// `f32` [`Dataset`] the oracle keeps for `d(v, e0)` — half-size for the
-/// 16-bit formats, same-size for `S = f32`. The duplication buys the
-/// centered numerics on every path; a copy-free `f32` mode (sharing the
-/// canonical buffer when centering is skipped) is a ROADMAP item.
+/// **Memory:** for the 16-bit formats this is a half-size buffer next to
+/// the canonical `f32` [`Dataset`] the oracle keeps for `d(v, e0)`. For
+/// `S = f32` the shadow is **copy-free** whenever centering is a bitwise
+/// no-op (the per-coordinate mean is exactly `+0.0` — near-origin or
+/// symmetric data, or `center = false`): quantization is the identity
+/// and subtracting an exact zero changes no bits, so the shadow aliases
+/// the dataset's shared row buffer instead of duplicating the ground
+/// set ([`ShadowSet::aliases_dataset`]).
 #[derive(Clone, Debug)]
 pub struct ShadowSet<S: Scalar> {
     n: usize,
     d: usize,
-    rows: Vec<S>,
+    rows: Rows<S>,
     /// `‖row_i‖²` of the decoded (centered, quantized) row, accumulated
     /// in `f32` in index order — the same reduction order as the kernels'
     /// dot products, so self-distances cancel exactly.
@@ -61,6 +77,45 @@ impl<S: Scalar> ShadowSet<S> {
     pub fn build(ds: &Dataset, center: bool) -> Self {
         let (n, d) = (ds.n(), ds.d());
         let mean = if center { ds.mean() } else { vec![0.0f32; d] };
+
+        // Copy-free fast path: when every mean coordinate is exactly
+        // +0.0, `x - mean[j]` changes no bits, and for the identity
+        // format neither does quantization — so the shadow can alias
+        // the dataset's shared buffer instead of copying it.
+        let noop_center = mean.iter().all(|m| m.to_bits() == 0);
+        if noop_center && S::from_f32_slice(&[]).is_some() {
+            let mut norms = Vec::with_capacity(n);
+            let mut non_finite = 0usize;
+            for i in 0..n {
+                let mut nv = 0.0f32;
+                for &x in ds.row(i) {
+                    non_finite += usize::from(!x.is_finite());
+                    nv += x * x;
+                }
+                norms.push(nv);
+            }
+            if non_finite > 0 {
+                // f32 never overflows its own format: non-finite here
+                // means the raw data itself carries Inf/NaN
+                crate::log_warn!(
+                    "{} of {} ground-set elements are non-finite (raw data \
+                     contains Inf/NaN); distances through these rows are \
+                     undefined",
+                    non_finite,
+                    n * d
+                );
+            }
+            return Self {
+                n,
+                d,
+                rows: Rows::Shared(ds.shared_rows()),
+                norms,
+                mean,
+                centered: center,
+                non_finite,
+            };
+        }
+
         let mut rows = Vec::with_capacity(n * d);
         let mut norms = Vec::with_capacity(n);
         let mut non_finite = 0usize;
@@ -88,7 +143,13 @@ impl<S: Scalar> ShadowSet<S> {
                 S::DTYPE
             );
         }
-        Self { n, d, rows, norms, mean, centered: center, non_finite }
+        Self { n, d, rows: Rows::Owned(rows), norms, mean, centered: center, non_finite }
+    }
+
+    /// True when this shadow shares the dataset's row buffer (the
+    /// copy-free `f32` mode) instead of owning a quantized copy.
+    pub fn aliases_dataset(&self) -> bool {
+        matches!(self.rows, Rows::Shared(_))
     }
 
     /// Number of rows.
@@ -128,7 +189,13 @@ impl<S: Scalar> ShadowSet<S> {
     /// Borrow row `i` in storage precision.
     #[inline]
     pub fn row(&self, i: usize) -> &[S] {
-        &self.rows[i * self.d..(i + 1) * self.d]
+        let span = i * self.d..(i + 1) * self.d;
+        match &self.rows {
+            Rows::Owned(v) => &v[span],
+            Rows::Shared(buf) => {
+                S::from_f32_slice(&buf[span]).expect("shared shadow rows are f32-only")
+            }
+        }
     }
 
     /// Squared norm of decoded row `i` (shadow space: centered when
@@ -183,6 +250,37 @@ mod tests {
         // norms match the dataset's own precomputation exactly (same
         // reduction order)
         assert_eq!(sh.norms(), &ds.sq_norms()[..]);
+        // ... and it is not a copy at all: the rows alias the dataset
+        assert!(sh.aliases_dataset());
+    }
+
+    #[test]
+    fn f32_shadow_aliases_iff_centering_is_a_noop() {
+        // symmetric data: exact zero mean, so centering changes no bits
+        let base = UniformCube::new(3, 1.0).generate(20, 4);
+        let mut rows: Vec<Vec<f32>> = Vec::new();
+        for i in 0..base.n() {
+            rows.push(base.row(i).to_vec());
+            rows.push(base.row(i).iter().map(|x| -x).collect());
+        }
+        let sym = Dataset::from_rows(&rows).unwrap();
+        let aliased: ShadowSet<f32> = ShadowSet::build(&sym, true);
+        assert!(aliased.aliases_dataset());
+        for i in 0..sym.n() {
+            assert_eq!(aliased.row(i), sym.row(i), "row {i}");
+        }
+        assert_eq!(aliased.norms(), &sym.sq_norms()[..]);
+
+        // off-origin data: centering moves the rows, so a real copy is made
+        let off = Dataset::from_flat(2, 1, vec![10.0, 11.0]).unwrap();
+        let copied: ShadowSet<f32> = ShadowSet::build(&off, true);
+        assert!(!copied.aliases_dataset());
+
+        // narrow formats always quantize into their own buffer
+        let h: ShadowSet<F16> = ShadowSet::build(&sym, true);
+        assert!(!h.aliases_dataset());
+        let b: ShadowSet<Bf16> = ShadowSet::build(&sym, false);
+        assert!(!b.aliases_dataset());
     }
 
     #[test]

@@ -88,6 +88,39 @@ pub trait Dissimilarity: Send + Sync {
     }
 }
 
+/// Boxed dissimilarities forward to their contents (preserving every
+/// specialization), so the runtime-dispatched `Box<dyn Dissimilarity>`
+/// the engine builder carries satisfies the oracles' `D: Dissimilarity`
+/// bound.
+impl Dissimilarity for Box<dyn Dissimilarity> {
+    #[inline]
+    fn eval(&self, a: &[f32], b: &[f32]) -> f32 {
+        (**self).eval(a, b)
+    }
+
+    #[inline]
+    fn eval_vs_origin(&self, a: &[f32]) -> f32 {
+        (**self).eval_vs_origin(a)
+    }
+
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+
+    fn factors_through_sq_euclidean(&self) -> bool {
+        (**self).factors_through_sq_euclidean()
+    }
+
+    #[inline]
+    fn post_sq(&self, sq: f32) -> f32 {
+        (**self).post_sq(sq)
+    }
+
+    fn effective_dtype(&self, requested: crate::scalar::Dtype) -> crate::scalar::Dtype {
+        (**self).effective_dtype(requested)
+    }
+}
+
 /// Squared Euclidean distance `|a - b|^2` — the paper's benchmark
 /// dissimilarity, and the only one with a device kernel.
 #[derive(Clone, Copy, Debug, Default)]
@@ -266,6 +299,19 @@ mod tests {
             assert_eq!(Manhattan.effective_dtype(dt), Dtype::F32);
             assert_eq!(CosineDissimilarity.effective_dtype(dt), Dtype::F32);
         }
+    }
+
+    #[test]
+    fn boxed_dissimilarity_preserves_specializations() {
+        let boxed: Box<dyn Dissimilarity> = Box::new(RbfInduced::new(0.7));
+        assert!(boxed.factors_through_sq_euclidean());
+        assert_eq!(boxed.name(), "rbf_induced");
+        let (a, b) = ([0.3f32, -1.2], [1.0f32, 0.5]);
+        assert_eq!(boxed.eval(&a, &b), RbfInduced::new(0.7).eval(&a, &b));
+        assert_eq!(boxed.post_sq(2.0), RbfInduced::new(0.7).post_sq(2.0));
+        assert_eq!(boxed.eval_vs_origin(&a), RbfInduced::new(0.7).eval_vs_origin(&a));
+        let manhattan: Box<dyn Dissimilarity> = Box::new(Manhattan);
+        assert_eq!(manhattan.effective_dtype(crate::scalar::Dtype::F16), crate::scalar::Dtype::F32);
     }
 
     #[test]

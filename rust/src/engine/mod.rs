@@ -1,0 +1,516 @@
+//! The backend-agnostic evaluation engine — one facade over every
+//! oracle in the crate.
+//!
+//! The paper's thesis is that the *interface between optimizer and
+//! evaluation* is the product: optimizers emit batches, backends differ
+//! only in how they burn through them. This module makes that interface
+//! literal. An [`Engine`] is built once per problem:
+//!
+//! ```no_run
+//! use exemcl::data::synth::GaussianBlobs;
+//! use exemcl::engine::{Backend, Engine};
+//! use exemcl::optim::Greedy;
+//! use exemcl::scalar::Dtype;
+//!
+//! let ds = GaussianBlobs::new(8, 100, 1.0).generate(20_000, 42);
+//! let engine = Engine::builder()
+//!     .dataset(ds)
+//!     .backend(Backend::Cpu { threads: 0 })
+//!     .dtype(Dtype::F16)
+//!     .build()
+//!     .unwrap();
+//! let result = engine.run(&Greedy::new(8)).unwrap();
+//! println!("f(S) = {}", result.value);
+//! ```
+//!
+//! and hands out [`Session`]s — each bundling the oracle with its own
+//! cached optimizer state, so the optimizer-facing verbs (`gains`,
+//! `commit`, `commit_many`, `eval_sets`, `value`, `exemplars`) can never
+//! be applied to a mismatched state. Every backend is constructed and
+//! driven the same way:
+//!
+//! * [`Backend::SingleThread`] — the serial Algorithm 2 reference,
+//! * [`Backend::Cpu`] — the pooled, candidate-batched CPU oracle,
+//! * [`Backend::Device`] — the AOT/PJRT evaluator (`xla-backend`
+//!   feature),
+//! * [`Backend::Service`] — any of the above behind the coordinator's
+//!   bounded-queue / request-coalescing executor, serving concurrent
+//!   clients ([`Engine::client`] hands out `Send + Sync` handles).
+//!
+//! Element precision ([`Dtype`]) and dissimilarity are engine-level
+//! knobs; the dtype-quantized shadow, the worker pool and the service
+//! executor are construction details the caller no longer names.
+
+mod session;
+
+pub use session::Session;
+
+use crate::coordinator::{Service, ServiceHandle, ServiceMetrics, DEFAULT_QUEUE_CAPACITY};
+use crate::cpu::build_cpu_oracle_with;
+use crate::data::Dataset;
+use crate::distance::{Dissimilarity, SqEuclidean};
+use crate::optim::oracle::Oracle;
+use crate::optim::{OptimResult, Optimizer};
+use crate::scalar::Dtype;
+use crate::{Error, Result};
+
+/// Which evaluation backend an [`Engine`] builds.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Serial Algorithm 2 on the batched Gram kernels (the reference).
+    SingleThread,
+    /// Pooled multi-thread CPU oracle; `threads = 0` uses all cores.
+    Cpu {
+        /// Worker threads (0 = `available_parallelism`).
+        threads: usize,
+    },
+    /// The AOT/PJRT device evaluator (requires the `xla-backend`
+    /// feature and an artifact directory; squared Euclidean only).
+    Device,
+    /// The coordinator service over an inner backend: a dedicated
+    /// executor thread behind a bounded queue with request coalescing.
+    /// The engine's sessions — and any number of [`Engine::client`]
+    /// handles on other threads — share the executor.
+    Service {
+        /// The backend the executor drives (not itself a service).
+        inner: Box<Backend>,
+    },
+}
+
+impl Backend {
+    /// Shorthand for a service over the pooled CPU backend.
+    pub fn service_over(inner: Backend) -> Backend {
+        Backend::Service { inner: Box::new(inner) }
+    }
+
+    /// This backend with every CPU worker count set to `threads`
+    /// (recurses into service wrappers) — how the CLI merges the
+    /// `eval.threads` key into a parsed backend.
+    pub fn with_threads(self, threads: usize) -> Backend {
+        match self {
+            Backend::Cpu { .. } => Backend::Cpu { threads },
+            Backend::Service { inner } => {
+                Backend::Service { inner: Box::new(inner.with_threads(threads)) }
+            }
+            other => other,
+        }
+    }
+}
+
+impl std::fmt::Display for Backend {
+    /// Round-trips through [`Backend::from_str`], including explicit
+    /// thread counts (`cpu-mt:8`; plain `cpu-mt` means auto).
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Backend::SingleThread => f.write_str("cpu-st"),
+            Backend::Cpu { threads: 0 } => f.write_str("cpu-mt"),
+            Backend::Cpu { threads } => write!(f, "cpu-mt:{threads}"),
+            Backend::Device => f.write_str("device"),
+            Backend::Service { inner } => write!(f, "service:{inner}"),
+        }
+    }
+}
+
+impl std::str::FromStr for Backend {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        if let Some(inner) = s.strip_prefix("service:") {
+            return Ok(Backend::Service { inner: Box::new(inner.parse()?) });
+        }
+        if let Some(t) = s.strip_prefix("cpu-mt:").or_else(|| s.strip_prefix("mt:")) {
+            let threads = t.parse().map_err(|_| {
+                Error::Config(format!("bad thread count {t:?} in backend {s:?}"))
+            })?;
+            return Ok(Backend::Cpu { threads });
+        }
+        match s {
+            "service" => Ok(Backend::service_over(Backend::Cpu { threads: 0 })),
+            "cpu-st" | "st" => Ok(Backend::SingleThread),
+            "cpu-mt" | "mt" => Ok(Backend::Cpu { threads: 0 }),
+            "device" | "xla" => Ok(Backend::Device),
+            other => Err(Error::Config(format!(
+                "unknown backend {other:?} \
+                 (cpu-st|cpu-mt[:threads]|device|service[:cpu-st|cpu-mt|device])"
+            ))),
+        }
+    }
+}
+
+/// Builder for [`Engine`] — see the module docs for the canonical call
+/// chain. Every knob has a default except the dataset.
+pub struct EngineBuilder {
+    dataset: Option<Dataset>,
+    backend: Backend,
+    dtype: Dtype,
+    dist: Box<dyn Dissimilarity>,
+    queue_capacity: usize,
+    artifacts: String,
+    memory_mib: usize,
+}
+
+impl Default for EngineBuilder {
+    fn default() -> Self {
+        Self {
+            dataset: None,
+            backend: Backend::Cpu { threads: 0 },
+            dtype: Dtype::F32,
+            dist: Box::new(SqEuclidean),
+            queue_capacity: DEFAULT_QUEUE_CAPACITY,
+            artifacts: "artifacts".into(),
+            memory_mib: 16 * 1024,
+        }
+    }
+}
+
+impl EngineBuilder {
+    /// The ground set to summarize (required).
+    pub fn dataset(mut self, ds: Dataset) -> Self {
+        self.dataset = Some(ds);
+        self
+    }
+
+    /// Evaluation backend (default: pooled CPU on all cores).
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Element precision of the pairwise kernels (default `f32`).
+    /// Non-factoring dissimilarities run at `f32` regardless
+    /// ([`Dissimilarity::effective_dtype`]).
+    pub fn dtype(mut self, dtype: Dtype) -> Self {
+        self.dtype = dtype;
+        self
+    }
+
+    /// Dissimilarity function (default squared Euclidean — the paper's
+    /// benchmark configuration and the only one with device kernels).
+    pub fn dissimilarity<D: Dissimilarity + 'static>(mut self, dist: D) -> Self {
+        self.dist = Box::new(dist);
+        self
+    }
+
+    /// Bounded request-queue capacity for [`Backend::Service`]
+    /// (default [`DEFAULT_QUEUE_CAPACITY`]); producers block when full.
+    pub fn queue_capacity(mut self, capacity: usize) -> Self {
+        self.queue_capacity = capacity.max(1);
+        self
+    }
+
+    /// AOT artifact directory for [`Backend::Device`].
+    pub fn artifacts(mut self, dir: impl Into<String>) -> Self {
+        self.artifacts = dir.into();
+        self
+    }
+
+    /// Simulated device memory budget in MiB for [`Backend::Device`]
+    /// (drives the §IV-B3 chunk planner).
+    pub fn memory_mib(mut self, mib: usize) -> Self {
+        self.memory_mib = mib;
+        self
+    }
+
+    /// Build the engine: constructs the oracle (and, for
+    /// [`Backend::Service`], spawns the executor thread that owns it).
+    pub fn build(self) -> Result<Engine> {
+        let ds = self
+            .dataset
+            .ok_or_else(|| Error::InvalidArgument("Engine::builder() needs a dataset".into()))?;
+        if ds.n() == 0 {
+            return Err(Error::EmptyDataset);
+        }
+        let inner = match self.backend.clone() {
+            Backend::Service { inner } => {
+                if matches!(*inner, Backend::Service { .. }) {
+                    return Err(Error::InvalidArgument(
+                        "nested service backends are not supported".into(),
+                    ));
+                }
+                let (ds2, dist, dtype) = (ds.clone(), self.dist, self.dtype);
+                let (artifacts, memory_mib) = (self.artifacts, self.memory_mib);
+                let service = Service::spawn(
+                    move || build_oracle(&inner, ds2, dist, dtype, &artifacts, memory_mib),
+                    self.queue_capacity,
+                )?;
+                EngineInner::Service(service)
+            }
+            direct => EngineInner::Direct(build_oracle(
+                &direct,
+                ds.clone(),
+                self.dist,
+                self.dtype,
+                &self.artifacts,
+                self.memory_mib,
+            )?),
+        };
+        Ok(Engine { dataset: ds, dtype: self.dtype, backend: self.backend, inner })
+    }
+}
+
+enum EngineInner {
+    /// The engine owns the oracle on the caller's thread.
+    Direct(Box<dyn Oracle>),
+    /// The oracle lives on the service's executor thread; the engine
+    /// talks to it through handles.
+    Service(Service),
+}
+
+/// A built evaluation engine: owns (or fronts) exactly one oracle and
+/// hands out [`Session`]s over it.
+pub struct Engine {
+    dataset: Dataset,
+    dtype: Dtype,
+    backend: Backend,
+    inner: EngineInner,
+}
+
+impl Engine {
+    /// Start building an engine.
+    pub fn builder() -> EngineBuilder {
+        EngineBuilder::default()
+    }
+
+    /// Open a fresh session (empty summary) over this engine's oracle.
+    pub fn session(&self) -> Session<'_> {
+        match &self.inner {
+            EngineInner::Direct(o) => Session::over(o.as_ref()),
+            EngineInner::Service(s) => Session::over(s.handle_ref()),
+        }
+    }
+
+    /// Run an optimizer in a fresh session and return its result.
+    pub fn run(&self, optimizer: &dyn Optimizer) -> Result<OptimResult> {
+        optimizer.run(&mut self.session())
+    }
+
+    /// The oracle behind this engine (backend escape hatch; sessions are
+    /// the supported way to drive it).
+    pub fn oracle(&self) -> &dyn Oracle {
+        match &self.inner {
+            EngineInner::Direct(o) => o.as_ref(),
+            EngineInner::Service(s) => s.handle_ref(),
+        }
+    }
+
+    /// For [`Backend::Service`]: a cheap-to-clone `Send + Sync` client
+    /// handle, for driving the shared executor from other threads
+    /// (GreeDi workers, concurrent optimizers). `None` for direct
+    /// backends.
+    pub fn client(&self) -> Option<ServiceHandle> {
+        match &self.inner {
+            EngineInner::Direct(_) => None,
+            EngineInner::Service(s) => Some(s.handle()),
+        }
+    }
+
+    /// Service metrics (requests, coalesced batches, latency) when the
+    /// backend is a service.
+    pub fn metrics(&self) -> Option<&ServiceMetrics> {
+        match &self.inner {
+            EngineInner::Direct(_) => None,
+            EngineInner::Service(s) => Some(s.metrics()),
+        }
+    }
+
+    /// The ground set this engine summarizes.
+    pub fn dataset(&self) -> &Dataset {
+        &self.dataset
+    }
+
+    /// The element precision requested at build time (backends may
+    /// downgrade for non-factoring dissimilarities; see the oracle's
+    /// [`Engine::name`]).
+    pub fn dtype(&self) -> Dtype {
+        self.dtype
+    }
+
+    /// The backend this engine was built with.
+    pub fn backend(&self) -> &Backend {
+        &self.backend
+    }
+
+    /// The backing oracle's descriptive name (backend/dissimilarity/
+    /// effective dtype).
+    pub fn name(&self) -> String {
+        self.oracle().name()
+    }
+}
+
+/// Construct a direct (non-service) oracle for a backend choice.
+fn build_oracle(
+    backend: &Backend,
+    ds: Dataset,
+    dist: Box<dyn Dissimilarity>,
+    dtype: Dtype,
+    artifacts: &str,
+    memory_mib: usize,
+) -> Result<Box<dyn Oracle>> {
+    match backend {
+        Backend::SingleThread => Ok(build_cpu_oracle_with(ds, dist, false, 0, dtype)),
+        Backend::Cpu { threads } => Ok(build_cpu_oracle_with(ds, dist, true, *threads, dtype)),
+        Backend::Device => device_oracle(ds, dist, dtype, artifacts, memory_mib),
+        Backend::Service { .. } => Err(Error::InvalidArgument(
+            "nested service backends are not supported".into(),
+        )),
+    }
+}
+
+#[cfg(feature = "xla-backend")]
+fn device_oracle(
+    ds: Dataset,
+    dist: Box<dyn Dissimilarity>,
+    dtype: Dtype,
+    artifacts: &str,
+    memory_mib: usize,
+) -> Result<Box<dyn Oracle>> {
+    use crate::runtime::{DeviceEvaluator, EvalConfig};
+    if dist.name() != SqEuclidean.name() {
+        return Err(Error::InvalidArgument(format!(
+            "the device backend has kernels for squared Euclidean only, got {:?}",
+            dist.name()
+        )));
+    }
+    let mut cfg = EvalConfig::for_dtype(dtype);
+    cfg.memory.total_bytes = memory_mib * (1 << 20);
+    Ok(Box::new(DeviceEvaluator::from_dir(artifacts, &ds, cfg)?))
+}
+
+#[cfg(not(feature = "xla-backend"))]
+fn device_oracle(
+    _ds: Dataset,
+    _dist: Box<dyn Dissimilarity>,
+    _dtype: Dtype,
+    _artifacts: &str,
+    _memory_mib: usize,
+) -> Result<Box<dyn Oracle>> {
+    Err(Error::Config(
+        "this binary was built without the `xla-backend` feature; \
+         use Backend::SingleThread, Backend::Cpu or a service over them"
+            .into(),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::UniformCube;
+    use crate::distance::Manhattan;
+
+    fn small() -> Dataset {
+        UniformCube::new(4, 1.0).generate(48, 7)
+    }
+
+    #[test]
+    fn backend_parsing_and_display_roundtrip() {
+        assert_eq!("cpu-st".parse::<Backend>().unwrap(), Backend::SingleThread);
+        assert_eq!("st".parse::<Backend>().unwrap(), Backend::SingleThread);
+        assert_eq!("mt".parse::<Backend>().unwrap(), Backend::Cpu { threads: 0 });
+        assert_eq!("device".parse::<Backend>().unwrap(), Backend::Device);
+        assert_eq!("xla".parse::<Backend>().unwrap(), Backend::Device);
+        assert_eq!(
+            "service".parse::<Backend>().unwrap(),
+            Backend::service_over(Backend::Cpu { threads: 0 })
+        );
+        assert_eq!(
+            "service:cpu-st".parse::<Backend>().unwrap(),
+            Backend::service_over(Backend::SingleThread)
+        );
+        assert_eq!(
+            "service:device".parse::<Backend>().unwrap(),
+            Backend::service_over(Backend::Device)
+        );
+        assert_eq!("cpu-mt:3".parse::<Backend>().unwrap(), Backend::Cpu { threads: 3 });
+        assert_eq!(
+            "service:mt:5".parse::<Backend>().unwrap(),
+            Backend::service_over(Backend::Cpu { threads: 5 })
+        );
+        assert!("gpu".parse::<Backend>().is_err());
+        assert!("cpu-mt:lots".parse::<Backend>().is_err());
+        for s in ["cpu-st", "cpu-mt", "cpu-mt:3", "device", "service:cpu-mt", "service:cpu-mt:8"] {
+            assert_eq!(s.parse::<Backend>().unwrap().to_string(), s);
+        }
+    }
+
+    #[test]
+    fn with_threads_reaches_into_services() {
+        let b = "service:mt".parse::<Backend>().unwrap().with_threads(3);
+        assert_eq!(b, Backend::service_over(Backend::Cpu { threads: 3 }));
+        assert_eq!(Backend::SingleThread.with_threads(5), Backend::SingleThread);
+    }
+
+    #[test]
+    fn builder_requires_a_dataset() {
+        assert!(Engine::builder().build().is_err());
+    }
+
+    #[test]
+    fn builder_rejects_empty_datasets() {
+        let ds = Dataset::from_flat(0, 3, vec![]).unwrap();
+        let r = Engine::builder().dataset(ds).build();
+        assert!(matches!(r, Err(Error::EmptyDataset)));
+    }
+
+    #[test]
+    fn builder_rejects_nested_services() {
+        let b = Backend::service_over(Backend::service_over(Backend::SingleThread));
+        let r = Engine::builder().dataset(small()).backend(b).build();
+        assert!(r.is_err());
+    }
+
+    #[cfg(not(feature = "xla-backend"))]
+    #[test]
+    fn device_backend_errors_without_the_feature() {
+        let r = Engine::builder().dataset(small()).backend(Backend::Device).build();
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn direct_backends_report_dtype_and_dissimilarity() {
+        for dt in Dtype::all() {
+            let e = Engine::builder()
+                .dataset(small())
+                .backend(Backend::SingleThread)
+                .dtype(dt)
+                .build()
+                .unwrap();
+            assert!(e.name().contains(dt.as_str()), "{}", e.name());
+            assert_eq!(e.dtype(), dt);
+            assert!(e.client().is_none());
+            assert!(e.metrics().is_none());
+        }
+        // non-factoring dissimilarities downgrade to the direct f32 path
+        let e = Engine::builder()
+            .dataset(small())
+            .backend(Backend::Cpu { threads: 2 })
+            .dtype(Dtype::F16)
+            .dissimilarity(Manhattan)
+            .build()
+            .unwrap();
+        assert!(e.name().contains("manhattan"), "{}", e.name());
+        assert!(e.name().contains("f32"), "{}", e.name());
+    }
+
+    #[test]
+    fn service_engine_serves_sessions_and_clients() {
+        let e = Engine::builder()
+            .dataset(small())
+            .backend(Backend::service_over(Backend::SingleThread))
+            .queue_capacity(8)
+            .build()
+            .unwrap();
+        assert!(e.name().starts_with("service["), "{}", e.name());
+        let direct = Engine::builder()
+            .dataset(small())
+            .backend(Backend::SingleThread)
+            .build()
+            .unwrap();
+        let sets = vec![vec![0usize, 3], vec![9, 11, 20]];
+        let via_service = e.session().eval_sets(&sets).unwrap();
+        let via_direct = direct.session().eval_sets(&sets).unwrap();
+        assert_eq!(via_service, via_direct);
+        let client = e.client().expect("service engines hand out clients");
+        assert_eq!(client.eval_sets(&sets).unwrap(), via_direct);
+        assert!(e.metrics().unwrap().requests.get() >= 2);
+    }
+}

@@ -1,0 +1,219 @@
+//! The optimizer-facing session: one oracle plus *its own* cached
+//! [`DminState`], bundled so the optimizer-aware verbs can never be
+//! applied to a mismatched state.
+//!
+//! The raw [`Oracle`] API hands the caller a bare `DminState` and trusts
+//! every subsequent `marginal_gains`/`commit`/`f_value` call to pass the
+//! matching one back — an invariant nothing enforced. A [`Session`] owns
+//! the pairing: all verbs read or mutate the session's private state, so
+//! "gains against the wrong dmin" is unrepresentable. Sessions are cheap
+//! to [`fork`](Session::fork) (sieve birth, GreeDi partitions) and all
+//! forks of one session share a single evaluation counter, which is what
+//! [`crate::optim::OptimResult::evaluations`] reports.
+
+use std::cell::Cell;
+use std::rc::Rc;
+
+use crate::data::Dataset;
+use crate::optim::oracle::{DminState, Oracle};
+use crate::Result;
+
+/// A live evaluation session against one oracle.
+///
+/// Obtained from [`crate::engine::Engine::session`], or directly via
+/// [`Session::over`] when holding an oracle (backend code, tests). The
+/// session starts at the empty summary `S = {}` (`dmin_i = d(v_i, e0)`).
+pub struct Session<'a> {
+    oracle: &'a dyn Oracle,
+    state: DminState,
+    /// Shared across forks: total gain entries + set evaluations issued.
+    evals: Rc<Cell<u64>>,
+}
+
+impl<'a> Session<'a> {
+    /// Open a fresh session over an oracle (empty summary, zero counter).
+    pub fn over(oracle: &'a dyn Oracle) -> Self {
+        Self { oracle, state: oracle.init_state(), evals: Rc::new(Cell::new(0)) }
+    }
+
+    /// The oracle this session drives (for wrapping, e.g. GreeDi's
+    /// partition restriction — not for hand-carrying state around it).
+    pub fn oracle(&self) -> &'a dyn Oracle {
+        self.oracle
+    }
+
+    /// The ground set being summarized.
+    pub fn dataset(&self) -> &Dataset {
+        self.oracle.dataset()
+    }
+
+    /// Ground-set size `|V|`.
+    pub fn n(&self) -> usize {
+        self.oracle.dataset().n()
+    }
+
+    /// A new session over the same oracle with a **copy** of the current
+    /// state. Forks share the evaluation counter with their parent.
+    pub fn fork(&self) -> Session<'a> {
+        Session { oracle: self.oracle, state: self.state.clone(), evals: self.evals.clone() }
+    }
+
+    /// A new session over the same oracle starting from the empty
+    /// summary, sharing the evaluation counter with `self`.
+    pub fn fresh(&self) -> Session<'a> {
+        Session {
+            oracle: self.oracle,
+            state: self.oracle.init_state(),
+            evals: self.evals.clone(),
+        }
+    }
+
+    /// Reset this session to the empty summary (counter keeps running).
+    pub fn reset(&mut self) {
+        self.state = self.oracle.init_state();
+    }
+
+    /// Marginal gains `f(S ∪ {c}) - f(S)` for every candidate, against
+    /// this session's cached state (the optimizer-aware fast path).
+    pub fn gains(&self, candidates: &[usize]) -> Result<Vec<f32>> {
+        let g = self.oracle.marginal_gains(&self.state, candidates)?;
+        self.evals.set(self.evals.get() + g.len() as u64);
+        Ok(g)
+    }
+
+    /// Commit one exemplar into the summary.
+    pub fn commit(&mut self, idx: usize) -> Result<()> {
+        self.oracle.commit(&mut self.state, idx)
+    }
+
+    /// Commit a batch of exemplars in one fused backend pass.
+    pub fn commit_many(&mut self, idxs: &[usize]) -> Result<()> {
+        self.oracle.commit_many(&mut self.state, idxs)
+    }
+
+    /// Evaluate `f(S)` for arbitrary index sets (the multiset problem;
+    /// independent of this session's own summary).
+    pub fn eval_sets(&self, sets: &[Vec<usize>]) -> Result<Vec<f32>> {
+        let v = self.oracle.eval_sets(sets)?;
+        self.evals.set(self.evals.get() + v.len() as u64);
+        Ok(v)
+    }
+
+    /// `f(S)` of the current summary.
+    pub fn value(&self) -> Result<f32> {
+        self.oracle.f_of_state(&self.state)
+    }
+
+    /// Committed exemplars, in commit order.
+    pub fn exemplars(&self) -> &[usize] {
+        &self.state.exemplars
+    }
+
+    /// Number of committed exemplars `|S|`.
+    pub fn len(&self) -> usize {
+        self.state.len()
+    }
+
+    /// True if no exemplar has been committed.
+    pub fn is_empty(&self) -> bool {
+        self.state.is_empty()
+    }
+
+    /// Total gain entries + set evaluations issued through this session
+    /// and all of its forks.
+    pub fn evaluations(&self) -> u64 {
+        self.evals.get()
+    }
+
+    /// Read-only view of the cached state (diagnostics, backend tests).
+    pub fn state(&self) -> &DminState {
+        &self.state
+    }
+
+    /// Tear the session apart into its raw state (legacy interop).
+    pub fn into_state(self) -> DminState {
+        self.state
+    }
+
+    /// Adopt another session's summary (same oracle assumed) — how the
+    /// sieve optimizers publish their winning sieve into the caller's
+    /// session.
+    pub(crate) fn clone_state_from(&mut self, other: &Session<'_>) {
+        self.state = other.state.clone();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpu::SingleThread;
+    use crate::data::synth::UniformCube;
+
+    fn oracle() -> SingleThread {
+        SingleThread::new(UniformCube::new(3, 1.0).generate(40, 5))
+    }
+
+    #[test]
+    fn session_mirrors_manual_state_threading() {
+        let o = oracle();
+        let mut session = Session::over(&o);
+
+        let mut state = o.init_state();
+        let cands = [0usize, 7, 21];
+        assert_eq!(
+            session.gains(&cands).unwrap(),
+            o.marginal_gains(&state, &cands).unwrap()
+        );
+        session.commit(7).unwrap();
+        o.commit(&mut state, 7).unwrap();
+        assert_eq!(session.exemplars(), &[7]);
+        assert_eq!(session.value().unwrap(), o.f_of_state(&state).unwrap());
+        assert_eq!(
+            session.gains(&cands).unwrap(),
+            o.marginal_gains(&state, &cands).unwrap()
+        );
+        assert_eq!(session.state().dmin, state.dmin);
+    }
+
+    #[test]
+    fn forks_copy_state_and_share_the_counter() {
+        let o = oracle();
+        let mut a = Session::over(&o);
+        a.commit(3).unwrap();
+        let mut b = a.fork();
+        assert_eq!(b.exemplars(), &[3]);
+        b.commit(9).unwrap();
+        // the fork diverged; the parent did not move
+        assert_eq!(a.exemplars(), &[3]);
+        assert_eq!(b.exemplars(), &[3, 9]);
+        // counter is shared
+        let before = a.evaluations();
+        b.gains(&[1, 2]).unwrap();
+        assert_eq!(a.evaluations(), before + 2);
+        // fresh() starts empty but keeps counting
+        let f = b.fresh();
+        assert!(f.is_empty());
+        f.gains(&[4]).unwrap();
+        assert_eq!(a.evaluations(), before + 3);
+    }
+
+    #[test]
+    fn reset_returns_to_the_empty_summary() {
+        let o = oracle();
+        let mut s = Session::over(&o);
+        s.commit_many(&[1, 2]).unwrap();
+        assert_eq!(s.len(), 2);
+        s.reset();
+        assert!(s.is_empty());
+        assert_eq!(s.state().dmin, o.init_state().dmin);
+    }
+
+    #[test]
+    fn empty_dataset_value_is_a_typed_error() {
+        use crate::data::Dataset;
+        let ds = Dataset::from_flat(0, 3, vec![]).unwrap();
+        let o = SingleThread::new(ds);
+        let s = Session::over(&o);
+        assert!(matches!(s.value(), Err(crate::Error::EmptyDataset)));
+    }
+}

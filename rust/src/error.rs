@@ -40,6 +40,11 @@ pub enum Error {
     /// Manifest file is missing or malformed.
     Manifest(String),
 
+    /// The ground set is empty (`n = 0`). Definition 5 normalizes by
+    /// `n`, so no function value exists; rejected at `Engine::build`
+    /// and by `DminState::f_value` instead of yielding NaN.
+    EmptyDataset,
+
     /// Invalid request shape or arguments.
     InvalidArgument(String),
 
@@ -66,6 +71,9 @@ impl fmt::Display for Error {
                  budget {free_bytes}B — use lower precision or a larger memory budget"
             ),
             Error::Manifest(msg) => write!(f, "manifest error: {msg}"),
+            Error::EmptyDataset => {
+                write!(f, "empty dataset: the ground set has no observations (n = 0)")
+            }
             Error::InvalidArgument(msg) => write!(f, "invalid argument: {msg}"),
             Error::Config(msg) => write!(f, "config error: {msg}"),
             Error::Service(msg) => write!(f, "service unavailable: {msg}"),
@@ -109,6 +117,7 @@ mod tests {
             Error::InvalidArgument("k must be positive".into()).to_string(),
             "invalid argument: k must be positive"
         );
+        assert!(Error::EmptyDataset.to_string().contains("n = 0"));
         let oom = Error::ChunkOom { per_set_bytes: 10, free_bytes: 5 };
         assert!(oom.to_string().contains("10B"));
         assert!(oom.to_string().contains("5B"));

@@ -22,17 +22,54 @@
 //!
 //! ## Quick start
 //!
+//! Every backend is built and driven the same way: an
+//! [`engine::Engine`] owns the evaluation oracle, a [`engine::Session`]
+//! bundles it with the cached optimizer state, and optimizers drive
+//! sessions.
+//!
 //! ```no_run
-//! use exemcl::cpu::MultiThread;
 //! use exemcl::data::synth::GaussianBlobs;
-//! use exemcl::optim::{Greedy, Optimizer};
+//! use exemcl::engine::{Backend, Engine};
+//! use exemcl::optim::Greedy;
 //!
 //! let ds = GaussianBlobs::new(8, 100, 1.0).generate(20_000, 42);
-//! // persistent worker pool + batched Gram kernels (0 = all cores)
-//! let eval = MultiThread::new(ds, 0);
-//! let result = Greedy::new(8).maximize(&eval).unwrap();
+//! let engine = Engine::builder()
+//!     .dataset(ds)
+//!     .backend(Backend::Cpu { threads: 0 }) // pooled CPU, all cores
+//!     .build()
+//!     .unwrap();
+//! let result = engine.run(&Greedy::new(8)).unwrap();
 //! println!("f(S) = {}", result.value);
 //! ```
+//!
+//! Swap `Backend::Cpu { .. }` for [`engine::Backend::SingleThread`],
+//! [`engine::Backend::Device`] (with `xla-backend`), or
+//! [`engine::Backend::Service`] (the bounded-queue coalescing executor
+//! serving concurrent clients via [`engine::Engine::client`]) without
+//! touching optimizer code. Element precision is a builder knob too:
+//! `.dtype(Dtype::F16)` quantizes the pairwise kernels' operands while
+//! accumulating in `f32` (see [`scalar`]).
+//!
+//! Fine-grained control — batched multiset evaluation, marginal gains,
+//! incremental commits — lives on [`engine::Session`]:
+//!
+//! ```no_run
+//! # use exemcl::data::synth::GaussianBlobs;
+//! # use exemcl::engine::Engine;
+//! # let ds = GaussianBlobs::new(4, 8, 1.0).generate(500, 42);
+//! let engine = Engine::builder().dataset(ds).build().unwrap();
+//! let mut session = engine.session();
+//! let values = session.eval_sets(&[vec![0, 1], vec![5, 6, 7]]).unwrap();
+//! let gains = session.gains(&[10, 20, 30]).unwrap();
+//! session.commit(20).unwrap();
+//! println!("f(S) = {}", session.value().unwrap());
+//! ```
+//!
+//! Driving a raw [`optim::Oracle`] with a hand-carried
+//! [`optim::DminState`] (the pre-0.3 API) still compiles behind a
+//! deprecated shim ([`optim::Optimizer::maximize`]) and remains the
+//! contract backends implement — but new user code should build an
+//! engine.
 
 pub mod bench;
 pub mod chunk;
@@ -42,6 +79,7 @@ pub mod coordinator;
 pub mod cpu;
 pub mod data;
 pub mod distance;
+pub mod engine;
 pub mod error;
 pub mod index;
 pub mod logging;
@@ -51,4 +89,5 @@ pub mod runtime;
 pub mod scalar;
 pub mod testkit;
 
+pub use engine::{Backend, Engine, Session};
 pub use error::{Error, Result};

@@ -8,27 +8,23 @@
 //! ```
 //!
 //! Every `--section.key=value` flag overrides the config file; see
-//! [`exemcl::config::AppConfig`] for the keys.
+//! [`exemcl::config::AppConfig`] for the keys. `solve` builds an
+//! [`exemcl::engine::Engine`] from the config — the same facade the
+//! examples and library users drive — so all backends (`cpu-st`,
+//! `cpu-mt`, `device`, `service[:inner]`) go through one path.
 
 use std::time::Instant;
 
-#[cfg(feature = "xla-backend")]
-use exemcl::chunk::MemoryModel;
 use exemcl::clustering;
-use exemcl::config::{AppConfig, Backend, RawConfig};
-#[cfg(feature = "xla-backend")]
-use exemcl::coordinator::EvalService;
-use exemcl::cpu::build_cpu_oracle;
+use exemcl::config::{AppConfig, RawConfig};
 use exemcl::data::csv::{self, CsvOptions};
 use exemcl::data::synth::{GaussianBlobs, Rings, UniformCube};
 use exemcl::data::Dataset;
 use exemcl::optim::{
-    Greedy, LazyGreedy, OptimResult, Optimizer, Oracle, Salsa, SieveStreaming, SieveStreamingPP,
-    StochasticGreedy, ThreeSieves,
+    Greedy, LazyGreedy, Optimizer, Salsa, SieveStreaming, SieveStreamingPP, StochasticGreedy,
+    ThreeSieves,
 };
 use exemcl::runtime::ArtifactRegistry;
-#[cfg(feature = "xla-backend")]
-use exemcl::runtime::{DeviceEvaluator, EvalConfig};
 use exemcl::{Error, Result};
 
 fn usage() -> ! {
@@ -36,10 +32,11 @@ fn usage() -> ! {
         "usage: exemcl <solve|info|bench-hint> [--config FILE] [--section.key=value ...]\n\
          keys: data.n data.d data.generator data.blobs data.seed data.csv\n\
                optimizer.name optimizer.k\n\
-               eval.backend (cpu-st|cpu-mt|device) eval.dtype (f32|f16|bf16)\n\
-               eval.artifacts eval.threads eval.memory_mib\n\
-         shorthand: --dtype f16 == --eval.dtype=f16 (element precision for\n\
-               CPU and device oracles alike)"
+               eval.backend (cpu-st|cpu-mt|device|service[:cpu-st|cpu-mt|device])\n\
+               eval.dtype (f32|f16|bf16) eval.artifacts eval.threads\n\
+               eval.memory_mib eval.queue\n\
+         shorthand: --dtype f16 == --eval.dtype=f16, --backend service ==\n\
+               --eval.backend=service (bounded-queue service over cpu-mt)"
     );
     std::process::exit(2);
 }
@@ -140,20 +137,13 @@ fn cmd_solve(cfg: &AppConfig) -> Result<()> {
     let optimizer = build_optimizer(cfg)?;
     println!("optimizer: {}", optimizer.name());
 
+    // one facade for every backend: the engine owns the oracle (and,
+    // for service backends, the executor thread)
+    let engine = cfg.engine(ds.clone())?;
+    println!("backend: {}", engine.name());
+
     let t0 = Instant::now();
-    let result = match cfg.backend {
-        Backend::CpuSt | Backend::CpuMt => {
-            let oracle = build_cpu_oracle(
-                ds.clone(),
-                cfg.backend == Backend::CpuMt,
-                cfg.threads,
-                cfg.dtype,
-            );
-            println!("backend: {}", oracle.name());
-            optimizer.maximize(oracle.as_ref())?
-        }
-        Backend::Device => solve_device(cfg, &ds, optimizer.as_ref())?,
-    };
+    let result = engine.run(optimizer.as_ref())?;
     let elapsed = t0.elapsed();
 
     println!("\nf(S) = {:.6}", result.value);
@@ -164,6 +154,9 @@ fn cmd_solve(cfg: &AppConfig) -> Result<()> {
     }
     println!("oracle evaluations: {}", result.evaluations);
     println!("wall-clock: {:.3}s", elapsed.as_secs_f64());
+    if let Some(m) = engine.metrics() {
+        println!("service: {}", m.summary());
+    }
 
     if !result.exemplars.is_empty() {
         let c = clustering::assign(&ds, &result.exemplars);
@@ -174,50 +167,6 @@ fn cmd_solve(cfg: &AppConfig) -> Result<()> {
         );
     }
     Ok(())
-}
-
-/// Run the optimizer against the PJRT device backend through the
-/// evaluation service (the service pins the non-`Send` device to its
-/// executor thread).
-#[cfg(feature = "xla-backend")]
-fn solve_device(cfg: &AppConfig, ds: &Dataset, optimizer: &dyn Optimizer) -> Result<OptimResult> {
-    let artifacts = cfg.artifacts.clone();
-    let dtype = cfg.dtype.to_string();
-    let mem = MemoryModel {
-        total_bytes: cfg.memory_mib * (1 << 20),
-        bytes_per_elem: cfg.dtype.bytes_per_elem(),
-        ..MemoryModel::default()
-    };
-    let ds2 = ds.clone();
-    let svc = EvalService::spawn(
-        move || {
-            DeviceEvaluator::from_dir(
-                &artifacts,
-                &ds2,
-                EvalConfig { dtype, memory: mem, ..EvalConfig::default() },
-            )
-        },
-        exemcl::coordinator::DEFAULT_QUEUE_CAPACITY,
-    )?;
-    let handle = svc.handle();
-    println!("backend: {}", exemcl::optim::Oracle::name(&handle));
-    let r = optimizer.maximize(&handle)?;
-    println!("service: {}", svc.metrics().summary());
-    svc.shutdown();
-    Ok(r)
-}
-
-#[cfg(not(feature = "xla-backend"))]
-fn solve_device(
-    _cfg: &AppConfig,
-    _ds: &Dataset,
-    _optimizer: &dyn Optimizer,
-) -> Result<OptimResult> {
-    Err(Error::Config(
-        "this binary was built without the `xla-backend` feature; \
-         use eval.backend=cpu-st or cpu-mt"
-            .into(),
-    ))
 }
 
 fn cmd_info(cfg: &AppConfig) -> Result<()> {

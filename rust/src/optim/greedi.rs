@@ -6,16 +6,18 @@
 //! (round 2). Guarantee: `f(S) >= (1-1/e)²/min(m,k)` of OPT in general,
 //! near-greedy in practice on random partitions.
 //!
-//! This is the multi-client showcase for the coordinator: round 1 runs
-//! each worker on its own OS thread against a cloned
-//! [`crate::coordinator::ServiceHandle`], so partition greedies interleave
-//! on the device executor and exercise queueing/batching. Round-1 gains
-//! are computed *restricted to the worker's partition* via
-//! [`PartitionOracle`], which masks foreign points out of the dmin state.
+//! This is the multi-client showcase for the coordinator: round 1 of
+//! [`GreeDi::run_threaded`] runs each worker on its own OS thread
+//! against a cloned [`crate::coordinator::ServiceHandle`] (what
+//! [`crate::engine::Engine::client`] hands out for service backends),
+//! so partition greedies interleave on the shared executor and exercise
+//! queueing/batching. Round-1 gains are computed *restricted to the
+//! worker's partition* via [`PartitionOracle`], which masks foreign
+//! points out of the dmin state.
 
 use super::greedy::Greedy;
 use super::oracle::{DminState, Oracle};
-use super::{OptimResult, Optimizer};
+use super::{OptimResult, Optimizer, Session};
 use crate::data::{Dataset, Rng};
 use crate::{Error, Result};
 
@@ -61,14 +63,15 @@ impl<O: Oracle + ?Sized> Oracle for PartitionOracle<'_, O> {
     }
 
     fn eval_sets(&self, sets: &[Vec<usize>]) -> Result<Vec<f32>> {
-        // evaluate on the full oracle, then correct is impossible without
-        // a partition-restricted kernel; partition evaluation goes
-        // through the state path instead (one batched commit per set).
+        // evaluating on the full oracle then correcting is impossible
+        // without a partition-restricted kernel; partition evaluation
+        // goes through the state path instead (one batched commit per
+        // set).
         let mut out = Vec::with_capacity(sets.len());
         for set in sets {
             let mut state = self.init_state();
             self.commit_many(&mut state, set)?;
-            out.push(self.f_of_state(&state));
+            out.push(self.f_of_state(&state)?);
         }
         Ok(out)
     }
@@ -122,23 +125,9 @@ impl GreeDi {
         Self { k, workers: workers.max(1), seed }
     }
 
-    /// Round 1 on a single thread (for non-`Sync` oracles); round 2 on
-    /// the same oracle.
-    pub fn run_local(&self, oracle: &dyn Oracle) -> Result<OptimResult> {
-        let partitions = self.partition(oracle.dataset().n());
-        let mut pool = Vec::new();
-        let mut evaluations = 0u64;
-        for members in partitions {
-            let part = PartitionOracle::new(oracle, members)?;
-            let r = Greedy::new(self.k).maximize(&part)?;
-            evaluations += r.evaluations;
-            pool.extend(r.exemplars);
-        }
-        self.final_round(oracle, pool, evaluations)
-    }
-
     /// Round 1 with one OS thread per partition — requires a `Send +
-    /// Sync + Clone` oracle handle (the coordinator's `ServiceHandle`).
+    /// Sync + Clone` oracle handle (the service's `ServiceHandle`, i.e.
+    /// [`crate::engine::Engine::client`]).
     pub fn run_threaded<O>(&self, oracle: &O) -> Result<OptimResult>
     where
         O: Oracle + Clone + Send + Sync + 'static,
@@ -154,7 +143,7 @@ impl GreeDi {
                     let o = oracle.clone();
                     scope.spawn(move || {
                         let part = PartitionOracle::new(&o, members)?;
-                        Greedy::new(k).maximize(&part)
+                        Greedy::new(k).run(&mut Session::over(&part))
                     })
                 })
                 .collect();
@@ -168,7 +157,10 @@ impl GreeDi {
             evaluations += r.evaluations;
             pool.extend(r.exemplars);
         }
-        self.final_round(oracle, pool, evaluations)
+        let mut session = Session::over(oracle);
+        let mut result = self.final_round(&mut session, pool)?;
+        result.evaluations += evaluations;
+        Ok(result)
     }
 
     fn partition(&self, n: usize) -> Vec<Vec<usize>> {
@@ -182,24 +174,19 @@ impl GreeDi {
         parts
     }
 
-    fn final_round(
-        &self,
-        oracle: &dyn Oracle,
-        mut pool: Vec<usize>,
-        mut evaluations: u64,
-    ) -> Result<OptimResult> {
+    /// Round 2: greedy over the pooled candidates on the full oracle.
+    /// `result.evaluations` covers only this round; callers add round 1.
+    fn final_round(&self, session: &mut Session<'_>, mut pool: Vec<usize>) -> Result<OptimResult> {
+        let evals0 = session.evaluations();
         pool.sort_unstable();
         pool.dedup();
-        // round 2: greedy over the pooled candidates on the full oracle
-        let mut state = oracle.init_state();
         let mut curve = Vec::with_capacity(self.k);
         let mut remaining = pool;
         for _ in 0..self.k.min(remaining.len().max(1)) {
             if remaining.is_empty() {
                 break;
             }
-            let gains = oracle.marginal_gains(&state, &remaining)?;
-            evaluations += gains.len() as u64;
+            let gains = session.gains(&remaining)?;
             let best = gains
                 .iter()
                 .enumerate()
@@ -207,21 +194,37 @@ impl GreeDi {
                 .map(|(i, _)| i)
                 .expect("non-empty pool");
             let chosen = remaining.swap_remove(best);
-            oracle.commit(&mut state, chosen)?;
-            curve.push(oracle.f_of_state(&state));
+            session.commit(chosen)?;
+            curve.push(session.value()?);
         }
         Ok(OptimResult {
             value: *curve.last().unwrap_or(&0.0),
-            exemplars: state.exemplars,
+            exemplars: session.exemplars().to_vec(),
             curve,
-            evaluations,
+            evaluations: session.evaluations() - evals0,
         })
     }
 }
 
 impl Optimizer for GreeDi {
-    fn maximize(&self, oracle: &dyn Oracle) -> Result<OptimResult> {
-        self.run_local(oracle)
+    /// Round 1 sequentially on the session's oracle (one partition
+    /// sub-session at a time — for non-`Sync` oracles); round 2 in the
+    /// caller's session.
+    fn run(&self, session: &mut Session<'_>) -> Result<OptimResult> {
+        session.reset();
+        let oracle = session.oracle();
+        let partitions = self.partition(oracle.dataset().n());
+        let mut pool = Vec::new();
+        let mut evaluations = 0u64;
+        for members in partitions {
+            let part = PartitionOracle::new(oracle, members)?;
+            let r = Greedy::new(self.k).run(&mut Session::over(&part))?;
+            evaluations += r.evaluations;
+            pool.extend(r.exemplars);
+        }
+        let mut result = self.final_round(session, pool)?;
+        result.evaluations += evaluations;
+        Ok(result)
     }
 
     fn name(&self) -> String {
@@ -282,8 +285,8 @@ mod tests {
     #[test]
     fn greedi_single_worker_equals_greedy() {
         let o = oracle();
-        let g1 = GreeDi::new(4, 1, 5).maximize(&o).unwrap();
-        let plain = Greedy::new(4).maximize(&o).unwrap();
+        let g1 = GreeDi::new(4, 1, 5).run(&mut Session::over(&o)).unwrap();
+        let plain = Greedy::new(4).run(&mut Session::over(&o)).unwrap();
         assert!((g1.value - plain.value).abs() < 1e-3 * plain.value.abs().max(1.0),
             "greedi(1) {} vs greedy {}", g1.value, plain.value);
     }
@@ -291,9 +294,9 @@ mod tests {
     #[test]
     fn greedi_close_to_centralized_greedy() {
         let o = oracle();
-        let plain = Greedy::new(4).maximize(&o).unwrap();
+        let plain = Greedy::new(4).run(&mut Session::over(&o)).unwrap();
         for workers in [2usize, 4] {
-            let g = GreeDi::new(4, workers, 7).maximize(&o).unwrap();
+            let g = GreeDi::new(4, workers, 7).run(&mut Session::over(&o)).unwrap();
             assert!(g.value >= 0.8 * plain.value,
                 "greedi({workers}) {} vs greedy {}", g.value, plain.value);
             assert!(g.exemplars.len() <= 4);

@@ -8,12 +8,15 @@
 //!   max-heap, re-evaluated in batches until the top is fresh.
 //! * [`StochasticGreedy`] — per round samples `(n/k) ln(1/ε)` candidates,
 //!   achieving `1 - 1/e - ε` in expectation with far fewer evaluations.
+//!
+//! All three drive a [`Session`], so they are backend-agnostic: the same
+//! code runs against the serial CPU reference, the pooled CPU oracle,
+//! the device evaluator and the coordinator service.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
-use super::oracle::Oracle;
-use super::{OptimResult, Optimizer};
+use super::{OptimResult, Optimizer, Session};
 use crate::data::Rng;
 use crate::{Error, Result};
 
@@ -54,13 +57,13 @@ fn check_k(k: usize, n: usize) -> Result<usize> {
 }
 
 impl Optimizer for Greedy {
-    fn maximize(&self, oracle: &dyn Oracle) -> Result<OptimResult> {
-        let n = oracle.dataset().n();
+    fn run(&self, session: &mut Session<'_>) -> Result<OptimResult> {
+        session.reset();
+        let evals0 = session.evaluations();
+        let n = session.n();
         let k = check_k(self.k, n)?;
-        let mut state = oracle.init_state();
         let mut selected = vec![false; n];
         let mut curve = Vec::with_capacity(k);
-        let mut evaluations = 0u64;
         // candidate scratch reused across rounds: avoids one O(n)
         // allocation per round now that the oracle calls are batched
         let mut candidates: Vec<usize> = Vec::with_capacity(n);
@@ -72,42 +75,37 @@ impl Optimizer for Greedy {
                 break;
             }
             let gains = match self.mode {
-                GreedyMode::MarginalGains => oracle.marginal_gains(&state, &candidates)?,
+                GreedyMode::MarginalGains => session.gains(&candidates)?,
                 GreedyMode::WorkMatrix => {
                     // S_multi = { S ∪ {c} } for every candidate c (§IV-A)
                     let sets: Vec<Vec<usize>> = candidates
                         .iter()
                         .map(|&c| {
-                            let mut s = state.exemplars.clone();
+                            let mut s = session.exemplars().to_vec();
                             s.push(c);
                             s
                         })
                         .collect();
-                    let base = oracle.f_of_state(&state);
-                    oracle
-                        .eval_sets(&sets)?
-                        .into_iter()
-                        .map(|f| f - base)
-                        .collect()
+                    let base = session.value()?;
+                    session.eval_sets(&sets)?.into_iter().map(|f| f - base).collect()
                 }
             };
-            evaluations += gains.len() as u64;
             let best = gains
                 .iter()
                 .enumerate()
                 .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(Ordering::Equal))
                 .map(|(i, _)| i)
                 .expect("non-empty candidates");
-            oracle.commit(&mut state, candidates[best])?;
+            session.commit(candidates[best])?;
             selected[candidates[best]] = true;
-            curve.push(oracle.f_of_state(&state));
+            curve.push(session.value()?);
         }
 
         Ok(OptimResult {
             value: *curve.last().unwrap_or(&0.0),
-            exemplars: state.exemplars,
+            exemplars: session.exemplars().to_vec(),
             curve,
-            evaluations,
+            evaluations: session.evaluations() - evals0,
         })
     }
 
@@ -163,17 +161,16 @@ impl LazyGreedy {
 }
 
 impl Optimizer for LazyGreedy {
-    fn maximize(&self, oracle: &dyn Oracle) -> Result<OptimResult> {
-        let n = oracle.dataset().n();
+    fn run(&self, session: &mut Session<'_>) -> Result<OptimResult> {
+        session.reset();
+        let evals0 = session.evaluations();
+        let n = session.n();
         let k = check_k(self.k, n)?;
-        let mut state = oracle.init_state();
         let mut curve = Vec::with_capacity(k);
-        let mut evaluations = 0u64;
 
         // round 0: gains over everything seed the heap
         let all: Vec<usize> = (0..n).collect();
-        let gains = oracle.marginal_gains(&state, &all)?;
-        evaluations += gains.len() as u64;
+        let gains = session.gains(&all)?;
         let mut heap: BinaryHeap<HeapEntry> = gains
             .iter()
             .enumerate()
@@ -188,8 +185,8 @@ impl Optimizer for LazyGreedy {
                     None => break,
                 };
                 if top.round == round {
-                    oracle.commit(&mut state, top.idx)?;
-                    curve.push(oracle.f_of_state(&state));
+                    session.commit(top.idx)?;
+                    curve.push(session.value()?);
                     break;
                 }
                 let mut stale = vec![top];
@@ -200,8 +197,7 @@ impl Optimizer for LazyGreedy {
                     }
                 }
                 let idxs: Vec<usize> = stale.iter().map(|e| e.idx).collect();
-                let fresh = oracle.marginal_gains(&state, &idxs)?;
-                evaluations += fresh.len() as u64;
+                let fresh = session.gains(&idxs)?;
                 for (e, g) in idxs.iter().zip(fresh) {
                     heap.push(HeapEntry { bound: g, idx: *e, round });
                 }
@@ -213,9 +209,9 @@ impl Optimizer for LazyGreedy {
 
         Ok(OptimResult {
             value: *curve.last().unwrap_or(&0.0),
-            exemplars: state.exemplars,
+            exemplars: session.exemplars().to_vec(),
             curve,
-            evaluations,
+            evaluations: session.evaluations() - evals0,
         })
     }
 
@@ -248,14 +244,14 @@ impl StochasticGreedy {
 }
 
 impl Optimizer for StochasticGreedy {
-    fn maximize(&self, oracle: &dyn Oracle) -> Result<OptimResult> {
-        let n = oracle.dataset().n();
+    fn run(&self, session: &mut Session<'_>) -> Result<OptimResult> {
+        session.reset();
+        let evals0 = session.evaluations();
+        let n = session.n();
         let k = check_k(self.k, n)?;
         let mut rng = Rng::new(self.seed);
-        let mut state = oracle.init_state();
         let mut selected = vec![false; n];
         let mut curve = Vec::with_capacity(k);
-        let mut evaluations = 0u64;
         let sample = self.sample_size(n, k);
 
         for _ in 0..k {
@@ -265,24 +261,23 @@ impl Optimizer for StochasticGreedy {
             }
             let picks = rng.sample_indices(pool.len(), sample.min(pool.len()));
             let candidates: Vec<usize> = picks.iter().map(|&p| pool[p]).collect();
-            let gains = oracle.marginal_gains(&state, &candidates)?;
-            evaluations += gains.len() as u64;
+            let gains = session.gains(&candidates)?;
             let best = gains
                 .iter()
                 .enumerate()
                 .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(Ordering::Equal))
                 .map(|(i, _)| i)
                 .expect("non-empty sample");
-            oracle.commit(&mut state, candidates[best])?;
+            session.commit(candidates[best])?;
             selected[candidates[best]] = true;
-            curve.push(oracle.f_of_state(&state));
+            curve.push(session.value()?);
         }
 
         Ok(OptimResult {
             value: *curve.last().unwrap_or(&0.0),
-            exemplars: state.exemplars,
+            exemplars: session.exemplars().to_vec(),
             curve,
-            evaluations,
+            evaluations: session.evaluations() - evals0,
         })
     }
 
@@ -304,7 +299,7 @@ mod tests {
     #[test]
     fn greedy_curve_is_monotone() {
         let o = oracle();
-        let r = Greedy::new(6).maximize(&o).unwrap();
+        let r = Greedy::new(6).run(&mut Session::over(&o)).unwrap();
         assert_eq!(r.exemplars.len(), 6);
         for w in r.curve.windows(2) {
             assert!(w[1] >= w[0] - 1e-4, "curve decreased: {:?}", r.curve);
@@ -314,8 +309,12 @@ mod tests {
     #[test]
     fn greedy_modes_agree() {
         let o = oracle();
-        let a = Greedy::with_mode(4, GreedyMode::MarginalGains).maximize(&o).unwrap();
-        let b = Greedy::with_mode(4, GreedyMode::WorkMatrix).maximize(&o).unwrap();
+        let a = Greedy::with_mode(4, GreedyMode::MarginalGains)
+            .run(&mut Session::over(&o))
+            .unwrap();
+        let b = Greedy::with_mode(4, GreedyMode::WorkMatrix)
+            .run(&mut Session::over(&o))
+            .unwrap();
         assert_eq!(a.exemplars, b.exemplars);
         assert!((a.value - b.value).abs() < 1e-4);
     }
@@ -323,8 +322,8 @@ mod tests {
     #[test]
     fn lazy_matches_plain_greedy_value() {
         let o = oracle();
-        let plain = Greedy::new(5).maximize(&o).unwrap();
-        let lazy = LazyGreedy::new(5).maximize(&o).unwrap();
+        let plain = Greedy::new(5).run(&mut Session::over(&o)).unwrap();
+        let lazy = LazyGreedy::new(5).run(&mut Session::over(&o)).unwrap();
         // tie-breaking may differ; the achieved value must match
         assert!((plain.value - lazy.value).abs() < 1e-4,
             "plain={} lazy={}", plain.value, lazy.value);
@@ -335,8 +334,8 @@ mod tests {
     #[test]
     fn stochastic_reaches_near_greedy() {
         let o = oracle();
-        let plain = Greedy::new(5).maximize(&o).unwrap();
-        let sg = StochasticGreedy::new(5, 0.05, 3).maximize(&o).unwrap();
+        let plain = Greedy::new(5).run(&mut Session::over(&o)).unwrap();
+        let sg = StochasticGreedy::new(5, 0.05, 3).run(&mut Session::over(&o)).unwrap();
         assert!(sg.value >= 0.8 * plain.value,
             "stochastic too weak: {} vs {}", sg.value, plain.value);
         assert!(sg.evaluations < plain.evaluations);
@@ -346,21 +345,47 @@ mod tests {
     fn greedy_k_larger_than_n_selects_all() {
         let ds = GaussianBlobs::new(2, 2, 0.1).generate(8, 1);
         let o = SingleThread::new(ds);
-        let r = Greedy::new(100).maximize(&o).unwrap();
+        let r = Greedy::new(100).run(&mut Session::over(&o)).unwrap();
         assert_eq!(r.exemplars.len(), 8);
     }
 
     #[test]
     fn greedy_rejects_zero_k() {
         let o = oracle();
-        assert!(Greedy::new(0).maximize(&o).is_err());
+        assert!(Greedy::new(0).run(&mut Session::over(&o)).is_err());
     }
 
     #[test]
     fn greedy_no_duplicate_exemplars() {
         let o = oracle();
-        let r = Greedy::new(10).maximize(&o).unwrap();
+        let r = Greedy::new(10).run(&mut Session::over(&o)).unwrap();
         let set: std::collections::HashSet<_> = r.exemplars.iter().collect();
         assert_eq!(set.len(), r.exemplars.len());
+    }
+
+    #[test]
+    fn run_leaves_the_result_in_the_session() {
+        let o = oracle();
+        let mut session = Session::over(&o);
+        let r = Greedy::new(4).run(&mut session).unwrap();
+        assert_eq!(session.exemplars(), &r.exemplars[..]);
+        assert_eq!(session.value().unwrap(), r.value);
+        // re-running resets: same answer, not eight exemplars
+        let r2 = Greedy::new(4).run(&mut session).unwrap();
+        assert_eq!(r2.exemplars, r.exemplars);
+        assert_eq!(session.len(), 4);
+    }
+
+    /// The deprecated raw-oracle shim still works and agrees with the
+    /// session path.
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_maximize_shim_matches_run() {
+        let o = oracle();
+        let via_shim = Greedy::new(5).maximize(&o).unwrap();
+        let via_run = Greedy::new(5).run(&mut Session::over(&o)).unwrap();
+        assert_eq!(via_shim.exemplars, via_run.exemplars);
+        assert_eq!(via_shim.value, via_run.value);
+        assert_eq!(via_shim.evaluations, via_run.evaluations);
     }
 }

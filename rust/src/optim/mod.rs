@@ -2,11 +2,17 @@
 //! §II: SieveStreaming [4], SieveStreaming++ [19], ThreeSieves [18],
 //! Salsa [20]).
 //!
-//! All optimizers drive an [`Oracle`] — CPU baseline, device evaluator or
-//! the batched coordinator service — so every experiment can swap the
-//! evaluation backend without touching optimizer code. This is the
-//! "optimizer-aware" seam of the paper: optimizers emit *batches* of
-//! candidate evaluations (`S_multi`), never one-at-a-time queries.
+//! All optimizers drive a [`Session`] — the engine's bundle of one
+//! evaluation backend (CPU baseline, pooled CPU, device evaluator, or
+//! the batched coordinator service) with its cached optimizer state —
+//! so every experiment can swap the evaluation backend without touching
+//! optimizer code. This is the "optimizer-aware" seam of the paper:
+//! optimizers emit *batches* of candidate evaluations (`S_multi`),
+//! never one-at-a-time queries, and the session guarantees each batch
+//! is scored against the state it belongs to.
+//!
+//! The pre-engine entry point — [`Optimizer::maximize`] over a raw
+//! [`Oracle`] — survives as a deprecated shim for one release.
 
 pub mod greedi;
 pub mod greedy;
@@ -17,6 +23,8 @@ pub use greedi::{GreeDi, PartitionOracle};
 pub use greedy::{Greedy, GreedyMode, LazyGreedy, StochasticGreedy};
 pub use oracle::{DminState, Oracle};
 pub use sieve::{Salsa, SieveStreaming, SieveStreamingPP, ThreeSieves};
+
+pub use crate::engine::Session;
 
 use crate::Result;
 
@@ -36,9 +44,23 @@ pub struct OptimResult {
 
 /// A cardinality-constrained submodular maximizer (problem (2)).
 pub trait Optimizer {
-    /// Run maximization against `oracle`, selecting at most `k` exemplars.
-    fn maximize(&self, oracle: &dyn Oracle) -> Result<OptimResult>;
+    /// Run maximization by driving `session`. The session is reset to
+    /// the empty summary first; on return it holds the selected
+    /// exemplars (for the sieve family: the winning sieve's state), so
+    /// callers can keep refining or inspecting it.
+    fn run(&self, session: &mut Session<'_>) -> Result<OptimResult>;
 
     /// Human-readable name for logs and benches.
     fn name(&self) -> String;
+
+    /// Legacy entry point: wraps `oracle` in a throwaway [`Session`]
+    /// and calls [`Optimizer::run`].
+    #[deprecated(
+        since = "0.3.0",
+        note = "build an `engine::Engine` and drive a `Session` via `Optimizer::run` \
+                (or `Engine::run`)"
+    )]
+    fn maximize(&self, oracle: &dyn Oracle) -> Result<OptimResult> {
+        self.run(&mut Session::over(oracle))
+    }
 }

@@ -1,4 +1,5 @@
-//! The evaluation oracle — the interface every optimizer drives.
+//! The evaluation oracle — the backend contract every evaluation engine
+//! implements.
 //!
 //! §IV-A of the paper distinguishes the *single set* problem from the
 //! *multiset* problem `S_multi = {S_1, ..., S_l}` that real optimizers
@@ -9,9 +10,18 @@
 //! Implementors: [`crate::cpu::SingleThread`], [`crate::cpu::MultiThread`]
 //! (Algorithm 2), [`crate::runtime::DeviceEvaluator`] (the AOT/PJRT path)
 //! and [`crate::coordinator::ServiceHandle`] (the batched service).
+//!
+//! **Driving an oracle directly is a backend-internal affair.** The
+//! public optimizer-facing surface is [`crate::engine::Engine`] (builds
+//! and owns an oracle) and [`crate::engine::Session`] (bundles the
+//! oracle with *its own* [`DminState`], so gains/commits/values can
+//! never be computed against a mismatched state). Hand-carrying a
+//! `DminState` between raw oracle calls still compiles for backend code
+//! and for the deprecated `Optimizer::maximize` shim, but new callers
+//! should go through the engine.
 
 use crate::data::Dataset;
-use crate::Result;
+use crate::{Error, Result};
 
 /// Cached optimizer state: for every ground point the squared distance to
 /// its nearest committed exemplar, with the auxiliary exemplar `e0 = 0`
@@ -26,10 +36,15 @@ pub struct DminState {
 
 impl DminState {
     /// The current function value `f(S)` this state encodes:
-    /// `(L0*n - sum dmin) / n` (Definition 5).
-    pub fn f_value(&self, l0_sum: f64) -> f32 {
+    /// `(L0*n - sum dmin) / n` (Definition 5). Definition 5 normalizes
+    /// by `n`, so an empty ground set has no function value — that case
+    /// returns [`Error::EmptyDataset`] instead of a NaN from `0/0`.
+    pub fn f_value(&self, l0_sum: f64) -> Result<f32> {
+        if self.dmin.is_empty() {
+            return Err(Error::EmptyDataset);
+        }
         let covered: f64 = self.dmin.iter().map(|&x| x as f64).sum();
-        ((l0_sum - covered) / self.dmin.len() as f64) as f32
+        Ok(((l0_sum - covered) / self.dmin.len() as f64) as f32)
     }
 
     /// Number of committed exemplars.
@@ -95,11 +110,53 @@ pub trait Oracle {
         self.dataset().l0_sum()
     }
 
-    /// `f(S)` for the committed state.
-    fn f_of_state(&self, state: &DminState) -> f32 {
+    /// `f(S)` for the committed state ([`Error::EmptyDataset`] on an
+    /// empty ground set).
+    fn f_of_state(&self, state: &DminState) -> Result<f32> {
         state.f_value(self.l0_sum())
     }
 
     /// Short name for logs and bench tables.
     fn name(&self) -> String;
+}
+
+/// Boxed oracles forward to their contents, so runtime-dispatched
+/// backends (`Box<dyn Oracle>`, e.g. what `Engine` builds) satisfy the
+/// `O: Oracle` bounds of the service and the generic optimizer paths.
+impl<O: Oracle + ?Sized> Oracle for Box<O> {
+    fn dataset(&self) -> &Dataset {
+        (**self).dataset()
+    }
+
+    fn eval_sets(&self, sets: &[Vec<usize>]) -> Result<Vec<f32>> {
+        (**self).eval_sets(sets)
+    }
+
+    fn init_state(&self) -> DminState {
+        (**self).init_state()
+    }
+
+    fn marginal_gains(&self, state: &DminState, candidates: &[usize]) -> Result<Vec<f32>> {
+        (**self).marginal_gains(state, candidates)
+    }
+
+    fn commit(&self, state: &mut DminState, idx: usize) -> Result<()> {
+        (**self).commit(state, idx)
+    }
+
+    fn commit_many(&self, state: &mut DminState, idxs: &[usize]) -> Result<()> {
+        (**self).commit_many(state, idxs)
+    }
+
+    fn l0_sum(&self) -> f64 {
+        (**self).l0_sum()
+    }
+
+    fn f_of_state(&self, state: &DminState) -> Result<f32> {
+        (**self).f_of_state(state)
+    }
+
+    fn name(&self) -> String {
+        (**self).name()
+    }
 }

@@ -3,10 +3,10 @@
 //! ensemble [20].
 //!
 //! All of them process the stream in **windows** and evaluate whole
-//! windows of candidates per sieve through [`Oracle::marginal_gains`] —
-//! exactly the multiset workload (§IV-A) the paper's batched evaluation
-//! targets. Windowing is purely an evaluation-batching device: the
-//! algorithms' item-by-item semantics are preserved exactly, because
+//! windows of candidates per sieve through [`Session::gains`] — exactly
+//! the multiset workload (§IV-A) the paper's batched evaluation targets.
+//! Windowing is purely an evaluation-batching device: the algorithms'
+//! item-by-item semantics are preserved exactly, because
 //!
 //! * windows are split into **segments** at every item where the best
 //!   singleton value `m` grows (sieve birth happens at that item, as in
@@ -14,34 +14,37 @@
 //! * after an acceptance mutates a sieve's state, the remainder of the
 //!   window is re-evaluated against the fresh state (acceptances are
 //!   bounded by `k` per sieve, so the re-evaluation cost is small).
+//!
+//! Each live sieve is a cheap [`Session::fork`] of the run's empty
+//! template session; all forks share one evaluation counter, so
+//! [`OptimResult::evaluations`] still reports the total oracle work.
 
-use super::oracle::{DminState, Oracle};
-use super::{OptimResult, Optimizer};
+use super::{OptimResult, Optimizer, Session};
 use crate::data::Rng;
 use crate::{Error, Result};
 
 /// Default stream-window size (candidates per marginal-gain batch).
 pub const DEFAULT_WINDOW: usize = 256;
 
-/// One sieve: a capped set, its cached dmin state and current value.
-struct Sieve {
+/// One sieve: a capped summary session and its current value.
+struct Sieve<'a> {
     threshold: f64,
-    state: DminState,
+    session: Session<'a>,
     value: f32,
 }
 
-impl Sieve {
-    /// Sieve birth clones the run's cached empty state instead of asking
-    /// the oracle to recompute `init_state` (an O(n·d) walk for generic
-    /// dissimilarities) once per threshold guess.
-    fn from_template(threshold: f64, template: &DminState) -> Self {
-        Self { threshold, state: template.clone(), value: 0.0 }
+impl<'a> Sieve<'a> {
+    /// Sieve birth forks the run's cached empty session instead of
+    /// asking the oracle to recompute `init_state` (an O(n·d) walk for
+    /// generic dissimilarities) once per threshold guess.
+    fn from_template(threshold: f64, template: &Session<'a>) -> Self {
+        Self { threshold, session: template.fork(), value: 0.0 }
     }
 
     /// The SieveStreaming accept rule for guess `v = threshold`:
     /// `gain >= (v/2 - f(S)) / (k - |S|)`.
     fn accept_rule(&self, gain: f32, k: usize) -> bool {
-        let remaining = k - self.state.len();
+        let remaining = k - self.session.len();
         if remaining == 0 {
             return false;
         }
@@ -97,29 +100,22 @@ fn m_segments(singles: &[f32], m: &mut f64) -> Vec<(usize, usize, f64)> {
 
 /// Feed `items` through one sieve, committing accepts and re-evaluating
 /// the tail after each accept (exact sequential semantics).
-fn feed_sieve(
-    oracle: &dyn Oracle,
-    sieve: &mut Sieve,
-    items: &[usize],
-    k: usize,
-    evaluations: &mut u64,
-) -> Result<()> {
+fn feed_sieve(sieve: &mut Sieve<'_>, items: &[usize], k: usize) -> Result<()> {
     let mut pos = 0;
-    while pos < items.len() && sieve.state.len() < k {
+    while pos < items.len() && sieve.session.len() < k {
         let tail = &items[pos..];
-        let gains = oracle.marginal_gains(&sieve.state, tail)?;
-        *evaluations += gains.len() as u64;
+        let gains = sieve.session.gains(tail)?;
         let mut accepted = None;
         for (off, (&item, &gain)) in tail.iter().zip(&gains).enumerate() {
-            if sieve.accept_rule(gain, k) && !sieve.state.exemplars.contains(&item) {
+            if sieve.accept_rule(gain, k) && !sieve.session.exemplars().contains(&item) {
                 accepted = Some((off, item));
                 break;
             }
         }
         match accepted {
             Some((off, item)) => {
-                oracle.commit(&mut sieve.state, item)?;
-                sieve.value = oracle.f_of_state(&sieve.state);
+                sieve.session.commit(item)?;
+                sieve.value = sieve.session.value()?;
                 pos += off + 1;
             }
             None => break,
@@ -134,14 +130,23 @@ fn shuffled_order(n: usize, seed: u64) -> Vec<usize> {
     order
 }
 
-fn result_from_best(best: Option<&Sieve>, evaluations: u64) -> OptimResult {
+/// Publish the winning sieve into the caller's session and build the
+/// run result.
+fn finish_run(
+    session: &mut Session<'_>,
+    best: Option<&Sieve<'_>>,
+    evaluations: u64,
+) -> OptimResult {
     match best {
-        Some(s) => OptimResult {
-            exemplars: s.state.exemplars.clone(),
-            value: s.value,
-            curve: vec![s.value],
-            evaluations,
-        },
+        Some(s) => {
+            session.clone_state_from(&s.session);
+            OptimResult {
+                exemplars: s.session.exemplars().to_vec(),
+                value: s.value,
+                curve: vec![s.value],
+                evaluations,
+            }
+        }
         None => OptimResult { exemplars: vec![], value: 0.0, curve: vec![], evaluations },
     }
 }
@@ -169,7 +174,7 @@ impl SieveStreaming {
         self
     }
 
-    fn refresh_sieves(&self, sieves: &mut Vec<Sieve>, m: f64, template: &DminState) {
+    fn refresh_sieves<'a>(&self, sieves: &mut Vec<Sieve<'a>>, m: f64, template: &Session<'a>) {
         let grid = threshold_grid(self.eps, m, 2.0 * self.k as f64 * m);
         sieves.retain(|s| s.threshold >= m / (1.0 + self.eps));
         for v in grid {
@@ -180,36 +185,38 @@ impl SieveStreaming {
     }
 
     /// Run over an explicit stream order.
-    pub fn run_stream(&self, oracle: &dyn Oracle, stream: &[usize]) -> Result<OptimResult> {
+    pub fn run_stream(&self, session: &mut Session<'_>, stream: &[usize]) -> Result<OptimResult> {
         if self.k == 0 {
             return Err(Error::InvalidArgument("k must be positive".into()));
         }
-        let empty = oracle.init_state();
+        session.reset();
+        let evals0 = session.evaluations();
+        let empty = session.fresh();
         let mut sieves: Vec<Sieve> = Vec::new();
         let mut m = 0.0f64;
-        let mut evaluations = 0u64;
 
         for window in stream.chunks(self.window) {
-            let singles = oracle.marginal_gains(&empty, window)?;
-            evaluations += singles.len() as u64;
+            let singles = empty.gains(window)?;
             for (start, end, seg_m) in m_segments(&singles, &mut m) {
                 if seg_m <= 0.0 {
                     continue;
                 }
                 self.refresh_sieves(&mut sieves, seg_m, &empty);
                 for sieve in sieves.iter_mut() {
-                    feed_sieve(oracle, sieve, &window[start..end], self.k, &mut evaluations)?;
+                    feed_sieve(sieve, &window[start..end], self.k)?;
                 }
             }
         }
+        let total = session.evaluations() - evals0;
         let best = sieves.iter().max_by(|a, b| a.value.total_cmp(&b.value));
-        Ok(result_from_best(best, evaluations))
+        Ok(finish_run(session, best, total))
     }
 }
 
 impl Optimizer for SieveStreaming {
-    fn maximize(&self, oracle: &dyn Oracle) -> Result<OptimResult> {
-        self.run_stream(oracle, &shuffled_order(oracle.dataset().n(), self.seed))
+    fn run(&self, session: &mut Session<'_>) -> Result<OptimResult> {
+        let order = shuffled_order(session.n(), self.seed);
+        self.run_stream(session, &order)
     }
 
     fn name(&self) -> String {
@@ -241,19 +248,19 @@ impl SieveStreamingPP {
     }
 
     /// Run over an explicit stream order.
-    pub fn run_stream(&self, oracle: &dyn Oracle, stream: &[usize]) -> Result<OptimResult> {
+    pub fn run_stream(&self, session: &mut Session<'_>, stream: &[usize]) -> Result<OptimResult> {
         if self.k == 0 {
             return Err(Error::InvalidArgument("k must be positive".into()));
         }
-        let empty = oracle.init_state();
+        session.reset();
+        let evals0 = session.evaluations();
+        let empty = session.fresh();
         let mut sieves: Vec<Sieve> = Vec::new();
         let mut m = 0.0f64;
         let mut lb = 0.0f64; // best achieved f so far
-        let mut evaluations = 0u64;
 
         for window in stream.chunks(self.window) {
-            let singles = oracle.marginal_gains(&empty, window)?;
-            evaluations += singles.len() as u64;
+            let singles = empty.gains(window)?;
             for (start, end, seg_m) in m_segments(&singles, &mut m) {
                 if seg_m <= 0.0 {
                     continue;
@@ -268,13 +275,14 @@ impl SieveStreamingPP {
                     }
                 }
                 for sieve in sieves.iter_mut() {
-                    feed_sieve(oracle, sieve, &window[start..end], self.k, &mut evaluations)?;
+                    feed_sieve(sieve, &window[start..end], self.k)?;
                     lb = lb.max(sieve.value as f64);
                 }
             }
         }
+        let total = session.evaluations() - evals0;
         let best = sieves.iter().max_by(|a, b| a.value.total_cmp(&b.value));
-        Ok(result_from_best(best, evaluations))
+        Ok(finish_run(session, best, total))
     }
 
     /// Number of live guesses for a given `(m, lb)` — exposed for the
@@ -285,8 +293,9 @@ impl SieveStreamingPP {
 }
 
 impl Optimizer for SieveStreamingPP {
-    fn maximize(&self, oracle: &dyn Oracle) -> Result<OptimResult> {
-        self.run_stream(oracle, &shuffled_order(oracle.dataset().n(), self.seed))
+    fn run(&self, session: &mut Session<'_>) -> Result<OptimResult> {
+        let order = shuffled_order(session.n(), self.seed);
+        self.run_stream(session, &order)
     }
 
     fn name(&self) -> String {
@@ -319,24 +328,24 @@ impl ThreeSieves {
         self
     }
 
-    /// Run over an explicit stream order.
-    pub fn run_stream(&self, oracle: &dyn Oracle, stream: &[usize]) -> Result<OptimResult> {
+    /// Run over an explicit stream order. The caller's session is the
+    /// single working summary (ThreeSieves keeps exactly one set).
+    pub fn run_stream(&self, session: &mut Session<'_>, stream: &[usize]) -> Result<OptimResult> {
         if self.k == 0 {
             return Err(Error::InvalidArgument("k must be positive".into()));
         }
-        let empty = oracle.init_state();
-        let mut state = oracle.init_state();
+        session.reset();
+        let evals0 = session.evaluations();
+        let empty = session.fresh();
         let mut value = 0.0f32;
         let mut m = 0.0f64;
         let mut last_m = 0.0f64; // m value tau was last derived from
         let mut tau = 0.0f64; // current OPT guess
         let mut rejects = 0usize;
-        let mut evaluations = 0u64;
         let mut curve = Vec::new();
 
         for window in stream.chunks(self.window) {
-            let singles = oracle.marginal_gains(&empty, window)?;
-            evaluations += singles.len() as u64;
+            let singles = empty.gains(window)?;
             for (start, end, seg_m) in m_segments(&singles, &mut m) {
                 let _ = start;
                 if seg_m <= 0.0 {
@@ -352,17 +361,16 @@ impl ThreeSieves {
                 }
                 let items = &window[start..end];
                 let mut pos = 0;
-                while pos < items.len() && state.len() < self.k {
+                while pos < items.len() && session.len() < self.k {
                     let tail = &items[pos..];
-                    let gains = oracle.marginal_gains(&state, tail)?;
-                    evaluations += gains.len() as u64;
+                    let gains = session.gains(tail)?;
                     let mut consumed = tail.len();
                     for (off, (&item, &gain)) in tail.iter().zip(&gains).enumerate() {
-                        let remaining = self.k - state.len();
+                        let remaining = self.k - session.len();
                         let need = (tau - value as f64) / remaining as f64;
-                        if (gain as f64) >= need && !state.exemplars.contains(&item) {
-                            oracle.commit(&mut state, item)?;
-                            value = oracle.f_of_state(&state);
+                        if (gain as f64) >= need && !session.exemplars().contains(&item) {
+                            session.commit(item)?;
+                            value = session.value()?;
                             curve.push(value);
                             rejects = 0;
                             consumed = off + 1; // re-evaluate the rest fresh
@@ -380,13 +388,19 @@ impl ThreeSieves {
                 }
             }
         }
-        Ok(OptimResult { exemplars: state.exemplars, value, curve, evaluations })
+        Ok(OptimResult {
+            exemplars: session.exemplars().to_vec(),
+            value,
+            curve,
+            evaluations: session.evaluations() - evals0,
+        })
     }
 }
 
 impl Optimizer for ThreeSieves {
-    fn maximize(&self, oracle: &dyn Oracle) -> Result<OptimResult> {
-        self.run_stream(oracle, &shuffled_order(oracle.dataset().n(), self.seed))
+    fn run(&self, session: &mut Session<'_>) -> Result<OptimResult> {
+        let order = shuffled_order(session.n(), self.seed);
+        self.run_stream(session, &order)
     }
 
     fn name(&self) -> String {
@@ -413,10 +427,10 @@ enum SalsaPolicy {
     TwoPhase,
 }
 
-struct PolicySieve {
+struct PolicySieve<'a> {
     policy: SalsaPolicy,
     guess: f64,
-    state: DminState,
+    session: Session<'a>,
     value: f32,
 }
 
@@ -433,8 +447,8 @@ impl Salsa {
         self
     }
 
-    fn accept(&self, p: &PolicySieve, gain: f32, progress: f64) -> bool {
-        let remaining = self.k - p.state.len();
+    fn accept(&self, p: &PolicySieve<'_>, gain: f32, progress: f64) -> bool {
+        let remaining = self.k - p.session.len();
         if remaining == 0 {
             return false;
         }
@@ -454,20 +468,20 @@ impl Salsa {
     }
 
     /// Run over an explicit stream order.
-    pub fn run_stream(&self, oracle: &dyn Oracle, stream: &[usize]) -> Result<OptimResult> {
+    pub fn run_stream(&self, session: &mut Session<'_>, stream: &[usize]) -> Result<OptimResult> {
         if self.k == 0 {
             return Err(Error::InvalidArgument("k must be positive".into()));
         }
-        let empty = oracle.init_state();
+        session.reset();
+        let evals0 = session.evaluations();
+        let empty = session.fresh();
         let mut sieves: Vec<PolicySieve> = Vec::new();
         let mut m = 0.0f64;
-        let mut evaluations = 0u64;
         let total = stream.len().max(1);
         let mut consumed_total = 0usize;
 
         for window in stream.chunks(self.window) {
-            let singles = oracle.marginal_gains(&empty, window)?;
-            evaluations += singles.len() as u64;
+            let singles = empty.gains(window)?;
             for (start, end, seg_m) in m_segments(&singles, &mut m) {
                 if seg_m <= 0.0 {
                     continue;
@@ -483,7 +497,7 @@ impl Salsa {
                             sieves.push(PolicySieve {
                                 policy,
                                 guess: *v,
-                                state: empty.clone(),
+                                session: empty.fork(),
                                 value: 0.0,
                             });
                         }
@@ -493,14 +507,13 @@ impl Salsa {
                 let items = &window[start..end];
                 for si in 0..sieves.len() {
                     let mut pos = 0;
-                    while pos < items.len() && sieves[si].state.len() < self.k {
+                    while pos < items.len() && sieves[si].session.len() < self.k {
                         let tail = &items[pos..];
-                        let gains = oracle.marginal_gains(&sieves[si].state, tail)?;
-                        evaluations += gains.len() as u64;
+                        let gains = sieves[si].session.gains(tail)?;
                         let mut accepted = None;
                         for (off, (&item, &gain)) in tail.iter().zip(&gains).enumerate() {
                             if self.accept(&sieves[si], gain, progress)
-                                && !sieves[si].state.exemplars.contains(&item)
+                                && !sieves[si].session.exemplars().contains(&item)
                             {
                                 accepted = Some((off, item));
                                 break;
@@ -508,8 +521,8 @@ impl Salsa {
                         }
                         match accepted {
                             Some((off, item)) => {
-                                oracle.commit(&mut sieves[si].state, item)?;
-                                sieves[si].value = oracle.f_of_state(&sieves[si].state);
+                                sieves[si].session.commit(item)?;
+                                sieves[si].value = sieves[si].session.value()?;
                                 pos += off + 1;
                             }
                             None => break,
@@ -519,22 +532,29 @@ impl Salsa {
             }
             consumed_total += window.len();
         }
+        let total = session.evaluations() - evals0;
         let best = sieves.iter().max_by(|a, b| a.value.total_cmp(&b.value));
         Ok(match best {
-            Some(s) => OptimResult {
-                exemplars: s.state.exemplars.clone(),
-                value: s.value,
-                curve: vec![s.value],
-                evaluations,
-            },
-            None => OptimResult { exemplars: vec![], value: 0.0, curve: vec![], evaluations },
+            Some(s) => {
+                session.clone_state_from(&s.session);
+                OptimResult {
+                    exemplars: s.session.exemplars().to_vec(),
+                    value: s.value,
+                    curve: vec![s.value],
+                    evaluations: total,
+                }
+            }
+            None => {
+                OptimResult { exemplars: vec![], value: 0.0, curve: vec![], evaluations: total }
+            }
         })
     }
 }
 
 impl Optimizer for Salsa {
-    fn maximize(&self, oracle: &dyn Oracle) -> Result<OptimResult> {
-        self.run_stream(oracle, &shuffled_order(oracle.dataset().n(), self.seed))
+    fn run(&self, session: &mut Session<'_>) -> Result<OptimResult> {
+        let order = shuffled_order(session.n(), self.seed);
+        self.run_stream(session, &order)
     }
 
     fn name(&self) -> String {
@@ -583,8 +603,8 @@ mod tests {
     #[test]
     fn sieve_streaming_reaches_half_of_greedy() {
         let o = oracle();
-        let greedy = Greedy::new(4).maximize(&o).unwrap();
-        let sieve = SieveStreaming::new(4, 0.2, 1).maximize(&o).unwrap();
+        let greedy = Greedy::new(4).run(&mut Session::over(&o)).unwrap();
+        let sieve = SieveStreaming::new(4, 0.2, 1).run(&mut Session::over(&o)).unwrap();
         assert!(sieve.value >= 0.5 * greedy.value,
             "sieve {} vs greedy {}", sieve.value, greedy.value);
         assert!(sieve.exemplars.len() <= 4);
@@ -593,8 +613,8 @@ mod tests {
     #[test]
     fn sieve_pp_value_close_with_fewer_or_equal_evals() {
         let o = oracle();
-        let s = SieveStreaming::new(4, 0.2, 2).maximize(&o).unwrap();
-        let spp = SieveStreamingPP::new(4, 0.2, 2).maximize(&o).unwrap();
+        let s = SieveStreaming::new(4, 0.2, 2).run(&mut Session::over(&o)).unwrap();
+        let spp = SieveStreamingPP::new(4, 0.2, 2).run(&mut Session::over(&o)).unwrap();
         assert!(spp.value >= 0.8 * s.value,
             "++ lost too much: {} vs {}", spp.value, s.value);
         assert!(spp.evaluations <= s.evaluations,
@@ -604,12 +624,12 @@ mod tests {
     #[test]
     fn three_sieves_respects_cardinality_and_value() {
         let o = oracle();
-        let greedy = Greedy::new(4).maximize(&o).unwrap();
-        let ts = ThreeSieves::new(4, 0.2, 50, 3).maximize(&o).unwrap();
+        let greedy = Greedy::new(4).run(&mut Session::over(&o)).unwrap();
+        let ts = ThreeSieves::new(4, 0.2, 50, 3).run(&mut Session::over(&o)).unwrap();
         assert!(ts.exemplars.len() <= 4);
         assert!(ts.value >= 0.4 * greedy.value,
             "three-sieves {} vs greedy {}", ts.value, greedy.value);
-        let s = SieveStreaming::new(4, 0.2, 3).maximize(&o).unwrap();
+        let s = SieveStreaming::new(4, 0.2, 3).run(&mut Session::over(&o)).unwrap();
         assert!(ts.evaluations < s.evaluations,
             "single-sieve should evaluate less: {} vs {}",
             ts.evaluations, s.evaluations);
@@ -618,8 +638,8 @@ mod tests {
     #[test]
     fn salsa_reaches_half_of_greedy() {
         let o = oracle();
-        let greedy = Greedy::new(4).maximize(&o).unwrap();
-        let sa = Salsa::new(4, 0.3, 5).maximize(&o).unwrap();
+        let greedy = Greedy::new(4).run(&mut Session::over(&o)).unwrap();
+        let sa = Salsa::new(4, 0.3, 5).run(&mut Session::over(&o)).unwrap();
         assert!(sa.value >= 0.5 * greedy.value,
             "salsa {} vs greedy {}", sa.value, greedy.value);
     }
@@ -627,8 +647,8 @@ mod tests {
     #[test]
     fn streaming_results_are_deterministic_per_seed() {
         let o = oracle();
-        let a = SieveStreaming::new(3, 0.25, 9).maximize(&o).unwrap();
-        let b = SieveStreaming::new(3, 0.25, 9).maximize(&o).unwrap();
+        let a = SieveStreaming::new(3, 0.25, 9).run(&mut Session::over(&o)).unwrap();
+        let b = SieveStreaming::new(3, 0.25, 9).run(&mut Session::over(&o)).unwrap();
         assert_eq!(a.exemplars, b.exemplars);
     }
 
@@ -636,18 +656,41 @@ mod tests {
     fn window_size_does_not_change_sieve_result() {
         let o = oracle();
         let stream: Vec<usize> = (0..o.dataset().n()).collect();
-        let a = SieveStreaming::new(3, 0.25, 0).with_window(7).run_stream(&o, &stream).unwrap();
-        let b = SieveStreaming::new(3, 0.25, 0).with_window(64).run_stream(&o, &stream).unwrap();
+        let a = SieveStreaming::new(3, 0.25, 0)
+            .with_window(7)
+            .run_stream(&mut Session::over(&o), &stream)
+            .unwrap();
+        let b = SieveStreaming::new(3, 0.25, 0)
+            .with_window(64)
+            .run_stream(&mut Session::over(&o), &stream)
+            .unwrap();
         assert_eq!(a.exemplars, b.exemplars, "windowing changed semantics");
-        let c = ThreeSieves::new(3, 0.25, 20, 0).with_window(7).run_stream(&o, &stream).unwrap();
-        let d = ThreeSieves::new(3, 0.25, 20, 0).with_window(64).run_stream(&o, &stream).unwrap();
+        let c = ThreeSieves::new(3, 0.25, 20, 0)
+            .with_window(7)
+            .run_stream(&mut Session::over(&o), &stream)
+            .unwrap();
+        let d = ThreeSieves::new(3, 0.25, 20, 0)
+            .with_window(64)
+            .run_stream(&mut Session::over(&o), &stream)
+            .unwrap();
         assert_eq!(c.exemplars, d.exemplars, "three-sieves windowing changed semantics");
+    }
+
+    #[test]
+    fn winning_sieve_lands_in_the_callers_session() {
+        let o = oracle();
+        let mut session = Session::over(&o);
+        let r = SieveStreaming::new(3, 0.25, 4).run(&mut session).unwrap();
+        assert_eq!(session.exemplars(), &r.exemplars[..]);
+        assert!((session.value().unwrap() - r.value).abs() < 1e-6);
     }
 
     #[test]
     fn empty_stream_gives_empty_result() {
         let o = oracle();
-        let r = SieveStreaming::new(3, 0.2, 0).run_stream(&o, &[]).unwrap();
+        let r = SieveStreaming::new(3, 0.2, 0)
+            .run_stream(&mut Session::over(&o), &[])
+            .unwrap();
         assert!(r.exemplars.is_empty());
         assert_eq!(r.value, 0.0);
     }
@@ -656,7 +699,7 @@ mod tests {
     fn zero_k_rejected() {
         let o = oracle();
         assert!(SieveStreaming { k: 0, eps: 0.2, window: 8, seed: 0 }
-            .run_stream(&o, &[1, 2])
+            .run_stream(&mut Session::over(&o), &[1, 2])
             .is_err());
     }
 }

@@ -49,9 +49,19 @@ pub struct EvalConfig {
 
 impl Default for EvalConfig {
     fn default() -> Self {
+        Self::for_dtype(crate::scalar::Dtype::F32)
+    }
+}
+
+impl EvalConfig {
+    /// Config for an element dtype with the memory model's
+    /// `bytes_per_elem` derived from it — so a chunk plan never sizes
+    /// f16 payloads with f32 bytes (or vice versa). Callers needing a
+    /// custom budget override `memory.total_bytes` afterwards.
+    pub fn for_dtype(dtype: crate::scalar::Dtype) -> Self {
         Self {
-            dtype: "f32".into(),
-            memory: MemoryModel::default(),
+            dtype: dtype.to_string(),
+            memory: MemoryModel::for_dtype(dtype),
             pack_order: PackOrder::RoundRobin,
         }
     }

@@ -131,6 +131,19 @@ pub trait Scalar: Copy + Clone + Send + Sync + std::fmt::Debug + 'static {
         let _ = rows;
         None
     }
+
+    /// The reverse view: reinterpret canonical `f32` rows as `Self`
+    /// without copying — `Some` only for the identity format, where it
+    /// lets [`crate::data::ShadowSet`] alias the dataset buffer instead
+    /// of duplicating the ground set (the copy-free `f32` shadow).
+    #[inline]
+    fn from_f32_slice(rows: &[f32]) -> Option<&[Self]>
+    where
+        Self: Sized,
+    {
+        let _ = rows;
+        None
+    }
 }
 
 impl Scalar for f32 {
@@ -148,6 +161,11 @@ impl Scalar for f32 {
 
     #[inline(always)]
     fn as_f32_slice(rows: &[f32]) -> Option<&[f32]> {
+        Some(rows)
+    }
+
+    #[inline(always)]
+    fn from_f32_slice(rows: &[f32]) -> Option<&[f32]> {
         Some(rows)
     }
 }

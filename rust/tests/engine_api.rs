@@ -1,0 +1,205 @@
+//! The backend-agnostic Engine/Session facade: builder construction
+//! across backends and dtypes, session ≡ legacy-oracle equivalence, the
+//! empty-dataset guard, and the deprecation shim. Pure CPU — no
+//! artifacts needed.
+
+use exemcl::cpu::build_cpu_oracle;
+use exemcl::data::synth::{GaussianBlobs, UniformCube};
+use exemcl::data::Dataset;
+use exemcl::engine::{Backend, Engine, Session};
+use exemcl::optim::{Greedy, LazyGreedy, Optimizer, Oracle, SieveStreaming};
+use exemcl::scalar::Dtype;
+use exemcl::Error;
+
+fn blobs(n: usize) -> Dataset {
+    GaussianBlobs::new(4, 6, 0.3).generate(n, 11)
+}
+
+/// Session verbs against an engine-built serial oracle are
+/// **bit-identical** to hand-threading a `DminState` through the legacy
+/// oracle API, for every dtype (same construction path, same kernels,
+/// same reduction order).
+#[test]
+fn session_is_bit_identical_to_legacy_state_threading_across_dtypes() {
+    let ds = UniformCube::new(5, 1.0).generate(120, 3);
+    for dtype in Dtype::all() {
+        let engine = Engine::builder()
+            .dataset(ds.clone())
+            .backend(Backend::SingleThread)
+            .dtype(dtype)
+            .build()
+            .unwrap();
+        let legacy = build_cpu_oracle(ds.clone(), false, 0, dtype);
+        let mut session = engine.session();
+        let mut state = legacy.init_state();
+        assert_eq!(session.state().dmin, state.dmin, "{dtype}: init");
+
+        let sets = vec![vec![0usize, 5, 9], vec![1], vec![]];
+        assert_eq!(
+            session.eval_sets(&sets).unwrap(),
+            legacy.eval_sets(&sets).unwrap(),
+            "{dtype}: eval_sets"
+        );
+
+        let cands: Vec<usize> = (0..30).map(|i| (i * 7) % ds.n()).collect();
+        for step in [vec![3usize], vec![17, 40]] {
+            assert_eq!(
+                session.gains(&cands).unwrap(),
+                legacy.marginal_gains(&state, &cands).unwrap(),
+                "{dtype}: gains before {step:?}"
+            );
+            session.commit_many(&step).unwrap();
+            legacy.commit_many(&mut state, &step).unwrap();
+            assert_eq!(session.state().dmin, state.dmin, "{dtype}: dmin after {step:?}");
+            assert_eq!(
+                session.value().unwrap(),
+                legacy.f_of_state(&state).unwrap(),
+                "{dtype}: value"
+            );
+        }
+    }
+}
+
+/// The pooled-CPU engine agrees with the serial engine to float
+/// tolerance (threading only changes the merge order of f64 partials).
+#[test]
+fn cpu_backends_agree_across_dtypes() {
+    let ds = blobs(160);
+    for dtype in Dtype::all() {
+        let st = Engine::builder()
+            .dataset(ds.clone())
+            .backend(Backend::SingleThread)
+            .dtype(dtype)
+            .build()
+            .unwrap();
+        let mt = Engine::builder()
+            .dataset(ds.clone())
+            .backend(Backend::Cpu { threads: 3 })
+            .dtype(dtype)
+            .build()
+            .unwrap();
+        let cands: Vec<usize> = (0..40).collect();
+        let mut a = st.session();
+        let mut b = mt.session();
+        a.commit_many(&[2, 50]).unwrap();
+        b.commit_many(&[2, 50]).unwrap();
+        for (x, y) in a.gains(&cands).unwrap().iter().zip(&b.gains(&cands).unwrap()) {
+            assert!((x - y).abs() < 1e-5, "{dtype}: st {x} vs mt {y}");
+        }
+    }
+}
+
+#[test]
+fn engine_run_matches_direct_session_drive() {
+    let ds = blobs(140);
+    let engine = Engine::builder()
+        .dataset(ds)
+        .backend(Backend::SingleThread)
+        .build()
+        .unwrap();
+    let via_run = engine.run(&Greedy::new(5)).unwrap();
+    let mut session = engine.session();
+    let via_session = Greedy::new(5).run(&mut session).unwrap();
+    assert_eq!(via_run.exemplars, via_session.exemplars);
+    assert_eq!(via_run.value, via_session.value);
+    // the session retains the driven state
+    assert_eq!(session.exemplars(), &via_session.exemplars[..]);
+}
+
+/// All optimizer families drive every backend through the same facade.
+#[test]
+fn optimizers_are_backend_agnostic_through_the_engine() {
+    let ds = blobs(150);
+    let reference = Engine::builder()
+        .dataset(ds.clone())
+        .backend(Backend::SingleThread)
+        .build()
+        .unwrap()
+        .run(&Greedy::new(4))
+        .unwrap();
+    for backend in [
+        Backend::Cpu { threads: 2 },
+        Backend::service_over(Backend::SingleThread),
+        Backend::service_over(Backend::Cpu { threads: 2 }),
+    ] {
+        let engine = Engine::builder()
+            .dataset(ds.clone())
+            .backend(backend.clone())
+            .build()
+            .unwrap();
+        let greedy = engine.run(&Greedy::new(4)).unwrap();
+        assert!(
+            (greedy.value - reference.value).abs() <= 1e-3 * reference.value.abs().max(1.0),
+            "{backend}: greedy {} vs reference {}",
+            greedy.value,
+            reference.value
+        );
+        let lazy = engine.run(&LazyGreedy::new(4)).unwrap();
+        assert!((lazy.value - reference.value).abs() <= 1e-3 * reference.value.abs().max(1.0));
+        let sieve = engine.run(&SieveStreaming::new(4, 0.25, 9)).unwrap();
+        assert!(sieve.value >= 0.5 * reference.value, "{backend}: sieve {}", sieve.value);
+    }
+}
+
+#[test]
+fn empty_dataset_is_rejected_at_build_time() {
+    let empty = Dataset::from_flat(0, 4, vec![]).unwrap();
+    match Engine::builder().dataset(empty).build() {
+        Err(Error::EmptyDataset) => {}
+        Err(e) => panic!("expected EmptyDataset, got {e}"),
+        Ok(_) => panic!("expected EmptyDataset, got an engine"),
+    }
+}
+
+#[test]
+fn missing_dataset_is_rejected_at_build_time() {
+    assert!(Engine::builder().backend(Backend::SingleThread).build().is_err());
+}
+
+/// The legacy trait-object path still compiles and agrees with the
+/// session path (deprecated shim — one release).
+#[test]
+#[allow(deprecated)]
+fn legacy_maximize_path_still_works() {
+    let ds = blobs(120);
+    let oracle = build_cpu_oracle(ds.clone(), false, 0, Dtype::F32);
+    let legacy = Greedy::new(4).maximize(oracle.as_ref()).unwrap();
+    let engine = Engine::builder()
+        .dataset(ds)
+        .backend(Backend::SingleThread)
+        .build()
+        .unwrap();
+    let modern = engine.run(&Greedy::new(4)).unwrap();
+    assert_eq!(legacy.exemplars, modern.exemplars);
+    assert_eq!(legacy.value, modern.value);
+    assert_eq!(legacy.evaluations, modern.evaluations);
+}
+
+/// Sessions can be driven incrementally after an optimizer finishes —
+/// the warm-start composition the session API makes possible.
+#[test]
+fn sessions_compose_manual_and_optimizer_work() {
+    let ds = blobs(130);
+    let engine = Engine::builder()
+        .dataset(ds)
+        .backend(Backend::Cpu { threads: 2 })
+        .build()
+        .unwrap();
+    let mut session = engine.session();
+    Greedy::new(3).run(&mut session).unwrap();
+    assert_eq!(session.len(), 3);
+    let before = session.value().unwrap();
+    // hand-pick one more exemplar: the best over a manual candidate scan
+    let cands: Vec<usize> =
+        (0..session.n()).filter(|i| !session.exemplars().contains(i)).collect();
+    let gains = session.gains(&cands).unwrap();
+    let best = gains
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| cands[i])
+        .unwrap();
+    session.commit(best).unwrap();
+    assert_eq!(session.len(), 4);
+    assert!(session.value().unwrap() >= before - 1e-5);
+}

@@ -8,6 +8,7 @@ use exemcl::cpu::{loss_sum_blocked, loss_sum_naive, MultiThread, SingleThread};
 use exemcl::data::synth::{GaussianBlobs, UniformCube};
 use exemcl::data::{Dataset, Rng};
 use exemcl::distance::{Dissimilarity, Manhattan, RbfInduced, SqEuclidean};
+use exemcl::engine::Session;
 use exemcl::optim::{Greedy, Optimizer, Oracle};
 use exemcl::pack::{PackOrder, SMultiPack};
 use exemcl::testkit::forall;
@@ -134,7 +135,7 @@ fn st_mt_and_kernel_variants_agree() {
 fn greedy_then_assign_is_consistent() {
     let ds = GaussianBlobs::new(3, 4, 0.2).generate(90, 5);
     let st = SingleThread::new(ds.clone());
-    let r = Greedy::new(3).maximize(&st).unwrap();
+    let r = Greedy::new(3).run(&mut Session::over(&st)).unwrap();
     let c = clustering::assign(&ds, &r.exemplars);
     // the k-medoids loss of the assignment must equal L(S) implied by f(S):
     // f(S) = L0 - L(S ∪ {e0}); with well-spread exemplars no point prefers

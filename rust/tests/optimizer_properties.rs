@@ -5,6 +5,7 @@
 use exemcl::cpu::SingleThread;
 use exemcl::data::synth::{GaussianBlobs, UniformCube};
 use exemcl::data::Rng;
+use exemcl::engine::Session;
 use exemcl::optim::{
     Greedy, GreedyMode, LazyGreedy, Optimizer, Oracle, Salsa, SieveStreaming, SieveStreamingPP,
     StochasticGreedy, ThreeSieves,
@@ -55,7 +56,9 @@ fn greedy_achieves_1_minus_1_over_e_of_opt() {
             let ds = UniformCube::new(3, 1.0).generate(n, seed);
             let oracle = SingleThread::new(ds);
             let opt = brute_force_opt(&oracle, n, k);
-            let greedy = Greedy::new(k).maximize(&oracle).map_err(|e| e.to_string())?;
+            let greedy = Greedy::new(k)
+                .run(&mut Session::over(&oracle))
+                .map_err(|e| e.to_string())?;
             let bound = (1.0 - (-1.0f64).exp()) as f32 * opt;
             if greedy.value < bound - 1e-5 {
                 return Err(format!(
@@ -81,8 +84,10 @@ fn lazy_greedy_matches_plain_value_always() {
         |&(n, k, seed)| {
             let ds = GaussianBlobs::new(3, 4, 0.4).generate(n, seed);
             let oracle = SingleThread::new(ds);
-            let plain = Greedy::new(k).maximize(&oracle).map_err(|e| e.to_string())?;
-            let lazy = LazyGreedy::new(k).maximize(&oracle).map_err(|e| e.to_string())?;
+            let plain = Greedy::new(k).run(&mut Session::over(&oracle)).map_err(|e| e.to_string())?;
+            let lazy = LazyGreedy::new(k)
+                .run(&mut Session::over(&oracle))
+                .map_err(|e| e.to_string())?;
             if (plain.value - lazy.value).abs() > 1e-4 * plain.value.abs().max(1.0) {
                 return Err(format!("plain {} vs lazy {}", plain.value, lazy.value));
             }
@@ -101,10 +106,10 @@ fn greedy_work_matrix_and_marginal_modes_identical() {
             let ds = UniformCube::new(4, 1.0).generate(n, seed);
             let oracle = SingleThread::new(ds);
             let a = Greedy::with_mode(k, GreedyMode::MarginalGains)
-                .maximize(&oracle)
+                .run(&mut Session::over(&oracle))
                 .map_err(|e| e.to_string())?;
             let b = Greedy::with_mode(k, GreedyMode::WorkMatrix)
-                .maximize(&oracle)
+                .run(&mut Session::over(&oracle))
                 .map_err(|e| e.to_string())?;
             if a.exemplars != b.exemplars {
                 return Err(format!("{:?} vs {:?}", a.exemplars, b.exemplars));
@@ -126,9 +131,11 @@ fn streaming_family_reaches_documented_fractions() {
             let ds = GaussianBlobs::new(4, 4, 0.3).generate(n, seed);
             let oracle = SingleThread::new(ds);
             let k = 4;
-            let greedy = Greedy::new(k).maximize(&oracle).map_err(|e| e.to_string())?;
+            let greedy = Greedy::new(k)
+                .run(&mut Session::over(&oracle))
+                .map_err(|e| e.to_string())?;
             let run = |opt: &dyn Optimizer| -> Result<f32, String> {
-                Ok(opt.maximize(&oracle).map_err(|e| e.to_string())?.value)
+                Ok(opt.run(&mut Session::over(&oracle)).map_err(|e| e.to_string())?.value)
             };
             let checks: Vec<(&str, f32)> = vec![
                 ("sieve", run(&SieveStreaming::new(k, 0.2, seed))?),
@@ -150,10 +157,10 @@ fn streaming_family_reaches_documented_fractions() {
 fn stochastic_greedy_is_seed_deterministic() {
     let ds = UniformCube::new(4, 1.0).generate(100, 5);
     let oracle = SingleThread::new(ds);
-    let a = StochasticGreedy::new(5, 0.1, 11).maximize(&oracle).unwrap();
-    let b = StochasticGreedy::new(5, 0.1, 11).maximize(&oracle).unwrap();
+    let a = StochasticGreedy::new(5, 0.1, 11).run(&mut Session::over(&oracle)).unwrap();
+    let b = StochasticGreedy::new(5, 0.1, 11).run(&mut Session::over(&oracle)).unwrap();
     assert_eq!(a.exemplars, b.exemplars);
-    let c = StochasticGreedy::new(5, 0.1, 12).maximize(&oracle).unwrap();
+    let c = StochasticGreedy::new(5, 0.1, 12).run(&mut Session::over(&oracle)).unwrap();
     // different seed: allowed to differ (and usually does)
     let _ = c;
 }
@@ -169,7 +176,7 @@ fn curve_monotone_for_all_curve_producing_optimizers() {
         Box::new(ThreeSieves::new(6, 0.2, 30, 1)),
     ];
     for opt in opts {
-        let r = opt.maximize(&oracle).unwrap();
+        let r = opt.run(&mut Session::over(&oracle)).unwrap();
         for w in r.curve.windows(2) {
             assert!(
                 w[1] >= w[0] - 1e-4,
@@ -199,7 +206,7 @@ fn exemplars_always_unique_and_in_range() {
                 Box::new(SieveStreaming::new(k, 0.25, seed)),
                 Box::new(Salsa::new(k, 0.3, seed)),
             ] {
-                let r = opt.maximize(&oracle).map_err(|e| e.to_string())?;
+                let r = opt.run(&mut Session::over(&oracle)).map_err(|e| e.to_string())?;
                 let uniq: std::collections::HashSet<_> = r.exemplars.iter().collect();
                 if uniq.len() != r.exemplars.len() {
                     return Err(format!("{}: duplicate exemplars {:?}", opt.name(), r.exemplars));

@@ -206,8 +206,8 @@ fn device_greedy_equals_cpu_greedy() {
     let ds = GaussianBlobs::new(3, 7, 0.4).generate(700, 15);
     let dev = DeviceEvaluator::from_dir(artifacts(), &ds, EvalConfig::default()).unwrap();
     let cpu = SingleThread::new(ds.clone());
-    let a = Greedy::new(3).maximize(&dev).unwrap();
-    let b = Greedy::new(3).maximize(&cpu).unwrap();
+    let a = Greedy::new(3).run(&mut exemcl::engine::Session::over(&dev)).unwrap();
+    let b = Greedy::new(3).run(&mut exemcl::engine::Session::over(&cpu)).unwrap();
     assert!(
         (a.value - b.value).abs() < 2e-3 * b.value.abs().max(1.0),
         "device {} vs cpu {}",

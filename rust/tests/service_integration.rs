@@ -4,10 +4,11 @@
 //! Requires `make artifacts` and the `xla-backend` feature.
 #![cfg(feature = "xla-backend")]
 
-use exemcl::coordinator::EvalService;
+use exemcl::coordinator::Service;
 use exemcl::cpu::SingleThread;
 use exemcl::data::synth::GaussianBlobs;
 use exemcl::data::Rng;
+use exemcl::engine::Session;
 use exemcl::optim::{Greedy, LazyGreedy, Optimizer, Oracle, SieveStreaming};
 use exemcl::runtime::{DeviceEvaluator, EvalConfig};
 use exemcl::testkit::assert_allclose;
@@ -21,11 +22,11 @@ fn artifacts() -> String {
     dir
 }
 
-fn spawn_device_service(n: usize, seed: u64) -> (EvalService, exemcl::data::Dataset) {
+fn spawn_device_service(n: usize, seed: u64) -> (Service, exemcl::data::Dataset) {
     let ds = GaussianBlobs::new(4, 7, 0.4).generate(n, seed);
     let ds2 = ds.clone();
     let dir = artifacts();
-    let svc = EvalService::spawn(
+    let svc = Service::spawn(
         move || DeviceEvaluator::from_dir(&dir, &ds2, EvalConfig::default()),
         16,
     )
@@ -75,8 +76,8 @@ fn optimizers_drive_the_service_end_to_end() {
     let h = svc.handle();
     let cpu = SingleThread::new(ds);
 
-    let dev_greedy = Greedy::new(3).maximize(&h).unwrap();
-    let cpu_greedy = Greedy::new(3).maximize(&cpu).unwrap();
+    let dev_greedy = Greedy::new(3).run(&mut Session::over(&h)).unwrap();
+    let cpu_greedy = Greedy::new(3).run(&mut Session::over(&cpu)).unwrap();
     assert!(
         (dev_greedy.value - cpu_greedy.value).abs()
             < 2e-3 * cpu_greedy.value.abs().max(1.0),
@@ -85,10 +86,10 @@ fn optimizers_drive_the_service_end_to_end() {
         cpu_greedy.value
     );
 
-    let lazy = LazyGreedy::new(3).maximize(&h).unwrap();
+    let lazy = LazyGreedy::new(3).run(&mut Session::over(&h)).unwrap();
     assert!((lazy.value - cpu_greedy.value).abs() < 2e-3 * cpu_greedy.value.abs().max(1.0));
 
-    let sieve = SieveStreaming::new(3, 0.25, 7).maximize(&h).unwrap();
+    let sieve = SieveStreaming::new(3, 0.25, 7).run(&mut Session::over(&h)).unwrap();
     assert!(sieve.value >= 0.45 * cpu_greedy.value);
     svc.shutdown();
 }
@@ -118,7 +119,7 @@ fn greedi_runs_threaded_through_the_service() {
     let (svc, ds) = spawn_device_service(600, 21);
     let h = svc.handle();
     let distributed = GreeDi::new(4, 3, 9).run_threaded(&h).unwrap();
-    let central = Greedy::new(4).maximize(&SingleThread::new(ds)).unwrap();
+    let central = Greedy::new(4).run(&mut Session::over(&SingleThread::new(ds))).unwrap();
     assert!(
         distributed.value >= 0.8 * central.value,
         "greedi {} vs central greedy {}",
