@@ -119,7 +119,7 @@ fn main() {
             .dtype(dtype)
             .build()
             .expect("engine");
-        let mut session = engine.session();
+        let mut session = engine.session().expect("session");
         session.commit_many(&exemplars).unwrap();
         let gains = session.gains(&candidates).unwrap();
         gains_by_dtype.push(gains);

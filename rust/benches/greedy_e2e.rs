@@ -80,7 +80,7 @@ fn main() {
                 continue;
             }
             let t0 = Instant::now();
-            let r = opt.run(&mut exemcl::engine::Session::over(oracle)).expect("maximize");
+            let r = opt.run(&mut exemcl::engine::Session::over(oracle)).expect("run");
             let secs = t0.elapsed().as_secs_f64();
             table.row(&[
                 name.to_string(),

@@ -1,0 +1,140 @@
+//! Service wire-payload accounting — the session-protocol headline
+//! number: per-greedy-round bytes on the coordinator wire **before**
+//! (stateless protocol: every `Marginals`/`CommitMany` request and
+//! commit reply shipped the full O(n) `DminState`) vs **after**
+//! (server-resident sessions: indices only).
+//!
+//! Drives a full Greedy run through a server session over `cpu-st`,
+//! reads the measured per-family byte counters, and computes the
+//! stateless baseline analytically from the same request schedule (the
+//! request/reply counts are identical — only the payloads differ).
+//! Asserts the measured traffic is state-free, prints a per-round
+//! table, and writes `BENCH_service_wire.json` for the CI perf
+//! trajectory (override with `EXEMCL_BENCH_SERVICE_WIRE_OUT`).
+//!
+//! Run: `cargo bench --bench service_wire`
+
+use std::time::Instant;
+
+use exemcl::bench::{write_json, JsonValue, Scale, Table};
+use exemcl::coordinator::Service;
+use exemcl::cpu::SingleThread;
+use exemcl::data::synth::GaussianBlobs;
+use exemcl::engine::Session;
+
+/// One greedy round's wire bytes, measured + modeled.
+struct Round {
+    candidates: usize,
+    /// Measured session-protocol bytes (requests + replies).
+    now: u64,
+    /// The same round under the stateless protocol (modeled: identical
+    /// messages plus the state payloads it carried).
+    stateless: u64,
+}
+
+fn main() {
+    let scale = Scale::from_env();
+    let (n, k) = match scale {
+        Scale::Quick => (2_000usize, 8usize),
+        Scale::Default => (20_000, 16),
+        Scale::Full => (50_000, 16),
+    };
+    let d = 16usize;
+    let state_bytes = n as u64 * 4; // the dmin buffer the old protocol shipped
+
+    let ds = GaussianBlobs::new(6, d, 0.4).generate(n, 17);
+    let svc = Service::over(SingleThread::new(ds), 16).expect("service");
+    let h = svc.handle();
+    let m = svc.metrics();
+
+    // drive greedy round-by-round so per-round deltas are observable
+    let mut session = Session::remote(&h).expect("open session");
+    let mut selected = vec![false; n];
+    let mut rounds: Vec<Round> = Vec::with_capacity(k);
+    let t0 = Instant::now();
+    for r in 0..k {
+        let before = m.wire.total();
+        let candidates: Vec<usize> = (0..n).filter(|&i| !selected[i]).collect();
+        let gains = session.gains(&candidates).expect("gains");
+        let best = gains
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .expect("candidates");
+        session.commit(candidates[best]).expect("commit");
+        selected[candidates[best]] = true;
+        let now = m.wire.total() - before;
+        // stateless model, same four messages: marginals req carried
+        // the state + |S|=r exemplars on top of the candidates; the
+        // commit request AND its reply carried the updated state
+        let stateless = now + state_bytes + 8 * r as u64 // marginals req
+            + (state_bytes + 8 * r as u64)               // commit req
+            + (state_bytes + 8 * (r as u64 + 1)); // commit reply
+        rounds.push(Round { candidates: candidates.len(), now, stateless });
+    }
+    let secs = t0.elapsed().as_secs_f64();
+
+    // the session protocol must be state-free: per-round request bytes
+    // are an exact function of the candidate count
+    for (r, round) in rounds.iter().enumerate() {
+        let expect_req = (16 + 8 + 8 * round.candidates as u64) + (16 + 8 + 8);
+        let expect_reply = (16 + 4 * round.candidates as u64) + 16;
+        assert_eq!(
+            round.now,
+            expect_req + expect_reply,
+            "round {r}: wire bytes must be index-only"
+        );
+    }
+
+    let mut table = Table::new(&["round", "|C|", "bytes now", "bytes stateless", "reduction"]);
+    for (r, round) in rounds.iter().enumerate() {
+        table.row(&[
+            r.to_string(),
+            round.candidates.to_string(),
+            round.now.to_string(),
+            round.stateless.to_string(),
+            format!("{:.2}x", round.stateless as f64 / round.now as f64),
+        ]);
+    }
+    table.print();
+
+    let total_now: u64 = rounds.iter().map(|r| r.now).sum();
+    let total_stateless: u64 = rounds.iter().map(|r| r.stateless).sum();
+    let reduction = total_stateless as f64 / total_now as f64;
+    println!(
+        "\nn={n} d={d} k={k}: {total_now}B on the wire vs {total_stateless}B stateless \
+         ({reduction:.2}x less, {secs:.2}s wall)"
+    );
+    println!("service: {}", m.summary());
+
+    let out = std::env::var("EXEMCL_BENCH_SERVICE_WIRE_OUT")
+        .unwrap_or_else(|_| "BENCH_service_wire.json".into());
+    let last = rounds.last().expect("rounds");
+    let path = write_json(
+        &out,
+        &[
+            ("bench", JsonValue::Str("service_wire".into())),
+            ("n", JsonValue::Int(n as i64)),
+            ("d", JsonValue::Int(d as i64)),
+            ("k", JsonValue::Int(k as i64)),
+            ("rounds", JsonValue::Int(rounds.len() as i64)),
+            ("total_bytes_session", JsonValue::Int(total_now as i64)),
+            ("total_bytes_stateless", JsonValue::Int(total_stateless as i64)),
+            ("reduction_factor", JsonValue::Num(reduction)),
+            ("last_round_bytes_session", JsonValue::Int(last.now as i64)),
+            ("last_round_bytes_stateless", JsonValue::Int(last.stateless as i64)),
+            ("marginals_req_bytes", JsonValue::Int(m.wire.marginals_req.get() as i64)),
+            ("marginals_reply_bytes", JsonValue::Int(m.wire.marginals_reply.get() as i64)),
+            ("commit_req_bytes", JsonValue::Int(m.wire.commit_req.get() as i64)),
+            ("commit_reply_bytes", JsonValue::Int(m.wire.commit_reply.get() as i64)),
+            ("open_req_bytes", JsonValue::Int(m.wire.open_req.get() as i64)),
+            ("sessions_opened", JsonValue::Int(m.sessions_opened.get() as i64)),
+            ("wall_seconds", JsonValue::Num(secs)),
+        ],
+    )
+    .expect("write BENCH_service_wire.json");
+    println!("wrote {path}");
+    drop(session);
+    svc.shutdown();
+}

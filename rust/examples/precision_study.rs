@@ -52,7 +52,7 @@ fn main() -> exemcl::Result<()> {
         .dataset(ds.clone())
         .backend(Backend::SingleThread)
         .build()?
-        .session()
+        .session()?
         .eval_sets(&sets)?;
 
     println!("-- CPU dtype mode (multi-thread, centered Gram shadows)");
@@ -62,7 +62,7 @@ fn main() -> exemcl::Result<()> {
             .backend(Backend::Cpu { threads: 0 })
             .dtype(dtype)
             .build()?;
-        let session = engine.session();
+        let session = engine.session()?;
         session.eval_sets(&sets[..1])?; // warm the pool
         let t0 = Instant::now();
         let vals = session.eval_sets(&sets)?;

@@ -30,7 +30,7 @@ fn main() -> exemcl::Result<()> {
 
     // 3. evaluate a *multiset* of candidate summaries in one batch —
     //    the workload the paper's work matrix is built for (§IV-A)
-    let session = engine.session();
+    let session = engine.session()?;
     let candidates = vec![
         vec![0, 1, 2, 3, 4],
         vec![10, 400, 800, 1200, 1600],

@@ -58,19 +58,19 @@ fn main() -> exemcl::Result<()> {
     );
 
     let t0 = Instant::now();
-    let r = SieveStreaming::new(k, 0.2, 0).run_stream(&mut engine.session(), &order)?;
+    let r = SieveStreaming::new(k, 0.2, 0).run_stream(&mut engine.session()?, &order)?;
     report("sieve-streaming", greedy.value, &r, t0.elapsed().as_secs_f64());
 
     let t0 = Instant::now();
-    let r = SieveStreamingPP::new(k, 0.2, 0).run_stream(&mut engine.session(), &order)?;
+    let r = SieveStreamingPP::new(k, 0.2, 0).run_stream(&mut engine.session()?, &order)?;
     report("sieve-streaming++", greedy.value, &r, t0.elapsed().as_secs_f64());
 
     let t0 = Instant::now();
-    let r = ThreeSieves::new(k, 0.2, 200, 0).run_stream(&mut engine.session(), &order)?;
+    let r = ThreeSieves::new(k, 0.2, 200, 0).run_stream(&mut engine.session()?, &order)?;
     report("three-sieves", greedy.value, &r, t0.elapsed().as_secs_f64());
 
     let t0 = Instant::now();
-    let r = Salsa::new(k, 0.3, 0).run_stream(&mut engine.session(), &order)?;
+    let r = Salsa::new(k, 0.3, 0).run_stream(&mut engine.session()?, &order)?;
     report("salsa", greedy.value, &r, t0.elapsed().as_secs_f64());
 
     if let Some(m) = engine.metrics() {

@@ -4,7 +4,7 @@
 
 use std::collections::BTreeMap;
 
-use crate::coordinator::DEFAULT_QUEUE_CAPACITY;
+use crate::coordinator::{DEFAULT_QUEUE_CAPACITY, DEFAULT_SESSION_CAPACITY};
 use crate::data::Dataset;
 use crate::engine::Engine;
 use crate::scalar::Dtype;
@@ -118,6 +118,12 @@ pub struct AppConfig {
     pub memory_mib: usize,
     /// Bounded request-queue capacity for service backends.
     pub queue: usize,
+    /// Maximum live server sessions for service backends (LRU eviction
+    /// past this).
+    pub sessions: usize,
+    /// Idle seconds before a server session may be reclaimed (0 =
+    /// never).
+    pub session_ttl_secs: u64,
     /// Optional CSV input path (overrides the generator).
     pub csv: Option<String>,
 }
@@ -138,6 +144,8 @@ impl Default for AppConfig {
             threads: 0,
             memory_mib: 16 * 1024,
             queue: DEFAULT_QUEUE_CAPACITY,
+            sessions: DEFAULT_SESSION_CAPACITY,
+            session_ttl_secs: 0,
             csv: None,
         }
     }
@@ -162,6 +170,8 @@ impl AppConfig {
             threads,
             memory_mib: raw.get_or("eval.memory_mib", def.memory_mib)?,
             queue: raw.get_or("eval.queue", def.queue)?,
+            sessions: raw.get_or("eval.sessions", def.sessions)?,
+            session_ttl_secs: raw.get_or("eval.session_ttl_secs", def.session_ttl_secs)?,
             csv: raw.get("data.csv").map(str::to_string),
         })
     }
@@ -179,6 +189,8 @@ impl AppConfig {
             .artifacts(self.artifacts.clone())
             .memory_mib(self.memory_mib)
             .queue_capacity(self.queue)
+            .session_capacity(self.sessions)
+            .session_ttl_secs(self.session_ttl_secs)
             .build()
     }
 }
@@ -251,6 +263,31 @@ mod tests {
         );
         let raw = RawConfig::parse("[eval]\nqueue = 7\n").unwrap();
         assert_eq!(AppConfig::from_raw(&raw).unwrap().queue, 7);
+    }
+
+    #[test]
+    fn session_keys_parse_with_defaults() {
+        let def = AppConfig::from_raw(&RawConfig::default()).unwrap();
+        assert_eq!(def.sessions, DEFAULT_SESSION_CAPACITY);
+        assert_eq!(def.session_ttl_secs, 0, "no TTL unless asked for");
+        let raw =
+            RawConfig::parse("[eval]\nsessions = 32\nsession_ttl_secs = 600\n").unwrap();
+        let cfg = AppConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.sessions, 32);
+        assert_eq!(cfg.session_ttl_secs, 600);
+        let raw = RawConfig::parse("[eval]\nsessions = many\n").unwrap();
+        assert!(AppConfig::from_raw(&raw).is_err());
+    }
+
+    #[test]
+    fn auto_backend_key_builds_an_engine() {
+        let raw = RawConfig::parse("[eval]\nbackend = auto\n").unwrap();
+        let cfg = AppConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.backend, Backend::Auto);
+        let ds = crate::data::synth::UniformCube::new(3, 1.0).generate(32, 1);
+        let engine = cfg.engine(ds).unwrap();
+        // tiny dataset, no artifacts → the serial reference
+        assert_eq!(engine.backend(), &Backend::SingleThread);
     }
 
     #[test]

@@ -20,6 +20,66 @@ impl Counter {
     }
 }
 
+/// Published gauge (live session count): the executor is the single
+/// writer and publishes the table size with [`Gauge::set`] after every
+/// mutation.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    /// Overwrite the value.
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+}
+
+/// Logical serialized payload bytes per message family, counted on the
+/// executor as requests are served and replies sent. The accounting
+/// model is the protocol's *wire shape*, not Rust in-memory sizes: every
+/// message pays a 16-byte header, a session id or index is 8 bytes, an
+/// `f32` (gain, dmin entry) is 4 bytes. These counters are how the
+/// wire-accounting tests prove `Marginals`/`CommitMany` traffic is
+/// O(|candidates|), never O(n): only `Open` (an explicit seed) and
+/// `Export` (diagnostics) may carry a dmin buffer.
+#[derive(Debug, Default)]
+pub struct WireBytes {
+    /// `Marginals` request payloads (header + sid + candidate indices).
+    pub marginals_req: Counter,
+    /// `Marginals` reply payloads (header + one f32 per candidate).
+    pub marginals_reply: Counter,
+    /// `CommitMany` request payloads (header + sid + exemplar indices).
+    pub commit_req: Counter,
+    /// `CommitMany` reply payloads (bare acks).
+    pub commit_reply: Counter,
+    /// `Open` request payloads — the one message allowed to carry a
+    /// seed state (O(n), shipped once per seeded session, never per
+    /// round).
+    pub open_req: Counter,
+    /// `Export` reply payloads (O(n) diagnostics, off the hot path).
+    pub export_reply: Counter,
+    /// Everything else: `Value`/`Fork`/`Close` requests + replies and
+    /// `EvalSets` traffic.
+    pub other: Counter,
+}
+
+impl WireBytes {
+    /// Total bytes across all message families.
+    pub fn total(&self) -> u64 {
+        self.marginals_req.get()
+            + self.marginals_reply.get()
+            + self.commit_req.get()
+            + self.commit_reply.get()
+            + self.open_req.get()
+            + self.export_reply.get()
+            + self.other.get()
+    }
+}
+
 /// Histogram over latencies with power-of-two microsecond buckets:
 /// bucket `i` counts samples in `[2^i, 2^(i+1)) µs`; 32 buckets cover
 /// ~1 µs to ~1 h.
@@ -103,6 +163,16 @@ pub struct ServiceMetrics {
     pub gains_evaluated: Counter,
     /// Requests coalesced into a batch beyond the first.
     pub coalesced: Counter,
+    /// Server sessions opened (`Open` + `Fork`).
+    pub sessions_opened: Counter,
+    /// Server sessions closed by an explicit `Close`.
+    pub sessions_closed: Counter,
+    /// Server sessions reclaimed by TTL expiry or capacity pressure.
+    pub sessions_evicted: Counter,
+    /// Live entries in the executor's session table.
+    pub sessions_live: Gauge,
+    /// Logical wire-payload bytes per message family.
+    pub wire: WireBytes,
     /// End-to-end request latency.
     pub latency: LatencyHistogram,
 }
@@ -112,12 +182,18 @@ impl ServiceMetrics {
     pub fn summary(&self) -> String {
         format!(
             "requests={} batches={} coalesced={} sets={} gains={} \
+             sessions(live={} opened={} closed={} evicted={}) wire={}B \
              latency(mean={:.0}us p50={}us p95={}us max={}us)",
             self.requests.get(),
             self.batches.get(),
             self.coalesced.get(),
             self.sets_evaluated.get(),
             self.gains_evaluated.get(),
+            self.sessions_live.get(),
+            self.sessions_opened.get(),
+            self.sessions_closed.get(),
+            self.sessions_evicted.get(),
+            self.wire.total(),
             self.latency.mean_us(),
             self.latency.quantile_us(0.5),
             self.latency.quantile_us(0.95),
@@ -136,6 +212,25 @@ mod tests {
         c.add(3);
         c.add(4);
         assert_eq!(c.get(), 7);
+    }
+
+    #[test]
+    fn gauge_publishes_and_reads() {
+        let g = Gauge::default();
+        assert_eq!(g.get(), 0);
+        g.set(7);
+        assert_eq!(g.get(), 7);
+        g.set(0);
+        assert_eq!(g.get(), 0);
+    }
+
+    #[test]
+    fn wire_bytes_total_sums_families() {
+        let w = WireBytes::default();
+        w.marginals_req.add(10);
+        w.commit_reply.add(5);
+        w.open_req.add(100);
+        assert_eq!(w.total(), 115);
     }
 
     #[test]

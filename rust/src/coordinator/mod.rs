@@ -1,33 +1,66 @@
-//! The evaluation service — the L3 coordination layer.
+//! The evaluation service — the L3 coordination layer, now a **stateful
+//! session server**.
 //!
 //! A [`Service`] pins **any** [`Oracle`] to a dedicated executor thread
 //! and serves concurrent clients through [`ServiceHandle`], a
-//! cheap-to-clone, `Send + Sync` handle that itself implements
-//! [`Oracle`]. Originally this existed because the PJRT device is not
-//! thread-safe; it is now a first-class backend wrapper
-//! ([`crate::engine::Backend::Service`]) over the CPU oracles too, so a
-//! pooled-CPU engine serves concurrent clients through the same
-//! bounded-queue/coalescing path as the device. The request path is:
+//! cheap-to-clone, `Send + Sync` handle. Originally this existed because
+//! the PJRT device is not thread-safe; it is now a first-class backend
+//! wrapper ([`crate::engine::Backend::Service`]) over the CPU oracles
+//! too.
+//!
+//! # The session protocol
+//!
+//! The paper's central lesson is optimizer-aware evaluation: keep the
+//! `d_min` bookkeeping resident next to the compute. The pre-0.4 wire
+//! protocol violated that on the service boundary — every `Marginals` /
+//! `CommitMany` request (and every commit reply) shipped the full
+//! [`DminState`], an O(n) tax per greedy round. The executor now owns a
+//! keyed session table (`SessionId → DminState` + its `L({e0})·n`
+//! constant), and the per-round messages carry **indices only**:
 //!
 //! ```text
-//!   client threads ──bounded queue──▶ executor ──▶ any Oracle (CPU pool,
-//!        ▲                               │          device, ...)
-//!        └────────── reply channels ◀────┘
+//!                 ┌────────────────────── executor thread ──────────────────────┐
+//!   Open{seed?} ──▶ allocate sid ──────────────▶ session table ◀── any Oracle   │
+//!       │           (seed: the ONE message      sid → DminState    (CPU pool,   │
+//!       ▼            allowed to carry state)         + l0          device, ...) │
+//!      sid ◀─────────────────────────────────────────┘                          │
+//!       │                                                                       │
+//!       ├─ Marginals{sid, C}   ──▶ gains against resident dmin ──▶ |C| floats   │
+//!       ├─ CommitMany{sid, I}  ──▶ lower resident dmin          ──▶ ack         │
+//!       ├─ Value{sid}          ──▶ (l0 - Σ dmin)/n              ──▶ 1 float     │
+//!       ├─ Fork{sid}           ──▶ server-side state copy       ──▶ sid'        │
+//!       ├─ Export{sid}         ──▶ state clone (diagnostics)    ──▶ O(n) once   │
+//!       └─ Close{sid}          ──▶ reclaim entry                                │
+//!                 └──────────────────────────────────────────────────────────────┘
 //! ```
+//!
+//! Request payloads for `Marginals`/`CommitMany` are O(|candidates|)
+//! and replies O(|candidates|)/O(1) — the wire-accounting counters in
+//! [`ServiceMetrics::wire`] prove it and `tests/service_sessions.rs`
+//! asserts it. `Open` may carry an explicit seed state (GreeDi ships a
+//! masked partition dmin once per partition); `Export` returns the
+//! state for diagnostics and equivalence tests. Both are off the
+//! per-round path by construction.
+//!
+//! Sessions are reclaimed by explicit `Close` (remote sessions close
+//! themselves on drop), by a TTL sweep run before every served request,
+//! and by LRU eviction when the table exceeds its capacity
+//! ([`SessionConfig`]). A request against a reclaimed id fails with a
+//! `"unknown session"` service error.
 //!
 //! Construction: [`Service::over`] moves a built oracle onto the
 //! executor ([`Send`] backends — the CPU oracles); [`Service::spawn`]
 //! runs a factory *on* the executor thread (non-`Send` backends — the
-//! device evaluator).
+//! device evaluator). `*_with` variants take a [`SessionConfig`].
 //!
-//! The executor **coalesces** adjacent `eval_sets` requests that arrive
-//! while the backend is busy into a single packed work-matrix evaluation —
-//! the multiset batching the paper's §IV-A calls out as the optimizer
-//! workload — and splits the results back per caller. The queue is
-//! bounded, so producers experience backpressure instead of unbounded
-//! memory growth.
+//! The executor still **coalesces** adjacent stateless `eval_sets`
+//! requests that arrive while the backend is busy into a single packed
+//! work-matrix evaluation — the multiset batching of the paper's §IV-A —
+//! and the queue is bounded, so producers get backpressure instead of
+//! unbounded memory growth.
 
 pub mod metrics;
+mod sessions;
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
@@ -38,10 +71,26 @@ use crate::data::Dataset;
 use crate::optim::oracle::{DminState, Oracle};
 use crate::{Error, Result};
 
-pub use metrics::ServiceMetrics;
+pub use metrics::{Counter, Gauge, ServiceMetrics, WireBytes};
+pub use sessions::{SessionConfig, DEFAULT_SESSION_CAPACITY};
+
+use sessions::SessionTable;
 
 /// Maximum queued requests before senders block (backpressure).
 pub const DEFAULT_QUEUE_CAPACITY: usize = 64;
+
+/// Logical per-message wire header, for the byte accounting.
+const WIRE_HEADER: u64 = 16;
+
+/// An explicit opening state for [`ServiceHandle::open_seeded`] — the
+/// one message in the protocol allowed to carry a dmin buffer.
+pub struct SessionSeed {
+    /// Initial optimizer state (e.g. a partition-masked dmin).
+    pub state: DminState,
+    /// `L({e0})·n` the session's `Value` replies use (partition
+    /// sessions restrict it to their members).
+    pub l0: f64,
+}
 
 enum Request {
     EvalSets {
@@ -49,32 +98,59 @@ enum Request {
         reply: mpsc::Sender<Result<Vec<f32>>>,
         enqueued: Instant,
     },
+    Open {
+        seed: Option<Box<SessionSeed>>,
+        reply: mpsc::Sender<Result<u64>>,
+        enqueued: Instant,
+    },
     Marginals {
-        state: DminState,
+        sid: u64,
         candidates: Vec<usize>,
         reply: mpsc::Sender<Result<Vec<f32>>>,
         enqueued: Instant,
     },
     CommitMany {
-        state: DminState,
+        sid: u64,
         idxs: Vec<usize>,
+        reply: mpsc::Sender<Result<()>>,
+        enqueued: Instant,
+    },
+    Value {
+        sid: u64,
+        reply: mpsc::Sender<Result<f32>>,
+        enqueued: Instant,
+    },
+    Fork {
+        sid: u64,
+        reply: mpsc::Sender<Result<u64>>,
+        enqueued: Instant,
+    },
+    Export {
+        sid: u64,
         reply: mpsc::Sender<Result<DminState>>,
         enqueued: Instant,
+    },
+    Close {
+        sid: u64,
+        /// `None` for the fire-and-forget drop path.
+        reply: Option<mpsc::Sender<Result<()>>>,
     },
     Shutdown,
 }
 
-/// A `Send + Sync` client handle to the evaluation service. Implements
-/// [`Oracle`], so optimizers can run against the service transparently
-/// (and from multiple threads at once).
+/// A `Send + Sync` client handle to the evaluation service. Stateless
+/// multiset evaluation goes through [`ServiceHandle::eval_sets`];
+/// optimizer state lives server-side in sessions opened with
+/// [`ServiceHandle::open`] (what [`crate::engine::Session`] wraps for
+/// service engines).
 pub struct ServiceHandle {
     tx: mpsc::SyncSender<Request>,
     metrics: Arc<ServiceMetrics>,
     dataset: Dataset,
     l0: f64,
-    /// The backend's fresh-state template, captured at spawn — the
-    /// backend may use a non-squared-Euclidean dissimilarity, so the
-    /// trait-default `dmin = sq_norms` would be wrong here.
+    /// The backend's fresh-state template, captured at spawn — clients
+    /// need it to build seeded opens (e.g. GreeDi's partition masks)
+    /// without a server round-trip.
     init_state: DminState,
     backend_name: String,
     queue_depth: Arc<AtomicUsize>,
@@ -100,28 +176,43 @@ pub struct Service {
     join: Option<std::thread::JoinHandle<()>>,
 }
 
-/// Pre-engine name for [`Service`], kept so the old device-era call
-/// sites compile for one release.
-#[deprecated(since = "0.3.0", note = "renamed to `Service` (`Service::over` / `Service::spawn`)")]
-pub type EvalService = Service;
-
 impl Service {
     /// Put an already-built oracle behind the executor: the service
-    /// front door for `Send` backends (both CPU oracles qualify). The
-    /// oracle moves onto the executor thread; clients reach it through
-    /// cloned [`ServiceHandle`]s.
+    /// front door for `Send` backends (both CPU oracles qualify), with
+    /// the default session policy.
     pub fn over<O>(oracle: O, queue_capacity: usize) -> Result<Self>
     where
         O: Oracle + Send + 'static,
     {
-        Self::spawn(move || Ok(oracle), queue_capacity)
+        Self::over_with(oracle, queue_capacity, SessionConfig::default())
     }
 
-    /// Spawn the executor thread. `make_oracle` runs **on the executor
-    /// thread** (the device evaluator is not `Send`), builds the backing
-    /// oracle and must be infallible enough to report errors through the
-    /// returned `Result`.
+    /// [`Service::over`] with an explicit session eviction policy.
+    pub fn over_with<O>(oracle: O, queue_capacity: usize, sessions: SessionConfig) -> Result<Self>
+    where
+        O: Oracle + Send + 'static,
+    {
+        Self::spawn_with(move || Ok(oracle), queue_capacity, sessions)
+    }
+
+    /// Spawn the executor thread with the default session policy.
+    /// `make_oracle` runs **on the executor thread** (the device
+    /// evaluator is not `Send`), builds the backing oracle and reports
+    /// failure through the returned `Result`.
     pub fn spawn<F, O>(make_oracle: F, queue_capacity: usize) -> Result<Self>
+    where
+        F: FnOnce() -> Result<O> + Send + 'static,
+        O: Oracle + 'static,
+    {
+        Self::spawn_with(make_oracle, queue_capacity, SessionConfig::default())
+    }
+
+    /// [`Service::spawn`] with an explicit session eviction policy.
+    pub fn spawn_with<F, O>(
+        make_oracle: F,
+        queue_capacity: usize,
+        sessions: SessionConfig,
+    ) -> Result<Self>
     where
         F: FnOnce() -> Result<O> + Send + 'static,
         O: Oracle + 'static,
@@ -152,7 +243,7 @@ impl Service {
                         return;
                     }
                 };
-                executor_loop(&oracle, &rx, &m2, &qd2);
+                executor_loop(&oracle, &rx, &m2, &qd2, sessions);
             })
             .map_err(|e| Error::Service(format!("cannot spawn executor: {e}")))?;
 
@@ -180,7 +271,7 @@ impl Service {
     }
 
     /// Borrow the service's own handle without cloning (what
-    /// `Engine::session` wraps).
+    /// `Engine::session` opens sessions through).
     pub fn handle_ref(&self) -> &ServiceHandle {
         &self.handle
     }
@@ -213,7 +304,9 @@ fn executor_loop(
     rx: &mpsc::Receiver<Request>,
     metrics: &ServiceMetrics,
     queue_depth: &AtomicUsize,
+    sessions: SessionConfig,
 ) {
+    let mut table = SessionTable::new(sessions);
     loop {
         let first = match rx.recv() {
             Ok(Request::Shutdown) | Err(_) => return,
@@ -221,20 +314,29 @@ fn executor_loop(
         };
         queue_depth.fetch_sub(1, Ordering::Relaxed);
 
+        // TTL sweep before serving: idle sessions are reclaimed even if
+        // their owner never sends Close.
+        let expired = table.sweep();
+        if expired > 0 {
+            metrics.sessions_evicted.add(expired as u64);
+            metrics.sessions_live.set(table.len() as u64);
+        }
+
         match first {
             Request::EvalSets { sets, reply, enqueued } => {
                 // coalesce: drain any further eval_sets already queued
                 let mut batch = vec![(sets, reply, enqueued)];
                 let mut leftover = None;
                 while let Ok(next) = rx.try_recv() {
-                    queue_depth.fetch_sub(1, Ordering::Relaxed);
                     match next {
                         Request::EvalSets { sets, reply, enqueued } => {
+                            queue_depth.fetch_sub(1, Ordering::Relaxed);
                             metrics.coalesced.add(1);
                             batch.push((sets, reply, enqueued));
                         }
                         Request::Shutdown => return,
                         other => {
+                            queue_depth.fetch_sub(1, Ordering::Relaxed);
                             leftover = Some(other);
                             break;
                         }
@@ -242,10 +344,10 @@ fn executor_loop(
                 }
                 serve_eval_batch(oracle, batch, metrics);
                 if let Some(other) = leftover {
-                    serve_single(oracle, other, metrics);
+                    serve_single(oracle, &mut table, other, metrics);
                 }
             }
-            other => serve_single(oracle, other, metrics),
+            other => serve_single(oracle, &mut table, other, metrics),
         }
         metrics.batches.add(1);
     }
@@ -262,6 +364,8 @@ fn serve_eval_batch(
     for (sets, _, _) in &batch {
         splits.push(sets.len());
         all_sets.extend(sets.iter().cloned());
+        let bytes: u64 = sets.iter().map(|s| 8 + 8 * s.len() as u64).sum();
+        metrics.wire.other.add(WIRE_HEADER + bytes);
     }
     metrics.sets_evaluated.add(all_sets.len() as u64);
     let result = oracle.eval_sets(&all_sets);
@@ -271,6 +375,7 @@ fn serve_eval_batch(
             for ((_, reply, enqueued), count) in batch.into_iter().zip(splits) {
                 let slice = values[off..off + count].to_vec();
                 off += count;
+                metrics.wire.other.add(WIRE_HEADER + 4 * count as u64);
                 metrics.latency.observe(enqueued.elapsed());
                 let _ = reply.send(Ok(slice));
             }
@@ -278,6 +383,7 @@ fn serve_eval_batch(
         Err(e) => {
             let msg = e.to_string();
             for (_, reply, enqueued) in batch {
+                metrics.wire.other.add(WIRE_HEADER);
                 metrics.latency.observe(enqueued.elapsed());
                 let _ = reply.send(Err(Error::Service(msg.clone())));
             }
@@ -285,26 +391,113 @@ fn serve_eval_batch(
     }
 }
 
-fn serve_single(oracle: &dyn Oracle, req: Request, metrics: &ServiceMetrics) {
+/// Serve one non-coalescable request against the session table.
+fn serve_single(
+    oracle: &dyn Oracle,
+    table: &mut SessionTable,
+    req: Request,
+    metrics: &ServiceMetrics,
+) {
     match req {
         Request::EvalSets { sets, reply, enqueued } => {
-            metrics.sets_evaluated.add(sets.len() as u64);
-            let r = oracle.eval_sets(&sets);
-            metrics.latency.observe(enqueued.elapsed());
-            let _ = reply.send(r);
+            serve_eval_batch(oracle, vec![(sets, reply, enqueued)], metrics);
         }
-        Request::Marginals { state, candidates, reply, enqueued } => {
+        Request::Open { seed, reply, enqueued } => {
+            // a seed ships its l0 (8), the dmin buffer (4·n) and its
+            // exemplar indices (8 each)
+            let seed_bytes = seed
+                .as_ref()
+                .map(|s| 8 + 4 * s.state.dmin.len() as u64 + 8 * s.state.exemplars.len() as u64)
+                .unwrap_or(0);
+            metrics.wire.open_req.add(WIRE_HEADER + seed_bytes);
+            // reject malformed seeds here: a wrong-sized dmin admitted
+            // into the table would fail (or, on the device path, panic)
+            // inside every later request against this session
+            if let Some(s) = &seed {
+                let n = oracle.dataset().n();
+                if s.state.dmin.len() != n {
+                    metrics.latency.observe(enqueued.elapsed());
+                    let _ = reply.send(Err(Error::InvalidArgument(format!(
+                        "seed state has {} dmin entries, dataset has {n}",
+                        s.state.dmin.len()
+                    ))));
+                    return;
+                }
+                if let Some(&bad) = s.state.exemplars.iter().find(|&&e| e >= n) {
+                    metrics.latency.observe(enqueued.elapsed());
+                    let _ = reply.send(Err(Error::InvalidArgument(format!(
+                        "seed exemplar {bad} out of range (n = {n})"
+                    ))));
+                    return;
+                }
+            }
+            let (state, l0) = match seed {
+                Some(s) => (s.state, s.l0),
+                None => (oracle.init_state(), oracle.l0_sum()),
+            };
+            let (sid, evicted) = table.open(state, l0);
+            metrics.sessions_opened.add(1);
+            metrics.sessions_evicted.add(evicted as u64);
+            metrics.sessions_live.set(table.len() as u64);
+            metrics.wire.other.add(WIRE_HEADER + 8);
+            metrics.latency.observe(enqueued.elapsed());
+            let _ = reply.send(Ok(sid));
+        }
+        Request::Marginals { sid, candidates, reply, enqueued } => {
+            metrics.wire.marginals_req.add(WIRE_HEADER + 8 + 8 * candidates.len() as u64);
             metrics.gains_evaluated.add(candidates.len() as u64);
-            let r = oracle.marginal_gains(&state, &candidates);
+            let r = table
+                .get_mut(sid)
+                .and_then(|e| oracle.marginal_gains(&e.state, &candidates));
+            let reply_bytes = r.as_ref().map(|g| 4 * g.len() as u64).unwrap_or(0);
+            metrics.wire.marginals_reply.add(WIRE_HEADER + reply_bytes);
             metrics.latency.observe(enqueued.elapsed());
             let _ = reply.send(r);
         }
-        Request::CommitMany { mut state, idxs, reply, enqueued } => {
-            // one batched pass on the backend (CPU oracles fuse the whole
-            // exemplar batch into a single ground-set stream)
-            let r = oracle.commit_many(&mut state, &idxs).map(|()| state);
+        Request::CommitMany { sid, idxs, reply, enqueued } => {
+            metrics.wire.commit_req.add(WIRE_HEADER + 8 + 8 * idxs.len() as u64);
+            // one batched pass on the backend (CPU oracles fuse the
+            // whole exemplar batch into a single ground-set stream)
+            let r = table.get_mut(sid).and_then(|e| oracle.commit_many(&mut e.state, &idxs));
+            metrics.wire.commit_reply.add(WIRE_HEADER);
             metrics.latency.observe(enqueued.elapsed());
             let _ = reply.send(r);
+        }
+        Request::Value { sid, reply, enqueued } => {
+            metrics.wire.other.add(2 * WIRE_HEADER + 8 + 4);
+            let r = table.get_mut(sid).and_then(|e| e.state.f_value(e.l0));
+            metrics.latency.observe(enqueued.elapsed());
+            let _ = reply.send(r);
+        }
+        Request::Fork { sid, reply, enqueued } => {
+            metrics.wire.other.add(2 * WIRE_HEADER + 16);
+            let r = table.fork(sid).map(|(sid2, evicted)| {
+                metrics.sessions_opened.add(1);
+                metrics.sessions_evicted.add(evicted as u64);
+                sid2
+            });
+            metrics.sessions_live.set(table.len() as u64);
+            metrics.latency.observe(enqueued.elapsed());
+            let _ = reply.send(r);
+        }
+        Request::Export { sid, reply, enqueued } => {
+            metrics.wire.other.add(WIRE_HEADER + 8);
+            let r = table.get_mut(sid).map(|e| e.state.clone());
+            let reply_bytes = r.as_ref().map(|s| 4 * s.dmin.len() as u64).unwrap_or(0);
+            metrics.wire.export_reply.add(WIRE_HEADER + reply_bytes);
+            metrics.latency.observe(enqueued.elapsed());
+            let _ = reply.send(r);
+        }
+        Request::Close { sid, reply } => {
+            metrics.wire.other.add(WIRE_HEADER + 8);
+            if table.close(sid) {
+                metrics.sessions_closed.add(1);
+            }
+            metrics.sessions_live.set(table.len() as u64);
+            if let Some(reply) = reply {
+                metrics.wire.other.add(WIRE_HEADER);
+                let _ = reply.send(Ok(()));
+            }
         }
         Request::Shutdown => {}
     }
@@ -319,6 +512,31 @@ impl ServiceHandle {
             .map_err(|_| Error::Service("executor has shut down".into()))
     }
 
+    /// Send for the drop path: non-blocking first, falling back to a
+    /// blocking send when the queue is merely full (a live executor
+    /// will drain it — dropping the message instead would leak the
+    /// server-side session until capacity eviction). Gives up only
+    /// when the executor is gone.
+    fn send_or_wait(&self, req: Request) {
+        match self.tx.try_send(req) {
+            Ok(()) => {
+                self.metrics.requests.add(1);
+                self.queue_depth.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(mpsc::TrySendError::Full(req)) => {
+                let _ = self.send(req);
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => {}
+        }
+    }
+
+    /// One request/reply round-trip.
+    fn request<T>(&self, make: impl FnOnce(mpsc::Sender<Result<T>>) -> Request) -> Result<T> {
+        let (reply, rx) = mpsc::channel();
+        self.send(make(reply))?;
+        rx.recv().map_err(|_| Error::Service("executor dropped reply".into()))?
+    }
+
     /// Current queued request count (backpressure observability).
     pub fn queue_depth(&self) -> usize {
         self.queue_depth.load(Ordering::Relaxed)
@@ -328,65 +546,191 @@ impl ServiceHandle {
     pub fn metrics(&self) -> &ServiceMetrics {
         &self.metrics
     }
-}
 
-impl Oracle for ServiceHandle {
-    fn dataset(&self) -> &Dataset {
+    /// The ground set the backend summarizes.
+    pub fn dataset(&self) -> &Dataset {
         &self.dataset
     }
 
-    fn init_state(&self) -> DminState {
-        // the backend's own fresh state (dissimilarity-aware), not the
-        // trait-default squared-norm one
+    /// The backend's fresh-state template (dissimilarity-aware),
+    /// captured at spawn — what seeded opens start from.
+    pub fn init_state(&self) -> DminState {
         self.init_state.clone()
     }
 
-    fn eval_sets(&self, sets: &[Vec<usize>]) -> Result<Vec<f32>> {
-        let (reply, rx) = mpsc::channel();
-        self.send(Request::EvalSets {
+    /// `L({e0})·n` of the backend's dissimilarity.
+    pub fn l0_sum(&self) -> f64 {
+        self.l0
+    }
+
+    /// Descriptive name (`service[<backend>]`).
+    pub fn name(&self) -> String {
+        format!("service[{}]", self.backend_name)
+    }
+
+    /// Evaluate `f(S)` for arbitrary index sets — the stateless multiset
+    /// fast path; adjacent requests coalesce on the executor.
+    pub fn eval_sets(&self, sets: &[Vec<usize>]) -> Result<Vec<f32>> {
+        self.request(|reply| Request::EvalSets {
             sets: sets.to_vec(),
             reply,
             enqueued: Instant::now(),
-        })?;
-        rx.recv().map_err(|_| Error::Service("executor dropped reply".into()))?
+        })
     }
 
-    fn marginal_gains(&self, state: &DminState, candidates: &[usize]) -> Result<Vec<f32>> {
-        let (reply, rx) = mpsc::channel();
-        self.send(Request::Marginals {
-            state: state.clone(),
-            candidates: candidates.to_vec(),
+    /// Open a fresh server session (empty summary, the backend's own
+    /// init state).
+    pub fn open(&self) -> Result<RemoteSession<'_>> {
+        self.open_inner(None)
+    }
+
+    /// Open a server session from an explicit state — the one O(n)
+    /// transfer in a session's lifetime (GreeDi ships masked partition
+    /// dmins this way). `l0` is the Definition-5 constant `Value`
+    /// replies use.
+    pub fn open_seeded(&self, state: DminState, l0: f64) -> Result<RemoteSession<'_>> {
+        let exemplars = state.exemplars.clone();
+        let mut s = self.open_inner(Some(Box::new(SessionSeed { state, l0 })))?;
+        s.exemplars = exemplars;
+        Ok(s)
+    }
+
+    fn open_inner(&self, seed: Option<Box<SessionSeed>>) -> Result<RemoteSession<'_>> {
+        let sid = self.request(|reply| Request::Open {
+            seed,
             reply,
             enqueued: Instant::now(),
         })?;
-        rx.recv().map_err(|_| Error::Service("executor dropped reply".into()))?
+        Ok(RemoteSession { handle: self, sid, exemplars: Vec::new(), closed: false })
+    }
+}
+
+/// A client handle to one **server-resident** session: the dmin buffer
+/// lives in the executor's table, this side holds only the session id
+/// and an index mirror of the committed exemplars. Every verb ships
+/// indices (or nothing) — never the state.
+///
+/// Dropping a `RemoteSession` sends `Close` (waiting out a full queue;
+/// skipped only if the executor is gone); call [`RemoteSession::close`]
+/// for a confirmed reclaim. Obtained from
+/// [`ServiceHandle::open`] / [`ServiceHandle::open_seeded`]; optimizer
+/// code normally drives it through [`crate::engine::Session`].
+pub struct RemoteSession<'a> {
+    handle: &'a ServiceHandle,
+    sid: u64,
+    /// Client-side mirror of the committed exemplar indices (order
+    /// preserved) — O(k), not O(n).
+    exemplars: Vec<usize>,
+    closed: bool,
+}
+
+impl<'a> RemoteSession<'a> {
+    /// The server-side session id.
+    pub fn sid(&self) -> u64 {
+        self.sid
     }
 
-    fn commit(&self, state: &mut DminState, idx: usize) -> Result<()> {
-        // a single commit is just a one-element batch
-        self.commit_many(state, &[idx])
+    /// The handle this session talks through.
+    pub fn handle(&self) -> &'a ServiceHandle {
+        self.handle
     }
 
-    fn commit_many(&self, state: &mut DminState, idxs: &[usize]) -> Result<()> {
-        // one request round-trip for the whole batch (the default would
-        // pay queue + reply latency once per exemplar)
-        let (reply, rx) = mpsc::channel();
-        self.send(Request::CommitMany {
-            state: state.clone(),
+    /// Committed exemplars, in commit order (client-side mirror).
+    pub fn exemplars(&self) -> &[usize] {
+        &self.exemplars
+    }
+
+    /// Marginal gains against the server-resident state. Wire cost:
+    /// O(|candidates|) out, O(|candidates|) back.
+    pub fn gains(&self, candidates: &[usize]) -> Result<Vec<f32>> {
+        self.handle.request(|reply| Request::Marginals {
+            sid: self.sid,
+            candidates: candidates.to_vec(),
+            reply,
+            enqueued: Instant::now(),
+        })
+    }
+
+    /// Commit a batch of exemplars into the server state. Wire cost:
+    /// O(|idxs|) out, O(1) back.
+    pub fn commit_many(&mut self, idxs: &[usize]) -> Result<()> {
+        self.handle.request(|reply| Request::CommitMany {
+            sid: self.sid,
             idxs: idxs.to_vec(),
             reply,
             enqueued: Instant::now(),
         })?;
-        *state = rx.recv().map_err(|_| Error::Service("executor dropped reply".into()))??;
+        self.exemplars.extend_from_slice(idxs);
         Ok(())
     }
 
-    fn l0_sum(&self) -> f64 {
-        self.l0
+    /// `f(S)` of the server-resident summary (one float back).
+    pub fn value(&self) -> Result<f32> {
+        self.handle.request(|reply| Request::Value {
+            sid: self.sid,
+            reply,
+            enqueued: Instant::now(),
+        })
     }
 
-    fn name(&self) -> String {
-        format!("service[{}]", self.backend_name)
+    /// Fork into a new server session: the state copy happens in the
+    /// executor's table, nothing crosses the wire but the new id.
+    pub fn fork(&self) -> Result<RemoteSession<'a>> {
+        let sid = self.handle.request(|reply| Request::Fork {
+            sid: self.sid,
+            reply,
+            enqueued: Instant::now(),
+        })?;
+        Ok(RemoteSession {
+            handle: self.handle,
+            sid,
+            exemplars: self.exemplars.clone(),
+            closed: false,
+        })
+    }
+
+    /// Download the full server state — O(n), for diagnostics and
+    /// equivalence tests only; never on an optimizer hot path.
+    pub fn export(&self) -> Result<DminState> {
+        self.handle.request(|reply| Request::Export {
+            sid: self.sid,
+            reply,
+            enqueued: Instant::now(),
+        })
+    }
+
+    /// Close the session and wait for the server to reclaim it.
+    pub fn close(mut self) -> Result<()> {
+        self.closed = true;
+        let (reply, rx) = mpsc::channel();
+        self.handle.send(Request::Close { sid: self.sid, reply: Some(reply) })?;
+        rx.recv().map_err(|_| Error::Service("executor dropped reply".into()))?
+    }
+
+    /// Close this session and reopen a fresh one in its place. The
+    /// `Close` is queued ahead of the `Open` (FIFO), so the table never
+    /// holds both — a reset can't transiently evict an innocent LRU
+    /// session at capacity.
+    pub fn reset(&mut self) -> Result<()> {
+        self.handle.send(Request::Close { sid: self.sid, reply: None })?;
+        self.closed = true; // old sid is gone whatever happens next
+        let sid = self.handle.request(|reply| Request::Open {
+            seed: None,
+            reply,
+            enqueued: Instant::now(),
+        })?;
+        self.sid = sid;
+        self.closed = false;
+        self.exemplars.clear();
+        Ok(())
+    }
+}
+
+impl Drop for RemoteSession<'_> {
+    fn drop(&mut self) {
+        if !self.closed {
+            self.handle.send_or_wait(Request::Close { sid: self.sid, reply: None });
+        }
     }
 }
 
@@ -398,61 +742,110 @@ mod tests {
     use crate::engine::Session;
     use crate::optim::{Greedy, Optimizer};
 
+    fn cpu_oracle() -> SingleThread {
+        SingleThread::new(UniformCube::new(4, 1.0).generate(64, 3))
+    }
+
     fn spawn_cpu_service() -> Service {
-        Service::over(SingleThread::new(UniformCube::new(4, 1.0).generate(64, 3)), 8).unwrap()
+        Service::over(cpu_oracle(), 8).unwrap()
     }
 
     #[test]
     fn service_matches_direct_oracle() {
         let svc = spawn_cpu_service();
         let h = svc.handle();
-        let direct = SingleThread::new(UniformCube::new(4, 1.0).generate(64, 3));
+        let direct = cpu_oracle();
         let sets = vec![vec![0, 1], vec![5, 6, 7]];
         assert_eq!(h.eval_sets(&sets).unwrap(), direct.eval_sets(&sets).unwrap());
         svc.shutdown();
     }
 
     #[test]
-    fn service_marginals_and_commit_roundtrip() {
+    fn session_marginals_and_commit_roundtrip() {
         let svc = spawn_cpu_service();
         let h = svc.handle();
-        let mut state = h.init_state();
-        h.commit(&mut state, 3).unwrap();
-        assert_eq!(state.exemplars, vec![3]);
-        let gains = h.marginal_gains(&state, &[3]).unwrap();
+        let mut s = h.open().unwrap();
+        s.commit_many(&[3]).unwrap();
+        assert_eq!(s.exemplars(), &[3]);
+        let gains = s.gains(&[3]).unwrap();
         assert!(gains[0].abs() < 1e-6, "re-adding exemplar should gain 0");
+        // the server state matches a locally-threaded one exactly
+        let direct = cpu_oracle();
+        let mut want = direct.init_state();
+        direct.commit(&mut want, 3).unwrap();
+        assert_eq!(s.export().unwrap().dmin, want.dmin);
         svc.shutdown();
     }
 
     #[test]
-    fn commit_many_roundtrips_in_one_request() {
+    fn commit_many_is_one_index_only_request() {
         let svc = spawn_cpu_service();
         let h = svc.handle();
+        let mut s = h.open().unwrap();
         let before = svc.metrics().requests.get();
-        let mut state = h.init_state();
-        h.commit_many(&mut state, &[1, 4, 9]).unwrap();
-        assert_eq!(state.exemplars, vec![1, 4, 9]);
+        let commit_bytes_before = svc.metrics().wire.commit_req.get();
+        s.commit_many(&[1, 4, 9]).unwrap();
+        assert_eq!(s.exemplars(), &[1, 4, 9]);
         // one request for the whole batch, not one per exemplar
         assert_eq!(svc.metrics().requests.get(), before + 1);
+        // ... and its payload is indices only: header + sid + 3 indices
+        assert_eq!(svc.metrics().wire.commit_req.get() - commit_bytes_before, 16 + 8 + 3 * 8);
         // state matches sequential commits on a direct oracle
-        let direct = SingleThread::new(UniformCube::new(4, 1.0).generate(64, 3));
+        let direct = cpu_oracle();
         let mut want = direct.init_state();
         for &e in &[1usize, 4, 9] {
             direct.commit(&mut want, e).unwrap();
         }
-        for (a, b) in state.dmin.iter().zip(&want.dmin) {
+        let got = s.export().unwrap();
+        for (a, b) in got.dmin.iter().zip(&want.dmin) {
             assert!((a - b).abs() < 1e-6);
         }
         svc.shutdown();
     }
 
     #[test]
-    fn greedy_runs_through_service() {
+    fn greedy_runs_through_a_remote_session() {
         let svc = spawn_cpu_service();
         let h = svc.handle();
-        let r = Greedy::new(4).run(&mut Session::over(&h)).unwrap();
+        let r = Greedy::new(4).run(&mut Session::remote(&h).unwrap()).unwrap();
         assert_eq!(r.exemplars.len(), 4);
         assert!(svc.metrics().requests.get() > 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn fork_diverges_and_close_reclaims() {
+        let svc = spawn_cpu_service();
+        let h = svc.handle();
+        let mut a = h.open().unwrap();
+        a.commit_many(&[2]).unwrap();
+        let mut b = a.fork().unwrap();
+        b.commit_many(&[9]).unwrap();
+        assert_eq!(a.exemplars(), &[2], "parent did not move");
+        assert_eq!(b.exemplars(), &[2, 9]);
+        assert_eq!(svc.metrics().sessions_live.get(), 2);
+        let sid_a = a.sid();
+        a.close().unwrap();
+        b.close().unwrap();
+        assert_eq!(svc.metrics().sessions_live.get(), 0);
+        assert_eq!(svc.metrics().sessions_closed.get(), 2);
+        // a closed sid is gone
+        let c = h.open().unwrap();
+        assert_ne!(c.sid(), sid_a);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn dropping_a_session_closes_it() {
+        let svc = spawn_cpu_service();
+        let h = svc.handle();
+        {
+            let _s = h.open().unwrap();
+            assert_eq!(svc.metrics().sessions_live.get(), 1);
+        }
+        // the drop-path Close is async; nudge the executor and check
+        let _ = h.eval_sets(&[vec![0]]).unwrap();
+        assert_eq!(svc.metrics().sessions_live.get(), 0);
         svc.shutdown();
     }
 
@@ -475,6 +868,23 @@ mod tests {
         svc.shutdown();
     }
 
+    /// Malformed seeds are rejected at `Open` instead of poisoning the
+    /// table (a wrong-sized dmin would blow up inside later requests).
+    #[test]
+    fn open_seeded_rejects_malformed_states() {
+        let svc = spawn_cpu_service();
+        let h = svc.handle();
+        let wrong_n = DminState { dmin: vec![1.0; 7], exemplars: vec![] };
+        assert!(h.open_seeded(wrong_n, 7.0).is_err());
+        let bad_exemplar = DminState { dmin: vec![1.0; 64], exemplars: vec![64] };
+        assert!(h.open_seeded(bad_exemplar, 64.0).is_err());
+        assert_eq!(svc.metrics().sessions_live.get(), 0);
+        // a valid seed still opens
+        let good = h.open_seeded(h.init_state(), h.l0_sum()).unwrap();
+        assert!(good.gains(&[0]).is_ok());
+        svc.shutdown();
+    }
+
     #[test]
     fn spawn_failure_propagates() {
         let r = Service::spawn(
@@ -490,5 +900,6 @@ mod tests {
         let h = svc.handle();
         svc.shutdown();
         assert!(h.eval_sets(&[vec![0]]).is_err());
+        assert!(h.open().is_err());
     }
 }

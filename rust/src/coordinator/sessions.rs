@@ -1,0 +1,213 @@
+//! The executor's keyed session-state table — the server side of the
+//! stateful protocol.
+//!
+//! Each entry owns one optimizer state ([`DminState`]) plus the
+//! Definition-5 constant `L({e0})·n` it is evaluated against (seeded
+//! partition sessions restrict `l0` to their members). The table is the
+//! generalization of the device path's on-device dmin caching: state
+//! lives next to the compute, so `Marginals`/`CommitMany` requests carry
+//! indices only.
+//!
+//! Reclamation is two-fold and both paths count into
+//! [`super::ServiceMetrics`]:
+//!
+//! * **`Close`** — the client is done (remote sessions close themselves
+//!   on drop);
+//! * **eviction** — a TTL sweep runs before every served request, and
+//!   opening past `capacity` evicts the least-recently-used entry. A
+//!   later request against an evicted id fails with a
+//!   `"unknown session"` service error; clients reopen.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use crate::optim::oracle::DminState;
+use crate::{Error, Result};
+
+/// Default ceiling on live sessions per executor.
+pub const DEFAULT_SESSION_CAPACITY: usize = 1024;
+
+/// Eviction policy for the executor's session table.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SessionConfig {
+    /// Maximum live sessions; opening past this evicts the LRU entry
+    /// (min 1).
+    pub capacity: usize,
+    /// Idle time after which a session may be reclaimed; `None` never
+    /// expires.
+    pub ttl: Option<Duration>,
+}
+
+impl Default for SessionConfig {
+    fn default() -> Self {
+        Self { capacity: DEFAULT_SESSION_CAPACITY, ttl: None }
+    }
+}
+
+/// One server-resident session.
+pub(crate) struct SessionEntry {
+    /// The optimizer state, resident next to the oracle.
+    pub state: DminState,
+    /// `L({e0})·n` for this session's `Value` replies (partition
+    /// sessions carry a restricted constant).
+    pub l0: f64,
+    /// Last request touch, for TTL + LRU.
+    last_used: Instant,
+}
+
+/// `SessionId → DminState` table with TTL + capacity eviction. Lives on
+/// the executor thread; never crosses it.
+pub(crate) struct SessionTable {
+    entries: HashMap<u64, SessionEntry>,
+    next_id: u64,
+    cfg: SessionConfig,
+}
+
+fn unknown(sid: u64) -> Error {
+    Error::Service(format!("unknown session {sid} (closed or evicted)"))
+}
+
+impl SessionTable {
+    pub fn new(cfg: SessionConfig) -> Self {
+        Self {
+            entries: HashMap::new(),
+            next_id: 1,
+            cfg: SessionConfig { capacity: cfg.capacity.max(1), ..cfg },
+        }
+    }
+
+    /// Live session count.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Insert a new session; returns its id plus how many entries were
+    /// evicted to make room.
+    pub fn open(&mut self, state: DminState, l0: f64) -> (u64, usize) {
+        let evicted = self.make_room();
+        let sid = self.next_id;
+        self.next_id += 1;
+        self.entries.insert(sid, SessionEntry { state, l0, last_used: Instant::now() });
+        (sid, evicted)
+    }
+
+    /// Copy-fork `sid` into a fresh session (server-side state copy —
+    /// nothing crosses the wire).
+    pub fn fork(&mut self, sid: u64) -> Result<(u64, usize)> {
+        let (state, l0) = {
+            let e = self.get_mut(sid)?;
+            (e.state.clone(), e.l0)
+        };
+        Ok(self.open(state, l0))
+    }
+
+    /// Borrow a session mutably, touching its LRU stamp.
+    pub fn get_mut(&mut self, sid: u64) -> Result<&mut SessionEntry> {
+        let e = self.entries.get_mut(&sid).ok_or_else(|| unknown(sid))?;
+        e.last_used = Instant::now();
+        Ok(e)
+    }
+
+    /// Remove a session; `true` if it existed.
+    pub fn close(&mut self, sid: u64) -> bool {
+        self.entries.remove(&sid).is_some()
+    }
+
+    /// Drop every entry idle past the TTL; returns the evicted count.
+    pub fn sweep(&mut self) -> usize {
+        let Some(ttl) = self.cfg.ttl else { return 0 };
+        let before = self.entries.len();
+        let now = Instant::now();
+        self.entries.retain(|_, e| now.duration_since(e.last_used) < ttl);
+        before - self.entries.len()
+    }
+
+    /// Evict LRU entries until one slot is free; returns the count.
+    fn make_room(&mut self) -> usize {
+        let mut evicted = 0;
+        while self.entries.len() >= self.cfg.capacity {
+            let lru = self
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(&sid, _)| sid)
+                .expect("non-empty at capacity");
+            self.entries.remove(&lru);
+            evicted += 1;
+        }
+        evicted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state(n: usize) -> DminState {
+        DminState { dmin: vec![1.0; n], exemplars: Vec::new() }
+    }
+
+    #[test]
+    fn open_get_close_roundtrip() {
+        let mut t = SessionTable::new(SessionConfig::default());
+        let (a, ev) = t.open(state(4), 4.0);
+        assert_eq!(ev, 0);
+        let (b, _) = t.open(state(4), 4.0);
+        assert_ne!(a, b, "ids are never reused across opens");
+        t.get_mut(a).unwrap().state.exemplars.push(7);
+        assert_eq!(t.get_mut(a).unwrap().state.exemplars, vec![7]);
+        assert!(t.get_mut(b).unwrap().state.exemplars.is_empty(), "sessions are isolated");
+        assert!(t.close(a));
+        assert!(!t.close(a), "double close is idempotent");
+        assert!(t.get_mut(a).is_err());
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn fork_copies_state_and_diverges() {
+        let mut t = SessionTable::new(SessionConfig::default());
+        let (a, _) = t.open(state(3), 3.0);
+        t.get_mut(a).unwrap().state.exemplars.push(1);
+        let (b, _) = t.fork(a).unwrap();
+        t.get_mut(b).unwrap().state.exemplars.push(2);
+        assert_eq!(t.get_mut(a).unwrap().state.exemplars, vec![1]);
+        assert_eq!(t.get_mut(b).unwrap().state.exemplars, vec![1, 2]);
+        assert!(t.fork(999).is_err());
+    }
+
+    #[test]
+    fn capacity_evicts_least_recently_used() {
+        let mut t = SessionTable::new(SessionConfig { capacity: 2, ttl: None });
+        let (a, _) = t.open(state(2), 2.0);
+        std::thread::sleep(Duration::from_millis(2));
+        let (b, _) = t.open(state(2), 2.0);
+        std::thread::sleep(Duration::from_millis(2));
+        t.get_mut(a).unwrap(); // touch a → b becomes LRU
+        let (c, evicted) = t.open(state(2), 2.0);
+        assert_eq!(evicted, 1);
+        assert!(t.get_mut(b).is_err(), "LRU entry was evicted");
+        assert!(t.get_mut(a).is_ok());
+        assert!(t.get_mut(c).is_ok());
+    }
+
+    #[test]
+    fn ttl_sweep_reclaims_idle_sessions() {
+        let mut t =
+            SessionTable::new(SessionConfig { capacity: 8, ttl: Some(Duration::from_millis(5)) });
+        let (a, _) = t.open(state(2), 2.0);
+        assert_eq!(t.sweep(), 0, "fresh session survives a sweep");
+        std::thread::sleep(Duration::from_millis(10));
+        assert_eq!(t.sweep(), 1);
+        assert!(t.get_mut(a).is_err());
+        assert_eq!(t.len(), 0);
+    }
+
+    #[test]
+    fn no_ttl_means_no_expiry() {
+        let mut t = SessionTable::new(SessionConfig::default());
+        let (a, _) = t.open(state(2), 2.0);
+        std::thread::sleep(Duration::from_millis(5));
+        assert_eq!(t.sweep(), 0);
+        assert!(t.get_mut(a).is_ok());
+    }
+}

@@ -24,11 +24,13 @@
 //! ```
 //!
 //! and hands out [`Session`]s — each bundling the oracle with its own
-//! cached optimizer state, so the optimizer-facing verbs (`gains`,
-//! `commit`, `commit_many`, `eval_sets`, `value`, `exemplars`) can never
-//! be applied to a mismatched state. Every backend is constructed and
+//! optimizer state, so the optimizer-facing verbs (`gains`, `commit`,
+//! `commit_many`, `eval_sets`, `value`, `exemplars`) can never be
+//! applied to a mismatched state. Every backend is constructed and
 //! driven the same way:
 //!
+//! * [`Backend::Auto`] — picks one of the below from the dataset size,
+//!   core count and artifact availability ([`choose_backend`]),
 //! * [`Backend::SingleThread`] — the serial Algorithm 2 reference,
 //! * [`Backend::Cpu`] — the pooled, candidate-batched CPU oracle,
 //! * [`Backend::Device`] — the AOT/PJRT evaluator (`xla-backend`
@@ -37,15 +39,25 @@
 //!   bounded-queue / request-coalescing executor, serving concurrent
 //!   clients ([`Engine::client`] hands out `Send + Sync` handles).
 //!
-//! Element precision ([`Dtype`]) and dissimilarity are engine-level
-//! knobs; the dtype-quantized shadow, the worker pool and the service
-//! executor are construction details the caller no longer names.
+//! For service engines, [`Engine::session`] opens a **server-resident**
+//! session: the dmin state lives in the executor's keyed table and the
+//! per-round wire traffic is index-only (see [`crate::coordinator`]) —
+//! local sessions over the direct backends are unchanged. Element
+//! precision ([`Dtype`]) and dissimilarity are engine-level knobs; the
+//! dtype-quantized shadow, the worker pool, the service executor and
+//! its session eviction policy ([`EngineBuilder::session_capacity`],
+//! [`EngineBuilder::session_ttl`]) are construction details the caller
+//! no longer names.
 
 mod session;
 
 pub use session::Session;
 
-use crate::coordinator::{Service, ServiceHandle, ServiceMetrics, DEFAULT_QUEUE_CAPACITY};
+use std::time::Duration;
+
+use crate::coordinator::{
+    Service, ServiceHandle, ServiceMetrics, SessionConfig, DEFAULT_QUEUE_CAPACITY,
+};
 use crate::cpu::build_cpu_oracle_with;
 use crate::data::Dataset;
 use crate::distance::{Dissimilarity, SqEuclidean};
@@ -54,9 +66,23 @@ use crate::optim::{OptimResult, Optimizer};
 use crate::scalar::Dtype;
 use crate::{Error, Result};
 
+/// Below this many dataset elements (`n·d`) the pooled CPU backend's
+/// fan-out overhead beats its parallel win; [`Backend::Auto`] picks the
+/// serial oracle.
+pub const AUTO_POOL_MIN_ELEMS: usize = 1 << 16;
+
+/// From this many dataset elements (`n·d`) on, [`Backend::Auto`] prefers
+/// the device evaluator — when its artifacts are actually present.
+pub const AUTO_DEVICE_MIN_ELEMS: usize = 1 << 22;
+
 /// Which evaluation backend an [`Engine`] builds.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Backend {
+    /// Pick a concrete backend at build time from the dataset size,
+    /// `available_parallelism()` and AOT-artifact availability — see
+    /// [`choose_backend`] for the decision table. Never resolves to a
+    /// service (wrap it: `service:auto`).
+    Auto,
     /// Serial Algorithm 2 on the batched Gram kernels (the reference).
     SingleThread,
     /// Pooled multi-thread CPU oracle; `threads = 0` uses all cores.
@@ -68,9 +94,10 @@ pub enum Backend {
     /// feature and an artifact directory; squared Euclidean only).
     Device,
     /// The coordinator service over an inner backend: a dedicated
-    /// executor thread behind a bounded queue with request coalescing.
-    /// The engine's sessions — and any number of [`Engine::client`]
-    /// handles on other threads — share the executor.
+    /// executor thread behind a bounded queue with request coalescing
+    /// and a server-resident session table. The engine's sessions — and
+    /// any number of [`Engine::client`] handles on other threads —
+    /// share the executor.
     Service {
         /// The backend the executor drives (not itself a service).
         inner: Box<Backend>,
@@ -85,7 +112,8 @@ impl Backend {
 
     /// This backend with every CPU worker count set to `threads`
     /// (recurses into service wrappers) — how the CLI merges the
-    /// `eval.threads` key into a parsed backend.
+    /// `eval.threads` key into a parsed backend. [`Backend::Auto`]
+    /// stays `Auto` (its resolution always uses all cores).
     pub fn with_threads(self, threads: usize) -> Backend {
         match self {
             Backend::Cpu { .. } => Backend::Cpu { threads },
@@ -95,6 +123,53 @@ impl Backend {
             other => other,
         }
     }
+
+    /// Replace every [`Backend::Auto`] (top-level or inside a service
+    /// wrapper) with the concrete choice for `ds` — what
+    /// [`EngineBuilder::build`] runs before constructing oracles.
+    pub fn resolve_auto(self, ds: &Dataset, artifacts: &str) -> Backend {
+        match self {
+            Backend::Auto => {
+                let parallelism =
+                    std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+                choose_backend(ds.n(), ds.d(), parallelism, device_available(artifacts))
+            }
+            Backend::Service { inner } => {
+                Backend::Service { inner: Box::new(inner.resolve_auto(ds, artifacts)) }
+            }
+            other => other,
+        }
+    }
+}
+
+/// The [`Backend::Auto`] decision table, pure so it can be unit-tested:
+///
+/// | condition                                   | choice         |
+/// |---------------------------------------------|----------------|
+/// | device usable ∧ `n·d ≥ AUTO_DEVICE_MIN_ELEMS` | `Device`       |
+/// | `n·d < AUTO_POOL_MIN_ELEMS` ∨ 1 core          | `SingleThread` |
+/// | otherwise                                     | `Cpu` (all cores) |
+///
+/// `device_usable` means the `xla-backend` feature is compiled in *and*
+/// the artifact directory holds a usable kernel family.
+pub fn choose_backend(n: usize, d: usize, parallelism: usize, device_usable: bool) -> Backend {
+    let elems = n.saturating_mul(d.max(1));
+    if device_usable && elems >= AUTO_DEVICE_MIN_ELEMS {
+        Backend::Device
+    } else if parallelism <= 1 || elems < AUTO_POOL_MIN_ELEMS {
+        Backend::SingleThread
+    } else {
+        Backend::Cpu { threads: 0 }
+    }
+}
+
+/// Whether [`Backend::Device`] could actually serve: compiled in and
+/// the artifact directory is readable with at least one kernel.
+fn device_available(artifacts: &str) -> bool {
+    cfg!(feature = "xla-backend")
+        && crate::runtime::ArtifactRegistry::open(artifacts)
+            .map(|r| !r.metas().is_empty())
+            .unwrap_or(false)
 }
 
 impl std::fmt::Display for Backend {
@@ -102,6 +177,7 @@ impl std::fmt::Display for Backend {
     /// thread counts (`cpu-mt:8`; plain `cpu-mt` means auto).
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
+            Backend::Auto => f.write_str("auto"),
             Backend::SingleThread => f.write_str("cpu-st"),
             Backend::Cpu { threads: 0 } => f.write_str("cpu-mt"),
             Backend::Cpu { threads } => write!(f, "cpu-mt:{threads}"),
@@ -126,12 +202,13 @@ impl std::str::FromStr for Backend {
         }
         match s {
             "service" => Ok(Backend::service_over(Backend::Cpu { threads: 0 })),
+            "auto" => Ok(Backend::Auto),
             "cpu-st" | "st" => Ok(Backend::SingleThread),
             "cpu-mt" | "mt" => Ok(Backend::Cpu { threads: 0 }),
             "device" | "xla" => Ok(Backend::Device),
             other => Err(Error::Config(format!(
                 "unknown backend {other:?} \
-                 (cpu-st|cpu-mt[:threads]|device|service[:cpu-st|cpu-mt|device])"
+                 (auto|cpu-st|cpu-mt[:threads]|device|service[:auto|cpu-st|cpu-mt|device])"
             ))),
         }
     }
@@ -145,6 +222,7 @@ pub struct EngineBuilder {
     dtype: Dtype,
     dist: Box<dyn Dissimilarity>,
     queue_capacity: usize,
+    sessions: SessionConfig,
     artifacts: String,
     memory_mib: usize,
 }
@@ -157,6 +235,7 @@ impl Default for EngineBuilder {
             dtype: Dtype::F32,
             dist: Box::new(SqEuclidean),
             queue_capacity: DEFAULT_QUEUE_CAPACITY,
+            sessions: SessionConfig::default(),
             artifacts: "artifacts".into(),
             memory_mib: 16 * 1024,
         }
@@ -198,6 +277,28 @@ impl EngineBuilder {
         self
     }
 
+    /// Maximum live server sessions for [`Backend::Service`] (default
+    /// [`crate::coordinator::DEFAULT_SESSION_CAPACITY`]); opening past
+    /// it evicts the least-recently-used session.
+    pub fn session_capacity(mut self, capacity: usize) -> Self {
+        self.sessions.capacity = capacity.max(1);
+        self
+    }
+
+    /// Idle TTL after which [`Backend::Service`] sessions may be
+    /// reclaimed (default: never).
+    pub fn session_ttl(mut self, ttl: Duration) -> Self {
+        self.sessions.ttl = Some(ttl);
+        self
+    }
+
+    /// [`EngineBuilder::session_ttl`] in whole seconds; `0` disables
+    /// expiry (the config-file plumbing).
+    pub fn session_ttl_secs(mut self, secs: u64) -> Self {
+        self.sessions.ttl = (secs > 0).then_some(Duration::from_secs(secs));
+        self
+    }
+
     /// AOT artifact directory for [`Backend::Device`].
     pub fn artifacts(mut self, dir: impl Into<String>) -> Self {
         self.artifacts = dir.into();
@@ -211,8 +312,9 @@ impl EngineBuilder {
         self
     }
 
-    /// Build the engine: constructs the oracle (and, for
-    /// [`Backend::Service`], spawns the executor thread that owns it).
+    /// Build the engine: resolves [`Backend::Auto`], constructs the
+    /// oracle (and, for [`Backend::Service`], spawns the executor
+    /// thread that owns it and its session table).
     pub fn build(self) -> Result<Engine> {
         let ds = self
             .dataset
@@ -220,7 +322,8 @@ impl EngineBuilder {
         if ds.n() == 0 {
             return Err(Error::EmptyDataset);
         }
-        let inner = match self.backend.clone() {
+        let backend = self.backend.resolve_auto(&ds, &self.artifacts);
+        let inner = match backend.clone() {
             Backend::Service { inner } => {
                 if matches!(*inner, Backend::Service { .. }) {
                     return Err(Error::InvalidArgument(
@@ -229,9 +332,10 @@ impl EngineBuilder {
                 }
                 let (ds2, dist, dtype) = (ds.clone(), self.dist, self.dtype);
                 let (artifacts, memory_mib) = (self.artifacts, self.memory_mib);
-                let service = Service::spawn(
+                let service = Service::spawn_with(
                     move || build_oracle(&inner, ds2, dist, dtype, &artifacts, memory_mib),
                     self.queue_capacity,
+                    self.sessions,
                 )?;
                 EngineInner::Service(service)
             }
@@ -244,7 +348,7 @@ impl EngineBuilder {
                 self.memory_mib,
             )?),
         };
-        Ok(Engine { dataset: ds, dtype: self.dtype, backend: self.backend, inner })
+        Ok(Engine { dataset: ds, dtype: self.dtype, backend, inner })
     }
 }
 
@@ -271,25 +375,29 @@ impl Engine {
         EngineBuilder::default()
     }
 
-    /// Open a fresh session (empty summary) over this engine's oracle.
-    pub fn session(&self) -> Session<'_> {
+    /// Open a fresh session (empty summary): a local session over a
+    /// direct oracle, or a **server-resident** session for service
+    /// backends (fallible: the open is an executor round-trip).
+    pub fn session(&self) -> Result<Session<'_>> {
         match &self.inner {
-            EngineInner::Direct(o) => Session::over(o.as_ref()),
-            EngineInner::Service(s) => Session::over(s.handle_ref()),
+            EngineInner::Direct(o) => Ok(Session::over(o.as_ref())),
+            EngineInner::Service(s) => Session::remote(s.handle_ref()),
         }
     }
 
     /// Run an optimizer in a fresh session and return its result.
     pub fn run(&self, optimizer: &dyn Optimizer) -> Result<OptimResult> {
-        optimizer.run(&mut self.session())
+        optimizer.run(&mut self.session()?)
     }
 
-    /// The oracle behind this engine (backend escape hatch; sessions are
-    /// the supported way to drive it).
-    pub fn oracle(&self) -> &dyn Oracle {
+    /// The in-process oracle behind a direct engine (backend escape
+    /// hatch; sessions are the supported way to drive it). `None` for
+    /// service engines — their oracle lives on the executor thread; use
+    /// [`Engine::client`].
+    pub fn oracle(&self) -> Option<&dyn Oracle> {
         match &self.inner {
-            EngineInner::Direct(o) => o.as_ref(),
-            EngineInner::Service(s) => s.handle_ref(),
+            EngineInner::Direct(o) => Some(o.as_ref()),
+            EngineInner::Service(_) => None,
         }
     }
 
@@ -333,7 +441,10 @@ impl Engine {
     /// The backing oracle's descriptive name (backend/dissimilarity/
     /// effective dtype).
     pub fn name(&self) -> String {
-        self.oracle().name()
+        match &self.inner {
+            EngineInner::Direct(o) => o.name(),
+            EngineInner::Service(s) => s.handle_ref().name(),
+        }
     }
 }
 
@@ -350,6 +461,10 @@ fn build_oracle(
         Backend::SingleThread => Ok(build_cpu_oracle_with(ds, dist, false, 0, dtype)),
         Backend::Cpu { threads } => Ok(build_cpu_oracle_with(ds, dist, true, *threads, dtype)),
         Backend::Device => device_oracle(ds, dist, dtype, artifacts, memory_mib),
+        // resolve_auto replaced Auto before any oracle is built
+        Backend::Auto => Err(Error::InvalidArgument(
+            "Backend::Auto must be resolved before oracle construction".into(),
+        )),
         Backend::Service { .. } => Err(Error::InvalidArgument(
             "nested service backends are not supported".into(),
         )),
@@ -408,6 +523,7 @@ mod tests {
         assert_eq!("mt".parse::<Backend>().unwrap(), Backend::Cpu { threads: 0 });
         assert_eq!("device".parse::<Backend>().unwrap(), Backend::Device);
         assert_eq!("xla".parse::<Backend>().unwrap(), Backend::Device);
+        assert_eq!("auto".parse::<Backend>().unwrap(), Backend::Auto);
         assert_eq!(
             "service".parse::<Backend>().unwrap(),
             Backend::service_over(Backend::Cpu { threads: 0 })
@@ -420,6 +536,10 @@ mod tests {
             "service:device".parse::<Backend>().unwrap(),
             Backend::service_over(Backend::Device)
         );
+        assert_eq!(
+            "service:auto".parse::<Backend>().unwrap(),
+            Backend::service_over(Backend::Auto)
+        );
         assert_eq!("cpu-mt:3".parse::<Backend>().unwrap(), Backend::Cpu { threads: 3 });
         assert_eq!(
             "service:mt:5".parse::<Backend>().unwrap(),
@@ -427,7 +547,16 @@ mod tests {
         );
         assert!("gpu".parse::<Backend>().is_err());
         assert!("cpu-mt:lots".parse::<Backend>().is_err());
-        for s in ["cpu-st", "cpu-mt", "cpu-mt:3", "device", "service:cpu-mt", "service:cpu-mt:8"] {
+        for s in [
+            "auto",
+            "cpu-st",
+            "cpu-mt",
+            "cpu-mt:3",
+            "device",
+            "service:auto",
+            "service:cpu-mt",
+            "service:cpu-mt:8",
+        ] {
             assert_eq!(s.parse::<Backend>().unwrap().to_string(), s);
         }
     }
@@ -437,6 +566,47 @@ mod tests {
         let b = "service:mt".parse::<Backend>().unwrap().with_threads(3);
         assert_eq!(b, Backend::service_over(Backend::Cpu { threads: 3 }));
         assert_eq!(Backend::SingleThread.with_threads(5), Backend::SingleThread);
+        assert_eq!(Backend::Auto.with_threads(5), Backend::Auto);
+    }
+
+    /// The full [`choose_backend`] decision table, including both
+    /// threshold boundaries.
+    #[test]
+    fn auto_decision_table() {
+        let big_dev = AUTO_DEVICE_MIN_ELEMS; // n·d at the device threshold
+        let tiny = AUTO_POOL_MIN_ELEMS - 1;
+        // device wins only when usable AND the problem is large enough
+        assert_eq!(choose_backend(big_dev, 1, 8, true), Backend::Device);
+        assert_eq!(choose_backend(big_dev - 1, 1, 8, true), Backend::Cpu { threads: 0 });
+        assert_eq!(choose_backend(big_dev, 1, 8, false), Backend::Cpu { threads: 0 });
+        // below the pool threshold the serial oracle wins
+        assert_eq!(choose_backend(tiny, 1, 8, false), Backend::SingleThread);
+        assert_eq!(choose_backend(AUTO_POOL_MIN_ELEMS, 1, 8, false), Backend::Cpu { threads: 0 });
+        // elems = n · d, not n alone
+        assert_eq!(choose_backend(1024, 64, 8, false), Backend::Cpu { threads: 0 });
+        assert_eq!(choose_backend(1024, 1, 8, false), Backend::SingleThread);
+        // a single core never picks the pool, however large the problem
+        assert_eq!(choose_backend(big_dev, 1, 1, false), Backend::SingleThread);
+        // ... but a single core still prefers a usable device
+        assert_eq!(choose_backend(big_dev, 1, 1, true), Backend::Device);
+        // d = 0 is treated as d = 1, not elems = 0
+        assert_eq!(choose_backend(AUTO_POOL_MIN_ELEMS, 0, 8, false), Backend::Cpu { threads: 0 });
+    }
+
+    #[test]
+    fn auto_backend_builds_and_reports_its_resolution() {
+        // a tiny dataset resolves to the serial reference (no artifacts
+        // in the test environment, so the device branch cannot trigger)
+        let e = Engine::builder().dataset(small()).backend(Backend::Auto).build().unwrap();
+        assert_eq!(e.backend(), &Backend::SingleThread);
+        assert!(e.name().starts_with("cpu-st"), "{}", e.name());
+        // service:auto resolves the inner backend, never to a service
+        let e = Engine::builder()
+            .dataset(small())
+            .backend(Backend::service_over(Backend::Auto))
+            .build()
+            .unwrap();
+        assert_eq!(e.backend(), &Backend::service_over(Backend::SingleThread));
     }
 
     #[test]
@@ -506,11 +676,13 @@ mod tests {
             .build()
             .unwrap();
         let sets = vec![vec![0usize, 3], vec![9, 11, 20]];
-        let via_service = e.session().eval_sets(&sets).unwrap();
-        let via_direct = direct.session().eval_sets(&sets).unwrap();
+        let via_service = e.session().unwrap().eval_sets(&sets).unwrap();
+        let via_direct = direct.session().unwrap().eval_sets(&sets).unwrap();
         assert_eq!(via_service, via_direct);
         let client = e.client().expect("service engines hand out clients");
         assert_eq!(client.eval_sets(&sets).unwrap(), via_direct);
         assert!(e.metrics().unwrap().requests.get() >= 2);
+        assert!(e.oracle().is_none(), "service oracles live on the executor");
+        assert!(direct.oracle().is_some());
     }
 }

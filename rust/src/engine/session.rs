@@ -1,122 +1,223 @@
-//! The optimizer-facing session: one oracle plus *its own* cached
-//! [`DminState`], bundled so the optimizer-aware verbs can never be
-//! applied to a mismatched state.
+//! The optimizer-facing session: one evaluation backend plus *its own*
+//! optimizer state, bundled so the optimizer-aware verbs can never be
+//! applied to a mismatched state — **wherever that state lives**.
 //!
-//! The raw [`Oracle`] API hands the caller a bare `DminState` and trusts
-//! every subsequent `marginal_gains`/`commit`/`f_value` call to pass the
-//! matching one back — an invariant nothing enforced. A [`Session`] owns
-//! the pairing: all verbs read or mutate the session's private state, so
-//! "gains against the wrong dmin" is unrepresentable. Sessions are cheap
-//! to [`fork`](Session::fork) (sieve birth, GreeDi partitions) and all
-//! forks of one session share a single evaluation counter, which is what
-//! [`crate::optim::OptimResult::evaluations`] reports.
+//! A [`Session`] is an enum over two homes for the `dmin` bookkeeping:
+//!
+//! * **Local** — the state is a [`DminState`] owned by the session,
+//!   evaluated in-process against a borrowed [`Oracle`] (the CPU
+//!   backends' unchanged hot path);
+//! * **Remote** — the state is **server-resident** in a coordinator
+//!   executor's session table, and the session holds a
+//!   [`RemoteSession`] id handle. Gains and commits ship candidate
+//!   indices only; the O(n) buffer never crosses the wire
+//!   (see [`crate::coordinator`] for the protocol).
+//!
+//! Optimizers cannot tell the difference: the verbs (`gains`, `commit`,
+//! `commit_many`, `eval_sets`, `value`, `fork`, `fresh`) behave
+//! identically, so all seven optimizers transparently get index-only
+//! traffic against service engines. Because remote `fork`/`fresh`/
+//! `reset` are server round-trips, those verbs are fallible on every
+//! variant.
+//!
+//! Sessions are cheap to [`fork`](Session::fork) (sieve birth, GreeDi
+//! partitions) and all forks of one session share a single evaluation
+//! counter, which is what [`crate::optim::OptimResult::evaluations`]
+//! reports.
 
 use std::cell::Cell;
 use std::rc::Rc;
 
+use crate::coordinator::{RemoteSession, ServiceHandle};
 use crate::data::Dataset;
 use crate::optim::oracle::{DminState, Oracle};
-use crate::Result;
+use crate::{Error, Result};
 
-/// A live evaluation session against one oracle.
+enum Inner<'a> {
+    /// In-process oracle + session-owned state.
+    Local {
+        oracle: &'a dyn Oracle,
+        state: DminState,
+    },
+    /// Server-resident state behind a coordinator handle.
+    Remote(RemoteSession<'a>),
+}
+
+/// A live evaluation session — local state over an oracle, or a handle
+/// to a server-resident session.
 ///
 /// Obtained from [`crate::engine::Engine::session`], or directly via
-/// [`Session::over`] when holding an oracle (backend code, tests). The
+/// [`Session::over`] (local, when holding an oracle — backend code,
+/// tests) / [`Session::remote`] (against a [`ServiceHandle`]). The
 /// session starts at the empty summary `S = {}` (`dmin_i = d(v_i, e0)`).
 pub struct Session<'a> {
-    oracle: &'a dyn Oracle,
-    state: DminState,
+    inner: Inner<'a>,
     /// Shared across forks: total gain entries + set evaluations issued.
     evals: Rc<Cell<u64>>,
 }
 
 impl<'a> Session<'a> {
-    /// Open a fresh session over an oracle (empty summary, zero counter).
+    /// Open a fresh **local** session over an oracle (empty summary,
+    /// zero counter).
     pub fn over(oracle: &'a dyn Oracle) -> Self {
-        Self { oracle, state: oracle.init_state(), evals: Rc::new(Cell::new(0)) }
+        Self {
+            inner: Inner::Local { oracle, state: oracle.init_state() },
+            evals: Rc::new(Cell::new(0)),
+        }
     }
 
-    /// The oracle this session drives (for wrapping, e.g. GreeDi's
-    /// partition restriction — not for hand-carrying state around it).
-    pub fn oracle(&self) -> &'a dyn Oracle {
-        self.oracle
+    /// Open a fresh **remote** session: the state is created and kept in
+    /// the service executor's table; this side holds the id.
+    pub fn remote(handle: &'a ServiceHandle) -> Result<Self> {
+        Ok(Self { inner: Inner::Remote(handle.open()?), evals: Rc::new(Cell::new(0)) })
+    }
+
+    /// Open a remote session from an explicit initial state + `L({e0})·n`
+    /// constant — the one O(n) transfer in the session's lifetime
+    /// (GreeDi's masked partition seeds). Optimizer entry points that
+    /// `reset()` discard the seed; drive seeded sessions with
+    /// [`crate::optim::Optimizer::run_resume`].
+    pub fn remote_seeded(handle: &'a ServiceHandle, state: DminState, l0: f64) -> Result<Self> {
+        Ok(Self {
+            inner: Inner::Remote(handle.open_seeded(state, l0)?),
+            evals: Rc::new(Cell::new(0)),
+        })
+    }
+
+    /// The in-process oracle this session drives, if it is local (GreeDi
+    /// wraps it in a partition restriction). Remote sessions have no
+    /// oracle on this side of the wire — use
+    /// [`Session::service_handle`].
+    pub fn oracle(&self) -> Option<&'a dyn Oracle> {
+        match &self.inner {
+            Inner::Local { oracle, .. } => Some(*oracle),
+            Inner::Remote(_) => None,
+        }
+    }
+
+    /// The service handle behind a remote session (`None` for local).
+    pub fn service_handle(&self) -> Option<&'a ServiceHandle> {
+        match &self.inner {
+            Inner::Local { .. } => None,
+            Inner::Remote(r) => Some(r.handle()),
+        }
     }
 
     /// The ground set being summarized.
     pub fn dataset(&self) -> &Dataset {
-        self.oracle.dataset()
+        match &self.inner {
+            Inner::Local { oracle, .. } => oracle.dataset(),
+            Inner::Remote(r) => r.handle().dataset(),
+        }
     }
 
     /// Ground-set size `|V|`.
     pub fn n(&self) -> usize {
-        self.oracle.dataset().n()
+        self.dataset().n()
     }
 
-    /// A new session over the same oracle with a **copy** of the current
-    /// state. Forks share the evaluation counter with their parent.
-    pub fn fork(&self) -> Session<'a> {
-        Session { oracle: self.oracle, state: self.state.clone(), evals: self.evals.clone() }
+    /// A new session with a **copy** of the current state: a local clone,
+    /// or a server-side `Fork` (only the new id crosses the wire). Forks
+    /// share the evaluation counter with their parent.
+    pub fn fork(&self) -> Result<Session<'a>> {
+        let inner = match &self.inner {
+            Inner::Local { oracle, state } => {
+                Inner::Local { oracle: *oracle, state: state.clone() }
+            }
+            Inner::Remote(r) => Inner::Remote(r.fork()?),
+        };
+        Ok(Session { inner, evals: self.evals.clone() })
     }
 
-    /// A new session over the same oracle starting from the empty
-    /// summary, sharing the evaluation counter with `self`.
-    pub fn fresh(&self) -> Session<'a> {
-        Session {
-            oracle: self.oracle,
-            state: self.oracle.init_state(),
-            evals: self.evals.clone(),
-        }
+    /// A new session over the same backend starting from the empty
+    /// summary (a local re-init, or a server `Open`), sharing the
+    /// evaluation counter with `self`.
+    pub fn fresh(&self) -> Result<Session<'a>> {
+        let inner = match &self.inner {
+            Inner::Local { oracle, .. } => {
+                Inner::Local { oracle: *oracle, state: oracle.init_state() }
+            }
+            Inner::Remote(r) => Inner::Remote(r.handle().open()?),
+        };
+        Ok(Session { inner, evals: self.evals.clone() })
     }
 
     /// Reset this session to the empty summary (counter keeps running).
-    pub fn reset(&mut self) {
-        self.state = self.oracle.init_state();
+    /// Remote: closes the server session and opens a fresh one (close
+    /// queued first, so the table never holds both) — a seeded session
+    /// resets to the *backend's* init state, not its seed.
+    pub fn reset(&mut self) -> Result<()> {
+        match &mut self.inner {
+            Inner::Local { oracle, state } => {
+                *state = oracle.init_state();
+                Ok(())
+            }
+            Inner::Remote(r) => r.reset(),
+        }
     }
 
     /// Marginal gains `f(S ∪ {c}) - f(S)` for every candidate, against
-    /// this session's cached state (the optimizer-aware fast path).
+    /// this session's state (the optimizer-aware fast path; index-only
+    /// on the wire for remote sessions).
     pub fn gains(&self, candidates: &[usize]) -> Result<Vec<f32>> {
-        let g = self.oracle.marginal_gains(&self.state, candidates)?;
+        let g = match &self.inner {
+            Inner::Local { oracle, state } => oracle.marginal_gains(state, candidates)?,
+            Inner::Remote(r) => r.gains(candidates)?,
+        };
         self.evals.set(self.evals.get() + g.len() as u64);
         Ok(g)
     }
 
     /// Commit one exemplar into the summary.
     pub fn commit(&mut self, idx: usize) -> Result<()> {
-        self.oracle.commit(&mut self.state, idx)
+        self.commit_many(&[idx])
     }
 
-    /// Commit a batch of exemplars in one fused backend pass.
+    /// Commit a batch of exemplars in one fused backend pass (one
+    /// index-only request for remote sessions).
     pub fn commit_many(&mut self, idxs: &[usize]) -> Result<()> {
-        self.oracle.commit_many(&mut self.state, idxs)
+        match &mut self.inner {
+            Inner::Local { oracle, state } => oracle.commit_many(state, idxs),
+            Inner::Remote(r) => r.commit_many(idxs),
+        }
     }
 
     /// Evaluate `f(S)` for arbitrary index sets (the multiset problem;
     /// independent of this session's own summary).
     pub fn eval_sets(&self, sets: &[Vec<usize>]) -> Result<Vec<f32>> {
-        let v = self.oracle.eval_sets(sets)?;
+        let v = match &self.inner {
+            Inner::Local { oracle, .. } => oracle.eval_sets(sets)?,
+            Inner::Remote(r) => r.handle().eval_sets(sets)?,
+        };
         self.evals.set(self.evals.get() + v.len() as u64);
         Ok(v)
     }
 
-    /// `f(S)` of the current summary.
+    /// `f(S)` of the current summary (one float back for remote).
     pub fn value(&self) -> Result<f32> {
-        self.oracle.f_of_state(&self.state)
+        match &self.inner {
+            Inner::Local { oracle, state } => oracle.f_of_state(state),
+            Inner::Remote(r) => r.value(),
+        }
     }
 
-    /// Committed exemplars, in commit order.
+    /// Committed exemplars, in commit order (remote sessions keep an
+    /// O(k) client-side mirror).
     pub fn exemplars(&self) -> &[usize] {
-        &self.state.exemplars
+        match &self.inner {
+            Inner::Local { state, .. } => &state.exemplars,
+            Inner::Remote(r) => r.exemplars(),
+        }
     }
 
     /// Number of committed exemplars `|S|`.
     pub fn len(&self) -> usize {
-        self.state.len()
+        self.exemplars().len()
     }
 
     /// True if no exemplar has been committed.
     pub fn is_empty(&self) -> bool {
-        self.state.is_empty()
+        self.exemplars().is_empty()
     }
 
     /// Total gain entries + set evaluations issued through this session
@@ -125,27 +226,61 @@ impl<'a> Session<'a> {
         self.evals.get()
     }
 
-    /// Read-only view of the cached state (diagnostics, backend tests).
-    pub fn state(&self) -> &DminState {
-        &self.state
+    /// Read-only view of the state when it lives on this side (local
+    /// sessions only — diagnostics, backend tests). For a
+    /// location-agnostic copy use [`Session::export_state`].
+    pub fn state(&self) -> Option<&DminState> {
+        match &self.inner {
+            Inner::Local { state, .. } => Some(state),
+            Inner::Remote(_) => None,
+        }
     }
 
-    /// Tear the session apart into its raw state (legacy interop).
-    pub fn into_state(self) -> DminState {
-        self.state
+    /// A copy of the full optimizer state, wherever it lives. Remote:
+    /// an explicit O(n) `Export` round-trip — diagnostics and
+    /// equivalence tests, never an optimizer hot path.
+    pub fn export_state(&self) -> Result<DminState> {
+        match &self.inner {
+            Inner::Local { state, .. } => Ok(state.clone()),
+            Inner::Remote(r) => r.export(),
+        }
     }
 
-    /// Adopt another session's summary (same oracle assumed) — how the
+    /// Close the session, reclaiming server state eagerly for remote
+    /// sessions (local sessions just drop their buffer).
+    pub fn close(self) -> Result<()> {
+        match self.inner {
+            Inner::Local { .. } => Ok(()),
+            Inner::Remote(r) => r.close(),
+        }
+    }
+
+    /// Adopt another session's summary (same backend assumed) — how the
     /// sieve optimizers publish their winning sieve into the caller's
-    /// session.
-    pub(crate) fn clone_state_from(&mut self, other: &Session<'_>) {
-        self.state = other.state.clone();
+    /// session. Local: a state clone. Remote: a server-side `Fork` of
+    /// the winner (the caller's old server session closes on drop).
+    pub(crate) fn clone_state_from(&mut self, other: &Session<'_>) -> Result<()> {
+        match (&mut self.inner, &other.inner) {
+            (Inner::Local { state, .. }, Inner::Local { state: src, .. }) => {
+                *state = src.clone();
+                Ok(())
+            }
+            (Inner::Remote(dst), Inner::Remote(src)) => {
+                // the old server session closes when the handle drops
+                *dst = src.fork()?;
+                Ok(())
+            }
+            _ => Err(Error::InvalidArgument(
+                "cannot adopt state across local/remote session kinds".into(),
+            )),
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::Service;
     use crate::cpu::SingleThread;
     use crate::data::synth::UniformCube;
 
@@ -172,7 +307,8 @@ mod tests {
             session.gains(&cands).unwrap(),
             o.marginal_gains(&state, &cands).unwrap()
         );
-        assert_eq!(session.state().dmin, state.dmin);
+        assert_eq!(session.state().unwrap().dmin, state.dmin);
+        assert_eq!(session.export_state().unwrap().dmin, state.dmin);
     }
 
     #[test]
@@ -180,7 +316,7 @@ mod tests {
         let o = oracle();
         let mut a = Session::over(&o);
         a.commit(3).unwrap();
-        let mut b = a.fork();
+        let mut b = a.fork().unwrap();
         assert_eq!(b.exemplars(), &[3]);
         b.commit(9).unwrap();
         // the fork diverged; the parent did not move
@@ -191,7 +327,7 @@ mod tests {
         b.gains(&[1, 2]).unwrap();
         assert_eq!(a.evaluations(), before + 2);
         // fresh() starts empty but keeps counting
-        let f = b.fresh();
+        let f = b.fresh().unwrap();
         assert!(f.is_empty());
         f.gains(&[4]).unwrap();
         assert_eq!(a.evaluations(), before + 3);
@@ -203,9 +339,48 @@ mod tests {
         let mut s = Session::over(&o);
         s.commit_many(&[1, 2]).unwrap();
         assert_eq!(s.len(), 2);
-        s.reset();
+        s.reset().unwrap();
         assert!(s.is_empty());
-        assert_eq!(s.state().dmin, o.init_state().dmin);
+        assert_eq!(s.state().unwrap().dmin, o.init_state().dmin);
+    }
+
+    #[test]
+    fn remote_sessions_mirror_local_ones() {
+        let svc = Service::over(oracle(), 8).unwrap();
+        let h = svc.handle();
+        let o = oracle();
+        let mut local = Session::over(&o);
+        let mut remote = Session::remote(&h).unwrap();
+        assert!(remote.oracle().is_none());
+        assert!(remote.state().is_none());
+        assert!(remote.service_handle().is_some());
+        assert_eq!(remote.n(), local.n());
+
+        let cands = [0usize, 7, 21];
+        assert_eq!(remote.gains(&cands).unwrap(), local.gains(&cands).unwrap());
+        remote.commit(7).unwrap();
+        local.commit(7).unwrap();
+        assert_eq!(remote.exemplars(), local.exemplars());
+        assert_eq!(remote.value().unwrap(), local.value().unwrap());
+        assert_eq!(
+            remote.export_state().unwrap().dmin,
+            local.export_state().unwrap().dmin
+        );
+
+        // remote forks diverge server-side, counter stays shared
+        let mut rf = remote.fork().unwrap();
+        rf.commit(9).unwrap();
+        assert_eq!(remote.exemplars(), &[7]);
+        assert_eq!(rf.exemplars(), &[7, 9]);
+        let before = remote.evaluations();
+        rf.gains(&[1]).unwrap();
+        assert_eq!(remote.evaluations(), before + 1);
+
+        // reset drops back to the empty summary
+        remote.reset().unwrap();
+        assert!(remote.is_empty());
+        assert_eq!(remote.export_state().unwrap().dmin, o.init_state().dmin);
+        svc.shutdown();
     }
 
     #[test]

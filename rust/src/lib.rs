@@ -43,12 +43,11 @@
 //! ```
 //!
 //! Swap `Backend::Cpu { .. }` for [`engine::Backend::SingleThread`],
-//! [`engine::Backend::Device`] (with `xla-backend`), or
-//! [`engine::Backend::Service`] (the bounded-queue coalescing executor
-//! serving concurrent clients via [`engine::Engine::client`]) without
-//! touching optimizer code. Element precision is a builder knob too:
-//! `.dtype(Dtype::F16)` quantizes the pairwise kernels' operands while
-//! accumulating in `f32` (see [`scalar`]).
+//! [`engine::Backend::Device`] (with `xla-backend`),
+//! [`engine::Backend::Service`], or let [`engine::Backend::Auto`] pick
+//! — without touching optimizer code. Element precision is a builder
+//! knob too: `.dtype(Dtype::F16)` quantizes the pairwise kernels'
+//! operands while accumulating in `f32` (see [`scalar`]).
 //!
 //! Fine-grained control — batched multiset evaluation, marginal gains,
 //! incremental commits — lives on [`engine::Session`]:
@@ -58,18 +57,22 @@
 //! # use exemcl::engine::Engine;
 //! # let ds = GaussianBlobs::new(4, 8, 1.0).generate(500, 42);
 //! let engine = Engine::builder().dataset(ds).build().unwrap();
-//! let mut session = engine.session();
+//! let mut session = engine.session().unwrap();
 //! let values = session.eval_sets(&[vec![0, 1], vec![5, 6, 7]]).unwrap();
 //! let gains = session.gains(&[10, 20, 30]).unwrap();
 //! session.commit(20).unwrap();
 //! println!("f(S) = {}", session.value().unwrap());
 //! ```
 //!
-//! Driving a raw [`optim::Oracle`] with a hand-carried
-//! [`optim::DminState`] (the pre-0.3 API) still compiles behind a
-//! deprecated shim ([`optim::Optimizer::maximize`]) and remains the
-//! contract backends implement — but new user code should build an
-//! engine.
+//! For a `Backend::Service` engine the session is **server-resident**:
+//! the executor thread owns a keyed state table and the wire protocol
+//! (`Open`/`Marginals`/`CommitMany`/`Value`/`Fork`/`Close`) ships
+//! candidate indices only — never the O(n) dmin buffer — so many
+//! concurrent clients ([`engine::Engine::client`]) pay per-round
+//! traffic proportional to their candidate batch, not the dataset (see
+//! [`coordinator`]). The raw [`optim::Oracle`] trait with a
+//! hand-carried [`optim::DminState`] remains the contract backends
+//! implement; user code drives engines and sessions.
 
 pub mod bench;
 pub mod chunk;

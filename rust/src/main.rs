@@ -32,11 +32,12 @@ fn usage() -> ! {
         "usage: exemcl <solve|info|bench-hint> [--config FILE] [--section.key=value ...]\n\
          keys: data.n data.d data.generator data.blobs data.seed data.csv\n\
                optimizer.name optimizer.k\n\
-               eval.backend (cpu-st|cpu-mt|device|service[:cpu-st|cpu-mt|device])\n\
+               eval.backend (auto|cpu-st|cpu-mt|device|service[:auto|cpu-st|cpu-mt|device])\n\
                eval.dtype (f32|f16|bf16) eval.artifacts eval.threads\n\
-               eval.memory_mib eval.queue\n\
+               eval.memory_mib eval.queue eval.sessions eval.session_ttl_secs\n\
          shorthand: --dtype f16 == --eval.dtype=f16, --backend service ==\n\
-               --eval.backend=service (bounded-queue service over cpu-mt)"
+               --eval.backend=service (bounded-queue service over cpu-mt,\n\
+               server-resident sessions with index-only traffic)"
     );
     std::process::exit(2);
 }

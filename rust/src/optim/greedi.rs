@@ -12,12 +12,19 @@
 //! [`crate::engine::Engine::client`] hands out for service backends),
 //! so partition greedies interleave on the shared executor and exercise
 //! queueing/batching. Round-1 gains are computed *restricted to the
-//! worker's partition* via [`PartitionOracle`], which masks foreign
-//! points out of the dmin state.
+//! worker's partition*:
+//!
+//! * locally, via [`PartitionOracle`], which masks foreign points out
+//!   of a session-owned dmin state;
+//! * against a service, via a **seeded server session**
+//!   ([`masked_seed`] + `Open{seed}`): the masked dmin ships once per
+//!   partition, then every round is index-only wire traffic like any
+//!   other session.
 
 use super::greedy::Greedy;
 use super::oracle::{DminState, Oracle};
 use super::{OptimResult, Optimizer, Session};
+use crate::coordinator::ServiceHandle;
 use crate::data::{Dataset, Rng};
 use crate::{Error, Result};
 
@@ -29,6 +36,11 @@ pub struct PartitionOracle<'a, O: Oracle + ?Sized> {
     /// membership[i] == true iff ground point i belongs to the partition.
     membership: Vec<bool>,
     members: Vec<usize>,
+    /// `L({e0})` restricted to the partition, under the inner oracle's
+    /// own dissimilarity — cached at construction and identical to the
+    /// [`masked_seed`] constant, so local and remote GreeDi agree on
+    /// partition values for every dissimilarity.
+    l0: f64,
 }
 
 impl<'a, O: Oracle + ?Sized> PartitionOracle<'a, O> {
@@ -42,7 +54,18 @@ impl<'a, O: Oracle + ?Sized> PartitionOracle<'a, O> {
             }
             membership[m] = true;
         }
-        Ok(Self { inner, membership, members })
+        // ground-index summation order, like `masked_seed` (foreign
+        // entries are exact zeros there), so the constants are bitwise
+        // equal between the local and seeded-remote paths
+        let init = inner.init_state();
+        let l0 = init
+            .dmin
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| membership[i])
+            .map(|(_, &x)| x as f64)
+            .sum();
+        Ok(Self { inner, membership, members, l0 })
     }
 
     fn mask_state(&self, state: &DminState) -> DminState {
@@ -99,17 +122,36 @@ impl<O: Oracle + ?Sized> Oracle for PartitionOracle<'_, O> {
     }
 
     fn l0_sum(&self) -> f64 {
-        // L({e0}) restricted to the partition
-        let ds = self.inner.dataset();
-        self.members
-            .iter()
-            .map(|&i| ds.row(i).iter().map(|x| (x * x) as f64).sum::<f64>())
-            .sum()
+        // L({e0}) restricted to the partition, cached at construction
+        // under the inner oracle's own dissimilarity
+        self.l0
     }
 
     fn name(&self) -> String {
         format!("partition[{}]/{}", self.members.len(), self.inner.name())
     }
+}
+
+/// The seeded opening state for a partition session: the backend's
+/// fresh dmin with foreign entries pinned to 0 (they can contribute no
+/// improvement), plus the partition-restricted `L({e0})·n` constant.
+/// This is the **one** O(n) payload a remote partition session ever
+/// ships — every subsequent round is index-only.
+pub fn masked_seed(mut init: DminState, members: &[usize], n: usize) -> Result<(DminState, f64)> {
+    let mut keep = vec![false; n];
+    for &m in members {
+        if m >= n {
+            return Err(Error::InvalidArgument(format!("member {m} out of range")));
+        }
+        keep[m] = true;
+    }
+    for (d, k) in init.dmin.iter_mut().zip(&keep) {
+        if !k {
+            *d = 0.0;
+        }
+    }
+    let l0 = init.dmin.iter().map(|&x| x as f64).sum();
+    Ok((init, l0))
 }
 
 /// Two-round distributed greedy over `workers` random partitions.
@@ -125,14 +167,14 @@ impl GreeDi {
         Self { k, workers: workers.max(1), seed }
     }
 
-    /// Round 1 with one OS thread per partition — requires a `Send +
-    /// Sync + Clone` oracle handle (the service's `ServiceHandle`, i.e.
-    /// [`crate::engine::Engine::client`]).
-    pub fn run_threaded<O>(&self, oracle: &O) -> Result<OptimResult>
-    where
-        O: Oracle + Clone + Send + Sync + 'static,
-    {
-        let partitions = self.partition(oracle.dataset().n());
+    /// Round 1 with one OS thread per partition, each opening a
+    /// **seeded server session** ([`masked_seed`]) on the shared
+    /// executor — the coordinator's multi-client path. Gains and
+    /// commits stay index-only; the masked dmin crosses the wire once
+    /// per partition at `Open`.
+    pub fn run_threaded(&self, handle: &ServiceHandle) -> Result<OptimResult> {
+        let n = handle.dataset().n();
+        let partitions = self.partition(n);
         let k = self.k;
         let mut pool = Vec::new();
         let mut evaluations = 0u64;
@@ -140,10 +182,13 @@ impl GreeDi {
             let handles: Vec<_> = partitions
                 .into_iter()
                 .map(|members| {
-                    let o = oracle.clone();
+                    let h = handle.clone();
                     scope.spawn(move || {
-                        let part = PartitionOracle::new(&o, members)?;
-                        Greedy::new(k).run(&mut Session::over(&part))
+                        let (seed, l0) = masked_seed(h.init_state(), &members, n)?;
+                        let mut sub = Session::remote_seeded(&h, seed, l0)?;
+                        // run_resume: a plain run would reset the
+                        // session and wipe the partition mask
+                        Greedy::new(k).run_resume(&mut sub)
                     })
                 })
                 .collect();
@@ -157,7 +202,7 @@ impl GreeDi {
             evaluations += r.evaluations;
             pool.extend(r.exemplars);
         }
-        let mut session = Session::over(oracle);
+        let mut session = Session::remote(handle)?;
         let mut result = self.final_round(&mut session, pool)?;
         result.evaluations += evaluations;
         Ok(result)
@@ -207,20 +252,33 @@ impl GreeDi {
 }
 
 impl Optimizer for GreeDi {
-    /// Round 1 sequentially on the session's oracle (one partition
-    /// sub-session at a time — for non-`Sync` oracles); round 2 in the
-    /// caller's session.
+    /// Round 1 sequentially, one partition sub-session at a time:
+    /// locally via [`PartitionOracle`] over the session's oracle, or —
+    /// when the session is remote — via seeded server sessions, so the
+    /// per-round traffic stays index-only. Round 2 runs in the caller's
+    /// session.
     fn run(&self, session: &mut Session<'_>) -> Result<OptimResult> {
-        session.reset();
-        let oracle = session.oracle();
-        let partitions = self.partition(oracle.dataset().n());
+        session.reset()?;
+        let n = session.n();
+        let partitions = self.partition(n);
         let mut pool = Vec::new();
         let mut evaluations = 0u64;
-        for members in partitions {
-            let part = PartitionOracle::new(oracle, members)?;
-            let r = Greedy::new(self.k).run(&mut Session::over(&part))?;
-            evaluations += r.evaluations;
-            pool.extend(r.exemplars);
+        if let Some(handle) = session.service_handle() {
+            for members in partitions {
+                let (seed, l0) = masked_seed(handle.init_state(), &members, n)?;
+                let mut sub = Session::remote_seeded(handle, seed, l0)?;
+                let r = Greedy::new(self.k).run_resume(&mut sub)?;
+                evaluations += r.evaluations;
+                pool.extend(r.exemplars);
+            }
+        } else {
+            let oracle = session.oracle().expect("local sessions expose their oracle");
+            for members in partitions {
+                let part = PartitionOracle::new(oracle, members)?;
+                let r = Greedy::new(self.k).run(&mut Session::over(&part))?;
+                evaluations += r.evaluations;
+                pool.extend(r.exemplars);
+            }
         }
         let mut result = self.final_round(session, pool)?;
         result.evaluations += evaluations;
@@ -280,6 +338,22 @@ mod tests {
         let gains = p.marginal_gains(&st, &[0, 100]).unwrap();
         let full_gains = o.marginal_gains(&o.init_state(), &[0, 100]).unwrap();
         assert!(gains[1] <= full_gains[1] + 1e-5);
+    }
+
+    /// The remote-path seed is the same masked state the local
+    /// [`PartitionOracle`] starts from.
+    #[test]
+    fn masked_seed_matches_partition_oracle_init() {
+        let o = oracle();
+        let n = o.dataset().n();
+        let members: Vec<usize> = (0..30).collect();
+        let p = PartitionOracle::new(&o, members.clone()).unwrap();
+        let (seed, l0) = masked_seed(o.init_state(), &members, n).unwrap();
+        assert_eq!(seed.dmin, p.init_state().dmin);
+        // both sum in ground-index order (foreign entries are exact
+        // zeros), so the partition constants are bitwise equal
+        assert_eq!(l0, p.l0_sum());
+        assert!(masked_seed(o.init_state(), &[n], n).is_err());
     }
 
     #[test]

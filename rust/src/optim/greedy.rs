@@ -56,19 +56,28 @@ fn check_k(k: usize, n: usize) -> Result<usize> {
     Ok(k.min(n))
 }
 
-impl Optimizer for Greedy {
-    fn run(&self, session: &mut Session<'_>) -> Result<OptimResult> {
-        session.reset();
+impl Greedy {
+    /// The shared selection loop: grow the session's summary until it
+    /// holds `self.k` exemplars (treating `k` as the *total* target), or
+    /// the candidate pool is exhausted. `run` resets first; `run_resume`
+    /// calls this directly, which is the warm start — extending k
+    /// selected exemplars to k + Δ re-evaluates gains against the live
+    /// dmin state instead of re-selecting from scratch.
+    fn extend(&self, session: &mut Session<'_>) -> Result<OptimResult> {
         let evals0 = session.evaluations();
         let n = session.n();
         let k = check_k(self.k, n)?;
         let mut selected = vec![false; n];
-        let mut curve = Vec::with_capacity(k);
+        for &e in session.exemplars() {
+            selected[e] = true;
+        }
+        let rounds = k.saturating_sub(session.len());
+        let mut curve = Vec::with_capacity(rounds);
         // candidate scratch reused across rounds: avoids one O(n)
         // allocation per round now that the oracle calls are batched
         let mut candidates: Vec<usize> = Vec::with_capacity(n);
 
-        for _round in 0..k {
+        for _round in 0..rounds {
             candidates.clear();
             candidates.extend((0..n).filter(|&i| !selected[i]));
             if candidates.is_empty() {
@@ -101,12 +110,33 @@ impl Optimizer for Greedy {
             curve.push(session.value()?);
         }
 
+        let value = match curve.last() {
+            Some(&v) => v,
+            // warm no-op (already at k) or empty pool: report the
+            // session's current value — propagating failures (evicted
+            // server session, empty dataset) instead of inventing 0.0
+            None => session.value()?,
+        };
         Ok(OptimResult {
-            value: *curve.last().unwrap_or(&0.0),
+            value,
             exemplars: session.exemplars().to_vec(),
             curve,
             evaluations: session.evaluations() - evals0,
         })
+    }
+}
+
+impl Optimizer for Greedy {
+    fn run(&self, session: &mut Session<'_>) -> Result<OptimResult> {
+        session.reset()?;
+        self.extend(session)
+    }
+
+    /// Warm start: keep the session's summary and select until it holds
+    /// `k` exemplars total — `Greedy::new(k + delta)` on a session with
+    /// k exemplars adds exactly `delta` more.
+    fn run_resume(&self, session: &mut Session<'_>) -> Result<OptimResult> {
+        self.extend(session)
     }
 
     fn name(&self) -> String {
@@ -162,7 +192,7 @@ impl LazyGreedy {
 
 impl Optimizer for LazyGreedy {
     fn run(&self, session: &mut Session<'_>) -> Result<OptimResult> {
-        session.reset();
+        session.reset()?;
         let evals0 = session.evaluations();
         let n = session.n();
         let k = check_k(self.k, n)?;
@@ -245,7 +275,7 @@ impl StochasticGreedy {
 
 impl Optimizer for StochasticGreedy {
     fn run(&self, session: &mut Session<'_>) -> Result<OptimResult> {
-        session.reset();
+        session.reset()?;
         let evals0 = session.evaluations();
         let n = session.n();
         let k = check_k(self.k, n)?;
@@ -376,16 +406,31 @@ mod tests {
         assert_eq!(session.len(), 4);
     }
 
-    /// The deprecated raw-oracle shim still works and agrees with the
-    /// session path.
+    /// Warm start: extending k → k + Δ through `run_resume` selects the
+    /// same summary as a cold k + Δ run (greedy is deterministic given
+    /// the same tie-breaking) without re-selecting the first k.
     #[test]
-    #[allow(deprecated)]
-    fn deprecated_maximize_shim_matches_run() {
+    fn run_resume_extends_without_reselecting() {
         let o = oracle();
-        let via_shim = Greedy::new(5).maximize(&o).unwrap();
-        let via_run = Greedy::new(5).run(&mut Session::over(&o)).unwrap();
-        assert_eq!(via_shim.exemplars, via_run.exemplars);
-        assert_eq!(via_shim.value, via_run.value);
-        assert_eq!(via_shim.evaluations, via_run.evaluations);
+        let cold = Greedy::new(6).run(&mut Session::over(&o)).unwrap();
+
+        let mut session = Session::over(&o);
+        let first = Greedy::new(4).run(&mut session).unwrap();
+        assert_eq!(first.exemplars[..], cold.exemplars[..4]);
+        let resumed = Greedy::new(6).run_resume(&mut session).unwrap();
+        assert_eq!(resumed.exemplars, cold.exemplars);
+        assert_eq!(resumed.value, cold.value);
+        // only the two extra rounds were paid for
+        assert!(resumed.evaluations < first.evaluations,
+            "resume re-selected: {} vs {}", resumed.evaluations, first.evaluations);
+        // resuming at-or-below the current size is a no-op with the
+        // session's live value
+        let noop = Greedy::new(6).run_resume(&mut session).unwrap();
+        assert_eq!(noop.exemplars, cold.exemplars);
+        assert_eq!(noop.value, session.value().unwrap());
+        assert_eq!(noop.evaluations, 0);
+        // plain run still restarts
+        let rerun = Greedy::new(4).run(&mut session).unwrap();
+        assert_eq!(rerun.exemplars, first.exemplars);
     }
 }

@@ -4,15 +4,20 @@
 //!
 //! All optimizers drive a [`Session`] — the engine's bundle of one
 //! evaluation backend (CPU baseline, pooled CPU, device evaluator, or
-//! the batched coordinator service) with its cached optimizer state —
-//! so every experiment can swap the evaluation backend without touching
+//! a server-resident coordinator session) with its optimizer state — so
+//! every experiment can swap the evaluation backend without touching
 //! optimizer code. This is the "optimizer-aware" seam of the paper:
 //! optimizers emit *batches* of candidate evaluations (`S_multi`),
 //! never one-at-a-time queries, and the session guarantees each batch
-//! is scored against the state it belongs to.
+//! is scored against the state it belongs to. Against a service engine
+//! the same code transparently becomes **index-only wire traffic**:
+//! sieve births and GreeDi partitions route through the protocol's
+//! `Fork`/`Open`, commits ship indices, and the O(n) dmin buffer never
+//! leaves the executor.
 //!
-//! The pre-engine entry point — [`Optimizer::maximize`] over a raw
-//! [`Oracle`] — survives as a deprecated shim for one release.
+//! [`Optimizer::run`] restarts from the empty summary;
+//! [`Optimizer::run_resume`] extends whatever the session already holds
+//! (Greedy's warm start: k → k + Δ without re-selecting).
 
 pub mod greedi;
 pub mod greedy;
@@ -50,17 +55,16 @@ pub trait Optimizer {
     /// callers can keep refining or inspecting it.
     fn run(&self, session: &mut Session<'_>) -> Result<OptimResult>;
 
+    /// Warm-start entry point: extend whatever summary `session`
+    /// already holds instead of resetting. [`greedy::Greedy`] overrides
+    /// this to grow an existing summary k → k + Δ without re-selecting
+    /// (and GreeDi drives its seeded partition sessions through it);
+    /// optimizers without a native resume fall back to a full
+    /// [`Optimizer::run`] restart.
+    fn run_resume(&self, session: &mut Session<'_>) -> Result<OptimResult> {
+        self.run(session)
+    }
+
     /// Human-readable name for logs and benches.
     fn name(&self) -> String;
-
-    /// Legacy entry point: wraps `oracle` in a throwaway [`Session`]
-    /// and calls [`Optimizer::run`].
-    #[deprecated(
-        since = "0.3.0",
-        note = "build an `engine::Engine` and drive a `Session` via `Optimizer::run` \
-                (or `Engine::run`)"
-    )]
-    fn maximize(&self, oracle: &dyn Oracle) -> Result<OptimResult> {
-        self.run(&mut Session::over(oracle))
-    }
 }

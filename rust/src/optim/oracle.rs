@@ -8,17 +8,19 @@
 //! cached per-point minimum-distance state ([`DminState`]).
 //!
 //! Implementors: [`crate::cpu::SingleThread`], [`crate::cpu::MultiThread`]
-//! (Algorithm 2), [`crate::runtime::DeviceEvaluator`] (the AOT/PJRT path)
-//! and [`crate::coordinator::ServiceHandle`] (the batched service).
+//! (Algorithm 2) and [`crate::runtime::DeviceEvaluator`] (the AOT/PJRT
+//! path). The coordinator's executor drives an oracle on behalf of its
+//! session table; its client side ([`crate::coordinator::ServiceHandle`]
+//! / [`crate::coordinator::RemoteSession`]) deliberately does **not**
+//! implement this trait — hand-carrying a `DminState` across the wire
+//! is exactly the O(n)-per-round traffic the session protocol removed.
 //!
 //! **Driving an oracle directly is a backend-internal affair.** The
 //! public optimizer-facing surface is [`crate::engine::Engine`] (builds
-//! and owns an oracle) and [`crate::engine::Session`] (bundles the
-//! oracle with *its own* [`DminState`], so gains/commits/values can
-//! never be computed against a mismatched state). Hand-carrying a
-//! `DminState` between raw oracle calls still compiles for backend code
-//! and for the deprecated `Optimizer::maximize` shim, but new callers
-//! should go through the engine.
+//! and owns an oracle) and [`crate::engine::Session`] (pairs the
+//! backend with *its own* state — session-owned locally,
+//! server-resident for services — so gains/commits/values can never be
+//! computed against a mismatched state).
 
 use crate::data::Dataset;
 use crate::{Error, Result};

@@ -18,6 +18,9 @@
 //! Each live sieve is a cheap [`Session::fork`] of the run's empty
 //! template session; all forks share one evaluation counter, so
 //! [`OptimResult::evaluations`] still reports the total oracle work.
+//! Against a service engine every sieve birth routes through the
+//! protocol's `Fork` — the many-session fan-out lives server-side and
+//! each sieve's traffic stays index-only.
 
 use super::{OptimResult, Optimizer, Session};
 use crate::data::Rng;
@@ -36,9 +39,10 @@ struct Sieve<'a> {
 impl<'a> Sieve<'a> {
     /// Sieve birth forks the run's cached empty session instead of
     /// asking the oracle to recompute `init_state` (an O(n·d) walk for
-    /// generic dissimilarities) once per threshold guess.
-    fn from_template(threshold: f64, template: &Session<'a>) -> Self {
-        Self { threshold, session: template.fork(), value: 0.0 }
+    /// generic dissimilarities) once per threshold guess. Remote forks
+    /// are a server-side state copy, hence the `Result`.
+    fn from_template(threshold: f64, template: &Session<'a>) -> Result<Self> {
+        Ok(Self { threshold, session: template.fork()?, value: 0.0 })
     }
 
     /// The SieveStreaming accept rule for guess `v = threshold`:
@@ -136,10 +140,10 @@ fn finish_run(
     session: &mut Session<'_>,
     best: Option<&Sieve<'_>>,
     evaluations: u64,
-) -> OptimResult {
-    match best {
+) -> Result<OptimResult> {
+    Ok(match best {
         Some(s) => {
-            session.clone_state_from(&s.session);
+            session.clone_state_from(&s.session)?;
             OptimResult {
                 exemplars: s.session.exemplars().to_vec(),
                 value: s.value,
@@ -148,7 +152,7 @@ fn finish_run(
             }
         }
         None => OptimResult { exemplars: vec![], value: 0.0, curve: vec![], evaluations },
-    }
+    })
 }
 
 /// Badanidiyuru et al.'s SieveStreaming: one sieve per OPT guess
@@ -174,14 +178,20 @@ impl SieveStreaming {
         self
     }
 
-    fn refresh_sieves<'a>(&self, sieves: &mut Vec<Sieve<'a>>, m: f64, template: &Session<'a>) {
+    fn refresh_sieves<'a>(
+        &self,
+        sieves: &mut Vec<Sieve<'a>>,
+        m: f64,
+        template: &Session<'a>,
+    ) -> Result<()> {
         let grid = threshold_grid(self.eps, m, 2.0 * self.k as f64 * m);
         sieves.retain(|s| s.threshold >= m / (1.0 + self.eps));
         for v in grid {
             if !sieves.iter().any(|s| (s.threshold - v).abs() < 1e-12) {
-                sieves.push(Sieve::from_template(v, template));
+                sieves.push(Sieve::from_template(v, template)?);
             }
         }
+        Ok(())
     }
 
     /// Run over an explicit stream order.
@@ -189,9 +199,9 @@ impl SieveStreaming {
         if self.k == 0 {
             return Err(Error::InvalidArgument("k must be positive".into()));
         }
-        session.reset();
+        session.reset()?;
         let evals0 = session.evaluations();
-        let empty = session.fresh();
+        let empty = session.fresh()?;
         let mut sieves: Vec<Sieve> = Vec::new();
         let mut m = 0.0f64;
 
@@ -201,7 +211,7 @@ impl SieveStreaming {
                 if seg_m <= 0.0 {
                     continue;
                 }
-                self.refresh_sieves(&mut sieves, seg_m, &empty);
+                self.refresh_sieves(&mut sieves, seg_m, &empty)?;
                 for sieve in sieves.iter_mut() {
                     feed_sieve(sieve, &window[start..end], self.k)?;
                 }
@@ -209,7 +219,7 @@ impl SieveStreaming {
         }
         let total = session.evaluations() - evals0;
         let best = sieves.iter().max_by(|a, b| a.value.total_cmp(&b.value));
-        Ok(finish_run(session, best, total))
+        finish_run(session, best, total)
     }
 }
 
@@ -252,9 +262,9 @@ impl SieveStreamingPP {
         if self.k == 0 {
             return Err(Error::InvalidArgument("k must be positive".into()));
         }
-        session.reset();
+        session.reset()?;
         let evals0 = session.evaluations();
-        let empty = session.fresh();
+        let empty = session.fresh()?;
         let mut sieves: Vec<Sieve> = Vec::new();
         let mut m = 0.0f64;
         let mut lb = 0.0f64; // best achieved f so far
@@ -271,7 +281,7 @@ impl SieveStreamingPP {
                 sieves.retain(|s| s.threshold >= lo / (1.0 + self.eps));
                 for v in grid {
                     if !sieves.iter().any(|s| (s.threshold - v).abs() < 1e-12) {
-                        sieves.push(Sieve::from_template(v, &empty));
+                        sieves.push(Sieve::from_template(v, &empty)?);
                     }
                 }
                 for sieve in sieves.iter_mut() {
@@ -282,7 +292,7 @@ impl SieveStreamingPP {
         }
         let total = session.evaluations() - evals0;
         let best = sieves.iter().max_by(|a, b| a.value.total_cmp(&b.value));
-        Ok(finish_run(session, best, total))
+        finish_run(session, best, total)
     }
 
     /// Number of live guesses for a given `(m, lb)` — exposed for the
@@ -334,9 +344,9 @@ impl ThreeSieves {
         if self.k == 0 {
             return Err(Error::InvalidArgument("k must be positive".into()));
         }
-        session.reset();
+        session.reset()?;
         let evals0 = session.evaluations();
-        let empty = session.fresh();
+        let empty = session.fresh()?;
         let mut value = 0.0f32;
         let mut m = 0.0f64;
         let mut last_m = 0.0f64; // m value tau was last derived from
@@ -472,9 +482,9 @@ impl Salsa {
         if self.k == 0 {
             return Err(Error::InvalidArgument("k must be positive".into()));
         }
-        session.reset();
+        session.reset()?;
         let evals0 = session.evaluations();
-        let empty = session.fresh();
+        let empty = session.fresh()?;
         let mut sieves: Vec<PolicySieve> = Vec::new();
         let mut m = 0.0f64;
         let total = stream.len().max(1);
@@ -497,7 +507,7 @@ impl Salsa {
                             sieves.push(PolicySieve {
                                 policy,
                                 guess: *v,
-                                session: empty.fork(),
+                                session: empty.fork()?,
                                 value: 0.0,
                             });
                         }
@@ -536,7 +546,7 @@ impl Salsa {
         let best = sieves.iter().max_by(|a, b| a.value.total_cmp(&b.value));
         Ok(match best {
             Some(s) => {
-                session.clone_state_from(&s.session);
+                session.clone_state_from(&s.session)?;
                 OptimResult {
                     exemplars: s.session.exemplars().to_vec(),
                     value: s.value,

@@ -12,7 +12,12 @@
 //!   associative).
 //! * The optimizer-aware state (`dmin`) lives on the device between
 //!   Greedy rounds: `commit` runs the `update_dmin` artifact per tile and
-//!   caches the refreshed buffers for the next `marginal_gains` call.
+//!   caches the refreshed buffers for the next `marginal_gains` call. The
+//!   cache is a **keyed LRU table** (exact dmin contents → device
+//!   buffers), the device-side mirror of the coordinator's session
+//!   table, so requests from many interleaved server sessions —
+//!   including forks sharing a prefix — reuse resident state instead of
+//!   re-uploading O(n) per session switch.
 
 #[cfg(feature = "xla-backend")]
 use std::cell::RefCell;
@@ -79,10 +84,80 @@ struct GroundTile {
     vmask: xla::PjRtBuffer,
 }
 
+/// Device-resident dmin buffers for one optimizer state (one buffer
+/// per ground tile), keyed by the **exact host dmin contents** — not
+/// the exemplar list: distinct states can share an exemplar list
+/// (e.g. GreeDi's masked partition seeds all start at `exemplars =
+/// []` with different buffers), and conversely identical buffers may
+/// be shared safely whatever their history.
 #[cfg(feature = "xla-backend")]
-struct DminCache {
-    exemplars: Vec<usize>,
+struct DminSlot {
+    /// Host copy of the dmin this slot's device buffers hold (bitwise
+    /// lookup key; the compare is trivial next to any kernel launch).
+    dmin_host: Vec<f32>,
     bufs: Vec<xla::PjRtBuffer>,
+    /// LRU stamp (monotone use tick).
+    used: u64,
+}
+
+/// A keyed table of device-resident dmin buffers — the device-side
+/// mirror of the coordinator's session table. The executor interleaves
+/// requests from many server sessions over one evaluator; a single-slot
+/// cache (the pre-0.4 design) would re-upload O(n) on every session
+/// switch, so states are kept resident and evicted LRU. Commits keep
+/// the predecessor entry alive: forked sessions sharing a prefix keep
+/// hitting it.
+#[cfg(feature = "xla-backend")]
+#[derive(Default)]
+struct DminTable {
+    slots: Vec<DminSlot>,
+    tick: u64,
+}
+
+/// Device dmin states kept resident at once (each is O(n) floats of
+/// device memory — sized for a handful of interleaved sessions, not
+/// the whole session table).
+#[cfg(feature = "xla-backend")]
+const DMIN_SLOTS: usize = 8;
+
+#[cfg(feature = "xla-backend")]
+fn bits_equal(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+#[cfg(feature = "xla-backend")]
+impl DminTable {
+    /// Index of the slot holding exactly `dmin`, touching its LRU stamp.
+    fn find(&mut self, dmin: &[f32]) -> Option<usize> {
+        let i = self.slots.iter().position(|s| bits_equal(&s.dmin_host, dmin))?;
+        self.tick += 1;
+        self.slots[i].used = self.tick;
+        Some(i)
+    }
+
+    /// Insert a slot (evicting the LRU entry at capacity); returns its
+    /// index. A bitwise-equal slot is refreshed in place instead of
+    /// duplicated — forked sessions committing the same exemplar would
+    /// otherwise burn table capacity on identical states.
+    fn insert(&mut self, dmin_host: Vec<f32>, bufs: Vec<xla::PjRtBuffer>) -> usize {
+        if let Some(i) = self.find(&dmin_host) {
+            self.slots[i].bufs = bufs;
+            return i;
+        }
+        if self.slots.len() >= DMIN_SLOTS {
+            let lru = self
+                .slots
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, s)| s.used)
+                .map(|(i, _)| i)
+                .expect("non-empty at capacity");
+            self.slots.swap_remove(lru);
+        }
+        self.tick += 1;
+        self.slots.push(DminSlot { dmin_host, bufs, used: self.tick });
+        self.slots.len() - 1
+    }
 }
 
 /// Cover `n` rows with the available tile buckets (ascending): greedily
@@ -127,7 +202,7 @@ pub struct DeviceEvaluator {
     tiles: Vec<GroundTile>,
     l0: f64,
     cfg: EvalConfig,
-    dmin_cache: RefCell<Option<DminCache>>,
+    dmin_table: RefCell<DminTable>,
 }
 
 #[cfg(feature = "xla-backend")]
@@ -171,7 +246,7 @@ impl DeviceEvaluator {
             tiles: Vec::new(),
             l0,
             cfg,
-            dmin_cache: RefCell::new(None),
+            dmin_table: RefCell::new(DminTable::default()),
         };
         ev.upload_ground_tiles(&t_buckets)?;
         Ok(ev)
@@ -343,19 +418,15 @@ impl DeviceEvaluator {
         Ok(bufs)
     }
 
-    /// Get (or build) the device-resident dmin buffers for `state`.
-    fn dmin_buffers(&self, state: &DminState) -> Result<()> {
-        let cached = self
-            .dmin_cache
-            .borrow()
-            .as_ref()
-            .is_some_and(|c| c.exemplars == state.exemplars);
-        if !cached {
-            let bufs = self.upload_dmin(state)?;
-            *self.dmin_cache.borrow_mut() =
-                Some(DminCache { exemplars: state.exemplars.clone(), bufs });
+    /// Slot index of the device-resident dmin buffers for `state`,
+    /// uploading (and possibly evicting the LRU slot) on a miss.
+    fn dmin_slot(&self, state: &DminState) -> Result<usize> {
+        let mut table = self.dmin_table.borrow_mut();
+        if let Some(i) = table.find(&state.dmin) {
+            return Ok(i);
         }
-        Ok(())
+        let bufs = self.upload_dmin(state)?;
+        Ok(table.insert(state.dmin.clone(), bufs))
     }
 }
 
@@ -393,9 +464,9 @@ impl Oracle for DeviceEvaluator {
         }
         let meta0 = self.registry.find_marginal(&self.cfg.dtype, self.ds.d(), self.tiles[0].t)?;
         let m_bucket = meta0.m.unwrap();
-        self.dmin_buffers(state)?;
-        let cache = self.dmin_cache.borrow();
-        let dmin_bufs = &cache.as_ref().expect("populated above").bufs;
+        let slot = self.dmin_slot(state)?;
+        let table = self.dmin_table.borrow();
+        let dmin_bufs = &table.slots[slot].bufs;
 
         let n = self.ds.n() as f64;
         let mut gains = vec![0.0f32; candidates.len()];
@@ -440,28 +511,33 @@ impl Oracle for DeviceEvaluator {
         if idx >= self.ds.n() {
             return Err(Error::InvalidArgument(format!("exemplar {idx} out of range")));
         }
-        self.dmin_buffers(state)?;
+        let slot = self.dmin_slot(state)?;
 
         let mut e_host = vec![0.0f32; self.d_bucket];
         e_host[..self.ds.d()].copy_from_slice(self.ds.row(idx));
         let e_buf = self.device.upload(&e_host, &[1, self.d_bucket])?;
 
-        let old = self.dmin_cache.borrow_mut().take().expect("populated above");
         let mut new_bufs = Vec::with_capacity(self.tiles.len());
-        for (tile, dmin_buf) in self.tiles.iter().zip(&old.bufs) {
-            let meta = self.registry.find_update_dmin(self.ds.d(), tile.t)?;
-            let exe = self.device.load(&self.registry.path_of(meta))?;
-            let out = self.device.execute(exe.as_ref(), &[&tile.v, dmin_buf, &e_buf])?;
-            let lits = self.device.download_tuple(&out[0])?;
-            let new_dmin: Vec<f32> = lits[0].to_vec()?;
-            state.dmin[tile.offset..tile.offset + tile.rows]
-                .copy_from_slice(&new_dmin[..tile.rows]);
-            // re-upload: the tuple output cannot be re-fed as an argument
-            new_bufs.push(self.device.upload(&new_dmin, &[tile.t])?);
+        {
+            // the predecessor slot stays resident: forks of this state
+            // (server sessions sharing a prefix) keep hitting it
+            let table = self.dmin_table.borrow();
+            let old_bufs = &table.slots[slot].bufs;
+            for (tile, dmin_buf) in self.tiles.iter().zip(old_bufs) {
+                let meta = self.registry.find_update_dmin(self.ds.d(), tile.t)?;
+                let exe = self.device.load(&self.registry.path_of(meta))?;
+                let out = self.device.execute(exe.as_ref(), &[&tile.v, dmin_buf, &e_buf])?;
+                let lits = self.device.download_tuple(&out[0])?;
+                let new_dmin: Vec<f32> = lits[0].to_vec()?;
+                state.dmin[tile.offset..tile.offset + tile.rows]
+                    .copy_from_slice(&new_dmin[..tile.rows]);
+                // re-upload: the tuple output cannot be re-fed as an argument
+                new_bufs.push(self.device.upload(&new_dmin, &[tile.t])?);
+            }
         }
         state.exemplars.push(idx);
-        *self.dmin_cache.borrow_mut() =
-            Some(DminCache { exemplars: state.exemplars.clone(), bufs: new_bufs });
+        // key the refreshed buffers by the dmin they now hold
+        self.dmin_table.borrow_mut().insert(state.dmin.clone(), new_bufs);
         Ok(())
     }
 

@@ -1,7 +1,7 @@
 //! The backend-agnostic Engine/Session facade: builder construction
-//! across backends and dtypes, session ≡ legacy-oracle equivalence, the
-//! empty-dataset guard, and the deprecation shim. Pure CPU — no
-//! artifacts needed.
+//! across backends and dtypes, session ≡ raw-oracle equivalence, the
+//! empty-dataset guard, and session warm-start composition. Pure CPU —
+//! no artifacts needed.
 
 use exemcl::cpu::build_cpu_oracle;
 use exemcl::data::synth::{GaussianBlobs, UniformCube};
@@ -30,9 +30,9 @@ fn session_is_bit_identical_to_legacy_state_threading_across_dtypes() {
             .build()
             .unwrap();
         let legacy = build_cpu_oracle(ds.clone(), false, 0, dtype);
-        let mut session = engine.session();
+        let mut session = engine.session().unwrap();
         let mut state = legacy.init_state();
-        assert_eq!(session.state().dmin, state.dmin, "{dtype}: init");
+        assert_eq!(session.state().unwrap().dmin, state.dmin, "{dtype}: init");
 
         let sets = vec![vec![0usize, 5, 9], vec![1], vec![]];
         assert_eq!(
@@ -50,7 +50,7 @@ fn session_is_bit_identical_to_legacy_state_threading_across_dtypes() {
             );
             session.commit_many(&step).unwrap();
             legacy.commit_many(&mut state, &step).unwrap();
-            assert_eq!(session.state().dmin, state.dmin, "{dtype}: dmin after {step:?}");
+            assert_eq!(session.state().unwrap().dmin, state.dmin, "{dtype}: dmin after {step:?}");
             assert_eq!(
                 session.value().unwrap(),
                 legacy.f_of_state(&state).unwrap(),
@@ -79,8 +79,8 @@ fn cpu_backends_agree_across_dtypes() {
             .build()
             .unwrap();
         let cands: Vec<usize> = (0..40).collect();
-        let mut a = st.session();
-        let mut b = mt.session();
+        let mut a = st.session().unwrap();
+        let mut b = mt.session().unwrap();
         a.commit_many(&[2, 50]).unwrap();
         b.commit_many(&[2, 50]).unwrap();
         for (x, y) in a.gains(&cands).unwrap().iter().zip(&b.gains(&cands).unwrap()) {
@@ -98,7 +98,7 @@ fn engine_run_matches_direct_session_drive() {
         .build()
         .unwrap();
     let via_run = engine.run(&Greedy::new(5)).unwrap();
-    let mut session = engine.session();
+    let mut session = engine.session().unwrap();
     let via_session = Greedy::new(5).run(&mut session).unwrap();
     assert_eq!(via_run.exemplars, via_session.exemplars);
     assert_eq!(via_run.value, via_session.value);
@@ -141,6 +141,30 @@ fn optimizers_are_backend_agnostic_through_the_engine() {
     }
 }
 
+/// `run_resume` extends a session k → k + Δ identically on local and
+/// server-resident sessions (same serial kernels behind both).
+#[test]
+fn warm_start_extends_across_backends() {
+    let ds = blobs(140);
+    let cold = Engine::builder()
+        .dataset(ds.clone())
+        .backend(Backend::SingleThread)
+        .build()
+        .unwrap()
+        .run(&Greedy::new(6))
+        .unwrap();
+    for backend in [Backend::SingleThread, Backend::service_over(Backend::SingleThread)] {
+        let engine =
+            Engine::builder().dataset(ds.clone()).backend(backend.clone()).build().unwrap();
+        let mut session = engine.session().unwrap();
+        Greedy::new(4).run(&mut session).unwrap();
+        let resumed = Greedy::new(6).run_resume(&mut session).unwrap();
+        assert_eq!(resumed.exemplars, cold.exemplars, "{backend}");
+        assert_eq!(resumed.value, cold.value, "{backend}");
+        assert_eq!(session.len(), 6, "{backend}");
+    }
+}
+
 #[test]
 fn empty_dataset_is_rejected_at_build_time() {
     let empty = Dataset::from_flat(0, 4, vec![]).unwrap();
@@ -156,23 +180,23 @@ fn missing_dataset_is_rejected_at_build_time() {
     assert!(Engine::builder().backend(Backend::SingleThread).build().is_err());
 }
 
-/// The legacy trait-object path still compiles and agrees with the
-/// session path (deprecated shim — one release).
+/// Driving a hand-wrapped raw oracle (`Session::over`, the backend
+/// escape hatch that replaced the removed `Optimizer::maximize` shim)
+/// agrees with the engine path exactly.
 #[test]
-#[allow(deprecated)]
-fn legacy_maximize_path_still_works() {
+fn raw_oracle_session_matches_engine_run() {
     let ds = blobs(120);
     let oracle = build_cpu_oracle(ds.clone(), false, 0, Dtype::F32);
-    let legacy = Greedy::new(4).maximize(oracle.as_ref()).unwrap();
+    let raw = Greedy::new(4).run(&mut Session::over(oracle.as_ref())).unwrap();
     let engine = Engine::builder()
         .dataset(ds)
         .backend(Backend::SingleThread)
         .build()
         .unwrap();
     let modern = engine.run(&Greedy::new(4)).unwrap();
-    assert_eq!(legacy.exemplars, modern.exemplars);
-    assert_eq!(legacy.value, modern.value);
-    assert_eq!(legacy.evaluations, modern.evaluations);
+    assert_eq!(raw.exemplars, modern.exemplars);
+    assert_eq!(raw.value, modern.value);
+    assert_eq!(raw.evaluations, modern.evaluations);
 }
 
 /// Sessions can be driven incrementally after an optimizer finishes —
@@ -185,7 +209,7 @@ fn sessions_compose_manual_and_optimizer_work() {
         .backend(Backend::Cpu { threads: 2 })
         .build()
         .unwrap();
-    let mut session = engine.session();
+    let mut session = engine.session().unwrap();
     Greedy::new(3).run(&mut session).unwrap();
     assert_eq!(session.len(), 3);
     let before = session.value().unwrap();

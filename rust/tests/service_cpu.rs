@@ -1,7 +1,8 @@
 //! The generalized coordinator over **CPU** oracles (no artifacts, no
 //! `xla-backend`): `Service::over` a pooled `MultiThread` backend,
-//! multi-client greedy equivalence with direct evaluation, request
-//! coalescing, queue-full backpressure, and clean shutdown.
+//! multi-client greedy equivalence with direct evaluation (each client
+//! on its own server-resident session), request coalescing, queue-full
+//! backpressure, and clean shutdown.
 
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
@@ -31,7 +32,9 @@ fn multi_client_greedy_matches_direct_evaluation() {
     let clients: Vec<_> = (0..4)
         .map(|_| {
             let h = svc.handle();
-            std::thread::spawn(move || Greedy::new(4).run(&mut Session::over(&h)).unwrap())
+            std::thread::spawn(move || {
+                Greedy::new(4).run(&mut Session::remote(&h).unwrap()).unwrap()
+            })
         })
         .collect();
     for c in clients {
@@ -180,10 +183,13 @@ fn clean_shutdown_with_outstanding_handles() {
     let svc = Service::over(MultiThread::new(ds, 2), 4).unwrap();
     let h = svc.handle();
     assert_eq!(h.eval_sets(&[vec![0, 1]]).unwrap().len(), 1);
+    let mut live = h.open().unwrap();
     svc.shutdown();
     assert!(h.eval_sets(&[vec![0]]).is_err());
-    let mut state = h.init_state();
-    assert!(h.commit_many(&mut state, &[1, 2]).is_err());
+    assert!(h.open().is_err());
+    // a session opened before shutdown errors cleanly afterwards
+    assert!(live.commit_many(&[1, 2]).is_err());
+    assert!(live.gains(&[0]).is_err());
 }
 
 /// GreeDi round 1 = one OS thread per partition, all hammering the same
@@ -195,6 +201,8 @@ fn greedi_runs_threaded_through_a_cpu_service() {
     let svc = Service::over(MultiThread::new(ds.clone(), 2), 16).unwrap();
     let h = svc.handle();
     let distributed = GreeDi::new(4, 3, 9).run_threaded(&h).unwrap();
+    // every partition opened a seeded server session + the final round
+    assert!(svc.metrics().sessions_opened.get() >= 4);
     let central = Greedy::new(4)
         .run(&mut Session::over(&SingleThread::new(ds)))
         .unwrap();

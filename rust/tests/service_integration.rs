@@ -13,6 +13,10 @@ use exemcl::optim::{Greedy, LazyGreedy, Optimizer, Oracle, SieveStreaming};
 use exemcl::runtime::{DeviceEvaluator, EvalConfig};
 use exemcl::testkit::assert_allclose;
 
+// NOTE: optimizer traffic goes through server-resident sessions
+// (`Session::remote`), so the device executor sees index-only requests
+// and keeps its dmin buffers resident between rounds.
+
 fn artifacts() -> String {
     let dir = std::env::var("EXEMCL_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
     assert!(
@@ -76,7 +80,7 @@ fn optimizers_drive_the_service_end_to_end() {
     let h = svc.handle();
     let cpu = SingleThread::new(ds);
 
-    let dev_greedy = Greedy::new(3).run(&mut Session::over(&h)).unwrap();
+    let dev_greedy = Greedy::new(3).run(&mut Session::remote(&h).unwrap()).unwrap();
     let cpu_greedy = Greedy::new(3).run(&mut Session::over(&cpu)).unwrap();
     assert!(
         (dev_greedy.value - cpu_greedy.value).abs()
@@ -86,10 +90,10 @@ fn optimizers_drive_the_service_end_to_end() {
         cpu_greedy.value
     );
 
-    let lazy = LazyGreedy::new(3).run(&mut Session::over(&h)).unwrap();
+    let lazy = LazyGreedy::new(3).run(&mut Session::remote(&h).unwrap()).unwrap();
     assert!((lazy.value - cpu_greedy.value).abs() < 2e-3 * cpu_greedy.value.abs().max(1.0));
 
-    let sieve = SieveStreaming::new(3, 0.25, 7).run(&mut Session::over(&h)).unwrap();
+    let sieve = SieveStreaming::new(3, 0.25, 7).run(&mut Session::remote(&h).unwrap()).unwrap();
     assert!(sieve.value >= 0.45 * cpu_greedy.value);
     svc.shutdown();
 }
@@ -119,7 +123,9 @@ fn greedi_runs_threaded_through_the_service() {
     let (svc, ds) = spawn_device_service(600, 21);
     let h = svc.handle();
     let distributed = GreeDi::new(4, 3, 9).run_threaded(&h).unwrap();
-    let central = Greedy::new(4).run(&mut Session::over(&SingleThread::new(ds))).unwrap();
+    let central = Greedy::new(4)
+        .run(&mut Session::over(&SingleThread::new(ds)))
+        .unwrap();
     assert!(
         distributed.value >= 0.8 * central.value,
         "greedi {} vs central greedy {}",

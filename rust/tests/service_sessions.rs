@@ -1,0 +1,255 @@
+//! The stateful session protocol end-to-end: client isolation,
+//! `Close`/TTL/capacity reclamation, fork equivalence with local
+//! sessions, the wire-accounting guarantee (Marginals/CommitMany carry
+//! O(|candidates|), never O(n)), and bit-identical greedy results
+//! between server-resident and local sessions on `cpu-st` for every
+//! dtype. Pure CPU — no artifacts needed.
+
+use std::time::Duration;
+
+use exemcl::coordinator::{Service, SessionConfig};
+use exemcl::cpu::{build_cpu_oracle, SingleThread};
+use exemcl::data::synth::GaussianBlobs;
+use exemcl::data::Dataset;
+use exemcl::engine::{Backend, Engine, Session};
+use exemcl::optim::{Greedy, Optimizer, Oracle};
+use exemcl::scalar::Dtype;
+
+fn blobs(n: usize) -> Dataset {
+    GaussianBlobs::new(4, 6, 0.3).generate(n, 29)
+}
+
+fn cpu_service(n: usize) -> Service {
+    Service::over(SingleThread::new(blobs(n)), 16).unwrap()
+}
+
+/// Concurrent clients each drive their own server session; committing
+/// in one must never leak into another (the executor interleaves their
+/// requests on one oracle).
+#[test]
+fn concurrent_clients_cannot_observe_each_others_sessions() {
+    let svc = cpu_service(120);
+    let workers: Vec<_> = (0..4usize)
+        .map(|t| {
+            let h = svc.handle();
+            std::thread::spawn(move || {
+                let mut s = h.open().unwrap();
+                // distinct exemplar trail per client
+                let mine = vec![t, t + 10, t + 20];
+                s.commit_many(&mine).unwrap();
+                let got = s.export().unwrap();
+                (mine, got)
+            })
+        })
+        .collect();
+    let direct = SingleThread::new(blobs(120));
+    for w in workers {
+        let (mine, got) = w.join().unwrap();
+        assert_eq!(got.exemplars, mine, "server state holds exactly this client's commits");
+        let mut want = direct.init_state();
+        direct.commit_many(&mut want, &mine).unwrap();
+        assert_eq!(got.dmin, want.dmin, "dmin reflects only this client's exemplars");
+    }
+    svc.shutdown();
+}
+
+/// Close and TTL expiry both reclaim table memory; requests against a
+/// reclaimed id fail with a session error while the service keeps
+/// serving everyone else.
+#[test]
+fn close_and_ttl_eviction_reclaim_sessions() {
+    let ds = blobs(80);
+    let svc = Service::over_with(
+        SingleThread::new(ds),
+        16,
+        SessionConfig { capacity: 64, ttl: Some(Duration::from_millis(400)) },
+    )
+    .unwrap();
+    let h = svc.handle();
+
+    // explicit close
+    let s = h.open().unwrap();
+    assert_eq!(svc.metrics().sessions_live.get(), 1);
+    s.close().unwrap();
+    assert_eq!(svc.metrics().sessions_live.get(), 0);
+    assert_eq!(svc.metrics().sessions_closed.get(), 1);
+
+    // TTL expiry: an idle session dies, a busy one survives. Touch the
+    // busy session ~20x per TTL so only a multi-hundred-ms scheduler
+    // stall could evict it spuriously.
+    let mut idle = h.open().unwrap();
+    let mut busy = h.open().unwrap();
+    for _ in 0..25 {
+        std::thread::sleep(Duration::from_millis(20));
+        busy.gains(&[0, 1]).unwrap(); // touches → stays live
+    }
+    // `idle` has been silent past the TTL; its next request must fail
+    let err = idle.gains(&[0]).unwrap_err();
+    assert!(err.to_string().contains("unknown session"), "got: {err}");
+    assert!(idle.commit_many(&[1]).is_err());
+    assert!(svc.metrics().sessions_evicted.get() >= 1);
+    // the busy session is untouched
+    busy.commit_many(&[3]).unwrap();
+    assert_eq!(busy.exemplars(), &[3]);
+    svc.shutdown();
+}
+
+/// Capacity pressure evicts the least-recently-used session.
+#[test]
+fn capacity_evicts_lru_sessions() {
+    let svc = Service::over_with(
+        SingleThread::new(blobs(60)),
+        16,
+        SessionConfig { capacity: 2, ttl: None },
+    )
+    .unwrap();
+    let h = svc.handle();
+    let a = h.open().unwrap();
+    std::thread::sleep(Duration::from_millis(2));
+    let b = h.open().unwrap();
+    std::thread::sleep(Duration::from_millis(2));
+    a.gains(&[0]).unwrap(); // touch a → b is now LRU
+    let c = h.open().unwrap(); // evicts b
+    assert!(b.gains(&[0]).is_err(), "LRU session was evicted");
+    assert!(a.gains(&[0]).is_ok());
+    assert!(c.gains(&[0]).is_ok());
+    assert_eq!(svc.metrics().sessions_evicted.get(), 1);
+    svc.shutdown();
+}
+
+/// Server-side `Fork` is copy-on-write-equivalent to a local session
+/// fork: parent and child diverge exactly like two local sessions do,
+/// bit-for-bit on cpu-st.
+#[test]
+fn remote_fork_equals_local_fork() {
+    let svc = cpu_service(100);
+    let h = svc.handle();
+    let o = SingleThread::new(blobs(100));
+
+    let mut local_parent = Session::over(&o);
+    let mut remote_parent = Session::remote(&h).unwrap();
+    local_parent.commit_many(&[5, 17]).unwrap();
+    remote_parent.commit_many(&[5, 17]).unwrap();
+
+    let mut local_fork = local_parent.fork().unwrap();
+    let mut remote_fork = remote_parent.fork().unwrap();
+    local_fork.commit(40).unwrap();
+    remote_fork.commit(40).unwrap();
+
+    // parents did not move
+    assert_eq!(remote_parent.exemplars(), local_parent.exemplars());
+    assert_eq!(
+        remote_parent.export_state().unwrap().dmin,
+        local_parent.export_state().unwrap().dmin
+    );
+    // forks diverged identically
+    assert_eq!(remote_fork.exemplars(), local_fork.exemplars());
+    assert_eq!(
+        remote_fork.export_state().unwrap().dmin,
+        local_fork.export_state().unwrap().dmin
+    );
+    // and the fork itself shipped no state: one unseeded Open (16
+    // header bytes) is the only open_req traffic — Fork moved ids only
+    assert_eq!(svc.metrics().wire.open_req.get(), 16);
+    svc.shutdown();
+}
+
+/// The acceptance check: `Marginals`/`CommitMany` payloads are a pure
+/// function of the candidate count — measured wire bytes match the
+/// index-only formula exactly and do not move when n grows 8×.
+#[test]
+fn marginals_and_commit_wire_bytes_are_o_candidates_not_o_n() {
+    let candidates: Vec<usize> = (0..32).collect();
+    let commits = [3usize, 41, 7];
+    let mut measured = Vec::new();
+    for n in [200usize, 1600] {
+        let svc = Service::over(SingleThread::new(blobs(n)), 8).unwrap();
+        let h = svc.handle();
+        let mut s = h.open().unwrap();
+        s.gains(&candidates).unwrap();
+        s.commit_many(&commits).unwrap();
+        s.gains(&candidates).unwrap();
+        let m = svc.metrics();
+        let sample = (
+            m.wire.marginals_req.get(),
+            m.wire.marginals_reply.get(),
+            m.wire.commit_req.get(),
+            m.wire.commit_reply.get(),
+        );
+        // exact index-only shape: header(16) + sid(8) + 8 per index out,
+        // header + 4 per gain back, header-only commit acks
+        assert_eq!(sample.0, 2 * (16 + 8 + 8 * candidates.len() as u64), "n={n}: marginals req");
+        assert_eq!(sample.1, 2 * (16 + 4 * candidates.len() as u64), "n={n}: marginals reply");
+        assert_eq!(sample.2, 16 + 8 + 8 * commits.len() as u64, "n={n}: commit req");
+        assert_eq!(sample.3, 16, "n={n}: commit ack");
+        measured.push(sample);
+        svc.shutdown();
+    }
+    // identical traffic at n=200 and n=1600: O(|C|), not O(n)
+    assert_eq!(measured[0], measured[1]);
+}
+
+/// A full greedy run's session traffic matches the index-only formulas
+/// exactly: no message anywhere in the run carries a dmin term. In the
+/// stateless protocol every one of these requests (and every commit
+/// reply) additionally shipped `n·4` bytes of state.
+#[test]
+fn greedy_run_traffic_is_exactly_index_only() {
+    let n = 1200usize;
+    let k = 5u64;
+    let svc = Service::over(SingleThread::new(blobs(n)), 8).unwrap();
+    let h = svc.handle();
+    Greedy::new(k as usize).run(&mut Session::remote(&h).unwrap()).unwrap();
+    let m = svc.metrics();
+    // round r scores the n - r unselected candidates
+    let expect_marginals: u64 = (0..k).map(|r| 16 + 8 + 8 * (n as u64 - r)).sum();
+    let expect_replies: u64 = (0..k).map(|r| 16 + 4 * (n as u64 - r)).sum();
+    assert_eq!(m.wire.marginals_req.get(), expect_marginals);
+    assert_eq!(m.wire.marginals_reply.get(), expect_replies);
+    // greedy commits one exemplar per round; acks are headers
+    assert_eq!(m.wire.commit_req.get(), k * (16 + 8 + 8));
+    assert_eq!(m.wire.commit_reply.get(), k * 16);
+    // run() resets the fresh session once (close + reopen), so exactly
+    // two unseeded opens ship header-only payloads
+    assert_eq!(m.wire.open_req.get(), 2 * 16, "unseeded opens ship no state");
+    svc.shutdown();
+}
+
+/// The acceptance criterion: greedy through a server-resident session
+/// is **bit-identical** to the local-session path on cpu-st, for every
+/// dtype — same kernels, same state, same reduction order, different
+/// state residency.
+#[test]
+fn session_greedy_bit_identical_to_local_across_dtypes() {
+    let ds = blobs(150);
+    for dtype in Dtype::all() {
+        let local_oracle = build_cpu_oracle(ds.clone(), false, 0, dtype);
+        let local = Greedy::new(6).run(&mut Session::over(local_oracle.as_ref())).unwrap();
+
+        let engine = Engine::builder()
+            .dataset(ds.clone())
+            .backend(Backend::service_over(Backend::SingleThread))
+            .dtype(dtype)
+            .build()
+            .unwrap();
+        let mut session = engine.session().unwrap();
+        let remote = Greedy::new(6).run(&mut session).unwrap();
+
+        assert_eq!(remote.exemplars, local.exemplars, "{dtype}: exemplar sequence");
+        assert_eq!(remote.value.to_bits(), local.value.to_bits(), "{dtype}: f(S) bits");
+        assert_eq!(remote.curve.len(), local.curve.len(), "{dtype}: curve length");
+        for (i, (a, b)) in remote.curve.iter().zip(&local.curve).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{dtype}: curve[{i}] bits");
+        }
+        assert_eq!(remote.evaluations, local.evaluations, "{dtype}: evaluation count");
+        // ... and the final server state equals the local state bitwise
+        let server_state = session.export_state().unwrap();
+        let mut local_state = local_oracle.init_state();
+        local_oracle.commit_many(&mut local_state, &local.exemplars).unwrap();
+        assert_eq!(
+            server_state.dmin.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            local_state.dmin.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "{dtype}: dmin bits"
+        );
+    }
+}
