@@ -1,0 +1,188 @@
+//! Transport wire accounting — the net-layer headline numbers: frames
+//! and bytes per greedy round over a **real socket** (UDS on unix, TCP
+//! loopback elsewhere) vs the in-process session baseline, plus the
+//! wall-clock cost of putting the protocol out of process.
+//!
+//! Drives the same round-by-round greedy twice — once through an
+//! in-process `Session::remote` (modeled wire bytes from the service
+//! metrics) and once through a `NetClient` against a served loopback
+//! endpoint (actual encoded frame bytes from the client's transport
+//! counters) — asserts both are index-only and that the framed bytes
+//! equal the modeled bytes for the hot-path messages, and writes
+//! `BENCH_net_wire.json` for the CI perf trajectory (override the path
+//! with `EXEMCL_BENCH_NET_WIRE_OUT`).
+//!
+//! Run: `cargo bench --bench net_wire`
+
+use std::time::{Duration, Instant};
+
+use exemcl::bench::{write_json, JsonValue, Scale, Table};
+use exemcl::coordinator::Service;
+use exemcl::cpu::SingleThread;
+use exemcl::data::synth::GaussianBlobs;
+use exemcl::engine::Session;
+use exemcl::net::{Listen, NetClient, NetConfig, NetServer};
+use exemcl::optim::Oracle;
+
+/// One greedy round, driven by hand so per-round deltas are visible.
+fn greedy_round(session: &mut Session<'_>, selected: &mut [bool]) -> usize {
+    let candidates: Vec<usize> =
+        (0..selected.len()).filter(|&i| !selected[i]).collect();
+    let gains = session.gains(&candidates).expect("gains");
+    let best = gains
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i)
+        .expect("candidates");
+    session.commit(candidates[best]).expect("commit");
+    session.sync().expect("commit ack");
+    selected[candidates[best]] = true;
+    candidates.len()
+}
+
+fn listen_endpoint() -> Listen {
+    #[cfg(unix)]
+    {
+        let path =
+            std::env::temp_dir().join(format!("exemcl-bench-net-{}.sock", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        Listen::Uds(path)
+    }
+    #[cfg(not(unix))]
+    {
+        Listen::Tcp("127.0.0.1:0".into())
+    }
+}
+
+fn main() {
+    let scale = Scale::from_env();
+    let (n, k) = match scale {
+        Scale::Quick => (2_000usize, 8usize),
+        Scale::Default => (20_000, 16),
+        Scale::Full => (50_000, 16),
+    };
+    let d = 16usize;
+    let ds = GaussianBlobs::new(6, d, 0.4).generate(n, 17);
+
+    // ------------------------------------------------------------------
+    // baseline: in-process server-resident session (modeled wire bytes)
+    let svc = Service::over(SingleThread::new(ds.clone()), 16).expect("service");
+    let h = svc.handle();
+    let m = svc.metrics();
+    let mut selected = vec![false; n];
+    let mut inproc_rounds: Vec<u64> = Vec::with_capacity(k);
+    let t0 = Instant::now();
+    {
+        let mut session = Session::remote(&h).expect("open session");
+        for _ in 0..k {
+            let before = m.wire.total();
+            greedy_round(&mut session, &mut selected);
+            inproc_rounds.push(m.wire.total() - before);
+        }
+    }
+    let inproc_secs = t0.elapsed().as_secs_f64();
+    let inproc_value = {
+        let mut check = SingleThread::new(ds.clone()).init_state();
+        let o = SingleThread::new(ds.clone());
+        let chosen: Vec<usize> = (0..n).filter(|&i| selected[i]).collect();
+        o.commit_many(&mut check, &chosen).expect("check state");
+        o.f_of_state(&check).expect("f")
+    };
+    svc.shutdown();
+
+    // ------------------------------------------------------------------
+    // the same run over a real socket
+    let svc = Service::over(SingleThread::new(ds.clone()), 16).expect("service");
+    let cfg = NetConfig::new(listen_endpoint()).with_poll(Duration::from_millis(20));
+    let server = NetServer::bind(svc.handle(), cfg).expect("bind");
+    let addr = server.local_addr().clone();
+    let stop = server.stop_handle();
+    let serving = std::thread::spawn(move || server.run().expect("serve"));
+
+    let t0 = Instant::now();
+    let client = NetClient::connect(&addr).expect("connect");
+    let handshake_bytes = client.tx_bytes() + client.rx_bytes();
+    let mut selected_net = vec![false; n];
+    let mut net_rounds: Vec<(usize, u64, u64)> = Vec::with_capacity(k);
+    {
+        let mut session = Session::over_net(&client).expect("open net session");
+        for _ in 0..k {
+            let (tx0, rx0) = (client.tx_bytes(), client.rx_bytes());
+            let cands = greedy_round(&mut session, &mut selected_net);
+            net_rounds.push((cands, client.tx_bytes() - tx0, client.rx_bytes() - rx0));
+        }
+        session.close().expect("close");
+    }
+    let net_secs = t0.elapsed().as_secs_f64();
+    assert_eq!(selected_net, selected, "remote greedy must match the in-process run");
+
+    // index-only on the socket too: per-round frames are an exact
+    // function of the candidate count (marginals + commit, headers in)
+    for (r, &(cands, tx, rx)) in net_rounds.iter().enumerate() {
+        assert_eq!(tx, (16 + 8 + 8 * cands as u64) + (16 + 8 + 8), "round {r}: tx index-only");
+        assert_eq!(rx, (16 + 4 * cands as u64) + 16, "round {r}: rx index-only");
+    }
+
+    let mut table = Table::new(&[
+        "round",
+        "|C|",
+        "in-proc bytes",
+        "socket tx+rx",
+        "overhead",
+    ]);
+    for (r, (&inp, &(cands, tx, rx))) in
+        inproc_rounds.iter().zip(&net_rounds).enumerate()
+    {
+        table.row(&[
+            r.to_string(),
+            cands.to_string(),
+            inp.to_string(),
+            (tx + rx).to_string(),
+            format!("{:+}B", (tx + rx) as i64 - inp as i64),
+        ]);
+    }
+    table.print();
+
+    let total_inproc: u64 = inproc_rounds.iter().sum();
+    let total_net: u64 = net_rounds.iter().map(|&(_, tx, rx)| tx + rx).sum();
+    let frames_per_round = 4u64; // marginals req/reply + commit req/ack
+    println!(
+        "\nn={n} d={d} k={k}: {total_net}B framed on the socket vs {total_inproc}B modeled \
+         in-process ({frames_per_round} frames/round; {handshake_bytes}B one-time handshake)"
+    );
+    println!(
+        "wall: {net_secs:.3}s over the socket vs {inproc_secs:.3}s in-process \
+         ({:.2}x)",
+        net_secs / inproc_secs.max(1e-9)
+    );
+    println!("server: {}", svc.metrics().summary());
+
+    stop.stop();
+    serving.join().expect("server thread");
+    svc.shutdown();
+
+    let out = std::env::var("EXEMCL_BENCH_NET_WIRE_OUT")
+        .unwrap_or_else(|_| "BENCH_net_wire.json".into());
+    let last = net_rounds.last().expect("rounds");
+    let path = write_json(
+        &out,
+        &[
+            ("bench", JsonValue::Str("net_wire".into())),
+            ("endpoint", JsonValue::Str(addr.to_string())),
+            ("n", JsonValue::Int(n as i64)),
+            ("d", JsonValue::Int(d as i64)),
+            ("k", JsonValue::Int(k as i64)),
+            ("frames_per_round", JsonValue::Int(frames_per_round as i64)),
+            ("handshake_bytes", JsonValue::Int(handshake_bytes as i64)),
+            ("total_bytes_socket", JsonValue::Int(total_net as i64)),
+            ("total_bytes_inprocess_model", JsonValue::Int(total_inproc as i64)),
+            ("last_round_bytes_socket", JsonValue::Int((last.1 + last.2) as i64)),
+            ("wall_seconds_socket", JsonValue::Num(net_secs)),
+            ("wall_seconds_inprocess", JsonValue::Num(inproc_secs)),
+            ("value_check", JsonValue::Num(inproc_value as f64)),
+        ],
+    )
+    .expect("write BENCH_net_wire.json");
+    println!("wrote {path}");
+}

@@ -63,6 +63,9 @@ fn main() {
             .map(|(i, _)| i)
             .expect("candidates");
         session.commit(candidates[best]).expect("commit");
+        // commits are pipelined; settle the ack so this round's bytes
+        // are all accounted before the delta is read
+        session.sync().expect("commit ack");
         selected[candidates[best]] = true;
         let now = m.wire.total() - before;
         // stateless model, same four messages: marginals req carried

@@ -3,10 +3,12 @@
 //! in the offline crate set, so parsing is hand-rolled and strict.
 
 use std::collections::BTreeMap;
+use std::time::Duration;
 
 use crate::coordinator::{DEFAULT_QUEUE_CAPACITY, DEFAULT_SESSION_CAPACITY};
 use crate::data::Dataset;
 use crate::engine::Engine;
+use crate::net::{Listen, NetConfig, DEFAULT_MAX_CONNS};
 use crate::scalar::Dtype;
 use crate::{Error, Result};
 
@@ -126,6 +128,13 @@ pub struct AppConfig {
     pub session_ttl_secs: u64,
     /// Optional CSV input path (overrides the generator).
     pub csv: Option<String>,
+    /// `serve` endpoint (`tcp:host:port` | `uds:/path`).
+    pub listen: String,
+    /// `serve` connection ceiling.
+    pub max_conns: usize,
+    /// `serve` accept/read poll interval in seconds (shutdown
+    /// responsiveness; no client request times out because of it).
+    pub accept_timeout_secs: u64,
 }
 
 impl Default for AppConfig {
@@ -147,6 +156,9 @@ impl Default for AppConfig {
             sessions: DEFAULT_SESSION_CAPACITY,
             session_ttl_secs: 0,
             csv: None,
+            listen: "tcp:127.0.0.1:7171".into(),
+            max_conns: DEFAULT_MAX_CONNS,
+            accept_timeout_secs: 1,
         }
     }
 }
@@ -173,7 +185,43 @@ impl AppConfig {
             sessions: raw.get_or("eval.sessions", def.sessions)?,
             session_ttl_secs: raw.get_or("eval.session_ttl_secs", def.session_ttl_secs)?,
             csv: raw.get("data.csv").map(str::to_string),
+            listen: raw.get("net.listen").unwrap_or(&def.listen).to_string(),
+            max_conns: raw.get_or("net.max_conns", def.max_conns)?,
+            accept_timeout_secs: raw.get_or("net.accept_timeout_secs", def.accept_timeout_secs)?,
         })
+    }
+
+    /// The `serve` subcommand's transport config, from the `net.*` keys.
+    pub fn net_config(&self) -> Result<NetConfig> {
+        let listen: Listen = self.listen.parse()?;
+        Ok(NetConfig::new(listen)
+            .with_max_conns(self.max_conns)
+            .with_poll(Duration::from_secs(self.accept_timeout_secs.max(1))))
+    }
+
+    /// Build an [`Engine`] against an out-of-process server — the
+    /// [`Backend::Tcp`] / [`Backend::Uds`] path, which takes no local
+    /// dataset (the engine mirrors the server's at connect). The
+    /// server-side knobs (`eval.dtype`, `eval.queue`, `eval.sessions`,
+    /// `eval.session_ttl_secs`, `eval.memory_mib`) are forwarded so an
+    /// explicit non-default request is **rejected** by the builder (the
+    /// serving process owns its configuration) rather than silently
+    /// ignored.
+    pub fn remote_engine(&self) -> Result<Engine> {
+        if !self.backend.is_remote() {
+            return Err(Error::Config(format!(
+                "backend {} is not remote (tcp:host:port | uds:/path)",
+                self.backend
+            )));
+        }
+        Engine::builder()
+            .backend(self.backend.clone())
+            .dtype(self.dtype)
+            .queue_capacity(self.queue)
+            .session_capacity(self.sessions)
+            .session_ttl_secs(self.session_ttl_secs)
+            .memory_mib(self.memory_mib)
+            .build()
     }
 
     /// Build an [`Engine`] for this config over a prepared dataset —
@@ -305,5 +353,39 @@ mod tests {
     fn bad_typed_value_errors() {
         let raw = RawConfig::parse("[data]\nn = abc\n").unwrap();
         assert!(AppConfig::from_raw(&raw).is_err());
+    }
+
+    #[test]
+    fn net_keys_parse_with_defaults() {
+        let def = AppConfig::from_raw(&RawConfig::default()).unwrap();
+        assert_eq!(def.listen, "tcp:127.0.0.1:7171");
+        assert_eq!(def.max_conns, DEFAULT_MAX_CONNS);
+        assert_eq!(def.accept_timeout_secs, 1);
+        let net = def.net_config().unwrap();
+        assert_eq!(net.listen, Listen::Tcp("127.0.0.1:7171".into()));
+
+        let raw = RawConfig::parse(
+            "[net]\nlisten = uds:/tmp/exemcl.sock\nmax_conns = 4\naccept_timeout_secs = 2\n",
+        )
+        .unwrap();
+        let cfg = AppConfig::from_raw(&raw).unwrap();
+        let net = cfg.net_config().unwrap();
+        assert_eq!(net.listen, Listen::Uds("/tmp/exemcl.sock".into()));
+        assert_eq!(net.max_conns, 4);
+        assert_eq!(net.poll, Duration::from_secs(2));
+
+        let raw = RawConfig::parse("[net]\nlisten = carrier-pigeon\n").unwrap();
+        assert!(AppConfig::from_raw(&raw).unwrap().net_config().is_err());
+    }
+
+    #[test]
+    fn remote_backend_key_parses_and_guards() {
+        let raw = RawConfig::parse("[eval]\nbackend = tcp:127.0.0.1:9\n").unwrap();
+        let cfg = AppConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.backend, Backend::Tcp { addr: "127.0.0.1:9".into() });
+        assert!(cfg.backend.is_remote());
+        // remote_engine on a local backend is a config error
+        let local = AppConfig::from_raw(&RawConfig::default()).unwrap();
+        assert!(local.remote_engine().is_err());
     }
 }

@@ -65,10 +65,21 @@ pub struct WireBytes {
     /// Everything else: `Value`/`Fork`/`Close` requests + replies and
     /// `EvalSets` traffic.
     pub other: Counter,
+    /// Transport-level bytes **received** by the net server across all
+    /// connections: actual encoded frames, 16-byte headers included —
+    /// counted as frames come off the socket, summed from the
+    /// per-connection counters. Not part of [`WireBytes::total`] (the
+    /// family counters already model the same payloads).
+    pub net_rx: Counter,
+    /// Transport-level bytes **sent** by the net server (encoded reply
+    /// frames, headers included). See [`WireBytes::net_rx`].
+    pub net_tx: Counter,
 }
 
 impl WireBytes {
-    /// Total bytes across all message families.
+    /// Total modeled payload bytes across all message families. The
+    /// transport counters (`net_rx`/`net_tx`) are excluded: they measure
+    /// the same traffic at the socket and would double-count.
     pub fn total(&self) -> u64 {
         self.marginals_req.get()
             + self.marginals_reply.get()
@@ -163,6 +174,16 @@ pub struct ServiceMetrics {
     pub gains_evaluated: Counter,
     /// Requests coalesced into a batch beyond the first.
     pub coalesced: Counter,
+    /// `Marginals` requests fused into a multi-state gains pass beyond
+    /// the first of their batch (concurrent sessions batching onto one
+    /// backend launch).
+    pub marginals_coalesced: Counter,
+    /// Network connections accepted by the net server.
+    pub conns_opened: Counter,
+    /// Network connections that ended (EOF, error or shutdown).
+    pub conns_closed: Counter,
+    /// Network connections refused at the `net.max_conns` ceiling.
+    pub conns_rejected: Counter,
     /// Server sessions opened (`Open` + `Fork`).
     pub sessions_opened: Counter,
     /// Server sessions closed by an explicit `Close`.
@@ -178,22 +199,39 @@ pub struct ServiceMetrics {
 }
 
 impl ServiceMetrics {
+    /// Currently serving network connections. Derived from the
+    /// monotone open/close counters rather than kept as a gauge:
+    /// connection threads close concurrently, and racing gauge stores
+    /// could latch a stale value forever ([`Gauge`] is single-writer —
+    /// fine for the executor's session table, wrong here).
+    pub fn conns_live(&self) -> u64 {
+        self.conns_opened.get().saturating_sub(self.conns_closed.get())
+    }
+
     /// One-line human-readable summary.
     pub fn summary(&self) -> String {
         format!(
-            "requests={} batches={} coalesced={} sets={} gains={} \
-             sessions(live={} opened={} closed={} evicted={}) wire={}B \
+            "requests={} batches={} coalesced={} fused_gains={} sets={} gains={} \
+             sessions(live={} opened={} closed={} evicted={}) \
+             conns(live={} opened={} closed={} rejected={}) wire={}B net(rx={}B tx={}B) \
              latency(mean={:.0}us p50={}us p95={}us max={}us)",
             self.requests.get(),
             self.batches.get(),
             self.coalesced.get(),
+            self.marginals_coalesced.get(),
             self.sets_evaluated.get(),
             self.gains_evaluated.get(),
             self.sessions_live.get(),
             self.sessions_opened.get(),
             self.sessions_closed.get(),
             self.sessions_evicted.get(),
+            self.conns_live(),
+            self.conns_opened.get(),
+            self.conns_closed.get(),
+            self.conns_rejected.get(),
             self.wire.total(),
+            self.wire.net_rx.get(),
+            self.wire.net_tx.get(),
             self.latency.mean_us(),
             self.latency.quantile_us(0.5),
             self.latency.quantile_us(0.95),
@@ -230,6 +268,11 @@ mod tests {
         w.marginals_req.add(10);
         w.commit_reply.add(5);
         w.open_req.add(100);
+        assert_eq!(w.total(), 115);
+        // transport counters measure the same payloads at the socket and
+        // must not double into the modeled total
+        w.net_rx.add(1000);
+        w.net_tx.add(1000);
         assert_eq!(w.total(), 115);
     }
 

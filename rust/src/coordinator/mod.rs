@@ -57,18 +57,29 @@
 //! requests that arrive while the backend is busy into a single packed
 //! work-matrix evaluation — the multiset batching of the paper's §IV-A —
 //! and the queue is bounded, so producers get backpressure instead of
-//! unbounded memory growth.
+//! unbounded memory growth. `Marginals` requests coalesce the same way:
+//! queued gains from **distinct sessions** (concurrent GreeDi
+//! partitions, independent remote clients) fuse into one multi-state
+//! backend pass ([`crate::optim::GainsJob`]). On the client side,
+//! `CommitMany` acks are pipelined — [`RemoteSession::commit_many`]
+//! queues and returns, so the next `Marginals` never waits a
+//! round-trip; the FIFO queue keeps the ordering exact.
+//!
+//! This executor serves in-process clients through channels; the same
+//! protocol goes out-of-process over TCP/UDS via [`crate::net`], whose
+//! server decodes frames into these requests one connection at a time.
 
 pub mod metrics;
 mod sessions;
 
+use std::cell::RefCell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Instant;
 
 use crate::data::Dataset;
-use crate::optim::oracle::{DminState, Oracle};
+use crate::optim::oracle::{DminState, GainsJob, Oracle};
 use crate::{Error, Result};
 
 pub use metrics::{Counter, Gauge, ServiceMetrics, WireBytes};
@@ -299,6 +310,15 @@ impl Drop for Service {
     }
 }
 
+/// One queued `Marginals` request, detached from the `Request` enum so
+/// the coalescing paths can carry batches of them.
+struct MarginalsReq {
+    sid: u64,
+    candidates: Vec<usize>,
+    reply: mpsc::Sender<Result<Vec<f32>>>,
+    enqueued: Instant,
+}
+
 fn executor_loop(
     oracle: &dyn Oracle,
     rx: &mpsc::Receiver<Request>,
@@ -322,35 +342,85 @@ fn executor_loop(
             metrics.sessions_live.set(table.len() as u64);
         }
 
-        match first {
-            Request::EvalSets { sets, reply, enqueued } => {
-                // coalesce: drain any further eval_sets already queued
-                let mut batch = vec![(sets, reply, enqueued)];
-                let mut leftover = None;
-                while let Ok(next) = rx.try_recv() {
-                    match next {
-                        Request::EvalSets { sets, reply, enqueued } => {
-                            queue_depth.fetch_sub(1, Ordering::Relaxed);
-                            metrics.coalesced.add(1);
-                            batch.push((sets, reply, enqueued));
-                        }
-                        Request::Shutdown => return,
-                        other => {
-                            queue_depth.fetch_sub(1, Ordering::Relaxed);
-                            leftover = Some(other);
-                            break;
-                        }
-                    }
+        // Serve the head request; coalescable kinds drain the queue for
+        // same-kind neighbors, and whatever broke the run is carried
+        // into the next iteration of this inner loop (it may itself
+        // start a batch of its own kind).
+        let mut next = Some(first);
+        while let Some(req) = next.take() {
+            match req {
+                Request::Shutdown => return,
+                Request::EvalSets { sets, reply, enqueued } => {
+                    // coalesce adjacent eval_sets into one packed batch
+                    let mut batch = vec![(sets, reply, enqueued)];
+                    let outcome =
+                        drain_same_kind(rx, queue_depth, &metrics.coalesced, &mut batch, |r| {
+                            match r {
+                                Request::EvalSets { sets, reply, enqueued } => {
+                                    Ok((sets, reply, enqueued))
+                                }
+                                other => Err(other),
+                            }
+                        });
+                    let Some(leftover) = outcome else { return };
+                    next = leftover;
+                    serve_eval_batch(oracle, batch, metrics);
                 }
-                serve_eval_batch(oracle, batch, metrics);
-                if let Some(other) = leftover {
-                    serve_single(oracle, &mut table, other, metrics);
+                Request::Marginals { sid, candidates, reply, enqueued } => {
+                    // coalesce adjacent marginals — possibly from
+                    // distinct connections/sessions — into one fused
+                    // multi-state gains pass on the backend
+                    let mut batch = vec![MarginalsReq { sid, candidates, reply, enqueued }];
+                    let outcome = drain_same_kind(
+                        rx,
+                        queue_depth,
+                        &metrics.marginals_coalesced,
+                        &mut batch,
+                        |r| match r {
+                            Request::Marginals { sid, candidates, reply, enqueued } => {
+                                Ok(MarginalsReq { sid, candidates, reply, enqueued })
+                            }
+                            other => Err(other),
+                        },
+                    );
+                    let Some(leftover) = outcome else { return };
+                    next = leftover;
+                    serve_marginals_batch(oracle, &mut table, batch, metrics);
                 }
+                other => serve_single(oracle, &mut table, other, metrics),
             }
-            other => serve_single(oracle, &mut table, other, metrics),
+            metrics.batches.add(1);
         }
-        metrics.batches.add(1);
     }
+}
+
+/// Drain queued requests of the batch head's kind: matching requests
+/// are appended to `batch` (counting into `coalesced`), the first
+/// non-matching request is handed back as the carry-over. Returns
+/// `None` when `Shutdown` arrived (which bypasses `ServiceHandle::send`
+/// and is therefore never counted into `queue_depth`), `Some(carry)`
+/// otherwise.
+fn drain_same_kind<T>(
+    rx: &mpsc::Receiver<Request>,
+    queue_depth: &AtomicUsize,
+    coalesced: &Counter,
+    batch: &mut Vec<T>,
+    mut matcher: impl FnMut(Request) -> std::result::Result<T, Request>,
+) -> Option<Option<Request>> {
+    while let Ok(queued) = rx.try_recv() {
+        if matches!(queued, Request::Shutdown) {
+            return None;
+        }
+        queue_depth.fetch_sub(1, Ordering::Relaxed);
+        match matcher(queued) {
+            Ok(item) => {
+                coalesced.add(1);
+                batch.push(item);
+            }
+            Err(other) => return Some(Some(other)),
+        }
+    }
+    Some(None)
 }
 
 fn serve_eval_batch(
@@ -388,6 +458,49 @@ fn serve_eval_batch(
                 let _ = reply.send(Err(Error::Service(msg.clone())));
             }
         }
+    }
+}
+
+/// Serve a batch of `Marginals` requests — one fused multi-state gains
+/// pass on the backend when more than one session is represented
+/// ([`Oracle::marginal_gains_multi`]); per-request byte accounting and
+/// error replies are identical to serving them singly.
+fn serve_marginals_batch(
+    oracle: &dyn Oracle,
+    table: &mut SessionTable,
+    batch: Vec<MarginalsReq>,
+    metrics: &ServiceMetrics,
+) {
+    // request-side accounting + LRU stamps; a missing session answers
+    // alone without failing its batch-mates
+    let mut errors: Vec<Option<Error>> = Vec::with_capacity(batch.len());
+    for r in &batch {
+        metrics.wire.marginals_req.add(WIRE_HEADER + 8 + 8 * r.candidates.len() as u64);
+        metrics.gains_evaluated.add(r.candidates.len() as u64);
+        errors.push(table.touch(r.sid).err());
+    }
+    // shared borrows of every resolved state at once: stamps are done,
+    // so the table is only read from here on
+    let jobs: Vec<GainsJob<'_>> = batch
+        .iter()
+        .zip(&errors)
+        .filter(|(_, e)| e.is_none())
+        .map(|(r, _)| GainsJob {
+            state: &table.get_ref(r.sid).expect("touched above").state,
+            candidates: &r.candidates,
+        })
+        .collect();
+    let mut results = oracle.marginal_gains_multi(&jobs).into_iter();
+    drop(jobs); // release the borrows of `batch` and `table` before replying
+    for (r, err) in batch.into_iter().zip(errors) {
+        let out = match err {
+            Some(e) => Err(e),
+            None => results.next().expect("one result per fused job"),
+        };
+        let reply_bytes = out.as_ref().map(|g| 4 * g.len() as u64).unwrap_or(0);
+        metrics.wire.marginals_reply.add(WIRE_HEADER + reply_bytes);
+        metrics.latency.observe(r.enqueued.elapsed());
+        let _ = r.reply.send(out);
     }
 }
 
@@ -444,15 +557,14 @@ fn serve_single(
             let _ = reply.send(Ok(sid));
         }
         Request::Marginals { sid, candidates, reply, enqueued } => {
-            metrics.wire.marginals_req.add(WIRE_HEADER + 8 + 8 * candidates.len() as u64);
-            metrics.gains_evaluated.add(candidates.len() as u64);
-            let r = table
-                .get_mut(sid)
-                .and_then(|e| oracle.marginal_gains(&e.state, &candidates));
-            let reply_bytes = r.as_ref().map(|g| 4 * g.len() as u64).unwrap_or(0);
-            metrics.wire.marginals_reply.add(WIRE_HEADER + reply_bytes);
-            metrics.latency.observe(enqueued.elapsed());
-            let _ = reply.send(r);
+            // a stray marginals (e.g. the request that broke an
+            // eval_sets coalescing run) is a one-element fused batch
+            serve_marginals_batch(
+                oracle,
+                table,
+                vec![MarginalsReq { sid, candidates, reply, enqueued }],
+                metrics,
+            );
         }
         Request::CommitMany { sid, idxs, reply, enqueued } => {
             metrics.wire.commit_req.add(WIRE_HEADER + 8 + 8 * idxs.len() as u64);
@@ -601,7 +713,13 @@ impl ServiceHandle {
             reply,
             enqueued: Instant::now(),
         })?;
-        Ok(RemoteSession { handle: self, sid, exemplars: Vec::new(), closed: false })
+        Ok(RemoteSession {
+            handle: self,
+            sid,
+            exemplars: Vec::new(),
+            pending_acks: RefCell::new(Vec::new()),
+            closed: false,
+        })
     }
 }
 
@@ -609,6 +727,13 @@ impl ServiceHandle {
 /// lives in the executor's table, this side holds only the session id
 /// and an index mirror of the committed exemplars. Every verb ships
 /// indices (or nothing) — never the state.
+///
+/// `CommitMany` acks are **pipelined**: [`RemoteSession::commit_many`]
+/// queues the request and returns without waiting, so the next
+/// `Marginals` is on the executor's queue immediately (the queue is
+/// FIFO, so the commit is always applied first). Outstanding acks are
+/// drained — and any commit failure surfaced — by the next synchronous
+/// verb or an explicit [`RemoteSession::sync`].
 ///
 /// Dropping a `RemoteSession` sends `Close` (waiting out a full queue;
 /// skipped only if the executor is gone); call [`RemoteSession::close`]
@@ -621,6 +746,9 @@ pub struct RemoteSession<'a> {
     /// Client-side mirror of the committed exemplar indices (order
     /// preserved) — O(k), not O(n).
     exemplars: Vec<usize>,
+    /// Ack channels of pipelined `CommitMany` requests not yet drained
+    /// (`RefCell`: read-only verbs drain through `&self`).
+    pending_acks: RefCell<Vec<mpsc::Receiver<Result<()>>>>,
     closed: bool,
 }
 
@@ -628,6 +756,26 @@ impl<'a> RemoteSession<'a> {
     /// The server-side session id.
     pub fn sid(&self) -> u64 {
         self.sid
+    }
+
+    /// Wait for every pipelined `CommitMany` ack, surfacing the first
+    /// commit failure. Called implicitly by every synchronous verb; the
+    /// wire-accounting tests and benches call it to settle the metrics.
+    pub fn sync(&self) -> Result<()> {
+        for rx in self.pending_acks.borrow_mut().drain(..) {
+            rx.recv().map_err(|_| Error::Service("executor dropped commit ack".into()))??;
+        }
+        Ok(())
+    }
+
+    /// One request/reply round-trip through this session's handle:
+    /// sends, then drains pipelined commit acks (their replies are
+    /// FIFO-earlier than the one just queued), then receives.
+    fn request<T>(&self, make: impl FnOnce(mpsc::Sender<Result<T>>) -> Request) -> Result<T> {
+        let (reply, rx) = mpsc::channel();
+        self.handle.send(make(reply))?;
+        self.sync()?;
+        rx.recv().map_err(|_| Error::Service("executor dropped reply".into()))?
     }
 
     /// The handle this session talks through.
@@ -643,7 +791,7 @@ impl<'a> RemoteSession<'a> {
     /// Marginal gains against the server-resident state. Wire cost:
     /// O(|candidates|) out, O(|candidates|) back.
     pub fn gains(&self, candidates: &[usize]) -> Result<Vec<f32>> {
-        self.handle.request(|reply| Request::Marginals {
+        self.request(|reply| Request::Marginals {
             sid: self.sid,
             candidates: candidates.to_vec(),
             reply,
@@ -652,39 +800,43 @@ impl<'a> RemoteSession<'a> {
     }
 
     /// Commit a batch of exemplars into the server state. Wire cost:
-    /// O(|idxs|) out, O(1) back.
+    /// O(|idxs|) out, O(1) back — and the ack is **pipelined**: this
+    /// returns as soon as the request is queued, so the caller's next
+    /// `Marginals` doesn't wait a round-trip. A commit failure surfaces
+    /// on the next synchronous verb (or [`RemoteSession::sync`]); the
+    /// exemplar mirror is extended optimistically.
     pub fn commit_many(&mut self, idxs: &[usize]) -> Result<()> {
-        self.handle.request(|reply| Request::CommitMany {
+        let (reply, rx) = mpsc::channel();
+        self.handle.send(Request::CommitMany {
             sid: self.sid,
             idxs: idxs.to_vec(),
             reply,
             enqueued: Instant::now(),
         })?;
+        self.pending_acks.borrow_mut().push(rx);
         self.exemplars.extend_from_slice(idxs);
         Ok(())
     }
 
     /// `f(S)` of the server-resident summary (one float back).
     pub fn value(&self) -> Result<f32> {
-        self.handle.request(|reply| Request::Value {
-            sid: self.sid,
-            reply,
-            enqueued: Instant::now(),
-        })
+        self.request(|reply| Request::Value { sid: self.sid, reply, enqueued: Instant::now() })
     }
 
     /// Fork into a new server session: the state copy happens in the
     /// executor's table, nothing crosses the wire but the new id.
+    /// Pipelined commits are settled **before** the fork is sent — a
+    /// surfaced commit failure must not orphan a freshly copied session
+    /// whose id reply would be discarded.
     pub fn fork(&self) -> Result<RemoteSession<'a>> {
-        let sid = self.handle.request(|reply| Request::Fork {
-            sid: self.sid,
-            reply,
-            enqueued: Instant::now(),
-        })?;
+        self.sync()?;
+        let sid =
+            self.request(|reply| Request::Fork { sid: self.sid, reply, enqueued: Instant::now() })?;
         Ok(RemoteSession {
             handle: self.handle,
             sid,
             exemplars: self.exemplars.clone(),
+            pending_acks: RefCell::new(Vec::new()),
             closed: false,
         })
     }
@@ -692,29 +844,25 @@ impl<'a> RemoteSession<'a> {
     /// Download the full server state — O(n), for diagnostics and
     /// equivalence tests only; never on an optimizer hot path.
     pub fn export(&self) -> Result<DminState> {
-        self.handle.request(|reply| Request::Export {
-            sid: self.sid,
-            reply,
-            enqueued: Instant::now(),
-        })
+        self.request(|reply| Request::Export { sid: self.sid, reply, enqueued: Instant::now() })
     }
 
     /// Close the session and wait for the server to reclaim it.
     pub fn close(mut self) -> Result<()> {
         self.closed = true;
-        let (reply, rx) = mpsc::channel();
-        self.handle.send(Request::Close { sid: self.sid, reply: Some(reply) })?;
-        rx.recv().map_err(|_| Error::Service("executor dropped reply".into()))?
+        self.request(|reply| Request::Close { sid: self.sid, reply: Some(reply) })
     }
 
     /// Close this session and reopen a fresh one in its place. The
     /// `Close` is queued ahead of the `Open` (FIFO), so the table never
     /// holds both — a reset can't transiently evict an innocent LRU
-    /// session at capacity.
+    /// session at capacity. Pipelined commits are settled first so a
+    /// surfaced failure can't orphan the replacement session.
     pub fn reset(&mut self) -> Result<()> {
+        self.sync()?;
         self.handle.send(Request::Close { sid: self.sid, reply: None })?;
         self.closed = true; // old sid is gone whatever happens next
-        let sid = self.handle.request(|reply| Request::Open {
+        let sid = self.request(|reply| Request::Open {
             seed: None,
             reply,
             enqueued: Instant::now(),
@@ -728,6 +876,9 @@ impl<'a> RemoteSession<'a> {
 
 impl Drop for RemoteSession<'_> {
     fn drop(&mut self) {
+        // un-drained commit ack channels just disappear: the executor's
+        // reply sends fail silently, and Close is queued behind the
+        // commits (FIFO) so nothing is lost
         if !self.closed {
             self.handle.send_or_wait(Request::Close { sid: self.sid, reply: None });
         }
@@ -788,7 +939,9 @@ mod tests {
         assert_eq!(s.exemplars(), &[1, 4, 9]);
         // one request for the whole batch, not one per exemplar
         assert_eq!(svc.metrics().requests.get(), before + 1);
-        // ... and its payload is indices only: header + sid + 3 indices
+        // settle the pipelined ack, then check the payload was indices
+        // only: header + sid + 3 indices
+        s.sync().unwrap();
         assert_eq!(svc.metrics().wire.commit_req.get() - commit_bytes_before, 16 + 8 + 3 * 8);
         // state matches sequential commits on a direct oracle
         let direct = cpu_oracle();
@@ -882,6 +1035,50 @@ mod tests {
         // a valid seed still opens
         let good = h.open_seeded(h.init_state(), h.l0_sum()).unwrap();
         assert!(good.gains(&[0]).is_ok());
+        svc.shutdown();
+    }
+
+    /// CommitMany acks are pipelined: the call returns before the
+    /// executor applies the commit, a failed commit surfaces on the next
+    /// synchronous verb, and the observable trajectory is unchanged.
+    #[test]
+    fn pipelined_commit_acks_surface_errors_on_the_next_verb() {
+        let svc = spawn_cpu_service();
+        let h = svc.handle();
+        let mut s = h.open().unwrap();
+        // an out-of-range exemplar: the send succeeds (pipelined)...
+        assert!(s.commit_many(&[9999]).is_ok(), "ack is not awaited inline");
+        // ...and the oracle's rejection lands on the next sync point
+        let err = s.gains(&[0]).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "got: {err}");
+        // the session itself is still alive and consistent server-side
+        s.exemplars.clear(); // discard the optimistic mirror of the failed commit
+        s.commit_many(&[3]).unwrap();
+        s.sync().unwrap();
+        assert_eq!(s.export().unwrap().exemplars, vec![3]);
+        svc.shutdown();
+    }
+
+    /// Marginals from distinct sessions queued together are served as
+    /// one fused multi-state pass with per-session results.
+    #[test]
+    fn queued_marginals_across_sessions_fuse_without_mixing_states() {
+        let svc = spawn_cpu_service();
+        let h = svc.handle();
+        let mut a = h.open().unwrap();
+        let mut b = h.open().unwrap();
+        a.commit_many(&[3]).unwrap();
+        b.commit_many(&[9]).unwrap();
+        let cands: Vec<usize> = (0..16).collect();
+        let ga = a.gains(&cands).unwrap();
+        let gb = b.gains(&cands).unwrap();
+        let direct = cpu_oracle();
+        let mut sa = direct.init_state();
+        direct.commit(&mut sa, 3).unwrap();
+        let mut sb = direct.init_state();
+        direct.commit(&mut sb, 9).unwrap();
+        assert_eq!(ga, direct.marginal_gains(&sa, &cands).unwrap());
+        assert_eq!(gb, direct.marginal_gains(&sb, &cands).unwrap());
         svc.shutdown();
     }
 

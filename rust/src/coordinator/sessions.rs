@@ -108,6 +108,19 @@ impl SessionTable {
         Ok(e)
     }
 
+    /// Touch a session's LRU stamp without holding the borrow — the
+    /// fused multi-state gains pass stamps every session in its batch
+    /// up front, then takes shared borrows of all their states at once.
+    pub fn touch(&mut self, sid: u64) -> Result<()> {
+        self.get_mut(sid).map(|_| ())
+    }
+
+    /// Shared borrow of a session, no LRU touch (pair with
+    /// [`SessionTable::touch`]).
+    pub fn get_ref(&self, sid: u64) -> Option<&SessionEntry> {
+        self.entries.get(&sid)
+    }
+
     /// Remove a session; `true` if it existed.
     pub fn close(&mut self, sid: u64) -> bool {
         self.entries.remove(&sid).is_some()

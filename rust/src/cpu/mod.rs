@@ -57,7 +57,7 @@ use std::sync::Mutex;
 
 use crate::data::{Dataset, ShadowSet};
 use crate::distance::{Dissimilarity, SqEuclidean};
-use crate::optim::oracle::{DminState, Oracle};
+use crate::optim::oracle::{DminState, GainsJob, Oracle};
 use crate::scalar::{Bf16, Dtype, Scalar, F16};
 use crate::{Error, Result};
 
@@ -447,6 +447,117 @@ impl<D: Dissimilarity, S: Scalar> Oracle for MultiThread<D, S> {
         Ok(merged.into_inner().unwrap().iter().map(|&g| (g / n) as f32).collect())
     }
 
+    /// One pool launch for the whole batch: the grain queue spans the
+    /// flattened `(job, ground-tile)` space, so workers steal tiles from
+    /// *every* session's pass instead of fanning out once per request —
+    /// the multi-session analogue of candidate batching the coordinator
+    /// relies on when it coalesces `Marginals` from distinct sessions.
+    fn marginal_gains_multi(&self, jobs: &[GainsJob<'_>]) -> Vec<Result<Vec<f32>>> {
+        let ds = &self.base.ds;
+        let n = ds.n();
+        // per-job validation up front: a malformed job answers alone,
+        // empty candidate lists are free, the rest enter the fused pass
+        let mut out: Vec<Option<Result<Vec<f32>>>> = jobs
+            .iter()
+            .map(|j| {
+                if let Err(e) =
+                    validate_state(ds, j.state).and_then(|()| validate_indices(ds, j.candidates))
+                {
+                    Some(Err(e))
+                } else if j.candidates.is_empty() {
+                    Some(Ok(Vec::new()))
+                } else {
+                    None
+                }
+            })
+            .collect();
+        let fused: Vec<usize> = (0..jobs.len()).filter(|&i| out[i].is_none()).collect();
+        if fused.len() == 1 {
+            // no fusion win for a single job: take the plain path
+            let i = fused[0];
+            out[i] = Some(self.marginal_gains(jobs[i].state, jobs[i].candidates));
+        } else if !fused.is_empty() {
+            let dist = &self.base.dist;
+            let merged = Mutex::new(
+                fused.iter().map(|&i| vec![0.0f64; jobs[i].candidates.len()]).collect::<Vec<_>>(),
+            );
+            // flat work space: job-major, GROUND_TILE-grained; claimed
+            // ranges are split at job boundaries inside the workers
+            let tiles = GrainQueue::new(n * fused.len(), GROUND_TILE);
+            let fresh_local =
+                || fused.iter().map(|&i| vec![0.0f64; jobs[i].candidates.len()]).collect();
+            let merge = |local: Vec<Vec<f64>>| {
+                let mut m = merged.lock().unwrap();
+                for (slots, partial) in m.iter_mut().zip(&local) {
+                    for (slot, x) in slots.iter_mut().zip(partial) {
+                        *slot += *x;
+                    }
+                }
+            };
+            match &self.base.view {
+                Some(view) => {
+                    // one gather per job, shared read-only by all workers
+                    let preps: Vec<(Vec<S>, Vec<f32>)> =
+                        fused.iter().map(|&i| view.gather(jobs[i].candidates)).collect();
+                    self.pool.run(&|_id| {
+                        let mut local: Vec<Vec<f64>> = fresh_local();
+                        while let Some(r) = tiles.claim() {
+                            let mut start = r.start;
+                            while start < r.end {
+                                let j = start / n;
+                                let stop = ((j + 1) * n).min(r.end);
+                                let ground = (start - j * n)..(stop - j * n);
+                                kernels::gains_tile(
+                                    dist,
+                                    view,
+                                    &jobs[fused[j]].state.dmin,
+                                    ground,
+                                    &preps[j].0,
+                                    &preps[j].1,
+                                    &mut local[j],
+                                );
+                                start = stop;
+                            }
+                        }
+                        merge(local);
+                    });
+                }
+                None => {
+                    let preps: Vec<Vec<f32>> = fused
+                        .iter()
+                        .map(|&i| kernels::gather_rows(ds, jobs[i].candidates).0)
+                        .collect();
+                    self.pool.run(&|_id| {
+                        let mut local: Vec<Vec<f64>> = fresh_local();
+                        while let Some(r) = tiles.claim() {
+                            let mut start = r.start;
+                            while start < r.end {
+                                let j = start / n;
+                                let stop = ((j + 1) * n).min(r.end);
+                                let ground = (start - j * n)..(stop - j * n);
+                                kernels::gains_tile_direct(
+                                    dist,
+                                    ds,
+                                    &jobs[fused[j]].state.dmin,
+                                    ground,
+                                    &preps[j],
+                                    &mut local[j],
+                                );
+                                start = stop;
+                            }
+                        }
+                        merge(local);
+                    });
+                }
+            }
+            let inv_n = 1.0 / n as f64;
+            for (j, acc) in merged.into_inner().unwrap().into_iter().enumerate() {
+                out[fused[j]] = Some(Ok(acc.iter().map(|&g| (g * inv_n) as f32).collect()));
+            }
+        }
+        out.into_iter().map(|o| o.expect("every job answered")).collect()
+    }
+
     fn commit(&self, state: &mut DminState, idx: usize) -> Result<()> {
         self.commit_many(state, &[idx])
     }
@@ -820,6 +931,52 @@ mod tests {
                 assert!((b[j] - want).abs() <= tol, "d={d} set {j}: mt {} vs {want}", b[j]);
             }
         }
+    }
+
+    /// The fused multi-state pass (one pool launch spanning every job)
+    /// matches per-job `marginal_gains` calls, answers malformed jobs
+    /// individually, and handles empty candidate lists for free.
+    #[test]
+    fn fused_multi_state_gains_match_per_job_calls() {
+        let ds = UniformCube::new(5, 1.0).generate(260, 55);
+        let st = SingleThread::new(ds.clone());
+        let mt = MultiThread::new(ds.clone(), 4);
+
+        // three independent session states with different summaries
+        let s0 = st.init_state();
+        let mut s1 = st.init_state();
+        st.commit_many(&mut s1, &[3, 9]).unwrap();
+        let mut s2 = st.init_state();
+        st.commit_many(&mut s2, &[100, 7, 41]).unwrap();
+        let bad = DminState { dmin: vec![0.0; 3], exemplars: vec![] };
+
+        let c0: Vec<usize> = (0..64).collect();
+        let c1: Vec<usize> = (50..90).collect();
+        let c2: Vec<usize> = vec![0, 259, 128];
+        let empty: Vec<usize> = Vec::new();
+        let jobs = [
+            GainsJob { state: &s0, candidates: &c0 },
+            GainsJob { state: &bad, candidates: &c1 }, // wrong n: must fail alone
+            GainsJob { state: &s1, candidates: &c1 },
+            GainsJob { state: &s2, candidates: &c2 },
+            GainsJob { state: &s0, candidates: &empty },
+        ];
+        let fused = mt.marginal_gains_multi(&jobs);
+        assert_eq!(fused.len(), 5);
+        assert!(fused[1].is_err(), "malformed job fails without poisoning the batch");
+        assert_eq!(fused[4].as_ref().unwrap().len(), 0);
+        for (i, &(state, cands)) in [(&s0, &c0), (&s1, &c1), (&s2, &c2)].iter().enumerate() {
+            let got = fused[[0usize, 2, 3][i]].as_ref().unwrap();
+            let want = st.marginal_gains(state, cands).unwrap();
+            for (c, (x, y)) in got.iter().zip(&want).enumerate() {
+                // pool merge order perturbs the f64 partials slightly
+                assert!((x - y).abs() < 1e-5, "job {i} cand {c}: {x} vs {y}");
+            }
+        }
+        // the default (serial) implementation agrees too
+        let serial = st.marginal_gains_multi(&jobs);
+        assert!(serial[1].is_err());
+        assert_eq!(serial[0].as_ref().unwrap(), &st.marginal_gains(&s0, &c0).unwrap());
     }
 
     #[test]

@@ -61,6 +61,7 @@ use crate::coordinator::{
 use crate::cpu::build_cpu_oracle_with;
 use crate::data::Dataset;
 use crate::distance::{Dissimilarity, SqEuclidean};
+use crate::net::{Listen, NetClient};
 use crate::optim::oracle::Oracle;
 use crate::optim::{OptimResult, Optimizer};
 use crate::scalar::Dtype;
@@ -102,12 +103,42 @@ pub enum Backend {
         /// The backend the executor drives (not itself a service).
         inner: Box<Backend>,
     },
+    /// A remote evaluation server over TCP (`exemcl serve` in another
+    /// process). The engine connects at build time, mirrors the
+    /// server's dataset, and every session speaks the framed
+    /// index-only protocol ([`crate::net`]). Takes no local dataset.
+    Tcp {
+        /// `host:port` of the serving process.
+        addr: String,
+    },
+    /// A remote evaluation server over a Unix-domain socket (same
+    /// protocol as [`Backend::Tcp`]; unix only).
+    Uds {
+        /// Socket path of the serving process.
+        path: String,
+    },
 }
 
 impl Backend {
     /// Shorthand for a service over the pooled CPU backend.
     pub fn service_over(inner: Backend) -> Backend {
         Backend::Service { inner: Box::new(inner) }
+    }
+
+    /// True for the out-of-process backends ([`Backend::Tcp`] /
+    /// [`Backend::Uds`]) — they take no local dataset and resolve
+    /// nothing at build time.
+    pub fn is_remote(&self) -> bool {
+        matches!(self, Backend::Tcp { .. } | Backend::Uds { .. })
+    }
+
+    /// The dial target of a remote backend.
+    pub(crate) fn listen(&self) -> Option<Listen> {
+        match self {
+            Backend::Tcp { addr } => Some(Listen::Tcp(addr.clone())),
+            Backend::Uds { path } => Some(Listen::Uds(path.into())),
+            _ => None,
+        }
     }
 
     /// This backend with every CPU worker count set to `threads`
@@ -183,6 +214,8 @@ impl std::fmt::Display for Backend {
             Backend::Cpu { threads } => write!(f, "cpu-mt:{threads}"),
             Backend::Device => f.write_str("device"),
             Backend::Service { inner } => write!(f, "service:{inner}"),
+            Backend::Tcp { addr } => write!(f, "tcp:{addr}"),
+            Backend::Uds { path } => write!(f, "uds:{path}"),
         }
     }
 }
@@ -193,6 +226,13 @@ impl std::str::FromStr for Backend {
     fn from_str(s: &str) -> Result<Self> {
         if let Some(inner) = s.strip_prefix("service:") {
             return Ok(Backend::Service { inner: Box::new(inner.parse()?) });
+        }
+        if s.starts_with("tcp:") || s.starts_with("uds:") {
+            // one endpoint grammar: delegate to the transport's parser
+            return Ok(match s.parse::<Listen>()? {
+                Listen::Tcp(addr) => Backend::Tcp { addr },
+                Listen::Uds(path) => Backend::Uds { path: path.to_string_lossy().into_owned() },
+            });
         }
         if let Some(t) = s.strip_prefix("cpu-mt:").or_else(|| s.strip_prefix("mt:")) {
             let threads = t.parse().map_err(|_| {
@@ -207,8 +247,8 @@ impl std::str::FromStr for Backend {
             "cpu-mt" | "mt" => Ok(Backend::Cpu { threads: 0 }),
             "device" | "xla" => Ok(Backend::Device),
             other => Err(Error::Config(format!(
-                "unknown backend {other:?} \
-                 (auto|cpu-st|cpu-mt[:threads]|device|service[:auto|cpu-st|cpu-mt|device])"
+                "unknown backend {other:?} (auto|cpu-st|cpu-mt[:threads]|device|\
+                 service[:auto|cpu-st|cpu-mt|device]|tcp:host:port|uds:/path)"
             ))),
         }
     }
@@ -314,8 +354,48 @@ impl EngineBuilder {
 
     /// Build the engine: resolves [`Backend::Auto`], constructs the
     /// oracle (and, for [`Backend::Service`], spawns the executor
-    /// thread that owns it and its session table).
+    /// thread that owns it and its session table). Remote backends
+    /// ([`Backend::Tcp`] / [`Backend::Uds`]) instead dial the serving
+    /// process and mirror **its** dataset — passing one locally is an
+    /// error (the server's ground set is authoritative).
     pub fn build(self) -> Result<Engine> {
+        if let Some(target) = self.backend.listen() {
+            if self.dataset.is_some() {
+                return Err(Error::InvalidArgument(
+                    "remote engines mirror the server's dataset; don't set one locally".into(),
+                ));
+            }
+            // the server's configuration is authoritative: silently
+            // dropping a requested precision or metric would hand back
+            // results computed under a different configuration
+            if self.dtype != Dtype::F32 || self.dist.name() != SqEuclidean.name() {
+                return Err(Error::InvalidArgument(
+                    "remote engines evaluate with the serving process's dtype and \
+                     dissimilarity; configure them on `exemcl serve`"
+                        .into(),
+                ));
+            }
+            // same for the executor knobs — they live in the serving
+            // process, so accepting them here would be a silent no-op
+            let defaults = EngineBuilder::default();
+            if self.queue_capacity != defaults.queue_capacity
+                || self.memory_mib != defaults.memory_mib
+                || self.sessions != defaults.sessions
+            {
+                return Err(Error::InvalidArgument(
+                    "remote engines take their queue, memory and session policy from the \
+                     serving process; configure them on `exemcl serve`"
+                        .into(),
+                ));
+            }
+            let client = NetClient::connect(&target)?;
+            return Ok(Engine {
+                dataset: client.dataset().clone(),
+                dtype: self.dtype,
+                backend: self.backend,
+                inner: EngineInner::Net(client),
+            });
+        }
         let ds = self
             .dataset
             .ok_or_else(|| Error::InvalidArgument("Engine::builder() needs a dataset".into()))?;
@@ -325,9 +405,9 @@ impl EngineBuilder {
         let backend = self.backend.resolve_auto(&ds, &self.artifacts);
         let inner = match backend.clone() {
             Backend::Service { inner } => {
-                if matches!(*inner, Backend::Service { .. }) {
+                if matches!(*inner, Backend::Service { .. }) || inner.is_remote() {
                     return Err(Error::InvalidArgument(
-                        "nested service backends are not supported".into(),
+                        "a service cannot wrap another service or a remote backend".into(),
                     ));
                 }
                 let (ds2, dist, dtype) = (ds.clone(), self.dist, self.dtype);
@@ -358,6 +438,9 @@ enum EngineInner {
     /// The oracle lives on the service's executor thread; the engine
     /// talks to it through handles.
     Service(Service),
+    /// The oracle lives in another process; the engine holds a framed
+    /// connection to its serving loop.
+    Net(NetClient),
 }
 
 /// A built evaluation engine: owns (or fronts) exactly one oracle and
@@ -382,6 +465,7 @@ impl Engine {
         match &self.inner {
             EngineInner::Direct(o) => Ok(Session::over(o.as_ref())),
             EngineInner::Service(s) => Session::remote(s.handle_ref()),
+            EngineInner::Net(c) => Session::over_net(c),
         }
     }
 
@@ -397,26 +481,37 @@ impl Engine {
     pub fn oracle(&self) -> Option<&dyn Oracle> {
         match &self.inner {
             EngineInner::Direct(o) => Some(o.as_ref()),
-            EngineInner::Service(_) => None,
+            EngineInner::Service(_) | EngineInner::Net(_) => None,
         }
     }
 
     /// For [`Backend::Service`]: a cheap-to-clone `Send + Sync` client
     /// handle, for driving the shared executor from other threads
     /// (GreeDi workers, concurrent optimizers). `None` for direct
-    /// backends.
+    /// and remote backends.
     pub fn client(&self) -> Option<ServiceHandle> {
         match &self.inner {
-            EngineInner::Direct(_) => None,
+            EngineInner::Direct(_) | EngineInner::Net(_) => None,
             EngineInner::Service(s) => Some(s.handle()),
         }
     }
 
+    /// For [`Backend::Tcp`] / [`Backend::Uds`]: the framed connection
+    /// behind this engine (transport byte counters, raw session opens).
+    /// `None` for in-process backends.
+    pub fn net_client(&self) -> Option<&NetClient> {
+        match &self.inner {
+            EngineInner::Net(c) => Some(c),
+            _ => None,
+        }
+    }
+
     /// Service metrics (requests, coalesced batches, latency) when the
-    /// backend is a service.
+    /// backend is an in-process service. Remote engines' metrics live
+    /// in the serving process.
     pub fn metrics(&self) -> Option<&ServiceMetrics> {
         match &self.inner {
-            EngineInner::Direct(_) => None,
+            EngineInner::Direct(_) | EngineInner::Net(_) => None,
             EngineInner::Service(s) => Some(s.metrics()),
         }
     }
@@ -428,7 +523,9 @@ impl Engine {
 
     /// The element precision requested at build time (backends may
     /// downgrade for non-factoring dissimilarities; see the oracle's
-    /// [`Engine::name`]).
+    /// [`Engine::name`]). Remote engines evaluate at the **server's**
+    /// precision — it is reported inside [`Engine::name`], and the
+    /// builder rejects a non-default local request.
     pub fn dtype(&self) -> Dtype {
         self.dtype
     }
@@ -444,6 +541,7 @@ impl Engine {
         match &self.inner {
             EngineInner::Direct(o) => o.name(),
             EngineInner::Service(s) => s.handle_ref().name(),
+            EngineInner::Net(c) => c.name(),
         }
     }
 }
@@ -467,6 +565,11 @@ fn build_oracle(
         )),
         Backend::Service { .. } => Err(Error::InvalidArgument(
             "nested service backends are not supported".into(),
+        )),
+        // remote backends never reach oracle construction: build()
+        // turns them into a NetClient before this dispatch
+        Backend::Tcp { .. } | Backend::Uds { .. } => Err(Error::InvalidArgument(
+            "remote backends connect at Engine::build; they have no local oracle".into(),
         )),
     }
 }
@@ -545,8 +648,20 @@ mod tests {
             "service:mt:5".parse::<Backend>().unwrap(),
             Backend::service_over(Backend::Cpu { threads: 5 })
         );
+        assert_eq!(
+            "tcp:127.0.0.1:7171".parse::<Backend>().unwrap(),
+            Backend::Tcp { addr: "127.0.0.1:7171".into() }
+        );
+        assert_eq!(
+            "uds:/tmp/exemcl.sock".parse::<Backend>().unwrap(),
+            Backend::Uds { path: "/tmp/exemcl.sock".into() }
+        );
+        assert!(Backend::Tcp { addr: "x".into() }.is_remote());
+        assert!(!Backend::SingleThread.is_remote());
         assert!("gpu".parse::<Backend>().is_err());
         assert!("cpu-mt:lots".parse::<Backend>().is_err());
+        assert!("tcp:".parse::<Backend>().is_err());
+        assert!("uds:".parse::<Backend>().is_err());
         for s in [
             "auto",
             "cpu-st",
@@ -556,6 +671,8 @@ mod tests {
             "service:auto",
             "service:cpu-mt",
             "service:cpu-mt:8",
+            "tcp:127.0.0.1:7171",
+            "uds:/tmp/exemcl.sock",
         ] {
             assert_eq!(s.parse::<Backend>().unwrap().to_string(), s);
         }
@@ -626,6 +743,34 @@ mod tests {
         let b = Backend::service_over(Backend::service_over(Backend::SingleThread));
         let r = Engine::builder().dataset(small()).backend(b).build();
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn remote_backends_reject_local_datasets_and_service_wrapping() {
+        // the server's dataset is authoritative; a local one is a bug
+        let r = Engine::builder()
+            .dataset(small())
+            .backend(Backend::Tcp { addr: "127.0.0.1:1".into() })
+            .build();
+        assert!(matches!(r, Err(Error::InvalidArgument(_))), "dataset + remote must be rejected");
+        // a service cannot drive an oracle that lives in another process
+        let b = Backend::service_over(Backend::Tcp { addr: "127.0.0.1:1".into() });
+        assert!(Engine::builder().dataset(small()).backend(b).build().is_err());
+        // server-side knobs are rejected, not silently dropped (these
+        // guards fire before any connect is attempted)
+        let r = Engine::builder()
+            .backend(Backend::Tcp { addr: "127.0.0.1:1".into() })
+            .dtype(Dtype::F16)
+            .build();
+        assert!(matches!(r, Err(Error::InvalidArgument(_))), "dtype must be rejected");
+        let r = Engine::builder()
+            .backend(Backend::Tcp { addr: "127.0.0.1:1".into() })
+            .session_capacity(2)
+            .build();
+        assert!(matches!(r, Err(Error::InvalidArgument(_))), "session policy must be rejected");
+        // a dead endpoint surfaces the connect failure
+        let r = Engine::builder().backend(Backend::Tcp { addr: "127.0.0.1:1".into() }).build();
+        assert!(r.is_err(), "nothing listens on port 1");
     }
 
     #[cfg(not(feature = "xla-backend"))]

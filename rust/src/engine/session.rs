@@ -30,6 +30,7 @@ use std::rc::Rc;
 
 use crate::coordinator::{RemoteSession, ServiceHandle};
 use crate::data::Dataset;
+use crate::net::{NetClient, NetSession};
 use crate::optim::oracle::{DminState, Oracle};
 use crate::{Error, Result};
 
@@ -41,6 +42,9 @@ enum Inner<'a> {
     },
     /// Server-resident state behind a coordinator handle.
     Remote(RemoteSession<'a>),
+    /// Server-resident state in **another process**, behind a framed
+    /// connection ([`crate::net`]); same verbs, same index-only wire.
+    Net(NetSession<'a>),
 }
 
 /// A live evaluation session — local state over an oracle, or a handle
@@ -84,6 +88,21 @@ impl<'a> Session<'a> {
         })
     }
 
+    /// Open a fresh session on an **out-of-process** server behind a
+    /// framed connection — what [`crate::engine::Engine::session`] does
+    /// for [`crate::engine::Backend::Tcp`] / `Uds` engines.
+    pub fn over_net(client: &'a NetClient) -> Result<Self> {
+        Ok(Self { inner: Inner::Net(client.open()?), evals: Rc::new(Cell::new(0)) })
+    }
+
+    /// [`Session::remote_seeded`] for an out-of-process server.
+    pub fn net_seeded(client: &'a NetClient, state: DminState, l0: f64) -> Result<Self> {
+        Ok(Self {
+            inner: Inner::Net(client.open_seeded(state, l0)?),
+            evals: Rc::new(Cell::new(0)),
+        })
+    }
+
     /// The in-process oracle this session drives, if it is local (GreeDi
     /// wraps it in a partition restriction). Remote sessions have no
     /// oracle on this side of the wire — use
@@ -91,15 +110,49 @@ impl<'a> Session<'a> {
     pub fn oracle(&self) -> Option<&'a dyn Oracle> {
         match &self.inner {
             Inner::Local { oracle, .. } => Some(*oracle),
-            Inner::Remote(_) => None,
+            Inner::Remote(_) | Inner::Net(_) => None,
         }
     }
 
-    /// The service handle behind a remote session (`None` for local).
+    /// The service handle behind an in-process remote session (`None`
+    /// for local and out-of-process sessions).
     pub fn service_handle(&self) -> Option<&'a ServiceHandle> {
         match &self.inner {
-            Inner::Local { .. } => None,
+            Inner::Local { .. } | Inner::Net(_) => None,
             Inner::Remote(r) => Some(r.handle()),
+        }
+    }
+
+    /// True when the optimizer state lives server-side (an in-process
+    /// executor table or another process entirely) — the sessions that
+    /// support [`Session::fresh_seeded`].
+    pub fn is_remote(&self) -> bool {
+        !matches!(self.inner, Inner::Local { .. })
+    }
+
+    /// The backend's fresh-state template, wherever the backend lives
+    /// (dissimilarity-aware; GreeDi masks it into partition seeds).
+    pub fn init_state(&self) -> DminState {
+        match &self.inner {
+            Inner::Local { oracle, .. } => oracle.init_state(),
+            Inner::Remote(r) => r.handle().init_state(),
+            Inner::Net(s) => s.client().init_state(),
+        }
+    }
+
+    /// Open a **sibling** session on the same remote backend from an
+    /// explicit seed state + `L({e0})·n` constant (GreeDi's masked
+    /// partitions). Like [`Session::remote_seeded`], the sibling has
+    /// its own evaluation counter. Local sessions cannot carry a
+    /// foreign `l0` — use [`crate::optim::PartitionOracle`] there.
+    pub fn fresh_seeded(&self, state: DminState, l0: f64) -> Result<Session<'a>> {
+        match &self.inner {
+            Inner::Local { .. } => Err(Error::InvalidArgument(
+                "seeded sibling sessions need a remote backend (use PartitionOracle locally)"
+                    .into(),
+            )),
+            Inner::Remote(r) => Session::remote_seeded(r.handle(), state, l0),
+            Inner::Net(s) => Session::net_seeded(s.client(), state, l0),
         }
     }
 
@@ -108,6 +161,7 @@ impl<'a> Session<'a> {
         match &self.inner {
             Inner::Local { oracle, .. } => oracle.dataset(),
             Inner::Remote(r) => r.handle().dataset(),
+            Inner::Net(s) => s.client().dataset(),
         }
     }
 
@@ -125,6 +179,7 @@ impl<'a> Session<'a> {
                 Inner::Local { oracle: *oracle, state: state.clone() }
             }
             Inner::Remote(r) => Inner::Remote(r.fork()?),
+            Inner::Net(s) => Inner::Net(s.fork()?),
         };
         Ok(Session { inner, evals: self.evals.clone() })
     }
@@ -138,6 +193,7 @@ impl<'a> Session<'a> {
                 Inner::Local { oracle: *oracle, state: oracle.init_state() }
             }
             Inner::Remote(r) => Inner::Remote(r.handle().open()?),
+            Inner::Net(s) => Inner::Net(s.client().open()?),
         };
         Ok(Session { inner, evals: self.evals.clone() })
     }
@@ -153,6 +209,7 @@ impl<'a> Session<'a> {
                 Ok(())
             }
             Inner::Remote(r) => r.reset(),
+            Inner::Net(s) => s.reset(),
         }
     }
 
@@ -163,6 +220,7 @@ impl<'a> Session<'a> {
         let g = match &self.inner {
             Inner::Local { oracle, state } => oracle.marginal_gains(state, candidates)?,
             Inner::Remote(r) => r.gains(candidates)?,
+            Inner::Net(s) => s.gains(candidates)?,
         };
         self.evals.set(self.evals.get() + g.len() as u64);
         Ok(g)
@@ -174,11 +232,25 @@ impl<'a> Session<'a> {
     }
 
     /// Commit a batch of exemplars in one fused backend pass (one
-    /// index-only request for remote sessions).
+    /// index-only request for remote sessions, whose ack is
+    /// **pipelined**: a commit failure surfaces on the next synchronous
+    /// verb or [`Session::sync`]).
     pub fn commit_many(&mut self, idxs: &[usize]) -> Result<()> {
         match &mut self.inner {
             Inner::Local { oracle, state } => oracle.commit_many(state, idxs),
             Inner::Remote(r) => r.commit_many(idxs),
+            Inner::Net(s) => s.commit_many(idxs),
+        }
+    }
+
+    /// Wait out any pipelined commit acks, surfacing the first failure
+    /// (no-op for local sessions). The wire-accounting tests and
+    /// benches call this to settle the byte counters.
+    pub fn sync(&self) -> Result<()> {
+        match &self.inner {
+            Inner::Local { .. } => Ok(()),
+            Inner::Remote(r) => r.sync(),
+            Inner::Net(s) => s.sync(),
         }
     }
 
@@ -188,6 +260,7 @@ impl<'a> Session<'a> {
         let v = match &self.inner {
             Inner::Local { oracle, .. } => oracle.eval_sets(sets)?,
             Inner::Remote(r) => r.handle().eval_sets(sets)?,
+            Inner::Net(s) => s.client().eval_sets(sets)?,
         };
         self.evals.set(self.evals.get() + v.len() as u64);
         Ok(v)
@@ -198,6 +271,7 @@ impl<'a> Session<'a> {
         match &self.inner {
             Inner::Local { oracle, state } => oracle.f_of_state(state),
             Inner::Remote(r) => r.value(),
+            Inner::Net(s) => s.value(),
         }
     }
 
@@ -207,6 +281,7 @@ impl<'a> Session<'a> {
         match &self.inner {
             Inner::Local { state, .. } => &state.exemplars,
             Inner::Remote(r) => r.exemplars(),
+            Inner::Net(s) => s.exemplars(),
         }
     }
 
@@ -232,7 +307,7 @@ impl<'a> Session<'a> {
     pub fn state(&self) -> Option<&DminState> {
         match &self.inner {
             Inner::Local { state, .. } => Some(state),
-            Inner::Remote(_) => None,
+            Inner::Remote(_) | Inner::Net(_) => None,
         }
     }
 
@@ -243,6 +318,7 @@ impl<'a> Session<'a> {
         match &self.inner {
             Inner::Local { state, .. } => Ok(state.clone()),
             Inner::Remote(r) => r.export(),
+            Inner::Net(s) => s.export(),
         }
     }
 
@@ -252,6 +328,7 @@ impl<'a> Session<'a> {
         match self.inner {
             Inner::Local { .. } => Ok(()),
             Inner::Remote(r) => r.close(),
+            Inner::Net(s) => s.close(),
         }
     }
 
@@ -267,6 +344,10 @@ impl<'a> Session<'a> {
             }
             (Inner::Remote(dst), Inner::Remote(src)) => {
                 // the old server session closes when the handle drops
+                *dst = src.fork()?;
+                Ok(())
+            }
+            (Inner::Net(dst), Inner::Net(src)) => {
                 *dst = src.fork()?;
                 Ok(())
             }

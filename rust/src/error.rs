@@ -8,6 +8,63 @@
 
 use std::fmt;
 
+/// A malformed frame on the network transport ([`crate::net::codec`]).
+/// Typed so the server can distinguish a garbage peer (bad magic — drop
+/// the connection) from a version skew or a hostile length, and so the
+/// codec tests can assert the exact failure.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FrameError {
+    /// The first four header bytes are not the protocol magic.
+    BadMagic {
+        /// What arrived instead of `EXCL`.
+        got: [u8; 4],
+    },
+    /// Magic matched but the protocol version is not ours.
+    BadVersion {
+        /// The peer's version byte.
+        got: u8,
+    },
+    /// The header's message-kind byte names no known frame.
+    UnknownKind {
+        /// The unrecognized kind byte.
+        got: u8,
+    },
+    /// The stream ended inside a header or payload.
+    Truncated {
+        /// Bytes the frame section needed.
+        need: usize,
+        /// Bytes actually read before EOF.
+        got: usize,
+    },
+    /// The header announces a payload larger than the codec admits
+    /// (hostile or corrupt length prefix; never allocated).
+    Oversized {
+        /// Announced payload length.
+        len: u64,
+        /// The codec's ceiling.
+        max: u64,
+    },
+    /// The payload length or contents do not match the message layout.
+    Malformed(String),
+}
+
+impl fmt::Display for FrameError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FrameError::BadMagic { got } => write!(f, "bad magic {got:02x?}"),
+            FrameError::BadVersion { got } => write!(f, "unsupported protocol version {got}"),
+            FrameError::UnknownKind { got } => write!(f, "unknown frame kind 0x{got:02x}"),
+            FrameError::Truncated { need, got } => {
+                write!(f, "truncated frame: needed {need} bytes, got {got}")
+            }
+            FrameError::Oversized { len, max } => {
+                write!(f, "oversized frame: {len} bytes exceeds the {max}-byte ceiling")
+            }
+            FrameError::Malformed(msg) => write!(f, "malformed payload: {msg}"),
+        }
+    }
+}
+
 /// All failures produced by exemcl.
 #[derive(Debug)]
 pub enum Error {
@@ -54,6 +111,9 @@ pub enum Error {
     /// The evaluation service is shut down or its queue is gone.
     Service(String),
 
+    /// A malformed frame on the wire transport (see [`FrameError`]).
+    Frame(FrameError),
+
     /// Underlying I/O failure.
     Io(std::io::Error),
 }
@@ -77,6 +137,7 @@ impl fmt::Display for Error {
             Error::InvalidArgument(msg) => write!(f, "invalid argument: {msg}"),
             Error::Config(msg) => write!(f, "config error: {msg}"),
             Error::Service(msg) => write!(f, "service unavailable: {msg}"),
+            Error::Frame(e) => write!(f, "frame error: {e}"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }
     }
@@ -94,6 +155,12 @@ impl std::error::Error for Error {
 impl From<std::io::Error> for Error {
     fn from(e: std::io::Error) -> Self {
         Error::Io(e)
+    }
+}
+
+impl From<FrameError> for Error {
+    fn from(e: FrameError) -> Self {
+        Error::Frame(e)
     }
 }
 
@@ -130,6 +197,15 @@ mod tests {
         };
         assert!(na.to_string().contains("eval_ws"));
         assert!(na.to_string().contains("available"));
+    }
+
+    #[test]
+    fn frame_errors_display_their_diagnosis() {
+        let e: Error = FrameError::BadMagic { got: *b"HTTP" }.into();
+        assert!(e.to_string().contains("bad magic"), "{e}");
+        assert!(FrameError::Oversized { len: 99, max: 10 }.to_string().contains("99"));
+        assert!(FrameError::Truncated { need: 16, got: 3 }.to_string().contains("16"));
+        assert!(FrameError::UnknownKind { got: 0xEE }.to_string().contains("0xee"));
     }
 
     #[test]

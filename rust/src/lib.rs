@@ -73,6 +73,30 @@
 //! [`coordinator`]). The raw [`optim::Oracle`] trait with a
 //! hand-carried [`optim::DminState`] remains the contract backends
 //! implement; user code drives engines and sessions.
+//!
+//! The same protocol goes **out of process** over TCP or Unix-domain
+//! sockets ([`net`]): `exemcl serve` loads a dataset and serves it,
+//! and a remote engine runs any optimizer against it unchanged —
+//!
+//! ```text
+//! # terminal 1
+//! exemcl serve --backend cpu-mt --data.n 50000 --net.listen tcp:127.0.0.1:7171
+//! # terminal 2
+//! exemcl solve --backend tcp:127.0.0.1:7171 --optimizer.k 32
+//! ```
+//!
+//! ```no_run
+//! use exemcl::engine::{Backend, Engine};
+//! use exemcl::optim::Greedy;
+//!
+//! // no dataset: a remote engine mirrors the server's at connect
+//! let engine = Engine::builder()
+//!     .backend(Backend::Tcp { addr: "127.0.0.1:7171".into() })
+//!     .build()
+//!     .unwrap();
+//! let result = engine.run(&Greedy::new(32)).unwrap();
+//! # let _ = result;
+//! ```
 
 pub mod bench;
 pub mod chunk;
@@ -86,6 +110,7 @@ pub mod engine;
 pub mod error;
 pub mod index;
 pub mod logging;
+pub mod net;
 pub mod optim;
 pub mod pack;
 pub mod runtime;
@@ -93,4 +118,4 @@ pub mod scalar;
 pub mod testkit;
 
 pub use engine::{Backend, Engine, Session};
-pub use error::{Error, Result};
+pub use error::{Error, FrameError, Result};

@@ -3,6 +3,7 @@
 //!
 //! ```text
 //! exemcl solve  [--config FILE] [--key=value ...]   run an optimization
+//! exemcl serve  [--net.listen tcp:host:port]        serve a dataset over the wire
 //! exemcl info   [--artifacts DIR]                   list AOT artifacts
 //! exemcl bench-hint                                 how to run the paper benches
 //! ```
@@ -11,15 +12,20 @@
 //! [`exemcl::config::AppConfig`] for the keys. `solve` builds an
 //! [`exemcl::engine::Engine`] from the config — the same facade the
 //! examples and library users drive — so all backends (`cpu-st`,
-//! `cpu-mt`, `device`, `service[:inner]`) go through one path.
+//! `cpu-mt`, `device`, `service[:inner]`, `tcp:`/`uds:` remotes) go
+//! through one path. `serve` loads a dataset, wraps the configured
+//! backend in a coordinator service and puts its session protocol on a
+//! TCP or Unix-domain socket ([`exemcl::net`]); a second terminal's
+//! `solve --backend tcp:HOST:PORT` then runs any optimizer against it.
 
 use std::time::Instant;
 
 use exemcl::clustering;
-use exemcl::config::{AppConfig, RawConfig};
+use exemcl::config::{AppConfig, Backend, RawConfig};
 use exemcl::data::csv::{self, CsvOptions};
 use exemcl::data::synth::{GaussianBlobs, Rings, UniformCube};
 use exemcl::data::Dataset;
+use exemcl::net::NetServer;
 use exemcl::optim::{
     Greedy, LazyGreedy, Optimizer, Salsa, SieveStreaming, SieveStreamingPP, StochasticGreedy,
     ThreeSieves,
@@ -29,15 +35,19 @@ use exemcl::{Error, Result};
 
 fn usage() -> ! {
     eprintln!(
-        "usage: exemcl <solve|info|bench-hint> [--config FILE] [--section.key=value ...]\n\
+        "usage: exemcl <solve|serve|info|bench-hint> [--config FILE] [--section.key=value ...]\n\
          keys: data.n data.d data.generator data.blobs data.seed data.csv\n\
                optimizer.name optimizer.k\n\
-               eval.backend (auto|cpu-st|cpu-mt|device|service[:auto|cpu-st|cpu-mt|device])\n\
+               eval.backend (auto|cpu-st|cpu-mt|device|service[:auto|cpu-st|cpu-mt|device]\n\
+                             |tcp:host:port|uds:/path — remote evaluation servers)\n\
                eval.dtype (f32|f16|bf16) eval.artifacts eval.threads\n\
                eval.memory_mib eval.queue eval.sessions eval.session_ttl_secs\n\
+               net.listen (tcp:host:port|uds:/path) net.max_conns net.accept_timeout_secs\n\
          shorthand: --dtype f16 == --eval.dtype=f16, --backend service ==\n\
                --eval.backend=service (bounded-queue service over cpu-mt,\n\
-               server-resident sessions with index-only traffic)"
+               server-resident sessions with index-only traffic)\n\
+         two terminals: `exemcl serve --backend cpu-mt` then\n\
+               `exemcl solve --backend tcp:127.0.0.1:7171`"
     );
     std::process::exit(2);
 }
@@ -128,19 +138,27 @@ fn build_optimizer(cfg: &AppConfig) -> Result<Box<dyn Optimizer>> {
 }
 
 fn cmd_solve(cfg: &AppConfig) -> Result<()> {
-    let ds = build_dataset(cfg)?;
-    println!(
-        "dataset: n={} d={} (generator={})",
-        ds.n(),
-        ds.d(),
-        cfg.csv.as_deref().unwrap_or(&cfg.generator)
-    );
+    // one facade for every backend: the engine owns the oracle (and,
+    // for service backends, the executor thread). Remote backends dial
+    // the serving process and mirror its dataset instead of building
+    // one locally.
+    let (engine, ds) = if cfg.backend.is_remote() {
+        let engine = cfg.remote_engine()?;
+        let ds = engine.dataset().clone();
+        println!("dataset: n={} d={} (mirrored from {})", ds.n(), ds.d(), cfg.backend);
+        (engine, ds)
+    } else {
+        let ds = build_dataset(cfg)?;
+        println!(
+            "dataset: n={} d={} (generator={})",
+            ds.n(),
+            ds.d(),
+            cfg.csv.as_deref().unwrap_or(&cfg.generator)
+        );
+        (cfg.engine(ds.clone())?, ds)
+    };
     let optimizer = build_optimizer(cfg)?;
     println!("optimizer: {}", optimizer.name());
-
-    // one facade for every backend: the engine owns the oracle (and,
-    // for service backends, the executor thread)
-    let engine = cfg.engine(ds.clone())?;
     println!("backend: {}", engine.name());
 
     let t0 = Instant::now();
@@ -168,6 +186,36 @@ fn cmd_solve(cfg: &AppConfig) -> Result<()> {
         );
     }
     Ok(())
+}
+
+/// Load the configured dataset, wrap the configured backend in a
+/// coordinator service (if it isn't one already) and serve its session
+/// protocol on `net.listen` until the process is killed.
+fn cmd_serve(cfg: &AppConfig) -> Result<()> {
+    if cfg.backend.is_remote() {
+        return Err(Error::Config(
+            "serve needs a local backend to evaluate on (it IS the remote end)".into(),
+        ));
+    }
+    let ds = build_dataset(cfg)?;
+    println!("dataset: n={} d={}", ds.n(), ds.d());
+    // every connection shares one executor; direct backends get wrapped
+    let backend = match cfg.backend.clone() {
+        s @ Backend::Service { .. } => s,
+        direct => Backend::service_over(direct),
+    };
+    let mut serve_cfg = cfg.clone();
+    serve_cfg.backend = backend;
+    let engine = serve_cfg.engine(ds)?;
+    println!("backend: {}", engine.name());
+    let handle = engine.client().expect("serve wraps the backend in a service");
+    let server = NetServer::bind(handle, cfg.net_config()?)?;
+    println!(
+        "listening on {} (max {} connections; ctrl-c to stop)",
+        server.local_addr(),
+        cfg.max_conns
+    );
+    server.run()
 }
 
 fn cmd_info(cfg: &AppConfig) -> Result<()> {
@@ -200,6 +248,7 @@ fn main() {
     };
     let r = match command.as_str() {
         "solve" => cmd_solve(&cfg),
+        "serve" => cmd_serve(&cfg),
         "info" => cmd_info(&cfg),
         "bench-hint" => {
             println!(

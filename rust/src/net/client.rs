@@ -1,0 +1,441 @@
+//! The transport client: a [`NetClient`] mirrors a
+//! [`crate::coordinator::ServiceHandle`] across a socket, and a
+//! [`NetSession`] mirrors a [`crate::coordinator::RemoteSession`] —
+//! same verbs, same index-only wire costs, different process.
+//!
+//! Connecting performs the `Hello`/`Welcome` handshake: the server
+//! ships the dataset rows, its fresh dmin and the `L({e0})·n` constant
+//! **once**, which is exactly what an in-process handle clones out of
+//! the executor at spawn. Everything after is the framed session
+//! protocol, so a whole greedy run costs O(|C|) bytes per round.
+//!
+//! `CommitMany` is **pipelined** end to end: [`NetSession::commit_many`]
+//! writes the frame and returns; the ack is read — in FIFO order — in
+//! front of the next synchronous reply (or by [`NetSession::sync`]).
+//! One socket serves any number of sessions; requests interleave under
+//! a mutex and replies come back strictly in request order.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::Write;
+use std::sync::{Mutex, MutexGuard};
+
+use super::codec::{self, Reply, Request};
+use super::{Listen, NetStream};
+use crate::coordinator::Counter;
+use crate::data::Dataset;
+use crate::error::FrameError;
+use crate::optim::oracle::DminState;
+use crate::{Error, Result};
+
+/// What a pipelined request's eventual reply should be treated as.
+enum Pending {
+    /// A `CommitMany` ack for the given sid: failures must surface on
+    /// **that session's** next verb (one socket serves many sessions).
+    CommitAck(u64),
+    /// A drop-path `Close` ack: best-effort, result discarded.
+    CloseAck,
+}
+
+fn mismatch(got: &Reply) -> Error {
+    let label = match got {
+        Reply::Welcome { .. } => "Welcome",
+        Reply::Floats(_) => "Floats",
+        Reply::Sid(_) => "Sid",
+        Reply::Ack => "Ack",
+        Reply::Float(_) => "Float",
+        Reply::State(_) => "State",
+        Reply::Error(..) => "Error",
+    };
+    Error::Service(format!("protocol mismatch: unexpected {label} reply"))
+}
+
+/// The socket plus the FIFO bookkeeping for pipelined replies.
+struct Conn {
+    stream: NetStream,
+    /// Requests written whose replies have not been read yet.
+    pending: VecDeque<Pending>,
+    /// Commit failures drained off the wire, parked until the owning
+    /// session's next verb (first failure per sid wins) — a shared
+    /// socket must not surface session A's failure on session B.
+    failed: HashMap<u64, Error>,
+    /// Set on any transport/framing failure: the stream may be
+    /// desynchronized, so every later call fails fast.
+    broken: bool,
+}
+
+impl Conn {
+    fn send(&mut self, req: &Request, tx: &Counter) -> Result<()> {
+        if self.broken {
+            return Err(Error::Service("connection broken by an earlier transport error".into()));
+        }
+        let buf = codec::encode_request(req);
+        if let Err(e) = self.stream.write_all(&buf).and_then(|()| self.stream.flush()) {
+            self.broken = true;
+            return Err(e.into());
+        }
+        tx.add(buf.len() as u64);
+        Ok(())
+    }
+
+    fn recv(&mut self, rx: &Counter) -> Result<Reply> {
+        if self.broken {
+            return Err(Error::Service("connection broken by an earlier transport error".into()));
+        }
+        match codec::read_frame(&mut self.stream) {
+            Ok(Some((kind, payload))) => {
+                rx.add((codec::HEADER_LEN + payload.len()) as u64);
+                match codec::decode_reply(kind, &payload) {
+                    Ok(r) => Ok(r),
+                    Err(e) => {
+                        self.broken = true;
+                        Err(e)
+                    }
+                }
+            }
+            Ok(None) => {
+                self.broken = true;
+                Err(Error::Service("server closed the connection".into()))
+            }
+            Err(e) => {
+                self.broken = true;
+                Err(e)
+            }
+        }
+    }
+
+    /// Read the replies of every pipelined request (FIFO — they precede
+    /// whatever synchronous reply the caller wants next). Every pending
+    /// reply is **consumed** — anything left unread would desynchronize
+    /// the stream. Commit failures are parked in [`Conn::failed`] under
+    /// their sid (surfaced by the owning session's next verb, never by
+    /// a bystander sharing the socket); drop-path close results are
+    /// discarded. Only transport/protocol failures error here.
+    fn drain(&mut self, rx: &Counter) -> Result<()> {
+        while let Some(kind) = self.pending.pop_front() {
+            let reply = self.recv(rx)?; // transport failure: stream is dead anyway
+            match (kind, reply) {
+                (_, Reply::Ack) => {}
+                (Pending::CloseAck, Reply::Error(..)) => {}
+                (Pending::CommitAck(sid), Reply::Error(code, msg)) => {
+                    self.failed.entry(sid).or_insert_with(|| Reply::into_error(code, msg));
+                }
+                (_, other) => {
+                    self.broken = true;
+                    return Err(mismatch(&other));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Drain, then surface the parked commit failure of `sid` (if any).
+    fn drain_for(&mut self, sid: u64, rx: &Counter) -> Result<()> {
+        self.drain(rx)?;
+        match self.failed.remove(&sid) {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+/// A connected client: the out-of-process twin of a
+/// [`crate::coordinator::ServiceHandle`]. Holds the dataset mirror
+/// received at `Welcome`, hands out [`NetSession`]s over one shared
+/// socket, and counts its own transport bytes (frame headers included)
+/// for the wire-accounting tests and benches.
+pub struct NetClient {
+    conn: Mutex<Conn>,
+    dataset: Dataset,
+    l0: f64,
+    init_dmin: Vec<f32>,
+    backend_name: String,
+    target: Listen,
+    tx_bytes: Counter,
+    rx_bytes: Counter,
+}
+
+impl NetClient {
+    /// Dial a server and perform the `Hello`/`Welcome` handshake — the
+    /// one dataset-sized transfer of the connection's lifetime.
+    pub fn connect(target: &Listen) -> Result<Self> {
+        let stream = NetStream::connect(target)?;
+        let tx_bytes = Counter::default();
+        let rx_bytes = Counter::default();
+        let mut conn =
+            Conn { stream, pending: VecDeque::new(), failed: HashMap::new(), broken: false };
+        conn.send(&Request::Hello, &tx_bytes)?;
+        match conn.recv(&rx_bytes)? {
+            Reply::Welcome { n, d, l0, name, init_dmin, rows } => {
+                if init_dmin.len() != n {
+                    return Err(FrameError::Malformed(format!(
+                        "welcome dmin has {} entries for n = {n}",
+                        init_dmin.len()
+                    ))
+                    .into());
+                }
+                let dataset = Dataset::from_flat(n, d, rows)?;
+                Ok(Self {
+                    conn: Mutex::new(conn),
+                    dataset,
+                    l0,
+                    init_dmin,
+                    backend_name: name,
+                    target: target.clone(),
+                    tx_bytes,
+                    rx_bytes,
+                })
+            }
+            Reply::Error(code, msg) => Err(Reply::into_error(code, msg)),
+            other => Err(mismatch(&other)),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, Conn> {
+        self.conn.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// One synchronous round-trip: send, drain pipelined replies,
+    /// receive; error replies become typed [`Error`]s. The reply is
+    /// read even when a drained commit failed — the stream stays in
+    /// sync — but a failure parked for `sid` wins over the reply.
+    fn call_for(&self, sid: Option<u64>, req: &Request) -> Result<Reply> {
+        let mut c = self.lock();
+        c.send(req, &self.tx_bytes)?;
+        let drained = c.drain(&self.rx_bytes);
+        let reply = c.recv(&self.rx_bytes);
+        drained?;
+        if let Some(sid) = sid {
+            if let Some(e) = c.failed.remove(&sid) {
+                return Err(e);
+            }
+        }
+        match reply? {
+            Reply::Error(code, msg) => Err(Reply::into_error(code, msg)),
+            other => Ok(other),
+        }
+    }
+
+    /// [`NetClient::call_for`] without a session (`Hello`, `EvalSets`).
+    fn call(&self, req: &Request) -> Result<Reply> {
+        self.call_for(None, req)
+    }
+
+    /// [`NetClient::call_for`] for **session-creating** requests
+    /// (`Open`, `Fork`): pipelined replies are settled *before* the
+    /// request is sent, so a surfaced commit failure (of the parent
+    /// `sid`, for forks) cannot orphan a server session whose `Sid`
+    /// reply would be discarded.
+    fn call_creating(&self, sid: Option<u64>, req: &Request) -> Result<Reply> {
+        let mut c = self.lock();
+        c.drain(&self.rx_bytes)?;
+        if let Some(sid) = sid {
+            if let Some(e) = c.failed.remove(&sid) {
+                return Err(e);
+            }
+        }
+        c.send(req, &self.tx_bytes)?;
+        match c.recv(&self.rx_bytes)? {
+            Reply::Error(code, msg) => Err(Reply::into_error(code, msg)),
+            other => Ok(other),
+        }
+    }
+
+    /// Queue a request whose reply is read later (FIFO) — the commit
+    /// pipeline and the drop-path close.
+    fn send_pipelined(&self, req: &Request, pending: Pending) -> Result<()> {
+        let mut c = self.lock();
+        c.send(req, &self.tx_bytes)?;
+        c.pending.push_back(pending);
+        Ok(())
+    }
+
+    /// The server's ground set, mirrored at connect.
+    pub fn dataset(&self) -> &Dataset {
+        &self.dataset
+    }
+
+    /// `L({e0})·n` of the server backend's dissimilarity.
+    pub fn l0_sum(&self) -> f64 {
+        self.l0
+    }
+
+    /// The server backend's fresh-state template (what seeded opens —
+    /// e.g. GreeDi's masked partitions — start from).
+    pub fn init_state(&self) -> DminState {
+        DminState { dmin: self.init_dmin.clone(), exemplars: Vec::new() }
+    }
+
+    /// Descriptive name: `net[<server backend>]@<endpoint>`.
+    pub fn name(&self) -> String {
+        format!("net[{}]@{}", self.backend_name, self.target)
+    }
+
+    /// Transport bytes written so far (encoded request frames, headers
+    /// included).
+    pub fn tx_bytes(&self) -> u64 {
+        self.tx_bytes.get()
+    }
+
+    /// Transport bytes read so far (encoded reply frames, headers
+    /// included).
+    pub fn rx_bytes(&self) -> u64 {
+        self.rx_bytes.get()
+    }
+
+    /// Evaluate `f(S)` for arbitrary index sets on the server.
+    pub fn eval_sets(&self, sets: &[Vec<usize>]) -> Result<Vec<f32>> {
+        match self.call(&Request::EvalSets { sets: sets.to_vec() })? {
+            Reply::Floats(v) => Ok(v),
+            other => Err(mismatch(&other)),
+        }
+    }
+
+    /// Open a fresh server session (empty summary).
+    pub fn open(&self) -> Result<NetSession<'_>> {
+        self.open_inner(None)
+    }
+
+    /// Open a server session from an explicit state + `L({e0})·n` — the
+    /// one O(n) payload of a session's lifetime.
+    pub fn open_seeded(&self, state: DminState, l0: f64) -> Result<NetSession<'_>> {
+        let exemplars = state.exemplars.clone();
+        let mut s = self.open_inner(Some((state, l0)))?;
+        s.exemplars = exemplars;
+        Ok(s)
+    }
+
+    fn open_inner(&self, seed: Option<(DminState, f64)>) -> Result<NetSession<'_>> {
+        match self.call_creating(None, &Request::Open { seed })? {
+            Reply::Sid(sid) => {
+                Ok(NetSession { client: self, sid, exemplars: Vec::new(), closed: false })
+            }
+            other => Err(mismatch(&other)),
+        }
+    }
+}
+
+/// A server-resident session across the wire — the transport twin of
+/// [`crate::coordinator::RemoteSession`]: sid + O(k) exemplar mirror on
+/// this side, the dmin state next to the server's compute. Dropping it
+/// queues `Close` (best-effort); [`NetSession::close`] confirms.
+pub struct NetSession<'a> {
+    client: &'a NetClient,
+    sid: u64,
+    exemplars: Vec<usize>,
+    closed: bool,
+}
+
+impl<'a> NetSession<'a> {
+    /// The server-side session id.
+    pub fn sid(&self) -> u64 {
+        self.sid
+    }
+
+    /// The client this session talks through.
+    pub fn client(&self) -> &'a NetClient {
+        self.client
+    }
+
+    /// Committed exemplars, in commit order (client-side mirror).
+    pub fn exemplars(&self) -> &[usize] {
+        &self.exemplars
+    }
+
+    /// Marginal gains against the server-resident state: one
+    /// `sid + indices` frame out, one float vector back.
+    pub fn gains(&self, candidates: &[usize]) -> Result<Vec<f32>> {
+        let req = Request::Marginals { sid: self.sid, candidates: candidates.to_vec() };
+        match self.client.call_for(Some(self.sid), &req)? {
+            Reply::Floats(v) => Ok(v),
+            other => Err(mismatch(&other)),
+        }
+    }
+
+    /// Commit exemplars — **pipelined**: the frame is written and this
+    /// returns; the ack is read in front of the next synchronous reply,
+    /// where a commit failure surfaces **on this session** (sessions
+    /// sharing the socket are unaffected). The exemplar mirror is
+    /// extended optimistically.
+    pub fn commit_many(&mut self, idxs: &[usize]) -> Result<()> {
+        let req = Request::CommitMany { sid: self.sid, idxs: idxs.to_vec() };
+        self.client.send_pipelined(&req, Pending::CommitAck(self.sid))?;
+        self.exemplars.extend_from_slice(idxs);
+        Ok(())
+    }
+
+    /// Wait out every pipelined commit ack, surfacing this session's
+    /// first failure — settles the byte counters for the accounting
+    /// tests.
+    pub fn sync(&self) -> Result<()> {
+        self.client.lock().drain_for(self.sid, &self.client.rx_bytes)
+    }
+
+    /// `f(S)` of the server-resident summary.
+    pub fn value(&self) -> Result<f32> {
+        match self.client.call_for(Some(self.sid), &Request::Value { sid: self.sid })? {
+            Reply::Float(v) => Ok(v),
+            other => Err(mismatch(&other)),
+        }
+    }
+
+    /// Fork server-side; only the new sid crosses the wire. Pipelined
+    /// commits are settled first (a surfaced failure must not orphan
+    /// the copy).
+    pub fn fork(&self) -> Result<NetSession<'a>> {
+        match self.client.call_creating(Some(self.sid), &Request::Fork { sid: self.sid })? {
+            Reply::Sid(sid) => Ok(NetSession {
+                client: self.client,
+                sid,
+                exemplars: self.exemplars.clone(),
+                closed: false,
+            }),
+            other => Err(mismatch(&other)),
+        }
+    }
+
+    /// Download the full server state — O(n), diagnostics only.
+    pub fn export(&self) -> Result<DminState> {
+        match self.client.call_for(Some(self.sid), &Request::Export { sid: self.sid })? {
+            Reply::State(s) => Ok(s),
+            other => Err(mismatch(&other)),
+        }
+    }
+
+    /// Close the session and wait for the server's confirmation (a
+    /// pipelined commit failure surfaces here; the session is closed
+    /// server-side either way).
+    pub fn close(mut self) -> Result<()> {
+        self.closed = true;
+        match self.client.call_for(Some(self.sid), &Request::Close { sid: self.sid })? {
+            Reply::Ack => Ok(()),
+            other => Err(mismatch(&other)),
+        }
+    }
+
+    /// Close this session and reopen a fresh one in its place (the
+    /// close is queued first — FIFO — so the server never holds both).
+    /// Pipelined commits are settled first so a surfaced failure can't
+    /// half-close this session or orphan its replacement.
+    pub fn reset(&mut self) -> Result<()> {
+        self.sync()?;
+        self.client.send_pipelined(&Request::Close { sid: self.sid }, Pending::CloseAck)?;
+        self.closed = true; // old sid is gone whatever happens next
+        let mut fresh = self.client.open_inner(None)?;
+        fresh.closed = true; // its sid is adopted here; don't close it on drop
+        self.sid = fresh.sid;
+        self.closed = false;
+        self.exemplars.clear();
+        Ok(())
+    }
+}
+
+impl Drop for NetSession<'_> {
+    fn drop(&mut self) {
+        // a parked commit failure dies with its session
+        self.client.lock().failed.remove(&self.sid);
+        if !self.closed {
+            let req = Request::Close { sid: self.sid };
+            let _ = self.client.send_pipelined(&req, Pending::CloseAck);
+        }
+    }
+}

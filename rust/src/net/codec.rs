@@ -1,0 +1,757 @@
+//! Length-prefixed binary framing of the session protocol — the wire
+//! form of every coordinator request and reply.
+//!
+//! Every frame is a fixed 16-byte header followed by a message-specific
+//! payload, all little-endian (see [`crate::net`] for the full layout
+//! table). The header is exactly the 16-byte `WIRE_HEADER` the byte
+//! model in [`crate::coordinator::ServiceMetrics`] has priced since the
+//! protocol went index-only, and the hot path carries **no count fields**
+//! — `Marginals`/`CommitMany` payloads are `sid + indices`, with the
+//! count derived from the payload length, so the encoded frame size
+//! equals the modeled wire bytes *exactly* (`tests/net_wire.rs` asserts
+//! the equality against live metrics).
+//!
+//! Decoding is strict and typed: wrong magic, an unknown version, an
+//! unknown kind byte, a truncated stream or a hostile length prefix
+//! each produce their own [`FrameError`] — the server drops the
+//! connection, the client surfaces the diagnosis. A length prefix is
+//! validated against [`MAX_PAYLOAD`] *before* any allocation.
+
+use std::io::Read;
+
+use crate::error::FrameError;
+use crate::optim::oracle::DminState;
+use crate::{Error, Result};
+
+/// First four bytes of every frame.
+pub const MAGIC: [u8; 4] = *b"EXCL";
+
+/// Protocol version this codec speaks.
+pub const VERSION: u8 = 1;
+
+/// Fixed frame-header size: magic (4) + version (1) + kind (1) +
+/// reserved (2) + payload length (8) — the same 16 bytes the service
+/// byte model charges per message.
+pub const HEADER_LEN: usize = 16;
+
+/// Ceiling on a single payload (2 GiB). A header announcing more is
+/// rejected as [`FrameError::Oversized`] without allocating.
+pub const MAX_PAYLOAD: u64 = 1 << 31;
+
+/// Message-kind bytes. Requests live below `0x40`, replies at or above.
+pub mod kind {
+    /// Client handshake; the server answers [`WELCOME`].
+    pub const HELLO: u8 = 0x01;
+    /// Stateless multiset evaluation.
+    pub const EVAL_SETS: u8 = 0x02;
+    /// Open a session (optionally seeded — the one state-bearing request).
+    pub const OPEN: u8 = 0x03;
+    /// Marginal gains against a server-resident session.
+    pub const MARGINALS: u8 = 0x04;
+    /// Commit exemplars into a server-resident session.
+    pub const COMMIT_MANY: u8 = 0x05;
+    /// `f(S)` of a session.
+    pub const VALUE: u8 = 0x06;
+    /// Server-side session copy.
+    pub const FORK: u8 = 0x07;
+    /// Download a session's state (diagnostics only).
+    pub const EXPORT: u8 = 0x08;
+    /// Reclaim a session.
+    pub const CLOSE: u8 = 0x09;
+
+    /// Handshake reply: dataset mirror + backend identity.
+    pub const WELCOME: u8 = 0x41;
+    /// A vector of `f32` (eval-sets values, marginal gains).
+    pub const FLOATS: u8 = 0x42;
+    /// A session id (`Open`/`Fork` replies).
+    pub const SID: u8 = 0x43;
+    /// Bare acknowledgement (`CommitMany`/`Close` replies).
+    pub const ACK: u8 = 0x44;
+    /// A single `f32` (`Value` replies).
+    pub const FLOAT: u8 = 0x45;
+    /// A full `DminState` (`Export` replies).
+    pub const STATE: u8 = 0x46;
+    /// A typed error (code byte + message).
+    pub const ERROR: u8 = 0x4F;
+}
+
+/// A decoded request frame — the session protocol's verbs, plus the
+/// connection-scoped `Hello` handshake.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Handshake: ask for the dataset mirror and backend identity.
+    Hello,
+    /// Evaluate `f(S)` for arbitrary index sets.
+    EvalSets {
+        /// The multiset batch.
+        sets: Vec<Vec<usize>>,
+    },
+    /// Open a server session; `seed` is the one O(n) payload a session
+    /// may ever ship (GreeDi's masked partition dmin + restricted l0).
+    Open {
+        /// Optional explicit opening state and its `L({e0})·n`.
+        seed: Option<(DminState, f64)>,
+    },
+    /// Marginal gains against session `sid`.
+    Marginals {
+        /// Target session.
+        sid: u64,
+        /// Candidate indices.
+        candidates: Vec<usize>,
+    },
+    /// Commit exemplars into session `sid`.
+    CommitMany {
+        /// Target session.
+        sid: u64,
+        /// Exemplar indices.
+        idxs: Vec<usize>,
+    },
+    /// `f(S)` of session `sid`.
+    Value {
+        /// Target session.
+        sid: u64,
+    },
+    /// Copy session `sid` server-side.
+    Fork {
+        /// Source session.
+        sid: u64,
+    },
+    /// Download session `sid`'s state (diagnostics).
+    Export {
+        /// Target session.
+        sid: u64,
+    },
+    /// Reclaim session `sid`.
+    Close {
+        /// Target session.
+        sid: u64,
+    },
+}
+
+/// A decoded reply frame.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Reply {
+    /// Handshake reply: everything a client needs to mirror a
+    /// [`crate::coordinator::ServiceHandle`] — shipped **once** per
+    /// connection (the rows are the client's dataset mirror; per-round
+    /// traffic stays index-only).
+    Welcome {
+        /// Ground-set size.
+        n: usize,
+        /// Dimensionality.
+        d: usize,
+        /// `L({e0})·n` of the backend's dissimilarity.
+        l0: f64,
+        /// Backend's descriptive name.
+        name: String,
+        /// The backend's fresh dmin (dissimilarity-aware), length `n`.
+        init_dmin: Vec<f32>,
+        /// Row-major dataset buffer, length `n·d`.
+        rows: Vec<f32>,
+    },
+    /// Gains / eval-sets values.
+    Floats(Vec<f32>),
+    /// A new session id.
+    Sid(u64),
+    /// Bare acknowledgement.
+    Ack,
+    /// One function value.
+    Float(f32),
+    /// A full session state.
+    State(DminState),
+    /// A typed service error: `(code, message)` with code 1 =
+    /// invalid argument, 2 = service, 3 = empty dataset, 0 = other.
+    Error(u8, String),
+}
+
+impl Reply {
+    /// Build the error reply for a service-side failure.
+    pub fn from_error(e: &Error) -> Reply {
+        match e {
+            Error::InvalidArgument(m) => Reply::Error(1, m.clone()),
+            Error::Service(m) => Reply::Error(2, m.clone()),
+            Error::EmptyDataset => Reply::Error(3, String::new()),
+            other => Reply::Error(0, other.to_string()),
+        }
+    }
+
+    /// Reconstruct the client-side error from an error reply's payload.
+    pub fn into_error(code: u8, msg: String) -> Error {
+        match code {
+            1 => Error::InvalidArgument(msg),
+            3 => Error::EmptyDataset,
+            _ => Error::Service(msg),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// encoding
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(buf: &mut Vec<u8>, v: f32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32s(buf: &mut Vec<u8>, vs: &[f32]) {
+    // the large payloads (dataset rows, dmin buffers) go through here:
+    // reserve once so the element loop never reallocates
+    buf.reserve(vs.len() * 4);
+    for &v in vs {
+        put_f32(buf, v);
+    }
+}
+
+fn put_indices(buf: &mut Vec<u8>, vs: &[usize]) {
+    buf.reserve(vs.len() * 8);
+    for &v in vs {
+        put_u64(buf, v as u64);
+    }
+}
+
+/// Start a frame: header with a zeroed length, patched by [`finish`] —
+/// payloads are written straight into the frame buffer, never staged
+/// and copied (the `Welcome` dataset mirror would otherwise pay an
+/// extra O(n·d) copy per connection).
+fn begin(kind: u8) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN + 64);
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    out.push(kind);
+    out.extend_from_slice(&[0u8; 2]); // reserved
+    out.extend_from_slice(&[0u8; 8]); // payload length, patched below
+    out
+}
+
+/// Backfill the header's payload-length field.
+fn finish(mut out: Vec<u8>) -> Vec<u8> {
+    let len = (out.len() - HEADER_LEN) as u64;
+    out[8..16].copy_from_slice(&len.to_le_bytes());
+    out
+}
+
+fn request_kind(req: &Request) -> u8 {
+    match req {
+        Request::Hello => kind::HELLO,
+        Request::EvalSets { .. } => kind::EVAL_SETS,
+        Request::Open { .. } => kind::OPEN,
+        Request::Marginals { .. } => kind::MARGINALS,
+        Request::CommitMany { .. } => kind::COMMIT_MANY,
+        Request::Value { .. } => kind::VALUE,
+        Request::Fork { .. } => kind::FORK,
+        Request::Export { .. } => kind::EXPORT,
+        Request::Close { .. } => kind::CLOSE,
+    }
+}
+
+/// Encode a request into a complete frame (header + payload).
+pub fn encode_request(req: &Request) -> Vec<u8> {
+    let mut p = begin(request_kind(req));
+    match req {
+        Request::Hello => {}
+        Request::EvalSets { sets } => {
+            put_u64(&mut p, sets.len() as u64);
+            for s in sets {
+                put_u64(&mut p, s.len() as u64);
+                put_indices(&mut p, s);
+            }
+        }
+        Request::Open { seed } => match seed {
+            None => p.push(0),
+            Some((state, l0)) => {
+                p.push(1);
+                put_f64(&mut p, *l0);
+                put_u64(&mut p, state.dmin.len() as u64);
+                put_f32s(&mut p, &state.dmin);
+                put_u64(&mut p, state.exemplars.len() as u64);
+                put_indices(&mut p, &state.exemplars);
+            }
+        },
+        // the hot-path messages carry no count: |C| = (len - 8) / 8, so
+        // the frame is byte-for-byte the modeled `header + sid + indices`
+        Request::Marginals { sid, candidates } => {
+            put_u64(&mut p, *sid);
+            put_indices(&mut p, candidates);
+        }
+        Request::CommitMany { sid, idxs } => {
+            put_u64(&mut p, *sid);
+            put_indices(&mut p, idxs);
+        }
+        Request::Value { sid }
+        | Request::Fork { sid }
+        | Request::Export { sid }
+        | Request::Close { sid } => put_u64(&mut p, *sid),
+    }
+    finish(p)
+}
+
+fn reply_kind(rep: &Reply) -> u8 {
+    match rep {
+        Reply::Welcome { .. } => kind::WELCOME,
+        Reply::Floats(_) => kind::FLOATS,
+        Reply::Sid(_) => kind::SID,
+        Reply::Ack => kind::ACK,
+        Reply::Float(_) => kind::FLOAT,
+        Reply::State(_) => kind::STATE,
+        Reply::Error(..) => kind::ERROR,
+    }
+}
+
+/// Encode a reply into a complete frame (header + payload).
+pub fn encode_reply(rep: &Reply) -> Vec<u8> {
+    let mut p = begin(reply_kind(rep));
+    match rep {
+        Reply::Welcome { n, d, l0, name, init_dmin, rows } => {
+            put_u64(&mut p, *n as u64);
+            put_u64(&mut p, *d as u64);
+            put_f64(&mut p, *l0);
+            put_u64(&mut p, name.len() as u64);
+            p.extend_from_slice(name.as_bytes());
+            put_f32s(&mut p, init_dmin);
+            put_f32s(&mut p, rows);
+        }
+        Reply::Floats(vs) => put_f32s(&mut p, vs),
+        Reply::Sid(sid) => put_u64(&mut p, *sid),
+        Reply::Ack => {}
+        Reply::Float(v) => put_f32(&mut p, *v),
+        Reply::State(state) => {
+            put_u64(&mut p, state.dmin.len() as u64);
+            put_f32s(&mut p, &state.dmin);
+            put_u64(&mut p, state.exemplars.len() as u64);
+            put_indices(&mut p, &state.exemplars);
+        }
+        Reply::Error(code, msg) => {
+            p.push(*code);
+            p.extend_from_slice(msg.as_bytes());
+        }
+    }
+    finish(p)
+}
+
+// ---------------------------------------------------------------------
+// decoding
+
+/// Strict little-endian payload reader with typed under/overrun errors.
+struct Payload<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Payload<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(FrameError::Malformed(format!(
+                "payload needs {n} more bytes, has {}",
+                self.remaining()
+            ))
+            .into());
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    /// A length field that must be payable by the bytes still present
+    /// (`elem_bytes` each) — rejects hostile counts before allocating.
+    fn count(&mut self, elem_bytes: usize) -> Result<usize> {
+        let v = self.u64()?;
+        let need = (v as u128) * elem_bytes as u128;
+        if need > self.remaining() as u128 {
+            return Err(FrameError::Malformed(format!(
+                "count {v} needs {need} bytes, payload has {}",
+                self.remaining()
+            ))
+            .into());
+        }
+        Ok(v as usize)
+    }
+
+    /// `count · elem_bytes`, rejected (never wrapped) on overflow — a
+    /// hostile count must fail loudly in release builds too.
+    fn byte_len(count: usize, elem_bytes: usize) -> Result<usize> {
+        count.checked_mul(elem_bytes).ok_or_else(|| {
+            Error::from(FrameError::Malformed(format!("element count {count} overflows")))
+        })
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let raw = self.take(Self::byte_len(n, 4)?)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().expect("4"))).collect())
+    }
+
+    fn indices(&mut self, n: usize) -> Result<Vec<usize>> {
+        let raw = self.take(Self::byte_len(n, 8)?)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().expect("8")) as usize)
+            .collect())
+    }
+
+    fn finish(self) -> Result<()> {
+        if self.remaining() != 0 {
+            return Err(FrameError::Malformed(format!(
+                "{} trailing bytes after the message",
+                self.remaining()
+            ))
+            .into());
+        }
+        Ok(())
+    }
+}
+
+/// `sid + indices` with the count derived from the payload length.
+fn sid_and_indices(p: &mut Payload<'_>) -> Result<(u64, Vec<usize>)> {
+    let sid = p.u64()?;
+    let rest = p.remaining();
+    if rest % 8 != 0 {
+        let e = FrameError::Malformed(format!("index run of {rest} bytes not 8-aligned"));
+        return Err(e.into());
+    }
+    let idxs = p.indices(rest / 8)?;
+    Ok((sid, idxs))
+}
+
+fn state_payload(p: &mut Payload<'_>) -> Result<DminState> {
+    let dn = p.count(4)?;
+    let dmin = p.f32s(dn)?;
+    let en = p.count(8)?;
+    let exemplars = p.indices(en)?;
+    Ok(DminState { dmin, exemplars })
+}
+
+/// Decode a request payload for a header kind.
+pub fn decode_request(kind: u8, payload: &[u8]) -> Result<Request> {
+    let mut p = Payload::new(payload);
+    let req = match kind {
+        kind::HELLO => Request::Hello,
+        kind::EVAL_SETS => {
+            let count = p.count(8)?; // every set carries at least its length
+            let mut sets = Vec::with_capacity(count);
+            for _ in 0..count {
+                let len = p.count(8)?;
+                sets.push(p.indices(len)?);
+            }
+            Request::EvalSets { sets }
+        }
+        kind::OPEN => {
+            let seeded = p.u8()?;
+            let seed = match seeded {
+                0 => None,
+                1 => {
+                    let l0 = p.f64()?;
+                    Some((state_payload(&mut p)?, l0))
+                }
+                other => {
+                    return Err(
+                        FrameError::Malformed(format!("bad open seed flag {other}")).into()
+                    )
+                }
+            };
+            Request::Open { seed }
+        }
+        kind::MARGINALS => {
+            let (sid, candidates) = sid_and_indices(&mut p)?;
+            Request::Marginals { sid, candidates }
+        }
+        kind::COMMIT_MANY => {
+            let (sid, idxs) = sid_and_indices(&mut p)?;
+            Request::CommitMany { sid, idxs }
+        }
+        kind::VALUE => Request::Value { sid: p.u64()? },
+        kind::FORK => Request::Fork { sid: p.u64()? },
+        kind::EXPORT => Request::Export { sid: p.u64()? },
+        kind::CLOSE => Request::Close { sid: p.u64()? },
+        other => return Err(FrameError::UnknownKind { got: other }.into()),
+    };
+    p.finish()?;
+    Ok(req)
+}
+
+/// Decode a reply payload for a header kind.
+pub fn decode_reply(kind: u8, payload: &[u8]) -> Result<Reply> {
+    let mut p = Payload::new(payload);
+    let rep = match kind {
+        kind::WELCOME => {
+            let n = p.count(4)?; // init_dmin alone needs 4n bytes
+            let d = p.u64()? as usize;
+            let l0 = p.f64()?;
+            let name_len = p.count(1)?;
+            let name = String::from_utf8(p.take(name_len)?.to_vec())
+                .map_err(|_| Error::from(FrameError::Malformed("name is not utf-8".into())))?;
+            let init_dmin = p.f32s(n)?;
+            let elems = n.checked_mul(d).ok_or_else(|| {
+                Error::from(FrameError::Malformed(format!("n·d overflow: {n}·{d}")))
+            })?;
+            let rows = p.f32s(elems)?;
+            Reply::Welcome { n, d, l0, name, init_dmin, rows }
+        }
+        kind::FLOATS => {
+            let rest = p.remaining();
+            if rest % 4 != 0 {
+                return Err(
+                    FrameError::Malformed(format!("float run of {rest} bytes not 4-aligned"))
+                        .into(),
+                );
+            }
+            Reply::Floats(p.f32s(rest / 4)?)
+        }
+        kind::SID => Reply::Sid(p.u64()?),
+        kind::ACK => Reply::Ack,
+        kind::FLOAT => Reply::Float(p.f32()?),
+        kind::STATE => Reply::State(state_payload(&mut p)?),
+        kind::ERROR => {
+            let code = p.u8()?;
+            let msg = String::from_utf8_lossy(p.take(p.remaining())?).into_owned();
+            Reply::Error(code, msg)
+        }
+        other => return Err(FrameError::UnknownKind { got: other }.into()),
+    };
+    p.finish()?;
+    Ok(rep)
+}
+
+// ---------------------------------------------------------------------
+// stream framing
+
+/// Read one frame off a blocking stream. Returns `Ok(None)` on a clean
+/// EOF **at a frame boundary** (the peer hung up between messages);
+/// EOF inside a header or payload is [`FrameError::Truncated`]. The
+/// header's magic, version and length prefix are validated before the
+/// payload is allocated.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<(u8, Vec<u8>)>> {
+    let mut head = [0u8; HEADER_LEN];
+    let mut got = 0usize;
+    while got < HEADER_LEN {
+        match r.read(&mut head[got..]) {
+            Ok(0) => {
+                if got == 0 {
+                    return Ok(None);
+                }
+                return Err(FrameError::Truncated { need: HEADER_LEN, got }.into());
+            }
+            Ok(k) => got += k,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        }
+    }
+    if head[0..4] != MAGIC {
+        return Err(FrameError::BadMagic { got: head[0..4].try_into().expect("4 bytes") }.into());
+    }
+    if head[4] != VERSION {
+        return Err(FrameError::BadVersion { got: head[4] }.into());
+    }
+    let kind = head[5];
+    let len = u64::from_le_bytes(head[8..16].try_into().expect("8 bytes"));
+    if len > MAX_PAYLOAD {
+        return Err(FrameError::Oversized { len, max: MAX_PAYLOAD }.into());
+    }
+    let mut payload = vec![0u8; len as usize];
+    let mut got = 0usize;
+    while got < payload.len() {
+        match r.read(&mut payload[got..]) {
+            Ok(0) => {
+                return Err(FrameError::Truncated { need: payload.len(), got }.into());
+            }
+            Ok(k) => got += k,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(Some((kind, payload)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_request(req: Request) {
+        let bytes = encode_request(&req);
+        let (kind, payload) = read_frame(&mut &bytes[..]).unwrap().expect("one frame");
+        assert_eq!(decode_request(kind, &payload).unwrap(), req);
+        assert_eq!(bytes.len(), HEADER_LEN + payload.len());
+    }
+
+    fn roundtrip_reply(rep: Reply) {
+        let bytes = encode_reply(&rep);
+        let (kind, payload) = read_frame(&mut &bytes[..]).unwrap().expect("one frame");
+        assert_eq!(decode_reply(kind, &payload).unwrap(), rep);
+    }
+
+    fn state() -> DminState {
+        DminState { dmin: vec![0.5, 0.0, 3.25, f32::MIN_POSITIVE], exemplars: vec![2, 0] }
+    }
+
+    #[test]
+    fn every_request_variant_roundtrips() {
+        roundtrip_request(Request::Hello);
+        roundtrip_request(Request::EvalSets { sets: vec![vec![0, 7, 3], vec![], vec![9]] });
+        roundtrip_request(Request::Open { seed: None });
+        roundtrip_request(Request::Open { seed: Some((state(), 123.625)) });
+        roundtrip_request(Request::Marginals { sid: 7, candidates: vec![0, 1, usize::MAX >> 1] });
+        roundtrip_request(Request::Marginals { sid: 7, candidates: vec![] });
+        roundtrip_request(Request::CommitMany { sid: 1, idxs: vec![4, 4, 4] });
+        roundtrip_request(Request::Value { sid: u64::MAX });
+        roundtrip_request(Request::Fork { sid: 0 });
+        roundtrip_request(Request::Export { sid: 3 });
+        roundtrip_request(Request::Close { sid: 9 });
+    }
+
+    #[test]
+    fn every_reply_variant_roundtrips() {
+        roundtrip_reply(Reply::Welcome {
+            n: 3,
+            d: 2,
+            l0: 17.5,
+            name: "service[cpu-st/sq_euclidean/f32]".into(),
+            init_dmin: vec![1.0, 2.0, 3.0],
+            rows: vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0],
+        });
+        roundtrip_reply(Reply::Floats(vec![1.5, -2.25, f32::MAX, -0.0]));
+        roundtrip_reply(Reply::Floats(vec![]));
+        roundtrip_reply(Reply::Sid(42));
+        roundtrip_reply(Reply::Ack);
+        roundtrip_reply(Reply::Float(-0.125));
+        roundtrip_reply(Reply::State(state()));
+        roundtrip_reply(Reply::Error(1, "index 99 out of range".into()));
+    }
+
+    /// The hot-path frames are byte-for-byte the modeled wire cost:
+    /// header + sid + 8 per index out, header + 4 per float back.
+    #[test]
+    fn hot_path_frames_match_the_service_byte_model() {
+        let m = encode_request(&Request::Marginals { sid: 1, candidates: vec![5; 37] });
+        assert_eq!(m.len(), 16 + 8 + 8 * 37);
+        let c = encode_request(&Request::CommitMany { sid: 1, idxs: vec![5; 3] });
+        assert_eq!(c.len(), 16 + 8 + 8 * 3);
+        let g = encode_reply(&Reply::Floats(vec![0.0; 37]));
+        assert_eq!(g.len(), 16 + 4 * 37);
+        assert_eq!(encode_reply(&Reply::Ack).len(), 16);
+        assert_eq!(encode_request(&Request::Value { sid: 3 }).len(), 16 + 8);
+        assert_eq!(encode_reply(&Reply::Float(0.0)).len(), 16 + 4);
+    }
+
+    #[test]
+    fn truncated_header_and_payload_are_rejected() {
+        let bytes = encode_request(&Request::Value { sid: 3 });
+        // clean EOF at a boundary is None, not an error
+        assert!(read_frame(&mut &bytes[..0]).unwrap().is_none());
+        // EOF inside the header
+        let e = read_frame(&mut &bytes[..7]).unwrap_err();
+        assert!(matches!(e, Error::Frame(FrameError::Truncated { need: 16, got: 7 })), "{e}");
+        // EOF inside the payload
+        let e = read_frame(&mut &bytes[..HEADER_LEN + 3]).unwrap_err();
+        assert!(matches!(e, Error::Frame(FrameError::Truncated { need: 8, got: 3 })), "{e}");
+    }
+
+    #[test]
+    fn bad_magic_and_version_are_rejected() {
+        let mut bytes = encode_request(&Request::Hello);
+        bytes[0] = b'H';
+        assert!(matches!(
+            read_frame(&mut &bytes[..]).unwrap_err(),
+            Error::Frame(FrameError::BadMagic { .. })
+        ));
+        let mut bytes = encode_request(&Request::Hello);
+        bytes[4] = VERSION + 1;
+        assert!(matches!(
+            read_frame(&mut &bytes[..]).unwrap_err(),
+            Error::Frame(FrameError::BadVersion { got }) if got == VERSION + 1
+        ));
+    }
+
+    #[test]
+    fn oversized_length_is_rejected_before_allocation() {
+        let mut bytes = encode_request(&Request::Hello);
+        bytes[8..16].copy_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+        assert!(matches!(
+            read_frame(&mut &bytes[..]).unwrap_err(),
+            Error::Frame(FrameError::Oversized { .. })
+        ));
+    }
+
+    #[test]
+    fn unknown_kind_and_malformed_payloads_are_rejected() {
+        assert!(matches!(
+            decode_request(0x3F, &[]).unwrap_err(),
+            Error::Frame(FrameError::UnknownKind { got: 0x3F })
+        ));
+        assert!(matches!(
+            decode_reply(0x00, &[]).unwrap_err(),
+            Error::Frame(FrameError::UnknownKind { .. })
+        ));
+        // marginals payload not 8-aligned after the sid
+        let e = decode_request(kind::MARGINALS, &[0u8; 13]).unwrap_err();
+        assert!(matches!(e, Error::Frame(FrameError::Malformed(_))), "{e}");
+        // a count field announcing more elements than the payload holds
+        let mut p = Vec::new();
+        put_u64(&mut p, 1 << 40);
+        assert!(decode_request(kind::EVAL_SETS, &p).is_err());
+        // trailing garbage is loud
+        let mut bytes = Vec::from(&encode_request(&Request::Value { sid: 1 })[HEADER_LEN..]);
+        bytes.push(0);
+        assert!(decode_request(kind::VALUE, &bytes).is_err());
+    }
+
+    /// A hostile `Welcome` whose `n·d` (or its byte size) overflows is
+    /// rejected with a malformed-payload error, never a wrap or panic.
+    #[test]
+    fn hostile_welcome_dimensions_are_rejected() {
+        let mut p = Vec::new();
+        put_u64(&mut p, 1); // n = 1
+        put_u64(&mut p, u64::MAX / 4); // d: n·d·4 bytes overflows
+        put_f64(&mut p, 0.0); // l0
+        put_u64(&mut p, 0); // empty name
+        put_f32s(&mut p, &[0.0]); // init_dmin, length n
+        let e = decode_reply(kind::WELCOME, &p).unwrap_err();
+        assert!(matches!(e, Error::Frame(FrameError::Malformed(_))), "{e}");
+    }
+
+    /// Interleaved frames on one stream decode in order — the FIFO
+    /// property pipelined commits rely on.
+    #[test]
+    fn back_to_back_frames_stream_in_order() {
+        let mut stream = Vec::new();
+        stream.extend_from_slice(&encode_request(&Request::CommitMany { sid: 1, idxs: vec![4] }));
+        stream.extend_from_slice(&encode_request(&Request::Marginals {
+            sid: 1,
+            candidates: vec![0, 2],
+        }));
+        let mut r = &stream[..];
+        let (k1, p1) = read_frame(&mut r).unwrap().unwrap();
+        assert!(matches!(decode_request(k1, &p1).unwrap(), Request::CommitMany { .. }));
+        let (k2, p2) = read_frame(&mut r).unwrap().unwrap();
+        assert!(matches!(decode_request(k2, &p2).unwrap(), Request::Marginals { .. }));
+        assert!(read_frame(&mut r).unwrap().is_none());
+    }
+}

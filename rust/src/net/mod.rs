@@ -1,0 +1,278 @@
+//! Out-of-process transport for the session protocol: TCP / Unix-domain
+//! framing of the index-only messages, a blocking accept-loop server in
+//! front of the [`crate::coordinator`] executor, and a remote client
+//! the [`crate::engine`] mounts as [`crate::engine::Backend::Tcp`] /
+//! [`crate::engine::Backend::Uds`].
+//!
+//! Zero dependencies: `std::net` / `std::os::unix::net` only.
+//!
+//! # Why a transport
+//!
+//! The session protocol already shrank per-round traffic to
+//! O(|candidates|) — but the coordinator only served clients in the
+//! same process. Putting the same messages on a socket is what makes
+//! GreeDi-style distributed optimization (Mirzasoleiman et al.) real:
+//! partitions live in separate processes, all talking to one shared
+//! evaluation server whose executor fuses their concurrent `Marginals`
+//! into multi-state backend passes.
+//!
+//! ```text
+//!  client process                    server process (`exemcl serve`)
+//!  ┌─────────────────┐   frames    ┌──────────────┐  channels  ┌────────────┐
+//!  │ optimizer        │  ───────▶  │ conn thread  │  ───────▶  │ executor   │
+//!  │  └ Session ──────┤  TCP/UDS   │  (decode,    │  Request   │  session   │
+//!  │     └ NetSession │  ◀───────  │   own sids)  │  ◀───────  │  table +   │
+//!  │        └NetClient│   frames   └──────────────┘   Reply    │  oracle    │
+//!  └─────────────────┘             one per connection          └────────────┘
+//! ```
+//!
+//! A connection **owns** the sessions it opens: client isolation is
+//! enforced at the connection boundary (a sid from another connection
+//! is "unknown"), and when the socket drops — cleanly or not — the
+//! connection thread's session handles drop with it, sending `Close`
+//! for every one. No `DminState` outlives its client.
+//!
+//! # Frame layout
+//!
+//! Everything is little-endian. Every frame is a 16-byte header +
+//! payload ([`codec`]):
+//!
+//! | offset | size | field                                      |
+//! |--------|------|--------------------------------------------|
+//! | 0      | 4    | magic `EXCL`                               |
+//! | 4      | 1    | protocol version (1)                       |
+//! | 5      | 1    | message kind ([`codec::kind`])             |
+//! | 6      | 2    | reserved (0)                               |
+//! | 8      | 8    | payload length                             |
+//!
+//! Payloads (u64 ids/indices/counts, f32 values, f64 constants):
+//!
+//! | message      | payload                                              |
+//! |--------------|------------------------------------------------------|
+//! | `Hello`      | —                                                    |
+//! | `Welcome`    | n, d, l0, name_len, name, dmin[n], rows[n·d]         |
+//! | `EvalSets`   | count, then per set: len, idx…                       |
+//! | `Open`       | flag(u8); seeded: l0, dmin_len, dmin…, ex_len, ex…   |
+//! | `Marginals`  | sid, idx… (count = (len−8)/8)                        |
+//! | `CommitMany` | sid, idx… (count = (len−8)/8)                        |
+//! | `Value`/`Fork`/`Export`/`Close` | sid                               |
+//! | `Floats`     | f32… (count = len/4)                                 |
+//! | `Sid`        | sid                                                  |
+//! | `Ack`        | —                                                    |
+//! | `Float`      | f32                                                  |
+//! | `State`      | dmin_len, dmin…, ex_len, ex…                         |
+//! | `Error`      | code(u8), utf-8 message                              |
+//!
+//! The hot-path frames (`Marginals`, `CommitMany`, `Floats`, `Ack`)
+//! carry no count fields, so their encoded size equals the byte model
+//! in [`crate::coordinator::ServiceMetrics::wire`] exactly — the codec
+//! tests and `tests/net_wire.rs` assert the equality. `Welcome` ships
+//! the dataset mirror once per connection (the out-of-process analogue
+//! of [`crate::coordinator::ServiceHandle`] cloning the dataset); all
+//! per-round traffic after it is index-only.
+//!
+//! # Quick start (two terminals)
+//!
+//! ```text
+//! # terminal 1 — load a dataset and serve it
+//! exemcl serve --backend cpu-mt --data.n 50000 --net.listen tcp:127.0.0.1:7171
+//!
+//! # terminal 2 — any optimizer, unchanged, against the remote engine
+//! exemcl solve --backend tcp:127.0.0.1:7171 --optimizer.k 32
+//! ```
+//!
+//! Programmatically: [`crate::engine::Engine::builder`] with
+//! `Backend::Tcp { addr }` (no dataset — the engine mirrors the
+//! server's), then `engine.run(&Greedy::new(32))`.
+
+pub mod client;
+pub mod codec;
+pub mod server;
+
+pub use client::{NetClient, NetSession};
+pub use server::{NetServer, StopHandle, DEFAULT_MAX_CONNS};
+
+use std::io::{Read, Write};
+use std::path::PathBuf;
+use std::time::Duration;
+
+use crate::{Error, Result};
+
+/// A transport endpoint: where a server listens / a client dials.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Listen {
+    /// TCP, `host:port` (`port` 0 binds an ephemeral port; the server
+    /// reports the resolved address).
+    Tcp(String),
+    /// Unix-domain socket path (unix only; rejected at bind/connect
+    /// elsewhere).
+    Uds(PathBuf),
+}
+
+impl std::fmt::Display for Listen {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Listen::Tcp(addr) => write!(f, "tcp:{addr}"),
+            Listen::Uds(path) => write!(f, "uds:{}", path.display()),
+        }
+    }
+}
+
+impl std::str::FromStr for Listen {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        if let Some(addr) = s.strip_prefix("tcp:") {
+            if addr.is_empty() {
+                return Err(Error::Config("tcp endpoint needs host:port".into()));
+            }
+            return Ok(Listen::Tcp(addr.to_string()));
+        }
+        if let Some(path) = s.strip_prefix("uds:") {
+            if path.is_empty() {
+                return Err(Error::Config("uds endpoint needs a path".into()));
+            }
+            return Ok(Listen::Uds(PathBuf::from(path)));
+        }
+        Err(Error::Config(format!("unknown endpoint {s:?} (tcp:host:port | uds:/path)")))
+    }
+}
+
+/// Server knobs (the `net.*` config keys).
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    /// Where to listen.
+    pub listen: Listen,
+    /// Connection ceiling (`net.max_conns`): accepts past it are
+    /// answered with an error frame and dropped.
+    pub max_conns: usize,
+    /// Accept-loop and connection-read poll interval
+    /// (`net.accept_timeout_secs`): how often blocked reads wake to
+    /// observe shutdown. Purely a responsiveness knob — no client
+    /// request ever times out because of it.
+    pub poll: Duration,
+}
+
+impl NetConfig {
+    /// Config with the default ceiling ([`DEFAULT_MAX_CONNS`]) and a
+    /// one-second poll.
+    pub fn new(listen: Listen) -> Self {
+        Self { listen, max_conns: DEFAULT_MAX_CONNS, poll: Duration::from_secs(1) }
+    }
+
+    /// Override the connection ceiling (min 1).
+    pub fn with_max_conns(mut self, max: usize) -> Self {
+        self.max_conns = max.max(1);
+        self
+    }
+
+    /// Override the shutdown-poll interval.
+    pub fn with_poll(mut self, poll: Duration) -> Self {
+        self.poll = poll.max(Duration::from_millis(1));
+        self
+    }
+}
+
+/// A connected socket of either family, used by both sides of the
+/// transport.
+pub(crate) enum NetStream {
+    /// TCP (with `TCP_NODELAY`: every frame is a latency-bound
+    /// request/reply leg).
+    Tcp(std::net::TcpStream),
+    #[cfg(unix)]
+    /// Unix-domain stream socket.
+    Uds(std::os::unix::net::UnixStream),
+}
+
+impl NetStream {
+    /// Dial an endpoint.
+    pub fn connect(target: &Listen) -> Result<Self> {
+        match target {
+            Listen::Tcp(addr) => {
+                let s = std::net::TcpStream::connect(addr)?;
+                let _ = s.set_nodelay(true);
+                Ok(NetStream::Tcp(s))
+            }
+            #[cfg(unix)]
+            Listen::Uds(path) => Ok(NetStream::Uds(std::os::unix::net::UnixStream::connect(path)?)),
+            #[cfg(not(unix))]
+            Listen::Uds(_) => {
+                Err(Error::Config("unix-domain sockets are not supported on this platform".into()))
+            }
+        }
+    }
+
+    /// Set (or clear) the read timeout — the server's shutdown poll.
+    pub fn set_read_timeout(&self, t: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            NetStream::Tcp(s) => s.set_read_timeout(t),
+            #[cfg(unix)]
+            NetStream::Uds(s) => s.set_read_timeout(t),
+        }
+    }
+
+    /// Set (or clear) the write timeout — so a stalled peer can't pin a
+    /// connection thread past shutdown.
+    pub fn set_write_timeout(&self, t: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            NetStream::Tcp(s) => s.set_write_timeout(t),
+            #[cfg(unix)]
+            NetStream::Uds(s) => s.set_write_timeout(t),
+        }
+    }
+}
+
+impl Read for NetStream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            NetStream::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            NetStream::Uds(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for NetStream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            NetStream::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            NetStream::Uds(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            NetStream::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            NetStream::Uds(s) => s.flush(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn listen_parses_and_displays() {
+        let t: Listen = "tcp:127.0.0.1:7171".parse().unwrap();
+        assert_eq!(t, Listen::Tcp("127.0.0.1:7171".into()));
+        assert_eq!(t.to_string(), "tcp:127.0.0.1:7171");
+        let u: Listen = "uds:/tmp/exemcl.sock".parse().unwrap();
+        assert_eq!(u, Listen::Uds(PathBuf::from("/tmp/exemcl.sock")));
+        assert_eq!(u.to_string(), "uds:/tmp/exemcl.sock");
+        assert!("http:example".parse::<Listen>().is_err());
+        assert!("tcp:".parse::<Listen>().is_err());
+        assert!("uds:".parse::<Listen>().is_err());
+    }
+
+    #[test]
+    fn net_config_clamps_its_knobs() {
+        let c = NetConfig::new(Listen::Tcp("127.0.0.1:0".into()))
+            .with_max_conns(0)
+            .with_poll(Duration::from_secs(0));
+        assert_eq!(c.max_conns, 1);
+        assert!(c.poll >= Duration::from_millis(1));
+    }
+}

@@ -1,0 +1,467 @@
+//! The transport server: a blocking accept loop in front of a
+//! [`crate::coordinator::Service`] executor.
+//!
+//! One OS thread per connection, bounded by [`NetConfig::max_conns`]
+//! (surplus accepts get an error frame and are dropped). Each
+//! connection thread decodes frames ([`super::codec`]), forwards them
+//! into the executor through a borrowed [`ServiceHandle`], and keeps a
+//! map of the [`RemoteSession`] handles *it* opened:
+//!
+//! * **isolation** — a request naming a sid this connection does not
+//!   own is answered `unknown session`, even if the sid is live in the
+//!   executor's table for another connection;
+//! * **reclamation** — when the socket drops (EOF, error, shutdown),
+//!   the map drops with the thread, and every handle's `Drop` sends
+//!   `Close`: a vanished client can never leak server-side `DminState`
+//!   (`tests/net_wire.rs` asserts `sessions_live` returns to zero).
+//!
+//! The executor is shared by every connection, so `Marginals` frames
+//! arriving from distinct connections land on one queue and fuse into
+//! multi-state gains passes — remote GreeDi partitions batch onto one
+//! backend launch exactly like in-process clients do.
+//!
+//! Shutdown is cooperative: the accept loop and every blocked
+//! connection read wake at [`NetConfig::poll`] to observe a
+//! [`StopHandle`]; [`NetServer::run`] then joins all connection
+//! threads before returning.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::codec::{self, Reply, Request};
+use super::{Listen, NetConfig, NetStream};
+use crate::coordinator::{RemoteSession, ServiceHandle, ServiceMetrics};
+use crate::{log_info, log_warn};
+use crate::{Error, Result};
+
+/// Default `net.max_conns`: connections past this are refused.
+pub const DEFAULT_MAX_CONNS: usize = 64;
+
+/// Cooperative shutdown switch for a running [`NetServer`] — clone it
+/// out before moving the server into its serving thread.
+#[derive(Clone)]
+pub struct StopHandle(Arc<AtomicBool>);
+
+impl StopHandle {
+    /// Ask the server to stop; [`NetServer::run`] returns after the
+    /// next poll tick, once every connection thread has exited.
+    pub fn stop(&self) {
+        self.0.store(true, Ordering::Relaxed);
+    }
+}
+
+enum ListenerKind {
+    Tcp(std::net::TcpListener),
+    #[cfg(unix)]
+    Uds(std::os::unix::net::UnixListener),
+}
+
+/// The accept-loop server. Bind eagerly ([`NetServer::bind`] — the
+/// resolved address is known before serving starts), then block in
+/// [`NetServer::run`].
+pub struct NetServer {
+    listener: ListenerKind,
+    bound: Listen,
+    handle: ServiceHandle,
+    cfg: NetConfig,
+    stop: Arc<AtomicBool>,
+    /// Live connection count (owned by the server so scoped connection
+    /// threads can borrow it).
+    live: AtomicUsize,
+    /// Socket file to unlink on drop (UDS only).
+    cleanup: Option<PathBuf>,
+}
+
+impl NetServer {
+    /// Bind the configured endpoint in front of an executor handle.
+    /// TCP port 0 resolves to an ephemeral port; a **stale** UDS socket
+    /// file (nothing accepting on it) is replaced, a live one is an
+    /// error.
+    pub fn bind(handle: ServiceHandle, cfg: NetConfig) -> Result<Self> {
+        let (listener, bound, cleanup) = match &cfg.listen {
+            Listen::Tcp(addr) => {
+                let l = std::net::TcpListener::bind(addr)?;
+                l.set_nonblocking(true)?;
+                let bound = Listen::Tcp(l.local_addr()?.to_string());
+                (ListenerKind::Tcp(l), bound, None)
+            }
+            #[cfg(unix)]
+            Listen::Uds(path) => {
+                let l = bind_uds(path)?;
+                l.set_nonblocking(true)?;
+                (ListenerKind::Uds(l), Listen::Uds(path.clone()), Some(path.clone()))
+            }
+            #[cfg(not(unix))]
+            Listen::Uds(_) => {
+                return Err(Error::Config(
+                    "unix-domain sockets are not supported on this platform".into(),
+                ))
+            }
+        };
+        Ok(Self {
+            listener,
+            bound,
+            handle,
+            cfg,
+            stop: Arc::new(AtomicBool::new(false)),
+            live: AtomicUsize::new(0),
+            cleanup,
+        })
+    }
+
+    /// The actually-bound endpoint (TCP port 0 resolved).
+    pub fn local_addr(&self) -> &Listen {
+        &self.bound
+    }
+
+    /// A shutdown switch usable from another thread.
+    pub fn stop_handle(&self) -> StopHandle {
+        StopHandle(self.stop.clone())
+    }
+
+    /// The shared service metrics (connection and transport counters
+    /// included).
+    pub fn metrics(&self) -> &ServiceMetrics {
+        self.handle.metrics()
+    }
+
+    /// Serve until [`StopHandle::stop`]: accept, spawn one thread per
+    /// connection (scoped — all joined before this returns), refuse
+    /// accepts past the connection ceiling.
+    pub fn run(&self) -> Result<()> {
+        log_info!("serving {} on {}", self.handle.name(), self.bound);
+        std::thread::scope(|scope| {
+            let live = &self.live;
+            while !self.stop.load(Ordering::Relaxed) {
+                let mut stream = match self.accept_one() {
+                    Ok(Some(s)) => s,
+                    Ok(None) => {
+                        std::thread::sleep(self.cfg.poll.min(Duration::from_millis(50)));
+                        continue;
+                    }
+                    Err(e) => {
+                        log_warn!("accept failed: {e}");
+                        std::thread::sleep(self.cfg.poll.min(Duration::from_millis(50)));
+                        continue;
+                    }
+                };
+                let metrics = self.handle.metrics();
+                if live.load(Ordering::Relaxed) >= self.cfg.max_conns {
+                    metrics.conns_rejected.add(1);
+                    let refusal = Reply::Error(
+                        2,
+                        format!("server at its {}-connection ceiling", self.cfg.max_conns),
+                    );
+                    let _ = write_reply(&mut stream, &refusal, &self.stop, metrics);
+                    continue; // dropping the stream closes it
+                }
+                live.fetch_add(1, Ordering::Relaxed);
+                metrics.conns_opened.add(1);
+                let handle = &self.handle;
+                let stop: &AtomicBool = &self.stop;
+                scope.spawn(move || {
+                    let (rx, tx, frames) = handle_conn(stream, handle, stop);
+                    let metrics = handle.metrics();
+                    live.fetch_sub(1, Ordering::Relaxed);
+                    metrics.conns_closed.add(1);
+                    log_info!("connection closed: {frames} frames, {rx}B in, {tx}B out");
+                });
+            }
+            Ok(())
+        })
+    }
+
+    fn accept_one(&self) -> std::io::Result<Option<NetStream>> {
+        match &self.listener {
+            ListenerKind::Tcp(l) => match l.accept() {
+                Ok((s, _peer)) => {
+                    // BSD-derived platforms hand accepted sockets the
+                    // listener's O_NONBLOCK; force blocking so the
+                    // timeouts below poll instead of busy-spinning
+                    s.set_nonblocking(false)?;
+                    let _ = s.set_nodelay(true);
+                    self.prepare(NetStream::Tcp(s)).map(Some)
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => Ok(None),
+                Err(e) => Err(e),
+            },
+            #[cfg(unix)]
+            ListenerKind::Uds(l) => match l.accept() {
+                Ok((s, _peer)) => {
+                    s.set_nonblocking(false)?;
+                    self.prepare(NetStream::Uds(s)).map(Some)
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => Ok(None),
+                Err(e) => Err(e),
+            },
+        }
+    }
+
+    /// Arm both socket timeouts with the shutdown-poll interval: reads
+    /// *and* writes wake to observe the stop flag, so neither a silent
+    /// nor a stalled peer can pin a connection thread forever.
+    fn prepare(&self, stream: NetStream) -> std::io::Result<NetStream> {
+        stream.set_read_timeout(Some(self.cfg.poll))?;
+        stream.set_write_timeout(Some(self.cfg.poll))?;
+        Ok(stream)
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        if let Some(path) = self.cleanup.take() {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+/// Bind a UDS path, replacing a **stale** socket file (bind fails with
+/// `AddrInUse` but nothing answers a connect) — the common leftover of
+/// a crashed server. A live socket stays untouched.
+#[cfg(unix)]
+fn bind_uds(path: &std::path::Path) -> Result<std::os::unix::net::UnixListener> {
+    use std::os::unix::net::{UnixListener, UnixStream};
+    match UnixListener::bind(path) {
+        Ok(l) => Ok(l),
+        Err(e) if e.kind() == std::io::ErrorKind::AddrInUse => {
+            if UnixStream::connect(path).is_ok() {
+                return Err(Error::Config(format!(
+                    "{} already has a live server",
+                    path.display()
+                )));
+            }
+            std::fs::remove_file(path)?;
+            Ok(UnixListener::bind(path)?)
+        }
+        Err(e) => Err(e.into()),
+    }
+}
+
+/// A `Read` adapter that turns the stream's read timeout into a
+/// shutdown poll: timeouts retry until data arrives or the stop flag
+/// is raised. Framing stays intact — partial reads accumulate in the
+/// codec's own loops.
+struct StopRead<'a> {
+    inner: &'a mut NetStream,
+    stop: &'a AtomicBool,
+}
+
+impl Read for StopRead<'_> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        loop {
+            if self.stop.load(Ordering::Relaxed) {
+                return Err(std::io::Error::other("server shutting down"));
+            }
+            match self.inner.read(buf) {
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    continue
+                }
+                r => return r,
+            }
+        }
+    }
+}
+
+/// Serve one connection to completion. Returns `(rx_bytes, tx_bytes,
+/// frames)` — the per-connection transport accounting (also summed into
+/// [`ServiceMetrics::wire`]'s `net_rx`/`net_tx`). Dropping the session
+/// map at the end closes every session this connection opened.
+fn handle_conn(
+    mut stream: NetStream,
+    handle: &ServiceHandle,
+    stop: &AtomicBool,
+) -> (u64, u64, u64) {
+    let metrics = handle.metrics();
+    let (mut rx_bytes, mut tx_bytes, mut frames) = (0u64, 0u64, 0u64);
+    let mut sessions: HashMap<u64, RemoteSession<'_>> = HashMap::new();
+    loop {
+        let frame = codec::read_frame(&mut StopRead { inner: &mut stream, stop });
+        let (kind, payload) = match frame {
+            Ok(Some(f)) => f,
+            Ok(None) => break, // peer hung up at a frame boundary
+            Err(e) => {
+                // broken framing or shutdown: best-effort diagnosis,
+                // then drop the connection (the stream may be desynced)
+                if let Ok(n) = write_reply(&mut stream, &Reply::from_error(&e), stop, metrics) {
+                    tx_bytes += n;
+                }
+                break;
+            }
+        };
+        let nread = (codec::HEADER_LEN + payload.len()) as u64;
+        rx_bytes += nread;
+        metrics.wire.net_rx.add(nread);
+        frames += 1;
+        let reply = match codec::decode_request(kind, &payload) {
+            Ok(req) => serve_request(req, handle, &mut sessions),
+            Err(e) => {
+                if let Ok(n) = write_reply(&mut stream, &Reply::from_error(&e), stop, metrics) {
+                    tx_bytes += n;
+                }
+                break;
+            }
+        };
+        match write_reply(&mut stream, &reply, stop, metrics) {
+            Ok(n) => tx_bytes += n,
+            Err(_) => break,
+        }
+    }
+    drop(sessions); // Close for every session this connection owned
+    (rx_bytes, tx_bytes, frames)
+}
+
+/// Encode and write one reply: the frame-size ceiling is enforced (an
+/// over-large reply — e.g. `Welcome`/`Export` for a ground set beyond
+/// [`codec::MAX_PAYLOAD`] — degrades to a clear error frame instead of
+/// a frame every client must reject as hostile), the write retries
+/// through its timeout while watching the stop flag, and the bytes are
+/// counted into the transport metrics. Returns the bytes written.
+fn write_reply(
+    stream: &mut NetStream,
+    reply: &Reply,
+    stop: &AtomicBool,
+    metrics: &ServiceMetrics,
+) -> std::io::Result<u64> {
+    let mut buf = codec::encode_reply(reply);
+    if (buf.len() - codec::HEADER_LEN) as u64 > codec::MAX_PAYLOAD {
+        let err = Reply::Error(
+            2,
+            format!(
+                "reply payload of {} bytes exceeds the {}-byte frame ceiling \
+                 (ground set too large for a single frame)",
+                buf.len() - codec::HEADER_LEN,
+                codec::MAX_PAYLOAD
+            ),
+        );
+        buf = codec::encode_reply(&err);
+    }
+    write_all_stop(stream, &buf, stop)?;
+    stream.flush()?;
+    metrics.wire.net_tx.add(buf.len() as u64);
+    Ok(buf.len() as u64)
+}
+
+/// `write_all` with the socket's write timeout doubling as a shutdown
+/// poll: partial writes resume where they left off, so frames stay
+/// intact across timeout wakeups.
+fn write_all_stop(
+    stream: &mut NetStream,
+    mut buf: &[u8],
+    stop: &AtomicBool,
+) -> std::io::Result<()> {
+    while !buf.is_empty() {
+        if stop.load(Ordering::Relaxed) {
+            return Err(std::io::Error::other("server shutting down"));
+        }
+        match stream.write(buf) {
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::WriteZero,
+                    "peer stopped accepting bytes",
+                ))
+            }
+            Ok(k) => buf = &buf[k..],
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::Interrupted
+                ) =>
+            {
+                continue
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+/// Decode-side dispatch: one request in, one reply out. `sessions` is
+/// this connection's ownership map — the isolation boundary.
+fn serve_request<'h>(
+    req: Request,
+    handle: &'h ServiceHandle,
+    sessions: &mut HashMap<u64, RemoteSession<'h>>,
+) -> Reply {
+    fn ok_or<T>(r: Result<T>, f: impl FnOnce(T) -> Reply) -> Reply {
+        match r {
+            Ok(v) => f(v),
+            Err(e) => Reply::from_error(&e),
+        }
+    }
+    fn unknown(sid: u64) -> Reply {
+        Reply::Error(
+            2,
+            format!("unknown session {sid} (closed, evicted or not owned by this connection)"),
+        )
+    }
+    match req {
+        Request::Hello => {
+            let ds = handle.dataset();
+            Reply::Welcome {
+                n: ds.n(),
+                d: ds.d(),
+                l0: handle.l0_sum(),
+                name: handle.name(),
+                init_dmin: handle.init_state().dmin,
+                rows: ds.flat().to_vec(),
+            }
+        }
+        Request::EvalSets { sets } => ok_or(handle.eval_sets(&sets), Reply::Floats),
+        Request::Open { seed } => {
+            let opened = match seed {
+                None => handle.open(),
+                Some((state, l0)) => handle.open_seeded(state, l0),
+            };
+            ok_or(opened, |s| {
+                let sid = s.sid();
+                sessions.insert(sid, s);
+                Reply::Sid(sid)
+            })
+        }
+        Request::Marginals { sid, candidates } => match sessions.get(&sid) {
+            Some(s) => ok_or(s.gains(&candidates), Reply::Floats),
+            None => unknown(sid),
+        },
+        Request::CommitMany { sid, idxs } => match sessions.get_mut(&sid) {
+            // the in-process ack is drained here so a commit failure
+            // lands on *this* reply; the cross-process pipelining is
+            // client-side (it queues the next frame without waiting)
+            Some(s) => ok_or(s.commit_many(&idxs).and_then(|()| s.sync()), |()| Reply::Ack),
+            None => unknown(sid),
+        },
+        Request::Value { sid } => match sessions.get(&sid) {
+            Some(s) => ok_or(s.value(), Reply::Float),
+            None => unknown(sid),
+        },
+        Request::Fork { sid } => {
+            let forked = match sessions.get(&sid) {
+                Some(s) => s.fork(),
+                None => return unknown(sid),
+            };
+            ok_or(forked, |f| {
+                let sid2 = f.sid();
+                sessions.insert(sid2, f);
+                Reply::Sid(sid2)
+            })
+        }
+        Request::Export { sid } => match sessions.get(&sid) {
+            Some(s) => ok_or(s.export(), Reply::State),
+            None => unknown(sid),
+        },
+        Request::Close { sid } => match sessions.remove(&sid) {
+            Some(s) => ok_or(s.close(), |()| Reply::Ack),
+            None => unknown(sid),
+        },
+    }
+}

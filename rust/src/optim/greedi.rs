@@ -254,19 +254,20 @@ impl GreeDi {
 impl Optimizer for GreeDi {
     /// Round 1 sequentially, one partition sub-session at a time:
     /// locally via [`PartitionOracle`] over the session's oracle, or —
-    /// when the session is remote — via seeded server sessions, so the
-    /// per-round traffic stays index-only. Round 2 runs in the caller's
-    /// session.
+    /// when the session is remote (an in-process service **or** an
+    /// out-of-process server over TCP/UDS) — via seeded sibling
+    /// sessions, so the per-round traffic stays index-only. Round 2
+    /// runs in the caller's session.
     fn run(&self, session: &mut Session<'_>) -> Result<OptimResult> {
         session.reset()?;
         let n = session.n();
         let partitions = self.partition(n);
         let mut pool = Vec::new();
         let mut evaluations = 0u64;
-        if let Some(handle) = session.service_handle() {
+        if session.is_remote() {
             for members in partitions {
-                let (seed, l0) = masked_seed(handle.init_state(), &members, n)?;
-                let mut sub = Session::remote_seeded(handle, seed, l0)?;
+                let (seed, l0) = masked_seed(session.init_state(), &members, n)?;
+                let mut sub = session.fresh_seeded(seed, l0)?;
                 let r = Greedy::new(self.k).run_resume(&mut sub)?;
                 evaluations += r.evaluations;
                 pool.extend(r.exemplars);

@@ -190,59 +190,94 @@ impl LazyGreedy {
     }
 }
 
-impl Optimizer for LazyGreedy {
-    fn run(&self, session: &mut Session<'_>) -> Result<OptimResult> {
-        session.reset()?;
+impl LazyGreedy {
+    /// The shared lazy-selection loop: grow the session's summary to
+    /// `self.k` exemplars total. The max-heap of stale upper bounds is
+    /// seeded from gains **against the session's live state** over the
+    /// uncommitted candidates, so a warm start (k → k + Δ) keeps the
+    /// lazy structure — bounds enter fresh for the first new round and
+    /// decay lazily from there — instead of restarting via a full
+    /// re-selection.
+    fn extend(&self, session: &mut Session<'_>) -> Result<OptimResult> {
         let evals0 = session.evaluations();
         let n = session.n();
         let k = check_k(self.k, n)?;
-        let mut curve = Vec::with_capacity(k);
+        let done = session.len();
+        let rounds = k.saturating_sub(done);
+        let mut curve = Vec::with_capacity(rounds);
 
-        // round 0: gains over everything seed the heap
-        let all: Vec<usize> = (0..n).collect();
-        let gains = session.gains(&all)?;
-        let mut heap: BinaryHeap<HeapEntry> = gains
-            .iter()
-            .enumerate()
-            .map(|(i, &g)| HeapEntry { bound: g, idx: i, round: 0 })
-            .collect();
+        if rounds > 0 {
+            let mut committed = vec![false; n];
+            for &e in session.exemplars() {
+                committed[e] = true;
+            }
+            let candidates: Vec<usize> = (0..n).filter(|&i| !committed[i]).collect();
+            if !candidates.is_empty() {
+                // seed the heap: one batched gains pass over the pool
+                let gains = session.gains(&candidates)?;
+                let mut heap: BinaryHeap<HeapEntry> = candidates
+                    .iter()
+                    .zip(&gains)
+                    .map(|(&i, &g)| HeapEntry { bound: g, idx: i, round: 0 })
+                    .collect();
 
-        for round in 0..k {
-            loop {
-                // pop up to `batch` stale entries; fresh top wins outright
-                let top = match heap.pop() {
-                    Some(t) => t,
-                    None => break,
-                };
-                if top.round == round {
-                    session.commit(top.idx)?;
-                    curve.push(session.value()?);
-                    break;
-                }
-                let mut stale = vec![top];
-                while stale.len() < self.batch {
-                    match heap.peek() {
-                        Some(e) if e.round != round => stale.push(heap.pop().unwrap()),
-                        _ => break,
+                for round in 0..rounds {
+                    loop {
+                        // pop up to `batch` stale entries; fresh top wins
+                        let top = match heap.pop() {
+                            Some(t) => t,
+                            None => break,
+                        };
+                        if top.round == round {
+                            session.commit(top.idx)?;
+                            curve.push(session.value()?);
+                            break;
+                        }
+                        let mut stale = vec![top];
+                        while stale.len() < self.batch {
+                            match heap.peek() {
+                                Some(e) if e.round != round => stale.push(heap.pop().unwrap()),
+                                _ => break,
+                            }
+                        }
+                        let idxs: Vec<usize> = stale.iter().map(|e| e.idx).collect();
+                        let fresh = session.gains(&idxs)?;
+                        for (e, g) in idxs.iter().zip(fresh) {
+                            heap.push(HeapEntry { bound: g, idx: *e, round });
+                        }
+                    }
+                    if curve.len() <= round {
+                        break; // heap exhausted
                     }
                 }
-                let idxs: Vec<usize> = stale.iter().map(|e| e.idx).collect();
-                let fresh = session.gains(&idxs)?;
-                for (e, g) in idxs.iter().zip(fresh) {
-                    heap.push(HeapEntry { bound: g, idx: *e, round });
-                }
-            }
-            if curve.len() <= round {
-                break; // heap exhausted
             }
         }
 
+        let value = match curve.last() {
+            Some(&v) => v,
+            // warm no-op or empty pool: the session's live value
+            None => session.value()?,
+        };
         Ok(OptimResult {
-            value: *curve.last().unwrap_or(&0.0),
+            value,
             exemplars: session.exemplars().to_vec(),
             curve,
             evaluations: session.evaluations() - evals0,
         })
+    }
+}
+
+impl Optimizer for LazyGreedy {
+    fn run(&self, session: &mut Session<'_>) -> Result<OptimResult> {
+        session.reset()?;
+        self.extend(session)
+    }
+
+    /// Warm start: keep the session's summary and lazily select until
+    /// it holds `k` exemplars total, re-seeding the bound heap from the
+    /// live dmin state (no re-selection of the existing summary).
+    fn run_resume(&self, session: &mut Session<'_>) -> Result<OptimResult> {
+        self.extend(session)
     }
 
     fn name(&self) -> String {
@@ -273,18 +308,34 @@ impl StochasticGreedy {
     }
 }
 
-impl Optimizer for StochasticGreedy {
-    fn run(&self, session: &mut Session<'_>) -> Result<OptimResult> {
-        session.reset()?;
+impl StochasticGreedy {
+    /// The shared sampling loop: grow the session's summary to `k`
+    /// exemplars total. On a warm start the **sample state is
+    /// preserved** by replaying the draws a cold run would have
+    /// consumed selecting the existing summary (cold round `i` samples
+    /// from the `n - i` unselected points, regardless of *which* points
+    /// they are), so resuming a k-run at j exemplars draws exactly the
+    /// samples cold rounds j..k would have drawn — same trajectory,
+    /// none of the first j rounds' evaluations.
+    fn extend(&self, session: &mut Session<'_>) -> Result<OptimResult> {
         let evals0 = session.evaluations();
         let n = session.n();
         let k = check_k(self.k, n)?;
         let mut rng = Rng::new(self.seed);
-        let mut selected = vec![false; n];
-        let mut curve = Vec::with_capacity(k);
         let sample = self.sample_size(n, k);
+        let mut selected = vec![false; n];
+        for &e in session.exemplars() {
+            selected[e] = true;
+        }
+        let done = session.len().min(k);
+        for i in 0..done {
+            // replay: the draw depends only on the pool *size*
+            let pool_len = n.saturating_sub(i).max(1);
+            let _ = rng.sample_indices(pool_len, sample.min(pool_len));
+        }
+        let mut curve = Vec::with_capacity(k - done);
 
-        for _ in 0..k {
+        for _ in done..k {
             let pool: Vec<usize> = (0..n).filter(|&i| !selected[i]).collect();
             if pool.is_empty() {
                 break;
@@ -303,12 +354,32 @@ impl Optimizer for StochasticGreedy {
             curve.push(session.value()?);
         }
 
+        let value = match curve.last() {
+            Some(&v) => v,
+            // warm no-op or exhausted pool: the session's live value
+            None => session.value()?,
+        };
         Ok(OptimResult {
-            value: *curve.last().unwrap_or(&0.0),
+            value,
             exemplars: session.exemplars().to_vec(),
             curve,
             evaluations: session.evaluations() - evals0,
         })
+    }
+}
+
+impl Optimizer for StochasticGreedy {
+    fn run(&self, session: &mut Session<'_>) -> Result<OptimResult> {
+        session.reset()?;
+        self.extend(session)
+    }
+
+    /// Warm start: keep the session's summary, realign the RNG stream
+    /// past the rounds that produced it, and sample-select the rest —
+    /// a session holding a k-run's first j exemplars resumes onto the
+    /// identical trajectory.
+    fn run_resume(&self, session: &mut Session<'_>) -> Result<OptimResult> {
+        self.extend(session)
     }
 
     fn name(&self) -> String {
@@ -404,6 +475,69 @@ mod tests {
         let r2 = Greedy::new(4).run(&mut session).unwrap();
         assert_eq!(r2.exemplars, r.exemplars);
         assert_eq!(session.len(), 4);
+    }
+
+    /// LazyGreedy's native warm start: resuming a 4-exemplar summary to
+    /// k = 6 lands on the cold 6-run's trajectory (lazy selection is
+    /// deterministic) while re-seeding bounds only over the remaining
+    /// pool — strictly less work than the cold run.
+    #[test]
+    fn lazy_run_resume_extends_without_reselecting() {
+        let o = oracle();
+        let cold = LazyGreedy::new(6).run(&mut Session::over(&o)).unwrap();
+
+        let mut session = Session::over(&o);
+        let first = LazyGreedy::new(4).run(&mut session).unwrap();
+        assert_eq!(first.exemplars[..], cold.exemplars[..4], "lazy prefix property");
+        let resumed = LazyGreedy::new(6).run_resume(&mut session).unwrap();
+        assert_eq!(resumed.exemplars, cold.exemplars);
+        assert_eq!(resumed.value, cold.value);
+        assert_eq!(resumed.curve.len(), 2, "only the two new rounds");
+        assert!(
+            resumed.evaluations < cold.evaluations,
+            "resume re-did the run: {} vs {}",
+            resumed.evaluations,
+            cold.evaluations
+        );
+        // resuming at k is a no-op with the live value
+        let noop = LazyGreedy::new(6).run_resume(&mut session).unwrap();
+        assert_eq!(noop.exemplars, cold.exemplars);
+        assert_eq!(noop.evaluations, 0);
+        assert_eq!(noop.value, session.value().unwrap());
+        // a plain run still restarts from scratch
+        let rerun = LazyGreedy::new(4).run(&mut session).unwrap();
+        assert_eq!(rerun.exemplars, first.exemplars);
+    }
+
+    /// StochasticGreedy's native warm start: the RNG stream is realigned
+    /// past the rounds that produced the summary, so a session holding a
+    /// cold 6-run's first 4 exemplars resumes onto the identical
+    /// trajectory (same samples, same picks).
+    #[test]
+    fn stochastic_run_resume_realigns_the_sample_stream() {
+        let o = oracle();
+        let sg = StochasticGreedy::new(6, 0.1, 17);
+        let cold = sg.run(&mut Session::over(&o)).unwrap();
+
+        let mut session = Session::over(&o);
+        session.commit_many(&cold.exemplars[..4]).unwrap();
+        let resumed = sg.run_resume(&mut session).unwrap();
+        assert_eq!(resumed.exemplars, cold.exemplars, "resume left the cold trajectory");
+        assert_eq!(resumed.value.to_bits(), cold.value.to_bits());
+        assert_eq!(resumed.curve.len(), 2);
+        assert!(
+            resumed.evaluations < cold.evaluations,
+            "resume re-did the run: {} vs {}",
+            resumed.evaluations,
+            cold.evaluations
+        );
+        // resuming at k is a no-op with the live value
+        let noop = sg.run_resume(&mut session).unwrap();
+        assert_eq!(noop.exemplars, cold.exemplars);
+        assert_eq!(noop.evaluations, 0);
+        // a plain run still restarts (and reproduces the cold result)
+        let rerun = sg.run(&mut session).unwrap();
+        assert_eq!(rerun.exemplars, cold.exemplars);
     }
 
     /// Warm start: extending k → k + Δ through `run_resume` selects the

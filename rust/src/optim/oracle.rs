@@ -28,7 +28,7 @@ use crate::{Error, Result};
 /// Cached optimizer state: for every ground point the squared distance to
 /// its nearest committed exemplar, with the auxiliary exemplar `e0 = 0`
 /// folded in (`dmin_i <= |v_i|^2` always).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct DminState {
     /// Per-ground-point minimum squared distance.
     pub dmin: Vec<f32>,
@@ -58,6 +58,18 @@ impl DminState {
     pub fn is_empty(&self) -> bool {
         self.exemplars.is_empty()
     }
+}
+
+/// One marginal-gains request in a fused multi-state batch: a state and
+/// the candidates to score against it. The coordinator's executor
+/// builds these when `Marginals` requests from distinct sessions (e.g.
+/// concurrent remote GreeDi partitions) are queued together, so one
+/// backend launch serves all of them ([`Oracle::marginal_gains_multi`]).
+pub struct GainsJob<'a> {
+    /// The session state the candidates are scored against.
+    pub state: &'a DminState,
+    /// Candidate indices to score.
+    pub candidates: &'a [usize],
 }
 
 /// Batched evaluation oracle for one ground set `V`.
@@ -91,6 +103,16 @@ pub trait Oracle {
     /// Marginal gains `f(S ∪ {c}) - f(S)` for every candidate index,
     /// against the cached state (O(n·m·d) — the optimizer-aware path).
     fn marginal_gains(&self, state: &DminState, candidates: &[usize]) -> Result<Vec<f32>>;
+
+    /// Marginal gains for several **independent states** in one fused
+    /// pass — the multi-session analogue of candidate batching. Results
+    /// are per job, in job order, so one malformed job cannot fail its
+    /// batch-mates. The default serves jobs one by one; the pooled CPU
+    /// oracle overrides it with a single worker-pool launch whose tiles
+    /// span every job (one fan-out instead of one per session).
+    fn marginal_gains_multi(&self, jobs: &[GainsJob<'_>]) -> Vec<Result<Vec<f32>>> {
+        jobs.iter().map(|j| self.marginal_gains(j.state, j.candidates)).collect()
+    }
 
     /// Commit exemplar `idx` into the state (lowers `dmin` pointwise).
     fn commit(&self, state: &mut DminState, idx: usize) -> Result<()>;
@@ -140,6 +162,10 @@ impl<O: Oracle + ?Sized> Oracle for Box<O> {
 
     fn marginal_gains(&self, state: &DminState, candidates: &[usize]) -> Result<Vec<f32>> {
         (**self).marginal_gains(state, candidates)
+    }
+
+    fn marginal_gains_multi(&self, jobs: &[GainsJob<'_>]) -> Vec<Result<Vec<f32>>> {
+        (**self).marginal_gains_multi(jobs)
     }
 
     fn commit(&self, state: &mut DminState, idx: usize) -> Result<()> {

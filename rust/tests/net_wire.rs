@@ -1,0 +1,413 @@
+//! The out-of-process transport end-to-end: loopback TCP/UDS greedy
+//! runs bit-identical to the in-process session path, per-connection
+//! session ownership (isolation + reclamation on socket drop), the
+//! connection ceiling, transport-byte accounting against the modeled
+//! wire bytes, and pipelined commits over a real socket. Pure CPU.
+
+use std::time::Duration;
+
+use exemcl::coordinator::{Service, ServiceMetrics};
+#[cfg(unix)]
+use exemcl::cpu::build_cpu_oracle;
+use exemcl::cpu::SingleThread;
+use exemcl::data::synth::GaussianBlobs;
+use exemcl::data::Dataset;
+use exemcl::engine::{Backend, Engine, Session};
+use exemcl::net::{codec, Listen, NetClient, NetConfig, NetServer, StopHandle};
+use exemcl::optim::{
+    GreeDi, Greedy, LazyGreedy, Optimizer, Oracle, Salsa, SieveStreaming, SieveStreamingPP,
+    StochasticGreedy, ThreeSieves,
+};
+#[cfg(unix)]
+use exemcl::scalar::Dtype;
+
+fn blobs(n: usize) -> Dataset {
+    GaussianBlobs::new(4, 6, 0.3).generate(n, 29)
+}
+
+/// A serving stack for one test: coordinator service + net server on a
+/// loopback endpoint, torn down (stop, join, shutdown) on drop.
+struct TestServer {
+    svc: Option<Service>,
+    addr: Listen,
+    stop: StopHandle,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl TestServer {
+    fn spawn_with<F, O>(make_oracle: F, listen: Listen, max_conns: usize) -> Self
+    where
+        F: FnOnce() -> exemcl::Result<O> + Send + 'static,
+        O: Oracle + 'static,
+    {
+        let svc = Service::spawn(make_oracle, 32).unwrap();
+        let cfg =
+            NetConfig::new(listen).with_max_conns(max_conns).with_poll(Duration::from_millis(20));
+        let server = NetServer::bind(svc.handle(), cfg).unwrap();
+        let addr = server.local_addr().clone();
+        let stop = server.stop_handle();
+        let join = std::thread::spawn(move || server.run().unwrap());
+        Self { svc: Some(svc), addr, stop, join: Some(join) }
+    }
+
+    fn tcp<F, O>(make_oracle: F) -> Self
+    where
+        F: FnOnce() -> exemcl::Result<O> + Send + 'static,
+        O: Oracle + 'static,
+    {
+        Self::spawn_with(make_oracle, Listen::Tcp("127.0.0.1:0".into()), 16)
+    }
+
+    fn metrics(&self) -> &ServiceMetrics {
+        self.svc.as_ref().expect("live service").metrics()
+    }
+
+    /// Stop the accept loop and join every connection thread — after
+    /// this, the transport byte counters are final.
+    fn stop_and_join(&mut self) {
+        self.stop.stop();
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for TestServer {
+    fn drop(&mut self) {
+        self.stop_and_join();
+        if let Some(svc) = self.svc.take() {
+            svc.shutdown();
+        }
+    }
+}
+
+#[cfg(unix)]
+fn uds_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("exemcl-net-{}-{tag}.sock", std::process::id()))
+}
+
+fn wait_until(mut f: impl FnMut() -> bool) -> bool {
+    for _ in 0..500 {
+        if f() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    f()
+}
+
+/// The acceptance criterion, UDS flavor: a greedy run through
+/// `Backend::Uds` against a serving process is bit-identical — result,
+/// every curve point, and the exported dmin state — to the local
+/// session path on cpu-st, for f32/f16/bf16.
+#[cfg(unix)]
+#[test]
+fn uds_greedy_bit_identical_to_local_across_dtypes() {
+    let ds = blobs(150);
+    for dtype in Dtype::all() {
+        let local_oracle = build_cpu_oracle(ds.clone(), false, 0, dtype);
+        let local = Greedy::new(6).run(&mut Session::over(local_oracle.as_ref())).unwrap();
+
+        let path = uds_path(&format!("bits-{dtype}"));
+        let _ = std::fs::remove_file(&path);
+        let ds2 = ds.clone();
+        let server = TestServer::spawn_with(
+            move || Ok(build_cpu_oracle(ds2, false, 0, dtype)),
+            Listen::Uds(path.clone()),
+            16,
+        );
+
+        let engine = Engine::builder()
+            .backend(Backend::Uds { path: path.to_string_lossy().into_owned() })
+            .build()
+            .unwrap();
+        assert!(engine.name().starts_with("net["), "{}", engine.name());
+        assert_eq!(engine.dataset().flat(), ds.flat(), "dataset mirrored bit-for-bit");
+        let mut session = engine.session().unwrap();
+        let remote = Greedy::new(6).run(&mut session).unwrap();
+
+        assert_eq!(remote.exemplars, local.exemplars, "{dtype}: exemplar sequence");
+        assert_eq!(remote.value.to_bits(), local.value.to_bits(), "{dtype}: f(S) bits");
+        for (i, (a, b)) in remote.curve.iter().zip(&local.curve).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{dtype}: curve[{i}] bits");
+        }
+        assert_eq!(remote.evaluations, local.evaluations, "{dtype}: evaluation count");
+        let server_state = session.export_state().unwrap();
+        let mut local_state = local_oracle.init_state();
+        local_oracle.commit_many(&mut local_state, &local.exemplars).unwrap();
+        assert_eq!(
+            server_state.dmin.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            local_state.dmin.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "{dtype}: dmin bits"
+        );
+        drop(session);
+        drop(engine);
+        drop(server);
+    }
+}
+
+/// The acceptance criterion, TCP flavor at k = 32 — and the
+/// reclamation half: once the client socket is gone, every server-side
+/// session it owned is closed (`sessions_live` returns to zero).
+#[test]
+fn tcp_greedy_k32_bit_identical_and_drop_reclaims_sessions() {
+    let ds = blobs(300);
+    let local_oracle = SingleThread::new(ds.clone());
+    let local = Greedy::new(32).run(&mut Session::over(&local_oracle)).unwrap();
+
+    let ds2 = ds.clone();
+    let server = TestServer::tcp(move || Ok(SingleThread::new(ds2)));
+    let engine =
+        Engine::builder().backend(Backend::Tcp { addr: addr_of(&server.addr) }).build().unwrap();
+
+    let mut session = engine.session().unwrap();
+    let remote = Greedy::new(32).run(&mut session).unwrap();
+    assert_eq!(remote.exemplars, local.exemplars);
+    assert_eq!(remote.value.to_bits(), local.value.to_bits());
+    assert_eq!(remote.curve.len(), 32);
+    for (a, b) in remote.curve.iter().zip(&local.curve) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    let server_state = session.export_state().unwrap();
+    let mut want = local_oracle.init_state();
+    local_oracle.commit_many(&mut want, &local.exemplars).unwrap();
+    assert_eq!(
+        server_state.dmin.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        want.dmin.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+    );
+
+    // pile up a few more sessions, then vanish without closing anything
+    let extra_a = session.fork().unwrap();
+    let extra_b = session.fresh().unwrap();
+    assert!(server.metrics().sessions_live.get() >= 3);
+    // leak-style drop: the Session drops queue Close frames, but the
+    // socket closing right after is what the server must survive
+    drop(extra_a);
+    drop(extra_b);
+    drop(session);
+    drop(engine);
+    assert!(
+        wait_until(|| server.metrics().sessions_live.get() == 0),
+        "socket drop left {} sessions live",
+        server.metrics().sessions_live.get()
+    );
+}
+
+fn addr_of(listen: &Listen) -> String {
+    match listen {
+        Listen::Tcp(a) => a.clone(),
+        Listen::Uds(p) => p.to_string_lossy().into_owned(),
+    }
+}
+
+/// An abrupt disconnect — no `Close`, no clean shutdown, just a dead
+/// socket mid-protocol — reclaims every session the connection owned.
+#[test]
+fn abrupt_socket_drop_reclaims_sessions() {
+    use std::io::Write;
+    let ds = blobs(80);
+    let server = TestServer::tcp(move || Ok(SingleThread::new(ds)));
+    let addr = addr_of(&server.addr);
+
+    let mut stream = std::net::TcpStream::connect(&addr).unwrap();
+    stream.write_all(&codec::encode_request(&codec::Request::Hello)).unwrap();
+    let (kind, payload) = codec::read_frame(&mut stream).unwrap().unwrap();
+    assert!(matches!(codec::decode_reply(kind, &payload).unwrap(), codec::Reply::Welcome { .. }));
+    for _ in 0..2 {
+        stream.write_all(&codec::encode_request(&codec::Request::Open { seed: None })).unwrap();
+        let (kind, payload) = codec::read_frame(&mut stream).unwrap().unwrap();
+        assert!(matches!(codec::decode_reply(kind, &payload).unwrap(), codec::Reply::Sid(_)));
+    }
+    assert!(wait_until(|| server.metrics().sessions_live.get() == 2));
+
+    drop(stream); // hang up mid-session, no Close
+    assert!(
+        wait_until(|| server.metrics().sessions_live.get() == 0),
+        "abrupt drop left {} sessions live",
+        server.metrics().sessions_live.get()
+    );
+    assert!(server.metrics().sessions_closed.get() >= 2);
+}
+
+/// Sessions are connection-scoped: another connection naming a foreign
+/// sid gets `unknown session`, and the owner is unaffected.
+#[test]
+fn sessions_are_isolated_per_connection() {
+    use std::io::Write;
+    let ds = blobs(60);
+    let server = TestServer::tcp(move || Ok(SingleThread::new(ds)));
+    let addr = addr_of(&server.addr);
+
+    let owner = NetClient::connect(&Listen::Tcp(addr.clone())).unwrap();
+    let mut s = owner.open().unwrap();
+    s.commit_many(&[3]).unwrap();
+    s.sync().unwrap();
+
+    let mut thief = std::net::TcpStream::connect(&addr).unwrap();
+    thief.write_all(&codec::encode_request(&codec::Request::Hello)).unwrap();
+    let (k, p) = codec::read_frame(&mut thief).unwrap().unwrap();
+    assert!(matches!(codec::decode_reply(k, &p).unwrap(), codec::Reply::Welcome { .. }));
+    let steal = codec::Request::Marginals { sid: s.sid(), candidates: vec![0, 1] };
+    thief.write_all(&codec::encode_request(&steal)).unwrap();
+    let (k, p) = codec::read_frame(&mut thief).unwrap().unwrap();
+    match codec::decode_reply(k, &p).unwrap() {
+        codec::Reply::Error(_, msg) => {
+            assert!(msg.contains("unknown session"), "got: {msg}")
+        }
+        other => panic!("foreign sid must be rejected, got {other:?}"),
+    }
+    // the owner still works
+    assert!(s.gains(&[3]).unwrap()[0].abs() < 1e-6, "re-adding an exemplar gains 0");
+}
+
+/// `net.max_conns`: surplus connections are answered with an error
+/// frame and dropped; capacity freed by a disconnect is reusable.
+#[test]
+fn max_conns_ceiling_rejects_surplus_connections() {
+    let ds = blobs(40);
+    let server = TestServer::spawn_with(
+        move || Ok(SingleThread::new(ds)),
+        Listen::Tcp("127.0.0.1:0".into()),
+        1,
+    );
+    let addr = Listen::Tcp(addr_of(&server.addr));
+
+    let first = NetClient::connect(&addr).unwrap();
+    assert!(wait_until(|| server.metrics().conns_live() == 1));
+    // the refusal races the TCP teardown: depending on timing the
+    // client sees the error frame or a reset — either way it must fail
+    let refused = NetClient::connect(&addr);
+    assert!(refused.is_err(), "second connection must be refused at max_conns = 1");
+    assert!(wait_until(|| server.metrics().conns_rejected.get() == 1));
+
+    drop(first);
+    assert!(wait_until(|| server.metrics().conns_live() == 0));
+    let again = NetClient::connect(&addr);
+    let err = again.as_ref().err().map(|e| e.to_string());
+    assert!(again.is_ok(), "freed capacity must be reusable: {err:?}");
+}
+
+/// The satellite assertion: codec-measured transport bytes equal the
+/// wire model's bytes for `Marginals`/`CommitMany` — per request via
+/// the client's counters, and in total (rx ≡ tx across the whole
+/// connection) once the server has been joined.
+#[test]
+fn transport_bytes_match_the_modeled_wire_bytes() {
+    let ds = blobs(100);
+    let mut server = TestServer::tcp(move || Ok(SingleThread::new(ds)));
+    let addr = Listen::Tcp(addr_of(&server.addr));
+    let m = server.svc.as_ref().unwrap().metrics();
+
+    let client = NetClient::connect(&addr).unwrap();
+    let mut s = client.open().unwrap();
+
+    // Marginals: frame bytes == modeled bytes, request and reply
+    let cands: Vec<usize> = (0..32).collect();
+    let (tx0, rx0) = (client.tx_bytes(), client.rx_bytes());
+    let (mq0, mr0) = (m.wire.marginals_req.get(), m.wire.marginals_reply.get());
+    s.gains(&cands).unwrap();
+    assert_eq!(client.tx_bytes() - tx0, 16 + 8 + 8 * cands.len() as u64);
+    assert_eq!(client.tx_bytes() - tx0, m.wire.marginals_req.get() - mq0);
+    assert_eq!(client.rx_bytes() - rx0, 16 + 4 * cands.len() as u64);
+    assert_eq!(client.rx_bytes() - rx0, m.wire.marginals_reply.get() - mr0);
+
+    // CommitMany: pipelined, settled by sync(); frame == model
+    let (tx0, rx0) = (client.tx_bytes(), client.rx_bytes());
+    let (cq0, cr0) = (m.wire.commit_req.get(), m.wire.commit_reply.get());
+    s.commit_many(&[1, 4, 9]).unwrap();
+    s.sync().unwrap();
+    assert_eq!(client.tx_bytes() - tx0, 16 + 8 + 8 * 3);
+    assert_eq!(client.tx_bytes() - tx0, m.wire.commit_req.get() - cq0);
+    assert_eq!(client.rx_bytes() - rx0, 16);
+    assert_eq!(client.rx_bytes() - rx0, m.wire.commit_reply.get() - cr0);
+
+    // connection totals: what the client wrote is what the server read
+    // (headers included), and vice versa — assert after the connection
+    // and the accept loop are fully down
+    s.close().unwrap();
+    let (tx_total, rx_total) = (client.tx_bytes(), client.rx_bytes());
+    drop(client);
+    assert!(wait_until(|| server.metrics().conns_live() == 0));
+    server.stop_and_join();
+    let m = server.metrics();
+    assert_eq!(m.wire.net_rx.get(), tx_total, "server rx == client tx");
+    assert_eq!(m.wire.net_tx.get(), rx_total, "server tx == client rx");
+}
+
+/// Pipelined commits over a real socket: the call returns before the
+/// ack, a server-side rejection surfaces on the next synchronous verb,
+/// and the connection keeps working afterwards.
+#[test]
+fn pipelined_commit_errors_surface_on_the_next_verb() {
+    let ds = blobs(50);
+    let server = TestServer::tcp(move || Ok(SingleThread::new(ds)));
+    let client = NetClient::connect(&Listen::Tcp(addr_of(&server.addr))).unwrap();
+
+    let mut s = client.open().unwrap();
+    assert!(s.commit_many(&[9999]).is_ok(), "the ack is not awaited inline");
+    let err = s.gains(&[0]).unwrap_err();
+    assert!(err.to_string().contains("out of range"), "got: {err}");
+    // the connection and session survive a rejected commit
+    s.reset().unwrap();
+    s.commit_many(&[3]).unwrap();
+    s.sync().unwrap();
+    assert_eq!(s.export().unwrap().exemplars, vec![3]);
+    s.close().unwrap();
+
+    // failures are attributed to the session that committed, not to
+    // whichever session sharing the socket speaks next
+    let mut a = client.open().unwrap();
+    let b = client.open().unwrap();
+    a.commit_many(&[9999]).unwrap();
+    assert!(b.gains(&[0]).is_ok(), "a bystander session must not absorb A's failure");
+    let err = a.gains(&[0]).unwrap_err();
+    assert!(err.to_string().contains("out of range"), "got: {err}");
+}
+
+/// Every optimizer — including GreeDi's seeded partition sessions and
+/// the sieves' server-side forks — runs unchanged against a remote
+/// engine.
+#[test]
+fn all_optimizers_run_against_a_remote_engine() {
+    let ds = blobs(90);
+    let server = TestServer::tcp(move || Ok(SingleThread::new(ds)));
+    let engine =
+        Engine::builder().backend(Backend::Tcp { addr: addr_of(&server.addr) }).build().unwrap();
+
+    let optimizers: Vec<Box<dyn Optimizer>> = vec![
+        Box::new(Greedy::new(3)),
+        Box::new(LazyGreedy::new(3)),
+        Box::new(StochasticGreedy::new(3, 0.1, 7)),
+        Box::new(GreeDi::new(3, 2, 5)),
+        Box::new(SieveStreaming::new(3, 0.25, 7)),
+        Box::new(SieveStreamingPP::new(3, 0.25, 7)),
+        Box::new(ThreeSieves::new(3, 0.25, 50, 7)),
+        Box::new(Salsa::new(3, 0.3, 7)),
+    ];
+    for opt in optimizers {
+        let r = engine.run(opt.as_ref()).unwrap_or_else(|e| panic!("{}: {e}", opt.name()));
+        assert!(r.exemplars.len() <= 3, "{}: {:?}", opt.name(), r.exemplars);
+    }
+    // nothing leaked: when the engine goes away, so do its sessions
+    drop(engine);
+    assert!(wait_until(|| server.metrics().sessions_live.get() == 0));
+}
+
+/// A remote GreeDi matches the in-process service GreeDi exactly: the
+/// masked partition seed crosses the wire bit-for-bit and the
+/// seeded-session warm start behaves identically.
+#[test]
+fn remote_greedi_matches_in_process_service_greedi() {
+    let ds = blobs(120);
+    let svc = Service::over(SingleThread::new(ds.clone()), 16).unwrap();
+    let h = svc.handle();
+    let want = GreeDi::new(4, 3, 9).run(&mut Session::remote(&h).unwrap()).unwrap();
+    svc.shutdown();
+
+    let server = TestServer::tcp(move || Ok(SingleThread::new(ds)));
+    let engine =
+        Engine::builder().backend(Backend::Tcp { addr: addr_of(&server.addr) }).build().unwrap();
+    let got = engine.run(&GreeDi::new(4, 3, 9)).unwrap();
+    assert_eq!(got.exemplars, want.exemplars);
+    assert_eq!(got.value.to_bits(), want.value.to_bits());
+}

@@ -175,6 +175,70 @@ fn queue_full_blocks_producers_until_the_executor_drains() {
     svc.shutdown();
 }
 
+/// Marginals from distinct sessions that queue up while the executor is
+/// pinned coalesce into one fused multi-state gains pass — and every
+/// session still gets gains against exactly its own state.
+#[test]
+fn queued_marginals_from_distinct_sessions_fuse_into_one_pass() {
+    let ds = blobs(120);
+    let (oracle, gate) = GatedOracle::new(ds.clone());
+    let svc = Service::over(oracle, 16).unwrap();
+    let h = svc.handle();
+
+    // two sessions with different summaries, opened while the gate is
+    // irrelevant (only eval_sets blocks on it)
+    let mut a = h.open().unwrap();
+    a.commit_many(&[3]).unwrap();
+    let mut b = h.open().unwrap();
+    b.commit_many(&[9]).unwrap();
+    a.sync().unwrap();
+    b.sync().unwrap();
+
+    // pin the executor on a gated eval_sets...
+    let pin = {
+        let h = svc.handle();
+        std::thread::spawn(move || h.eval_sets(&[vec![0, 1]]).unwrap())
+    };
+    let mut waited = 0;
+    while svc.handle().queue_depth() > 0 && waited < 500 {
+        std::thread::sleep(Duration::from_millis(5));
+        waited += 1;
+    }
+    // ...queue gains for both sessions behind it, then release: the two
+    // marginals drain together and fuse into one multi-state pass
+    let cands: Vec<usize> = (0..24).collect();
+    let (ga, gb) = std::thread::scope(|scope| {
+        let ca = cands.clone();
+        let cb = cands.clone();
+        let ja = scope.spawn(move || a.gains(&ca).unwrap());
+        let jb = scope.spawn(move || b.gains(&cb).unwrap());
+        let mut waited = 0;
+        while svc.handle().queue_depth() < 2 && waited < 500 {
+            std::thread::sleep(Duration::from_millis(5));
+            waited += 1;
+        }
+        open_gate(&gate);
+        (ja.join().unwrap(), jb.join().unwrap())
+    });
+    pin.join().unwrap();
+
+    assert!(
+        svc.metrics().marginals_coalesced.get() >= 1,
+        "queued marginals should have fused (coalesced = {})",
+        svc.metrics().marginals_coalesced.get()
+    );
+    // per-session correctness: gains match a direct oracle threading
+    // each state independently
+    let direct = SingleThread::new(ds);
+    let mut sa = direct.init_state();
+    direct.commit(&mut sa, 3).unwrap();
+    let mut sb = direct.init_state();
+    direct.commit(&mut sb, 9).unwrap();
+    assert_eq!(ga, direct.marginal_gains(&sa, &cands).unwrap());
+    assert_eq!(gb, direct.marginal_gains(&sb, &cands).unwrap());
+    svc.shutdown();
+}
+
 /// Shutdown with live handles: in-flight work finishes, later requests
 /// fail loudly, and the executor thread is joined (no leak, no hang).
 #[test]

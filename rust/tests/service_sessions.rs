@@ -86,7 +86,10 @@ fn close_and_ttl_eviction_reclaim_sessions() {
     // `idle` has been silent past the TTL; its next request must fail
     let err = idle.gains(&[0]).unwrap_err();
     assert!(err.to_string().contains("unknown session"), "got: {err}");
-    assert!(idle.commit_many(&[1]).is_err());
+    // commits are pipelined: the send succeeds, the rejection surfaces
+    // at the next sync point
+    let err = idle.commit_many(&[1]).and_then(|()| idle.sync()).unwrap_err();
+    assert!(err.to_string().contains("unknown session"), "got: {err}");
     assert!(svc.metrics().sessions_evicted.get() >= 1);
     // the busy session is untouched
     busy.commit_many(&[3]).unwrap();
@@ -218,7 +221,10 @@ fn greedy_run_traffic_is_exactly_index_only() {
 /// The acceptance criterion: greedy through a server-resident session
 /// is **bit-identical** to the local-session path on cpu-st, for every
 /// dtype — same kernels, same state, same reduction order, different
-/// state residency.
+/// state residency. This also pins the pipelined `CommitMany` path:
+/// remote sessions no longer wait for commit acks, and the observable
+/// greedy trajectory (exemplars, every curve point, dmin bits) must be
+/// unchanged by the pipelining.
 #[test]
 fn session_greedy_bit_identical_to_local_across_dtypes() {
     let ds = blobs(150);
