@@ -1,0 +1,219 @@
+//! SIMD dispatch ablation: marginal-gains throughput of every kernel
+//! path the host can run (scalar reference, AVX2+FMA, AVX-512F, NEON)
+//! at the issue's target shape — n=50k, d=32, |C|=256 — for all three
+//! storage dtypes, against a measured memcpy bandwidth baseline.
+//!
+//! The kernel under test is the fused `gains_tile` driver called
+//! directly with an explicitly resolved kernel set, so the measurement
+//! isolates the micro-kernel (no worker pool, no oracle dispatch).
+//! Columns: wall time, candidate-pair throughput, achieved ground-set
+//! streaming bandwidth (storage bytes — the half dtypes move half the
+//! ground traffic of f32 — plus the re-streamed candidate panels), and
+//! the speedup over the scalar path at the same dtype.
+//!
+//! Acceptance gates (printed, recorded in the JSON): the best vector
+//! path must beat scalar by ≥ 2× on f32 gains, and hardware half decode
+//! must keep f16 throughput ≥ 0.8× of f32 on the auto path.
+//!
+//! Results go to `BENCH_cpu_simd.json` (override with
+//! `EXEMCL_BENCH_SIMD_OUT`). Run: `cargo bench --bench ablation_simd`
+
+use exemcl::bench::{measure, write_json, JsonValue, Scale, Table};
+use exemcl::cpu::simd::{self, SimdPath};
+use exemcl::cpu::{gains_tile, pack_gathered, update_dmin_tile, KernelSet, GROUND_TILE};
+use exemcl::data::synth::UniformCube;
+use exemcl::data::{Rng, ShadowSet};
+use exemcl::distance::SqEuclidean;
+use exemcl::scalar::{Bf16, Dtype, Scalar, F16};
+
+struct Row {
+    path: SimdPath,
+    dtype: Dtype,
+    min_s: f64,
+    mpairs: f64,
+    gbps: f64,
+    gains: Vec<f32>,
+}
+
+/// One (path, dtype) cell: gains over the full ground range, packed
+/// candidates prepared once outside the timed region (as the oracles
+/// do), fresh accumulators per rep.
+fn run_cell<S: Scalar>(
+    ks: &'static KernelSet,
+    view: &ShadowSet<S>,
+    dmin: &[f32],
+    cands: &[usize],
+    reps: usize,
+) -> Row {
+    let n = dmin.len();
+    let d = view.d();
+    let m = cands.len();
+    let packed = pack_gathered(ks, view, cands);
+    let t = measure(
+        || {
+            let mut acc = vec![0.0f64; m];
+            gains_tile(ks, &SqEuclidean, view, dmin, 0..n, &packed, &mut acc);
+            std::hint::black_box(&acc);
+        },
+        reps,
+        true,
+    );
+    let mut acc = vec![0.0f64; m];
+    gains_tile(ks, &SqEuclidean, view, dmin, 0..n, &packed, &mut acc);
+    let gains: Vec<f32> = acc.iter().map(|&g| (g / n as f64) as f32).collect();
+
+    // streamed bytes per pass: the ground set once at storage width,
+    // plus the packed candidate panels re-read for every ground tile
+    let ground_bytes = n * d * std::mem::size_of::<S>();
+    let panel_bytes = (packed.rows().len() + packed.norms().len()) * 4;
+    let bytes = ground_bytes + n.div_ceil(GROUND_TILE) * panel_bytes;
+    Row {
+        path: ks.path(),
+        dtype: S::DTYPE,
+        min_s: t.min,
+        mpairs: (n as f64 * m as f64) / t.min / 1e6,
+        gbps: bytes as f64 / t.min / 1e9,
+        gains,
+    }
+}
+
+fn main() {
+    let scale = Scale::from_env();
+    let (n, reps) = match scale {
+        Scale::Quick => (8_000usize, 2usize),
+        Scale::Default => (50_000, 5),
+        Scale::Full => (50_000, 7),
+    };
+    let d = 32usize;
+    let n_candidates = 256usize;
+    let n_exemplars = 8usize;
+
+    let paths = simd::available_paths();
+    println!("\n== SIMD dispatch ablation: gains_tile per path x dtype ==");
+    println!(
+        "problem: n={n} d={d} |C|={n_candidates} reps={reps} paths={}",
+        paths.iter().map(|p| p.as_str()).collect::<Vec<_>>().join(",")
+    );
+
+    let ds = UniformCube::new(d, 1.0).generate(n, 20_250_727);
+    let mut rng = Rng::new(7);
+    let exemplars = rng.sample_indices(n, n_exemplars);
+    let candidates = rng.sample_indices(n, n_candidates);
+
+    // memcpy baseline: stream the f32 ground set once (read + write)
+    let src: Vec<f32> = vec![1.0f32; n * d];
+    let mut dst = vec![0.0f32; n * d];
+    let t_copy = measure(
+        || {
+            dst.copy_from_slice(&src);
+            std::hint::black_box(&dst);
+        },
+        reps.max(3),
+        true,
+    );
+    let memcpy_gbps = (2 * n * d * 4) as f64 / t_copy.min / 1e9;
+    println!("memcpy baseline: {memcpy_gbps:.1} GB/s (read+write, {} MiB buffer)\n", n * d * 4 >> 20);
+
+    // dmin state shared per dtype, committed through the scalar set so
+    // every path sees the identical state
+    let sks = simd::kernel_set_for(SimdPath::Scalar).unwrap();
+    let v32: ShadowSet<f32> = ds.shadow(true);
+    let v16: ShadowSet<F16> = ds.shadow(true);
+    let vb: ShadowSet<Bf16> = ds.shadow(true);
+    let dmin = |view: &ShadowSet<f32>| -> Vec<f32> {
+        let mut dm = ds.sq_norms();
+        let ex = pack_gathered(sks, view, &exemplars);
+        update_dmin_tile(sks, &SqEuclidean, view, 0..n, &ex, &mut dm);
+        dm
+    };
+    // one dmin for all dtypes: the gains input state is a plain f32
+    // surface, so cross-dtype rows differ only in the kernel input rows
+    let dm = dmin(&v32);
+
+    let mut rows: Vec<Row> = Vec::new();
+    for &p in &paths {
+        let ks = simd::kernel_set_for(p).expect("available path must resolve");
+        rows.push(run_cell::<f32>(ks, &v32, &dm, &candidates, reps));
+        rows.push(run_cell::<F16>(ks, &v16, &dm, &candidates, reps));
+        rows.push(run_cell::<Bf16>(ks, &vb, &dm, &candidates, reps));
+    }
+
+    // correctness: every cell agrees with the scalar cell at its dtype
+    for dt in Dtype::all() {
+        let want = &rows.iter().find(|r| r.path == SimdPath::Scalar && r.dtype == dt).unwrap().gains;
+        for r in rows.iter().filter(|r| r.dtype == dt) {
+            for (c, (a, b)) in r.gains.iter().zip(want).enumerate() {
+                assert!(
+                    (a - b).abs() <= 1e-4 * b.abs() + 1e-5,
+                    "{}/{} cand {c}: {a} vs scalar {b}",
+                    r.path,
+                    r.dtype
+                );
+            }
+        }
+    }
+
+    let scalar_min = |dt: Dtype| {
+        rows.iter().find(|r| r.path == SimdPath::Scalar && r.dtype == dt).unwrap().min_s
+    };
+    let mut table =
+        Table::new(&["path", "dtype", "min[s]", "Mpairs/s", "GB/s", "%memcpy", "vs scalar"]);
+    for r in &rows {
+        table.row(&[
+            r.path.to_string(),
+            r.dtype.to_string(),
+            format!("{:.4}", r.min_s),
+            format!("{:.0}", r.mpairs),
+            format!("{:.1}", r.gbps),
+            format!("{:.0}%", 100.0 * r.gbps / memcpy_gbps),
+            format!("{:.2}x", scalar_min(r.dtype) / r.min_s),
+        ]);
+    }
+    table.print();
+
+    // acceptance gates
+    let best = &rows[0]; // available_paths() is best-first; row 0 is best/f32
+    let speedup_f32 = scalar_min(Dtype::F32) / best.min_s;
+    let best_f16 = rows.iter().find(|r| r.path == best.path && r.dtype == Dtype::F16).unwrap();
+    let f16_ratio = best.min_s / best_f16.min_s; // >1 means f16 is faster
+    let vector_present = best.path != SimdPath::Scalar;
+    println!(
+        "\nbest path {}: f32 speedup {:.2}x (target >= 2x: {}), f16/f32 throughput {:.2} \
+         (target >= 0.8: {})",
+        best.path,
+        speedup_f32,
+        if !vector_present { "N/A (scalar-only host)" } else if speedup_f32 >= 2.0 { "PASS" } else { "MISS" },
+        f16_ratio,
+        if f16_ratio >= 0.8 { "PASS" } else { "MISS" },
+    );
+
+    let mut kv: Vec<(String, JsonValue)> = vec![
+        ("bench".into(), JsonValue::Str("ablation_simd".into())),
+        ("n".into(), JsonValue::Int(n as i64)),
+        ("d".into(), JsonValue::Int(d as i64)),
+        ("candidates".into(), JsonValue::Int(n_candidates as i64)),
+        ("exemplars_committed".into(), JsonValue::Int(n_exemplars as i64)),
+        ("reps".into(), JsonValue::Int(reps as i64)),
+        ("best_path".into(), JsonValue::Str(best.path.to_string())),
+        ("memcpy_gbps".into(), JsonValue::Num(memcpy_gbps)),
+        ("speedup_f32_best_vs_scalar".into(), JsonValue::Num(speedup_f32)),
+        ("f16_over_f32_throughput".into(), JsonValue::Num(f16_ratio)),
+        ("target_speedup".into(), JsonValue::Num(2.0)),
+        (
+            "target_met".into(),
+            JsonValue::Bool(!vector_present || (speedup_f32 >= 2.0 && f16_ratio >= 0.8)),
+        ),
+    ];
+    for r in &rows {
+        let k = format!("{}_{}", r.path, r.dtype);
+        kv.push((format!("{k}_min_s"), JsonValue::Num(r.min_s)));
+        kv.push((format!("{k}_mpairs_per_s"), JsonValue::Num(r.mpairs)));
+        kv.push((format!("{k}_gbps"), JsonValue::Num(r.gbps)));
+    }
+    let pairs: Vec<(&str, JsonValue)> =
+        kv.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
+    let out_path =
+        std::env::var("EXEMCL_BENCH_SIMD_OUT").unwrap_or_else(|_| "BENCH_cpu_simd.json".into());
+    let path = write_json(&out_path, &pairs).expect("write BENCH_cpu_simd.json");
+    println!("wrote {path}");
+}

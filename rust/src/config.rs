@@ -6,6 +6,7 @@ use std::collections::BTreeMap;
 use std::time::Duration;
 
 use crate::coordinator::{DEFAULT_QUEUE_CAPACITY, DEFAULT_SESSION_CAPACITY};
+use crate::cpu::SimdChoice;
 use crate::data::Dataset;
 use crate::engine::Engine;
 use crate::net::{Listen, NetConfig, DEFAULT_MAX_CONNS};
@@ -112,6 +113,10 @@ pub struct AppConfig {
     /// Element dtype (`f32` | `f16` | `bf16`) — one vocabulary for the
     /// CPU oracles and the device artifact manifest.
     pub dtype: Dtype,
+    /// SIMD dispatch path for the CPU Gram kernels (`auto` | `scalar` |
+    /// `avx2` | `avx512` | `neon`). Forcing a path the host cannot run
+    /// is a build error; `EXEMCL_SIMD` overrides this key.
+    pub simd: SimdChoice,
     /// Artifact directory.
     pub artifacts: String,
     /// Worker threads for the pooled CPU backend (0 = auto).
@@ -149,6 +154,7 @@ impl Default for AppConfig {
             optimizer: "greedy".into(),
             backend: Backend::Device,
             dtype: Dtype::F32,
+            simd: SimdChoice::Auto,
             artifacts: "artifacts".into(),
             threads: 0,
             memory_mib: 16 * 1024,
@@ -178,6 +184,7 @@ impl AppConfig {
             optimizer: raw.get("optimizer.name").unwrap_or(&def.optimizer).to_string(),
             backend: raw.get_or("eval.backend", def.backend)?.with_threads(threads),
             dtype: raw.get_or("eval.dtype", def.dtype)?,
+            simd: raw.get_or("eval.simd", def.simd)?,
             artifacts: raw.get("eval.artifacts").unwrap_or(&def.artifacts).to_string(),
             threads,
             memory_mib: raw.get_or("eval.memory_mib", def.memory_mib)?,
@@ -217,6 +224,7 @@ impl AppConfig {
         Engine::builder()
             .backend(self.backend.clone())
             .dtype(self.dtype)
+            .simd(self.simd)
             .queue_capacity(self.queue)
             .session_capacity(self.sessions)
             .session_ttl_secs(self.session_ttl_secs)
@@ -234,6 +242,7 @@ impl AppConfig {
             .dataset(ds)
             .backend(self.backend.clone().with_threads(self.threads))
             .dtype(self.dtype)
+            .simd(self.simd)
             .artifacts(self.artifacts.clone())
             .memory_mib(self.memory_mib)
             .queue_capacity(self.queue)
@@ -285,6 +294,38 @@ mod tests {
         assert_eq!(AppConfig::from_raw(&RawConfig::default()).unwrap().dtype, Dtype::F32);
         let raw = RawConfig::parse("[eval]\ndtype = f64\n").unwrap();
         assert!(AppConfig::from_raw(&raw).is_err());
+    }
+
+    #[test]
+    fn simd_key_parses_with_default_and_rejects() {
+        use crate::cpu::SimdPath;
+        let def = AppConfig::from_raw(&RawConfig::default()).unwrap();
+        assert_eq!(def.simd, SimdChoice::Auto);
+        let raw = RawConfig::parse("[eval]\nsimd = scalar\n").unwrap();
+        assert_eq!(
+            AppConfig::from_raw(&raw).unwrap().simd,
+            SimdChoice::Force(SimdPath::Scalar)
+        );
+        let raw = RawConfig::parse("[eval]\nsimd = avx512\n").unwrap();
+        assert_eq!(
+            AppConfig::from_raw(&raw).unwrap().simd,
+            SimdChoice::Force(SimdPath::Avx512)
+        );
+        let raw = RawConfig::parse("[eval]\nsimd = sse9\n").unwrap();
+        assert!(AppConfig::from_raw(&raw).is_err());
+    }
+
+    #[test]
+    fn forced_scalar_simd_builds_a_working_engine() {
+        if std::env::var("EXEMCL_SIMD").is_ok() {
+            return; // env forcing overrides the key; matrix covered in CI
+        }
+        let raw = RawConfig::parse("[eval]\nbackend = cpu-st\nsimd = scalar\n").unwrap();
+        let cfg = AppConfig::from_raw(&raw).unwrap();
+        let ds = crate::data::synth::UniformCube::new(3, 1.0).generate(32, 1);
+        let engine = cfg.engine(ds).unwrap();
+        let r = engine.run(&crate::optim::Greedy::new(3)).unwrap();
+        assert_eq!(r.exemplars.len(), 3);
     }
 
     #[test]

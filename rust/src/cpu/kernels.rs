@@ -17,34 +17,38 @@
 //!
 //! over a [`ShadowSet<S>`] — the ground set mean-centered and quantized
 //! to the storage scalar `S` (`f32`/`f16`/`bf16`), with per-row squared
-//! norms precomputed **once at shadow construction**. The dot product is
-//! a register-blocked micro-kernel that scores four candidates against
-//! one ground row per pass (one load of the ground row amortized over
-//! four `f32` dot accumulators; the inner `d` loop autovectorizes).
-//! Candidates are gathered into a dense `(m, d)` block so the hot loop
-//! walks contiguous memory, and processed in [`CAND_BLOCK`]-row tiles
-//! that stay cache-resident while a [`GROUND_TILE`]-row slice of the
-//! ground set streams through.
+//! norms precomputed **once at shadow construction**. The register-blocked
+//! core lives in [`crate::cpu::simd`]: a [`KernelSet`] selected once at
+//! oracle construction (scalar reference, AVX2+FMA, AVX-512F, or NEON)
+//! scores whole panels of candidates against each ground row. Candidates
+//! are gathered and re-packed **once per oracle call** into the kernel
+//! set's lane-major [`PackedBlock`] layout, then reused across every
+//! [`GROUND_TILE`]-row slice of the ground set that streams through —
+//! the drivers in this module do the tiling and the `post_sq` epilogues,
+//! the `KernelSet` does the arithmetic.
 //!
 //! # Widening at tile granularity
 //!
 //! The narrow formats are **storage** formats: arithmetic is always
 //! `f32` ("operands narrow, accumulate wide", see [`crate::scalar`]).
-//! Rather than decoding inside the dot product, the kernels widen at
-//! tile granularity into small reusable scratch buffers — a candidate
-//! block is decoded once per ground tile (≤ 0.5% of the tile's
-//! multiply-adds) and a ground row once per candidate-block pass — so
-//! the register-blocked inner loop is bit-identical across dtypes and
-//! the half formats pay only for streaming *half the bytes* of ground
-//! set per pass, which is exactly where their throughput lives. For
-//! `S = f32` the scratch is skipped entirely
-//! ([`crate::scalar::Scalar::as_f32_slice`]) and the generic code
-//! monomorphizes to the old `f32` kernels.
+//! Candidate blocks are decoded exactly once, inside
+//! [`crate::cpu::simd::pack`] (hardware F16C / NEON `fcvt` conversion on
+//! the vector paths), however many ground tiles they are scored against;
+//! ground tiles are widened per pass through the same hardware
+//! converters. For `S = f32` both steps degenerate to copies (and the
+//! ground-tile step to a borrow, via
+//! [`crate::scalar::Scalar::as_f32_slice`]), so the generic drivers
+//! monomorphize to exactly the dense `f32` kernels.
 //!
 //! The fused [`gains_tile`] kernel is the optimizer-aware core: one pass
 //! over each ground tile scores the *entire* candidate block against the
 //! cached `dmin` state in registers — the seed path streamed the whole
-//! dataset once per candidate.
+//! dataset once per candidate. When the dissimilarity's
+//! [`Dissimilarity::post_sq`] is the identity
+//! ([`Dissimilarity::post_sq_is_identity`]), clamp, improvement and
+//! `f64` accumulation all stay in vector registers; otherwise the driver
+//! materializes one row of squared distances at a time and applies
+//! `post_sq` in a scalar epilogue — results are identical either way.
 //!
 //! # Numerics: centering instead of cancellation
 //!
@@ -64,96 +68,63 @@
 //! Non-factoring dissimilarities (Manhattan, cosine) use the `_direct`
 //! kernels over the canonical `f32` rows with the same batching
 //! structure — cosine is not translation-invariant, so the shadow never
-//! feeds a generic [`Dissimilarity::eval`].
+//! feeds a generic [`Dissimilarity::eval`]. The `_direct` kernels stay
+//! scalar: a generic `eval` call per pair cannot be vectorized from the
+//! outside, and keeping them untouched preserves their bitwise behavior
+//! across this crate's SIMD dispatch.
 
 use std::ops::Range;
 
+use super::simd::{self, KernelSet, PackedBlock};
 use crate::data::{Dataset, ShadowSet};
 use crate::distance::Dissimilarity;
 use crate::scalar::Scalar;
 
 /// Ground rows per work grain: at d = 100 one tile is ~100 KiB of f32
 /// (half that for the 16-bit formats) — comfortably L2-resident while
-/// candidate blocks cycle over it.
+/// candidate panels cycle over it.
 pub const GROUND_TILE: usize = 256;
 
-/// Candidate rows per register-blocked pass: at d = 32 one block is
-/// 16 KiB of f32 — L1-resident across an entire ground tile.
+/// Historical candidate-block grain. The packed-panel kernels score the
+/// whole candidate block per tile pass, but the oracle-level batching
+/// (and the ablation benches) still reason in these units.
 pub const CAND_BLOCK: usize = 128;
 
-/// Borrow `src` as `f32` directly (identity format) or decode it into
-/// `scratch` and borrow that — the tile-granular widening step. The
-/// decode loop is branchless (see [`crate::scalar::f16_decode`]) and
-/// autovectorizes.
+/// Borrow `src` as `f32` directly (identity format) or widen it into
+/// `scratch` through the kernel set's hardware half converters — the
+/// tile-granular widening step for ground tiles. (Candidate blocks are
+/// widened once, in [`simd::pack`], not here.)
 #[inline]
-fn decoded<'a, S: Scalar>(src: &'a [S], scratch: &'a mut Vec<f32>) -> &'a [f32] {
-    match S::as_f32_slice(src) {
-        Some(direct) => direct,
+fn decoded<'a, S: Scalar>(ks: &KernelSet, src: &'a [S], scratch: &'a mut Vec<f32>) -> &'a [f32] {
+    use crate::scalar::HalfKind;
+    if let Some(direct) = S::as_f32_slice(src) {
+        return direct;
+    }
+    scratch.clear();
+    scratch.resize(src.len(), 0.0);
+    match S::as_half_bits(src) {
+        Some((HalfKind::F16, bits)) => ks.decode_f16(bits, scratch),
+        Some((HalfKind::Bf16, bits)) => ks.decode_bf16(bits, scratch),
         None => {
-            scratch.clear();
-            scratch.extend(src.iter().map(|x| x.to_f32()));
-            scratch.as_slice()
+            for (o, x) in scratch.iter_mut().zip(src) {
+                *o = x.to_f32();
+            }
         }
     }
+    scratch
 }
 
-/// Four dot products of ground row `v` against rows
-/// `base/d .. base/d + 4` of the dense block `rows` — the
-/// register-blocked core every Gram kernel shares (one load of `v[j]`
-/// amortized over four accumulators).
-#[inline]
-fn dot4(v: &[f32], rows: &[f32], base: usize, d: usize) -> [f32; 4] {
-    let r0 = &rows[base..base + d];
-    let r1 = &rows[base + d..base + 2 * d];
-    let r2 = &rows[base + 2 * d..base + 3 * d];
-    let r3 = &rows[base + 3 * d..base + 4 * d];
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-    for j in 0..d {
-        let vj = v[j];
-        s0 += r0[j] * vj;
-        s1 += r1[j] * vj;
-        s2 += r2[j] * vj;
-        s3 += r3[j] * vj;
-    }
-    [s0, s1, s2, s3]
-}
-
-/// Scalar-tail dot product of `v` against row `s` of `rows`, accumulated
-/// in f32 in index order (matches the shadow's norm reduction order, so
-/// `v · v == ‖v‖²` exactly).
-#[inline]
-fn dot1(v: &[f32], rows: &[f32], s: usize, d: usize) -> f32 {
-    let r = &rows[s * d..(s + 1) * d];
-    let mut acc = 0.0f32;
-    for j in 0..d {
-        acc += r[j] * v[j];
-    }
-    acc
-}
-
-/// Minimum clamped Gram distance from `v` (squared norm `nv`) to all `m`
-/// rows of the dense block — `min_s max(norms[s] − 2·v·row_s + nv, 0)`,
-/// `∞` when the block is empty. Shared by the loss and dmin-update
-/// kernels so the arithmetic (and therefore the f32 rounding) is
-/// identical everywhere.
-#[inline]
-fn min_sq_to_rows(v: &[f32], nv: f32, rows: &[f32], norms: &[f32], d: usize) -> f32 {
-    let m = norms.len();
-    let mut best = f32::INFINITY;
-    let mut s = 0;
-    while s + 4 <= m {
-        let dots = dot4(v, rows, s * d, d);
-        best = best.min((norms[s] - 2.0 * dots[0] + nv).max(0.0));
-        best = best.min((norms[s + 1] - 2.0 * dots[1] + nv).max(0.0));
-        best = best.min((norms[s + 2] - 2.0 * dots[2] + nv).max(0.0));
-        best = best.min((norms[s + 3] - 2.0 * dots[3] + nv).max(0.0));
-        s += 4;
-    }
-    while s < m {
-        best = best.min((norms[s] - 2.0 * dot1(v, rows, s, d) + nv).max(0.0));
-        s += 1;
-    }
-    best
+/// Gather shadow rows by index and pack them into `ks`'s lane-major
+/// panel layout — the once-per-oracle-call candidate/exemplar/set
+/// preparation every Gram driver in this module consumes. Half dtypes
+/// are decoded exactly once here (see [`simd::pack_decodes`]).
+pub fn pack_gathered<S: Scalar>(
+    ks: &'static KernelSet,
+    view: &ShadowSet<S>,
+    idx: &[usize],
+) -> PackedBlock {
+    let (rows, norms) = view.gather(idx);
+    simd::pack(ks, &rows, &norms, view.d())
 }
 
 /// Gather `idx` rows of the canonical dataset into a dense f32 `(m, d)`
@@ -171,81 +142,65 @@ pub fn gather_rows(ds: &Dataset, idx: &[usize]) -> (Vec<f32>, Vec<f32>) {
     (rows, norms)
 }
 
-/// Fused marginal-gain kernel over one ground tile of the shadow (Gram
-/// path): for every ground row in `rows`, score the entire candidate
-/// block against `dmin` and accumulate the clamped improvements
-/// `max(dmin_i − d(c, v_i), 0)` into `acc[c]` (f64, one slot per
-/// candidate). `cand_rows`/`cand_norms` come from [`ShadowSet::gather`].
+/// Fused marginal-gain kernel over a ground range of the shadow (Gram
+/// path): for every ground row in `rows`, score the entire packed
+/// candidate block against `dmin` and accumulate the clamped
+/// improvements `max(dmin_i − d(c, v_i), 0)` into `acc[c]` (f64, one
+/// slot per candidate). `dmin` is indexed absolutely (it covers the
+/// whole ground set); internal tiling is by [`GROUND_TILE`].
 pub fn gains_tile<S: Scalar, D: Dissimilarity>(
+    ks: &KernelSet,
     dist: &D,
     view: &ShadowSet<S>,
     dmin: &[f32],
     rows: Range<usize>,
-    cand_rows: &[S],
-    cand_norms: &[f32],
+    cands: &PackedBlock,
     acc: &mut [f64],
 ) {
     debug_assert!(dist.factors_through_sq_euclidean());
     let d = view.d();
     let m = acc.len();
-    debug_assert_eq!(cand_rows.len(), m * d);
-    debug_assert_eq!(cand_norms.len(), m);
-    let mut cand_scratch = Vec::new();
-    let mut row_scratch = Vec::new();
-    let mut c0 = 0;
-    while c0 < m {
-        let c1 = (c0 + CAND_BLOCK).min(m);
-        // widen the candidate block once per ground-tile pass
-        let block = decoded(&cand_rows[c0 * d..c1 * d], &mut cand_scratch);
-        let block_norms = &cand_norms[c0..c1];
-        let block_acc = &mut acc[c0..c1];
-        for i in rows.clone() {
-            let dm = dmin[i];
-            if dm <= 0.0 {
-                continue; // d ≥ 0 ⇒ no candidate can improve this row
-            }
-            let v = decoded(view.row(i), &mut row_scratch);
-            gains_row_gram(dist, v, view.sq_norm(i), dm, d, block, block_norms, block_acc);
-        }
-        c0 = c1;
+    debug_assert_eq!(cands.m(), m);
+    debug_assert_eq!(cands.d(), d);
+    debug_assert_eq!(cands.width(), ks.width());
+    if m == 0 {
+        return;
     }
-}
-
-/// Register-blocked inner row: four candidates per pass, Gram identity,
-/// `post_sq` applied to the f32-accumulated squared distance. Operates
-/// on one (already widened) candidate block.
-#[inline]
-#[allow(clippy::too_many_arguments)]
-fn gains_row_gram<D: Dissimilarity>(
-    dist: &D,
-    v: &[f32],
-    nv: f32,
-    dm: f32,
-    d: usize,
-    cand_rows: &[f32],
-    cand_norms: &[f32],
-    acc: &mut [f64],
-) {
-    let m = cand_norms.len();
-    let mut c = 0;
-    while c + 4 <= m {
-        let dots = dot4(v, cand_rows, c * d, d);
-        for (lane, &dot) in dots.iter().enumerate() {
-            let dd = dist.post_sq((cand_norms[c + lane] - 2.0 * dot + nv).max(0.0));
-            let improve = dm - dd;
-            if improve > 0.0 {
-                acc[c + lane] += improve as f64;
+    let fused = dist.post_sq_is_identity();
+    let mut scratch = Vec::new();
+    let mut dd_buf = if fused { Vec::new() } else { vec![0.0f32; m] };
+    let mut start = rows.start;
+    while start < rows.end {
+        let end = (start + GROUND_TILE).min(rows.end);
+        let ground = decoded(ks, view.rows_slice(start..end), &mut scratch);
+        let gnorms = &view.norms()[start..end];
+        let dmin_tile = &dmin[start..end];
+        if fused {
+            // SAFETY: ks's CPU features were verified when it was
+            // resolved (simd::kernel_set_for) — the kernels' only
+            // precondition.
+            unsafe {
+                (ks.gains_tile)(ground, gnorms, dmin_tile, d, &cands.rows, &cands.norms, acc)
+            };
+        } else {
+            // non-identity post_sq: squared distances per row, scalar
+            // epilogue applies the transform before the improvement test
+            for (r, (&dm, &nv)) in dmin_tile.iter().zip(gnorms).enumerate() {
+                if dm <= 0.0 {
+                    continue; // d ≥ 0 ⇒ no candidate can improve this row
+                }
+                let v = &ground[r * d..(r + 1) * d];
+                // SAFETY: as above.
+                unsafe { (ks.sq_dists_row)(v, nv, d, &cands.rows, &cands.norms, &mut dd_buf) };
+                for (slot, &sq) in acc.iter_mut().zip(dd_buf.iter()) {
+                    let improve = dm - dist.post_sq(sq);
+                    if improve > 0.0 {
+                        *slot += improve as f64;
+                    }
+                }
             }
         }
-        c += 4;
-    }
-    while c < m {
-        let dd = dist.post_sq((cand_norms[c] - 2.0 * dot1(v, cand_rows, c, d) + nv).max(0.0));
-        let improve = dm - dd;
-        if improve > 0.0 {
-            acc[c] += improve as f64;
-        }
-        c += 1;
+        start = end;
     }
 }
 
@@ -278,36 +233,42 @@ pub fn gains_tile_direct<D: Dissimilarity>(
     }
 }
 
-/// Loss-sum kernel over one ground tile of the shadow (Gram path):
+/// Loss-sum kernel over a ground range of the shadow (Gram path):
 /// `Σ_{i ∈ rows} post_sq(min(e0_sq_i, min_s ‖s − v_i‖²))` for one
-/// evaluation set gathered into `set_rows`/`set_norms`. `e0_sq` holds
-/// the **raw** squared norms `‖v_i‖²` (the `d(v, e0)` term is not
-/// translation-invariant, so it cannot come from the centered shadow);
-/// minima commute with the monotone `post_sq`, so the whole min runs in
-/// squared space and `post_sq` is applied once. An empty set yields the
+/// evaluation set packed into `set`. `e0_sq` holds the **raw** squared
+/// norms `‖v_i‖²` (the `d(v, e0)` term is not translation-invariant, so
+/// it cannot come from the centered shadow); minima commute with the
+/// monotone `post_sq`, so the whole min runs in squared space and
+/// `post_sq` is applied once per row. An empty set yields the
 /// e0-distance sum.
 pub fn loss_tile<S: Scalar, D: Dissimilarity>(
+    ks: &KernelSet,
     dist: &D,
     view: &ShadowSet<S>,
     e0_sq: &[f32],
     rows: Range<usize>,
-    set_rows: &[S],
-    set_norms: &[f32],
+    set: &PackedBlock,
 ) -> f64 {
     debug_assert!(dist.factors_through_sq_euclidean());
     let d = view.d();
-    let m = set_norms.len();
-    debug_assert_eq!(set_rows.len(), m * d);
-    let mut set_scratch = Vec::new();
-    let mut row_scratch = Vec::new();
-    let set_block = decoded(set_rows, &mut set_scratch);
+    debug_assert_eq!(set.d(), d);
+    debug_assert_eq!(set.width(), ks.width());
+    let mut scratch = Vec::new();
+    let mut mins = vec![0.0f32; GROUND_TILE.min(rows.len())];
     let mut acc = 0.0f64;
-    for i in rows {
-        let v = decoded(view.row(i), &mut row_scratch);
-        let nv = view.sq_norm(i);
-        // an empty set leaves the e0 term
-        let best_sq = e0_sq[i].min(min_sq_to_rows(v, nv, set_block, set_norms, d));
-        acc += dist.post_sq(best_sq) as f64;
+    let mut start = rows.start;
+    while start < rows.end {
+        let end = (start + GROUND_TILE).min(rows.end);
+        let ground = decoded(ks, view.rows_slice(start..end), &mut scratch);
+        let gnorms = &view.norms()[start..end];
+        let mins_t = &mut mins[..end - start];
+        // SAFETY: ks's CPU features were verified when it was resolved.
+        unsafe { (ks.min_sq_tile)(ground, gnorms, d, &set.rows, &set.norms, mins_t) };
+        for (i, &mn) in (start..end).zip(mins_t.iter()) {
+            // an empty set leaves the e0 term (mn = +∞)
+            acc += dist.post_sq(e0_sq[i].min(mn)) as f64;
+        }
+        start = end;
     }
     acc
 }
@@ -337,38 +298,45 @@ pub fn loss_tile_direct<D: Dissimilarity>(
     acc
 }
 
-/// Batched dmin update over one ground tile of the shadow (Gram path):
+/// Batched dmin update over a ground range of the shadow (Gram path):
 /// `dmin[i − rows.start] ← min(dmin[i − rows.start], min_e d(e, v_i))`
-/// for the exemplar batch gathered into `ex_rows`/`ex_norms`. `dmin`
-/// covers exactly `rows`.
+/// for the packed exemplar batch. `dmin` covers exactly `rows`.
 pub fn update_dmin_tile<S: Scalar, D: Dissimilarity>(
+    ks: &KernelSet,
     dist: &D,
     view: &ShadowSet<S>,
     rows: Range<usize>,
-    ex_rows: &[S],
-    ex_norms: &[f32],
+    exemplars: &PackedBlock,
     dmin: &mut [f32],
 ) {
     debug_assert!(dist.factors_through_sq_euclidean());
     let d = view.d();
-    let m = ex_norms.len();
-    debug_assert_eq!(ex_rows.len(), m * d);
+    debug_assert_eq!(exemplars.d(), d);
+    debug_assert_eq!(exemplars.width(), ks.width());
     debug_assert_eq!(dmin.len(), rows.len());
-    if m == 0 {
+    if exemplars.m() == 0 {
         return;
     }
-    let mut ex_scratch = Vec::new();
-    let mut row_scratch = Vec::new();
-    let ex_block = decoded(ex_rows, &mut ex_scratch);
-    let start = rows.start;
-    for i in rows {
-        let v = decoded(view.row(i), &mut row_scratch);
-        let nv = view.sq_norm(i);
-        let dd = dist.post_sq(min_sq_to_rows(v, nv, ex_block, ex_norms, d));
-        let slot = &mut dmin[i - start];
-        if dd < *slot {
-            *slot = dd;
+    let offset = rows.start;
+    let mut scratch = Vec::new();
+    let mut mins = vec![0.0f32; GROUND_TILE.min(rows.len())];
+    let mut start = rows.start;
+    while start < rows.end {
+        let end = (start + GROUND_TILE).min(rows.end);
+        let ground = decoded(ks, view.rows_slice(start..end), &mut scratch);
+        let gnorms = &view.norms()[start..end];
+        let mins_t = &mut mins[..end - start];
+        // SAFETY: ks's CPU features were verified when it was resolved.
+        unsafe { (ks.min_sq_tile)(ground, gnorms, d, &exemplars.rows, &exemplars.norms, mins_t) };
+        for (k, &mn) in mins_t.iter().enumerate() {
+            // min commutes with the monotone post_sq
+            let dd = dist.post_sq(mn);
+            let slot = &mut dmin[start - offset + k];
+            if dd < *slot {
+                *slot = dd;
+            }
         }
+        start = end;
     }
 }
 
@@ -478,16 +446,19 @@ pub fn loss_sum_f64(ds: &Dataset, set: &[usize]) -> f64 {
     acc
 }
 
-/// Blocked variant: 4 independent accumulators expose ILP and let LLVM
-/// vectorize the distance loop; set rows are hoisted per outer iteration.
+/// Blocked variant: pairwise distances go through the auto-dispatched
+/// [`KernelSet::sq_dist`] (4-accumulator ILP on the scalar path, full
+/// vector width elsewhere); set rows are hoisted per outer iteration.
 pub fn loss_sum_blocked(ds: &Dataset, set: &[usize]) -> f64 {
     let d = ds.d();
+    let ks = simd::active();
     let mut acc = 0.0f64;
     for i in 0..ds.n() {
         let v = ds.row(i);
         let mut t = sq_norm_blocked(v);
         for &s in set {
-            let dist = sq_dist_blocked(ds.row(s), v, d);
+            debug_assert_eq!(v.len(), d);
+            let dist = ks.sq_dist(ds.row(s), v);
             if dist < t {
                 t = dist;
             }
@@ -518,34 +489,14 @@ fn sq_norm_blocked(v: &[f32]) -> f32 {
     a0 + a1 + a2 + a3 + tail
 }
 
+/// Full-width squared Euclidean distance through the auto-dispatched
+/// kernel set (kept for the historical callers; new code should hold a
+/// `&KernelSet` and call [`KernelSet::sq_dist`] directly).
 #[inline]
 pub(crate) fn sq_dist_blocked(a: &[f32], b: &[f32], d: usize) -> f32 {
     debug_assert_eq!(a.len(), d);
     debug_assert_eq!(b.len(), d);
-    let mut s0 = 0.0f32;
-    let mut s1 = 0.0f32;
-    let mut s2 = 0.0f32;
-    let mut s3 = 0.0f32;
-    let n4 = d / 4 * 4;
-    let mut j = 0;
-    while j < n4 {
-        let d0 = a[j] - b[j];
-        let d1 = a[j + 1] - b[j + 1];
-        let d2 = a[j + 2] - b[j + 2];
-        let d3 = a[j + 3] - b[j + 3];
-        s0 += d0 * d0;
-        s1 += d1 * d1;
-        s2 += d2 * d2;
-        s3 += d3 * d3;
-        j += 4;
-    }
-    let mut tail = 0.0f32;
-    while j < d {
-        let diff = a[j] - b[j];
-        tail += diff * diff;
-        j += 1;
-    }
-    s0 + s1 + s2 + s3 + tail
+    simd::active().sq_dist(a, b)
 }
 
 #[cfg(test)]
@@ -558,6 +509,13 @@ mod tests {
     /// Uncentered f32 shadow: bitwise the old kernel inputs.
     fn raw_view(ds: &Dataset) -> ShadowSet<f32> {
         ds.shadow::<f32>(false)
+    }
+
+    /// The kernel set every test drives (auto-dispatch; CI runs the
+    /// suite a second time under `EXEMCL_SIMD=scalar`, and the
+    /// cross-path equivalence matrix lives in `tests/simd_equivalence`).
+    fn ks() -> &'static KernelSet {
+        simd::active()
     }
 
     #[test]
@@ -595,9 +553,8 @@ mod tests {
             for centered in [false, true] {
                 let view: ShadowSet<f32> = ds.shadow(centered);
                 for set in [vec![], vec![3], vec![0, 13, 77, 91, 140]] {
-                    let (set_rows, set_norms) = view.gather(&set);
-                    let got =
-                        loss_tile(&SqEuclidean, &view, &e0, 0..ds.n(), &set_rows, &set_norms);
+                    let packed = pack_gathered(ks(), &view, &set);
+                    let got = loss_tile(ks(), &SqEuclidean, &view, &e0, 0..ds.n(), &packed);
                     let want = loss_sum_naive(&ds, &set);
                     assert!(
                         (got - want).abs() < 1e-4 * want.abs().max(1.0),
@@ -617,23 +574,15 @@ mod tests {
             let norms = ds.sq_norms();
             // a partially covered state: dmin lowered by two exemplars
             let mut dmin = norms.clone();
-            let (ex_rows, ex_norms) = view.gather(&[5, 111]);
-            update_dmin_tile(&SqEuclidean, &view, 0..ds.n(), &ex_rows, &ex_norms, &mut dmin);
+            let ex = pack_gathered(ks(), &view, &[5, 111]);
+            update_dmin_tile(ks(), &SqEuclidean, &view, 0..ds.n(), &ex, &mut dmin);
 
-            // block sizes crossing both the 4-wide and CAND_BLOCK edges
+            // block sizes crossing the lane-width and CAND_BLOCK edges
             for m in [1usize, 3, 4, 5, CAND_BLOCK - 1, CAND_BLOCK, CAND_BLOCK + 1] {
                 let cands: Vec<usize> = (0..m).map(|i| (i * 13) % ds.n()).collect();
-                let (cand_rows, cand_norms) = view.gather(&cands);
+                let packed = pack_gathered(ks(), &view, &cands);
                 let mut acc = vec![0.0f64; m];
-                gains_tile(
-                    &SqEuclidean,
-                    &view,
-                    &dmin,
-                    0..ds.n(),
-                    &cand_rows,
-                    &cand_norms,
-                    &mut acc,
-                );
+                gains_tile(ks(), &SqEuclidean, &view, &dmin, 0..ds.n(), &packed, &mut acc);
                 let want = marginal_gains_naive(&SqEuclidean, &ds, &dmin, &cands);
                 let n = ds.n() as f64;
                 for (c, (a, w)) in acc.iter().zip(&want).enumerate() {
@@ -658,17 +607,17 @@ mod tests {
 
         // batched
         let mut batched = norms.clone();
-        let (ex_rows, ex_norms) = view.gather(&exemplars);
-        update_dmin_tile(&SqEuclidean, &view, 0..ds.n(), &ex_rows, &ex_norms, &mut batched);
+        let ex = pack_gathered(ks(), &view, &exemplars);
+        update_dmin_tile(ks(), &SqEuclidean, &view, 0..ds.n(), &ex, &mut batched);
 
         // sequential one-at-a-time
         let mut seq = norms.clone();
         for &e in &exemplars {
-            let (r, nr) = view.gather(&[e]);
-            update_dmin_tile(&SqEuclidean, &view, 0..ds.n(), &r, &nr, &mut seq);
+            let one = pack_gathered(ks(), &view, &[e]);
+            update_dmin_tile(ks(), &SqEuclidean, &view, 0..ds.n(), &one, &mut seq);
         }
-        // the batched pass uses the 4-wide micro-kernel, the m=1 passes
-        // its sequential tail: equal up to f32 dot-order differences
+        // the batched pass runs full panels, the m=1 passes a mostly
+        // padded one: equal up to f32 dot-order differences
         for (i, (a, b)) in batched.iter().zip(&seq).enumerate() {
             assert!((a - b).abs() < 1e-5, "row {i}: {a} vs {b}");
         }
@@ -681,8 +630,8 @@ mod tests {
         let view = ds.shadow::<f32>(true);
         let e0 = ds.sq_norms();
         let set = vec![1usize, 40, 77];
-        let (set_rows, set_norms) = view.gather(&set);
-        let got = loss_tile(&rbf, &view, &e0, 0..ds.n(), &set_rows, &set_norms);
+        let packed = pack_gathered(ks(), &view, &set);
+        let got = loss_tile(ks(), &rbf, &view, &e0, 0..ds.n(), &packed);
         // direct definition with the generic eval
         let mut want = 0.0f64;
         for i in 0..ds.n() {
@@ -697,6 +646,33 @@ mod tests {
             want += t as f64;
         }
         assert!((got - want).abs() < 1e-4 * want.abs().max(1.0), "{got} vs {want}");
+    }
+
+    /// The non-identity `post_sq` gains path (per-row squared distances
+    /// plus scalar epilogue) matches the naive definition — the branch
+    /// the fused vector kernel does NOT take.
+    #[test]
+    fn rbf_gains_epilogue_matches_naive() {
+        let rbf = RbfInduced::new(0.6);
+        assert!(!rbf.post_sq_is_identity());
+        for d in [3usize, 8, 32] {
+            let ds = UniformCube::new(d, 1.0).generate(140, 41 + d as u64);
+            let view = ds.shadow::<f32>(true);
+            let dmin: Vec<f32> = (0..ds.n()).map(|i| rbf.eval_vs_origin(ds.row(i))).collect();
+            let cands: Vec<usize> = (0..11).map(|i| (i * 7) % ds.n()).collect();
+            let packed = pack_gathered(ks(), &view, &cands);
+            let mut acc = vec![0.0f64; cands.len()];
+            gains_tile(ks(), &rbf, &view, &dmin, 0..ds.n(), &packed, &mut acc);
+            let want = marginal_gains_naive(&rbf, &ds, &dmin, &cands);
+            let n = ds.n() as f64;
+            for (c, (a, w)) in acc.iter().zip(&want).enumerate() {
+                let got = (*a / n) as f32;
+                assert!(
+                    (got - w).abs() <= 1e-4 * w.abs() + 1e-5,
+                    "d={d} cand {c}: {got} vs {w}"
+                );
+            }
+        }
     }
 
     #[test]
@@ -721,24 +697,16 @@ mod tests {
         let view = ds.shadow::<f32>(true);
         let dmin = ds.sq_norms();
         let cands: Vec<usize> = (0..9).collect();
-        let (cand_rows, cand_norms) = view.gather(&cands);
+        let packed = pack_gathered(ks(), &view, &cands);
 
         let mut full = vec![0.0f64; cands.len()];
-        gains_tile(&SqEuclidean, &view, &dmin, 0..ds.n(), &cand_rows, &cand_norms, &mut full);
+        gains_tile(ks(), &SqEuclidean, &view, &dmin, 0..ds.n(), &packed, &mut full);
 
         let mut tiled = vec![0.0f64; cands.len()];
         let mut start = 0;
         while start < ds.n() {
             let end = (start + GROUND_TILE.min(37)).min(ds.n());
-            gains_tile(
-                &SqEuclidean,
-                &view,
-                &dmin,
-                start..end,
-                &cand_rows,
-                &cand_norms,
-                &mut tiled,
-            );
+            gains_tile(ks(), &SqEuclidean, &view, &dmin, start..end, &packed, &mut tiled);
             start = end;
         }
         for (a, b) in full.iter().zip(&tiled) {
@@ -765,20 +733,20 @@ mod tests {
             let raw = raw_view(&ds);
 
             let set = vec![0usize, 7, 31];
-            let (sr_c, sn_c) = centered.gather(&set);
-            let (sr_r, sn_r) = raw.gather(&set);
-            let lc = loss_tile(&SqEuclidean, &centered, &e0, 0..ds.n(), &sr_c, &sn_c);
-            let lr = loss_tile(&SqEuclidean, &raw, &e0, 0..ds.n(), &sr_r, &sn_r);
+            let sp_c = pack_gathered(ks(), &centered, &set);
+            let sp_r = pack_gathered(ks(), &raw, &set);
+            let lc = loss_tile(ks(), &SqEuclidean, &centered, &e0, 0..ds.n(), &sp_c);
+            let lr = loss_tile(ks(), &SqEuclidean, &raw, &e0, 0..ds.n(), &sp_r);
             assert_eq!(lc, lr, "d={d}: loss differs on zero-mean data");
 
             let dmin = e0.clone();
             let cands: Vec<usize> = (0..10).collect();
-            let (cr_c, cn_c) = centered.gather(&cands);
-            let (cr_r, cn_r) = raw.gather(&cands);
+            let cp_c = pack_gathered(ks(), &centered, &cands);
+            let cp_r = pack_gathered(ks(), &raw, &cands);
             let mut gc = vec![0.0f64; cands.len()];
             let mut gr = vec![0.0f64; cands.len()];
-            gains_tile(&SqEuclidean, &centered, &dmin, 0..ds.n(), &cr_c, &cn_c, &mut gc);
-            gains_tile(&SqEuclidean, &raw, &dmin, 0..ds.n(), &cr_r, &cn_r, &mut gr);
+            gains_tile(ks(), &SqEuclidean, &centered, &dmin, 0..ds.n(), &cp_c, &mut gc);
+            gains_tile(ks(), &SqEuclidean, &raw, &dmin, 0..ds.n(), &cp_r, &mut gr);
             assert_eq!(gc, gr, "d={d}: gains differ on zero-mean data");
         }
     }
@@ -790,13 +758,14 @@ mod tests {
     #[test]
     fn centered_kernels_beat_raw_on_offset_data() {
         fn losses<S: Scalar>(ds: &Dataset, e0: &[f32], set: &[usize]) -> (f64, f64) {
+            let ks = simd::active();
             let centered: ShadowSet<S> = ds.shadow(true);
             let raw: ShadowSet<S> = ds.shadow(false);
-            let (sr_c, sn_c) = centered.gather(set);
-            let (sr_r, sn_r) = raw.gather(set);
+            let sp_c = pack_gathered(ks, &centered, set);
+            let sp_r = pack_gathered(ks, &raw, set);
             (
-                loss_tile(&SqEuclidean, &centered, e0, 0..ds.n(), &sr_c, &sn_c),
-                loss_tile(&SqEuclidean, &raw, e0, 0..ds.n(), &sr_r, &sn_r),
+                loss_tile(ks, &SqEuclidean, &centered, e0, 0..ds.n(), &sp_c),
+                loss_tile(ks, &SqEuclidean, &raw, e0, 0..ds.n(), &sp_r),
             )
         }
 
@@ -839,15 +808,15 @@ mod tests {
             let e0 = ds.sq_norms();
             let set = vec![1usize, 50, 99];
             let f32_view = ds.shadow::<f32>(true);
-            let (sr, sn) = f32_view.gather(&set);
-            let want = loss_tile(&SqEuclidean, &f32_view, &e0, 0..ds.n(), &sr, &sn);
+            let sp = pack_gathered(ks(), &f32_view, &set);
+            let want = loss_tile(ks(), &SqEuclidean, &f32_view, &e0, 0..ds.n(), &sp);
 
             let h = ds.shadow::<F16>(true);
-            let (hr, hn) = h.gather(&set);
-            let got16 = loss_tile(&SqEuclidean, &h, &e0, 0..ds.n(), &hr, &hn);
+            let hp = pack_gathered(ks(), &h, &set);
+            let got16 = loss_tile(ks(), &SqEuclidean, &h, &e0, 0..ds.n(), &hp);
             let b = ds.shadow::<Bf16>(true);
-            let (br, bn) = b.gather(&set);
-            let gotb = loss_tile(&SqEuclidean, &b, &e0, 0..ds.n(), &br, &bn);
+            let bp = pack_gathered(ks(), &b, &set);
+            let gotb = loss_tile(ks(), &SqEuclidean, &b, &e0, 0..ds.n(), &bp);
 
             // per-element relative quantization (2^-11 / 2^-8) amplified
             // through the squared distance and the min-selection bias

@@ -28,6 +28,30 @@
 //! the same batching structure, regardless of the requested dtype
 //! ([`Dissimilarity::effective_dtype`]).
 //!
+//! # SIMD dispatch
+//!
+//! The register-blocked core behind every Gram kernel is selected **once
+//! at oracle construction** by runtime CPU feature detection (see
+//! [`simd`] for the kernel-set contract and the packed panel layout):
+//!
+//! | path     | requires                 | lanes | half decode          |
+//! |----------|--------------------------|-------|----------------------|
+//! | `avx512` | AVX-512F (+ AVX2 set)    | 16    | F16C / bit-shift     |
+//! | `avx2`   | AVX2 + FMA + F16C        | 8     | F16C / bit-shift     |
+//! | `neon`   | aarch64 baseline         | 4     | `fcvtl` / bit-shift  |
+//! | `scalar` | always compiled          | 1     | software reference   |
+//!
+//! Fallback chain: `avx512 → avx2 → scalar` on x86-64, `neon → scalar`
+//! on aarch64, `scalar` everywhere else — feature-less hosts run the
+//! scalar set transparently. `EXEMCL_SIMD=<path>` (or the `eval.simd`
+//! config key through the engine builder) forces a path: a forced path
+//! the host cannot run is a configuration error through
+//! [`build_cpu_oracle_simd`], and a logged fallback to auto-detection
+//! through the implicit [`simd::active`] default. Every vector kernel
+//! is a `#[target_feature]` function whose **only** safety precondition
+//! is the feature check performed at dispatch; the scalar kernel set is
+//! entirely safe code and doubles as the property-test reference.
+//!
 //! # Pool lifecycle
 //!
 //! [`MultiThread`] owns a [`pool::WorkerPool`] created **once** in its
@@ -52,6 +76,7 @@
 
 mod kernels;
 pub mod pool;
+pub mod simd;
 
 use std::sync::Mutex;
 
@@ -62,10 +87,11 @@ use crate::scalar::{Bf16, Dtype, Scalar, F16};
 use crate::{Error, Result};
 
 pub use kernels::{
-    gather_rows, loss_sum_blocked, loss_sum_f64, loss_sum_naive, marginal_gains_naive, CAND_BLOCK,
-    GROUND_TILE,
+    gains_tile, gather_rows, loss_sum_blocked, loss_sum_f64, loss_sum_naive, loss_tile,
+    marginal_gains_naive, pack_gathered, update_dmin_tile, CAND_BLOCK, GROUND_TILE,
 };
 pub use pool::{DisjointSlice, GrainQueue, WorkerPool};
+pub use simd::{KernelSet, PackedBlock, SimdChoice, SimdPath};
 
 /// Shared per-oracle precomputation: the canonical dataset, its raw
 /// squared norms (the `d(v, e0)` constants of Definition 5), the
@@ -81,10 +107,12 @@ struct OracleBase<D: Dissimilarity, S: Scalar> {
     e0_sq: Vec<f32>,
     /// `Σ_i d(v_i, e0)` under `dist`.
     l0: f64,
+    /// Dispatch table selected at construction (see [`simd`]).
+    ks: &'static KernelSet,
 }
 
 impl<D: Dissimilarity, S: Scalar> OracleBase<D, S> {
-    fn new(ds: Dataset, dist: D) -> Self {
+    fn new(ds: Dataset, dist: D, ks: &'static KernelSet) -> Self {
         let e0_sq = ds.sq_norms();
         let (view, l0) = if dist.factors_through_sq_euclidean() {
             let l0 = e0_sq.iter().map(|&x| dist.post_sq(x) as f64).sum();
@@ -93,7 +121,7 @@ impl<D: Dissimilarity, S: Scalar> OracleBase<D, S> {
             let l0 = (0..ds.n()).map(|i| dist.eval_vs_origin(ds.row(i)) as f64).sum();
             (None, l0)
         };
-        Self { ds, dist, view, e0_sq, l0 }
+        Self { ds, dist, view, e0_sq, l0, ks }
     }
 
     /// The element precision the kernels actually run at.
@@ -115,15 +143,8 @@ impl<D: Dissimilarity, S: Scalar> OracleBase<D, S> {
     fn loss_sum_serial(&self, set: &[usize]) -> f64 {
         match &self.view {
             Some(view) => {
-                let (set_rows, set_norms) = view.gather(set);
-                kernels::loss_tile(
-                    &self.dist,
-                    view,
-                    &self.e0_sq,
-                    0..self.ds.n(),
-                    &set_rows,
-                    &set_norms,
-                )
+                let packed = kernels::pack_gathered(self.ks, view, set);
+                kernels::loss_tile(self.ks, &self.dist, view, &self.e0_sq, 0..self.ds.n(), &packed)
             }
             None => {
                 let (set_rows, _) = kernels::gather_rows(&self.ds, set);
@@ -136,14 +157,14 @@ impl<D: Dissimilarity, S: Scalar> OracleBase<D, S> {
         let mut acc = vec![0.0f64; candidates.len()];
         match &self.view {
             Some(view) => {
-                let (cand_rows, cand_norms) = view.gather(candidates);
+                let packed = kernels::pack_gathered(self.ks, view, candidates);
                 kernels::gains_tile(
+                    self.ks,
                     &self.dist,
                     view,
                     dmin,
                     0..self.ds.n(),
-                    &cand_rows,
-                    &cand_norms,
+                    &packed,
                     &mut acc,
                 );
             }
@@ -166,13 +187,13 @@ impl<D: Dissimilarity, S: Scalar> OracleBase<D, S> {
     fn commit_serial(&self, state: &mut DminState, idxs: &[usize]) {
         match &self.view {
             Some(view) => {
-                let (ex_rows, ex_norms) = view.gather(idxs);
+                let packed = kernels::pack_gathered(self.ks, view, idxs);
                 kernels::update_dmin_tile(
+                    self.ks,
                     &self.dist,
                     view,
                     0..self.ds.n(),
-                    &ex_rows,
-                    &ex_norms,
+                    &packed,
                     &mut state.dmin,
                 );
             }
@@ -199,9 +220,22 @@ pub struct SingleThread<D: Dissimilarity = SqEuclidean, S: Scalar = f32> {
 
 impl<D: Dissimilarity, S: Scalar> SingleThread<D, S> {
     /// Wrap a dataset with a dissimilarity at the element precision `S`
-    /// (the pairwise shadow is quantized here, once).
+    /// (the pairwise shadow is quantized here, once), on the
+    /// auto-detected kernel set (honoring `EXEMCL_SIMD`).
     pub fn with_precision(ds: Dataset, dist: D) -> Self {
-        Self { base: OracleBase::new(ds, dist) }
+        Self::with_kernel_set(ds, dist, simd::active())
+    }
+
+    /// [`Self::with_precision`] on an explicit kernel set — the forced
+    /// dispatch-path entry used by [`build_cpu_oracle_simd`] and the
+    /// SIMD ablation bench.
+    pub fn with_kernel_set(ds: Dataset, dist: D, ks: &'static KernelSet) -> Self {
+        Self { base: OracleBase::new(ds, dist, ks) }
+    }
+
+    /// The dispatch path the Gram kernels run on.
+    pub fn simd_path(&self) -> SimdPath {
+        self.base.ks.path()
     }
 
     /// The element precision the kernels actually run at (requested
@@ -284,9 +318,27 @@ pub struct MultiThread<D: Dissimilarity = SqEuclidean, S: Scalar = f32> {
 
 impl<D: Dissimilarity, S: Scalar> MultiThread<D, S> {
     /// `threads = 0` uses `std::thread::available_parallelism()`; the
-    /// pairwise shadow is quantized to `S` here, once.
+    /// pairwise shadow is quantized to `S` here, once, and the kernel
+    /// set auto-detected (honoring `EXEMCL_SIMD`).
     pub fn with_precision(ds: Dataset, dist: D, threads: usize) -> Self {
-        Self { base: OracleBase::new(ds, dist), pool: WorkerPool::new(threads) }
+        Self::with_kernel_set(ds, dist, threads, simd::active())
+    }
+
+    /// [`Self::with_precision`] on an explicit kernel set — the forced
+    /// dispatch-path entry used by [`build_cpu_oracle_simd`] and the
+    /// SIMD ablation bench.
+    pub fn with_kernel_set(
+        ds: Dataset,
+        dist: D,
+        threads: usize,
+        ks: &'static KernelSet,
+    ) -> Self {
+        Self { base: OracleBase::new(ds, dist, ks), pool: WorkerPool::new(threads) }
+    }
+
+    /// The dispatch path the Gram kernels run on.
+    pub fn simd_path(&self) -> SimdPath {
+        self.base.ks.path()
     }
 
     /// Worker count in use.
@@ -310,11 +362,12 @@ impl<D: Dissimilarity, S: Scalar> MultiThread<D, S> {
         match &self.base.view {
             Some(view) => {
                 let e0_sq = &self.base.e0_sq;
-                let (set_rows, set_norms) = view.gather(set);
+                let ks = self.base.ks;
+                let packed = kernels::pack_gathered(ks, view, set);
                 self.pool.run(&|_id| {
                     let mut local = 0.0f64;
                     while let Some(r) = tiles.claim() {
-                        local += kernels::loss_tile(dist, view, e0_sq, r, &set_rows, &set_norms);
+                        local += kernels::loss_tile(ks, dist, view, e0_sq, r, &packed);
                     }
                     *total.lock().unwrap() += local;
                 });
@@ -374,14 +427,14 @@ impl<D: Dissimilarity, S: Scalar> Oracle for MultiThread<D, S> {
                     let j = r.start;
                     let loss = match &base.view {
                         Some(view) => {
-                            let (set_rows, set_norms) = view.gather(&sets[j]);
+                            let packed = kernels::pack_gathered(base.ks, view, &sets[j]);
                             kernels::loss_tile(
+                                base.ks,
                                 &base.dist,
                                 view,
                                 &base.e0_sq,
                                 0..ds.n(),
-                                &set_rows,
-                                &set_norms,
+                                &packed,
                             )
                         }
                         None => {
@@ -414,13 +467,13 @@ impl<D: Dissimilarity, S: Scalar> Oracle for MultiThread<D, S> {
         let tiles = GrainQueue::new(ds.n(), GROUND_TILE);
         match &self.base.view {
             Some(view) => {
-                let (cand_rows, cand_norms) = view.gather(candidates);
+                let ks = self.base.ks;
+                let packed = kernels::pack_gathered(ks, view, candidates);
+                let m_cands = candidates.len();
                 self.pool.run(&|_id| {
-                    let mut local = vec![0.0f64; cand_norms.len()];
+                    let mut local = vec![0.0f64; m_cands];
                     while let Some(r) = tiles.claim() {
-                        kernels::gains_tile(
-                            dist, view, dmin, r, &cand_rows, &cand_norms, &mut local,
-                        );
+                        kernels::gains_tile(ks, dist, view, dmin, r, &packed, &mut local);
                     }
                     let mut m = merged.lock().unwrap();
                     for (slot, x) in m.iter_mut().zip(&local) {
@@ -496,9 +549,13 @@ impl<D: Dissimilarity, S: Scalar> Oracle for MultiThread<D, S> {
             };
             match &self.base.view {
                 Some(view) => {
-                    // one gather per job, shared read-only by all workers
-                    let preps: Vec<(Vec<S>, Vec<f32>)> =
-                        fused.iter().map(|&i| view.gather(jobs[i].candidates)).collect();
+                    // one gather+pack per job, shared read-only by all
+                    // workers
+                    let ks = self.base.ks;
+                    let preps: Vec<PackedBlock> = fused
+                        .iter()
+                        .map(|&i| kernels::pack_gathered(ks, view, jobs[i].candidates))
+                        .collect();
                     self.pool.run(&|_id| {
                         let mut local: Vec<Vec<f64>> = fresh_local();
                         while let Some(r) = tiles.claim() {
@@ -508,12 +565,12 @@ impl<D: Dissimilarity, S: Scalar> Oracle for MultiThread<D, S> {
                                 let stop = ((j + 1) * n).min(r.end);
                                 let ground = (start - j * n)..(stop - j * n);
                                 kernels::gains_tile(
+                                    ks,
                                     dist,
                                     view,
                                     &jobs[fused[j]].state.dmin,
                                     ground,
-                                    &preps[j].0,
-                                    &preps[j].1,
+                                    &preps[j],
                                     &mut local[j],
                                 );
                                 start = stop;
@@ -575,14 +632,13 @@ impl<D: Dissimilarity, S: Scalar> Oracle for MultiThread<D, S> {
             let tiles = GrainQueue::new(ds.n(), GROUND_TILE);
             match &self.base.view {
                 Some(view) => {
-                    let (ex_rows, ex_norms) = view.gather(idxs);
+                    let ks = self.base.ks;
+                    let packed = kernels::pack_gathered(ks, view, idxs);
                     self.pool.run(&|_id| {
                         while let Some(r) = tiles.claim() {
                             // SAFETY: tiles from the queue are disjoint ranges.
                             let dmin_tile = unsafe { shared.range_mut(r.start, r.len()) };
-                            kernels::update_dmin_tile(
-                                dist, view, r, &ex_rows, &ex_norms, dmin_tile,
-                            );
+                            kernels::update_dmin_tile(ks, dist, view, r, &packed, dmin_tile);
                         }
                     });
                 }
@@ -624,23 +680,54 @@ pub fn build_cpu_oracle_with<D: Dissimilarity + 'static>(
     threads: usize,
     dtype: Dtype,
 ) -> Box<dyn Oracle> {
-    fn st<D: Dissimilarity + 'static, S: Scalar>(ds: Dataset, dist: D) -> Box<dyn Oracle> {
-        Box::new(SingleThread::<D, S>::with_precision(ds, dist))
+    build_with_kernels(ds, dist, multi, threads, dtype, simd::active())
+}
+
+/// [`build_cpu_oracle_with`] with a forced SIMD dispatch path: fails
+/// with [`Error::Config`] when the forced path is not runnable on this
+/// host ([`SimdChoice::Auto`] never fails). The `EXEMCL_SIMD`
+/// environment variable still takes precedence over `simd`.
+pub fn build_cpu_oracle_simd_with<D: Dissimilarity + 'static>(
+    ds: Dataset,
+    dist: D,
+    multi: bool,
+    threads: usize,
+    dtype: Dtype,
+    choice: SimdChoice,
+) -> Result<Box<dyn Oracle>> {
+    Ok(build_with_kernels(ds, dist, multi, threads, dtype, simd::resolve(choice)?))
+}
+
+fn build_with_kernels<D: Dissimilarity + 'static>(
+    ds: Dataset,
+    dist: D,
+    multi: bool,
+    threads: usize,
+    dtype: Dtype,
+    ks: &'static KernelSet,
+) -> Box<dyn Oracle> {
+    fn st<D: Dissimilarity + 'static, S: Scalar>(
+        ds: Dataset,
+        dist: D,
+        ks: &'static KernelSet,
+    ) -> Box<dyn Oracle> {
+        Box::new(SingleThread::<D, S>::with_kernel_set(ds, dist, ks))
     }
     fn mt<D: Dissimilarity + 'static, S: Scalar>(
         ds: Dataset,
         dist: D,
         threads: usize,
+        ks: &'static KernelSet,
     ) -> Box<dyn Oracle> {
-        Box::new(MultiThread::<D, S>::with_precision(ds, dist, threads))
+        Box::new(MultiThread::<D, S>::with_kernel_set(ds, dist, threads, ks))
     }
     match (multi, dtype) {
-        (false, Dtype::F32) => st::<D, f32>(ds, dist),
-        (false, Dtype::F16) => st::<D, F16>(ds, dist),
-        (false, Dtype::Bf16) => st::<D, Bf16>(ds, dist),
-        (true, Dtype::F32) => mt::<D, f32>(ds, dist, threads),
-        (true, Dtype::F16) => mt::<D, F16>(ds, dist, threads),
-        (true, Dtype::Bf16) => mt::<D, Bf16>(ds, dist, threads),
+        (false, Dtype::F32) => st::<D, f32>(ds, dist, ks),
+        (false, Dtype::F16) => st::<D, F16>(ds, dist, ks),
+        (false, Dtype::Bf16) => st::<D, Bf16>(ds, dist, ks),
+        (true, Dtype::F32) => mt::<D, f32>(ds, dist, threads, ks),
+        (true, Dtype::F16) => mt::<D, F16>(ds, dist, threads, ks),
+        (true, Dtype::Bf16) => mt::<D, Bf16>(ds, dist, threads, ks),
     }
 }
 
@@ -650,6 +737,18 @@ pub fn build_cpu_oracle_with<D: Dissimilarity + 'static>(
 /// [`crate::engine::Engine::builder`].
 pub fn build_cpu_oracle(ds: Dataset, multi: bool, threads: usize, dtype: Dtype) -> Box<dyn Oracle> {
     build_cpu_oracle_with(ds, SqEuclidean, multi, threads, dtype)
+}
+
+/// [`build_cpu_oracle`] with a forced SIMD dispatch path (see
+/// [`build_cpu_oracle_simd_with`]).
+pub fn build_cpu_oracle_simd(
+    ds: Dataset,
+    multi: bool,
+    threads: usize,
+    dtype: Dtype,
+    choice: SimdChoice,
+) -> Result<Box<dyn Oracle>> {
+    build_cpu_oracle_simd_with(ds, SqEuclidean, multi, threads, dtype, choice)
 }
 
 fn validate_indices(ds: &Dataset, idx: &[usize]) -> Result<()> {
@@ -1114,5 +1213,77 @@ mod tests {
         let b = man32.eval_sets(&sets).unwrap();
         // bitwise identical: both run the direct f32 path
         assert_eq!(a, b);
+    }
+
+    /// Satellite regression: the candidate block is widened exactly
+    /// **once per oracle call** (inside `pack`), not once per ground
+    /// tile — the pre-dispatch `decoded()` scratch re-widened it for
+    /// every `gains_tile` invocation. The dataset spans several
+    /// `GROUND_TILE`s so a per-tile re-decode would show up as extra
+    /// counts; packs happen on the calling thread, so the thread-local
+    /// counter observes them even for the MT oracle.
+    #[test]
+    fn candidate_block_is_widened_once_per_call() {
+        let n = 4 * GROUND_TILE + 17;
+        let ds = UniformCube::new(8, 1.0).generate(n, 13);
+        let cands: Vec<usize> = (0..96).collect();
+
+        let st16 = SingleThread::<SqEuclidean, F16>::with_precision(ds.clone(), SqEuclidean);
+        let state = st16.init_state();
+        let before = simd::pack_decodes();
+        st16.marginal_gains(&state, &cands).unwrap();
+        assert_eq!(simd::pack_decodes() - before, 1, "f16 ST gains: one pack-decode per call");
+
+        let before = simd::pack_decodes();
+        st16.loss_sum(&cands);
+        assert_eq!(simd::pack_decodes() - before, 1, "f16 ST loss: one pack-decode per call");
+
+        let mt16 = MultiThread::<SqEuclidean, F16>::with_precision(ds.clone(), SqEuclidean, 4);
+        let state = mt16.init_state();
+        let before = simd::pack_decodes();
+        mt16.marginal_gains(&state, &cands).unwrap();
+        assert_eq!(simd::pack_decodes() - before, 1, "f16 MT gains: one pack-decode per call");
+
+        // f32 storage never decodes
+        let st32 = SingleThread::new(ds);
+        let state = st32.init_state();
+        let before = simd::pack_decodes();
+        st32.marginal_gains(&state, &cands).unwrap();
+        assert_eq!(simd::pack_decodes() - before, 0, "f32 never pack-decodes");
+    }
+
+    /// Forced dispatch paths: scalar always builds and agrees with the
+    /// auto path; a path the host cannot run is a configuration error.
+    #[test]
+    fn forced_simd_path_builds_or_errors_cleanly() {
+        let ds = small();
+        let sets = vec![vec![0usize, 5], vec![9]];
+        let auto = build_cpu_oracle_simd(ds.clone(), false, 0, Dtype::F32, SimdChoice::Auto)
+            .unwrap()
+            .eval_sets(&sets)
+            .unwrap();
+        if std::env::var("EXEMCL_SIMD").is_ok() {
+            return; // env forcing overrides the choice; matrix covered in CI
+        }
+        let scalar = build_cpu_oracle_simd(
+            ds.clone(),
+            true,
+            2,
+            Dtype::F32,
+            SimdChoice::Force(SimdPath::Scalar),
+        )
+        .unwrap()
+        .eval_sets(&sets)
+        .unwrap();
+        for (a, s) in auto.iter().zip(&scalar) {
+            assert!((a - s).abs() <= 1e-5 * a.abs().max(1e-3), "auto {a} vs scalar {s}");
+        }
+        if let Some(unavailable) = [SimdPath::Avx512, SimdPath::Avx2, SimdPath::Neon]
+            .into_iter()
+            .find(|p| !simd::available_paths().contains(p))
+        {
+            let err = build_cpu_oracle_simd(ds, false, 0, Dtype::F32, SimdChoice::Force(unavailable));
+            assert!(err.is_err(), "forcing {unavailable} should fail on this host");
+        }
     }
 }

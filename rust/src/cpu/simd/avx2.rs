@@ -1,0 +1,301 @@
+//! AVX2 + FMA kernel set (8 candidate lanes per panel) and the shared
+//! x86 F16C half-precision decoders.
+//!
+//! # Unsafe contract
+//!
+//! Every function here is an `unsafe fn` carrying a `#[target_feature]`
+//! attribute; the **only** safety precondition is that the enabled
+//! features (`avx2`, `fma`, and `f16c` for [`decode_f16`]) are present
+//! on the executing CPU. That precondition is established once, by
+//! `simd::kernel_set_for`, which refuses to hand out [`KS`] unless
+//! `avx2 && fma && f16c` were detected at runtime. All pointer
+//! arithmetic stays inside the argument slices, whose shapes are
+//! debug-asserted on entry (padded lanes are allocated by
+//! `PackedBlock`, so full-width panel loads are always in bounds).
+//!
+//! The numerics follow the contract in the `simd` module docs: per-lane
+//! dot products accumulate over `j` in index order (FMA-contracted —
+//! the one tolerated divergence from scalar), and the clamp computes
+//! `max((pnorm − (dot + dot)) + nv, 0)`, the exact scalar association.
+//! Gains accumulate `max(dmin − dd, 0)` into two `f64` accumulator
+//! vectors per panel; padded lanes carry `+∞` norms and therefore
+//! contribute exactly `+0.0`.
+
+#![deny(unsafe_op_in_unsafe_fn)]
+
+use core::arch::x86_64::*;
+
+use super::{KernelSet, SimdPath};
+use crate::scalar::f16_decode;
+
+const W: usize = 8;
+
+pub(super) static KS: KernelSet = KernelSet {
+    path: SimdPath::Avx2,
+    width: W,
+    gains_tile,
+    sq_dists_row,
+    min_sq_tile,
+    sq_dist,
+    decode_f16,
+    decode_bf16,
+};
+
+/// `max((pn − (dot + dot)) + nv, 0)` — `dot + dot` is the exact
+/// `2·dot`, and `max_ps` with the value in the *first* operand returns
+/// `0` on NaN, matching scalar `f32::max(NaN, 0.0)`.
+#[inline]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn clamp_dd(pn: __m256, dot: __m256, nv: __m256) -> __m256 {
+    let dot2 = _mm256_add_ps(dot, dot);
+    _mm256_max_ps(_mm256_add_ps(_mm256_sub_ps(pn, dot2), nv), _mm256_setzero_ps())
+}
+
+#[target_feature(enable = "avx2,fma")]
+unsafe fn gains_tile(
+    ground: &[f32],
+    gnorms: &[f32],
+    dmin: &[f32],
+    d: usize,
+    panels: &[f32],
+    pnorms: &[f32],
+    acc: &mut [f64],
+) {
+    let rows = gnorms.len();
+    let m = acc.len();
+    debug_assert_eq!(ground.len(), rows * d);
+    debug_assert_eq!(dmin.len(), rows);
+    debug_assert_eq!(panels.len(), pnorms.len() * d);
+    debug_assert!(m <= pnorms.len() && pnorms.len() % W == 0);
+    // SAFETY: avx2+fma hold per the module contract; all offsets below
+    // stay inside the debug-asserted slice shapes.
+    unsafe {
+        let zero = _mm256_setzero_ps();
+        let gp = ground.as_ptr();
+        let n_panels = pnorms.len() / W;
+        for p in 0..n_panels {
+            let pp = panels.as_ptr().add(p * W * d);
+            let pn = _mm256_loadu_ps(pnorms.as_ptr().add(p * W));
+            // f64 gain accumulators for this panel's 8 lanes
+            let mut alo = _mm256_setzero_pd();
+            let mut ahi = _mm256_setzero_pd();
+            let mut r = 0usize;
+            // four ground rows at a time: four independent FMA chains
+            // hide the FMA latency and amortize the panel loads
+            while r + 4 <= rows {
+                let v0 = gp.add(r * d);
+                let v1 = gp.add((r + 1) * d);
+                let v2 = gp.add((r + 2) * d);
+                let v3 = gp.add((r + 3) * d);
+                let mut d0 = zero;
+                let mut d1 = zero;
+                let mut d2 = zero;
+                let mut d3 = zero;
+                for j in 0..d {
+                    let col = _mm256_loadu_ps(pp.add(j * W));
+                    d0 = _mm256_fmadd_ps(col, _mm256_set1_ps(*v0.add(j)), d0);
+                    d1 = _mm256_fmadd_ps(col, _mm256_set1_ps(*v1.add(j)), d1);
+                    d2 = _mm256_fmadd_ps(col, _mm256_set1_ps(*v2.add(j)), d2);
+                    d3 = _mm256_fmadd_ps(col, _mm256_set1_ps(*v3.add(j)), d3);
+                }
+                for (dot, rr) in [(d0, r), (d1, r + 1), (d2, r + 2), (d3, r + 3)] {
+                    let dd = clamp_dd(pn, dot, _mm256_set1_ps(gnorms[rr]));
+                    let improve =
+                        _mm256_max_ps(_mm256_sub_ps(_mm256_set1_ps(dmin[rr]), dd), zero);
+                    alo = _mm256_add_pd(alo, _mm256_cvtps_pd(_mm256_castps256_ps128(improve)));
+                    ahi = _mm256_add_pd(ahi, _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(improve)));
+                }
+                r += 4;
+            }
+            while r < rows {
+                let v = gp.add(r * d);
+                let mut dot = zero;
+                for j in 0..d {
+                    let col = _mm256_loadu_ps(pp.add(j * W));
+                    dot = _mm256_fmadd_ps(col, _mm256_set1_ps(*v.add(j)), dot);
+                }
+                let dd = clamp_dd(pn, dot, _mm256_set1_ps(gnorms[r]));
+                let improve = _mm256_max_ps(_mm256_sub_ps(_mm256_set1_ps(dmin[r]), dd), zero);
+                alo = _mm256_add_pd(alo, _mm256_cvtps_pd(_mm256_castps256_ps128(improve)));
+                ahi = _mm256_add_pd(ahi, _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(improve)));
+                r += 1;
+            }
+            let mut tmp = [0.0f64; W];
+            _mm256_storeu_pd(tmp.as_mut_ptr(), alo);
+            _mm256_storeu_pd(tmp.as_mut_ptr().add(4), ahi);
+            let base = p * W;
+            for (lane, &t) in tmp.iter().enumerate().take(m.saturating_sub(base).min(W)) {
+                acc[base + lane] += t;
+            }
+        }
+    }
+}
+
+#[target_feature(enable = "avx2,fma")]
+unsafe fn sq_dists_row(
+    v: &[f32],
+    nv: f32,
+    d: usize,
+    panels: &[f32],
+    pnorms: &[f32],
+    out: &mut [f32],
+) {
+    debug_assert_eq!(v.len(), d);
+    debug_assert_eq!(panels.len(), pnorms.len() * d);
+    debug_assert!(out.len() <= pnorms.len() && pnorms.len() % W == 0);
+    // SAFETY: as for gains_tile.
+    unsafe {
+        let zero = _mm256_setzero_ps();
+        let nvv = _mm256_set1_ps(nv);
+        let m = out.len();
+        let n_panels = pnorms.len() / W;
+        for p in 0..n_panels {
+            let pp = panels.as_ptr().add(p * W * d);
+            let mut dot = zero;
+            for j in 0..d {
+                let col = _mm256_loadu_ps(pp.add(j * W));
+                dot = _mm256_fmadd_ps(col, _mm256_set1_ps(*v.as_ptr().add(j)), dot);
+            }
+            let dd = clamp_dd(_mm256_loadu_ps(pnorms.as_ptr().add(p * W)), dot, nvv);
+            let mut tmp = [0.0f32; W];
+            _mm256_storeu_ps(tmp.as_mut_ptr(), dd);
+            let base = p * W;
+            for (lane, &t) in tmp.iter().enumerate().take(m.saturating_sub(base).min(W)) {
+                out[base + lane] = t;
+            }
+        }
+    }
+}
+
+#[target_feature(enable = "avx2,fma")]
+unsafe fn min_sq_tile(
+    ground: &[f32],
+    gnorms: &[f32],
+    d: usize,
+    panels: &[f32],
+    pnorms: &[f32],
+    out_min: &mut [f32],
+) {
+    let rows = gnorms.len();
+    debug_assert_eq!(ground.len(), rows * d);
+    debug_assert_eq!(out_min.len(), rows);
+    debug_assert_eq!(panels.len(), pnorms.len() * d);
+    debug_assert_eq!(pnorms.len() % W, 0);
+    // SAFETY: as for gains_tile.
+    unsafe {
+        let zero = _mm256_setzero_ps();
+        let n_panels = pnorms.len() / W;
+        for (r, slot) in out_min.iter_mut().enumerate() {
+            let v = ground.as_ptr().add(r * d);
+            let nvv = _mm256_set1_ps(gnorms[r]);
+            let mut best = _mm256_set1_ps(f32::INFINITY);
+            let mut p = 0usize;
+            // two panels at a time: two independent FMA chains per row
+            while p + 2 <= n_panels {
+                let ppa = panels.as_ptr().add(p * W * d);
+                let ppb = panels.as_ptr().add((p + 1) * W * d);
+                let mut da = zero;
+                let mut db = zero;
+                for j in 0..d {
+                    let vj = _mm256_set1_ps(*v.add(j));
+                    da = _mm256_fmadd_ps(_mm256_loadu_ps(ppa.add(j * W)), vj, da);
+                    db = _mm256_fmadd_ps(_mm256_loadu_ps(ppb.add(j * W)), vj, db);
+                }
+                let pna = _mm256_loadu_ps(pnorms.as_ptr().add(p * W));
+                let pnb = _mm256_loadu_ps(pnorms.as_ptr().add((p + 1) * W));
+                best = _mm256_min_ps(best, clamp_dd(pna, da, nvv));
+                best = _mm256_min_ps(best, clamp_dd(pnb, db, nvv));
+                p += 2;
+            }
+            if p < n_panels {
+                let pp = panels.as_ptr().add(p * W * d);
+                let mut dot = zero;
+                for j in 0..d {
+                    dot = _mm256_fmadd_ps(_mm256_loadu_ps(pp.add(j * W)), _mm256_set1_ps(*v.add(j)), dot);
+                }
+                let pn = _mm256_loadu_ps(pnorms.as_ptr().add(p * W));
+                best = _mm256_min_ps(best, clamp_dd(pn, dot, nvv));
+            }
+            let mut tmp = [0.0f32; W];
+            _mm256_storeu_ps(tmp.as_mut_ptr(), best);
+            // clamped values are NaN-free, so the fold order is exact
+            *slot = tmp.iter().copied().fold(f32::INFINITY, f32::min);
+        }
+    }
+}
+
+#[target_feature(enable = "avx2,fma")]
+unsafe fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
+    let d = a.len();
+    debug_assert_eq!(b.len(), d);
+    // SAFETY: as for gains_tile.
+    unsafe {
+        let mut accv = _mm256_setzero_ps();
+        let mut j = 0usize;
+        while j + W <= d {
+            let diff = _mm256_sub_ps(
+                _mm256_loadu_ps(a.as_ptr().add(j)),
+                _mm256_loadu_ps(b.as_ptr().add(j)),
+            );
+            accv = _mm256_fmadd_ps(diff, diff, accv);
+            j += W;
+        }
+        let mut tmp = [0.0f32; W];
+        _mm256_storeu_ps(tmp.as_mut_ptr(), accv);
+        let mut s: f32 = tmp.iter().sum();
+        while j < d {
+            let diff = a[j] - b[j];
+            s += diff * diff;
+            j += 1;
+        }
+        s
+    }
+}
+
+/// F16C hardware widen, 8 halfs per `vcvtph2ps`. Conversion to the
+/// wider format is exact, so the result is bit-identical to
+/// [`f16_decode`]. Shared by the AVX2 *and* AVX-512 kernel sets.
+#[target_feature(enable = "avx,f16c")]
+pub(super) unsafe fn decode_f16(bits: &[u16], out: &mut [f32]) {
+    let n = bits.len();
+    debug_assert_eq!(out.len(), n);
+    // SAFETY: f16c holds per the module contract; loads/stores stay
+    // inside the equal-length argument slices.
+    unsafe {
+        let n8 = n / W * W;
+        let mut i = 0usize;
+        while i < n8 {
+            let h = _mm_loadu_si128(bits.as_ptr().add(i) as *const __m128i);
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_cvtph_ps(h));
+            i += W;
+        }
+        while i < n {
+            out[i] = f16_decode(bits[i]);
+            i += 1;
+        }
+    }
+}
+
+/// bf16 widen: zero-extend each 16-bit word and shift into the high
+/// half — bit-identical to `f32::from_bits(bits << 16)` by definition.
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn decode_bf16(bits: &[u16], out: &mut [f32]) {
+    let n = bits.len();
+    debug_assert_eq!(out.len(), n);
+    // SAFETY: avx2 holds per the module contract; loads/stores stay
+    // inside the equal-length argument slices.
+    unsafe {
+        let n8 = n / W * W;
+        let mut i = 0usize;
+        while i < n8 {
+            let h = _mm_loadu_si128(bits.as_ptr().add(i) as *const __m128i);
+            let wide = _mm256_slli_epi32::<16>(_mm256_cvtepu16_epi32(h));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_castsi256_ps(wide));
+            i += W;
+        }
+        while i < n {
+            out[i] = f32::from_bits((bits[i] as u32) << 16);
+            i += 1;
+        }
+    }
+}

@@ -1,0 +1,253 @@
+//! AVX-512F kernel set: 16 candidate lanes per panel.
+//!
+//! # Unsafe contract
+//!
+//! Identical to `avx2` (see its module docs): every `unsafe fn`'s single
+//! precondition is that `avx512f` is present at runtime, established by
+//! `simd::kernel_set_for` — which additionally requires `f16c && avx2`
+//! before handing out [`KS`], because the half-precision decoders are
+//! the shared F16C ones from the `avx2` module (stable on every AVX-512
+//! part we target, and decode is pack-time, not in the hot loop).
+//!
+//! Only `avx512f` instructions are used: the f32→f64 widen of the high
+//! eight lanes goes through `_mm512_shuffle_f32x4` + a 256-bit cast
+//! rather than `_mm512_extractf32x8_ps` (AVX512DQ), and horizontal
+//! reductions store to the stack and fold in scalar code.
+
+#![deny(unsafe_op_in_unsafe_fn)]
+
+use core::arch::x86_64::*;
+
+use super::avx2::{decode_bf16, decode_f16};
+use super::{KernelSet, SimdPath};
+
+const W: usize = 16;
+
+pub(super) static KS: KernelSet = KernelSet {
+    path: SimdPath::Avx512,
+    width: W,
+    gains_tile,
+    sq_dists_row,
+    min_sq_tile,
+    sq_dist,
+    decode_f16,
+    decode_bf16,
+};
+
+/// Same association and NaN behavior as the scalar reference — see
+/// `avx2::clamp_dd`.
+#[inline]
+#[target_feature(enable = "avx512f")]
+unsafe fn clamp_dd(pn: __m512, dot: __m512, nv: __m512) -> __m512 {
+    let dot2 = _mm512_add_ps(dot, dot);
+    _mm512_max_ps(_mm512_add_ps(_mm512_sub_ps(pn, dot2), nv), _mm512_setzero_ps())
+}
+
+/// Low and high eight lanes of `x` as `__m256` halves, avx512f-only.
+#[inline]
+#[target_feature(enable = "avx512f")]
+unsafe fn halves(x: __m512) -> (__m256, __m256) {
+    let lo = _mm512_castps512_ps256(x);
+    // 0b1110_1110 replicates 128-bit lanes [2,3] into the low half
+    let hi = _mm512_castps512_ps256(_mm512_shuffle_f32x4::<0b1110_1110>(x, x));
+    (lo, hi)
+}
+
+#[target_feature(enable = "avx512f")]
+unsafe fn gains_tile(
+    ground: &[f32],
+    gnorms: &[f32],
+    dmin: &[f32],
+    d: usize,
+    panels: &[f32],
+    pnorms: &[f32],
+    acc: &mut [f64],
+) {
+    let rows = gnorms.len();
+    let m = acc.len();
+    debug_assert_eq!(ground.len(), rows * d);
+    debug_assert_eq!(dmin.len(), rows);
+    debug_assert_eq!(panels.len(), pnorms.len() * d);
+    debug_assert!(m <= pnorms.len() && pnorms.len() % W == 0);
+    // SAFETY: avx512f holds per the module contract; all offsets stay
+    // inside the debug-asserted slice shapes.
+    unsafe {
+        let zero = _mm512_setzero_ps();
+        let gp = ground.as_ptr();
+        let n_panels = pnorms.len() / W;
+        for p in 0..n_panels {
+            let pp = panels.as_ptr().add(p * W * d);
+            let pn = _mm512_loadu_ps(pnorms.as_ptr().add(p * W));
+            let mut alo = _mm512_setzero_pd();
+            let mut ahi = _mm512_setzero_pd();
+            let mut r = 0usize;
+            while r + 4 <= rows {
+                let v0 = gp.add(r * d);
+                let v1 = gp.add((r + 1) * d);
+                let v2 = gp.add((r + 2) * d);
+                let v3 = gp.add((r + 3) * d);
+                let mut d0 = zero;
+                let mut d1 = zero;
+                let mut d2 = zero;
+                let mut d3 = zero;
+                for j in 0..d {
+                    let col = _mm512_loadu_ps(pp.add(j * W));
+                    d0 = _mm512_fmadd_ps(col, _mm512_set1_ps(*v0.add(j)), d0);
+                    d1 = _mm512_fmadd_ps(col, _mm512_set1_ps(*v1.add(j)), d1);
+                    d2 = _mm512_fmadd_ps(col, _mm512_set1_ps(*v2.add(j)), d2);
+                    d3 = _mm512_fmadd_ps(col, _mm512_set1_ps(*v3.add(j)), d3);
+                }
+                for (dot, rr) in [(d0, r), (d1, r + 1), (d2, r + 2), (d3, r + 3)] {
+                    let dd = clamp_dd(pn, dot, _mm512_set1_ps(gnorms[rr]));
+                    let improve =
+                        _mm512_max_ps(_mm512_sub_ps(_mm512_set1_ps(dmin[rr]), dd), zero);
+                    let (lo, hi) = halves(improve);
+                    alo = _mm512_add_pd(alo, _mm512_cvtps_pd(lo));
+                    ahi = _mm512_add_pd(ahi, _mm512_cvtps_pd(hi));
+                }
+                r += 4;
+            }
+            while r < rows {
+                let v = gp.add(r * d);
+                let mut dot = zero;
+                for j in 0..d {
+                    let col = _mm512_loadu_ps(pp.add(j * W));
+                    dot = _mm512_fmadd_ps(col, _mm512_set1_ps(*v.add(j)), dot);
+                }
+                let dd = clamp_dd(pn, dot, _mm512_set1_ps(gnorms[r]));
+                let improve = _mm512_max_ps(_mm512_sub_ps(_mm512_set1_ps(dmin[r]), dd), zero);
+                let (lo, hi) = halves(improve);
+                alo = _mm512_add_pd(alo, _mm512_cvtps_pd(lo));
+                ahi = _mm512_add_pd(ahi, _mm512_cvtps_pd(hi));
+                r += 1;
+            }
+            let mut tmp = [0.0f64; W];
+            _mm512_storeu_pd(tmp.as_mut_ptr(), alo);
+            _mm512_storeu_pd(tmp.as_mut_ptr().add(8), ahi);
+            let base = p * W;
+            for (lane, &t) in tmp.iter().enumerate().take(m.saturating_sub(base).min(W)) {
+                acc[base + lane] += t;
+            }
+        }
+    }
+}
+
+#[target_feature(enable = "avx512f")]
+unsafe fn sq_dists_row(
+    v: &[f32],
+    nv: f32,
+    d: usize,
+    panels: &[f32],
+    pnorms: &[f32],
+    out: &mut [f32],
+) {
+    debug_assert_eq!(v.len(), d);
+    debug_assert_eq!(panels.len(), pnorms.len() * d);
+    debug_assert!(out.len() <= pnorms.len() && pnorms.len() % W == 0);
+    // SAFETY: as for gains_tile.
+    unsafe {
+        let zero = _mm512_setzero_ps();
+        let nvv = _mm512_set1_ps(nv);
+        let m = out.len();
+        let n_panels = pnorms.len() / W;
+        for p in 0..n_panels {
+            let pp = panels.as_ptr().add(p * W * d);
+            let mut dot = zero;
+            for j in 0..d {
+                let col = _mm512_loadu_ps(pp.add(j * W));
+                dot = _mm512_fmadd_ps(col, _mm512_set1_ps(*v.as_ptr().add(j)), dot);
+            }
+            let dd = clamp_dd(_mm512_loadu_ps(pnorms.as_ptr().add(p * W)), dot, nvv);
+            let mut tmp = [0.0f32; W];
+            _mm512_storeu_ps(tmp.as_mut_ptr(), dd);
+            let base = p * W;
+            for (lane, &t) in tmp.iter().enumerate().take(m.saturating_sub(base).min(W)) {
+                out[base + lane] = t;
+            }
+        }
+    }
+}
+
+#[target_feature(enable = "avx512f")]
+unsafe fn min_sq_tile(
+    ground: &[f32],
+    gnorms: &[f32],
+    d: usize,
+    panels: &[f32],
+    pnorms: &[f32],
+    out_min: &mut [f32],
+) {
+    let rows = gnorms.len();
+    debug_assert_eq!(ground.len(), rows * d);
+    debug_assert_eq!(out_min.len(), rows);
+    debug_assert_eq!(panels.len(), pnorms.len() * d);
+    debug_assert_eq!(pnorms.len() % W, 0);
+    // SAFETY: as for gains_tile.
+    unsafe {
+        let zero = _mm512_setzero_ps();
+        let n_panels = pnorms.len() / W;
+        for (r, slot) in out_min.iter_mut().enumerate() {
+            let v = ground.as_ptr().add(r * d);
+            let nvv = _mm512_set1_ps(gnorms[r]);
+            let mut best = _mm512_set1_ps(f32::INFINITY);
+            let mut p = 0usize;
+            while p + 2 <= n_panels {
+                let ppa = panels.as_ptr().add(p * W * d);
+                let ppb = panels.as_ptr().add((p + 1) * W * d);
+                let mut da = zero;
+                let mut db = zero;
+                for j in 0..d {
+                    let vj = _mm512_set1_ps(*v.add(j));
+                    da = _mm512_fmadd_ps(_mm512_loadu_ps(ppa.add(j * W)), vj, da);
+                    db = _mm512_fmadd_ps(_mm512_loadu_ps(ppb.add(j * W)), vj, db);
+                }
+                let pna = _mm512_loadu_ps(pnorms.as_ptr().add(p * W));
+                let pnb = _mm512_loadu_ps(pnorms.as_ptr().add((p + 1) * W));
+                best = _mm512_min_ps(best, clamp_dd(pna, da, nvv));
+                best = _mm512_min_ps(best, clamp_dd(pnb, db, nvv));
+                p += 2;
+            }
+            if p < n_panels {
+                let pp = panels.as_ptr().add(p * W * d);
+                let mut dot = zero;
+                for j in 0..d {
+                    dot =
+                        _mm512_fmadd_ps(_mm512_loadu_ps(pp.add(j * W)), _mm512_set1_ps(*v.add(j)), dot);
+                }
+                let pn = _mm512_loadu_ps(pnorms.as_ptr().add(p * W));
+                best = _mm512_min_ps(best, clamp_dd(pn, dot, nvv));
+            }
+            let mut tmp = [0.0f32; W];
+            _mm512_storeu_ps(tmp.as_mut_ptr(), best);
+            *slot = tmp.iter().copied().fold(f32::INFINITY, f32::min);
+        }
+    }
+}
+
+#[target_feature(enable = "avx512f")]
+unsafe fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
+    let d = a.len();
+    debug_assert_eq!(b.len(), d);
+    // SAFETY: as for gains_tile.
+    unsafe {
+        let mut accv = _mm512_setzero_ps();
+        let mut j = 0usize;
+        while j + W <= d {
+            let diff = _mm512_sub_ps(
+                _mm512_loadu_ps(a.as_ptr().add(j)),
+                _mm512_loadu_ps(b.as_ptr().add(j)),
+            );
+            accv = _mm512_fmadd_ps(diff, diff, accv);
+            j += W;
+        }
+        let mut tmp = [0.0f32; W];
+        _mm512_storeu_ps(tmp.as_mut_ptr(), accv);
+        let mut s: f32 = tmp.iter().sum();
+        while j < d {
+            let diff = a[j] - b[j];
+            s += diff * diff;
+            j += 1;
+        }
+        s
+    }
+}

@@ -1,0 +1,821 @@
+//! Runtime-dispatched SIMD micro-kernels for the Gram hot loop.
+//!
+//! The register-blocked core of [`crate::cpu`] — candidate dot products,
+//! fused marginal gains, min-squared-distance scans and half-precision
+//! decode — exists in one scalar reference implementation (this module,
+//! always compiled, bit-stable) and up to three `core::arch` vector
+//! implementations selected **once at oracle construction** by runtime
+//! feature detection:
+//!
+//! | path     | ISA gate (runtime)              | lanes (`width`) | half decode            |
+//! |----------|---------------------------------|-----------------|------------------------|
+//! | `avx512` | `avx512f && f16c && avx2`       | 16              | F16C `vcvtph2ps`       |
+//! | `avx2`   | `avx2 && fma && f16c`           | 8               | F16C `vcvtph2ps`       |
+//! | `neon`   | aarch64 baseline                | 4               | `fcvtl`/`fcvtl2`       |
+//! | `scalar` | always                          | 1               | portable bit-twiddle   |
+//!
+//! Fallback chain: `avx512 → avx2 → neon → scalar` — the first row whose
+//! gate passes on the host wins [`SimdChoice::Auto`]; a host with no
+//! detected features transparently runs the scalar reference. The
+//! selection lands in a [`KernelSet`] — a table of `unsafe fn` pointers
+//! the generic drivers in `cpu::kernels` call through — so the choice is
+//! paid once per oracle, not once per tile.
+//!
+//! # Forcing a path
+//!
+//! `EXEMCL_SIMD=scalar|avx2|avx512|neon|auto` overrides everything
+//! (benchmarks and bug reports pin the code path); below it, the
+//! `eval.simd` config key / [`crate::engine::EngineBuilder::simd`] force
+//! a specific [`SimdChoice`]. Forcing a path the host cannot run is a
+//! configuration error through [`resolve`]; the legacy infallible oracle
+//! constructors instead warn and fall back to auto-detection
+//! ([`active`]). The selected path is logged once per process per path.
+//!
+//! # Packed panel layout
+//!
+//! Vector kernels read candidates from a [`PackedBlock`]: rows regrouped
+//! into *panels* of `width` candidates stored lane-major
+//! (`rows[(panel·d + j)·width + lane]`), so the inner `j` loop issues one
+//! aligned-width load per panel instead of `width` strided row loads.
+//! The tail panel is padded with `0.0` rows and `+∞` norms: a padded
+//! lane's clamped squared distance is `+∞`, so it never wins a min and
+//! contributes exactly `0.0` gain — the kernels have **no** lane masks.
+//! `width = 1` degenerates to the legacy row-major block, which is how
+//! the scalar path stays bit-identical to the pre-SIMD kernels.
+//!
+//! # Numerics contract
+//!
+//! Every path computes, per (ground row `v`, candidate `c`):
+//! `clamp = max(norms[c] − (dot + dot) + ‖v‖², 0)` with the per-lane dot
+//! accumulated over `j` **in index order** — the same association as the
+//! scalar reference (`norms[c] − 2·dot + ‖v‖²` groups identically, and
+//! `dot + dot` is the exact `2·dot`). The only tolerated divergence from
+//! the scalar path is FMA contraction inside the dot product (ulp-scale);
+//! gains accumulate the mask-free `max(dmin − clamp, 0)` into `f64`
+//! (adding `+0.0` is an `f64` identity, and `max(NaN, 0) = 0` matches the
+//! scalar `improve > 0.0` guard on NaN). Hardware half conversion is
+//! exact, so decoded tiles are bit-identical to
+//! [`crate::scalar::f16_decode`] on every path.
+//!
+//! # Unsafe contract
+//!
+//! Each `target_feature` module (`avx2`, `avx512`, `neon`) compiles with
+//! `#![deny(unsafe_op_in_unsafe_fn)]`; its kernels are `unsafe fn` whose
+//! **single** safety precondition is "the enabled CPU features are
+//! present at runtime". That precondition is established exactly once,
+//! in [`kernel_set_for`], which never hands out a [`KernelSet`] whose
+//! gate did not pass — so the drivers' call sites discharge their
+//! obligation by construction. Slice-shape preconditions are ordinary
+//! `debug_assert!`s: all pointer arithmetic stays inside the slices
+//! passed in, padded lanes included (the [`PackedBlock`] allocates
+//! them).
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+use crate::scalar::{f16_decode, HalfKind, Scalar};
+use crate::{Error, Result};
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+#[cfg(target_arch = "x86_64")]
+mod avx512;
+#[cfg(target_arch = "aarch64")]
+mod neon;
+
+/// One concrete kernel implementation family.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SimdPath {
+    /// Portable reference (always available, bit-stable).
+    Scalar,
+    /// AVX2 + FMA + F16C, 8 lanes.
+    Avx2,
+    /// AVX-512F (+ F16C/AVX2 for decode), 16 lanes.
+    Avx512,
+    /// AArch64 NEON, 4 lanes.
+    Neon,
+}
+
+impl SimdPath {
+    /// Canonical lowercase name (`EXEMCL_SIMD` / `eval.simd` vocabulary).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SimdPath::Scalar => "scalar",
+            SimdPath::Avx2 => "avx2",
+            SimdPath::Avx512 => "avx512",
+            SimdPath::Neon => "neon",
+        }
+    }
+
+    fn bit(self) -> u8 {
+        match self {
+            SimdPath::Scalar => 1,
+            SimdPath::Avx2 => 2,
+            SimdPath::Avx512 => 4,
+            SimdPath::Neon => 8,
+        }
+    }
+}
+
+impl std::fmt::Display for SimdPath {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for SimdPath {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "scalar" => Ok(SimdPath::Scalar),
+            "avx2" => Ok(SimdPath::Avx2),
+            "avx512" | "avx512f" => Ok(SimdPath::Avx512),
+            "neon" => Ok(SimdPath::Neon),
+            other => Err(Error::Config(format!(
+                "unknown SIMD path {other:?} (auto|scalar|avx2|avx512|neon)"
+            ))),
+        }
+    }
+}
+
+/// Dispatch request: pick the best supported path, or force one
+/// (erroring at oracle build when the host can't run it).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SimdChoice {
+    /// Best supported path (`avx512 → avx2 → neon → scalar`).
+    #[default]
+    Auto,
+    /// Exactly this path or a configuration error.
+    Force(SimdPath),
+}
+
+impl std::fmt::Display for SimdChoice {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SimdChoice::Auto => f.write_str("auto"),
+            SimdChoice::Force(p) => p.fmt(f),
+        }
+    }
+}
+
+impl std::str::FromStr for SimdChoice {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        if s == "auto" {
+            return Ok(SimdChoice::Auto);
+        }
+        Ok(SimdChoice::Force(s.parse()?))
+    }
+}
+
+/// Fused marginal gains over one decoded ground tile:
+/// `acc[c] += Σ_rows max(dmin[r] − clamp(c, r), 0)` (identity `post_sq`).
+/// Args: `(ground, gnorms, dmin, d, panels, pnorms, acc)`.
+type GainsTileFn = unsafe fn(&[f32], &[f32], &[f32], usize, &[f32], &[f32], &mut [f64]);
+
+/// Clamped squared distances of one ground row against the whole packed
+/// block, one `f32` per real candidate.
+/// Args: `(v, nv, d, panels, pnorms, out)`.
+type SqDistsRowFn = unsafe fn(&[f32], f32, usize, &[f32], &[f32], &mut [f32]);
+
+/// Per-row minimum clamped squared distance to the packed block
+/// (overwrite semantics; `+∞` when the block is empty).
+/// Args: `(ground, gnorms, d, panels, pnorms, out_min)`.
+type MinSqTileFn = unsafe fn(&[f32], &[f32], usize, &[f32], &[f32], &mut [f32]);
+
+/// Full-width squared Euclidean distance between two equal-length rows.
+type SqDistFn = unsafe fn(&[f32], &[f32]) -> f32;
+
+/// Widen 16-bit storage into `f32` (`out.len() == bits.len()`).
+type DecodeFn = unsafe fn(&[u16], &mut [f32]);
+
+/// A resolved kernel family: the function-pointer dispatch table the
+/// precision-generic drivers in `cpu::kernels` call through. Obtainable
+/// only from [`resolve`] / [`kernel_set_for`] / [`active`], which verify
+/// the required CPU features at runtime — that check is the safety
+/// argument for every indirect call (see the module docs).
+pub struct KernelSet {
+    path: SimdPath,
+    /// Candidate lanes per panel (1 for scalar).
+    width: usize,
+    pub(crate) gains_tile: GainsTileFn,
+    pub(crate) sq_dists_row: SqDistsRowFn,
+    pub(crate) min_sq_tile: MinSqTileFn,
+    pub(crate) sq_dist: SqDistFn,
+    pub(crate) decode_f16: DecodeFn,
+    pub(crate) decode_bf16: DecodeFn,
+}
+
+impl KernelSet {
+    /// Which implementation family this is.
+    pub fn path(&self) -> SimdPath {
+        self.path
+    }
+
+    /// Candidate lanes per packed panel.
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Decode `f16` bits into `out` (hardware conversion on the vector
+    /// paths; bit-identical to [`crate::scalar::f16_decode`] everywhere
+    /// — conversion to the wider format is exact).
+    pub fn decode_f16(&self, bits: &[u16], out: &mut [f32]) {
+        assert_eq!(bits.len(), out.len());
+        // SAFETY: this KernelSet came from kernel_set_for, which verified
+        // the path's CPU features on this host.
+        unsafe { (self.decode_f16)(bits, out) }
+    }
+
+    /// Decode `bf16` bits into `out` (a 16-bit left shift in vector
+    /// registers; bit-identical to [`crate::scalar::Bf16::to_f32`]).
+    pub fn decode_bf16(&self, bits: &[u16], out: &mut [f32]) {
+        assert_eq!(bits.len(), out.len());
+        // SAFETY: as for decode_f16.
+        unsafe { (self.decode_bf16)(bits, out) }
+    }
+
+    /// Full-width squared Euclidean distance (the `sq_dist_blocked`
+    /// shape, vectorized per path).
+    pub fn sq_dist(&self, a: &[f32], b: &[f32]) -> f32 {
+        assert_eq!(a.len(), b.len());
+        // SAFETY: as for decode_f16.
+        unsafe { (self.sq_dist)(a, b) }
+    }
+}
+
+impl std::fmt::Debug for KernelSet {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("KernelSet")
+            .field("path", &self.path)
+            .field("width", &self.width)
+            .finish()
+    }
+}
+
+/// A candidate block regrouped into lane-major panels of
+/// [`KernelSet::width`] rows, padded with `0.0` rows / `+∞` norms to a
+/// whole panel (see the module docs for why padding needs no masks).
+/// Built **once per oracle call** by [`pack`] and reused across every
+/// ground tile — for the half dtypes this is also where the one decode
+/// to `f32` happens (counted by [`pack_decodes`]).
+pub struct PackedBlock {
+    /// `panels · width · d` floats, `rows[(panel·d + j)·width + lane]`.
+    pub(crate) rows: Vec<f32>,
+    /// `panels · width` norms, padded lanes `+∞`.
+    pub(crate) norms: Vec<f32>,
+    /// Real (unpadded) candidate count.
+    m: usize,
+    d: usize,
+    width: usize,
+}
+
+impl PackedBlock {
+    /// Real candidate count (before padding).
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Row dimensionality.
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Lane width this block was packed for.
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// The packed lane-major row storage,
+    /// `rows[(c / width)·width·d + j·width + (c % width)]` for element
+    /// `j` of logical row `c` (padded lanes hold `0.0`).
+    pub fn rows(&self) -> &[f32] {
+        &self.rows
+    }
+
+    /// Per-lane squared norms (padded lanes hold `+∞` so they never win
+    /// a min and contribute `+0.0` gain).
+    pub fn norms(&self) -> &[f32] {
+        &self.norms
+    }
+}
+
+thread_local! {
+    static PACK_DECODES: Cell<u64> = const { Cell::new(0) };
+}
+
+/// How many candidate-block decodes ([`pack`] calls that actually
+/// widened 16-bit storage) this thread has performed — the regression
+/// counter proving a candidate set is decoded once per oracle call, not
+/// once per ground tile. `f32` packs never count.
+pub fn pack_decodes() -> u64 {
+    PACK_DECODES.with(|c| c.get())
+}
+
+/// Pack a gathered candidate block (`rows` is `m × d` in storage
+/// precision, `norms` its `m` squared norms) into the lane-major panel
+/// layout of `ks`, decoding the half dtypes once on the way in.
+pub fn pack<S: Scalar>(ks: &KernelSet, rows: &[S], norms: &[f32], d: usize) -> PackedBlock {
+    let m = norms.len();
+    debug_assert_eq!(rows.len(), m * d);
+    let w = ks.width;
+    let panels = m.div_ceil(w);
+    let mut out = vec![0.0f32; panels * w * d];
+    let mut out_norms = vec![f32::INFINITY; panels * w];
+    out_norms[..m].copy_from_slice(norms);
+
+    // one widening per pack call, whatever the tile count downstream
+    let mut scratch: Vec<f32> = Vec::new();
+    let flat: &[f32] = match S::as_f32_slice(rows) {
+        Some(direct) => direct,
+        None => {
+            scratch.resize(rows.len(), 0.0);
+            match S::as_half_bits(rows) {
+                Some((HalfKind::F16, bits)) => ks.decode_f16(bits, &mut scratch),
+                Some((HalfKind::Bf16, bits)) => ks.decode_bf16(bits, &mut scratch),
+                None => {
+                    for (o, x) in scratch.iter_mut().zip(rows) {
+                        *o = x.to_f32();
+                    }
+                }
+            }
+            if m > 0 {
+                PACK_DECODES.with(|c| c.set(c.get() + 1));
+            }
+            &scratch
+        }
+    };
+    for c in 0..m {
+        let (p, lane) = (c / w, c % w);
+        let src = &flat[c * d..(c + 1) * d];
+        let base = p * w * d + lane;
+        for (j, &x) in src.iter().enumerate() {
+            out[base + j * w] = x;
+        }
+    }
+    PackedBlock { rows: out, norms: out_norms, m, d, width: w }
+}
+
+// ---------------------------------------------------------------------
+// scalar reference kernels (width 1: panel layout == legacy row-major)
+// ---------------------------------------------------------------------
+
+/// Four dot products of `v` against rows `base/d .. base/d + 4` of a
+/// row-major block — the pre-SIMD register-blocked core, kept verbatim
+/// as the scalar path (one load of `v[j]` amortized over four
+/// accumulators; the inner `d` loop autovectorizes).
+#[inline]
+fn dot4(v: &[f32], rows: &[f32], base: usize, d: usize) -> [f32; 4] {
+    let r0 = &rows[base..base + d];
+    let r1 = &rows[base + d..base + 2 * d];
+    let r2 = &rows[base + 2 * d..base + 3 * d];
+    let r3 = &rows[base + 3 * d..base + 4 * d];
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for j in 0..d {
+        let vj = v[j];
+        s0 += r0[j] * vj;
+        s1 += r1[j] * vj;
+        s2 += r2[j] * vj;
+        s3 += r3[j] * vj;
+    }
+    [s0, s1, s2, s3]
+}
+
+/// Scalar-tail dot product of `v` against row `s`, accumulated in `f32`
+/// in index order (matches the shadow's norm reduction order, so
+/// `v · v == ‖v‖²` exactly).
+#[inline]
+fn dot1(v: &[f32], rows: &[f32], s: usize, d: usize) -> f32 {
+    let r = &rows[s * d..(s + 1) * d];
+    let mut acc = 0.0f32;
+    for j in 0..d {
+        acc += r[j] * v[j];
+    }
+    acc
+}
+
+/// Minimum clamped Gram distance from `v` to all rows of a row-major
+/// block — `min_c max(norms[c] − 2·v·row_c + nv, 0)`, `+∞` when empty.
+#[inline]
+fn min_sq_to_rows(v: &[f32], nv: f32, rows: &[f32], norms: &[f32], d: usize) -> f32 {
+    let m = norms.len();
+    let mut best = f32::INFINITY;
+    let mut s = 0;
+    while s + 4 <= m {
+        let dots = dot4(v, rows, s * d, d);
+        best = best.min((norms[s] - 2.0 * dots[0] + nv).max(0.0));
+        best = best.min((norms[s + 1] - 2.0 * dots[1] + nv).max(0.0));
+        best = best.min((norms[s + 2] - 2.0 * dots[2] + nv).max(0.0));
+        best = best.min((norms[s + 3] - 2.0 * dots[3] + nv).max(0.0));
+        s += 4;
+    }
+    while s < m {
+        best = best.min((norms[s] - 2.0 * dot1(v, rows, s, d) + nv).max(0.0));
+        s += 1;
+    }
+    best
+}
+
+/// Scalar fused gains kernel. With `width = 1` the "panels" are the
+/// legacy dense candidate block, and accumulation order (`acc[c]` bumped
+/// per ground row, rows in order) bit-matches the pre-SIMD kernels.
+unsafe fn sc_gains_tile(
+    ground: &[f32],
+    gnorms: &[f32],
+    dmin: &[f32],
+    d: usize,
+    panels: &[f32],
+    pnorms: &[f32],
+    acc: &mut [f64],
+) {
+    let rows = gnorms.len();
+    debug_assert_eq!(ground.len(), rows * d);
+    debug_assert_eq!(dmin.len(), rows);
+    debug_assert_eq!(panels.len(), pnorms.len() * d);
+    debug_assert_eq!(acc.len(), pnorms.len());
+    let m = acc.len();
+    for r in 0..rows {
+        let dm = dmin[r];
+        if dm <= 0.0 {
+            continue; // d ≥ 0 ⇒ no candidate can improve this row
+        }
+        let v = &ground[r * d..(r + 1) * d];
+        let nv = gnorms[r];
+        let mut c = 0;
+        while c + 4 <= m {
+            let dots = dot4(v, panels, c * d, d);
+            for (lane, &dot) in dots.iter().enumerate() {
+                let dd = (pnorms[c + lane] - 2.0 * dot + nv).max(0.0);
+                let improve = dm - dd;
+                if improve > 0.0 {
+                    acc[c + lane] += improve as f64;
+                }
+            }
+            c += 4;
+        }
+        while c < m {
+            let dd = (pnorms[c] - 2.0 * dot1(v, panels, c, d) + nv).max(0.0);
+            let improve = dm - dd;
+            if improve > 0.0 {
+                acc[c] += improve as f64;
+            }
+            c += 1;
+        }
+    }
+}
+
+unsafe fn sc_sq_dists_row(
+    v: &[f32],
+    nv: f32,
+    d: usize,
+    panels: &[f32],
+    pnorms: &[f32],
+    out: &mut [f32],
+) {
+    debug_assert!(out.len() <= pnorms.len());
+    for (c, slot) in out.iter_mut().enumerate() {
+        *slot = (pnorms[c] - 2.0 * dot1(v, panels, c, d) + nv).max(0.0);
+    }
+}
+
+unsafe fn sc_min_sq_tile(
+    ground: &[f32],
+    gnorms: &[f32],
+    d: usize,
+    panels: &[f32],
+    pnorms: &[f32],
+    out_min: &mut [f32],
+) {
+    debug_assert_eq!(gnorms.len(), out_min.len());
+    for (r, slot) in out_min.iter_mut().enumerate() {
+        let v = &ground[r * d..(r + 1) * d];
+        *slot = min_sq_to_rows(v, gnorms[r], panels, pnorms, d);
+    }
+}
+
+/// 4-accumulator squared distance (the historical `sq_dist_blocked`).
+unsafe fn sc_sq_dist(a: &[f32], b: &[f32]) -> f32 {
+    let d = a.len();
+    debug_assert_eq!(b.len(), d);
+    let mut s0 = 0.0f32;
+    let mut s1 = 0.0f32;
+    let mut s2 = 0.0f32;
+    let mut s3 = 0.0f32;
+    let n4 = d / 4 * 4;
+    let mut j = 0;
+    while j < n4 {
+        let d0 = a[j] - b[j];
+        let d1 = a[j + 1] - b[j + 1];
+        let d2 = a[j + 2] - b[j + 2];
+        let d3 = a[j + 3] - b[j + 3];
+        s0 += d0 * d0;
+        s1 += d1 * d1;
+        s2 += d2 * d2;
+        s3 += d3 * d3;
+        j += 4;
+    }
+    let mut tail = 0.0f32;
+    while j < d {
+        let diff = a[j] - b[j];
+        tail += diff * diff;
+        j += 1;
+    }
+    s0 + s1 + s2 + s3 + tail
+}
+
+unsafe fn sc_decode_f16(bits: &[u16], out: &mut [f32]) {
+    for (o, &h) in out.iter_mut().zip(bits) {
+        *o = f16_decode(h);
+    }
+}
+
+unsafe fn sc_decode_bf16(bits: &[u16], out: &mut [f32]) {
+    for (o, &h) in out.iter_mut().zip(bits) {
+        *o = f32::from_bits((h as u32) << 16);
+    }
+}
+
+static SCALAR_KS: KernelSet = KernelSet {
+    path: SimdPath::Scalar,
+    width: 1,
+    gains_tile: sc_gains_tile,
+    sq_dists_row: sc_sq_dists_row,
+    min_sq_tile: sc_min_sq_tile,
+    sq_dist: sc_sq_dist,
+    decode_f16: sc_decode_f16,
+    decode_bf16: sc_decode_bf16,
+};
+
+// ---------------------------------------------------------------------
+// detection + resolution
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_supported() -> bool {
+    is_x86_feature_detected!("avx2")
+        && is_x86_feature_detected!("fma")
+        && is_x86_feature_detected!("f16c")
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx512_supported() -> bool {
+    // decode rides the shared AVX2/F16C converters
+    is_x86_feature_detected!("avx512f") && avx2_supported()
+}
+
+/// The best path the host supports (the `Auto` resolution).
+pub fn detect() -> SimdPath {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx512_supported() {
+            return SimdPath::Avx512;
+        }
+        if avx2_supported() {
+            return SimdPath::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        return SimdPath::Neon;
+    }
+    #[allow(unreachable_code)]
+    SimdPath::Scalar
+}
+
+/// Every path this host can run, best first (always ends with
+/// [`SimdPath::Scalar`]).
+pub fn available_paths() -> Vec<SimdPath> {
+    let mut out = Vec::new();
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx512_supported() {
+            out.push(SimdPath::Avx512);
+        }
+        if avx2_supported() {
+            out.push(SimdPath::Avx2);
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    out.push(SimdPath::Neon);
+    out.push(SimdPath::Scalar);
+    out
+}
+
+static LOGGED_PATHS: AtomicU8 = AtomicU8::new(0);
+
+fn log_once(ks: &KernelSet) {
+    let bit = ks.path.bit();
+    if LOGGED_PATHS.fetch_or(bit, Ordering::Relaxed) & bit == 0 {
+        crate::log_info!(
+            "SIMD dispatch: {} kernels (width {}, {} half decode)",
+            ks.path,
+            ks.width,
+            if ks.path == SimdPath::Scalar { "software" } else { "hardware" }
+        );
+    }
+}
+
+/// The kernel set for one specific path, or a configuration error when
+/// the host cannot run it (wrong architecture or missing CPU features).
+pub fn kernel_set_for(path: SimdPath) -> Result<&'static KernelSet> {
+    let ks = match path {
+        SimdPath::Scalar => Some(&SCALAR_KS),
+        #[cfg(target_arch = "x86_64")]
+        SimdPath::Avx2 => avx2_supported().then_some(&avx2::KS),
+        #[cfg(target_arch = "x86_64")]
+        SimdPath::Avx512 => avx512_supported().then_some(&avx512::KS),
+        #[cfg(target_arch = "aarch64")]
+        SimdPath::Neon => Some(&neon::KS),
+        #[allow(unreachable_patterns)]
+        _ => None,
+    };
+    ks.map(|ks| {
+        log_once(ks);
+        ks
+    })
+    .ok_or_else(|| {
+        let avail: Vec<&str> = available_paths().iter().map(|p| p.as_str()).collect();
+        Error::Config(format!(
+            "SIMD path {path:?} is not supported on this host (available: {})",
+            avail.join("|")
+        ))
+    })
+}
+
+/// Resolve a dispatch request into a kernel set. Order of precedence:
+/// the `EXEMCL_SIMD` environment variable (when set), then `choice`.
+/// Forced paths the host cannot run are a configuration error — the
+/// strict behavior behind `eval.simd` / [`crate::engine::EngineBuilder::simd`].
+pub fn resolve(choice: SimdChoice) -> Result<&'static KernelSet> {
+    let effective = match std::env::var("EXEMCL_SIMD") {
+        Ok(s) if !s.is_empty() => s.parse::<SimdChoice>().map_err(|_| {
+            Error::Config(format!(
+                "EXEMCL_SIMD={s:?} is not a SIMD path (auto|scalar|avx2|avx512|neon)"
+            ))
+        })?,
+        _ => choice,
+    };
+    match effective {
+        SimdChoice::Auto => kernel_set_for(detect()),
+        SimdChoice::Force(p) => kernel_set_for(p),
+    }
+}
+
+/// The process-wide auto-resolved kernel set used by the infallible
+/// oracle constructors: [`resolve`]`(Auto)` computed once, with a bad
+/// `EXEMCL_SIMD` downgraded to a warning plus auto-detection (never a
+/// panic on a legacy construction path).
+pub fn active() -> &'static KernelSet {
+    static ACTIVE: OnceLock<&'static KernelSet> = OnceLock::new();
+    ACTIVE.get_or_init(|| {
+        resolve(SimdChoice::Auto).unwrap_or_else(|e| {
+            crate::log_warn!("{e}; falling back to auto-detection");
+            kernel_set_for(detect()).expect("detected path is always constructible")
+        })
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scalar::{Bf16, F16};
+
+    #[test]
+    fn path_strings_roundtrip() {
+        for p in [SimdPath::Scalar, SimdPath::Avx2, SimdPath::Avx512, SimdPath::Neon] {
+            assert_eq!(p.as_str().parse::<SimdPath>().unwrap(), p);
+            assert_eq!(format!("{p}").parse::<SimdChoice>().unwrap(), SimdChoice::Force(p));
+        }
+        assert_eq!("auto".parse::<SimdChoice>().unwrap(), SimdChoice::Auto);
+        assert!("sse9".parse::<SimdChoice>().is_err());
+    }
+
+    #[test]
+    fn scalar_path_is_always_available() {
+        let paths = available_paths();
+        assert_eq!(paths.last(), Some(&SimdPath::Scalar));
+        let ks = kernel_set_for(SimdPath::Scalar).unwrap();
+        assert_eq!(ks.path(), SimdPath::Scalar);
+        assert_eq!(ks.width(), 1);
+        // every advertised path must actually construct
+        for p in paths {
+            let ks = kernel_set_for(p).unwrap();
+            assert_eq!(ks.path(), p);
+            assert!(ks.width().is_power_of_two());
+        }
+    }
+
+    #[test]
+    fn unsupported_forced_path_is_a_config_error() {
+        // at least one of avx2/neon is impossible on any single host
+        let impossible = if cfg!(target_arch = "aarch64") {
+            SimdPath::Avx2
+        } else {
+            SimdPath::Neon
+        };
+        assert!(kernel_set_for(impossible).is_err());
+        assert!(resolve(SimdChoice::Force(impossible)).is_err());
+    }
+
+    #[test]
+    fn active_is_detected_auto() {
+        // tests don't set EXEMCL_SIMD (CI's forced-scalar job runs the
+        // whole suite under it, where this degenerates to scalar==scalar)
+        let ks = active();
+        assert!(available_paths().contains(&ks.path()));
+    }
+
+    #[test]
+    fn pack_layout_pads_with_zero_rows_and_inf_norms() {
+        for p in available_paths() {
+            let ks = kernel_set_for(p).unwrap();
+            let w = ks.width();
+            let d = 3usize;
+            let m = w + 1; // force a padded tail panel
+            let rows: Vec<f32> = (0..m * d).map(|i| i as f32 + 0.5).collect();
+            let norms: Vec<f32> = (0..m).map(|i| i as f32).collect();
+            let packed = pack(ks, &rows, &norms, d);
+            assert_eq!(packed.m(), m);
+            assert_eq!(packed.width(), w);
+            let panels = m.div_ceil(w);
+            assert_eq!(packed.rows.len(), panels * w * d);
+            assert_eq!(packed.norms.len(), panels * w);
+            // real lanes land at rows[(c/w)*w*d + j*w + c%w]
+            for c in 0..m {
+                for j in 0..d {
+                    let got = packed.rows[(c / w) * w * d + j * w + (c % w)];
+                    assert_eq!(got, rows[c * d + j], "c={c} j={j} w={w}");
+                }
+                assert_eq!(packed.norms[c], norms[c]);
+            }
+            // padded lanes: zero rows, +inf norms
+            for c in m..panels * w {
+                assert_eq!(packed.norms[c], f32::INFINITY);
+                for j in 0..d {
+                    assert_eq!(packed.rows[(c / w) * w * d + j * w + (c % w)], 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pack_counts_half_decodes_but_not_f32() {
+        let d = 4usize;
+        let rows32: Vec<f32> = (0..8 * d).map(|i| i as f32 * 0.25).collect();
+        let norms: Vec<f32> = vec![1.0; 8];
+        let ks = kernel_set_for(SimdPath::Scalar).unwrap();
+        let before = pack_decodes();
+        let _ = pack(ks, &rows32, &norms, d);
+        assert_eq!(pack_decodes(), before, "f32 pack must not count as a decode");
+        let rows16: Vec<F16> = rows32.iter().map(|&x| F16::from_f32(x)).collect();
+        let _ = pack(ks, &rows16, &norms, d);
+        assert_eq!(pack_decodes(), before + 1);
+        let rowsb: Vec<Bf16> = rows32.iter().map(|&x| Bf16::from_f32(x)).collect();
+        let _ = pack(ks, &rowsb, &norms, d);
+        assert_eq!(pack_decodes(), before + 2);
+    }
+
+    /// Hardware half conversion is exact, so every available path must
+    /// reproduce the software decode bit-for-bit on all 65536 patterns.
+    #[test]
+    fn decode_matches_software_reference_on_all_bit_patterns() {
+        let bits: Vec<u16> = (0..=u16::MAX).collect();
+        let mut want16 = vec![0.0f32; bits.len()];
+        let mut wantb = vec![0.0f32; bits.len()];
+        for (i, &h) in bits.iter().enumerate() {
+            want16[i] = f16_decode(h);
+            wantb[i] = f32::from_bits((h as u32) << 16);
+        }
+        for p in available_paths() {
+            let ks = kernel_set_for(p).unwrap();
+            let mut got = vec![0.0f32; bits.len()];
+            ks.decode_f16(&bits, &mut got);
+            for (h, (g, w)) in got.iter().zip(&want16).enumerate() {
+                assert_eq!(g.to_bits(), w.to_bits(), "{p} f16 {h:#06x}");
+            }
+            ks.decode_bf16(&bits, &mut got);
+            for (h, (g, w)) in got.iter().zip(&wantb).enumerate() {
+                assert_eq!(g.to_bits(), w.to_bits(), "{p} bf16 {h:#06x}");
+            }
+        }
+    }
+
+    #[test]
+    fn sq_dist_agrees_across_paths() {
+        for d in [1usize, 3, 4, 7, 8, 15, 16, 31, 32, 100] {
+            let a: Vec<f32> = (0..d).map(|i| (i as f32 * 0.37).sin()).collect();
+            let b: Vec<f32> = (0..d).map(|i| (i as f32 * 0.81).cos()).collect();
+            let want = kernel_set_for(SimdPath::Scalar).unwrap().sq_dist(&a, &b);
+            for p in available_paths() {
+                let got = kernel_set_for(p).unwrap().sq_dist(&a, &b);
+                assert!(
+                    (got - want).abs() <= 1e-6 * want.abs().max(1e-6),
+                    "{p} d={d}: {got} vs {want}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,299 @@
+//! AArch64 NEON kernel set: 4 candidate lanes per panel.
+//!
+//! # Unsafe contract
+//!
+//! NEON (ASIMD) is baseline on every aarch64 target this crate builds
+//! for, so `simd::kernel_set_for` hands out [`KS`] unconditionally on
+//! aarch64 — the `#[target_feature(enable = "neon")]` attributes keep
+//! the module on the same "features hold by construction" contract as
+//! the x86 paths. All pointer arithmetic stays inside the
+//! debug-asserted argument slices (padded lanes are allocated by
+//! `PackedBlock`).
+//!
+//! Clamps use `FMAXNM` (`vmaxnmq_f32`), whose NaN-vs-number semantics
+//! match Rust's `f32::max` — unlike NEON `FMAX`, which propagates NaN —
+//! so a NaN distance or dmin contributes exactly `+0.0` gain, as in the
+//! scalar reference. Half decode widens with the baseline ARMv8 FP
+//! `FCVTL`/`FCVTL2` instructions via inline assembly (the `vcvt_f32_f16`
+//! intrinsic family is not yet stable); half→single conversion is
+//! exact, so results are bit-identical to `scalar::f16_decode`.
+
+#![deny(unsafe_op_in_unsafe_fn)]
+
+use core::arch::aarch64::*;
+use core::arch::asm;
+
+use super::{KernelSet, SimdPath};
+use crate::scalar::f16_decode;
+
+const W: usize = 4;
+
+pub(super) static KS: KernelSet = KernelSet {
+    path: SimdPath::Neon,
+    width: W,
+    gains_tile,
+    sq_dists_row,
+    min_sq_tile,
+    sq_dist,
+    decode_f16,
+    decode_bf16,
+};
+
+/// `max((pn − (dot + dot)) + nv, 0)` with `f32::max` NaN semantics.
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn clamp_dd(pn: float32x4_t, dot: float32x4_t, nv: float32x4_t) -> float32x4_t {
+    // SAFETY: neon holds per the module contract.
+    unsafe {
+        let dot2 = vaddq_f32(dot, dot);
+        vmaxnmq_f32(vaddq_f32(vsubq_f32(pn, dot2), nv), vdupq_n_f32(0.0))
+    }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn gains_tile(
+    ground: &[f32],
+    gnorms: &[f32],
+    dmin: &[f32],
+    d: usize,
+    panels: &[f32],
+    pnorms: &[f32],
+    acc: &mut [f64],
+) {
+    let rows = gnorms.len();
+    let m = acc.len();
+    debug_assert_eq!(ground.len(), rows * d);
+    debug_assert_eq!(dmin.len(), rows);
+    debug_assert_eq!(panels.len(), pnorms.len() * d);
+    debug_assert!(m <= pnorms.len() && pnorms.len() % W == 0);
+    // SAFETY: neon holds per the module contract; all offsets stay
+    // inside the debug-asserted slice shapes.
+    unsafe {
+        let zero = vdupq_n_f32(0.0);
+        let gp = ground.as_ptr();
+        let n_panels = pnorms.len() / W;
+        for p in 0..n_panels {
+            let pp = panels.as_ptr().add(p * W * d);
+            let pn = vld1q_f32(pnorms.as_ptr().add(p * W));
+            let mut alo = vdupq_n_f64(0.0);
+            let mut ahi = vdupq_n_f64(0.0);
+            let mut r = 0usize;
+            // four ground rows at a time: four independent FMA chains
+            while r + 4 <= rows {
+                let v0 = gp.add(r * d);
+                let v1 = gp.add((r + 1) * d);
+                let v2 = gp.add((r + 2) * d);
+                let v3 = gp.add((r + 3) * d);
+                let mut d0 = zero;
+                let mut d1 = zero;
+                let mut d2 = zero;
+                let mut d3 = zero;
+                for j in 0..d {
+                    let col = vld1q_f32(pp.add(j * W));
+                    d0 = vfmaq_n_f32(d0, col, *v0.add(j));
+                    d1 = vfmaq_n_f32(d1, col, *v1.add(j));
+                    d2 = vfmaq_n_f32(d2, col, *v2.add(j));
+                    d3 = vfmaq_n_f32(d3, col, *v3.add(j));
+                }
+                for (dot, rr) in [(d0, r), (d1, r + 1), (d2, r + 2), (d3, r + 3)] {
+                    let dd = clamp_dd(pn, dot, vdupq_n_f32(gnorms[rr]));
+                    let improve = vmaxnmq_f32(vsubq_f32(vdupq_n_f32(dmin[rr]), dd), zero);
+                    alo = vaddq_f64(alo, vcvt_f64_f32(vget_low_f32(improve)));
+                    ahi = vaddq_f64(ahi, vcvt_high_f64_f32(improve));
+                }
+                r += 4;
+            }
+            while r < rows {
+                let v = gp.add(r * d);
+                let mut dot = zero;
+                for j in 0..d {
+                    dot = vfmaq_n_f32(dot, vld1q_f32(pp.add(j * W)), *v.add(j));
+                }
+                let dd = clamp_dd(pn, dot, vdupq_n_f32(gnorms[r]));
+                let improve = vmaxnmq_f32(vsubq_f32(vdupq_n_f32(dmin[r]), dd), zero);
+                alo = vaddq_f64(alo, vcvt_f64_f32(vget_low_f32(improve)));
+                ahi = vaddq_f64(ahi, vcvt_high_f64_f32(improve));
+                r += 1;
+            }
+            let mut tmp = [0.0f64; W];
+            vst1q_f64(tmp.as_mut_ptr(), alo);
+            vst1q_f64(tmp.as_mut_ptr().add(2), ahi);
+            let base = p * W;
+            for (lane, &t) in tmp.iter().enumerate().take(m.saturating_sub(base).min(W)) {
+                acc[base + lane] += t;
+            }
+        }
+    }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn sq_dists_row(
+    v: &[f32],
+    nv: f32,
+    d: usize,
+    panels: &[f32],
+    pnorms: &[f32],
+    out: &mut [f32],
+) {
+    debug_assert_eq!(v.len(), d);
+    debug_assert_eq!(panels.len(), pnorms.len() * d);
+    debug_assert!(out.len() <= pnorms.len() && pnorms.len() % W == 0);
+    // SAFETY: as for gains_tile.
+    unsafe {
+        let zero = vdupq_n_f32(0.0);
+        let nvv = vdupq_n_f32(nv);
+        let m = out.len();
+        let n_panels = pnorms.len() / W;
+        for p in 0..n_panels {
+            let pp = panels.as_ptr().add(p * W * d);
+            let mut dot = zero;
+            for j in 0..d {
+                dot = vfmaq_n_f32(dot, vld1q_f32(pp.add(j * W)), *v.as_ptr().add(j));
+            }
+            let dd = clamp_dd(vld1q_f32(pnorms.as_ptr().add(p * W)), dot, nvv);
+            let mut tmp = [0.0f32; W];
+            vst1q_f32(tmp.as_mut_ptr(), dd);
+            let base = p * W;
+            for (lane, &t) in tmp.iter().enumerate().take(m.saturating_sub(base).min(W)) {
+                out[base + lane] = t;
+            }
+        }
+    }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn min_sq_tile(
+    ground: &[f32],
+    gnorms: &[f32],
+    d: usize,
+    panels: &[f32],
+    pnorms: &[f32],
+    out_min: &mut [f32],
+) {
+    let rows = gnorms.len();
+    debug_assert_eq!(ground.len(), rows * d);
+    debug_assert_eq!(out_min.len(), rows);
+    debug_assert_eq!(panels.len(), pnorms.len() * d);
+    debug_assert_eq!(pnorms.len() % W, 0);
+    // SAFETY: as for gains_tile.
+    unsafe {
+        let zero = vdupq_n_f32(0.0);
+        let n_panels = pnorms.len() / W;
+        for (r, slot) in out_min.iter_mut().enumerate() {
+            let v = ground.as_ptr().add(r * d);
+            let nvv = vdupq_n_f32(gnorms[r]);
+            let mut best = vdupq_n_f32(f32::INFINITY);
+            let mut p = 0usize;
+            // two panels at a time: two independent FMA chains per row
+            while p + 2 <= n_panels {
+                let ppa = panels.as_ptr().add(p * W * d);
+                let ppb = panels.as_ptr().add((p + 1) * W * d);
+                let mut da = zero;
+                let mut db = zero;
+                for j in 0..d {
+                    let vj = *v.add(j);
+                    da = vfmaq_n_f32(da, vld1q_f32(ppa.add(j * W)), vj);
+                    db = vfmaq_n_f32(db, vld1q_f32(ppb.add(j * W)), vj);
+                }
+                let pna = vld1q_f32(pnorms.as_ptr().add(p * W));
+                let pnb = vld1q_f32(pnorms.as_ptr().add((p + 1) * W));
+                best = vminq_f32(best, clamp_dd(pna, da, nvv));
+                best = vminq_f32(best, clamp_dd(pnb, db, nvv));
+                p += 2;
+            }
+            if p < n_panels {
+                let pp = panels.as_ptr().add(p * W * d);
+                let mut dot = zero;
+                for j in 0..d {
+                    dot = vfmaq_n_f32(dot, vld1q_f32(pp.add(j * W)), *v.add(j));
+                }
+                let pn = vld1q_f32(pnorms.as_ptr().add(p * W));
+                best = vminq_f32(best, clamp_dd(pn, dot, nvv));
+            }
+            // clamped values are NaN-free, so FMINV is exact
+            *slot = vminvq_f32(best);
+        }
+    }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
+    let d = a.len();
+    debug_assert_eq!(b.len(), d);
+    // SAFETY: as for gains_tile.
+    unsafe {
+        let mut accv = vdupq_n_f32(0.0);
+        let mut j = 0usize;
+        while j + W <= d {
+            let diff = vsubq_f32(vld1q_f32(a.as_ptr().add(j)), vld1q_f32(b.as_ptr().add(j)));
+            accv = vfmaq_f32(accv, diff, diff);
+            j += W;
+        }
+        let mut s = vaddvq_f32(accv);
+        while j < d {
+            let diff = a[j] - b[j];
+            s += diff * diff;
+            j += 1;
+        }
+        s
+    }
+}
+
+/// Hardware f16→f32 widen, eight halfs per iteration, via the baseline
+/// ARMv8 FP `FCVTL`/`FCVTL2` instructions (exact conversion, so
+/// bit-identical to [`f16_decode`]). Inline assembly because the
+/// `vcvt_f32_f16` intrinsic family is still unstable.
+#[target_feature(enable = "neon")]
+unsafe fn decode_f16(bits: &[u16], out: &mut [f32]) {
+    let n = bits.len();
+    debug_assert_eq!(out.len(), n);
+    // SAFETY: loads/stores stay inside the equal-length argument
+    // slices: each iteration reads 16 bytes of `bits` and writes 32
+    // bytes of `out` at offset i < n8 ≤ n − 8.
+    unsafe {
+        let n8 = n / 8 * 8;
+        let mut i = 0usize;
+        while i < n8 {
+            asm!(
+                "ldr q0, [{src}]",
+                "fcvtl v1.4s, v0.4h",
+                "fcvtl2 v2.4s, v0.8h",
+                "stp q1, q2, [{dst}]",
+                src = in(reg) bits.as_ptr().add(i),
+                dst = in(reg) out.as_mut_ptr().add(i),
+                out("v0") _,
+                out("v1") _,
+                out("v2") _,
+                options(nostack),
+            );
+            i += 8;
+        }
+        while i < n {
+            out[i] = f16_decode(bits[i]);
+            i += 1;
+        }
+    }
+}
+
+/// bf16 widen: zero-extend and shift into the high half — bit-identical
+/// to `f32::from_bits(bits << 16)` by definition.
+#[target_feature(enable = "neon")]
+unsafe fn decode_bf16(bits: &[u16], out: &mut [f32]) {
+    let n = bits.len();
+    debug_assert_eq!(out.len(), n);
+    // SAFETY: loads/stores stay inside the equal-length argument slices.
+    unsafe {
+        let n4 = n / W * W;
+        let mut i = 0usize;
+        while i < n4 {
+            let h = vld1_u16(bits.as_ptr().add(i));
+            let wide = vshlq_n_u32::<16>(vmovl_u16(h));
+            vst1q_f32(out.as_mut_ptr().add(i), vreinterpretq_f32_u32(wide));
+            i += W;
+        }
+        while i < n {
+            out[i] = f32::from_bits((bits[i] as u32) << 16);
+            i += 1;
+        }
+    }
+}

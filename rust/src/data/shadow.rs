@@ -198,6 +198,21 @@ impl<S: Scalar> ShadowSet<S> {
         }
     }
 
+    /// Borrow a contiguous range of rows in storage precision — the
+    /// whole-tile view the SIMD decode step widens in one pass
+    /// (per-row [`ShadowSet::row`] would defeat hardware conversion at
+    /// tile granularity).
+    #[inline]
+    pub fn rows_slice(&self, r: std::ops::Range<usize>) -> &[S] {
+        let span = r.start * self.d..r.end * self.d;
+        match &self.rows {
+            Rows::Owned(v) => &v[span],
+            Rows::Shared(buf) => {
+                S::from_f32_slice(&buf[span]).expect("shared shadow rows are f32-only")
+            }
+        }
+    }
+
     /// Squared norm of decoded row `i` (shadow space: centered when
     /// [`ShadowSet::centered`]).
     #[inline]
@@ -356,6 +371,24 @@ mod tests {
         // in-range data is always finite
         let small = UniformCube::new(3, 1.0).generate(20, 1);
         assert_eq!(small.shadow::<F16>(true).non_finite(), 0);
+    }
+
+    #[test]
+    fn rows_slice_matches_per_row_views() {
+        let ds = UniformCube::new(3, 1.0).generate(24, 11);
+        let owned: ShadowSet<F16> = ShadowSet::build(&ds, true);
+        let shared: ShadowSet<f32> = ShadowSet::build(&ds, false);
+        assert!(shared.aliases_dataset());
+        for r in [0..0usize, 0..1, 3..9, 20..24, 0..24] {
+            let o = owned.rows_slice(r.clone());
+            let s = shared.rows_slice(r.clone());
+            assert_eq!(o.len(), r.len() * ds.d());
+            assert_eq!(s.len(), r.len() * ds.d());
+            for (k, i) in r.clone().enumerate() {
+                assert_eq!(&o[k * ds.d()..(k + 1) * ds.d()], owned.row(i));
+                assert_eq!(&s[k * ds.d()..(k + 1) * ds.d()], shared.row(i));
+            }
+        }
     }
 
     #[test]

@@ -67,6 +67,18 @@ pub trait Dissimilarity: Send + Sync {
         sq
     }
 
+    /// Is [`Dissimilarity::post_sq`] the identity map? When true (and the
+    /// dissimilarity factors), the SIMD gains kernel fuses clamp,
+    /// improvement and `f64` accumulation entirely in vector registers;
+    /// a non-identity `post_sq` (e.g. [`RbfInduced`]) instead gets its
+    /// squared distances materialized per row and the transform applied
+    /// in a scalar epilogue. Pure optimization hint — results are
+    /// identical either way. Override to `true` only when
+    /// `post_sq(sq) == sq` for every input, NaN included.
+    fn post_sq_is_identity(&self) -> bool {
+        false
+    }
+
     /// The element precision the CPU kernels will actually run at when
     /// `requested` is asked for: factoring dissimilarities ride the
     /// dtype-generic Gram path, everything else falls back to the direct
@@ -116,6 +128,11 @@ impl Dissimilarity for Box<dyn Dissimilarity> {
         (**self).post_sq(sq)
     }
 
+    #[inline]
+    fn post_sq_is_identity(&self) -> bool {
+        (**self).post_sq_is_identity()
+    }
+
     fn effective_dtype(&self, requested: crate::scalar::Dtype) -> crate::scalar::Dtype {
         (**self).effective_dtype(requested)
     }
@@ -147,6 +164,10 @@ impl Dissimilarity for SqEuclidean {
     }
 
     fn factors_through_sq_euclidean(&self) -> bool {
+        true
+    }
+
+    fn post_sq_is_identity(&self) -> bool {
         true
     }
 }
@@ -312,6 +333,21 @@ mod tests {
         assert_eq!(boxed.eval_vs_origin(&a), RbfInduced::new(0.7).eval_vs_origin(&a));
         let manhattan: Box<dyn Dissimilarity> = Box::new(Manhattan);
         assert_eq!(manhattan.effective_dtype(crate::scalar::Dtype::F16), crate::scalar::Dtype::F32);
+    }
+
+    #[test]
+    fn post_sq_identity_flag_matches_post_sq() {
+        assert!(SqEuclidean.post_sq_is_identity());
+        assert!(!RbfInduced::new(0.5).post_sq_is_identity());
+        assert!(!Manhattan.post_sq_is_identity());
+        // boxed forwarding preserves the flag (the fused-kernel gate)
+        let boxed: Box<dyn Dissimilarity> = Box::new(SqEuclidean);
+        assert!(boxed.post_sq_is_identity());
+        let boxed_rbf: Box<dyn Dissimilarity> = Box::new(RbfInduced::new(0.5));
+        assert!(!boxed_rbf.post_sq_is_identity());
+        for sq in [0.0f32, 0.5, 100.0] {
+            assert_eq!(SqEuclidean.post_sq(sq), sq);
+        }
     }
 
     #[test]

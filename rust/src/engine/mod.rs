@@ -58,7 +58,7 @@ use std::time::Duration;
 use crate::coordinator::{
     Service, ServiceHandle, ServiceMetrics, SessionConfig, DEFAULT_QUEUE_CAPACITY,
 };
-use crate::cpu::build_cpu_oracle_with;
+use crate::cpu::{build_cpu_oracle_simd_with, SimdChoice};
 use crate::data::Dataset;
 use crate::distance::{Dissimilarity, SqEuclidean};
 use crate::net::{Listen, NetClient};
@@ -265,6 +265,7 @@ pub struct EngineBuilder {
     sessions: SessionConfig,
     artifacts: String,
     memory_mib: usize,
+    simd: SimdChoice,
 }
 
 impl Default for EngineBuilder {
@@ -278,6 +279,7 @@ impl Default for EngineBuilder {
             sessions: SessionConfig::default(),
             artifacts: "artifacts".into(),
             memory_mib: 16 * 1024,
+            simd: SimdChoice::Auto,
         }
     }
 }
@@ -339,6 +341,16 @@ impl EngineBuilder {
         self
     }
 
+    /// SIMD dispatch path for the CPU Gram kernels (default
+    /// [`SimdChoice::Auto`]: runtime feature detection). Forcing a path
+    /// the host cannot run is a build error; the `EXEMCL_SIMD`
+    /// environment variable overrides this knob either way (see
+    /// [`crate::cpu::simd`]).
+    pub fn simd(mut self, simd: SimdChoice) -> Self {
+        self.simd = simd;
+        self
+    }
+
     /// AOT artifact directory for [`Backend::Device`].
     pub fn artifacts(mut self, dir: impl Into<String>) -> Self {
         self.artifacts = dir.into();
@@ -368,10 +380,13 @@ impl EngineBuilder {
             // the server's configuration is authoritative: silently
             // dropping a requested precision or metric would hand back
             // results computed under a different configuration
-            if self.dtype != Dtype::F32 || self.dist.name() != SqEuclidean.name() {
+            if self.dtype != Dtype::F32
+                || self.dist.name() != SqEuclidean.name()
+                || self.simd != SimdChoice::Auto
+            {
                 return Err(Error::InvalidArgument(
-                    "remote engines evaluate with the serving process's dtype and \
-                     dissimilarity; configure them on `exemcl serve`"
+                    "remote engines evaluate with the serving process's dtype, \
+                     dissimilarity and SIMD path; configure them on `exemcl serve`"
                         .into(),
                 ));
             }
@@ -412,8 +427,9 @@ impl EngineBuilder {
                 }
                 let (ds2, dist, dtype) = (ds.clone(), self.dist, self.dtype);
                 let (artifacts, memory_mib) = (self.artifacts, self.memory_mib);
+                let simd = self.simd;
                 let service = Service::spawn_with(
-                    move || build_oracle(&inner, ds2, dist, dtype, &artifacts, memory_mib),
+                    move || build_oracle(&inner, ds2, dist, dtype, &artifacts, memory_mib, simd),
                     self.queue_capacity,
                     self.sessions,
                 )?;
@@ -426,6 +442,7 @@ impl EngineBuilder {
                 self.dtype,
                 &self.artifacts,
                 self.memory_mib,
+                self.simd,
             )?),
         };
         Ok(Engine { dataset: ds, dtype: self.dtype, backend, inner })
@@ -554,11 +571,23 @@ fn build_oracle(
     dtype: Dtype,
     artifacts: &str,
     memory_mib: usize,
+    simd: SimdChoice,
 ) -> Result<Box<dyn Oracle>> {
     match backend {
-        Backend::SingleThread => Ok(build_cpu_oracle_with(ds, dist, false, 0, dtype)),
-        Backend::Cpu { threads } => Ok(build_cpu_oracle_with(ds, dist, true, *threads, dtype)),
-        Backend::Device => device_oracle(ds, dist, dtype, artifacts, memory_mib),
+        Backend::SingleThread => build_cpu_oracle_simd_with(ds, dist, false, 0, dtype, simd),
+        Backend::Cpu { threads } => {
+            build_cpu_oracle_simd_with(ds, dist, true, *threads, dtype, simd)
+        }
+        Backend::Device => {
+            if simd != SimdChoice::Auto {
+                // a forced CPU dispatch path silently ignored by the
+                // device evaluator would misreport what actually ran
+                return Err(Error::InvalidArgument(
+                    "the SIMD path override applies to the CPU backends only".into(),
+                ));
+            }
+            device_oracle(ds, dist, dtype, artifacts, memory_mib)
+        }
         // resolve_auto replaced Auto before any oracle is built
         Backend::Auto => Err(Error::InvalidArgument(
             "Backend::Auto must be resolved before oracle construction".into(),
@@ -768,6 +797,11 @@ mod tests {
             .session_capacity(2)
             .build();
         assert!(matches!(r, Err(Error::InvalidArgument(_))), "session policy must be rejected");
+        let r = Engine::builder()
+            .backend(Backend::Tcp { addr: "127.0.0.1:1".into() })
+            .simd(SimdChoice::Force(crate::cpu::SimdPath::Scalar))
+            .build();
+        assert!(matches!(r, Err(Error::InvalidArgument(_))), "simd override must be rejected");
         // a dead endpoint surfaces the connect failure
         let r = Engine::builder().backend(Backend::Tcp { addr: "127.0.0.1:1".into() }).build();
         assert!(r.is_err(), "nothing listens on port 1");
@@ -804,6 +838,39 @@ mod tests {
             .unwrap();
         assert!(e.name().contains("manhattan"), "{}", e.name());
         assert!(e.name().contains("f32"), "{}", e.name());
+    }
+
+    /// The builder's `simd` knob reaches the CPU oracles: a forced
+    /// scalar path builds and agrees with auto dispatch; a path the
+    /// host cannot run fails the build.
+    #[test]
+    fn simd_override_plumbs_through_the_builder() {
+        use crate::cpu::{simd, SimdPath};
+        if std::env::var("EXEMCL_SIMD").is_ok() {
+            return; // env forcing overrides the knob; matrix covered in CI
+        }
+        let sets = vec![vec![0usize, 3], vec![9, 11, 20]];
+        let auto = Engine::builder().dataset(small()).build().unwrap();
+        let forced = Engine::builder()
+            .dataset(small())
+            .simd(SimdChoice::Force(SimdPath::Scalar))
+            .build()
+            .unwrap();
+        let a = auto.session().unwrap().eval_sets(&sets).unwrap();
+        let b = forced.session().unwrap().eval_sets(&sets).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() <= 1e-5 * x.abs().max(1e-3), "auto {x} vs scalar {y}");
+        }
+        if let Some(unavailable) = [SimdPath::Avx512, SimdPath::Avx2, SimdPath::Neon]
+            .into_iter()
+            .find(|p| !simd::available_paths().contains(p))
+        {
+            let r = Engine::builder()
+                .dataset(small())
+                .simd(SimdChoice::Force(unavailable))
+                .build();
+            assert!(r.is_err(), "forcing {unavailable} should fail on this host");
+        }
     }
 
     #[test]

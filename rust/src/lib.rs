@@ -47,7 +47,12 @@
 //! [`engine::Backend::Service`], or let [`engine::Backend::Auto`] pick
 //! — without touching optimizer code. Element precision is a builder
 //! knob too: `.dtype(Dtype::F16)` quantizes the pairwise kernels'
-//! operands while accumulating in `f32` (see [`scalar`]).
+//! operands while accumulating in `f32` (see [`scalar`]). The CPU Gram
+//! kernels auto-dispatch to the widest SIMD path the host supports
+//! (AVX-512F / AVX2+FMA / NEON, scalar fallback); force a specific path
+//! with `.simd(SimdChoice::Force(SimdPath::Scalar))`, the `eval.simd`
+//! config key, or the `EXEMCL_SIMD` environment variable (see
+//! [`cpu::simd`]).
 //!
 //! Fine-grained control — batched multiset evaluation, marginal gains,
 //! incremental commits — lives on [`engine::Session`]:

@@ -41,6 +41,8 @@ fn usage() -> ! {
                eval.backend (auto|cpu-st|cpu-mt|device|service[:auto|cpu-st|cpu-mt|device]\n\
                              |tcp:host:port|uds:/path — remote evaluation servers)\n\
                eval.dtype (f32|f16|bf16) eval.artifacts eval.threads\n\
+               eval.simd (auto|scalar|avx2|avx512|neon — force the CPU kernel\n\
+                          dispatch path; errors if the host can't run it)\n\
                eval.memory_mib eval.queue eval.sessions eval.session_ttl_secs\n\
                net.listen (tcp:host:port|uds:/path) net.max_conns net.accept_timeout_secs\n\
          shorthand: --dtype f16 == --eval.dtype=f16, --backend service ==\n\
@@ -99,6 +101,7 @@ fn canonical_key(k: &str) -> String {
         "dtype" => "eval.dtype".into(),
         "backend" => "eval.backend".into(),
         "threads" => "eval.threads".into(),
+        "simd" => "eval.simd".into(),
         other => other.to_string(),
     }
 }

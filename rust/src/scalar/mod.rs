@@ -95,6 +95,19 @@ impl std::str::FromStr for Dtype {
     }
 }
 
+/// Which 16-bit half format a scalar's raw bits are in — the tag
+/// [`Scalar::as_half_bits`] returns so the SIMD layer
+/// ([`crate::cpu::simd`]) can pick the matching hardware converter
+/// (F16C `vcvtph2ps` / NEON `fcvtl` for [`F16`], a vector shift for
+/// [`Bf16`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HalfKind {
+    /// IEEE 754 binary16 bits.
+    F16,
+    /// bfloat16 bits.
+    Bf16,
+}
+
 /// A storage scalar the precision-generic kernels can read. Conversions
 /// are total: every bit pattern decodes, and encoding rounds to nearest
 /// even. Arithmetic never happens in `S` — kernels widen to `f32` first
@@ -138,6 +151,20 @@ pub trait Scalar: Copy + Clone + Send + Sync + std::fmt::Debug + 'static {
     /// of duplicating the ground set (the copy-free `f32` shadow).
     #[inline]
     fn from_f32_slice(rows: &[f32]) -> Option<&[Self]>
+    where
+        Self: Sized,
+    {
+        let _ = rows;
+        None
+    }
+
+    /// For the 16-bit formats, expose storage as raw bits plus the
+    /// format tag so whole tiles can be widened by hardware conversion
+    /// instructions instead of per-element bit twiddling; `None` for
+    /// `f32` (which never decodes at all — see
+    /// [`Scalar::as_f32_slice`]).
+    #[inline]
+    fn as_half_bits(rows: &[Self]) -> Option<(HalfKind, &[u16])>
     where
         Self: Sized,
     {
@@ -188,6 +215,15 @@ impl Scalar for F16 {
     fn to_f32(self) -> f32 {
         f16_decode(self.0)
     }
+
+    #[inline(always)]
+    fn as_half_bits(rows: &[F16]) -> Option<(HalfKind, &[u16])> {
+        // SAFETY: F16 is #[repr(transparent)] over u16, so an &[F16]
+        // reinterprets as &[u16] of the same length and lifetime.
+        let bits =
+            unsafe { std::slice::from_raw_parts(rows.as_ptr() as *const u16, rows.len()) };
+        Some((HalfKind::F16, bits))
+    }
 }
 
 /// bfloat16 storage scalar: the top 16 bits of an `f32`, rounded to
@@ -207,6 +243,14 @@ impl Scalar for Bf16 {
     #[inline(always)]
     fn to_f32(self) -> f32 {
         f32::from_bits((self.0 as u32) << 16)
+    }
+
+    #[inline(always)]
+    fn as_half_bits(rows: &[Bf16]) -> Option<(HalfKind, &[u16])> {
+        // SAFETY: Bf16 is #[repr(transparent)] over u16 — as for F16.
+        let bits =
+            unsafe { std::slice::from_raw_parts(rows.as_ptr() as *const u16, rows.len()) };
+        Some((HalfKind::Bf16, bits))
     }
 }
 
@@ -390,6 +434,25 @@ mod tests {
                 assert_eq!(bf16_encode(f), h, "{h:#06x}");
             }
         }
+    }
+
+    #[test]
+    fn half_bits_views_alias_storage() {
+        let xs = [0.5f32, -1.25, 3.0e-3, 7.0];
+        let h: Vec<F16> = xs.iter().map(|&x| F16::from_f32(x)).collect();
+        let (kind, bits) = F16::as_half_bits(&h).unwrap();
+        assert_eq!(kind, HalfKind::F16);
+        assert_eq!(bits.len(), h.len());
+        for (b, s) in bits.iter().zip(&h) {
+            assert_eq!(*b, s.0);
+        }
+        let b: Vec<Bf16> = xs.iter().map(|&x| Bf16::from_f32(x)).collect();
+        let (kind, bits) = Bf16::as_half_bits(&b).unwrap();
+        assert_eq!(kind, HalfKind::Bf16);
+        for (bb, s) in bits.iter().zip(&b) {
+            assert_eq!(*bb, s.0);
+        }
+        assert!(f32::as_half_bits(&xs).is_none());
     }
 
     #[test]

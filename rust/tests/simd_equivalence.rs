@@ -1,0 +1,208 @@
+//! Cross-path SIMD equivalence matrix: every kernel set the host can
+//! run is checked against the always-compiled scalar reference for
+//! `gains_tile`, `loss_tile` and the min-distance commit kernel, across
+//! the dimension sweep of the issue (d ∈ {1, 3, 4, 7, 8, 15, 16, 31,
+//! 32, 100}), all three storage dtypes, and block sizes that land on
+//! and around every lane-width remainder. Dispatch is explicit
+//! (`kernel_set_for`), so the matrix is independent of `EXEMCL_SIMD`
+//! and runs identically under the forced-scalar CI job.
+//!
+//! Tolerances: the vector kernels keep the scalar association for the
+//! Gram combine (`(pn − 2·dot) + nv` with an exact doubling), so the
+//! only arithmetic difference against scalar is FMA contraction inside
+//! the dot product — a ≤ 1-ulp effect per fused op that accumulates
+//! linearly in `d`. For `d = 1` there is nothing to contract and the
+//! per-row outputs must be **bit-identical**; for larger `d` each
+//! squared distance must stay within a `d`-scaled ulp budget, and the
+//! f64 gain accumulators within the same budget summed over rows.
+//! Hardware half decode is exact, so the half dtypes obey the *same*
+//! bounds as f32 — any widening mismatch would blow far past them.
+
+use exemcl::cpu::simd::{self, pack, SimdPath};
+use exemcl::cpu::{gains_tile, loss_tile, pack_gathered, update_dmin_tile, KernelSet};
+use exemcl::data::synth::UniformCube;
+use exemcl::data::{Dataset, ShadowSet};
+use exemcl::distance::SqEuclidean;
+use exemcl::scalar::{Bf16, Scalar, F16};
+
+const DIMS: [usize; 10] = [1, 3, 4, 7, 8, 15, 16, 31, 32, 100];
+/// Set/candidate sizes crossing every lane remainder (widths 4/8/16).
+const BLOCKS: [usize; 9] = [1, 2, 3, 5, 8, 9, 15, 17, 33];
+
+fn scalar_ks() -> &'static KernelSet {
+    simd::kernel_set_for(SimdPath::Scalar).expect("scalar is always available")
+}
+
+fn vector_paths() -> Vec<&'static KernelSet> {
+    simd::available_paths()
+        .into_iter()
+        .filter(|&p| p != SimdPath::Scalar)
+        .map(|p| simd::kernel_set_for(p).expect("detected path must resolve"))
+        .collect()
+}
+
+/// Units in the last place between two finite f32s.
+fn ulp_diff(a: f32, b: f32) -> u64 {
+    fn key(x: f32) -> i64 {
+        let bits = x.to_bits() as i32;
+        (if bits < 0 { i32::MIN.wrapping_sub(bits) } else { bits }) as i64
+    }
+    key(a).abs_diff(key(b))
+}
+
+/// Per-row f32 outputs: bit-identical at d = 1, within a d-scaled ulp
+/// budget beyond (FMA contraction only).
+fn assert_rows_close(d: usize, got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    let budget = if d == 1 { 0 } else { 4 + d as u64 };
+    for (i, (&g, &w)) in got.iter().zip(want).enumerate() {
+        if d == 1 {
+            assert_eq!(g.to_bits(), w.to_bits(), "{what} row {i}: {g} vs {w} (d=1 must be exact)");
+        } else {
+            assert!(
+                ulp_diff(g, w) <= budget,
+                "{what} row {i} (d={d}): {g} vs {w} ({} ulp > {budget})",
+                ulp_diff(g, w)
+            );
+        }
+    }
+}
+
+fn offset_dataset(d: usize, n: usize, seed: u64) -> Dataset {
+    // a mild per-coordinate offset keeps norms and distances at
+    // different scales, so a combine-order regression would show up
+    let base = UniformCube::new(d, 1.0).generate(n, seed);
+    let rows: Vec<Vec<f32>> = (0..base.n())
+        .map(|i| base.row(i).iter().enumerate().map(|(j, x)| x + (j % 3) as f32).collect())
+        .collect();
+    Dataset::from_rows(&rows).unwrap()
+}
+
+/// The full kernel battery for one (path, dtype, d) cell.
+fn check_path<S: Scalar>(vks: &'static KernelSet, d: usize, n: usize, seed: u64) {
+    let sks = scalar_ks();
+    let ds = offset_dataset(d, n, seed);
+    let view: ShadowSet<S> = ds.shadow(true);
+    let e0 = ds.sq_norms();
+    let tag = format!("{}/{}/d{d}", vks.path(), S::DTYPE);
+
+    for &m in &BLOCKS {
+        let idx: Vec<usize> = (0..m).map(|i| (i * 13 + 1) % ds.n()).collect();
+        let vp = pack_gathered(vks, &view, &idx);
+        let sp = pack_gathered(sks, &view, &idx);
+
+        // loss over the whole range (empty set covered separately)
+        let lv = loss_tile(vks, &SqEuclidean, &view, &e0, 0..ds.n(), &vp);
+        let ls = loss_tile(sks, &SqEuclidean, &view, &e0, 0..ds.n(), &sp);
+        let tol = 1e-6 * ls.abs().max(1.0) * d as f64;
+        assert!((lv - ls).abs() <= tol, "{tag} m={m} loss: {lv} vs {ls}");
+
+        // dmin commit: identical min surfaces row by row
+        let mut dv = e0.clone();
+        let mut dsc = e0.clone();
+        update_dmin_tile(vks, &SqEuclidean, &view, 0..ds.n(), &vp, &mut dv);
+        update_dmin_tile(sks, &SqEuclidean, &view, 0..ds.n(), &sp, &mut dsc);
+        assert_rows_close(d, &dv, &dsc, &format!("{tag} m={m} dmin"));
+
+        // gains against the committed state, f64 accumulators
+        let mut gv = vec![0.0f64; m];
+        let mut gs = vec![0.0f64; m];
+        gains_tile(vks, &SqEuclidean, &view, &dsc, 0..ds.n(), &vp, &mut gv);
+        gains_tile(sks, &SqEuclidean, &view, &dsc, 0..ds.n(), &sp, &mut gs);
+        for (c, (a, b)) in gv.iter().zip(&gs).enumerate() {
+            let tol = 1e-7 * b.abs().max(1.0) * d as f64 + 1e-9 * n as f64;
+            assert!((a - b).abs() <= tol, "{tag} m={m} gains cand {c}: {a} vs {b}");
+        }
+    }
+
+    // empty set: both paths must leave the e0 surface untouched
+    let ve = pack_gathered(vks, &view, &[]);
+    let se = pack_gathered(sks, &view, &[]);
+    let lv = loss_tile(vks, &SqEuclidean, &view, &e0, 0..ds.n(), &ve);
+    let ls = loss_tile(sks, &SqEuclidean, &view, &e0, 0..ds.n(), &se);
+    assert_eq!(lv, ls, "{tag} empty-set loss must be bit-identical");
+}
+
+#[test]
+fn vector_paths_match_scalar_across_dims_and_dtypes() {
+    let paths = vector_paths();
+    if paths.is_empty() {
+        eprintln!("no vector path on this host; scalar-only (matrix is vacuous here)");
+        return;
+    }
+    for vks in paths {
+        for &d in &DIMS {
+            // odd n: remainder rows for the 4-wide ground unroll
+            let n = if d >= 100 { 131 } else { 203 };
+            check_path::<f32>(vks, d, n, 1000 + d as u64);
+            check_path::<F16>(vks, d, n, 2000 + d as u64);
+            check_path::<Bf16>(vks, d, n, 3000 + d as u64);
+        }
+    }
+}
+
+/// A dataset spanning several GROUND_TILEs with a ragged tail, d at a
+/// vector-width boundary: the tiling seams of the drivers.
+#[test]
+fn vector_paths_match_scalar_across_tile_seams() {
+    use exemcl::cpu::GROUND_TILE;
+    for vks in vector_paths() {
+        let n = 2 * GROUND_TILE + 19;
+        check_path::<f32>(vks, 32, n, 77);
+        check_path::<F16>(vks, 16, n, 78);
+    }
+}
+
+/// KernelSet::sq_dist on every path: the d-scaled ulp bound directly.
+#[test]
+fn sq_dist_agrees_with_scalar_on_all_paths() {
+    let sks = scalar_ks();
+    for vks in vector_paths() {
+        for &d in &DIMS {
+            let ds = offset_dataset(d, 64, 500 + d as u64);
+            for i in (0..ds.n()).step_by(7) {
+                let a = ds.row(i);
+                let b = ds.row((i + 13) % ds.n());
+                let g = vks.sq_dist(a, b);
+                let w = sks.sq_dist(a, b);
+                let budget = if d == 1 { 0 } else { 4 + d as u64 };
+                assert!(
+                    ulp_diff(g, w) <= budget,
+                    "{} d={d} rows {i}: {g} vs {w}",
+                    vks.path()
+                );
+            }
+        }
+    }
+}
+
+/// Packing through a vector kernel set widens halves with the hardware
+/// converters; the lanes must hold bit-identical values to the scalar
+/// (software-decoded) pack, only arranged in a different panel layout.
+#[test]
+fn packed_half_lanes_are_bit_identical_to_software_decode() {
+    let sks = scalar_ks();
+    for vks in vector_paths() {
+        for &d in &[1usize, 7, 16, 100] {
+            let ds = UniformCube::new(d, 1.0).generate(37, 900 + d as u64);
+            let hv: ShadowSet<F16> = ds.shadow(true);
+            let (rows, norms) = hv.gather(&(0..ds.n()).collect::<Vec<_>>());
+            let vp = pack(vks, &rows, &norms, d);
+            let sp = pack(sks, &rows, &norms, d);
+            let (wv, ws) = (vp.width(), sp.width());
+            assert_eq!(sp.m(), vp.m());
+            for c in 0..vp.m() {
+                for j in 0..d {
+                    let v = vp.rows()[(c / wv) * wv * d + j * wv + (c % wv)];
+                    let s = sp.rows()[(c / ws) * ws * d + j * ws + (c % ws)];
+                    assert_eq!(
+                        v.to_bits(),
+                        s.to_bits(),
+                        "{} d={d} cand {c} dim {j}: hardware {v} vs software {s}",
+                        vks.path()
+                    );
+                }
+            }
+        }
+    }
+}
