@@ -1,0 +1,218 @@
+//! Pool scheduler ablation: marginal-gains latency of the work-assisting
+//! scheduler against (a) the serial oracle — the single-worker overhead
+//! gate — and (b) an in-bench re-enactment of the previous pool design
+//! (atomic-cursor grain stealing over the ground range with a
+//! mutex-guarded merge), at the issue's target shape n=50k, d=32,
+//! |C|=256.
+//!
+//! Columns: pooled min wall time per thread count, the baseline pool's
+//! time at the same threads, the pooled-vs-baseline speedup, and the
+//! scaling vs the serial oracle. Acceptance gates (printed, recorded in
+//! the JSON): `MultiThread` at one thread must land within 5% of
+//! `SingleThread` (the zero-synchronization fast path), and on hosts
+//! with ≥ 4 cores the pooled scheduler must beat the baseline pool by
+//! ≥ 1.15× at full threads.
+//!
+//! Results go to `BENCH_cpu_pool.json` (override with
+//! `EXEMCL_BENCH_POOL_OUT`). Run: `cargo bench --bench ablation_pool`
+
+use std::sync::Mutex;
+
+use exemcl::bench::{measure, write_json, JsonValue, Scale, Table};
+use exemcl::cpu::simd;
+use exemcl::cpu::{gains_tile, pack_gathered, GrainQueue, MultiThread, SingleThread};
+use exemcl::data::synth::UniformCube;
+use exemcl::data::{Rng, ShadowSet};
+use exemcl::distance::SqEuclidean;
+use exemcl::optim::Oracle;
+
+/// The previous pool's grain: a fixed row range claimed whole from one
+/// shared atomic cursor, partials merged under a mutex at the end.
+const BASELINE_GRAIN: usize = 4096;
+
+fn main() {
+    let scale = Scale::from_env();
+    let (n, reps) = match scale {
+        Scale::Quick => (8_000usize, 2usize),
+        Scale::Default => (50_000, 5),
+        Scale::Full => (50_000, 7),
+    };
+    let d = 32usize;
+    let n_candidates = 256usize;
+    let n_exemplars = 8usize;
+    let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+
+    // thread curve: powers of two up to the core count, core count last
+    let mut curve: Vec<usize> = Vec::new();
+    let mut t = 1;
+    while t < cores {
+        curve.push(t);
+        t *= 2;
+    }
+    curve.push(cores);
+    curve.dedup();
+
+    println!("\n== pool scheduler ablation: work-assisting vs serial and grain-stealing ==");
+    println!(
+        "problem: n={n} d={d} |C|={n_candidates} reps={reps} cores={cores} threads={curve:?}"
+    );
+
+    let ds = UniformCube::new(d, 1.0).generate(n, 20_250_808);
+    let mut rng = Rng::new(11);
+    let exemplars = rng.sample_indices(n, n_exemplars);
+    let candidates = rng.sample_indices(n, n_candidates);
+
+    // one committed state shared by every contender
+    let st = SingleThread::new(ds.clone());
+    let mut state = st.init_state();
+    st.commit_many(&mut state, &exemplars).expect("commit exemplars");
+
+    // serial reference
+    let t_st = measure(
+        || {
+            let g = st.marginal_gains(&state, &candidates).expect("st gains");
+            std::hint::black_box(&g);
+        },
+        reps,
+        true,
+    );
+    let want = st.marginal_gains(&state, &candidates).expect("st gains");
+
+    // baseline pool: grain stealing via one shared cursor + mutex merge,
+    // the same kernel set the oracles dispatch to
+    let ks = simd::kernel_set_for(simd::available_paths()[0]).expect("best path resolves");
+    let view: ShadowSet<f32> = ds.shadow(true);
+    let dmin: &[f32] = &state.dmin;
+    let baseline = |threads: usize| -> Vec<f32> {
+        let packed = pack_gathered(ks, &view, &candidates);
+        let acc = Mutex::new(vec![0.0f64; candidates.len()]);
+        let q = GrainQueue::new(n, BASELINE_GRAIN);
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                s.spawn(|| {
+                    let mut local = vec![0.0f64; candidates.len()];
+                    while let Some(r) = q.claim() {
+                        gains_tile(ks, &SqEuclidean, &view, dmin, r, &packed, &mut local);
+                    }
+                    let mut g = acc.lock().unwrap();
+                    for (a, b) in g.iter_mut().zip(&local) {
+                        *a += b;
+                    }
+                });
+            }
+        });
+        let acc = acc.into_inner().unwrap();
+        acc.iter().map(|&a| (a / n as f64) as f32).collect()
+    };
+
+    struct Row {
+        threads: usize,
+        pool_s: f64,
+        base_s: f64,
+    }
+    let mut rows: Vec<Row> = Vec::new();
+    let mut mt1_min = f64::NAN;
+    for &threads in &curve {
+        let mt = MultiThread::new(ds.clone(), threads);
+        let t_pool = measure(
+            || {
+                let g = mt.marginal_gains(&state, &candidates).expect("mt gains");
+                std::hint::black_box(&g);
+            },
+            reps,
+            true,
+        );
+        // pooled results must be bit-identical to the serial oracle
+        let got = mt.marginal_gains(&state, &candidates).expect("mt gains");
+        for (c, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "threads={threads} cand {c}: {a} vs {b}");
+        }
+        let t_base = measure(
+            || {
+                let g = baseline(threads);
+                std::hint::black_box(&g);
+            },
+            reps,
+            true,
+        );
+        // the baseline merges in completion order — approximate equality
+        let base_gains = baseline(threads);
+        for (c, (a, b)) in base_gains.iter().zip(&want).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-4 * b.abs() + 1e-5,
+                "baseline threads={threads} cand {c}: {a} vs {b}"
+            );
+        }
+        if threads == 1 {
+            mt1_min = t_pool.min;
+        }
+        if let Some(stats) = Oracle::sched_stats(&mt) {
+            println!(
+                "threads={threads}: tasks={} assists={} claims local={} remote={}",
+                stats.tasks, stats.assists, stats.local_claims, stats.remote_claims
+            );
+        }
+        rows.push(Row { threads, pool_s: t_pool.min, base_s: t_base.min });
+    }
+
+    let mut table =
+        Table::new(&["threads", "pool[s]", "baseline[s]", "vs baseline", "vs serial"]);
+    for r in &rows {
+        table.row(&[
+            r.threads.to_string(),
+            format!("{:.4}", r.pool_s),
+            format!("{:.4}", r.base_s),
+            format!("{:.2}x", r.base_s / r.pool_s),
+            format!("{:.2}x", t_st.min / r.pool_s),
+        ]);
+    }
+    table.print();
+
+    // acceptance gates
+    let overhead = mt1_min / t_st.min - 1.0;
+    let last = rows.last().expect("curve is non-empty");
+    let speedup_vs_baseline = last.base_s / last.pool_s;
+    let single_ok = overhead <= 0.05;
+    let multi_ok = cores < 4 || speedup_vs_baseline >= 1.15;
+    println!(
+        "\nsingle-worker overhead {:.1}% (target <= 5%: {}), pooled vs baseline at {} threads \
+         {:.2}x (target >= 1.15x: {})",
+        100.0 * overhead,
+        if single_ok { "PASS" } else { "MISS" },
+        last.threads,
+        speedup_vs_baseline,
+        if cores < 4 {
+            "N/A (< 4 cores)"
+        } else if speedup_vs_baseline >= 1.15 {
+            "PASS"
+        } else {
+            "MISS"
+        },
+    );
+
+    let mut kv: Vec<(String, JsonValue)> = vec![
+        ("bench".into(), JsonValue::Str("ablation_pool".into())),
+        ("n".into(), JsonValue::Int(n as i64)),
+        ("d".into(), JsonValue::Int(d as i64)),
+        ("candidates".into(), JsonValue::Int(n_candidates as i64)),
+        ("exemplars_committed".into(), JsonValue::Int(n_exemplars as i64)),
+        ("reps".into(), JsonValue::Int(reps as i64)),
+        ("cores".into(), JsonValue::Int(cores as i64)),
+        ("st_min_s".into(), JsonValue::Num(t_st.min)),
+        ("mt1_min_s".into(), JsonValue::Num(mt1_min)),
+        ("single_worker_overhead".into(), JsonValue::Num(overhead)),
+        ("speedup_vs_baseline_max_threads".into(), JsonValue::Num(speedup_vs_baseline)),
+        ("target_single_worker_overhead".into(), JsonValue::Num(0.05)),
+        ("target_speedup_vs_baseline".into(), JsonValue::Num(1.15)),
+        ("target_met".into(), JsonValue::Bool(single_ok && multi_ok)),
+    ];
+    for r in &rows {
+        kv.push((format!("pool_t{}_min_s", r.threads), JsonValue::Num(r.pool_s)));
+        kv.push((format!("baseline_t{}_min_s", r.threads), JsonValue::Num(r.base_s)));
+    }
+    let pairs: Vec<(&str, JsonValue)> = kv.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
+    let out_path =
+        std::env::var("EXEMCL_BENCH_POOL_OUT").unwrap_or_else(|_| "BENCH_cpu_pool.json".into());
+    let path = write_json(&out_path, &pairs).expect("write BENCH_cpu_pool.json");
+    println!("wrote {path}");
+}

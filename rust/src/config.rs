@@ -6,7 +6,7 @@ use std::collections::BTreeMap;
 use std::time::Duration;
 
 use crate::coordinator::{DEFAULT_QUEUE_CAPACITY, DEFAULT_SESSION_CAPACITY};
-use crate::cpu::SimdChoice;
+use crate::cpu::{PinMode, SimdChoice};
 use crate::data::Dataset;
 use crate::engine::Engine;
 use crate::net::{Listen, NetConfig, DEFAULT_MAX_CONNS};
@@ -117,6 +117,10 @@ pub struct AppConfig {
     /// `avx2` | `avx512` | `neon`). Forcing a path the host cannot run
     /// is a build error; `EXEMCL_SIMD` overrides this key.
     pub simd: SimdChoice,
+    /// Worker-thread CPU pinning for the pooled CPU backend (`auto` |
+    /// `on` | `off`; `auto` pins only on multi-NUMA hosts). `EXEMCL_PIN`
+    /// overrides this key.
+    pub pin: PinMode,
     /// Artifact directory.
     pub artifacts: String,
     /// Worker threads for the pooled CPU backend (0 = auto).
@@ -155,6 +159,7 @@ impl Default for AppConfig {
             backend: Backend::Device,
             dtype: Dtype::F32,
             simd: SimdChoice::Auto,
+            pin: PinMode::Auto,
             artifacts: "artifacts".into(),
             threads: 0,
             memory_mib: 16 * 1024,
@@ -185,6 +190,7 @@ impl AppConfig {
             backend: raw.get_or("eval.backend", def.backend)?.with_threads(threads),
             dtype: raw.get_or("eval.dtype", def.dtype)?,
             simd: raw.get_or("eval.simd", def.simd)?,
+            pin: raw.get_or("eval.pin", def.pin)?,
             artifacts: raw.get("eval.artifacts").unwrap_or(&def.artifacts).to_string(),
             threads,
             memory_mib: raw.get_or("eval.memory_mib", def.memory_mib)?,
@@ -225,6 +231,7 @@ impl AppConfig {
             .backend(self.backend.clone())
             .dtype(self.dtype)
             .simd(self.simd)
+            .pinning(self.pin)
             .queue_capacity(self.queue)
             .session_capacity(self.sessions)
             .session_ttl_secs(self.session_ttl_secs)
@@ -243,6 +250,7 @@ impl AppConfig {
             .backend(self.backend.clone().with_threads(self.threads))
             .dtype(self.dtype)
             .simd(self.simd)
+            .pinning(self.pin)
             .artifacts(self.artifacts.clone())
             .memory_mib(self.memory_mib)
             .queue_capacity(self.queue)
@@ -313,6 +321,31 @@ mod tests {
         );
         let raw = RawConfig::parse("[eval]\nsimd = sse9\n").unwrap();
         assert!(AppConfig::from_raw(&raw).is_err());
+    }
+
+    #[test]
+    fn pin_key_parses_with_default_and_rejects() {
+        let def = AppConfig::from_raw(&RawConfig::default()).unwrap();
+        assert_eq!(def.pin, PinMode::Auto);
+        let raw = RawConfig::parse("[eval]\npin = on\n").unwrap();
+        assert_eq!(AppConfig::from_raw(&raw).unwrap().pin, PinMode::On);
+        let raw = RawConfig::parse("[eval]\npin = off\n").unwrap();
+        assert_eq!(AppConfig::from_raw(&raw).unwrap().pin, PinMode::Off);
+        let raw = RawConfig::parse("[eval]\npin = sideways\n").unwrap();
+        assert!(AppConfig::from_raw(&raw).is_err());
+    }
+
+    #[test]
+    fn pin_key_builds_a_working_engine() {
+        if std::env::var("EXEMCL_PIN").is_ok() {
+            return; // env forcing overrides the key; matrix covered in CI
+        }
+        let raw = RawConfig::parse("[eval]\nbackend = cpu-mt\nthreads = 2\npin = off\n").unwrap();
+        let cfg = AppConfig::from_raw(&raw).unwrap();
+        let ds = crate::data::synth::UniformCube::new(3, 1.0).generate(32, 1);
+        let engine = cfg.engine(ds).unwrap();
+        let r = engine.run(&crate::optim::Greedy::new(3)).unwrap();
+        assert_eq!(r.exemplars.len(), 3);
     }
 
     #[test]

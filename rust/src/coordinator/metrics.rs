@@ -161,6 +161,66 @@ impl LatencyHistogram {
     }
 }
 
+/// Histogram over fused-gains batch widths (jobs per fused
+/// `marginal_gains_multi` launch) with power-of-two buckets: bucket `i`
+/// counts widths in `[2^i, 2^(i+1))`; 16 buckets cover 1 to ~64k
+/// sessions per launch.
+#[derive(Debug)]
+pub struct WidthHistogram {
+    buckets: [AtomicU64; 16],
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for WidthHistogram {
+    fn default() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+}
+
+impl WidthHistogram {
+    /// Record one batch of `width` fused jobs (width 0 is clamped to 1:
+    /// an observed batch always carries at least one job).
+    pub fn observe(&self, width: u64) {
+        let w = width.max(1);
+        let idx = (64 - w.leading_zeros() as usize - 1).min(15);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(w, Ordering::Relaxed);
+        self.max.fetch_max(w, Ordering::Relaxed);
+    }
+
+    /// Number of batches observed.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Mean batch width.
+    pub fn mean(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return 0.0;
+        }
+        self.sum.load(Ordering::Relaxed) as f64 / c as f64
+    }
+
+    /// Widest batch observed.
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Raw count of bucket `i` (widths in `[2^i, 2^(i+1))`).
+    pub fn bucket(&self, i: usize) -> u64 {
+        self.buckets[i].load(Ordering::Relaxed)
+    }
+}
+
 /// All service metrics, shared via `Arc` between handles and executor.
 #[derive(Debug, Default)]
 pub struct ServiceMetrics {
@@ -192,6 +252,17 @@ pub struct ServiceMetrics {
     pub sessions_evicted: Counter,
     /// Live entries in the executor's session table.
     pub sessions_live: Gauge,
+    /// Pool tasks where at least one idle worker assisted the caller
+    /// (work-assisting scheduler; deltas of
+    /// [`crate::cpu::SchedStats::assists`] observed by the executor).
+    pub tasks_assisted: Counter,
+    /// Ground-tile chunks claimed by a worker on its home NUMA node.
+    pub tiles_node_local: Counter,
+    /// Ground-tile chunks stolen from another NUMA node's shard.
+    pub tiles_node_remote: Counter,
+    /// Fused-gains batch width distribution (jobs per
+    /// `marginal_gains_multi` launch the executor forms).
+    pub fused_width: WidthHistogram,
     /// Logical wire-payload bytes per message family.
     pub wire: WireBytes,
     /// End-to-end request latency.
@@ -213,7 +284,9 @@ impl ServiceMetrics {
         format!(
             "requests={} batches={} coalesced={} fused_gains={} sets={} gains={} \
              sessions(live={} opened={} closed={} evicted={}) \
-             conns(live={} opened={} closed={} rejected={}) wire={}B net(rx={}B tx={}B) \
+             conns(live={} opened={} closed={} rejected={}) \
+             sched(assisted={} local_tiles={} remote_tiles={}) \
+             fused_width(n={} mean={:.1} max={}) wire={}B net(rx={}B tx={}B) \
              latency(mean={:.0}us p50={}us p95={}us max={}us)",
             self.requests.get(),
             self.batches.get(),
@@ -229,6 +302,12 @@ impl ServiceMetrics {
             self.conns_opened.get(),
             self.conns_closed.get(),
             self.conns_rejected.get(),
+            self.tasks_assisted.get(),
+            self.tiles_node_local.get(),
+            self.tiles_node_remote.get(),
+            self.fused_width.count(),
+            self.fused_width.mean(),
+            self.fused_width.max(),
             self.wire.total(),
             self.wire.net_rx.get(),
             self.wire.net_tx.get(),
@@ -296,5 +375,43 @@ mod tests {
         let h = LatencyHistogram::default();
         assert_eq!(h.quantile_us(0.9), 0);
         assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn width_histogram_accounts_every_batch() {
+        let h = WidthHistogram::default();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+        for w in [1u64, 2, 3, 8, 8] {
+            h.observe(w);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.max(), 8);
+        assert!((h.mean() - 4.4).abs() < 1e-9);
+        // bucket i covers [2^i, 2^(i+1)): 1 -> b0, {2,3} -> b1, {8,8} -> b3
+        assert_eq!(h.bucket(0), 1);
+        assert_eq!(h.bucket(1), 2);
+        assert_eq!(h.bucket(2), 0);
+        assert_eq!(h.bucket(3), 2);
+        // width 0 is clamped into the first bucket, never dropped
+        h.observe(0);
+        assert_eq!(h.bucket(0), 2);
+        assert_eq!(h.count(), 6);
+        // widths past the last boundary saturate into the top bucket
+        h.observe(1 << 40);
+        assert_eq!(h.bucket(15), 1);
+        assert_eq!(h.max(), 1 << 40);
+    }
+
+    #[test]
+    fn scheduler_counters_sum_into_the_summary() {
+        let m = ServiceMetrics::default();
+        m.tasks_assisted.add(2);
+        m.tiles_node_local.add(40);
+        m.tiles_node_remote.add(8);
+        m.fused_width.observe(4);
+        let s = m.summary();
+        assert!(s.contains("sched(assisted=2 local_tiles=40 remote_tiles=8)"), "{s}");
+        assert!(s.contains("fused_width(n=1 mean=4.0 max=4)"), "{s}");
     }
 }

@@ -78,6 +78,7 @@ use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::cpu::SchedStats;
 use crate::data::Dataset;
 use crate::optim::oracle::{DminState, GainsJob, Oracle};
 use crate::{Error, Result};
@@ -327,6 +328,9 @@ fn executor_loop(
     sessions: SessionConfig,
 ) {
     let mut table = SessionTable::new(sessions);
+    // baseline for delta accounting: the pool's counters are cumulative
+    // and the oracle may have served work before this executor owned it
+    let mut sched_last = oracle.sched_stats().unwrap_or_default();
     loop {
         let first = match rx.recv() {
             Ok(Request::Shutdown) | Err(_) => return,
@@ -390,8 +394,20 @@ fn executor_loop(
                 other => serve_single(oracle, &mut table, other, metrics),
             }
             metrics.batches.add(1);
+            flush_sched_stats(oracle, metrics, &mut sched_last);
         }
     }
+}
+
+/// Fold the pooled CPU backend's work-assisting scheduler counters into
+/// the service metrics as deltas since the previous flush. Backends
+/// without a pool ([`Oracle::sched_stats`] is `None`) are a no-op.
+fn flush_sched_stats(oracle: &dyn Oracle, metrics: &ServiceMetrics, last: &mut SchedStats) {
+    let Some(now) = oracle.sched_stats() else { return };
+    metrics.tasks_assisted.add(now.assists.saturating_sub(last.assists));
+    metrics.tiles_node_local.add(now.local_claims.saturating_sub(last.local_claims));
+    metrics.tiles_node_remote.add(now.remote_claims.saturating_sub(last.remote_claims));
+    *last = now;
 }
 
 /// Drain queued requests of the batch head's kind: matching requests
@@ -490,6 +506,9 @@ fn serve_marginals_batch(
             candidates: &r.candidates,
         })
         .collect();
+    if !jobs.is_empty() {
+        metrics.fused_width.observe(jobs.len() as u64);
+    }
     let mut results = oracle.marginal_gains_multi(&jobs).into_iter();
     drop(jobs); // release the borrows of `batch` and `table` before replying
     for (r, err) in batch.into_iter().zip(errors) {
@@ -1079,6 +1098,10 @@ mod tests {
         direct.commit(&mut sb, 9).unwrap();
         assert_eq!(ga, direct.marginal_gains(&sa, &cands).unwrap());
         assert_eq!(gb, direct.marginal_gains(&sb, &cands).unwrap());
+        // every served marginals batch lands in the width histogram
+        let fused = svc.metrics().fused_width.count();
+        assert!(fused >= 2, "expected >= 2 observed batches, got {fused}");
+        assert!(svc.metrics().fused_width.max() >= 1);
         svc.shutdown();
     }
 

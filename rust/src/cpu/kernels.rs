@@ -72,6 +72,26 @@
 //! scalar: a generic `eval` call per pair cannot be vectorized from the
 //! outside, and keeping them untouched preserves their bitwise behavior
 //! across this crate's SIMD dispatch.
+//!
+//! # Canonical tiling and bit-reproducibility
+//!
+//! The `_range` drivers take an explicit `tile_rows` (derived from the
+//! dtype width and the host's per-core L2 by
+//! [`crate::cpu::topology::tile_rows`]) and **always cut tiles at
+//! absolute multiples of it**, wherever `rows.start` falls — so
+//! splitting a range at any tile-aligned point and accumulating into
+//! the same slots yields *bit-identical* results to one full-range
+//! call. This matters because the vector
+//! kernels may hold partial sums in registers for the duration of one
+//! tile invocation: identical tile boundaries ⇒ identical summation
+//! trees. The pooled oracles build on this to make multi-threaded
+//! evaluation bit-identical to single-threaded (see [`crate::cpu`],
+//! "Scheduler" section): chunks are fixed groups of
+//! [`crate::cpu::topology::CHUNK_TILES`] tiles, each chunk accumulates
+//! into its own zeroed slot, and the slots are folded in chunk order —
+//! the same tree the single-thread path walks inline. The historical
+//! `_tile` entry points are thin wrappers fixing
+//! `tile_rows = GROUND_TILE`.
 
 use std::ops::Range;
 
@@ -142,18 +162,29 @@ pub fn gather_rows(ds: &Dataset, idx: &[usize]) -> (Vec<f32>, Vec<f32>) {
     (rows, norms)
 }
 
+/// End of the tile containing `start`: the next **absolute** multiple
+/// of `tile_rows`, clamped to `limit`. All `_range` drivers cut tiles
+/// here, so tile boundaries are a pure function of position — never of
+/// where a caller happened to split the range.
+#[inline]
+fn tile_end(start: usize, tile_rows: usize, limit: usize) -> usize {
+    ((start / tile_rows + 1) * tile_rows).min(limit)
+}
+
 /// Fused marginal-gain kernel over a ground range of the shadow (Gram
 /// path): for every ground row in `rows`, score the entire packed
 /// candidate block against `dmin` and accumulate the clamped
 /// improvements `max(dmin_i − d(c, v_i), 0)` into `acc[c]` (f64, one
 /// slot per candidate). `dmin` is indexed absolutely (it covers the
-/// whole ground set); internal tiling is by [`GROUND_TILE`].
-pub fn gains_tile<S: Scalar, D: Dissimilarity>(
+/// whole ground set); tiles cut at absolute multiples of `tile_rows`
+/// (see the module docs on bit-reproducibility).
+pub fn gains_range<S: Scalar, D: Dissimilarity>(
     ks: &KernelSet,
     dist: &D,
     view: &ShadowSet<S>,
     dmin: &[f32],
     rows: Range<usize>,
+    tile_rows: usize,
     cands: &PackedBlock,
     acc: &mut [f64],
 ) {
@@ -166,39 +197,134 @@ pub fn gains_tile<S: Scalar, D: Dissimilarity>(
     if m == 0 {
         return;
     }
+    let tile_rows = tile_rows.max(1);
     let fused = dist.post_sq_is_identity();
     let mut scratch = Vec::new();
     let mut dd_buf = if fused { Vec::new() } else { vec![0.0f32; m] };
     let mut start = rows.start;
     while start < rows.end {
-        let end = (start + GROUND_TILE).min(rows.end);
+        let end = tile_end(start, tile_rows, rows.end);
         let ground = decoded(ks, view.rows_slice(start..end), &mut scratch);
         let gnorms = &view.norms()[start..end];
         let dmin_tile = &dmin[start..end];
-        if fused {
-            // SAFETY: ks's CPU features were verified when it was
-            // resolved (simd::kernel_set_for) — the kernels' only
-            // precondition.
-            unsafe {
-                (ks.gains_tile)(ground, gnorms, dmin_tile, d, &cands.rows, &cands.norms, acc)
-            };
-        } else {
-            // non-identity post_sq: squared distances per row, scalar
-            // epilogue applies the transform before the improvement test
-            for (r, (&dm, &nv)) in dmin_tile.iter().zip(gnorms).enumerate() {
-                if dm <= 0.0 {
-                    continue; // d ≥ 0 ⇒ no candidate can improve this row
-                }
-                let v = &ground[r * d..(r + 1) * d];
-                // SAFETY: as above.
-                unsafe { (ks.sq_dists_row)(v, nv, d, &cands.rows, &cands.norms, &mut dd_buf) };
-                for (slot, &sq) in acc.iter_mut().zip(dd_buf.iter()) {
-                    let improve = dm - dist.post_sq(sq);
-                    if improve > 0.0 {
-                        *slot += improve as f64;
-                    }
+        gains_one_tile(ks, dist, fused, ground, gnorms, dmin_tile, d, cands, acc, &mut dd_buf);
+        start = end;
+    }
+}
+
+/// One tile of the gains pass: the fused vector kernel when `post_sq`
+/// is the identity, else per-row squared distances plus a scalar
+/// epilogue. Factored out so the fused multi-state driver
+/// ([`gains_range_multi`]) issues the *exact same call sequence* per
+/// job as the single-state path — the bit-identity contract.
+#[allow(clippy::too_many_arguments)] // internal seam; mirrors the kernel signature
+#[inline]
+fn gains_one_tile<D: Dissimilarity>(
+    ks: &KernelSet,
+    dist: &D,
+    fused: bool,
+    ground: &[f32],
+    gnorms: &[f32],
+    dmin_tile: &[f32],
+    d: usize,
+    cands: &PackedBlock,
+    acc: &mut [f64],
+    dd_buf: &mut [f32],
+) {
+    if fused {
+        // SAFETY: ks's CPU features were verified when it was resolved
+        // (simd::kernel_set_for) — the kernels' only precondition.
+        unsafe { (ks.gains_tile)(ground, gnorms, dmin_tile, d, &cands.rows, &cands.norms, acc) };
+    } else {
+        // non-identity post_sq: squared distances per row, scalar
+        // epilogue applies the transform before the improvement test
+        for (r, (&dm, &nv)) in dmin_tile.iter().zip(gnorms).enumerate() {
+            if dm <= 0.0 {
+                continue; // d ≥ 0 ⇒ no candidate can improve this row
+            }
+            let v = &ground[r * d..(r + 1) * d];
+            // SAFETY: as above.
+            unsafe { (ks.sq_dists_row)(v, nv, d, &cands.rows, &cands.norms, dd_buf) };
+            for (slot, &sq) in acc.iter_mut().zip(dd_buf.iter()) {
+                let improve = dm - dist.post_sq(sq);
+                if improve > 0.0 {
+                    *slot += improve as f64;
                 }
             }
+        }
+    }
+}
+
+/// [`gains_range`] with the historical [`GROUND_TILE`] tiling.
+pub fn gains_tile<S: Scalar, D: Dissimilarity>(
+    ks: &KernelSet,
+    dist: &D,
+    view: &ShadowSet<S>,
+    dmin: &[f32],
+    rows: Range<usize>,
+    cands: &PackedBlock,
+    acc: &mut [f64],
+) {
+    gains_range(ks, dist, view, dmin, rows, GROUND_TILE, cands, acc);
+}
+
+/// Fused **multi-state** gains over one ground range: each tile of the
+/// shadow is decoded exactly once and scored against *every* job's
+/// candidate block and `dmin` state before the next tile streams in —
+/// the memory-traffic win behind cross-session fusion (one ground pass
+/// serves all queued sessions). `jobs[j]` is `(dmin_j, cands_j)` with
+/// `accs[j]` its gain slots.
+///
+/// Per job, the tile boundaries, kernel invocations and accumulation
+/// order are **identical** to a [`gains_range`] call with the same
+/// `rows` and `tile_rows`, so fused results are bit-identical to
+/// per-job unfused calls.
+pub fn gains_range_multi<S: Scalar, D: Dissimilarity>(
+    ks: &KernelSet,
+    dist: &D,
+    view: &ShadowSet<S>,
+    jobs: &[(&[f32], &PackedBlock)],
+    rows: Range<usize>,
+    tile_rows: usize,
+    accs: &mut [&mut [f64]],
+) {
+    debug_assert!(dist.factors_through_sq_euclidean());
+    debug_assert_eq!(jobs.len(), accs.len());
+    let d = view.d();
+    let fused = dist.post_sq_is_identity();
+    let max_m = jobs.iter().map(|(_, c)| c.m()).max().unwrap_or(0);
+    if max_m == 0 {
+        return;
+    }
+    let tile_rows = tile_rows.max(1);
+    let mut scratch = Vec::new();
+    let mut dd_buf = if fused { Vec::new() } else { vec![0.0f32; max_m] };
+    let mut start = rows.start;
+    while start < rows.end {
+        let end = tile_end(start, tile_rows, rows.end);
+        let ground = decoded(ks, view.rows_slice(start..end), &mut scratch);
+        let gnorms = &view.norms()[start..end];
+        for ((dmin, cands), acc) in jobs.iter().zip(accs.iter_mut()) {
+            let m = acc.len();
+            debug_assert_eq!(cands.m(), m);
+            debug_assert_eq!(cands.d(), d);
+            debug_assert_eq!(cands.width(), ks.width());
+            if m == 0 {
+                continue;
+            }
+            let dmin_tile = &dmin[start..end];
+            gains_one_tile(
+                ks,
+                dist,
+                fused,
+                ground,
+                gnorms,
+                dmin_tile,
+                d,
+                cands,
+                acc,
+                &mut dd_buf[..if fused { 0 } else { m }],
+            );
         }
         start = end;
     }
@@ -240,25 +366,29 @@ pub fn gains_tile_direct<D: Dissimilarity>(
 /// it cannot come from the centered shadow); minima commute with the
 /// monotone `post_sq`, so the whole min runs in squared space and
 /// `post_sq` is applied once per row. An empty set yields the
-/// e0-distance sum.
-pub fn loss_tile<S: Scalar, D: Dissimilarity>(
+/// e0-distance sum. Per-row minima are independent of the tiling; the
+/// `f64` accumulator chains rows in ground order within the range, so
+/// any chunk partition folded in order reproduces the full-range bits.
+pub fn loss_range<S: Scalar, D: Dissimilarity>(
     ks: &KernelSet,
     dist: &D,
     view: &ShadowSet<S>,
     e0_sq: &[f32],
     rows: Range<usize>,
+    tile_rows: usize,
     set: &PackedBlock,
 ) -> f64 {
     debug_assert!(dist.factors_through_sq_euclidean());
     let d = view.d();
     debug_assert_eq!(set.d(), d);
     debug_assert_eq!(set.width(), ks.width());
+    let tile_rows = tile_rows.max(1);
     let mut scratch = Vec::new();
-    let mut mins = vec![0.0f32; GROUND_TILE.min(rows.len())];
+    let mut mins = vec![0.0f32; tile_rows.min(rows.len())];
     let mut acc = 0.0f64;
     let mut start = rows.start;
     while start < rows.end {
-        let end = (start + GROUND_TILE).min(rows.end);
+        let end = tile_end(start, tile_rows, rows.end);
         let ground = decoded(ks, view.rows_slice(start..end), &mut scratch);
         let gnorms = &view.norms()[start..end];
         let mins_t = &mut mins[..end - start];
@@ -271,6 +401,18 @@ pub fn loss_tile<S: Scalar, D: Dissimilarity>(
         start = end;
     }
     acc
+}
+
+/// [`loss_range`] with the historical [`GROUND_TILE`] tiling.
+pub fn loss_tile<S: Scalar, D: Dissimilarity>(
+    ks: &KernelSet,
+    dist: &D,
+    view: &ShadowSet<S>,
+    e0_sq: &[f32],
+    rows: Range<usize>,
+    set: &PackedBlock,
+) -> f64 {
+    loss_range(ks, dist, view, e0_sq, rows, GROUND_TILE, set)
 }
 
 /// Direct-eval loss-sum kernel (non-factoring dissimilarities).
@@ -300,12 +442,15 @@ pub fn loss_tile_direct<D: Dissimilarity>(
 
 /// Batched dmin update over a ground range of the shadow (Gram path):
 /// `dmin[i − rows.start] ← min(dmin[i − rows.start], min_e d(e, v_i))`
-/// for the packed exemplar batch. `dmin` covers exactly `rows`.
-pub fn update_dmin_tile<S: Scalar, D: Dissimilarity>(
+/// for the packed exemplar batch. `dmin` covers exactly `rows`. The
+/// update is elementwise per ground row, so results are independent of
+/// the tiling altogether.
+pub fn update_dmin_range<S: Scalar, D: Dissimilarity>(
     ks: &KernelSet,
     dist: &D,
     view: &ShadowSet<S>,
     rows: Range<usize>,
+    tile_rows: usize,
     exemplars: &PackedBlock,
     dmin: &mut [f32],
 ) {
@@ -317,12 +462,13 @@ pub fn update_dmin_tile<S: Scalar, D: Dissimilarity>(
     if exemplars.m() == 0 {
         return;
     }
+    let tile_rows = tile_rows.max(1);
     let offset = rows.start;
     let mut scratch = Vec::new();
-    let mut mins = vec![0.0f32; GROUND_TILE.min(rows.len())];
+    let mut mins = vec![0.0f32; tile_rows.min(rows.len())];
     let mut start = rows.start;
     while start < rows.end {
-        let end = (start + GROUND_TILE).min(rows.end);
+        let end = tile_end(start, tile_rows, rows.end);
         let ground = decoded(ks, view.rows_slice(start..end), &mut scratch);
         let gnorms = &view.norms()[start..end];
         let mins_t = &mut mins[..end - start];
@@ -338,6 +484,18 @@ pub fn update_dmin_tile<S: Scalar, D: Dissimilarity>(
         }
         start = end;
     }
+}
+
+/// [`update_dmin_range`] with the historical [`GROUND_TILE`] tiling.
+pub fn update_dmin_tile<S: Scalar, D: Dissimilarity>(
+    ks: &KernelSet,
+    dist: &D,
+    view: &ShadowSet<S>,
+    rows: Range<usize>,
+    exemplars: &PackedBlock,
+    dmin: &mut [f32],
+) {
+    update_dmin_range(ks, dist, view, rows, GROUND_TILE, exemplars, dmin);
 }
 
 /// Direct-eval dmin update (non-factoring dissimilarities).
@@ -689,6 +847,114 @@ mod tests {
             let got = (*a / n) as f32;
             assert!((got - w).abs() < 1e-5, "cand {c}: {got} vs {w}");
         }
+    }
+
+    /// The chunk-canonical reduction contract: with tiles cut at
+    /// absolute multiples of `tile_rows`, per-chunk slots (zeroed, then
+    /// folded in chunk order) reproduce the inline chunk walk **bit for
+    /// bit**, regardless of the order the chunks were computed in —
+    /// exactly the structure the pooled oracles rely on.
+    #[test]
+    fn tile_aligned_chunks_fold_bit_identically() {
+        fn run<S: Scalar>(seed: u64) {
+            let ds = UniformCube::new(5, 1.0).generate(400, seed);
+            let view: ShadowSet<S> = ds.shadow(true);
+            let dmin = ds.sq_norms();
+            let e0 = ds.sq_norms();
+            let cands: Vec<usize> = (0..7).map(|i| i * 31 % ds.n()).collect();
+            let m = cands.len();
+            let packed = pack_gathered(ks(), &view, &cands);
+            let tile = 64usize;
+            let chunk = 2 * tile;
+            let n_chunks = ds.n().div_ceil(chunk);
+
+            // inline walk: reused slot, folded chunk by chunk in order
+            let mut want_g = vec![0.0f64; m];
+            let mut want_l = 0.0f64;
+            let mut slot = vec![0.0f64; m];
+            for c in 0..n_chunks {
+                let rows = c * chunk..((c + 1) * chunk).min(ds.n());
+                slot.fill(0.0);
+                let r = rows.clone();
+                gains_range(ks(), &SqEuclidean, &view, &dmin, r, tile, &packed, &mut slot);
+                for (a, s) in want_g.iter_mut().zip(&slot) {
+                    *a += *s;
+                }
+                want_l += loss_range(ks(), &SqEuclidean, &view, &e0, rows, tile, &packed);
+            }
+
+            // pooled shape: disjoint per-chunk slots filled in *reverse*
+            // order, folded forward
+            let mut slots_g = vec![0.0f64; n_chunks * m];
+            let mut slots_l = vec![0.0f64; n_chunks];
+            for c in (0..n_chunks).rev() {
+                let rows = c * chunk..((c + 1) * chunk).min(ds.n());
+                gains_range(
+                    ks(),
+                    &SqEuclidean,
+                    &view,
+                    &dmin,
+                    rows.clone(),
+                    tile,
+                    &packed,
+                    &mut slots_g[c * m..(c + 1) * m],
+                );
+                slots_l[c] = loss_range(ks(), &SqEuclidean, &view, &e0, rows, tile, &packed);
+            }
+            let mut got_g = vec![0.0f64; m];
+            for c in 0..n_chunks {
+                for (a, s) in got_g.iter_mut().zip(&slots_g[c * m..(c + 1) * m]) {
+                    *a += *s;
+                }
+            }
+            let mut got_l = 0.0f64;
+            for &s in &slots_l {
+                got_l += s;
+            }
+
+            assert_eq!(want_g, got_g, "gains fold must be bit-identical");
+            assert_eq!(want_l.to_bits(), got_l.to_bits(), "loss fold must be bit-identical");
+        }
+        run::<f32>(29);
+        run::<F16>(30);
+        run::<Bf16>(31);
+    }
+
+    /// The fused multi-state driver issues the exact same per-job call
+    /// sequence as single-state [`gains_range`]: bit-identical outputs.
+    #[test]
+    fn fused_multi_state_kernel_is_bit_identical_to_per_job_calls() {
+        fn run<S: Scalar>(seed: u64) {
+            let ds = UniformCube::new(9, 1.0).generate(350, seed);
+            let view: ShadowSet<S> = ds.shadow(true);
+            let norms = ds.sq_norms();
+            // two sessions in different states with different candidates
+            let mut dmin_a = norms.clone();
+            let ex_a = pack_gathered(ks(), &view, &[4, 200]);
+            update_dmin_range(ks(), &SqEuclidean, &view, 0..ds.n(), 64, &ex_a, &mut dmin_a);
+            let dmin_b = norms.clone();
+            let ca: Vec<usize> = (0..11).map(|i| i * 17 % ds.n()).collect();
+            let cb: Vec<usize> = (0..5).map(|i| i * 53 % ds.n()).collect();
+            let pa = pack_gathered(ks(), &view, &ca);
+            let pb = pack_gathered(ks(), &view, &cb);
+
+            let mut want_a = vec![0.0f64; ca.len()];
+            let mut want_b = vec![0.0f64; cb.len()];
+            gains_range(ks(), &SqEuclidean, &view, &dmin_a, 0..ds.n(), 64, &pa, &mut want_a);
+            gains_range(ks(), &SqEuclidean, &view, &dmin_b, 0..ds.n(), 64, &pb, &mut want_b);
+
+            let mut got_a = vec![0.0f64; ca.len()];
+            let mut got_b = vec![0.0f64; cb.len()];
+            {
+                let jobs: [(&[f32], &PackedBlock); 2] = [(&dmin_a, &pa), (&dmin_b, &pb)];
+                let mut accs: [&mut [f64]; 2] = [&mut got_a, &mut got_b];
+                gains_range_multi(ks(), &SqEuclidean, &view, &jobs, 0..ds.n(), 64, &mut accs);
+            }
+            assert_eq!(want_a, got_a, "job a diverged under fusion");
+            assert_eq!(want_b, got_b, "job b diverged under fusion");
+        }
+        run::<f32>(61);
+        run::<F16>(62);
     }
 
     #[test]

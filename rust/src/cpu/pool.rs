@@ -1,146 +1,336 @@
-//! Persistent worker pool for the CPU evaluation backend.
+//! Work-assisting, NUMA-aware scheduler for the CPU evaluation backend.
 //!
-//! The seed implementation spawned a fresh `std::thread::scope` on every
-//! oracle call — exactly the per-call overhead the zero-overhead
-//! parallel-scans line of work eliminates. Here the pool is created
-//! **once per oracle** and jobs are pushed per call:
+//! The previous pool broadcast one closure to every worker and had the
+//! workers steal index ranges from an atomic cursor — which meant even
+//! a single-worker pool paid channel sends, latch waits and cursor RMWs
+//! on every call. This version schedules **tasks** with a claim/assist
+//! protocol instead:
 //!
-//! * [`WorkerPool::run`] broadcasts one job closure to every worker and
-//!   blocks until all of them finish (so borrows captured by the closure
-//!   never outlive the call — the classic scoped-pool lifetime erasure).
-//! * Load balancing is dynamic: callers put a [`GrainQueue`] next to the
-//!   job and workers *steal* index ranges from it with an atomic cursor,
-//!   so a slow worker never strands work assigned to it up front.
-//! * Output is written through disjoint ownership, never `Mutex<&mut T>`
-//!   slot locks: each claimed grain maps to a caller-chosen disjoint
-//!   region of the output ([`DisjointSlice`]), or workers accumulate
-//!   privately and merge once at the end.
+//! * A task is a chunk-indexed job (`work(chunk)` for every chunk in
+//!   `[0, n_chunks)`). The **submitting thread participates**: it claims
+//!   and executes chunks like any worker, and the pool only spawns
+//!   `threads − 1` helper workers.
+//! * **Zero-synchronization fast path**: with one thread (or one chunk)
+//!   [`WorkerPool::run_chunks`] degenerates to a plain sequential loop
+//!   on the caller — no atomics, no channels, no condvars — so a pooled
+//!   oracle at `threads = 1` matches the single-thread oracle to within
+//!   measurement noise.
+//! * **Assists**: idle workers receive the task descriptor over their
+//!   channel and *join the in-progress task*, claiming chunks until the
+//!   cursors run dry. A worker that contributes at least one chunk
+//!   counts one *assist* in [`SchedStats`]. Workers arriving after the
+//!   task completed see dry cursors and move on — there is no
+//!   per-worker rendezvous, so stragglers never delay completion.
+//! * **NUMA-aware claiming**: chunks are sharded contiguously across
+//!   NUMA nodes proportional to each node's participant count (see
+//!   [`super::topology`]); every participant drains its own node's
+//!   cursor first and only then steals from remote nodes. Node-local
+//!   vs. remote claims are counted. Workers are optionally pinned
+//!   ([`PinMode`]) so "own node" is a physical statement, not a hint.
 //!
-//! Worker panics are caught, forwarded, and re-raised on the calling
-//! thread after the job completes; the pool stays usable afterwards.
+//! Chunk claiming is dynamic (arrival order), but the chunk *outputs*
+//! are deterministic: callers give every chunk its own output slot and
+//! fold the slots in chunk order afterwards, so results are independent
+//! of which thread ran which chunk — the foundation of the bit-identical
+//! ST/MT guarantee documented in the [`crate::cpu`] module docs.
+//!
+//! Worker panics are caught, recorded, and re-raised on the submitting
+//! thread after the task has fully completed; the pool stays usable.
 
 use std::ops::Range;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 
-/// The job shape every worker runs: called once per worker with the
-/// worker id; the closure does its own work-claiming (see [`GrainQueue`]).
+use super::topology::{self, PinMode, Topology};
+
+/// The per-chunk job shape: called once for every chunk index in
+/// `[0, n_chunks)`, by whichever participant claimed the chunk.
 type JobFn = dyn Fn(usize) + Sync;
 
-/// Completion latch for one broadcast job.
-struct Latch {
-    remaining: Mutex<usize>,
-    cv: Condvar,
-    panicked: AtomicBool,
+/// Cumulative scheduler counters for one pool (monotone; snapshot via
+/// [`WorkerPool::stats`]). The single-worker fast path bypasses the
+/// scheduler entirely and is deliberately **not** counted — it performs
+/// no synchronization at all.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SchedStats {
+    /// Multi-worker tasks scheduled.
+    pub tasks: u64,
+    /// Worker task-joins that executed at least one chunk (the assist
+    /// protocol in action; at most `workers` per task).
+    pub assists: u64,
+    /// Chunks claimed from the claimant's own NUMA node cursor.
+    pub local_claims: u64,
+    /// Chunks stolen from another node's cursor.
+    pub remote_claims: u64,
 }
 
-impl Latch {
-    fn new(count: usize) -> Self {
-        Self { remaining: Mutex::new(count), cv: Condvar::new(), panicked: AtomicBool::new(false) }
+#[derive(Default)]
+struct SchedCounters {
+    tasks: AtomicU64,
+    assists: AtomicU64,
+    local_claims: AtomicU64,
+    remote_claims: AtomicU64,
+}
+
+/// One scheduled task: the erased job, per-node claim cursors over a
+/// contiguous chunk sharding, and completion tracking.
+struct Task {
+    work: &'static JobFn,
+    /// `ranges[k]` is node `k`'s contiguous chunk range.
+    ranges: Vec<(usize, usize)>,
+    /// `cursors[k]` is the next unclaimed chunk in `ranges[k]`.
+    cursors: Vec<AtomicUsize>,
+    completed: AtomicUsize,
+    total: usize,
+    panicked: AtomicBool,
+    done: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Task {
+    /// Shard `n_chunks` contiguously across nodes proportional to
+    /// `node_weights` (participants per node; zero-weight nodes get an
+    /// empty range). Boundaries depend only on the weights — never on
+    /// claim order — so the sharding is reproducible per pool.
+    fn new(work: &'static JobFn, n_chunks: usize, node_weights: &[usize]) -> Self {
+        let total_w: usize = node_weights.iter().sum::<usize>().max(1);
+        let mut ranges = Vec::with_capacity(node_weights.len());
+        let mut cum = 0usize;
+        let mut lo = 0usize;
+        for &w in node_weights {
+            cum += w;
+            let hi = n_chunks * cum / total_w;
+            ranges.push((lo, hi));
+            lo = hi;
+        }
+        if let Some(last) = ranges.last_mut() {
+            last.1 = n_chunks; // guard against rounding; usually a no-op
+        }
+        let cursors = ranges.iter().map(|&(lo, _)| AtomicUsize::new(lo)).collect();
+        Self {
+            work,
+            ranges,
+            cursors,
+            completed: AtomicUsize::new(0),
+            total: n_chunks,
+            panicked: AtomicBool::new(false),
+            done: Mutex::new(false),
+            cv: Condvar::new(),
+        }
     }
 
-    fn arrive(&self, panicked: bool) {
-        if panicked {
-            self.panicked.store(true, Ordering::Relaxed);
+    /// Claim and execute chunks until every cursor is dry: own node
+    /// first, then remote nodes in cyclic order. Returns after counting
+    /// this participant's claims into `counters` (one `assists` tick if
+    /// an assisting worker executed at least one chunk).
+    fn participate(&self, home: usize, assisting: bool, counters: &SchedCounters) {
+        let nn = self.cursors.len();
+        let mut local = 0u64;
+        let mut remote = 0u64;
+        'claims: loop {
+            for k in 0..nn {
+                let node = if home + k >= nn { home + k - nn } else { home + k };
+                let (_, end) = self.ranges[node];
+                // cheap dry check before the RMW
+                if self.cursors[node].load(Ordering::Relaxed) >= end {
+                    continue;
+                }
+                let c = self.cursors[node].fetch_add(1, Ordering::Relaxed);
+                if c >= end {
+                    continue;
+                }
+                if k == 0 {
+                    local += 1;
+                } else {
+                    remote += 1;
+                }
+                let work = self.work;
+                if catch_unwind(AssertUnwindSafe(|| work(c))).is_err() {
+                    self.panicked.store(true, Ordering::Relaxed);
+                }
+                // AcqRel chains every participant's writes into the RMW
+                // sequence, so whoever observes `total` (and the waiter
+                // it signals) sees all chunk effects
+                if self.completed.fetch_add(1, Ordering::AcqRel) + 1 == self.total {
+                    *self.done.lock().unwrap() = true;
+                    self.cv.notify_all();
+                }
+                continue 'claims;
+            }
+            break; // every node's cursor is dry
         }
-        let mut rem = self.remaining.lock().unwrap();
-        *rem -= 1;
-        if *rem == 0 {
-            self.cv.notify_all();
+        if local > 0 {
+            counters.local_claims.fetch_add(local, Ordering::Relaxed);
+        }
+        if remote > 0 {
+            counters.remote_claims.fetch_add(remote, Ordering::Relaxed);
+        }
+        if assisting && local + remote > 0 {
+            counters.assists.fetch_add(1, Ordering::Relaxed);
         }
     }
 
+    /// Block until every chunk has completed. The submitting thread
+    /// calls this *after* participating, so in the common case the task
+    /// is already done and this is one uncontended lock.
     fn wait(&self) {
-        let guard = self.remaining.lock().unwrap();
-        let _done = self.cv.wait_while(guard, |rem| *rem > 0).unwrap();
+        let guard = self.done.lock().unwrap();
+        let _done = self.cv.wait_while(guard, |d| !*d).unwrap();
     }
 }
 
 enum Message {
-    Job { f: &'static JobFn, latch: Arc<Latch> },
+    Task(Arc<Task>),
     Shutdown,
 }
 
-fn worker_loop(id: usize, rx: Receiver<Message>) {
+fn worker_loop(home_node: usize, rx: Receiver<Message>, counters: Arc<SchedCounters>) {
     while let Ok(msg) = rx.recv() {
         match msg {
-            Message::Job { f, latch } => {
-                let panicked = catch_unwind(AssertUnwindSafe(|| f(id))).is_err();
-                latch.arrive(panicked);
-            }
+            Message::Task(task) => task.participate(home_node, true, &counters),
             Message::Shutdown => break,
         }
     }
 }
 
-/// A fixed-size pool of named OS threads, created once and reused for
-/// every oracle call until the owner is dropped.
+/// A fixed pool of helper workers plus the submitting thread, created
+/// once per oracle and reused for every call (see the module docs for
+/// the claim/assist protocol).
 pub struct WorkerPool {
     senders: Vec<Sender<Message>>,
     handles: Vec<std::thread::JoinHandle<()>>,
+    /// Total parallelism: helper workers + the submitting thread.
     threads: usize,
+    /// Node the submitting thread claims from first.
+    caller_node: usize,
+    /// Participants per node (caller included) — the task sharding
+    /// weights.
+    node_weights: Vec<usize>,
+    pinned: bool,
+    counters: Arc<SchedCounters>,
 }
 
 impl WorkerPool {
-    /// Spawn `threads` workers; `0` uses
-    /// `std::thread::available_parallelism()`.
+    /// Pool with `threads` total participants (`0` auto-detects via
+    /// `std::thread::available_parallelism()`), default pinning
+    /// ([`PinMode::Auto`]).
     pub fn new(threads: usize) -> Self {
-        let threads = if threads == 0 {
+        Self::with_pinning(threads, PinMode::default())
+    }
+
+    /// [`WorkerPool::new`] with an explicit pinning mode (the
+    /// `EXEMCL_PIN` environment variable still takes precedence).
+    /// Requests beyond the host's logical CPU count are clamped with a
+    /// one-time warning — oversubscribing a memory-bound scan never
+    /// helps.
+    pub fn with_pinning(threads: usize, pin: PinMode) -> Self {
+        let topo = Topology::host();
+        let requested = if threads == 0 {
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
         } else {
             threads
         };
-        let mut senders = Vec::with_capacity(threads);
-        let mut handles = Vec::with_capacity(threads);
-        for id in 0..threads {
+        let cap = topo.logical_cpus().max(1);
+        let threads = if requested > cap {
+            topology::warn_clamped(requested, cap);
+            cap
+        } else {
+            requested.max(1)
+        };
+        let pin = topology::resolve_pin(pin);
+        let pinned = pin.engaged(topo) && threads > 1;
+
+        // assignment slot 0 belongs to the submitting thread (never
+        // pinned — it is the user's thread); workers take slots 1..
+        let caller_node = topo.node_of(topo.cpu_for_worker(0));
+        let mut node_weights = vec![0usize; topo.num_nodes()];
+        node_weights[caller_node] += 1;
+
+        let counters = Arc::new(SchedCounters::default());
+        let workers = threads - 1;
+        let mut senders = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let cpu = topo.cpu_for_worker(w + 1);
+            let home = topo.node_of(cpu);
+            node_weights[home] += 1;
             let (tx, rx) = mpsc::channel::<Message>();
+            let ctrs = counters.clone();
             let handle = std::thread::Builder::new()
-                .name(format!("exemcl-cpu-{id}"))
-                .spawn(move || worker_loop(id, rx))
+                .name(format!("exemcl-cpu-{w}"))
+                .spawn(move || {
+                    if pinned {
+                        topology::pin_current_thread(cpu);
+                    }
+                    worker_loop(home, rx, ctrs);
+                })
                 .expect("cannot spawn pool worker");
             senders.push(tx);
             handles.push(handle);
         }
-        Self { senders, handles, threads }
+        Self { senders, handles, threads, caller_node, node_weights, pinned, counters }
     }
 
-    /// Worker count.
+    /// Total parallelism (helper workers + the submitting thread).
     pub fn threads(&self) -> usize {
         self.threads
     }
 
-    /// Run `job` on every worker and block until all workers return.
+    /// True when helper workers were pinned to CPUs at spawn.
+    pub fn pinned(&self) -> bool {
+        self.pinned
+    }
+
+    /// Snapshot of the cumulative scheduler counters.
+    pub fn stats(&self) -> SchedStats {
+        SchedStats {
+            tasks: self.counters.tasks.load(Ordering::Relaxed),
+            assists: self.counters.assists.load(Ordering::Relaxed),
+            local_claims: self.counters.local_claims.load(Ordering::Relaxed),
+            remote_claims: self.counters.remote_claims.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Execute `work(c)` exactly once for every chunk `c` in
+    /// `[0, n_chunks)` and return when all chunks are done.
     ///
-    /// Panics (after the job has fully completed on every worker) if any
-    /// worker panicked while running it.
-    pub fn run(&self, job: &(dyn Fn(usize) + Sync)) {
-        let raw: *const JobFn = job;
-        // SAFETY: the erased-lifetime reference is only used by workers
-        // between the sends below and `latch.wait()` returning, and this
-        // call blocks until every worker has arrived at the latch — so
-        // the borrow never outlives the caller's frame. Sharing across
-        // workers is sound because the closure is `Sync`.
-        let job_static: &'static JobFn = unsafe { &*raw };
-        let latch = Arc::new(Latch::new(self.threads));
-        let mut dead_workers = 0usize;
-        for tx in &self.senders {
-            if tx.send(Message::Job { f: job_static, latch: latch.clone() }).is_err() {
-                // a dead worker never arrives; balance its latch slot so
-                // wait() still returns. Crucially we must NOT unwind here:
-                // workers that already received the job hold the erased
-                // borrow, and leaving this frame before they finish would
-                // be a use-after-free.
-                dead_workers += 1;
-                latch.arrive(false);
+    /// Single participant (or single chunk): a plain inline loop on the
+    /// calling thread with **zero** synchronization. Otherwise the task
+    /// is announced to the workers and the caller participates in the
+    /// claim/assist protocol until completion.
+    ///
+    /// Panics (after the task has fully completed) if any participant
+    /// panicked while running a chunk.
+    pub fn run_chunks(&self, n_chunks: usize, work: &(dyn Fn(usize) + Sync)) {
+        if n_chunks == 0 {
+            return;
+        }
+        if self.senders.is_empty() || n_chunks == 1 {
+            for c in 0..n_chunks {
+                work(c);
             }
+            return;
         }
-        latch.wait();
-        if dead_workers > 0 {
-            panic!("pool job dropped: {dead_workers} worker channel(s) closed");
+        let raw: *const JobFn = work;
+        // SAFETY: the erased-lifetime reference is only dereferenced by
+        // participants that claimed a chunk, every claimed chunk
+        // completes before `task.wait()` returns below, and cursors are
+        // dry from then on — so no dereference can outlive the caller's
+        // frame. Sharing across threads is sound because the closure is
+        // `Sync`.
+        let work_static: &'static JobFn = unsafe { &*raw };
+        let task = Arc::new(Task::new(work_static, n_chunks, &self.node_weights));
+        self.counters.tasks.fetch_add(1, Ordering::Relaxed);
+        for tx in &self.senders {
+            // a dead worker simply never assists; the remaining
+            // participants (at minimum the caller) drain its share
+            let _ = tx.send(Message::Task(task.clone()));
         }
-        if latch.panicked.load(Ordering::Relaxed) {
+        task.participate(self.caller_node, false, &self.counters);
+        task.wait();
+        if task.panicked.load(Ordering::Relaxed) {
             panic!("worker panicked during pool job");
         }
     }
@@ -157,9 +347,9 @@ impl Drop for WorkerPool {
     }
 }
 
-/// Shared cursor from which workers claim disjoint index ranges
-/// ("grains") of `[0, total)` — dynamic load balancing without any
-/// per-item locking.
+/// Shared cursor from which claimers take disjoint index ranges
+/// ("grains") of `[0, total)` — kept for callers that partition ad-hoc
+/// index spaces outside the pool's chunk protocol (tests, benches).
 pub struct GrainQueue {
     next: AtomicUsize,
     total: usize,
@@ -185,27 +375,28 @@ impl GrainQueue {
     }
 }
 
-/// A mutable `f32` buffer shared across pool workers that write
-/// **disjoint** regions, replacing the seed's `Vec<Mutex<&mut f32>>`
-/// output-slot pattern.
+/// A mutable buffer shared across pool participants that write
+/// **disjoint** regions — the output surface for per-chunk slots
+/// (`f64` reduction partials, `f32` results) without `Mutex<&mut T>`
+/// slot locks.
 ///
-/// Disjointness is guaranteed by construction at the call sites: regions
-/// are claimed through a [`GrainQueue`], which hands out every index at
-/// most once.
-pub struct DisjointSlice<'a> {
-    ptr: *mut f32,
+/// Disjointness is guaranteed by construction at the call sites: each
+/// chunk index is handed to exactly one participant
+/// ([`WorkerPool::run_chunks`]) and maps to its own region.
+pub struct DisjointSlice<'a, T = f32> {
+    ptr: *mut T,
     len: usize,
-    _marker: std::marker::PhantomData<&'a mut [f32]>,
+    _marker: std::marker::PhantomData<&'a mut [T]>,
 }
 
 // SAFETY: the raw pointer is only dereferenced through the unsafe
 // accessors below, whose contract requires non-overlapping access.
-unsafe impl Send for DisjointSlice<'_> {}
-unsafe impl Sync for DisjointSlice<'_> {}
+unsafe impl<T: Send> Send for DisjointSlice<'_, T> {}
+unsafe impl<T: Send> Sync for DisjointSlice<'_, T> {}
 
-impl<'a> DisjointSlice<'a> {
-    /// Wrap an exclusive borrow for disjoint multi-worker writes.
-    pub fn new(slice: &'a mut [f32]) -> Self {
+impl<'a, T> DisjointSlice<'a, T> {
+    /// Wrap an exclusive borrow for disjoint multi-participant writes.
+    pub fn new(slice: &'a mut [T]) -> Self {
         Self { ptr: slice.as_mut_ptr(), len: slice.len(), _marker: std::marker::PhantomData }
     }
 
@@ -224,8 +415,8 @@ impl<'a> DisjointSlice<'a> {
     /// # Safety
     ///
     /// `idx < len`, and no other thread may read or write `idx`
-    /// concurrently (claim indices through a [`GrainQueue`]).
-    pub unsafe fn write(&self, idx: usize, value: f32) {
+    /// concurrently (derive indices from distinct chunk ids).
+    pub unsafe fn write(&self, idx: usize, value: T) {
         debug_assert!(idx < self.len);
         *self.ptr.add(idx) = value;
     }
@@ -235,10 +426,10 @@ impl<'a> DisjointSlice<'a> {
     /// # Safety
     ///
     /// `start + len <= self.len()`, and no other thread may access any
-    /// index of the range while the returned slice lives (claim ranges
-    /// through a [`GrainQueue`]).
+    /// index of the range while the returned slice lives (derive ranges
+    /// from distinct chunk ids).
     #[allow(clippy::mut_from_ref)] // disjointness is the caller's contract
-    pub unsafe fn range_mut(&self, start: usize, len: usize) -> &mut [f32] {
+    pub unsafe fn range_mut(&self, start: usize, len: usize) -> &mut [T] {
         debug_assert!(start + len <= self.len);
         std::slice::from_raw_parts_mut(self.ptr.add(start), len)
     }
@@ -252,6 +443,13 @@ mod tests {
     fn zero_threads_resolves_to_available_parallelism() {
         let pool = WorkerPool::new(0);
         assert!(pool.threads() >= 1);
+    }
+
+    #[test]
+    fn thread_requests_are_clamped_to_the_host() {
+        let cap = Topology::host().logical_cpus();
+        let pool = WorkerPool::new(10_000);
+        assert_eq!(pool.threads(), cap);
     }
 
     #[test]
@@ -275,12 +473,9 @@ mod tests {
         let mut out = vec![f32::NAN; 3];
         {
             let shared = DisjointSlice::new(&mut out);
-            let q = GrainQueue::new(3, 1);
-            pool.run(&|_id| {
-                while let Some(r) = q.claim() {
-                    // SAFETY: each index is claimed exactly once.
-                    unsafe { shared.write(r.start, r.start as f32 * 2.0) };
-                }
+            pool.run_chunks(3, &|c| {
+                // SAFETY: each chunk index is claimed exactly once.
+                unsafe { shared.write(c, c as f32 * 2.0) };
             });
         }
         assert_eq!(out, vec![0.0, 2.0, 4.0]);
@@ -291,11 +486,8 @@ mod tests {
         let pool = WorkerPool::new(4);
         for round in 0..3 {
             let counter = AtomicUsize::new(0);
-            let q = GrainQueue::new(1000, 7);
-            pool.run(&|_id| {
-                while let Some(r) = q.claim() {
-                    counter.fetch_add(r.len(), Ordering::Relaxed);
-                }
+            pool.run_chunks(1000, &|_c| {
+                counter.fetch_add(1, Ordering::Relaxed);
             });
             assert_eq!(counter.load(Ordering::Relaxed), 1000, "round {round}");
         }
@@ -305,16 +497,17 @@ mod tests {
     fn disjoint_range_writes_land() {
         let pool = WorkerPool::new(3);
         let mut out = vec![0.0f32; 100];
+        let chunk = 9usize;
+        let n_chunks = out.len().div_ceil(chunk);
         {
             let shared = DisjointSlice::new(&mut out);
-            let q = GrainQueue::new(100, 9);
-            pool.run(&|_id| {
-                while let Some(r) = q.claim() {
-                    // SAFETY: ranges from the queue are disjoint.
-                    let chunk = unsafe { shared.range_mut(r.start, r.len()) };
-                    for (off, x) in chunk.iter_mut().enumerate() {
-                        *x = (r.start + off) as f32;
-                    }
+            pool.run_chunks(n_chunks, &|c| {
+                let start = c * chunk;
+                let len = chunk.min(100 - start);
+                // SAFETY: chunk ids map to disjoint ranges.
+                let region = unsafe { shared.range_mut(start, len) };
+                for (off, x) in region.iter_mut().enumerate() {
+                    *x = (start + off) as f32;
                 }
             });
         }
@@ -324,11 +517,46 @@ mod tests {
     }
 
     #[test]
+    fn single_participant_pool_runs_chunks_in_order_inline() {
+        let pool = WorkerPool::new(1);
+        let order = Mutex::new(Vec::new());
+        pool.run_chunks(16, &|c| order.lock().unwrap().push(c));
+        assert_eq!(*order.lock().unwrap(), (0..16).collect::<Vec<_>>());
+        // the inline fast path never touches the scheduler counters
+        assert_eq!(pool.stats(), SchedStats::default());
+    }
+
+    #[test]
+    fn scheduler_counters_account_every_claim() {
+        let pool = WorkerPool::new(4);
+        if pool.threads() < 2 {
+            return; // single-CPU host: everything rides the fast path
+        }
+        let rounds = 5u64;
+        let chunks = 64u64;
+        for _ in 0..rounds {
+            let counter = AtomicUsize::new(0);
+            pool.run_chunks(chunks as usize, &|_c| {
+                counter.fetch_add(1, Ordering::Relaxed);
+                // give the workers a chance to join before the task dries
+                std::thread::yield_now();
+            });
+            assert_eq!(counter.load(Ordering::Relaxed), chunks as usize);
+        }
+        let s = pool.stats();
+        assert_eq!(s.tasks, rounds);
+        // every chunk is claimed exactly once, locally or remotely
+        assert_eq!(s.local_claims + s.remote_claims, rounds * chunks);
+        // at most `workers` assists per task, and the caller never counts
+        assert!(s.assists <= rounds * (pool.threads() as u64 - 1), "{s:?}");
+    }
+
+    #[test]
     #[should_panic(expected = "worker panicked")]
     fn pool_propagates_worker_panics() {
         let pool = WorkerPool::new(2);
-        pool.run(&|id| {
-            if id == 0 {
+        pool.run_chunks(8, &|c| {
+            if c == 0 {
                 panic!("boom");
             }
         });
@@ -338,14 +566,31 @@ mod tests {
     fn pool_survives_a_panicked_job() {
         let pool = WorkerPool::new(2);
         let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
-            pool.run(&|_id| panic!("transient"));
+            pool.run_chunks(4, &|_c| panic!("transient"));
         }));
         assert!(result.is_err());
-        // the pool must still serve jobs afterwards
+        // the pool must still serve tasks afterwards
         let counter = AtomicUsize::new(0);
-        pool.run(&|_id| {
+        pool.run_chunks(8, &|_c| {
             counter.fetch_add(1, Ordering::Relaxed);
         });
-        assert_eq!(counter.load(Ordering::Relaxed), 2);
+        assert_eq!(counter.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn task_sharding_covers_all_chunks_for_any_weights() {
+        fn noop(_c: usize) {}
+        for weights in [vec![1usize], vec![2, 2], vec![3, 0, 1], vec![0, 5]] {
+            for n in [0usize, 1, 7, 64, 1000] {
+                let t = Task::new(&noop, n, &weights);
+                let mut prev = 0usize;
+                for &(lo, hi) in &t.ranges {
+                    assert_eq!(lo, prev, "ranges must be contiguous");
+                    assert!(hi >= lo);
+                    prev = hi;
+                }
+                assert_eq!(prev, n, "weights {weights:?} n {n}: chunks dropped");
+            }
+        }
     }
 }

@@ -1,0 +1,458 @@
+//! Host CPU topology probe and worker pinning for the work-assisting
+//! scheduler ([`super::pool`]).
+//!
+//! Everything here degrades gracefully: the probe parses Linux sysfs
+//! (`/sys/devices/system/cpu`, `/sys/devices/system/node`) and falls
+//! back to a flat single-node map built from
+//! `std::thread::available_parallelism()` when any of it is missing —
+//! non-Linux hosts, containers with a masked `/sys`, exotic layouts.
+//! Affinity pinning issues the raw `sched_setaffinity` syscall through
+//! the C runtime already linked by `std` (the crate stays
+//! dependency-free); on platforms without it, pinning is a one-time
+//! warning and a no-op.
+//!
+//! Two consumers:
+//!
+//! * [`super::pool::WorkerPool`] assigns each worker a CPU from the
+//!   per-node map (round-robin across the flattened node list), pins it
+//!   when [`PinMode`] resolves to on, and uses the worker's node id to
+//!   prefer node-local scheduler claims (see the pool docs for the
+//!   claim/assist protocol).
+//! * The tile-granularity heuristic [`tile_rows`] sizes ground tiles
+//!   from the probed per-core L2 so a tile of storage-width rows stays
+//!   cache-resident for every dtype, instead of one fixed row count for
+//!   all element widths.
+
+use std::sync::OnceLock;
+
+use crate::{Error, Result};
+
+/// Ground-tile sizing bounds: tiles never shrink below one SIMD-friendly
+/// panel run or grow past the point where `dmin`/accumulator traffic
+/// starts competing with the rows themselves.
+const TILE_ROWS_MIN: usize = 64;
+const TILE_ROWS_MAX: usize = 2048;
+
+/// Scheduler chunks (the claim + reduction unit, see [`super::pool`])
+/// are this many tiles.
+pub const CHUNK_TILES: usize = 4;
+
+/// Fallback per-core L2 when the sysfs probe is unavailable (512 KiB —
+/// conservative for anything this crate realistically runs on).
+const L2_FALLBACK_BYTES: usize = 512 * 1024;
+
+/// One host's CPU layout, as far as the scheduler cares: logical CPUs,
+/// physical cores, NUMA-node membership, and per-core L2 size.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    /// Online logical CPU ids, ascending.
+    pub cpus: Vec<usize>,
+    /// Distinct physical cores (unique `(package, core)` pairs);
+    /// equals `cpus.len()` when core ids are unavailable.
+    pub physical_cores: usize,
+    /// NUMA nodes: `nodes[k]` is node `k`'s logical CPUs, ascending.
+    /// Always at least one node; every online CPU appears exactly once.
+    pub nodes: Vec<Vec<usize>>,
+    /// Per-core L2 size in bytes (probed from `cpu0`, with a fallback).
+    pub l2_bytes: usize,
+    /// True when the map came from sysfs, false for the flat fallback.
+    pub probed: bool,
+}
+
+impl Topology {
+    /// The host topology, probed once per process.
+    pub fn host() -> &'static Topology {
+        static HOST: OnceLock<Topology> = OnceLock::new();
+        HOST.get_or_init(|| Topology::from_sysfs().unwrap_or_else(Topology::fallback))
+    }
+
+    /// Number of online logical CPUs.
+    pub fn logical_cpus(&self) -> usize {
+        self.cpus.len()
+    }
+
+    /// Number of NUMA nodes (≥ 1).
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// The NUMA node a logical CPU belongs to (0 when unknown).
+    pub fn node_of(&self, cpu: usize) -> usize {
+        self.nodes.iter().position(|cs| cs.binary_search(&cpu).is_ok()).unwrap_or(0)
+    }
+
+    /// Worker CPU assignment: the node lists flattened in node order, so
+    /// `w` workers fill node 0 first, then node 1, … and wrap around.
+    /// Keeping co-scheduled workers on as few nodes as possible is what
+    /// makes the pool's node-local tile sharding effective.
+    pub fn cpu_for_worker(&self, worker: usize) -> usize {
+        let flat_len: usize = self.nodes.iter().map(Vec::len).sum();
+        let mut k = worker % flat_len.max(1);
+        for cs in &self.nodes {
+            if k < cs.len() {
+                return cs[k];
+            }
+            k -= cs.len();
+        }
+        0
+    }
+
+    /// Flat single-node topology from `available_parallelism` — used
+    /// when sysfs is missing and as the non-Linux default.
+    fn fallback() -> Topology {
+        let n = std::thread::available_parallelism().map(|x| x.get()).unwrap_or(1);
+        Topology {
+            cpus: (0..n).collect(),
+            physical_cores: n,
+            nodes: vec![(0..n).collect()],
+            l2_bytes: L2_FALLBACK_BYTES,
+            probed: false,
+        }
+    }
+
+    /// Parse the Linux sysfs CPU map. Any missing piece degrades to the
+    /// corresponding fallback; a fully missing tree yields `None`.
+    fn from_sysfs() -> Option<Topology> {
+        let cpus = parse_cpu_list(&read_sys("/sys/devices/system/cpu/online")?)?;
+        if cpus.is_empty() {
+            return None;
+        }
+
+        // unique (package, core) pairs; on failure every CPU is a core
+        let mut pairs: Vec<(usize, usize)> = Vec::with_capacity(cpus.len());
+        for &c in &cpus {
+            let base = format!("/sys/devices/system/cpu/cpu{c}/topology");
+            let pkg = read_sys(&format!("{base}/physical_package_id"))
+                .and_then(|s| s.trim().parse().ok());
+            let core =
+                read_sys(&format!("{base}/core_id")).and_then(|s| s.trim().parse().ok());
+            match (pkg, core) {
+                (Some(p), Some(k)) => pairs.push((p, k)),
+                _ => {
+                    pairs.clear();
+                    break;
+                }
+            }
+        }
+        pairs.sort_unstable();
+        pairs.dedup();
+        let physical_cores = if pairs.is_empty() { cpus.len() } else { pairs.len() };
+
+        // NUMA nodes: intersect each node's cpulist with the online set
+        let mut nodes: Vec<Vec<usize>> = Vec::new();
+        for k in 0.. {
+            match read_sys(&format!("/sys/devices/system/node/node{k}/cpulist"))
+                .and_then(|s| parse_cpu_list(&s))
+            {
+                Some(list) => {
+                    let members: Vec<usize> =
+                        list.into_iter().filter(|c| cpus.binary_search(c).is_ok()).collect();
+                    if !members.is_empty() {
+                        nodes.push(members);
+                    }
+                }
+                None => break,
+            }
+        }
+        let covered: usize = nodes.iter().map(Vec::len).sum();
+        if nodes.is_empty() || covered != cpus.len() {
+            // partial node info (CPU-less nodes, hotplug races): flatten
+            nodes = vec![cpus.clone()];
+        }
+
+        let l2_bytes = read_sys("/sys/devices/system/cpu/cpu0/cache/index2/size")
+            .and_then(|s| parse_mem_size(s.trim()))
+            .unwrap_or(L2_FALLBACK_BYTES);
+
+        Some(Topology { cpus, physical_cores, nodes, l2_bytes, probed: true })
+    }
+}
+
+fn read_sys(path: &str) -> Option<String> {
+    std::fs::read_to_string(path).ok()
+}
+
+/// Parse the kernel's CPU list format: `"0-3,8-11,16"`.
+fn parse_cpu_list(s: &str) -> Option<Vec<usize>> {
+    let mut out = Vec::new();
+    for part in s.trim().split(',').filter(|p| !p.is_empty()) {
+        match part.split_once('-') {
+            Some((lo, hi)) => {
+                let lo: usize = lo.trim().parse().ok()?;
+                let hi: usize = hi.trim().parse().ok()?;
+                if hi < lo {
+                    return None;
+                }
+                out.extend(lo..=hi);
+            }
+            None => out.push(part.trim().parse().ok()?),
+        }
+    }
+    out.sort_unstable();
+    out.dedup();
+    Some(out)
+}
+
+/// Parse a sysfs memory size (`"512K"`, `"1024K"`, `"2M"`, plain bytes).
+fn parse_mem_size(s: &str) -> Option<usize> {
+    let (num, mult) = match s.as_bytes().last()? {
+        b'K' | b'k' => (&s[..s.len() - 1], 1024),
+        b'M' | b'm' => (&s[..s.len() - 1], 1024 * 1024),
+        b'G' | b'g' => (&s[..s.len() - 1], 1024 * 1024 * 1024),
+        _ => (s, 1),
+    };
+    num.trim().parse::<usize>().ok().map(|v| v * mult)
+}
+
+/// Ground rows per tile for an element width and row dimensionality:
+/// half the per-core L2 holds the tile's storage-width rows (the other
+/// half stays for candidate panels, `dmin` slices and accumulators),
+/// clamped to `[64, 2048]` and rounded down to a multiple of 64.
+///
+/// The result is a pure function of `(elem_bytes, d, l2_bytes)` — never
+/// of the thread count — so the single-thread and pooled oracles chunk
+/// the ground set identically, which is what makes their reductions
+/// bit-identical (see the `cpu` module docs).
+pub fn tile_rows(elem_bytes: usize, d: usize, l2_bytes: usize) -> usize {
+    let row_bytes = (elem_bytes * d).max(1);
+    let rows = (l2_bytes / 2) / row_bytes;
+    (rows.clamp(TILE_ROWS_MIN, TILE_ROWS_MAX) / TILE_ROWS_MIN) * TILE_ROWS_MIN
+}
+
+/// Worker-pinning request: mirrors [`super::simd::SimdChoice`]'s
+/// `auto | on | off` vocabulary (`eval.pin` config key,
+/// `EngineBuilder::pinning`, `EXEMCL_PIN` environment override).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PinMode {
+    /// Pin only when it can pay for itself: more than one NUMA node.
+    #[default]
+    Auto,
+    /// Always pin (a host without affinity support warns once and runs
+    /// unpinned).
+    On,
+    /// Never pin.
+    Off,
+}
+
+impl PinMode {
+    /// Whether workers should be pinned on `topo`.
+    pub fn engaged(self, topo: &Topology) -> bool {
+        match self {
+            PinMode::Auto => topo.num_nodes() > 1,
+            PinMode::On => true,
+            PinMode::Off => false,
+        }
+    }
+}
+
+impl std::fmt::Display for PinMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            PinMode::Auto => "auto",
+            PinMode::On => "on",
+            PinMode::Off => "off",
+        })
+    }
+}
+
+impl std::str::FromStr for PinMode {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "auto" => Ok(PinMode::Auto),
+            "on" | "true" | "1" => Ok(PinMode::On),
+            "off" | "false" | "0" => Ok(PinMode::Off),
+            other => {
+                Err(Error::Config(format!("unknown pin mode {other:?} (auto|on|off)")))
+            }
+        }
+    }
+}
+
+/// `mode` with the `EXEMCL_PIN` environment override applied (the same
+/// precedence rule as `EXEMCL_SIMD` over `eval.simd`); an unparsable
+/// value warns once and keeps the configured mode.
+pub fn resolve_pin(mode: PinMode) -> PinMode {
+    match std::env::var("EXEMCL_PIN") {
+        Ok(s) if !s.is_empty() => s.parse().unwrap_or_else(|e: Error| {
+            warn_once(&format!("EXEMCL_PIN ignored: {e}"));
+            mode
+        }),
+        _ => mode,
+    }
+}
+
+/// Pin the calling thread to one logical CPU. Returns `false` (after a
+/// one-time warning) when the platform has no affinity call or the
+/// kernel rejected the mask.
+pub fn pin_current_thread(cpu: usize) -> bool {
+    let ok = pin_impl(cpu);
+    if !ok {
+        warn_once("thread pinning unavailable on this platform; running unpinned");
+    }
+    ok
+}
+
+#[cfg(target_os = "linux")]
+fn pin_impl(cpu: usize) -> bool {
+    // sched_setaffinity(0, sizeof mask, &mask) through the libc that std
+    // already links — no crate dependency. A 1024-bit mask matches the
+    // kernel's default CPU_SETSIZE.
+    extern "C" {
+        fn sched_setaffinity(
+            pid: i32,
+            cpusetsize: usize,
+            mask: *const u64,
+        ) -> i32;
+    }
+    let mut mask = [0u64; 16];
+    if cpu >= mask.len() * 64 {
+        return false;
+    }
+    mask[cpu / 64] |= 1u64 << (cpu % 64);
+    // SAFETY: the mask buffer outlives the call and the size matches it;
+    // pid 0 targets the calling thread.
+    unsafe { sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr()) == 0 }
+}
+
+#[cfg(not(target_os = "linux"))]
+fn pin_impl(_cpu: usize) -> bool {
+    false
+}
+
+/// Log a warning exactly once per distinct message kind (process-wide);
+/// the scheduler calls this from per-worker paths that would otherwise
+/// spam one line per thread.
+fn warn_once(msg: &str) {
+    use std::sync::Mutex;
+    static SEEN: Mutex<Vec<String>> = Mutex::new(Vec::new());
+    let mut seen = SEEN.lock().unwrap();
+    if !seen.iter().any(|m| m == msg) {
+        seen.push(msg.to_string());
+        crate::log_warn!("{msg}");
+    }
+}
+
+/// One-time warning hook for the pool's thread-count clamp (lives here
+/// so the message dedupe is shared with the pinning warnings).
+pub(crate) fn warn_clamped(requested: usize, cap: usize) {
+    warn_once(&format!(
+        "eval.threads={requested} exceeds the {cap} logical CPUs of this host; \
+         clamping to {cap}"
+    ));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_list_parses_ranges_and_singletons() {
+        assert_eq!(parse_cpu_list("0-3,8-9,16\n").unwrap(), vec![0, 1, 2, 3, 8, 9, 16]);
+        assert_eq!(parse_cpu_list("5").unwrap(), vec![5]);
+        assert_eq!(parse_cpu_list("1,1,0-1").unwrap(), vec![0, 1]);
+        assert!(parse_cpu_list("3-1").is_none());
+        assert!(parse_cpu_list("x").is_none());
+    }
+
+    #[test]
+    fn mem_size_parses_suffixes() {
+        assert_eq!(parse_mem_size("512K").unwrap(), 512 * 1024);
+        assert_eq!(parse_mem_size("1M").unwrap(), 1024 * 1024);
+        assert_eq!(parse_mem_size("4096").unwrap(), 4096);
+        assert!(parse_mem_size("").is_none());
+        assert!(parse_mem_size("?K").is_none());
+    }
+
+    #[test]
+    fn host_topology_is_consistent() {
+        let t = Topology::host();
+        assert!(t.logical_cpus() >= 1);
+        assert!(t.physical_cores >= 1);
+        assert!(t.num_nodes() >= 1);
+        let covered: usize = t.nodes.iter().map(Vec::len).sum();
+        assert_eq!(covered, t.logical_cpus(), "every CPU maps to exactly one node");
+        assert!(t.l2_bytes >= 64 * 1024);
+        // every worker id resolves to an online CPU with a valid node
+        for w in 0..2 * t.logical_cpus() {
+            let cpu = t.cpu_for_worker(w);
+            assert!(t.cpus.contains(&cpu));
+            assert!(t.node_of(cpu) < t.num_nodes());
+        }
+    }
+
+    #[test]
+    fn tile_rows_scales_with_width_and_l2() {
+        let l2 = 1024 * 1024;
+        // half-width elements fit twice the rows (same d, same L2)
+        let r32 = tile_rows(4, 256, l2);
+        let r16 = tile_rows(2, 256, l2);
+        assert_eq!(r16, 2 * r32);
+        // clamped and 64-aligned at both extremes
+        assert_eq!(tile_rows(4, 100_000, l2), 64);
+        assert_eq!(tile_rows(2, 1, l2), 2048);
+        for &(e, d) in &[(4usize, 7usize), (2, 100), (4, 32), (2, 32)] {
+            let r = tile_rows(e, d, l2);
+            assert_eq!(r % 64, 0, "{e}x{d}: {r} not 64-aligned");
+            assert!((64..=2048).contains(&r));
+        }
+        // a pure function of (elem, d, l2): repeated calls agree
+        assert_eq!(tile_rows(4, 32, l2), tile_rows(4, 32, l2));
+    }
+
+    #[test]
+    fn pin_mode_parses_and_displays() {
+        assert_eq!("auto".parse::<PinMode>().unwrap(), PinMode::Auto);
+        assert_eq!("on".parse::<PinMode>().unwrap(), PinMode::On);
+        assert_eq!("off".parse::<PinMode>().unwrap(), PinMode::Off);
+        assert!("sideways".parse::<PinMode>().is_err());
+        for m in [PinMode::Auto, PinMode::On, PinMode::Off] {
+            assert_eq!(m.to_string().parse::<PinMode>().unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn pin_mode_auto_engages_only_multi_node() {
+        let one = Topology {
+            cpus: vec![0, 1],
+            physical_cores: 2,
+            nodes: vec![vec![0, 1]],
+            l2_bytes: L2_FALLBACK_BYTES,
+            probed: false,
+        };
+        let two = Topology {
+            cpus: vec![0, 1],
+            physical_cores: 2,
+            nodes: vec![vec![0], vec![1]],
+            l2_bytes: L2_FALLBACK_BYTES,
+            probed: false,
+        };
+        assert!(!PinMode::Auto.engaged(&one));
+        assert!(PinMode::Auto.engaged(&two));
+        assert!(PinMode::On.engaged(&one));
+        assert!(!PinMode::Off.engaged(&two));
+    }
+
+    #[test]
+    #[cfg(target_os = "linux")]
+    fn pinning_round_trip_on_linux() {
+        // pin to the first online CPU, then widen back out to every CPU
+        let t = Topology::host();
+        let first = t.cpus[0];
+        assert!(pin_current_thread(first), "sched_setaffinity failed for cpu {first}");
+        // restore: allow all online CPUs again so other tests are unaffected
+        extern "C" {
+            fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+        }
+        let mut mask = [0u64; 16];
+        for &c in &t.cpus {
+            if c < mask.len() * 64 {
+                mask[c / 64] |= 1u64 << (c % 64);
+            }
+        }
+        // SAFETY: mask outlives the call; size matches the buffer.
+        let rc = unsafe { sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr()) };
+        assert_eq!(rc, 0);
+    }
+}

@@ -58,7 +58,7 @@ use std::time::Duration;
 use crate::coordinator::{
     Service, ServiceHandle, ServiceMetrics, SessionConfig, DEFAULT_QUEUE_CAPACITY,
 };
-use crate::cpu::{build_cpu_oracle_simd_with, SimdChoice};
+use crate::cpu::{build_cpu_oracle_tuned_with, PinMode, SimdChoice};
 use crate::data::Dataset;
 use crate::distance::{Dissimilarity, SqEuclidean};
 use crate::net::{Listen, NetClient};
@@ -266,6 +266,7 @@ pub struct EngineBuilder {
     artifacts: String,
     memory_mib: usize,
     simd: SimdChoice,
+    pin: PinMode,
 }
 
 impl Default for EngineBuilder {
@@ -280,6 +281,7 @@ impl Default for EngineBuilder {
             artifacts: "artifacts".into(),
             memory_mib: 16 * 1024,
             simd: SimdChoice::Auto,
+            pin: PinMode::Auto,
         }
     }
 }
@@ -351,6 +353,15 @@ impl EngineBuilder {
         self
     }
 
+    /// Worker-thread CPU pinning for the pooled CPU backend (default
+    /// [`PinMode::Auto`]: pin only on multi-NUMA hosts). The
+    /// `EXEMCL_PIN` environment variable overrides this knob either way
+    /// (see [`crate::cpu::topology`]).
+    pub fn pinning(mut self, pin: PinMode) -> Self {
+        self.pin = pin;
+        self
+    }
+
     /// AOT artifact directory for [`Backend::Device`].
     pub fn artifacts(mut self, dir: impl Into<String>) -> Self {
         self.artifacts = dir.into();
@@ -383,10 +394,11 @@ impl EngineBuilder {
             if self.dtype != Dtype::F32
                 || self.dist.name() != SqEuclidean.name()
                 || self.simd != SimdChoice::Auto
+                || self.pin != PinMode::Auto
             {
                 return Err(Error::InvalidArgument(
                     "remote engines evaluate with the serving process's dtype, \
-                     dissimilarity and SIMD path; configure them on `exemcl serve`"
+                     dissimilarity, SIMD path and pinning; configure them on `exemcl serve`"
                         .into(),
                 ));
             }
@@ -427,9 +439,11 @@ impl EngineBuilder {
                 }
                 let (ds2, dist, dtype) = (ds.clone(), self.dist, self.dtype);
                 let (artifacts, memory_mib) = (self.artifacts, self.memory_mib);
-                let simd = self.simd;
+                let (simd, pin) = (self.simd, self.pin);
                 let service = Service::spawn_with(
-                    move || build_oracle(&inner, ds2, dist, dtype, &artifacts, memory_mib, simd),
+                    move || {
+                        build_oracle(&inner, ds2, dist, dtype, &artifacts, memory_mib, simd, pin)
+                    },
                     self.queue_capacity,
                     self.sessions,
                 )?;
@@ -443,6 +457,7 @@ impl EngineBuilder {
                 &self.artifacts,
                 self.memory_mib,
                 self.simd,
+                self.pin,
             )?),
         };
         Ok(Engine { dataset: ds, dtype: self.dtype, backend, inner })
@@ -564,6 +579,7 @@ impl Engine {
 }
 
 /// Construct a direct (non-service) oracle for a backend choice.
+#[allow(clippy::too_many_arguments)] // one flat knob list, mirrored from the builder
 fn build_oracle(
     backend: &Backend,
     ds: Dataset,
@@ -572,11 +588,12 @@ fn build_oracle(
     artifacts: &str,
     memory_mib: usize,
     simd: SimdChoice,
+    pin: PinMode,
 ) -> Result<Box<dyn Oracle>> {
     match backend {
-        Backend::SingleThread => build_cpu_oracle_simd_with(ds, dist, false, 0, dtype, simd),
+        Backend::SingleThread => build_cpu_oracle_tuned_with(ds, dist, false, 0, dtype, simd, pin),
         Backend::Cpu { threads } => {
-            build_cpu_oracle_simd_with(ds, dist, true, *threads, dtype, simd)
+            build_cpu_oracle_tuned_with(ds, dist, true, *threads, dtype, simd, pin)
         }
         Backend::Device => {
             if simd != SimdChoice::Auto {
@@ -584,6 +601,12 @@ fn build_oracle(
                 // device evaluator would misreport what actually ran
                 return Err(Error::InvalidArgument(
                     "the SIMD path override applies to the CPU backends only".into(),
+                ));
+            }
+            if pin != PinMode::Auto {
+                // same story: there is no worker pool to pin
+                return Err(Error::InvalidArgument(
+                    "the pinning override applies to the pooled CPU backend only".into(),
                 ));
             }
             device_oracle(ds, dist, dtype, artifacts, memory_mib)
@@ -802,6 +825,11 @@ mod tests {
             .simd(SimdChoice::Force(crate::cpu::SimdPath::Scalar))
             .build();
         assert!(matches!(r, Err(Error::InvalidArgument(_))), "simd override must be rejected");
+        let r = Engine::builder()
+            .backend(Backend::Tcp { addr: "127.0.0.1:1".into() })
+            .pinning(PinMode::On)
+            .build();
+        assert!(matches!(r, Err(Error::InvalidArgument(_))), "pin override must be rejected");
         // a dead endpoint surfaces the connect failure
         let r = Engine::builder().backend(Backend::Tcp { addr: "127.0.0.1:1".into() }).build();
         assert!(r.is_err(), "nothing listens on port 1");
@@ -870,6 +898,29 @@ mod tests {
                 .simd(SimdChoice::Force(unavailable))
                 .build();
             assert!(r.is_err(), "forcing {unavailable} should fail on this host");
+        }
+    }
+
+    /// The builder's `pinning` knob reaches the pooled CPU oracle and
+    /// never changes results — pinning is placement, not arithmetic.
+    #[test]
+    fn pinning_knob_plumbs_through_the_builder() {
+        let sets = vec![vec![0usize, 3], vec![9, 11, 20]];
+        let reference = Engine::builder()
+            .dataset(small())
+            .backend(Backend::SingleThread)
+            .build()
+            .unwrap();
+        let want = reference.session().unwrap().eval_sets(&sets).unwrap();
+        for pin in [PinMode::Auto, PinMode::On, PinMode::Off] {
+            let e = Engine::builder()
+                .dataset(small())
+                .backend(Backend::Cpu { threads: 2 })
+                .pinning(pin)
+                .build()
+                .unwrap();
+            let got = e.session().unwrap().eval_sets(&sets).unwrap();
+            assert_eq!(got, want, "pin={pin}");
         }
     }
 

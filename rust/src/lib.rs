@@ -52,7 +52,11 @@
 //! (AVX-512F / AVX2+FMA / NEON, scalar fallback); force a specific path
 //! with `.simd(SimdChoice::Force(SimdPath::Scalar))`, the `eval.simd`
 //! config key, or the `EXEMCL_SIMD` environment variable (see
-//! [`cpu::simd`]).
+//! [`cpu::simd`]). Pooled evaluation runs on a work-assisting,
+//! NUMA-aware scheduler whose results are bit-identical to the serial
+//! oracle at any thread count; worker pinning is a knob too —
+//! `.pinning(PinMode::On)`, the `eval.pin` config key, or `EXEMCL_PIN`
+//! (`auto` pins only on multi-node hosts; see [`cpu`], "Scheduler").
 //!
 //! Fine-grained control — batched multiset evaluation, marginal gains,
 //! incremental commits — lives on [`engine::Session`]:

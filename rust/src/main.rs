@@ -43,6 +43,8 @@ fn usage() -> ! {
                eval.dtype (f32|f16|bf16) eval.artifacts eval.threads\n\
                eval.simd (auto|scalar|avx2|avx512|neon — force the CPU kernel\n\
                           dispatch path; errors if the host can't run it)\n\
+               eval.pin (auto|on|off — pin pool workers to cores; auto pins\n\
+                         only on multi-NUMA hosts)\n\
                eval.memory_mib eval.queue eval.sessions eval.session_ttl_secs\n\
                net.listen (tcp:host:port|uds:/path) net.max_conns net.accept_timeout_secs\n\
          shorthand: --dtype f16 == --eval.dtype=f16, --backend service ==\n\
@@ -102,6 +104,7 @@ fn canonical_key(k: &str) -> String {
         "backend" => "eval.backend".into(),
         "threads" => "eval.threads".into(),
         "simd" => "eval.simd".into(),
+        "pin" => "eval.pin".into(),
         other => other.to_string(),
     }
 }

@@ -140,6 +140,14 @@ pub trait Oracle {
         state.f_value(self.l0_sum())
     }
 
+    /// Cumulative work-assisting scheduler counters, when this oracle
+    /// runs on the pooled CPU backend. Serial and device oracles return
+    /// `None`; the coordinator's executor uses the deltas between calls
+    /// to feed its service metrics.
+    fn sched_stats(&self) -> Option<crate::cpu::SchedStats> {
+        None
+    }
+
     /// Short name for logs and bench tables.
     fn name(&self) -> String;
 }
@@ -182,6 +190,10 @@ impl<O: Oracle + ?Sized> Oracle for Box<O> {
 
     fn f_of_state(&self, state: &DminState) -> Result<f32> {
         (**self).f_of_state(state)
+    }
+
+    fn sched_stats(&self) -> Option<crate::cpu::SchedStats> {
+        (**self).sched_stats()
     }
 
     fn name(&self) -> String {

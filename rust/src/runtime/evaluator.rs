@@ -34,7 +34,7 @@ use crate::chunk::MemoryModel;
 #[cfg(feature = "xla-backend")]
 use crate::data::Dataset;
 #[cfg(feature = "xla-backend")]
-use crate::optim::oracle::{DminState, Oracle};
+use crate::optim::oracle::{DminState, GainsJob, Oracle};
 use crate::pack::PackOrder;
 #[cfg(feature = "xla-backend")]
 use crate::pack::SMultiPack;
@@ -428,6 +428,116 @@ impl DeviceEvaluator {
         let bufs = self.upload_dmin(state)?;
         Ok(table.insert(state.dmin.clone(), bufs))
     }
+
+    /// One fused multi-state gains pass: resolve every job's dmin
+    /// residency first, then walk **tile-outer / job-inner** so each
+    /// ground tile's marginal artifact is loaded once per fused batch
+    /// instead of once per session. Per-job tile order is unchanged, so
+    /// each job's f64 partial-sum chain — and hence its gains — is
+    /// bit-identical to a lone [`Oracle::marginal_gains`] call.
+    ///
+    /// `Err` means a batch-wide device failure (upload/execute); the
+    /// caller re-serves jobs singly so each gets an honest per-job
+    /// result. Per-job validation errors never fail batch-mates.
+    fn fused_gains(&self, jobs: &[GainsJob<'_>]) -> Result<Vec<Result<Vec<f32>>>> {
+        let n = self.ds.n();
+        let mut out: Vec<Result<Vec<f32>>> = jobs
+            .iter()
+            .map(|j| {
+                if j.state.dmin.len() != n {
+                    return Err(Error::InvalidArgument(format!(
+                        "state has {} entries, dataset has {n}",
+                        j.state.dmin.len()
+                    )));
+                }
+                match j.candidates.iter().find(|&&c| c >= n) {
+                    Some(&bad) => {
+                        Err(Error::InvalidArgument(format!("candidate {bad} out of range")))
+                    }
+                    None => Ok(Vec::new()),
+                }
+            })
+            .collect();
+        let valid: Vec<usize> =
+            (0..jobs.len()).filter(|&k| out[k].is_ok()).collect();
+
+        let meta0 = self.registry.find_marginal(&self.cfg.dtype, self.ds.d(), self.tiles[0].t)?;
+        let m_bucket = meta0.m.unwrap();
+
+        // residency first: the batch is bounded by DMIN_SLOTS, so no
+        // state resolved here can be evicted before it is used below
+        for &k in &valid {
+            self.dmin_slot(jobs[k].state)?;
+        }
+        let slots: Vec<usize> = {
+            let mut table = self.dmin_table.borrow_mut();
+            valid
+                .iter()
+                .map(|&k| table.find(&jobs[k].state.dmin).expect("resolved above"))
+                .collect()
+        };
+        let table = self.dmin_table.borrow();
+
+        // stage every job's candidate windows up front (one upload per
+        // window, reused across all tiles — same as the single-job path)
+        struct Win {
+            vi: usize,
+            start: usize,
+            count: usize,
+            c: xla::PjRtBuffer,
+            cm: xla::PjRtBuffer,
+        }
+        let mut wins: Vec<Win> = Vec::new();
+        let mut c_host = vec![0.0f32; m_bucket * self.d_bucket];
+        let mut cm_host = vec![0.0f32; m_bucket];
+        for (vi, &k) in valid.iter().enumerate() {
+            let cands = jobs[k].candidates;
+            let mut start = 0;
+            while start < cands.len() {
+                let count = m_bucket.min(cands.len() - start);
+                c_host.iter_mut().for_each(|x| *x = 0.0);
+                cm_host.iter_mut().for_each(|x| *x = 0.0);
+                for (slot, &cand) in cands[start..start + count].iter().enumerate() {
+                    let row = self.ds.row(cand);
+                    c_host[slot * self.d_bucket..slot * self.d_bucket + row.len()]
+                        .copy_from_slice(row);
+                    cm_host[slot] = 1.0;
+                }
+                wins.push(Win {
+                    vi,
+                    start,
+                    count,
+                    c: self.device.upload(&c_host, &[m_bucket, self.d_bucket])?,
+                    cm: self.device.upload(&cm_host, &[m_bucket])?,
+                });
+                start += count;
+            }
+        }
+
+        let mut accs: Vec<Vec<f64>> =
+            valid.iter().map(|&k| vec![0.0f64; jobs[k].candidates.len()]).collect();
+        for (ti, tile) in self.tiles.iter().enumerate() {
+            let meta = self.registry.find_marginal(&self.cfg.dtype, self.ds.d(), tile.t)?;
+            let exe = self.device.load(&self.registry.path_of(meta))?;
+            for w in &wins {
+                let dmin_buf = &table.slots[slots[w.vi]].bufs[ti];
+                let args = [&tile.v, &tile.vmask, dmin_buf, &w.c, &w.cm];
+                let dev_out = self.device.execute(exe.as_ref(), &args)?;
+                let lits = self.device.download_tuple(&dev_out[0])?;
+                let partial: Vec<f32> = lits[0].to_vec()?;
+                let acc = &mut accs[w.vi][w.start..w.start + w.count];
+                for (a, p) in acc.iter_mut().zip(&partial[..w.count]) {
+                    *a += *p as f64;
+                }
+            }
+        }
+
+        let nf = n as f64;
+        for (vi, &k) in valid.iter().enumerate() {
+            out[k] = Ok(accs[vi].iter().map(|&a| (a / nf) as f32).collect());
+        }
+        Ok(out)
+    }
 }
 
 #[cfg(feature = "xla-backend")]
@@ -505,6 +615,20 @@ impl Oracle for DeviceEvaluator {
             start += count;
         }
         Ok(gains)
+    }
+
+    /// Fused multi-session gains on the device: the `DminTable` batch
+    /// path. Bounded by the dmin table capacity — wider batches (or a
+    /// batch-wide device failure) fall back to serving jobs singly, so
+    /// every job always gets an honest per-job result.
+    fn marginal_gains_multi(&self, jobs: &[GainsJob<'_>]) -> Vec<Result<Vec<f32>>> {
+        if jobs.len() <= 1 || jobs.len() > DMIN_SLOTS {
+            return jobs.iter().map(|j| self.marginal_gains(j.state, j.candidates)).collect();
+        }
+        match self.fused_gains(jobs) {
+            Ok(results) => results,
+            Err(_) => jobs.iter().map(|j| self.marginal_gains(j.state, j.candidates)).collect(),
+        }
     }
 
     fn commit(&self, state: &mut DminState, idx: usize) -> Result<()> {

@@ -1,0 +1,130 @@
+//! Pool determinism matrix: the work-assisting scheduler's results must
+//! be **bit-identical** to the serial reference, whatever the thread
+//! count, element dtype or forced SIMD path. The foundation is the
+//! chunk-canonical reduction in `cpu::kernels` — chunk boundaries are a
+//! pure function of the dataset and dtype, never of the worker count,
+//! and per-chunk f64 partials fold in chunk order on both paths — so
+//! equality here is exact (`to_bits`), not a tolerance.
+//!
+//! The second half hammers the coordinator's fused multi-session gains
+//! path from concurrent clients: every client checks its own trajectory
+//! bitwise against a private serial oracle (no lost updates, no state
+//! mixing), and the service counters must account for every request
+//! exactly.
+
+use exemcl::cpu::{build_cpu_oracle_simd, simd, SimdChoice, SingleThread};
+use exemcl::data::synth::GaussianBlobs;
+use exemcl::engine::{Backend, Engine};
+use exemcl::optim::Oracle;
+use exemcl::scalar::Dtype;
+
+/// Large enough that the ground set spans several scheduler chunks
+/// (chunk rows are capped at 4 · 2048), so pooled runs really fan out.
+const N: usize = 12_000;
+const D: usize = 8;
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// One oracle trajectory: gains on a fresh state, a batched commit,
+/// gains against the committed state, and a multiset evaluation.
+struct Trace {
+    gains0: Vec<f32>,
+    gains1: Vec<f32>,
+    values: Vec<f32>,
+    dmin: Vec<f32>,
+}
+
+fn drive(oracle: &dyn Oracle) -> Trace {
+    let cands: Vec<usize> = (0..32).map(|i| (i * 311 + 7) % N).collect();
+    let mut state = oracle.init_state();
+    let gains0 = oracle.marginal_gains(&state, &cands).unwrap();
+    oracle.commit_many(&mut state, &[5, 4093, 11_200]).unwrap();
+    let gains1 = oracle.marginal_gains(&state, &cands).unwrap();
+    let sets = vec![vec![1usize, 2, 3], (0..25).map(|i| i * 401 % N).collect()];
+    let values = oracle.eval_sets(&sets).unwrap();
+    Trace { gains0, gains1, values, dmin: state.dmin }
+}
+
+#[test]
+fn pooled_results_are_bit_identical_to_single_thread_across_the_matrix() {
+    let ds = GaussianBlobs::new(6, D, 0.8).generate(N, 42);
+    for path in simd::available_paths() {
+        let choice = SimdChoice::Force(path);
+        for dtype in [Dtype::F32, Dtype::F16, Dtype::Bf16] {
+            let st = build_cpu_oracle_simd(ds.clone(), false, 0, dtype, choice).unwrap();
+            let want = drive(st.as_ref());
+            for threads in [1usize, 2, 3, 8] {
+                let mt = build_cpu_oracle_simd(ds.clone(), true, threads, dtype, choice).unwrap();
+                let got = drive(mt.as_ref());
+                let tag = format!("{path}/{}/threads={threads}", dtype.as_str());
+                assert_eq!(bits(&got.gains0), bits(&want.gains0), "{tag}: first gains");
+                assert_eq!(bits(&got.gains1), bits(&want.gains1), "{tag}: post-commit gains");
+                assert_eq!(bits(&got.values), bits(&want.values), "{tag}: eval_sets values");
+                assert_eq!(bits(&got.dmin), bits(&want.dmin), "{tag}: committed dmin");
+            }
+        }
+    }
+}
+
+#[test]
+fn concurrent_fused_gains_sessions_lose_nothing_and_count_exactly() {
+    const CLIENTS: usize = 6;
+    const ROUNDS: usize = 4;
+    const M: usize = 24;
+    let ds = GaussianBlobs::new(6, D, 0.8).generate(N, 43);
+    let engine = Engine::builder()
+        .dataset(ds.clone())
+        .backend(Backend::service_over(Backend::Cpu { threads: 4 }))
+        .queue_capacity(64)
+        .build()
+        .unwrap();
+    let h = engine.client().expect("service engines hand out clients");
+
+    std::thread::scope(|scope| {
+        for t in 0..CLIENTS {
+            let h = h.clone();
+            let ds = ds.clone();
+            scope.spawn(move || {
+                // a private serial oracle is this client's ground truth
+                let reference = SingleThread::new(ds);
+                let mut state = reference.init_state();
+                let mut session = h.open().unwrap();
+                let cands: Vec<usize> = (0..M).map(|i| (t * 977 + i * 131) % N).collect();
+                for r in 0..ROUNDS {
+                    let got = session.gains(&cands).unwrap();
+                    let want = reference.marginal_gains(&state, &cands).unwrap();
+                    assert_eq!(bits(&got), bits(&want), "client {t} round {r}: fused gains");
+                    let e = (t * ROUNDS + r) * 389 % N;
+                    session.commit_many(&[e]).unwrap();
+                    reference.commit(&mut state, e).unwrap();
+                }
+                session.sync().unwrap();
+                let exported = session.export().unwrap();
+                assert_eq!(bits(&exported.dmin), bits(&state.dmin), "client {t}: final state");
+                session.close().unwrap();
+            });
+        }
+    });
+
+    let m = engine.metrics().expect("service engines expose metrics");
+    // exact accounting: every candidate of every request, every session
+    assert_eq!(m.gains_evaluated.get(), (CLIENTS * ROUNDS * M) as u64);
+    assert_eq!(m.sessions_opened.get(), CLIENTS as u64);
+    assert_eq!(m.sessions_live.get(), 0, "every session was closed");
+    // the width histogram covers every marginals request exactly once:
+    // batch widths sum to the request count, however they coalesced
+    let batches = m.fused_width.count();
+    let total = (m.fused_width.mean() * batches as f64).round() as u64;
+    assert_eq!(total, (CLIENTS * ROUNDS) as u64, "fused-width histogram accounts all requests");
+    assert!(batches >= 1 && batches <= total, "batches = {batches}, requests = {total}");
+    // with a real pool behind the executor, scheduler claims flushed
+    // into the service counters (single-CPU hosts ride the zero-sync
+    // fast path and legitimately report none)
+    let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    if cores >= 2 {
+        let claims = m.tiles_node_local.get() + m.tiles_node_remote.get();
+        assert!(claims > 0, "pooled chunk claims should surface in the service metrics");
+    }
+}
