@@ -1,0 +1,156 @@
+//! Shard-cluster scaling — the distributed headline numbers: per-shard
+//! Welcome traffic (the O(n/N) claim, asserted, not just printed),
+//! round-1 wall-clock across an N-shard loopback cluster vs single-box
+//! partitioned GreeDi on the same plan, and the equivalence check that
+//! both select identical exemplars.
+//!
+//! Spawns one coordinator service + net server per shard (UDS on unix,
+//! TCP loopback elsewhere), connects a [`ClusterEngine`], runs
+//! two-round GreeDi, and writes `BENCH_shard.json` for the CI perf
+//! trajectory (override the path with `EXEMCL_BENCH_SHARD_OUT`).
+//!
+//! Run: `cargo bench --bench shard_scale`
+
+use std::time::{Duration, Instant};
+
+use exemcl::bench::{write_json, JsonValue, Scale, Table};
+use exemcl::coordinator::Service;
+use exemcl::cpu::SingleThread;
+use exemcl::data::synth::GaussianBlobs;
+use exemcl::net::{Listen, NetConfig, NetServer, StopHandle};
+use exemcl::shard::{single_box_reference, ClusterConfig, ClusterEngine, ShardLayout, ShardPlan};
+
+struct ShardServer {
+    svc: Option<Service>,
+    addr: Listen,
+    stop: StopHandle,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Drop for ShardServer {
+    fn drop(&mut self) {
+        self.stop.stop();
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+        if let Some(svc) = self.svc.take() {
+            svc.shutdown();
+        }
+    }
+}
+
+fn listen_endpoint(shard: usize) -> Listen {
+    #[cfg(unix)]
+    {
+        let path = std::env::temp_dir()
+            .join(format!("exemcl-bench-shard-{}-{shard}.sock", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        Listen::Uds(path)
+    }
+    #[cfg(not(unix))]
+    {
+        let _ = shard;
+        Listen::Tcp("127.0.0.1:0".into())
+    }
+}
+
+fn spawn_shard(ds: &exemcl::data::Dataset, s: usize, plan: &ShardPlan) -> ShardServer {
+    let shard_ds = ds.gather(&plan.members(s));
+    let svc = Service::spawn(move || Ok(SingleThread::new(shard_ds)), 32).expect("service");
+    let cfg = NetConfig::new(listen_endpoint(s))
+        .with_poll(Duration::from_millis(20))
+        .with_shard(s, plan.clone());
+    let server = NetServer::bind(svc.handle(), cfg).expect("bind");
+    let addr = server.local_addr().clone();
+    let stop = server.stop_handle();
+    let join = std::thread::spawn(move || server.run().expect("serve"));
+    ShardServer { svc: Some(svc), addr, stop, join: Some(join) }
+}
+
+fn main() {
+    let scale = Scale::from_env();
+    let (n, k) = match scale {
+        Scale::Quick => (1_200usize, 6usize),
+        Scale::Default => (12_000, 12),
+        Scale::Full => (30_000, 16),
+    };
+    let d = 16usize;
+    let shards = 3usize;
+    let ds = GaussianBlobs::new(6, d, 0.4).generate(n, 17);
+    let plan = ShardPlan::new(n, shards, ShardLayout::Contiguous).expect("plan");
+
+    // ------------------------------------------------------------------
+    // single-box partitioned GreeDi: the reference selection + wall
+    let t0 = Instant::now();
+    let reference = single_box_reference(&ds, &plan, k).expect("single-box GreeDi");
+    let single_secs = t0.elapsed().as_secs_f64();
+
+    // ------------------------------------------------------------------
+    // the same plan across an N-server loopback cluster
+    let servers: Vec<ShardServer> = (0..shards).map(|s| spawn_shard(&ds, s, &plan)).collect();
+    let addrs: Vec<Listen> = servers.iter().map(|s| s.addr.clone()).collect();
+
+    let t0 = Instant::now();
+    let cluster = ClusterEngine::connect(&addrs, ClusterConfig::default()).expect("connect");
+    let connect_secs = t0.elapsed().as_secs_f64();
+    let welcome_bytes = cluster.metrics().welcome_bytes.get();
+
+    // the O(n/N) assertion: all N Welcomes together ship each row and
+    // its dmin entry exactly once, plus a small per-shard constant —
+    // so per shard the mirror is one shard's rows, never the dataset
+    let per_shard_budget = (plan.shard_len(0) * (d + 1) * 4 + 1024) as u64;
+    assert!(
+        welcome_bytes <= shards as u64 * per_shard_budget,
+        "welcome traffic {welcome_bytes}B exceeds {shards} x {per_shard_budget}B \
+         (per-shard O(n/N) budget)"
+    );
+
+    let t0 = Instant::now();
+    let run = cluster.greedi(k).expect("cluster GreeDi");
+    let cluster_secs = t0.elapsed().as_secs_f64();
+
+    assert!(run.lost.is_empty(), "no shard may be lost on loopback");
+    assert_eq!(
+        run.result.exemplars, reference.result.exemplars,
+        "cluster and single-box GreeDi must select identical exemplars"
+    );
+    assert_eq!(run.pool, reference.pool, "bit-identical round-2 input");
+
+    let mut table = Table::new(&["quantity", "single-box", "cluster"]);
+    table.row(&["wall (s)".into(), format!("{single_secs:.3}"), format!("{cluster_secs:.3}")]);
+    table.row(&["pool size".into(), reference.pool.len().to_string(), run.pool.len().to_string()]);
+    let (f_ref, f_run) = (reference.result.value, run.result.value);
+    table.row(&["f(S)".into(), format!("{f_ref:.6}"), format!("{f_run:.6}")]);
+    table.print();
+
+    println!(
+        "\nn={n} d={d} k={k} shards={shards}: {welcome_bytes}B total welcome \
+         ({}B/shard budget), connect {connect_secs:.3}s, run {cluster_secs:.3}s \
+         vs {single_secs:.3}s single-box",
+        per_shard_budget
+    );
+
+    let out =
+        std::env::var("EXEMCL_BENCH_SHARD_OUT").unwrap_or_else(|_| "BENCH_shard.json".into());
+    let path = write_json(
+        &out,
+        &[
+            ("bench", JsonValue::Str("shard_scale".into())),
+            ("n", JsonValue::Int(n as i64)),
+            ("d", JsonValue::Int(d as i64)),
+            ("k", JsonValue::Int(k as i64)),
+            ("shards", JsonValue::Int(shards as i64)),
+            ("welcome_bytes_total", JsonValue::Int(welcome_bytes as i64)),
+            ("welcome_budget_per_shard", JsonValue::Int(per_shard_budget as i64)),
+            ("pool_size", JsonValue::Int(run.pool.len() as i64)),
+            ("connect_seconds", JsonValue::Num(connect_secs)),
+            ("wall_seconds_cluster", JsonValue::Num(cluster_secs)),
+            ("wall_seconds_single_box", JsonValue::Num(single_secs)),
+            ("value_check", JsonValue::Num(run.result.value as f64)),
+        ],
+    )
+    .expect("write BENCH_shard.json");
+    println!("wrote {path}");
+    drop(cluster);
+    drop(servers);
+}

@@ -11,6 +11,10 @@ use crate::data::Dataset;
 use crate::engine::Engine;
 use crate::net::{Listen, NetConfig, DEFAULT_MAX_CONNS};
 use crate::scalar::Dtype;
+use crate::shard::{
+    ClusterConfig, ShardLayout, DEFAULT_SHARD_BACKOFF, DEFAULT_SHARD_RETRIES,
+    DEFAULT_SHARD_TIMEOUT,
+};
 use crate::{Error, Result};
 
 pub use crate::engine::Backend;
@@ -144,6 +148,27 @@ pub struct AppConfig {
     /// `serve` accept/read poll interval in seconds (shutdown
     /// responsiveness; no client request times out because of it).
     pub accept_timeout_secs: u64,
+    /// Shared auth token (`net.token`, falling back to `EXEMCL_TOKEN`):
+    /// a server with one refuses every connection that does not present
+    /// it at handshake; clients send it automatically.
+    pub token: Option<String>,
+    /// Compress the one-time Welcome dataset mirror with RLE
+    /// zero-suppression (`net.compress`; both ends must opt in).
+    pub compress: bool,
+    /// `serve` shard spec `"i/N"` (`shard.spec` / `--shard`): serve
+    /// only shard `i` of an `N`-way partition of the generated dataset.
+    pub shard_spec: Option<String>,
+    /// Partition layout for the shard plan (`contiguous` | `strided`).
+    pub shard_layout: ShardLayout,
+    /// Per-shard deadline in seconds: socket read/write timeout on
+    /// every cluster connection, so a straggling shard fails in bounded
+    /// time instead of hanging round 1.
+    pub shard_timeout_secs: u64,
+    /// Reconnect attempts before a dead shard is excluded from the run.
+    pub shard_retries: usize,
+    /// Base backoff between shard reconnects in milliseconds (doubles
+    /// per attempt).
+    pub shard_backoff_ms: u64,
 }
 
 impl Default for AppConfig {
@@ -170,6 +195,13 @@ impl Default for AppConfig {
             listen: "tcp:127.0.0.1:7171".into(),
             max_conns: DEFAULT_MAX_CONNS,
             accept_timeout_secs: 1,
+            token: None,
+            compress: false,
+            shard_spec: None,
+            shard_layout: ShardLayout::Contiguous,
+            shard_timeout_secs: DEFAULT_SHARD_TIMEOUT.as_secs(),
+            shard_retries: DEFAULT_SHARD_RETRIES,
+            shard_backoff_ms: DEFAULT_SHARD_BACKOFF.as_millis() as u64,
         }
     }
 }
@@ -201,15 +233,43 @@ impl AppConfig {
             listen: raw.get("net.listen").unwrap_or(&def.listen).to_string(),
             max_conns: raw.get_or("net.max_conns", def.max_conns)?,
             accept_timeout_secs: raw.get_or("net.accept_timeout_secs", def.accept_timeout_secs)?,
+            token: raw
+                .get("net.token")
+                .map(str::to_string)
+                .or_else(|| std::env::var("EXEMCL_TOKEN").ok())
+                .filter(|t| !t.is_empty()),
+            compress: raw.get_or("net.compress", def.compress)?,
+            shard_spec: raw.get("shard.spec").map(str::to_string),
+            shard_layout: raw.get_or("shard.layout", def.shard_layout)?,
+            shard_timeout_secs: raw.get_or("shard.timeout_secs", def.shard_timeout_secs)?,
+            shard_retries: raw.get_or("shard.retries", def.shard_retries)?,
+            shard_backoff_ms: raw.get_or("shard.backoff_ms", def.shard_backoff_ms)?,
         })
     }
 
-    /// The `serve` subcommand's transport config, from the `net.*` keys.
+    /// The `serve` subcommand's transport config, from the `net.*` keys
+    /// (the shard plan, which needs the dataset size, is attached by the
+    /// CLI via [`NetConfig::with_shard`]).
     pub fn net_config(&self) -> Result<NetConfig> {
         let listen: Listen = self.listen.parse()?;
         Ok(NetConfig::new(listen)
             .with_max_conns(self.max_conns)
-            .with_poll(Duration::from_secs(self.accept_timeout_secs.max(1))))
+            .with_poll(Duration::from_secs(self.accept_timeout_secs.max(1)))
+            .with_token(self.token.clone())
+            .with_compress(self.compress))
+    }
+
+    /// Cluster-client policy from the `shard.*` / `net.*` keys: the
+    /// per-shard deadline, retry/backoff schedule, auth token and
+    /// Welcome compression the [`Backend::Cluster`] engine dials with.
+    pub fn cluster_config(&self) -> ClusterConfig {
+        ClusterConfig {
+            timeout: Duration::from_secs(self.shard_timeout_secs.max(1)),
+            retries: self.shard_retries,
+            backoff: Duration::from_millis(self.shard_backoff_ms),
+            token: self.token.clone(),
+            compress: self.compress,
+        }
     }
 
     /// Build an [`Engine`] against an out-of-process server — the
@@ -223,12 +283,13 @@ impl AppConfig {
     pub fn remote_engine(&self) -> Result<Engine> {
         if !self.backend.is_remote() {
             return Err(Error::Config(format!(
-                "backend {} is not remote (tcp:host:port | uds:/path)",
+                "backend {} is not remote (tcp:host:port | uds:/path | cluster:a,b,...)",
                 self.backend
             )));
         }
         Engine::builder()
             .backend(self.backend.clone())
+            .cluster_config(self.cluster_config())
             .dtype(self.dtype)
             .simd(self.simd)
             .pinning(self.pin)
@@ -450,6 +511,47 @@ mod tests {
 
         let raw = RawConfig::parse("[net]\nlisten = carrier-pigeon\n").unwrap();
         assert!(AppConfig::from_raw(&raw).unwrap().net_config().is_err());
+    }
+
+    #[test]
+    fn shard_and_cluster_keys_parse_with_defaults() {
+        let def = AppConfig::from_raw(&RawConfig::default()).unwrap();
+        assert_eq!(def.shard_spec, None);
+        assert_eq!(def.shard_layout, ShardLayout::Contiguous);
+        assert!(!def.compress);
+        let cc = def.cluster_config();
+        assert_eq!(cc.timeout, DEFAULT_SHARD_TIMEOUT);
+        assert_eq!(cc.retries, DEFAULT_SHARD_RETRIES);
+        assert_eq!(cc.backoff, DEFAULT_SHARD_BACKOFF);
+
+        let raw = RawConfig::parse(
+            "[shard]\nspec = 1/3\nlayout = strided\ntimeout_secs = 5\nretries = 0\n\
+             backoff_ms = 10\n[net]\ncompress = true\ntoken = hunter2\n",
+        )
+        .unwrap();
+        let cfg = AppConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.shard_spec.as_deref(), Some("1/3"));
+        assert_eq!(cfg.shard_layout, ShardLayout::Strided);
+        let cc = cfg.cluster_config();
+        assert_eq!(cc.timeout, Duration::from_secs(5));
+        assert_eq!(cc.retries, 0);
+        assert_eq!(cc.backoff, Duration::from_millis(10));
+        assert_eq!(cc.token.as_deref(), Some("hunter2"));
+        assert!(cc.compress);
+        let net = cfg.net_config().unwrap();
+        assert_eq!(net.token.as_deref(), Some("hunter2"));
+        assert!(net.compress);
+
+        let raw = RawConfig::parse("[shard]\nlayout = diagonal\n").unwrap();
+        assert!(AppConfig::from_raw(&raw).is_err());
+    }
+
+    #[test]
+    fn empty_token_key_means_no_auth() {
+        // `token = ""` explicitly disables auth even if EXEMCL_TOKEN is
+        // set — the filter drops empties after the env fallback.
+        let raw = RawConfig::parse("[net]\ntoken = \"\"\n").unwrap();
+        assert_eq!(AppConfig::from_raw(&raw).unwrap().token, None);
     }
 
     #[test]

@@ -244,6 +244,9 @@ pub struct ServiceMetrics {
     pub conns_closed: Counter,
     /// Network connections refused at the `net.max_conns` ceiling.
     pub conns_rejected: Counter,
+    /// Requests refused by the auth gate (`net.token`): a handshake
+    /// with a missing/mismatched token, or any verb before one.
+    pub auth_rejected: Counter,
     /// Server sessions opened (`Open` + `Fork`).
     pub sessions_opened: Counter,
     /// Server sessions closed by an explicit `Close`.
@@ -284,7 +287,7 @@ impl ServiceMetrics {
         format!(
             "requests={} batches={} coalesced={} fused_gains={} sets={} gains={} \
              sessions(live={} opened={} closed={} evicted={}) \
-             conns(live={} opened={} closed={} rejected={}) \
+             conns(live={} opened={} closed={} rejected={} unauthorized={}) \
              sched(assisted={} local_tiles={} remote_tiles={}) \
              fused_width(n={} mean={:.1} max={}) wire={}B net(rx={}B tx={}B) \
              latency(mean={:.0}us p50={}us p95={}us max={}us)",
@@ -302,6 +305,7 @@ impl ServiceMetrics {
             self.conns_opened.get(),
             self.conns_closed.get(),
             self.conns_rejected.get(),
+            self.auth_rejected.get(),
             self.tasks_assisted.get(),
             self.tiles_node_local.get(),
             self.tiles_node_remote.get(),
@@ -413,5 +417,12 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("sched(assisted=2 local_tiles=40 remote_tiles=8)"), "{s}");
         assert!(s.contains("fused_width(n=1 mean=4.0 max=4)"), "{s}");
+    }
+
+    #[test]
+    fn auth_rejections_surface_in_the_summary() {
+        let m = ServiceMetrics::default();
+        m.auth_rejected.add(3);
+        assert!(m.summary().contains("unauthorized=3"), "{}", m.summary());
     }
 }

@@ -65,7 +65,8 @@ use crate::net::{Listen, NetClient};
 use crate::optim::oracle::Oracle;
 use crate::optim::{OptimResult, Optimizer};
 use crate::scalar::Dtype;
-use crate::{Error, Result};
+use crate::shard::{cluster_endpoint, ClusterConfig, ClusterEngine};
+use crate::{log_warn, Error, Result};
 
 /// Below this many dataset elements (`n·d`) the pooled CPU backend's
 /// fan-out overhead beats its parallel win; [`Backend::Auto`] picks the
@@ -75,6 +76,12 @@ pub const AUTO_POOL_MIN_ELEMS: usize = 1 << 16;
 /// From this many dataset elements (`n·d`) on, [`Backend::Auto`] prefers
 /// the device evaluator — when its artifacts are actually present.
 pub const AUTO_DEVICE_MIN_ELEMS: usize = 1 << 22;
+
+/// From this many dataset elements (`n·d`) on, [`Backend::Auto`] prefers
+/// a remote server advertised via `EXEMCL_REMOTE` — above the device
+/// tier: only a problem too big to want local evaluation at all is
+/// worth a network round-trip per batch.
+pub const AUTO_REMOTE_MIN_ELEMS: usize = 1 << 24;
 
 /// Which evaluation backend an [`Engine`] builds.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -117,6 +124,16 @@ pub enum Backend {
         /// Socket path of the serving process.
         path: String,
     },
+    /// A sharded cluster of `exemcl serve --shard i/N` processes: the
+    /// engine connects to every address, agrees on the
+    /// [`crate::shard::ShardPlan`], and runs optimizers through the
+    /// two-round distributed GreeDi of [`crate::shard`]. Takes no local
+    /// dataset; only [`crate::optim::GreeDi`] can run on it.
+    Cluster {
+        /// One endpoint per shard, in shard order: `host:port`, a
+        /// `/socket` path, or explicit `tcp:`/`uds:` forms.
+        addrs: Vec<String>,
+    },
 }
 
 impl Backend {
@@ -126,10 +143,10 @@ impl Backend {
     }
 
     /// True for the out-of-process backends ([`Backend::Tcp`] /
-    /// [`Backend::Uds`]) — they take no local dataset and resolve
-    /// nothing at build time.
+    /// [`Backend::Uds`] / [`Backend::Cluster`]) — they take no local
+    /// dataset and resolve nothing at build time.
     pub fn is_remote(&self) -> bool {
-        matches!(self, Backend::Tcp { .. } | Backend::Uds { .. })
+        matches!(self, Backend::Tcp { .. } | Backend::Uds { .. } | Backend::Cluster { .. })
     }
 
     /// The dial target of a remote backend.
@@ -157,34 +174,73 @@ impl Backend {
 
     /// Replace every [`Backend::Auto`] (top-level or inside a service
     /// wrapper) with the concrete choice for `ds` — what
-    /// [`EngineBuilder::build`] runs before constructing oracles.
+    /// [`EngineBuilder::build`] runs before constructing oracles. A
+    /// top-level `Auto` may resolve to a remote tier when
+    /// `EXEMCL_REMOTE` names a server; a service-wrapped one never does
+    /// (an executor cannot drive an oracle in another process).
     pub fn resolve_auto(self, ds: &Dataset, artifacts: &str) -> Backend {
+        self.resolve_auto_with(ds, artifacts, env_remote())
+    }
+
+    fn resolve_auto_with(self, ds: &Dataset, artifacts: &str, remote: Option<Listen>) -> Backend {
         match self {
             Backend::Auto => {
                 let parallelism =
                     std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
-                choose_backend(ds.n(), ds.d(), parallelism, device_available(artifacts))
+                choose_backend(ds.n(), ds.d(), parallelism, device_available(artifacts), remote)
             }
             Backend::Service { inner } => {
-                Backend::Service { inner: Box::new(inner.resolve_auto(ds, artifacts)) }
+                Backend::Service { inner: Box::new(inner.resolve_auto_with(ds, artifacts, None)) }
             }
             other => other,
         }
     }
 }
 
+/// The `EXEMCL_REMOTE` advertisement for [`Backend::Auto`]'s remote
+/// tier: a `tcp:host:port` / `uds:/path` endpoint, or unset. A value
+/// that doesn't parse is warned about and ignored — a typo in an env
+/// var must not fail builds that never wanted the network.
+fn env_remote() -> Option<Listen> {
+    let raw = std::env::var("EXEMCL_REMOTE").ok().filter(|s| !s.is_empty())?;
+    match raw.parse::<Listen>() {
+        Ok(l) => Some(l),
+        Err(e) => {
+            log_warn!("ignoring unparseable EXEMCL_REMOTE={raw:?}: {e}");
+            None
+        }
+    }
+}
+
 /// The [`Backend::Auto`] decision table, pure so it can be unit-tested:
 ///
-/// | condition                                   | choice         |
-/// |---------------------------------------------|----------------|
-/// | device usable ∧ `n·d ≥ AUTO_DEVICE_MIN_ELEMS` | `Device`       |
-/// | `n·d < AUTO_POOL_MIN_ELEMS` ∨ 1 core          | `SingleThread` |
-/// | otherwise                                     | `Cpu` (all cores) |
+/// | condition                                      | choice         |
+/// |------------------------------------------------|----------------|
+/// | remote known ∧ `n·d ≥ AUTO_REMOTE_MIN_ELEMS`   | `Tcp` / `Uds`  |
+/// | device usable ∧ `n·d ≥ AUTO_DEVICE_MIN_ELEMS`  | `Device`       |
+/// | `n·d < AUTO_POOL_MIN_ELEMS` ∨ 1 core           | `SingleThread` |
+/// | otherwise                                      | `Cpu` (all cores) |
 ///
 /// `device_usable` means the `xla-backend` feature is compiled in *and*
-/// the artifact directory holds a usable kernel family.
-pub fn choose_backend(n: usize, d: usize, parallelism: usize, device_usable: bool) -> Backend {
+/// the artifact directory holds a usable kernel family; `remote` is the
+/// advertised `EXEMCL_REMOTE` endpoint, if any.
+pub fn choose_backend(
+    n: usize,
+    d: usize,
+    parallelism: usize,
+    device_usable: bool,
+    remote: Option<Listen>,
+) -> Backend {
     let elems = n.saturating_mul(d.max(1));
+    if elems >= AUTO_REMOTE_MIN_ELEMS {
+        match remote {
+            Some(Listen::Tcp(addr)) => return Backend::Tcp { addr },
+            Some(Listen::Uds(path)) => {
+                return Backend::Uds { path: path.to_string_lossy().into_owned() }
+            }
+            None => {}
+        }
+    }
     if device_usable && elems >= AUTO_DEVICE_MIN_ELEMS {
         Backend::Device
     } else if parallelism <= 1 || elems < AUTO_POOL_MIN_ELEMS {
@@ -216,6 +272,7 @@ impl std::fmt::Display for Backend {
             Backend::Service { inner } => write!(f, "service:{inner}"),
             Backend::Tcp { addr } => write!(f, "tcp:{addr}"),
             Backend::Uds { path } => write!(f, "uds:{path}"),
+            Backend::Cluster { addrs } => write!(f, "cluster:{}", addrs.join(",")),
         }
     }
 }
@@ -234,6 +291,20 @@ impl std::str::FromStr for Backend {
                 Listen::Uds(path) => Backend::Uds { path: path.to_string_lossy().into_owned() },
             });
         }
+        if let Some(list) = s.strip_prefix("cluster:") {
+            let addrs: Vec<String> =
+                list.split(',').map(str::trim).filter(|a| !a.is_empty()).map(Into::into).collect();
+            if addrs.is_empty() {
+                return Err(Error::Config(
+                    "cluster backend needs at least one shard endpoint (cluster:a,b,c)".into(),
+                ));
+            }
+            // validate eagerly so a typo fails at parse, not at connect
+            for a in &addrs {
+                cluster_endpoint(a)?;
+            }
+            return Ok(Backend::Cluster { addrs });
+        }
         if let Some(t) = s.strip_prefix("cpu-mt:").or_else(|| s.strip_prefix("mt:")) {
             let threads = t.parse().map_err(|_| {
                 Error::Config(format!("bad thread count {t:?} in backend {s:?}"))
@@ -248,7 +319,8 @@ impl std::str::FromStr for Backend {
             "device" | "xla" => Ok(Backend::Device),
             other => Err(Error::Config(format!(
                 "unknown backend {other:?} (auto|cpu-st|cpu-mt[:threads]|device|\
-                 service[:auto|cpu-st|cpu-mt|device]|tcp:host:port|uds:/path)"
+                 service[:auto|cpu-st|cpu-mt|device]|tcp:host:port|uds:/path|\
+                 cluster:addr,addr,...)"
             ))),
         }
     }
@@ -267,6 +339,7 @@ pub struct EngineBuilder {
     memory_mib: usize,
     simd: SimdChoice,
     pin: PinMode,
+    cluster: ClusterConfig,
 }
 
 impl Default for EngineBuilder {
@@ -282,6 +355,7 @@ impl Default for EngineBuilder {
             memory_mib: 16 * 1024,
             simd: SimdChoice::Auto,
             pin: PinMode::Auto,
+            cluster: ClusterConfig::default(),
         }
     }
 }
@@ -362,6 +436,14 @@ impl EngineBuilder {
         self
     }
 
+    /// Failure-handling and handshake knobs for [`Backend::Cluster`]
+    /// (per-shard deadline, retries/backoff, auth token, handshake
+    /// compression) — ignored by every other backend.
+    pub fn cluster_config(mut self, cfg: ClusterConfig) -> Self {
+        self.cluster = cfg;
+        self
+    }
+
     /// AOT artifact directory for [`Backend::Device`].
     pub fn artifacts(mut self, dir: impl Into<String>) -> Self {
         self.artifacts = dir.into();
@@ -380,9 +462,11 @@ impl EngineBuilder {
     /// thread that owns it and its session table). Remote backends
     /// ([`Backend::Tcp`] / [`Backend::Uds`]) instead dial the serving
     /// process and mirror **its** dataset — passing one locally is an
-    /// error (the server's ground set is authoritative).
+    /// error (the server's ground set is authoritative) — and
+    /// [`Backend::Cluster`] dials every shard server (its "dataset" is
+    /// distributed; [`Engine::dataset`] is an empty placeholder).
     pub fn build(self) -> Result<Engine> {
-        if let Some(target) = self.backend.listen() {
+        if self.backend.is_remote() {
             if self.dataset.is_some() {
                 return Err(Error::InvalidArgument(
                     "remote engines mirror the server's dataset; don't set one locally".into(),
@@ -415,6 +499,21 @@ impl EngineBuilder {
                         .into(),
                 ));
             }
+            if let Backend::Cluster { addrs } = &self.backend {
+                let endpoints =
+                    addrs.iter().map(|a| cluster_endpoint(a)).collect::<Result<Vec<_>>>()?;
+                let cluster = ClusterEngine::connect(&endpoints, self.cluster)?;
+                // the ground set is distributed; the engine-level
+                // dataset is a typed placeholder nothing reads
+                let dataset = Dataset::from_flat(0, cluster.d(), vec![])?;
+                return Ok(Engine {
+                    dataset,
+                    dtype: self.dtype,
+                    backend: self.backend,
+                    inner: EngineInner::Cluster(cluster),
+                });
+            }
+            let target = self.backend.listen().expect("non-cluster remote has a dial target");
             let client = NetClient::connect(&target)?;
             return Ok(Engine {
                 dataset: client.dataset().clone(),
@@ -429,7 +528,41 @@ impl EngineBuilder {
         if ds.n() == 0 {
             return Err(Error::EmptyDataset);
         }
-        let backend = self.backend.resolve_auto(&ds, &self.artifacts);
+        let mut backend = self.backend.resolve_auto(&ds, &self.artifacts);
+        if backend.is_remote() {
+            // Auto resolved to the EXEMCL_REMOTE tier. Knobs that change
+            // evaluation semantics disqualify it — the remote would
+            // silently evaluate under its own configuration.
+            if self.dtype != Dtype::F32
+                || self.dist.name() != SqEuclidean.name()
+                || self.simd != SimdChoice::Auto
+                || self.pin != PinMode::Auto
+            {
+                log_warn!(
+                    "EXEMCL_REMOTE ignored: this engine carries non-default evaluation knobs"
+                );
+                backend = Backend::Auto.resolve_auto_with(&ds, &self.artifacts, None);
+            } else {
+                let target = backend.listen().expect("the auto remote tier is tcp/uds");
+                let client = NetClient::connect(&target)?;
+                if client.dataset().n() != ds.n() || client.dataset().d() != ds.d() {
+                    return Err(Error::InvalidArgument(format!(
+                        "EXEMCL_REMOTE server at {target} serves a {}x{} dataset; the local \
+                         ground set is {}x{}",
+                        client.dataset().n(),
+                        client.dataset().d(),
+                        ds.n(),
+                        ds.d()
+                    )));
+                }
+                return Ok(Engine {
+                    dataset: ds,
+                    dtype: self.dtype,
+                    backend,
+                    inner: EngineInner::Net(client),
+                });
+            }
+        }
         let inner = match backend.clone() {
             Backend::Service { inner } => {
                 if matches!(*inner, Backend::Service { .. }) || inner.is_remote() {
@@ -473,6 +606,9 @@ enum EngineInner {
     /// The oracle lives in another process; the engine holds a framed
     /// connection to its serving loop.
     Net(NetClient),
+    /// The ground set is sharded across N serving processes; the engine
+    /// holds one connection per shard and runs distributed GreeDi.
+    Cluster(ClusterEngine),
 }
 
 /// A built evaluation engine: owns (or fronts) exactly one oracle and
@@ -492,18 +628,30 @@ impl Engine {
 
     /// Open a fresh session (empty summary): a local session over a
     /// direct oracle, or a **server-resident** session for service
-    /// backends (fallible: the open is an executor round-trip).
+    /// backends (fallible: the open is an executor round-trip). Cluster
+    /// engines have no single-session view of their distributed ground
+    /// set — drive them through [`Engine::run`] with a GreeDi optimizer.
     pub fn session(&self) -> Result<Session<'_>> {
         match &self.inner {
             EngineInner::Direct(o) => Ok(Session::over(o.as_ref())),
             EngineInner::Service(s) => Session::remote(s.handle_ref()),
             EngineInner::Net(c) => Session::over_net(c),
+            EngineInner::Cluster(_) => Err(Error::InvalidArgument(
+                "a cluster engine spans N shard servers and has no single-session view; \
+                 run a GreeDi optimizer via Engine::run"
+                    .into(),
+            )),
         }
     }
 
-    /// Run an optimizer in a fresh session and return its result.
+    /// Run an optimizer in a fresh session and return its result — or,
+    /// on a cluster engine, through the optimizer's distributed path
+    /// ([`Optimizer::run_cluster`]).
     pub fn run(&self, optimizer: &dyn Optimizer) -> Result<OptimResult> {
-        optimizer.run(&mut self.session()?)
+        match &self.inner {
+            EngineInner::Cluster(c) => optimizer.run_cluster(c),
+            _ => optimizer.run(&mut self.session()?),
+        }
     }
 
     /// The in-process oracle behind a direct engine (backend escape
@@ -513,7 +661,7 @@ impl Engine {
     pub fn oracle(&self) -> Option<&dyn Oracle> {
         match &self.inner {
             EngineInner::Direct(o) => Some(o.as_ref()),
-            EngineInner::Service(_) | EngineInner::Net(_) => None,
+            EngineInner::Service(_) | EngineInner::Net(_) | EngineInner::Cluster(_) => None,
         }
     }
 
@@ -523,8 +671,8 @@ impl Engine {
     /// and remote backends.
     pub fn client(&self) -> Option<ServiceHandle> {
         match &self.inner {
-            EngineInner::Direct(_) | EngineInner::Net(_) => None,
             EngineInner::Service(s) => Some(s.handle()),
+            _ => None,
         }
     }
 
@@ -538,13 +686,23 @@ impl Engine {
         }
     }
 
+    /// For [`Backend::Cluster`]: the shard cluster behind this engine
+    /// (plan, per-shard connections, failure metrics). `None` for every
+    /// other backend.
+    pub fn cluster(&self) -> Option<&ClusterEngine> {
+        match &self.inner {
+            EngineInner::Cluster(c) => Some(c),
+            _ => None,
+        }
+    }
+
     /// Service metrics (requests, coalesced batches, latency) when the
     /// backend is an in-process service. Remote engines' metrics live
     /// in the serving process.
     pub fn metrics(&self) -> Option<&ServiceMetrics> {
         match &self.inner {
-            EngineInner::Direct(_) | EngineInner::Net(_) => None,
             EngineInner::Service(s) => Some(s.metrics()),
+            _ => None,
         }
     }
 
@@ -574,6 +732,7 @@ impl Engine {
             EngineInner::Direct(o) => o.name(),
             EngineInner::Service(s) => s.handle_ref().name(),
             EngineInner::Net(c) => c.name(),
+            EngineInner::Cluster(c) => c.name(),
         }
     }
 }
@@ -619,10 +778,12 @@ fn build_oracle(
             "nested service backends are not supported".into(),
         )),
         // remote backends never reach oracle construction: build()
-        // turns them into a NetClient before this dispatch
-        Backend::Tcp { .. } | Backend::Uds { .. } => Err(Error::InvalidArgument(
-            "remote backends connect at Engine::build; they have no local oracle".into(),
-        )),
+        // turns them into a NetClient/ClusterEngine before this dispatch
+        Backend::Tcp { .. } | Backend::Uds { .. } | Backend::Cluster { .. } => {
+            Err(Error::InvalidArgument(
+                "remote backends connect at Engine::build; they have no local oracle".into(),
+            ))
+        }
     }
 }
 
@@ -708,12 +869,23 @@ mod tests {
             "uds:/tmp/exemcl.sock".parse::<Backend>().unwrap(),
             Backend::Uds { path: "/tmp/exemcl.sock".into() }
         );
+        assert_eq!(
+            "cluster:127.0.0.1:7171,host:7172".parse::<Backend>().unwrap(),
+            Backend::Cluster { addrs: vec!["127.0.0.1:7171".into(), "host:7172".into()] }
+        );
+        assert_eq!(
+            "cluster:/tmp/s0.sock".parse::<Backend>().unwrap(),
+            Backend::Cluster { addrs: vec!["/tmp/s0.sock".into()] }
+        );
         assert!(Backend::Tcp { addr: "x".into() }.is_remote());
+        assert!(Backend::Cluster { addrs: vec!["a:1".into()] }.is_remote());
         assert!(!Backend::SingleThread.is_remote());
         assert!("gpu".parse::<Backend>().is_err());
         assert!("cpu-mt:lots".parse::<Backend>().is_err());
         assert!("tcp:".parse::<Backend>().is_err());
         assert!("uds:".parse::<Backend>().is_err());
+        assert!("cluster:".parse::<Backend>().is_err(), "empty endpoint list");
+        assert!("cluster:nocolon".parse::<Backend>().is_err(), "unparseable endpoint");
         for s in [
             "auto",
             "cpu-st",
@@ -725,6 +897,8 @@ mod tests {
             "service:cpu-mt:8",
             "tcp:127.0.0.1:7171",
             "uds:/tmp/exemcl.sock",
+            "cluster:127.0.0.1:7171,127.0.0.1:7172,127.0.0.1:7173",
+            "cluster:/tmp/s0.sock,/tmp/s1.sock",
         ] {
             assert_eq!(s.parse::<Backend>().unwrap().to_string(), s);
         }
@@ -745,21 +919,51 @@ mod tests {
         let big_dev = AUTO_DEVICE_MIN_ELEMS; // n·d at the device threshold
         let tiny = AUTO_POOL_MIN_ELEMS - 1;
         // device wins only when usable AND the problem is large enough
-        assert_eq!(choose_backend(big_dev, 1, 8, true), Backend::Device);
-        assert_eq!(choose_backend(big_dev - 1, 1, 8, true), Backend::Cpu { threads: 0 });
-        assert_eq!(choose_backend(big_dev, 1, 8, false), Backend::Cpu { threads: 0 });
+        assert_eq!(choose_backend(big_dev, 1, 8, true, None), Backend::Device);
+        assert_eq!(choose_backend(big_dev - 1, 1, 8, true, None), Backend::Cpu { threads: 0 });
+        assert_eq!(choose_backend(big_dev, 1, 8, false, None), Backend::Cpu { threads: 0 });
         // below the pool threshold the serial oracle wins
-        assert_eq!(choose_backend(tiny, 1, 8, false), Backend::SingleThread);
-        assert_eq!(choose_backend(AUTO_POOL_MIN_ELEMS, 1, 8, false), Backend::Cpu { threads: 0 });
+        assert_eq!(choose_backend(tiny, 1, 8, false, None), Backend::SingleThread);
+        assert_eq!(
+            choose_backend(AUTO_POOL_MIN_ELEMS, 1, 8, false, None),
+            Backend::Cpu { threads: 0 }
+        );
         // elems = n · d, not n alone
-        assert_eq!(choose_backend(1024, 64, 8, false), Backend::Cpu { threads: 0 });
-        assert_eq!(choose_backend(1024, 1, 8, false), Backend::SingleThread);
+        assert_eq!(choose_backend(1024, 64, 8, false, None), Backend::Cpu { threads: 0 });
+        assert_eq!(choose_backend(1024, 1, 8, false, None), Backend::SingleThread);
         // a single core never picks the pool, however large the problem
-        assert_eq!(choose_backend(big_dev, 1, 1, false), Backend::SingleThread);
+        assert_eq!(choose_backend(big_dev, 1, 1, false, None), Backend::SingleThread);
         // ... but a single core still prefers a usable device
-        assert_eq!(choose_backend(big_dev, 1, 1, true), Backend::Device);
+        assert_eq!(choose_backend(big_dev, 1, 1, true, None), Backend::Device);
         // d = 0 is treated as d = 1, not elems = 0
-        assert_eq!(choose_backend(AUTO_POOL_MIN_ELEMS, 0, 8, false), Backend::Cpu { threads: 0 });
+        assert_eq!(
+            choose_backend(AUTO_POOL_MIN_ELEMS, 0, 8, false, None),
+            Backend::Cpu { threads: 0 }
+        );
+    }
+
+    /// The remote tier sits above everything: an advertised server wins
+    /// for problems past [`AUTO_REMOTE_MIN_ELEMS`], even over a usable
+    /// device — and never below the threshold.
+    #[test]
+    fn auto_remote_tier_outranks_the_device() {
+        let big = AUTO_REMOTE_MIN_ELEMS;
+        let tcp = || Some(Listen::Tcp("10.0.0.1:7171".into()));
+        let uds = || Some(Listen::Uds("/tmp/exemcl.sock".into()));
+        assert_eq!(choose_backend(big, 1, 8, true, tcp()), Backend::Tcp {
+            addr: "10.0.0.1:7171".into()
+        });
+        assert_eq!(choose_backend(big, 1, 1, false, uds()), Backend::Uds {
+            path: "/tmp/exemcl.sock".into()
+        });
+        // below the remote threshold the advertisement is ignored
+        assert_eq!(choose_backend(big - 1, 1, 8, true, tcp()), Backend::Device);
+        assert_eq!(
+            choose_backend(AUTO_POOL_MIN_ELEMS, 1, 8, false, tcp()),
+            Backend::Cpu { threads: 0 }
+        );
+        // without an advertisement the table is unchanged at any size
+        assert_eq!(choose_backend(big, 1, 8, false, None), Backend::Cpu { threads: 0 });
     }
 
     #[test]
@@ -832,6 +1036,23 @@ mod tests {
         assert!(matches!(r, Err(Error::InvalidArgument(_))), "pin override must be rejected");
         // a dead endpoint surfaces the connect failure
         let r = Engine::builder().backend(Backend::Tcp { addr: "127.0.0.1:1".into() }).build();
+        assert!(r.is_err(), "nothing listens on port 1");
+    }
+
+    #[test]
+    fn cluster_backend_is_remote_shaped() {
+        let addrs = vec!["127.0.0.1:1".to_string()];
+        // clusters mirror nothing locally: a dataset is rejected
+        let r = Engine::builder()
+            .dataset(small())
+            .backend(Backend::Cluster { addrs: addrs.clone() })
+            .build();
+        assert!(matches!(r, Err(Error::InvalidArgument(_))), "dataset + cluster must be rejected");
+        // an all-dead cluster fails the build (retries disabled for speed)
+        let r = Engine::builder()
+            .backend(Backend::Cluster { addrs })
+            .cluster_config(ClusterConfig { retries: 0, ..ClusterConfig::default() })
+            .build();
         assert!(r.is_err(), "nothing listens on port 1");
     }
 

@@ -111,6 +111,12 @@ pub enum Error {
     /// The evaluation service is shut down or its queue is gone.
     Service(String),
 
+    /// The peer failed the accept-time authentication (`net.token`):
+    /// missing or mismatched token in the handshake. Typed so clients
+    /// can distinguish "wrong credentials" from a transport failure and
+    /// so the shard layer never retries a rejected handshake.
+    Unauthorized(String),
+
     /// A malformed frame on the wire transport (see [`FrameError`]).
     Frame(FrameError),
 
@@ -137,6 +143,7 @@ impl fmt::Display for Error {
             Error::InvalidArgument(msg) => write!(f, "invalid argument: {msg}"),
             Error::Config(msg) => write!(f, "config error: {msg}"),
             Error::Service(msg) => write!(f, "service unavailable: {msg}"),
+            Error::Unauthorized(msg) => write!(f, "unauthorized: {msg}"),
             Error::Frame(e) => write!(f, "frame error: {e}"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }
@@ -185,6 +192,10 @@ mod tests {
             "invalid argument: k must be positive"
         );
         assert!(Error::EmptyDataset.to_string().contains("n = 0"));
+        assert_eq!(
+            Error::Unauthorized("bad token".into()).to_string(),
+            "unauthorized: bad token"
+        );
         let oom = Error::ChunkOom { per_set_bytes: 10, free_bytes: 5 };
         assert!(oom.to_string().contains("10B"));
         assert!(oom.to_string().contains("5B"));

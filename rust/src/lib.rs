@@ -86,6 +86,10 @@
 //! The same protocol goes **out of process** over TCP or Unix-domain
 //! sockets ([`net`]): `exemcl serve` loads a dataset and serves it,
 //! and a remote engine runs any optimizer against it unchanged —
+//! and **across machines** ([`shard`]): N servers each hold one shard
+//! of the ground set (`exemcl serve --shard i/N`), and
+//! `Backend::Cluster` runs two-round GreeDi over all of them with
+//! per-server traffic and memory O(n/N) —
 //!
 //! ```text
 //! # terminal 1
@@ -124,6 +128,7 @@ pub mod optim;
 pub mod pack;
 pub mod runtime;
 pub mod scalar;
+pub mod shard;
 pub mod testkit;
 
 pub use engine::{Backend, Engine, Session};

@@ -27,10 +27,11 @@ use exemcl::data::synth::{GaussianBlobs, Rings, UniformCube};
 use exemcl::data::Dataset;
 use exemcl::net::NetServer;
 use exemcl::optim::{
-    Greedy, LazyGreedy, Optimizer, Salsa, SieveStreaming, SieveStreamingPP, StochasticGreedy,
-    ThreeSieves,
+    GreeDi, Greedy, LazyGreedy, Optimizer, Salsa, SieveStreaming, SieveStreamingPP,
+    StochasticGreedy, ThreeSieves,
 };
 use exemcl::runtime::ArtifactRegistry;
+use exemcl::shard::ShardPlan;
 use exemcl::{Error, Result};
 
 fn usage() -> ! {
@@ -47,11 +48,20 @@ fn usage() -> ! {
                          only on multi-NUMA hosts)\n\
                eval.memory_mib eval.queue eval.sessions eval.session_ttl_secs\n\
                net.listen (tcp:host:port|uds:/path) net.max_conns net.accept_timeout_secs\n\
+               net.token (shared auth token; EXEMCL_TOKEN fallback)\n\
+               net.compress (RLE-compress the Welcome mirror; both ends opt in)\n\
+               shard.spec (i/N — serve only shard i) shard.layout (contiguous|strided)\n\
+               shard.timeout_secs shard.retries shard.backoff_ms (cluster straggler policy)\n\
          shorthand: --dtype f16 == --eval.dtype=f16, --backend service ==\n\
                --eval.backend=service (bounded-queue service over cpu-mt,\n\
-               server-resident sessions with index-only traffic)\n\
+               server-resident sessions with index-only traffic),\n\
+               --shard 0/3 == --shard.spec=0/3, --cluster a,b,c ==\n\
+               --eval.backend=cluster:a,b,c (two-round GreeDi over N shard servers)\n\
          two terminals: `exemcl serve --backend cpu-mt` then\n\
-               `exemcl solve --backend tcp:127.0.0.1:7171`"
+               `exemcl solve --backend tcp:127.0.0.1:7171`\n\
+         four terminals (sharded): `exemcl serve --shard i/3 --net.listen tcp:127.0.0.1:717i`\n\
+               for i = 0,1,2, then `exemcl solve --optimizer.name greedi \\\n\
+               --cluster 127.0.0.1:7170,127.0.0.1:7171,127.0.0.1:7172`"
     );
     std::process::exit(2);
 }
@@ -73,14 +83,14 @@ fn parse_args(args: &[String]) -> Result<(String, AppConfig)> {
             })?);
         } else if let Some(rest) = a.strip_prefix("--") {
             if let Some((k, v)) = rest.split_once('=') {
-                overrides.push((canonical_key(k), v.to_string()));
+                overrides.push(canonical_pair(k, v.to_string()));
             } else {
                 // --key value form
                 i += 1;
                 let v = args.get(i).cloned().ok_or_else(|| {
                     Error::Config(format!("flag --{rest} needs a value"))
                 })?;
-                overrides.push((canonical_key(rest), v));
+                overrides.push(canonical_pair(rest, v));
             }
         } else {
             return Err(Error::Config(format!("unexpected argument {a:?}")));
@@ -97,16 +107,20 @@ fn parse_args(args: &[String]) -> Result<(String, AppConfig)> {
 
 /// Bare-flag shorthands for the common knobs: `--dtype f16` is
 /// `--eval.dtype=f16` (the precision-study entry point), `--backend` /
-/// `--threads` follow suit.
-fn canonical_key(k: &str) -> String {
-    match k {
-        "dtype" => "eval.dtype".into(),
-        "backend" => "eval.backend".into(),
-        "threads" => "eval.threads".into(),
-        "simd" => "eval.simd".into(),
-        "pin" => "eval.pin".into(),
-        other => other.to_string(),
-    }
+/// `--threads` follow suit. `--cluster a,b,c` rewrites the *value* too
+/// (into `eval.backend = cluster:a,b,c`), hence pairs not keys.
+fn canonical_pair(k: &str, v: String) -> (String, String) {
+    let key = match k {
+        "dtype" => "eval.dtype",
+        "backend" => "eval.backend",
+        "threads" => "eval.threads",
+        "simd" => "eval.simd",
+        "pin" => "eval.pin",
+        "shard" => "shard.spec",
+        "cluster" => return ("eval.backend".into(), format!("cluster:{v}")),
+        other => return (other.to_string(), v),
+    };
+    (key.into(), v)
 }
 
 fn build_dataset(cfg: &AppConfig) -> Result<Dataset> {
@@ -128,6 +142,10 @@ fn build_dataset(cfg: &AppConfig) -> Result<Dataset> {
 fn build_optimizer(cfg: &AppConfig) -> Result<Box<dyn Optimizer>> {
     Ok(match cfg.optimizer.as_str() {
         "greedy" => Box::new(Greedy::new(cfg.k)),
+        // local runs partition across eval.threads workers; on a
+        // cluster backend the shard plan is the partition and the
+        // worker count is ignored
+        "greedi" => Box::new(GreeDi::new(cfg.k, cfg.threads.max(1), cfg.seed)),
         "lazy" => Box::new(LazyGreedy::new(cfg.k)),
         "stochastic" => Box::new(StochasticGreedy::new(cfg.k, 0.1, cfg.seed)),
         "sieve" => Box::new(SieveStreaming::new(cfg.k, 0.1, cfg.seed)),
@@ -137,7 +155,7 @@ fn build_optimizer(cfg: &AppConfig) -> Result<Box<dyn Optimizer>> {
         other => {
             return Err(Error::Config(format!(
                 "unknown optimizer {other:?} \
-                 (greedy|lazy|stochastic|sieve|sieve++|threesieves|salsa)"
+                 (greedy|greedi|lazy|stochastic|sieve|sieve++|threesieves|salsa)"
             )))
         }
     })
@@ -151,7 +169,13 @@ fn cmd_solve(cfg: &AppConfig) -> Result<()> {
     let (engine, ds) = if cfg.backend.is_remote() {
         let engine = cfg.remote_engine()?;
         let ds = engine.dataset().clone();
-        println!("dataset: n={} d={} (mirrored from {})", ds.n(), ds.d(), cfg.backend);
+        if let Some(c) = engine.cluster() {
+            // a cluster engine holds no local mirror; the ground set
+            // stays sharded across the servers
+            println!("dataset: n={} d={} (sharded across {})", c.plan().n(), c.d(), c.name());
+        } else {
+            println!("dataset: n={} d={} (mirrored from {})", ds.n(), ds.d(), cfg.backend);
+        }
         (engine, ds)
     } else {
         let ds = build_dataset(cfg)?;
@@ -183,7 +207,19 @@ fn cmd_solve(cfg: &AppConfig) -> Result<()> {
         println!("service: {}", m.summary());
     }
 
-    if !result.exemplars.is_empty() {
+    if let Some(c) = engine.cluster() {
+        // no local copy of the rows to assign against; report the
+        // cluster's health instead
+        let m = c.metrics();
+        if m.shards_lost.get() > 0 {
+            println!(
+                "cluster: DEGRADED — {} shard(s) lost, {} reconnect(s)",
+                m.shards_lost.get(),
+                m.shard_retries.get()
+            );
+        }
+        println!("cluster: welcome bytes = {}", m.welcome_bytes.get());
+    } else if !result.exemplars.is_empty() {
         let c = clustering::assign(&ds, &result.exemplars);
         println!(
             "clustering: k-medoids loss = {:.6}, sizes = {:?}",
@@ -204,7 +240,31 @@ fn cmd_serve(cfg: &AppConfig) -> Result<()> {
         ));
     }
     let ds = build_dataset(cfg)?;
-    println!("dataset: n={} d={}", ds.n(), ds.d());
+    let mut net = cfg.net_config()?;
+    // a shard server generates the FULL dataset deterministically, then
+    // keeps only its plan slice — every shard of a cluster agrees on
+    // the global row identities without ever exchanging data
+    let ds = match &cfg.shard_spec {
+        None => {
+            println!("dataset: n={} d={}", ds.n(), ds.d());
+            ds
+        }
+        Some(spec) => {
+            let (shard_id, shards) = ShardPlan::parse_spec(spec)?;
+            let plan = ShardPlan::new(ds.n(), shards, cfg.shard_layout)?;
+            let shard_ds = ds.gather(&plan.members(shard_id));
+            println!(
+                "dataset: n={} d={} (shard {shard_id}/{shards}, {} of {} rows, {} layout)",
+                ds.n(),
+                ds.d(),
+                shard_ds.n(),
+                ds.n(),
+                cfg.shard_layout
+            );
+            net = net.with_shard(shard_id, plan);
+            shard_ds
+        }
+    };
     // every connection shares one executor; direct backends get wrapped
     let backend = match cfg.backend.clone() {
         s @ Backend::Service { .. } => s,
@@ -215,7 +275,7 @@ fn cmd_serve(cfg: &AppConfig) -> Result<()> {
     let engine = serve_cfg.engine(ds)?;
     println!("backend: {}", engine.name());
     let handle = engine.client().expect("serve wraps the backend in a service");
-    let server = NetServer::bind(handle, cfg.net_config()?)?;
+    let server = NetServer::bind(handle, net)?;
     println!(
         "listening on {} (max {} connections; ctrl-c to stop)",
         server.local_addr(),

@@ -18,6 +18,7 @@
 use std::collections::{HashMap, VecDeque};
 use std::io::Write;
 use std::sync::{Mutex, MutexGuard};
+use std::time::Duration;
 
 use super::codec::{self, Reply, Request};
 use super::{Listen, NetStream};
@@ -25,6 +26,7 @@ use crate::coordinator::Counter;
 use crate::data::Dataset;
 use crate::error::FrameError;
 use crate::optim::oracle::DminState;
+use crate::shard::ShardPlan;
 use crate::{Error, Result};
 
 /// What a pipelined request's eventual reply should be treated as.
@@ -39,6 +41,7 @@ enum Pending {
 fn mismatch(got: &Reply) -> Error {
     let label = match got {
         Reply::Welcome { .. } => "Welcome",
+        Reply::WelcomeShard { .. } => "WelcomeShard",
         Reply::Floats(_) => "Floats",
         Reply::Sid(_) => "Sid",
         Reply::Ack => "Ack",
@@ -81,10 +84,11 @@ impl Conn {
         if self.broken {
             return Err(Error::Service("connection broken by an earlier transport error".into()));
         }
-        match codec::read_frame(&mut self.stream) {
-            Ok(Some((kind, payload))) => {
-                rx.add((codec::HEADER_LEN + payload.len()) as u64);
-                match codec::decode_reply(kind, &payload) {
+        match codec::read_frame_sized(&mut self.stream) {
+            // count what actually crossed the wire, not the inflated size
+            Ok(Some(frame)) => {
+                rx.add(frame.wire_len as u64);
+                match codec::decode_reply(frame.kind, &frame.payload) {
                     Ok(r) => Ok(r),
                     Err(e) => {
                         self.broken = true;
@@ -138,11 +142,42 @@ impl Conn {
     }
 }
 
+/// Handshake options for [`NetClient::connect_with`] — everything a
+/// connection negotiates beyond the endpoint itself.
+#[derive(Clone, Debug, Default)]
+pub struct ConnectOptions {
+    /// Auth token to present (`net.token`; [`ConnectOptions::from_env`]
+    /// reads `EXEMCL_TOKEN`). A server enforcing a token rejects a
+    /// missing or mismatched one with [`Error::Unauthorized`].
+    pub token: Option<String>,
+    /// Advertise acceptance of an RLE-compressed handshake payload
+    /// (`net.compress`); the server still only compresses when it wins.
+    pub compress: bool,
+    /// Perform the shard handshake instead of the full-mirror one:
+    /// `(shard_id, expected_plan)`, with `None` discovering the
+    /// server's plan. The reply carries **only the shard's rows**.
+    pub shard: Option<(usize, Option<ShardPlan>)>,
+    /// Socket read/write deadline for every operation on this
+    /// connection (`shard.timeout_secs`) — how stragglers surface as
+    /// errors in bounded time. `None` blocks indefinitely.
+    pub timeout: Option<Duration>,
+}
+
+impl ConnectOptions {
+    /// The ambient defaults: token from `EXEMCL_TOKEN` (when set and
+    /// non-empty), everything else off.
+    pub fn from_env() -> ConnectOptions {
+        let token = std::env::var("EXEMCL_TOKEN").ok().filter(|t| !t.is_empty());
+        ConnectOptions { token, ..ConnectOptions::default() }
+    }
+}
+
 /// A connected client: the out-of-process twin of a
 /// [`crate::coordinator::ServiceHandle`]. Holds the dataset mirror
-/// received at `Welcome`, hands out [`NetSession`]s over one shared
-/// socket, and counts its own transport bytes (frame headers included)
-/// for the wire-accounting tests and benches.
+/// received at `Welcome` (or the shard-local mirror from
+/// `WelcomeShard`), hands out [`NetSession`]s over one shared socket,
+/// and counts its own transport bytes (frame headers included) for the
+/// wire-accounting tests and benches.
 pub struct NetClient {
     conn: Mutex<Conn>,
     dataset: Dataset,
@@ -150,44 +185,92 @@ pub struct NetClient {
     init_dmin: Vec<f32>,
     backend_name: String,
     target: Listen,
+    shard: Option<(usize, ShardPlan)>,
     tx_bytes: Counter,
     rx_bytes: Counter,
 }
 
 impl NetClient {
     /// Dial a server and perform the `Hello`/`Welcome` handshake — the
-    /// one dataset-sized transfer of the connection's lifetime.
+    /// one dataset-sized transfer of the connection's lifetime — with
+    /// the ambient [`ConnectOptions::from_env`] options.
     pub fn connect(target: &Listen) -> Result<Self> {
+        Self::connect_with(target, &ConnectOptions::from_env())
+    }
+
+    /// [`NetClient::connect`] with explicit handshake options: auth
+    /// token, handshake compression, the shard handshake, and the
+    /// per-operation socket deadline.
+    pub fn connect_with(target: &Listen, opts: &ConnectOptions) -> Result<Self> {
         let stream = NetStream::connect(target)?;
+        stream.set_read_timeout(opts.timeout)?;
+        stream.set_write_timeout(opts.timeout)?;
         let tx_bytes = Counter::default();
         let rx_bytes = Counter::default();
         let mut conn =
             Conn { stream, pending: VecDeque::new(), failed: HashMap::new(), broken: false };
-        conn.send(&Request::Hello, &tx_bytes)?;
-        match conn.recv(&rx_bytes)? {
-            Reply::Welcome { n, d, l0, name, init_dmin, rows } => {
-                if init_dmin.len() != n {
+        let hello = match &opts.shard {
+            None => Request::Hello { token: opts.token.clone(), compress: opts.compress },
+            Some((shard_id, plan)) => Request::HelloShard {
+                shard_id: *shard_id,
+                plan: plan.clone(),
+                token: opts.token.clone(),
+                compress: opts.compress,
+            },
+        };
+        conn.send(&hello, &tx_bytes)?;
+        let (n, d, l0, name, init_dmin, rows, shard) = match conn.recv(&rx_bytes)? {
+            Reply::Welcome { n, d, l0, name, init_dmin, rows } if opts.shard.is_none() => {
+                (n, d, l0, name, init_dmin, rows, None)
+            }
+            Reply::WelcomeShard { shard_id, plan, n, d, l0, name, init_dmin, rows }
+                if opts.shard.is_some() =>
+            {
+                let (want_id, want_plan) = opts.shard.as_ref().expect("guarded");
+                if shard_id != *want_id {
                     return Err(FrameError::Malformed(format!(
-                        "welcome dmin has {} entries for n = {n}",
-                        init_dmin.len()
+                        "asked for shard {want_id}, server answered as shard {shard_id}"
                     ))
                     .into());
                 }
-                let dataset = Dataset::from_flat(n, d, rows)?;
-                Ok(Self {
-                    conn: Mutex::new(conn),
-                    dataset,
-                    l0,
-                    init_dmin,
-                    backend_name: name,
-                    target: target.clone(),
-                    tx_bytes,
-                    rx_bytes,
-                })
+                if let Some(want) = want_plan {
+                    if *want != plan {
+                        return Err(Error::Service(format!(
+                            "server serves \"{plan}\" but the cluster agreed on \"{want}\""
+                        )));
+                    }
+                }
+                if n != plan.shard_len(shard_id) {
+                    return Err(FrameError::Malformed(format!(
+                        "shard {shard_id} of \"{plan}\" must carry {} rows, got {n}",
+                        plan.shard_len(shard_id)
+                    ))
+                    .into());
+                }
+                (n, d, l0, name, init_dmin, rows, Some((shard_id, plan)))
             }
-            Reply::Error(code, msg) => Err(Reply::into_error(code, msg)),
-            other => Err(mismatch(&other)),
+            Reply::Error(code, msg) => return Err(Reply::into_error(code, msg)),
+            other => return Err(mismatch(&other)),
+        };
+        if init_dmin.len() != n {
+            return Err(FrameError::Malformed(format!(
+                "welcome dmin has {} entries for n = {n}",
+                init_dmin.len()
+            ))
+            .into());
         }
+        let dataset = Dataset::from_flat(n, d, rows)?;
+        Ok(Self {
+            conn: Mutex::new(conn),
+            dataset,
+            l0,
+            init_dmin,
+            backend_name: name,
+            target: target.clone(),
+            shard,
+            tx_bytes,
+            rx_bytes,
+        })
     }
 
     fn lock(&self) -> MutexGuard<'_, Conn> {
@@ -280,6 +363,29 @@ impl NetClient {
     /// included).
     pub fn rx_bytes(&self) -> u64 {
         self.rx_bytes.get()
+    }
+
+    /// The shard identity this connection negotiated, if the shard
+    /// handshake was used: `(shard_id, plan)`. `None` for a full-mirror
+    /// connection.
+    pub fn shard(&self) -> Option<&(usize, ShardPlan)> {
+        self.shard.as_ref()
+    }
+
+    /// Fetch raw dataset rows by (serving-local) index: `|indices|·d`
+    /// floats in request order — how the GreeDi reducer materializes
+    /// the round-2 union pool from each shard's owner.
+    pub fn rows(&self, indices: &[usize]) -> Result<Vec<f32>> {
+        let want = indices.len() * self.dataset.d();
+        match self.call(&Request::Rows { indices: indices.to_vec() })? {
+            Reply::Floats(v) if v.len() == want => Ok(v),
+            Reply::Floats(v) => Err(FrameError::Malformed(format!(
+                "rows reply carries {} floats, expected {want}",
+                v.len()
+            ))
+            .into()),
+            other => Err(mismatch(&other)),
+        }
     }
 
     /// Evaluate `f(S)` for arbitrary index sets on the server.

@@ -16,11 +16,27 @@
 //! each produce their own [`FrameError`] — the server drops the
 //! connection, the client surfaces the diagnosis. A length prefix is
 //! validated against [`MAX_PAYLOAD`] *before* any allocation.
+//!
+//! Two orthogonal extensions ride the same frame format:
+//!
+//! * **Shard handshake** — [`Request::HelloShard`] binds a connection to
+//!   one shard of a [`ShardPlan`]; the server answers
+//!   [`Reply::WelcomeShard`] carrying *only* the shard's rows, so the
+//!   one-time mirror drops from O(n·d) to O(n·d/N). [`Request::Rows`]
+//!   fetches raw rows by shard-local index for the GreeDi reducer round.
+//! * **Payload compression** — the first reserved header byte carries
+//!   [`FLAG_COMPRESSED`]: the payload is RLE/zero-suppressed
+//!   ([`rle_compress`]) and [`read_frame`] inflates it transparently.
+//!   Only the big one-time mirrors (`Welcome`/`WelcomeShard`) are ever
+//!   compressed, and only when that actually shrinks them
+//!   ([`maybe_compress_frame`]); the hot path keeps its exact
+//!   byte-model framing.
 
 use std::io::Read;
 
 use crate::error::FrameError;
 use crate::optim::oracle::DminState;
+use crate::shard::{ShardLayout, ShardPlan};
 use crate::{Error, Result};
 
 /// First four bytes of every frame.
@@ -35,8 +51,16 @@ pub const VERSION: u8 = 1;
 pub const HEADER_LEN: usize = 16;
 
 /// Ceiling on a single payload (2 GiB). A header announcing more is
-/// rejected as [`FrameError::Oversized`] without allocating.
+/// rejected as [`FrameError::Oversized`] without allocating. A
+/// compressed payload's *inflated* size is held to the same ceiling.
 pub const MAX_PAYLOAD: u64 = 1 << 31;
+
+/// Header flag byte (first reserved byte, offset 6) bit 0: the payload
+/// is RLE/zero-suppression compressed and must be inflated with
+/// [`rle_decompress`] before decoding. PR 5 peers always sent zeros
+/// here, so the flag is wire-compatible with the existing protocol
+/// version.
+pub const FLAG_COMPRESSED: u8 = 0x01;
 
 /// Message-kind bytes. Requests live below `0x40`, replies at or above.
 pub mod kind {
@@ -58,6 +82,11 @@ pub mod kind {
     pub const EXPORT: u8 = 0x08;
     /// Reclaim a session.
     pub const CLOSE: u8 = 0x09;
+    /// Shard-aware handshake; the server answers [`WELCOME_SHARD`].
+    pub const HELLO_SHARD: u8 = 0x0A;
+    /// Fetch raw dataset rows by (shard-local) index — the GreeDi
+    /// reducer's one extra verb.
+    pub const ROWS: u8 = 0x0B;
 
     /// Handshake reply: dataset mirror + backend identity.
     pub const WELCOME: u8 = 0x41;
@@ -71,6 +100,8 @@ pub mod kind {
     pub const FLOAT: u8 = 0x45;
     /// A full `DminState` (`Export` replies).
     pub const STATE: u8 = 0x46;
+    /// Shard handshake reply: plan + shard-local dataset mirror.
+    pub const WELCOME_SHARD: u8 = 0x47;
     /// A typed error (code byte + message).
     pub const ERROR: u8 = 0x4F;
 }
@@ -80,7 +111,37 @@ pub mod kind {
 #[derive(Clone, Debug, PartialEq)]
 pub enum Request {
     /// Handshake: ask for the dataset mirror and backend identity.
-    Hello,
+    /// The default handshake (no token, no compression) encodes to the
+    /// exact empty-payload frame PR 5 shipped.
+    Hello {
+        /// Auth token when the server enforces one (`net.token`); must
+        /// be non-empty when present (an empty token means "unset").
+        token: Option<String>,
+        /// Client accepts an RLE-compressed `Welcome` payload.
+        compress: bool,
+    },
+    /// Shard-aware handshake: bind this connection to shard `shard_id`
+    /// of `plan`. The server answers [`Reply::WelcomeShard`] with only
+    /// its shard's rows.
+    HelloShard {
+        /// Which shard of the plan this connection expects to speak to.
+        shard_id: usize,
+        /// The plan the client expects the server to be serving;
+        /// `None` discovers the server's plan instead of asserting one
+        /// (the cluster engine probes shard 0 this way).
+        plan: Option<ShardPlan>,
+        /// Auth token (as in [`Request::Hello`]).
+        token: Option<String>,
+        /// Client accepts an RLE-compressed `WelcomeShard` payload.
+        compress: bool,
+    },
+    /// Fetch raw dataset rows by index (shard-local on a shard server).
+    /// Answered with [`Reply::Floats`] of length `|indices|·d` — the
+    /// GreeDi reducer uses this to materialize the round-2 union pool.
+    Rows {
+        /// Row indices into the serving dataset.
+        indices: Vec<usize>,
+    },
     /// Evaluate `f(S)` for arbitrary index sets.
     EvalSets {
         /// The multiset batch.
@@ -128,6 +189,14 @@ pub enum Request {
     },
 }
 
+impl Request {
+    /// The default handshake: no token, no compression — byte-for-byte
+    /// the PR 5 empty-payload `Hello` frame.
+    pub fn hello() -> Request {
+        Request::Hello { token: None, compress: false }
+    }
+}
+
 /// A decoded reply frame.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Reply {
@@ -159,8 +228,30 @@ pub enum Reply {
     Float(f32),
     /// A full session state.
     State(DminState),
+    /// Shard handshake reply: the server's plan and shard identity plus
+    /// the *shard-local* dataset mirror (`n` here is the shard's row
+    /// count, not the global ground-set size — that lives in the plan).
+    WelcomeShard {
+        /// Which shard this server carries.
+        shard_id: usize,
+        /// The partition the server was launched with.
+        plan: ShardPlan,
+        /// Shard-local row count (`plan.shard_len(shard_id)`).
+        n: usize,
+        /// Dimensionality.
+        d: usize,
+        /// `L({e0})·n_local` of the shard backend's dissimilarity.
+        l0: f64,
+        /// Backend's descriptive name.
+        name: String,
+        /// The shard backend's fresh dmin, length `n` (shard-local).
+        init_dmin: Vec<f32>,
+        /// Row-major shard rows, length `n·d`.
+        rows: Vec<f32>,
+    },
     /// A typed service error: `(code, message)` with code 1 =
-    /// invalid argument, 2 = service, 3 = empty dataset, 0 = other.
+    /// invalid argument, 2 = service, 3 = empty dataset, 4 =
+    /// unauthorized, 0 = other.
     Error(u8, String),
 }
 
@@ -171,6 +262,7 @@ impl Reply {
             Error::InvalidArgument(m) => Reply::Error(1, m.clone()),
             Error::Service(m) => Reply::Error(2, m.clone()),
             Error::EmptyDataset => Reply::Error(3, String::new()),
+            Error::Unauthorized(m) => Reply::Error(4, m.clone()),
             other => Reply::Error(0, other.to_string()),
         }
     }
@@ -180,6 +272,7 @@ impl Reply {
         match code {
             1 => Error::InvalidArgument(msg),
             3 => Error::EmptyDataset,
+            4 => Error::Unauthorized(msg),
             _ => Error::Service(msg),
         }
     }
@@ -216,6 +309,31 @@ fn put_indices(buf: &mut Vec<u8>, vs: &[usize]) {
     }
 }
 
+/// Wire form of a [`ShardPlan`]: global `n` (8) + shard count (8) +
+/// layout byte (0 = contiguous, 1 = strided).
+fn put_plan(buf: &mut Vec<u8>, plan: &ShardPlan) {
+    put_u64(buf, plan.n() as u64);
+    put_u64(buf, plan.shards() as u64);
+    buf.push(match plan.layout() {
+        ShardLayout::Contiguous => 0,
+        ShardLayout::Strided => 1,
+    });
+}
+
+fn plan_payload(p: &mut Payload<'_>) -> Result<ShardPlan> {
+    let n = p.u64()? as usize;
+    let shards = p.u64()? as usize;
+    let layout = match p.u8()? {
+        0 => ShardLayout::Contiguous,
+        1 => ShardLayout::Strided,
+        other => {
+            return Err(FrameError::Malformed(format!("bad shard layout byte {other}")).into())
+        }
+    };
+    ShardPlan::new(n, shards, layout)
+        .map_err(|e| FrameError::Malformed(format!("bad shard plan: {e}")).into())
+}
+
 /// Start a frame: header with a zeroed length, patched by [`finish`] —
 /// payloads are written straight into the frame buffer, never staged
 /// and copied (the `Welcome` dataset mirror would otherwise pay an
@@ -239,7 +357,9 @@ fn finish(mut out: Vec<u8>) -> Vec<u8> {
 
 fn request_kind(req: &Request) -> u8 {
     match req {
-        Request::Hello => kind::HELLO,
+        Request::Hello { .. } => kind::HELLO,
+        Request::HelloShard { .. } => kind::HELLO_SHARD,
+        Request::Rows { .. } => kind::ROWS,
         Request::EvalSets { .. } => kind::EVAL_SETS,
         Request::Open { .. } => kind::OPEN,
         Request::Marginals { .. } => kind::MARGINALS,
@@ -255,7 +375,31 @@ fn request_kind(req: &Request) -> u8 {
 pub fn encode_request(req: &Request) -> Vec<u8> {
     let mut p = begin(request_kind(req));
     match req {
-        Request::Hello => {}
+        // the default handshake stays the empty payload the PR 5 wire
+        // shipped; flags + token only appear when actually used
+        Request::Hello { token, compress } => {
+            if *compress || token.is_some() {
+                p.push(u8::from(*compress));
+                if let Some(t) = token {
+                    p.extend_from_slice(t.as_bytes());
+                }
+            }
+        }
+        Request::HelloShard { shard_id, plan, token, compress } => {
+            p.push(u8::from(*compress));
+            put_u64(&mut p, *shard_id as u64);
+            match plan {
+                None => p.push(0),
+                Some(pl) => {
+                    p.push(1);
+                    put_plan(&mut p, pl);
+                }
+            }
+            if let Some(t) = token {
+                p.extend_from_slice(t.as_bytes());
+            }
+        }
+        Request::Rows { indices } => put_indices(&mut p, indices),
         Request::EvalSets { sets } => {
             put_u64(&mut p, sets.len() as u64);
             for s in sets {
@@ -300,6 +444,7 @@ fn reply_kind(rep: &Reply) -> u8 {
         Reply::Ack => kind::ACK,
         Reply::Float(_) => kind::FLOAT,
         Reply::State(_) => kind::STATE,
+        Reply::WelcomeShard { .. } => kind::WELCOME_SHARD,
         Reply::Error(..) => kind::ERROR,
     }
 }
@@ -326,6 +471,17 @@ pub fn encode_reply(rep: &Reply) -> Vec<u8> {
             put_f32s(&mut p, &state.dmin);
             put_u64(&mut p, state.exemplars.len() as u64);
             put_indices(&mut p, &state.exemplars);
+        }
+        Reply::WelcomeShard { shard_id, plan, n, d, l0, name, init_dmin, rows } => {
+            put_u64(&mut p, *shard_id as u64);
+            put_plan(&mut p, plan);
+            put_u64(&mut p, *n as u64);
+            put_u64(&mut p, *d as u64);
+            put_f64(&mut p, *l0);
+            put_u64(&mut p, name.len() as u64);
+            p.extend_from_slice(name.as_bytes());
+            put_f32s(&mut p, init_dmin);
+            put_f32s(&mut p, rows);
         }
         Reply::Error(code, msg) => {
             p.push(*code);
@@ -450,11 +606,64 @@ fn state_payload(p: &mut Payload<'_>) -> Result<DminState> {
     Ok(DminState { dmin, exemplars })
 }
 
+/// Handshake flags byte: only bit 0 (compression) is defined; anything
+/// else is a malformed frame, not a silently-ignored future extension.
+fn hello_flags(p: &mut Payload<'_>) -> Result<bool> {
+    let flags = p.u8()?;
+    if flags & !FLAG_COMPRESSED != 0 {
+        return Err(FrameError::Malformed(format!("bad hello flags 0x{flags:02x}")).into());
+    }
+    Ok(flags & FLAG_COMPRESSED != 0)
+}
+
+/// The token is the handshake payload's tail (everything after the
+/// fixed fields); absent and empty both decode to `None`.
+fn hello_token(p: &mut Payload<'_>) -> Result<Option<String>> {
+    let raw = p.take(p.remaining())?;
+    if raw.is_empty() {
+        return Ok(None);
+    }
+    String::from_utf8(raw.to_vec())
+        .map(Some)
+        .map_err(|_| FrameError::Malformed("token is not utf-8".into()).into())
+}
+
 /// Decode a request payload for a header kind.
 pub fn decode_request(kind: u8, payload: &[u8]) -> Result<Request> {
     let mut p = Payload::new(payload);
     let req = match kind {
-        kind::HELLO => Request::Hello,
+        kind::HELLO => {
+            if p.remaining() == 0 {
+                Request::hello()
+            } else {
+                let compress = hello_flags(&mut p)?;
+                let token = hello_token(&mut p)?;
+                Request::Hello { token, compress }
+            }
+        }
+        kind::HELLO_SHARD => {
+            let compress = hello_flags(&mut p)?;
+            let shard_id = p.u64()? as usize;
+            let plan = match p.u8()? {
+                0 => None,
+                1 => Some(plan_payload(&mut p)?),
+                other => {
+                    return Err(
+                        FrameError::Malformed(format!("bad shard plan flag {other}")).into()
+                    )
+                }
+            };
+            let token = hello_token(&mut p)?;
+            Request::HelloShard { shard_id, plan, token, compress }
+        }
+        kind::ROWS => {
+            let rest = p.remaining();
+            if rest % 8 != 0 {
+                let e = FrameError::Malformed(format!("index run of {rest} bytes not 8-aligned"));
+                return Err(e.into());
+            }
+            Request::Rows { indices: p.indices(rest / 8)? }
+        }
         kind::EVAL_SETS => {
             let count = p.count(8)?; // every set carries at least its length
             let mut sets = Vec::with_capacity(count);
@@ -530,6 +739,22 @@ pub fn decode_reply(kind: u8, payload: &[u8]) -> Result<Reply> {
         kind::ACK => Reply::Ack,
         kind::FLOAT => Reply::Float(p.f32()?),
         kind::STATE => Reply::State(state_payload(&mut p)?),
+        kind::WELCOME_SHARD => {
+            let shard_id = p.u64()? as usize;
+            let plan = plan_payload(&mut p)?;
+            let n = p.count(4)?; // init_dmin alone needs 4n bytes
+            let d = p.u64()? as usize;
+            let l0 = p.f64()?;
+            let name_len = p.count(1)?;
+            let name = String::from_utf8(p.take(name_len)?.to_vec())
+                .map_err(|_| Error::from(FrameError::Malformed("name is not utf-8".into())))?;
+            let init_dmin = p.f32s(n)?;
+            let elems = n.checked_mul(d).ok_or_else(|| {
+                Error::from(FrameError::Malformed(format!("n·d overflow: {n}·{d}")))
+            })?;
+            let rows = p.f32s(elems)?;
+            Reply::WelcomeShard { shard_id, plan, n, d, l0, name, init_dmin, rows }
+        }
         kind::ERROR => {
             let code = p.u8()?;
             let msg = String::from_utf8_lossy(p.take(p.remaining())?).into_owned();
@@ -542,14 +767,150 @@ pub fn decode_reply(kind: u8, payload: &[u8]) -> Result<Reply> {
 }
 
 // ---------------------------------------------------------------------
+// payload compression (RLE / zero suppression)
+
+/// Shortest zero run worth a run op: a run op costs 5 bytes (tag +
+/// u32 count) and breaking a literal costs another 5, so runs shorter
+/// than this stay literal.
+const ZERO_RUN_MIN: usize = 12;
+
+fn rle_put_literal(out: &mut Vec<u8>, lit: &[u8]) {
+    for chunk in lit.chunks(u32::MAX as usize) {
+        out.push(1);
+        out.extend_from_slice(&(chunk.len() as u32).to_le_bytes());
+        out.extend_from_slice(chunk);
+    }
+}
+
+/// Zero-suppressing run-length encoding: a sequence of ops, each
+/// `0x00 + u32 count` (that many zero bytes) or `0x01 + u32 count +
+/// count literal bytes`. Built for the `Welcome` mirrors, where
+/// sparse/padded datasets and fresh dmin buffers (`f32` zeros) are
+/// long zero runs; incompressible data costs 5 bytes per 4 GiB of
+/// literals, and [`maybe_compress_frame`] never ships a losing trade.
+pub fn rle_compress(data: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(64);
+    let mut lit_start = 0usize;
+    let mut i = 0usize;
+    while i < data.len() {
+        if data[i] == 0 {
+            let run_start = i;
+            while i < data.len() && data[i] == 0 {
+                i += 1;
+            }
+            if i - run_start >= ZERO_RUN_MIN {
+                rle_put_literal(&mut out, &data[lit_start..run_start]);
+                let mut run = i - run_start;
+                while run > 0 {
+                    let take = run.min(u32::MAX as usize);
+                    out.push(0);
+                    out.extend_from_slice(&(take as u32).to_le_bytes());
+                    run -= take;
+                }
+                lit_start = i;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    rle_put_literal(&mut out, &data[lit_start..]);
+    out
+}
+
+/// Inflate an [`rle_compress`]ed buffer. Strict: a truncated op, an
+/// unknown tag or an empty count is [`FrameError::Malformed`], and the
+/// inflated size is capped at `max_out` **before** each extension, so a
+/// hostile 5-byte frame cannot balloon into an unbounded allocation.
+pub fn rle_decompress(data: &[u8], max_out: u64) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < data.len() {
+        if data.len() - i < 5 {
+            return Err(FrameError::Malformed(format!(
+                "truncated rle op: {} trailing bytes",
+                data.len() - i
+            ))
+            .into());
+        }
+        let tag = data[i];
+        let count =
+            u32::from_le_bytes(data[i + 1..i + 5].try_into().expect("4 bytes")) as usize;
+        i += 5;
+        if count == 0 {
+            return Err(FrameError::Malformed("empty rle op".into()).into());
+        }
+        let new_len = out.len() as u64 + count as u64;
+        if new_len > max_out {
+            return Err(FrameError::Oversized { len: new_len, max: max_out }.into());
+        }
+        match tag {
+            0 => out.resize(out.len() + count, 0),
+            1 => {
+                if data.len() - i < count {
+                    return Err(FrameError::Malformed(format!(
+                        "rle literal of {count} bytes, {} left",
+                        data.len() - i
+                    ))
+                    .into());
+                }
+                out.extend_from_slice(&data[i..i + count]);
+                i += count;
+            }
+            other => {
+                return Err(FrameError::Malformed(format!("bad rle tag 0x{other:02x}")).into())
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Re-frame an encoded frame with an RLE-compressed payload **iff**
+/// that shrinks it; otherwise the frame is returned untouched. The
+/// compressed frame sets [`FLAG_COMPRESSED`] in the header's reserved
+/// byte and [`read_frame`] inflates it transparently on the other end.
+pub fn maybe_compress_frame(frame: Vec<u8>) -> Vec<u8> {
+    let packed = rle_compress(&frame[HEADER_LEN..]);
+    if packed.len() >= frame.len() - HEADER_LEN {
+        return frame;
+    }
+    let mut out = Vec::with_capacity(HEADER_LEN + packed.len());
+    out.extend_from_slice(&frame[..HEADER_LEN]);
+    out[6] |= FLAG_COMPRESSED;
+    out[8..16].copy_from_slice(&(packed.len() as u64).to_le_bytes());
+    out.extend_from_slice(&packed);
+    out
+}
+
+// ---------------------------------------------------------------------
 // stream framing
+
+/// One frame as read off the stream: decoded kind + (inflated) payload
+/// plus the encoded size actually transferred — the number the
+/// transport byte counters (`net_rx`/`net_tx`, client `rx_bytes`) must
+/// account, which differs from `HEADER_LEN + payload.len()` exactly
+/// when the frame was compressed.
+#[derive(Debug)]
+pub struct RawFrame {
+    /// Header kind byte.
+    pub kind: u8,
+    /// Message payload, inflated if the frame was compressed.
+    pub payload: Vec<u8>,
+    /// Encoded bytes read off the stream (header included).
+    pub wire_len: usize,
+}
 
 /// Read one frame off a blocking stream. Returns `Ok(None)` on a clean
 /// EOF **at a frame boundary** (the peer hung up between messages);
 /// EOF inside a header or payload is [`FrameError::Truncated`]. The
 /// header's magic, version and length prefix are validated before the
-/// payload is allocated.
+/// payload is allocated; a [`FLAG_COMPRESSED`] payload is inflated
+/// (its inflated size held to [`MAX_PAYLOAD`]) before being returned.
 pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<(u8, Vec<u8>)>> {
+    Ok(read_frame_sized(r)?.map(|f| (f.kind, f.payload)))
+}
+
+/// [`read_frame`] plus transport byte accounting — see [`RawFrame`].
+pub fn read_frame_sized<R: Read>(r: &mut R) -> Result<Option<RawFrame>> {
     let mut head = [0u8; HEADER_LEN];
     let mut got = 0usize;
     while got < HEADER_LEN {
@@ -572,6 +933,10 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<(u8, Vec<u8>)>> {
         return Err(FrameError::BadVersion { got: head[4] }.into());
     }
     let kind = head[5];
+    let flags = head[6];
+    if flags & !FLAG_COMPRESSED != 0 {
+        return Err(FrameError::Malformed(format!("bad header flags 0x{flags:02x}")).into());
+    }
     let len = u64::from_le_bytes(head[8..16].try_into().expect("8 bytes"));
     if len > MAX_PAYLOAD {
         return Err(FrameError::Oversized { len, max: MAX_PAYLOAD }.into());
@@ -588,7 +953,11 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<(u8, Vec<u8>)>> {
             Err(e) => return Err(e.into()),
         }
     }
-    Ok(Some((kind, payload)))
+    let wire_len = HEADER_LEN + payload.len();
+    if flags & FLAG_COMPRESSED != 0 {
+        payload = rle_decompress(&payload, MAX_PAYLOAD)?;
+    }
+    Ok(Some(RawFrame { kind, payload, wire_len }))
 }
 
 #[cfg(test)]
@@ -612,9 +981,36 @@ mod tests {
         DminState { dmin: vec![0.5, 0.0, 3.25, f32::MIN_POSITIVE], exemplars: vec![2, 0] }
     }
 
+    fn plan(n: usize, shards: usize, layout: ShardLayout) -> ShardPlan {
+        ShardPlan::new(n, shards, layout).unwrap()
+    }
+
     #[test]
     fn every_request_variant_roundtrips() {
-        roundtrip_request(Request::Hello);
+        roundtrip_request(Request::hello());
+        roundtrip_request(Request::Hello { token: Some("s3cret".into()), compress: false });
+        roundtrip_request(Request::Hello { token: None, compress: true });
+        roundtrip_request(Request::Hello { token: Some("s3cret".into()), compress: true });
+        roundtrip_request(Request::HelloShard {
+            shard_id: 2,
+            plan: Some(plan(100, 3, ShardLayout::Contiguous)),
+            token: Some("s3cret".into()),
+            compress: true,
+        });
+        roundtrip_request(Request::HelloShard {
+            shard_id: 0,
+            plan: None,
+            token: None,
+            compress: false,
+        });
+        roundtrip_request(Request::HelloShard {
+            shard_id: 1,
+            plan: Some(plan(7, 2, ShardLayout::Strided)),
+            token: None,
+            compress: false,
+        });
+        roundtrip_request(Request::Rows { indices: vec![0, 5, 5, usize::MAX >> 1] });
+        roundtrip_request(Request::Rows { indices: vec![] });
         roundtrip_request(Request::EvalSets { sets: vec![vec![0, 7, 3], vec![], vec![9]] });
         roundtrip_request(Request::Open { seed: None });
         roundtrip_request(Request::Open { seed: Some((state(), 123.625)) });
@@ -643,7 +1039,41 @@ mod tests {
         roundtrip_reply(Reply::Ack);
         roundtrip_reply(Reply::Float(-0.125));
         roundtrip_reply(Reply::State(state()));
+        roundtrip_reply(Reply::WelcomeShard {
+            shard_id: 1,
+            plan: plan(9, 3, ShardLayout::Strided),
+            n: 3,
+            d: 2,
+            l0: 5.5,
+            name: "service[cpu-st/sq_euclidean/f32]".into(),
+            init_dmin: vec![1.0, 2.0, 3.0],
+            rows: vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0],
+        });
         roundtrip_reply(Reply::Error(1, "index 99 out of range".into()));
+        roundtrip_reply(Reply::Error(4, "token mismatch".into()));
+    }
+
+    /// The auth error round-trips through the typed error codes so a
+    /// rejected client sees `Error::Unauthorized`, not a generic
+    /// service failure (the shard layer must not retry it).
+    #[test]
+    fn unauthorized_maps_through_error_code_4() {
+        let rep = Reply::from_error(&Error::Unauthorized("token mismatch".into()));
+        assert_eq!(rep, Reply::Error(4, "token mismatch".into()));
+        match Reply::into_error(4, "token mismatch".into()) {
+            Error::Unauthorized(m) => assert_eq!(m, "token mismatch"),
+            other => panic!("wrong error: {other}"),
+        }
+    }
+
+    /// The default handshake is byte-for-byte the PR 5 empty-payload
+    /// frame: old servers keep accepting new default clients.
+    #[test]
+    fn default_hello_keeps_the_empty_payload_wire_form() {
+        let bytes = encode_request(&Request::hello());
+        assert_eq!(bytes.len(), HEADER_LEN);
+        // an empty payload decodes back to the defaults
+        assert_eq!(decode_request(kind::HELLO, &[]).unwrap(), Request::hello());
     }
 
     /// The hot-path frames are byte-for-byte the modeled wire cost:
@@ -676,13 +1106,13 @@ mod tests {
 
     #[test]
     fn bad_magic_and_version_are_rejected() {
-        let mut bytes = encode_request(&Request::Hello);
+        let mut bytes = encode_request(&Request::hello());
         bytes[0] = b'H';
         assert!(matches!(
             read_frame(&mut &bytes[..]).unwrap_err(),
             Error::Frame(FrameError::BadMagic { .. })
         ));
-        let mut bytes = encode_request(&Request::Hello);
+        let mut bytes = encode_request(&Request::hello());
         bytes[4] = VERSION + 1;
         assert!(matches!(
             read_frame(&mut &bytes[..]).unwrap_err(),
@@ -692,7 +1122,7 @@ mod tests {
 
     #[test]
     fn oversized_length_is_rejected_before_allocation() {
-        let mut bytes = encode_request(&Request::Hello);
+        let mut bytes = encode_request(&Request::hello());
         bytes[8..16].copy_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
         assert!(matches!(
             read_frame(&mut &bytes[..]).unwrap_err(),
@@ -753,5 +1183,65 @@ mod tests {
         let (k2, p2) = read_frame(&mut r).unwrap().unwrap();
         assert!(matches!(decode_request(k2, &p2).unwrap(), Request::Marginals { .. }));
         assert!(read_frame(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn rle_roundtrips_zero_heavy_and_incompressible_buffers() {
+        let mut zeroish = vec![0u8; 4096];
+        zeroish[17] = 3;
+        zeroish[901..933].copy_from_slice(&[7u8; 32]);
+        let packed = rle_compress(&zeroish);
+        assert!(packed.len() < zeroish.len() / 8, "packed to {} bytes", packed.len());
+        assert_eq!(rle_decompress(&packed, MAX_PAYLOAD).unwrap(), zeroish);
+
+        // incompressible data round-trips too (one literal op)
+        let noise: Vec<u8> = (0..257u32).map(|i| (i.wrapping_mul(167) % 255 + 1) as u8).collect();
+        let packed = rle_compress(&noise);
+        assert_eq!(rle_decompress(&packed, MAX_PAYLOAD).unwrap(), noise);
+
+        assert_eq!(rle_decompress(&rle_compress(&[]), MAX_PAYLOAD).unwrap(), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn hostile_rle_is_rejected() {
+        // truncated op header
+        assert!(rle_decompress(&[0, 1, 0], MAX_PAYLOAD).is_err());
+        // literal announcing more bytes than present
+        assert!(rle_decompress(&[1, 9, 0, 0, 0, 42], MAX_PAYLOAD).is_err());
+        // unknown tag
+        assert!(rle_decompress(&[2, 1, 0, 0, 0, 0], MAX_PAYLOAD).is_err());
+        // empty op
+        assert!(rle_decompress(&[0, 0, 0, 0, 0], MAX_PAYLOAD).is_err());
+        // a 10-byte frame must not balloon past the inflated-size cap
+        let bomb = [0u8, 255, 255, 255, 255, 0, 255, 255, 255, 255];
+        let e = rle_decompress(&bomb, 1 << 20).unwrap_err();
+        assert!(matches!(e, Error::Frame(FrameError::Oversized { .. })), "{e}");
+    }
+
+    /// A compressed `Welcome` mirror shrinks on the wire and inflates
+    /// transparently in `read_frame` back to the exact reply; the
+    /// reported `wire_len` is the compressed transfer size.
+    #[test]
+    fn compressed_welcome_frames_roundtrip_and_shrink() {
+        let rep = Reply::Welcome {
+            n: 64,
+            d: 8,
+            l0: 0.0,
+            name: "svc".into(),
+            init_dmin: vec![0.0; 64],
+            rows: vec![0.0; 64 * 8],
+        };
+        let plain = encode_reply(&rep);
+        let packed = maybe_compress_frame(plain.clone());
+        assert!(packed.len() < plain.len() / 4, "{} vs {}", packed.len(), plain.len());
+        assert_eq!(packed[6] & FLAG_COMPRESSED, FLAG_COMPRESSED);
+        let f = read_frame_sized(&mut &packed[..]).unwrap().expect("one frame");
+        assert_eq!(f.wire_len, packed.len());
+        assert_eq!(decode_reply(f.kind, &f.payload).unwrap(), rep);
+
+        // a frame compression cannot shrink ships untouched, flag clear
+        let small = encode_reply(&Reply::Sid(0x0101010101010101));
+        let same = maybe_compress_frame(small.clone());
+        assert_eq!(same, small);
     }
 }

@@ -42,15 +42,19 @@
 //! | 0      | 4    | magic `EXCL`                               |
 //! | 4      | 1    | protocol version (1)                       |
 //! | 5      | 1    | message kind ([`codec::kind`])             |
-//! | 6      | 2    | reserved (0)                               |
+//! | 6      | 1    | flags (bit 0: RLE-compressed payload)      |
+//! | 7      | 1    | reserved (0)                               |
 //! | 8      | 8    | payload length                             |
 //!
 //! Payloads (u64 ids/indices/counts, f32 values, f64 constants):
 //!
 //! | message      | payload                                              |
 //! |--------------|------------------------------------------------------|
-//! | `Hello`      | —                                                    |
+//! | `Hello`      | — (or flags(u8), token…)                             |
+//! | `HelloShard` | flags(u8), shard_id, plan_flag(u8) [, plan], token…  |
+//! | `Rows`       | idx… (count = len/8)                                 |
 //! | `Welcome`    | n, d, l0, name_len, name, dmin[n], rows[n·d]         |
+//! | `WelcomeShard` | shard_id, plan, n, d, l0, name_len, name, dmin[n], rows[n·d] |
 //! | `EvalSets`   | count, then per set: len, idx…                       |
 //! | `Open`       | flag(u8); seeded: l0, dmin_len, dmin…, ex_len, ex…   |
 //! | `Marginals`  | sid, idx… (count = (len−8)/8)                        |
@@ -63,13 +67,16 @@
 //! | `State`      | dmin_len, dmin…, ex_len, ex…                         |
 //! | `Error`      | code(u8), utf-8 message                              |
 //!
-//! The hot-path frames (`Marginals`, `CommitMany`, `Floats`, `Ack`)
+//! where `plan` is `n_global(u64), shards(u64), layout(u8)`. The
+//! hot-path frames (`Marginals`, `CommitMany`, `Floats`, `Ack`)
 //! carry no count fields, so their encoded size equals the byte model
 //! in [`crate::coordinator::ServiceMetrics::wire`] exactly — the codec
 //! tests and `tests/net_wire.rs` assert the equality. `Welcome` ships
 //! the dataset mirror once per connection (the out-of-process analogue
 //! of [`crate::coordinator::ServiceHandle`] cloning the dataset); all
-//! per-round traffic after it is index-only.
+//! per-round traffic after it is index-only. A `HelloShard` handshake
+//! (see [`crate::shard`]) shrinks that mirror to the connection's shard
+//! — O(n·d/N) — and `net.compress` RLE-compresses what remains.
 //!
 //! # Quick start (two terminals)
 //!
@@ -96,6 +103,7 @@ use std::io::{Read, Write};
 use std::path::PathBuf;
 use std::time::Duration;
 
+use crate::shard::ShardPlan;
 use crate::{Error, Result};
 
 /// A transport endpoint: where a server listens / a client dials.
@@ -151,13 +159,36 @@ pub struct NetConfig {
     /// observe shutdown. Purely a responsiveness knob — no client
     /// request ever times out because of it.
     pub poll: Duration,
+    /// Required auth token (`net.token` / `EXEMCL_TOKEN`): when set,
+    /// every connection's first request must be a handshake carrying
+    /// this exact token; anything else is answered with a typed
+    /// unauthorized error frame and dropped.
+    pub token: Option<String>,
+    /// Offer RLE compression for the one-time `Welcome` mirrors
+    /// (`net.compress`). Only takes effect for clients that advertise
+    /// acceptance in their handshake, and only when compression
+    /// actually shrinks the frame.
+    pub compress: bool,
+    /// Serve as one shard of a partitioned ground set: `(shard_id,
+    /// plan)`. The served dataset must already be the shard-local
+    /// gather (`plan.shard_len(shard_id)` rows); plain `Hello` clients
+    /// are rejected so a full-mirror client can't silently optimize
+    /// over a fraction of the ground set.
+    pub shard: Option<(usize, ShardPlan)>,
 }
 
 impl NetConfig {
-    /// Config with the default ceiling ([`DEFAULT_MAX_CONNS`]) and a
-    /// one-second poll.
+    /// Config with the default ceiling ([`DEFAULT_MAX_CONNS`]), a
+    /// one-second poll, no auth token, no compression, unsharded.
     pub fn new(listen: Listen) -> Self {
-        Self { listen, max_conns: DEFAULT_MAX_CONNS, poll: Duration::from_secs(1) }
+        Self {
+            listen,
+            max_conns: DEFAULT_MAX_CONNS,
+            poll: Duration::from_secs(1),
+            token: None,
+            compress: false,
+            shard: None,
+        }
     }
 
     /// Override the connection ceiling (min 1).
@@ -169,6 +200,24 @@ impl NetConfig {
     /// Override the shutdown-poll interval.
     pub fn with_poll(mut self, poll: Duration) -> Self {
         self.poll = poll.max(Duration::from_millis(1));
+        self
+    }
+
+    /// Require an auth token on every handshake (empty means "unset").
+    pub fn with_token(mut self, token: Option<String>) -> Self {
+        self.token = token.filter(|t| !t.is_empty());
+        self
+    }
+
+    /// Offer `Welcome` compression to clients that accept it.
+    pub fn with_compress(mut self, compress: bool) -> Self {
+        self.compress = compress;
+        self
+    }
+
+    /// Serve as shard `shard_id` of `plan`.
+    pub fn with_shard(mut self, shard_id: usize, plan: ShardPlan) -> Self {
+        self.shard = Some((shard_id, plan));
         self
     }
 }
@@ -274,5 +323,12 @@ mod tests {
             .with_poll(Duration::from_secs(0));
         assert_eq!(c.max_conns, 1);
         assert!(c.poll >= Duration::from_millis(1));
+        assert!(c.token.is_none() && !c.compress && c.shard.is_none());
+        // empty tokens mean "unset", never "require the empty string"
+        let c = c.with_token(Some(String::new()));
+        assert!(c.token.is_none());
+        let c = c.with_token(Some("t".into())).with_compress(true);
+        assert_eq!(c.token.as_deref(), Some("t"));
+        assert!(c.compress);
     }
 }

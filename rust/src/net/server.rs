@@ -80,8 +80,24 @@ impl NetServer {
     /// Bind the configured endpoint in front of an executor handle.
     /// TCP port 0 resolves to an ephemeral port; a **stale** UDS socket
     /// file (nothing accepting on it) is replaced, a live one is an
-    /// error.
+    /// error. A shard server's dataset must be exactly its shard of the
+    /// plan — a mis-gathered dataset is refused here, not discovered by
+    /// a confused cluster later.
     pub fn bind(handle: ServiceHandle, cfg: NetConfig) -> Result<Self> {
+        if let Some((shard_id, plan)) = &cfg.shard {
+            if *shard_id >= plan.shards() {
+                return Err(Error::InvalidArgument(format!(
+                    "shard id {shard_id} out of \"{plan}\""
+                )));
+            }
+            let want = plan.shard_len(*shard_id);
+            if handle.dataset().n() != want {
+                return Err(Error::InvalidArgument(format!(
+                    "shard {shard_id} of \"{plan}\" must serve {want} rows, dataset has {}",
+                    handle.dataset().n()
+                )));
+            }
+        }
         let (listener, bound, cleanup) = match &cfg.listen {
             Listen::Tcp(addr) => {
                 let l = std::net::TcpListener::bind(addr)?;
@@ -156,15 +172,16 @@ impl NetServer {
                         2,
                         format!("server at its {}-connection ceiling", self.cfg.max_conns),
                     );
-                    let _ = write_reply(&mut stream, &refusal, &self.stop, metrics);
+                    let _ = write_reply(&mut stream, &refusal, false, &self.stop, metrics);
                     continue; // dropping the stream closes it
                 }
                 live.fetch_add(1, Ordering::Relaxed);
                 metrics.conns_opened.add(1);
                 let handle = &self.handle;
+                let cfg = &self.cfg;
                 let stop: &AtomicBool = &self.stop;
                 scope.spawn(move || {
-                    let (rx, tx, frames) = handle_conn(stream, handle, stop);
+                    let (rx, tx, frames) = handle_conn(stream, handle, cfg, stop);
                     let metrics = handle.metrics();
                     live.fetch_sub(1, Ordering::Relaxed);
                     metrics.conns_closed.add(1);
@@ -271,6 +288,38 @@ impl Read for StopRead<'_> {
     }
 }
 
+/// The per-connection auth gate: a token-enforcing server accepts
+/// nothing before a handshake presenting the exact token — a mismatch
+/// (or any other verb while unauthenticated) is a typed
+/// [`Error::Unauthorized`], counted in `auth_rejected`, and the
+/// connection is dropped. Servers without a token admit everyone.
+fn auth_gate(
+    req: &Request,
+    cfg: &NetConfig,
+    authed: &mut bool,
+    metrics: &ServiceMetrics,
+) -> Result<()> {
+    match req {
+        Request::Hello { token, .. } | Request::HelloShard { token, .. } => {
+            if let Some(want) = &cfg.token {
+                if token.as_deref() != Some(want.as_str()) {
+                    metrics.auth_rejected.add(1);
+                    return Err(Error::Unauthorized(
+                        "handshake token missing or mismatched".into(),
+                    ));
+                }
+            }
+            *authed = true;
+            Ok(())
+        }
+        _ if !*authed => {
+            metrics.auth_rejected.add(1);
+            Err(Error::Unauthorized("authenticate with a handshake first".into()))
+        }
+        _ => Ok(()),
+    }
+}
+
 /// Serve one connection to completion. Returns `(rx_bytes, tx_bytes,
 /// frames)` — the per-connection transport accounting (also summed into
 /// [`ServiceMetrics::wire`]'s `net_rx`/`net_tx`). Dropping the session
@@ -278,39 +327,61 @@ impl Read for StopRead<'_> {
 fn handle_conn(
     mut stream: NetStream,
     handle: &ServiceHandle,
+    cfg: &NetConfig,
     stop: &AtomicBool,
 ) -> (u64, u64, u64) {
     let metrics = handle.metrics();
     let (mut rx_bytes, mut tx_bytes, mut frames) = (0u64, 0u64, 0u64);
     let mut sessions: HashMap<u64, RemoteSession<'_>> = HashMap::new();
+    let mut authed = cfg.token.is_none();
+    let mut compress_replies = false;
     loop {
-        let frame = codec::read_frame(&mut StopRead { inner: &mut stream, stop });
-        let (kind, payload) = match frame {
+        let frame = codec::read_frame_sized(&mut StopRead { inner: &mut stream, stop });
+        let frame = match frame {
             Ok(Some(f)) => f,
             Ok(None) => break, // peer hung up at a frame boundary
             Err(e) => {
                 // broken framing or shutdown: best-effort diagnosis,
                 // then drop the connection (the stream may be desynced)
-                if let Ok(n) = write_reply(&mut stream, &Reply::from_error(&e), stop, metrics) {
+                if let Ok(n) =
+                    write_reply(&mut stream, &Reply::from_error(&e), false, stop, metrics)
+                {
                     tx_bytes += n;
                 }
                 break;
             }
         };
-        let nread = (codec::HEADER_LEN + payload.len()) as u64;
+        let nread = frame.wire_len as u64;
         rx_bytes += nread;
         metrics.wire.net_rx.add(nread);
         frames += 1;
-        let reply = match codec::decode_request(kind, &payload) {
-            Ok(req) => serve_request(req, handle, &mut sessions),
+        let req = match codec::decode_request(frame.kind, &frame.payload) {
+            Ok(req) => req,
             Err(e) => {
-                if let Ok(n) = write_reply(&mut stream, &Reply::from_error(&e), stop, metrics) {
+                if let Ok(n) =
+                    write_reply(&mut stream, &Reply::from_error(&e), false, stop, metrics)
+                {
                     tx_bytes += n;
                 }
                 break;
             }
         };
-        match write_reply(&mut stream, &reply, stop, metrics) {
+        if let Err(e) = auth_gate(&req, cfg, &mut authed, metrics) {
+            if let Ok(n) = write_reply(&mut stream, &Reply::from_error(&e), false, stop, metrics)
+            {
+                tx_bytes += n;
+            }
+            break;
+        }
+        if let Request::Hello { compress, .. } | Request::HelloShard { compress, .. } = &req {
+            compress_replies = cfg.compress && *compress;
+        }
+        let reply = serve_request(req, handle, cfg, &mut sessions);
+        // only the one-time mirrors ever compress; the hot path keeps
+        // its exact byte-model framing
+        let compress = compress_replies
+            && matches!(reply, Reply::Welcome { .. } | Reply::WelcomeShard { .. });
+        match write_reply(&mut stream, &reply, compress, stop, metrics) {
             Ok(n) => tx_bytes += n,
             Err(_) => break,
         }
@@ -324,14 +395,20 @@ fn handle_conn(
 /// [`codec::MAX_PAYLOAD`] — degrades to a clear error frame instead of
 /// a frame every client must reject as hostile), the write retries
 /// through its timeout while watching the stop flag, and the bytes are
-/// counted into the transport metrics. Returns the bytes written.
+/// counted into the transport metrics. With `compress`, the payload is
+/// RLE-packed when that shrinks it (handshake mirrors only — the
+/// caller gates). Returns the bytes written.
 fn write_reply(
     stream: &mut NetStream,
     reply: &Reply,
+    compress: bool,
     stop: &AtomicBool,
     metrics: &ServiceMetrics,
 ) -> std::io::Result<u64> {
     let mut buf = codec::encode_reply(reply);
+    if compress {
+        buf = codec::maybe_compress_frame(buf);
+    }
     if (buf.len() - codec::HEADER_LEN) as u64 > codec::MAX_PAYLOAD {
         let err = Reply::Error(
             2,
@@ -391,6 +468,7 @@ fn write_all_stop(
 fn serve_request<'h>(
     req: Request,
     handle: &'h ServiceHandle,
+    cfg: &NetConfig,
     sessions: &mut HashMap<u64, RemoteSession<'h>>,
 ) -> Reply {
     fn ok_or<T>(r: Result<T>, f: impl FnOnce(T) -> Reply) -> Reply {
@@ -406,16 +484,70 @@ fn serve_request<'h>(
         )
     }
     match req {
-        Request::Hello => {
-            let ds = handle.dataset();
-            Reply::Welcome {
-                n: ds.n(),
-                d: ds.d(),
-                l0: handle.l0_sum(),
-                name: handle.name(),
-                init_dmin: handle.init_state().dmin,
-                rows: ds.flat().to_vec(),
+        // a shard server refuses the full-mirror handshake: a client
+        // that thinks it sees the whole ground set must not silently
+        // optimize over a fraction of it
+        Request::Hello { .. } => match &cfg.shard {
+            Some((shard_id, plan)) => Reply::Error(
+                1,
+                format!("this server serves shard {shard_id} of \"{plan}\"; shard handshake only"),
+            ),
+            None => {
+                let ds = handle.dataset();
+                Reply::Welcome {
+                    n: ds.n(),
+                    d: ds.d(),
+                    l0: handle.l0_sum(),
+                    name: handle.name(),
+                    init_dmin: handle.init_state().dmin,
+                    rows: ds.flat().to_vec(),
+                }
             }
+        },
+        Request::HelloShard { shard_id, plan, .. } => match &cfg.shard {
+            None => Reply::Error(
+                1,
+                "this server carries the full ground set, not a shard; plain handshake only"
+                    .to_string(),
+            ),
+            Some((srv_id, srv_plan)) => {
+                if shard_id != *srv_id {
+                    return Reply::Error(
+                        1,
+                        format!("this server is shard {srv_id}, not shard {shard_id}"),
+                    );
+                }
+                if let Some(want) = &plan {
+                    if want != srv_plan {
+                        return Reply::Error(
+                            1,
+                            format!("this server serves \"{srv_plan}\", not \"{want}\""),
+                        );
+                    }
+                }
+                let ds = handle.dataset();
+                Reply::WelcomeShard {
+                    shard_id,
+                    plan: srv_plan.clone(),
+                    n: ds.n(),
+                    d: ds.d(),
+                    l0: handle.l0_sum(),
+                    name: handle.name(),
+                    init_dmin: handle.init_state().dmin,
+                    rows: ds.flat().to_vec(),
+                }
+            }
+        },
+        Request::Rows { indices } => {
+            let ds = handle.dataset();
+            let mut out = Vec::with_capacity(indices.len() * ds.d());
+            for &i in &indices {
+                if i >= ds.n() {
+                    return Reply::Error(1, format!("row {i} out of {} rows", ds.n()));
+                }
+                out.extend_from_slice(ds.row(i));
+            }
+            Reply::Floats(out)
         }
         Request::EvalSets { sets } => ok_or(handle.eval_sets(&sets), Reply::Floats),
         Request::Open { seed } => {

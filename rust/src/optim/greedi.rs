@@ -286,6 +286,17 @@ impl Optimizer for GreeDi {
         Ok(result)
     }
 
+    /// Sharded GreeDi over a multi-server cluster: the
+    /// [`crate::shard::ShardPlan`] *is* the partition, so the `workers`
+    /// and `seed` knobs are ignored — each server's resident shard runs
+    /// round 1 in place (no data placement to randomize), and round 2
+    /// runs locally over the fetched candidate rows. Straggler and
+    /// shard-loss policy (degrade, retry, exclude) lives in
+    /// [`crate::shard::ClusterEngine::greedi`].
+    fn run_cluster(&self, cluster: &crate::shard::ClusterEngine) -> Result<OptimResult> {
+        Ok(cluster.greedi(self.k)?.result)
+    }
+
     fn name(&self) -> String {
         format!("greedi(k={},workers={})", self.k, self.workers)
     }

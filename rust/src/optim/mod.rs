@@ -65,6 +65,19 @@ pub trait Optimizer {
         self.run(session)
     }
 
+    /// Distributed entry point for [`crate::engine::Backend::Cluster`]:
+    /// run against a sharded ground set through a
+    /// [`crate::shard::ClusterEngine`]. Only optimizers with a
+    /// partition-parallel structure can — [`GreeDi`] overrides this
+    /// with the two-round shard protocol; everything else is a typed
+    /// error rather than a silently-wrong single-shard run.
+    fn run_cluster(&self, _cluster: &crate::shard::ClusterEngine) -> Result<OptimResult> {
+        Err(crate::Error::InvalidArgument(format!(
+            "{} cannot run on a sharded cluster; only GreeDi has a distributed form",
+            self.name()
+        )))
+    }
+
     /// Human-readable name for logs and benches.
     fn name(&self) -> String;
 }

@@ -1,0 +1,599 @@
+//! The driving side of the shard subsystem: per-shard clients with
+//! global↔local index remapping, and the [`ClusterEngine`] that runs
+//! two-round GreeDi across N shard servers (see the module doc in
+//! [`crate::shard`] for the protocol diagram and guarantee discussion).
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::coordinator::Counter;
+use crate::data::Dataset;
+use crate::engine::{Backend, Engine, Session};
+use crate::net::client::ConnectOptions;
+use crate::net::{Listen, NetClient};
+use crate::optim::{Greedy, OptimResult, Optimizer};
+use crate::shard::{ShardLayout, ShardPlan};
+use crate::{log_info, log_warn};
+use crate::{Error, Result};
+
+/// Default per-shard deadline (`shard.timeout_secs`).
+pub const DEFAULT_SHARD_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Default dead-shard retry budget before exclusion (`shard.retries`).
+pub const DEFAULT_SHARD_RETRIES: usize = 2;
+
+/// Default initial retry backoff (`shard.backoff_ms`); doubles per
+/// attempt.
+pub const DEFAULT_SHARD_BACKOFF: Duration = Duration::from_millis(250);
+
+/// Cluster-driver knobs (the `shard.*` / `net.*` config keys on the
+/// *solve* side).
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    /// Per-shard deadline for every blocking wire operation, enforced
+    /// as socket read/write timeouts — a straggling shard fails its
+    /// round instead of pinning it (`shard.timeout_secs`).
+    pub timeout: Duration,
+    /// How many times a dead shard is re-dialed before it is excluded
+    /// from the run (`shard.retries`).
+    pub retries: usize,
+    /// Initial backoff before a retry, doubled per attempt
+    /// (`shard.backoff_ms`).
+    pub backoff: Duration,
+    /// Auth token sent in every handshake (`net.token` /
+    /// `EXEMCL_TOKEN`).
+    pub token: Option<String>,
+    /// Advertise acceptance of RLE-compressed shard mirrors
+    /// (`net.compress`).
+    pub compress: bool,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            timeout: DEFAULT_SHARD_TIMEOUT,
+            retries: DEFAULT_SHARD_RETRIES,
+            backoff: DEFAULT_SHARD_BACKOFF,
+            token: None,
+            compress: false,
+        }
+    }
+}
+
+/// Driver-side counters for the failure-handling paths — the cluster
+/// analogue of [`crate::coordinator::ServiceMetrics`], readable while a
+/// run is in flight.
+#[derive(Debug, Default)]
+pub struct ClusterMetrics {
+    /// Shards excluded from a run after exhausting their retries. A
+    /// non-zero count means the result is degraded (see the module doc).
+    pub shards_lost: Counter,
+    /// Reconnect attempts made against dead shards.
+    pub shard_retries: Counter,
+    /// Handshake (`WelcomeShard`) bytes received, summed over every
+    /// connect — the number the O(n/N) byte-accounting tests bound.
+    pub welcome_bytes: Counter,
+}
+
+/// One shard server's connection plus the global↔local remap: the
+/// optimizer-facing layers speak **global** indices, the wire speaks the
+/// shard's local `0..shard_len`, and this boundary translates.
+pub struct ShardClient {
+    client: NetClient,
+    shard_id: usize,
+    plan: ShardPlan,
+}
+
+impl ShardClient {
+    /// Dial a shard server and perform the `HelloShard` handshake.
+    /// `expect = None` discovers the server's plan (the engine probes
+    /// its first reachable shard this way); `Some` asserts it — a
+    /// mismatched server is rejected, not silently adopted.
+    pub fn connect(
+        addr: &Listen,
+        shard_id: usize,
+        expect: Option<&ShardPlan>,
+        cfg: &ClusterConfig,
+    ) -> Result<ShardClient> {
+        let opts = ConnectOptions {
+            token: cfg.token.clone(),
+            compress: cfg.compress,
+            shard: Some((shard_id, expect.cloned())),
+            timeout: Some(cfg.timeout),
+        };
+        let client = NetClient::connect_with(addr, &opts)?;
+        let plan = match client.shard() {
+            Some((sid, plan)) if *sid == shard_id => plan.clone(),
+            _ => {
+                return Err(Error::Service(
+                    "server answered a shard handshake without a shard identity".into(),
+                ))
+            }
+        };
+        Ok(ShardClient { client, shard_id, plan })
+    }
+
+    /// The shard this connection is bound to.
+    pub fn shard_id(&self) -> usize {
+        self.shard_id
+    }
+
+    /// The partition the server is serving under.
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    /// The underlying framed connection (sessions, byte counters).
+    pub fn net(&self) -> &NetClient {
+        &self.client
+    }
+
+    /// Global index of this shard's local row `l`.
+    pub fn to_global(&self, l: usize) -> Result<usize> {
+        self.plan.global_index(self.shard_id, l).ok_or_else(|| {
+            Error::InvalidArgument(format!(
+                "local row {l} is out of shard {}'s {} rows",
+                self.shard_id,
+                self.plan.shard_len(self.shard_id)
+            ))
+        })
+    }
+
+    /// Shard-local index of global row `g`; a row this shard does not
+    /// own is a typed error, never a silent wrong row.
+    pub fn to_local(&self, g: usize) -> Result<usize> {
+        self.plan.local_index(self.shard_id, g).ok_or_else(|| {
+            Error::InvalidArgument(format!(
+                "global row {g} is not owned by shard {}",
+                self.shard_id
+            ))
+        })
+    }
+
+    /// Fetch raw rows by **global** index (all owned by this shard):
+    /// the remap happens here, the wire carries local indices, and the
+    /// reply is `|globals|·d` floats in request order.
+    pub fn rows_global(&self, globals: &[usize]) -> Result<Vec<f32>> {
+        let locals = globals.iter().map(|&g| self.to_local(g)).collect::<Result<Vec<_>>>()?;
+        self.client.rows(&locals)
+    }
+}
+
+/// What one cluster GreeDi run produced, beyond the optimizer result.
+#[derive(Clone, Debug)]
+pub struct ClusterRun {
+    /// The selection: exemplars in **global** indices, value/curve of
+    /// the round-2 reducer (f over the union pool — see the module doc).
+    pub result: OptimResult,
+    /// Shards excluded from this run (empty = full-strength guarantee).
+    pub lost: Vec<usize>,
+    /// The round-2 input: the union candidate pool in ascending global
+    /// order — the byte-identical quantity the equivalence tests compare
+    /// against [`single_box_reference`].
+    pub pool: Vec<usize>,
+}
+
+/// A connected shard cluster: one [`ShardClient`] per shard (behind a
+/// mutex so round-1 worker threads and the retry path share them), the
+/// agreed [`ShardPlan`], and the failure-handling knobs and counters.
+pub struct ClusterEngine {
+    addrs: Vec<Listen>,
+    plan: ShardPlan,
+    d: usize,
+    cfg: ClusterConfig,
+    metrics: ClusterMetrics,
+    shards: Vec<Mutex<Option<ShardClient>>>,
+}
+
+impl ClusterEngine {
+    /// Dial every shard server and agree on the plan: the first
+    /// reachable shard's plan is discovered, every other server must
+    /// match it, and `plan.shards()` must equal the address count. A
+    /// server unreachable at connect is retried with backoff and then
+    /// left for the per-round retry path (the run proceeds degraded);
+    /// only an all-dead cluster or a rejected auth token aborts.
+    pub fn connect(addrs: &[Listen], cfg: ClusterConfig) -> Result<ClusterEngine> {
+        if addrs.is_empty() {
+            return Err(Error::InvalidArgument("a cluster needs at least one shard address".into()));
+        }
+        let metrics = ClusterMetrics::default();
+        let mut plan: Option<ShardPlan> = None;
+        let mut clients: Vec<Option<ShardClient>> = Vec::with_capacity(addrs.len());
+        for (s, addr) in addrs.iter().enumerate() {
+            match dial(addr, s, plan.as_ref(), &cfg, &metrics) {
+                Ok(c) => {
+                    if plan.is_none() {
+                        let p = c.plan().clone();
+                        if p.shards() != addrs.len() {
+                            return Err(Error::InvalidArgument(format!(
+                                "server at {addr} serves a {}-shard plan but {} addresses \
+                                 were given",
+                                p.shards(),
+                                addrs.len()
+                            )));
+                        }
+                        plan = Some(p);
+                    }
+                    clients.push(Some(c));
+                }
+                // a rejected token is a configuration error, not a
+                // degradable shard failure — fail the whole job
+                Err(e @ Error::Unauthorized(_)) => return Err(e),
+                Err(e) => {
+                    log_warn!("shard {s} at {addr} unreachable at connect: {e}");
+                    clients.push(None);
+                }
+            }
+        }
+        let plan = plan
+            .ok_or_else(|| Error::Service("no shard server answered the handshake".into()))?;
+        let d = clients
+            .iter()
+            .flatten()
+            .next()
+            .map(|c| c.net().dataset().d())
+            .expect("plan discovery implies at least one live client");
+        log_info!("cluster up: {plan}, d = {d}, {} live shards", clients.iter().flatten().count());
+        Ok(ClusterEngine {
+            addrs: addrs.to_vec(),
+            plan,
+            d,
+            cfg,
+            metrics,
+            shards: clients.into_iter().map(Mutex::new).collect(),
+        })
+    }
+
+    /// The agreed partition.
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    /// Dimensionality of the sharded ground set.
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// The failure-handling counters.
+    pub fn metrics(&self) -> &ClusterMetrics {
+        &self.metrics
+    }
+
+    /// Descriptive name for logs and the CLI banner.
+    pub fn name(&self) -> String {
+        format!("cluster[{} shards, n = {}]", self.plan.shards(), self.plan.n())
+    }
+
+    fn slot(&self, s: usize) -> std::sync::MutexGuard<'_, Option<ShardClient>> {
+        self.shards[s].lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Run `op` against shard `s`, re-dialing with exponential backoff
+    /// when the shard is dead, up to the retry budget. `None` means the
+    /// shard is excluded (its slot is left empty); a rejected auth
+    /// token aborts the caller instead ([`Error::Unauthorized`] is
+    /// never retried).
+    fn with_shard<T>(
+        &self,
+        s: usize,
+        op: impl Fn(&ShardClient) -> Result<T>,
+    ) -> Result<Option<T>> {
+        let mut slot = self.slot(s);
+        for attempt in 0..=self.cfg.retries {
+            if slot.is_none() {
+                if attempt > 0 {
+                    self.metrics.shard_retries.add(1);
+                    std::thread::sleep(backoff_for(self.cfg.backoff, attempt));
+                }
+                match ShardClient::connect(&self.addrs[s], s, Some(&self.plan), &self.cfg) {
+                    Ok(c) => {
+                        self.metrics.welcome_bytes.add(c.net().rx_bytes());
+                        *slot = Some(c);
+                    }
+                    Err(e @ Error::Unauthorized(_)) => return Err(e),
+                    Err(e) => {
+                        log_warn!("shard {s} re-dial attempt {attempt} failed: {e}");
+                        continue;
+                    }
+                }
+            }
+            let client = slot.as_ref().expect("slot filled above");
+            match op(client) {
+                Ok(v) => return Ok(Some(v)),
+                Err(e @ Error::Unauthorized(_)) => return Err(e),
+                Err(e) => {
+                    log_warn!("shard {s} failed (attempt {attempt}): {e}");
+                    *slot = None; // the connection may be desynced; re-dial or exclude
+                }
+            }
+        }
+        Ok(None)
+    }
+
+    /// Round 1 on shard `s`: plain [`Greedy`] over the shard mirror
+    /// through a fresh server session (the mirror *is* the partition),
+    /// mapped back to global indices.
+    fn round1(&self, s: usize, k: usize) -> Result<Option<(Vec<usize>, u64)>> {
+        self.with_shard(s, |client| {
+            let mut session = Session::over_net(client.net())?;
+            let res = Greedy::new(k).run(&mut session)?;
+            session.close()?;
+            let globals =
+                res.exemplars.iter().map(|&l| client.to_global(l)).collect::<Result<Vec<_>>>()?;
+            Ok((globals, res.evaluations))
+        })
+    }
+
+    /// Two-round distributed GreeDi: parallel shard-local greedy, union
+    /// the ≤ N·k candidates, fetch their rows from their owners, reducer
+    /// greedy over the pool. Shards lost along the way degrade the run
+    /// (logged + counted) instead of failing it; see the module doc.
+    pub fn greedi(&self, k: usize) -> Result<ClusterRun> {
+        if k == 0 {
+            return Err(Error::InvalidArgument("k must be positive".into()));
+        }
+        let shards = self.plan.shards();
+
+        // round 1: one worker per shard, independent failure domains
+        let round1: Vec<Result<Option<(Vec<usize>, u64)>>> = std::thread::scope(|scope| {
+            let workers: Vec<_> =
+                (0..shards).map(|s| scope.spawn(move || self.round1(s, k))).collect();
+            workers
+                .into_iter()
+                .map(|w| {
+                    w.join().unwrap_or_else(|_| {
+                        Err(Error::Service("a shard worker thread panicked".into()))
+                    })
+                })
+                .collect()
+        });
+
+        let mut lost = Vec::new();
+        let mut pool: Vec<usize> = Vec::new();
+        let mut evaluations = 0u64;
+        for (s, r) in round1.into_iter().enumerate() {
+            match r? {
+                Some((globals, evals)) => {
+                    pool.extend(globals);
+                    evaluations += evals;
+                }
+                None => lost.push(s),
+            }
+        }
+        for &s in &lost {
+            self.metrics.shards_lost.add(1);
+            log_warn!(
+                "shard {s} excluded from round 1 after {} retries: result degrades to the \
+                 surviving shards' ground fraction",
+                self.cfg.retries
+            );
+        }
+        if pool.is_empty() {
+            return Err(Error::Service("every shard was lost before round 1 completed".into()));
+        }
+        pool.sort_unstable();
+        pool.dedup();
+
+        // gather: each surviving candidate's raw row from its owner
+        let mut rows: Vec<Option<Vec<f32>>> = vec![None; pool.len()];
+        for s in 0..shards {
+            if lost.contains(&s) {
+                continue; // a lost shard contributed no candidates
+            }
+            let positions: Vec<usize> =
+                (0..pool.len()).filter(|&i| self.plan.shard_of(pool[i]) == s).collect();
+            if positions.is_empty() {
+                continue;
+            }
+            let globals: Vec<usize> = positions.iter().map(|&i| pool[i]).collect();
+            match self.with_shard(s, |client| client.rows_global(&globals))? {
+                Some(flat) => {
+                    for (j, &i) in positions.iter().enumerate() {
+                        rows[i] = Some(flat[j * self.d..(j + 1) * self.d].to_vec());
+                    }
+                }
+                None => {
+                    // died between rounds: its candidates leave the pool
+                    self.metrics.shards_lost.add(1);
+                    log_warn!(
+                        "shard {s} lost between rounds; dropping its {} candidates",
+                        positions.len()
+                    );
+                    lost.push(s);
+                }
+            }
+        }
+        let (pool, flat): (Vec<usize>, Vec<f32>) = {
+            let mut kept = Vec::with_capacity(pool.len());
+            let mut flat = Vec::with_capacity(pool.len() * self.d);
+            for (g, r) in pool.into_iter().zip(rows) {
+                if let Some(row) = r {
+                    kept.push(g);
+                    flat.extend_from_slice(&row);
+                }
+            }
+            (kept, flat)
+        };
+        if pool.is_empty() {
+            return Err(Error::Service("every shard was lost before the reducer round".into()));
+        }
+
+        // round 2: the reducer greedy over the union pool, locally
+        let result = reducer_round(&pool, Dataset::from_flat(pool.len(), self.d, flat)?, k)?;
+        Ok(ClusterRun {
+            result: OptimResult { evaluations: evaluations + result.evaluations, ..result },
+            lost,
+            pool,
+        })
+    }
+}
+
+/// Backoff before retry `attempt` (1-based): `base · 2^(attempt-1)`.
+fn backoff_for(base: Duration, attempt: usize) -> Duration {
+    base.saturating_mul(1u32 << (attempt - 1).min(16))
+}
+
+/// Dial one shard with the connect-time retry/backoff policy.
+fn dial(
+    addr: &Listen,
+    shard_id: usize,
+    expect: Option<&ShardPlan>,
+    cfg: &ClusterConfig,
+    metrics: &ClusterMetrics,
+) -> Result<ShardClient> {
+    let mut last: Option<Error> = None;
+    for attempt in 0..=cfg.retries {
+        if attempt > 0 {
+            metrics.shard_retries.add(1);
+            std::thread::sleep(backoff_for(cfg.backoff, attempt));
+        }
+        match ShardClient::connect(addr, shard_id, expect, cfg) {
+            Ok(c) => {
+                metrics.welcome_bytes.add(c.net().rx_bytes());
+                return Ok(c);
+            }
+            Err(e @ Error::Unauthorized(_)) => return Err(e),
+            Err(e) => last = Some(e),
+        }
+    }
+    Err(last.expect("at least one attempt ran"))
+}
+
+/// The round-2 reducer: plain [`Greedy`] over the union pool as its own
+/// ground set (see the module doc for why f is restricted to the pool),
+/// with the selected pool positions mapped back to global indices.
+fn reducer_round(pool: &[usize], pool_ds: Dataset, k: usize) -> Result<OptimResult> {
+    let engine = Engine::builder().dataset(pool_ds).backend(Backend::SingleThread).build()?;
+    let mut res = engine.run(&Greedy::new(k))?;
+    res.exemplars = res.exemplars.iter().map(|&i| pool[i]).collect();
+    Ok(res)
+}
+
+/// The single-box reference the equivalence tests compare against:
+/// partitioned GreeDi on the same plan, built from the same pieces —
+/// shard-local [`Greedy`] over each `gather`ed shard dataset, the same
+/// sorted union pool, the same reducer. With bitwise-deterministic
+/// backends (the crate's CPU oracles are) this is bit-identical to a
+/// full-strength [`ClusterEngine::greedi`] run on servers serving the
+/// same gathers.
+pub fn single_box_reference(ds: &Dataset, plan: &ShardPlan, k: usize) -> Result<ClusterRun> {
+    if plan.n() != ds.n() {
+        return Err(Error::InvalidArgument(format!(
+            "plan covers {} rows, dataset has {}",
+            plan.n(),
+            ds.n()
+        )));
+    }
+    let mut pool: Vec<usize> = Vec::new();
+    let mut evaluations = 0u64;
+    for s in 0..plan.shards() {
+        let members = plan.members(s);
+        let engine =
+            Engine::builder().dataset(ds.gather(&members)).backend(Backend::SingleThread).build()?;
+        let res = engine.run(&Greedy::new(k))?;
+        evaluations += res.evaluations;
+        pool.extend(res.exemplars.iter().map(|&l| members[l]));
+    }
+    pool.sort_unstable();
+    pool.dedup();
+    let result = reducer_round(&pool, ds.gather(&pool), k)?;
+    Ok(ClusterRun {
+        result: OptimResult { evaluations: evaluations + result.evaluations, ..result },
+        lost: Vec::new(),
+        pool,
+    })
+}
+
+/// Parse one `--cluster` endpoint with scheme inference: explicit
+/// `tcp:`/`uds:` pass through, a leading `/` means a UDS path, and
+/// anything with a `:` means `host:port`.
+pub fn cluster_endpoint(s: &str) -> Result<Listen> {
+    if s.starts_with("tcp:") || s.starts_with("uds:") {
+        return s.parse();
+    }
+    if s.starts_with('/') {
+        return Ok(Listen::Uds(s.into()));
+    }
+    if s.contains(':') {
+        return Ok(Listen::Tcp(s.to_string()));
+    }
+    Err(Error::Config(format!(
+        "cluster endpoint {s:?} is neither host:port nor a /socket path (tcp:/uds: to force)"
+    )))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::GaussianBlobs;
+
+    #[test]
+    fn cluster_endpoints_infer_their_scheme() {
+        let tcp = cluster_endpoint("127.0.0.1:7171").unwrap();
+        assert_eq!(tcp, Listen::Tcp("127.0.0.1:7171".into()));
+        assert_eq!(cluster_endpoint("tcp:h:1").unwrap(), Listen::Tcp("h:1".into()));
+        assert_eq!(cluster_endpoint("/tmp/s0.sock").unwrap(), Listen::Uds("/tmp/s0.sock".into()));
+        let uds = cluster_endpoint("uds:/tmp/s1.sock").unwrap();
+        assert_eq!(uds, Listen::Uds("/tmp/s1.sock".into()));
+        assert!(cluster_endpoint("localhost").is_err());
+        assert!(cluster_endpoint("tcp:").is_err());
+    }
+
+    #[test]
+    fn config_defaults_are_the_documented_knobs() {
+        let c = ClusterConfig::default();
+        assert_eq!(c.timeout, DEFAULT_SHARD_TIMEOUT);
+        assert_eq!(c.retries, DEFAULT_SHARD_RETRIES);
+        assert_eq!(c.backoff, DEFAULT_SHARD_BACKOFF);
+        assert!(c.token.is_none() && !c.compress);
+        // backoff doubles and saturates instead of overflowing the shift
+        assert_eq!(backoff_for(Duration::from_millis(100), 1), Duration::from_millis(100));
+        assert_eq!(backoff_for(Duration::from_millis(100), 3), Duration::from_millis(400));
+        let _ = backoff_for(Duration::from_secs(1), usize::MAX);
+    }
+
+    /// With one shard the reference degenerates to: greedy over the full
+    /// set, then a reducer over exactly those k rows — the same exemplar
+    /// *set* as plain full-dataset greedy.
+    #[test]
+    fn one_shard_reference_matches_plain_greedy() {
+        let ds = GaussianBlobs::new(4, 5, 0.3).generate(60, 11);
+        let plan = ShardPlan::new(60, 1, ShardLayout::Contiguous).unwrap();
+        let run = single_box_reference(&ds, &plan, 4).unwrap();
+        let engine = Engine::builder()
+            .dataset(ds.clone())
+            .backend(Backend::SingleThread)
+            .build()
+            .unwrap();
+        let direct = engine.run(&Greedy::new(4)).unwrap();
+        let mut a = run.result.exemplars.clone();
+        let mut b = direct.exemplars.clone();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b);
+        assert_eq!(run.pool, a, "pool is the sorted candidate union");
+        assert!(run.lost.is_empty());
+    }
+
+    /// The reference is deterministic and its pool/selection respect the
+    /// plan: every exemplar is a pool member, the pool is sorted global
+    /// indices, and both layouts produce a full-size selection.
+    #[test]
+    fn reference_runs_are_deterministic_and_plan_shaped() {
+        let ds = GaussianBlobs::new(6, 4, 0.5).generate(90, 3);
+        for layout in [ShardLayout::Contiguous, ShardLayout::Strided] {
+            let plan = ShardPlan::new(90, 3, layout).unwrap();
+            let a = single_box_reference(&ds, &plan, 5).unwrap();
+            let b = single_box_reference(&ds, &plan, 5).unwrap();
+            assert_eq!(a.result.exemplars, b.result.exemplars, "{layout}");
+            assert_eq!(a.pool, b.pool);
+            assert_eq!(a.result.exemplars.len(), 5);
+            assert!(a.pool.windows(2).all(|w| w[0] < w[1]), "pool sorted + deduped");
+            assert!(a.pool.len() <= 15, "at most N·k candidates");
+            for &e in &a.result.exemplars {
+                assert!(a.pool.contains(&e), "exemplar {e} must come from the pool");
+                assert!(e < 90);
+            }
+        }
+    }
+}

@@ -1,0 +1,79 @@
+//! Sharded multi-server GreeDi: a distributed shard subsystem over the
+//! session wire protocol.
+//!
+//! Every backend before this one — including the TCP/UDS remote engines
+//! — mirrors the *full* ground set to each participant, capping a
+//! deployment at one box's memory. This module partitions the ground
+//! set across N `exemcl serve` processes instead: a deterministic
+//! [`ShardPlan`] deals global row indices onto shards, each server
+//! holds only its shard's rows (`exemcl serve --shard i/N`), and a
+//! [`ClusterEngine`] drives the two-round GreeDi pattern of
+//! Mirzasoleiman et al. (*Distributed Submodular Maximization*) across
+//! them. Per-server memory and handshake traffic drop to O(n/N).
+//!
+//! # The two-round protocol
+//!
+//! ```text
+//!  driver (`exemcl solve --cluster a,b,c`)      shard servers
+//!  ┌─────────────────────────────┐
+//!  │ connect: HelloShard{s,plan} │ ──────────▶ ┌───────────────┐
+//!  │   ◀── WelcomeShard: shard   │             │ serve --shard │
+//!  │       rows only, O(n·d/N)   │             │     0/3       │
+//!  ├─────────────────────────────┤             ├───────────────┤
+//!  │ round 1: parallel greedy,   │  Marginals/ │ serve --shard │
+//!  │   one thread per shard,     │  CommitMany │     1/3       │
+//!  │   k exemplars each          │  (index-    │               │
+//!  │   (deadline + retry/backoff;│   only)     ├───────────────┤
+//!  │   a lost shard is excluded, │             │ serve --shard │
+//!  │   job continues degraded)   │ ◀────────── │     2/3       │
+//!  ├─────────────────────────────┤             └───────────────┘
+//!  │ gather: ≤ N·k candidate     │    Rows{indices}
+//!  │   globals; fetch their raw  │ ──────────▶  (each shard ships
+//!  │   rows from their owners    │ ◀──────────   only rows it owns)
+//!  ├─────────────────────────────┤
+//!  │ round 2: reducer greedy     │   local `Backend::SingleThread`
+//!  │   over the union pool,      │   over the ≤ N·k fetched rows
+//!  │   final k exemplars         │
+//!  └─────────────────────────────┘
+//! ```
+//!
+//! Round 1 is the unchanged [`crate::optim::Greedy`] driven through a
+//! [`crate::engine::Session`] over each shard's connection — the shard
+//! mirror *is* the partition, so no masking is needed and the per-round
+//! wire stays index-only. Round 2 materializes the ≤ N·k union rows via
+//! the `Rows` verb and runs the same `Greedy` over them locally.
+//!
+//! # Guarantees and the degraded mode
+//!
+//! With all shards answering, the selection is exactly single-box
+//! partitioned GreeDi on the same plan ([`single_box_reference`]
+//! reproduces it bit-for-bit given bitwise-deterministic backends —
+//! the crate's CPU backends are). GreeDi's approximation factor is
+//! `(1-1/e)²/min(N,k)` against the global optimum (Mirzasoleiman et
+//! al.), with one documented weakening: the index-only protocol cannot
+//! evaluate a *foreign* candidate row against a shard's ground points,
+//! so the round-2 reducer scores candidates over the union pool itself
+//! rather than the full ground set. The reducer's `value`/`curve` are
+//! therefore f restricted to the pool — fine for selection (the paper's
+//! exemplars), not a global f estimate.
+//!
+//! Failure handling is first-class rather than fatal: each shard verb
+//! runs under a per-shard deadline (`shard.timeout_secs` — enforced as
+//! socket timeouts, so a straggler cannot pin a round), a dead shard is
+//! retried with exponential backoff (`shard.retries`, `shard.backoff_ms`)
+//! and then **excluded**: its candidates simply never reach the union,
+//! the run completes with a warning and
+//! [`ClusterMetrics::shards_lost`] incremented, and the approximation
+//! guarantee degrades gracefully (the surviving shards' GreeDi bound
+//! over their fraction of the ground set). Only two failures abort a
+//! run: every shard lost, and [`crate::Error::Unauthorized`] — a
+//! rejected token is a configuration error retries can't fix.
+
+pub mod cluster;
+pub mod plan;
+
+pub use cluster::{
+    cluster_endpoint, single_box_reference, ClusterConfig, ClusterEngine, ClusterMetrics,
+    ClusterRun, ShardClient, DEFAULT_SHARD_BACKOFF, DEFAULT_SHARD_RETRIES, DEFAULT_SHARD_TIMEOUT,
+};
+pub use plan::{ShardLayout, ShardPlan};

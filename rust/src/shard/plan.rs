@@ -1,0 +1,271 @@
+//! The cluster's partition contract: which global row lives on which
+//! shard, and the global↔shard-local index bijection every layer of the
+//! distributed path speaks through.
+//!
+//! A [`ShardPlan`] is tiny (three words) and *deterministic*: every
+//! participant — the N `exemcl serve` processes and the driving
+//! [`crate::shard::ClusterEngine`] — derives the identical partition
+//! from `(n, shards, layout)` alone, so the plan itself is all the wire
+//! ever ships (never a membership list). Optimizers and users speak
+//! **global** indices; each shard server owns the contiguous local
+//! range `0..shard_len(s)` over its gathered rows; the remap happens at
+//! the codec boundary in [`crate::shard::ShardClient`].
+
+use crate::{Error, Result};
+
+/// How global row indices are dealt onto shards.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardLayout {
+    /// Shard `s` owns one contiguous range of global indices; the first
+    /// `n mod N` shards get the extra row. Best when the dataset is
+    /// already striped across producers in index order.
+    Contiguous,
+    /// Global row `g` lives on shard `g mod N` (round-robin). Spreads
+    /// any index-correlated structure (e.g. generator cluster order)
+    /// evenly across shards.
+    Strided,
+}
+
+impl std::fmt::Display for ShardLayout {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ShardLayout::Contiguous => write!(f, "contiguous"),
+            ShardLayout::Strided => write!(f, "strided"),
+        }
+    }
+}
+
+impl std::str::FromStr for ShardLayout {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "contiguous" => Ok(ShardLayout::Contiguous),
+            "strided" => Ok(ShardLayout::Strided),
+            other => {
+                Err(Error::Config(format!("unknown shard layout {other:?} (contiguous|strided)")))
+            }
+        }
+    }
+}
+
+/// A deterministic partition of the global index space `0..n` into
+/// `shards` non-empty parts. See the module doc for the contract.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardPlan {
+    n: usize,
+    shards: usize,
+    layout: ShardLayout,
+}
+
+impl ShardPlan {
+    /// Build a plan. Every shard must be non-empty (`1 ≤ shards ≤ n`),
+    /// so downstream code never has to reason about zero-row servers.
+    pub fn new(n: usize, shards: usize, layout: ShardLayout) -> Result<ShardPlan> {
+        if shards == 0 {
+            return Err(Error::InvalidArgument("a shard plan needs at least one shard".into()));
+        }
+        if n < shards {
+            return Err(Error::InvalidArgument(format!(
+                "cannot deal {n} rows onto {shards} shards without an empty shard"
+            )));
+        }
+        Ok(ShardPlan { n, shards, layout })
+    }
+
+    /// Global ground-set size.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Number of shards.
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Index layout.
+    pub fn layout(&self) -> ShardLayout {
+        self.layout
+    }
+
+    /// First global index of contiguous shard `s`.
+    fn start(&self, s: usize) -> usize {
+        let base = self.n / self.shards;
+        let rem = self.n % self.shards;
+        s * base + s.min(rem)
+    }
+
+    /// Number of rows shard `s` owns.
+    pub fn shard_len(&self, s: usize) -> usize {
+        assert!(s < self.shards, "shard {s} out of {} shards", self.shards);
+        match self.layout {
+            ShardLayout::Contiguous => {
+                let base = self.n / self.shards;
+                let rem = self.n % self.shards;
+                base + usize::from(s < rem)
+            }
+            // |{g < n : g ≡ s (mod N)}|
+            ShardLayout::Strided => (self.n - s).div_ceil(self.shards),
+        }
+    }
+
+    /// The shard that owns global row `g`.
+    pub fn shard_of(&self, g: usize) -> usize {
+        assert!(g < self.n, "global index {g} out of n={}", self.n);
+        match self.layout {
+            ShardLayout::Contiguous => {
+                let base = self.n / self.shards;
+                let rem = self.n % self.shards;
+                let boundary = rem * (base + 1);
+                if g < boundary {
+                    g / (base + 1)
+                } else {
+                    rem + (g - boundary) / base
+                }
+            }
+            ShardLayout::Strided => g % self.shards,
+        }
+    }
+
+    /// Shard-local index of global row `g` on shard `s`; `None` when
+    /// `s` does not own `g` — the typed "foreign index" signal the
+    /// remap layer turns into an `InvalidArgument`.
+    pub fn local_index(&self, s: usize, g: usize) -> Option<usize> {
+        if g >= self.n || s >= self.shards || self.shard_of(g) != s {
+            return None;
+        }
+        Some(match self.layout {
+            ShardLayout::Contiguous => g - self.start(s),
+            ShardLayout::Strided => g / self.shards,
+        })
+    }
+
+    /// Global index of shard `s`'s local row `l`; `None` past the
+    /// shard's end.
+    pub fn global_index(&self, s: usize, l: usize) -> Option<usize> {
+        if s >= self.shards || l >= self.shard_len(s) {
+            return None;
+        }
+        Some(match self.layout {
+            ShardLayout::Contiguous => self.start(s) + l,
+            ShardLayout::Strided => l * self.shards + s,
+        })
+    }
+
+    /// Shard `s`'s global indices in ascending order — local index `l`
+    /// is position `l` of this list, which is exactly the order a shard
+    /// server's `Dataset::gather` must use.
+    pub fn members(&self, s: usize) -> Vec<usize> {
+        (0..self.shard_len(s)).map(|l| self.global_index(s, l).expect("l < shard_len")).collect()
+    }
+
+    /// Parse the CLI shard spec `"i/N"` (e.g. `--shard 0/3`) into
+    /// `(shard_id, shards)`.
+    pub fn parse_spec(spec: &str) -> Result<(usize, usize)> {
+        let (i, n) = spec
+            .split_once('/')
+            .ok_or_else(|| Error::Config(format!("shard spec {spec:?} is not of the form i/N")))?;
+        let id: usize = i
+            .parse()
+            .map_err(|_| Error::Config(format!("bad shard id {i:?} in spec {spec:?}")))?;
+        let shards: usize = n
+            .parse()
+            .map_err(|_| Error::Config(format!("bad shard count {n:?} in spec {spec:?}")))?;
+        if shards == 0 || id >= shards {
+            return Err(Error::Config(format!("shard spec {spec:?}: id must be in 0..{shards}")));
+        }
+        Ok((id, shards))
+    }
+}
+
+impl std::fmt::Display for ShardPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} rows over {} {} shards", self.n, self.shards, self.layout)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rejects_empty_and_overfull_plans() {
+        assert!(ShardPlan::new(10, 0, ShardLayout::Contiguous).is_err());
+        assert!(ShardPlan::new(2, 3, ShardLayout::Strided).is_err());
+        assert!(ShardPlan::new(3, 3, ShardLayout::Contiguous).is_ok());
+    }
+
+    #[test]
+    fn contiguous_deals_remainders_to_the_front() {
+        let p = ShardPlan::new(10, 3, ShardLayout::Contiguous).unwrap();
+        assert_eq!(p.members(0), vec![0, 1, 2, 3]);
+        assert_eq!(p.members(1), vec![4, 5, 6]);
+        assert_eq!(p.members(2), vec![7, 8, 9]);
+    }
+
+    #[test]
+    fn strided_round_robins() {
+        let p = ShardPlan::new(7, 3, ShardLayout::Strided).unwrap();
+        assert_eq!(p.members(0), vec![0, 3, 6]);
+        assert_eq!(p.members(1), vec![1, 4]);
+        assert_eq!(p.members(2), vec![2, 5]);
+    }
+
+    #[test]
+    fn foreign_and_out_of_range_indices_are_none() {
+        let p = ShardPlan::new(10, 3, ShardLayout::Contiguous).unwrap();
+        assert_eq!(p.local_index(0, 5), None); // shard 1 owns 5
+        assert_eq!(p.local_index(1, 5), Some(1));
+        assert_eq!(p.local_index(1, 99), None);
+        assert_eq!(p.local_index(9, 5), None);
+        assert_eq!(p.global_index(1, 3), None); // shard 1 has 3 rows
+        assert_eq!(p.global_index(9, 0), None);
+    }
+
+    /// The partition property every layer relies on: for any plan, the
+    /// shards are disjoint, cover `0..n`, locals are dense, and
+    /// `shard_of`/`local_index`/`global_index` are mutually inverse.
+    #[test]
+    fn remap_is_a_bijection_for_both_layouts() {
+        for layout in [ShardLayout::Contiguous, ShardLayout::Strided] {
+            for (n, shards) in [(1, 1), (5, 5), (7, 3), (10, 3), (64, 8), (101, 7)] {
+                let p = ShardPlan::new(n, shards, layout).unwrap();
+                let mut seen = vec![false; n];
+                let mut total = 0;
+                for s in 0..shards {
+                    let members = p.members(s);
+                    assert_eq!(members.len(), p.shard_len(s), "{p} shard {s}");
+                    assert!(!members.is_empty(), "{p} shard {s} empty");
+                    assert!(members.windows(2).all(|w| w[0] < w[1]), "unsorted members");
+                    total += members.len();
+                    for (l, &g) in members.iter().enumerate() {
+                        assert!(!seen[g], "{p}: {g} dealt twice");
+                        seen[g] = true;
+                        assert_eq!(p.shard_of(g), s);
+                        assert_eq!(p.local_index(s, g), Some(l));
+                        assert_eq!(p.global_index(s, l), Some(g));
+                    }
+                }
+                assert_eq!(total, n, "{p} does not cover 0..n");
+            }
+        }
+    }
+
+    #[test]
+    fn spec_parsing_accepts_i_of_n() {
+        assert_eq!(ShardPlan::parse_spec("0/3").unwrap(), (0, 3));
+        assert_eq!(ShardPlan::parse_spec("2/3").unwrap(), (2, 3));
+        assert!(ShardPlan::parse_spec("3/3").is_err());
+        assert!(ShardPlan::parse_spec("0/0").is_err());
+        assert!(ShardPlan::parse_spec("x/3").is_err());
+        assert!(ShardPlan::parse_spec("03").is_err());
+    }
+
+    #[test]
+    fn layout_parses_and_displays() {
+        assert_eq!("contiguous".parse::<ShardLayout>().unwrap(), ShardLayout::Contiguous);
+        assert_eq!("strided".parse::<ShardLayout>().unwrap(), ShardLayout::Strided);
+        assert!("diagonal".parse::<ShardLayout>().is_err());
+        assert_eq!(ShardLayout::Strided.to_string(), "strided");
+    }
+}

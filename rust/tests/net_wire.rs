@@ -210,7 +210,7 @@ fn abrupt_socket_drop_reclaims_sessions() {
     let addr = addr_of(&server.addr);
 
     let mut stream = std::net::TcpStream::connect(&addr).unwrap();
-    stream.write_all(&codec::encode_request(&codec::Request::Hello)).unwrap();
+    stream.write_all(&codec::encode_request(&codec::Request::hello())).unwrap();
     let (kind, payload) = codec::read_frame(&mut stream).unwrap().unwrap();
     assert!(matches!(codec::decode_reply(kind, &payload).unwrap(), codec::Reply::Welcome { .. }));
     for _ in 0..2 {
@@ -244,7 +244,7 @@ fn sessions_are_isolated_per_connection() {
     s.sync().unwrap();
 
     let mut thief = std::net::TcpStream::connect(&addr).unwrap();
-    thief.write_all(&codec::encode_request(&codec::Request::Hello)).unwrap();
+    thief.write_all(&codec::encode_request(&codec::Request::hello())).unwrap();
     let (k, p) = codec::read_frame(&mut thief).unwrap().unwrap();
     assert!(matches!(codec::decode_reply(k, &p).unwrap(), codec::Reply::Welcome { .. }));
     let steal = codec::Request::Marginals { sid: s.sid(), candidates: vec![0, 1] };

@@ -1,0 +1,380 @@
+//! The shard subsystem end-to-end: a multi-process-shaped (one service
+//! + net server per shard, real sockets) GreeDi cluster run is
+//! bit-identical to single-box partitioned GreeDi on the same plan,
+//! the index remap holds over live connections, Welcome traffic is
+//! O(n/N) per shard, a shard killed mid-run degrades the result
+//! instead of failing it, and the auth/compression handshake options
+//! behave. Pure CPU.
+
+use std::time::Duration;
+
+use exemcl::coordinator::{Service, ServiceMetrics};
+use exemcl::cpu::SingleThread;
+use exemcl::data::synth::GaussianBlobs;
+use exemcl::data::Dataset;
+use exemcl::engine::{Backend, Engine};
+use exemcl::net::{Listen, NetConfig, NetServer, StopHandle};
+use exemcl::optim::GreeDi;
+use exemcl::shard::{
+    single_box_reference, ClusterConfig, ClusterEngine, ShardClient, ShardLayout, ShardPlan,
+};
+use exemcl::Error;
+
+fn blobs(n: usize) -> Dataset {
+    GaussianBlobs::new(5, 6, 0.4).generate(n, 17)
+}
+
+/// Cluster knobs tuned for tests: fail fast, retry once, tiny backoff.
+fn quick_cfg() -> ClusterConfig {
+    ClusterConfig {
+        timeout: Duration::from_secs(10),
+        retries: 1,
+        backoff: Duration::from_millis(10),
+        ..ClusterConfig::default()
+    }
+}
+
+/// One shard server: a coordinator service over the shard's gather of
+/// the full dataset, behind a net server bound with the shard identity.
+/// Dropping it stops the accept loop, joins it and shuts the service
+/// down — the "kill one server" lever of the degradation test.
+struct ShardServer {
+    svc: Option<Service>,
+    addr: Listen,
+    stop: StopHandle,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ShardServer {
+    fn spawn(ds: &Dataset, shard_id: usize, plan: &ShardPlan, listen: Listen) -> Self {
+        Self::spawn_with(ds, shard_id, plan, listen, |c| c)
+    }
+
+    fn spawn_with(
+        ds: &Dataset,
+        shard_id: usize,
+        plan: &ShardPlan,
+        listen: Listen,
+        net: impl FnOnce(NetConfig) -> NetConfig,
+    ) -> Self {
+        let shard_ds = ds.gather(&plan.members(shard_id));
+        let svc = Service::spawn(move || Ok(SingleThread::new(shard_ds)), 32).unwrap();
+        let base = NetConfig::new(listen)
+            .with_poll(Duration::from_millis(20))
+            .with_shard(shard_id, plan.clone());
+        let server = NetServer::bind(svc.handle(), net(base)).unwrap();
+        let addr = server.local_addr().clone();
+        let stop = server.stop_handle();
+        let join = std::thread::spawn(move || server.run().unwrap());
+        Self { svc: Some(svc), addr, stop, join: Some(join) }
+    }
+
+    fn metrics(&self) -> &ServiceMetrics {
+        self.svc.as_ref().expect("live service").metrics()
+    }
+}
+
+impl Drop for ShardServer {
+    fn drop(&mut self) {
+        self.stop.stop();
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+        if let Some(svc) = self.svc.take() {
+            svc.shutdown();
+        }
+    }
+}
+
+fn tcp_cluster(ds: &Dataset, plan: &ShardPlan) -> Vec<ShardServer> {
+    (0..plan.shards())
+        .map(|s| ShardServer::spawn(ds, s, plan, Listen::Tcp("127.0.0.1:0".into())))
+        .collect()
+}
+
+fn addrs_of(servers: &[ShardServer]) -> Vec<Listen> {
+    servers.iter().map(|s| s.addr.clone()).collect()
+}
+
+#[cfg(unix)]
+fn uds_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("exemcl-shard-{}-{tag}.sock", std::process::id()))
+}
+
+/// The acceptance criterion: a 3-shard UDS cluster selects the **same
+/// exemplar set** as single-box GreeDi on the same partition — in fact
+/// bit-identical results from a bit-identical round-2 input, for both
+/// layouts. Per-shard Welcome traffic is `n/N` rows + O(1), by byte
+/// accounting.
+#[cfg(unix)]
+#[test]
+fn three_shard_uds_cluster_matches_single_box_partitioned_greedi() {
+    let (n, d, k) = (240usize, 6usize, 5usize);
+    let ds = blobs(n);
+    for layout in [ShardLayout::Contiguous, ShardLayout::Strided] {
+        let plan = ShardPlan::new(n, 3, layout).unwrap();
+        let servers: Vec<ShardServer> = (0..3)
+            .map(|s| {
+                let path = uds_path(&format!("{layout}-{s}"));
+                let _ = std::fs::remove_file(&path);
+                ShardServer::spawn(&ds, s, &plan, Listen::Uds(path))
+            })
+            .collect();
+
+        let cluster = ClusterEngine::connect(&addrs_of(&servers), quick_cfg()).unwrap();
+        assert_eq!(cluster.plan(), &plan, "plan discovered from the servers");
+        assert_eq!(cluster.d(), d);
+
+        // the one-time mirror is the only O(n/N) payload: all three
+        // Welcomes together carry the n rows + n dmin entries once,
+        // plus a small per-shard constant
+        let welcome = cluster.metrics().welcome_bytes.get();
+        assert!(
+            welcome <= (n * (d + 1) * 4 + 3 * 512) as u64,
+            "{layout}: welcome bytes {welcome} exceed the O(n/N)-per-shard budget"
+        );
+
+        let run = cluster.greedi(k).unwrap();
+        let want = single_box_reference(&ds, &plan, k).unwrap();
+        assert!(run.lost.is_empty(), "{layout}: no shard may be lost on loopback");
+        assert_eq!(run.pool, want.pool, "{layout}: bit-identical round-2 input");
+        assert_eq!(run.result.exemplars, want.result.exemplars, "{layout}");
+        assert_eq!(run.result.value.to_bits(), want.result.value.to_bits(), "{layout}");
+        for (a, b) in run.result.curve.iter().zip(&want.result.curve) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{layout}: curve bits");
+        }
+        assert_eq!(run.result.evaluations, want.result.evaluations, "{layout}");
+    }
+}
+
+/// Per-shard byte accounting, one connection at a time: a single shard
+/// handshake receives that shard's rows and dmin plus a constant — not
+/// the whole dataset.
+#[test]
+fn one_shard_welcome_is_one_shard_of_bytes() {
+    let (n, d) = (240usize, 6usize);
+    let ds = blobs(n);
+    let plan = ShardPlan::new(n, 3, ShardLayout::Contiguous).unwrap();
+    let servers = tcp_cluster(&ds, &plan);
+
+    let client = ShardClient::connect(&servers[0].addr, 0, Some(&plan), &quick_cfg()).unwrap();
+    let shard_n = plan.shard_len(0);
+    let rx = client.net().rx_bytes();
+    assert!(
+        rx <= (shard_n * (d + 1) * 4 + 512) as u64,
+        "shard 0 welcome was {rx} bytes for {shard_n} rows"
+    );
+    // and the mirror is exactly the shard's gather, bit for bit
+    let members = plan.members(0);
+    assert_eq!(client.net().dataset().flat(), ds.gather(&members).flat());
+}
+
+/// The index remap over a live connection: local↔global round-trips,
+/// foreign rows are typed errors, and `rows_global` returns the
+/// original rows bitwise.
+#[test]
+fn shard_client_remaps_and_fetches_rows() {
+    let ds = blobs(50);
+    let plan = ShardPlan::new(50, 2, ShardLayout::Strided).unwrap();
+    let servers = tcp_cluster(&ds, &plan);
+    let client = ShardClient::connect(&servers[1].addr, 1, Some(&plan), &quick_cfg()).unwrap();
+
+    for l in 0..plan.shard_len(1) {
+        let g = client.to_global(l).unwrap();
+        assert_eq!(plan.shard_of(g), 1);
+        assert_eq!(client.to_local(g).unwrap(), l);
+    }
+    assert!(client.to_global(plan.shard_len(1)).is_err(), "past the shard's end");
+    assert!(
+        matches!(client.to_local(0), Err(Error::InvalidArgument(_))),
+        "global row 0 lives on shard 0, not 1"
+    );
+
+    let globals = [plan.global_index(1, 0).unwrap(), plan.global_index(1, 7).unwrap()];
+    let flat = client.rows_global(&globals).unwrap();
+    assert_eq!(flat.len(), 2 * ds.d());
+    assert_eq!(&flat[..ds.d()], ds.row(globals[0]));
+    assert_eq!(&flat[ds.d()..], ds.row(globals[1]));
+}
+
+/// A wrong shard id is refused at handshake, not discovered later.
+#[test]
+fn mismatched_shard_id_is_rejected_at_handshake() {
+    let ds = blobs(30);
+    let plan = ShardPlan::new(30, 2, ShardLayout::Contiguous).unwrap();
+    let servers = tcp_cluster(&ds, &plan);
+    let err = ShardClient::connect(&servers[0].addr, 1, Some(&plan), &quick_cfg()).unwrap_err();
+    assert!(err.to_string().contains("shard"), "got: {err}");
+}
+
+/// The cluster backend through the engine facade: `Backend::Cluster`
+/// builds, dispatches GreeDi (whose workers/seed knobs are ignored —
+/// the plan is the partition), refuses per-session views, and matches
+/// the single-box reference.
+#[test]
+fn engine_cluster_backend_runs_greedi() {
+    let ds = blobs(120);
+    let plan = ShardPlan::new(120, 3, ShardLayout::Contiguous).unwrap();
+    let servers = tcp_cluster(&ds, &plan);
+    let addrs: Vec<String> = servers
+        .iter()
+        .map(|s| match &s.addr {
+            Listen::Tcp(a) => a.clone(),
+            Listen::Uds(p) => p.to_string_lossy().into_owned(),
+        })
+        .collect();
+
+    let engine = Engine::builder()
+        .backend(Backend::Cluster { addrs })
+        .cluster_config(quick_cfg())
+        .build()
+        .unwrap();
+    assert!(engine.name().contains("cluster[3 shards"), "{}", engine.name());
+    assert!(engine.session().is_err(), "a cluster has no single-session view");
+
+    let got = engine.run(&GreeDi::new(4, 7, 99)).unwrap();
+    let want = single_box_reference(&ds, &plan, 4).unwrap();
+    assert_eq!(got.exemplars, want.result.exemplars);
+    assert_eq!(got.value.to_bits(), want.result.value.to_bits());
+
+    // only GreeDi has a distributed form
+    let err = engine.run(&exemcl::optim::Greedy::new(4)).unwrap_err();
+    assert!(err.to_string().contains("cluster"), "got: {err}");
+}
+
+/// First-class failure handling: killing one shard server mid-run (its
+/// connection is already up) completes the job degraded — the result
+/// covers the surviving shards, the loss is counted, and nothing hangs.
+#[test]
+fn shard_loss_degrades_instead_of_failing() {
+    let ds = blobs(90);
+    let plan = ShardPlan::new(90, 3, ShardLayout::Contiguous).unwrap();
+    let mut servers = tcp_cluster(&ds, &plan);
+
+    let cluster = ClusterEngine::connect(&addrs_of(&servers), quick_cfg()).unwrap();
+    // all three connections are live; now shard 2's server dies
+    servers.truncate(2);
+
+    let run = cluster.greedi(4).unwrap();
+    assert_eq!(run.lost, vec![2], "the dead shard is excluded, not fatal");
+    assert!(cluster.metrics().shards_lost.get() >= 1);
+    assert!(cluster.metrics().shard_retries.get() >= 1, "exclusion only after a re-dial");
+    assert_eq!(run.result.exemplars.len(), 4);
+    for &e in &run.result.exemplars {
+        assert_ne!(plan.shard_of(e), 2, "exemplar {e} cannot come from the lost shard");
+    }
+
+    // degraded means: exactly the single-box reference over the
+    // surviving shards' candidates — still a principled GreeDi run
+    let mut pool = Vec::new();
+    for s in 0..2 {
+        let members = plan.members(s);
+        let engine = Engine::builder()
+            .dataset(ds.gather(&members))
+            .backend(Backend::SingleThread)
+            .build()
+            .unwrap();
+        let r = engine.run(&exemcl::optim::Greedy::new(4)).unwrap();
+        pool.extend(r.exemplars.iter().map(|&l| members[l]));
+    }
+    pool.sort_unstable();
+    pool.dedup();
+    assert_eq!(run.pool, pool);
+}
+
+/// An all-dead cluster is an error, not a hang and not an empty result.
+#[test]
+fn all_shards_dead_is_a_typed_error() {
+    let cfg = ClusterConfig { retries: 0, ..quick_cfg() };
+    let err = ClusterEngine::connect(&[Listen::Tcp("127.0.0.1:1".into())], cfg).unwrap_err();
+    assert!(matches!(err, Error::Service(_)), "got: {err}");
+}
+
+/// The auth gate: a server with `net.token` refuses wrong and missing
+/// tokens with a typed [`Error::Unauthorized`] (which the cluster layer
+/// treats as fatal, never retried), counts the rejections, and admits
+/// the right token.
+#[test]
+fn auth_token_gates_the_handshake() {
+    let ds = blobs(40);
+    let plan = ShardPlan::new(40, 1, ShardLayout::Contiguous).unwrap();
+    let server = ShardServer::spawn_with(
+        &ds,
+        0,
+        &plan,
+        Listen::Tcp("127.0.0.1:0".into()),
+        |c| c.with_token(Some("s3cret".into())),
+    );
+
+    let missing = ShardClient::connect(&server.addr, 0, Some(&plan), &quick_cfg());
+    assert!(matches!(missing, Err(Error::Unauthorized(_))), "got: {missing:?}");
+    let wrong_cfg = ClusterConfig { token: Some("guess".into()), ..quick_cfg() };
+    let wrong = ShardClient::connect(&server.addr, 0, Some(&plan), &wrong_cfg);
+    assert!(matches!(wrong, Err(Error::Unauthorized(_))), "got: {wrong:?}");
+
+    // the cluster engine aborts on a rejected token instead of
+    // degrading: a misconfigured job must not half-run
+    let cluster = ClusterEngine::connect(&[server.addr.clone()], wrong_cfg);
+    assert!(matches!(cluster, Err(Error::Unauthorized(_))));
+}
+
+/// With the right token everything works, and the server has counted
+/// the earlier rejections.
+#[test]
+fn auth_token_admits_the_right_token_and_counts_rejections() {
+    let ds = blobs(40);
+    let plan = ShardPlan::new(40, 1, ShardLayout::Contiguous).unwrap();
+    let server = ShardServer::spawn_with(
+        &ds,
+        0,
+        &plan,
+        Listen::Tcp("127.0.0.1:0".into()),
+        |c| c.with_token(Some("s3cret".into())),
+    );
+
+    let bad = ShardClient::connect(&server.addr, 0, Some(&plan), &quick_cfg());
+    assert!(matches!(bad, Err(Error::Unauthorized(_))));
+    assert!(server.metrics().auth_rejected.get() >= 1);
+
+    let good_cfg = ClusterConfig { token: Some("s3cret".into()), ..quick_cfg() };
+    let cluster = ClusterEngine::connect(&[server.addr.clone()], good_cfg).unwrap();
+    let run = cluster.greedi(3).unwrap();
+    assert_eq!(run.result.exemplars.len(), 3);
+    assert!(run.lost.is_empty());
+}
+
+/// Welcome compression: on a zero-heavy dataset an opted-in handshake
+/// receives fewer bytes than a plain one, and the mirror is still
+/// bit-identical. Compression never touches the per-round hot path —
+/// only the one-time Welcome.
+#[test]
+fn compressed_welcome_shrinks_and_mirrors_bitwise() {
+    // three-quarters exact zeros: each row carries one non-zero
+    let (n, d) = (64usize, 8usize);
+    let mut flat = vec![0.0f32; n * d];
+    for (i, row) in flat.chunks_mut(d).enumerate() {
+        row[i % d] = (i + 1) as f32 * 0.5;
+    }
+    let ds = Dataset::from_flat(n, d, flat).unwrap();
+    let plan = ShardPlan::new(n, 1, ShardLayout::Contiguous).unwrap();
+    let server = ShardServer::spawn_with(
+        &ds,
+        0,
+        &plan,
+        Listen::Tcp("127.0.0.1:0".into()),
+        |c| c.with_compress(true),
+    );
+
+    let plain = ShardClient::connect(&server.addr, 0, Some(&plan), &quick_cfg()).unwrap();
+    let compressed_cfg = ClusterConfig { compress: true, ..quick_cfg() };
+    let compressed = ShardClient::connect(&server.addr, 0, Some(&plan), &compressed_cfg).unwrap();
+
+    assert_eq!(plain.net().dataset().flat(), ds.flat());
+    assert_eq!(compressed.net().dataset().flat(), ds.flat(), "lossless mirror");
+    assert!(
+        compressed.net().rx_bytes() < plain.net().rx_bytes(),
+        "compressed welcome ({} bytes) must undercut plain ({} bytes)",
+        compressed.net().rx_bytes(),
+        plain.net().rx_bytes()
+    );
+}
