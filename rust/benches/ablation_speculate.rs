@@ -1,0 +1,167 @@
+//! Speculation ablation — the tentpole's headline number: end-to-end
+//! greedy wall-clock over a real loopback socket with an injected
+//! per-request latency (`EXEMCL_NET_DELAY_MS`), speculation off vs. on.
+//!
+//! With speculation off every round pays `2R + T_gains` (two delayed
+//! request frames plus the fused gains launch); with a depth-1 hint the
+//! executor precomputes the next round while the reply is in flight,
+//! so a round costs `max(2R, T_gains)`. The injected delay is
+//! calibrated to the measured `T_gains` (the regime where overlap
+//! matters; a real WAN round-trip plays the same role), which puts the
+//! theoretical speedup at ~1.5x. Plain Greedy's prediction is the
+//! batch argmax, so the hit rate is 100% and both runs select the
+//! same exemplars bit for bit — asserted, not assumed.
+//!
+//! Writes `BENCH_speculate.json` for the CI perf trajectory (override
+//! the path with `EXEMCL_BENCH_SPECULATE_OUT`).
+//!
+//! Run: `cargo bench --bench ablation_speculate`
+
+use std::time::{Duration, Instant};
+
+use exemcl::bench::{write_json, JsonValue, Scale, Table};
+use exemcl::coordinator::Service;
+use exemcl::cpu::SingleThread;
+use exemcl::data::synth::GaussianBlobs;
+use exemcl::engine::{Backend, Engine};
+use exemcl::net::{Listen, NetConfig, NetServer};
+use exemcl::optim::{Greedy, Optimizer, Oracle};
+
+fn listen_endpoint() -> Listen {
+    #[cfg(unix)]
+    {
+        let path =
+            std::env::temp_dir().join(format!("exemcl-bench-spec-{}.sock", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        Listen::Uds(path)
+    }
+    #[cfg(not(unix))]
+    {
+        Listen::Tcp("127.0.0.1:0".into())
+    }
+}
+
+fn backend_of(listen: &Listen) -> Backend {
+    match listen {
+        Listen::Tcp(a) => Backend::Tcp { addr: a.clone() },
+        Listen::Uds(p) => Backend::Uds { path: p.to_string_lossy().into_owned() },
+    }
+}
+
+fn main() {
+    let scale = Scale::from_env();
+    let (n, k) = match scale {
+        Scale::Quick => (800usize, 8usize),
+        Scale::Default => (2_000, 10),
+        Scale::Full => (4_000, 12),
+    };
+    let d = 16usize;
+    let ds = GaussianBlobs::new(6, d, 0.4).generate(n, 17);
+
+    // Calibrate the injected delay to the measured full-candidate gains
+    // launch: R = T_gains puts a plain round at 3T and a speculative one
+    // at 2T — squarely in the overlap-wins regime (and >= 1 ms always).
+    let local = SingleThread::new(ds.clone());
+    let all: Vec<usize> = (0..n).collect();
+    let state = local.init_state();
+    local.marginal_gains(&state, &all).expect("warmup");
+    let t0 = Instant::now();
+    local.marginal_gains(&state, &all).expect("calibrate");
+    let t_gains = t0.elapsed();
+    let delay_ms = (t_gains.as_millis() as u64).clamp(1, 200);
+    eprintln!("calibration: T_gains = {t_gains:?} -> injected delay {delay_ms} ms/request");
+
+    let svc = Service::over(SingleThread::new(ds.clone()), 32).expect("service");
+    let cfg = NetConfig::new(listen_endpoint()).with_poll(Duration::from_millis(20));
+    let server = NetServer::bind(svc.handle(), cfg).expect("bind");
+    let addr = server.local_addr().clone();
+    let stop = server.stop_handle();
+    let serving = std::thread::spawn(move || server.run().expect("serve"));
+    let m = svc.metrics();
+
+    // both engines connect while the delay knob is set: every request
+    // frame on either connection pays the same injected R
+    std::env::set_var("EXEMCL_NET_DELAY_MS", delay_ms.to_string());
+    let plain = Engine::builder().backend(backend_of(&addr)).build().expect("plain engine");
+    let spec =
+        Engine::builder().backend(backend_of(&addr)).speculate(1).build().expect("spec engine");
+    std::env::remove_var("EXEMCL_NET_DELAY_MS");
+
+    let t0 = Instant::now();
+    let r_plain = plain.run(&Greedy::new(k)).expect("plain greedy");
+    let plain_secs = t0.elapsed().as_secs_f64();
+    let (h0, mi0, w0, ge0) = (
+        m.spec_hits.get(),
+        m.spec_misses.get(),
+        m.spec_wasted_gains.get(),
+        m.gains_evaluated.get(),
+    );
+    assert_eq!(h0 + mi0 + w0, 0, "an unhinted run must not speculate");
+
+    let t0 = Instant::now();
+    let r_spec = spec.run(&Greedy::new(k)).expect("speculative greedy");
+    let spec_secs = t0.elapsed().as_secs_f64();
+    let (hits, misses, wasted) =
+        (m.spec_hits.get() - h0, m.spec_misses.get() - mi0, m.spec_wasted_gains.get() - w0);
+    let gains_evaluated = m.gains_evaluated.get() - ge0;
+
+    // bit-identity and a perfect hit rate are the contract, not a goal
+    assert_eq!(r_spec.exemplars, r_plain.exemplars, "speculation changed the result");
+    assert_eq!(r_spec.value.to_bits(), r_plain.value.to_bits());
+    assert_eq!(hits, (k - 1) as u64, "plain greedy must hit every non-final round");
+    assert_eq!(misses, 0);
+    assert_eq!(wasted, 0);
+    let hit_rate = hits as f64 / (k - 1) as f64;
+    let speedup = plain_secs / spec_secs.max(1e-9);
+
+    let mut table = Table::new(&["mode", "wall (s)", "hits", "misses", "wasted gains"]);
+    table.row(&["plain".into(), format!("{plain_secs:.3}"), "0".into(), "0".into(), "0".into()]);
+    table.row(&[
+        "speculate=1".into(),
+        format!("{spec_secs:.3}"),
+        hits.to_string(),
+        misses.to_string(),
+        wasted.to_string(),
+    ]);
+    table.print();
+    println!(
+        "\nn={n} d={d} k={k} delay={delay_ms}ms: {speedup:.2}x end-to-end \
+         (hit rate {:.0}%, {gains_evaluated} speculative-run gain entries)",
+        hit_rate * 100.0
+    );
+    if speedup < 1.3 {
+        eprintln!("WARNING: speedup {speedup:.2}x below the 1.3x target on this host");
+    }
+
+    drop(plain);
+    drop(spec);
+    stop.stop();
+    serving.join().expect("server thread");
+    println!("server: {}", svc.metrics().summary());
+    svc.shutdown();
+
+    let out = std::env::var("EXEMCL_BENCH_SPECULATE_OUT")
+        .unwrap_or_else(|_| "BENCH_speculate.json".into());
+    let path = write_json(
+        &out,
+        &[
+            ("bench", JsonValue::Str("ablation_speculate".into())),
+            ("endpoint", JsonValue::Str(addr.to_string())),
+            ("n", JsonValue::Int(n as i64)),
+            ("d", JsonValue::Int(d as i64)),
+            ("k", JsonValue::Int(k as i64)),
+            ("injected_delay_ms", JsonValue::Int(delay_ms as i64)),
+            ("t_gains_seconds", JsonValue::Num(t_gains.as_secs_f64())),
+            ("wall_seconds_plain", JsonValue::Num(plain_secs)),
+            ("wall_seconds_speculative", JsonValue::Num(spec_secs)),
+            ("speedup", JsonValue::Num(speedup)),
+            ("spec_hits", JsonValue::Int(hits as i64)),
+            ("spec_misses", JsonValue::Int(misses as i64)),
+            ("spec_wasted_gains", JsonValue::Int(wasted as i64)),
+            ("hit_rate", JsonValue::Num(hit_rate)),
+            ("value_check", JsonValue::Num(r_plain.value as f64)),
+        ],
+    )
+    .expect("write BENCH_speculate.json");
+    println!("wrote {path}");
+}

@@ -139,6 +139,13 @@ pub struct AppConfig {
     /// Idle seconds before a server session may be reclaimed (0 =
     /// never).
     pub session_ttl_secs: u64,
+    /// Speculative cross-round gains depth for executor-backed engines
+    /// (`eval.speculate`; 0 = off). Sessions hint `Marginals` requests
+    /// so the executor precomputes the next round's gains for the
+    /// predicted top-`m` winners while the reply is in flight —
+    /// bit-identical results either way. `EXEMCL_SPECULATE` overrides
+    /// this key.
+    pub speculate: usize,
     /// Optional CSV input path (overrides the generator).
     pub csv: Option<String>,
     /// `serve` endpoint (`tcp:host:port` | `uds:/path`).
@@ -191,6 +198,7 @@ impl Default for AppConfig {
             queue: DEFAULT_QUEUE_CAPACITY,
             sessions: DEFAULT_SESSION_CAPACITY,
             session_ttl_secs: 0,
+            speculate: 0,
             csv: None,
             listen: "tcp:127.0.0.1:7171".into(),
             max_conns: DEFAULT_MAX_CONNS,
@@ -229,6 +237,7 @@ impl AppConfig {
             queue: raw.get_or("eval.queue", def.queue)?,
             sessions: raw.get_or("eval.sessions", def.sessions)?,
             session_ttl_secs: raw.get_or("eval.session_ttl_secs", def.session_ttl_secs)?,
+            speculate: raw.get_or("eval.speculate", def.speculate)?,
             csv: raw.get("data.csv").map(str::to_string),
             listen: raw.get("net.listen").unwrap_or(&def.listen).to_string(),
             max_conns: raw.get_or("net.max_conns", def.max_conns)?,
@@ -297,6 +306,7 @@ impl AppConfig {
             .session_capacity(self.sessions)
             .session_ttl_secs(self.session_ttl_secs)
             .memory_mib(self.memory_mib)
+            .speculate(self.speculate)
             .build()
     }
 
@@ -317,6 +327,7 @@ impl AppConfig {
             .queue_capacity(self.queue)
             .session_capacity(self.sessions)
             .session_ttl_secs(self.session_ttl_secs)
+            .speculate(self.speculate)
             .build()
     }
 }
@@ -459,6 +470,25 @@ mod tests {
         assert_eq!(cfg.sessions, 32);
         assert_eq!(cfg.session_ttl_secs, 600);
         let raw = RawConfig::parse("[eval]\nsessions = many\n").unwrap();
+        assert!(AppConfig::from_raw(&raw).is_err());
+    }
+
+    #[test]
+    fn speculate_key_parses_and_reaches_the_engine() {
+        let def = AppConfig::from_raw(&RawConfig::default()).unwrap();
+        assert_eq!(def.speculate, 0, "speculation is opt-in");
+        let raw = RawConfig::parse("[eval]\nbackend = service:cpu-st\nspeculate = 2\n").unwrap();
+        let cfg = AppConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.speculate, 2);
+        if std::env::var("EXEMCL_SPECULATE").is_err() {
+            let ds = crate::data::synth::UniformCube::new(3, 1.0).generate(32, 1);
+            let engine = cfg.engine(ds).unwrap();
+            assert_eq!(engine.speculate(), 2);
+            let r = engine.run(&crate::optim::Greedy::new(3)).unwrap();
+            assert_eq!(r.exemplars.len(), 3);
+            assert!(engine.metrics().unwrap().spec_hits.get() > 0);
+        }
+        let raw = RawConfig::parse("[eval]\nspeculate = deep\n").unwrap();
         assert!(AppConfig::from_raw(&raw).is_err());
     }
 

@@ -263,6 +263,18 @@ pub struct ServiceMetrics {
     pub tiles_node_local: Counter,
     /// Ground-tile chunks stolen from another NUMA node's shard.
     pub tiles_node_remote: Counter,
+    /// `Marginals` requests answered entirely from the session's
+    /// speculation cache (no backend launch on the request path).
+    pub spec_hits: Counter,
+    /// Speculation discards: a commit that matched no predicted winner,
+    /// or a `Marginals` the cached gains could not cover — the request
+    /// is then served fresh, so a miss costs only the wasted
+    /// speculative work, never correctness.
+    pub spec_misses: Counter,
+    /// Speculative gain entries computed but discarded unserved:
+    /// unpromoted depth-m branches, mismatch discards, and entries
+    /// still cached when the session closes.
+    pub spec_wasted_gains: Counter,
     /// Fused-gains batch width distribution (jobs per
     /// `marginal_gains_multi` launch the executor forms).
     pub fused_width: WidthHistogram,
@@ -289,6 +301,7 @@ impl ServiceMetrics {
              sessions(live={} opened={} closed={} evicted={}) \
              conns(live={} opened={} closed={} rejected={} unauthorized={}) \
              sched(assisted={} local_tiles={} remote_tiles={}) \
+             spec(hits={} misses={} wasted={}) \
              fused_width(n={} mean={:.1} max={}) wire={}B net(rx={}B tx={}B) \
              latency(mean={:.0}us p50={}us p95={}us max={}us)",
             self.requests.get(),
@@ -309,6 +322,9 @@ impl ServiceMetrics {
             self.tasks_assisted.get(),
             self.tiles_node_local.get(),
             self.tiles_node_remote.get(),
+            self.spec_hits.get(),
+            self.spec_misses.get(),
+            self.spec_wasted_gains.get(),
             self.fused_width.count(),
             self.fused_width.mean(),
             self.fused_width.max(),
@@ -417,6 +433,19 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("sched(assisted=2 local_tiles=40 remote_tiles=8)"), "{s}");
         assert!(s.contains("fused_width(n=1 mean=4.0 max=4)"), "{s}");
+    }
+
+    #[test]
+    fn speculation_counters_surface_in_the_summary() {
+        let m = ServiceMetrics::default();
+        m.spec_hits.add(9);
+        m.spec_misses.add(1);
+        m.spec_wasted_gains.add(123);
+        assert!(
+            m.summary().contains("spec(hits=9 misses=1 wasted=123)"),
+            "{}",
+            m.summary()
+        );
     }
 
     #[test]

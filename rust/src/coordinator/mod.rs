@@ -25,7 +25,7 @@
 //!       ▼            allowed to carry state)         + l0          device, ...) │
 //!      sid ◀─────────────────────────────────────────┘                          │
 //!       │                                                                       │
-//!       ├─ Marginals{sid, C}   ──▶ gains against resident dmin ──▶ |C| floats   │
+//!       ├─ Marginals{sid, C, m?} ▶ gains against resident dmin ──▶ |C| floats   │
 //!       ├─ CommitMany{sid, I}  ──▶ lower resident dmin          ──▶ ack         │
 //!       ├─ Value{sid}          ──▶ (l0 - Σ dmin)/n              ──▶ 1 float     │
 //!       ├─ Fork{sid}           ──▶ server-side state copy       ──▶ sid'        │
@@ -65,6 +65,41 @@
 //! queues and returns, so the next `Marginals` never waits a
 //! round-trip; the FIFO queue keeps the ordering exact.
 //!
+//! # Speculative cross-round gains
+//!
+//! A `Marginals` request may carry a **speculation hint** `m > 0`
+//! (clients emit it through `gains_hinted`; `Session` wires it from
+//! [`crate::engine::EngineBuilder::speculate`]). After the reply is on
+//! its way, the executor bets on the client's next move: it predicts
+//! the `m` most likely commits with the **same**
+//! [`crate::optim::argmax_first`] / [`crate::optim::top_m_first`] rule
+//! the optimizers use, pre-applies each predicted winner on a *clone*
+//! of the session state with the **same** `commit_many` kernel the real
+//! commit path runs, and pre-scores the following round's candidates —
+//! all branches of all hinted sessions in the batch fused into one
+//! [`Oracle::marginal_gains_multi`] launch. That work overlaps the
+//! reply's flight time and the client's think time:
+//!
+//! ```text
+//!   Marginals{sid, C, m} ──▶ gains g ──▶ reply ┐ (in flight / client thinking)
+//!                                              ├─ speculate: w = top-m(g),
+//!                                              │  state' = commit(clone, w),
+//!                                              │  gains'(C \ {w}) — fused epoch
+//!   CommitMany{sid, [w]} ──▶ w predicted? ─yes─▶ promote state' (bit-identical),
+//!                                       └─ no ─▶ discard, commit fresh (counted)
+//!   Marginals{sid, C'}   ──▶ C' ⊆ cached? ─yes─▶ reply from cache (spec hit)
+//!                                        └ no ─▶ discard (counted), compute
+//! ```
+//!
+//! Speculation is **never approximate**: a promoted state is the output
+//! of the same kernel on the same bytes a fresh commit would see, and
+//! cached gains are served only when they cover the request (relying on
+//! the per-candidate batch-invariance of the gains kernels, pinned by
+//! `cpu` tests). Any mismatch discards and computes fresh.
+//! [`ServiceMetrics`] counts `spec_hits` / `spec_misses` /
+//! `spec_wasted_gains` (gain entries computed speculatively but never
+//! served). With `m = 0` (the default) the path is inert.
+//!
 //! This executor serves in-process clients through channels; the same
 //! protocol goes out-of-process over TCP/UDS via [`crate::net`], whose
 //! server decodes frames into these requests one connection at a time.
@@ -73,6 +108,7 @@ pub mod metrics;
 mod sessions;
 
 use std::cell::RefCell;
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -81,12 +117,13 @@ use std::time::Instant;
 use crate::cpu::SchedStats;
 use crate::data::Dataset;
 use crate::optim::oracle::{DminState, GainsJob, Oracle};
+use crate::optim::top_m_first;
 use crate::{Error, Result};
 
 pub use metrics::{Counter, Gauge, ServiceMetrics, WireBytes};
 pub use sessions::{SessionConfig, DEFAULT_SESSION_CAPACITY};
 
-use sessions::SessionTable;
+use sessions::{SessionEntry, SessionTable, SpecBranch, Speculation};
 
 /// Maximum queued requests before senders block (backpressure).
 pub const DEFAULT_QUEUE_CAPACITY: usize = 64;
@@ -118,6 +155,9 @@ enum Request {
     Marginals {
         sid: u64,
         candidates: Vec<usize>,
+        /// Speculation hint: predict this many next-commit winners after
+        /// replying and precompute the following round's gains (0 = off).
+        speculate: usize,
         reply: mpsc::Sender<Result<Vec<f32>>>,
         enqueued: Instant,
     },
@@ -316,8 +356,20 @@ impl Drop for Service {
 struct MarginalsReq {
     sid: u64,
     candidates: Vec<usize>,
+    speculate: usize,
     reply: mpsc::Sender<Result<Vec<f32>>>,
     enqueued: Instant,
+}
+
+/// One hinted request's launching point for the speculative epoch: the
+/// gains the client was just served (cache-covered hits seed from the
+/// cache's **full** candidate set, so a subset refresh — LazyGreedy's
+/// per-candidate re-checks — still predicts over everything).
+struct SpecSeed {
+    sid: u64,
+    candidates: Vec<usize>,
+    gains: Vec<f32>,
+    depth: usize,
 }
 
 fn executor_loop(
@@ -370,19 +422,20 @@ fn executor_loop(
                     next = leftover;
                     serve_eval_batch(oracle, batch, metrics);
                 }
-                Request::Marginals { sid, candidates, reply, enqueued } => {
+                Request::Marginals { sid, candidates, speculate, reply, enqueued } => {
                     // coalesce adjacent marginals — possibly from
                     // distinct connections/sessions — into one fused
                     // multi-state gains pass on the backend
-                    let mut batch = vec![MarginalsReq { sid, candidates, reply, enqueued }];
+                    let mut batch =
+                        vec![MarginalsReq { sid, candidates, speculate, reply, enqueued }];
                     let outcome = drain_same_kind(
                         rx,
                         queue_depth,
                         &metrics.marginals_coalesced,
                         &mut batch,
                         |r| match r {
-                            Request::Marginals { sid, candidates, reply, enqueued } => {
-                                Ok(MarginalsReq { sid, candidates, reply, enqueued })
+                            Request::Marginals { sid, candidates, speculate, reply, enqueued } => {
+                                Ok(MarginalsReq { sid, candidates, speculate, reply, enqueued })
                             }
                             other => Err(other),
                         },
@@ -480,7 +533,10 @@ fn serve_eval_batch(
 /// Serve a batch of `Marginals` requests — one fused multi-state gains
 /// pass on the backend when more than one session is represented
 /// ([`Oracle::marginal_gains_multi`]); per-request byte accounting and
-/// error replies are identical to serving them singly.
+/// error replies are identical to serving them singly. Requests covered
+/// by a promoted speculation cache are answered from it without backend
+/// work; hinted requests seed the speculative epoch that runs after the
+/// replies are away.
 fn serve_marginals_batch(
     oracle: &dyn Oracle,
     table: &mut SessionTable,
@@ -488,20 +544,39 @@ fn serve_marginals_batch(
     metrics: &ServiceMetrics,
 ) {
     // request-side accounting + LRU stamps; a missing session answers
-    // alone without failing its batch-mates
+    // alone without failing its batch-mates. A speculation hint rides
+    // as one extra wire word (sid + depth instead of sid alone).
     let mut errors: Vec<Option<Error>> = Vec::with_capacity(batch.len());
     for r in &batch {
-        metrics.wire.marginals_req.add(WIRE_HEADER + 8 + 8 * r.candidates.len() as u64);
-        metrics.gains_evaluated.add(r.candidates.len() as u64);
+        let head = if r.speculate > 0 { 16 } else { 8 };
+        metrics.wire.marginals_req.add(WIRE_HEADER + head + 8 * r.candidates.len() as u64);
         errors.push(table.touch(r.sid).err());
     }
-    // shared borrows of every resolved state at once: stamps are done,
-    // so the table is only read from here on
+    // answer from the speculation cache where a promoted branch covers
+    // the request; seeds collect the hinted requests' launch points for
+    // the epoch below (hits seed from the cache's full set)
+    let mut seeds: Vec<SpecSeed> = Vec::new();
+    let mut cached: Vec<Option<Vec<f32>>> = Vec::with_capacity(batch.len());
+    for (r, err) in batch.iter().zip(&errors) {
+        if err.is_some() {
+            cached.push(None);
+            continue;
+        }
+        cached.push(spec_lookup(table, r, &mut seeds, metrics));
+    }
+    // fresh backend work for everything the cache could not cover; the
+    // stamps are done, so the table is only read for the fused pass
+    for ((r, err), hit) in batch.iter().zip(&errors).zip(&cached) {
+        if err.is_none() && hit.is_none() {
+            metrics.gains_evaluated.add(r.candidates.len() as u64);
+        }
+    }
     let jobs: Vec<GainsJob<'_>> = batch
         .iter()
         .zip(&errors)
-        .filter(|(_, e)| e.is_none())
-        .map(|(r, _)| GainsJob {
+        .zip(&cached)
+        .filter(|((_, e), c)| e.is_none() && c.is_none())
+        .map(|((r, _), _)| GainsJob {
             state: &table.get_ref(r.sid).expect("touched above").state,
             candidates: &r.candidates,
         })
@@ -511,15 +586,214 @@ fn serve_marginals_batch(
     }
     let mut results = oracle.marginal_gains_multi(&jobs).into_iter();
     drop(jobs); // release the borrows of `batch` and `table` before replying
-    for (r, err) in batch.into_iter().zip(errors) {
-        let out = match err {
-            Some(e) => Err(e),
-            None => results.next().expect("one result per fused job"),
+    for ((r, err), hit) in batch.into_iter().zip(errors).zip(cached) {
+        let out = match (err, hit) {
+            (Some(e), _) => Err(e),
+            (None, Some(gains)) => Ok(gains),
+            (None, None) => results.next().expect("one result per fused job"),
         };
         let reply_bytes = out.as_ref().map(|g| 4 * g.len() as u64).unwrap_or(0);
         metrics.wire.marginals_reply.add(WIRE_HEADER + reply_bytes);
         metrics.latency.observe(r.enqueued.elapsed());
+        if r.speculate > 0 {
+            if let Ok(gains) = &out {
+                // fresh-computed requests seed from what was served;
+                // cache hits already seeded from the cache's full set
+                if !seeds.iter().any(|s| s.sid == r.sid) {
+                    seeds.push(SpecSeed {
+                        sid: r.sid,
+                        candidates: r.candidates.clone(),
+                        gains: gains.clone(),
+                        depth: r.speculate,
+                    });
+                }
+            }
+        }
         let _ = r.reply.send(out);
+    }
+    // replies are on their way — speculate while they fly
+    speculate_epoch(oracle, table, seeds, metrics);
+}
+
+/// Try to answer one `Marginals` request from the session's promoted
+/// speculation cache. A covering `Ready` cache yields the cached gains
+/// in request order (bit-identical to a fresh pass by the kernels'
+/// per-candidate batch-invariance) and, when the request carries a
+/// hint, seeds the next speculative epoch from the cache's **full**
+/// candidate set. A never-served cache that cannot cover the request is
+/// discarded and counted; `Pending` branches are left in place — they
+/// are bets on the next *commit*, not on this request.
+fn spec_lookup(
+    table: &mut SessionTable,
+    r: &MarginalsReq,
+    seeds: &mut Vec<SpecSeed>,
+    metrics: &ServiceMetrics,
+) -> Option<Vec<f32>> {
+    let entry = table.get_mut(r.sid).ok()?;
+    let Some(Speculation::Ready { candidates, gains, served }) = &mut entry.spec else {
+        return None;
+    };
+    let by_candidate: HashMap<usize, f32> =
+        candidates.iter().copied().zip(gains.iter().copied()).collect();
+    let covered: Option<Vec<f32>> =
+        r.candidates.iter().map(|c| by_candidate.get(c).copied()).collect();
+    match covered {
+        Some(hit) => {
+            *served = true;
+            metrics.spec_hits.add(1);
+            if r.speculate > 0 {
+                seeds.push(SpecSeed {
+                    sid: r.sid,
+                    candidates: candidates.clone(),
+                    gains: gains.clone(),
+                    depth: r.speculate,
+                });
+            }
+            Some(hit)
+        }
+        None => {
+            let was_served = *served;
+            let spec = entry.spec.take().expect("matched above");
+            metrics.spec_misses.add(1);
+            if !was_served {
+                metrics.spec_wasted_gains.add(spec.gain_entries());
+            }
+            None
+        }
+    }
+}
+
+/// The speculative epoch: predict each hinted session's next commits
+/// with the same [`top_m_first`] rule the optimizers use, pre-apply
+/// each predicted winner on a **clone** of the session state with the
+/// same `commit_many` kernel the real commit path runs, and pre-score
+/// the following round's candidates — every branch of every session in
+/// one fused [`Oracle::marginal_gains_multi`] launch, overlapping the
+/// replies' flight time and the clients' think time. A session whose
+/// slot still holds an unserved cache keeps it (a fresh epoch must not
+/// clobber an outstanding bet); a wrong bet costs only the discard.
+fn speculate_epoch(
+    oracle: &dyn Oracle,
+    table: &mut SessionTable,
+    seeds: Vec<SpecSeed>,
+    metrics: &ServiceMetrics,
+) {
+    if seeds.is_empty() {
+        return;
+    }
+    let mut plans: Vec<(u64, Vec<SpecBranch>)> = Vec::new();
+    for seed in seeds {
+        let Some(entry) = table.get_ref(seed.sid) else { continue };
+        let open_slot = match &entry.spec {
+            None => true,
+            Some(Speculation::Ready { served, .. }) => *served,
+            Some(Speculation::Pending(_)) => false,
+        };
+        if !open_slot {
+            continue;
+        }
+        let mut branches: Vec<SpecBranch> = Vec::new();
+        for pos in top_m_first(&seed.gains, seed.depth) {
+            let winner = seed.candidates[pos];
+            let mut state = entry.state.clone();
+            if oracle.commit_many(&mut state, &[winner]).is_err() {
+                continue;
+            }
+            let candidates: Vec<usize> =
+                seed.candidates.iter().copied().filter(|&c| c != winner).collect();
+            if candidates.is_empty() {
+                continue;
+            }
+            branches.push(SpecBranch { winner, state, candidates, gains: Vec::new() });
+        }
+        if !branches.is_empty() {
+            plans.push((seed.sid, branches));
+        }
+    }
+    let jobs: Vec<GainsJob<'_>> = plans
+        .iter()
+        .flat_map(|(_, branches)| {
+            branches.iter().map(|b| GainsJob { state: &b.state, candidates: &b.candidates })
+        })
+        .collect();
+    if jobs.is_empty() {
+        return;
+    }
+    metrics.fused_width.observe(jobs.len() as u64);
+    let results = oracle.marginal_gains_multi(&jobs);
+    drop(jobs);
+    let mut results = results.into_iter();
+    for (_, branches) in &mut plans {
+        branches.retain_mut(|b| match results.next().expect("one result per fused job") {
+            Ok(gains) => {
+                metrics.gains_evaluated.add(gains.len() as u64);
+                b.gains = gains;
+                true
+            }
+            Err(_) => false,
+        });
+    }
+    for (sid, branches) in plans {
+        if branches.is_empty() {
+            continue;
+        }
+        let Ok(entry) = table.get_mut(sid) else { continue };
+        // the gate above admitted only empty or served-Ready slots; a
+        // Pending here was planted by an earlier seed of this same
+        // epoch (duplicate sid in one batch) and loses to the newer bet
+        if let Some(old @ Speculation::Pending(_)) = entry.spec.take() {
+            metrics.spec_wasted_gains.add(old.gain_entries());
+        }
+        entry.spec = Some(Speculation::Pending(branches));
+    }
+}
+
+/// Apply one `CommitMany` against a session, consulting its speculation
+/// cache first. A single-index commit matching a pending branch's
+/// predicted winner **promotes** that branch: its state came out of the
+/// same `commit_many` kernel run on a clone of the same base, so the
+/// promoted bytes are identical to committing fresh, and its
+/// precomputed gains become the session's `Ready` cache for the next
+/// `Marginals`. Any other commit discards the cache (counted) and runs
+/// the kernel for real.
+fn apply_commit(
+    oracle: &dyn Oracle,
+    entry: &mut SessionEntry,
+    idxs: &[usize],
+    metrics: &ServiceMetrics,
+) -> Result<()> {
+    match entry.spec.take() {
+        Some(Speculation::Pending(mut branches)) => {
+            if idxs.len() == 1 {
+                if let Some(pos) = branches.iter().position(|b| b.winner == idxs[0]) {
+                    let won = branches.swap_remove(pos);
+                    let unpromoted: u64 = branches.iter().map(|b| b.gains.len() as u64).sum();
+                    metrics.spec_wasted_gains.add(unpromoted);
+                    entry.state = won.state;
+                    entry.spec = Some(Speculation::Ready {
+                        candidates: won.candidates,
+                        gains: won.gains,
+                        served: false,
+                    });
+                    return Ok(());
+                }
+            }
+            // the client went another way: every branch was a wrong bet
+            metrics.spec_misses.add(1);
+            let wasted: u64 = branches.iter().map(|b| b.gains.len() as u64).sum();
+            metrics.spec_wasted_gains.add(wasted);
+            oracle.commit_many(&mut entry.state, idxs)
+        }
+        Some(spec @ Speculation::Ready { .. }) => {
+            // a commit invalidates any cached next-round gains; a cache
+            // that already answered a request is spent, not wasted
+            if let Speculation::Ready { served: false, .. } = &spec {
+                metrics.spec_misses.add(1);
+                metrics.spec_wasted_gains.add(spec.gain_entries());
+            }
+            oracle.commit_many(&mut entry.state, idxs)
+        }
+        None => oracle.commit_many(&mut entry.state, idxs),
     }
 }
 
@@ -575,21 +849,26 @@ fn serve_single(
             metrics.latency.observe(enqueued.elapsed());
             let _ = reply.send(Ok(sid));
         }
-        Request::Marginals { sid, candidates, reply, enqueued } => {
+        Request::Marginals { sid, candidates, speculate, reply, enqueued } => {
             // a stray marginals (e.g. the request that broke an
             // eval_sets coalescing run) is a one-element fused batch
             serve_marginals_batch(
                 oracle,
                 table,
-                vec![MarginalsReq { sid, candidates, reply, enqueued }],
+                vec![MarginalsReq { sid, candidates, speculate, reply, enqueued }],
                 metrics,
             );
         }
         Request::CommitMany { sid, idxs, reply, enqueued } => {
             metrics.wire.commit_req.add(WIRE_HEADER + 8 + 8 * idxs.len() as u64);
             // one batched pass on the backend (CPU oracles fuse the
-            // whole exemplar batch into a single ground-set stream)
-            let r = table.get_mut(sid).and_then(|e| oracle.commit_many(&mut e.state, &idxs));
+            // whole exemplar batch into a single ground-set stream) —
+            // unless a speculative branch predicted this exact commit,
+            // in which case its pre-applied state is promoted instead
+            let r = match table.get_mut(sid) {
+                Err(e) => Err(e),
+                Ok(entry) => apply_commit(oracle, entry, &idxs, metrics),
+            };
             metrics.wire.commit_reply.add(WIRE_HEADER);
             metrics.latency.observe(enqueued.elapsed());
             let _ = reply.send(r);
@@ -621,8 +900,13 @@ fn serve_single(
         }
         Request::Close { sid, reply } => {
             metrics.wire.other.add(WIRE_HEADER + 8);
-            if table.close(sid) {
+            if let Some(entry) = table.close(sid) {
                 metrics.sessions_closed.add(1);
+                // speculative work the closing session never consumed
+                match entry.spec {
+                    None | Some(Speculation::Ready { served: true, .. }) => {}
+                    Some(spec) => metrics.spec_wasted_gains.add(spec.gain_entries()),
+                }
             }
             metrics.sessions_live.set(table.len() as u64);
             if let Some(reply) = reply {
@@ -810,9 +1094,20 @@ impl<'a> RemoteSession<'a> {
     /// Marginal gains against the server-resident state. Wire cost:
     /// O(|candidates|) out, O(|candidates|) back.
     pub fn gains(&self, candidates: &[usize]) -> Result<Vec<f32>> {
+        self.gains_hinted(candidates, 0)
+    }
+
+    /// [`RemoteSession::gains`] with a speculation hint: `speculate > 0`
+    /// asks the executor to predict this session's next `speculate` most
+    /// likely commits after replying and precompute the following
+    /// round's gains while this reply is in flight (the module docs
+    /// describe the lifecycle). Purely a performance hint — replies are
+    /// bit-identical for any depth.
+    pub fn gains_hinted(&self, candidates: &[usize], speculate: usize) -> Result<Vec<f32>> {
         self.request(|reply| Request::Marginals {
             sid: self.sid,
             candidates: candidates.to_vec(),
+            speculate,
             reply,
             enqueued: Instant::now(),
         })
@@ -1102,6 +1397,107 @@ mod tests {
         let fused = svc.metrics().fused_width.count();
         assert!(fused >= 2, "expected >= 2 observed batches, got {fused}");
         assert!(svc.metrics().fused_width.max() >= 1);
+        svc.shutdown();
+    }
+
+    /// The speculation fast path is a shortcut, never an approximation:
+    /// a hinted greedy run returns the same exemplars, the same values
+    /// and the same dmin **bits** as an unhinted one, with every round
+    /// after the cold start served from the cache and nothing wasted.
+    #[test]
+    fn speculated_greedy_is_bitwise_identical_and_all_hits() {
+        let svc = spawn_cpu_service();
+        let h = svc.handle();
+        let plain = Greedy::new(5).run(&mut Session::remote(&h).unwrap()).unwrap();
+        assert_eq!(svc.metrics().spec_hits.get(), 0, "no hint, no speculation");
+
+        let mut spec_session = Session::remote(&h).unwrap().with_speculation(1);
+        let spec = Greedy::new(5).run(&mut spec_session).unwrap();
+        assert_eq!(spec.exemplars, plain.exemplars);
+        assert_eq!(spec.value.to_bits(), plain.value.to_bits());
+        for (a, b) in spec.curve.iter().zip(&plain.curve) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // the promoted state is bit-identical to a fresh commit chain
+        let direct = cpu_oracle();
+        let mut want = direct.init_state();
+        for &e in &spec.exemplars {
+            direct.commit(&mut want, e).unwrap();
+        }
+        let got = spec_session.export_state().unwrap();
+        for (a, b) in got.dmin.iter().zip(&want.dmin) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // plain greedy commits exactly what the executor predicted:
+        // every warm round hits, nothing is mispredicted or wasted
+        assert_eq!(svc.metrics().spec_hits.get(), 4, "k-1 warm rounds hit");
+        assert_eq!(svc.metrics().spec_misses.get(), 0);
+        assert_eq!(svc.metrics().spec_wasted_gains.get(), 0);
+        svc.shutdown();
+    }
+
+    /// A commit the executor did not predict discards the speculative
+    /// branch — counted as a miss, its gain entries as waste — and the
+    /// session continues on the fresh-commit path, fully consistent.
+    #[test]
+    fn mispredicted_commit_discards_and_counts() {
+        let svc = spawn_cpu_service();
+        let h = svc.handle();
+        let mut s = h.open().unwrap();
+        let cands: Vec<usize> = (0..16).collect();
+        let gains = s.gains_hinted(&cands, 1).unwrap();
+        let predicted = crate::optim::argmax_first(&gains).unwrap();
+        // deliberately commit something other than the predicted winner
+        let contrarian = cands.iter().copied().find(|&c| c != predicted).unwrap();
+        s.commit_many(&[contrarian]).unwrap();
+        s.sync().unwrap();
+        assert_eq!(svc.metrics().spec_misses.get(), 1);
+        assert_eq!(svc.metrics().spec_wasted_gains.get(), 15, "|C| - 1 entries thrown away");
+        assert_eq!(svc.metrics().spec_hits.get(), 0);
+        // the fresh-commit fallback left the state byte-exact
+        let direct = cpu_oracle();
+        let mut want = direct.init_state();
+        direct.commit(&mut want, contrarian).unwrap();
+        let got = s.export().unwrap();
+        for (a, b) in got.dmin.iter().zip(&want.dmin) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        svc.shutdown();
+    }
+
+    /// A depth-m hint keeps m branches alive; committing any of the
+    /// predicted winners promotes its branch, and the next `Marginals`
+    /// over the surviving candidates is a cache hit.
+    #[test]
+    fn depth_m_promotes_any_predicted_winner() {
+        let svc = spawn_cpu_service();
+        let h = svc.handle();
+        let mut s = h.open().unwrap();
+        let cands: Vec<usize> = (0..16).collect();
+        let gains = s.gains_hinted(&cands, 3).unwrap();
+        // commit the *third*-ranked candidate — still a predicted branch
+        let third = crate::optim::top_m_first(&gains, 3)[2];
+        s.commit_many(&[cands[third]]).unwrap();
+        let next: Vec<usize> = cands.iter().copied().filter(|&c| c != cands[third]).collect();
+        let gains_evaluated_before = svc.metrics().gains_evaluated.get();
+        let cached = s.gains_hinted(&next, 0).unwrap();
+        assert_eq!(svc.metrics().spec_hits.get(), 1);
+        assert_eq!(
+            svc.metrics().gains_evaluated.get(),
+            gains_evaluated_before,
+            "the hit round did no backend gains work"
+        );
+        // cached gains match a fresh computation bitwise
+        let direct = cpu_oracle();
+        let mut st = direct.init_state();
+        direct.commit(&mut st, cands[third]).unwrap();
+        let want = direct.marginal_gains(&st, &next).unwrap();
+        for (a, b) in cached.iter().zip(&want) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // the two unpromoted branches were wasted: 2 × |next| entries
+        assert_eq!(svc.metrics().spec_misses.get(), 0);
+        assert_eq!(svc.metrics().spec_wasted_gains.get(), 2 * next.len() as u64);
         svc.shutdown();
     }
 

@@ -44,6 +44,62 @@ impl Default for SessionConfig {
     }
 }
 
+/// One speculative branch: the executor's bet that the client's next
+/// commit will be `winner`, pre-applied and pre-scored while the
+/// `Marginals` reply was in flight. `state` is the post-commit state
+/// produced by the **same** `commit_many` kernel the real commit path
+/// runs (on a clone), so promoting a branch is bit-identical to
+/// committing fresh; `gains` are next-round marginal gains over
+/// `candidates` against that state, computed by the same
+/// `marginal_gains_multi` kernel a fresh request would hit.
+pub(crate) struct SpecBranch {
+    /// The predicted commit (a candidate index into the ground set).
+    pub winner: usize,
+    /// Post-commit state: `commit_many(base.clone(), [winner])`.
+    pub state: DminState,
+    /// The candidates the speculative gains cover (the hinted request's
+    /// candidates minus `winner`).
+    pub candidates: Vec<usize>,
+    /// Speculative next-round gains, aligned with `candidates`.
+    pub gains: Vec<f32>,
+}
+
+/// Per-session speculation cache, keyed implicitly by the session's
+/// committed prefix: any commit that is not a predicted winner, and any
+/// gains request the cached entry cannot cover, discards it (the
+/// executor counts the discard) — speculation is only ever a shortcut
+/// to byte-identical results, never an approximation.
+pub(crate) enum Speculation {
+    /// Branches awaiting the client's commit (top-m winner hypotheses,
+    /// best first).
+    Pending(Vec<SpecBranch>),
+    /// A branch's commit matched and its state was promoted into the
+    /// session; its precomputed gains can answer the next `Marginals`
+    /// whose candidates they cover.
+    Ready {
+        /// Candidates the cached gains cover.
+        candidates: Vec<usize>,
+        /// Cached next-round gains, aligned with `candidates`.
+        gains: Vec<f32>,
+        /// Whether any `Marginals` was answered from this cache — a
+        /// served cache that later dies is spent, not wasted.
+        served: bool,
+    },
+}
+
+impl Speculation {
+    /// Total speculative gain entries held — what
+    /// `spec_wasted_gains` charges when the cache is discarded.
+    pub fn gain_entries(&self) -> u64 {
+        match self {
+            Speculation::Pending(branches) => {
+                branches.iter().map(|b| b.gains.len() as u64).sum()
+            }
+            Speculation::Ready { gains, .. } => gains.len() as u64,
+        }
+    }
+}
+
 /// One server-resident session.
 pub(crate) struct SessionEntry {
     /// The optimizer state, resident next to the oracle.
@@ -51,6 +107,10 @@ pub(crate) struct SessionEntry {
     /// `L({e0})·n` for this session's `Value` replies (partition
     /// sessions carry a restricted constant).
     pub l0: f64,
+    /// Speculative cross-round cache (`None` when no speculation is
+    /// outstanding). Dropped with the entry on close/eviction; forks
+    /// start without one (the child's first round computes fresh).
+    pub spec: Option<Speculation>,
     /// Last request touch, for TTL + LRU.
     last_used: Instant,
 }
@@ -87,7 +147,8 @@ impl SessionTable {
         let evicted = self.make_room();
         let sid = self.next_id;
         self.next_id += 1;
-        self.entries.insert(sid, SessionEntry { state, l0, last_used: Instant::now() });
+        self.entries
+            .insert(sid, SessionEntry { state, l0, spec: None, last_used: Instant::now() });
         (sid, evicted)
     }
 
@@ -121,9 +182,10 @@ impl SessionTable {
         self.entries.get(&sid)
     }
 
-    /// Remove a session; `true` if it existed.
-    pub fn close(&mut self, sid: u64) -> bool {
-        self.entries.remove(&sid).is_some()
+    /// Remove a session, handing back its entry (if it existed) so the
+    /// executor can settle its speculation-cache accounting.
+    pub fn close(&mut self, sid: u64) -> Option<SessionEntry> {
+        self.entries.remove(&sid)
     }
 
     /// Drop every entry idle past the TTL; returns the evicted count.
@@ -170,8 +232,8 @@ mod tests {
         t.get_mut(a).unwrap().state.exemplars.push(7);
         assert_eq!(t.get_mut(a).unwrap().state.exemplars, vec![7]);
         assert!(t.get_mut(b).unwrap().state.exemplars.is_empty(), "sessions are isolated");
-        assert!(t.close(a));
-        assert!(!t.close(a), "double close is idempotent");
+        assert!(t.close(a).is_some());
+        assert!(t.close(a).is_none(), "double close is idempotent");
         assert!(t.get_mut(a).is_err());
         assert_eq!(t.len(), 1);
     }

@@ -101,6 +101,18 @@
 //! (one shared [`crate::data::ShadowSet`] construction path), so
 //! cross-backend comparisons isolate threading, and cross-dtype
 //! comparisons isolate precision.
+//!
+//! These determinism guarantees are what the coordinator's
+//! **speculative epochs** lean on (see [`crate::coordinator`],
+//! "Speculative cross-round gains"): the executor precomputes a
+//! predicted next round with the *same* `commit_many` /
+//! `marginal_gains_multi` kernels it would run on the live path, and a
+//! served cache entry may cover a *subset* of its candidates in any
+//! order. That is sound precisely because each candidate's gain is an
+//! independent fold over the same canonical chunk tree — batching,
+//! fusion into a multi-job launch, and candidate order never change a
+//! single bit of any individual gain (pinned by the
+//! `speculation_invariants_*` tests below).
 
 mod kernels;
 pub mod pool;
@@ -1106,6 +1118,90 @@ mod tests {
         for (a, b) in seq.dmin.iter().zip(&mt_state.dmin) {
             assert!((a - b).abs() < 1e-6);
         }
+    }
+
+    /// Speculation invariant 1: the speculative branch state is built
+    /// with `commit_many(state, &[w])` on a **clone** of the base
+    /// state; a later real `commit_many(&[w])` (or `commit(w)`) on the
+    /// base must land on the same bits, or a promoted branch would
+    /// diverge from the path it replaced.
+    #[test]
+    fn speculation_invariants_single_commit_is_bitwise_stable() {
+        let ds = small();
+        for threads in [1usize, 4] {
+            let mt = MultiThread::new(ds.clone(), threads);
+            let mut base = mt.init_state();
+            mt.commit_many(&mut base, &[9, 2]).unwrap();
+            // branch: clone + batched single-element commit (the
+            // executor's speculative apply)
+            let mut branch = base.clone();
+            mt.commit_many(&mut branch, &[33]).unwrap();
+            // live path A: batched commit on the original
+            let mut live = base.clone();
+            mt.commit_many(&mut live, &[33]).unwrap();
+            // live path B: the scalar commit verb
+            let mut scalar = base.clone();
+            mt.commit(&mut scalar, 33).unwrap();
+            let bits = |s: &DminState| s.dmin.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&branch), bits(&live), "threads={threads}");
+            assert_eq!(bits(&branch), bits(&scalar), "threads={threads}");
+            assert_eq!(branch.exemplars, live.exemplars);
+        }
+    }
+
+    /// Speculation invariant 2: each candidate's gain is independent of
+    /// which other candidates share the batch and of their order — a
+    /// cache computed over the full set `C \ {w}` must serve any subset
+    /// request bit-for-bit.
+    #[test]
+    fn speculation_invariants_gains_are_batch_and_order_independent() {
+        let ds = small();
+        for threads in [1usize, 4] {
+            let mt = MultiThread::new(ds.clone(), threads);
+            let mut state = mt.init_state();
+            mt.commit_many(&mut state, &[5, 50]).unwrap();
+            let full: Vec<usize> = (0..ds.n()).filter(|&i| i != 5 && i != 50).collect();
+            let all = mt.marginal_gains(&state, &full).unwrap();
+            let by_idx: std::collections::HashMap<usize, u32> =
+                full.iter().zip(&all).map(|(&i, g)| (i, g.to_bits())).collect();
+            // a sparse subset, and the same subset reversed
+            let subset: Vec<usize> = vec![61, 1, 33, 14, 2];
+            let rev: Vec<usize> = subset.iter().rev().copied().collect();
+            for cands in [&subset, &rev] {
+                let got = mt.marginal_gains(&state, cands).unwrap();
+                for (&c, g) in cands.iter().zip(&got) {
+                    assert_eq!(
+                        g.to_bits(),
+                        by_idx[&c],
+                        "candidate {c} drifted out of batch context (threads={threads})"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Speculation invariant 3: fusing a gains job into a multi-job
+    /// launch (the speculative epoch shares one launch across sessions)
+    /// changes nothing vs. running the job alone.
+    #[test]
+    fn speculation_invariants_fused_multi_jobs_match_solo_runs() {
+        let ds = small();
+        let mt = MultiThread::new(ds.clone(), 4);
+        let mut s1 = mt.init_state();
+        mt.commit_many(&mut s1, &[0, 7]).unwrap();
+        let mut s2 = mt.init_state();
+        mt.commit_many(&mut s2, &[40]).unwrap();
+        let c1: Vec<usize> = (1..30).collect();
+        let c2: Vec<usize> = vec![63, 3, 12];
+        let fused = mt.marginal_gains_multi(&[
+            GainsJob { state: &s1, candidates: &c1 },
+            GainsJob { state: &s2, candidates: &c2 },
+        ]);
+        let solo1 = mt.marginal_gains(&s1, &c1).unwrap();
+        let solo2 = mt.marginal_gains(&s2, &c2).unwrap();
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(fused[0].as_ref().unwrap()), bits(&solo1));
+        assert_eq!(bits(fused[1].as_ref().unwrap()), bits(&solo2));
     }
 
     /// Satellite property test: batched marginal gains ≡ the naive

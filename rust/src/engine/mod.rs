@@ -212,6 +212,22 @@ fn env_remote() -> Option<Listen> {
     }
 }
 
+/// The `EXEMCL_SPECULATE` override for [`EngineBuilder::speculate`]:
+/// a speculation depth that wins over the builder knob either way
+/// (including `0` to force speculation off). A value that doesn't
+/// parse is warned about and ignored — same contract as
+/// `EXEMCL_REMOTE`.
+fn env_speculate() -> Option<usize> {
+    let raw = std::env::var("EXEMCL_SPECULATE").ok().filter(|s| !s.is_empty())?;
+    match raw.trim().parse::<usize>() {
+        Ok(depth) => Some(depth),
+        Err(e) => {
+            log_warn!("ignoring unparseable EXEMCL_SPECULATE={raw:?}: {e}");
+            None
+        }
+    }
+}
+
 /// The [`Backend::Auto`] decision table, pure so it can be unit-tested:
 ///
 /// | condition                                      | choice         |
@@ -340,6 +356,7 @@ pub struct EngineBuilder {
     simd: SimdChoice,
     pin: PinMode,
     cluster: ClusterConfig,
+    speculate: usize,
 }
 
 impl Default for EngineBuilder {
@@ -356,6 +373,7 @@ impl Default for EngineBuilder {
             simd: SimdChoice::Auto,
             pin: PinMode::Auto,
             cluster: ClusterConfig::default(),
+            speculate: 0,
         }
     }
 }
@@ -436,6 +454,26 @@ impl EngineBuilder {
         self
     }
 
+    /// Speculative cross-round gains depth (default `0`: off). With
+    /// depth `m ≥ 1`, sessions opened by [`Engine::session`] attach a
+    /// `speculate` hint to their `Marginals` requests: after serving a
+    /// gains batch the executor predicts the top-`m` winners, applies
+    /// each with the **same** commit kernel, and precomputes the next
+    /// round's gains while the reply is in flight — a hit serves from
+    /// the cache, a mispredicted commit discards it and computes
+    /// fresh, so results are bit-identical either way (see
+    /// [`crate::coordinator`]). Only the executor-backed backends
+    /// ([`Backend::Service`], [`Backend::Tcp`], [`Backend::Uds`]) can
+    /// act on the hint; direct local sessions ignore it. The
+    /// `EXEMCL_SPECULATE` environment variable overrides this knob
+    /// either way. Unlike the server-side executor knobs, this is
+    /// **not** rejected on remote engines: the hint is emitted by the
+    /// client per request, not configured on `exemcl serve`.
+    pub fn speculate(mut self, depth: usize) -> Self {
+        self.speculate = depth;
+        self
+    }
+
     /// Failure-handling and handshake knobs for [`Backend::Cluster`]
     /// (per-shard deadline, retries/backoff, auth token, handshake
     /// compression) — ignored by every other backend.
@@ -466,6 +504,7 @@ impl EngineBuilder {
     /// [`Backend::Cluster`] dials every shard server (its "dataset" is
     /// distributed; [`Engine::dataset`] is an empty placeholder).
     pub fn build(self) -> Result<Engine> {
+        let speculate = env_speculate().unwrap_or(self.speculate);
         if self.backend.is_remote() {
             if self.dataset.is_some() {
                 return Err(Error::InvalidArgument(
@@ -510,6 +549,7 @@ impl EngineBuilder {
                     dataset,
                     dtype: self.dtype,
                     backend: self.backend,
+                    speculate,
                     inner: EngineInner::Cluster(cluster),
                 });
             }
@@ -519,6 +559,7 @@ impl EngineBuilder {
                 dataset: client.dataset().clone(),
                 dtype: self.dtype,
                 backend: self.backend,
+                speculate,
                 inner: EngineInner::Net(client),
             });
         }
@@ -559,6 +600,7 @@ impl EngineBuilder {
                     dataset: ds,
                     dtype: self.dtype,
                     backend,
+                    speculate,
                     inner: EngineInner::Net(client),
                 });
             }
@@ -593,7 +635,7 @@ impl EngineBuilder {
                 self.pin,
             )?),
         };
-        Ok(Engine { dataset: ds, dtype: self.dtype, backend, inner })
+        Ok(Engine { dataset: ds, dtype: self.dtype, backend, speculate, inner })
     }
 }
 
@@ -617,6 +659,7 @@ pub struct Engine {
     dataset: Dataset,
     dtype: Dtype,
     backend: Backend,
+    speculate: usize,
     inner: EngineInner,
 }
 
@@ -632,16 +675,21 @@ impl Engine {
     /// engines have no single-session view of their distributed ground
     /// set — drive them through [`Engine::run`] with a GreeDi optimizer.
     pub fn session(&self) -> Result<Session<'_>> {
-        match &self.inner {
-            EngineInner::Direct(o) => Ok(Session::over(o.as_ref())),
-            EngineInner::Service(s) => Session::remote(s.handle_ref()),
-            EngineInner::Net(c) => Session::over_net(c),
-            EngineInner::Cluster(_) => Err(Error::InvalidArgument(
-                "a cluster engine spans N shard servers and has no single-session view; \
-                 run a GreeDi optimizer via Engine::run"
-                    .into(),
-            )),
-        }
+        let session = match &self.inner {
+            EngineInner::Direct(o) => Session::over(o.as_ref()),
+            EngineInner::Service(s) => Session::remote(s.handle_ref())?,
+            EngineInner::Net(c) => Session::over_net(c)?,
+            EngineInner::Cluster(_) => {
+                return Err(Error::InvalidArgument(
+                    "a cluster engine spans N shard servers and has no single-session view; \
+                     run a GreeDi optimizer via Engine::run"
+                        .into(),
+                ))
+            }
+        };
+        // the speculation cap rides every session: executor-backed
+        // sessions emit it as a per-request hint, local ones ignore it
+        Ok(session.with_speculation(self.speculate))
     }
 
     /// Run an optimizer in a fresh session and return its result — or,
@@ -723,6 +771,13 @@ impl Engine {
     /// The backend this engine was built with.
     pub fn backend(&self) -> &Backend {
         &self.backend
+    }
+
+    /// The speculative gains depth sessions will hint (0 = off) —
+    /// [`EngineBuilder::speculate`] after the `EXEMCL_SPECULATE`
+    /// override.
+    pub fn speculate(&self) -> usize {
+        self.speculate
     }
 
     /// The backing oracle's descriptive name (backend/dissimilarity/
@@ -1143,6 +1198,52 @@ mod tests {
             let got = e.session().unwrap().eval_sets(&sets).unwrap();
             assert_eq!(got, want, "pin={pin}");
         }
+    }
+
+    /// The `speculate` knob reaches service sessions: a speculative
+    /// greedy run matches the non-speculative one bit for bit and the
+    /// executor records cache hits — and, being a client-side hint, the
+    /// knob is *not* rejected on remote engines the way server-side
+    /// executor knobs are.
+    #[test]
+    fn speculate_knob_rides_sessions_and_is_bit_identical() {
+        use crate::optim::Greedy;
+        if std::env::var("EXEMCL_SPECULATE").is_ok() {
+            return; // env forcing overrides the knob under test
+        }
+        let plain = Engine::builder()
+            .dataset(small())
+            .backend(Backend::service_over(Backend::SingleThread))
+            .build()
+            .unwrap();
+        let spec = Engine::builder()
+            .dataset(small())
+            .backend(Backend::service_over(Backend::SingleThread))
+            .speculate(1)
+            .build()
+            .unwrap();
+        assert_eq!(plain.speculate(), 0);
+        assert_eq!(spec.speculate(), 1);
+        let k = 5;
+        let a = plain.run(&Greedy::new(k)).unwrap();
+        let b = spec.run(&Greedy::new(k)).unwrap();
+        assert_eq!(a.exemplars, b.exemplars);
+        assert_eq!(a.value.to_bits(), b.value.to_bits());
+        let m = spec.metrics().unwrap();
+        assert_eq!(m.spec_hits.get(), (k - 1) as u64, "every non-final round hits");
+        assert_eq!(m.spec_misses.get(), 0);
+        assert_eq!(plain.metrics().unwrap().spec_hits.get(), 0);
+        // remote engines accept the knob (the hint is client-emitted);
+        // the failure here is the dead endpoint, not an argument check
+        let r = Engine::builder()
+            .backend(Backend::Tcp { addr: "127.0.0.1:1".into() })
+            .speculate(3)
+            .build();
+        assert!(r.is_err(), "nothing listens on port 1");
+        assert!(
+            !matches!(r, Err(Error::InvalidArgument(_))),
+            "speculate must not trip the remote knob rejection"
+        );
     }
 
     #[test]

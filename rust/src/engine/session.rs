@@ -58,6 +58,11 @@ pub struct Session<'a> {
     inner: Inner<'a>,
     /// Shared across forks: total gain entries + set evaluations issued.
     evals: Rc<Cell<u64>>,
+    /// Speculation depth cap advertised to optimizers (0 = off): the
+    /// maximum `speculate` hint an optimizer should attach to its gains
+    /// requests (`eval.speculate` / `EXEMCL_SPECULATE` /
+    /// [`crate::engine::EngineBuilder::speculate`]).
+    spec_cap: usize,
 }
 
 impl<'a> Session<'a> {
@@ -67,13 +72,18 @@ impl<'a> Session<'a> {
         Self {
             inner: Inner::Local { oracle, state: oracle.init_state() },
             evals: Rc::new(Cell::new(0)),
+            spec_cap: 0,
         }
     }
 
     /// Open a fresh **remote** session: the state is created and kept in
     /// the service executor's table; this side holds the id.
     pub fn remote(handle: &'a ServiceHandle) -> Result<Self> {
-        Ok(Self { inner: Inner::Remote(handle.open()?), evals: Rc::new(Cell::new(0)) })
+        Ok(Self {
+            inner: Inner::Remote(handle.open()?),
+            evals: Rc::new(Cell::new(0)),
+            spec_cap: 0,
+        })
     }
 
     /// Open a remote session from an explicit initial state + `L({e0})·n`
@@ -85,6 +95,7 @@ impl<'a> Session<'a> {
         Ok(Self {
             inner: Inner::Remote(handle.open_seeded(state, l0)?),
             evals: Rc::new(Cell::new(0)),
+            spec_cap: 0,
         })
     }
 
@@ -92,7 +103,11 @@ impl<'a> Session<'a> {
     /// framed connection — what [`crate::engine::Engine::session`] does
     /// for [`crate::engine::Backend::Tcp`] / `Uds` engines.
     pub fn over_net(client: &'a NetClient) -> Result<Self> {
-        Ok(Self { inner: Inner::Net(client.open()?), evals: Rc::new(Cell::new(0)) })
+        Ok(Self {
+            inner: Inner::Net(client.open()?),
+            evals: Rc::new(Cell::new(0)),
+            spec_cap: 0,
+        })
     }
 
     /// [`Session::remote_seeded`] for an out-of-process server.
@@ -100,7 +115,27 @@ impl<'a> Session<'a> {
         Ok(Self {
             inner: Inner::Net(client.open_seeded(state, l0)?),
             evals: Rc::new(Cell::new(0)),
+            spec_cap: 0,
         })
+    }
+
+    /// Set the speculation depth cap optimizers read through
+    /// [`Session::speculate_cap`] (builder-style; 0 disables). The
+    /// engine applies its `speculate` knob here; forks and siblings
+    /// inherit it.
+    pub fn with_speculation(mut self, cap: usize) -> Self {
+        self.spec_cap = cap;
+        self
+    }
+
+    /// The speculation depth cap for this session (0 = speculation
+    /// off). Optimizers consult this when choosing the `speculate`
+    /// hint for [`Session::gains_hinted`]: plain Greedy caps it at 1
+    /// (its pick *is* the batch argmax), LazyGreedy uses the full
+    /// depth for top-m coverage, StochasticGreedy never hints (its
+    /// next-round sample is fresh).
+    pub fn speculate_cap(&self) -> usize {
+        self.spec_cap
     }
 
     /// The in-process oracle this session drives, if it is local (GreeDi
@@ -151,8 +186,12 @@ impl<'a> Session<'a> {
                 "seeded sibling sessions need a remote backend (use PartitionOracle locally)"
                     .into(),
             )),
-            Inner::Remote(r) => Session::remote_seeded(r.handle(), state, l0),
-            Inner::Net(s) => Session::net_seeded(s.client(), state, l0),
+            Inner::Remote(r) => {
+                Ok(Session::remote_seeded(r.handle(), state, l0)?.with_speculation(self.spec_cap))
+            }
+            Inner::Net(s) => {
+                Ok(Session::net_seeded(s.client(), state, l0)?.with_speculation(self.spec_cap))
+            }
         }
     }
 
@@ -181,7 +220,7 @@ impl<'a> Session<'a> {
             Inner::Remote(r) => Inner::Remote(r.fork()?),
             Inner::Net(s) => Inner::Net(s.fork()?),
         };
-        Ok(Session { inner, evals: self.evals.clone() })
+        Ok(Session { inner, evals: self.evals.clone(), spec_cap: self.spec_cap })
     }
 
     /// A new session over the same backend starting from the empty
@@ -195,7 +234,7 @@ impl<'a> Session<'a> {
             Inner::Remote(r) => Inner::Remote(r.handle().open()?),
             Inner::Net(s) => Inner::Net(s.client().open()?),
         };
-        Ok(Session { inner, evals: self.evals.clone() })
+        Ok(Session { inner, evals: self.evals.clone(), spec_cap: self.spec_cap })
     }
 
     /// Reset this session to the empty summary (counter keeps running).
@@ -217,10 +256,25 @@ impl<'a> Session<'a> {
     /// this session's state (the optimizer-aware fast path; index-only
     /// on the wire for remote sessions).
     pub fn gains(&self, candidates: &[usize]) -> Result<Vec<f32>> {
+        self.gains_hinted(candidates, 0)
+    }
+
+    /// [`Session::gains`] with a **speculation hint**: `depth > 0` asks
+    /// the serving executor to treat the top-`depth` candidates (by the
+    /// shared [`crate::optim::argmax_first`] ordering) as likely next
+    /// commits, pre-applying each and precomputing the following
+    /// round's gains while this reply is in flight. The hint never
+    /// changes this call's result — speculation is bit-identical by
+    /// construction and a mismatched commit discards it — so `depth` is
+    /// purely a performance contract. Local sessions have no executor
+    /// to speculate (there is no round-trip to hide) and ignore the
+    /// hint. The depth is passed through verbatim; optimizers are the
+    /// ones that clamp to [`Session::speculate_cap`].
+    pub fn gains_hinted(&self, candidates: &[usize], depth: usize) -> Result<Vec<f32>> {
         let g = match &self.inner {
             Inner::Local { oracle, state } => oracle.marginal_gains(state, candidates)?,
-            Inner::Remote(r) => r.gains(candidates)?,
-            Inner::Net(s) => s.gains(candidates)?,
+            Inner::Remote(r) => r.gains_hinted(candidates, depth)?,
+            Inner::Net(s) => s.gains_hinted(candidates, depth)?,
         };
         self.evals.set(self.evals.get() + g.len() as u64);
         Ok(g)

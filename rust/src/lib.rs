@@ -83,6 +83,17 @@
 //! hand-carried [`optim::DminState`] remains the contract backends
 //! implement; user code drives engines and sessions.
 //!
+//! Executor-backed engines can also **speculate across rounds**:
+//! `.speculate(m)` (the `eval.speculate` config key, or
+//! `EXEMCL_SPECULATE`) makes sessions hint their gains requests so the
+//! executor pre-applies the predicted top-`m` winners and precomputes
+//! the next round's gains while the reply is in flight — a greedy
+//! round then costs one round-trip instead of a round-trip plus a
+//! gains launch. Results are **bit-identical** with speculation on or
+//! off: the speculative path runs the same kernels on the same bytes,
+//! and a mispredicted commit discards the cache and computes fresh
+//! (see [`coordinator`], "Speculative cross-round gains").
+//!
 //! The same protocol goes **out of process** over TCP or Unix-domain
 //! sockets ([`net`]): `exemcl serve` loads a dataset and serves it,
 //! and a remote engine runs any optimizer against it unchanged —

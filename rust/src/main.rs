@@ -47,6 +47,9 @@ fn usage() -> ! {
                eval.pin (auto|on|off — pin pool workers to cores; auto pins\n\
                          only on multi-NUMA hosts)\n\
                eval.memory_mib eval.queue eval.sessions eval.session_ttl_secs\n\
+               eval.speculate (depth m — precompute next-round gains for the\n\
+                               predicted top-m winners on executor-backed\n\
+                               engines; bit-identical, EXEMCL_SPECULATE overrides)\n\
                net.listen (tcp:host:port|uds:/path) net.max_conns net.accept_timeout_secs\n\
                net.token (shared auth token; EXEMCL_TOKEN fallback)\n\
                net.compress (RLE-compress the Welcome mirror; both ends opt in)\n\
@@ -116,6 +119,7 @@ fn canonical_pair(k: &str, v: String) -> (String, String) {
         "threads" => "eval.threads",
         "simd" => "eval.simd",
         "pin" => "eval.pin",
+        "speculate" => "eval.speculate",
         "shard" => "shard.spec",
         "cluster" => return ("eval.backend".into(), format!("cluster:{v}")),
         other => return (other.to_string(), v),

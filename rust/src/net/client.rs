@@ -52,6 +52,19 @@ fn mismatch(got: &Reply) -> Error {
     Error::Service(format!("protocol mismatch: unexpected {label} reply"))
 }
 
+/// Test/bench-only latency injection: `EXEMCL_NET_DELAY_MS` (read once
+/// per connection) sleeps that many milliseconds before **every**
+/// request frame is written, simulating a network round-trip on
+/// loopback/UDS transports. This is how the speculation ablation
+/// (`benches/ablation_speculate.rs`) and the latency tests give the
+/// server a realistic idle window to speculate into; it has no effect
+/// on what crosses the wire, only on when.
+fn injected_delay() -> Option<Duration> {
+    let raw = std::env::var("EXEMCL_NET_DELAY_MS").ok()?;
+    let ms: u64 = raw.trim().parse().ok().filter(|&ms| ms > 0)?;
+    Some(Duration::from_millis(ms))
+}
+
 /// The socket plus the FIFO bookkeeping for pipelined replies.
 struct Conn {
     stream: NetStream,
@@ -64,12 +77,18 @@ struct Conn {
     /// Set on any transport/framing failure: the stream may be
     /// desynchronized, so every later call fails fast.
     broken: bool,
+    /// Injected per-request latency ([`injected_delay`]); `None` in
+    /// production.
+    delay: Option<Duration>,
 }
 
 impl Conn {
     fn send(&mut self, req: &Request, tx: &Counter) -> Result<()> {
         if self.broken {
             return Err(Error::Service("connection broken by an earlier transport error".into()));
+        }
+        if let Some(d) = self.delay {
+            std::thread::sleep(d);
         }
         let buf = codec::encode_request(req);
         if let Err(e) = self.stream.write_all(&buf).and_then(|()| self.stream.flush()) {
@@ -207,8 +226,13 @@ impl NetClient {
         stream.set_write_timeout(opts.timeout)?;
         let tx_bytes = Counter::default();
         let rx_bytes = Counter::default();
-        let mut conn =
-            Conn { stream, pending: VecDeque::new(), failed: HashMap::new(), broken: false };
+        let mut conn = Conn {
+            stream,
+            pending: VecDeque::new(),
+            failed: HashMap::new(),
+            broken: false,
+            delay: injected_delay(),
+        };
         let hello = match &opts.shard {
             None => Request::Hello { token: opts.token.clone(), compress: opts.compress },
             Some((shard_id, plan)) => Request::HelloShard {
@@ -450,7 +474,17 @@ impl<'a> NetSession<'a> {
     /// Marginal gains against the server-resident state: one
     /// `sid + indices` frame out, one float vector back.
     pub fn gains(&self, candidates: &[usize]) -> Result<Vec<f32>> {
-        let req = Request::Marginals { sid: self.sid, candidates: candidates.to_vec() };
+        self.gains_hinted(candidates, 0)
+    }
+
+    /// [`NetSession::gains`] with a speculation hint: `speculate > 0`
+    /// rides the hinted frame (one extra wire word) and asks the server
+    /// to predict this session's next `speculate` most likely commits
+    /// and precompute the following round's gains while this reply is
+    /// in flight. Purely a performance hint — replies are bit-identical
+    /// for any depth (see [`crate::coordinator`] on speculative gains).
+    pub fn gains_hinted(&self, candidates: &[usize], speculate: usize) -> Result<Vec<f32>> {
+        let req = Request::Marginals { sid: self.sid, candidates: candidates.to_vec(), speculate };
         match self.client.call_for(Some(self.sid), &req)? {
             Reply::Floats(v) => Ok(v),
             other => Err(mismatch(&other)),

@@ -87,6 +87,11 @@ pub mod kind {
     /// Fetch raw dataset rows by (shard-local) index — the GreeDi
     /// reducer's one extra verb.
     pub const ROWS: u8 = 0x0B;
+    /// `Marginals` carrying a speculation hint (`sid + depth + indices`).
+    /// A separate kind so the plain hot-path frame keeps its exact
+    /// PR 5 byte form; servers treat the depth as a pure performance
+    /// hint (see [`crate::coordinator`] on speculative gains).
+    pub const MARGINALS_SPEC: u8 = 0x0C;
 
     /// Handshake reply: dataset mirror + backend identity.
     pub const WELCOME: u8 = 0x41;
@@ -159,6 +164,13 @@ pub enum Request {
         sid: u64,
         /// Candidate indices.
         candidates: Vec<usize>,
+        /// Speculation hint: ask the server to predict this many
+        /// next-commit winners and precompute the following round's
+        /// gains while the reply is in flight. `0` (the default)
+        /// encodes to the original [`kind::MARGINALS`] frame; `> 0`
+        /// rides the [`kind::MARGINALS_SPEC`] frame with one extra
+        /// depth word.
+        speculate: usize,
     },
     /// Commit exemplars into session `sid`.
     CommitMany {
@@ -362,7 +374,13 @@ fn request_kind(req: &Request) -> u8 {
         Request::Rows { .. } => kind::ROWS,
         Request::EvalSets { .. } => kind::EVAL_SETS,
         Request::Open { .. } => kind::OPEN,
-        Request::Marginals { .. } => kind::MARGINALS,
+        Request::Marginals { speculate, .. } => {
+            if *speculate > 0 {
+                kind::MARGINALS_SPEC
+            } else {
+                kind::MARGINALS
+            }
+        }
         Request::CommitMany { .. } => kind::COMMIT_MANY,
         Request::Value { .. } => kind::VALUE,
         Request::Fork { .. } => kind::FORK,
@@ -420,8 +438,12 @@ pub fn encode_request(req: &Request) -> Vec<u8> {
         },
         // the hot-path messages carry no count: |C| = (len - 8) / 8, so
         // the frame is byte-for-byte the modeled `header + sid + indices`
-        Request::Marginals { sid, candidates } => {
+        // (a speculation hint adds exactly one depth word before the run)
+        Request::Marginals { sid, candidates, speculate } => {
             put_u64(&mut p, *sid);
+            if *speculate > 0 {
+                put_u64(&mut p, *speculate as u64);
+            }
             put_indices(&mut p, candidates);
         }
         Request::CommitMany { sid, idxs } => {
@@ -691,7 +713,21 @@ pub fn decode_request(kind: u8, payload: &[u8]) -> Result<Request> {
         }
         kind::MARGINALS => {
             let (sid, candidates) = sid_and_indices(&mut p)?;
-            Request::Marginals { sid, candidates }
+            Request::Marginals { sid, candidates, speculate: 0 }
+        }
+        kind::MARGINALS_SPEC => {
+            let sid = p.u64()?;
+            let speculate = p.u64()? as usize;
+            if speculate == 0 {
+                let e = FrameError::Malformed("hinted marginals with depth 0".into());
+                return Err(e.into());
+            }
+            let rest = p.remaining();
+            if rest % 8 != 0 {
+                let e = FrameError::Malformed(format!("index run of {rest} bytes not 8-aligned"));
+                return Err(e.into());
+            }
+            Request::Marginals { sid, candidates: p.indices(rest / 8)?, speculate }
         }
         kind::COMMIT_MANY => {
             let (sid, idxs) = sid_and_indices(&mut p)?;
@@ -1014,8 +1050,13 @@ mod tests {
         roundtrip_request(Request::EvalSets { sets: vec![vec![0, 7, 3], vec![], vec![9]] });
         roundtrip_request(Request::Open { seed: None });
         roundtrip_request(Request::Open { seed: Some((state(), 123.625)) });
-        roundtrip_request(Request::Marginals { sid: 7, candidates: vec![0, 1, usize::MAX >> 1] });
-        roundtrip_request(Request::Marginals { sid: 7, candidates: vec![] });
+        roundtrip_request(Request::Marginals {
+            sid: 7,
+            candidates: vec![0, 1, usize::MAX >> 1],
+            speculate: 0,
+        });
+        roundtrip_request(Request::Marginals { sid: 7, candidates: vec![], speculate: 0 });
+        roundtrip_request(Request::Marginals { sid: 7, candidates: vec![3, 1], speculate: 2 });
         roundtrip_request(Request::CommitMany { sid: 1, idxs: vec![4, 4, 4] });
         roundtrip_request(Request::Value { sid: u64::MAX });
         roundtrip_request(Request::Fork { sid: 0 });
@@ -1080,8 +1121,16 @@ mod tests {
     /// header + sid + 8 per index out, header + 4 per float back.
     #[test]
     fn hot_path_frames_match_the_service_byte_model() {
-        let m = encode_request(&Request::Marginals { sid: 1, candidates: vec![5; 37] });
+        let m =
+            encode_request(&Request::Marginals { sid: 1, candidates: vec![5; 37], speculate: 0 });
         assert_eq!(m.len(), 16 + 8 + 8 * 37);
+        // the speculation hint costs exactly one extra word — and rides
+        // its own kind so the plain frame above stays byte-identical
+        let s =
+            encode_request(&Request::Marginals { sid: 1, candidates: vec![5; 37], speculate: 3 });
+        assert_eq!(s.len(), 16 + 16 + 8 * 37);
+        assert_eq!(s[5], kind::MARGINALS_SPEC);
+        assert_eq!(m[5], kind::MARGINALS);
         let c = encode_request(&Request::CommitMany { sid: 1, idxs: vec![5; 3] });
         assert_eq!(c.len(), 16 + 8 + 8 * 3);
         let g = encode_reply(&Reply::Floats(vec![0.0; 37]));
@@ -1143,6 +1192,13 @@ mod tests {
         // marginals payload not 8-aligned after the sid
         let e = decode_request(kind::MARGINALS, &[0u8; 13]).unwrap_err();
         assert!(matches!(e, Error::Frame(FrameError::Malformed(_))), "{e}");
+        // a hinted marginals must actually carry a hint: depth 0 on the
+        // spec kind would make two wire forms for the same message
+        let mut p = Vec::new();
+        put_u64(&mut p, 1); // sid
+        put_u64(&mut p, 0); // depth 0
+        let e = decode_request(kind::MARGINALS_SPEC, &p).unwrap_err();
+        assert!(matches!(e, Error::Frame(FrameError::Malformed(_))), "{e}");
         // a count field announcing more elements than the payload holds
         let mut p = Vec::new();
         put_u64(&mut p, 1 << 40);
@@ -1176,6 +1232,7 @@ mod tests {
         stream.extend_from_slice(&encode_request(&Request::Marginals {
             sid: 1,
             candidates: vec![0, 2],
+            speculate: 0,
         }));
         let mut r = &stream[..];
         let (k1, p1) = read_frame(&mut r).unwrap().unwrap();

@@ -58,6 +58,7 @@
 //! | `EvalSets`   | count, then per set: len, idx…                       |
 //! | `Open`       | flag(u8); seeded: l0, dmin_len, dmin…, ex_len, ex…   |
 //! | `Marginals`  | sid, idx… (count = (len−8)/8)                        |
+//! | `MarginalsSpec` | sid, depth, idx… (count = (len−16)/8)             |
 //! | `CommitMany` | sid, idx… (count = (len−8)/8)                        |
 //! | `Value`/`Fork`/`Export`/`Close` | sid                               |
 //! | `Floats`     | f32… (count = len/4)                                 |
@@ -77,6 +78,23 @@
 //! per-round traffic after it is index-only. A `HelloShard` handshake
 //! (see [`crate::shard`]) shrinks that mirror to the connection's shard
 //! — O(n·d/N) — and `net.compress` RLE-compresses what remains.
+//!
+//! # Speculative gains across the wire
+//!
+//! `MarginalsSpec` is `Marginals` plus one depth word: a client built
+//! with `eval.speculate = m > 0` asks the server's executor to predict
+//! its next `m` commits after replying and precompute the following
+//! round's gains *while the reply and the commit are in flight* — the
+//! executor-side lifecycle (predict → pre-commit on a clone → promote
+//! or discard) lives in [`crate::coordinator`]. On the transport this
+//! buys the most where it hurts the most: at a round-trip latency of
+//! `R`, a non-speculating greedy round costs `R + T_gains`, while a
+//! correctly predicted round costs `≈ R` (the gains ran inside the
+//! latency window). Replies are **bit-identical** either way; servers
+//! treat the depth purely as a performance hint. The env knob
+//! `EXEMCL_NET_DELAY_MS` (test/bench only, read at connect) injects a
+//! per-request client-side delay so loopback transports can exercise
+//! exactly this trade — `benches/ablation_speculate.rs` measures it.
 //!
 //! # Quick start (two terminals)
 //!

@@ -561,8 +561,10 @@ fn serve_request<'h>(
                 Reply::Sid(sid)
             })
         }
-        Request::Marginals { sid, candidates } => match sessions.get(&sid) {
-            Some(s) => ok_or(s.gains(&candidates), Reply::Floats),
+        Request::Marginals { sid, candidates, speculate } => match sessions.get(&sid) {
+            // the hint rides through untouched: the executor decides
+            // what (if anything) to speculate after it replies
+            Some(s) => ok_or(s.gains_hinted(&candidates, speculate), Reply::Floats),
             None => unknown(sid),
         },
         Request::CommitMany { sid, idxs } => match sessions.get_mut(&sid) {

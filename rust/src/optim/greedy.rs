@@ -16,7 +16,7 @@
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
-use super::{OptimResult, Optimizer, Session};
+use super::{argmax_first, OptimResult, Optimizer, Session};
 use crate::data::Rng;
 use crate::{Error, Result};
 
@@ -77,14 +77,21 @@ impl Greedy {
         // allocation per round now that the oracle calls are batched
         let mut candidates: Vec<usize> = Vec::with_capacity(n);
 
-        for _round in 0..rounds {
+        for round in 0..rounds {
             candidates.clear();
             candidates.extend((0..n).filter(|&i| !selected[i]));
             if candidates.is_empty() {
                 break;
             }
             let gains = match self.mode {
-                GreedyMode::MarginalGains => session.gains(&candidates)?,
+                // plain greedy commits the batch argmax, so depth 1 is
+                // full speculation coverage; the final round's winner
+                // ends the run, so it carries no hint (nothing to
+                // prefetch)
+                GreedyMode::MarginalGains => {
+                    let depth = if round + 1 < rounds { session.speculate_cap().min(1) } else { 0 };
+                    session.gains_hinted(&candidates, depth)?
+                }
                 GreedyMode::WorkMatrix => {
                     // S_multi = { S ∪ {c} } for every candidate c (§IV-A)
                     let sets: Vec<Vec<usize>> = candidates
@@ -99,12 +106,7 @@ impl Greedy {
                     session.eval_sets(&sets)?.into_iter().map(|f| f - base).collect()
                 }
             };
-            let best = gains
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(Ordering::Equal))
-                .map(|(i, _)| i)
-                .expect("non-empty candidates");
+            let best = argmax_first(&gains).expect("non-empty candidates");
             session.commit(candidates[best])?;
             selected[candidates[best]] = true;
             curve.push(session.value()?);
@@ -164,7 +166,11 @@ impl PartialOrd for HeapEntry {
 
 impl Ord for HeapEntry {
     fn cmp(&self, other: &Self) -> Ordering {
-        self.bound.partial_cmp(&other.bound).unwrap_or(Ordering::Equal)
+        // total order so a NaN bound cannot poison the heap invariant:
+        // total_cmp agrees with partial_cmp on ordinary floats and
+        // ranks NaN deterministically (above +inf for the positive-sign
+        // pattern the kernels never produce; either way, defined)
+        self.bound.total_cmp(&other.bound)
     }
 }
 
@@ -213,8 +219,13 @@ impl LazyGreedy {
             }
             let candidates: Vec<usize> = (0..n).filter(|&i| !committed[i]).collect();
             if !candidates.is_empty() {
-                // seed the heap: one batched gains pass over the pool
-                let gains = session.gains(&candidates)?;
+                // seed the heap: one batched gains pass over the pool.
+                // Lazy's pick is not necessarily the batch argmax, so
+                // the speculation hint asks for top-m coverage (the
+                // engine's configured depth); no hint when this pass's
+                // commit already ends the run.
+                let seed_depth = if rounds > 1 { session.speculate_cap() } else { 0 };
+                let gains = session.gains_hinted(&candidates, seed_depth)?;
                 let mut heap: BinaryHeap<HeapEntry> = candidates
                     .iter()
                     .zip(&gains)
@@ -241,7 +252,8 @@ impl LazyGreedy {
                             }
                         }
                         let idxs: Vec<usize> = stale.iter().map(|e| e.idx).collect();
-                        let fresh = session.gains(&idxs)?;
+                        let depth = if round + 1 < rounds { session.speculate_cap() } else { 0 };
+                        let fresh = session.gains_hinted(&idxs, depth)?;
                         for (e, g) in idxs.iter().zip(fresh) {
                             heap.push(HeapEntry { bound: g, idx: *e, round });
                         }
@@ -342,13 +354,13 @@ impl StochasticGreedy {
             }
             let picks = rng.sample_indices(pool.len(), sample.min(pool.len()));
             let candidates: Vec<usize> = picks.iter().map(|&p| pool[p]).collect();
+            // deliberately hint-free (depth 0): the next round draws a
+            // fresh sample from the remaining pool, which is almost
+            // surely disjoint from this one, so speculative next-round
+            // gains over `candidates \ {winner}` could never be served
+            // — emitting a hint here would be pure wasted work
             let gains = session.gains(&candidates)?;
-            let best = gains
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(Ordering::Equal))
-                .map(|(i, _)| i)
-                .expect("non-empty sample");
+            let best = argmax_first(&gains).expect("non-empty sample");
             session.commit(candidates[best])?;
             selected[candidates[best]] = true;
             curve.push(session.value()?);

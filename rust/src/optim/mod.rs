@@ -26,7 +26,7 @@ pub mod sieve;
 
 pub use greedi::{GreeDi, PartitionOracle};
 pub use greedy::{Greedy, GreedyMode, LazyGreedy, StochasticGreedy};
-pub use oracle::{DminState, GainsJob, Oracle};
+pub use oracle::{argmax_first, top_m_first, DminState, GainsJob, Oracle};
 pub use sieve::{Salsa, SieveStreaming, SieveStreamingPP, ThreeSieves};
 
 pub use crate::engine::Session;

@@ -25,6 +25,63 @@
 use crate::data::Dataset;
 use crate::{Error, Result};
 
+/// Index of the **first** maximal element of `gains`, with defined
+/// NaN/tie semantics: ties keep the earliest index, and a NaN never
+/// beats anything (a NaN incumbent is displaced by any non-NaN, so the
+/// result is NaN-indexed only when every element is NaN). `None` only
+/// on an empty slice.
+///
+/// This single rule is shared by every optimizer's selection step *and*
+/// the executor's speculative winner prediction
+/// ([`crate::coordinator`]): speculation hits exactly because both
+/// sides agree on which candidate a greedy round will commit.
+pub fn argmax_first(gains: &[f32]) -> Option<usize> {
+    let mut best: Option<usize> = None;
+    for (i, &g) in gains.iter().enumerate() {
+        match best {
+            None => best = Some(i),
+            Some(b) => {
+                let incumbent = gains[b];
+                // strict `>` keeps the first of tied maxima; NaN
+                // comparisons are false, so NaN never wins a slot it
+                // doesn't already hold
+                if g > incumbent || (incumbent.is_nan() && !g.is_nan()) {
+                    best = Some(i);
+                }
+            }
+        }
+    }
+    best
+}
+
+/// Indices of the `m` largest elements of `gains`, best first, under
+/// the same ordering as [`argmax_first`]: descending by value, ties
+/// broken toward the earlier index, NaNs ordered last. Returns fewer
+/// than `m` indices only when `gains` is shorter than `m`.
+///
+/// `top_m_first(gains, 1)` selects exactly `argmax_first(gains)` — the
+/// executor's depth-m speculation relies on that agreement.
+pub fn top_m_first(gains: &[f32], m: usize) -> Vec<usize> {
+    let m = m.min(gains.len());
+    if m == 0 {
+        return Vec::new();
+    }
+    let mut order: Vec<usize> = (0..gains.len()).collect();
+    // total order matching argmax_first: greater values first, NaN
+    // below everything, equal values (and NaN vs NaN) by index
+    order.sort_by(|&a, &b| {
+        let (x, y) = (gains[a], gains[b]);
+        match (x.is_nan(), y.is_nan()) {
+            (false, false) => y.partial_cmp(&x).unwrap().then(a.cmp(&b)),
+            (false, true) => std::cmp::Ordering::Less,
+            (true, false) => std::cmp::Ordering::Greater,
+            (true, true) => a.cmp(&b),
+        }
+    });
+    order.truncate(m);
+    order
+}
+
 /// Cached optimizer state: for every ground point the squared distance to
 /// its nearest committed exemplar, with the auxiliary exemplar `e0 = 0`
 /// folded in (`dmin_i <= |v_i|^2` always).
@@ -198,5 +255,47 @@ impl<O: Oracle + ?Sized> Oracle for Box<O> {
 
     fn name(&self) -> String {
         (**self).name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_first_keeps_the_earliest_tie() {
+        assert_eq!(argmax_first(&[]), None);
+        assert_eq!(argmax_first(&[1.0]), Some(0));
+        assert_eq!(argmax_first(&[1.0, 3.0, 2.0]), Some(1));
+        assert_eq!(argmax_first(&[2.0, 3.0, 3.0, 1.0]), Some(1), "first of tied maxima");
+        assert_eq!(argmax_first(&[0.0, -0.0]), Some(0), "0.0 == -0.0 keeps the first");
+    }
+
+    #[test]
+    fn argmax_first_never_picks_nan_over_a_number() {
+        assert_eq!(argmax_first(&[f32::NAN, 1.0, 2.0]), Some(2));
+        assert_eq!(argmax_first(&[1.0, f32::NAN, 0.5]), Some(0));
+        assert_eq!(argmax_first(&[f32::NAN, f32::NAN]), Some(0), "all-NaN falls back to first");
+        assert_eq!(argmax_first(&[f32::NEG_INFINITY, f32::NAN]), Some(0));
+    }
+
+    #[test]
+    fn top_m_first_orders_like_argmax_first() {
+        assert_eq!(top_m_first(&[], 3), Vec::<usize>::new());
+        assert_eq!(top_m_first(&[1.0, 3.0, 2.0], 0), Vec::<usize>::new());
+        assert_eq!(top_m_first(&[1.0, 3.0, 2.0], 2), vec![1, 2]);
+        assert_eq!(top_m_first(&[2.0, 3.0, 3.0, 1.0], 3), vec![1, 2, 0], "ties by index");
+        assert_eq!(top_m_first(&[1.0, 2.0], 5), vec![1, 0], "clamped to len");
+        assert_eq!(top_m_first(&[f32::NAN, 1.0, 2.0], 2), vec![2, 1], "NaN sorts last");
+        // depth-1 agreement with argmax_first on every pattern above
+        for gains in [
+            vec![1.0, 3.0, 2.0],
+            vec![2.0f32, 3.0, 3.0, 1.0],
+            vec![f32::NAN, 1.0, 2.0],
+            vec![1.0, f32::NAN, 0.5],
+            vec![f32::NAN, f32::NAN],
+        ] {
+            assert_eq!(top_m_first(&gains, 1), vec![argmax_first(&gains).unwrap()]);
+        }
     }
 }

@@ -247,7 +247,7 @@ fn sessions_are_isolated_per_connection() {
     thief.write_all(&codec::encode_request(&codec::Request::hello())).unwrap();
     let (k, p) = codec::read_frame(&mut thief).unwrap().unwrap();
     assert!(matches!(codec::decode_reply(k, &p).unwrap(), codec::Reply::Welcome { .. }));
-    let steal = codec::Request::Marginals { sid: s.sid(), candidates: vec![0, 1] };
+    let steal = codec::Request::Marginals { sid: s.sid(), candidates: vec![0, 1], speculate: 0 };
     thief.write_all(&codec::encode_request(&steal)).unwrap();
     let (k, p) = codec::read_frame(&mut thief).unwrap().unwrap();
     match codec::decode_reply(k, &p).unwrap() {

@@ -1,0 +1,354 @@
+//! Speculative cross-round gains, end to end: the equivalence matrix
+//! (speculative vs. non-speculative runs are bit-identical — exemplar
+//! sequence, every curve point, and the exported dmin bits — across
+//! the in-process coordinator, UDS and TCP transports, all three
+//! dtypes, and both hinting optimizers), forced mispredictions, depth-m
+//! promotion over the wire, exact metrics accounting, and the
+//! `EXEMCL_NET_DELAY_MS` latency-injection knob. Pure CPU.
+
+use std::time::Duration;
+
+use exemcl::coordinator::{Service, ServiceMetrics};
+use exemcl::cpu::build_cpu_oracle;
+use exemcl::data::synth::GaussianBlobs;
+use exemcl::data::Dataset;
+use exemcl::engine::{Backend, Engine, Session};
+use exemcl::net::{Listen, NetConfig, NetServer, StopHandle};
+use exemcl::optim::{
+    argmax_first, top_m_first, Greedy, LazyGreedy, OptimResult, Optimizer, Oracle,
+    StochasticGreedy,
+};
+use exemcl::scalar::Dtype;
+
+fn blobs(n: usize) -> Dataset {
+    GaussianBlobs::new(4, 6, 0.3).generate(n, 29)
+}
+
+/// Coordinator service + net server on a loopback endpoint, torn down
+/// on drop (same harness as `tests/net_wire.rs`).
+struct TestServer {
+    svc: Option<Service>,
+    addr: Listen,
+    stop: StopHandle,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl TestServer {
+    fn spawn_with<F, O>(make_oracle: F, listen: Listen) -> Self
+    where
+        F: FnOnce() -> exemcl::Result<O> + Send + 'static,
+        O: Oracle + 'static,
+    {
+        let svc = Service::spawn(make_oracle, 32).unwrap();
+        let cfg = NetConfig::new(listen).with_max_conns(16).with_poll(Duration::from_millis(20));
+        let server = NetServer::bind(svc.handle(), cfg).unwrap();
+        let addr = server.local_addr().clone();
+        let stop = server.stop_handle();
+        let join = std::thread::spawn(move || server.run().unwrap());
+        Self { svc: Some(svc), addr, stop, join: Some(join) }
+    }
+
+    fn tcp<F, O>(make_oracle: F) -> Self
+    where
+        F: FnOnce() -> exemcl::Result<O> + Send + 'static,
+        O: Oracle + 'static,
+    {
+        Self::spawn_with(make_oracle, Listen::Tcp("127.0.0.1:0".into()))
+    }
+
+    fn metrics(&self) -> &ServiceMetrics {
+        self.svc.as_ref().expect("live service").metrics()
+    }
+
+    fn backend(&self) -> Backend {
+        match &self.addr {
+            Listen::Tcp(a) => Backend::Tcp { addr: a.clone() },
+            Listen::Uds(p) => Backend::Uds { path: p.to_string_lossy().into_owned() },
+        }
+    }
+}
+
+impl Drop for TestServer {
+    fn drop(&mut self) {
+        self.stop.stop();
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+        if let Some(svc) = self.svc.take() {
+            svc.shutdown();
+        }
+    }
+}
+
+#[cfg(unix)]
+fn uds_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("exemcl-spec-{}-{tag}.sock", std::process::id()))
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn assert_identical(spec: &OptimResult, base: &OptimResult, spec_dmin: &[f32], base_dmin: &[f32], tag: &str) {
+    assert_eq!(spec.exemplars, base.exemplars, "{tag}: exemplar sequence");
+    assert_eq!(spec.value.to_bits(), base.value.to_bits(), "{tag}: f(S) bits");
+    for (i, (a, b)) in spec.curve.iter().zip(&base.curve).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{tag}: curve[{i}] bits");
+    }
+    assert_eq!(bits(spec_dmin), bits(base_dmin), "{tag}: dmin bits");
+}
+
+/// The non-speculative reference for one (dtype, optimizer) cell: a
+/// local session over the same oracle construction, plus the dmin
+/// state its exemplars induce.
+fn reference(ds: &Dataset, dtype: Dtype, opt: &dyn Optimizer) -> (OptimResult, Vec<f32>) {
+    let oracle = build_cpu_oracle(ds.clone(), false, 0, dtype);
+    let r = opt.run(&mut Session::over(oracle.as_ref())).unwrap();
+    let mut state = oracle.init_state();
+    oracle.commit_many(&mut state, &r.exemplars).unwrap();
+    (r, state.dmin)
+}
+
+/// The equivalence matrix: speculative runs are bit-identical to
+/// non-speculative ones for {coordinator, TCP, UDS} × {f32, f16, bf16}
+/// × {Greedy, LazyGreedy}, and plain Greedy's prediction hits every
+/// non-final round on every transport.
+#[test]
+fn speculative_matrix_is_bit_identical_across_transports_dtypes_optimizers() {
+    let ds = blobs(120);
+    let k = 6;
+    let optimizers: Vec<(&str, Box<dyn Optimizer>)> = vec![
+        ("greedy", Box::new(Greedy::new(k))),
+        ("lazy", Box::new(LazyGreedy::new(k))),
+    ];
+    for dtype in Dtype::all() {
+        for (name, opt) in &optimizers {
+            let (base, base_dmin) = reference(&ds, dtype, opt.as_ref());
+
+            // coordinator (in-process service), depth cap 2
+            let ds2 = ds.clone();
+            let svc =
+                Service::spawn(move || Ok(build_cpu_oracle(ds2, false, 0, dtype)), 32).unwrap();
+            let h = svc.handle();
+            let mut session = Session::remote(&h).unwrap().with_speculation(2);
+            let spec = opt.run(&mut session).unwrap();
+            let spec_dmin = session.export_state().unwrap().dmin;
+            assert_identical(&spec, &base, &spec_dmin, &base_dmin, &format!("svc/{dtype}/{name}"));
+            let m = svc.metrics();
+            assert!(
+                m.spec_hits.get() >= 1,
+                "svc/{dtype}/{name}: expected at least one speculative hit, got {}",
+                m.spec_hits.get()
+            );
+            if *name == "greedy" {
+                assert_eq!(m.spec_hits.get(), (k - 1) as u64, "svc/{dtype}: greedy hits all rounds");
+                assert_eq!(m.spec_misses.get(), 0, "svc/{dtype}: greedy never mispredicts");
+            }
+            drop(session);
+            svc.shutdown();
+
+            // TCP, through the engine's speculate knob
+            let ds2 = ds.clone();
+            let server = TestServer::tcp(move || Ok(build_cpu_oracle(ds2, false, 0, dtype)));
+            let engine = Engine::builder().backend(server.backend()).speculate(2).build().unwrap();
+            let mut session = engine.session().unwrap();
+            let spec = opt.run(&mut session).unwrap();
+            let spec_dmin = session.export_state().unwrap().dmin;
+            assert_identical(&spec, &base, &spec_dmin, &base_dmin, &format!("tcp/{dtype}/{name}"));
+            assert!(server.metrics().spec_hits.get() >= 1, "tcp/{dtype}/{name}: no hits");
+            if *name == "greedy" {
+                assert_eq!(server.metrics().spec_hits.get(), (k - 1) as u64);
+                assert_eq!(server.metrics().spec_misses.get(), 0);
+            }
+            drop(session);
+            drop(engine);
+            drop(server);
+
+            // UDS, same knob
+            #[cfg(unix)]
+            {
+                let path = uds_path(&format!("{dtype}-{name}"));
+                let _ = std::fs::remove_file(&path);
+                let ds2 = ds.clone();
+                let server = TestServer::spawn_with(
+                    move || Ok(build_cpu_oracle(ds2, false, 0, dtype)),
+                    Listen::Uds(path),
+                );
+                let engine =
+                    Engine::builder().backend(server.backend()).speculate(2).build().unwrap();
+                let mut session = engine.session().unwrap();
+                let spec = opt.run(&mut session).unwrap();
+                let spec_dmin = session.export_state().unwrap().dmin;
+                assert_identical(
+                    &spec,
+                    &base,
+                    &spec_dmin,
+                    &base_dmin,
+                    &format!("uds/{dtype}/{name}"),
+                );
+                assert!(server.metrics().spec_hits.get() >= 1, "uds/{dtype}/{name}: no hits");
+            }
+        }
+    }
+}
+
+/// A forced misprediction over the wire: hint depth 1, then commit a
+/// candidate that is *not* the predicted argmax. The cache is
+/// discarded (one miss, its gains counted wasted) and the fresh path
+/// stays bit-exact.
+#[test]
+fn forced_miss_over_tcp_discards_and_stays_exact() {
+    let ds = blobs(90);
+    let local = build_cpu_oracle(ds.clone(), false, 0, Dtype::F32);
+    let ds2 = ds.clone();
+    let server = TestServer::tcp(move || Ok(build_cpu_oracle(ds2, false, 0, Dtype::F32)));
+    let engine = Engine::builder().backend(server.backend()).build().unwrap();
+    let mut session = engine.session().unwrap();
+
+    let cands: Vec<usize> = (0..24).collect();
+    let gains = session.gains_hinted(&cands, 1).unwrap();
+    let predicted = cands[argmax_first(&gains).unwrap()];
+    let loser = *cands.iter().find(|&&c| c != predicted).unwrap();
+    session.commit_many(&[loser]).unwrap();
+    session.sync().unwrap();
+
+    assert_eq!(server.metrics().spec_misses.get(), 1, "the mispredicted commit is one miss");
+    assert_eq!(server.metrics().spec_hits.get(), 0);
+    assert_eq!(
+        server.metrics().spec_wasted_gains.get(),
+        (cands.len() - 1) as u64,
+        "the discarded branch's precomputed gains count as wasted"
+    );
+
+    // the fresh path after the discard is bit-exact vs. a local session
+    let mut state = local.init_state();
+    local.commit_many(&mut state, &[loser]).unwrap();
+    let want = local.marginal_gains(&state, &cands).unwrap();
+    let got = session.gains(&cands).unwrap();
+    assert_eq!(bits(&got), bits(&want), "post-miss gains bits");
+    let dmin = session.export_state().unwrap().dmin;
+    assert_eq!(bits(&dmin), bits(&state.dmin), "post-miss dmin bits");
+}
+
+/// Depth-m promotion across the wire: with a depth-3 hint, committing
+/// the *third*-ranked predicted winner still promotes its branch, and
+/// the following covering request is served from cache — bit-identical
+/// to a fresh compute.
+#[test]
+fn depth_m_promotion_hits_over_tcp() {
+    let ds = blobs(80);
+    let local = build_cpu_oracle(ds.clone(), false, 0, Dtype::F32);
+    let ds2 = ds.clone();
+    let server = TestServer::tcp(move || Ok(build_cpu_oracle(ds2, false, 0, Dtype::F32)));
+    let engine = Engine::builder().backend(server.backend()).build().unwrap();
+    let mut session = engine.session().unwrap();
+
+    let cands: Vec<usize> = (0..20).collect();
+    let gains = session.gains_hinted(&cands, 3).unwrap();
+    let third = cands[top_m_first(&gains, 3)[2]];
+    session.commit_many(&[third]).unwrap();
+    session.sync().unwrap();
+
+    // a subset of the cached candidate set C \ {third}, shuffled order
+    let subset: Vec<usize> = cands.iter().rev().copied().filter(|&c| c != third).take(7).collect();
+    let got = session.gains(&subset).unwrap();
+    assert_eq!(server.metrics().spec_hits.get(), 1, "the covering request is a cache hit");
+
+    let mut state = local.init_state();
+    local.commit_many(&mut state, &[third]).unwrap();
+    let want = local.marginal_gains(&state, &subset).unwrap();
+    assert_eq!(bits(&got), bits(&want), "served-from-cache gains bits");
+}
+
+/// StochasticGreedy samples a fresh disjoint candidate set every round,
+/// so it never hints — a speculative engine running it does zero
+/// speculative work (no hits, no misses, nothing wasted).
+#[test]
+fn stochastic_greedy_never_triggers_speculation() {
+    if std::env::var("EXEMCL_SPECULATE").is_ok() {
+        return; // env forcing overrides the knob under test
+    }
+    let ds = blobs(100);
+    let engine = Engine::builder()
+        .dataset(ds)
+        .backend(Backend::service_over(Backend::SingleThread))
+        .speculate(2)
+        .build()
+        .unwrap();
+    engine.run(&StochasticGreedy::new(5, 0.2, 7)).unwrap();
+    let m = engine.metrics().unwrap();
+    assert_eq!(m.spec_hits.get(), 0);
+    assert_eq!(m.spec_misses.get(), 0);
+    assert_eq!(m.spec_wasted_gains.get(), 0);
+}
+
+/// Exact accounting for plain Greedy at depth 1: every non-final round
+/// hits, nothing misses, nothing is wasted, and `gains_evaluated` is
+/// **identical** to the non-speculative run — speculative entries are
+/// counted at compute time and served entries are not re-counted, so
+/// a 100%-hit run does exactly the work of a plain run.
+#[test]
+fn greedy_speculation_accounting_is_exact() {
+    if std::env::var("EXEMCL_SPECULATE").is_ok() {
+        return;
+    }
+    let ds = blobs(110);
+    let k = 7;
+    let build = |depth: usize| {
+        Engine::builder()
+            .dataset(ds.clone())
+            .backend(Backend::service_over(Backend::SingleThread))
+            .speculate(depth)
+            .build()
+            .unwrap()
+    };
+    let plain = build(0);
+    let spec = build(1);
+    let a = plain.run(&Greedy::new(k)).unwrap();
+    let b = spec.run(&Greedy::new(k)).unwrap();
+    assert_eq!(a.exemplars, b.exemplars);
+
+    let (mp, ms) = (plain.metrics().unwrap(), spec.metrics().unwrap());
+    assert_eq!(ms.spec_hits.get(), (k - 1) as u64);
+    assert_eq!(ms.spec_misses.get(), 0);
+    assert_eq!(ms.spec_wasted_gains.get(), 0);
+    assert_eq!(mp.spec_hits.get() + mp.spec_misses.get() + mp.spec_wasted_gains.get(), 0);
+    assert_eq!(
+        ms.gains_evaluated.get(),
+        mp.gains_evaluated.get(),
+        "a 100%-hit speculative run evaluates exactly as many gain entries as a plain run"
+    );
+    // the optimizer-side counter agrees: the client saw the same number
+    // of gain entries either way
+    assert_eq!(a.evaluations, b.evaluations);
+}
+
+/// The `EXEMCL_NET_DELAY_MS` knob injects a client-side pause before
+/// every request frame — the test/bench hook that makes round-trips
+/// expensive enough for speculation to pay. Results never change; only
+/// latency does. (The knob is read once per connection; concurrent
+/// tests connecting while it is set merely run a little slower.)
+#[test]
+fn net_delay_knob_injects_latency_without_changing_results() {
+    let ds = blobs(60);
+    let local = build_cpu_oracle(ds.clone(), false, 0, Dtype::F32);
+    let ds2 = ds.clone();
+    let server = TestServer::tcp(move || Ok(build_cpu_oracle(ds2, false, 0, Dtype::F32)));
+
+    std::env::set_var("EXEMCL_NET_DELAY_MS", "5");
+    let engine = Engine::builder().backend(server.backend()).build();
+    std::env::remove_var("EXEMCL_NET_DELAY_MS");
+    let engine = engine.unwrap();
+
+    let session = engine.session().unwrap();
+    let cands: Vec<usize> = (0..8).collect();
+    let t0 = std::time::Instant::now();
+    let got = session.gains(&cands).unwrap();
+    assert!(
+        t0.elapsed() >= Duration::from_millis(5),
+        "a 5 ms injected delay must be visible on the round-trip, got {:?}",
+        t0.elapsed()
+    );
+    let want = local.marginal_gains(&local.init_state(), &cands).unwrap();
+    assert_eq!(bits(&got), bits(&want), "delay injection must not touch the payload");
+}
