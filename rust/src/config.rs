@@ -9,6 +9,7 @@ use crate::coordinator::{DEFAULT_QUEUE_CAPACITY, DEFAULT_SESSION_CAPACITY};
 use crate::cpu::{PinMode, SimdChoice};
 use crate::data::Dataset;
 use crate::engine::Engine;
+use crate::ingest::{IngestConfig, StreamSpec, DEFAULT_MAX_ROWS_PER_APPEND};
 use crate::net::{Listen, NetConfig, DEFAULT_MAX_CONNS};
 use crate::scalar::Dtype;
 use crate::shard::{
@@ -146,6 +147,25 @@ pub struct AppConfig {
     /// bit-identical results either way. `EXEMCL_SPECULATE` overrides
     /// this key.
     pub speculate: usize,
+    /// Live-ingest opt-in (`eval.ingest`): engine sessions and remote
+    /// clients may append rows to the ground set while it runs (see
+    /// [`crate::ingest`]). `EXEMCL_INGEST` overrides this key.
+    pub ingest: bool,
+    /// Largest accepted single append batch, in rows
+    /// (`ingest.max_rows_per_append`; 0 = default).
+    pub ingest_max_rows: usize,
+    /// Hard ceiling on the grown ground set (`ingest.max_total_rows`;
+    /// 0 = unbounded).
+    pub ingest_max_total: usize,
+    /// Server-resident streaming summary spec (`ingest.stream`, e.g.
+    /// `sieve:k=8,eps=0.1` or `threesieves:k=8,window=256,decay=0.98`);
+    /// unset serves none.
+    pub ingest_stream: Option<String>,
+    /// `append` subcommand: rows per `Append` frame (`append.batch`).
+    pub append_batch: usize,
+    /// `append` subcommand: total synthetic rows to append when no CSV
+    /// is given (`append.total`).
+    pub append_total: usize,
     /// Optional CSV input path (overrides the generator).
     pub csv: Option<String>,
     /// `serve` endpoint (`tcp:host:port` | `uds:/path`).
@@ -199,6 +219,12 @@ impl Default for AppConfig {
             sessions: DEFAULT_SESSION_CAPACITY,
             session_ttl_secs: 0,
             speculate: 0,
+            ingest: false,
+            ingest_max_rows: DEFAULT_MAX_ROWS_PER_APPEND,
+            ingest_max_total: 0,
+            ingest_stream: None,
+            append_batch: 64,
+            append_total: 256,
             csv: None,
             listen: "tcp:127.0.0.1:7171".into(),
             max_conns: DEFAULT_MAX_CONNS,
@@ -238,6 +264,12 @@ impl AppConfig {
             sessions: raw.get_or("eval.sessions", def.sessions)?,
             session_ttl_secs: raw.get_or("eval.session_ttl_secs", def.session_ttl_secs)?,
             speculate: raw.get_or("eval.speculate", def.speculate)?,
+            ingest: raw.get_or("eval.ingest", def.ingest)?,
+            ingest_max_rows: raw.get_or("ingest.max_rows_per_append", def.ingest_max_rows)?,
+            ingest_max_total: raw.get_or("ingest.max_total_rows", def.ingest_max_total)?,
+            ingest_stream: raw.get("ingest.stream").map(str::to_string),
+            append_batch: raw.get_or("append.batch", def.append_batch)?,
+            append_total: raw.get_or("append.total", def.append_total)?,
             csv: raw.get("data.csv").map(str::to_string),
             listen: raw.get("net.listen").unwrap_or(&def.listen).to_string(),
             max_conns: raw.get_or("net.max_conns", def.max_conns)?,
@@ -266,6 +298,23 @@ impl AppConfig {
             .with_poll(Duration::from_secs(self.accept_timeout_secs.max(1)))
             .with_token(self.token.clone())
             .with_compress(self.compress))
+    }
+
+    /// The server-side ingest policy from the `ingest.*` keys — what
+    /// `exemcl serve` (and in-process service engines) spawn their
+    /// executor with. A malformed `ingest.stream` spec is a config
+    /// error here, before any server starts.
+    pub fn ingest_config(&self) -> Result<IngestConfig> {
+        let stream = match &self.ingest_stream {
+            None => None,
+            Some(s) => Some(s.parse::<StreamSpec>()?),
+        };
+        Ok(IngestConfig {
+            max_rows_per_append: self.ingest_max_rows,
+            max_total_rows: (self.ingest_max_total > 0).then_some(self.ingest_max_total),
+            stream,
+        }
+        .normalized())
     }
 
     /// Cluster-client policy from the `shard.*` / `net.*` keys: the
@@ -307,6 +356,8 @@ impl AppConfig {
             .session_ttl_secs(self.session_ttl_secs)
             .memory_mib(self.memory_mib)
             .speculate(self.speculate)
+            .ingest(self.ingest)
+            .ingest_config(self.ingest_config()?)
             .build()
     }
 
@@ -328,6 +379,8 @@ impl AppConfig {
             .session_capacity(self.sessions)
             .session_ttl_secs(self.session_ttl_secs)
             .speculate(self.speculate)
+            .ingest(self.ingest)
+            .ingest_config(self.ingest_config()?)
             .build()
     }
 }
@@ -490,6 +543,40 @@ mod tests {
         }
         let raw = RawConfig::parse("[eval]\nspeculate = deep\n").unwrap();
         assert!(AppConfig::from_raw(&raw).is_err());
+    }
+
+    #[test]
+    fn ingest_keys_parse_with_defaults_and_reject_bad_streams() {
+        let def = AppConfig::from_raw(&RawConfig::default()).unwrap();
+        assert!(!def.ingest, "ingest is opt-in");
+        let ic = def.ingest_config().unwrap();
+        assert_eq!(ic, IngestConfig::default());
+        assert_eq!(def.append_batch, 64);
+        assert_eq!(def.append_total, 256);
+
+        let raw = RawConfig::parse(
+            "[eval]\ningest = true\n[ingest]\nmax_rows_per_append = 128\n\
+             max_total_rows = 4096\nstream = sieve:k=4,eps=0.2\n\
+             [append]\nbatch = 16\ntotal = 64\n",
+        )
+        .unwrap();
+        let cfg = AppConfig::from_raw(&raw).unwrap();
+        assert!(cfg.ingest);
+        assert_eq!(cfg.append_batch, 16);
+        assert_eq!(cfg.append_total, 64);
+        let ic = cfg.ingest_config().unwrap();
+        assert_eq!(ic.max_rows_per_append, 128);
+        assert_eq!(ic.max_total_rows, Some(4096));
+        let spec = ic.stream.expect("stream spec parsed");
+        assert_eq!(spec.k, 4);
+
+        // a malformed stream spec is a config error before any server starts
+        let raw = RawConfig::parse("[ingest]\nstream = sieve:k=zero\n").unwrap();
+        assert!(AppConfig::from_raw(&raw).unwrap().ingest_config().is_err());
+        // a zero batch cap normalizes to the default instead of wedging appends
+        let raw = RawConfig::parse("[ingest]\nmax_rows_per_append = 0\n").unwrap();
+        let ic = AppConfig::from_raw(&raw).unwrap().ingest_config().unwrap();
+        assert_eq!(ic.max_rows_per_append, DEFAULT_MAX_ROWS_PER_APPEND);
     }
 
     #[test]

@@ -62,6 +62,12 @@ pub struct WireBytes {
     pub open_req: Counter,
     /// `Export` reply payloads (O(n) diagnostics, off the hot path).
     pub export_reply: Counter,
+    /// `Append` request payloads (header + one f32 per appended
+    /// coordinate) — the one O(rows·d) request on the ingest path,
+    /// shipped once per batch, never per round.
+    pub append_req: Counter,
+    /// `AppendAck` reply payloads (header + the new ground-set size).
+    pub append_reply: Counter,
     /// Everything else: `Value`/`Fork`/`Close` requests + replies and
     /// `EvalSets` traffic.
     pub other: Counter,
@@ -87,6 +93,8 @@ impl WireBytes {
             + self.commit_reply.get()
             + self.open_req.get()
             + self.export_reply.get()
+            + self.append_req.get()
+            + self.append_reply.get()
             + self.other.get()
     }
 }
@@ -275,6 +283,15 @@ pub struct ServiceMetrics {
     /// unpromoted depth-m branches, mismatch discards, and entries
     /// still cached when the session closes.
     pub spec_wasted_gains: Counter,
+    /// Rows appended to the live ground set (`Append` batches summed).
+    pub rows_appended: Counter,
+    /// `Append` batches served.
+    pub append_batches: Counter,
+    /// Live `DminState`s extended by appends: one per live session state
+    /// (plus streaming-summary states) per batch, summed.
+    pub sessions_extended: Counter,
+    /// Rows evicted from the streaming summary's sliding window.
+    pub window_evictions: Counter,
     /// Fused-gains batch width distribution (jobs per
     /// `marginal_gains_multi` launch the executor forms).
     pub fused_width: WidthHistogram,
@@ -302,6 +319,7 @@ impl ServiceMetrics {
              conns(live={} opened={} closed={} rejected={} unauthorized={}) \
              sched(assisted={} local_tiles={} remote_tiles={}) \
              spec(hits={} misses={} wasted={}) \
+             ingest(rows={} batches={} extended={} evictions={}) \
              fused_width(n={} mean={:.1} max={}) wire={}B net(rx={}B tx={}B) \
              latency(mean={:.0}us p50={}us p95={}us max={}us)",
             self.requests.get(),
@@ -325,6 +343,10 @@ impl ServiceMetrics {
             self.spec_hits.get(),
             self.spec_misses.get(),
             self.spec_wasted_gains.get(),
+            self.rows_appended.get(),
+            self.append_batches.get(),
+            self.sessions_extended.get(),
+            self.window_evictions.get(),
             self.fused_width.count(),
             self.fused_width.mean(),
             self.fused_width.max(),
@@ -368,11 +390,28 @@ mod tests {
         w.commit_reply.add(5);
         w.open_req.add(100);
         assert_eq!(w.total(), 115);
+        w.append_req.add(40);
+        w.append_reply.add(24);
+        assert_eq!(w.total(), 179);
         // transport counters measure the same payloads at the socket and
         // must not double into the modeled total
         w.net_rx.add(1000);
         w.net_tx.add(1000);
-        assert_eq!(w.total(), 115);
+        assert_eq!(w.total(), 179);
+    }
+
+    #[test]
+    fn ingest_counters_surface_in_the_summary() {
+        let m = ServiceMetrics::default();
+        m.rows_appended.add(640);
+        m.append_batches.add(10);
+        m.sessions_extended.add(30);
+        m.window_evictions.add(5);
+        assert!(
+            m.summary().contains("ingest(rows=640 batches=10 extended=30 evictions=5)"),
+            "{}",
+            m.summary()
+        );
     }
 
     #[test]

@@ -116,6 +116,7 @@ use std::time::Instant;
 
 use crate::cpu::SchedStats;
 use crate::data::Dataset;
+use crate::ingest::{IngestConfig, StreamState};
 use crate::optim::oracle::{DminState, GainsJob, Oracle};
 use crate::optim::top_m_first;
 use crate::{Error, Result};
@@ -187,6 +188,29 @@ enum Request {
         /// `None` for the fire-and-forget drop path.
         reply: Option<mpsc::Sender<Result<()>>>,
     },
+    /// Grow the ground set by `rows.len() / d` rows (row-major f32).
+    /// The executor extends the oracle **and every resident state** —
+    /// live sessions and the streaming summary — then folds the batch
+    /// into the summary; the reply is the new ground-set size.
+    Append {
+        rows: Vec<f32>,
+        reply: mpsc::Sender<Result<u64>>,
+        enqueued: Instant,
+    },
+    /// Current streaming summary: `(f(S), exemplars)`. Errors when the
+    /// service was spawned without [`IngestConfig::stream`].
+    StreamQuery {
+        reply: mpsc::Sender<Result<(f32, Vec<usize>)>>,
+        enqueued: Instant,
+    },
+    /// Fresh snapshot of the (possibly grown) ground set — what the net
+    /// server's handshake mirrors to connecting clients, so a client
+    /// that connects after appends sees the current `n`, not the
+    /// spawn-time one. In-process verb: no wire-model bytes.
+    Mirror {
+        reply: mpsc::Sender<Result<(Dataset, f64, DminState)>>,
+        enqueued: Instant,
+    },
     Shutdown,
 }
 
@@ -247,6 +271,21 @@ impl Service {
         Self::spawn_with(move || Ok(oracle), queue_capacity, sessions)
     }
 
+    /// [`Service::over_with`] plus an explicit ingest policy (live
+    /// `Append` caps and the optional server-resident streaming
+    /// summary, see [`crate::ingest`]).
+    pub fn over_full<O>(
+        oracle: O,
+        queue_capacity: usize,
+        sessions: SessionConfig,
+        ingest: IngestConfig,
+    ) -> Result<Self>
+    where
+        O: Oracle + Send + 'static,
+    {
+        Self::spawn_full(move || Ok(oracle), queue_capacity, sessions, ingest)
+    }
+
     /// Spawn the executor thread with the default session policy.
     /// `make_oracle` runs **on the executor thread** (the device
     /// evaluator is not `Send`), builds the backing oracle and reports
@@ -269,6 +308,20 @@ impl Service {
         F: FnOnce() -> Result<O> + Send + 'static,
         O: Oracle + 'static,
     {
+        Self::spawn_full(make_oracle, queue_capacity, sessions, IngestConfig::default())
+    }
+
+    /// [`Service::spawn_with`] plus an explicit ingest policy.
+    pub fn spawn_full<F, O>(
+        make_oracle: F,
+        queue_capacity: usize,
+        sessions: SessionConfig,
+        ingest: IngestConfig,
+    ) -> Result<Self>
+    where
+        F: FnOnce() -> Result<O> + Send + 'static,
+        O: Oracle + 'static,
+    {
         let (tx, rx) = mpsc::sync_channel::<Request>(queue_capacity.max(1));
         type InitPayload = (Dataset, f64, DminState, String);
         let (init_tx, init_rx) = mpsc::channel::<Result<InitPayload>>();
@@ -277,10 +330,11 @@ impl Service {
         let m2 = metrics.clone();
         let qd2 = queue_depth.clone();
 
+        let ingest = ingest.normalized();
         let join = std::thread::Builder::new()
             .name("exemcl-executor".into())
             .spawn(move || {
-                let oracle = match make_oracle() {
+                let mut oracle = match make_oracle() {
                     Ok(o) => {
                         let _ = init_tx.send(Ok((
                             o.dataset().clone(),
@@ -295,7 +349,7 @@ impl Service {
                         return;
                     }
                 };
-                executor_loop(&oracle, &rx, &m2, &qd2, sessions);
+                executor_loop(&mut oracle, &rx, &m2, &qd2, sessions, ingest);
             })
             .map_err(|e| Error::Service(format!("cannot spawn executor: {e}")))?;
 
@@ -373,13 +427,19 @@ struct SpecSeed {
 }
 
 fn executor_loop(
-    oracle: &dyn Oracle,
+    oracle: &mut dyn Oracle,
     rx: &mpsc::Receiver<Request>,
     metrics: &ServiceMetrics,
     queue_depth: &AtomicUsize,
     sessions: SessionConfig,
+    ingest: IngestConfig,
 ) {
     let mut table = SessionTable::new(sessions);
+    // the streaming summary (if configured) lives here, next to the
+    // session table: its states are extended with every append and its
+    // fold runs on this thread, against this oracle
+    let mut stream: Option<StreamState> =
+        ingest.stream.clone().map(|spec| StreamState::new(spec, oracle.init_state()));
     // baseline for delta accounting: the pool's counters are cumulative
     // and the oracle may have served work before this executor owned it
     let mut sched_last = oracle.sched_stats().unwrap_or_default();
@@ -444,6 +504,38 @@ fn executor_loop(
                     next = leftover;
                     serve_marginals_batch(oracle, &mut table, batch, metrics);
                 }
+                Request::Append { rows, reply, enqueued } => {
+                    metrics.wire.append_req.add(WIRE_HEADER + 4 * rows.len() as u64);
+                    let r = serve_append(oracle, &mut table, &mut stream, &ingest, rows, metrics);
+                    metrics.wire.append_reply.add(WIRE_HEADER + 8);
+                    metrics.latency.observe(enqueued.elapsed());
+                    let _ = reply.send(r);
+                }
+                Request::StreamQuery { reply, enqueued } => {
+                    metrics.wire.other.add(WIRE_HEADER);
+                    let r = match &stream {
+                        Some(s) => Ok(s.summary()),
+                        None => Err(Error::InvalidArgument(
+                            "no streaming summary is configured (spawn the service with \
+                             ingest.stream, e.g. --ingest.stream sieve:k=8)"
+                            .into(),
+                        )),
+                    };
+                    let reply_bytes =
+                        r.as_ref().map(|(_, ex)| 4 + 8 * ex.len() as u64).unwrap_or(0);
+                    metrics.wire.other.add(WIRE_HEADER + reply_bytes);
+                    metrics.latency.observe(enqueued.elapsed());
+                    let _ = reply.send(r);
+                }
+                Request::Mirror { reply, enqueued } => {
+                    // in-process verb (the net server's handshake):
+                    // no wire-model bytes, the Welcome frame is already
+                    // counted at the transport
+                    let snapshot =
+                        (oracle.dataset().clone(), oracle.l0_sum(), oracle.init_state());
+                    metrics.latency.observe(enqueued.elapsed());
+                    let _ = reply.send(Ok(snapshot));
+                }
                 other => serve_single(oracle, &mut table, other, metrics),
             }
             metrics.batches.add(1);
@@ -461,6 +553,90 @@ fn flush_sched_stats(oracle: &dyn Oracle, metrics: &ServiceMetrics, last: &mut S
     metrics.tiles_node_local.add(now.local_claims.saturating_sub(last.local_claims));
     metrics.tiles_node_remote.add(now.remote_claims.saturating_sub(last.remote_claims));
     *last = now;
+}
+
+/// Serve one `Append{rows}`: validate against the ingest policy, grow
+/// the oracle's ground set, extend **every** resident `DminState` (all
+/// live sessions plus the streaming summary's states) in one pooled
+/// [`Oracle::extend`] pass, then fold the new rows into the summary.
+/// Speculation caches are discarded first — their branch states and
+/// cached gains were computed against the pre-append `n` — with
+/// unserved entries charged to `spec_wasted_gains` exactly like a
+/// close-time discard. Returns the new ground-set size.
+fn serve_append(
+    oracle: &mut dyn Oracle,
+    table: &mut SessionTable,
+    stream: &mut Option<StreamState>,
+    ingest: &IngestConfig,
+    rows: Vec<f32>,
+    metrics: &ServiceMetrics,
+) -> Result<u64> {
+    let d = oracle.dataset().d();
+    if rows.is_empty() {
+        return Err(Error::InvalidArgument("append carries no rows".into()));
+    }
+    if rows.len() % d != 0 {
+        return Err(Error::InvalidArgument(format!(
+            "append payload has {} floats, not a multiple of d = {d}",
+            rows.len()
+        )));
+    }
+    let batch = rows.len() / d;
+    if batch > ingest.max_rows_per_append {
+        return Err(Error::InvalidArgument(format!(
+            "append batch of {batch} rows exceeds ingest.max_rows_per_append = {}",
+            ingest.max_rows_per_append
+        )));
+    }
+    let old_n = oracle.dataset().n();
+    if let Some(cap) = ingest.max_total_rows {
+        if old_n + batch > cap {
+            return Err(Error::InvalidArgument(format!(
+                "append of {batch} rows would grow the ground set to {} \
+                 past ingest.max_total_rows = {cap}",
+                old_n + batch
+            )));
+        }
+    }
+    let ds = Dataset::from_flat(batch, d, rows)?;
+    let extended;
+    {
+        let mut states: Vec<&mut DminState> = Vec::with_capacity(table.len() + 2);
+        for entry in table.entries_mut() {
+            // every cached branch/gain was computed against the old n
+            match entry.spec.take() {
+                None | Some(Speculation::Ready { served: true, .. }) => {}
+                Some(spec) => metrics.spec_wasted_gains.add(spec.gain_entries()),
+            }
+            states.push(&mut entry.state);
+        }
+        if let Some(s) = stream.as_mut() {
+            states.extend(s.states_mut());
+        }
+        extended = states.len() as u64;
+        oracle.extend(&ds, &mut states)?;
+    }
+    let new_n = oracle.dataset().n();
+    if let Some(s) = stream.as_mut() {
+        let out = s.fold(&*oracle, old_n..new_n)?;
+        metrics.window_evictions.add(out.evictions);
+        crate::log_info!(
+            "stream summary updated: batch {} (+{batch} rows, n={new_n}) f(S)={:.6} |S|={}{}{}",
+            s.batches(),
+            out.value,
+            out.exemplars,
+            if out.evictions > 0 {
+                format!(" evicted={}", out.evictions)
+            } else {
+                String::new()
+            },
+            if out.resummarized { " resummarized" } else { "" },
+        );
+    }
+    metrics.rows_appended.add(batch as u64);
+    metrics.append_batches.add(1);
+    metrics.sessions_extended.add(extended);
+    Ok(new_n as u64)
 }
 
 /// Drain queued requests of the batch head's kind: matching requests
@@ -993,6 +1169,42 @@ impl ServiceHandle {
         })
     }
 
+    /// Append rows to the live ground set (see [`crate::ingest`]): the
+    /// executor grows the oracle, extends every resident session state
+    /// and the streaming summary, and replies with the new `n`.
+    /// `rows` must match the served dataset's dimensionality.
+    pub fn append(&self, rows: &Dataset) -> Result<u64> {
+        if rows.d() != self.dataset.d() {
+            return Err(Error::InvalidArgument(format!(
+                "append rows have d = {}, served dataset has d = {}",
+                rows.d(),
+                self.dataset.d()
+            )));
+        }
+        self.append_flat(rows.flat().to_vec())
+    }
+
+    /// [`ServiceHandle::append`] from a raw row-major buffer
+    /// (`rows.len()` must be a multiple of `d`) — the net server's
+    /// decode path lands here without re-assembling a [`Dataset`].
+    pub fn append_flat(&self, rows: Vec<f32>) -> Result<u64> {
+        self.request(|reply| Request::Append { rows, reply, enqueued: Instant::now() })
+    }
+
+    /// Current streaming summary `(f(S), exemplars)` — errors when the
+    /// service was spawned without [`IngestConfig::stream`].
+    pub fn stream_summary(&self) -> Result<(f32, Vec<usize>)> {
+        self.request(|reply| Request::StreamQuery { reply, enqueued: Instant::now() })
+    }
+
+    /// Fresh `(dataset, l0, init_state)` snapshot from the executor —
+    /// unlike [`ServiceHandle::dataset`] (the spawn-time mirror), this
+    /// reflects every append served so far. The net server's handshake
+    /// mirrors from here.
+    pub fn mirror(&self) -> Result<(Dataset, f64, DminState)> {
+        self.request(|reply| Request::Mirror { reply, enqueued: Instant::now() })
+    }
+
     /// Open a fresh server session (empty summary, the backend's own
     /// init state).
     pub fn open(&self) -> Result<RemoteSession<'_>> {
@@ -1498,6 +1710,88 @@ mod tests {
         // the two unpromoted branches were wasted: 2 × |next| entries
         assert_eq!(svc.metrics().spec_misses.get(), 0);
         assert_eq!(svc.metrics().spec_wasted_gains.get(), 2 * next.len() as u64);
+        svc.shutdown();
+    }
+
+    /// An `Append` grows the ground set under a live session, and the
+    /// extended state is bit-identical to a cold oracle built on the
+    /// concatenated dataset after the same commits.
+    #[test]
+    fn append_extends_live_sessions_bitwise() {
+        let svc = spawn_cpu_service();
+        let h = svc.handle();
+        let mut s = h.open().unwrap();
+        s.commit_many(&[3, 17]).unwrap();
+        s.sync().unwrap();
+        let tail = UniformCube::new(4, 1.0).generate(16, 9);
+        assert_eq!(h.append(&tail).unwrap(), 80);
+        let mut full = UniformCube::new(4, 1.0).generate(64, 3);
+        full.extend(&tail).unwrap();
+        let cold = SingleThread::new(full);
+        let mut want = cold.init_state();
+        cold.commit(&mut want, 3).unwrap();
+        cold.commit(&mut want, 17).unwrap();
+        let got = s.export().unwrap();
+        assert_eq!(got.dmin.len(), 80);
+        for (a, b) in got.dmin.iter().zip(&want.dmin) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // gains over old and appended rows match the cold oracle bitwise
+        let cands = vec![0usize, 64, 79];
+        let ga = s.gains(&cands).unwrap();
+        let gb = cold.marginal_gains(&want, &cands).unwrap();
+        for (a, b) in ga.iter().zip(&gb) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(svc.metrics().rows_appended.get(), 16);
+        assert_eq!(svc.metrics().append_batches.get(), 1);
+        assert_eq!(svc.metrics().sessions_extended.get(), 1);
+        svc.shutdown();
+    }
+
+    /// Ingest policy guards: dimensionality, ragged payloads, the batch
+    /// cap and the total cap all reject without mutating anything.
+    #[test]
+    fn append_respects_ingest_caps_and_shape() {
+        let ingest =
+            IngestConfig { max_rows_per_append: 8, max_total_rows: Some(70), stream: None };
+        let svc = Service::over_full(cpu_oracle(), 8, SessionConfig::default(), ingest).unwrap();
+        let h = svc.handle();
+        let bad_d = UniformCube::new(3, 1.0).generate(4, 1);
+        assert!(h.append(&bad_d).is_err(), "wrong d rejected at the handle");
+        assert!(h.append_flat(vec![0.0; 6]).is_err(), "ragged payload rejected");
+        let nine = UniformCube::new(4, 1.0).generate(9, 2);
+        assert!(h.append(&nine).is_err(), "batch cap enforced");
+        let eight = UniformCube::new(4, 1.0).generate(8, 2);
+        assert!(h.append(&eight).is_err(), "64 + 8 > 70 total cap");
+        let four = UniformCube::new(4, 1.0).generate(4, 2);
+        assert_eq!(h.append(&four).unwrap(), 68);
+        assert!(h.append(&four).is_err(), "68 + 4 > 70 total cap");
+        assert!(h.stream_summary().is_err(), "no stream configured");
+        assert_eq!(svc.metrics().append_batches.get(), 1, "only the good batch counted");
+        svc.shutdown();
+    }
+
+    /// A service spawned with a streaming spec folds every append into
+    /// its server-resident summary, and `Mirror` reflects the growth.
+    #[test]
+    fn streaming_summary_tracks_appends() {
+        let spec = crate::ingest::StreamSpec::parse("sieve:k=3,eps=0.2").unwrap();
+        let ingest = IngestConfig { stream: Some(spec), ..Default::default() };
+        let svc = Service::over_full(cpu_oracle(), 8, SessionConfig::default(), ingest).unwrap();
+        let h = svc.handle();
+        for seed in 10..14 {
+            let tail = UniformCube::new(4, 1.0).generate(8, seed);
+            h.append(&tail).unwrap();
+        }
+        let (v, ex) = h.stream_summary().unwrap();
+        assert!(!ex.is_empty() && ex.len() <= 3, "summary within k: {ex:?}");
+        assert!(v > 0.0);
+        // every exemplar is an appended (live-traffic) row
+        assert!(ex.iter().all(|&e| e >= 64), "candidates are appended rows only: {ex:?}");
+        let (ds, _, init) = h.mirror().unwrap();
+        assert_eq!(ds.n(), 96);
+        assert_eq!(init.dmin.len(), 96);
         svc.shutdown();
     }
 

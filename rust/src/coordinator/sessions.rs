@@ -188,6 +188,13 @@ impl SessionTable {
         self.entries.remove(&sid)
     }
 
+    /// Mutably visit every live entry without LRU stamping — the append
+    /// path extends *all* resident states in one pooled oracle pass, and
+    /// an append is not a use of any particular session.
+    pub fn entries_mut(&mut self) -> impl Iterator<Item = &mut SessionEntry> {
+        self.entries.values_mut()
+    }
+
     /// Drop every entry idle past the TTL; returns the evicted count.
     pub fn sweep(&mut self) -> usize {
         let Some(ttl) = self.cfg.ttl else { return 0 };

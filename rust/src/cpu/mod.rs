@@ -285,6 +285,76 @@ impl<D: Dissimilarity, S: Scalar> OracleBase<D, S> {
         acc.iter().map(|&g| (g / n) as f32).collect()
     }
 
+    /// Grow the canonical rows plus every derived per-oracle
+    /// precomputation (the `d(v, e0)` constants, `l0`, the quantized
+    /// shadow) by the appended suffix — the per-dataset half of live
+    /// ingest ([`crate::ingest`]). Returns the pre-append size and the
+    /// new rows' `d(v, e0)` tail (the fresh-`dmin` entries for them).
+    fn grow(&mut self, rows: &Dataset) -> Result<(usize, Vec<f32>)> {
+        let old_n = self.ds.n();
+        self.ds.extend(rows)?;
+        let new_n = self.ds.n();
+        let mut init_tail = Vec::with_capacity(new_n - old_n);
+        for i in old_n..new_n {
+            let sq: f32 = self.ds.row(i).iter().map(|x| x * x).sum();
+            self.e0_sq.push(sq);
+            let d0 = if self.dist.factors_through_sq_euclidean() {
+                self.dist.post_sq(sq)
+            } else {
+                self.dist.eval_vs_origin(self.ds.row(i))
+            };
+            self.l0 += d0 as f64;
+            init_tail.push(d0);
+        }
+        if let Some(view) = &mut self.view {
+            // quantizes only the suffix, against the frozen build-time
+            // mean — existing rows (and committed dmin bits) untouched
+            view.extend_quantized(&self.ds);
+        }
+        Ok((old_n, init_tail))
+    }
+
+    /// Extend one live state with the appended suffix: append its
+    /// `d(v, e0)` tail, then lower the suffix against the state's
+    /// committed exemplars with the same kernels a commit uses. The
+    /// result is bit-identical to what a cold rebuild on the grown
+    /// ground set would produce after the same commits: the dmin
+    /// min-update never crosses rows (and `min` is exact), so
+    /// restricting the pass to the appended range changes no bits.
+    fn extend_state(&self, old_n: usize, init_tail: &[f32], state: &mut DminState) {
+        let DminState { dmin, exemplars } = state;
+        dmin.extend_from_slice(init_tail);
+        if exemplars.is_empty() || init_tail.is_empty() {
+            return;
+        }
+        let new_n = self.ds.n();
+        let suffix = &mut dmin[old_n..new_n];
+        match &self.view {
+            Some(view) => {
+                let packed = kernels::pack_gathered(self.ks, view, exemplars);
+                kernels::update_dmin_range(
+                    self.ks,
+                    &self.dist,
+                    view,
+                    old_n..new_n,
+                    self.tile_rows,
+                    &packed,
+                    suffix,
+                );
+            }
+            None => {
+                let (ex_rows, _) = kernels::gather_rows(&self.ds, exemplars);
+                kernels::update_dmin_tile_direct(
+                    &self.dist,
+                    &self.ds,
+                    old_n..new_n,
+                    &ex_rows,
+                    suffix,
+                );
+            }
+        }
+    }
+
     fn commit_serial(&self, state: &mut DminState, idxs: &[usize]) {
         match &self.view {
             Some(view) => {
@@ -403,6 +473,17 @@ impl<D: Dissimilarity, S: Scalar> Oracle for SingleThread<D, S> {
 
     fn l0_sum(&self) -> f64 {
         self.base.l0
+    }
+
+    fn extend(&mut self, rows: &Dataset, states: &mut [&mut DminState]) -> Result<usize> {
+        for s in states.iter() {
+            validate_state(&self.base.ds, s)?;
+        }
+        let (old_n, init_tail) = self.base.grow(rows)?;
+        for state in states.iter_mut() {
+            self.base.extend_state(old_n, &init_tail, state);
+        }
+        Ok(self.base.ds.n())
     }
 
     fn name(&self) -> String {
@@ -789,6 +870,31 @@ impl<D: Dissimilarity, S: Scalar> Oracle for MultiThread<D, S> {
         Some(self.pool.stats())
     }
 
+    /// Live-ingest extension as **one pooled pass batching every live
+    /// session**: participants claim whole states (the suffix is at
+    /// most one append batch of rows, so a session's suffix update is
+    /// the natural work grain) and each state's dmin tail is written
+    /// through its own exclusive slot — the same disjoint-write
+    /// discipline as the chunked commit path.
+    fn extend(&mut self, rows: &Dataset, states: &mut [&mut DminState]) -> Result<usize> {
+        for s in states.iter() {
+            validate_state(&self.base.ds, s)?;
+        }
+        let (old_n, init_tail) = self.base.grow(rows)?;
+        let base = &self.base;
+        let tail = &init_tail;
+        let n_states = states.len();
+        {
+            let shared = DisjointSlice::new(states);
+            self.pool.run_chunks(n_states, &|j| {
+                // SAFETY: each state index is claimed exactly once.
+                let slot = unsafe { shared.range_mut(j, 1) };
+                base.extend_state(old_n, tail, &mut *slot[0]);
+            });
+        }
+        Ok(self.base.ds.n())
+    }
+
     fn name(&self) -> String {
         format!("cpu-mt{}/{}/{}", self.pool.threads(), self.base.dist.name(), self.base.dtype())
     }
@@ -1118,6 +1224,97 @@ mod tests {
         for (a, b) in seq.dmin.iter().zip(&mt_state.dmin) {
             assert!((a - b).abs() < 1e-6);
         }
+    }
+
+    /// Interleave every row with its negation: the per-coordinate f64
+    /// mean accumulator is exactly `+0.0`, so mean-centering is a
+    /// bitwise no-op however (and whenever) the mean is computed —
+    /// the property the ingest bit-identity assertions lean on.
+    fn symmetric(n_pairs: usize, d: usize, seed: u64) -> Dataset {
+        let base = UniformCube::new(d, 1.0).generate(n_pairs, seed);
+        let mut rows: Vec<Vec<f32>> = Vec::new();
+        for i in 0..base.n() {
+            rows.push(base.row(i).to_vec());
+            rows.push(base.row(i).iter().map(|x| -x).collect());
+        }
+        Dataset::from_rows(&rows).unwrap()
+    }
+
+    /// Live-ingest invariant: `Oracle::extend` on a head dataset plus a
+    /// tail must leave every live state bit-identical to a cold oracle
+    /// built on the concatenated data after the same commits — across
+    /// backends and dtypes (symmetric data keeps centering a no-op, so
+    /// the frozen-mean suffix quantization is exact too).
+    #[test]
+    fn oracle_extend_matches_cold_rebuild_bitwise() {
+        let head = symmetric(24, 4, 31);
+        let tail = symmetric(8, 4, 32);
+        let mut full = head.clone();
+        full.extend(&tail).unwrap();
+
+        fn check<S: Scalar>(head: &Dataset, tail: &Dataset, full: &Dataset, multi: bool) {
+            let tag = format!("multi={multi} dtype={:?}", S::DTYPE);
+            let mut inc: Box<dyn Oracle> = if multi {
+                Box::new(MultiThread::<SqEuclidean, S>::with_precision(
+                    head.clone(),
+                    SqEuclidean,
+                    3,
+                ))
+            } else {
+                Box::new(SingleThread::<SqEuclidean, S>::with_precision(head.clone(), SqEuclidean))
+            };
+            let mut live = inc.init_state();
+            inc.commit_many(&mut live, &[3, 17]).unwrap();
+            let mut empty = inc.init_state();
+            let new_n = inc.extend(tail, &mut [&mut live, &mut empty]).unwrap();
+            assert_eq!(new_n, full.n());
+
+            let cold: Box<dyn Oracle> = if multi {
+                Box::new(MultiThread::<SqEuclidean, S>::with_precision(
+                    full.clone(),
+                    SqEuclidean,
+                    3,
+                ))
+            } else {
+                Box::new(SingleThread::<SqEuclidean, S>::with_precision(full.clone(), SqEuclidean))
+            };
+            let mut want = cold.init_state();
+            cold.commit_many(&mut want, &[3, 17]).unwrap();
+            let bits = |s: &[f32]| s.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&live.dmin), bits(&want.dmin), "{tag}");
+            assert_eq!(live.exemplars, want.exemplars, "{tag}");
+            assert_eq!(
+                bits(&empty.dmin),
+                bits(&cold.init_state().dmin),
+                "{tag}: exemplar-free state gets the init tail"
+            );
+            // the grown oracle answers every later verb like the cold one
+            assert_eq!(inc.l0_sum().to_bits(), cold.l0_sum().to_bits(), "{tag}");
+            let cands = vec![0usize, head.n(), full.n() - 1];
+            let gi = inc.marginal_gains(&live, &cands).unwrap();
+            let gc = cold.marginal_gains(&want, &cands).unwrap();
+            assert_eq!(bits(&gi), bits(&gc), "{tag}: gains over old+new rows");
+        }
+        for multi in [false, true] {
+            check::<f32>(&head, &tail, &full, multi);
+            check::<F16>(&head, &tail, &full, multi);
+            check::<Bf16>(&head, &tail, &full, multi);
+        }
+    }
+
+    #[test]
+    fn oracle_extend_rejects_stale_states_and_bad_rows() {
+        let ds = symmetric(16, 3, 5);
+        let mut st = SingleThread::new(ds.clone());
+        let mut short = DminState { dmin: vec![0.0; 3], exemplars: vec![] };
+        let tail = symmetric(2, 3, 6);
+        assert!(st.extend(&tail, &mut [&mut short]).is_err());
+        // dimensionality mismatch is rejected before any mutation
+        let wrong_d = symmetric(2, 4, 7);
+        let mut ok = st.init_state();
+        assert!(st.extend(&wrong_d, &mut [&mut ok]).is_err());
+        assert_eq!(st.dataset().n(), ds.n());
+        assert_eq!(ok.dmin.len(), ds.n());
     }
 
     /// Speculation invariant 1: the speculative branch state is built

@@ -136,11 +136,27 @@ impl Dataset {
 
     /// Append another dataset with identical dimensionality. Copies the
     /// buffer first if other handles (clones, aliasing shadows) share it.
+    ///
+    /// This is the ingest boundary, so the appended rows are vetted
+    /// here: a non-finite coordinate (NaN/Inf) is rejected **before**
+    /// anything is mutated — a NaN admitted into the ground set would
+    /// silently poison every `dmin` entry its distances touch, and the
+    /// streaming [`crate::ingest`] path has no later point at which the
+    /// damage is recoverable.
     pub fn extend(&mut self, other: &Dataset) -> crate::Result<()> {
         if other.d != self.d {
             return Err(crate::Error::InvalidArgument(format!(
                 "dimensionality mismatch: {} vs {}",
                 self.d, other.d
+            )));
+        }
+        if let Some(pos) = other.flat().iter().position(|x| !x.is_finite()) {
+            return Err(crate::Error::InvalidArgument(format!(
+                "appended row {} has a non-finite coordinate at dim {} \
+                 ({}); NaN/Inf rows would poison every dmin they touch",
+                pos / other.d,
+                pos % other.d,
+                other.flat()[pos]
             )));
         }
         Arc::make_mut(&mut self.data).extend_from_slice(other.flat());
@@ -198,6 +214,25 @@ mod tests {
         a.extend(&b).unwrap();
         assert_eq!(a.n(), 2);
         assert_eq!(a.row(1), &[3., 4.]);
+    }
+
+    #[test]
+    fn extend_rejects_non_finite_rows() {
+        let mut a = Dataset::from_flat(1, 2, vec![1., 2.]).unwrap();
+        let nan = Dataset::from_flat(2, 2, vec![3., 4., 5., f32::NAN]).unwrap();
+        let err = a.extend(&nan).unwrap_err();
+        match err {
+            crate::Error::InvalidArgument(msg) => {
+                assert!(msg.contains("row 1"), "unexpected message: {msg}");
+                assert!(msg.contains("dim 1"), "unexpected message: {msg}");
+            }
+            other => panic!("expected InvalidArgument, got {other:?}"),
+        }
+        let inf = Dataset::from_flat(1, 2, vec![f32::INFINITY, 0.]).unwrap();
+        assert!(a.extend(&inf).is_err());
+        // rejected before mutation: the target is untouched
+        assert_eq!(a.n(), 1);
+        assert_eq!(a.flat(), &[1., 2.]);
     }
 
     #[test]

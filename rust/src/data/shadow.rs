@@ -146,6 +146,79 @@ impl<S: Scalar> ShadowSet<S> {
         Self { n, d, rows: Rows::Owned(rows), norms, mean, centered: center, non_finite }
     }
 
+    /// Extend this shadow with the suffix rows of a grown dataset —
+    /// the incremental-ingest counterpart of [`ShadowSet::build`].
+    ///
+    /// `ds` must be the same ground set this shadow was built from,
+    /// after one or more [`Dataset::extend`] calls: same `d`, and
+    /// `ds.n() >= self.n()` with rows `0..self.n()` unchanged. Only
+    /// the appended suffix `self.n()..ds.n()` is quantized.
+    ///
+    /// **The centering mean is frozen at build time.** Appended rows
+    /// shift the true dataset mean, but re-centering against the new
+    /// mean would re-quantize — and silently change the bits of — every
+    /// existing row, and with them every committed `dmin` entry. So the
+    /// suffix is centered against the *original* mean: existing bits
+    /// are untouched and an append is bit-equivalent to having built
+    /// with the old mean over the concatenated data. The price is
+    /// drift: if the appended traffic's mean wanders a distance `δ`
+    /// from the build-time mean, suffix norms grow by up to
+    /// `O(δ² + 2δ·‖x−μ‖)` and the narrow formats lose the centering
+    /// benefit proportionally (the worst case degrades toward the
+    /// uncentered error bound). Callers that observe heavy drift
+    /// should cold-rebuild, which re-centers everything consistently.
+    pub fn extend_quantized(&mut self, ds: &Dataset) {
+        assert_eq!(ds.d(), self.d, "shadow/dataset dimensionality mismatch");
+        assert!(ds.n() >= self.n, "dataset shrank under the shadow");
+        let (old_n, new_n, d) = (self.n, ds.n(), self.d);
+        let mut new_non_finite = 0usize;
+        match &mut self.rows {
+            // Copy-free mode: `Dataset::extend`'s copy-on-write made a
+            // NEW buffer, so re-alias the dataset's current Arc and
+            // append raw norms (quantization is the identity here and
+            // the frozen mean is exactly +0.0 bitwise).
+            Rows::Shared(_) => {
+                for i in old_n..new_n {
+                    let mut nv = 0.0f32;
+                    for &x in ds.row(i) {
+                        new_non_finite += usize::from(!x.is_finite());
+                        nv += x * x;
+                    }
+                    self.norms.push(nv);
+                }
+                self.rows = Rows::Shared(ds.shared_rows());
+            }
+            Rows::Owned(rows) => {
+                rows.reserve((new_n - old_n) * d);
+                for i in old_n..new_n {
+                    let r = ds.row(i);
+                    let mut nv = 0.0f32;
+                    for j in 0..d {
+                        let q = S::from_f32(r[j] - self.mean[j]);
+                        let x = q.to_f32();
+                        new_non_finite += usize::from(!x.is_finite());
+                        nv += x * x;
+                        rows.push(q);
+                    }
+                    self.norms.push(nv);
+                }
+            }
+        }
+        if new_non_finite > 0 {
+            crate::log_warn!(
+                "{} of {} appended elements quantized to non-finite {} \
+                 values (appended traffic exceeds the format's range \
+                 against the frozen centering mean); use bf16 or f32, \
+                 or cold-rebuild to re-center",
+                new_non_finite,
+                (new_n - old_n) * d,
+                S::DTYPE
+            );
+        }
+        self.non_finite += new_non_finite;
+        self.n = new_n;
+    }
+
     /// True when this shadow shares the dataset's row buffer (the
     /// copy-free `f32` mode) instead of owning a quantized copy.
     pub fn aliases_dataset(&self) -> bool {
@@ -388,6 +461,81 @@ mod tests {
                 assert_eq!(&o[k * ds.d()..(k + 1) * ds.d()], owned.row(i));
                 assert_eq!(&s[k * ds.d()..(k + 1) * ds.d()], shared.row(i));
             }
+        }
+    }
+
+    #[test]
+    fn extend_quantized_matches_cold_build_against_the_frozen_mean() {
+        // uncentered: the frozen mean is zero both ways, so incremental
+        // extension must be bit-identical to a cold build on the
+        // concatenated data — for every storage dtype
+        let head = UniformCube::new(4, 1.0).generate(30, 21);
+        let tail = UniformCube::new(4, 1.0).generate(7, 22);
+        let mut ds = head.clone();
+
+        fn check<S: Scalar>(head: &Dataset, grown: &Dataset) {
+            let mut inc: ShadowSet<S> = ShadowSet::build(head, false);
+            inc.extend_quantized(grown);
+            let cold: ShadowSet<S> = ShadowSet::build(grown, false);
+            assert_eq!(inc.n(), cold.n());
+            assert_eq!(inc.norms(), cold.norms(), "{:?}", S::DTYPE);
+            for i in 0..grown.n() {
+                assert_eq!(inc.row(i), cold.row(i), "{:?} row {i}", S::DTYPE);
+            }
+        }
+
+        ds.extend(&tail).unwrap();
+        check::<f32>(&head, &ds);
+        check::<F16>(&head, &ds);
+        check::<Bf16>(&head, &ds);
+    }
+
+    #[test]
+    fn extend_quantized_realiases_the_post_cow_buffer() {
+        // an aliasing f32 shadow pins the old Arc, so Dataset::extend
+        // copies-on-write; the shadow must re-alias the NEW buffer
+        let head = UniformCube::new(3, 1.0).generate(10, 2);
+        let mut ds = head.clone();
+        let mut sh: ShadowSet<f32> = ShadowSet::build(&ds, false);
+        assert!(sh.aliases_dataset());
+        let tail = UniformCube::new(3, 1.0).generate(4, 3);
+        ds.extend(&tail).unwrap();
+        sh.extend_quantized(&ds);
+        assert!(sh.aliases_dataset());
+        assert_eq!(sh.n(), ds.n());
+        for i in 0..ds.n() {
+            assert_eq!(sh.row(i), ds.row(i));
+        }
+        assert_eq!(sh.norms(), &ds.sq_norms()[..]);
+    }
+
+    #[test]
+    fn extend_quantized_freezes_the_centering_mean() {
+        // off-origin head: centering makes a real quantized copy with a
+        // non-zero mean; appended rows must center against THAT mean,
+        // and the existing rows' bits must not move
+        let head = Dataset::from_flat(4, 2, vec![10., 0., 11., 1., 12., 2., 13., 3.]).unwrap();
+        let mut ds = head.clone();
+        let mut sh: ShadowSet<F16> = ShadowSet::build(&ds, true);
+        let frozen = sh.mean().to_vec();
+        let before: Vec<_> = (0..ds.n()).map(|i| sh.row(i).to_vec()).collect();
+
+        let tail = Dataset::from_flat(2, 2, vec![50., 5., 51., 6.]).unwrap();
+        ds.extend(&tail).unwrap();
+        sh.extend_quantized(&ds);
+
+        assert_eq!(sh.mean(), &frozen[..], "mean must stay frozen");
+        for (i, row) in before.iter().enumerate() {
+            assert_eq!(sh.row(i), &row[..], "existing row {i} changed bits");
+        }
+        for i in head.n()..ds.n() {
+            let expect: Vec<F16> = ds
+                .row(i)
+                .iter()
+                .zip(&frozen)
+                .map(|(&x, &m)| F16::from_f32(x - m))
+                .collect();
+            assert_eq!(sh.row(i), &expect[..], "suffix row {i}");
         }
     }
 

@@ -61,7 +61,8 @@ use crate::coordinator::{
 use crate::cpu::{build_cpu_oracle_tuned_with, PinMode, SimdChoice};
 use crate::data::Dataset;
 use crate::distance::{Dissimilarity, SqEuclidean};
-use crate::net::{Listen, NetClient};
+use crate::ingest::IngestConfig;
+use crate::net::{ConnectOptions, Listen, NetClient};
 use crate::optim::oracle::Oracle;
 use crate::optim::{OptimResult, Optimizer};
 use crate::scalar::Dtype;
@@ -228,6 +229,22 @@ fn env_speculate() -> Option<usize> {
     }
 }
 
+/// The `EXEMCL_INGEST` override for [`EngineBuilder::ingest`]: a
+/// boolean that wins over the builder knob either way. A value that
+/// doesn't parse is warned about and ignored — same contract as
+/// `EXEMCL_REMOTE`.
+fn env_ingest() -> Option<bool> {
+    let raw = std::env::var("EXEMCL_INGEST").ok().filter(|s| !s.is_empty())?;
+    match raw.trim() {
+        "1" | "true" | "on" | "yes" => Some(true),
+        "0" | "false" | "off" | "no" => Some(false),
+        other => {
+            log_warn!("ignoring unparseable EXEMCL_INGEST={other:?} (true|false)");
+            None
+        }
+    }
+}
+
 /// The [`Backend::Auto`] decision table, pure so it can be unit-tested:
 ///
 /// | condition                                      | choice         |
@@ -357,6 +374,8 @@ pub struct EngineBuilder {
     pin: PinMode,
     cluster: ClusterConfig,
     speculate: usize,
+    ingest: bool,
+    ingest_cfg: IngestConfig,
 }
 
 impl Default for EngineBuilder {
@@ -374,6 +393,8 @@ impl Default for EngineBuilder {
             pin: PinMode::Auto,
             cluster: ClusterConfig::default(),
             speculate: 0,
+            ingest: false,
+            ingest_cfg: IngestConfig::default(),
         }
     }
 }
@@ -474,6 +495,28 @@ impl EngineBuilder {
         self
     }
 
+    /// Opt into **live ingest** (default off): sessions may
+    /// [`Session::append`] rows to the ground set while the engine
+    /// runs (see [`crate::ingest`]). Like `speculate`, this is a
+    /// client-side knob and is **not** rejected on remote engines —
+    /// it is exactly the remote opt-in: a client that appends knows
+    /// its connect-time dataset mirror describes only the pre-append
+    /// ground set. The `EXEMCL_INGEST` environment variable overrides
+    /// this knob either way.
+    pub fn ingest(mut self, on: bool) -> Self {
+        self.ingest = on;
+        self
+    }
+
+    /// Server-side ingest policy for [`Backend::Service`] engines:
+    /// per-batch/total row caps and the optional server-resident
+    /// streaming summary (`ingest.stream`). Rejected on remote engines
+    /// — the policy lives in the serving process (`exemcl serve`).
+    pub fn ingest_config(mut self, cfg: IngestConfig) -> Self {
+        self.ingest_cfg = cfg;
+        self
+    }
+
     /// Failure-handling and handshake knobs for [`Backend::Cluster`]
     /// (per-shard deadline, retries/backoff, auth token, handshake
     /// compression) — ignored by every other backend.
@@ -505,6 +548,7 @@ impl EngineBuilder {
     /// distributed; [`Engine::dataset`] is an empty placeholder).
     pub fn build(self) -> Result<Engine> {
         let speculate = env_speculate().unwrap_or(self.speculate);
+        let ingest = env_ingest().unwrap_or(self.ingest);
         if self.backend.is_remote() {
             if self.dataset.is_some() {
                 return Err(Error::InvalidArgument(
@@ -531,10 +575,11 @@ impl EngineBuilder {
             if self.queue_capacity != defaults.queue_capacity
                 || self.memory_mib != defaults.memory_mib
                 || self.sessions != defaults.sessions
+                || self.ingest_cfg != defaults.ingest_cfg
             {
                 return Err(Error::InvalidArgument(
-                    "remote engines take their queue, memory and session policy from the \
-                     serving process; configure them on `exemcl serve`"
+                    "remote engines take their queue, memory, session and ingest policy \
+                     from the serving process; configure them on `exemcl serve`"
                         .into(),
                 ));
             }
@@ -550,16 +595,21 @@ impl EngineBuilder {
                     dtype: self.dtype,
                     backend: self.backend,
                     speculate,
+                    ingest,
                     inner: EngineInner::Cluster(cluster),
                 });
             }
             let target = self.backend.listen().expect("non-cluster remote has a dial target");
-            let client = NetClient::connect(&target)?;
+            let client = NetClient::connect_with(
+                &target,
+                &ConnectOptions { ingest, ..ConnectOptions::from_env() },
+            )?;
             return Ok(Engine {
                 dataset: client.dataset().clone(),
                 dtype: self.dtype,
                 backend: self.backend,
                 speculate,
+                ingest,
                 inner: EngineInner::Net(client),
             });
         }
@@ -585,7 +635,10 @@ impl EngineBuilder {
                 backend = Backend::Auto.resolve_auto_with(&ds, &self.artifacts, None);
             } else {
                 let target = backend.listen().expect("the auto remote tier is tcp/uds");
-                let client = NetClient::connect(&target)?;
+                let client = NetClient::connect_with(
+                    &target,
+                    &ConnectOptions { ingest, ..ConnectOptions::from_env() },
+                )?;
                 if client.dataset().n() != ds.n() || client.dataset().d() != ds.d() {
                     return Err(Error::InvalidArgument(format!(
                         "EXEMCL_REMOTE server at {target} serves a {}x{} dataset; the local \
@@ -601,6 +654,7 @@ impl EngineBuilder {
                     dtype: self.dtype,
                     backend,
                     speculate,
+                    ingest,
                     inner: EngineInner::Net(client),
                 });
             }
@@ -615,12 +669,13 @@ impl EngineBuilder {
                 let (ds2, dist, dtype) = (ds.clone(), self.dist, self.dtype);
                 let (artifacts, memory_mib) = (self.artifacts, self.memory_mib);
                 let (simd, pin) = (self.simd, self.pin);
-                let service = Service::spawn_with(
+                let service = Service::spawn_full(
                     move || {
                         build_oracle(&inner, ds2, dist, dtype, &artifacts, memory_mib, simd, pin)
                     },
                     self.queue_capacity,
                     self.sessions,
+                    self.ingest_cfg,
                 )?;
                 EngineInner::Service(service)
             }
@@ -635,7 +690,7 @@ impl EngineBuilder {
                 self.pin,
             )?),
         };
-        Ok(Engine { dataset: ds, dtype: self.dtype, backend, speculate, inner })
+        Ok(Engine { dataset: ds, dtype: self.dtype, backend, speculate, ingest, inner })
     }
 }
 
@@ -660,6 +715,7 @@ pub struct Engine {
     dtype: Dtype,
     backend: Backend,
     speculate: usize,
+    ingest: bool,
     inner: EngineInner,
 }
 
@@ -778,6 +834,13 @@ impl Engine {
     /// override.
     pub fn speculate(&self) -> usize {
         self.speculate
+    }
+
+    /// Whether this engine opted into live ingest
+    /// ([`EngineBuilder::ingest`] after the `EXEMCL_INGEST` override).
+    /// Out-of-process appends are rejected client-side without it.
+    pub fn ingest(&self) -> bool {
+        self.ingest
     }
 
     /// The backing oracle's descriptive name (backend/dissimilarity/
@@ -1243,6 +1306,49 @@ mod tests {
         assert!(
             !matches!(r, Err(Error::InvalidArgument(_))),
             "speculate must not trip the remote knob rejection"
+        );
+    }
+
+    /// The `ingest` opt-in and the server-side `ingest_config` policy
+    /// plumb through the builder: a service session can grow the ground
+    /// set, a local session cannot, and remote engines reject the
+    /// server-side policy but not the client-side opt-in.
+    #[test]
+    fn ingest_knob_and_config_plumb_through() {
+        if std::env::var("EXEMCL_INGEST").is_ok() {
+            return; // env forcing overrides the knob under test
+        }
+        let e = Engine::builder()
+            .dataset(small())
+            .backend(Backend::service_over(Backend::SingleThread))
+            .ingest(true)
+            .build()
+            .unwrap();
+        assert!(e.ingest());
+        let mut s = e.session().unwrap();
+        let tail = UniformCube::new(4, 1.0).generate(8, 11);
+        assert_eq!(s.append(&tail).unwrap(), 48 + 8);
+        // a local session borrows a frozen oracle and cannot grow it
+        let direct =
+            Engine::builder().dataset(small()).backend(Backend::SingleThread).build().unwrap();
+        let mut ls = direct.session().unwrap();
+        assert!(matches!(ls.append(&tail), Err(Error::InvalidArgument(_))));
+        // server-side ingest policy is rejected on remote engines...
+        let r = Engine::builder()
+            .backend(Backend::Tcp { addr: "127.0.0.1:1".into() })
+            .ingest_config(IngestConfig { max_total_rows: Some(10), ..Default::default() })
+            .build();
+        assert!(matches!(r, Err(Error::InvalidArgument(_))), "ingest policy must be rejected");
+        // ...but the client-side opt-in is not (the failure here is the
+        // dead endpoint, same contract as `speculate`)
+        let r = Engine::builder()
+            .backend(Backend::Tcp { addr: "127.0.0.1:1".into() })
+            .ingest(true)
+            .build();
+        assert!(r.is_err(), "nothing listens on port 1");
+        assert!(
+            !matches!(r, Err(Error::InvalidArgument(_))),
+            "ingest opt-in must not trip the remote knob rejection"
         );
     }
 

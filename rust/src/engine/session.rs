@@ -204,9 +204,15 @@ impl<'a> Session<'a> {
         }
     }
 
-    /// Ground-set size `|V|`.
+    /// Ground-set size `|V|`. Out-of-process sessions report the
+    /// **live** size (the connect-time mirror's `n` grown by every
+    /// append ack this connection observed); in-process sessions read
+    /// it off the dataset.
     pub fn n(&self) -> usize {
-        self.dataset().n()
+        match &self.inner {
+            Inner::Net(s) => s.client().live_n().max(self.dataset().n()),
+            _ => self.dataset().n(),
+        }
     }
 
     /// A new session with a **copy** of the current state: a local clone,
@@ -294,6 +300,28 @@ impl<'a> Session<'a> {
             Inner::Local { oracle, state } => oracle.commit_many(state, idxs),
             Inner::Remote(r) => r.commit_many(idxs),
             Inner::Net(s) => s.commit_many(idxs),
+        }
+    }
+
+    /// Append rows to the ground set (live ingest — see
+    /// [`crate::ingest`]): the serving executor extends the dataset,
+    /// this session's server-resident state and every *other* live
+    /// session in one pooled pass, then returns the grown ground-set
+    /// size. Local sessions borrow a frozen oracle and cannot grow it —
+    /// build a service or remote engine. Out-of-process engines must
+    /// also have opted in with
+    /// [`crate::engine::EngineBuilder::ingest`]`(true)`; their
+    /// connect-time dataset mirror keeps describing the pre-append
+    /// ground set (use [`Session::n`] for the live size).
+    pub fn append(&mut self, rows: &Dataset) -> Result<u64> {
+        match &mut self.inner {
+            Inner::Local { .. } => Err(Error::InvalidArgument(
+                "local sessions borrow a frozen oracle; live ingest needs a service or \
+                 remote engine (Backend::Service, tcp:, uds: with .ingest(true))"
+                    .into(),
+            )),
+            Inner::Remote(r) => r.handle().append(rows),
+            Inner::Net(s) => s.client().append(rows),
         }
     }
 

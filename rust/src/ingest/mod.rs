@@ -1,0 +1,130 @@
+//! Live-ingest streaming subsystem: a growable ground set, end to end.
+//!
+//! Everything else in the crate freezes the ground set at
+//! `Engine::build`; this module is the machinery that lets producers
+//! keep **appending rows to a running server** while every live
+//! session — and an optional server-resident streaming summary — tracks
+//! the growth incrementally, with no rebuild and no replay of old rows.
+//!
+//! # The append path, layer by layer
+//!
+//! ```text
+//!  producer                 executor thread (owns the oracle)
+//!  ────────                 ──────────────────────────────────
+//!  Session::append(rows)
+//!    │  Append{rows} ──────▶ validate: rows.len() % d == 0,
+//!    │  (wire: 16 + 4·len)             batch ≤ max_rows_per_append,
+//!    │                                 n + batch ≤ max_total_rows
+//!    │                       invalidate speculation caches (stale n)
+//!    │                       Oracle::extend(rows, live states):
+//!    │                         Dataset::extend        (COW, NaN-vetted)
+//!    │                         e0 norms + l0 suffix   (append-only)
+//!    │                         ShadowSet::extend_quantized
+//!    │                             (frozen build-time mean — existing
+//!    │                              quantized bits never move)
+//!    │                         per live DminState, one pooled pass:
+//!    │                             dmin ++= d(new, e0) tail
+//!    │                             lower tail vs committed exemplars
+//!    │                       StreamState::fold(new rows)  (if serving)
+//!    ◀── AppendAck{new_n} ── counters: rows_appended, append_batches,
+//!       (wire: 16 + 8)                 sessions_extended, window_evictions
+//! ```
+//!
+//! The extension is **exact**: the per-row `dmin` min-update never
+//! crosses rows and `min` is exact in floating point, so after any
+//! sequence of appends a session's state is bit-identical (dmin bits
+//! included) to the state a cold `Engine::build` on the concatenated
+//! dataset would have produced after the same commits. The one
+//! approximation in the whole path is quantization drift for centered
+//! narrow-dtype shadows: the suffix is quantized against the *frozen*
+//! build-time mean (re-centering would silently rewrite existing dmin
+//! bits), so heavily drifting traffic degrades toward the uncentered
+//! error bound — see [`crate::data::ShadowSet::extend_quantized`] for
+//! the bound and the cold-rebuild escape hatch.
+//!
+//! # Server-resident streaming summaries
+//!
+//! A server started with a [`StreamSpec`] (`ingest.stream` /
+//! `--ingest.stream sieve:k=8`) keeps a [`StreamState`] next to its
+//! session table: sieve-streaming (or ThreeSieves) machinery whose
+//! states live server-side and **fold each append batch as it arrives**
+//! — old rows are never replayed, matching the one-pass semantics of
+//! the offline [`crate::optim::SieveStreaming`] family (same threshold
+//! grid, same accept rules). Folds are deterministic in the append
+//! sequence; `StreamQuery` returns the current `(f(S), exemplars)` at
+//! any time. Sliding-window and exponential-decay variants are
+//! documented on [`StreamState`].
+//!
+//! # Guards
+//!
+//! [`IngestConfig`] caps each batch (`max_rows_per_append`) and the
+//! total ground-set size (`max_total_rows`) so a misbehaving producer
+//! cannot OOM the server; `Dataset::extend` rejects non-finite rows at
+//! the boundary. Remote engines must opt in (`.ingest(true)`) before
+//! their client will send `Append` — an engine that mirrored the
+//! dataset at connect time and then appends knows its mirror represents
+//! only the pre-append ground set.
+
+mod stream;
+
+pub use stream::{FoldOutcome, StreamKind, StreamSpec, StreamState};
+
+/// Default per-batch row cap: generous for real producers (a 64-row
+/// sensor batch is three orders of magnitude smaller) while bounding a
+/// single frame's decoded size well below the codec's payload ceiling.
+pub const DEFAULT_MAX_ROWS_PER_APPEND: usize = 65_536;
+
+/// Server-side ingest policy, fixed at service spawn
+/// ([`crate::coordinator::Service`]): batch/total caps and the optional
+/// server-resident streaming summary.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IngestConfig {
+    /// Largest accepted single `Append` batch, in rows
+    /// ([`DEFAULT_MAX_ROWS_PER_APPEND`]). Zero is rejected at spawn by
+    /// normalizing to the default.
+    pub max_rows_per_append: usize,
+    /// Hard ceiling on the grown ground set (`None` = unbounded): an
+    /// append that would push `n` past this is rejected whole.
+    pub max_total_rows: Option<usize>,
+    /// Serve a live streaming summary with this machinery.
+    pub stream: Option<StreamSpec>,
+}
+
+impl Default for IngestConfig {
+    fn default() -> Self {
+        Self {
+            max_rows_per_append: DEFAULT_MAX_ROWS_PER_APPEND,
+            max_total_rows: None,
+            stream: None,
+        }
+    }
+}
+
+impl IngestConfig {
+    /// Replace degenerate knob values with their defaults.
+    pub fn normalized(mut self) -> Self {
+        if self.max_rows_per_append == 0 {
+            self.max_rows_per_append = DEFAULT_MAX_ROWS_PER_APPEND;
+        }
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_unbounded_total_with_a_batch_cap() {
+        let c = IngestConfig::default();
+        assert_eq!(c.max_rows_per_append, DEFAULT_MAX_ROWS_PER_APPEND);
+        assert!(c.max_total_rows.is_none());
+        assert!(c.stream.is_none());
+    }
+
+    #[test]
+    fn normalized_rescues_a_zero_batch_cap() {
+        let c = IngestConfig { max_rows_per_append: 0, ..Default::default() }.normalized();
+        assert_eq!(c.max_rows_per_append, DEFAULT_MAX_ROWS_PER_APPEND);
+    }
+}

@@ -1,0 +1,624 @@
+//! Server-resident streaming summaries: sieve machinery that folds
+//! append batches into a live summary, incrementally.
+//!
+//! The offline [`crate::optim::SieveStreaming`] / ThreeSieves runs
+//! consume a *finite* stream order over a frozen ground set. Here the
+//! stream **is** the append traffic: every `Append{rows}` batch is fed
+//! through the same threshold grid ([`crate::optim::sieve`]'s
+//! `threshold_grid` / `m_segments`) and the same accept rules, against
+//! states that the executor extends in lock-step with the ground set —
+//! so a summary is always queryable, no rows are ever replayed (outside
+//! an explicit window re-summarization), and the fold is deterministic
+//! in the append sequence.
+
+use std::collections::VecDeque;
+
+use crate::optim::oracle::{DminState, Oracle};
+use crate::optim::sieve::{m_segments, threshold_grid};
+use crate::{Error, Result};
+
+/// Default accuracy of the OPT-guess grid.
+pub const DEFAULT_EPS: f64 = 0.1;
+/// Default ThreeSieves confidence budget (rejections before lowering
+/// the guess; the ThreeSieves paper suggests values ≫ k).
+pub const DEFAULT_T: usize = 50;
+
+/// Which streaming machinery serves the summary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StreamKind {
+    /// Badanidiyuru-style SieveStreaming: a ladder of OPT guesses
+    /// `(1+eps)^j`, one candidate summary per guess, best one answers.
+    Sieve,
+    /// Buschjäger-style ThreeSieves: a single summary and a single
+    /// guess `τ`, lowered after `t` consecutive rejections — O(k)
+    /// memory and the fewest evaluations.
+    ThreeSieves,
+}
+
+/// Parsed `ingest.stream` specification:
+/// `sieve:k=8[,eps=0.1][,window=256][,decay=0.98]` or
+/// `threesieves:k=8[,eps=0.1][,t=50][,window=...][,decay=...]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StreamSpec {
+    /// Machinery (`sieve` | `threesieves`).
+    pub kind: StreamKind,
+    /// Summary cardinality cap.
+    pub k: usize,
+    /// Threshold-grid accuracy, in (0, 1).
+    pub eps: f64,
+    /// ThreeSieves confidence budget (ignored by [`StreamKind::Sieve`]).
+    pub t: usize,
+    /// Sliding window: only the `W` most-recent rows are summary
+    /// candidates (see [`StreamState`], "Sliding window").
+    pub window: Option<usize>,
+    /// Exponential time decay λ in (0, 1): applied to the running
+    /// singleton ceiling per batch (see [`StreamState`], "Decay").
+    pub decay: Option<f64>,
+}
+
+impl StreamSpec {
+    /// Parse the `kind:key=value,...` form used by the `ingest.stream`
+    /// config key and `exemcl serve --ingest.stream`.
+    pub fn parse(s: &str) -> Result<Self> {
+        let bad = |msg: String| Error::Config(format!("ingest.stream '{s}': {msg}"));
+        let (head, rest) = match s.split_once(':') {
+            Some((h, r)) => (h.trim(), r),
+            None => (s.trim(), ""),
+        };
+        let kind = match head {
+            "sieve" => StreamKind::Sieve,
+            "threesieves" | "three-sieves" => StreamKind::ThreeSieves,
+            other => {
+                return Err(bad(format!(
+                    "unknown machinery '{other}' (expected sieve | threesieves)"
+                )))
+            }
+        };
+        let mut spec = StreamSpec {
+            kind,
+            k: 0,
+            eps: DEFAULT_EPS,
+            t: DEFAULT_T,
+            window: None,
+            decay: None,
+        };
+        for kv in rest.split(',').map(str::trim).filter(|kv| !kv.is_empty()) {
+            let (key, value) = kv
+                .split_once('=')
+                .ok_or_else(|| bad(format!("expected key=value, got '{kv}'")))?;
+            let value = value.trim();
+            match key.trim() {
+                "k" => {
+                    spec.k = value
+                        .parse()
+                        .map_err(|_| bad(format!("k must be a positive integer, got '{value}'")))?
+                }
+                "eps" => {
+                    spec.eps = value
+                        .parse()
+                        .map_err(|_| bad(format!("eps must be a number, got '{value}'")))?
+                }
+                "t" => {
+                    spec.t = value
+                        .parse()
+                        .map_err(|_| bad(format!("t must be a positive integer, got '{value}'")))?
+                }
+                "window" => {
+                    spec.window = Some(value.parse().map_err(|_| {
+                        bad(format!("window must be a positive integer, got '{value}'"))
+                    })?)
+                }
+                "decay" => {
+                    spec.decay = Some(
+                        value
+                            .parse()
+                            .map_err(|_| bad(format!("decay must be a number, got '{value}'")))?,
+                    )
+                }
+                other => return Err(bad(format!("unknown key '{other}'"))),
+            }
+        }
+        if spec.k == 0 {
+            return Err(bad("k must be positive (e.g. sieve:k=8)".into()));
+        }
+        if !(spec.eps > 0.0 && spec.eps < 1.0) {
+            return Err(bad(format!("eps must be in (0, 1), got {}", spec.eps)));
+        }
+        if spec.t == 0 {
+            return Err(bad("t must be positive".into()));
+        }
+        if spec.window == Some(0) {
+            return Err(bad("window must be positive".into()));
+        }
+        if let Some(l) = spec.decay {
+            if !(l > 0.0 && l < 1.0) {
+                return Err(bad(format!("decay must be in (0, 1), got {l}")));
+            }
+        }
+        Ok(spec)
+    }
+}
+
+impl std::str::FromStr for StreamSpec {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        Self::parse(s)
+    }
+}
+
+impl std::fmt::Display for StreamSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.kind {
+            StreamKind::Sieve => write!(f, "sieve:k={},eps={}", self.k, self.eps)?,
+            StreamKind::ThreeSieves => {
+                write!(f, "threesieves:k={},eps={},t={}", self.k, self.eps, self.t)?
+            }
+        }
+        if let Some(w) = self.window {
+            write!(f, ",window={w}")?;
+        }
+        if let Some(l) = self.decay {
+            write!(f, ",decay={l}")?;
+        }
+        Ok(())
+    }
+}
+
+/// One live sieve: an OPT guess, its summary state, its value.
+struct StreamSieve {
+    threshold: f64,
+    state: DminState,
+    value: f32,
+}
+
+/// The per-kind fold machinery.
+enum Machine {
+    Sieve {
+        sieves: Vec<StreamSieve>,
+    },
+    Three {
+        state: DminState,
+        value: f32,
+        /// The `m` value `tau` was last derived from.
+        last_m: f64,
+        tau: f64,
+        rejects: usize,
+    },
+}
+
+/// What one fold did — the executor turns this into counters and the
+/// summary-update log banner.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FoldOutcome {
+    /// Rows evicted from the sliding window by this batch.
+    pub evictions: u64,
+    /// True when an eviction removed a summary member and the window
+    /// was deterministically re-summarized.
+    pub resummarized: bool,
+    /// Current best summary value after the fold.
+    pub value: f32,
+    /// Current best summary size after the fold.
+    pub exemplars: usize,
+}
+
+/// A server-resident streaming summary: lives on the executor thread
+/// next to the session table, folds every append batch, answers
+/// `StreamQuery` with its current best `(f(S), exemplars)`.
+///
+/// # Exactness
+///
+/// Folds are **deterministic in the append sequence**: the same batches
+/// in the same order always produce the same summary, bit for bit. They
+/// are *not* equivalent to an offline sieve run over the final ground
+/// set — a row folded when `n` was small was scored against the ground
+/// set *as of its arrival*, which is precisely the streaming semantics
+/// (the offline equivalence that does hold, and that `tests/ingest.rs`
+/// asserts bitwise, is for greedy-after-append vs. cold rebuild).
+///
+/// # Sliding window
+///
+/// With `window=W`, only the `W` most-recent rows are summary
+/// *candidates*; coverage (`f`) is still measured over the full
+/// ingested ground set. When eviction removes a row that a live summary
+/// actually uses, the surviving window is **deterministically
+/// re-summarized**: all sieve states reset and the window's rows replay
+/// in arrival order (evictions that only drop non-members are free —
+/// lazy re-summarization). This is the one place old rows are re-fed,
+/// and it is bounded by `W`.
+///
+/// # Decay
+///
+/// With `decay=λ`, the running singleton ceiling `m` (and ThreeSieves'
+/// guess `τ`) is multiplied by λ before each batch folds, so the
+/// accept thresholds track *recent* traffic magnitude instead of the
+/// all-time spike. Committed exemplars are never revoked by decay, and
+/// summary values are exact `f` values throughout (decay weights the
+/// thresholds, not the objective).
+pub struct StreamState {
+    spec: StreamSpec,
+    /// Exemplar-free template: singleton gains against it are `f({v})`,
+    /// the input of the `m` estimator and of sieve births. Extended on
+    /// every append like any live state, so it always *is* the current
+    /// init state.
+    base: DminState,
+    /// Running best singleton value.
+    m: f64,
+    machine: Machine,
+    /// Live candidate window (empty when `spec.window` is `None`).
+    window: VecDeque<usize>,
+    batches: u64,
+}
+
+impl StreamState {
+    /// Build around the serving oracle's fresh init state.
+    pub fn new(spec: StreamSpec, base: DminState) -> Self {
+        let machine = match spec.kind {
+            StreamKind::Sieve => Machine::Sieve { sieves: Vec::new() },
+            StreamKind::ThreeSieves => Machine::Three {
+                state: base.clone(),
+                value: 0.0,
+                last_m: 0.0,
+                tau: 0.0,
+                rejects: 0,
+            },
+        };
+        Self { spec, base, m: 0.0, machine, window: VecDeque::new(), batches: 0 }
+    }
+
+    /// The spec this summary serves.
+    pub fn spec(&self) -> &StreamSpec {
+        &self.spec
+    }
+
+    /// Batches folded so far.
+    pub fn batches(&self) -> u64 {
+        self.batches
+    }
+
+    /// Every `DminState` this summary owns, for the executor to hand to
+    /// [`Oracle::extend`] alongside the session table's states — the
+    /// summary's states must grow in lock-step with the ground set or
+    /// the next fold's gains calls would reject them.
+    pub fn states_mut(&mut self) -> Vec<&mut DminState> {
+        let mut out = vec![&mut self.base];
+        match &mut self.machine {
+            Machine::Sieve { sieves } => out.extend(sieves.iter_mut().map(|s| &mut s.state)),
+            Machine::Three { state, .. } => out.push(state),
+        }
+        out
+    }
+
+    /// Current best summary: `(f(S), exemplars)` — zero-valued and
+    /// empty before any positive-gain row has arrived.
+    pub fn summary(&self) -> (f32, Vec<usize>) {
+        match &self.machine {
+            Machine::Sieve { sieves } => {
+                match sieves.iter().max_by(|a, b| a.value.total_cmp(&b.value)) {
+                    Some(s) => (s.value, s.state.exemplars.clone()),
+                    None => (0.0, Vec::new()),
+                }
+            }
+            Machine::Three { state, value, .. } => (*value, state.exemplars.clone()),
+        }
+    }
+
+    /// Does any live summary currently use row `idx` as an exemplar?
+    fn uses(&self, idx: usize) -> bool {
+        match &self.machine {
+            Machine::Sieve { sieves } => {
+                sieves.iter().any(|s| s.state.exemplars.contains(&idx))
+            }
+            Machine::Three { state, .. } => state.exemplars.contains(&idx),
+        }
+    }
+
+    /// Drop all summary progress (window re-summarization): fresh
+    /// machinery over the *current* ground set — `base` has been
+    /// extended all along, so a reset state is exactly the oracle's
+    /// current init state.
+    fn reset_machine(&mut self) {
+        self.m = 0.0;
+        match &mut self.machine {
+            Machine::Sieve { sieves } => sieves.clear(),
+            Machine::Three { state, value, last_m, tau, rejects } => {
+                *state = self.base.clone();
+                *value = 0.0;
+                *last_m = 0.0;
+                *tau = 0.0;
+                *rejects = 0;
+            }
+        }
+    }
+
+    /// Fold one append batch (`new_rows` = the appended index range,
+    /// already extended into every state by [`Oracle::extend`]).
+    pub fn fold(
+        &mut self,
+        oracle: &dyn Oracle,
+        new_rows: std::ops::Range<usize>,
+    ) -> Result<FoldOutcome> {
+        self.batches += 1;
+        if let Some(l) = self.spec.decay {
+            self.m *= l;
+            if let Machine::Three { last_m, tau, .. } = &mut self.machine {
+                *last_m *= l;
+                *tau *= l;
+            }
+        }
+        let fresh: Vec<usize> = new_rows.collect();
+        let mut out = FoldOutcome::default();
+        if let Some(w) = self.spec.window {
+            self.window.extend(fresh.iter().copied());
+            let mut resummarize = false;
+            while self.window.len() > w {
+                let gone = self.window.pop_front().expect("window is non-empty");
+                out.evictions += 1;
+                resummarize |= self.uses(gone);
+            }
+            if resummarize {
+                // deterministic re-summarization: replay the surviving
+                // window in arrival order through fresh machinery
+                out.resummarized = true;
+                let replay: Vec<usize> = self.window.iter().copied().collect();
+                self.reset_machine();
+                self.fold_items(oracle, &replay)?;
+            } else {
+                self.fold_items(oracle, &fresh)?;
+            }
+        } else {
+            self.fold_items(oracle, &fresh)?;
+        }
+        let (value, exemplars) = self.summary();
+        out.value = value;
+        out.exemplars = exemplars.len();
+        Ok(out)
+    }
+
+    fn fold_items(&mut self, oracle: &dyn Oracle, items: &[usize]) -> Result<()> {
+        if items.is_empty() {
+            return Ok(());
+        }
+        let singles = oracle.marginal_gains(&self.base, items)?;
+        let mut m = self.m;
+        let segments = m_segments(&singles, &mut m);
+        self.m = m;
+        let (k, eps, t) = (self.spec.k, self.spec.eps, self.spec.t);
+        for (start, end, seg_m) in segments {
+            if seg_m <= 0.0 {
+                continue;
+            }
+            let seg = &items[start..end];
+            match &mut self.machine {
+                Machine::Sieve { sieves } => {
+                    // same ladder refresh as the offline SieveStreaming:
+                    // retire guesses below the grid, birth the missing
+                    // ones from the (always-current) base state
+                    let grid = threshold_grid(eps, seg_m, 2.0 * k as f64 * seg_m);
+                    sieves.retain(|s| s.threshold >= seg_m / (1.0 + eps));
+                    for v in grid {
+                        if !sieves.iter().any(|s| (s.threshold - v).abs() < 1e-12) {
+                            sieves.push(StreamSieve {
+                                threshold: v,
+                                state: self.base.clone(),
+                                value: 0.0,
+                            });
+                        }
+                    }
+                    for sieve in sieves.iter_mut() {
+                        feed_sieve(oracle, sieve, seg, k)?;
+                    }
+                }
+                Machine::Three { state, value, last_m, tau, rejects } => {
+                    if seg_m > *last_m {
+                        // m grew: reset the guess optimistically, as in
+                        // the offline ThreeSieves
+                        *last_m = seg_m;
+                        *tau = k as f64 * seg_m;
+                        *rejects = 0;
+                    }
+                    let mut pos = 0;
+                    while pos < seg.len() && state.exemplars.len() < k {
+                        let tail = &seg[pos..];
+                        let gains = oracle.marginal_gains(state, tail)?;
+                        let mut consumed = tail.len();
+                        for (off, (&item, &gain)) in tail.iter().zip(&gains).enumerate() {
+                            let remaining = k - state.exemplars.len();
+                            let need = (*tau - *value as f64) / remaining as f64;
+                            if (gain as f64) >= need && !state.exemplars.contains(&item) {
+                                oracle.commit(state, item)?;
+                                *value = oracle.f_of_state(state)?;
+                                *rejects = 0;
+                                consumed = off + 1; // re-evaluate the rest fresh
+                                break;
+                            }
+                            *rejects += 1;
+                            if *rejects >= t {
+                                *tau /= 1.0 + eps;
+                                *rejects = 0;
+                            }
+                        }
+                        pos += consumed;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Feed a segment through one sieve with the exact SieveStreaming
+/// accept rule (`gain >= (v/2 − f(S)) / (k − |S|)`), re-evaluating the
+/// tail after every acceptance — the same sequential semantics as the
+/// offline `feed_sieve`, but over a raw oracle + state instead of a
+/// `Session`.
+fn feed_sieve(
+    oracle: &dyn Oracle,
+    sieve: &mut StreamSieve,
+    items: &[usize],
+    k: usize,
+) -> Result<()> {
+    let mut pos = 0;
+    while pos < items.len() && sieve.state.exemplars.len() < k {
+        let tail = &items[pos..];
+        let gains = oracle.marginal_gains(&sieve.state, tail)?;
+        let mut accepted = None;
+        for (off, (&item, &gain)) in tail.iter().zip(&gains).enumerate() {
+            let remaining = k - sieve.state.exemplars.len();
+            let need = (sieve.threshold / 2.0 - sieve.value as f64) / remaining as f64;
+            if (gain as f64) >= need && !sieve.state.exemplars.contains(&item) {
+                accepted = Some((off, item));
+                break;
+            }
+        }
+        match accepted {
+            Some((off, item)) => {
+                oracle.commit(&mut sieve.state, item)?;
+                sieve.value = oracle.f_of_state(&sieve.state)?;
+                pos += off + 1;
+            }
+            None => break,
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpu::SingleThread;
+    use crate::data::synth::GaussianBlobs;
+    use crate::data::Dataset;
+    use crate::optim::Oracle as _;
+
+    #[test]
+    fn spec_parses_the_documented_forms() {
+        let s = StreamSpec::parse("sieve:k=8").unwrap();
+        assert_eq!(s.kind, StreamKind::Sieve);
+        assert_eq!(s.k, 8);
+        assert_eq!(s.eps, DEFAULT_EPS);
+        assert!(s.window.is_none() && s.decay.is_none());
+
+        let t = StreamSpec::parse("threesieves:k=4,eps=0.25,t=10,window=128,decay=0.9").unwrap();
+        assert_eq!(t.kind, StreamKind::ThreeSieves);
+        assert_eq!((t.k, t.t, t.window, t.decay), (4, 10, Some(128), Some(0.9)));
+        assert_eq!(t.eps, 0.25);
+
+        // Display round-trips through parse
+        let back = StreamSpec::parse(&t.to_string()).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn spec_rejects_malformed_forms() {
+        for bad in [
+            "lazy:k=3",        // unknown machinery
+            "sieve",           // missing k
+            "sieve:k=0",       // zero k
+            "sieve:k=2,eps=1", // eps out of range
+            "sieve:k=2,window=0",
+            "sieve:k=2,decay=1.5",
+            "sieve:k=2,bogus=1",
+            "sieve:k",
+        ] {
+            assert!(StreamSpec::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    fn grown_in_batches(
+        oracle: &mut SingleThread,
+        stream: &mut StreamState,
+        tail: &Dataset,
+        batch: usize,
+    ) {
+        let mut off = 0;
+        while off < tail.n() {
+            let hi = (off + batch).min(tail.n());
+            let rows = tail.gather(&(off..hi).collect::<Vec<_>>());
+            let old_n = oracle.dataset().n();
+            let mut states = stream.states_mut();
+            oracle.extend(&rows, &mut states).unwrap();
+            stream.fold(oracle, old_n..old_n + rows.n()).unwrap();
+            off = hi;
+        }
+    }
+
+    #[test]
+    fn folds_are_deterministic_in_the_append_sequence() {
+        let head = GaussianBlobs::new(3, 2, 0.3).generate(30, 5);
+        let tail = GaussianBlobs::new(3, 2, 0.3).generate(60, 6);
+        let spec = StreamSpec::parse("sieve:k=3,eps=0.2").unwrap();
+
+        let run = |batch: usize| {
+            let mut o = SingleThread::new(head.clone());
+            let mut s = StreamState::new(spec.clone(), o.init_state());
+            grown_in_batches(&mut o, &mut s, &tail, batch);
+            s.summary()
+        };
+        let (v1, e1) = run(7);
+        let (v2, e2) = run(7);
+        assert_eq!(v1.to_bits(), v2.to_bits());
+        assert_eq!(e1, e2);
+        // summary is non-trivial on clustered data
+        assert!(!e1.is_empty());
+        assert!(v1 > 0.0);
+    }
+
+    #[test]
+    fn three_sieves_machinery_caps_cardinality() {
+        let head = GaussianBlobs::new(4, 2, 0.2).generate(20, 9);
+        let tail = GaussianBlobs::new(4, 2, 0.2).generate(80, 10);
+        let spec = StreamSpec::parse("threesieves:k=4,eps=0.2,t=8").unwrap();
+        let mut o = SingleThread::new(head.clone());
+        let mut s = StreamState::new(spec, o.init_state());
+        grown_in_batches(&mut o, &mut s, &tail, 16);
+        let (v, ex) = s.summary();
+        assert!(ex.len() <= 4);
+        assert!(!ex.is_empty());
+        assert!(v > 0.0);
+    }
+
+    #[test]
+    fn window_evictions_restrict_candidates_to_recent_rows() {
+        let head = GaussianBlobs::new(3, 2, 0.3).generate(10, 1);
+        let tail = GaussianBlobs::new(3, 2, 0.3).generate(50, 2);
+        let spec = StreamSpec::parse("sieve:k=3,eps=0.2,window=12").unwrap();
+        let mut o = SingleThread::new(head.clone());
+        let mut s = StreamState::new(spec, o.init_state());
+
+        let mut total_evictions = 0u64;
+        let mut off = 0;
+        while off < tail.n() {
+            let hi = (off + 8).min(tail.n());
+            let rows = tail.gather(&(off..hi).collect::<Vec<_>>());
+            let old_n = o.dataset().n();
+            let mut states = s.states_mut();
+            o.extend(&rows, &mut states).unwrap();
+            let out = s.fold(&o, old_n..old_n + rows.n()).unwrap();
+            total_evictions += out.evictions;
+            off = hi;
+        }
+        assert!(total_evictions > 0, "window never evicted");
+        // every exemplar is inside the live window
+        let live: std::collections::HashSet<usize> = s.window.iter().copied().collect();
+        let (_, ex) = s.summary();
+        for e in ex {
+            assert!(live.contains(&e), "exemplar {e} was evicted but survived");
+        }
+    }
+
+    #[test]
+    fn decay_lowers_the_singleton_ceiling_between_batches() {
+        let head = GaussianBlobs::new(2, 2, 0.2).generate(10, 3);
+        let tail = GaussianBlobs::new(2, 2, 0.2).generate(20, 4);
+        let spec = StreamSpec::parse("sieve:k=2,eps=0.3,decay=0.5").unwrap();
+        let mut o = SingleThread::new(head.clone());
+        let mut s = StreamState::new(spec, o.init_state());
+        grown_in_batches(&mut o, &mut s, &tail, 10);
+        let m_after = s.m;
+        // an empty-batch fold only decays
+        let old_n = o.dataset().n();
+        s.fold(&o, old_n..old_n).unwrap();
+        assert!((s.m - m_after * 0.5).abs() < 1e-12);
+    }
+}

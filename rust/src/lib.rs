@@ -94,6 +94,14 @@
 //! and a mispredicted commit discards the cache and computes fresh
 //! (see [`coordinator`], "Speculative cross-round gains").
 //!
+//! The ground set itself can grow while a server runs: an engine built
+//! with `.ingest(true)` may [`engine::Session::append`] new rows, and
+//! the executor extends the dataset, every live session's state, and an
+//! optional server-resident streaming summary (`--ingest.stream
+//! sieve:k=8`) **incrementally** — no rebuild, no replay, and
+//! bit-identical to a cold build on the concatenated dataset (see
+//! [`ingest`]).
+//!
 //! The same protocol goes **out of process** over TCP or Unix-domain
 //! sockets ([`net`]): `exemcl serve` loads a dataset and serves it,
 //! and a remote engine runs any optimizer against it unchanged —
@@ -133,6 +141,7 @@ pub mod distance;
 pub mod engine;
 pub mod error;
 pub mod index;
+pub mod ingest;
 pub mod logging;
 pub mod net;
 pub mod optim;

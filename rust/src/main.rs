@@ -4,6 +4,7 @@
 //! ```text
 //! exemcl solve  [--config FILE] [--key=value ...]   run an optimization
 //! exemcl serve  [--net.listen tcp:host:port]        serve a dataset over the wire
+//! exemcl append [--backend tcp:host:port]           feed live rows to a server
 //! exemcl info   [--artifacts DIR]                   list AOT artifacts
 //! exemcl bench-hint                                 how to run the paper benches
 //! ```
@@ -17,6 +18,10 @@
 //! backend in a coordinator service and puts its session protocol on a
 //! TCP or Unix-domain socket ([`exemcl::net`]); a second terminal's
 //! `solve --backend tcp:HOST:PORT` then runs any optimizer against it.
+//! `append` is the live-ingest producer: it dials the same server and
+//! streams row batches at it ([`exemcl::ingest`]) — every live session
+//! extends incrementally, and a server started with `--ingest.stream`
+//! folds the traffic into a standing streaming summary.
 
 use std::time::Instant;
 
@@ -25,7 +30,7 @@ use exemcl::config::{AppConfig, Backend, RawConfig};
 use exemcl::data::csv::{self, CsvOptions};
 use exemcl::data::synth::{GaussianBlobs, Rings, UniformCube};
 use exemcl::data::Dataset;
-use exemcl::net::NetServer;
+use exemcl::net::{ConnectOptions, Listen, NetClient, NetServer};
 use exemcl::optim::{
     GreeDi, Greedy, LazyGreedy, Optimizer, Salsa, SieveStreaming, SieveStreamingPP,
     StochasticGreedy, ThreeSieves,
@@ -36,7 +41,7 @@ use exemcl::{Error, Result};
 
 fn usage() -> ! {
     eprintln!(
-        "usage: exemcl <solve|serve|info|bench-hint> [--config FILE] [--section.key=value ...]\n\
+        "usage: exemcl <solve|serve|append|info|bench-hint> [--config FILE] [--section.key=value ...]\n\
          keys: data.n data.d data.generator data.blobs data.seed data.csv\n\
                optimizer.name optimizer.k\n\
                eval.backend (auto|cpu-st|cpu-mt|device|service[:auto|cpu-st|cpu-mt|device]\n\
@@ -53,6 +58,11 @@ fn usage() -> ! {
                net.listen (tcp:host:port|uds:/path) net.max_conns net.accept_timeout_secs\n\
                net.token (shared auth token; EXEMCL_TOKEN fallback)\n\
                net.compress (RLE-compress the Welcome mirror; both ends opt in)\n\
+               eval.ingest (opt a remote engine into live appends; EXEMCL_INGEST overrides)\n\
+               ingest.max_rows_per_append ingest.max_total_rows (server-side append caps)\n\
+               ingest.stream (sieve|threesieves[:k=..,eps=..,t=..,window=..,decay=..] —\n\
+                              serve a live streaming summary that folds appended rows)\n\
+               append.batch append.total (producer batch size / synthetic row budget)\n\
                shard.spec (i/N — serve only shard i) shard.layout (contiguous|strided)\n\
                shard.timeout_secs shard.retries shard.backoff_ms (cluster straggler policy)\n\
          shorthand: --dtype f16 == --eval.dtype=f16, --backend service ==\n\
@@ -62,6 +72,8 @@ fn usage() -> ! {
                --eval.backend=cluster:a,b,c (two-round GreeDi over N shard servers)\n\
          two terminals: `exemcl serve --backend cpu-mt` then\n\
                `exemcl solve --backend tcp:127.0.0.1:7171`\n\
+         live ingest: `exemcl serve --ingest.stream sieve:k=8` then\n\
+               `exemcl append --backend tcp:127.0.0.1:7171 --append.total 256`\n\
          four terminals (sharded): `exemcl serve --shard i/3 --net.listen tcp:127.0.0.1:717i`\n\
                for i = 0,1,2, then `exemcl solve --optimizer.name greedi \\\n\
                --cluster 127.0.0.1:7170,127.0.0.1:7171,127.0.0.1:7172`"
@@ -288,6 +300,74 @@ fn cmd_serve(cfg: &AppConfig) -> Result<()> {
     server.run()
 }
 
+/// Dial a running server and feed it rows: the live-ingest producer.
+///
+/// Rows come from `data.csv` when given; otherwise `append.total` fresh
+/// synthetic rows from the configured generator under a shifted seed —
+/// the serving process already owns the rows the base seed generates,
+/// and a producer that replays them would make a poor demo of growth.
+/// Rows go out in `append.batch`-row `Append` frames; after the last
+/// ack the server's streaming summary (if it serves one) is printed.
+fn cmd_append(cfg: &AppConfig) -> Result<()> {
+    let target = match &cfg.backend {
+        Backend::Tcp { addr } => Listen::Tcp(addr.clone()),
+        Backend::Uds { path } => Listen::Uds(path.into()),
+        other => {
+            return Err(Error::Config(format!(
+                "append feeds a running server: --backend tcp:host:port or \
+                 uds:/path (got {other})"
+            )))
+        }
+    };
+    let client = NetClient::connect_with(
+        &target,
+        &ConnectOptions { ingest: true, ..ConnectOptions::from_env() },
+    )?;
+    let d = client.dataset().d();
+    println!("connected: {} (n={} d={})", cfg.backend, client.live_n(), d);
+
+    let rows = match &cfg.csv {
+        Some(path) => csv::load(path, &CsvOptions::default())?,
+        None => {
+            let mut synth = cfg.clone();
+            synth.csv = None;
+            synth.n = cfg.append_total.max(1);
+            synth.d = d;
+            synth.seed = cfg.seed.wrapping_add(0x5eed);
+            build_dataset(&synth)?
+        }
+    };
+    if rows.d() != d {
+        return Err(Error::Config(format!(
+            "rows to append have d = {}, the server's ground set has d = {d}",
+            rows.d()
+        )));
+    }
+
+    let batch = cfg.append_batch.max(1);
+    let t0 = Instant::now();
+    let mut sent = 0usize;
+    let mut new_n = client.live_n() as u64;
+    while sent < rows.n() {
+        let hi = (sent + batch).min(rows.n());
+        let members: Vec<usize> = (sent..hi).collect();
+        new_n = client.append(&rows.gather(&members))?;
+        println!("append: +{} rows -> n = {new_n}", hi - sent);
+        sent = hi;
+    }
+    println!(
+        "appended {sent} rows in {:.3}s (ground set now n = {new_n})",
+        t0.elapsed().as_secs_f64()
+    );
+    match client.stream_summary() {
+        Ok((value, exemplars)) => {
+            println!("stream summary: f(S) = {value:.6}, exemplars = {exemplars:?}");
+        }
+        Err(e) => println!("stream summary: none ({e})"),
+    }
+    Ok(())
+}
+
 fn cmd_info(cfg: &AppConfig) -> Result<()> {
     let reg = ArtifactRegistry::open(&cfg.artifacts)?;
     println!("artifact directory: {}", cfg.artifacts);
@@ -319,6 +399,7 @@ fn main() {
     let r = match command.as_str() {
         "solve" => cmd_solve(&cfg),
         "serve" => cmd_serve(&cfg),
+        "append" => cmd_append(&cfg),
         "info" => cmd_info(&cfg),
         "bench-hint" => {
             println!(

@@ -17,6 +17,7 @@
 
 use std::collections::{HashMap, VecDeque};
 use std::io::Write;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Mutex, MutexGuard};
 use std::time::Duration;
 
@@ -47,6 +48,8 @@ fn mismatch(got: &Reply) -> Error {
         Reply::Ack => "Ack",
         Reply::Float(_) => "Float",
         Reply::State(_) => "State",
+        Reply::AppendAck(_) => "AppendAck",
+        Reply::Summary { .. } => "Summary",
         Reply::Error(..) => "Error",
     };
     Error::Service(format!("protocol mismatch: unexpected {label} reply"))
@@ -180,6 +183,11 @@ pub struct ConnectOptions {
     /// connection (`shard.timeout_secs`) — how stragglers surface as
     /// errors in bounded time. `None` blocks indefinitely.
     pub timeout: Option<Duration>,
+    /// Opt into live ingest (`eval.ingest` / `.ingest(true)`): without
+    /// it, [`NetClient::append`] is rejected client-side — a mirror
+    /// that believes the ground set is frozen must not grow it behind
+    /// its own back.
+    pub ingest: bool,
 }
 
 impl ConnectOptions {
@@ -207,6 +215,12 @@ pub struct NetClient {
     shard: Option<(usize, ShardPlan)>,
     tx_bytes: Counter,
     rx_bytes: Counter,
+    /// Live-ingest opt-in ([`ConnectOptions::ingest`]).
+    ingest: bool,
+    /// The server's ground-set size as of the last append ack this
+    /// client observed — starts at the connect-time mirror's `n` and
+    /// only grows.
+    live_n: AtomicUsize,
 }
 
 impl NetClient {
@@ -294,6 +308,8 @@ impl NetClient {
             shard,
             tx_bytes,
             rx_bytes,
+            ingest: opts.ingest,
+            live_n: AtomicUsize::new(n),
         })
     }
 
@@ -416,6 +432,56 @@ impl NetClient {
     pub fn eval_sets(&self, sets: &[Vec<usize>]) -> Result<Vec<f32>> {
         match self.call(&Request::EvalSets { sets: sets.to_vec() })? {
             Reply::Floats(v) => Ok(v),
+            other => Err(mismatch(&other)),
+        }
+    }
+
+    /// The server's ground-set size as this client last saw it: the
+    /// connect-time mirror's `n`, grown by every append ack observed on
+    /// this connection (another producer's appends become visible on
+    /// this client's next ack).
+    pub fn live_n(&self) -> usize {
+        self.live_n.load(Ordering::Relaxed)
+    }
+
+    /// Append rows to the server's ground set (live ingest); returns
+    /// the grown ground-set size. Requires the [`ConnectOptions::ingest`]
+    /// opt-in and an unsharded server.
+    pub fn append(&self, rows: &Dataset) -> Result<u64> {
+        if rows.d() != self.dataset.d() {
+            return Err(Error::InvalidArgument(format!(
+                "appended rows have d = {}, server's ground set has d = {}",
+                rows.d(),
+                self.dataset.d()
+            )));
+        }
+        self.append_flat(rows.flat().to_vec())
+    }
+
+    /// [`NetClient::append`] from a row-major flat buffer (`len` must be
+    /// a multiple of the server's `d`).
+    pub fn append_flat(&self, rows: Vec<f32>) -> Result<u64> {
+        if !self.ingest {
+            return Err(Error::InvalidArgument(
+                "this connection did not opt into live ingest \
+                 (.ingest(true) / ConnectOptions::ingest); appends are rejected client-side"
+                    .into(),
+            ));
+        }
+        match self.call(&Request::Append { rows })? {
+            Reply::AppendAck(n) => {
+                self.live_n.fetch_max(n as usize, Ordering::Relaxed);
+                Ok(n)
+            }
+            other => Err(mismatch(&other)),
+        }
+    }
+
+    /// The server-resident streaming summary `(f(S), exemplars)` — an
+    /// error when the server was spawned without `ingest.stream`.
+    pub fn stream_summary(&self) -> Result<(f32, Vec<usize>)> {
+        match self.call(&Request::StreamQuery)? {
+            Reply::Summary { value, exemplars } => Ok((value, exemplars)),
             other => Err(mismatch(&other)),
         }
     }

@@ -92,6 +92,12 @@ pub mod kind {
     /// PR 5 byte form; servers treat the depth as a pure performance
     /// hint (see [`crate::coordinator`] on speculative gains).
     pub const MARGINALS_SPEC: u8 = 0x0C;
+    /// Append rows to the live ground set (row-major f32 payload, no
+    /// count field: rows = len / (4·d)). Answered with [`APPEND_ACK`].
+    pub const APPEND: u8 = 0x0D;
+    /// Query the server-resident streaming summary (empty payload).
+    /// Answered with [`SUMMARY`].
+    pub const STREAM_QUERY: u8 = 0x0E;
 
     /// Handshake reply: dataset mirror + backend identity.
     pub const WELCOME: u8 = 0x41;
@@ -107,6 +113,10 @@ pub mod kind {
     pub const STATE: u8 = 0x46;
     /// Shard handshake reply: plan + shard-local dataset mirror.
     pub const WELCOME_SHARD: u8 = 0x47;
+    /// `Append` acknowledged: the new ground-set size (one u64).
+    pub const APPEND_ACK: u8 = 0x48;
+    /// Streaming summary: `f(S)` (one f32) + exemplar indices.
+    pub const SUMMARY: u8 = 0x49;
     /// A typed error (code byte + message).
     pub const ERROR: u8 = 0x4F;
 }
@@ -199,6 +209,16 @@ pub enum Request {
         /// Target session.
         sid: u64,
     },
+    /// Append rows to the live ground set (see [`crate::ingest`]). The
+    /// payload is the raw row-major buffer — no count field, so the
+    /// frame is byte-for-byte the modeled `header + 4·len` and the row
+    /// count derives from `len / d` at the serving oracle.
+    Append {
+        /// Row-major f32 coordinates, `rows.len()` a multiple of `d`.
+        rows: Vec<f32>,
+    },
+    /// Query the server-resident streaming summary (empty payload).
+    StreamQuery,
 }
 
 impl Request {
@@ -240,6 +260,15 @@ pub enum Reply {
     Float(f32),
     /// A full session state.
     State(DminState),
+    /// `Append` acknowledged: the new ground-set size.
+    AppendAck(u64),
+    /// Streaming summary: current best `f(S)` and its exemplars.
+    Summary {
+        /// `f(S)` of the best live sieve.
+        value: f32,
+        /// Its exemplar indices (into the grown ground set).
+        exemplars: Vec<usize>,
+    },
     /// Shard handshake reply: the server's plan and shard identity plus
     /// the *shard-local* dataset mirror (`n` here is the shard's row
     /// count, not the global ground-set size — that lives in the plan).
@@ -386,6 +415,8 @@ fn request_kind(req: &Request) -> u8 {
         Request::Fork { .. } => kind::FORK,
         Request::Export { .. } => kind::EXPORT,
         Request::Close { .. } => kind::CLOSE,
+        Request::Append { .. } => kind::APPEND,
+        Request::StreamQuery => kind::STREAM_QUERY,
     }
 }
 
@@ -454,6 +485,9 @@ pub fn encode_request(req: &Request) -> Vec<u8> {
         | Request::Fork { sid }
         | Request::Export { sid }
         | Request::Close { sid } => put_u64(&mut p, *sid),
+        // no count field: the row count derives from len / d server-side
+        Request::Append { rows } => put_f32s(&mut p, rows),
+        Request::StreamQuery => {}
     }
     finish(p)
 }
@@ -467,6 +501,8 @@ fn reply_kind(rep: &Reply) -> u8 {
         Reply::Float(_) => kind::FLOAT,
         Reply::State(_) => kind::STATE,
         Reply::WelcomeShard { .. } => kind::WELCOME_SHARD,
+        Reply::AppendAck(_) => kind::APPEND_ACK,
+        Reply::Summary { .. } => kind::SUMMARY,
         Reply::Error(..) => kind::ERROR,
     }
 }
@@ -504,6 +540,11 @@ pub fn encode_reply(rep: &Reply) -> Vec<u8> {
             p.extend_from_slice(name.as_bytes());
             put_f32s(&mut p, init_dmin);
             put_f32s(&mut p, rows);
+        }
+        Reply::AppendAck(n) => put_u64(&mut p, *n),
+        Reply::Summary { value, exemplars } => {
+            put_f32(&mut p, *value);
+            put_indices(&mut p, exemplars);
         }
         Reply::Error(code, msg) => {
             p.push(*code);
@@ -737,6 +778,15 @@ pub fn decode_request(kind: u8, payload: &[u8]) -> Result<Request> {
         kind::FORK => Request::Fork { sid: p.u64()? },
         kind::EXPORT => Request::Export { sid: p.u64()? },
         kind::CLOSE => Request::Close { sid: p.u64()? },
+        kind::APPEND => {
+            let rest = p.remaining();
+            if rest % 4 != 0 {
+                let e = FrameError::Malformed(format!("row run of {rest} bytes not 4-aligned"));
+                return Err(e.into());
+            }
+            Request::Append { rows: p.f32s(rest / 4)? }
+        }
+        kind::STREAM_QUERY => Request::StreamQuery,
         other => return Err(FrameError::UnknownKind { got: other }.into()),
     };
     p.finish()?;
@@ -790,6 +840,16 @@ pub fn decode_reply(kind: u8, payload: &[u8]) -> Result<Reply> {
             })?;
             let rows = p.f32s(elems)?;
             Reply::WelcomeShard { shard_id, plan, n, d, l0, name, init_dmin, rows }
+        }
+        kind::APPEND_ACK => Reply::AppendAck(p.u64()?),
+        kind::SUMMARY => {
+            let value = p.f32()?;
+            let rest = p.remaining();
+            if rest % 8 != 0 {
+                let e = FrameError::Malformed(format!("index run of {rest} bytes not 8-aligned"));
+                return Err(e.into());
+            }
+            Reply::Summary { value, exemplars: p.indices(rest / 8)? }
         }
         kind::ERROR => {
             let code = p.u8()?;
@@ -1062,6 +1122,9 @@ mod tests {
         roundtrip_request(Request::Fork { sid: 0 });
         roundtrip_request(Request::Export { sid: 3 });
         roundtrip_request(Request::Close { sid: 9 });
+        roundtrip_request(Request::Append { rows: vec![0.5, -1.25, f32::MAX, 0.0] });
+        roundtrip_request(Request::Append { rows: vec![] });
+        roundtrip_request(Request::StreamQuery);
     }
 
     #[test]
@@ -1092,6 +1155,9 @@ mod tests {
         });
         roundtrip_reply(Reply::Error(1, "index 99 out of range".into()));
         roundtrip_reply(Reply::Error(4, "token mismatch".into()));
+        roundtrip_reply(Reply::AppendAck(96));
+        roundtrip_reply(Reply::Summary { value: 1.75, exemplars: vec![65, 70, 95] });
+        roundtrip_reply(Reply::Summary { value: 0.0, exemplars: vec![] });
     }
 
     /// The auth error round-trips through the typed error codes so a
@@ -1138,6 +1204,14 @@ mod tests {
         assert_eq!(encode_reply(&Reply::Ack).len(), 16);
         assert_eq!(encode_request(&Request::Value { sid: 3 }).len(), 16 + 8);
         assert_eq!(encode_reply(&Reply::Float(0.0)).len(), 16 + 4);
+        // the ingest frames keep the same exact-model shape: no count
+        // fields, header + 4 per coordinate out, header + 8 back
+        let a = encode_request(&Request::Append { rows: vec![0.0; 64 * 32] });
+        assert_eq!(a.len(), 16 + 4 * 64 * 32);
+        assert_eq!(encode_reply(&Reply::AppendAck(7)).len(), 16 + 8);
+        assert_eq!(encode_request(&Request::StreamQuery).len(), 16);
+        let s = encode_reply(&Reply::Summary { value: 0.0, exemplars: vec![0; 8] });
+        assert_eq!(s.len(), 16 + 4 + 8 * 8);
     }
 
     #[test]
@@ -1192,6 +1266,11 @@ mod tests {
         // marginals payload not 8-aligned after the sid
         let e = decode_request(kind::MARGINALS, &[0u8; 13]).unwrap_err();
         assert!(matches!(e, Error::Frame(FrameError::Malformed(_))), "{e}");
+        // append payload not 4-aligned
+        let e = decode_request(kind::APPEND, &[0u8; 7]).unwrap_err();
+        assert!(matches!(e, Error::Frame(FrameError::Malformed(_))), "{e}");
+        // a stream query carries nothing
+        assert!(decode_request(kind::STREAM_QUERY, &[0u8; 1]).is_err());
         // a hinted marginals must actually carry a hint: depth 0 on the
         // spec kind would make two wire forms for the same message
         let mut p = Vec::new();

@@ -61,15 +61,20 @@
 //! | `MarginalsSpec` | sid, depth, idx… (count = (len−16)/8)             |
 //! | `CommitMany` | sid, idx… (count = (len−8)/8)                        |
 //! | `Value`/`Fork`/`Export`/`Close` | sid                               |
+//! | `Append`     | f32 rows… (row-major; rows = len/4/d)                |
+//! | `StreamQuery`| —                                                    |
 //! | `Floats`     | f32… (count = len/4)                                 |
 //! | `Sid`        | sid                                                  |
 //! | `Ack`        | —                                                    |
 //! | `Float`      | f32                                                  |
 //! | `State`      | dmin_len, dmin…, ex_len, ex…                         |
+//! | `AppendAck`  | n (the grown ground-set size)                        |
+//! | `Summary`    | f(S)(f32), idx…                                      |
 //! | `Error`      | code(u8), utf-8 message                              |
 //!
 //! where `plan` is `n_global(u64), shards(u64), layout(u8)`. The
-//! hot-path frames (`Marginals`, `CommitMany`, `Floats`, `Ack`)
+//! hot-path frames (`Marginals`, `CommitMany`, `Floats`, `Ack`,
+//! `Append`, `AppendAck`)
 //! carry no count fields, so their encoded size equals the byte model
 //! in [`crate::coordinator::ServiceMetrics::wire`] exactly — the codec
 //! tests and `tests/net_wire.rs` assert the equality. `Welcome` ships
@@ -114,7 +119,7 @@ pub mod client;
 pub mod codec;
 pub mod server;
 
-pub use client::{NetClient, NetSession};
+pub use client::{ConnectOptions, NetClient, NetSession};
 pub use server::{NetServer, StopHandle, DEFAULT_MAX_CONNS};
 
 use std::io::{Read, Write};

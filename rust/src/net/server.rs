@@ -492,17 +492,17 @@ fn serve_request<'h>(
                 1,
                 format!("this server serves shard {shard_id} of \"{plan}\"; shard handshake only"),
             ),
-            None => {
-                let ds = handle.dataset();
-                Reply::Welcome {
-                    n: ds.n(),
-                    d: ds.d(),
-                    l0: handle.l0_sum(),
-                    name: handle.name(),
-                    init_dmin: handle.init_state().dmin,
-                    rows: ds.flat().to_vec(),
-                }
-            }
+            // the mirror is fetched from the executor, not the handle's
+            // spawn-time snapshot: a client connecting after appends must
+            // see the grown ground set
+            None => ok_or(handle.mirror(), |(ds, l0, init)| Reply::Welcome {
+                n: ds.n(),
+                d: ds.d(),
+                l0,
+                name: handle.name(),
+                init_dmin: init.dmin,
+                rows: ds.flat().to_vec(),
+            }),
         },
         Request::HelloShard { shard_id, plan, .. } => match &cfg.shard {
             None => Reply::Error(
@@ -597,5 +597,21 @@ fn serve_request<'h>(
             Some(s) => ok_or(s.close(), |()| Reply::Ack),
             None => unknown(sid),
         },
+        // live ingest: grow the served ground set. A shard server
+        // refuses — an appended row belongs to exactly one shard of the
+        // plan, and this server cannot know the others got theirs.
+        Request::Append { rows } => match &cfg.shard {
+            Some((shard_id, plan)) => Reply::Error(
+                1,
+                format!(
+                    "shard {shard_id} of \"{plan}\" does not accept appends; \
+                     grow the ground set through an unsharded server"
+                ),
+            ),
+            None => ok_or(handle.append_flat(rows), Reply::AppendAck),
+        },
+        Request::StreamQuery => {
+            ok_or(handle.stream_summary(), |(value, exemplars)| Reply::Summary { value, exemplars })
+        }
     }
 }

@@ -205,6 +205,30 @@ pub trait Oracle {
         None
     }
 
+    /// Grow the ground set by `rows` **and** extend every live optimizer
+    /// state in `states` with the appended rows' distances, in one call
+    /// — the live-ingest extension path (see [`crate::ingest`]).
+    ///
+    /// Implementations must leave existing `dmin` entries and committed
+    /// exemplars bit-untouched, append `dmin_i = d(v_i, e0)` for each
+    /// new row, then lower the appended suffix against each state's
+    /// committed exemplars with the same kernels a commit uses — so an
+    /// extended state is bit-identical to the state a cold rebuild on
+    /// the concatenated ground set would have produced after the same
+    /// commits (the per-row min-update never crosses rows). Returns the
+    /// new ground-set size.
+    ///
+    /// Backends that snapshot the ground set at construction (the AOT
+    /// device path bakes `n` into its compiled artifacts) keep this
+    /// default, which rejects the append without mutating anything.
+    fn extend(&mut self, rows: &Dataset, states: &mut [&mut DminState]) -> Result<usize> {
+        let _ = (rows, states);
+        Err(Error::InvalidArgument(format!(
+            "{} does not support live ingest (the ground set is frozen at build)",
+            self.name()
+        )))
+    }
+
     /// Short name for logs and bench tables.
     fn name(&self) -> String;
 }
@@ -251,6 +275,10 @@ impl<O: Oracle + ?Sized> Oracle for Box<O> {
 
     fn sched_stats(&self) -> Option<crate::cpu::SchedStats> {
         (**self).sched_stats()
+    }
+
+    fn extend(&mut self, rows: &Dataset, states: &mut [&mut DminState]) -> Result<usize> {
+        (**self).extend(rows, states)
     }
 
     fn name(&self) -> String {

@@ -57,7 +57,11 @@ impl<'a> Sieve<'a> {
 }
 
 /// Geometric threshold grid `(1+eps)^j` intersecting `[lo, hi]`.
-fn threshold_grid(eps: f64, lo: f64, hi: f64) -> Vec<f64> {
+/// `pub(crate)`: the server-resident streaming sessions
+/// ([`crate::ingest`]) grow their sieve ladders from the same grid, so
+/// a live summary and an offline [`SieveStreaming`] run agree on which
+/// OPT guesses exist for a given `m`.
+pub(crate) fn threshold_grid(eps: f64, lo: f64, hi: f64) -> Vec<f64> {
     let mut out = Vec::new();
     if lo <= 0.0 || hi <= 0.0 || hi < lo {
         return out;
@@ -84,7 +88,8 @@ fn threshold_grid(eps: f64, lo: f64, hi: f64) -> Vec<f64> {
 /// maximum `m` is constant. Returns `(start, end, m_after_start)` ranges;
 /// the item that raises `m` *begins* a new segment, matching the per-item
 /// originals where sieve birth precedes the accept test of that item.
-fn m_segments(singles: &[f32], m: &mut f64) -> Vec<(usize, usize, f64)> {
+/// `pub(crate)` for the same reason as [`threshold_grid`].
+pub(crate) fn m_segments(singles: &[f32], m: &mut f64) -> Vec<(usize, usize, f64)> {
     let mut out = Vec::new();
     let mut seg_start = 0usize;
     for (i, &s) in singles.iter().enumerate() {

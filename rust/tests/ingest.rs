@@ -1,0 +1,444 @@
+//! Live ingest end-to-end: appends through the coordinator and over
+//! the wire leave every live session bit-identical to a cold build on
+//! the concatenated dataset, the ingest guards (batch/total caps,
+//! non-finite rows, client opt-in, shard servers) hold at every
+//! boundary, `Append`/`AppendAck` cost exactly their modeled wire
+//! bytes, and the server-resident streaming summary tracks the live
+//! traffic deterministically. Pure CPU.
+
+use std::time::Duration;
+
+use exemcl::coordinator::{Service, ServiceMetrics, SessionConfig};
+use exemcl::cpu::build_cpu_oracle;
+use exemcl::cpu::SingleThread;
+use exemcl::data::synth::UniformCube;
+use exemcl::data::Dataset;
+use exemcl::engine::{Backend, Engine, Session};
+use exemcl::ingest::{IngestConfig, StreamSpec};
+use exemcl::net::{ConnectOptions, Listen, NetClient, NetConfig, NetServer, StopHandle};
+use exemcl::optim::Oracle;
+use exemcl::scalar::Dtype;
+use exemcl::shard::{ShardLayout, ShardPlan};
+
+/// Interleave every row with its negation: the per-coordinate mean is
+/// exactly `+0.0`, so mean-centering (and the frozen-mean suffix
+/// quantization) is a bitwise no-op — appends stay bit-identical to a
+/// cold rebuild even for the centered f16/bf16 shadows.
+fn symmetric(n_pairs: usize, d: usize, seed: u64) -> Dataset {
+    let base = UniformCube::new(d, 1.0).generate(n_pairs, seed);
+    let mut rows: Vec<Vec<f32>> = Vec::new();
+    for i in 0..base.n() {
+        rows.push(base.row(i).to_vec());
+        rows.push(base.row(i).iter().map(|x| -x).collect());
+    }
+    Dataset::from_rows(&rows).unwrap()
+}
+
+fn bits(s: &[f32]) -> Vec<u32> {
+    s.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Hermetic connect options (no ambient `EXEMCL_TOKEN`), opted into
+/// live ingest.
+fn ingest_opts() -> ConnectOptions {
+    ConnectOptions { ingest: true, ..ConnectOptions::default() }
+}
+
+/// A serving stack with an explicit ingest policy: coordinator service
+/// + net server on a loopback endpoint, torn down on drop.
+struct IngestServer {
+    svc: Option<Service>,
+    addr: Listen,
+    stop: StopHandle,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl IngestServer {
+    fn spawn<F, O>(make_oracle: F, listen: Listen, ingest: IngestConfig) -> Self
+    where
+        F: FnOnce() -> exemcl::Result<O> + Send + 'static,
+        O: Oracle + 'static,
+    {
+        let svc =
+            Service::spawn_full(make_oracle, 32, SessionConfig::default(), ingest).unwrap();
+        let cfg = NetConfig::new(listen).with_poll(Duration::from_millis(20));
+        let server = NetServer::bind(svc.handle(), cfg).unwrap();
+        let addr = server.local_addr().clone();
+        let stop = server.stop_handle();
+        let join = std::thread::spawn(move || server.run().unwrap());
+        Self { svc: Some(svc), addr, stop, join: Some(join) }
+    }
+
+    fn tcp<F, O>(make_oracle: F, ingest: IngestConfig) -> Self
+    where
+        F: FnOnce() -> exemcl::Result<O> + Send + 'static,
+        O: Oracle + 'static,
+    {
+        Self::spawn(make_oracle, Listen::Tcp("127.0.0.1:0".into()), ingest)
+    }
+
+    fn metrics(&self) -> &ServiceMetrics {
+        self.svc.as_ref().expect("live service").metrics()
+    }
+
+    fn stop_and_join(&mut self) {
+        self.stop.stop();
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for IngestServer {
+    fn drop(&mut self) {
+        self.stop_and_join();
+        if let Some(svc) = self.svc.take() {
+            svc.shutdown();
+        }
+    }
+}
+
+/// The tentpole equivalence, coordinator flavor: a session that
+/// commits, then watches the ground set grow — row-at-a-time or in one
+/// batch — ends bit-identical (exemplars, every dmin bit, gains over
+/// old and new rows) to a cold build on the concatenated dataset, for
+/// f32/f16/bf16.
+#[test]
+fn coordinator_appends_match_cold_build_bitwise_across_dtypes() {
+    let head = symmetric(30, 4, 11);
+    let tail = symmetric(8, 4, 12);
+    let mut full = head.clone();
+    full.extend(&tail).unwrap();
+
+    for dtype in Dtype::all() {
+        let cold = build_cpu_oracle(full.clone(), false, 0, dtype);
+        let mut want = cold.init_state();
+        cold.commit_many(&mut want, &[3, 17]).unwrap();
+        let want_gains =
+            cold.marginal_gains(&want, &[0, head.n(), full.n() - 1]).unwrap();
+
+        for batched in [false, true] {
+            let tag = format!("{dtype} batched={batched}");
+            let h2 = head.clone();
+            let svc = Service::spawn_full(
+                move || Ok(build_cpu_oracle(h2, false, 0, dtype)),
+                32,
+                SessionConfig::default(),
+                IngestConfig::default(),
+            )
+            .unwrap();
+            let handle = svc.handle();
+            let mut s = Session::remote(&handle).unwrap();
+            s.commit_many(&[3, 17]).unwrap();
+            s.sync().unwrap();
+
+            if batched {
+                assert_eq!(handle.append(&tail).unwrap(), full.n() as u64, "{tag}");
+            } else {
+                for i in 0..tail.n() {
+                    let row = Dataset::from_rows(&[tail.row(i).to_vec()]).unwrap();
+                    assert_eq!(
+                        handle.append(&row).unwrap(),
+                        (head.n() + i + 1) as u64,
+                        "{tag}"
+                    );
+                }
+            }
+
+            let state = s.export_state().unwrap();
+            assert_eq!(state.exemplars, want.exemplars, "{tag}");
+            assert_eq!(bits(&state.dmin), bits(&want.dmin), "{tag}: dmin bits");
+            // the grown session prices old and appended rows alike
+            let gains = s.gains(&[0, head.n(), full.n() - 1]).unwrap();
+            assert_eq!(bits(&gains), bits(&want_gains), "{tag}: gains");
+
+            let m = svc.metrics();
+            assert_eq!(m.rows_appended.get(), tail.n() as u64, "{tag}");
+            assert_eq!(
+                m.append_batches.get(),
+                if batched { 1 } else { tail.n() as u64 },
+                "{tag}"
+            );
+            assert!(m.sessions_extended.get() >= m.append_batches.get(), "{tag}");
+            drop(s);
+            svc.shutdown();
+        }
+    }
+}
+
+/// The same equivalence over a real TCP socket, plus the
+/// mirror-freshness half: a client that connects *after* the appends
+/// mirrors the grown ground set bit-for-bit.
+#[test]
+fn tcp_appends_match_cold_build_bitwise_across_dtypes() {
+    let head = symmetric(24, 4, 21);
+    let tail = symmetric(6, 4, 22);
+    let mut full = head.clone();
+    full.extend(&tail).unwrap();
+
+    for dtype in Dtype::all() {
+        let cold = build_cpu_oracle(full.clone(), false, 0, dtype);
+        let mut want = cold.init_state();
+        cold.commit_many(&mut want, &[5, 9]).unwrap();
+
+        for batched in [false, true] {
+            let tag = format!("{dtype} batched={batched}");
+            let h2 = head.clone();
+            let server = IngestServer::tcp(
+                move || Ok(build_cpu_oracle(h2, false, 0, dtype)),
+                IngestConfig::default(),
+            );
+
+            let client = NetClient::connect_with(&server.addr, &ingest_opts()).unwrap();
+            assert_eq!(client.live_n(), head.n(), "{tag}");
+            let mut s = client.open().unwrap();
+            s.commit_many(&[5, 9]).unwrap();
+            s.sync().unwrap();
+
+            if batched {
+                client.append(&tail).unwrap();
+            } else {
+                for i in 0..tail.n() {
+                    let row = Dataset::from_rows(&[tail.row(i).to_vec()]).unwrap();
+                    client.append(&row).unwrap();
+                }
+            }
+            assert_eq!(client.live_n(), full.n(), "{tag}: live_n tracks the acks");
+            // the connect-time mirror stays what it was — the appends
+            // grew the server, not the client's frozen copy
+            assert_eq!(client.dataset().n(), head.n(), "{tag}");
+
+            let state = s.export().unwrap();
+            assert_eq!(state.exemplars, want.exemplars, "{tag}");
+            assert_eq!(bits(&state.dmin), bits(&want.dmin), "{tag}: dmin bits");
+            // gains over an appended row cross the wire like any other
+            let g = s.gains(&[full.n() - 1]).unwrap();
+            let wg = cold.marginal_gains(&want, &[full.n() - 1]).unwrap();
+            assert_eq!(bits(&g), bits(&wg), "{tag}: appended-row gain");
+
+            // a fresh connection sees the grown ground set
+            let late = NetClient::connect(&server.addr).unwrap();
+            assert_eq!(late.dataset().n(), full.n(), "{tag}");
+            assert_eq!(late.dataset().flat(), full.flat(), "{tag}: grown mirror bits");
+        }
+    }
+}
+
+/// The engine facade over UDS: `.ingest(true)` plumbs the opt-in down
+/// to the socket, `Session::append` grows the server, `Session::n()`
+/// follows the acks, and an engine that never opted in is rejected
+/// client-side before a frame is sent.
+#[cfg(unix)]
+#[test]
+fn uds_engine_append_grows_the_session() {
+    let head = symmetric(20, 4, 31);
+    let tail = symmetric(4, 4, 32);
+    let path = std::env::temp_dir()
+        .join(format!("exemcl-ingest-{}.sock", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let h2 = head.clone();
+    let server = IngestServer::spawn(
+        move || Ok(SingleThread::new(h2)),
+        Listen::Uds(path.clone()),
+        IngestConfig::default(),
+    );
+    let addr = path.to_string_lossy().into_owned();
+
+    let engine = Engine::builder()
+        .backend(Backend::Uds { path: addr.clone() })
+        .ingest(true)
+        .build()
+        .unwrap();
+    assert!(engine.ingest());
+    let mut s = engine.session().unwrap();
+    assert_eq!(s.n(), head.n());
+    s.commit_many(&[2]).unwrap();
+    let new_n = s.append(&tail).unwrap();
+    assert_eq!(new_n, (head.n() + tail.n()) as u64);
+    assert_eq!(s.n(), head.n() + tail.n(), "n() follows the acks");
+    assert_eq!(s.export_state().unwrap().dmin.len(), head.n() + tail.n());
+
+    // no opt-in, no Append frame: the default engine refuses locally
+    let frozen = Engine::builder()
+        .backend(Backend::Uds { path: addr })
+        .build()
+        .unwrap();
+    let mut fs = frozen.session().unwrap();
+    let err = fs.append(&tail).unwrap_err().to_string();
+    assert!(err.contains("ingest"), "got: {err}");
+    drop(fs);
+    drop(frozen);
+    drop(s);
+    drop(engine);
+    drop(server);
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Every guard on the append path, exercised over the wire: ragged
+/// payloads, non-finite rows, the per-batch cap, the total-rows cap —
+/// and none of them leave the server or the session in a broken state.
+#[test]
+fn append_guards_hold_over_the_wire() {
+    let head = symmetric(10, 4, 41); // n = 20
+    let h2 = head.clone();
+    let server = IngestServer::tcp(
+        move || Ok(SingleThread::new(h2)),
+        IngestConfig {
+            max_rows_per_append: 4,
+            max_total_rows: Some(26),
+            stream: None,
+        },
+    );
+    let client = NetClient::connect_with(&server.addr, &ingest_opts()).unwrap();
+
+    // ragged: 5 floats is not a whole number of d = 4 rows
+    let err = client.append_flat(vec![1.0; 5]).unwrap_err().to_string();
+    assert!(err.contains("d = 4") || err.contains("whole"), "got: {err}");
+    // non-finite rows are rejected before any state moves
+    let err = client.append_flat(vec![1.0, f32::NAN, 0.0, 0.0]).unwrap_err().to_string();
+    assert!(err.contains("non-finite"), "got: {err}");
+    // batch cap: 5 rows > max_rows_per_append = 4
+    let err = client.append_flat(vec![0.5; 5 * 4]).unwrap_err().to_string();
+    assert!(err.contains("max_rows_per_append"), "got: {err}");
+    // within the cap: accepted
+    assert_eq!(client.append_flat(vec![0.5; 4 * 4]).unwrap(), 24);
+    // total cap: 24 + 4 > 26, rejected whole — n stays 24
+    let err = client.append_flat(vec![0.5; 4 * 4]).unwrap_err().to_string();
+    assert!(err.contains("max_total_rows"), "got: {err}");
+    assert_eq!(client.live_n(), 24);
+
+    let m = server.metrics();
+    assert_eq!(m.rows_appended.get(), 4);
+    assert_eq!(m.append_batches.get(), 1);
+
+    // a connection that never opted in is stopped client-side
+    let frozen = NetClient::connect(&server.addr).unwrap();
+    let err = frozen.append_flat(vec![0.5; 4]).unwrap_err().to_string();
+    assert!(err.contains("ingest"), "got: {err}");
+    assert_eq!(m.rows_appended.get(), 4, "no frame reached the server");
+}
+
+/// A shard server refuses appends outright: an appended row belongs to
+/// exactly one shard of the plan, and one server cannot speak for the
+/// others.
+#[test]
+fn shard_servers_refuse_appends() {
+    let ds = symmetric(12, 4, 51); // n = 24
+    let plan = ShardPlan::new(ds.n(), 2, ShardLayout::Contiguous).unwrap();
+    let shard_ds = ds.gather(&plan.members(0));
+    let svc = Service::spawn_full(
+        move || Ok(SingleThread::new(shard_ds)),
+        32,
+        SessionConfig::default(),
+        IngestConfig::default(),
+    )
+    .unwrap();
+    let cfg = NetConfig::new(Listen::Tcp("127.0.0.1:0".into()))
+        .with_poll(Duration::from_millis(20))
+        .with_shard(0, plan);
+    let server = NetServer::bind(svc.handle(), cfg).unwrap();
+    let addr = server.local_addr().clone();
+    let stop = server.stop_handle();
+    let join = std::thread::spawn(move || server.run().unwrap());
+
+    let client = NetClient::connect_with(&addr, &ingest_opts()).unwrap();
+    let err = client.append_flat(vec![0.5; 4]).unwrap_err().to_string();
+    assert!(err.contains("shard"), "got: {err}");
+
+    drop(client);
+    stop.stop();
+    let _ = join.join();
+    svc.shutdown();
+}
+
+/// The wire-accounting satellite: an `Append` frame costs exactly
+/// `16 + 4·len` bytes on the socket and exactly that in the modeled
+/// `WireBytes`; the `AppendAck` costs `16 + 8`; and the connection
+/// totals still reconcile byte-for-byte after ingest traffic.
+#[test]
+fn append_bytes_match_the_modeled_wire_bytes() {
+    let head = symmetric(12, 4, 61);
+    let tail = symmetric(3, 4, 62); // 6 rows × 4 dims = 24 floats
+    let h2 = head.clone();
+    let mut server = IngestServer::tcp(
+        move || Ok(SingleThread::new(h2)),
+        IngestConfig::default(),
+    );
+    let m = server.svc.as_ref().unwrap().metrics();
+
+    let client = NetClient::connect_with(&server.addr, &ingest_opts()).unwrap();
+    let (tx0, rx0) = (client.tx_bytes(), client.rx_bytes());
+    let (aq0, ar0) = (m.wire.append_req.get(), m.wire.append_reply.get());
+    client.append(&tail).unwrap();
+    let floats = (tail.n() * tail.d()) as u64;
+    assert_eq!(client.tx_bytes() - tx0, 16 + 4 * floats, "Append frame bytes");
+    assert_eq!(client.tx_bytes() - tx0, m.wire.append_req.get() - aq0, "modeled == measured");
+    assert_eq!(client.rx_bytes() - rx0, 16 + 8, "AppendAck frame bytes");
+    assert_eq!(client.rx_bytes() - rx0, m.wire.append_reply.get() - ar0, "modeled == measured");
+
+    let (tx_total, rx_total) = (client.tx_bytes(), client.rx_bytes());
+    drop(client);
+    server.stop_and_join();
+    let m = server.metrics();
+    assert_eq!(m.wire.net_rx.get(), tx_total, "server rx == client tx");
+    assert_eq!(m.wire.net_tx.get(), rx_total, "server tx == client rx");
+}
+
+/// Server-resident streaming summaries over the wire: folds are
+/// deterministic in the append sequence (the batch split does not
+/// matter without window/decay), `StreamQuery` serves the current
+/// summary to any opted-in or plain connection, a windowed spec
+/// evicts, and a server without a spec says so.
+#[test]
+fn streaming_summary_tracks_live_traffic_over_the_wire() {
+    let head = symmetric(10, 4, 71);
+    let tail = symmetric(10, 4, 72); // 20 rows of live traffic
+    let spec: StreamSpec = "sieve:k=4,eps=0.25".parse().unwrap();
+
+    let mut summaries = Vec::new();
+    for batch in [1usize, 7] {
+        let h2 = head.clone();
+        let sp = spec.clone();
+        let server = IngestServer::tcp(
+            move || Ok(SingleThread::new(h2)),
+            IngestConfig { stream: Some(sp), ..Default::default() },
+        );
+        let client = NetClient::connect_with(&server.addr, &ingest_opts()).unwrap();
+        // before any traffic: a live but empty summary
+        let (v0, e0) = client.stream_summary().unwrap();
+        assert_eq!((v0, e0.len()), (0.0, 0));
+        let mut sent = 0;
+        while sent < tail.n() {
+            let hi = (sent + batch).min(tail.n());
+            let members: Vec<usize> = (sent..hi).collect();
+            client.append(&tail.gather(&members)).unwrap();
+            sent = hi;
+        }
+        let (value, exemplars) = client.stream_summary().unwrap();
+        assert!(value > 0.0, "batch={batch}: live traffic must build a summary");
+        assert!(!exemplars.is_empty() && exemplars.len() <= 4, "batch={batch}");
+        summaries.push((value.to_bits(), exemplars));
+    }
+    assert_eq!(summaries[0], summaries[1], "the batch split must not matter");
+
+    // a windowed spec evicts old candidates as traffic flows past
+    let h2 = head.clone();
+    let windowed: StreamSpec = "sieve:k=3,eps=0.25,window=6".parse().unwrap();
+    let server = IngestServer::tcp(
+        move || Ok(SingleThread::new(h2)),
+        IngestConfig { stream: Some(windowed), ..Default::default() },
+    );
+    let client = NetClient::connect_with(&server.addr, &ingest_opts()).unwrap();
+    client.append(&tail).unwrap();
+    assert!(
+        server.metrics().window_evictions.get() >= (tail.n() - 6) as u64,
+        "20 rows through a 6-row window must evict"
+    );
+
+    // no spec, no summary: the error says what to configure
+    let h2 = head.clone();
+    let server = IngestServer::tcp(move || Ok(SingleThread::new(h2)), IngestConfig::default());
+    let client = NetClient::connect_with(&server.addr, &ingest_opts()).unwrap();
+    let err = client.stream_summary().unwrap_err().to_string();
+    assert!(err.contains("stream"), "got: {err}");
+}
